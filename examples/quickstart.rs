@@ -1,0 +1,89 @@
+//! Quickstart: the full three-layer stack in one page.
+//!
+//! 1. Loads the AOT artifacts (`make artifacts` first): `deer_gru_fwd` is the
+//!    DEER evaluation of a GRU whose FUNCEVAL and INVLIN hot-spots are the
+//!    Layer-1 **Pallas kernels**, lowered through the Layer-2 JAX graph into
+//!    a single HLO module; `gru_seq_fwd` is the sequential baseline from the
+//!    same parameters.
+//! 2. Executes both through the Rust PJRT runtime and checks they agree
+//!    (the paper's Fig. 3 claim).
+//! 3. Repeats the same computation with the pure-Rust DEER engine and checks
+//!    it against the artifacts — three independent implementations, one
+//!    answer.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use anyhow::Result;
+use deer::cells::Gru;
+use deer::deer::newton::{deer_rnn, DeerConfig};
+use deer::deer::seq::seq_rnn;
+use deer::runtime::{Runtime, Tensor};
+use deer::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let rt = Runtime::load(&Runtime::default_dir())?;
+    let spec = rt.manifest.get("deer_gru_fwd").expect("run `make artifacts` first").clone();
+    let n = spec.meta["n"] as usize;
+    let m = spec.meta["m"] as usize;
+    let t_len = spec.meta["t"] as usize;
+    println!("artifact deer_gru_fwd: GRU n={n} m={m} T={t_len}");
+
+    // Shared inputs: the artifact's shipped parameters + random sequence.
+    let params = rt.load_params("deer_gru_fwd")?;
+    let mut rng = Rng::new(0);
+    let mut xs = vec![0.0f32; t_len * m];
+    rng.fill_normal(&mut xs, 1.0);
+    let h0 = vec![0.0f32; n];
+
+    let inputs = [
+        Tensor::f32(vec![params.len()], params.clone()),
+        Tensor::f32(vec![n], h0.clone()),
+        Tensor::f32(vec![t_len, m], xs.clone()),
+    ];
+
+    // (1) DEER via the Pallas-kernel artifact.
+    let t0 = std::time::Instant::now();
+    let ys_deer = rt.run("deer_gru_fwd", &inputs)?;
+    let t_deer = t0.elapsed();
+    let ys_deer = ys_deer[0].as_f32()?.to_vec();
+
+    // (2) Sequential baseline artifact.
+    let t0 = std::time::Instant::now();
+    let ys_seq = rt.run("gru_seq_fwd", &inputs)?;
+    let t_seq = t0.elapsed();
+    let ys_seq = ys_seq[0].as_f32()?.to_vec();
+
+    let max_err = ys_deer
+        .iter()
+        .zip(ys_seq.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("PJRT   DEER(pallas) vs sequential: max |Δ| = {max_err:.3e}   (deer {t_deer:?}, seq {t_seq:?})");
+    assert!(max_err < 2e-3, "artifact mismatch");
+
+    // (3) The pure-Rust engine on the same parameters.
+    let cell = Gru::<f32>::from_params(n, m, params);
+    let rust_seq = seq_rnn(&cell, &h0, &xs);
+    let rust_deer = deer_rnn(&cell, &h0, &xs, None, &DeerConfig::default());
+    let err_rs = rust_deer
+        .ys
+        .iter()
+        .zip(rust_seq.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    let err_cross = rust_seq
+        .iter()
+        .zip(ys_seq.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!(
+        "Rust   DEER vs sequential: max |Δ| = {err_rs:.3e} ({} Newton iterations)",
+        rust_deer.iterations
+    );
+    println!("Cross  Rust sequential vs PJRT sequential: max |Δ| = {err_cross:.3e}");
+    assert!(err_rs < 2e-3);
+    assert!(err_cross < 2e-3, "engines disagree: {err_cross}");
+
+    println!("\nquickstart OK — three implementations, one trajectory.");
+    Ok(())
+}

@@ -1,0 +1,93 @@
+//! End-to-end EigenWorms-style training (paper §4.3 / Fig. 4c–d / Table 1).
+//!
+//! The REQUIRED end-to-end driver: trains the GRU classifier through the
+//! PJRT `worms_train_step` artifact (forward DEER evaluation, eq.-7 backward
+//! and Adam all fused in one HLO executable) on the synthetic EigenWorms
+//! generator, logs the loss/accuracy curve, evaluates on the validation
+//! split, and records everything under results/.
+//!
+//! Run: `cargo run --release --example worms_classify -- [steps] [seed]`
+
+use anyhow::Result;
+use deer::data::{worms, Dataset, Split};
+use deer::metrics::Recorder;
+use deer::runtime::{Runtime, Tensor};
+use deer::train::Trainer;
+use deer::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(300);
+    let seed: u64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(0);
+
+    let rt = Runtime::load(&Runtime::default_dir())?;
+    let rec = Recorder::new(&Recorder::default_dir())?;
+    let spec = rt.manifest.get("worms_train_step").expect("run `make artifacts`").clone();
+    let b = spec.meta["batch"] as usize;
+    let t_len = spec.meta["t"] as usize;
+    let eval_b = rt.manifest.get("worms_eval").unwrap().meta["batch"] as usize;
+    println!("worms_train_step: batch={b} T={t_len} params={}", spec.meta["param_len"]);
+    println!("(paper-scale T=17,984 runs through the pure-Rust engine in `deer bench --exp fig8`;");
+    println!(" the artifact is compiled at T={t_len} for the 1-core CPU budget — see DESIGN.md §4)\n");
+
+    // Synthetic EigenWorms at the artifact's sequence length; 70/15/15 split.
+    let rows = 120;
+    let (xs, labels) = worms::generate(rows, t_len, 1234 + seed);
+    let ds = Dataset::new(xs, labels, t_len, worms::CHANNELS);
+
+    let mut trainer = Trainer::new(&rt, "worms_train_step", "worms_train_step")?;
+    let mut rng = Rng::new(seed);
+    let t0 = std::time::Instant::now();
+    for i in 0..steps {
+        let (bx, bl, _) = ds.sample_batch(Split::Train, b, &mut rng);
+        let data = [
+            Tensor::f32(vec![b, t_len, worms::CHANNELS], bx),
+            Tensor::i32(vec![b], bl),
+        ];
+        let (loss, acc) = trainer.step(&data)?;
+        if i % 20 == 0 || i + 1 == steps {
+            // validation
+            let (val_loss, val_acc) = eval_split(&rt, &trainer, &ds, Split::Val, eval_b)?;
+            println!(
+                "step {:4}  [{:7.1?}]  train loss {loss:.4} acc {:.2}  |  val loss {val_loss:.4} acc {val_acc:.2}",
+                i + 1,
+                t0.elapsed(),
+                acc.unwrap_or(0.0),
+            );
+            rec.log_line(
+                "worms_classify",
+                &format!("{} {:.3} {loss:.5} {val_loss:.5} {val_acc:.4}", i + 1, t0.elapsed().as_secs_f64()),
+            )?;
+        }
+    }
+    rec.curve("worms_classify_curve", &trainer.curve)?;
+
+    let (test_loss, test_acc) = eval_split(&rt, &trainer, &ds, Split::Test, eval_b)?;
+    println!("\nfinal test: loss {test_loss:.4}  acc {test_acc:.2}");
+    println!("curve written to results/worms_classify_curve.csv");
+    Ok(())
+}
+
+fn eval_split(
+    rt: &Runtime,
+    trainer: &Trainer,
+    ds: &Dataset,
+    split: Split,
+    eval_b: usize,
+) -> Result<(f64, f64)> {
+    let mut losses = Vec::new();
+    let mut accs = Vec::new();
+    for idx in ds.batches(split, eval_b) {
+        let (bx, bl) = ds.gather(&idx);
+        let data = [
+            Tensor::f32(vec![eval_b, ds.t, ds.channels], bx),
+            Tensor::i32(vec![eval_b], bl),
+        ];
+        let (loss, acc) = trainer.eval("worms_eval", &data)?;
+        losses.push(loss);
+        accs.push(acc.unwrap_or(0.0));
+    }
+    let _ = rt;
+    let n = losses.len().max(1) as f64;
+    Ok((losses.iter().sum::<f64>() / n, accs.iter().sum::<f64>() / n))
+}

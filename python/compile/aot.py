@@ -1,0 +1,304 @@
+"""AOT lowering: JAX (L2, calling the L1 Pallas kernels) → HLO text artifacts.
+
+HLO **text** is the interchange format (NOT ``.serialize()``): jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which the runtime's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Outputs into ``artifacts/``:
+  * ``<name>.hlo.txt``   — one per entry point,
+  * ``<name>_params.bin``— raw little-endian f32 initial parameter vectors,
+  * ``manifest.json``    — shapes/dtypes of every artifact's inputs/outputs,
+    consumed by ``rust/src/runtime/artifact.rs``.
+
+Python runs ONCE here (``make artifacts``); the Rust binary is self-contained
+afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import deer as deer_mod
+from . import train
+from .kernels import ref
+
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the aot recipe)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype="f32"):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Artifact registry
+# ---------------------------------------------------------------------------
+
+# Default artifact shapes. Kept modest: the runtime targets a 1-core CPU PJRT
+# client; EXPERIMENTS.md documents the scaling to paper-size runs.
+QS_N, QS_M, QS_T = 16, 16, 512
+WORMS = dict(in_dim=6, hidden=16, layers=2, classes=5, batch=4, t=256, lr=3e-4)
+HNN = dict(hidden=48, depth=6, batch=2, grid=128, lr=1e-3)
+MHGRU = dict(in_dim=3, channels=32, heads=4, blocks=1, classes=10, batch=2, t=128, lr=2e-3)
+
+
+def build_quickstart(key):
+    """DEER GRU forward through the full L1 path (Pallas cell kernel +
+    Pallas scan) and the sequential baseline, same params/shapes."""
+    n, m, t = QS_N, QS_M, QS_T
+    params = ref.gru_init(key, n, m)
+
+    def deer_fwd(params, h0, xs):
+        return (deer_mod.deer_gru_fused(params, h0, xs, n=n, m=m, block=256),)
+
+    def seq_fwd(params, h0, xs):
+        return (ref.gru_seq(params, h0, xs, n=n, m=m),)
+
+    args = (sds(params.shape), sds((n,)), sds((t, m)))
+    io = {
+        "inputs": [
+            {"name": "params", **spec(params.shape)},
+            {"name": "h0", **spec((n,))},
+            {"name": "xs", **spec((t, m))},
+        ],
+        "outputs": [{"name": "ys", **spec((t, n))}],
+        "meta": {"n": n, "m": m, "t": t, "param_len": int(params.shape[0])},
+    }
+    return [
+        ("deer_gru_fwd", deer_fwd, args, io, params),
+        ("gru_seq_fwd", seq_fwd, args, io, None),
+    ]
+
+
+def build_worms(key):
+    cfg = WORMS
+    flat0, _, train_step, eval_fn = train.make_worms_fns(
+        key,
+        in_dim=cfg["in_dim"],
+        hidden=cfg["hidden"],
+        layers=cfg["layers"],
+        classes=cfg["classes"],
+        use_deer=True,
+        lr=cfg["lr"],
+    )
+    p = int(flat0.shape[0])
+    b, t = cfg["batch"], cfg["t"]
+    ts_args = (
+        sds((p,)),
+        sds((p,)),
+        sds((p,)),
+        sds((), jnp.int32),
+        sds((b, t, cfg["in_dim"])),
+        sds((b,), jnp.int32),
+    )
+    ts_io = {
+        "inputs": [
+            {"name": "params", **spec((p,))},
+            {"name": "adam_m", **spec((p,))},
+            {"name": "adam_v", **spec((p,))},
+            {"name": "step", **spec((), "i32")},
+            {"name": "xs", **spec((b, t, cfg["in_dim"]))},
+            {"name": "labels", **spec((b,), "i32")},
+        ],
+        "outputs": [
+            {"name": "params", **spec((p,))},
+            {"name": "adam_m", **spec((p,))},
+            {"name": "adam_v", **spec((p,))},
+            {"name": "step", **spec((), "i32")},
+            {"name": "loss", **spec(())},
+            {"name": "acc", **spec(())},
+        ],
+        "meta": {**cfg, "param_len": p},
+    }
+    ev_args = (sds((p,)), sds((b, t, cfg["in_dim"])), sds((b,), jnp.int32))
+    ev_io = {
+        "inputs": [
+            {"name": "params", **spec((p,))},
+            {"name": "xs", **spec((b, t, cfg["in_dim"]))},
+            {"name": "labels", **spec((b,), "i32")},
+        ],
+        "outputs": [{"name": "loss", **spec(())}, {"name": "acc", **spec(())}],
+        "meta": {**cfg, "param_len": p},
+    }
+    return [
+        ("worms_train_step", lambda *a: tuple(train_step(*a)), ts_args, ts_io, flat0),
+        ("worms_eval", lambda *a: tuple(eval_fn(*a)), ev_args, ev_io, None),
+    ]
+
+
+def build_hnn(key):
+    cfg = HNN
+    flat0, _, train_step, eval_fn = train.make_hnn_fns(
+        key, hidden=cfg["hidden"], depth=cfg["depth"], solver="deer", lr=cfg["lr"]
+    )
+    flat0_rk4, _, train_step_rk4, _ = train.make_hnn_fns(
+        key, hidden=cfg["hidden"], depth=cfg["depth"], solver="rk4", lr=cfg["lr"]
+    )
+    del flat0_rk4  # identical init (same key)
+    p = int(flat0.shape[0])
+    b, l = cfg["batch"], cfg["grid"]
+    args = (sds((p,)), sds((p,)), sds((p,)), sds((), jnp.int32), sds((l,)), sds((b, l, 8)))
+    io = {
+        "inputs": [
+            {"name": "params", **spec((p,))},
+            {"name": "adam_m", **spec((p,))},
+            {"name": "adam_v", **spec((p,))},
+            {"name": "step", **spec((), "i32")},
+            {"name": "ts", **spec((l,))},
+            {"name": "trajs", **spec((b, l, 8))},
+        ],
+        "outputs": [
+            {"name": "params", **spec((p,))},
+            {"name": "adam_m", **spec((p,))},
+            {"name": "adam_v", **spec((p,))},
+            {"name": "step", **spec((), "i32")},
+            {"name": "loss", **spec(())},
+        ],
+        "meta": {**cfg, "param_len": p},
+    }
+    ev_args = (sds((p,)), sds((l,)), sds((b, l, 8)))
+    ev_io = {
+        "inputs": [
+            {"name": "params", **spec((p,))},
+            {"name": "ts", **spec((l,))},
+            {"name": "trajs", **spec((b, l, 8))},
+        ],
+        "outputs": [{"name": "loss", **spec(())}],
+        "meta": {**cfg, "param_len": p},
+    }
+    return [
+        ("hnn_train_step_deer", lambda *a: tuple(train_step(*a)), args, io, flat0),
+        ("hnn_train_step_rk4", lambda *a: tuple(train_step_rk4(*a)), args, io, None),
+        ("hnn_eval", lambda *a: (eval_fn(*a),), ev_args, ev_io, None),
+    ]
+
+
+def build_mhgru(key):
+    cfg = MHGRU
+    flat0, _, train_step, eval_fn = train.make_mhgru_fns(
+        key,
+        in_dim=cfg["in_dim"],
+        channels=cfg["channels"],
+        heads=cfg["heads"],
+        blocks=cfg["blocks"],
+        classes=cfg["classes"],
+        use_deer=True,
+        lr=cfg["lr"],
+    )
+    p = int(flat0.shape[0])
+    b, t = cfg["batch"], cfg["t"]
+    args = (
+        sds((p,)),
+        sds((p,)),
+        sds((p,)),
+        sds((), jnp.int32),
+        sds((b, t, cfg["in_dim"])),
+        sds((b,), jnp.int32),
+    )
+    io = {
+        "inputs": [
+            {"name": "params", **spec((p,))},
+            {"name": "adam_m", **spec((p,))},
+            {"name": "adam_v", **spec((p,))},
+            {"name": "step", **spec((), "i32")},
+            {"name": "xs", **spec((b, t, cfg["in_dim"]))},
+            {"name": "labels", **spec((b,), "i32")},
+        ],
+        "outputs": [
+            {"name": "params", **spec((p,))},
+            {"name": "adam_m", **spec((p,))},
+            {"name": "adam_v", **spec((p,))},
+            {"name": "step", **spec((), "i32")},
+            {"name": "loss", **spec(())},
+            {"name": "acc", **spec(())},
+        ],
+        "meta": {**cfg, "param_len": p},
+    }
+    ev_args = (sds((p,)), sds((b, t, cfg["in_dim"])), sds((b,), jnp.int32))
+    ev_io = {
+        "inputs": [
+            {"name": "params", **spec((p,))},
+            {"name": "xs", **spec((b, t, cfg["in_dim"]))},
+            {"name": "labels", **spec((b,), "i32")},
+        ],
+        "outputs": [{"name": "loss", **spec(())}, {"name": "acc", **spec(())}],
+        "meta": {**cfg, "param_len": p},
+    }
+    return [
+        ("mhgru_train_step", lambda *a: tuple(train_step(*a)), args, io, flat0),
+        ("mhgru_eval", lambda *a: tuple(eval_fn(*a)), ev_args, ev_io, None),
+    ]
+
+
+BUILDERS = {
+    "quickstart": build_quickstart,
+    "worms": build_worms,
+    "hnn": build_hnn,
+    "mhgru": build_mhgru,
+}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--only", default=None, help="comma-separated builder subset")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    names = list(BUILDERS) if args.only is None else args.only.split(",")
+    key = jax.random.PRNGKey(args.seed)
+
+    manifest = {"artifacts": []}
+    manifest_path = os.path.join(args.out, "manifest.json")
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+
+    for group in names:
+        gkey = jax.random.fold_in(key, hash(group) % (2**31))
+        for name, fn, arg_specs, io, init_params in BUILDERS[group](gkey):
+            print(f"[aot] lowering {name} ...", flush=True)
+            lowered = jax.jit(fn).lower(*arg_specs)
+            text = to_hlo_text(lowered)
+            path = os.path.join(args.out, f"{name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            entry = {"name": name, "file": f"{name}.hlo.txt", **io}
+            if init_params is not None:
+                import numpy as np
+
+                pbin = f"{name}_params.bin"
+                np.asarray(init_params, dtype="<f4").tofile(os.path.join(args.out, pbin))
+                entry["params_file"] = pbin
+            # replace any stale entry
+            manifest["artifacts"] = [a for a in manifest["artifacts"] if a["name"] != name]
+            manifest["artifacts"].append(entry)
+            print(f"[aot]   wrote {path} ({len(text)} chars)")
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest: {manifest_path} ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,210 @@
+"""Layer-2: the DEER fixed-point iteration in JAX (paper §3, App. B.1).
+
+``deer_iteration`` mirrors the paper's reference code (App. B.1) with the
+same structure: shifter → FUNCEVAL (f + Jacobians) → GTMULT (rhs assembly) →
+INVLIN (associative scan) inside a ``lax.while_loop`` with the dtype-derived
+tolerance of §3.5.
+
+``deer_rnn`` specialises it to the single-shift RNN case (eq. 11) and wires a
+``jax.custom_vjp`` implementing the paper's eq. (7) backward pass: **one**
+dual scan + a parallel parameter VJP — this is what makes training-time
+speedups exceed forward speedups (Fig. 2 bottom).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.assoc_scan import pallas_affine_scan
+from .kernels.gru_cell import pallas_gru_f_jac
+
+
+def dtype_tol(dtype) -> float:
+    """§3.5: 1e-4 for single precision, 1e-7 for double."""
+    return 1e-7 if jnp.dtype(dtype) == jnp.float64 else 1e-4
+
+
+# ---------------------------------------------------------------------------
+# Generic DEER iteration (App. B.1)
+# ---------------------------------------------------------------------------
+
+
+def deer_iteration(
+    invlin: Callable,
+    func: Callable,
+    shifter_func: Callable,
+    p_num: int,
+    params,
+    xinput,
+    invlin_params,
+    shifter_func_params,
+    yinit_guess,
+    max_iter: int = 100,
+):
+    """Generic DEER solver, a line-for-line functional port of App. B.1.
+
+    * ``invlin(gts, rhs, invlin_params)`` — applies ``L_G⁻¹``.
+    * ``func(ytparams, x, params)`` — the non-linear f at one sample.
+    * ``shifter_func(yt, shifter_params)`` — list of P shifted trajectories.
+    """
+    jacfunc = jax.vmap(jax.jacfwd(func, argnums=0), in_axes=(0, 0, None))
+    func2 = jax.vmap(func, in_axes=(0, 0, None))
+    dtype = yinit_guess.dtype
+    tol = dtype_tol(dtype)
+
+    def iter_func(iter_inp):
+        err, yt, iiter = iter_inp
+        ytparams = shifter_func(yt, shifter_func_params)
+        gts = [-gt for gt in jacfunc(ytparams, xinput, params)]  # FUNCEVAL
+        rhs = func2(ytparams, xinput, params)  # FUNCEVAL
+        rhs += sum(
+            jnp.einsum("...ij,...j->...i", gt, ytp) for gt, ytp in zip(gts, ytparams)
+        )  # GTMULT
+        yt_next = invlin(gts, rhs, invlin_params)  # INVLIN
+        err = jnp.max(jnp.abs(yt_next - yt))
+        return err, yt_next, iiter + 1
+
+    def cond_func(iter_inp):
+        err, _, iiter = iter_inp
+        return jnp.logical_and(err > tol, iiter < max_iter)
+
+    err = jnp.array(1e10, dtype=dtype)
+    iiter = jnp.array(0, dtype=jnp.int32)
+    _, yt, _ = jax.lax.while_loop(cond_func, iter_func, (err, yinit_guess, iiter))
+    return yt
+
+
+# ---------------------------------------------------------------------------
+# RNN materialisation (eq. 11) with the eq. (7) backward pass
+# ---------------------------------------------------------------------------
+
+
+def _rnn_fixed_point(step_fn, params, h0, xs, guess, max_iter, scan_impl):
+    """Run the DEER Newton iteration for ``y_i = f(params, y_{i-1}, x_i)``."""
+    jac_fn = jax.vmap(jax.jacfwd(step_fn, argnums=1), in_axes=(None, 0, 0))
+    f_fn = jax.vmap(step_fn, in_axes=(None, 0, 0))
+    tol = dtype_tol(guess.dtype)
+
+    def one_iter(yt):
+        h_prev = jnp.concatenate([h0[None], yt[:-1]], axis=0)
+        jac = jac_fn(params, h_prev, xs)  # (T, n, n) — FUNCEVAL
+        f = f_fn(params, h_prev, xs)  # (T, n)
+        rhs = f - jnp.einsum("tij,tj->ti", jac, h_prev)  # GTMULT
+        return scan_impl(jac, rhs, h0)  # INVLIN
+
+    def body(state):
+        err, yt, it = state
+        yt_next = one_iter(yt)
+        err = jnp.max(jnp.abs(yt_next - yt))
+        return err, yt_next, it + 1
+
+    def cond(state):
+        err, _, it = state
+        return jnp.logical_and(err > tol, it < max_iter)
+
+    err0 = jnp.array(jnp.inf, dtype=guess.dtype)
+    _, ys, iters = jax.lax.while_loop(cond, body, (err0, guess, jnp.array(0, jnp.int32)))
+    return ys, iters
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 5, 6))
+def deer_rnn(step_fn, params, h0, xs, guess, max_iter=100, use_pallas_scan=False):
+    """DEER evaluation of an RNN; differentiable via the paper's eq. (7).
+
+    ``step_fn(params, h, x) -> h'`` defines the recurrence. Returns ys (T, n).
+    ``guess`` is the initial trajectory (zeros, or the previous training
+    step's solution — App. B.2 warm start).
+    """
+    scan_impl = pallas_affine_scan if use_pallas_scan else ref.assoc_affine_scan
+    ys, _ = _rnn_fixed_point(step_fn, params, h0, xs, guess, max_iter, scan_impl)
+    return ys
+
+
+def _deer_rnn_fwd(step_fn, params, h0, xs, guess, max_iter, use_pallas_scan):
+    scan_impl = pallas_affine_scan if use_pallas_scan else ref.assoc_affine_scan
+    ys, _ = _rnn_fixed_point(step_fn, params, h0, xs, guess, max_iter, scan_impl)
+    return ys, (params, h0, xs, ys)
+
+
+def _deer_rnn_bwd(step_fn, max_iter, use_pallas_scan, res, g):
+    params, h0, xs, ys = res
+    h_prev = jnp.concatenate([h0[None], ys[:-1]], axis=0)
+
+    # Jacobians along the converged trajectory.
+    jac = jax.vmap(jax.jacfwd(step_fn, argnums=1), in_axes=(None, 0, 0))(params, h_prev, xs)
+
+    # ONE dual scan: λ_i = g_i + J_{i+1}ᵀ λ_{i+1}  (eq. 7's L_G⁻¹ dual).
+    lam = ref.assoc_reverse_scan(jac, g)
+
+    # Parallel per-step VJPs, summed for parameters.
+    def step_vjp(h, x, lam_i):
+        _, vjp = jax.vjp(lambda p, hh, xx: step_fn(p, hh, xx), params, h, x)
+        return vjp(lam_i)
+
+    dparams_steps, _, dxs = jax.vmap(step_vjp)(h_prev, xs, lam)
+    dparams = jax.tree_util.tree_map(lambda a: jnp.sum(a, axis=0), dparams_steps)
+
+    # dL/dh0 flows through step 1 only (later steps' h-cotangents are already
+    # folded into λ by the dual scan).
+    _, vjp0 = jax.vjp(lambda hh: step_fn(params, hh, xs[0]), h0)
+    (dh0,) = vjp0(lam[0])
+
+    dguess = jnp.zeros_like(ys)  # the fixed point is guess-independent
+    return dparams, dh0, dxs, dguess
+
+
+deer_rnn.defvjp(_deer_rnn_fwd, _deer_rnn_bwd)
+
+
+# ---------------------------------------------------------------------------
+# GRU front-ends (the paper's benchmark subject)
+# ---------------------------------------------------------------------------
+
+
+def gru_step_fn(n, m):
+    """step_fn closure for :func:`deer_rnn` using the reference GRU."""
+
+    def step(params, h, x):
+        return ref.gru_step(params, h, x, n=n, m=m)
+
+    return step
+
+
+def deer_gru(params, h0, xs, guess=None, *, n, m, max_iter=100, use_pallas_scan=False):
+    """DEER evaluation of a GRU (flat Rust-compatible params)."""
+    if guess is None:
+        guess = jnp.zeros((xs.shape[0], n), xs.dtype)
+    return deer_rnn(gru_step_fn(n, m), params, h0, xs, guess, max_iter, use_pallas_scan)
+
+
+def deer_gru_fused(params, h0, xs, guess=None, *, n, m, max_iter=100, block=256):
+    """DEER GRU forward using the fused Pallas cell kernel for FUNCEVAL and
+    the Pallas scan for INVLIN — the all-L1 hot path that gets AOT-compiled
+    into the quickstart artifact. Forward-only (wrap in
+    ``jax.lax.stop_gradient`` land; training uses :func:`deer_gru`)."""
+    t = xs.shape[0]
+    if guess is None:
+        guess = jnp.zeros((t, n), xs.dtype)
+    tol = dtype_tol(xs.dtype)
+
+    def body(state):
+        err, yt, it = state
+        h_prev = jnp.concatenate([h0[None], yt[:-1]], axis=0)
+        f, jac = pallas_gru_f_jac(params, h_prev, xs, n=n, m=m, block=min(block, t))
+        rhs = f - jnp.einsum("tij,tj->ti", jac, h_prev)
+        yt_next = pallas_affine_scan(jac, rhs, h0, block=min(block, t))
+        err = jnp.max(jnp.abs(yt_next - yt))
+        return err, yt_next, it + 1
+
+    def cond(state):
+        err, _, it = state
+        return jnp.logical_and(err > tol, it < max_iter)
+
+    err0 = jnp.array(jnp.inf, dtype=xs.dtype)
+    _, ys, _ = jax.lax.while_loop(cond, body, (err0, guess, jnp.array(0, jnp.int32)))
+    return ys

@@ -1,0 +1,132 @@
+"""Layer-1 Pallas kernel: blocked associative affine scan (paper eq. 10/11).
+
+This is the `L_G⁻¹` hot-spot of DEER expressed as a Pallas kernel with the
+same three-phase schedule as the Rust `scan::par` implementation and the one
+a TPU would run:
+
+1. ``_aggregate_kernel`` — grid over sequence blocks; each block reduces its
+   elements to a single affine pair ``(A_blk, b_blk)``.
+2. A tiny host-side carry scan over the ``T/blk`` block aggregates.
+3. ``_apply_kernel`` — grid over blocks; each block replays the O(n²)
+   recurrence from its entry state.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): each block's working set in
+VMEM is ``blk·(n² + 2n)·4 B`` (A-tile + b-tile + running pair) — e.g.
+``blk=256, n=16`` → ~0.3 MiB, far under the ~16 MiB VMEM budget; block-level
+composition is an (n×n)·(n×n) matmul chain that maps onto the MXU for
+n ≥ 8 (padded to 8×128 tiles below that). The kernels MUST run with
+``interpret=True`` here: real-TPU lowering emits Mosaic custom-calls the CPU
+PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 256
+
+
+def _aggregate_kernel(a_ref, b_ref, agg_a_ref, agg_b_ref):
+    """Compose all elements of one block into a single (A, b) pair."""
+    a = a_ref[...]  # (blk, n, n)
+    b = b_ref[...]  # (blk, n)
+
+    def step(carry, ab):
+        acc_a, acc_b = carry
+        ai, bi = ab
+        return (ai @ acc_a, ai @ acc_b + bi), 0
+
+    n = a.shape[-1]
+    init = (jnp.eye(n, dtype=a.dtype), jnp.zeros((n,), a.dtype))
+    (agg_a, agg_b), _ = jax.lax.scan(step, init, (a, b))
+    agg_a_ref[...] = agg_a[None]
+    agg_b_ref[...] = agg_b[None]
+
+
+def _apply_kernel(a_ref, b_ref, entry_ref, out_ref):
+    """Replay the recurrence within one block from its entry state."""
+    a = a_ref[...]
+    b = b_ref[...]
+    y0 = entry_ref[0]
+
+    def step(h, ab):
+        ai, bi = ab
+        y = ai @ h + bi
+        return y, y
+
+    _, ys = jax.lax.scan(step, y0, (a, b))
+    out_ref[...] = ys
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def pallas_affine_scan(a, b, y0, *, block: int = DEFAULT_BLOCK):
+    """``y_i = A_i y_{i-1} + b_i`` with ``y_0 = y0`` via the blocked Pallas
+    schedule. a: (T, n, n), b: (T, n), y0: (n,) → (T, n).
+
+    T must be a multiple of ``block`` (callers pad; DEER's benchmark lengths
+    are powers of two). Falls back to a single block when T < block.
+    """
+    t, n, _ = a.shape
+    blk = min(block, t)
+    assert t % blk == 0, f"sequence length {t} not a multiple of block {blk}"
+    nblocks = t // blk
+
+    # Phase 1: per-block aggregates.
+    agg_a, agg_b = pl.pallas_call(
+        _aggregate_kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((blk, n, n), lambda c: (c, 0, 0)),
+            pl.BlockSpec((blk, n), lambda c: (c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n, n), lambda c: (c, 0, 0)),
+            pl.BlockSpec((1, n), lambda c: (c, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nblocks, n, n), a.dtype),
+            jax.ShapeDtypeStruct((nblocks, n), a.dtype),
+        ],
+        interpret=True,
+    )(a, b)
+
+    # Phase 2: carry across blocks (length T/blk — negligible).
+    def carry_step(y, ab):
+        ai, bi = ab
+        y2 = ai @ y + bi
+        return y2, y
+
+    _, entries = jax.lax.scan(carry_step, y0, (agg_a, agg_b))
+
+    # Phase 3: per-block apply.
+    out = pl.pallas_call(
+        _apply_kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((blk, n, n), lambda c: (c, 0, 0)),
+            pl.BlockSpec((blk, n), lambda c: (c, 0)),
+            pl.BlockSpec((1, n), lambda c: (c, 0)),
+        ],
+        out_specs=pl.BlockSpec((blk, n), lambda c: (c, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, n), a.dtype),
+        interpret=True,
+    )(a, b, entries)
+    return out
+
+
+def vmem_bytes(block: int, n: int, elem: int = 4) -> int:
+    """Estimated per-block VMEM working set (documented in DESIGN.md §Perf)."""
+    return block * (n * n + 2 * n) * elem + 2 * (n * n + n) * elem
+
+
+def mxu_utilization_estimate(n: int) -> float:
+    """Fraction of the 128×128 MXU systolic array a block-compose matmul can
+    fill: DEER's per-element (n×n)·(n×n) products tile the MXU only for
+    n ≥ 128; below that utilization ≈ (n/128)² per issue, partially recovered
+    by batching 8 elements per pass."""
+    frac = min(1.0, (n / 128.0) ** 2 * 8.0)
+    return max(frac, 1.0 / (128.0 * 16.0))

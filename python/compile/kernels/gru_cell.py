@@ -1,0 +1,103 @@
+"""Layer-1 Pallas kernel: fused GRU cell evaluation + analytic Jacobian.
+
+Table 5 of the paper profiles DEER's iteration and shows FUNCEVAL (the f and
+``jacfwd`` evaluation) is a major cost next to INVLIN. This kernel fuses the
+two: gate activations are computed once and reused for both the new state and
+the analytic ∂f/∂h rows — the optimization the Rust engine mirrors in
+``cells::Gru::jacobian`` (see EXPERIMENTS.md §Perf).
+
+Grid: sequence blocks of ``blk`` steps; each invocation computes
+``f(h_{i-1}, x_i)`` and the n×n Jacobian for its block, fully vectorized
+(no per-step loop — all ops are (blk, ·) tensor ops that map onto VPU/MXU
+lanes). VMEM per block ≈ ``blk·(n² + 2n + m)·4`` bytes.
+
+interpret=True as required for CPU PJRT execution.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 256
+
+
+def _gru_kernel(h_ref, x_ref, wi_ref, wh_ref, b_ref, f_ref, jac_ref):
+    h = h_ref[...]  # (blk, n) — previous states (shifted trajectory guess)
+    x = x_ref[...]  # (blk, m)
+    wi = wi_ref[...]  # (3, n, m): W_ir, W_iz, W_in
+    wh = wh_ref[...]  # (3, n, n): W_hr, W_hz, W_hn
+    b = b_ref[...]  # (6, n): b_ir, b_iz, b_in, b_hr, b_hz, b_hn
+
+    a_r = x @ wi[0].T + h @ wh[0].T + b[0] + b[3]
+    a_z = x @ wi[1].T + h @ wh[1].T + b[1] + b[4]
+    mg = h @ wh[2].T + b[5]
+    r = jax.nn.sigmoid(a_r)
+    z = jax.nn.sigmoid(a_z)
+    nh = jnp.tanh(x @ wi[2].T + b[2] + r * mg)
+    f = (1.0 - z) * nh + z * h
+    f_ref[...] = f
+
+    dn = 1.0 - nh * nh
+    dr = r * (1.0 - r)
+    dz = z * (1.0 - z)
+    c1 = (1.0 - z) * dn * r  # → W_hn
+    c2 = (1.0 - z) * dn * mg * dr  # → W_hr
+    c3 = (h - nh) * dz  # → W_hz
+    n = h.shape[-1]
+    jac = (
+        c1[:, :, None] * wh[2][None]
+        + c2[:, :, None] * wh[0][None]
+        + c3[:, :, None] * wh[1][None]
+        + z[:, :, None] * jnp.eye(n, dtype=h.dtype)[None]
+    )
+    jac_ref[...] = jac
+
+
+@functools.partial(jax.jit, static_argnames=("n", "m", "block"))
+def pallas_gru_f_jac(params, h_prev, xs, *, n, m, block: int = DEFAULT_BLOCK):
+    """Fused (f, ∂f/∂h) along a trajectory.
+
+    params: flat GRU vector (Rust-compatible layout, see ``ref.gru_init``);
+    h_prev: (T, n) shifted states; xs: (T, m). Returns f (T, n), jac (T, n, n).
+    """
+    t = h_prev.shape[0]
+    blk = min(block, t)
+    assert t % blk == 0, f"T={t} not a multiple of block {blk}"
+    nblocks = t // blk
+
+    wi = params[: 3 * n * m].reshape(3, n, m)
+    wh = params[3 * n * m : 3 * n * m + 3 * n * n].reshape(3, n, n)
+    bs = params[3 * n * m + 3 * n * n :].reshape(6, n)
+
+    f, jac = pl.pallas_call(
+        _gru_kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((blk, n), lambda c: (c, 0)),
+            pl.BlockSpec((blk, m), lambda c: (c, 0)),
+            pl.BlockSpec((3, n, m), lambda c: (0, 0, 0)),
+            pl.BlockSpec((3, n, n), lambda c: (0, 0, 0)),
+            pl.BlockSpec((6, n), lambda c: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((blk, n), lambda c: (c, 0)),
+            pl.BlockSpec((blk, n, n), lambda c: (c, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, n), h_prev.dtype),
+            jax.ShapeDtypeStruct((t, n, n), h_prev.dtype),
+        ],
+        interpret=True,
+    )(h_prev, xs, wi, wh, bs)
+    return f, jac
+
+
+def vmem_bytes(block: int, n: int, m: int, elem: int = 4) -> int:
+    """Per-block VMEM estimate for the fused kernel."""
+    io = block * (n * n + 2 * n + m)
+    weights = 3 * n * m + 3 * n * n + 6 * n
+    return (io + weights) * elem

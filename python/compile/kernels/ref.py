@@ -1,0 +1,163 @@
+"""Pure-jnp correctness oracles for the Layer-1 Pallas kernels.
+
+Everything here is the *reference semantics*: the sequential affine
+recurrence (paper eq. 11), the associative combine (eq. 10), and the GRU cell
+with its analytic state Jacobian. Kernels in this package and the Rust engine
+are both validated against these functions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def combine(later, earlier):
+    """Associative operator of eq. (10): ``(A_l, b_l) • (A_e, b_e)``.
+
+    Elements are pairs ``(A, b)`` representing ``y ↦ A y + b``; ``later``
+    composes *after* ``earlier``. Shapes broadcast over leading axes, so this
+    works both element-wise and inside ``jax.lax.associative_scan``.
+    """
+    a_l, b_l = later
+    a_e, b_e = earlier
+    a = jnp.einsum("...ij,...jk->...ik", a_l, a_e)
+    b = jnp.einsum("...ij,...j->...i", a_l, b_e) + b_l
+    return a, b
+
+
+def seq_affine_scan(a, b, y0):
+    """Sequential ``y_i = A_i y_{i-1} + b_i`` via lax.scan.
+
+    a: (T, n, n), b: (T, n), y0: (n,). Returns (T, n).
+    """
+
+    def step(carry, ab):
+        ai, bi = ab
+        y = ai @ carry + bi
+        return y, y
+
+    _, ys = jax.lax.scan(step, y0, (a, b))
+    return ys
+
+
+def _swapped_combine(earlier, later):
+    """``associative_scan`` folds (accumulated-prefix, new-element) — the
+    accumulated prefix is the *earlier* transform, so adapt argument order."""
+    return combine(later, earlier)
+
+
+def assoc_affine_scan(a, b, y0):
+    """Parallel evaluation of the same recurrence with
+    ``jax.lax.associative_scan`` (the paper's §3.5 implementation note)."""
+    # Fold y0 into the first element: b_1' = A_1 y0 + b_1.
+    b = b.at[0].add(a[0] @ y0)
+    _, b_cum = jax.lax.associative_scan(_swapped_combine, (a, b))
+    return b_cum
+
+
+def seq_reverse_scan(a, g):
+    """Dual recurrence of eq. (7): ``λ_i = g_i + A_{i+1}ᵀ λ_{i+1}``.
+
+    a: (T, n, n) (a[i] propagates step i-1 → i), g: (T, n). Returns λ: (T, n).
+    """
+    t = a.shape[0]
+    # Shift: position i pairs with A_{i+1}; the last position has no successor.
+    a_shift = jnp.concatenate([a[1:], jnp.zeros_like(a[:1])], axis=0)
+
+    def step(carry, ag):
+        ai, gi = ag
+        lam = gi + ai.T @ carry
+        return lam, lam
+
+    _, lams = jax.lax.scan(step, jnp.zeros_like(g[0]), (a_shift[::-1], g[::-1]))
+    return lams[::-1]
+
+
+def assoc_reverse_scan(a, g):
+    """Parallel dual scan: same recurrence evaluated with associative_scan
+    over the reversed sequence of transposed propagators."""
+    a_shift = jnp.concatenate([a[1:], jnp.zeros_like(a[:1])], axis=0)
+    a_rev = jnp.swapaxes(a_shift[::-1], -1, -2)
+    _, lam_rev = jax.lax.associative_scan(_swapped_combine, (a_rev, g[::-1]))
+    return lam_rev[::-1]
+
+
+# ---------------------------------------------------------------------------
+# GRU reference (layout-compatible with rust/src/cells/gru.rs)
+# ---------------------------------------------------------------------------
+
+
+def gru_num_params(n, m):
+    return 3 * n * m + 3 * n * n + 6 * n
+
+
+def gru_init(key, n, m, dtype=jnp.float32):
+    """Flat GRU parameter vector, uniform(-1/√n, 1/√n) — identical layout to
+    the Rust ``Gru``: ``[W_ir,W_iz,W_in | W_hr,W_hz,W_hn | b_ir,b_iz,b_in,
+    b_hr,b_hz,b_hn]``.
+    """
+    bound = 1.0 / float(n) ** 0.5
+    return jax.random.uniform(key, (gru_num_params(n, m),), dtype, -bound, bound)
+
+
+def gru_unpack(params, n, m):
+    """Split the flat vector into weight views."""
+    o = 0
+    wi = []
+    for _ in range(3):
+        wi.append(params[o : o + n * m].reshape(n, m))
+        o += n * m
+    wh = []
+    for _ in range(3):
+        wh.append(params[o : o + n * n].reshape(n, n))
+        o += n * n
+    bs = []
+    for _ in range(6):
+        bs.append(params[o : o + n])
+        o += n
+    return wi, wh, bs
+
+
+def gru_step(params, h, x, *, n, m):
+    """One GRU step ``h' = f(h, x)`` (PyTorch convention; matches Rust)."""
+    (w_ir, w_iz, w_in), (w_hr, w_hz, w_hn), (b_ir, b_iz, b_in, b_hr, b_hz, b_hn) = gru_unpack(
+        params, n, m
+    )
+    r = jax.nn.sigmoid(w_ir @ x + b_ir + w_hr @ h + b_hr)
+    z = jax.nn.sigmoid(w_iz @ x + b_iz + w_hz @ h + b_hz)
+    mg = w_hn @ h + b_hn
+    nh = jnp.tanh(w_in @ x + b_in + r * mg)
+    return (1.0 - z) * nh + z * h
+
+
+def gru_seq(params, h0, xs, *, n, m):
+    """Sequential GRU evaluation: xs (T, m) → ys (T, n)."""
+
+    def step(h, x):
+        h2 = gru_step(params, h, x, n=n, m=m)
+        return h2, h2
+
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys
+
+
+def gru_f_and_jac(params, h, x, *, n, m):
+    """Fused f + analytic ∂f/∂h — the reference for the Pallas GRU kernel."""
+    (w_ir, w_iz, w_in), (w_hr, w_hz, w_hn), (b_ir, b_iz, b_in, b_hr, b_hz, b_hn) = gru_unpack(
+        params, n, m
+    )
+    r = jax.nn.sigmoid(w_ir @ x + b_ir + w_hr @ h + b_hr)
+    z = jax.nn.sigmoid(w_iz @ x + b_iz + w_hz @ h + b_hz)
+    mg = w_hn @ h + b_hn
+    nh = jnp.tanh(w_in @ x + b_in + r * mg)
+    f = (1.0 - z) * nh + z * h
+
+    dn = 1.0 - nh * nh
+    dr = r * (1.0 - r)
+    dz = z * (1.0 - z)
+    c1 = ((1.0 - z) * dn * r)[:, None]  # W_hn coefficient
+    c2 = ((1.0 - z) * dn * mg * dr)[:, None]  # W_hr coefficient
+    c3 = ((h - nh) * dz)[:, None]  # W_hz coefficient
+    jac = c1 * w_hn + c2 * w_hr + c3 * w_hz + jnp.diag(z)
+    return f, jac

@@ -1,0 +1,247 @@
+"""Layer-2 models for the paper's experiments.
+
+* :func:`hnn_*` — Hamiltonian Neural Network (§4.2): an MLP Hamiltonian whose
+  symplectic gradient defines the NeuralODE dynamics, trained on two-body
+  trajectories by rolling the ODE out with DEER (or RK4 baseline).
+* :func:`worms_*` — the EigenWorms classifier (§4.3, App. B.3): encoder →
+  L × [GRU → MLP] with residual+LayerNorm → decoder → mean pool.
+* :func:`mhgru_*` — the multi-head strided GRU block (§4.4, App. B.4) for
+  sequential-CIFAR-style inputs.
+
+All parameters live in pytrees of plain arrays; ``jax.flatten_util`` gives
+the flat vector the Rust coordinator exchanges with the AOT artifacts.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import deer as deer_mod
+from .kernels import ref
+
+# ---------------------------------------------------------------------------
+# Small building blocks
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, n_in, n_out, dtype=jnp.float32):
+    kw, _ = jax.random.split(key)
+    bound = 1.0 / jnp.sqrt(jnp.asarray(n_in, jnp.float32))
+    w = jax.random.uniform(kw, (n_out, n_in), dtype, -bound, bound)
+    b = jnp.zeros((n_out,), dtype)
+    return {"w": w, "b": b}
+
+
+def dense(p, x):
+    return x @ p["w"].T + p["b"]
+
+
+def layer_norm(x, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps)
+
+
+def mlp_init(key, sizes, dtype=jnp.float32):
+    keys = jax.random.split(key, len(sizes) - 1)
+    return [dense_init(k, a, b, dtype) for k, a, b in zip(keys, sizes[:-1], sizes[1:])]
+
+
+def mlp_apply(layers, x, act=jax.nn.relu, final_act=False):
+    for i, p in enumerate(layers):
+        x = dense(p, x)
+        if i + 1 < len(layers) or final_act:
+            x = act(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Hamiltonian Neural Network (§4.2 / App. B.2)
+# ---------------------------------------------------------------------------
+
+HNN_STATE = 8  # two-body: (x1, y1, vx1, vy1, x2, y2, vx2, vy2)
+
+
+def hnn_init(key, hidden=64, depth=6, state=HNN_STATE):
+    """App. B.2: 6 linear layers, softplus activations, scalar output."""
+    sizes = [state] + [hidden] * (depth - 1) + [1]
+    return mlp_init(key, sizes)
+
+
+def hnn_hamiltonian(params, s):
+    return mlp_apply(params, s, act=jax.nn.softplus)[0]
+
+
+def hnn_dynamics(params, t, s):
+    """ds/dt = J_sym ∇H with the canonical symplectic structure on
+    (q1, q2 | p1, p2) ordering (positions first, velocities last per pair are
+    re-indexed internally)."""
+    del t
+    grad_h = jax.grad(lambda ss: hnn_hamiltonian(params, ss))(s)
+    # state layout: [x1, y1, vx1, vy1, x2, y2, vx2, vy2]
+    # dq/dt = ∂H/∂p ; dp/dt = −∂H/∂q, pairing (x1,vx1), (y1,vy1), ...
+    q_idx = jnp.array([0, 1, 4, 5])
+    p_idx = jnp.array([2, 3, 6, 7])
+    ds = jnp.zeros_like(s)
+    ds = ds.at[q_idx].set(grad_h[p_idx])
+    ds = ds.at[p_idx].set(-grad_h[q_idx])
+    return ds
+
+
+def hnn_rollout_deer(params, ts, y0, max_iter=30):
+    from .ode import deer_ode_solve
+
+    return deer_ode_solve(hnn_dynamics, params, ts, y0, max_iter)
+
+
+def hnn_rollout_rk4(params, ts, y0):
+    from .ode import rk4_solve
+
+    return rk4_solve(hnn_dynamics, params, ts, y0)
+
+
+def hnn_loss(params, ts, trajs, solver="deer"):
+    """MSE between rolled-out and reference trajectories. trajs: (B, L, 8)."""
+    roll = hnn_rollout_deer if solver == "deer" else hnn_rollout_rk4
+    pred = jax.vmap(lambda y0: roll(params, ts, y0))(trajs[:, 0])
+    return jnp.mean((pred - trajs) ** 2)
+
+
+# ---------------------------------------------------------------------------
+# EigenWorms classifier (§4.3 / App. B.3)
+# ---------------------------------------------------------------------------
+
+
+def worms_init(key, *, in_dim=6, hidden=24, layers=5, classes=5):
+    keys = jax.random.split(key, 2 + 2 * layers)
+    p = {
+        "encoder": dense_init(keys[0], in_dim, hidden),
+        "decoder": dense_init(keys[1], hidden, classes),
+        "grus": [],
+        "mlps": [],
+    }
+    for i in range(layers):
+        p["grus"].append(ref.gru_init(keys[2 + 2 * i], hidden, hidden))
+        p["mlps"].append(mlp_init(keys[3 + 2 * i], [hidden, hidden, hidden]))
+    return p
+
+
+def worms_forward(params, xs, *, hidden, use_deer=True, max_iter=100):
+    """xs: (T, in_dim) → logits (classes,). App. B.3 architecture: encoder,
+    then per layer GRU + MLP each with residual + LayerNorm, decoder, mean
+    over the sequence."""
+    h = dense(params["encoder"], xs)  # (T, d)
+    n = hidden
+    for gru_p, mlp_p in zip(params["grus"], params["mlps"]):
+        if use_deer:
+            ys = deer_mod.deer_rnn(
+                deer_mod.gru_step_fn(n, n),
+                gru_p,
+                jnp.zeros((n,), h.dtype),
+                h,
+                jnp.zeros_like(h),
+                max_iter,
+                False,
+            )
+        else:
+            ys = ref.gru_seq(gru_p, jnp.zeros((n,), h.dtype), h, n=n, m=n)
+        h = layer_norm(h + ys)
+        h = layer_norm(h + mlp_apply(mlp_p, h))
+    logits = dense(params["decoder"], h)  # (T, classes)
+    return jnp.mean(logits, axis=0)
+
+
+def worms_loss_acc(params, xs, labels, *, hidden, use_deer=True, max_iter=100):
+    """Batched cross-entropy + accuracy. xs: (B, T, in), labels: (B,)."""
+    logits = jax.vmap(lambda x: worms_forward(params, x, hidden=hidden, use_deer=use_deer, max_iter=max_iter))(xs)
+    logp = jax.nn.log_softmax(logits)
+    ce = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+    acc = jnp.mean((jnp.argmax(logits, axis=1) == labels).astype(jnp.float32))
+    return ce, acc
+
+
+# ---------------------------------------------------------------------------
+# Multi-head strided GRU (§4.4 / App. B.4)
+# ---------------------------------------------------------------------------
+
+
+def mhgru_block_init(key, *, channels, heads):
+    assert channels % heads == 0
+    c = channels // heads
+    keys = jax.random.split(key, heads + 2)
+    return {
+        "heads": [ref.gru_init(keys[i], c, c) for i in range(heads)],
+        "up": dense_init(keys[-2], channels, 2 * channels),  # pre-GLU
+    }
+
+
+def _strided_gru(gru_p, xs, stride, *, n, use_deer, max_iter):
+    """GRU with recurrence stride 2^k: the sequence splits into `stride`
+    independent interleaved subsequences (the DEER shift s=stride), each
+    evaluated in parallel."""
+    t, _ = xs.shape
+    pad = (-t) % stride
+    xs_p = jnp.pad(xs, ((0, pad), (0, 0)))
+    tt = xs_p.shape[0]
+    lanes = xs_p.reshape(tt // stride, stride, n).transpose(1, 0, 2)  # (stride, T/stride, c)
+
+    def run(lane):
+        if use_deer:
+            return deer_mod.deer_rnn(
+                deer_mod.gru_step_fn(n, n),
+                gru_p,
+                jnp.zeros((n,), xs.dtype),
+                lane,
+                jnp.zeros_like(lane),
+                max_iter,
+                False,
+            )
+        return ref.gru_seq(gru_p, jnp.zeros((n,), xs.dtype), lane, n=n, m=n)
+
+    ys = jax.vmap(run)(lanes)  # (stride, T/stride, c)
+    ys = ys.transpose(1, 0, 2).reshape(tt, n)
+    return ys[:t]
+
+
+def mhgru_block_apply(p, xs, *, use_deer=True, max_iter=100):
+    """One composite layer (App. B.4): multi-head strided GRU → linear 2×
+    up-projection → GLU → residual → LayerNorm. xs: (T, channels)."""
+    # dims are static (weight shapes): up-projection is (2C, C).
+    channels = p["up"]["w"].shape[1]
+    heads = len(p["heads"])
+    c = channels // heads
+    outs = []
+    for k, gru_p in enumerate(p["heads"]):
+        stride = 2 ** (k % 8)
+        outs.append(_strided_gru(gru_p, xs[:, k * c : (k + 1) * c], stride, n=c, use_deer=use_deer, max_iter=max_iter))
+    y = jnp.concatenate(outs, axis=-1)
+    y = dense(p["up"], y)
+    y = y[:, :channels] * jax.nn.sigmoid(y[:, channels:])  # GLU
+    return layer_norm(xs + y)
+
+
+def mhgru_init(key, *, in_dim=3, channels=64, heads=8, blocks=2, classes=10):
+    keys = jax.random.split(key, blocks + 2)
+    return {
+        "encoder": dense_init(keys[0], in_dim, channels),
+        "blocks": [mhgru_block_init(keys[1 + i], channels=channels, heads=heads) for i in range(blocks)],
+        "decoder": dense_init(keys[-1], channels, classes),
+    }
+
+
+def mhgru_forward(params, xs, *, use_deer=True, max_iter=100):
+    """xs: (T, in_dim) → logits (classes,)."""
+    h = dense(params["encoder"], xs)
+    for blk in params["blocks"]:
+        h = mhgru_block_apply(blk, h, use_deer=use_deer, max_iter=max_iter)
+    logits = dense(params["decoder"], h)
+    return jnp.mean(logits, axis=0)
+
+
+def mhgru_loss_acc(params, xs, labels, *, use_deer=True, max_iter=100):
+    logits = jax.vmap(lambda x: mhgru_forward(params, x, use_deer=use_deer, max_iter=max_iter))(xs)
+    logp = jax.nn.log_softmax(logits)
+    ce = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+    acc = jnp.mean((jnp.argmax(logits, axis=1) == labels).astype(jnp.float32))
+    return ce, acc

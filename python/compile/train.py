@@ -1,0 +1,117 @@
+"""Layer-2 training steps: Adam on a flat parameter vector.
+
+The Rust coordinator drives training by executing the AOT-compiled
+``*_train_step`` artifacts: state is ``(flat_params, adam_m, adam_v, step)``
+— plain f32 vectors, so the artifact boundary stays trivial. Each train step
+is a single fused HLO module (forward + backward + Adam), the L2 §Perf
+requirement (no per-step re-lowering, everything fuses under one jit).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from . import models
+
+# ---------------------------------------------------------------------------
+# Adam (Kingma & Ba 2014) on flat vectors
+# ---------------------------------------------------------------------------
+
+
+def adam_update(params, grads, m, v, step, *, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    """One Adam step; ``step`` is the 1-based update index (i32 scalar)."""
+    m = b1 * m + (1.0 - b1) * grads
+    v = b2 * v + (1.0 - b2) * grads * grads
+    t = step.astype(params.dtype)
+    mhat = m / (1.0 - b1**t)
+    vhat = v / (1.0 - b2**t)
+    params = params - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return params, m, v
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = jnp.sqrt(jnp.sum(grads * grads))
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return grads * scale
+
+
+# ---------------------------------------------------------------------------
+# EigenWorms classifier (App. B.3: Adam 3e-4, global-norm clip 1.0)
+# ---------------------------------------------------------------------------
+
+
+def make_worms_fns(key, *, in_dim=6, hidden=24, layers=5, classes=5, use_deer=True, max_iter=100, lr=3e-4):
+    """Build (init_flat, unravel, train_step, eval_fn) for the classifier."""
+    params0 = models.worms_init(key, in_dim=in_dim, hidden=hidden, layers=layers, classes=classes)
+    flat0, unravel = ravel_pytree(params0)
+
+    def loss_fn(flat, xs, labels):
+        ce, acc = models.worms_loss_acc(
+            unravel(flat), xs, labels, hidden=hidden, use_deer=use_deer, max_iter=max_iter
+        )
+        return ce, acc
+
+    def train_step(flat, m, v, step, xs, labels):
+        (ce, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(flat, xs, labels)
+        grads = clip_by_global_norm(grads, 1.0)
+        step = step + 1
+        flat, m, v = adam_update(flat, grads, m, v, step, lr=lr)
+        return flat, m, v, step, ce, acc
+
+    def eval_fn(flat, xs, labels):
+        return loss_fn(flat, xs, labels)
+
+    return flat0, unravel, train_step, eval_fn
+
+
+# ---------------------------------------------------------------------------
+# HNN / NeuralODE (App. B.2: Adam 1e-3, MSE)
+# ---------------------------------------------------------------------------
+
+
+def make_hnn_fns(key, *, hidden=64, depth=6, solver="deer", max_iter=30, lr=1e-3):
+    params0 = models.hnn_init(key, hidden=hidden, depth=depth)
+    flat0, unravel = ravel_pytree(params0)
+
+    def loss_fn(flat, ts, trajs):
+        return models.hnn_loss(unravel(flat), ts, trajs, solver=solver)
+
+    def train_step(flat, m, v, step, ts, trajs):
+        loss, grads = jax.value_and_grad(loss_fn)(flat, ts, trajs)
+        step = step + 1
+        flat, m, v = adam_update(flat, grads, m, v, step, lr=lr)
+        return flat, m, v, step, loss
+
+    def eval_fn(flat, ts, trajs):
+        return loss_fn(flat, ts, trajs)
+
+    return flat0, unravel, train_step, eval_fn
+
+
+# ---------------------------------------------------------------------------
+# Multi-head GRU / sequential CIFAR (App. B.4: AdamW-ish, clip 1.0)
+# ---------------------------------------------------------------------------
+
+
+def make_mhgru_fns(key, *, in_dim=3, channels=64, heads=8, blocks=2, classes=10, use_deer=True, max_iter=100, lr=2e-3, weight_decay=0.01):
+    params0 = models.mhgru_init(key, in_dim=in_dim, channels=channels, heads=heads, blocks=blocks, classes=classes)
+    flat0, unravel = ravel_pytree(params0)
+
+    def loss_fn(flat, xs, labels):
+        ce, acc = models.mhgru_loss_acc(unravel(flat), xs, labels, use_deer=use_deer, max_iter=max_iter)
+        return ce, acc
+
+    def train_step(flat, m, v, step, xs, labels):
+        (ce, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(flat, xs, labels)
+        grads = clip_by_global_norm(grads, 1.0)
+        step = step + 1
+        flat, m, v = adam_update(flat, grads, m, v, step, lr=lr)
+        flat = flat * (1.0 - lr * weight_decay)  # decoupled weight decay
+        return flat, m, v, step, ce, acc
+
+    def eval_fn(flat, xs, labels):
+        return loss_fn(flat, xs, labels)
+
+    return flat0, unravel, train_step, eval_fn

@@ -1,0 +1,118 @@
+"""L2 DEER correctness: fixed point equals sequential evaluation (Fig. 3),
+gradients equal BPTT (eq. 7), warm starts, App. B.1 generic form."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import deer as deer_mod
+from compile.kernels import ref
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=6),
+    m=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_deer_matches_sequential(n, m, seed):
+    t = 256
+    key = jax.random.PRNGKey(seed)
+    params = ref.gru_init(key, n, m)
+    xs = jax.random.normal(jax.random.fold_in(key, 1), (t, m))
+    h0 = jnp.zeros((n,))
+    want = ref.gru_seq(params, h0, xs, n=n, m=m)
+    got = deer_mod.deer_gru(params, h0, xs, n=n, m=m)
+    # Fig. 3: agreement at single-precision tolerance.
+    np.testing.assert_allclose(got, want, rtol=5e-3, atol=5e-4)
+
+
+def test_deer_gradient_matches_bptt():
+    key = jax.random.PRNGKey(5)
+    n, m, t = 4, 3, 128
+    params = ref.gru_init(key, n, m)
+    xs = jax.random.normal(jax.random.fold_in(key, 1), (t, m))
+    h0 = jnp.zeros((n,))
+    w = jax.random.normal(jax.random.fold_in(key, 2), (t, n))
+
+    def loss_seq(p):
+        return jnp.sum(w * ref.gru_seq(p, h0, xs, n=n, m=m))
+
+    def loss_deer(p):
+        return jnp.sum(w * deer_mod.deer_gru(p, h0, xs, n=n, m=m))
+
+    g_seq = jax.grad(loss_seq)(params)
+    g_deer = jax.grad(loss_deer)(params)
+    scale = jnp.max(jnp.abs(g_seq))
+    np.testing.assert_allclose(g_deer / scale, g_seq / scale, rtol=2e-3, atol=2e-4)
+
+
+def test_deer_input_and_h0_gradients():
+    key = jax.random.PRNGKey(6)
+    n, m, t = 3, 2, 64
+    params = ref.gru_init(key, n, m)
+    xs = jax.random.normal(jax.random.fold_in(key, 1), (t, m))
+    h0 = jax.random.normal(jax.random.fold_in(key, 2), (n,)) * 0.2
+
+    def loss_seq(h0_, xs_):
+        return jnp.sum(ref.gru_seq(params, h0_, xs_, n=n, m=m) ** 2)
+
+    def loss_deer(h0_, xs_):
+        ys = deer_mod.deer_rnn(
+            deer_mod.gru_step_fn(n, m), params, h0_, xs_, jnp.zeros((t, n)), 100, False
+        )
+        return jnp.sum(ys**2)
+
+    gh_s, gx_s = jax.grad(loss_seq, argnums=(0, 1))(h0, xs)
+    gh_d, gx_d = jax.grad(loss_deer, argnums=(0, 1))(h0, xs)
+    np.testing.assert_allclose(gh_d, gh_s, rtol=1e-2, atol=1e-4)
+    np.testing.assert_allclose(gx_d, gx_s, rtol=1e-2, atol=1e-4)
+
+
+def test_warm_start_is_fixed_point():
+    key = jax.random.PRNGKey(7)
+    n, m, t = 3, 2, 128
+    params = ref.gru_init(key, n, m)
+    xs = jax.random.normal(jax.random.fold_in(key, 1), (t, m))
+    h0 = jnp.zeros((n,))
+    ys = deer_mod.deer_gru(params, h0, xs, n=n, m=m)
+    ys2 = deer_mod.deer_gru(params, h0, xs, guess=ys, n=n, m=m)
+    np.testing.assert_allclose(ys, ys2, rtol=1e-5, atol=1e-5)
+
+
+def test_generic_deer_iteration_appendix_b1():
+    """The App. B.1 generic form reproduces the GRU fixed point."""
+    key = jax.random.PRNGKey(8)
+    n, m, t = 3, 2, 64
+    params = ref.gru_init(key, n, m)
+    xs = jax.random.normal(jax.random.fold_in(key, 1), (t, m))
+    h0 = jnp.zeros((n,))
+
+    def func(ytparams, x, p):
+        (h_prev,) = ytparams
+        return ref.gru_step(p, h_prev, x, n=n, m=m)
+
+    def shifter(yt, h0_):
+        return [jnp.concatenate([h0_[None], yt[:-1]], axis=0)]
+
+    def invlin(gts, rhs, h0_):
+        (g,) = gts
+        return ref.assoc_affine_scan(-g, rhs, h0_)
+
+    ys = deer_mod.deer_iteration(
+        invlin, func, shifter, 1, params, xs, h0, h0, jnp.zeros((t, n))
+    )
+    want = ref.gru_seq(params, h0, xs, n=n, m=m)
+    np.testing.assert_allclose(ys, want, rtol=5e-3, atol=5e-4)
+
+
+def test_deer_fused_matches_plain():
+    key = jax.random.PRNGKey(9)
+    n, m, t = 4, 4, 256
+    params = ref.gru_init(key, n, m)
+    xs = jax.random.normal(jax.random.fold_in(key, 1), (t, m))
+    h0 = jnp.zeros((n,))
+    a = deer_mod.deer_gru(params, h0, xs, n=n, m=m)
+    b = deer_mod.deer_gru_fused(params, h0, xs, n=n, m=m, block=64)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)

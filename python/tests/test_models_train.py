@@ -1,0 +1,126 @@
+"""L2 models + train steps: shapes, loss decrease, DEER-vs-sequential parity
+inside full models (the §4.3/§4.4 claim that training curves coincide)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import models as M
+from compile import train as T
+
+
+def _synthetic_worms(key, b, t, in_dim=6, classes=5):
+    """Tiny stand-in for the synthetic EigenWorms generator (the real one is
+    the Rust `data::worms`; this keeps parity tests cheap)."""
+    kx, kl = jax.random.split(key)
+    labels = jax.random.randint(kl, (b,), 0, classes)
+    base = jax.random.normal(kx, (b, t, in_dim)) * 0.1
+    tgrid = jnp.linspace(0, 8 * jnp.pi, t)
+    freq = 0.5 + labels[:, None].astype(jnp.float32) * 0.35
+    sig = jnp.sin(freq * tgrid[None, :])[:, :, None]
+    return base + sig, labels
+
+
+def test_worms_forward_shapes():
+    key = jax.random.PRNGKey(0)
+    p = M.worms_init(key, hidden=8, layers=2)
+    xs = jax.random.normal(key, (40, 6))
+    logits = M.worms_forward(p, xs, hidden=8)
+    assert logits.shape == (5,)
+
+
+def test_worms_deer_equals_sequential_forward():
+    key = jax.random.PRNGKey(1)
+    p = M.worms_init(key, hidden=8, layers=2)
+    xs = jax.random.normal(key, (64, 6))
+    a = M.worms_forward(p, xs, hidden=8, use_deer=True)
+    b = M.worms_forward(p, xs, hidden=8, use_deer=False)
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-4)
+
+
+def test_worms_training_reduces_loss():
+    key = jax.random.PRNGKey(2)
+    flat, _, step_fn, eval_fn = T.make_worms_fns(key, hidden=8, layers=1, use_deer=True, lr=3e-3)
+    xs, labels = _synthetic_worms(jax.random.fold_in(key, 7), 8, 48)
+    m = jnp.zeros_like(flat)
+    v = jnp.zeros_like(flat)
+    step = jnp.int32(0)
+    step_fn = jax.jit(step_fn)
+    loss0 = float(eval_fn(flat, xs, labels)[0])
+    for _ in range(30):
+        flat, m, v, step, loss, acc = step_fn(flat, m, v, step, xs, labels)
+    loss1 = float(eval_fn(flat, xs, labels)[0])
+    assert loss1 < loss0, f"{loss0} -> {loss1}"
+
+
+def test_worms_deer_and_seq_training_match():
+    """§4.3: DEER and sequential training produce the same trajectory (up to
+    f32 noise) — check a few steps give nearly identical losses."""
+    key = jax.random.PRNGKey(3)
+    flat_d, _, step_d, _ = T.make_worms_fns(key, hidden=8, layers=1, use_deer=True, lr=1e-3)
+    flat_s, _, step_s, _ = T.make_worms_fns(key, hidden=8, layers=1, use_deer=False, lr=1e-3)
+    np.testing.assert_array_equal(flat_d, flat_s)
+    xs, labels = _synthetic_worms(jax.random.fold_in(key, 9), 4, 32)
+    md, vd = jnp.zeros_like(flat_d), jnp.zeros_like(flat_d)
+    ms, vs = jnp.zeros_like(flat_s), jnp.zeros_like(flat_s)
+    sd = ss = jnp.int32(0)
+    for _ in range(5):
+        flat_d, md, vd, sd, loss_d, _ = step_d(flat_d, md, vd, sd, xs, labels)
+        flat_s, ms, vs, ss, loss_s, _ = step_s(flat_s, ms, vs, ss, xs, labels)
+        np.testing.assert_allclose(loss_d, loss_s, rtol=1e-3)
+    np.testing.assert_allclose(flat_d, flat_s, rtol=5e-2, atol=5e-4)
+
+
+def test_hnn_training_reduces_loss():
+    key = jax.random.PRNGKey(4)
+    flat, unravel, step_fn, eval_fn = T.make_hnn_fns(key, hidden=16, depth=3, solver="deer", lr=3e-3)
+    ts = jnp.linspace(0.0, 1.0, 33)
+    # reference trajectories from a *target* HNN
+    target = M.hnn_init(jax.random.fold_in(key, 5), hidden=16, depth=3)
+    y0s = jax.random.normal(key, (2, 8)) * 0.4
+    trajs = jax.vmap(lambda y0: M.hnn_rollout_rk4(target, ts, y0))(y0s)
+    m = jnp.zeros_like(flat)
+    v = jnp.zeros_like(flat)
+    step = jnp.int32(0)
+    step_fn = jax.jit(step_fn)
+    loss0 = float(eval_fn(flat, ts, trajs))
+    for _ in range(15):
+        flat, m, v, step, loss = step_fn(flat, m, v, step, ts, trajs)
+    loss1 = float(eval_fn(flat, ts, trajs))
+    assert loss1 < loss0, f"{loss0} -> {loss1}"
+
+
+def test_mhgru_strides_preserve_shape():
+    key = jax.random.PRNGKey(5)
+    p = M.mhgru_init(key, channels=8, heads=2, blocks=1)
+    xs = jax.random.normal(key, (20, 3))  # T not divisible by strides
+    logits = M.mhgru_forward(p, xs)
+    assert logits.shape == (10,)
+
+
+def test_mhgru_deer_equals_sequential():
+    key = jax.random.PRNGKey(6)
+    p = M.mhgru_init(key, channels=8, heads=2, blocks=1)
+    xs = jax.random.normal(key, (32, 3))
+    a = M.mhgru_forward(p, xs, use_deer=True)
+    b = M.mhgru_forward(p, xs, use_deer=False)
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-4)
+
+
+def test_adam_matches_reference_formula():
+    p = jnp.array([1.0, -2.0])
+    g = jnp.array([0.5, 0.1])
+    m = jnp.zeros(2)
+    v = jnp.zeros(2)
+    p2, m2, v2 = T.adam_update(p, g, m, v, jnp.int32(1), lr=0.1)
+    # first step: mhat = g, vhat = g², update = lr·g/(|g|+eps) = lr·sign(g)
+    np.testing.assert_allclose(p2, p - 0.1 * jnp.sign(g), rtol=1e-4)
+    assert m2.shape == v2.shape == (2,)
+
+
+def test_grad_clip():
+    g = jnp.array([3.0, 4.0])  # norm 5
+    clipped = T.clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(jnp.linalg.norm(clipped), 1.0, rtol=1e-5)
+    small = jnp.array([0.1, 0.1])
+    np.testing.assert_allclose(T.clip_by_global_norm(small, 1.0), small)

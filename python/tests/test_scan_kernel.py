@@ -1,0 +1,108 @@
+"""L1 kernel correctness: Pallas affine scan vs pure-jnp oracle.
+
+Hypothesis sweeps shapes and dtypes, as the paper's eq. (10)/(11) machinery
+must hold for every (T, n) the DEER iteration feeds it.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.assoc_scan import pallas_affine_scan, vmem_bytes
+
+
+def _random_affine(key, t, n, dtype, scale=0.5):
+    k1, k2, k3 = jax.random.split(key, 3)
+    a = jax.random.normal(k1, (t, n, n), dtype) * scale
+    b = jax.random.normal(k2, (t, n), dtype)
+    y0 = jax.random.normal(k3, (n,), dtype)
+    return a, b, y0
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    t_pow=st.integers(min_value=2, max_value=8),
+    n=st.integers(min_value=1, max_value=6),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_pallas_scan_matches_sequential(t_pow, n, seed):
+    t = 2**t_pow
+    a, b, y0 = _random_affine(jax.random.PRNGKey(seed), t, n, jnp.float32)
+    want = ref.seq_affine_scan(a, b, y0)
+    got = pallas_affine_scan(a, b, y0, block=min(64, t))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=5),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_assoc_scan_matches_sequential(n, seed):
+    t = 128
+    a, b, y0 = _random_affine(jax.random.PRNGKey(seed), t, n, jnp.float32)
+    want = ref.seq_affine_scan(a, b, y0)
+    got = ref.assoc_affine_scan(a, b, y0)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_pallas_scan_f64():
+    jax.config.update("jax_enable_x64", True)
+    try:
+        a, b, y0 = _random_affine(jax.random.PRNGKey(0), 64, 3, jnp.float64)
+        want = ref.seq_affine_scan(a, b, y0)
+        got = pallas_affine_scan(a, b, y0, block=16)
+        np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+    finally:
+        jax.config.update("jax_enable_x64", False)
+
+
+def test_reverse_scan_matches_loop():
+    key = jax.random.PRNGKey(3)
+    t, n = 37, 4
+    a = jax.random.normal(key, (t, n, n)) * 0.4
+    g = jax.random.normal(jax.random.fold_in(key, 1), (t, n))
+    got_seq = ref.seq_reverse_scan(a, g)
+    got_assoc = ref.assoc_reverse_scan(a, g)
+    # naive python loop
+    lam = np.zeros((t, n), np.float32)
+    lam[t - 1] = np.asarray(g[t - 1])
+    a_np, g_np = np.asarray(a), np.asarray(g)
+    for i in range(t - 2, -1, -1):
+        lam[i] = g_np[i] + a_np[i + 1].T @ lam[i + 1]
+    np.testing.assert_allclose(got_seq, lam, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(got_assoc, lam, rtol=1e-4, atol=1e-4)
+
+
+def test_combine_associativity():
+    key = jax.random.PRNGKey(7)
+    n = 3
+    es = []
+    for i in range(3):
+        k = jax.random.fold_in(key, i)
+        es.append(
+            (
+                jax.random.normal(k, (n, n)),
+                jax.random.normal(jax.random.fold_in(k, 99), (n,)),
+            )
+        )
+    left = ref.combine(es[2], ref.combine(es[1], es[0]))
+    right = ref.combine(ref.combine(es[2], es[1]), es[0])
+    np.testing.assert_allclose(left[0], right[0], rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(left[1], right[1], rtol=1e-5, atol=1e-5)
+
+
+def test_block_must_divide():
+    a, b, y0 = _random_affine(jax.random.PRNGKey(0), 100, 2, jnp.float32)
+    with pytest.raises(AssertionError):
+        pallas_affine_scan(a, b, y0, block=64)
+
+
+def test_vmem_estimate_within_budget():
+    # The documented TPU tiling: default block must fit a 16 MiB VMEM budget
+    # for every n in the paper's sweep.
+    for n in [1, 2, 4, 8, 16, 32, 64]:
+        assert vmem_bytes(128, n) < 16 * 2**20

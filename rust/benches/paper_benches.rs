@@ -1,0 +1,145 @@
+//! `cargo bench` — regenerates every paper table and figure.
+//!
+//! criterion is not available in the offline registry, so this is a
+//! purpose-built harness (`harness = false`): each experiment uses the
+//! warmup+budgeted-repetition timer in `deer::util::timer` and prints the
+//! paper-format tables (also written under results/bench/).
+//!
+//! Environment knobs:
+//!   DEER_BENCH_FAST=1    shrink grids (used by CI-style smoke runs)
+//!   DEER_BENCH_ONLY=fig2 run a single experiment
+
+use deer::experiments as exp;
+use deer::metrics::Recorder;
+use std::time::Duration;
+
+fn main() {
+    let fast = std::env::var("DEER_BENCH_FAST").is_ok();
+    let only = std::env::var("DEER_BENCH_ONLY").ok();
+    let want = |name: &str| only.as_deref().map(|o| o == name).unwrap_or(true);
+
+    let rec = Recorder::new(std::path::Path::new("results/bench")).expect("results dir");
+    let opts = if fast {
+        exp::BenchOpts {
+            dims: vec![1, 2, 4],
+            lens: vec![500, 2_000],
+            batches: vec![1],
+            seeds: vec![0],
+            budget_per_cell: Duration::from_millis(100),
+        }
+    } else {
+        exp::BenchOpts {
+            dims: vec![1, 2, 4, 8, 16],
+            lens: vec![1_000, 3_000, 10_000, 30_000],
+            batches: vec![16],
+            seeds: vec![0],
+            budget_per_cell: Duration::from_millis(400),
+        }
+    };
+
+    if want("fig2") {
+        for (i, t) in exp::fig2_speedup(&opts, false).iter().enumerate() {
+            rec.table(
+                &format!("fig2_forward_b{}", opts.batches[i]),
+                &format!(
+                    "Fig. 2 (top): GRU forward speedup, batch={} [measured 1-core | simulated V100]",
+                    opts.batches[i]
+                ),
+                t,
+            )
+            .unwrap();
+        }
+    }
+    if want("fig2grad") {
+        for (i, t) in exp::fig2_speedup(&opts, true).iter().enumerate() {
+            rec.table(
+                &format!("fig2_grad_b{}", opts.batches[i]),
+                &format!(
+                    "Fig. 2 (bottom): GRU forward+gradient speedup, batch={} [measured | simulated]",
+                    opts.batches[i]
+                ),
+                t,
+            )
+            .unwrap();
+        }
+    }
+    if want("table4") {
+        let mut o = opts.clone();
+        o.batches = if fast { vec![16, 2] } else { vec![16, 8, 4, 2] };
+        o.lens = if fast { vec![500] } else { vec![1_000, 10_000] };
+        for (i, t) in exp::fig2_speedup(&o, false).iter().enumerate() {
+            rec.table(
+                &format!("table4_b{}", o.batches[i]),
+                &format!("Table 4: speedup grid at batch={}", o.batches[i]),
+                t,
+            )
+            .unwrap();
+        }
+    }
+    if want("fig3") {
+        let (n, t_len) = if fast { (8, 2_000) } else { (32, 10_000) };
+        rec.table(
+            "fig3_equivalence",
+            "Fig. 3: DEER vs sequential GRU output difference",
+            &exp::fig3_equivalence(n, t_len, &[0, 1, 2]),
+        )
+        .unwrap();
+    }
+    if want("fig6") {
+        rec.table(
+            "fig6_tolerance",
+            "Fig. 6: iterations to converge vs tolerance (GRU n=2)",
+            &exp::fig6_tolerance(if fast { 1_000 } else { 10_000 }),
+        )
+        .unwrap();
+    }
+    if want("fig7") {
+        rec.table(
+            "fig7_devices",
+            "Fig. 7: simulated V100 vs A100 speedup (T=1M, B=16)",
+            &exp::fig7_devices(1_000_000, 16, &[1, 2, 4, 8, 16, 32, 64]),
+        )
+        .unwrap();
+    }
+    if want("fig8") {
+        rec.table(
+            "fig8_equal_memory",
+            "Fig. 8: DEER vs sequential LEM at equal memory",
+            &exp::fig8_equal_memory(16, if fast { 2_000 } else { 17_984 }),
+        )
+        .unwrap();
+    }
+    if want("table3") {
+        rec.table(
+            "table3_interpolation",
+            "Table 3: empirical convergence order per interpolation",
+            &exp::table3_interpolation(),
+        )
+        .unwrap();
+    }
+    if want("table5") {
+        rec.table(
+            "table5_profile",
+            "Table 5: per-phase time of one DEER iteration",
+            &exp::table5_profile(if fast { 1_000 } else { 3_000 }, &opts.dims),
+        )
+        .unwrap();
+    }
+    if want("warmstart") {
+        rec.table(
+            "ablation_warmstart",
+            "Ablation (App. B.2): warm-start vs cold-start Newton iterations vs parameter drift",
+            &exp::warmstart_ablation(4, if fast { 1_000 } else { 10_000 }),
+        )
+        .unwrap();
+    }
+    if want("table6") {
+        rec.table(
+            "table6_memory",
+            "Table 6: DEER memory vs state dim (B=16, T=100k)",
+            &exp::table6_memory(100_000, 16, &[1, 2, 4, 8, 16, 32]),
+        )
+        .unwrap();
+    }
+    println!("\nbench tables written to results/bench/");
+}

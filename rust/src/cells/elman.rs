@@ -1,0 +1,188 @@
+//! Elman RNN: `h' = tanh(W x + U h + b)` — the simplest non-linear
+//! recurrence; used as the test vehicle for DEER invariants because its
+//! Jacobian `diag(1 − h'²)·U` is trivially verifiable.
+
+use super::{init_uniform, Cell, CellGrad};
+use crate::util::rng::Rng;
+use crate::util::scalar::Scalar;
+
+/// Elman cell. Parameter layout: `[W (n·m), U (n·n), b (n)]`.
+#[derive(Debug, Clone)]
+pub struct Elman<S> {
+    n: usize,
+    m: usize,
+    p: Vec<S>,
+}
+
+impl<S: Scalar> Elman<S> {
+    pub fn new(n: usize, m: usize, rng: &mut Rng) -> Self {
+        let mut p = vec![S::zero(); n * m + n * n + n];
+        init_uniform(&mut p, n, rng);
+        Elman { n, m, p }
+    }
+
+    pub fn from_params(n: usize, m: usize, p: Vec<S>) -> Self {
+        assert_eq!(p.len(), n * m + n * n + n);
+        Elman { n, m, p }
+    }
+
+    fn w(&self) -> &[S] {
+        &self.p[..self.n * self.m]
+    }
+    fn u(&self) -> &[S] {
+        &self.p[self.n * self.m..self.n * self.m + self.n * self.n]
+    }
+    fn b(&self) -> &[S] {
+        &self.p[self.n * self.m + self.n * self.n..]
+    }
+
+    #[inline]
+    fn preact(&self, h: &[S], x: &[S], out: &mut [S]) {
+        let (n, m) = (self.n, self.m);
+        let (w, u, b) = (self.w(), self.u(), self.b());
+        for i in 0..n {
+            let mut a = b[i];
+            let roww = &w[i * m..(i + 1) * m];
+            for j in 0..m {
+                a += roww[j] * x[j];
+            }
+            let rowu = &u[i * n..(i + 1) * n];
+            for j in 0..n {
+                a += rowu[j] * h[j];
+            }
+            out[i] = a;
+        }
+    }
+}
+
+impl<S: Scalar> Cell<S> for Elman<S> {
+    fn state_dim(&self) -> usize {
+        self.n
+    }
+    fn input_dim(&self) -> usize {
+        self.m
+    }
+    fn ws_len(&self) -> usize {
+        self.n
+    }
+
+    fn step(&self, h: &[S], x: &[S], out: &mut [S], ws: &mut [S]) {
+        self.preact(h, x, ws);
+        for i in 0..self.n {
+            out[i] = ws[i].tanh();
+        }
+    }
+
+    fn jacobian(&self, h: &[S], x: &[S], out_f: &mut [S], out_jac: &mut [S], ws: &mut [S]) {
+        let n = self.n;
+        self.preact(h, x, ws);
+        let u = self.u();
+        for i in 0..n {
+            let f = ws[i].tanh();
+            out_f[i] = f;
+            let d = S::one() - f * f;
+            let rowu = &u[i * n..(i + 1) * n];
+            let jrow = &mut out_jac[i * n..(i + 1) * n];
+            for j in 0..n {
+                jrow[j] = d * rowu[j];
+            }
+        }
+    }
+
+    fn flops_step(&self) -> u64 {
+        let (n, m) = (self.n as u64, self.m as u64);
+        2 * n * (n + m) + 2 * n
+    }
+
+    fn flops_jacobian(&self) -> u64 {
+        let n = self.n as u64;
+        self.flops_step() + n * n + 2 * n
+    }
+}
+
+impl<S: Scalar> CellGrad<S> for Elman<S> {
+    fn num_params(&self) -> usize {
+        self.p.len()
+    }
+    fn params(&self) -> &[S] {
+        &self.p
+    }
+    fn params_mut(&mut self) -> &mut [S] {
+        &mut self.p
+    }
+
+    fn vjp_step(
+        &self,
+        h: &[S],
+        x: &[S],
+        lambda: &[S],
+        dh: &mut [S],
+        mut dx: Option<&mut [S]>,
+        dtheta: &mut [S],
+        ws: &mut [S],
+    ) {
+        let (n, m) = (self.n, self.m);
+        self.preact(h, x, ws);
+        let u = self.u();
+        let w = self.w();
+        let off_u = n * m;
+        let off_b = n * m + n * n;
+        for i in 0..n {
+            let f = ws[i].tanh();
+            let da = lambda[i] * (S::one() - f * f);
+            let rowu = &u[i * n..(i + 1) * n];
+            for j in 0..n {
+                dh[j] += rowu[j] * da;
+                dtheta[off_u + i * n + j] += da * h[j];
+            }
+            if let Some(dx) = dx.as_deref_mut() {
+                let roww = &w[i * m..(i + 1) * m];
+                for j in 0..m {
+                    dx[j] += roww[j] * da;
+                }
+            }
+            for j in 0..m {
+                dtheta[i * m + j] += da * x[j];
+            }
+            dtheta[off_b + i] += da;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::test_support::{check_jacobian, check_vjp};
+
+    #[test]
+    fn jacobian_matches_fd() {
+        let mut rng = Rng::new(3);
+        for &(n, m) in &[(1usize, 1usize), (3, 2), (5, 5)] {
+            let cell: Elman<f64> = Elman::new(n, m, &mut rng);
+            check_jacobian(&cell, n as u64, 1e-7);
+        }
+    }
+
+    #[test]
+    fn vjp_matches_fd() {
+        let mut rng = Rng::new(4);
+        let cell: Elman<f64> = Elman::new(4, 3, &mut rng);
+        check_vjp(&cell, 77, 1e-6);
+    }
+
+    #[test]
+    fn tanh_saturation_flattens_jacobian() {
+        // Huge bias saturates tanh → Jacobian ≈ 0.
+        let n = 2;
+        let mut p = vec![0.0f64; n * 1 + n * n + n];
+        p[n * 1 + n * n] = 50.0;
+        p[n * 1 + n * n + 1] = 50.0;
+        let cell = Elman::from_params(n, 1, p);
+        let mut f = vec![0.0; n];
+        let mut jac = vec![0.0; n * n];
+        let mut ws = vec![0.0; n];
+        cell.jacobian(&[0.3, -0.4], &[0.0], &mut f, &mut jac, &mut ws);
+        assert!(jac.iter().all(|v| v.abs() < 1e-10));
+        assert!(f.iter().all(|v| (v - 1.0).abs() < 1e-10));
+    }
+}

@@ -1,0 +1,466 @@
+//! Gated Recurrent Unit (Cho et al., 2014) — the paper's primary benchmark
+//! cell (Fig. 2/3, Tables 4–6, the EigenWorms classifier of §4.3).
+//!
+//! Equations (PyTorch/flax convention):
+//!
+//! ```text
+//! r  = σ(W_ir x + b_ir + W_hr h + b_hr)
+//! z  = σ(W_iz x + b_iz + W_hz h + b_hz)
+//! m  = W_hn h + b_hn
+//! ñ  = tanh(W_in x + b_in + r ⊙ m)
+//! h' = (1 − z) ⊙ ñ + z ⊙ h
+//! ```
+//!
+//! Analytic state Jacobian (used for DEER's `G = −∂f/∂h`):
+//!
+//! ```text
+//! ∂h'/∂h = diag(1−z)·diag(1−ñ²)·[diag(r)·W_hn + diag(m)·diag(r(1−r))·W_hr]
+//!        + diag(h−ñ)·diag(z(1−z))·W_hz + diag(z)
+//! ```
+
+use super::{init_uniform, sigmoid, Cell, CellGrad};
+use crate::util::rng::Rng;
+use crate::util::scalar::Scalar;
+
+/// GRU cell with a flat parameter vector.
+///
+/// Layout: `[W_ir, W_iz, W_in] (3·n·m)`, `[W_hr, W_hz, W_hn] (3·n·n)`,
+/// `[b_ir, b_iz, b_in, b_hr, b_hz, b_hn] (6·n)`.
+#[derive(Debug, Clone)]
+pub struct Gru<S> {
+    n: usize,
+    m: usize,
+    p: Vec<S>,
+}
+
+// Workspace layout offsets (ws_len = 6n):
+// r (n) | z (n) | mgate (n) | nh (n) | tmp (n) | tmp2 (n)
+
+impl<S: Scalar> Gru<S> {
+    /// New GRU with `n` hidden units and `m` inputs, uniform(-1/√n) init.
+    pub fn new(n: usize, m: usize, rng: &mut Rng) -> Self {
+        let mut p = vec![S::zero(); 3 * n * m + 3 * n * n + 6 * n];
+        init_uniform(&mut p, n, rng);
+        Gru { n, m, p }
+    }
+
+    /// Construct from an existing flat parameter vector.
+    pub fn from_params(n: usize, m: usize, p: Vec<S>) -> Self {
+        assert_eq!(p.len(), 3 * n * m + 3 * n * n + 6 * n);
+        Gru { n, m, p }
+    }
+
+    #[inline]
+    fn w_i(&self, k: usize) -> &[S] {
+        let (n, m) = (self.n, self.m);
+        &self.p[k * n * m..(k + 1) * n * m]
+    }
+    #[inline]
+    fn w_h(&self, k: usize) -> &[S] {
+        let (n, m) = (self.n, self.m);
+        let base = 3 * n * m;
+        &self.p[base + k * n * n..base + (k + 1) * n * n]
+    }
+    #[inline]
+    fn b(&self, k: usize) -> &[S] {
+        let (n, m) = (self.n, self.m);
+        let base = 3 * n * m + 3 * n * n;
+        &self.p[base + k * n..base + (k + 1) * n]
+    }
+    fn off_w_i(&self, k: usize) -> usize {
+        k * self.n * self.m
+    }
+    fn off_w_h(&self, k: usize) -> usize {
+        3 * self.n * self.m + k * self.n * self.n
+    }
+    fn off_b(&self, k: usize) -> usize {
+        3 * self.n * self.m + 3 * self.n * self.n + k * self.n
+    }
+
+    /// Compute gate pre-activations and activations into ws.
+    /// After this: ws = [r, z, m, ñ, .., ..].
+    #[inline]
+    fn gates(&self, h: &[S], x: &[S], ws: &mut [S]) {
+        let n = self.n;
+        let m = self.m;
+        let (r_s, rest) = ws.split_at_mut(n);
+        let (z_s, rest) = rest.split_at_mut(n);
+        let (m_s, rest) = rest.split_at_mut(n);
+        let (nh_s, _) = rest.split_at_mut(n);
+
+        let (w_ir, w_iz, w_in) = (self.w_i(0), self.w_i(1), self.w_i(2));
+        let (w_hr, w_hz, w_hn) = (self.w_h(0), self.w_h(1), self.w_h(2));
+        let (b_ir, b_iz, b_in) = (self.b(0), self.b(1), self.b(2));
+        let (b_hr, b_hz, b_hn) = (self.b(3), self.b(4), self.b(5));
+
+        for i in 0..n {
+            // input contributions
+            let mut ar = b_ir[i] + b_hr[i];
+            let mut az = b_iz[i] + b_hz[i];
+            let mut an = b_in[i];
+            let (rowr, rowz, rown) = (&w_ir[i * m..(i + 1) * m], &w_iz[i * m..(i + 1) * m], &w_in[i * m..(i + 1) * m]);
+            for j in 0..m {
+                let xj = x[j];
+                ar += rowr[j] * xj;
+                az += rowz[j] * xj;
+                an += rown[j] * xj;
+            }
+            // hidden contributions
+            let mut hr = S::zero();
+            let mut hz = S::zero();
+            let mut hm = b_hn[i];
+            let (rowhr, rowhz, rowhn) =
+                (&w_hr[i * n..(i + 1) * n], &w_hz[i * n..(i + 1) * n], &w_hn[i * n..(i + 1) * n]);
+            for j in 0..n {
+                let hj = h[j];
+                hr += rowhr[j] * hj;
+                hz += rowhz[j] * hj;
+                hm += rowhn[j] * hj;
+            }
+            let r = sigmoid(ar + hr);
+            let z = sigmoid(az + hz);
+            r_s[i] = r;
+            z_s[i] = z;
+            m_s[i] = hm;
+            nh_s[i] = (an + r * hm).tanh();
+        }
+    }
+}
+
+impl<S: Scalar> Gru<S> {
+    /// Gate computation from precomputed input projections
+    /// `pre = [a_r_x, a_z_x, a_n_x]` (3n per step); hidden matvecs only.
+    #[inline]
+    fn gates_pre(&self, h: &[S], pre: &[S], ws: &mut [S]) {
+        let n = self.n;
+        let (w_hr, w_hz, w_hn) = (self.w_h(0), self.w_h(1), self.w_h(2));
+        let b_hn = self.b(5);
+        for i in 0..n {
+            let mut hr = S::zero();
+            let mut hz = S::zero();
+            let mut hm = b_hn[i];
+            let (rowhr, rowhz, rowhn) =
+                (&w_hr[i * n..(i + 1) * n], &w_hz[i * n..(i + 1) * n], &w_hn[i * n..(i + 1) * n]);
+            for j in 0..n {
+                let hj = h[j];
+                hr += rowhr[j] * hj;
+                hz += rowhz[j] * hj;
+                hm += rowhn[j] * hj;
+            }
+            let r = sigmoid(pre[i] + hr);
+            let z = sigmoid(pre[n + i] + hz);
+            ws[i] = r;
+            ws[n + i] = z;
+            ws[2 * n + i] = hm;
+            ws[3 * n + i] = (pre[2 * n + i] + r * hm).tanh();
+        }
+    }
+}
+
+impl<S: Scalar> Cell<S> for Gru<S> {
+    fn x_precompute_len(&self) -> usize {
+        3 * self.n
+    }
+
+    /// `out[i] = [W_ir x_i + b_ir + b_hr, W_iz x_i + b_iz + b_hz,
+    /// W_in x_i + b_in]` — everything that is independent of the trajectory
+    /// guess, computed once per DEER evaluation (§Perf).
+    fn precompute_x(&self, xs: &[S], out: &mut [S]) {
+        let n = self.n;
+        let m = self.m;
+        let t_len = xs.len() / m;
+        debug_assert_eq!(out.len(), t_len * 3 * n);
+        let (w_ir, w_iz, w_in) = (self.w_i(0), self.w_i(1), self.w_i(2));
+        let (b_ir, b_iz, b_in) = (self.b(0), self.b(1), self.b(2));
+        let (b_hr, b_hz) = (self.b(3), self.b(4));
+        for t in 0..t_len {
+            let x = &xs[t * m..(t + 1) * m];
+            let o = &mut out[t * 3 * n..(t + 1) * 3 * n];
+            for i in 0..n {
+                let mut ar = b_ir[i] + b_hr[i];
+                let mut az = b_iz[i] + b_hz[i];
+                let mut an = b_in[i];
+                let (rowr, rowz, rown) =
+                    (&w_ir[i * m..(i + 1) * m], &w_iz[i * m..(i + 1) * m], &w_in[i * m..(i + 1) * m]);
+                for j in 0..m {
+                    let xj = x[j];
+                    ar += rowr[j] * xj;
+                    az += rowz[j] * xj;
+                    an += rown[j] * xj;
+                }
+                o[i] = ar;
+                o[n + i] = az;
+                o[2 * n + i] = an;
+            }
+        }
+    }
+
+    fn jacobian_pre(&self, h: &[S], pre: &[S], out_f: &mut [S], out_jac: &mut [S], ws: &mut [S]) {
+        let n = self.n;
+        self.gates_pre(h, pre, ws);
+        let (w_hr, w_hz, w_hn) = (self.w_h(0), self.w_h(1), self.w_h(2));
+        for i in 0..n {
+            let r = ws[i];
+            let z = ws[n + i];
+            let mg = ws[2 * n + i];
+            let nh = ws[3 * n + i];
+            out_f[i] = (S::one() - z) * nh + z * h[i];
+            let dn = S::one() - nh * nh;
+            let dr = r * (S::one() - r);
+            let dz = z * (S::one() - z);
+            let c1 = (S::one() - z) * dn * r;
+            let c2 = (S::one() - z) * dn * mg * dr;
+            let c3 = (h[i] - nh) * dz;
+            let (rowhr, rowhz, rowhn) =
+                (&w_hr[i * n..(i + 1) * n], &w_hz[i * n..(i + 1) * n], &w_hn[i * n..(i + 1) * n]);
+            let jrow = &mut out_jac[i * n..(i + 1) * n];
+            for j in 0..n {
+                jrow[j] = c1 * rowhn[j] + c2 * rowhr[j] + c3 * rowhz[j];
+            }
+            jrow[i] += z;
+        }
+    }
+
+    fn state_dim(&self) -> usize {
+        self.n
+    }
+    fn input_dim(&self) -> usize {
+        self.m
+    }
+    fn ws_len(&self) -> usize {
+        6 * self.n
+    }
+
+    fn step(&self, h: &[S], x: &[S], out: &mut [S], ws: &mut [S]) {
+        let n = self.n;
+        self.gates(h, x, ws);
+        for i in 0..n {
+            let (r_, z, nh) = (ws[i], ws[n + i], ws[3 * n + i]);
+            let _ = r_;
+            out[i] = (S::one() - z) * nh + z * h[i];
+        }
+    }
+
+    fn jacobian(&self, h: &[S], x: &[S], out_f: &mut [S], out_jac: &mut [S], ws: &mut [S]) {
+        let n = self.n;
+        self.gates(h, x, ws);
+        let (w_hr, w_hz, w_hn) = (self.w_h(0), self.w_h(1), self.w_h(2));
+        for i in 0..n {
+            let r = ws[i];
+            let z = ws[n + i];
+            let mg = ws[2 * n + i];
+            let nh = ws[3 * n + i];
+            out_f[i] = (S::one() - z) * nh + z * h[i];
+
+            let dn = S::one() - nh * nh; // tanh'
+            let dr = r * (S::one() - r);
+            let dz = z * (S::one() - z);
+            let c1 = (S::one() - z) * dn * r; // coeff of W_hn
+            let c2 = (S::one() - z) * dn * mg * dr; // coeff of W_hr
+            let c3 = (h[i] - nh) * dz; // coeff of W_hz
+            let (rowhr, rowhz, rowhn) =
+                (&w_hr[i * n..(i + 1) * n], &w_hz[i * n..(i + 1) * n], &w_hn[i * n..(i + 1) * n]);
+            let jrow = &mut out_jac[i * n..(i + 1) * n];
+            for j in 0..n {
+                jrow[j] = c1 * rowhn[j] + c2 * rowhr[j] + c3 * rowhz[j];
+            }
+            jrow[i] += z;
+        }
+    }
+
+    fn flops_step(&self) -> u64 {
+        let n = self.n as u64;
+        let m = self.m as u64;
+        // three input matvecs + three hidden matvecs + elementwise
+        2 * 3 * n * (n + m) + 12 * n
+    }
+
+    fn flops_jacobian(&self) -> u64 {
+        let n = self.n as u64;
+        self.flops_step() + 3 * n * n + 10 * n
+    }
+}
+
+impl<S: Scalar> CellGrad<S> for Gru<S> {
+    fn num_params(&self) -> usize {
+        self.p.len()
+    }
+    fn params(&self) -> &[S] {
+        &self.p
+    }
+    fn params_mut(&mut self) -> &mut [S] {
+        &mut self.p
+    }
+
+    fn vjp_step(
+        &self,
+        h: &[S],
+        x: &[S],
+        lambda: &[S],
+        dh: &mut [S],
+        mut dx: Option<&mut [S]>,
+        dtheta: &mut [S],
+        ws: &mut [S],
+    ) {
+        let n = self.n;
+        let m = self.m;
+        self.gates(h, x, ws);
+
+        // per-unit adjoints
+        // da_r, da_z: pre-activation adjoints of r and z gates
+        // dc: adjoint of the tanh pre-activation's input part (== d b_in)
+        // dm: adjoint of m = W_hn h + b_hn
+        let mut da_r = vec![S::zero(); n];
+        let mut da_z = vec![S::zero(); n];
+        let mut dc = vec![S::zero(); n];
+        let mut dm = vec![S::zero(); n];
+        for i in 0..n {
+            let r = ws[i];
+            let z = ws[n + i];
+            let mg = ws[2 * n + i];
+            let nh = ws[3 * n + i];
+            let lam = lambda[i];
+            // h' = (1−z)ñ + z h
+            dh[i] += lam * z;
+            let dnh = lam * (S::one() - z);
+            let dzg = lam * (h[i] - nh);
+            let du = dnh * (S::one() - nh * nh); // pre-tanh
+            dc[i] = du;
+            dm[i] = du * r;
+            da_r[i] = du * mg * (r * (S::one() - r));
+            da_z[i] = dzg * (z * (S::one() - z));
+        }
+
+        let (w_hr, w_hz, w_hn) = (self.w_h(0), self.w_h(1), self.w_h(2));
+        // dh += W_hrᵀ da_r + W_hzᵀ da_z + W_hnᵀ dm
+        for i in 0..n {
+            let (ar, az, am) = (da_r[i], da_z[i], dm[i]);
+            let (rowhr, rowhz, rowhn) =
+                (&w_hr[i * n..(i + 1) * n], &w_hz[i * n..(i + 1) * n], &w_hn[i * n..(i + 1) * n]);
+            for j in 0..n {
+                dh[j] += rowhr[j] * ar + rowhz[j] * az + rowhn[j] * am;
+            }
+        }
+
+        // dx += W_irᵀ da_r + W_izᵀ da_z + W_inᵀ dc
+        if let Some(dx) = dx.as_deref_mut() {
+            let (w_ir, w_iz, w_in) = (self.w_i(0), self.w_i(1), self.w_i(2));
+            for i in 0..n {
+                let (ar, az, ac) = (da_r[i], da_z[i], dc[i]);
+                let (rowir, rowiz, rowin) =
+                    (&w_ir[i * m..(i + 1) * m], &w_iz[i * m..(i + 1) * m], &w_in[i * m..(i + 1) * m]);
+                for j in 0..m {
+                    dx[j] += rowir[j] * ar + rowiz[j] * az + rowin[j] * ac;
+                }
+            }
+        }
+
+        // parameter gradients
+        let (o_wir, o_wiz, o_win) = (self.off_w_i(0), self.off_w_i(1), self.off_w_i(2));
+        let (o_whr, o_whz, o_whn) = (self.off_w_h(0), self.off_w_h(1), self.off_w_h(2));
+        for i in 0..n {
+            let (ar, az, ac, am) = (da_r[i], da_z[i], dc[i], dm[i]);
+            for j in 0..m {
+                let xj = x[j];
+                dtheta[o_wir + i * m + j] += ar * xj;
+                dtheta[o_wiz + i * m + j] += az * xj;
+                dtheta[o_win + i * m + j] += ac * xj;
+            }
+            for j in 0..n {
+                let hj = h[j];
+                dtheta[o_whr + i * n + j] += ar * hj;
+                dtheta[o_whz + i * n + j] += az * hj;
+                dtheta[o_whn + i * n + j] += am * hj;
+            }
+            dtheta[self.off_b(0) + i] += ar; // b_ir
+            dtheta[self.off_b(1) + i] += az; // b_iz
+            dtheta[self.off_b(2) + i] += ac; // b_in
+            dtheta[self.off_b(3) + i] += ar; // b_hr
+            dtheta[self.off_b(4) + i] += az; // b_hz
+            dtheta[self.off_b(5) + i] += am; // b_hn
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::test_support::{check_jacobian, check_vjp};
+
+    #[test]
+    fn jacobian_matches_fd() {
+        let mut rng = Rng::new(11);
+        for &(n, m) in &[(1usize, 1usize), (2, 3), (4, 4), (8, 2)] {
+            let cell: Gru<f64> = Gru::new(n, m, &mut rng);
+            check_jacobian(&cell, 100 + n as u64, 1e-6);
+        }
+    }
+
+    #[test]
+    fn vjp_matches_fd() {
+        let mut rng = Rng::new(21);
+        for &(n, m) in &[(1usize, 2usize), (3, 3), (6, 4)] {
+            let cell: Gru<f64> = Gru::new(n, m, &mut rng);
+            check_vjp(&cell, 200 + n as u64, 1e-6);
+        }
+    }
+
+    #[test]
+    fn zero_state_zero_input_fixed_point_structure() {
+        // With all-zero params, r=z=1/2, ñ=0 → h' = h/2.
+        let cell: Gru<f64> = Gru::from_params(3, 2, vec![0.0; 3 * 3 * 2 + 3 * 9 + 18]);
+        let h = vec![1.0, -2.0, 0.5];
+        let mut out = vec![0.0; 3];
+        let mut ws = vec![0.0; cell.ws_len()];
+        cell.step(&h, &[0.0, 0.0], &mut out, &mut ws);
+        for (o, hi) in out.iter().zip(h.iter()) {
+            assert!((o - hi / 2.0).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn f32_matches_f64() {
+        let mut rng = Rng::new(5);
+        let c64: Gru<f64> = Gru::new(4, 3, &mut rng);
+        let p32: Vec<f32> = c64.params().iter().map(|&v| v as f32).collect();
+        let c32: Gru<f32> = Gru::from_params(4, 3, p32);
+        let h64 = vec![0.1, -0.2, 0.3, 0.4];
+        let x64 = vec![1.0, 0.5, -1.0];
+        let h32: Vec<f32> = h64.iter().map(|&v| v as f32).collect();
+        let x32: Vec<f32> = x64.iter().map(|&v| v as f32).collect();
+        let mut o64 = vec![0.0f64; 4];
+        let mut o32 = vec![0.0f32; 4];
+        let mut w64 = vec![0.0f64; c64.ws_len()];
+        let mut w32 = vec![0.0f32; c32.ws_len()];
+        c64.step(&h64, &x64, &mut o64, &mut w64);
+        c32.step(&h32, &x32, &mut o32, &mut w32);
+        for (a, b) in o64.iter().zip(o32.iter()) {
+            assert!((a - *b as f64).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn param_count() {
+        let mut rng = Rng::new(1);
+        let c: Gru<f64> = Gru::new(5, 3, &mut rng);
+        assert_eq!(c.num_params(), 3 * 5 * 3 + 3 * 25 + 30);
+    }
+
+    #[test]
+    fn bounded_output() {
+        // GRU state stays bounded for bounded init: |h'| ≤ max(|h|, 1).
+        let mut rng = Rng::new(33);
+        let c: Gru<f64> = Gru::new(8, 4, &mut rng);
+        let mut h = vec![0.0; 8];
+        let mut x = vec![0.0; 4];
+        let mut ws = vec![0.0; c.ws_len()];
+        let mut out = vec![0.0; 8];
+        for step in 0..200 {
+            rng.fill_normal(&mut x, 1.0);
+            c.step(&h, &x, &mut out, &mut ws);
+            std::mem::swap(&mut h, &mut out);
+            let mx = h.iter().fold(0.0f64, |a, &b| a.max(b.abs()));
+            assert!(mx <= 1.0 + 1e-12, "step {step}: |h|∞ = {mx}");
+        }
+    }
+}

@@ -1,0 +1,357 @@
+//! LEM — Long Expressive Memory (Rusch et al., 2021). The paper reproduces
+//! LEM on EigenWorms (Table 1, "our reproducibility attempt") and uses it for
+//! the equal-memory comparison of Fig. 8; DEER applies to it unchanged since
+//! it is a plain non-linear recurrence over the packed state `s = [y, z]`.
+//!
+//! Discretised equations (Δt = 1):
+//!
+//! ```text
+//! Δ̄t = σ(W₁ x + V₁ y + b₁)
+//! Δ̂t = σ(W₂ x + V₂ y + b₂)
+//! z' = (1 − Δ̄t) ⊙ z + Δ̄t ⊙ tanh(W_z x + V_z y + b_z)
+//! y' = (1 − Δ̂t) ⊙ y + Δ̂t ⊙ tanh(W_y x + V_y z' + b_y)
+//! ```
+
+use super::{init_uniform, sigmoid, Cell, CellGrad};
+use crate::util::rng::Rng;
+use crate::util::scalar::Scalar;
+
+/// LEM cell with `n` units per branch and `m` inputs; `state_dim() = 2n`
+/// (packed `[y, z]`).
+///
+/// Parameter layout: `[W₁, W₂, W_z, W_y] (4·n·m)`, `[V₁, V₂, V_z, V_y]
+/// (4·n·n)`, `[b₁, b₂, b_z, b_y] (4·n)`.
+#[derive(Debug, Clone)]
+pub struct Lem<S> {
+    n: usize,
+    m: usize,
+    p: Vec<S>,
+}
+
+const K: usize = 4; // dt1, dt2, z-branch, y-branch
+
+impl<S: Scalar> Lem<S> {
+    pub fn new(n: usize, m: usize, rng: &mut Rng) -> Self {
+        let mut p = vec![S::zero(); K * (n * m + n * n + n)];
+        init_uniform(&mut p, n, rng);
+        Lem { n, m, p }
+    }
+
+    pub fn from_params(n: usize, m: usize, p: Vec<S>) -> Self {
+        assert_eq!(p.len(), K * (n * m + n * n + n));
+        Lem { n, m, p }
+    }
+
+    fn w(&self, k: usize) -> &[S] {
+        let (n, m) = (self.n, self.m);
+        &self.p[k * n * m..(k + 1) * n * m]
+    }
+    fn v(&self, k: usize) -> &[S] {
+        let (n, m) = (self.n, self.m);
+        let base = K * n * m;
+        &self.p[base + k * n * n..base + (k + 1) * n * n]
+    }
+    fn b(&self, k: usize) -> &[S] {
+        let (n, m) = (self.n, self.m);
+        let base = K * (n * m + n * n);
+        &self.p[base + k * n..base + (k + 1) * n]
+    }
+    fn off_w(&self, k: usize) -> usize {
+        k * self.n * self.m
+    }
+    fn off_v(&self, k: usize) -> usize {
+        K * self.n * self.m + k * self.n * self.n
+    }
+    fn off_b(&self, k: usize) -> usize {
+        K * (self.n * self.m + self.n * self.n) + k * self.n
+    }
+
+    /// `a = W_k x + V_k q + b_k` where q is y (k<3) or z' (k=3).
+    #[inline]
+    fn branch(&self, k: usize, q: &[S], x: &[S], out: &mut [S]) {
+        let (n, m) = (self.n, self.m);
+        let (w, v, b) = (self.w(k), self.v(k), self.b(k));
+        for i in 0..n {
+            let mut a = b[i];
+            let roww = &w[i * m..(i + 1) * m];
+            for j in 0..m {
+                a += roww[j] * x[j];
+            }
+            let rowv = &v[i * n..(i + 1) * n];
+            for j in 0..n {
+                a += rowv[j] * q[j];
+            }
+            out[i] = a;
+        }
+    }
+
+    /// Fill ws: [dt1, dt2, gz, zp, gy] (5n). gz = tanh(z-branch), gy uses z'.
+    #[inline]
+    fn forward_ws(&self, s: &[S], x: &[S], ws: &mut [S]) {
+        let n = self.n;
+        let y = &s[..n];
+        let z = &s[n..2 * n];
+        // split ws into 5 segments; compute in-place sequentially
+        {
+            let (dt1, rest) = ws.split_at_mut(n);
+            let (dt2, rest) = rest.split_at_mut(n);
+            let (gz, rest) = rest.split_at_mut(n);
+            let (zp, _) = rest.split_at_mut(n);
+            self.branch(0, y, x, dt1);
+            self.branch(1, y, x, dt2);
+            self.branch(2, y, x, gz);
+            for i in 0..n {
+                dt1[i] = sigmoid(dt1[i]);
+                dt2[i] = sigmoid(dt2[i]);
+                gz[i] = gz[i].tanh();
+                zp[i] = (S::one() - dt1[i]) * z[i] + dt1[i] * gz[i];
+            }
+        }
+        let zp_copy: Vec<S> = ws[3 * n..4 * n].to_vec();
+        let gy = &mut ws[4 * n..5 * n];
+        self.branch(3, &zp_copy, x, gy);
+        for g in gy.iter_mut() {
+            *g = g.tanh();
+        }
+    }
+}
+
+impl<S: Scalar> Cell<S> for Lem<S> {
+    fn state_dim(&self) -> usize {
+        2 * self.n
+    }
+    fn input_dim(&self) -> usize {
+        self.m
+    }
+    fn ws_len(&self) -> usize {
+        5 * self.n
+    }
+
+    fn step(&self, s: &[S], x: &[S], out: &mut [S], ws: &mut [S]) {
+        let n = self.n;
+        self.forward_ws(s, x, ws);
+        let y = &s[..n];
+        for i in 0..n {
+            let dt2 = ws[n + i];
+            out[i] = (S::one() - dt2) * y[i] + dt2 * ws[4 * n + i]; // y'
+            out[n + i] = ws[3 * n + i]; // z'
+        }
+    }
+
+    fn jacobian(&self, s: &[S], x: &[S], out_f: &mut [S], out_jac: &mut [S], ws: &mut [S]) {
+        let n = self.n;
+        let dim = 2 * n;
+        self.forward_ws(s, x, ws);
+        let y = &s[..n];
+        let z = &s[n..2 * n];
+        let (v1, v2, vz, vy) = (self.v(0), self.v(1), self.v(2), self.v(3));
+
+        // z'-block derivatives: ∂z'/∂y (dense), ∂z'/∂z (diag(1−dt1))
+        // dzp_dy[i][j] = (gz_i − z_i)·dt1_i(1−dt1_i)·V1[i,j] + dt1_i·(1−gz_i²)·Vz[i,j]
+        let mut dzp_dy = vec![S::zero(); n * n];
+        for i in 0..n {
+            let dt1 = ws[i];
+            let gz = ws[2 * n + i];
+            let c1 = (gz - z[i]) * dt1 * (S::one() - dt1);
+            let c2 = dt1 * (S::one() - gz * gz);
+            let (r1, rz) = (&v1[i * n..(i + 1) * n], &vz[i * n..(i + 1) * n]);
+            let row = &mut dzp_dy[i * n..(i + 1) * n];
+            for j in 0..n {
+                row[j] = c1 * r1[j] + c2 * rz[j];
+            }
+        }
+
+        for i in 0..n {
+            let dt1 = ws[i];
+            let dt2 = ws[n + i];
+            let gy = ws[4 * n + i];
+            out_f[i] = (S::one() - dt2) * y[i] + dt2 * gy;
+            out_f[n + i] = ws[3 * n + i];
+
+            let c_dt2 = (gy - y[i]) * dt2 * (S::one() - dt2); // coeff of V2 rows
+            let c_gy = dt2 * (S::one() - gy * gy); // coeff of V_y·∂z'/∂·
+            let (r2, ry) = (&v2[i * n..(i + 1) * n], &vy[i * n..(i + 1) * n]);
+
+            // ∂y'_i/∂y_j = (1−dt2)δ + c_dt2·V2[i,j] + c_gy·Σ_k Vy[i,k]·dzp_dy[k,j]
+            for j in 0..n {
+                let mut acc = c_dt2 * r2[j];
+                let mut conv = S::zero();
+                for k in 0..n {
+                    conv += ry[k] * dzp_dy[k * n + j];
+                }
+                acc += c_gy * conv;
+                if i == j {
+                    acc += S::one() - dt2;
+                }
+                out_jac[i * dim + j] = acc;
+                // ∂z'_i/∂y_j
+                out_jac[(n + i) * dim + j] = dzp_dy[i * n + j];
+            }
+            // ∂y'_i/∂z_j = c_gy·Vy[i,j]·(1−dt1_j); ∂z'_i/∂z_j = (1−dt1_i)δ
+            for j in 0..n {
+                out_jac[i * dim + n + j] = c_gy * ry[j] * (S::one() - ws[j]);
+                out_jac[(n + i) * dim + n + j] = S::zero();
+            }
+            out_jac[(n + i) * dim + n + i] = S::one() - dt1;
+        }
+    }
+
+    fn flops_step(&self) -> u64 {
+        let (n, m) = (self.n as u64, self.m as u64);
+        2 * 4 * n * (n + m) + 16 * n
+    }
+
+    fn flops_jacobian(&self) -> u64 {
+        let n = self.n as u64;
+        // dominated by the V_y · ∂z'/∂y product: n³
+        self.flops_step() + 2 * n * n * n + 8 * n * n
+    }
+}
+
+impl<S: Scalar> CellGrad<S> for Lem<S> {
+    fn num_params(&self) -> usize {
+        self.p.len()
+    }
+    fn params(&self) -> &[S] {
+        &self.p
+    }
+    fn params_mut(&mut self) -> &mut [S] {
+        &mut self.p
+    }
+
+    fn vjp_step(
+        &self,
+        s: &[S],
+        x: &[S],
+        lambda: &[S],
+        dh: &mut [S],
+        mut dx: Option<&mut [S]>,
+        dtheta: &mut [S],
+        ws: &mut [S],
+    ) {
+        let n = self.n;
+        let m = self.m;
+        self.forward_ws(s, x, ws);
+        let y = &s[..n];
+        let z = &s[n..2 * n];
+        let zp: Vec<S> = ws[3 * n..4 * n].to_vec();
+        let (lam_y, lam_z) = lambda.split_at(n);
+
+        let (v1, v2, vz, vy) = (self.v(0), self.v(1), self.v(2), self.v(3));
+
+        // --- y' branch ---
+        // y' = (1−dt2) y + dt2·gy,   gy = tanh(W_y x + V_y z' + b_y)
+        let mut da2 = vec![S::zero(); n]; // pre-act adjoint of dt2 branch
+        let mut day = vec![S::zero(); n]; // pre-act adjoint of y branch (tanh arg)
+        let mut dzp = vec![S::zero(); n]; // adjoint of z'
+        for i in 0..n {
+            let dt2 = ws[n + i];
+            let gy = ws[4 * n + i];
+            dh[i] += lam_y[i] * (S::one() - dt2);
+            da2[i] = lam_y[i] * (gy - y[i]) * dt2 * (S::one() - dt2);
+            day[i] = lam_y[i] * dt2 * (S::one() - gy * gy);
+        }
+        // dzp += V_yᵀ day ; dh(y part) += V_2ᵀ da2
+        for i in 0..n {
+            let (a2, ay) = (da2[i], day[i]);
+            let (r2, ry) = (&v2[i * n..(i + 1) * n], &vy[i * n..(i + 1) * n]);
+            for j in 0..n {
+                dh[j] += r2[j] * a2;
+                dzp[j] += ry[j] * ay;
+            }
+        }
+        // z' cotangent also flows directly from λ_z
+        for i in 0..n {
+            dzp[i] += lam_z[i];
+        }
+
+        // --- z' branch ---
+        // z' = (1−dt1) z + dt1·gz,   gz = tanh(W_z x + V_z y + b_z)
+        let mut da1 = vec![S::zero(); n];
+        let mut daz = vec![S::zero(); n];
+        for i in 0..n {
+            let dt1 = ws[i];
+            let gz = ws[2 * n + i];
+            dh[n + i] += dzp[i] * (S::one() - dt1);
+            da1[i] = dzp[i] * (gz - z[i]) * dt1 * (S::one() - dt1);
+            daz[i] = dzp[i] * dt1 * (S::one() - gz * gz);
+        }
+        for i in 0..n {
+            let (a1, az) = (da1[i], daz[i]);
+            let (r1, rz) = (&v1[i * n..(i + 1) * n], &vz[i * n..(i + 1) * n]);
+            for j in 0..n {
+                dh[j] += r1[j] * a1 + rz[j] * az;
+            }
+        }
+
+        // --- parameters and inputs ---
+        // branch k uses carrier q_k ∈ {y, y, y, z'} and pre-act adjoint a_k.
+        let adjoints = [&da1, &da2, &daz, &day];
+        for k in 0..K {
+            let a = adjoints[[0usize, 1, 2, 3][k]];
+            // NOTE: branch order in params is [dt1, dt2, z, y] = [da1, da2, daz, day]
+            let q: &[S] = if k == 3 { &zp } else { y };
+            let w = self.w(k);
+            let (ow, ov, ob) = (self.off_w(k), self.off_v(k), self.off_b(k));
+            for i in 0..n {
+                let ai = a[i];
+                if ai == S::zero() {
+                    continue;
+                }
+                for j in 0..m {
+                    dtheta[ow + i * m + j] += ai * x[j];
+                }
+                for j in 0..n {
+                    dtheta[ov + i * n + j] += ai * q[j];
+                }
+                dtheta[ob + i] += ai;
+                if let Some(dx) = dx.as_deref_mut() {
+                    let roww = &w[i * m..(i + 1) * m];
+                    for j in 0..m {
+                        dx[j] += roww[j] * ai;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::test_support::{check_jacobian, check_vjp};
+
+    #[test]
+    fn jacobian_matches_fd() {
+        let mut rng = Rng::new(13);
+        for &(n, m) in &[(1usize, 1usize), (2, 2), (4, 3)] {
+            let cell: Lem<f64> = Lem::new(n, m, &mut rng);
+            check_jacobian(&cell, 500 + n as u64, 1e-6);
+        }
+    }
+
+    #[test]
+    fn vjp_matches_fd() {
+        let mut rng = Rng::new(14);
+        let cell: Lem<f64> = Lem::new(3, 2, &mut rng);
+        check_vjp(&cell, 600, 1e-6);
+    }
+
+    #[test]
+    fn convex_combination_property() {
+        // Both state branches are convex combinations with tanh-bounded
+        // targets, so |s'|∞ ≤ max(|s|∞, 1).
+        let mut rng = Rng::new(15);
+        let cell: Lem<f64> = Lem::new(6, 3, &mut rng);
+        let mut s = vec![0.0; 12];
+        let mut x = vec![0.0; 3];
+        let mut out = vec![0.0; 12];
+        let mut ws = vec![0.0; cell.ws_len()];
+        for _ in 0..100 {
+            rng.fill_normal(&mut x, 1.0);
+            cell.step(&s, &x, &mut out, &mut ws);
+            std::mem::swap(&mut s, &mut out);
+            assert!(s.iter().all(|v| v.abs() <= 1.0 + 1e-12));
+        }
+    }
+}

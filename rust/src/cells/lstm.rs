@@ -1,0 +1,302 @@
+//! LSTM (Hochreiter & Schmidhuber, 1997). The DEER framework treats the
+//! packed state `s = [h, c]` (dimension 2n) as the recurrent vector, so its
+//! Jacobian is the full 2n×2n block matrix
+//!
+//! ```text
+//! ∂[h',c']/∂[h,c] = [ ∂h'/∂h  ∂h'/∂c ]
+//!                   [ ∂c'/∂h  ∂c'/∂c ]
+//! ```
+//!
+//! Equations:
+//! ```text
+//! i = σ(W_i x + U_i h + b_i)      f = σ(W_f x + U_f h + b_f)
+//! g = tanh(W_g x + U_g h + b_g)   o = σ(W_o x + U_o h + b_o)
+//! c' = f ⊙ c + i ⊙ g              h' = o ⊙ tanh(c')
+//! ```
+
+use super::{init_uniform, sigmoid, Cell, CellGrad};
+use crate::util::rng::Rng;
+use crate::util::scalar::Scalar;
+
+/// LSTM cell with `n` hidden units and `m` inputs; `state_dim() = 2n`
+/// (packed `[h, c]`).
+///
+/// Parameter layout: `[W_i, W_f, W_g, W_o] (4·n·m)`,
+/// `[U_i, U_f, U_g, U_o] (4·n·n)`, `[b_i, b_f, b_g, b_o] (4·n)`.
+#[derive(Debug, Clone)]
+pub struct Lstm<S> {
+    n: usize,
+    m: usize,
+    p: Vec<S>,
+}
+
+const GATES: usize = 4; // i, f, g, o
+
+impl<S: Scalar> Lstm<S> {
+    pub fn new(n: usize, m: usize, rng: &mut Rng) -> Self {
+        let mut p = vec![S::zero(); GATES * (n * m + n * n + n)];
+        init_uniform(&mut p, n, rng);
+        Lstm { n, m, p }
+    }
+
+    pub fn from_params(n: usize, m: usize, p: Vec<S>) -> Self {
+        assert_eq!(p.len(), GATES * (n * m + n * n + n));
+        Lstm { n, m, p }
+    }
+
+    fn w(&self, k: usize) -> &[S] {
+        let (n, m) = (self.n, self.m);
+        &self.p[k * n * m..(k + 1) * n * m]
+    }
+    fn u(&self, k: usize) -> &[S] {
+        let (n, m) = (self.n, self.m);
+        let base = GATES * n * m;
+        &self.p[base + k * n * n..base + (k + 1) * n * n]
+    }
+    fn b(&self, k: usize) -> &[S] {
+        let (n, m) = (self.n, self.m);
+        let base = GATES * (n * m + n * n);
+        &self.p[base + k * n..base + (k + 1) * n]
+    }
+    fn off_w(&self, k: usize) -> usize {
+        k * self.n * self.m
+    }
+    fn off_u(&self, k: usize) -> usize {
+        GATES * self.n * self.m + k * self.n * self.n
+    }
+    fn off_b(&self, k: usize) -> usize {
+        GATES * (self.n * self.m + self.n * self.n) + k * self.n
+    }
+
+    /// Gate activations into ws: [i, f, g, o, tanh(c'), c'] each length n.
+    #[inline]
+    fn gates(&self, s: &[S], x: &[S], ws: &mut [S]) {
+        let n = self.n;
+        let m = self.m;
+        let h = &s[..n];
+        let c = &s[n..2 * n];
+        for k in 0..GATES {
+            let w = self.w(k);
+            let u = self.u(k);
+            let b = self.b(k);
+            for i in 0..n {
+                let mut a = b[i];
+                let roww = &w[i * m..(i + 1) * m];
+                for j in 0..m {
+                    a += roww[j] * x[j];
+                }
+                let rowu = &u[i * n..(i + 1) * n];
+                for j in 0..n {
+                    a += rowu[j] * h[j];
+                }
+                ws[k * n + i] = if k == 2 { a.tanh() } else { sigmoid(a) };
+            }
+        }
+        for i in 0..n {
+            let cp = ws[n + i] * c[i] + ws[i] * ws[2 * n + i]; // f·c + i·g
+            ws[5 * n + i] = cp;
+            ws[4 * n + i] = cp.tanh();
+        }
+    }
+}
+
+impl<S: Scalar> Cell<S> for Lstm<S> {
+    fn state_dim(&self) -> usize {
+        2 * self.n
+    }
+    fn input_dim(&self) -> usize {
+        self.m
+    }
+    fn ws_len(&self) -> usize {
+        6 * self.n
+    }
+
+    fn step(&self, s: &[S], x: &[S], out: &mut [S], ws: &mut [S]) {
+        let n = self.n;
+        self.gates(s, x, ws);
+        for i in 0..n {
+            out[i] = ws[3 * n + i] * ws[4 * n + i]; // h' = o·tanh(c')
+            out[n + i] = ws[5 * n + i]; // c'
+        }
+    }
+
+    fn jacobian(&self, s: &[S], x: &[S], out_f: &mut [S], out_jac: &mut [S], ws: &mut [S]) {
+        let n = self.n;
+        let dim = 2 * n;
+        self.gates(s, x, ws);
+        let c = &s[n..2 * n];
+        let (u_i, u_f, u_g, u_o) = (self.u(0), self.u(1), self.u(2), self.u(3));
+        for v in out_jac.iter_mut() {
+            *v = S::zero();
+        }
+        for i in 0..n {
+            let ig = ws[i];
+            let fg = ws[n + i];
+            let gg = ws[2 * n + i];
+            let og = ws[3 * n + i];
+            let tc = ws[4 * n + i];
+            let cp = ws[5 * n + i];
+            out_f[i] = og * tc;
+            out_f[n + i] = cp;
+
+            let di = ig * (S::one() - ig);
+            let df = fg * (S::one() - fg);
+            let dg = S::one() - gg * gg;
+            let do_ = og * (S::one() - og);
+            let dtc = S::one() - tc * tc;
+
+            let (rui, ruf, rug, ruo) = (
+                &u_i[i * n..(i + 1) * n],
+                &u_f[i * n..(i + 1) * n],
+                &u_g[i * n..(i + 1) * n],
+                &u_o[i * n..(i + 1) * n],
+            );
+            for j in 0..n {
+                // ∂c'_i/∂h_j
+                let dcp_dh = c[i] * df * ruf[j] + gg * di * rui[j] + ig * dg * rug[j];
+                // ∂h'_i/∂h_j
+                let dhp_dh = tc * do_ * ruo[j] + og * dtc * dcp_dh;
+                out_jac[i * dim + j] = dhp_dh;
+                out_jac[(n + i) * dim + j] = dcp_dh;
+            }
+            // ∂c'_i/∂c_i = f_i ; ∂h'_i/∂c_i = o_i·(1−tanh²)·f_i
+            out_jac[(n + i) * dim + n + i] = fg;
+            out_jac[i * dim + n + i] = og * dtc * fg;
+        }
+    }
+
+    fn flops_step(&self) -> u64 {
+        let (n, m) = (self.n as u64, self.m as u64);
+        2 * 4 * n * (n + m) + 14 * n
+    }
+
+    fn flops_jacobian(&self) -> u64 {
+        let n = self.n as u64;
+        self.flops_step() + 8 * n * n + 12 * n
+    }
+}
+
+impl<S: Scalar> CellGrad<S> for Lstm<S> {
+    fn num_params(&self) -> usize {
+        self.p.len()
+    }
+    fn params(&self) -> &[S] {
+        &self.p
+    }
+    fn params_mut(&mut self) -> &mut [S] {
+        &mut self.p
+    }
+
+    fn vjp_step(
+        &self,
+        s: &[S],
+        x: &[S],
+        lambda: &[S],
+        dh_acc: &mut [S],
+        mut dx: Option<&mut [S]>,
+        dtheta: &mut [S],
+        ws: &mut [S],
+    ) {
+        let n = self.n;
+        let m = self.m;
+        self.gates(s, x, ws);
+        let h = &s[..n];
+        let c = &s[n..2 * n];
+        let (lam_h, lam_c) = lambda.split_at(n);
+
+        // pre-activation adjoints per gate
+        let mut da = vec![S::zero(); GATES * n];
+        for i in 0..n {
+            let ig = ws[i];
+            let fg = ws[n + i];
+            let gg = ws[2 * n + i];
+            let og = ws[3 * n + i];
+            let tc = ws[4 * n + i];
+            let dtc = S::one() - tc * tc;
+
+            // dL/dc' = λ_c + λ_h · o · (1−tanh²)
+            let dcp = lam_c[i] + lam_h[i] * og * dtc;
+            // o gate: h' = o·tanh(c')
+            da[3 * n + i] = lam_h[i] * tc * (og * (S::one() - og));
+            // f gate: c' = f·c + i·g
+            da[n + i] = dcp * c[i] * (fg * (S::one() - fg));
+            // i gate
+            da[i] = dcp * gg * (ig * (S::one() - ig));
+            // g gate
+            da[2 * n + i] = dcp * ig * (S::one() - gg * gg);
+            // direct dc path
+            dh_acc[n + i] += dcp * fg;
+        }
+
+        for k in 0..GATES {
+            let u = self.u(k);
+            let w = self.w(k);
+            let (ow, ou, ob) = (self.off_w(k), self.off_u(k), self.off_b(k));
+            for i in 0..n {
+                let a = da[k * n + i];
+                if a == S::zero() {
+                    continue;
+                }
+                let rowu = &u[i * n..(i + 1) * n];
+                for j in 0..n {
+                    dh_acc[j] += rowu[j] * a;
+                    dtheta[ou + i * n + j] += a * h[j];
+                }
+                if let Some(dx) = dx.as_deref_mut() {
+                    let roww = &w[i * m..(i + 1) * m];
+                    for j in 0..m {
+                        dx[j] += roww[j] * a;
+                    }
+                }
+                for j in 0..m {
+                    dtheta[ow + i * m + j] += a * x[j];
+                }
+                dtheta[ob + i] += a;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::test_support::{check_jacobian, check_vjp};
+
+    #[test]
+    fn jacobian_matches_fd() {
+        let mut rng = Rng::new(8);
+        for &(n, m) in &[(1usize, 1usize), (2, 3), (4, 2)] {
+            let cell: Lstm<f64> = Lstm::new(n, m, &mut rng);
+            check_jacobian(&cell, 300 + n as u64, 1e-6);
+        }
+    }
+
+    #[test]
+    fn vjp_matches_fd() {
+        let mut rng = Rng::new(9);
+        let cell: Lstm<f64> = Lstm::new(3, 2, &mut rng);
+        check_vjp(&cell, 400, 1e-6);
+    }
+
+    #[test]
+    fn state_dim_is_twice_hidden() {
+        let mut rng = Rng::new(1);
+        let cell: Lstm<f64> = Lstm::new(5, 2, &mut rng);
+        assert_eq!(cell.state_dim(), 10);
+        assert_eq!(cell.num_params(), 4 * (5 * 2 + 25 + 5));
+    }
+
+    #[test]
+    fn cell_state_linear_in_c_when_gates_saturate() {
+        // With zero params: i=f=o=1/2, g=0 → c' = c/2, h' = tanh(c/2)/2.
+        let n = 2;
+        let cell: Lstm<f64> = Lstm::from_params(n, 1, vec![0.0; 4 * (n + n * n + n)]);
+        let s = vec![0.7, -0.7, 0.4, -1.0];
+        let mut out = vec![0.0; 4];
+        let mut ws = vec![0.0; cell.ws_len()];
+        cell.step(&s, &[0.0], &mut out, &mut ws);
+        assert!((out[2] - 0.2).abs() < 1e-14);
+        assert!((out[3] + 0.5).abs() < 1e-14);
+        assert!((out[0] - 0.5 * 0.2f64.tanh()).abs() < 1e-14);
+    }
+}

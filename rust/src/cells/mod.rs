@@ -1,0 +1,268 @@
+//! Non-linear recurrent cells with analytic Jacobians and parameter VJPs.
+//!
+//! DEER (paper eq. 5) requires the per-step state Jacobian
+//! `G_i = −∂f/∂h (h_{i−1}, x_i)` explicitly. JAX obtains it with `jacfwd`;
+//! here each cell implements its Jacobian *analytically* — the same values,
+//! verified against central finite differences in the tests, and against the
+//! JAX implementation through the AOT artifacts.
+//!
+//! Cells implemented: [`Gru`] (the paper's main benchmark subject, §4.1/4.3),
+//! [`Lstm`], [`Lem`] (Rusch et al. 2021; Table 1 and Fig. 8), and [`Elman`]
+//! (simplest test vehicle). All are generic over f32/f64 ([`Scalar`]).
+//!
+//! Conventions:
+//! * state `h` has length `state_dim()`; input `x` has `input_dim()`.
+//! * All methods take a caller-provided scratch slice of `ws_len()` elements
+//!   so the Newton hot loop allocates nothing.
+//! * `vjp_step` *accumulates* (`+=`) into `dh`, `dx` and `dtheta`.
+
+pub mod elman;
+pub mod gru;
+pub mod lem;
+pub mod lstm;
+
+pub use elman::Elman;
+pub use gru::Gru;
+pub use lem::Lem;
+pub use lstm::Lstm;
+
+use crate::util::rng::Rng;
+use crate::util::scalar::Scalar;
+
+/// A discrete-time non-linear recurrence `h' = f(h, x, θ)`.
+pub trait Cell<S: Scalar>: Send + Sync {
+    /// Dimension of the recurrent state vector.
+    fn state_dim(&self) -> usize;
+    /// Dimension of the per-step input vector.
+    fn input_dim(&self) -> usize;
+    /// Scratch length required by `step` / `jacobian`.
+    fn ws_len(&self) -> usize;
+
+    /// `out = f(h, x)`.
+    fn step(&self, h: &[S], x: &[S], out: &mut [S], ws: &mut [S]);
+
+    /// `out_f = f(h, x)` and `out_jac = ∂f/∂h` (row-major n×n), fused so the
+    /// shared gate activations are computed once (this fusion is one of the
+    /// §Perf optimizations; see EXPERIMENTS.md).
+    fn jacobian(&self, h: &[S], x: &[S], out_f: &mut [S], out_jac: &mut [S], ws: &mut [S]);
+
+    /// Per-step length of the input-precomputation buffer (0 = unsupported).
+    ///
+    /// §Perf optimization: a cell's input projections (`W_i·x + b`) do not
+    /// depend on the trajectory guess, so DEER can compute them **once per
+    /// evaluation** instead of once per Newton iteration. Cells that support
+    /// this return the per-step buffer length here and implement
+    /// [`Cell::precompute_x`] + [`Cell::jacobian_pre`].
+    fn x_precompute_len(&self) -> usize {
+        0
+    }
+
+    /// Fill `out` (length `T · x_precompute_len()`) with per-step input
+    /// projections for the whole sequence.
+    fn precompute_x(&self, _xs: &[S], _out: &mut [S]) {
+        unimplemented!("cell does not support input precomputation")
+    }
+
+    /// Like [`Cell::jacobian`] but reading the step's precomputed input
+    /// projections instead of recomputing `W_i·x`.
+    fn jacobian_pre(&self, h: &[S], pre: &[S], out_f: &mut [S], out_jac: &mut [S], ws: &mut [S]) {
+        let _ = (h, pre, out_f, out_jac, ws);
+        unimplemented!("cell does not support input precomputation")
+    }
+
+    /// Approximate FLOPs of one `step` (used by the accelerator cost model).
+    fn flops_step(&self) -> u64 {
+        let n = self.state_dim() as u64;
+        let m = self.input_dim() as u64;
+        2 * n * (n + m) * 3
+    }
+
+    /// Approximate FLOPs of one fused `jacobian` call.
+    fn flops_jacobian(&self) -> u64 {
+        let n = self.state_dim() as u64;
+        self.flops_step() + 4 * n * n
+    }
+}
+
+/// Cells that additionally expose parameters and an analytic VJP, enabling
+/// BPTT (sequential baseline) and the DEER backward pass (paper eq. 7).
+pub trait CellGrad<S: Scalar>: Cell<S> {
+    /// Number of trainable parameters (flat layout).
+    fn num_params(&self) -> usize;
+    /// Flat parameter vector.
+    fn params(&self) -> &[S];
+    /// Mutable flat parameter vector.
+    fn params_mut(&mut self) -> &mut [S];
+
+    /// Given the cotangent `lambda = ∂L/∂h'` at one step, accumulate
+    /// `dh += λᵀ ∂f/∂h`, `dx += λᵀ ∂f/∂x` (if requested) and
+    /// `dtheta += λᵀ ∂f/∂θ`.
+    fn vjp_step(
+        &self,
+        h: &[S],
+        x: &[S],
+        lambda: &[S],
+        dh: &mut [S],
+        dx: Option<&mut [S]>,
+        dtheta: &mut [S],
+        ws: &mut [S],
+    );
+}
+
+/// Uniform(-1/√n, 1/√n) initialisation — the flax.linen default the paper's
+/// benchmarks use on untrained cells.
+pub fn init_uniform<S: Scalar>(params: &mut [S], fan_in: usize, rng: &mut Rng) {
+    let bound = 1.0 / (fan_in.max(1) as f64).sqrt();
+    rng.fill_uniform(params, -bound, bound);
+}
+
+/// σ(x) with care at extremes.
+#[inline]
+pub fn sigmoid<S: Scalar>(x: S) -> S {
+    S::one() / (S::one() + (-x).exp())
+}
+
+/// Central-difference Jacobian (test helper) — O(n²) calls to `step`.
+pub fn fd_jacobian<S: Scalar, C: Cell<S>>(cell: &C, h: &[S], x: &[S], eps: f64) -> Vec<S> {
+    let n = cell.state_dim();
+    let mut jac = vec![S::zero(); n * n];
+    let mut hp = h.to_vec();
+    let mut hm = h.to_vec();
+    let mut fp = vec![S::zero(); n];
+    let mut fm = vec![S::zero(); n];
+    let mut ws = vec![S::zero(); cell.ws_len()];
+    let e = S::from_f64c(eps);
+    for j in 0..n {
+        hp[j] = h[j] + e;
+        hm[j] = h[j] - e;
+        cell.step(&hp, x, &mut fp, &mut ws);
+        cell.step(&hm, x, &mut fm, &mut ws);
+        for i in 0..n {
+            jac[i * n + j] = (fp[i] - fm[i]) / (e + e);
+        }
+        hp[j] = h[j];
+        hm[j] = h[j];
+    }
+    jac
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use super::*;
+
+    /// Shared check: analytic Jacobian vs central differences.
+    pub fn check_jacobian<C: Cell<f64>>(cell: &C, seed: u64, tol: f64) {
+        let n = cell.state_dim();
+        let m = cell.input_dim();
+        let mut rng = Rng::new(seed);
+        let mut h = vec![0.0; n];
+        let mut x = vec![0.0; m];
+        rng.fill_normal(&mut h, 0.8);
+        rng.fill_normal(&mut x, 1.0);
+        let mut f = vec![0.0; n];
+        let mut jac = vec![0.0; n * n];
+        let mut ws = vec![0.0; cell.ws_len()];
+        cell.jacobian(&h, &x, &mut f, &mut jac, &mut ws);
+        // f from jacobian() must equal step()
+        let mut f2 = vec![0.0; n];
+        cell.step(&h, &x, &mut f2, &mut ws);
+        for (a, b) in f.iter().zip(f2.iter()) {
+            assert!((a - b).abs() < 1e-14, "fused f mismatch: {a} vs {b}");
+        }
+        let fd = fd_jacobian(cell, &h, &x, 1e-6);
+        for i in 0..n * n {
+            assert!(
+                (jac[i] - fd[i]).abs() < tol,
+                "jac[{i}]: analytic {} vs fd {}",
+                jac[i],
+                fd[i]
+            );
+        }
+    }
+
+    /// Shared check: analytic VJP vs finite-difference directional derivatives
+    /// for state, input and parameters.
+    pub fn check_vjp<C: CellGrad<f64> + Clone>(cell: &C, seed: u64, tol: f64) {
+        let n = cell.state_dim();
+        let m = cell.input_dim();
+        let p = cell.num_params();
+        let mut rng = Rng::new(seed);
+        let mut h = vec![0.0; n];
+        let mut x = vec![0.0; m];
+        let mut lam = vec![0.0; n];
+        rng.fill_normal(&mut h, 0.7);
+        rng.fill_normal(&mut x, 1.0);
+        rng.fill_normal(&mut lam, 1.0);
+
+        let mut dh = vec![0.0; n];
+        let mut dx = vec![0.0; m];
+        let mut dth = vec![0.0; p];
+        let mut ws = vec![0.0; cell.ws_len()];
+        cell.vjp_step(&h, &x, &lam, &mut dh, Some(&mut dx), &mut dth, &mut ws);
+
+        let eps = 1e-6;
+        let eval = |cell: &C, h: &[f64], x: &[f64]| -> Vec<f64> {
+            let mut out = vec![0.0; n];
+            let mut ws = vec![0.0; cell.ws_len()];
+            cell.step(h, x, &mut out, &mut ws);
+            out
+        };
+        let dot = |a: &[f64], b: &[f64]| a.iter().zip(b).map(|(p, q)| p * q).sum::<f64>();
+
+        // state direction
+        for j in 0..n {
+            let mut hp = h.clone();
+            let mut hm = h.clone();
+            hp[j] += eps;
+            hm[j] -= eps;
+            let want = (dot(&lam, &eval(cell, &hp, &x)) - dot(&lam, &eval(cell, &hm, &x))) / (2.0 * eps);
+            assert!((dh[j] - want).abs() < tol, "dh[{j}]: {} vs {want}", dh[j]);
+        }
+        // input direction
+        for j in 0..m {
+            let mut xp = x.clone();
+            let mut xm = x.clone();
+            xp[j] += eps;
+            xm[j] -= eps;
+            let want = (dot(&lam, &eval(cell, &h, &xp)) - dot(&lam, &eval(cell, &h, &xm))) / (2.0 * eps);
+            assert!((dx[j] - want).abs() < tol, "dx[{j}]: {} vs {want}", dx[j]);
+        }
+        // a random subset of parameter directions (p can be large)
+        let mut idx_rng = Rng::new(seed ^ 0xabcdef);
+        for _ in 0..p.min(24) {
+            let j = idx_rng.below(p);
+            let mut cp = cell.clone();
+            let mut cm = cell.clone();
+            cp.params_mut()[j] += eps;
+            cm.params_mut()[j] -= eps;
+            let want = (dot(&lam, &eval(&cp, &h, &x)) - dot(&lam, &eval(&cm, &h, &x))) / (2.0 * eps);
+            assert!(
+                (dth[j] - want).abs() < tol,
+                "dtheta[{j}]: {} vs {want}",
+                dth[j]
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sigmoid_basics() {
+        assert!((sigmoid(0.0f64) - 0.5).abs() < 1e-15);
+        assert!(sigmoid(30.0f64) > 0.999999);
+        assert!(sigmoid(-30.0f64) < 1e-6);
+    }
+
+    #[test]
+    fn init_within_bounds() {
+        let mut p = vec![0.0f64; 1000];
+        let mut rng = Rng::new(0);
+        init_uniform(&mut p, 16, &mut rng);
+        let b = 0.25;
+        assert!(p.iter().all(|v| v.abs() <= b));
+        assert!(p.iter().any(|v| v.abs() > b * 0.5));
+    }
+}

@@ -1,0 +1,149 @@
+//! Dynamic batching of evaluation requests.
+//!
+//! During sweeps and training the coordinator receives evaluation requests
+//! (sequences to run through an RNN). Requests with the same shape key are
+//! grouped up to `max_batch` or until `max_wait` elapses — the standard
+//! dynamic-batching policy (vLLM-style), applied here to DEER evaluations
+//! whose batch dimension is embarrassingly parallel.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+/// One pending request.
+#[derive(Debug, Clone)]
+pub struct Request<T> {
+    pub id: u64,
+    /// Shape key: only identically-shaped requests can share a batch.
+    pub key: (usize, usize), // (n, t)
+    pub payload: T,
+    pub arrived: Instant,
+}
+
+/// A flushed batch.
+#[derive(Debug, Clone)]
+pub struct Batch<T> {
+    pub key: (usize, usize),
+    pub requests: Vec<Request<T>>,
+}
+
+/// Size/deadline batching queue (single-threaded core; wrap in a Mutex for
+/// cross-thread use — the sweep scheduler does).
+#[derive(Debug)]
+pub struct Batcher<T> {
+    queues: HashMap<(usize, usize), Vec<Request<T>>>,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    next_id: u64,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(max_batch: usize, max_wait: Duration) -> Self {
+        Batcher {
+            queues: HashMap::new(),
+            max_batch,
+            max_wait,
+            next_id: 0,
+        }
+    }
+
+    /// Enqueue a request; returns its id and, if the batch filled, the
+    /// ready-to-run batch.
+    pub fn push(&mut self, key: (usize, usize), payload: T) -> (u64, Option<Batch<T>>) {
+        let id = self.next_id;
+        self.next_id += 1;
+        let q = self.queues.entry(key).or_default();
+        q.push(Request {
+            id,
+            key,
+            payload,
+            arrived: Instant::now(),
+        });
+        if q.len() >= self.max_batch {
+            let requests = std::mem::take(q);
+            (id, Some(Batch { key, requests }))
+        } else {
+            (id, None)
+        }
+    }
+
+    /// Flush every queue whose oldest request exceeded the deadline (or all
+    /// non-empty queues if `force`).
+    pub fn poll(&mut self, force: bool) -> Vec<Batch<T>> {
+        let now = Instant::now();
+        let mut out = Vec::new();
+        let keys: Vec<_> = self.queues.keys().cloned().collect();
+        for key in keys {
+            let q = self.queues.get_mut(&key).unwrap();
+            if q.is_empty() {
+                continue;
+            }
+            let expired = now.duration_since(q[0].arrived) >= self.max_wait;
+            if force || expired {
+                out.push(Batch {
+                    key,
+                    requests: std::mem::take(q),
+                });
+            }
+        }
+        out
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queues.values().map(|q| q.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fills_batch_at_max() {
+        let mut b = Batcher::new(3, Duration::from_secs(60));
+        assert!(b.push((4, 100), 'a').1.is_none());
+        assert!(b.push((4, 100), 'b').1.is_none());
+        let (_, full) = b.push((4, 100), 'c');
+        let batch = full.unwrap();
+        assert_eq!(batch.requests.len(), 3);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn different_shapes_do_not_mix() {
+        let mut b = Batcher::new(2, Duration::from_secs(60));
+        b.push((4, 100), 1);
+        let (_, full) = b.push((8, 100), 2);
+        assert!(full.is_none(), "different n must not batch together");
+        assert_eq!(b.pending(), 2);
+        let (_, full) = b.push((4, 100), 3);
+        let batch = full.unwrap();
+        assert!(batch.requests.iter().all(|r| r.key == (4, 100)));
+    }
+
+    #[test]
+    fn deadline_flush() {
+        let mut b = Batcher::new(100, Duration::from_millis(1));
+        b.push((2, 10), ());
+        std::thread::sleep(Duration::from_millis(5));
+        let flushed = b.poll(false);
+        assert_eq!(flushed.len(), 1);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn force_flush() {
+        let mut b = Batcher::new(100, Duration::from_secs(60));
+        b.push((2, 10), 1);
+        b.push((3, 10), 2);
+        let flushed = b.poll(true);
+        assert_eq!(flushed.len(), 2);
+    }
+
+    #[test]
+    fn ids_unique_and_monotone() {
+        let mut b = Batcher::new(10, Duration::from_secs(1));
+        let (i1, _) = b.push((1, 1), ());
+        let (i2, _) = b.push((1, 1), ());
+        assert!(i2 > i1);
+    }
+}

@@ -1,0 +1,88 @@
+//! Memory accounting and planning (§3.5, Table 6, Fig. 8).
+//!
+//! DEER materializes O(n²·L·B·P) Jacobians; the paper's missing Fig. 2 cells
+//! and the Fig. 8 equal-memory experiment are both memory phenomena. The
+//! planner answers: does a configuration fit a budget, and what sequential
+//! batch size matches a given DEER configuration's footprint (Fig. 8 used
+//! DEER@B=3 vs sequential@B=70 at equal ~2.6 GB).
+
+pub use crate::simulator::deer_memory_bytes;
+
+/// Working-set bytes of the sequential method: activations for BPTT
+/// (T·B·n) plus per-step gate buffers.
+pub fn seq_memory_bytes(n: usize, t_len: usize, batch: usize, elem: usize) -> u64 {
+    (batch * t_len * n * elem) as u64 + (batch * 8 * n * elem) as u64
+}
+
+/// Planner over a fixed device budget.
+#[derive(Debug, Clone)]
+pub struct MemoryPlanner {
+    pub budget_bytes: u64,
+}
+
+impl MemoryPlanner {
+    pub fn new(budget_bytes: u64) -> Self {
+        MemoryPlanner { budget_bytes }
+    }
+
+    /// Does a DEER configuration fit? (The paper's OOM'd cells answer no.)
+    pub fn deer_fits(&self, n: usize, t_len: usize, batch: usize) -> bool {
+        deer_memory_bytes(n, t_len, batch, 4) <= self.budget_bytes
+    }
+
+    /// Largest DEER batch that fits for (n, T).
+    pub fn max_deer_batch(&self, n: usize, t_len: usize) -> usize {
+        let per = deer_memory_bytes(n, t_len, 1, 4).max(1);
+        (self.budget_bytes / per) as usize
+    }
+
+    /// Fig. 8's construction: the sequential batch size whose footprint
+    /// matches DEER at `deer_batch` (equal-memory comparison).
+    pub fn equal_memory_seq_batch(&self, n: usize, t_len: usize, deer_batch: usize) -> usize {
+        let deer = deer_memory_bytes(n, t_len, deer_batch, 4);
+        let per_seq = seq_memory_bytes(n, t_len, 1, 4).max(1);
+        ((deer / per_seq) as usize).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quadratic_growth_in_n() {
+        // Table 6: memory grows ~quadratically with n.
+        let m8 = deer_memory_bytes(8, 1000, 16, 4) as f64;
+        let m16 = deer_memory_bytes(16, 1000, 16, 4) as f64;
+        let m32 = deer_memory_bytes(32, 1000, 16, 4) as f64;
+        let r1 = m16 / m8;
+        let r2 = m32 / m16;
+        assert!(r1 > 2.5 && r1 < 4.5, "{r1}");
+        assert!(r2 > 3.0 && r2 < 4.5, "{r2}");
+    }
+
+    #[test]
+    fn planner_fit_boundaries() {
+        let p = MemoryPlanner::new(16 * (1 << 30)); // V100 16 GB
+        assert!(p.deer_fits(1, 1_000_000, 16));
+        assert!(!p.deer_fits(64, 1_000_000, 16)); // the paper's missing cell
+        let maxb = p.max_deer_batch(64, 1_000_000);
+        assert!(maxb < 16);
+    }
+
+    #[test]
+    fn equal_memory_batch_ratio_matches_fig8_order() {
+        // Fig. 8: DEER B=3 vs sequential B=70 at the same memory; with
+        // LEM-sized state (2n = 64-ish) the ratio should be O(10).
+        let p = MemoryPlanner::new(26 * (1 << 27)); // ~3.3 GB
+        let seq_b = p.equal_memory_seq_batch(32, 17_984, 3);
+        assert!(seq_b >= 20 && seq_b <= 300, "seq batch {seq_b}");
+    }
+
+    #[test]
+    fn monotonicity() {
+        let p = MemoryPlanner::new(1 << 30);
+        assert!(p.max_deer_batch(4, 10_000) >= p.max_deer_batch(8, 10_000));
+        assert!(p.max_deer_batch(4, 10_000) >= p.max_deer_batch(4, 100_000));
+    }
+}

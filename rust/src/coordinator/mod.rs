@@ -1,0 +1,28 @@
+//! The Layer-3 coordination layer.
+//!
+//! DEER's contribution is an algorithm, so per the layering rules L3 is an
+//! algorithm-serving systems layer rather than a serving router:
+//!
+//! * [`policy`] — convergence policy: per-dtype tolerances (§3.5), iteration
+//!   caps, divergence handling with sequential fallback.
+//! * [`warmstart`] — the App. B.2 trajectory cache: the previous training
+//!   step's solution keyed by sample id becomes the next step's initial
+//!   guess, cutting Newton iterations.
+//! * [`batcher`] — dynamic batching of evaluation requests (groups
+//!   compatible sequences, flushes on size or deadline).
+//! * [`memory`] — O(n²LB) Jacobian working-set accounting (§3.5, Table 6)
+//!   and equal-memory batch planning (Fig. 8).
+//! * [`sweep`] — the benchmark grid scheduler driving Fig. 2 / Table 4
+//!   style sweeps through a worker pool.
+
+pub mod batcher;
+pub mod memory;
+pub mod policy;
+pub mod sweep;
+pub mod warmstart;
+
+pub use batcher::Batcher;
+pub use memory::MemoryPlanner;
+pub use policy::ConvergencePolicy;
+pub use sweep::{Job, JobResult, Sweep};
+pub use warmstart::WarmStartCache;

@@ -1,0 +1,126 @@
+//! Convergence policy (§3.5).
+//!
+//! DEER's single hyperparameter is the convergence tolerance; the paper uses
+//! 1e-4 (f32) / 1e-7 (f64) and notes tolerance insensitivity (App. C.1,
+//! Fig. 6). The policy also decides what to do when Newton diverges (§3.5's
+//! far-from-solution caveat): fall back to the sequential evaluator, which
+//! is always correct.
+
+use crate::cells::Cell;
+use crate::deer::newton::{deer_rnn, DeerConfig, DeerResult};
+use crate::deer::seq::seq_rnn;
+use crate::util::scalar::Scalar;
+
+/// Policy outcome of one evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvalPath {
+    /// DEER converged within budget.
+    Deer,
+    /// DEER diverged / hit the cap — sequential fallback produced the result.
+    SequentialFallback,
+}
+
+/// Tolerances and iteration budget.
+#[derive(Debug, Clone)]
+pub struct ConvergencePolicy {
+    pub tol_override: Option<f64>,
+    pub max_iter: usize,
+    pub divergence_patience: usize,
+    /// If true, a non-converged DEER run is replaced by the sequential path.
+    pub fallback_sequential: bool,
+}
+
+impl Default for ConvergencePolicy {
+    fn default() -> Self {
+        ConvergencePolicy {
+            tol_override: None,
+            max_iter: 100,
+            divergence_patience: 8,
+            fallback_sequential: true,
+        }
+    }
+}
+
+impl ConvergencePolicy {
+    pub fn config<S: Scalar>(&self, threads: usize) -> DeerConfig<S> {
+        DeerConfig {
+            tol: self
+                .tol_override
+                .map(S::from_f64c)
+                .unwrap_or_else(S::default_tol),
+            max_iter: self.max_iter,
+            threads,
+            divergence_patience: self.divergence_patience,
+        }
+    }
+
+    /// Evaluate an RNN under the policy: DEER first, sequential fallback on
+    /// non-convergence. Returns the trajectory, path taken, and DEER stats.
+    pub fn evaluate<S: Scalar, C: Cell<S>>(
+        &self,
+        cell: &C,
+        h0: &[S],
+        xs: &[S],
+        guess: Option<&[S]>,
+        threads: usize,
+    ) -> (Vec<S>, EvalPath, DeerResult<S>) {
+        let res = deer_rnn(cell, h0, xs, guess, &self.config::<S>(threads));
+        if res.converged || !self.fallback_sequential {
+            let ys = res.ys.clone();
+            (ys, EvalPath::Deer, res)
+        } else {
+            let ys = seq_rnn(cell, h0, xs);
+            (ys, EvalPath::SequentialFallback, res)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::Gru;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn converged_uses_deer() {
+        let mut rng = Rng::new(1);
+        let cell: Gru<f64> = Gru::new(3, 2, &mut rng);
+        let mut xs = vec![0.0; 200 * 2];
+        rng.fill_normal(&mut xs, 1.0);
+        let pol = ConvergencePolicy::default();
+        let (ys, path, res) = pol.evaluate(&cell, &[0.0; 3], &xs, None, 1);
+        assert_eq!(path, EvalPath::Deer);
+        assert!(res.converged);
+        assert_eq!(ys.len(), 600);
+    }
+
+    #[test]
+    fn iteration_cap_triggers_fallback() {
+        let mut rng = Rng::new(2);
+        let cell: Gru<f64> = Gru::new(3, 2, &mut rng);
+        let mut xs = vec![0.0; 300 * 2];
+        rng.fill_normal(&mut xs, 1.0);
+        let pol = ConvergencePolicy {
+            max_iter: 1, // force non-convergence
+            ..Default::default()
+        };
+        let (ys, path, _) = pol.evaluate(&cell, &[0.0; 3], &xs, None, 1);
+        assert_eq!(path, EvalPath::SequentialFallback);
+        // fallback result equals the exact sequential evaluation
+        let want = crate::deer::seq::seq_rnn(&cell, &[0.0; 3], &xs);
+        assert_eq!(ys, want);
+    }
+
+    #[test]
+    fn tol_override_respected() {
+        let pol = ConvergencePolicy {
+            tol_override: Some(1e-2),
+            ..Default::default()
+        };
+        let cfg: DeerConfig<f32> = pol.config(1);
+        assert!((cfg.tol - 1e-2).abs() < 1e-9);
+        let pol2 = ConvergencePolicy::default();
+        let cfg2: DeerConfig<f32> = pol2.config(1);
+        assert_eq!(cfg2.tol, 1e-4);
+    }
+}

@@ -1,0 +1,183 @@
+//! Benchmark sweep scheduler.
+//!
+//! Fig. 2 / Table 4 are grids over (state dim × sequence length × batch ×
+//! method). The scheduler expands a grid into jobs and runs them through a
+//! worker pool (std::thread + channels; tokio is unavailable offline),
+//! collecting per-job measurements.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// Evaluation method under test.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    Sequential,
+    Deer,
+    DeerWarm,
+}
+
+/// One grid point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Job {
+    pub id: usize,
+    pub n: usize,
+    pub t_len: usize,
+    pub batch: usize,
+    pub method: Method,
+    pub seed: u64,
+}
+
+/// Measurement for one job.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub job: Job,
+    pub secs: f64,
+    pub iterations: usize,
+    pub converged: bool,
+    pub max_err_vs_seq: f64,
+}
+
+/// Grid specification.
+#[derive(Debug, Clone)]
+pub struct Sweep {
+    pub dims: Vec<usize>,
+    pub lens: Vec<usize>,
+    pub batches: Vec<usize>,
+    pub methods: Vec<Method>,
+    pub seeds: Vec<u64>,
+}
+
+impl Sweep {
+    /// Expand into the job list (row-major over the grid).
+    pub fn jobs(&self) -> Vec<Job> {
+        let mut out = Vec::new();
+        let mut id = 0;
+        for &n in &self.dims {
+            for &t_len in &self.lens {
+                for &batch in &self.batches {
+                    for &method in &self.methods {
+                        for &seed in &self.seeds {
+                            out.push(Job {
+                                id,
+                                n,
+                                t_len,
+                                batch,
+                                method,
+                                seed,
+                            });
+                            id += 1;
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Run all jobs through `workers` threads with the given job function.
+    /// Results are returned in job-id order.
+    pub fn run<F>(&self, workers: usize, f: F) -> Vec<JobResult>
+    where
+        F: Fn(&Job) -> JobResult + Send + Sync,
+    {
+        let jobs = self.jobs();
+        if workers <= 1 {
+            return jobs.iter().map(&f).collect();
+        }
+        let queue = Arc::new(Mutex::new(jobs.into_iter()));
+        let (tx, rx) = mpsc::channel::<JobResult>();
+        let f = &f;
+        crossbeam_utils::thread::scope(|scope| {
+            for _ in 0..workers {
+                let queue = Arc::clone(&queue);
+                let tx = tx.clone();
+                scope.spawn(move |_| loop {
+                    let job = { queue.lock().unwrap().next() };
+                    match job {
+                        Some(j) => {
+                            let r = f(&j);
+                            if tx.send(r).is_err() {
+                                break;
+                            }
+                        }
+                        None => break,
+                    }
+                });
+            }
+            drop(tx);
+        })
+        .expect("sweep worker panicked");
+        let mut results: Vec<JobResult> = rx.into_iter().collect();
+        results.sort_by_key(|r| r.job.id);
+        results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy(job: &Job) -> JobResult {
+        JobResult {
+            job: job.clone(),
+            secs: job.n as f64,
+            iterations: 1,
+            converged: true,
+            max_err_vs_seq: 0.0,
+        }
+    }
+
+    #[test]
+    fn grid_expansion_count() {
+        let s = Sweep {
+            dims: vec![1, 2],
+            lens: vec![10, 20, 30],
+            batches: vec![1],
+            methods: vec![Method::Sequential, Method::Deer],
+            seeds: vec![0],
+        };
+        assert_eq!(s.jobs().len(), 2 * 3 * 2);
+    }
+
+    #[test]
+    fn results_ordered_single_worker() {
+        let s = Sweep {
+            dims: vec![1, 2, 3],
+            lens: vec![5],
+            batches: vec![1],
+            methods: vec![Method::Deer],
+            seeds: vec![0],
+        };
+        let r = s.run(1, dummy);
+        let ids: Vec<usize> = r.iter().map(|x| x.job.id).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn results_ordered_multi_worker() {
+        let s = Sweep {
+            dims: vec![1, 2, 3, 4, 5],
+            lens: vec![5, 6],
+            batches: vec![1],
+            methods: vec![Method::Deer],
+            seeds: vec![0, 1],
+        };
+        let r = s.run(4, dummy);
+        let ids: Vec<usize> = r.iter().map(|x| x.job.id).collect();
+        let want: Vec<usize> = (0..r.len()).collect();
+        assert_eq!(ids, want);
+    }
+
+    #[test]
+    fn all_jobs_executed_exactly_once() {
+        let s = Sweep {
+            dims: vec![1, 2, 3, 4, 5, 6, 7, 8],
+            lens: vec![1],
+            batches: vec![1, 2],
+            methods: vec![Method::Deer],
+            seeds: vec![0],
+        };
+        let r = s.run(3, dummy);
+        assert_eq!(r.len(), 16);
+    }
+}

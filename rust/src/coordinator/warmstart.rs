@@ -1,0 +1,177 @@
+//! Warm-start trajectory cache (paper App. B.2).
+//!
+//! "For every training step during the training with DEER method, we save
+//! the predicted trajectory for every row of the dataset. The saved
+//! trajectory will be used as the initial guess of the DEER method for the
+//! next training step." — this cache is that mechanism, with an LRU memory
+//! budget (trajectories are O(T·n) each) and hit/iteration statistics so the
+//! benefit is measurable (see EXPERIMENTS.md).
+
+use std::collections::HashMap;
+
+/// LRU cache of trajectories keyed by sample id.
+#[derive(Debug)]
+pub struct WarmStartCache {
+    entries: HashMap<u64, (Vec<f32>, u64)>, // key -> (trajectory, last_use)
+    clock: u64,
+    budget_bytes: usize,
+    used_bytes: usize,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl WarmStartCache {
+    pub fn new(budget_bytes: usize) -> WarmStartCache {
+        WarmStartCache {
+            entries: HashMap::new(),
+            clock: 0,
+            budget_bytes,
+            used_bytes: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn used_bytes(&self) -> usize {
+        self.used_bytes
+    }
+
+    /// Look up a warm start for `key`.
+    pub fn get(&mut self, key: u64) -> Option<&[f32]> {
+        self.clock += 1;
+        let clock = self.clock;
+        match self.entries.get_mut(&key) {
+            Some((traj, last)) => {
+                *last = clock;
+                self.hits += 1;
+                Some(traj)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Store (or replace) the trajectory for `key`, evicting LRU entries to
+    /// stay within the byte budget. Trajectories larger than the whole
+    /// budget are not cached.
+    pub fn put(&mut self, key: u64, traj: Vec<f32>) {
+        let sz = traj.len() * 4;
+        if sz > self.budget_bytes {
+            return;
+        }
+        self.clock += 1;
+        if let Some((old, _)) = self.entries.remove(&key) {
+            self.used_bytes -= old.len() * 4;
+        }
+        while self.used_bytes + sz > self.budget_bytes {
+            // evict least-recently used
+            let victim = self
+                .entries
+                .iter()
+                .min_by_key(|(_, (_, last))| *last)
+                .map(|(k, _)| *k)
+                .expect("budget accounting out of sync");
+            let (old, _) = self.entries.remove(&victim).unwrap();
+            self.used_bytes -= old.len() * 4;
+        }
+        self.used_bytes += sz;
+        self.entries.insert(key, (traj, self.clock));
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_after_put() {
+        let mut c = WarmStartCache::new(1024);
+        assert!(c.get(1).is_none());
+        c.put(1, vec![1.0, 2.0]);
+        assert_eq!(c.get(1).unwrap(), &[1.0, 2.0]);
+        assert_eq!(c.hits, 1);
+        assert_eq!(c.misses, 1);
+    }
+
+    #[test]
+    fn lru_eviction() {
+        let mut c = WarmStartCache::new(100); // 25 floats
+        c.put(1, vec![0.0; 10]); // 40 B
+        c.put(2, vec![0.0; 10]); // 80 B
+        c.get(1); // make 2 the LRU
+        c.put(3, vec![0.0; 10]); // evicts 2
+        assert!(c.get(2).is_none());
+        assert!(c.get(1).is_some());
+        assert!(c.get(3).is_some());
+        assert!(c.used_bytes() <= 100);
+    }
+
+    #[test]
+    fn oversized_rejected() {
+        let mut c = WarmStartCache::new(16);
+        c.put(1, vec![0.0; 100]);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn replace_same_key_updates_bytes() {
+        let mut c = WarmStartCache::new(1000);
+        c.put(1, vec![0.0; 50]);
+        c.put(1, vec![0.0; 10]);
+        assert_eq!(c.used_bytes(), 40);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn warm_start_cuts_iterations_end_to_end() {
+        // The cache's purpose: feeding the cached trajectory back reduces
+        // Newton iterations on a re-evaluation with slightly moved params.
+        use crate::cells::{CellGrad, Gru};
+        use crate::deer::newton::{deer_rnn, DeerConfig};
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(5);
+        let mut cell: Gru<f32> = Gru::new(4, 2, &mut rng);
+        let mut xs = vec![0.0f32; 512 * 2];
+        rng.fill_normal(&mut xs, 1.0);
+        let h0 = vec![0.0f32; 4];
+        let cfg = DeerConfig::default();
+
+        let mut cache = WarmStartCache::new(1 << 20);
+        let cold = deer_rnn(&cell, &h0, &xs, None, &cfg);
+        assert!(cold.converged);
+        cache.put(42, cold.ys.clone());
+
+        // simulate a small training update
+        for p in cell.params_mut().iter_mut() {
+            *p += 1e-3;
+        }
+        let guess = cache.get(42).unwrap().to_vec();
+        let warm = deer_rnn(&cell, &h0, &xs, Some(&guess), &cfg);
+        assert!(warm.converged);
+        assert!(
+            warm.iterations < cold.iterations,
+            "warm {} vs cold {}",
+            warm.iterations,
+            cold.iterations
+        );
+    }
+}

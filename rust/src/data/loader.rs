@@ -1,0 +1,144 @@
+//! Dataset container, splits and batch iteration.
+
+use crate::util::rng::Rng;
+
+/// Split kind (the paper uses 70/15/15 for EigenWorms, App. B.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Val,
+    Test,
+}
+
+/// An in-memory sequence-classification dataset:
+/// `xs` is (rows, t, channels) flattened, `labels` is (rows,).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub xs: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub rows: usize,
+    pub t: usize,
+    pub channels: usize,
+    train_end: usize,
+    val_end: usize,
+}
+
+impl Dataset {
+    /// Wrap generated data with a 70/15/15 split.
+    pub fn new(xs: Vec<f32>, labels: Vec<i32>, t: usize, channels: usize) -> Dataset {
+        let rows = labels.len();
+        assert_eq!(xs.len(), rows * t * channels);
+        let train_end = (rows as f64 * 0.70).round() as usize;
+        let val_end = train_end + ((rows - train_end) / 2).max(usize::from(rows > train_end));
+        Dataset {
+            xs,
+            labels,
+            rows,
+            t,
+            channels,
+            train_end,
+            val_end: val_end.min(rows),
+        }
+    }
+
+    fn range(&self, split: Split) -> std::ops::Range<usize> {
+        match split {
+            Split::Train => 0..self.train_end,
+            Split::Val => self.train_end..self.val_end,
+            Split::Test => self.val_end..self.rows,
+        }
+    }
+
+    pub fn split_len(&self, split: Split) -> usize {
+        self.range(split).len()
+    }
+
+    /// Copy one row's sequence.
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.xs[i * self.t * self.channels..(i + 1) * self.t * self.channels]
+    }
+
+    /// Assemble a batch (indices are absolute row ids) → (B, t, c) flat + labels.
+    pub fn gather(&self, idx: &[usize]) -> (Vec<f32>, Vec<i32>) {
+        let mut xs = Vec::with_capacity(idx.len() * self.t * self.channels);
+        let mut labels = Vec::with_capacity(idx.len());
+        for &i in idx {
+            xs.extend_from_slice(self.row(i));
+            labels.push(self.labels[i]);
+        }
+        (xs, labels)
+    }
+
+    /// Random batch of `b` rows from a split.
+    pub fn sample_batch(&self, split: Split, b: usize, rng: &mut Rng) -> (Vec<f32>, Vec<i32>, Vec<usize>) {
+        let r = self.range(split);
+        assert!(!r.is_empty(), "empty split");
+        let idx: Vec<usize> = (0..b).map(|_| r.start + rng.below(r.len())).collect();
+        let (xs, labels) = self.gather(&idx);
+        (xs, labels, idx)
+    }
+
+    /// Deterministic batches covering a split (last partial batch dropped).
+    pub fn batches(&self, split: Split, b: usize) -> Vec<Vec<usize>> {
+        let r = self.range(split);
+        r.clone()
+            .collect::<Vec<_>>()
+            .chunks(b)
+            .filter(|c| c.len() == b)
+            .map(|c| c.to_vec())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        let rows = 20;
+        let t = 4;
+        let c = 2;
+        let xs: Vec<f32> = (0..rows * t * c).map(|i| i as f32).collect();
+        let labels: Vec<i32> = (0..rows as i32).collect();
+        Dataset::new(xs, labels, t, c)
+    }
+
+    #[test]
+    fn split_sizes_70_15_15() {
+        let d = tiny();
+        assert_eq!(d.split_len(Split::Train), 14);
+        assert_eq!(d.split_len(Split::Val), 3);
+        assert_eq!(d.split_len(Split::Test), 3);
+        assert_eq!(
+            d.split_len(Split::Train) + d.split_len(Split::Val) + d.split_len(Split::Test),
+            d.rows
+        );
+    }
+
+    #[test]
+    fn gather_layout() {
+        let d = tiny();
+        let (xs, labels) = d.gather(&[1, 3]);
+        assert_eq!(labels, vec![1, 3]);
+        assert_eq!(xs[..8], d.xs[8..16]);
+        assert_eq!(xs[8..], d.xs[24..32]);
+    }
+
+    #[test]
+    fn sample_batch_stays_in_split() {
+        let d = tiny();
+        let mut rng = Rng::new(0);
+        for _ in 0..20 {
+            let (_, _, idx) = d.sample_batch(Split::Val, 2, &mut rng);
+            assert!(idx.iter().all(|&i| (14..17).contains(&i)));
+        }
+    }
+
+    #[test]
+    fn batches_cover_split() {
+        let d = tiny();
+        let bs = d.batches(Split::Train, 4);
+        assert_eq!(bs.len(), 3); // 14 rows → 3 full batches of 4
+        assert!(bs.iter().flatten().all(|&i| i < 14));
+    }
+}

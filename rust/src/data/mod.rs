@@ -1,0 +1,17 @@
+//! Dataset substrates.
+//!
+//! The paper's experiments use datasets this environment doesn't ship
+//! (EigenWorms from UEA, CIFAR-10 from torchvision) plus a generated
+//! two-body physics dataset. Per the substitution rules, [`worms`] and
+//! [`cifar_seq`] are synthetic generators that preserve the properties the
+//! experiments exercise (sequence length, channel count, class structure,
+//! learnability by a recurrent model), and [`twobody`] implements the
+//! paper's own generated dataset (App. B.2). [`loader`] provides splits and
+//! batch iteration.
+
+pub mod cifar_seq;
+pub mod loader;
+pub mod twobody;
+pub mod worms;
+
+pub use loader::{Dataset, Split};

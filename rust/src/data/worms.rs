@@ -1,0 +1,163 @@
+//! Synthetic EigenWorms (substitute for Brown et al., 2013 / UEA).
+//!
+//! The real dataset — 259 C. elegans locomotion recordings, each 17,984
+//! samples of 6 "eigenworm" shape coefficients, 5 classes (wild-type + 4
+//! mutants) — is not available offline. This generator preserves what the
+//! §4.3 experiment exercises:
+//!
+//! * the same tensor geometry (259 × 17,984 × 6, 70/15/15 split),
+//! * class structure carried by *temporal dynamics*, not static statistics:
+//!   each class differs in undulation frequency band, inter-channel phase
+//!   coupling, and the rate of a slow amplitude-modulation envelope, so a
+//!   classifier must integrate over long horizons (the property that makes
+//!   EigenWorms a long-sequence benchmark),
+//! * matched first/second moments across classes (no trivial shortcuts).
+
+use crate::util::rng::Rng;
+
+pub const CHANNELS: usize = 6;
+pub const CLASSES: usize = 5;
+pub const FULL_LEN: usize = 17_984;
+pub const FULL_ROWS: usize = 259;
+
+/// Per-class dynamics parameters (frequency in cycles/sequence-length units).
+fn class_params(class: usize) -> (f64, f64, f64) {
+    // (base undulation freq, phase coupling, AM envelope freq)
+    match class {
+        0 => (7.0, 0.50, 0.8),
+        1 => (10.0, 0.85, 1.3),
+        2 => (13.0, 0.20, 0.5),
+        3 => (16.0, 0.65, 2.1),
+        _ => (19.0, 0.35, 1.7),
+    }
+}
+
+/// Generate one sample: `len × CHANNELS` f32, deterministic in `rng`.
+pub fn sample(class: usize, len: usize, rng: &mut Rng) -> Vec<f32> {
+    let (freq, coupling, am_freq) = class_params(class);
+    let freq = freq * rng.uniform_in(0.9, 1.1);
+    let phase0 = rng.uniform_in(0.0, std::f64::consts::TAU);
+    let am_phase = rng.uniform_in(0.0, std::f64::consts::TAU);
+    // smooth per-channel amplitude profile (eigen-shape weights)
+    let amps: Vec<f64> = (0..CHANNELS).map(|c| 1.0 / (1.0 + 0.35 * c as f64)).collect();
+    let mut out = Vec::with_capacity(len * CHANNELS);
+    // slow AR(1) drift shared across channels (worm posture baseline)
+    let mut drift = 0.0f64;
+    let rho = 0.999;
+    for i in 0..len {
+        let t = i as f64 / len as f64;
+        drift = rho * drift + 0.02 * rng.normal();
+        let env = 1.0 + 0.4 * (std::f64::consts::TAU * am_freq * t + am_phase).sin();
+        for (c, amp) in amps.iter().enumerate() {
+            let phase = phase0 + coupling * c as f64;
+            let v = amp
+                * env
+                * (std::f64::consts::TAU * freq * t + phase).sin()
+                + 0.3 * drift
+                + 0.15 * rng.normal();
+            out.push(v as f32);
+        }
+    }
+    out
+}
+
+/// Generate the full dataset: (rows, len, CHANNELS) flattened + labels,
+/// classes assigned round-robin then shuffled (class-balanced like UEA).
+pub fn generate(rows: usize, len: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
+    let mut rng = Rng::new(seed);
+    let order = rng.permutation(rows);
+    let mut xs = vec![0.0f32; rows * len * CHANNELS];
+    let mut labels = vec![0i32; rows];
+    for (slot, &row) in order.iter().enumerate() {
+        let class = slot % CLASSES;
+        let mut srng = rng.split();
+        let s = sample(class, len, &mut srng);
+        xs[row * len * CHANNELS..(row + 1) * len * CHANNELS].copy_from_slice(&s);
+        labels[row] = class as i32;
+    }
+    (xs, labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_balance() {
+        let (xs, labels) = generate(20, 64, 1);
+        assert_eq!(xs.len(), 20 * 64 * CHANNELS);
+        assert_eq!(labels.len(), 20);
+        let mut counts = [0usize; CLASSES];
+        for &l in &labels {
+            counts[l as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 4));
+    }
+
+    #[test]
+    fn deterministic() {
+        let (a, la) = generate(5, 32, 42);
+        let (b, lb) = generate(5, 32, 42);
+        assert_eq!(a, b);
+        assert_eq!(la, lb);
+    }
+
+    #[test]
+    fn values_bounded_and_varied() {
+        let (xs, _) = generate(4, 256, 7);
+        assert!(xs.iter().all(|v| v.is_finite() && v.abs() < 10.0));
+        let mean: f32 = xs.iter().sum::<f32>() / xs.len() as f32;
+        let var: f32 = xs.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / xs.len() as f32;
+        assert!(var > 0.05, "variance {var}");
+    }
+
+    #[test]
+    fn classes_not_separable_by_mean() {
+        // The class signal is temporal; per-sample means must overlap.
+        let len = 512;
+        let mut rng = Rng::new(3);
+        let mut means = vec![];
+        for class in 0..CLASSES {
+            let s = sample(class, len, &mut rng);
+            means.push(s.iter().sum::<f32>() / s.len() as f32);
+        }
+        let spread = means.iter().cloned().fold(f32::MIN, f32::max)
+            - means.iter().cloned().fold(f32::MAX, f32::min);
+        assert!(spread < 0.5, "class means too separated: {means:?}");
+    }
+
+    #[test]
+    fn classes_differ_in_spectrum() {
+        // Matched filter: the spectral power of channel 0 at a class's own
+        // base frequency must exceed its power at the other class's band.
+        let len = 2048;
+        let power_at = |sig: &[f32], freq: f64| -> f64 {
+            let (mut ps, mut pc) = (0.0f64, 0.0f64);
+            for (i, &v) in sig.iter().enumerate() {
+                let ph = std::f64::consts::TAU * freq * i as f64 / len as f64;
+                ps += v as f64 * ph.sin();
+                pc += v as f64 * ph.cos();
+            }
+            ps * ps + pc * pc
+        };
+        let ch0 = |class: usize, seed: u64| -> Vec<f32> {
+            let mut rng = Rng::new(seed);
+            sample(class, len, &mut rng).chunks(CHANNELS).map(|c| c[0]).collect()
+        };
+        // freq bands (±10% jitter in the generator → integrate over a window)
+        let band = |sig: &[f32], f0: f64| -> f64 {
+            (-2..=2).map(|k| power_at(sig, f0 + k as f64 * 0.5)).sum()
+        };
+        let (f_lo, _, _) = class_params(0);
+        let (f_hi, _, _) = class_params(4);
+        let mut own = 0.0;
+        let mut cross = 0.0;
+        for seed in 0..4 {
+            let s0 = ch0(0, seed);
+            let s4 = ch0(4, 100 + seed);
+            own += band(&s0, f_lo) + band(&s4, f_hi);
+            cross += band(&s0, f_hi) + band(&s4, f_lo);
+        }
+        assert!(own > 4.0 * cross, "own-band power {own} vs cross-band {cross}");
+    }
+}

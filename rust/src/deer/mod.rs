@@ -1,0 +1,25 @@
+//! The DEER algorithm (paper §3) and its baselines.
+//!
+//! * [`newton`] — DEER forward evaluation of an RNN: the quadratically
+//!   convergent fixed-point iteration of eqs. (3)+(5), with the inverse
+//!   linear operator realized by the affine prefix scan (eq. 11).
+//! * [`grad`] — the DEER backward pass (eq. 7): **one** dual `L_G⁻¹`
+//!   application + an embarrassingly parallel parameter VJP reduction.
+//! * [`seq`] — the sequential baselines: step-by-step forward evaluation and
+//!   BPTT, the "commonly-used sequential method" of §4.1.
+//! * [`ode`] — DEER-ODE (eqs. 8–10) with midpoint / left / right
+//!   interpolation (App. A.5/A.6, Table 3).
+//! * [`rk45`] — Dormand–Prince adaptive Runge–Kutta, the paper's NeuralODE
+//!   training baseline (§4.2).
+
+pub mod grad;
+pub mod newton;
+pub mod ode;
+pub mod rk45;
+pub mod seq;
+
+pub use grad::{deer_rnn_backward, GradResult};
+pub use newton::{deer_rnn, DeerConfig, DeerResult};
+pub use ode::{deer_ode, Interp, OdeDeerResult, OdeSystem};
+pub use rk45::{rk45_solve, Rk45Options};
+pub use seq::{seq_rnn, seq_rnn_backward};

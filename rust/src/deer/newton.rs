@@ -1,0 +1,391 @@
+//! DEER forward evaluation of non-linear recurrences (paper §3.1, §3.4).
+//!
+//! Given `y_i = f(y_{i−1}, x_i, θ)`, each Newton step linearises `f` around
+//! the current trajectory guess and solves the resulting linear recurrence
+//! exactly with a prefix scan:
+//!
+//! ```text
+//! J_i  = ∂f/∂y (y^{(k)}_{i−1}, x_i)            (G_i = −J_i, eq. 5)
+//! b_i  = f(y^{(k)}_{i−1}, x_i) − J_i y^{(k)}_{i−1}
+//! y^{(k+1)}_i = J_i y^{(k+1)}_{i−1} + b_i      (eq. 3 / eq. 11, the scan)
+//! ```
+//!
+//! Convergence is quadratic (App. A.3); iteration stops when
+//! `max|y^{(k+1)} − y^{(k)}| < tol` (App. B.1) or `max_iter` is hit.
+//!
+//! The three instrumented phases mirror the paper's Table 5 profile labels:
+//! `FUNCEVAL` (f + Jacobian), `GTMULT` (building b), `INVLIN` (the scan).
+
+use crate::cells::Cell;
+use crate::scan::par::par_scan_apply;
+use crate::util::scalar::Scalar;
+use crate::util::timer::PhaseProfile;
+
+/// Configuration of the DEER iteration.
+#[derive(Debug, Clone)]
+pub struct DeerConfig<S> {
+    /// Convergence tolerance on the max-abs trajectory update. Paper default
+    /// (§3.5): 1e-4 for f32, 1e-7 for f64.
+    pub tol: S,
+    /// Iteration cap (App. B.1 uses 100).
+    pub max_iter: usize,
+    /// Worker threads for the parallel phases (accelerator-lane model).
+    pub threads: usize,
+    /// Abort early if the error grows this many consecutive iterations
+    /// (Newton divergence guard; §3.5 discusses the far-from-solution case).
+    pub divergence_patience: usize,
+}
+
+impl<S: Scalar> Default for DeerConfig<S> {
+    fn default() -> Self {
+        DeerConfig {
+            tol: S::default_tol(),
+            max_iter: 100,
+            threads: 1,
+            divergence_patience: 8,
+        }
+    }
+}
+
+/// Output of a DEER forward evaluation.
+#[derive(Debug, Clone)]
+pub struct DeerResult<S> {
+    /// Converged trajectory, length `T·n` (`y_1 … y_T`).
+    pub ys: Vec<S>,
+    /// Newton iterations executed.
+    pub iterations: usize,
+    /// Whether the tolerance was met.
+    pub converged: bool,
+    /// Max-abs update per iteration (convergence trace; Fig. 6 data).
+    pub err_trace: Vec<f64>,
+    /// Final per-step Jacobians (`T·n·n`) — reusable by the backward pass
+    /// (the paper's memory/speed trade-off of §3.1.1).
+    pub jacobians: Vec<S>,
+    /// Phase timings (FUNCEVAL / GTMULT / INVLIN; Table 5).
+    pub profile: PhaseProfile,
+}
+
+/// Evaluate an RNN with DEER.
+///
+/// * `h0` — initial state (length n).
+/// * `xs` — inputs, length `T·m`.
+/// * `init_guess` — optional warm-start trajectory (`T·n`), e.g. the previous
+///   training step's solution (App. B.2); zeros otherwise (the paper's
+///   benchmark setting).
+pub fn deer_rnn<S: Scalar, C: Cell<S>>(
+    cell: &C,
+    h0: &[S],
+    xs: &[S],
+    init_guess: Option<&[S]>,
+    cfg: &DeerConfig<S>,
+) -> DeerResult<S> {
+    let n = cell.state_dim();
+    let m = cell.input_dim();
+    assert_eq!(h0.len(), n, "h0 dim");
+    assert_eq!(xs.len() % m, 0, "xs layout");
+    let t_len = xs.len() / m;
+
+    let mut yt: Vec<S> = match init_guess {
+        Some(g) => {
+            assert_eq!(g.len(), t_len * n);
+            g.to_vec()
+        }
+        None => vec![S::zero(); t_len * n],
+    };
+
+    let mut jac = vec![S::zero(); t_len * n * n];
+    let mut rhs = vec![S::zero(); t_len * n];
+    let mut y_next = vec![S::zero(); t_len * n];
+
+    // §Perf: input projections are invariant across Newton iterations —
+    // compute them once here instead of inside every FUNCEVAL pass.
+    let pre_len = cell.x_precompute_len();
+    let mut pre = vec![S::zero(); t_len * pre_len];
+    if pre_len > 0 {
+        cell.precompute_x(xs, &mut pre);
+    }
+    let mut profile = PhaseProfile::new();
+    let mut err_trace = Vec::new();
+    let mut converged = false;
+    let mut iterations = 0;
+    let mut grow_streak = 0usize;
+    let mut prev_err = f64::INFINITY;
+
+    for _ in 0..cfg.max_iter {
+        iterations += 1;
+
+        // FUNCEVAL: f and Jacobian at every step (parallel over chunks).
+        profile.record("FUNCEVAL", || {
+            eval_f_jac(
+                cell,
+                h0,
+                xs,
+                &pre,
+                &yt,
+                &mut rhs,
+                &mut jac,
+                cfg.threads,
+                n,
+                m,
+                t_len,
+            );
+        });
+
+        // GTMULT: b_i = f_i − J_i·y_{i−1}  (rhs currently holds f_i).
+        profile.record("GTMULT", || {
+            build_rhs(&jac, h0, &yt, &mut rhs, n, t_len);
+        });
+
+        // INVLIN: the prefix scan y_i = J_i y_{i−1} + b_i.
+        profile.record("INVLIN", || {
+            par_scan_apply(&jac, &rhs, h0, &mut y_next, n, t_len, cfg.threads);
+        });
+
+        let err = crate::linalg::max_abs_diff(&yt, &y_next).to_f64c();
+        err_trace.push(err);
+        std::mem::swap(&mut yt, &mut y_next);
+
+        if !err.is_finite() {
+            break; // diverged to NaN/inf
+        }
+        if err < cfg.tol.to_f64c() {
+            converged = true;
+            break;
+        }
+        if err > prev_err {
+            grow_streak += 1;
+            if grow_streak >= cfg.divergence_patience {
+                break;
+            }
+        } else {
+            grow_streak = 0;
+        }
+        prev_err = err;
+    }
+
+    DeerResult {
+        ys: yt,
+        iterations,
+        converged,
+        err_trace,
+        jacobians: jac,
+        profile,
+    }
+}
+
+/// Evaluate `f` and `∂f/∂y` along the trajectory guess, chunked over threads.
+/// On exit `rhs[i] = f(y_{i−1}, x_i)` and `jac[i] = ∂f/∂y(y_{i−1}, x_i)`.
+#[allow(clippy::too_many_arguments)]
+fn eval_f_jac<S: Scalar, C: Cell<S>>(
+    cell: &C,
+    h0: &[S],
+    xs: &[S],
+    pre: &[S],
+    yt: &[S],
+    rhs: &mut [S],
+    jac: &mut [S],
+    threads: usize,
+    n: usize,
+    m: usize,
+    t_len: usize,
+) {
+    let nn = n * n;
+    let pre_len = cell.x_precompute_len();
+    let work = |range: std::ops::Range<usize>, rhs_c: &mut [S], jac_c: &mut [S]| {
+        let mut ws = vec![S::zero(); cell.ws_len()];
+        for (k, i) in range.enumerate() {
+            let h_prev = if i == 0 { h0 } else { &yt[(i - 1) * n..i * n] };
+            if pre_len > 0 {
+                cell.jacobian_pre(
+                    h_prev,
+                    &pre[i * pre_len..(i + 1) * pre_len],
+                    &mut rhs_c[k * n..(k + 1) * n],
+                    &mut jac_c[k * nn..(k + 1) * nn],
+                    &mut ws,
+                );
+            } else {
+                let x = &xs[i * m..(i + 1) * m];
+                cell.jacobian(
+                    h_prev,
+                    x,
+                    &mut rhs_c[k * n..(k + 1) * n],
+                    &mut jac_c[k * nn..(k + 1) * nn],
+                    &mut ws,
+                );
+            }
+        }
+    };
+
+    if threads <= 1 || t_len < 4 * threads {
+        work(0..t_len, rhs, jac);
+        return;
+    }
+    let chunk_len = t_len.div_ceil(threads);
+    let mut rhs_chunks: Vec<&mut [S]> = rhs.chunks_mut(chunk_len * n).collect();
+    let mut jac_chunks: Vec<&mut [S]> = jac.chunks_mut(chunk_len * nn).collect();
+    crossbeam_utils::thread::scope(|scope| {
+        for (c, (rhs_c, jac_c)) in rhs_chunks
+            .drain(..)
+            .zip(jac_chunks.drain(..))
+            .enumerate()
+        {
+            let lo = c * chunk_len;
+            let hi = ((c + 1) * chunk_len).min(t_len);
+            scope.spawn(move |_| work(lo..hi, rhs_c, jac_c));
+        }
+    })
+    .expect("FUNCEVAL worker panicked");
+}
+
+/// `rhs[i] ← rhs[i] − J_i · y_{i−1}` in place (rhs holds f on entry).
+fn build_rhs<S: Scalar>(jac: &[S], h0: &[S], yt: &[S], rhs: &mut [S], n: usize, t_len: usize) {
+    let nn = n * n;
+    let mut tmp = vec![S::zero(); n];
+    for i in 0..t_len {
+        let h_prev = if i == 0 { h0 } else { &yt[(i - 1) * n..i * n] };
+        crate::linalg::matvec(&jac[i * nn..(i + 1) * nn], h_prev, &mut tmp);
+        let r = &mut rhs[i * n..(i + 1) * n];
+        for j in 0..n {
+            r[j] -= tmp[j];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::{Elman, Gru};
+    use crate::deer::seq::seq_rnn;
+    use crate::util::rng::Rng;
+
+    fn random_inputs(m: usize, t: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        let mut xs = vec![0.0; t * m];
+        rng.fill_normal(&mut xs, 1.0);
+        xs
+    }
+
+    #[test]
+    fn matches_sequential_elman() {
+        let mut rng = Rng::new(42);
+        let (n, m, t) = (3, 2, 200);
+        let cell: Elman<f64> = Elman::new(n, m, &mut rng);
+        let xs = random_inputs(m, t, 1);
+        let h0 = vec![0.0; n];
+        let seq = seq_rnn(&cell, &h0, &xs);
+        let res = deer_rnn(&cell, &h0, &xs, None, &DeerConfig::default());
+        assert!(res.converged, "iterations: {:?}", res.err_trace);
+        let diff = crate::linalg::max_abs_diff(&seq, &res.ys);
+        assert!(diff < 1e-7, "max diff {diff}");
+    }
+
+    #[test]
+    fn matches_sequential_gru_long() {
+        let mut rng = Rng::new(43);
+        let (n, m, t) = (4, 3, 2000);
+        let cell: Gru<f64> = Gru::new(n, m, &mut rng);
+        let xs = random_inputs(m, t, 2);
+        let h0 = vec![0.0; n];
+        let seq = seq_rnn(&cell, &h0, &xs);
+        let res = deer_rnn(&cell, &h0, &xs, None, &DeerConfig::default());
+        assert!(res.converged);
+        let diff = crate::linalg::max_abs_diff(&seq, &res.ys);
+        assert!(diff < 1e-6, "max diff {diff}");
+    }
+
+    #[test]
+    fn f32_tolerance_converges() {
+        let mut rng = Rng::new(44);
+        let (n, m, t) = (2, 2, 500);
+        let cell: Gru<f32> = Gru::new(n, m, &mut rng);
+        let mut xs = vec![0.0f32; t * m];
+        rng.fill_normal(&mut xs, 1.0);
+        let h0 = vec![0.0f32; n];
+        let res = deer_rnn(&cell, &h0, &xs, None, &DeerConfig::default());
+        assert!(res.converged);
+        let seq = seq_rnn(&cell, &h0, &xs);
+        let diff = crate::linalg::max_abs_diff(&seq, &res.ys);
+        assert!(diff < 1e-3, "max diff {diff}");
+    }
+
+    #[test]
+    fn quadratic_convergence_tail() {
+        // Near the solution the error should square each iteration:
+        // err_{k+1} ≲ C·err_k² — check the last meaningful step at least
+        // super-linear: err_{k+1} < err_k^1.5 once err_k < 1e-2.
+        let mut rng = Rng::new(45);
+        let cell: Gru<f64> = Gru::new(3, 2, &mut rng);
+        let xs = random_inputs(2, 300, 3);
+        let res = deer_rnn(&cell, &vec![0.0; 3], &xs, None, &DeerConfig::default());
+        assert!(res.converged);
+        let tr = &res.err_trace;
+        let mut checked = false;
+        for w in tr.windows(2) {
+            if w[0] < 1e-2 && w[0] > 1e-12 && w[1] > 0.0 {
+                assert!(
+                    w[1] < w[0].powf(1.5),
+                    "not quadratic: {} -> {}, trace {:?}",
+                    w[0],
+                    w[1],
+                    tr
+                );
+                checked = true;
+            }
+        }
+        assert!(checked, "trace never entered the quadratic regime: {tr:?}");
+    }
+
+    #[test]
+    fn warm_start_reduces_iterations() {
+        let mut rng = Rng::new(46);
+        let cell: Gru<f64> = Gru::new(4, 2, &mut rng);
+        let xs = random_inputs(2, 1000, 4);
+        let h0 = vec![0.0; 4];
+        let cold = deer_rnn(&cell, &h0, &xs, None, &DeerConfig::default());
+        assert!(cold.converged);
+        // warm start = exact solution → ≤ 2 iterations (one to verify)
+        let warm = deer_rnn(&cell, &h0, &xs, Some(&cold.ys), &DeerConfig::default());
+        assert!(warm.converged);
+        assert!(
+            warm.iterations < cold.iterations,
+            "warm {} vs cold {}",
+            warm.iterations,
+            cold.iterations
+        );
+        assert!(warm.iterations <= 2);
+    }
+
+    #[test]
+    fn threads_do_not_change_result() {
+        let mut rng = Rng::new(47);
+        let cell: Gru<f64> = Gru::new(3, 2, &mut rng);
+        let xs = random_inputs(2, 500, 5);
+        let h0 = vec![0.0; 3];
+        let r1 = deer_rnn(&cell, &h0, &xs, None, &DeerConfig { threads: 1, ..Default::default() });
+        let r4 = deer_rnn(&cell, &h0, &xs, None, &DeerConfig { threads: 4, ..Default::default() });
+        let diff = crate::linalg::max_abs_diff(&r1.ys, &r4.ys);
+        assert!(diff < 1e-9, "thread count changed numerics: {diff}");
+    }
+
+    #[test]
+    fn profile_has_all_phases() {
+        let mut rng = Rng::new(48);
+        let cell: Elman<f64> = Elman::new(2, 1, &mut rng);
+        let xs = random_inputs(1, 100, 6);
+        let res = deer_rnn(&cell, &vec![0.0; 2], &xs, None, &DeerConfig::default());
+        for phase in ["FUNCEVAL", "GTMULT", "INVLIN"] {
+            assert!(res.profile.get(phase) > 0.0, "missing {phase}");
+        }
+    }
+
+    #[test]
+    fn max_iter_respected() {
+        let mut rng = Rng::new(49);
+        let cell: Gru<f64> = Gru::new(2, 2, &mut rng);
+        let xs = random_inputs(2, 50, 7);
+        let cfg = DeerConfig { max_iter: 1, ..Default::default() };
+        let res = deer_rnn(&cell, &vec![0.0; 2], &xs, None, &cfg);
+        assert_eq!(res.iterations, 1);
+        assert!(!res.converged);
+    }
+}

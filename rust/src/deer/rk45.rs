@@ -1,0 +1,290 @@
+//! Dormand–Prince RK45 — the adaptive sequential ODE solver the paper uses
+//! as the NeuralODE training baseline (§4.2, "RK45 from JAX's experimental
+//! feature"). Implemented with dense output at requested sample times via
+//! the 4th-order interpolant.
+
+use super::ode::OdeSystem;
+use crate::util::scalar::Scalar;
+
+/// RK45 options.
+#[derive(Debug, Clone)]
+pub struct Rk45Options {
+    pub rtol: f64,
+    pub atol: f64,
+    pub max_steps: usize,
+    /// Initial step size (relative to span) — adapted afterwards.
+    pub h0_frac: f64,
+}
+
+impl Default for Rk45Options {
+    fn default() -> Self {
+        Rk45Options {
+            rtol: 1e-6,
+            atol: 1e-9,
+            max_steps: 1_000_000,
+            h0_frac: 1e-3,
+        }
+    }
+}
+
+// Dormand–Prince 5(4) Butcher tableau.
+const C: [f64; 7] = [0.0, 1.0 / 5.0, 3.0 / 10.0, 4.0 / 5.0, 8.0 / 9.0, 1.0, 1.0];
+const A: [[f64; 6]; 7] = [
+    [0.0, 0.0, 0.0, 0.0, 0.0, 0.0],
+    [1.0 / 5.0, 0.0, 0.0, 0.0, 0.0, 0.0],
+    [3.0 / 40.0, 9.0 / 40.0, 0.0, 0.0, 0.0, 0.0],
+    [44.0 / 45.0, -56.0 / 15.0, 32.0 / 9.0, 0.0, 0.0, 0.0],
+    [
+        19372.0 / 6561.0,
+        -25360.0 / 2187.0,
+        64448.0 / 6561.0,
+        -212.0 / 729.0,
+        0.0,
+        0.0,
+    ],
+    [
+        9017.0 / 3168.0,
+        -355.0 / 33.0,
+        46732.0 / 5247.0,
+        49.0 / 176.0,
+        -5103.0 / 18656.0,
+        0.0,
+    ],
+    [
+        35.0 / 384.0,
+        0.0,
+        500.0 / 1113.0,
+        125.0 / 192.0,
+        -2187.0 / 6784.0,
+        11.0 / 84.0,
+    ],
+];
+// 5th order solution weights (same as A[6]).
+const B5: [f64; 7] = [
+    35.0 / 384.0,
+    0.0,
+    500.0 / 1113.0,
+    125.0 / 192.0,
+    -2187.0 / 6784.0,
+    11.0 / 84.0,
+    0.0,
+];
+// 4th order (embedded) weights.
+const B4: [f64; 7] = [
+    5179.0 / 57600.0,
+    0.0,
+    7571.0 / 16695.0,
+    393.0 / 640.0,
+    -92097.0 / 339200.0,
+    187.0 / 2100.0,
+    1.0 / 40.0,
+];
+
+/// Solve `dy/dt = f(t, y)` from `ts[0]` and return the solution at every
+/// requested time in `ts` (flat `L·n`). Also returns the number of accepted
+/// integrator steps and total `f` evaluations (the sequential-depth cost).
+pub fn rk45_solve<S: Scalar, Sys: OdeSystem<S>>(
+    sys: &Sys,
+    ts: &[S],
+    y0: &[S],
+    opts: &Rk45Options,
+) -> Result<(Vec<S>, usize, usize), String> {
+    let n = sys.dim();
+    let l = ts.len();
+    assert!(l >= 1);
+    let mut out = vec![S::zero(); l * n];
+    out[..n].copy_from_slice(y0);
+    if l == 1 {
+        return Ok((out, 0, 0));
+    }
+
+    let t_end = ts[l - 1].to_f64c();
+    let t_start = ts[0].to_f64c();
+    let span = t_end - t_start;
+    let mut t = t_start;
+    let mut y: Vec<f64> = y0.iter().map(|v| v.to_f64c()).collect();
+    let mut h = span * opts.h0_frac;
+    let mut next_out = 1usize;
+    let mut k = vec![vec![0.0f64; n]; 7];
+    let mut ytmp = vec![0.0f64; n];
+    let mut y5 = vec![0.0f64; n];
+    let mut y4 = vec![0.0f64; n];
+    let mut steps = 0usize;
+    let mut fevals = 0usize;
+
+    let eval = |t: f64, y: &[f64], out: &mut [f64], fevals: &mut usize| {
+        let ys: Vec<S> = y.iter().map(|&v| S::from_f64c(v)).collect();
+        let mut fo = vec![S::zero(); n];
+        sys.f(S::from_f64c(t), &ys, &mut fo);
+        for (o, v) in out.iter_mut().zip(fo.iter()) {
+            *o = v.to_f64c();
+        }
+        *fevals += 1;
+    };
+
+    // FSAL: k[0] at current point.
+    eval(t, &y, &mut k[0], &mut fevals);
+
+    while next_out < l {
+        if steps >= opts.max_steps {
+            return Err(format!("rk45: exceeded {} steps at t={t}", opts.max_steps));
+        }
+        // Never step past the next requested output: endpoints then land
+        // exactly on sample times, so no dense-interpolation error enters the
+        // reported trajectory (this mirrors how the paper's baseline samples
+        // the NeuralODE at every training time point).
+        let h_full = h;
+        let next_t = ts[next_out].to_f64c();
+        if t + h > next_t {
+            h = next_t - t;
+        }
+        if t + h > t_end {
+            h = t_end - t;
+        }
+        // stages
+        for s in 1..7 {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for (q, kq) in k.iter().enumerate().take(s) {
+                    let a = A[s][q];
+                    if a != 0.0 {
+                        acc += a * kq[j];
+                    }
+                }
+                ytmp[j] = y[j] + h * acc;
+            }
+            let kslice = &mut k[s] as *mut Vec<f64>;
+            // SAFETY: s-th stage only reads k[0..s], writes k[s].
+            unsafe {
+                eval(t + C[s] * h, &ytmp, &mut *kslice, &mut fevals);
+            }
+        }
+        // 5th and 4th order estimates
+        let mut err_norm: f64 = 0.0;
+        for j in 0..n {
+            let mut acc5 = 0.0;
+            let mut acc4 = 0.0;
+            for q in 0..7 {
+                acc5 += B5[q] * k[q][j];
+                acc4 += B4[q] * k[q][j];
+            }
+            y5[j] = y[j] + h * acc5;
+            y4[j] = y[j] + h * acc4;
+            let sc = opts.atol + opts.rtol * y[j].abs().max(y5[j].abs());
+            let e = (y5[j] - y4[j]) / sc;
+            err_norm += e * e;
+        }
+        err_norm = (err_norm / n as f64).sqrt();
+
+        if err_norm <= 1.0 {
+            // accept; dense output via cubic Hermite on [t, t+h]
+            let t_new = t + h;
+            while next_out < l && ts[next_out].to_f64c() <= t_new + 1e-14 {
+                let tq = ts[next_out].to_f64c();
+                let theta = if h.abs() > 0.0 { (tq - t) / h } else { 1.0 };
+                // Hermite with endpoint derivatives k[0] (at t) and k[6]≈f(t+h,y5)
+                let h00 = (1.0 + 2.0 * theta) * (1.0 - theta) * (1.0 - theta);
+                let h10 = theta * (1.0 - theta) * (1.0 - theta);
+                let h01 = theta * theta * (3.0 - 2.0 * theta);
+                let h11 = theta * theta * (theta - 1.0);
+                for j in 0..n {
+                    let v = h00 * y[j] + h10 * h * k[0][j] + h01 * y5[j] + h11 * h * k[6][j];
+                    out[next_out * n + j] = S::from_f64c(v);
+                }
+                next_out += 1;
+            }
+            t = t_new;
+            y.copy_from_slice(&y5);
+            let k6 = k[6].clone();
+            k[0].copy_from_slice(&k6); // FSAL
+            steps += 1;
+        }
+        // step-size update (from the un-clamped step)
+        let factor = if err_norm > 0.0 {
+            (0.9 * err_norm.powf(-0.2)).clamp(0.2, 5.0)
+        } else {
+            5.0
+        };
+        h = h_full * factor;
+        if h.abs() < 1e-14 * span.abs() {
+            return Err(format!("rk45: step underflow at t={t}"));
+        }
+    }
+
+    Ok((out, steps, fevals))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Decay;
+    impl OdeSystem<f64> for Decay {
+        fn dim(&self) -> usize {
+            1
+        }
+        fn f(&self, _t: f64, y: &[f64], out: &mut [f64]) {
+            out[0] = -y[0];
+        }
+        fn jac(&self, _t: f64, _y: &[f64], out: &mut [f64]) {
+            out[0] = -1.0;
+        }
+    }
+
+    struct Oscillator;
+    impl OdeSystem<f64> for Oscillator {
+        fn dim(&self) -> usize {
+            2
+        }
+        fn f(&self, _t: f64, y: &[f64], out: &mut [f64]) {
+            out[0] = y[1];
+            out[1] = -y[0];
+        }
+        fn jac(&self, _t: f64, _y: &[f64], out: &mut [f64]) {
+            out.copy_from_slice(&[0.0, 1.0, -1.0, 0.0]);
+        }
+    }
+
+    #[test]
+    fn exponential_decay_accurate() {
+        let ts: Vec<f64> = (0..101).map(|i| i as f64 * 0.05).collect();
+        let (ys, steps, fevals) = rk45_solve(&Decay, &ts, &[1.0], &Rk45Options::default()).unwrap();
+        for (i, &t) in ts.iter().enumerate() {
+            assert!((ys[i] - (-t).exp()).abs() < 1e-6, "t={t}");
+        }
+        assert!(steps > 0);
+        assert!(fevals >= 6 * steps);
+    }
+
+    #[test]
+    fn oscillator_period() {
+        let tau = 2.0 * std::f64::consts::PI;
+        let ts: Vec<f64> = (0..201).map(|i| tau * i as f64 / 200.0).collect();
+        let (ys, _, _) = rk45_solve(&Oscillator, &ts, &[1.0, 0.0], &Rk45Options::default()).unwrap();
+        let last = &ys[200 * 2..];
+        assert!((last[0] - 1.0).abs() < 1e-5);
+        assert!(last[1].abs() < 1e-5);
+    }
+
+    #[test]
+    fn tighter_tolerance_costs_more_fevals() {
+        let ts: Vec<f64> = (0..11).map(|i| i as f64 * 0.5).collect();
+        let loose = Rk45Options { rtol: 1e-3, atol: 1e-6, ..Default::default() };
+        let tight = Rk45Options { rtol: 1e-10, atol: 1e-12, ..Default::default() };
+        let (_, _, f_loose) = rk45_solve(&Oscillator, &ts, &[1.0, 0.0], &loose).unwrap();
+        let (_, _, f_tight) = rk45_solve(&Oscillator, &ts, &[1.0, 0.0], &tight).unwrap();
+        assert!(f_tight > f_loose);
+    }
+
+    #[test]
+    fn deer_and_rk45_agree() {
+        use crate::deer::ode::{deer_ode, Interp};
+        use crate::deer::newton::DeerConfig;
+        let ts: Vec<f64> = (0..401).map(|i| i as f64 * 0.01).collect();
+        let (rk, _, _) = rk45_solve(&Oscillator, &ts, &[1.0, 0.0], &Rk45Options::default()).unwrap();
+        let de = deer_ode(&Oscillator, &ts, &[1.0, 0.0], None, Interp::Midpoint, &DeerConfig::default());
+        assert!(de.converged);
+        let diff = crate::linalg::max_abs_diff(&rk, &de.ys);
+        assert!(diff < 5e-4, "max diff {diff}");
+    }
+}

@@ -1,0 +1,144 @@
+//! Sequential baselines — the "commonly-used sequential method" the paper
+//! benchmarks DEER against (§4.1): step-by-step forward evaluation and
+//! backpropagation-through-time.
+
+use crate::cells::{Cell, CellGrad};
+use crate::util::scalar::Scalar;
+
+/// Sequential forward evaluation: `y_i = f(y_{i−1}, x_i)`; returns `T·n`.
+pub fn seq_rnn<S: Scalar, C: Cell<S>>(cell: &C, h0: &[S], xs: &[S]) -> Vec<S> {
+    let n = cell.state_dim();
+    let m = cell.input_dim();
+    let t_len = xs.len() / m;
+    let mut out = vec![S::zero(); t_len * n];
+    let mut ws = vec![S::zero(); cell.ws_len()];
+    let mut prev = h0.to_vec();
+    let mut cur = vec![S::zero(); n];
+    for i in 0..t_len {
+        cell.step(&prev, &xs[i * m..(i + 1) * m], &mut cur, &mut ws);
+        out[i * n..(i + 1) * n].copy_from_slice(&cur);
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    out
+}
+
+/// BPTT: given the forward trajectory `ys` (`T·n`) and the loss cotangent
+/// `gs = ∂L/∂y_i` (`T·n`), accumulate `dtheta` and return `∂L/∂h0`.
+pub fn seq_rnn_backward<S: Scalar, C: CellGrad<S>>(
+    cell: &C,
+    h0: &[S],
+    xs: &[S],
+    ys: &[S],
+    gs: &[S],
+    dtheta: &mut [S],
+) -> Vec<S> {
+    let n = cell.state_dim();
+    let m = cell.input_dim();
+    let t_len = xs.len() / m;
+    assert_eq!(ys.len(), t_len * n);
+    assert_eq!(gs.len(), t_len * n);
+    assert_eq!(dtheta.len(), cell.num_params());
+
+    let mut ws = vec![S::zero(); cell.ws_len()];
+    let mut lam = gs[(t_len - 1) * n..].to_vec();
+    let mut dh_prev = vec![S::zero(); n];
+    for i in (0..t_len).rev() {
+        let h_prev = if i == 0 { h0 } else { &ys[(i - 1) * n..i * n] };
+        let x = &xs[i * m..(i + 1) * m];
+        for v in dh_prev.iter_mut() {
+            *v = S::zero();
+        }
+        cell.vjp_step(h_prev, x, &lam, &mut dh_prev, None, dtheta, &mut ws);
+        if i > 0 {
+            for j in 0..n {
+                lam[j] = gs[(i - 1) * n + j] + dh_prev[j];
+            }
+        }
+    }
+    dh_prev
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::{Elman, Gru};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn forward_shapes() {
+        let mut rng = Rng::new(1);
+        let cell: Gru<f64> = Gru::new(3, 2, &mut rng);
+        let xs = vec![0.5; 10 * 2];
+        let ys = seq_rnn(&cell, &[0.0, 0.0, 0.0], &xs);
+        assert_eq!(ys.len(), 30);
+    }
+
+    #[test]
+    fn bptt_matches_finite_difference_loss_grad() {
+        // L = Σ_i w·y_i ; check dL/dθ for a few random parameters.
+        let mut rng = Rng::new(2);
+        let (n, m, t) = (3usize, 2usize, 12usize);
+        let cell: Elman<f64> = Elman::new(n, m, &mut rng);
+        let mut xs = vec![0.0; t * m];
+        rng.fill_normal(&mut xs, 1.0);
+        let h0 = vec![0.1, -0.2, 0.3];
+        let mut w = vec![0.0; t * n];
+        rng.fill_normal(&mut w, 1.0);
+
+        let loss = |c: &Elman<f64>| -> f64 {
+            let ys = seq_rnn(c, &h0, &xs);
+            ys.iter().zip(w.iter()).map(|(y, wi)| y * wi).sum()
+        };
+
+        let ys = seq_rnn(&cell, &h0, &xs);
+        let mut dtheta = vec![0.0; cell.num_params()];
+        seq_rnn_backward(&cell, &h0, &xs, &ys, &w, &mut dtheta);
+
+        let mut idx_rng = Rng::new(99);
+        let eps = 1e-6;
+        for _ in 0..12 {
+            let j = idx_rng.below(cell.num_params());
+            let mut cp = cell.clone();
+            let mut cm = cell.clone();
+            cp.params_mut()[j] += eps;
+            cm.params_mut()[j] -= eps;
+            let fd = (loss(&cp) - loss(&cm)) / (2.0 * eps);
+            assert!(
+                (dtheta[j] - fd).abs() < 1e-5 * (1.0 + fd.abs()),
+                "param {j}: bptt {} vs fd {fd}",
+                dtheta[j]
+            );
+        }
+    }
+
+    #[test]
+    fn bptt_h0_gradient() {
+        let mut rng = Rng::new(3);
+        let (n, m, t) = (2usize, 1usize, 8usize);
+        let cell: Gru<f64> = Gru::new(n, m, &mut rng);
+        let mut xs = vec![0.0; t * m];
+        rng.fill_normal(&mut xs, 1.0);
+        let h0 = vec![0.3, -0.4];
+        let mut w = vec![0.0; t * n];
+        rng.fill_normal(&mut w, 1.0);
+
+        let loss = |h0: &[f64]| -> f64 {
+            let ys = seq_rnn(&cell, h0, &xs);
+            ys.iter().zip(w.iter()).map(|(y, wi)| y * wi).sum()
+        };
+
+        let ys = seq_rnn(&cell, &h0, &xs);
+        let mut dtheta = vec![0.0; cell.num_params()];
+        let dh0 = seq_rnn_backward(&cell, &h0, &xs, &ys, &w, &mut dtheta);
+
+        let eps = 1e-6;
+        for j in 0..n {
+            let mut hp = h0.clone();
+            let mut hm = h0.clone();
+            hp[j] += eps;
+            hm[j] -= eps;
+            let fd = (loss(&hp) - loss(&hm)) / (2.0 * eps);
+            assert!((dh0[j] - fd).abs() < 1e-6, "dh0[{j}] {} vs {fd}", dh0[j]);
+        }
+    }
+}

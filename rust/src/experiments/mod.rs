@@ -1,0 +1,490 @@
+//! Paper experiment regenerators.
+//!
+//! One function per table/figure of the paper's evaluation (see DESIGN.md §6
+//! for the full index). Each runs the workload on the pure-Rust engine
+//! (measured single-core wall-clock) and, where the paper's numbers are GPU
+//! wall-clock, also reports the calibrated device-model projection
+//! ([`crate::simulator`]) — both columns are printed so measurement and
+//! model are never conflated. Invoked by `deer bench --exp …` and by the
+//! `cargo bench` harness.
+
+use crate::cells::{Gru, Lem};
+use crate::coordinator::memory::MemoryPlanner;
+use crate::coordinator::sweep::{Job, JobResult, Method, Sweep};
+use crate::deer::grad::deer_rnn_backward;
+use crate::deer::newton::{deer_rnn, DeerConfig};
+use crate::deer::ode::{deer_ode, Interp, OdeSystem};
+use crate::deer::seq::{seq_rnn, seq_rnn_backward};
+use crate::simulator as sim;
+use crate::util::scalar::Scalar;
+use crate::util::rng::Rng;
+use crate::util::table::{sig3, Table};
+use crate::util::timer::{bench_budget, fmt_secs};
+use std::time::Duration;
+
+/// Common knobs for the measured benches (sized for a 1-core CPU budget;
+/// the CLI can raise them toward paper scale).
+#[derive(Debug, Clone)]
+pub struct BenchOpts {
+    pub dims: Vec<usize>,
+    pub lens: Vec<usize>,
+    pub batches: Vec<usize>,
+    pub seeds: Vec<u64>,
+    pub budget_per_cell: Duration,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts {
+            dims: vec![1, 2, 4, 8, 16],
+            lens: vec![1_000, 3_000, 10_000],
+            batches: vec![1],
+            seeds: vec![0],
+            budget_per_cell: Duration::from_millis(400),
+        }
+    }
+}
+
+fn gru_and_inputs(n: usize, t_len: usize, seed: u64) -> (Gru<f32>, Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed ^ (n as u64) << 32 ^ t_len as u64);
+    let cell: Gru<f32> = Gru::new(n, n, &mut rng);
+    let mut xs = vec![0.0f32; t_len * n];
+    rng.fill_normal(&mut xs, 1.0);
+    let h0 = vec![0.0f32; n];
+    (cell, xs, h0)
+}
+
+/// Measure one grid cell: returns (seq_secs, deer_secs, iterations, max_err).
+fn measure_cell(n: usize, t_len: usize, seed: u64, grad: bool, budget: Duration) -> (f64, f64, usize, f64) {
+    let (cell, xs, h0) = gru_and_inputs(n, t_len, seed);
+    let cfg = DeerConfig::<f32>::default();
+
+    // correctness + iteration count once
+    let res = deer_rnn(&cell, &h0, &xs, None, &cfg);
+    let seq = seq_rnn(&cell, &h0, &xs);
+    let max_err = crate::linalg::max_abs_diff(&seq, &res.ys).to_f64c();
+    let iters = res.iterations;
+
+    let mut gs = vec![0.0f32; seq.len()];
+    let mut g_rng = Rng::new(seed + 77);
+    g_rng.fill_normal(&mut gs, 1.0);
+
+    let t_seq = bench_budget(1, 20, budget, || {
+        let ys = seq_rnn(&cell, &h0, &xs);
+        if grad {
+            let mut dtheta = vec![0.0f32; crate::cells::CellGrad::num_params(&cell)];
+            seq_rnn_backward(&cell, &h0, &xs, &ys, &gs, &mut dtheta);
+        }
+        std::hint::black_box(&ys);
+    })
+    .median();
+
+    let t_deer = bench_budget(1, 20, budget, || {
+        let r = deer_rnn(&cell, &h0, &xs, None, &cfg);
+        if grad {
+            let g = deer_rnn_backward(&cell, &h0, &xs, &r.ys, &gs, Some(&r.jacobians), 1);
+            std::hint::black_box(&g.dtheta);
+        }
+        std::hint::black_box(&r.ys);
+    })
+    .median();
+
+    (t_seq, t_deer, iters, max_err)
+}
+
+/// Fig. 2 / Table 4: the speedup grid. `grad` selects forward vs
+/// forward+gradient; batches scale the simulated device model (measured CPU
+/// numbers are per-sequence — batch elements are independent work).
+pub fn fig2_speedup(opts: &BenchOpts, grad: bool) -> Vec<Table> {
+    let dev = sim::v100();
+    let mut tables = Vec::new();
+    for &batch in &opts.batches {
+        let mut t = Table::new(
+            &[&["#dims".to_string()], opts
+                .lens
+                .iter()
+                .map(|l| format!("T={l} meas/sim"))
+                .collect::<Vec<_>>()
+                .as_slice()]
+            .concat()
+            .iter()
+            .map(|s| s.as_str())
+            .collect::<Vec<_>>(),
+        );
+        for &n in &opts.dims {
+            let mut row = vec![n.to_string()];
+            for &t_len in &opts.lens {
+                let (t_seq, t_deer, iters, _) =
+                    measure_cell(n, t_len, opts.seeds[0], grad, opts.budget_per_cell);
+                let measured = t_seq / t_deer;
+                let mut rng = Rng::new(1);
+                let cell: Gru<f64> = Gru::new(n, n, &mut rng);
+                let (s_seq, s_deer) = if grad {
+                    (
+                        sim::sim_seq_fwd_grad(&dev, &cell, batch, t_len),
+                        sim::sim_deer_fwd_grad(&dev, &cell, batch, t_len, iters),
+                    )
+                } else {
+                    (
+                        sim::sim_seq_forward(&dev, &cell, batch, t_len),
+                        sim::sim_deer_forward(&dev, &cell, batch, t_len, iters),
+                    )
+                };
+                let cellstr = if s_deer.oom {
+                    format!("{} / OOM", sig3(measured))
+                } else {
+                    format!("{} / {}", sig3(measured), sig3(s_seq / s_deer.total()))
+                };
+                row.push(cellstr);
+            }
+            t.row(row);
+        }
+        tables.push(t);
+    }
+    tables
+}
+
+/// Fig. 3: output equivalence of DEER vs sequential (GRU n=32, T=10k).
+pub fn fig3_equivalence(n: usize, t_len: usize, seeds: &[u64]) -> Table {
+    let mut t = Table::new(&["seed", "iterations", "converged", "max |Δ|", "mean |Δ|"]);
+    for &seed in seeds {
+        let (cell, xs, h0) = gru_and_inputs(n, t_len, seed);
+        let res = deer_rnn(&cell, &h0, &xs, None, &DeerConfig::default());
+        let seq = seq_rnn(&cell, &h0, &xs);
+        let max_err = crate::linalg::max_abs_diff(&seq, &res.ys);
+        let mean_err: f32 =
+            seq.iter().zip(res.ys.iter()).map(|(a, b)| (a - b).abs()).sum::<f32>() / seq.len() as f32;
+        t.row(vec![
+            seed.to_string(),
+            res.iterations.to_string(),
+            res.converged.to_string(),
+            format!("{max_err:.2e}"),
+            format!("{mean_err:.2e}"),
+        ]);
+    }
+    t
+}
+
+/// Fig. 6: iterations to converge vs tolerance, f32 and f64 (GRU n=2, T=10k).
+pub fn fig6_tolerance(t_len: usize) -> Table {
+    let mut t = Table::new(&["tolerance", "iters (f32)", "iters (f64)"]);
+    let tols = [1e-2, 1e-3, 1e-4, 1e-5, 1e-6, 1e-7, 1e-8];
+    for &tol in &tols {
+        let iters32 = {
+            let (cell, xs, h0) = gru_and_inputs(2, t_len, 3);
+            let cfg = DeerConfig::<f32> { tol: tol as f32, ..Default::default() };
+            deer_rnn(&cell, &h0, &xs, None, &cfg).iterations
+        };
+        let iters64 = {
+            let mut rng = Rng::new(3 ^ 2u64 << 32 ^ t_len as u64);
+            let cell: Gru<f64> = Gru::new(2, 2, &mut rng);
+            let mut xs = vec![0.0f64; t_len * 2];
+            rng.fill_normal(&mut xs, 1.0);
+            let cfg = DeerConfig::<f64> { tol, ..Default::default() };
+            deer_rnn(&cell, &vec![0.0; 2], &xs, None, &cfg).iterations
+        };
+        t.row(vec![format!("{tol:.0e}"), iters32.to_string(), iters64.to_string()]);
+    }
+    t
+}
+
+/// Fig. 7: simulated V100 vs A100 speedup over state dims (T, B fixed).
+pub fn fig7_devices(t_len: usize, batch: usize, dims: &[usize]) -> Table {
+    let mut t = Table::new(&["#dims", "V100 speedup", "A100 speedup"]);
+    for &n in dims {
+        let mut rng = Rng::new(1);
+        let cell: Gru<f64> = Gru::new(n, n, &mut rng);
+        let iters = 7;
+        let mut row = vec![n.to_string()];
+        for dev in [sim::v100(), sim::a100()] {
+            let s = sim::sim_seq_forward(&dev, &cell, batch, t_len);
+            let d = sim::sim_deer_forward(&dev, &cell, batch, t_len, iters);
+            row.push(if d.oom { "OOM".into() } else { sig3(s / d.total()) });
+        }
+        t.row(row);
+    }
+    t
+}
+
+/// Table 3 (App. A.5/A.6): empirical convergence order per interpolation.
+pub fn table3_interpolation() -> Table {
+    /// forced decay: y' = −y + sin t (non-autonomous separates the orders)
+    struct Forced;
+    impl OdeSystem<f64> for Forced {
+        fn dim(&self) -> usize {
+            1
+        }
+        fn f(&self, t: f64, y: &[f64], out: &mut [f64]) {
+            out[0] = -y[0] + t.sin();
+        }
+        fn jac(&self, _t: f64, _y: &[f64], out: &mut [f64]) {
+            out[0] = -1.0;
+        }
+    }
+    let exact = |t: f64, y0: f64| (y0 + 0.5) * (-t).exp() + (t.sin() - t.cos()) / 2.0;
+    let err_at = |l: usize, interp: Interp| -> f64 {
+        let ts: Vec<f64> = (0..l).map(|i| 3.0 * i as f64 / (l - 1) as f64).collect();
+        let res = deer_ode(
+            &Forced,
+            &ts,
+            &[0.2],
+            None,
+            interp,
+            &DeerConfig { tol: 1e-12, ..Default::default() },
+        );
+        (res.ys[l - 1] - exact(3.0, 0.2)).abs()
+    };
+    let mut t = Table::new(&["interpolation", "err Δ", "err Δ/2", "err Δ/4", "order (paper LTE)"]);
+    for (name, interp, paper) in [
+        ("midpoint", Interp::Midpoint, "O(Δ³)"),
+        ("left", Interp::Left, "O(Δ²)"),
+        ("right", Interp::Right, "O(Δ²)"),
+    ] {
+        let e1 = err_at(41, interp);
+        let e2 = err_at(81, interp);
+        let e3 = err_at(161, interp);
+        let order = ((e1 / e3).log2() / 2.0).max(0.0);
+        t.row(vec![
+            name.into(),
+            format!("{e1:.2e}"),
+            format!("{e2:.2e}"),
+            format!("{e3:.2e}"),
+            format!("{order:.2} ({paper})"),
+        ]);
+    }
+    t
+}
+
+/// Table 5: per-phase profile of one DEER iteration (FUNCEVAL/GTMULT/INVLIN).
+pub fn table5_profile(t_len: usize, dims: &[usize]) -> Table {
+    let mut rows: Vec<Vec<String>> = vec![
+        vec!["FUNCEVAL".into()],
+        vec!["GTMULT".into()],
+        vec!["INVLIN".into()],
+    ];
+    for &n in dims {
+        let (cell, xs, h0) = gru_and_inputs(n, t_len, 5);
+        let res = deer_rnn(&cell, &h0, &xs, None, &DeerConfig::default());
+        let per_iter = |phase: &str| res.profile.get(phase) / res.iterations as f64;
+        rows[0].push(fmt_secs(per_iter("FUNCEVAL")));
+        rows[1].push(fmt_secs(per_iter("GTMULT")));
+        rows[2].push(fmt_secs(per_iter("INVLIN")));
+    }
+    let mut out = Table::new(
+        &[&["phase / per-iteration".to_string()], dims
+            .iter()
+            .map(|d| format!("n={d}"))
+            .collect::<Vec<_>>()
+            .as_slice()]
+        .concat()
+        .iter()
+        .map(|s| s.as_str())
+        .collect::<Vec<_>>(),
+    );
+    for r in rows {
+        out.row(r);
+    }
+    out
+}
+
+/// Table 6: DEER memory consumption vs dims (analytic + live buffer bytes).
+pub fn table6_memory(t_len: usize, batch: usize, dims: &[usize]) -> Table {
+    let mut t = Table::new(&["#dims", "model (MiB)", "live buffers (MiB)", "V100 fits?"]);
+    let planner = MemoryPlanner::new(16 * (1u64 << 30));
+    for &n in dims {
+        let model = sim::deer_memory_bytes(n, t_len, batch, 4) as f64 / (1 << 20) as f64;
+        // live single-sequence buffers from an actual run, scaled by batch
+        let (cell, xs, h0) = gru_and_inputs(n, 1_000.min(t_len), 6);
+        let res = deer_rnn(&cell, &h0, &xs, None, &DeerConfig::default());
+        let live_per_seq =
+            (res.jacobians.len() + 3 * res.ys.len()) * 4 * (t_len / 1_000.max(1));
+        let live = (live_per_seq * batch) as f64 / (1 << 20) as f64;
+        t.row(vec![
+            n.to_string(),
+            format!("{model:.1}"),
+            format!("{live:.1}"),
+            planner.deer_fits(n, t_len, batch).to_string(),
+        ]);
+    }
+    t
+}
+
+/// Fig. 8: DEER vs sequential at equal memory (LEM on worm-like data).
+pub fn fig8_equal_memory(n_units: usize, t_len: usize) -> Table {
+    let planner = MemoryPlanner::new(26 * (1u64 << 27)); // ~3.3 GB, paper used 2.6 GB
+    let deer_batch = 3usize;
+    let state = 2 * n_units; // LEM packs [y, z]
+    let seq_batch = planner.equal_memory_seq_batch(state, t_len, deer_batch);
+
+    let mut rng = Rng::new(8);
+    let cell: Lem<f32> = Lem::new(n_units, 6, &mut rng);
+    let mut xs = vec![0.0f32; t_len * 6];
+    rng.fill_normal(&mut xs, 1.0);
+    let h0 = vec![0.0f32; state];
+
+    let cfg = DeerConfig::<f32>::default();
+    let res = deer_rnn(&cell, &h0, &xs, None, &cfg);
+    let t_deer = bench_budget(1, 8, Duration::from_millis(800), || {
+        std::hint::black_box(deer_rnn(&cell, &h0, &xs, None, &cfg).ys.len());
+    })
+    .median();
+    let t_seq = bench_budget(1, 8, Duration::from_millis(800), || {
+        std::hint::black_box(seq_rnn(&cell, &h0, &xs).len());
+    })
+    .median();
+
+    // per-epoch time for a fixed number of samples N: N/B batches, batch cost
+    // = per-sequence cost × B on 1 core (and ×1 on a saturating accelerator).
+    let n_samples = 180.0; // train split of 259
+    let epoch_deer = n_samples * t_deer;
+    let epoch_seq = n_samples * t_seq;
+
+    let mut t = Table::new(&["method", "batch (equal mem)", "per-seq time", "epoch time (measured 1-core)", "converged"]);
+    t.row(vec![
+        "DEER LEM".into(),
+        deer_batch.to_string(),
+        fmt_secs(t_deer),
+        fmt_secs(epoch_deer),
+        res.converged.to_string(),
+    ]);
+    t.row(vec![
+        "sequential LEM".into(),
+        seq_batch.to_string(),
+        fmt_secs(t_seq),
+        fmt_secs(epoch_seq),
+        "n/a".into(),
+    ]);
+    t
+}
+
+/// Ablation (App. B.2): warm-starting DEER from the previous solution vs a
+/// cold zero guess, as a function of how far the parameters drifted since
+/// the cached trajectory was computed (simulating training-step updates of
+/// increasing learning rate).
+pub fn warmstart_ablation(n: usize, t_len: usize) -> Table {
+    use crate::cells::CellGrad;
+    let mut rng = Rng::new(21);
+    let base: Gru<f32> = Gru::new(n, n, &mut rng);
+    let mut xs = vec![0.0f32; t_len * n];
+    rng.fill_normal(&mut xs, 1.0);
+    let h0 = vec![0.0f32; n];
+    let cfg = DeerConfig::<f32>::default();
+
+    let cached = deer_rnn(&base, &h0, &xs, None, &cfg);
+    assert!(cached.converged);
+
+    let mut t = Table::new(&["param drift ‖Δθ‖∞", "cold iters", "warm iters", "saved"]);
+    for &drift in &[0.0f32, 1e-4, 1e-3, 1e-2, 5e-2] {
+        let mut cell = base.clone();
+        let mut drng = Rng::new(99);
+        for p in cell.params_mut().iter_mut() {
+            *p += drift * drng.normal() as f32;
+        }
+        let cold = deer_rnn(&cell, &h0, &xs, None, &cfg);
+        let warm = deer_rnn(&cell, &h0, &xs, Some(&cached.ys), &cfg);
+        let saved = cold.iterations as i64 - warm.iterations as i64;
+        t.row(vec![
+            format!("{drift:.0e}"),
+            cold.iterations.to_string(),
+            warm.iterations.to_string(),
+            format!("{saved:+}"),
+        ]);
+    }
+    t
+}
+
+/// The sweep-scheduler entry used by `deer sweep` (coordinator demo):
+/// runs the grid through the worker pool with warm-start caching.
+pub fn run_sweep(opts: &BenchOpts, workers: usize) -> Vec<JobResult> {
+    let sweep = Sweep {
+        dims: opts.dims.clone(),
+        lens: opts.lens.clone(),
+        batches: opts.batches.clone(),
+        methods: vec![Method::Sequential, Method::Deer],
+        seeds: opts.seeds.clone(),
+    };
+    sweep.run(workers, |job: &Job| {
+        let (cell, xs, h0) = gru_and_inputs(job.n, job.t_len, job.seed);
+        match job.method {
+            Method::Sequential => {
+                let t0 = std::time::Instant::now();
+                let ys = seq_rnn(&cell, &h0, &xs);
+                let secs = t0.elapsed().as_secs_f64();
+                std::hint::black_box(&ys);
+                JobResult { job: job.clone(), secs, iterations: 0, converged: true, max_err_vs_seq: 0.0 }
+            }
+            Method::Deer | Method::DeerWarm => {
+                let cfg = DeerConfig::<f32>::default();
+                let t0 = std::time::Instant::now();
+                let res = deer_rnn(&cell, &h0, &xs, None, &cfg);
+                let secs = t0.elapsed().as_secs_f64();
+                let seq = seq_rnn(&cell, &h0, &xs);
+                let err = crate::linalg::max_abs_diff(&seq, &res.ys) as f32;
+                JobResult {
+                    job: job.clone(),
+                    secs,
+                    iterations: res.iterations,
+                    converged: res.converged,
+                    max_err_vs_seq: err as f64,
+                }
+            }
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_reports_small_error() {
+        let t = fig3_equivalence(8, 2_000, &[0]);
+        let md = t.to_markdown();
+        assert!(md.contains("true"), "{md}");
+    }
+
+    #[test]
+    fn table3_orders() {
+        let t = table3_interpolation().to_markdown();
+        assert!(t.contains("midpoint"));
+    }
+
+    #[test]
+    fn fig6_iterations_bounded() {
+        let t = fig6_tolerance(1_000);
+        assert_eq!(t.num_rows(), 7);
+    }
+
+    #[test]
+    fn warmstart_ablation_shows_savings_at_small_drift() {
+        let t = warmstart_ablation(3, 1_500);
+        let md = t.to_markdown();
+        // zero-drift row: warm start must verify in ≤2 iterations
+        let zero_row = md.lines().find(|l| l.contains("0e0")).unwrap();
+        let warm: usize = zero_row
+            .split('|')
+            .nth(3)
+            .unwrap()
+            .trim()
+            .parse()
+            .unwrap();
+        assert!(warm <= 2, "{md}");
+    }
+
+    #[test]
+    fn sweep_runs_small_grid() {
+        let opts = BenchOpts {
+            dims: vec![1, 2],
+            lens: vec![200],
+            batches: vec![1],
+            seeds: vec![0],
+            budget_per_cell: Duration::from_millis(50),
+        };
+        let results = run_sweep(&opts, 2);
+        assert_eq!(results.len(), 2 * 1 * 1 * 2);
+        assert!(results
+            .iter()
+            .filter(|r| r.job.method == Method::Deer)
+            .all(|r| r.converged && r.max_err_vs_seq < 1e-3));
+    }
+}

@@ -1,0 +1,50 @@
+//! # DEER — Parallelizing non-linear sequential models over the sequence length
+//!
+//! Production reproduction of Lim, Zhu, Selfridge & Kasim (ICLR 2024).
+//!
+//! The crate is organised as the Layer-3 (coordinator) half of a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * [`util`] — foundation: CLI parsing, JSON, RNG, timing, table rendering
+//!   (the offline image has no clap/serde/criterion, so these are in-repo).
+//! * [`linalg`] — small dense matrices, LU solves, matrix exponential.
+//! * [`cells`] — non-linear recurrent cells (GRU / LSTM / LEM / Elman) with
+//!   *analytic* state Jacobians and parameter VJPs.
+//! * [`scan`] — sequential and multi-threaded parallel prefix scans over the
+//!   affine elements `(A, b)` of eq. (10) in the paper.
+//! * [`deer`] — the DEER algorithm itself: Newton fixed-point iteration for
+//!   RNNs (eq. 3/5), the single-pass backward gradient (eq. 7), the DEER-ODE
+//!   solver (eq. 8–10) plus sequential / BPTT / RK45 baselines.
+//! * [`simulator`] — accelerator cost model (work/depth → simulated V100 /
+//!   A100 wall-clock); the testbed is a single CPU core, so paper-scale
+//!   speedups are reproduced through this calibrated model while measured
+//!   wall-clock is always reported alongside.
+//! * [`coordinator`] — the systems layer: sweep scheduler, dynamic batcher,
+//!   warm-start trajectory cache (App. B.2), convergence policy, memory
+//!   accounting.
+//! * [`runtime`] — PJRT runtime that loads AOT-lowered HLO-text artifacts
+//!   produced by `python/compile/aot.py` and executes them on the hot path
+//!   (Python never runs at request time).
+//! * [`data`] — dataset substrates: two-body gravitational simulator,
+//!   synthetic EigenWorms, sequential-CIFAR-like generator.
+//! * [`train`] — artifact-driven training loops (HNN / EigenWorms classifier).
+//! * [`metrics`] — run recording and paper-table reporting.
+//! * [`testkit`] — in-repo property-testing mini-framework.
+
+pub mod util;
+pub mod linalg;
+pub mod cells;
+pub mod scan;
+pub mod deer;
+pub mod simulator;
+pub mod coordinator;
+pub mod runtime;
+pub mod data;
+pub mod experiments;
+pub mod train;
+pub mod metrics;
+pub mod testkit;
+
+pub use cells::{Cell, CellGrad, Elman, Gru, Lem, Lstm};
+pub use deer::{DeerConfig, DeerResult};
+pub use util::scalar::Scalar;

@@ -1,0 +1,201 @@
+//! Matrix exponential and φ₁ function.
+//!
+//! The DEER-ODE recurrence (paper eq. 9) needs, per time step,
+//!
+//! ```text
+//! Ḡᵢ = exp(−Gᵢ Δᵢ)          and    z̄ᵢ = Gᵢ⁻¹ (I − Ḡᵢ) zᵢ = Δᵢ · φ₁(−Gᵢ Δᵢ) zᵢ
+//! ```
+//!
+//! where `φ₁(M) = (e^M − I) M⁻¹ = Σ_{k≥0} M^k / (k+1)!`. Computing z̄ via
+//! φ₁ avoids inverting G (which may be singular, e.g. G = −∂f/∂y = 0 for an
+//! input-only ODE). Both are evaluated with a scaling-and-squaring Padé-style
+//! scheme: φ₁ via the augmented-matrix trick
+//! `exp([[M, I], [0, 0]]) = [[e^M, φ₁(M)], [0, I]]`.
+
+use super::{matmul, norm1, solve_multi};
+use crate::util::scalar::Scalar;
+
+/// exp(A) for row-major n×n `a`, written into `out`.
+///
+/// Padé(6) with scaling and squaring: scale so ‖A/2^s‖₁ ≤ 0.5, evaluate the
+/// diagonal Padé approximant, then square s times. Accuracy ~1e-14 for f64,
+/// limited by dtype for f32.
+pub fn expm<S: Scalar>(a: &[S], out: &mut [S], n: usize) {
+    debug_assert_eq!(a.len(), n * n);
+    debug_assert_eq!(out.len(), n * n);
+
+    if n == 1 {
+        out[0] = a[0].exp();
+        return;
+    }
+
+    // scaling
+    let nrm = norm1(a, n).to_f64c();
+    let s = if nrm > 0.5 {
+        (nrm / 0.5).log2().ceil() as u32
+    } else {
+        0
+    };
+    let scale = S::from_f64c(1.0 / (1u64 << s.min(63)) as f64);
+    let a_s: Vec<S> = a.iter().map(|&v| v * scale).collect();
+
+    // Padé(6): N = Σ c_k A^k, D = Σ (−1)^k c_k A^k, exp ≈ D⁻¹N.
+    // c_k = (2q−k)! q! / ((2q)! k! (q−k)!) with q = 6.
+    const Q: usize = 6;
+    let mut c = [0.0f64; Q + 1];
+    c[0] = 1.0;
+    for k in 1..=Q {
+        c[k] = c[k - 1] * (Q - k + 1) as f64 / ((2 * Q - k + 1) as f64 * k as f64);
+    }
+
+    let mut npoly = vec![S::zero(); n * n]; // numerator
+    let mut dpoly = vec![S::zero(); n * n]; // denominator
+    let mut power = vec![S::zero(); n * n]; // A^k
+    let mut tmp = vec![S::zero(); n * n];
+    super::eye_into(&mut power, n);
+    for i in 0..n {
+        npoly[i * n + i] = S::from_f64c(c[0]);
+        dpoly[i * n + i] = S::from_f64c(c[0]);
+    }
+    for (k, ck) in c.iter().enumerate().skip(1) {
+        matmul(&power, &a_s, &mut tmp, n);
+        power.copy_from_slice(&tmp);
+        let ck = S::from_f64c(*ck);
+        let sign = if k % 2 == 0 { S::one() } else { -S::one() };
+        for i in 0..n * n {
+            npoly[i] += ck * power[i];
+            dpoly[i] += sign * ck * power[i];
+        }
+    }
+
+    // out = D⁻¹ N
+    out.copy_from_slice(&npoly);
+    solve_multi(&dpoly, out, n, n).expect("expm: Padé denominator singular");
+
+    // squaring
+    for _ in 0..s {
+        matmul(out, &out.to_vec(), &mut tmp, n);
+        out.copy_from_slice(&tmp);
+    }
+}
+
+/// φ₁(A) = (e^A − I) A⁻¹ (series-consistent at singular A), via the augmented
+/// 2n×2n matrix exponential. Writes into `out` (n×n).
+pub fn phi1<S: Scalar>(a: &[S], out: &mut [S], n: usize) {
+    debug_assert_eq!(a.len(), n * n);
+    let m = 2 * n;
+    let mut aug = vec![S::zero(); m * m];
+    for i in 0..n {
+        for j in 0..n {
+            aug[i * m + j] = a[i * n + j];
+        }
+        aug[i * m + n + i] = S::one();
+    }
+    let mut eaug = vec![S::zero(); m * m];
+    expm(&aug, &mut eaug, m);
+    for i in 0..n {
+        for j in 0..n {
+            out[i * n + j] = eaug[i * m + n + j];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn approx(a: &[f64], b: &[f64], tol: f64) {
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert!((x - y).abs() < tol, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn expm_zero_is_identity() {
+        let a = vec![0.0f64; 9];
+        let mut e = vec![0.0; 9];
+        expm(&a, &mut e, 3);
+        approx(&e, &[1., 0., 0., 0., 1., 0., 0., 0., 1.], 1e-14);
+    }
+
+    #[test]
+    fn expm_diagonal() {
+        let a = vec![1.0f64, 0.0, 0.0, -2.0];
+        let mut e = vec![0.0; 4];
+        expm(&a, &mut e, 2);
+        approx(&e, &[1f64.exp(), 0.0, 0.0, (-2f64).exp()], 1e-12);
+    }
+
+    #[test]
+    fn expm_rotation() {
+        // exp([[0,-t],[t,0]]) = [[cos t, -sin t],[sin t, cos t]]
+        let t = 1.3f64;
+        let a = vec![0.0, -t, t, 0.0];
+        let mut e = vec![0.0; 4];
+        expm(&a, &mut e, 2);
+        approx(&e, &[t.cos(), -t.sin(), t.sin(), t.cos()], 1e-12);
+    }
+
+    #[test]
+    fn expm_large_norm_scaling() {
+        // 1x... scaling path: big multiple of rotation
+        let t = 25.0f64;
+        let a = vec![0.0, -t, t, 0.0];
+        let mut e = vec![0.0; 4];
+        expm(&a, &mut e, 2);
+        approx(&e, &[t.cos(), -t.sin(), t.sin(), t.cos()], 1e-9);
+    }
+
+    #[test]
+    fn expm_f32_works() {
+        let a = vec![0.3f32, 0.1, -0.2, 0.4];
+        let mut e32 = vec![0.0f32; 4];
+        expm(&a, &mut e32, 2);
+        let a64: Vec<f64> = a.iter().map(|&v| v as f64).collect();
+        let mut e64 = vec![0.0f64; 4];
+        expm(&a64, &mut e64, 2);
+        for (x, y) in e32.iter().zip(e64.iter()) {
+            assert!((*x as f64 - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn phi1_zero_is_identity() {
+        let a = vec![0.0f64; 4];
+        let mut p = vec![0.0; 4];
+        phi1(&a, &mut p, 2);
+        approx(&p, &[1., 0., 0., 1.], 1e-13);
+    }
+
+    #[test]
+    fn phi1_scalar_matches_closed_form() {
+        for &x in &[0.5f64, -1.25, 3.0, 1e-8] {
+            let a = vec![x];
+            let mut p = vec![0.0];
+            phi1(&a, &mut p, 1);
+            let want = if x.abs() < 1e-6 {
+                1.0 + x / 2.0
+            } else {
+                (x.exp() - 1.0) / x
+            };
+            assert!((p[0] - want).abs() < 1e-10, "x={x}: {} vs {want}", p[0]);
+        }
+    }
+
+    #[test]
+    fn phi1_matches_definition_invertible() {
+        // φ₁(A)·A = e^A − I for invertible A.
+        let a = vec![0.4f64, 0.1, -0.3, -0.6];
+        let mut p = vec![0.0; 4];
+        phi1(&a, &mut p, 2);
+        let mut ea = vec![0.0; 4];
+        expm(&a, &mut ea, 2);
+        let mut pa = vec![0.0; 4];
+        matmul(&p, &a, &mut pa, 2);
+        approx(
+            &pa,
+            &[ea[0] - 1.0, ea[1], ea[2], ea[3] - 1.0],
+            1e-12,
+        );
+    }
+}

@@ -1,0 +1,156 @@
+//! Owned row-major matrix type.
+
+use crate::util::scalar::Scalar;
+
+/// Dense row-major matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat<S> {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<S>,
+}
+
+impl<S: Scalar> Mat<S> {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat {
+            rows,
+            cols,
+            data: vec![S::zero(); rows * cols],
+        }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = S::one();
+        }
+        m
+    }
+
+    pub fn from_rows(rows: Vec<Vec<S>>) -> Self {
+        let r = rows.len();
+        let c = rows.first().map(|x| x.len()).unwrap_or(0);
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> S {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut S {
+        &mut self.data[i * self.cols + j]
+    }
+
+    pub fn row(&self, i: usize) -> &[S] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat<S> {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.at(i, j);
+            }
+        }
+        out
+    }
+
+    /// Matrix product (self · other).
+    pub fn matmul(&self, other: &Mat<S>) -> Mat<S> {
+        assert_eq!(self.cols, other.rows);
+        let mut out = Mat::zeros(self.rows, other.cols);
+        super::matmul_rect(
+            &self.data,
+            &other.data,
+            &mut out.data,
+            self.rows,
+            self.cols,
+            other.cols,
+        );
+        out
+    }
+
+    /// Matrix–vector product.
+    pub fn apply(&self, x: &[S]) -> Vec<S> {
+        assert_eq!(self.cols, x.len());
+        let mut y = vec![S::zero(); self.rows];
+        for i in 0..self.rows {
+            let mut acc = S::zero();
+            for j in 0..self.cols {
+                acc += self.at(i, j) * x[j];
+            }
+            y[i] = acc;
+        }
+        y
+    }
+
+    pub fn scale(&self, s: S) -> Mat<S> {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&v| v * s).collect(),
+        }
+    }
+
+    pub fn add(&self, other: &Mat<S>) -> Mat<S> {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(other.data.iter())
+                .map(|(&a, &b)| a + b)
+                .collect(),
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn fro(&self) -> S {
+        self.data.iter().map(|&v| v * v).sum::<S>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eye_applies_identity() {
+        let m: Mat<f64> = Mat::eye(3);
+        assert_eq!(m.apply(&[1.0, 2.0, 3.0]), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = Mat::from_rows(vec![vec![1.0f64, 2.0, 3.0], vec![4.0, 5.0, 6.0]]);
+        let t = m.transpose();
+        assert_eq!(t.rows, 3);
+        assert_eq!(t.at(0, 1), 4.0);
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn matmul_agrees_with_apply() {
+        let a = Mat::from_rows(vec![vec![1.0f64, 2.0], vec![3.0, 4.0]]);
+        let x = vec![5.0, 6.0];
+        let xm = Mat::from_rows(vec![vec![5.0], vec![6.0]]);
+        let via_mat = a.matmul(&xm);
+        assert_eq!(a.apply(&x), via_mat.data);
+    }
+
+    #[test]
+    fn scale_add() {
+        let a = Mat::from_rows(vec![vec![1.0f64, 2.0]]);
+        let b = a.scale(2.0).add(&a);
+        assert_eq!(b.data, vec![3.0, 6.0]);
+    }
+}

@@ -1,0 +1,321 @@
+//! Small dense linear algebra.
+//!
+//! DEER's inner loop works with per-timestep `n×n` Jacobians where `n` is the
+//! (small) state dimension — the paper's complexity analysis (§3.5) is
+//! O(n²L) memory / O(n³L) time precisely because of these matrices. This
+//! module provides the row-major [`Mat`] type plus the kernels the engine
+//! needs: matvec / matmul, LU solves, the matrix exponential (Padé 13 with
+//! scaling-and-squaring) and the φ₁ function used by the DEER-ODE recurrence
+//! (eq. 9): `z̄ = Δ·φ₁(−GΔ)·z`.
+
+pub mod expm;
+pub mod mat;
+
+pub use expm::{expm, phi1};
+pub use mat::Mat;
+
+use crate::util::scalar::Scalar;
+
+/// y = A x for row-major `a` of shape (n, n).
+#[inline]
+pub fn matvec<S: Scalar>(a: &[S], x: &[S], y: &mut [S]) {
+    let n = x.len();
+    debug_assert_eq!(a.len(), n * n);
+    debug_assert_eq!(y.len(), n);
+    for i in 0..n {
+        let row = &a[i * n..(i + 1) * n];
+        let mut acc = S::zero();
+        for j in 0..n {
+            acc += row[j] * x[j];
+        }
+        y[i] = acc;
+    }
+}
+
+/// y += A x.
+#[inline]
+pub fn matvec_acc<S: Scalar>(a: &[S], x: &[S], y: &mut [S]) {
+    let n = x.len();
+    for i in 0..n {
+        let row = &a[i * n..(i + 1) * n];
+        let mut acc = S::zero();
+        for j in 0..n {
+            acc += row[j] * x[j];
+        }
+        y[i] += acc;
+    }
+}
+
+/// y = Aᵀ x.
+#[inline]
+pub fn matvec_t<S: Scalar>(a: &[S], x: &[S], y: &mut [S]) {
+    let n = x.len();
+    for v in y.iter_mut() {
+        *v = S::zero();
+    }
+    for i in 0..n {
+        let xi = x[i];
+        let row = &a[i * n..(i + 1) * n];
+        for j in 0..n {
+            y[j] += row[j] * xi;
+        }
+    }
+}
+
+/// C = A B, all row-major (n, n).
+#[inline]
+pub fn matmul<S: Scalar>(a: &[S], b: &[S], c: &mut [S], n: usize) {
+    debug_assert_eq!(a.len(), n * n);
+    debug_assert_eq!(b.len(), n * n);
+    debug_assert_eq!(c.len(), n * n);
+    for v in c.iter_mut() {
+        *v = S::zero();
+    }
+    // ikj loop order: stride-1 inner accesses on B and C.
+    for i in 0..n {
+        for k in 0..n {
+            let aik = a[i * n + k];
+            if aik == S::zero() {
+                continue;
+            }
+            let brow = &b[k * n..(k + 1) * n];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += aik * brow[j];
+            }
+        }
+    }
+}
+
+/// General rectangular matmul: C (m×p) = A (m×n) · B (n×p), row-major.
+#[inline]
+pub fn matmul_rect<S: Scalar>(a: &[S], b: &[S], c: &mut [S], m: usize, n: usize, p: usize) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(b.len(), n * p);
+    debug_assert_eq!(c.len(), m * p);
+    for v in c.iter_mut() {
+        *v = S::zero();
+    }
+    for i in 0..m {
+        for k in 0..n {
+            let aik = a[i * n + k];
+            if aik == S::zero() {
+                continue;
+            }
+            let brow = &b[k * p..(k + 1) * p];
+            let crow = &mut c[i * p..(i + 1) * p];
+            for j in 0..p {
+                crow[j] += aik * brow[j];
+            }
+        }
+    }
+}
+
+/// In-place LU factorization with partial pivoting. Returns pivot indices.
+/// `a` is n×n row-major; on exit holds L (unit diagonal, below) and U.
+pub fn lu_factor<S: Scalar>(a: &mut [S], n: usize) -> Result<Vec<usize>, String> {
+    let mut piv: Vec<usize> = (0..n).collect();
+    for k in 0..n {
+        // pivot
+        let mut pk = k;
+        let mut maxv = a[k * n + k].abs();
+        for i in (k + 1)..n {
+            let v = a[i * n + k].abs();
+            if v > maxv {
+                maxv = v;
+                pk = i;
+            }
+        }
+        if maxv == S::zero() {
+            return Err(format!("singular matrix at column {k}"));
+        }
+        if pk != k {
+            for j in 0..n {
+                a.swap(k * n + j, pk * n + j);
+            }
+            piv.swap(k, pk);
+        }
+        let pivot = a[k * n + k];
+        for i in (k + 1)..n {
+            let lik = a[i * n + k] / pivot;
+            a[i * n + k] = lik;
+            for j in (k + 1)..n {
+                let ukj = a[k * n + j];
+                a[i * n + j] -= lik * ukj;
+            }
+        }
+    }
+    Ok(piv)
+}
+
+/// Solve LU x = Pb given factors from [`lu_factor`]. `b` is overwritten with x.
+pub fn lu_solve<S: Scalar>(lu: &[S], piv: &[usize], b: &mut [S], n: usize) {
+    // apply permutation
+    let orig = b.to_vec();
+    for (i, &p) in piv.iter().enumerate() {
+        b[i] = orig[p];
+    }
+    // forward (unit L)
+    for i in 1..n {
+        let mut acc = b[i];
+        for j in 0..i {
+            acc -= lu[i * n + j] * b[j];
+        }
+        b[i] = acc;
+    }
+    // back (U)
+    for i in (0..n).rev() {
+        let mut acc = b[i];
+        for j in (i + 1)..n {
+            acc -= lu[i * n + j] * b[j];
+        }
+        b[i] = acc / lu[i * n + i];
+    }
+}
+
+/// Solve A X = B for X where B is n×m (column set), overwriting `b`.
+pub fn solve_multi<S: Scalar>(a: &[S], b: &mut [S], n: usize, m: usize) -> Result<(), String> {
+    let mut lu = a.to_vec();
+    let piv = lu_factor(&mut lu, n)?;
+    let mut col = vec![S::zero(); n];
+    for j in 0..m {
+        for i in 0..n {
+            col[i] = b[i * m + j];
+        }
+        lu_solve(&lu, &piv, &mut col, n);
+        for i in 0..n {
+            b[i * m + j] = col[i];
+        }
+    }
+    Ok(())
+}
+
+/// Identity written into `a` (n×n).
+#[inline]
+pub fn eye_into<S: Scalar>(a: &mut [S], n: usize) {
+    for v in a.iter_mut() {
+        *v = S::zero();
+    }
+    for i in 0..n {
+        a[i * n + i] = S::one();
+    }
+}
+
+/// Max-abs (infinity) norm of a vector difference; the paper's convergence
+/// criterion (App. B.1 line `err = max |y_next - y|`).
+#[inline]
+pub fn max_abs_diff<S: Scalar>(a: &[S], b: &[S]) -> S {
+    let mut m = S::zero();
+    for (x, y) in a.iter().zip(b.iter()) {
+        let d = (*x - *y).abs();
+        if d > m {
+            m = d;
+        }
+    }
+    m
+}
+
+/// 1-norm (max column sum) of an n×n matrix — used by expm scaling.
+pub fn norm1<S: Scalar>(a: &[S], n: usize) -> S {
+    let mut best = S::zero();
+    for j in 0..n {
+        let mut s = S::zero();
+        for i in 0..n {
+            s += a[i * n + j].abs();
+        }
+        if s > best {
+            best = s;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matvec_identity() {
+        let a = vec![1.0f64, 0.0, 0.0, 1.0];
+        let x = vec![3.0, -4.0];
+        let mut y = vec![0.0; 2];
+        matvec(&a, &x, &mut y);
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    fn matvec_t_matches_transpose() {
+        let a = vec![1.0f64, 2.0, 3.0, 4.0]; // [[1,2],[3,4]]
+        let x = vec![5.0, 7.0];
+        let mut y = vec![0.0; 2];
+        matvec_t(&a, &x, &mut y);
+        // Aᵀ x = [[1,3],[2,4]] [5,7] = [26, 38]
+        assert_eq!(y, vec![26.0, 38.0]);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = vec![1.0f64, 2.0, 3.0, 4.0];
+        let b = vec![5.0, 6.0, 7.0, 8.0];
+        let mut c = vec![0.0; 4];
+        matmul(&a, &b, &mut c, 2);
+        assert_eq!(c, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_rect_known() {
+        // (1x3) * (3x2)
+        let a = vec![1.0f64, 2.0, 3.0];
+        let b = vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0];
+        let mut c = vec![0.0; 2];
+        matmul_rect(&a, &b, &mut c, 1, 3, 2);
+        assert_eq!(c, vec![14.0, 32.0]);
+    }
+
+    #[test]
+    fn lu_solves_system() {
+        // A = [[2,1],[1,3]], b = [5, 10] -> x = [1, 3]
+        let mut a = vec![2.0f64, 1.0, 1.0, 3.0];
+        let piv = lu_factor(&mut a, 2).unwrap();
+        let mut b = vec![5.0, 10.0];
+        lu_solve(&a, &piv, &mut b, 2);
+        assert!((b[0] - 1.0).abs() < 1e-12);
+        assert!((b[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lu_needs_pivoting() {
+        // Zero on the initial diagonal forces a row swap.
+        let mut a = vec![0.0f64, 1.0, 1.0, 0.0];
+        let piv = lu_factor(&mut a, 2).unwrap();
+        let mut b = vec![2.0, 3.0];
+        lu_solve(&a, &piv, &mut b, 2);
+        assert!((b[0] - 3.0).abs() < 1e-12);
+        assert!((b[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn singular_detected() {
+        let mut a = vec![1.0f64, 2.0, 2.0, 4.0];
+        assert!(lu_factor(&mut a, 2).is_err());
+    }
+
+    #[test]
+    fn solve_multi_identity_rhs_gives_inverse() {
+        let a = vec![4.0f64, 7.0, 2.0, 6.0];
+        let mut b = vec![1.0, 0.0, 0.0, 1.0];
+        solve_multi(&a, &mut b, 2, 2).unwrap();
+        // inv = 1/10 [[6,-7],[-2,4]]
+        let exp = [0.6, -0.7, -0.2, 0.4];
+        for (x, e) in b.iter().zip(exp.iter()) {
+            assert!((x - e).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn norms() {
+        let a = vec![1.0f64, -2.0, 3.0, 4.0];
+        assert_eq!(norm1(&a, 2), 6.0); // col 1: |−2|+|4| = 6
+        assert_eq!(max_abs_diff(&[1.0, 5.0], &[1.5, 5.0]), 0.5);
+    }
+}

@@ -1,0 +1,368 @@
+//! `deer` — the Layer-3 coordinator CLI.
+//!
+//! Subcommands:
+//!   bench  --exp fig2|fig2grad|fig3|fig6|fig7|fig8|table3|table4|table5|table6|all
+//!   sweep  --dims 1,2,4 --lens 1000,10000 --workers 2
+//!   train  --model worms|hnn-deer|hnn-rk4|mhgru --steps 100
+//!   info   (list artifacts)
+//!
+//! Common flags: --dims, --lens, --batches, --seeds, --results DIR,
+//! --artifacts DIR, --budget-ms N.
+
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+use std::time::Duration;
+
+use deer::coordinator::sweep::Method;
+use deer::experiments as exp;
+use deer::metrics::Recorder;
+use deer::runtime::{Runtime, Tensor};
+use deer::train::Trainer;
+use deer::util::cli::Args;
+use deer::util::rng::Rng;
+use deer::util::table::Table;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn opts_from_args(args: &Args) -> Result<exp::BenchOpts> {
+    let d = exp::BenchOpts::default();
+    Ok(exp::BenchOpts {
+        dims: args.get_list("dims", &d.dims).map_err(anyhow::Error::msg)?,
+        lens: args.get_list("lens", &d.lens).map_err(anyhow::Error::msg)?,
+        batches: args.get_list("batches", &d.batches).map_err(anyhow::Error::msg)?,
+        seeds: args.get_list("seeds", &d.seeds).map_err(anyhow::Error::msg)?,
+        budget_per_cell: Duration::from_millis(
+            args.get_parse("budget-ms", 400u64).map_err(anyhow::Error::msg)?,
+        ),
+    })
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env().map_err(anyhow::Error::msg)?;
+    let results = Recorder::new(&PathBuf::from(
+        args.get("results", Recorder::default_dir().to_str().unwrap()),
+    ))?;
+
+    match args.subcommand.as_deref() {
+        Some("bench") => bench(&args, &results),
+        Some("sweep") => sweep(&args, &results),
+        Some("train") => train(&args, &results),
+        Some("table1") => table1(&args, &results),
+        Some("info") => info(&args),
+        other => {
+            if other.is_some() {
+                eprintln!("unknown subcommand {other:?}\n");
+            }
+            println!(
+                "deer — DEER (ICLR 2024) reproduction coordinator\n\n\
+                 usage: deer <bench|sweep|train|info> [flags]\n\
+                 \n  deer bench --exp all            regenerate every paper table/figure\
+                 \n  deer bench --exp fig2 --dims 1,2,4 --lens 1000,10000\
+                 \n  deer sweep --workers 2          coordinator sweep demo\
+                 \n  deer train --model worms --steps 50\
+                 \n  deer info                       list AOT artifacts"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn bench(args: &Args, rec: &Recorder) -> Result<()> {
+    let opts = opts_from_args(args)?;
+    let which = args.get("exp", "all").to_string();
+    let all = which == "all";
+
+    if all || which == "fig2" {
+        for (i, t) in exp::fig2_speedup(&opts, false).iter().enumerate() {
+            rec.table(
+                &format!("fig2_forward_b{}", opts.batches[i]),
+                &format!(
+                    "Fig. 2 (top): GRU forward speedup DEER vs sequential, batch={} (measured 1-core | simulated V100)",
+                    opts.batches[i]
+                ),
+                t,
+            )?;
+        }
+    }
+    if all || which == "fig2grad" {
+        for (i, t) in exp::fig2_speedup(&opts, true).iter().enumerate() {
+            rec.table(
+                &format!("fig2_grad_b{}", opts.batches[i]),
+                &format!(
+                    "Fig. 2 (bottom): GRU forward+gradient speedup, batch={} (measured 1-core | simulated V100)",
+                    opts.batches[i]
+                ),
+                t,
+            )?;
+        }
+    }
+    if all || which == "table4" {
+        // Table 4 = the Fig. 2 grid across batch sizes (simulated axis).
+        let mut o = opts.clone();
+        o.batches = args
+            .get_list("batches", &[16usize, 8, 4, 2])
+            .map_err(anyhow::Error::msg)?;
+        for (i, t) in exp::fig2_speedup(&o, false).iter().enumerate() {
+            rec.table(
+                &format!("table4_b{}", o.batches[i]),
+                &format!("Table 4: speedup at batch={}", o.batches[i]),
+                t,
+            )?;
+        }
+    }
+    if all || which == "fig3" {
+        let t = exp::fig3_equivalence(
+            args.get_parse("n", 32usize).map_err(anyhow::Error::msg)?,
+            args.get_parse("t", 10_000usize).map_err(anyhow::Error::msg)?,
+            &opts.seeds,
+        );
+        rec.table("fig3_equivalence", "Fig. 3: DEER vs sequential output difference", &t)?;
+    }
+    if all || which == "fig6" {
+        let t = exp::fig6_tolerance(args.get_parse("t", 10_000usize).map_err(anyhow::Error::msg)?);
+        rec.table("fig6_tolerance", "Fig. 6: iterations vs tolerance (f32/f64)", &t)?;
+    }
+    if all || which == "fig7" {
+        let t = exp::fig7_devices(1_000_000, 16, &[1, 2, 4, 8, 16, 32, 64]);
+        rec.table("fig7_devices", "Fig. 7: simulated V100 vs A100 speedup", &t)?;
+    }
+    if all || which == "fig8" {
+        let t = exp::fig8_equal_memory(
+            16,
+            args.get_parse("t", 17_984usize).map_err(anyhow::Error::msg)?,
+        );
+        rec.table("fig8_equal_memory", "Fig. 8: DEER vs sequential LEM at equal memory", &t)?;
+    }
+    if all || which == "warmstart" {
+        rec.table(
+            "ablation_warmstart",
+            "Ablation (App. B.2): warm vs cold start Newton iterations vs parameter drift",
+            &exp::warmstart_ablation(
+                args.get_parse("n", 4usize).map_err(anyhow::Error::msg)?,
+                args.get_parse("t", 10_000usize).map_err(anyhow::Error::msg)?,
+            ),
+        )?;
+    }
+    if all || which == "table3" {
+        rec.table(
+            "table3_interpolation",
+            "Table 3: interpolation convergence orders",
+            &exp::table3_interpolation(),
+        )?;
+    }
+    if all || which == "table5" {
+        let t = exp::table5_profile(
+            args.get_parse("t", 3_000usize).map_err(anyhow::Error::msg)?,
+            &opts.dims,
+        );
+        rec.table("table5_profile", "Table 5: per-phase profile of one DEER iteration", &t)?;
+    }
+    if all || which == "table6" {
+        let t = exp::table6_memory(100_000, 16, &[1, 2, 4, 8, 16, 32]);
+        rec.table("table6_memory", "Table 6: DEER memory vs state dim (B=16, T=100k)", &t)?;
+    }
+    Ok(())
+}
+
+fn sweep(args: &Args, rec: &Recorder) -> Result<()> {
+    let opts = opts_from_args(args)?;
+    let workers = args.get_parse("workers", 1usize).map_err(anyhow::Error::msg)?;
+    let results = exp::run_sweep(&opts, workers);
+    let mut t = Table::new(&["n", "T", "method", "secs", "iters", "converged", "max err vs seq"]);
+    for r in &results {
+        t.row(vec![
+            r.job.n.to_string(),
+            r.job.t_len.to_string(),
+            format!("{:?}", r.job.method),
+            format!("{:.4}", r.secs),
+            r.iterations.to_string(),
+            r.converged.to_string(),
+            format!("{:.1e}", r.max_err_vs_seq),
+        ]);
+    }
+    rec.table("sweep", "Coordinator sweep", &t)?;
+    // speedup summary per (n, T)
+    let mut s = Table::new(&["n", "T", "speedup (seq/deer)"]);
+    for &n in &opts.dims {
+        for &len in &opts.lens {
+            let seq: f64 = results
+                .iter()
+                .filter(|r| r.job.n == n && r.job.t_len == len && r.job.method == Method::Sequential)
+                .map(|r| r.secs)
+                .sum();
+            let deer: f64 = results
+                .iter()
+                .filter(|r| r.job.n == n && r.job.t_len == len && r.job.method == Method::Deer)
+                .map(|r| r.secs)
+                .sum();
+            if deer > 0.0 {
+                s.row(vec![n.to_string(), len.to_string(), format!("{:.2}", seq / deer)]);
+            }
+        }
+    }
+    rec.table("sweep_speedup", "Sweep speedup summary", &s)?;
+    Ok(())
+}
+
+fn train(args: &Args, rec: &Recorder) -> Result<()> {
+    let rt = Runtime::load(&PathBuf::from(
+        args.get("artifacts", Runtime::default_dir().to_str().unwrap()),
+    ))?;
+    let steps = args.get_parse("steps", 50usize).map_err(anyhow::Error::msg)?;
+    let model = args.get("model", "worms");
+    let mut rng = Rng::new(args.get_parse("seed", 0u64).map_err(anyhow::Error::msg)?);
+
+    match model {
+        "worms" => {
+            let spec = rt.manifest.get("worms_train_step").expect("artifact").clone();
+            let b = spec.meta["batch"] as usize;
+            let t_len = spec.meta["t"] as usize;
+            let ds = {
+                let (xs, labels) = deer::data::worms::generate(64, t_len, 1);
+                deer::data::Dataset::new(xs, labels, t_len, deer::data::worms::CHANNELS)
+            };
+            let mut tr = Trainer::new(&rt, "worms_train_step", "worms_train_step")?;
+            for i in 0..steps {
+                let (xs, labels, _) = ds.sample_batch(deer::data::Split::Train, b, &mut rng);
+                let data = [
+                    Tensor::f32(vec![b, t_len, deer::data::worms::CHANNELS], xs),
+                    Tensor::i32(vec![b], labels),
+                ];
+                let (loss, acc) = tr.step(&data)?;
+                if i % 10 == 0 || i + 1 == steps {
+                    println!("step {:4}  loss {loss:.4}  acc {:.2}", i + 1, acc.unwrap_or(0.0));
+                }
+            }
+            rec.curve("train_worms", &tr.curve)?;
+        }
+        "hnn-deer" | "hnn-rk4" => {
+            let art = if model == "hnn-deer" { "hnn_train_step_deer" } else { "hnn_train_step_rk4" };
+            let spec = rt.manifest.get(art).expect("artifact").clone();
+            let b = spec.meta["batch"] as usize;
+            let l = spec.meta["grid"] as usize;
+            let t_end = 10.0;
+            let ts: Vec<f32> = (0..l).map(|i| (t_end * i as f64 / (l - 1) as f64) as f32).collect();
+            let trajs = deer::data::twobody::generate(b, t_end, l, 7);
+            let mut tr = Trainer::new(&rt, art, "hnn_train_step_deer")?;
+            for i in 0..steps {
+                let data = [
+                    Tensor::f32(vec![l], ts.clone()),
+                    Tensor::f32(vec![b, l, 8], trajs.clone()),
+                ];
+                let (loss, _) = tr.step(&data)?;
+                if i % 10 == 0 || i + 1 == steps {
+                    println!("step {:4}  loss {loss:.6}", i + 1);
+                }
+            }
+            rec.curve(&format!("train_{model}"), &tr.curve)?;
+        }
+        "mhgru" => {
+            let spec = rt.manifest.get("mhgru_train_step").expect("artifact").clone();
+            let b = spec.meta["batch"] as usize;
+            let t_len = spec.meta["t"] as usize;
+            let (xs_all, labels_all) = deer::data::cifar_seq::generate(64, 2);
+            let mut tr = Trainer::new(&rt, "mhgru_train_step", "mhgru_train_step")?;
+            for i in 0..steps {
+                let mut xs = Vec::with_capacity(b * t_len * 3);
+                let mut labels = Vec::with_capacity(b);
+                for _ in 0..b {
+                    let row = rng.below(64);
+                    let img = &xs_all[row * deer::data::cifar_seq::SEQ_LEN * 3
+                        ..(row + 1) * deer::data::cifar_seq::SEQ_LEN * 3];
+                    xs.extend(deer::data::cifar_seq::subsample(img, t_len));
+                    labels.push(labels_all[row]);
+                }
+                let data = [Tensor::f32(vec![b, t_len, 3], xs), Tensor::i32(vec![b], labels)];
+                let (loss, acc) = tr.step(&data)?;
+                if i % 10 == 0 || i + 1 == steps {
+                    println!("step {:4}  loss {loss:.4}  acc {:.2}", i + 1, acc.unwrap_or(0.0));
+                }
+            }
+            rec.curve("train_mhgru", &tr.curve)?;
+        }
+        other => bail!("unknown model {other}"),
+    }
+    Ok(())
+}
+
+/// Table 1: EigenWorms classification accuracy, mean ± std over seeds
+/// (paper: GRU 88.0 ± 4.4 over 3 seeds; here on the synthetic substitute at
+/// the artifact's scale — the multi-seed protocol is the reproduced part).
+fn table1(args: &Args, rec: &Recorder) -> Result<()> {
+    let rt = Runtime::load(&PathBuf::from(
+        args.get("artifacts", Runtime::default_dir().to_str().unwrap()),
+    ))?;
+    let steps = args.get_parse("steps", 400usize).map_err(anyhow::Error::msg)?;
+    let seeds = args.get_list("seeds", &[0u64, 1, 2]).map_err(anyhow::Error::msg)?;
+    let spec = rt.manifest.get("worms_train_step").expect("artifact").clone();
+    let b = spec.meta["batch"] as usize;
+    let t_len = spec.meta["t"] as usize;
+    let eval_b = rt.manifest.get("worms_eval").unwrap().meta["batch"] as usize;
+
+    let mut accs = Vec::new();
+    for &seed in &seeds {
+        let (xs, labels) = deer::data::worms::generate(120, t_len, 1234 + seed);
+        let ds = deer::data::Dataset::new(xs, labels, t_len, deer::data::worms::CHANNELS);
+        let mut tr = Trainer::new(&rt, "worms_train_step", "worms_train_step")?;
+        let mut rng = Rng::new(seed);
+        for _ in 0..steps {
+            let (bx, bl, _) = ds.sample_batch(deer::data::Split::Train, b, &mut rng);
+            tr.step(&[
+                Tensor::f32(vec![b, t_len, deer::data::worms::CHANNELS], bx),
+                Tensor::i32(vec![b], bl),
+            ])?;
+        }
+        // test accuracy
+        let mut acc_sum = 0.0;
+        let mut nb = 0usize;
+        for idx in ds.batches(deer::data::Split::Test, eval_b) {
+            let (bx, bl) = ds.gather(&idx);
+            let (_, acc) = tr.eval(
+                "worms_eval",
+                &[
+                    Tensor::f32(vec![eval_b, t_len, deer::data::worms::CHANNELS], bx),
+                    Tensor::i32(vec![eval_b], bl),
+                ],
+            )?;
+            acc_sum += acc.unwrap_or(0.0);
+            nb += 1;
+        }
+        let acc = acc_sum / nb.max(1) as f64;
+        println!("seed {seed}: test acc {acc:.3}");
+        accs.push(acc);
+    }
+    let mean = accs.iter().sum::<f64>() / accs.len() as f64;
+    let std = (accs.iter().map(|a| (a - mean) * (a - mean)).sum::<f64>()
+        / (accs.len().max(2) - 1) as f64)
+        .sqrt();
+    let mut t = Table::new(&["model", "accuracy (mean ± std)", "seeds", "steps"]);
+    t.row(vec![
+        format!("GRU classifier (synthetic worms, T={t_len})"),
+        format!("{:.1} ± {:.1} %", mean * 100.0, std * 100.0),
+        seeds.len().to_string(),
+        steps.to_string(),
+    ]);
+    rec.table("table1_worms", "Table 1: EigenWorms-style accuracy over seeds", &t)?;
+    Ok(())
+}
+
+fn info(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.get("artifacts", Runtime::default_dir().to_str().unwrap()));
+    let manifest = deer::runtime::Manifest::load(&dir.join("manifest.json"))?;
+    println!("{} artifacts in {}:", manifest.artifacts.len(), dir.display());
+    for a in &manifest.artifacts {
+        println!(
+            "  {:24} inputs={:2} outputs={:2} params={}",
+            a.name,
+            a.inputs.len(),
+            a.outputs.len(),
+            a.params_file.as_deref().unwrap_or("-")
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! Experiment recording: write bench/training results as markdown + CSV
+//! under `results/`, in the format EXPERIMENTS.md references.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::util::table::Table;
+
+/// Destination for experiment outputs.
+#[derive(Debug, Clone)]
+pub struct Recorder {
+    pub dir: PathBuf,
+}
+
+impl Recorder {
+    pub fn new(dir: &Path) -> std::io::Result<Recorder> {
+        std::fs::create_dir_all(dir)?;
+        Ok(Recorder { dir: dir.to_path_buf() })
+    }
+
+    /// Default results directory (./results or $DEER_RESULTS).
+    pub fn default_dir() -> PathBuf {
+        std::env::var("DEER_RESULTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("results"))
+    }
+
+    /// Write a table under both .md and .csv, plus echo to stdout.
+    pub fn table(&self, name: &str, title: &str, table: &Table) -> std::io::Result<()> {
+        let md = format!("# {title}\n\n{}", table.to_markdown());
+        std::fs::write(self.dir.join(format!("{name}.md")), &md)?;
+        std::fs::write(self.dir.join(format!("{name}.csv")), table.to_csv())?;
+        println!("\n== {title} ==\n{}", table.to_markdown());
+        Ok(())
+    }
+
+    /// Append a line to a log file (training curves).
+    pub fn log_line(&self, name: &str, line: &str) -> std::io::Result<()> {
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(self.dir.join(format!("{name}.log")))?;
+        writeln!(f, "{line}")
+    }
+
+    /// Write a training curve as CSV.
+    pub fn curve(&self, name: &str, points: &[crate::train::CurvePoint]) -> std::io::Result<()> {
+        let mut out = String::from("step,wall_secs,loss,acc\n");
+        for p in points {
+            out.push_str(&format!(
+                "{},{:.3},{:.6},{}\n",
+                p.step,
+                p.wall_secs,
+                p.loss,
+                p.acc.map(|a| format!("{a:.4}")).unwrap_or_default()
+            ));
+        }
+        std::fs::write(self.dir.join(format!("{name}.csv")), out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::train::CurvePoint;
+
+    #[test]
+    fn writes_artifacts() {
+        let dir = std::env::temp_dir().join("deer_recorder_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let r = Recorder::new(&dir).unwrap();
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        r.table("t1", "Test table", &t).unwrap();
+        assert!(dir.join("t1.md").exists());
+        assert!(dir.join("t1.csv").exists());
+
+        r.curve(
+            "c1",
+            &[CurvePoint { step: 1, wall_secs: 0.1, loss: 2.0, acc: None }],
+        )
+        .unwrap();
+        let csv = std::fs::read_to_string(dir.join("c1.csv")).unwrap();
+        assert!(csv.contains("step,wall_secs,loss,acc"));
+        assert!(csv.contains("1,0.100,2.000000,"));
+    }
+}

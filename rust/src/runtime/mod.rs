@@ -1,0 +1,274 @@
+//! PJRT runtime: load and execute the AOT artifacts from
+//! `python/compile/aot.py`.
+//!
+//! Python never runs on this path: artifacts are HLO **text** (the only
+//! interchange format xla_extension 0.5.1 accepts from jax ≥ 0.5 — see
+//! /opt/xla-example/README.md), compiled once per process by the PJRT CPU
+//! client and cached. The manifest (`artifacts/manifest.json`) declares every
+//! artifact's input/output shapes and dtypes; [`Runtime::run`] validates
+//! calls against it so shape bugs surface as errors, not garbage numerics.
+
+pub mod tensor;
+
+pub use tensor::{Dtype, Tensor};
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Declared shape/dtype of one artifact input or output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+/// One artifact entry from the manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub params_file: Option<String>,
+    pub meta: HashMap<String, f64>,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+fn parse_iospec(v: &Json) -> Result<IoSpec> {
+    let name = v
+        .get("name")
+        .and_then(|s| s.as_str())
+        .ok_or_else(|| anyhow!("io spec missing name"))?
+        .to_string();
+    let shape = v
+        .get("shape")
+        .and_then(|s| s.as_arr())
+        .ok_or_else(|| anyhow!("io spec missing shape"))?
+        .iter()
+        .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad dim")))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = match v.get("dtype").and_then(|s| s.as_str()).unwrap_or("f32") {
+        "f32" => Dtype::F32,
+        "i32" => Dtype::I32,
+        other => bail!("unsupported dtype {other}"),
+    };
+    Ok(IoSpec { name, shape, dtype })
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        let root = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let mut artifacts = Vec::new();
+        for a in root
+            .get("artifacts")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+        {
+            let mut meta = HashMap::new();
+            if let Some(obj) = a.get("meta").and_then(|m| m.as_obj()) {
+                for (k, v) in obj {
+                    if let Some(x) = v.as_f64() {
+                        meta.insert(k.clone(), x);
+                    }
+                }
+            }
+            artifacts.push(ArtifactSpec {
+                name: a
+                    .get("name")
+                    .and_then(|s| s.as_str())
+                    .ok_or_else(|| anyhow!("artifact missing name"))?
+                    .to_string(),
+                file: a
+                    .get("file")
+                    .and_then(|s| s.as_str())
+                    .ok_or_else(|| anyhow!("artifact missing file"))?
+                    .to_string(),
+                inputs: a
+                    .get("inputs")
+                    .and_then(|v| v.as_arr())
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(parse_iospec)
+                    .collect::<Result<Vec<_>>>()?,
+                outputs: a
+                    .get("outputs")
+                    .and_then(|v| v.as_arr())
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(parse_iospec)
+                    .collect::<Result<Vec<_>>>()?,
+                params_file: a
+                    .get("params_file")
+                    .and_then(|s| s.as_str())
+                    .map(|s| s.to_string()),
+                meta,
+            });
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+/// PJRT-backed executor with a per-artifact compilation cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl Runtime {
+    /// Load the manifest in `dir` and create the PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Default artifact directory (./artifacts or $DEER_ARTIFACTS).
+    pub fn default_dir() -> PathBuf {
+        std::env::var("DEER_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    fn compile(&self, name: &str) -> Result<()> {
+        if self.cache.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let spec = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("loading {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        self.cache.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact with shape/dtype validation against the manifest.
+    pub fn run(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let spec = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?
+            .clone();
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (t, s) in inputs.iter().zip(spec.inputs.iter()) {
+            if t.shape != s.shape || t.dtype() != s.dtype {
+                bail!(
+                    "{name}: input '{}' expects {:?} {:?}, got {:?} {:?}",
+                    s.name,
+                    s.dtype,
+                    s.shape,
+                    t.dtype(),
+                    t.shape
+                );
+            }
+        }
+        self.compile(name)?;
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        let cache = self.cache.borrow();
+        let exe = cache.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = lit.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "{name}: expected {} outputs, got {}",
+                spec.outputs.len(),
+                parts.len()
+            );
+        }
+        parts
+            .into_iter()
+            .zip(spec.outputs.iter())
+            .map(|(l, s)| Tensor::from_literal(&l, &s.shape, s.dtype))
+            .collect()
+    }
+
+    /// Read an artifact's initial parameter vector (raw little-endian f32).
+    pub fn load_params(&self, name: &str) -> Result<Vec<f32>> {
+        let spec = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        let file = spec
+            .params_file
+            .as_ref()
+            .ok_or_else(|| anyhow!("{name} has no params_file"))?;
+        let bytes = std::fs::read(self.dir.join(file))?;
+        if bytes.len() % 4 != 0 {
+            bail!("{file}: length not a multiple of 4");
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let json = r#"{"artifacts": [{"name": "f", "file": "f.hlo.txt",
+            "inputs": [{"name": "x", "shape": [2, 3], "dtype": "f32"},
+                       {"name": "k", "shape": [], "dtype": "i32"}],
+            "outputs": [{"name": "y", "shape": [2], "dtype": "f32"}],
+            "meta": {"n": 16}, "params_file": "f_params.bin"}]}"#;
+        let dir = std::env::temp_dir().join("deer_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), json).unwrap();
+        let m = Manifest::load(&dir.join("manifest.json")).unwrap();
+        let a = m.get("f").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[1].dtype, Dtype::I32);
+        assert_eq!(a.outputs[0].shape, vec![2]);
+        assert_eq!(a.meta["n"], 16.0);
+        assert_eq!(a.params_file.as_deref(), Some("f_params.bin"));
+        assert!(m.get("nope").is_none());
+    }
+}

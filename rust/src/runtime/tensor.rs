@@ -1,0 +1,174 @@
+//! Host tensors exchanged with the PJRT runtime.
+
+use anyhow::{anyhow, bail, Result};
+
+/// Supported element types (the artifact set uses f32 + i32).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+/// Typed storage.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A host tensor: shape + row-major data.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor {
+            shape,
+            data: TensorData::F32(data),
+        }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor {
+            shape,
+            data: TensorData::I32(data),
+        }
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor::f32(vec![], vec![v])
+    }
+
+    pub fn scalar_i32(v: i32) -> Tensor {
+        Tensor::i32(vec![], vec![v])
+    }
+
+    pub fn zeros_f32(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor::f32(shape, vec![0.0; n])
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self.data {
+            TensorData::F32(_) => Dtype::F32,
+            TensorData::I32(_) => Dtype::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    /// First element as f64 (for scalar losses/metrics).
+    pub fn item(&self) -> Result<f64> {
+        match &self.data {
+            TensorData::F32(v) => v.first().map(|&x| x as f64),
+            TensorData::I32(v) => v.first().map(|&x| x as f64),
+        }
+        .ok_or_else(|| anyhow!("empty tensor"))
+    }
+
+    /// Convert to an xla Literal (reshaped to this tensor's dims).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            TensorData::F32(v) => {
+                if self.shape.is_empty() {
+                    return Ok(xla::Literal::scalar(v[0]));
+                }
+                xla::Literal::vec1(v)
+            }
+            TensorData::I32(v) => {
+                if self.shape.is_empty() {
+                    return Ok(xla::Literal::scalar(v[0]));
+                }
+                xla::Literal::vec1(v)
+            }
+        };
+        lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))
+    }
+
+    /// Build from an xla Literal with a declared spec.
+    pub fn from_literal(lit: &xla::Literal, shape: &[usize], dtype: Dtype) -> Result<Tensor> {
+        let want: usize = shape.iter().product();
+        match dtype {
+            Dtype::F32 => {
+                let v: Vec<f32> = lit.to_vec().map_err(|e| anyhow!("to_vec f32: {e:?}"))?;
+                if v.len() != want {
+                    bail!("literal has {} elements, spec wants {want}", v.len());
+                }
+                Ok(Tensor::f32(shape.to_vec(), v))
+            }
+            Dtype::I32 => {
+                let v: Vec<i32> = lit.to_vec().map_err(|e| anyhow!("to_vec i32: {e:?}"))?;
+                if v.len() != want {
+                    bail!("literal has {} elements, spec wants {want}", v.len());
+                }
+                Ok(Tensor::i32(shape.to_vec(), v))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_accessors() {
+        let t = Tensor::f32(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.dtype(), Dtype::F32);
+        assert!(t.as_f32().is_ok());
+        assert!(t.as_i32().is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::f32(vec![2, 2], vec![0.0; 3]);
+    }
+
+    #[test]
+    fn scalar_item() {
+        assert_eq!(Tensor::scalar_f32(2.5).item().unwrap(), 2.5);
+        assert_eq!(Tensor::scalar_i32(7).item().unwrap(), 7.0);
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        // Requires the PJRT shared library; literal ops are host-only.
+        let t = Tensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit, &[2, 2], Dtype::F32).unwrap();
+        assert_eq!(t, back);
+
+        let ti = Tensor::i32(vec![3], vec![5, -1, 9]);
+        let lit = ti.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit, &[3], Dtype::I32).unwrap();
+        assert_eq!(ti, back);
+    }
+}

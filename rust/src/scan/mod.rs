@@ -1,0 +1,159 @@
+//! Prefix scans over affine recurrence elements — the paper's eq. (10).
+//!
+//! The inverse linear operator `L_G⁻¹` of both DEER-RNN (eq. 11) and
+//! DEER-ODE (eq. 9) reduces to the first-order affine recurrence
+//!
+//! ```text
+//! y_i = A_i · y_{i−1} + b_i ,          i = 1 … L
+//! ```
+//!
+//! with the associative combine `(A₂,b₂) • (A₁,b₁) = (A₂A₁, A₂b₁ + b₂)`.
+//!
+//! * [`seq`] — the O(n²) -per-step sequential evaluation (also the baseline's
+//!   inner loop).
+//! * [`par`] — the parallel chunked three-phase scan (work O(n³·L/T) per
+//!   worker, depth O(L/T + T)); on real accelerators this is
+//!   `jax.lax.associative_scan`, reproduced at L1 by the Pallas kernel in
+//!   `python/compile/kernels/assoc_scan.py` with the identical phase
+//!   structure.
+//! * reverse variants (`*_scan_reverse`) — the dual (transposed) scan used by the DEER backward pass
+//!   (paper eq. 7): `λ_i = g_i + A_{i+1}ᵀ λ_{i+1}`.
+
+pub mod par;
+pub mod seq;
+
+pub use par::{par_scan_apply, par_scan_reverse};
+pub use seq::{seq_scan_apply, seq_scan_reverse};
+
+use crate::util::scalar::Scalar;
+
+/// Packed affine elements: `a` holds `len` row-major n×n matrices, `b` holds
+/// `len` n-vectors.
+#[derive(Debug, Clone)]
+pub struct AffineSeq<S> {
+    pub n: usize,
+    pub len: usize,
+    pub a: Vec<S>,
+    pub b: Vec<S>,
+}
+
+impl<S: Scalar> AffineSeq<S> {
+    pub fn zeros(n: usize, len: usize) -> Self {
+        AffineSeq {
+            n,
+            len,
+            a: vec![S::zero(); len * n * n],
+            b: vec![S::zero(); len * n],
+        }
+    }
+
+    #[inline]
+    pub fn a_at(&self, i: usize) -> &[S] {
+        &self.a[i * self.n * self.n..(i + 1) * self.n * self.n]
+    }
+    #[inline]
+    pub fn b_at(&self, i: usize) -> &[S] {
+        &self.b[i * self.n..(i + 1) * self.n]
+    }
+    #[inline]
+    pub fn a_at_mut(&mut self, i: usize) -> &mut [S] {
+        &mut self.a[i * self.n * self.n..(i + 1) * self.n * self.n]
+    }
+    #[inline]
+    pub fn b_at_mut(&mut self, i: usize) -> &mut [S] {
+        &mut self.b[i * self.n..(i + 1) * self.n]
+    }
+}
+
+/// The associative operator of eq. (10):
+/// `out = later ∘ earlier`, i.e. `(A_l A_e, A_l b_e + b_l)`.
+#[inline]
+pub fn combine<S: Scalar>(
+    a_later: &[S],
+    b_later: &[S],
+    a_earlier: &[S],
+    b_earlier: &[S],
+    a_out: &mut [S],
+    b_out: &mut [S],
+    n: usize,
+) {
+    crate::linalg::matmul(a_later, a_earlier, a_out, n);
+    crate::linalg::matvec(a_later, b_earlier, b_out);
+    for i in 0..n {
+        b_out[i] += b_later[i];
+    }
+}
+
+/// FLOPs for applying the recurrence once per element (matvec + add).
+pub fn flops_apply(n: usize, len: usize) -> u64 {
+    (2 * n * n + n) as u64 * len as u64
+}
+
+/// FLOPs for composing two elements (matmul + matvec + add).
+pub fn flops_combine(n: usize) -> u64 {
+    (2 * n * n * n + 2 * n * n + n) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// combine must be associative: (c•b)•a == c•(b•a).
+    #[test]
+    fn combine_is_associative() {
+        let n = 3;
+        let mut rng = Rng::new(77);
+        let mut el = Vec::new();
+        for _ in 0..3 {
+            let mut a = vec![0.0f64; n * n];
+            let mut b = vec![0.0f64; n];
+            rng.fill_normal(&mut a, 1.0);
+            rng.fill_normal(&mut b, 1.0);
+            el.push((a, b));
+        }
+        let (a0, b0) = &el[0];
+        let (a1, b1) = &el[1];
+        let (a2, b2) = &el[2];
+
+        let mut t_a = vec![0.0; n * n];
+        let mut t_b = vec![0.0; n];
+        let mut l_a = vec![0.0; n * n];
+        let mut l_b = vec![0.0; n];
+        // left-assoc: (e2 • e1) • e0
+        combine(a2, b2, a1, b1, &mut t_a, &mut t_b, n);
+        combine(&t_a, &t_b, a0, b0, &mut l_a, &mut l_b, n);
+        // right-assoc: e2 • (e1 • e0)
+        let mut u_a = vec![0.0; n * n];
+        let mut u_b = vec![0.0; n];
+        let mut r_a = vec![0.0; n * n];
+        let mut r_b = vec![0.0; n];
+        combine(a1, b1, a0, b0, &mut u_a, &mut u_b, n);
+        combine(a2, b2, &u_a, &u_b, &mut r_a, &mut r_b, n);
+
+        for (x, y) in l_a.iter().zip(r_a.iter()) {
+            assert!((x - y).abs() < 1e-12);
+        }
+        for (x, y) in l_b.iter().zip(r_b.iter()) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn identity_element() {
+        // (I, 0) is the identity of the monoid.
+        let n = 2;
+        let id_a = vec![1.0f64, 0.0, 0.0, 1.0];
+        let id_b = vec![0.0; 2];
+        let a = vec![0.5, -1.0, 2.0, 0.25];
+        let b = vec![3.0, -4.0];
+        let mut oa = vec![0.0; 4];
+        let mut ob = vec![0.0; 2];
+        combine(&a, &b, &id_a, &id_b, &mut oa, &mut ob, n);
+        assert_eq!(oa, a);
+        assert_eq!(ob, b);
+        combine(&id_a, &id_b, &a, &b, &mut oa, &mut ob, n);
+        assert_eq!(oa, a);
+        assert_eq!(ob, b);
+    }
+}

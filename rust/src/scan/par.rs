@@ -1,0 +1,312 @@
+//! Multi-threaded chunked prefix scan.
+//!
+//! Three-phase structure (the classic work-efficient decomposition, and the
+//! same schedule the L1 Pallas kernel expresses with BlockSpec over sequence
+//! blocks):
+//!
+//! 1. **Compose** — each of C chunks reduces its elements into a single
+//!    affine pair `(A_c, b_c)` (O(n³·L/C) per worker, fully parallel).
+//! 2. **Carry** — a sequential scan over the C chunk pairs produces the
+//!    entry state of every chunk (O(n²·C), negligible for C ≪ L).
+//! 3. **Apply** — each chunk replays the cheap O(n²) recurrence from its
+//!    entry state (fully parallel).
+//!
+//! On this single-core testbed the thread count is a *model* of accelerator
+//! lanes: wall-clock parity is expected at T=1 while the [`crate::simulator`]
+//! converts the phase work/depth into projected accelerator time. On a
+//! multi-core host the same code yields real speedups.
+
+use super::seq::{compose_range, seq_scan_apply, seq_scan_reverse};
+use crate::util::scalar::Scalar;
+
+/// Parallel `y_i = A_i y_{i−1} + b_i` over `threads` workers.
+///
+/// Falls back to [`seq_scan_apply`] when `threads <= 1` or the sequence is
+/// too short to amortize chunking.
+pub fn par_scan_apply<S: Scalar>(
+    a: &[S],
+    b: &[S],
+    y0: &[S],
+    out: &mut [S],
+    n: usize,
+    len: usize,
+    threads: usize,
+) {
+    if threads <= 1 || len < 4 * threads {
+        seq_scan_apply(a, b, y0, out, n, len);
+        return;
+    }
+    let chunks = threads;
+    let chunk_len = len.div_ceil(chunks);
+    let nn = n * n;
+
+    // Phase 1: per-chunk composition, in parallel.
+    let mut comp_a = vec![S::zero(); chunks * nn];
+    let mut comp_b = vec![S::zero(); chunks * n];
+    {
+        let comp: Vec<(&mut [S], &mut [S])> = comp_a
+            .chunks_mut(nn)
+            .zip(comp_b.chunks_mut(n))
+            .map(|(x, y)| (x, y))
+            .collect();
+        crossbeam_utils::thread::scope(|scope| {
+            for (c, (ca, cb)) in comp.into_iter().enumerate() {
+                let lo = c * chunk_len;
+                let hi = ((c + 1) * chunk_len).min(len);
+                scope.spawn(move |_| {
+                    compose_range(a, b, lo, hi, ca, cb, n);
+                });
+            }
+        })
+        .expect("scan phase 1 worker panicked");
+    }
+
+    // Phase 2: sequential carry over chunk entry states.
+    // entry[c] = state before chunk c (i.e. y at index c*chunk_len − 1).
+    let mut entries = vec![S::zero(); chunks * n];
+    entries[..n].copy_from_slice(y0);
+    let mut cur = y0.to_vec();
+    let mut nxt = vec![S::zero(); n];
+    for c in 0..chunks - 1 {
+        crate::linalg::matvec(&comp_a[c * nn..(c + 1) * nn], &cur, &mut nxt);
+        for j in 0..n {
+            nxt[j] += comp_b[c * n + j];
+        }
+        entries[(c + 1) * n..(c + 2) * n].copy_from_slice(&nxt);
+        std::mem::swap(&mut cur, &mut nxt);
+    }
+
+    // Phase 3: per-chunk apply, in parallel.
+    {
+        let mut out_chunks: Vec<&mut [S]> = Vec::with_capacity(chunks);
+        let mut rest = out;
+        for c in 0..chunks {
+            let lo = c * chunk_len;
+            let hi = ((c + 1) * chunk_len).min(len);
+            let (head, tail) = rest.split_at_mut((hi - lo) * n);
+            out_chunks.push(head);
+            rest = tail;
+        }
+        crossbeam_utils::thread::scope(|scope| {
+            for (c, out_c) in out_chunks.into_iter().enumerate() {
+                let lo = c * chunk_len;
+                let hi = ((c + 1) * chunk_len).min(len);
+                let entry = &entries[c * n..(c + 1) * n];
+                scope.spawn(move |_| {
+                    seq_scan_apply(
+                        &a[lo * nn..hi * nn],
+                        &b[lo * n..hi * n],
+                        entry,
+                        out_c,
+                        n,
+                        hi - lo,
+                    );
+                });
+            }
+        })
+        .expect("scan phase 3 worker panicked");
+    }
+}
+
+/// Parallel dual scan `λ_i = g_i + A_{i+1}ᵀ λ_{i+1}` (backward pass, eq. 7).
+///
+/// Same three-phase structure run right-to-left with transposed matrices.
+pub fn par_scan_reverse<S: Scalar>(
+    a: &[S],
+    g: &[S],
+    out: &mut [S],
+    n: usize,
+    len: usize,
+    threads: usize,
+) {
+    if threads <= 1 || len < 4 * threads {
+        seq_scan_reverse(a, g, out, n, len);
+        return;
+    }
+    let chunks = threads;
+    let chunk_len = len.div_ceil(chunks);
+    let nn = n * n;
+
+    // Phase 1: per-chunk reverse composition.
+    // For chunk [lo, hi): λ_{lo} = M_c λ_{hi} + v_c where M_c composes the
+    // transposed propagators and v_c the g contributions. Build by iterating
+    // i from hi−1 down to lo: λ_i = g_i + A_{i+1}ᵀ λ_{i+1}.
+    let mut comp_m = vec![S::zero(); chunks * nn];
+    let mut comp_v = vec![S::zero(); chunks * n];
+    {
+        let comp: Vec<(&mut [S], &mut [S])> = comp_m
+            .chunks_mut(nn)
+            .zip(comp_v.chunks_mut(n))
+            .map(|(x, y)| (x, y))
+            .collect();
+        crossbeam_utils::thread::scope(|scope| {
+            for (c, (cm, cv)) in comp.into_iter().enumerate() {
+                let lo = c * chunk_len;
+                let hi = ((c + 1) * chunk_len).min(len);
+                scope.spawn(move |_| {
+                    // Identity transform to start (λ_hi passes through).
+                    crate::linalg::eye_into(cm, n);
+                    for v in cv.iter_mut() {
+                        *v = S::zero();
+                    }
+                    let mut tm = vec![S::zero(); nn];
+                    let mut tv = vec![S::zero(); n];
+                    for i in (lo..hi).rev() {
+                        // λ_i = g_i + A_{i+1}ᵀ λ_{i+1}; A beyond len−1 treated as 0
+                        if i + 1 < len {
+                            let an = &a[(i + 1) * nn..(i + 2) * nn];
+                            // new M = A_{i+1}ᵀ · M ; new v = A_{i+1}ᵀ v + g_i
+                            // (transposed multiply)
+                            for r in 0..n {
+                                for ccol in 0..n {
+                                    let mut acc = S::zero();
+                                    for k in 0..n {
+                                        acc += an[k * n + r] * cm[k * n + ccol];
+                                    }
+                                    tm[r * n + ccol] = acc;
+                                }
+                            }
+                            crate::linalg::matvec_t(an, cv, &mut tv);
+                            cm.copy_from_slice(&tm);
+                            for j in 0..n {
+                                cv[j] = tv[j] + g[i * n + j];
+                            }
+                        } else {
+                            // last element of the whole sequence: λ = g only
+                            for v in cm.iter_mut() {
+                                *v = S::zero();
+                            }
+                            cv.copy_from_slice(&g[i * n..(i + 1) * n]);
+                        }
+                    }
+                });
+            }
+        })
+        .expect("reverse scan phase 1 worker panicked");
+    }
+
+    // Phase 2: carry λ at chunk boundaries, right to left.
+    // exit[c] = λ at index hi_c (i.e. entry of chunk c+1), with exit for the
+    // last chunk = 0 (no elements beyond the end).
+    let mut exits = vec![S::zero(); chunks * n];
+    let mut cur = vec![S::zero(); n];
+    for c in (0..chunks).rev() {
+        exits[c * n..(c + 1) * n].copy_from_slice(&cur);
+        // λ_{lo_c} = M_c·exit + v_c becomes exit of chunk c−1
+        let mut nxt = vec![S::zero(); n];
+        crate::linalg::matvec(&comp_m[c * nn..(c + 1) * nn], &cur, &mut nxt);
+        for j in 0..n {
+            nxt[j] += comp_v[c * n + j];
+        }
+        cur = nxt;
+    }
+
+    // Phase 3: per-chunk reverse apply.
+    {
+        let mut out_chunks: Vec<&mut [S]> = Vec::with_capacity(chunks);
+        let mut rest = out;
+        for c in 0..chunks {
+            let lo = c * chunk_len;
+            let hi = ((c + 1) * chunk_len).min(len);
+            let (head, tail) = rest.split_at_mut((hi - lo) * n);
+            out_chunks.push(head);
+            rest = tail;
+        }
+        crossbeam_utils::thread::scope(|scope| {
+            for (c, out_c) in out_chunks.into_iter().enumerate() {
+                let lo = c * chunk_len;
+                let hi = ((c + 1) * chunk_len).min(len);
+                let exit = &exits[c * n..(c + 1) * n];
+                scope.spawn(move |_| {
+                    let clen = hi - lo;
+                    let mut next = exit.to_vec();
+                    let mut tmp = vec![S::zero(); n];
+                    for i in (lo..hi).rev() {
+                        let li = i - lo;
+                        if i + 1 < len {
+                            let an = &a[(i + 1) * nn..(i + 2) * nn];
+                            crate::linalg::matvec_t(an, &next, &mut tmp);
+                            for j in 0..n {
+                                out_c[li * n + j] = g[i * n + j] + tmp[j];
+                            }
+                        } else {
+                            out_c[li * n..(li + 1) * n]
+                                .copy_from_slice(&g[i * n..(i + 1) * n]);
+                        }
+                        next.copy_from_slice(&out_c[li * n..(li + 1) * n]);
+                    }
+                    let _ = clen;
+                });
+            }
+        })
+        .expect("reverse scan phase 3 worker panicked");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_seq(n: usize, len: usize, seed: u64) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let mut a = vec![0.0; len * n * n];
+        let mut b = vec![0.0; len * n];
+        let mut y0 = vec![0.0; n];
+        rng.fill_normal(&mut a, 0.4);
+        rng.fill_normal(&mut b, 1.0);
+        rng.fill_normal(&mut y0, 1.0);
+        (a, b, y0)
+    }
+
+    #[test]
+    fn par_matches_seq_forward() {
+        for &(n, len, threads) in &[(1usize, 100usize, 4usize), (2, 257, 3), (4, 64, 8), (3, 1000, 2)] {
+            let (a, b, y0) = random_seq(n, len, n as u64 * 31 + len as u64);
+            let mut out_s = vec![0.0; len * n];
+            let mut out_p = vec![0.0; len * n];
+            seq_scan_apply(&a, &b, &y0, &mut out_s, n, len);
+            par_scan_apply(&a, &b, &y0, &mut out_p, n, len, threads);
+            for (i, (x, y)) in out_s.iter().zip(out_p.iter()).enumerate() {
+                assert!((x - y).abs() < 1e-9, "n={n} len={len} t={threads} i={i}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn par_matches_seq_reverse() {
+        for &(n, len, threads) in &[(1usize, 97usize, 4usize), (2, 300, 3), (4, 65, 8)] {
+            let (a, g, _) = random_seq(n, len, n as u64 * 17 + len as u64);
+            let mut out_s = vec![0.0; len * n];
+            let mut out_p = vec![0.0; len * n];
+            seq_scan_reverse(&a, &g, &mut out_s, n, len);
+            par_scan_reverse(&a, &g, &mut out_p, n, len, threads);
+            for (i, (x, y)) in out_s.iter().zip(out_p.iter()).enumerate() {
+                assert!((x - y).abs() < 1e-9, "n={n} len={len} t={threads} i={i}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn short_sequences_fall_back() {
+        let (a, b, y0) = random_seq(2, 5, 9);
+        let mut out_s = vec![0.0; 10];
+        let mut out_p = vec![0.0; 10];
+        seq_scan_apply(&a, &b, &y0, &mut out_s, 2, 5);
+        par_scan_apply(&a, &b, &y0, &mut out_p, 2, 5, 8);
+        assert_eq!(out_s, out_p);
+    }
+
+    #[test]
+    fn uneven_chunk_lengths() {
+        // len not divisible by threads exercises the tail chunk.
+        let (a, b, y0) = random_seq(3, 101, 10);
+        let mut out_s = vec![0.0; 303];
+        let mut out_p = vec![0.0; 303];
+        seq_scan_apply(&a, &b, &y0, &mut out_s, 3, 101);
+        par_scan_apply(&a, &b, &y0, &mut out_p, 3, 101, 7);
+        for (x, y) in out_s.iter().zip(out_p.iter()) {
+            assert!((x - y).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,229 @@
+//! Sequential evaluation of the affine recurrence (and its dual).
+
+use crate::util::scalar::Scalar;
+
+/// `out[i] = A_i · y_{i−1} + b_i` with `y_{−1} = y0`; `out` has `len·n`.
+///
+/// This is the work-optimal O(n²·L) evaluation used (a) inside each chunk of
+/// the parallel scan's phase 3 and (b) by the sequential DEER baseline's
+/// `L_G⁻¹`.
+pub fn seq_scan_apply<S: Scalar>(a: &[S], b: &[S], y0: &[S], out: &mut [S], n: usize, len: usize) {
+    debug_assert_eq!(a.len(), len * n * n);
+    debug_assert_eq!(b.len(), len * n);
+    debug_assert_eq!(out.len(), len * n);
+    if len == 0 {
+        return;
+    }
+    if n == 1 {
+        // scalar fast path
+        let mut prev = y0[0];
+        for i in 0..len {
+            prev = a[i] * prev + b[i];
+            out[i] = prev;
+        }
+        return;
+    }
+    // first element from y0
+    {
+        let a0 = &a[..n * n];
+        let (head, _) = out.split_at_mut(n);
+        crate::linalg::matvec(a0, y0, head);
+        for j in 0..n {
+            head[j] += b[j];
+        }
+    }
+    for i in 1..len {
+        let (prev_part, cur_part) = out.split_at_mut(i * n);
+        let prev = &prev_part[(i - 1) * n..];
+        let cur = &mut cur_part[..n];
+        let ai = &a[i * n * n..(i + 1) * n * n];
+        crate::linalg::matvec(ai, prev, cur);
+        let bi = &b[i * n..(i + 1) * n];
+        for j in 0..n {
+            cur[j] += bi[j];
+        }
+    }
+}
+
+/// Dual (reverse, transposed) recurrence of the DEER backward pass (eq. 7):
+///
+/// `λ_i = g_i + A_{i+1}ᵀ · λ_{i+1}`, `λ_{L−1} = g_{L−1}`.
+///
+/// `a[i]` is the Jacobian propagating step i−1 → i (same layout as the
+/// forward scan), so position i uses `a[i+1]`.
+pub fn seq_scan_reverse<S: Scalar>(a: &[S], g: &[S], out: &mut [S], n: usize, len: usize) {
+    debug_assert_eq!(a.len(), len * n * n);
+    debug_assert_eq!(g.len(), len * n);
+    debug_assert_eq!(out.len(), len * n);
+    if len == 0 {
+        return;
+    }
+    if n == 1 {
+        let mut next = g[len - 1];
+        out[len - 1] = next;
+        for i in (0..len - 1).rev() {
+            next = g[i] + a[i + 1] * next;
+            out[i] = next;
+        }
+        return;
+    }
+    out[(len - 1) * n..].copy_from_slice(&g[(len - 1) * n..]);
+    let mut tmp = vec![S::zero(); n];
+    for i in (0..len - 1).rev() {
+        let a_next = &a[(i + 1) * n * n..(i + 2) * n * n];
+        let (cur_part, next_part) = out.split_at_mut((i + 1) * n);
+        let next = &next_part[..n];
+        crate::linalg::matvec_t(a_next, next, &mut tmp);
+        let cur = &mut cur_part[i * n..];
+        let gi = &g[i * n..(i + 1) * n];
+        for j in 0..n {
+            cur[j] = gi[j] + tmp[j];
+        }
+    }
+}
+
+/// Compose a contiguous range of elements into a single `(A, b)` pair:
+/// `A = A_{hi−1}···A_{lo}`, `b` the matching offset. O(n³·(hi−lo)).
+pub fn compose_range<S: Scalar>(
+    a: &[S],
+    b: &[S],
+    lo: usize,
+    hi: usize,
+    a_out: &mut [S],
+    b_out: &mut [S],
+    n: usize,
+) {
+    crate::linalg::eye_into(a_out, n);
+    for v in b_out.iter_mut() {
+        *v = S::zero();
+    }
+    let mut tmp_a = vec![S::zero(); n * n];
+    let mut tmp_b = vec![S::zero(); n];
+    for i in lo..hi {
+        let ai = &a[i * n * n..(i + 1) * n * n];
+        let bi = &b[i * n..(i + 1) * n];
+        // (A_i, b_i) ∘ (A_out, b_out)
+        crate::linalg::matmul(ai, a_out, &mut tmp_a, n);
+        crate::linalg::matvec(ai, b_out, &mut tmp_b);
+        a_out.copy_from_slice(&tmp_a);
+        for j in 0..n {
+            b_out[j] = tmp_b[j] + bi[j];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_seq(n: usize, len: usize, seed: u64) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let mut a = vec![0.0; len * n * n];
+        let mut b = vec![0.0; len * n];
+        let mut y0 = vec![0.0; n];
+        rng.fill_normal(&mut a, 0.5);
+        rng.fill_normal(&mut b, 1.0);
+        rng.fill_normal(&mut y0, 1.0);
+        (a, b, y0)
+    }
+
+    #[test]
+    fn matches_naive_recurrence() {
+        let (n, len) = (3, 17);
+        let (a, b, y0) = random_seq(n, len, 1);
+        let mut out = vec![0.0; len * n];
+        seq_scan_apply(&a, &b, &y0, &mut out, n, len);
+
+        let mut y = y0.clone();
+        for i in 0..len {
+            let mut ynew = vec![0.0; n];
+            crate::linalg::matvec(&a[i * n * n..(i + 1) * n * n], &y, &mut ynew);
+            for j in 0..n {
+                ynew[j] += b[i * n + j];
+            }
+            for j in 0..n {
+                assert!((out[i * n + j] - ynew[j]).abs() < 1e-12);
+            }
+            y = ynew;
+        }
+    }
+
+    #[test]
+    fn scalar_fast_path_matches_general() {
+        let (a, b, y0) = random_seq(1, 64, 2);
+        let mut out1 = vec![0.0; 64];
+        seq_scan_apply(&a, &b, &y0, &mut out1, 1, 64);
+        // general path via 2x2 embedding: [[a,0],[0,0]] y + [b,0]
+        let mut a2 = vec![0.0; 64 * 4];
+        let mut b2 = vec![0.0; 64 * 2];
+        for i in 0..64 {
+            a2[i * 4] = a[i];
+            b2[i * 2] = b[i];
+        }
+        let mut out2 = vec![0.0; 64 * 2];
+        seq_scan_apply(&a2, &b2, &[y0[0], 0.0], &mut out2, 2, 64);
+        for i in 0..64 {
+            assert!((out1[i] - out2[i * 2]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn reverse_matches_naive() {
+        let (n, len) = (2, 11);
+        let (a, g, _) = random_seq(n, len, 3);
+        let mut lam = vec![0.0; len * n];
+        seq_scan_reverse(&a, &g, &mut lam, n, len);
+
+        // naive
+        let mut next = g[(len - 1) * n..].to_vec();
+        for j in 0..n {
+            assert!((lam[(len - 1) * n + j] - next[j]).abs() < 1e-12);
+        }
+        for i in (0..len - 1).rev() {
+            let a_next = &a[(i + 1) * n * n..(i + 2) * n * n];
+            let mut t = vec![0.0; n];
+            crate::linalg::matvec_t(a_next, &next, &mut t);
+            let cur: Vec<f64> = (0..n).map(|j| g[i * n + j] + t[j]).collect();
+            for j in 0..n {
+                assert!((lam[i * n + j] - cur[j]).abs() < 1e-12);
+            }
+            next = cur;
+        }
+    }
+
+    #[test]
+    fn compose_range_equals_endpoint() {
+        // Applying the composed transform to y0 == running the scan to hi−1.
+        let (n, len) = (3, 9);
+        let (a, b, y0) = random_seq(n, len, 4);
+        let mut out = vec![0.0; len * n];
+        seq_scan_apply(&a, &b, &y0, &mut out, n, len);
+
+        let mut ca = vec![0.0; n * n];
+        let mut cb = vec![0.0; n];
+        compose_range(&a, &b, 0, len, &mut ca, &mut cb, n);
+        let mut y_end = vec![0.0; n];
+        crate::linalg::matvec(&ca, &y0, &mut y_end);
+        for j in 0..n {
+            y_end[j] += cb[j];
+        }
+        for j in 0..n {
+            assert!((y_end[j] - out[(len - 1) * n + j]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let mut out: Vec<f64> = vec![];
+        seq_scan_apply::<f64>(&[], &[], &[1.0], &mut out, 1, 0);
+        let a = vec![2.0];
+        let b = vec![3.0];
+        let mut out = vec![0.0];
+        seq_scan_apply(&a, &b, &[4.0], &mut out, 1, 1);
+        assert_eq!(out, vec![11.0]);
+        let mut lam = vec![0.0];
+        seq_scan_reverse(&a, &b, &mut lam, 1, 1);
+        assert_eq!(lam, vec![3.0]);
+    }
+}

@@ -1,0 +1,132 @@
+//! Device models and the kernel-time primitive.
+
+/// A modelled accelerator (or CPU) device.
+#[derive(Debug, Clone)]
+pub struct Device {
+    pub name: String,
+    /// Peak throughput, FLOP/s (f32).
+    pub peak_flops: f64,
+    /// Parallel lanes (≈ CUDA cores); work with less parallelism than this
+    /// underutilizes the device proportionally.
+    pub lanes: f64,
+    /// Memory bandwidth, bytes/s.
+    pub mem_bw: f64,
+    /// Per-kernel launch/dispatch overhead, seconds. This is what makes
+    /// sequential RNN evaluation slow on GPUs (one kernel per time step).
+    pub launch_overhead: f64,
+    /// Device memory capacity, bytes.
+    pub mem_bytes: u64,
+}
+
+/// One modelled kernel invocation.
+#[derive(Debug, Clone, Copy)]
+pub struct Kernel {
+    /// Floating-point operations in the kernel.
+    pub flops: f64,
+    /// Bytes moved to/from device memory.
+    pub bytes: f64,
+    /// Independent scalar lanes of work available.
+    pub parallelism: f64,
+}
+
+impl Device {
+    /// Roofline with a utilization factor for under-parallel work.
+    pub fn kernel_time(&self, k: &Kernel) -> f64 {
+        let util = (k.parallelism / self.lanes).min(1.0);
+        let eff_flops = self.peak_flops * util.max(1e-12);
+        let t_compute = k.flops / eff_flops;
+        let t_mem = k.bytes / self.mem_bw;
+        t_compute.max(t_mem) + self.launch_overhead
+    }
+}
+
+/// NVIDIA V100 (SXM2 16 GB): 15.7 TFLOP/s f32, 900 GB/s, 5120 CUDA cores.
+/// Launch overhead 5 µs — calibrated so the sequential GRU at n=1, B=16,
+/// T=1M costs ≈8 s, the paper's measured 8.7 s (§4.1).
+pub fn v100() -> Device {
+    Device {
+        name: "V100-sim".into(),
+        peak_flops: 15.7e12,
+        lanes: 5120.0,
+        mem_bw: 900.0e9,
+        launch_overhead: 5.0e-6,
+        mem_bytes: 16 * (1 << 30),
+    }
+}
+
+/// NVIDIA A100 (SXM4 40 GB): 19.5 TFLOP/s f32, 1555 GB/s, 6912 CUDA cores.
+/// Slightly lower launch overhead; larger memory (Fig. 7's comparison axis).
+pub fn a100() -> Device {
+    Device {
+        name: "A100-sim".into(),
+        peak_flops: 19.5e12,
+        lanes: 6912.0,
+        mem_bw: 1555.0e9,
+        launch_overhead: 4.0e-6,
+        mem_bytes: 40 * (1 << 30),
+    }
+}
+
+/// The actual testbed: one CPU core. Used to sanity-check the model against
+/// measured wall-clock in the bench harness.
+pub fn cpu_1core() -> Device {
+    Device {
+        name: "cpu-1core".into(),
+        peak_flops: 8.0e9,
+        lanes: 1.0,
+        mem_bw: 20.0e9,
+        launch_overhead: 0.0,
+        mem_bytes: 8 * (1 << 30),
+    }
+}
+
+/// Per-phase simulated time of one DEER evaluation.
+#[derive(Debug, Clone, Copy)]
+pub struct SimBreakdown {
+    pub funceval: f64,
+    pub gtmult: f64,
+    pub invlin: f64,
+    /// True if the Jacobian working set exceeds device memory (the paper's
+    /// missing cells in Fig. 2 / Table 4).
+    pub oom: bool,
+}
+
+impl SimBreakdown {
+    pub fn total(&self) -> f64 {
+        self.funceval + self.gtmult + self.invlin
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_time_monotone_in_work() {
+        let dev = v100();
+        let small = Kernel { flops: 1e6, bytes: 1e4, parallelism: 1e6 };
+        let big = Kernel { flops: 1e9, bytes: 1e4, parallelism: 1e6 };
+        assert!(dev.kernel_time(&big) > dev.kernel_time(&small));
+    }
+
+    #[test]
+    fn low_parallelism_hurts() {
+        let dev = v100();
+        let wide = Kernel { flops: 1e9, bytes: 1.0, parallelism: 1e7 };
+        let narrow = Kernel { flops: 1e9, bytes: 1.0, parallelism: 16.0 };
+        assert!(dev.kernel_time(&narrow) > 10.0 * dev.kernel_time(&wide));
+    }
+
+    #[test]
+    fn overhead_floor() {
+        let dev = v100();
+        let tiny = Kernel { flops: 1.0, bytes: 1.0, parallelism: 1.0 };
+        assert!(dev.kernel_time(&tiny) >= dev.launch_overhead);
+    }
+
+    #[test]
+    fn a100_faster_than_v100_on_wide_work() {
+        let k = Kernel { flops: 1e12, bytes: 1e10, parallelism: 1e8 };
+        assert!(a100().kernel_time(&k) < v100().kernel_time(&k));
+    }
+}

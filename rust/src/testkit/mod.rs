@@ -1,0 +1,105 @@
+//! In-repo property-testing mini-framework.
+//!
+//! proptest is not in the offline registry, so this provides the shape the
+//! test suite needs: run a property over many random inputs, report the
+//! failing seed/case, and rerun deterministically. The Python side uses
+//! hypothesis (which IS installed) for the kernel sweeps.
+
+use crate::util::rng::Rng;
+
+/// Outcome of a property check.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` over `iters` random inputs produced by `gen`.
+///
+/// On failure, panics with the iteration index, seed and the failure
+/// message so the case can be replayed (`forall_seeded` with that seed).
+pub fn forall<T, G, P>(iters: usize, seed: u64, mut gen: G, prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: Fn(&T) -> PropResult,
+    T: std::fmt::Debug,
+{
+    let mut rng = Rng::new(seed);
+    for i in 0..iters {
+        let case_seed = rng.next_u64();
+        let mut case_rng = Rng::new(case_seed);
+        let case = gen(&mut case_rng);
+        if let Err(msg) = prop(&case) {
+            panic!(
+                "property failed at iteration {i} (case_seed={case_seed:#x}):\n  {msg}\n  case: {case:?}"
+            );
+        }
+    }
+}
+
+/// Replay a single case by seed.
+pub fn forall_seeded<T, G, P>(case_seed: u64, mut gen: G, prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: Fn(&T) -> PropResult,
+    T: std::fmt::Debug,
+{
+    let mut case_rng = Rng::new(case_seed);
+    let case = gen(&mut case_rng);
+    if let Err(msg) = prop(&case) {
+        panic!("property failed (case_seed={case_seed:#x}): {msg}\n  case: {case:?}");
+    }
+}
+
+/// Helper: approximate slice equality with context.
+pub fn close(a: &[f64], b: &[f64], tol: f64) -> PropResult {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        if (x - y).abs() > tol {
+            return Err(format!("element {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        forall(
+            50,
+            1,
+            |rng| rng.uniform_in(-10.0, 10.0),
+            |x| {
+                if x * x >= 0.0 {
+                    Ok(())
+                } else {
+                    Err("squares are nonnegative".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        forall(
+            50,
+            2,
+            |rng| rng.uniform_in(0.0, 1.0),
+            |x| {
+                if *x < 0.5 {
+                    Ok(())
+                } else {
+                    Err(format!("{x} >= 0.5"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn close_reports_index() {
+        let e = close(&[1.0, 2.0], &[1.0, 3.0], 0.1).unwrap_err();
+        assert!(e.contains("element 1"));
+    }
+}

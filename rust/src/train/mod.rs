@@ -1,0 +1,126 @@
+//! Artifact-driven training (the L3 hot path).
+//!
+//! The trainer owns the optimizer state as host tensors and advances it by
+//! executing the AOT-compiled `*_train_step` artifacts — every forward,
+//! backward, and Adam update runs inside one fused PJRT executable; Rust
+//! only moves buffers and logs. This is the end-to-end driver the examples
+//! use for Fig. 4 (HNN and EigenWorms training curves).
+
+use anyhow::{anyhow, Result};
+use std::time::Instant;
+
+use crate::runtime::{Runtime, Tensor};
+
+/// A point on the training curve.
+#[derive(Debug, Clone)]
+pub struct CurvePoint {
+    pub step: usize,
+    pub wall_secs: f64,
+    pub loss: f64,
+    pub acc: Option<f64>,
+}
+
+/// Optimizer + parameter state exchanged with train-step artifacts.
+#[derive(Debug, Clone)]
+pub struct TrainerState {
+    pub params: Tensor,
+    pub adam_m: Tensor,
+    pub adam_v: Tensor,
+    pub step: Tensor,
+}
+
+impl TrainerState {
+    /// Fresh state from the artifact's shipped initial parameters.
+    pub fn init(rt: &Runtime, artifact: &str) -> Result<TrainerState> {
+        let params = rt.load_params(artifact)?;
+        let p = params.len();
+        Ok(TrainerState {
+            params: Tensor::f32(vec![p], params),
+            adam_m: Tensor::zeros_f32(vec![p]),
+            adam_v: Tensor::zeros_f32(vec![p]),
+            step: Tensor::scalar_i32(0),
+        })
+    }
+
+    pub fn step_count(&self) -> i32 {
+        self.step.as_i32().map(|s| s[0]).unwrap_or(0)
+    }
+}
+
+/// Generic trainer over a train-step artifact whose signature is
+/// `(params, m, v, step, <data...>) -> (params, m, v, step, loss[, acc])`.
+pub struct Trainer<'rt> {
+    pub rt: &'rt Runtime,
+    pub artifact: String,
+    pub state: TrainerState,
+    pub curve: Vec<CurvePoint>,
+    started: Instant,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(rt: &'rt Runtime, artifact: &str, init_from: &str) -> Result<Trainer<'rt>> {
+        Ok(Trainer {
+            rt,
+            artifact: artifact.to_string(),
+            state: TrainerState::init(rt, init_from)?,
+            curve: Vec::new(),
+            started: Instant::now(),
+        })
+    }
+
+    /// One optimization step with the given data tensors appended to the
+    /// state inputs. Returns (loss, acc-if-present).
+    pub fn step(&mut self, data: &[Tensor]) -> Result<(f64, Option<f64>)> {
+        let mut inputs = vec![
+            self.state.params.clone(),
+            self.state.adam_m.clone(),
+            self.state.adam_v.clone(),
+            self.state.step.clone(),
+        ];
+        inputs.extend_from_slice(data);
+        let mut out = self.rt.run(&self.artifact, &inputs)?;
+        if out.len() < 5 {
+            return Err(anyhow!("{}: expected ≥5 outputs", self.artifact));
+        }
+        let acc = if out.len() >= 6 { Some(out[5].item()?) } else { None };
+        let loss = out[4].item()?;
+        self.state.step = out.remove(3);
+        self.state.adam_v = out.remove(2);
+        self.state.adam_m = out.remove(1);
+        self.state.params = out.remove(0);
+        self.curve.push(CurvePoint {
+            step: self.state.step_count() as usize,
+            wall_secs: self.started.elapsed().as_secs_f64(),
+            loss,
+            acc,
+        });
+        Ok((loss, acc))
+    }
+
+    /// Run an eval artifact `(params, <data...>) -> (loss[, acc])`.
+    pub fn eval(&self, eval_artifact: &str, data: &[Tensor]) -> Result<(f64, Option<f64>)> {
+        let mut inputs = vec![self.state.params.clone()];
+        inputs.extend_from_slice(data);
+        let out = self.rt.run(eval_artifact, &inputs)?;
+        let loss = out[0].item()?;
+        let acc = if out.len() >= 2 { Some(out[1].item()?) } else { None };
+        Ok((loss, acc))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn curve_point_fields() {
+        let p = CurvePoint {
+            step: 3,
+            wall_secs: 1.5,
+            loss: 0.25,
+            acc: Some(0.9),
+        };
+        assert_eq!(p.step, 3);
+        assert_eq!(p.acc, Some(0.9));
+    }
+}

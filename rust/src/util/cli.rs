@@ -1,0 +1,150 @@
+//! Minimal command-line argument parsing (clap is unavailable offline).
+//!
+//! Supports `program SUBCOMMAND --flag value --switch positional...` with
+//! typed accessors and helpful error messages.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding `argv[0]`).
+    pub fn parse_from<I: IntoIterator<Item = String>>(items: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        // First non-flag token is the subcommand.
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = it.next();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    // `--` terminator: remainder is positional.
+                    out.positional.extend(it.by_ref());
+                    break;
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // Value if next token exists and is not a flag.
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            out.flags.insert(name.to_string(), v);
+                        }
+                        _ => out.switches.push(name.to_string()),
+                    }
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    /// Boolean switch (`--verbose`).
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name) || self.flags.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    /// String flag with default.
+    pub fn get<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.flags.get(name).map(|s| s.as_str()).unwrap_or(default)
+    }
+
+    /// Optional string flag.
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    /// Required flag.
+    pub fn require(&self, name: &str) -> Result<&str, String> {
+        self.opt(name).ok_or_else(|| format!("missing required flag --{name}"))
+    }
+
+    /// Typed flag with default.
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse::<T>().map_err(|e| format!("--{name}={v}: {e}")),
+        }
+    }
+
+    /// Comma-separated list flag, e.g. `--dims 1,2,4`.
+    pub fn get_list<T: std::str::FromStr>(&self, name: &str, default: &[T]) -> Result<Vec<T>, String>
+    where
+        T::Err: std::fmt::Display,
+        T: Clone,
+    {
+        match self.flags.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.trim().parse::<T>().map_err(|e| format!("--{name}: {s}: {e}")))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(|t| t.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("bench --exp fig2 --dims 1,2,4 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("bench"));
+        assert_eq!(a.get("exp", ""), "fig2");
+        assert!(a.switch("verbose"));
+        assert_eq!(a.get_list::<usize>("dims", &[]).unwrap(), vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("train --steps=300 --lr=0.001");
+        assert_eq!(a.get_parse::<usize>("steps", 0).unwrap(), 300);
+        assert!((a.get_parse::<f64>("lr", 0.0).unwrap() - 0.001).abs() < 1e-12);
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = parse("run");
+        assert_eq!(a.get("mode", "deer"), "deer");
+        assert!(a.require("missing").is_err());
+        assert_eq!(a.get_parse::<usize>("n", 8).unwrap(), 8);
+    }
+
+    #[test]
+    fn positional_after_double_dash() {
+        let a = parse("exec --flag v -- a b");
+        assert_eq!(a.positional, vec!["a", "b"]);
+    }
+
+    #[test]
+    fn bad_parse_is_error() {
+        let a = parse("x --n abc");
+        assert!(a.get_parse::<usize>("n", 0).is_err());
+    }
+}

@@ -1,0 +1,88 @@
+//! Floating-point scalar abstraction.
+//!
+//! The paper evaluates DEER under both f32 and f64 (Fig. 6: iteration count
+//! vs. tolerance per precision), so the whole engine is generic over
+//! [`Scalar`]. Default convergence tolerances follow §3.5 of the paper:
+//! `1e-4` for single precision and `1e-7` for double precision.
+
+use num_traits::Float;
+
+/// Floating point scalar usable throughout the DEER engine.
+pub trait Scalar:
+    Float
+    + num_traits::NumAssign
+    + num_traits::FromPrimitive
+    + std::iter::Sum
+    + std::fmt::Debug
+    + std::fmt::Display
+    + Send
+    + Sync
+    + 'static
+{
+    /// Human-readable dtype name ("f32" / "f64").
+    const NAME: &'static str;
+
+    /// Paper §3.5 default convergence tolerance for this precision.
+    fn default_tol() -> Self;
+
+    /// Machine epsilon.
+    fn eps() -> Self;
+
+    /// Lossless-ish conversion from f64 (used for constants).
+    fn from_f64c(v: f64) -> Self {
+        num_traits::FromPrimitive::from_f64(v).expect("f64 conversion")
+    }
+
+    /// Conversion to f64 for reporting.
+    fn to_f64c(self) -> f64;
+}
+
+impl Scalar for f32 {
+    const NAME: &'static str = "f32";
+    fn default_tol() -> Self {
+        1e-4
+    }
+    fn eps() -> Self {
+        f32::EPSILON
+    }
+    fn to_f64c(self) -> f64 {
+        self as f64
+    }
+}
+
+impl Scalar for f64 {
+    const NAME: &'static str = "f64";
+    fn default_tol() -> Self {
+        1e-7
+    }
+    fn eps() -> Self {
+        f64::EPSILON
+    }
+    fn to_f64c(self) -> f64 {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tolerances_match_paper() {
+        assert_eq!(<f32 as Scalar>::default_tol(), 1e-4f32);
+        assert_eq!(<f64 as Scalar>::default_tol(), 1e-7f64);
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(<f32 as Scalar>::NAME, "f32");
+        assert_eq!(<f64 as Scalar>::NAME, "f64");
+    }
+
+    #[test]
+    fn f64_roundtrip() {
+        let x = <f64 as Scalar>::from_f64c(0.125);
+        assert_eq!(x, 0.125);
+        assert_eq!(x.to_f64c(), 0.125);
+    }
+}

@@ -1,0 +1,173 @@
+//! Wall-clock benchmarking helpers.
+//!
+//! criterion is unavailable offline; this module provides the statistical
+//! core the benchmark harness needs: warmup, repeated measurement, and
+//! mean / std / min reporting.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over repeated timings.
+#[derive(Debug, Clone)]
+pub struct Timing {
+    pub samples: Vec<f64>, // seconds
+}
+
+impl Timing {
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len().max(1) as f64
+    }
+    pub fn std(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let v = self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / (self.samples.len() - 1) as f64;
+        v.sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+    pub fn median(&self) -> f64 {
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if s.is_empty() {
+            return 0.0;
+        }
+        let mid = s.len() / 2;
+        if s.len() % 2 == 0 {
+            (s[mid - 1] + s[mid]) / 2.0
+        } else {
+            s[mid]
+        }
+    }
+}
+
+/// Benchmark a closure: `warmup` unmeasured runs then `reps` measured runs.
+pub fn bench<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Timing { samples }
+}
+
+/// Benchmark with an adaptive repetition count: keep measuring until either
+/// `max_reps` samples or `budget` wall-clock is spent (at least `min_reps`).
+pub fn bench_budget<F: FnMut()>(min_reps: usize, max_reps: usize, budget: Duration, mut f: F) -> Timing {
+    // one warmup
+    f();
+    let start = Instant::now();
+    let mut samples = Vec::new();
+    while samples.len() < max_reps && (samples.len() < min_reps || start.elapsed() < budget) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Timing { samples }
+}
+
+/// Format seconds human-readably.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.2} s", s)
+    }
+}
+
+/// Simple phase stopwatch for profiling (Table 5: FUNCEVAL / GTMULT / INVLIN).
+#[derive(Debug, Default, Clone)]
+pub struct PhaseProfile {
+    entries: Vec<(String, f64)>,
+}
+
+impl PhaseProfile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    /// Time a closure under the given phase label, accumulating.
+    pub fn record<T>(&mut self, label: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(label, t0.elapsed().as_secs_f64());
+        out
+    }
+    /// Add raw seconds to a phase.
+    pub fn add(&mut self, label: &str, secs: f64) {
+        if let Some(e) = self.entries.iter_mut().find(|(l, _)| l == label) {
+            e.1 += secs;
+        } else {
+            self.entries.push((label.to_string(), secs));
+        }
+    }
+    pub fn get(&self, label: &str) -> f64 {
+        self.entries
+            .iter()
+            .find(|(l, _)| l == label)
+            .map(|(_, s)| *s)
+            .unwrap_or(0.0)
+    }
+    pub fn entries(&self) -> &[(String, f64)] {
+        &self.entries
+    }
+    pub fn total(&self) -> f64 {
+        self.entries.iter().map(|(_, s)| s).sum()
+    }
+    pub fn merge(&mut self, other: &PhaseProfile) {
+        for (l, s) in &other.entries {
+            self.add(l, *s);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_sane() {
+        let t = Timing {
+            samples: vec![1.0, 2.0, 3.0],
+        };
+        assert!((t.mean() - 2.0).abs() < 1e-12);
+        assert!((t.std() - 1.0).abs() < 1e-12);
+        assert_eq!(t.min(), 1.0);
+        assert_eq!(t.median(), 2.0);
+    }
+
+    #[test]
+    fn bench_runs() {
+        let mut count = 0;
+        let t = bench(2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(t.samples.len(), 5);
+    }
+
+    #[test]
+    fn phase_profile_accumulates() {
+        let mut p = PhaseProfile::new();
+        p.add("FUNCEVAL", 0.5);
+        p.add("FUNCEVAL", 0.25);
+        p.add("INVLIN", 1.0);
+        assert!((p.get("FUNCEVAL") - 0.75).abs() < 1e-12);
+        assert!((p.total() - 1.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_secs(2e-9).ends_with("ns"));
+        assert!(fmt_secs(2e-6).ends_with("µs"));
+        assert!(fmt_secs(2e-3).ends_with("ms"));
+        assert!(fmt_secs(2.0).ends_with(" s"));
+    }
+}

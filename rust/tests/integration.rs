@@ -1,0 +1,184 @@
+//! Cross-module integration tests: engine ↔ coordinator ↔ data.
+
+use deer::cells::{CellGrad, Elman, Gru, Lem, Lstm};
+use deer::coordinator::policy::{ConvergencePolicy, EvalPath};
+use deer::coordinator::warmstart::WarmStartCache;
+use deer::data::{worms, Dataset};
+use deer::deer::grad::deer_rnn_backward;
+use deer::deer::newton::{deer_rnn, DeerConfig};
+use deer::deer::seq::{seq_rnn, seq_rnn_backward};
+use deer::util::rng::Rng;
+use deer::util::scalar::Scalar;
+
+/// Fig. 3 end-to-end: every cell type, DEER == sequential to f32 tolerance.
+#[test]
+fn all_cells_deer_matches_sequential() {
+    let t_len = 800;
+    let m = 3;
+    let mut rng = Rng::new(1);
+    let mut xs = vec![0.0f32; t_len * m];
+    rng.fill_normal(&mut xs, 1.0);
+
+    fn check<C: deer::cells::Cell<f32>>(name: &str, cell: &C, xs: &[f32]) {
+        let h0 = vec![0.0f32; cell.state_dim()];
+        let seq = seq_rnn(cell, &h0, xs);
+        let res = deer_rnn(cell, &h0, xs, None, &DeerConfig::default());
+        assert!(res.converged, "{name} did not converge: {:?}", res.err_trace);
+        let err = deer::linalg::max_abs_diff(&seq, &res.ys);
+        assert!(err < 1e-3, "{name}: max err {err}");
+    }
+
+    check("gru", &Gru::<f32>::new(6, m, &mut rng), &xs);
+    check("elman", &Elman::<f32>::new(6, m, &mut rng), &xs);
+    check("lstm", &Lstm::<f32>::new(3, m, &mut rng), &xs);
+    check("lem", &Lem::<f32>::new(3, m, &mut rng), &xs);
+}
+
+/// Training-style loop: DEER gradients drive a GRU to fit a target, with the
+/// warm-start cache cutting iterations (App. B.2 mechanism end-to-end).
+#[test]
+fn deer_training_loop_with_warmstart() {
+    let (n, m, t_len) = (4usize, 2usize, 400usize);
+    let mut rng = Rng::new(3);
+    let mut cell: Gru<f32> = Gru::new(n, m, &mut rng);
+    let target: Gru<f32> = Gru::new(n, m, &mut rng);
+    let mut xs = vec![0.0f32; t_len * m];
+    rng.fill_normal(&mut xs, 1.0);
+    let h0 = vec![0.0f32; n];
+    let want = seq_rnn(&target, &h0, &xs);
+
+    let mut cache = WarmStartCache::new(1 << 22);
+    let cfg = DeerConfig::<f32>::default();
+    let lr = 0.05f32;
+    let mut loss0 = 0.0;
+    let mut loss_end = 0.0;
+    for step in 0..60 {
+        let guess = cache.get(0).map(|g| g.to_vec());
+        let res = deer_rnn(&cell, &h0, &xs, guess.as_deref(), &cfg);
+        assert!(res.converged);
+        // L = ½ Σ (y − want)²  →  g = y − want
+        let gs: Vec<f32> = res.ys.iter().zip(want.iter()).map(|(a, b)| a - b).collect();
+        let loss: f32 = gs.iter().map(|g| g * g).sum::<f32>() / 2.0;
+        if step == 0 {
+            loss0 = loss;
+        }
+        loss_end = loss;
+        let grad = deer_rnn_backward(&cell, &h0, &xs, &res.ys, &gs, Some(&res.jacobians), 1);
+        for (p, g) in cell.params_mut().iter_mut().zip(grad.dtheta.iter()) {
+            *p -= lr * g;
+        }
+        cache.put(0, res.ys);
+    }
+    assert!(loss_end < loss0 * 0.5, "loss {loss0} -> {loss_end}");
+    assert!(cache.hit_rate() > 0.9);
+    // The warm-started evaluation at the final parameters still converges to
+    // the exact sequential trajectory (the iteration-count benefit under
+    // small parameter drift is asserted in warmstart.rs / newton.rs; after
+    // 60 aggressive updates the drift here is large by construction).
+    let warm_guess = cache.get(0).unwrap().to_vec();
+    let warm = deer_rnn(&cell, &h0, &xs, Some(&warm_guess), &cfg);
+    assert!(warm.converged);
+    let seq = seq_rnn(&cell, &h0, &xs);
+    assert!(deer::linalg::max_abs_diff(&seq, &warm.ys) < 1e-3);
+}
+
+/// The policy's sequential fallback preserves gradient correctness: BPTT on
+/// the fallback trajectory equals DEER backward on the converged one.
+#[test]
+fn policy_fallback_gradients_consistent() {
+    let (n, m, t_len) = (3usize, 2usize, 300usize);
+    let mut rng = Rng::new(5);
+    let cell: Gru<f64> = Gru::new(n, m, &mut rng);
+    let mut xs = vec![0.0f64; t_len * m];
+    rng.fill_normal(&mut xs, 1.0);
+    let h0 = vec![0.0f64; n];
+    let mut gs = vec![0.0f64; t_len * n];
+    rng.fill_normal(&mut gs, 1.0);
+
+    let pol = ConvergencePolicy::default();
+    let (ys, path, _) = pol.evaluate(&cell, &h0, &xs, None, 1);
+    assert_eq!(path, EvalPath::Deer);
+
+    let g_deer = deer_rnn_backward(&cell, &h0, &xs, &ys, &gs, None, 1);
+    let seq_ys = seq_rnn(&cell, &h0, &xs);
+    let mut g_bptt = vec![0.0f64; cell.num_params()];
+    seq_rnn_backward(&cell, &h0, &xs, &seq_ys, &gs, &mut g_bptt);
+    for (a, b) in g_deer.dtheta.iter().zip(g_bptt.iter()) {
+        assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+    }
+}
+
+/// Data pipeline → engine: a GRU can actually separate the synthetic worm
+/// classes better than chance using only its final mean-pooled state, i.e.
+/// the class signal survives the recurrence (dataset sanity for §4.3).
+#[test]
+fn worms_classes_linearly_separable_after_gru() {
+    let t_len = 512;
+    let rows = 40;
+    let (xs, labels) = worms::generate(rows, t_len, 9);
+    let ds = Dataset::new(xs, labels, t_len, worms::CHANNELS);
+
+    let mut rng = Rng::new(2);
+    let cell: Gru<f32> = Gru::new(8, worms::CHANNELS, &mut rng);
+    let h0 = vec![0.0f32; 8];
+
+    // mean-pooled final features per row
+    let mut feats = Vec::new();
+    for i in 0..rows {
+        let ys = seq_rnn(&cell, &h0, ds.row(i));
+        let mut f = vec![0.0f32; 8];
+        for c in ys.chunks(8) {
+            for (a, b) in f.iter_mut().zip(c) {
+                *a += b / (t_len as f32);
+            }
+        }
+        feats.push(f);
+    }
+    // nearest-class-centroid accuracy must beat the 20% chance level
+    let mut centroids = vec![vec![0.0f32; 8]; worms::CLASSES];
+    let mut counts = vec![0usize; worms::CLASSES];
+    for (f, &l) in feats.iter().zip(ds.labels.iter()) {
+        for (c, v) in centroids[l as usize].iter_mut().zip(f) {
+            *c += v;
+        }
+        counts[l as usize] += 1;
+    }
+    for (c, n) in centroids.iter_mut().zip(counts.iter()) {
+        for v in c.iter_mut() {
+            *v /= *n as f32;
+        }
+    }
+    let mut correct = 0;
+    for (f, &l) in feats.iter().zip(ds.labels.iter()) {
+        let pred = centroids
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| {
+                let da: f32 = a.iter().zip(f).map(|(x, y)| (x - y) * (x - y)).sum();
+                let db: f32 = b.iter().zip(f).map(|(x, y)| (x - y) * (x - y)).sum();
+                da.partial_cmp(&db).unwrap()
+            })
+            .unwrap()
+            .0;
+        if pred == l as usize {
+            correct += 1;
+        }
+    }
+    let acc = correct as f64 / rows as f64;
+    assert!(acc > 0.3, "untrained-GRU centroid accuracy {acc} ≤ chance");
+}
+
+/// f64 path end-to-end with the paper's 1e-7 tolerance (§3.5).
+#[test]
+fn f64_tolerance_path() {
+    let mut rng = Rng::new(8);
+    let cell: Gru<f64> = Gru::new(3, 2, &mut rng);
+    let mut xs = vec![0.0f64; 2_000 * 2];
+    rng.fill_normal(&mut xs, 1.0);
+    let cfg = DeerConfig::<f64>::default();
+    assert_eq!(cfg.tol, 1e-7);
+    let res = deer_rnn(&cell, &vec![0.0; 3], &xs, None, &cfg);
+    assert!(res.converged);
+    let seq = seq_rnn(&cell, &vec![0.0; 3], &xs);
+    assert!(deer::linalg::max_abs_diff(&seq, &res.ys).to_f64c() < 1e-6);
+}

@@ -1,0 +1,356 @@
+//! Property-based tests (in-repo `testkit::prop`; proptest is unavailable
+//! offline). Each property runs over many random cases with replayable
+//! seeds.
+
+use deer::cells::{Cell, Gru};
+use deer::coordinator::batcher::Batcher;
+use deer::coordinator::memory::MemoryPlanner;
+use deer::coordinator::warmstart::WarmStartCache;
+use deer::deer::newton::{deer_rnn, DeerConfig};
+use deer::deer::seq::seq_rnn;
+use deer::linalg;
+use deer::scan::par::{par_scan_apply, par_scan_reverse};
+use deer::scan::seq::{seq_scan_apply, seq_scan_reverse};
+use deer::scan::combine;
+use deer::testkit::{close, forall};
+use deer::util::rng::Rng;
+use std::time::Duration;
+
+#[derive(Debug)]
+struct AffineCase {
+    n: usize,
+    len: usize,
+    threads: usize,
+    a: Vec<f64>,
+    b: Vec<f64>,
+    y0: Vec<f64>,
+}
+
+fn gen_affine(rng: &mut Rng) -> AffineCase {
+    let n = 1 + rng.below(5);
+    let len = 2 + rng.below(200);
+    let threads = 1 + rng.below(6);
+    let mut a = vec![0.0; len * n * n];
+    let mut b = vec![0.0; len * n];
+    let mut y0 = vec![0.0; n];
+    rng.fill_normal(&mut a, 0.5);
+    rng.fill_normal(&mut b, 1.0);
+    rng.fill_normal(&mut y0, 1.0);
+    AffineCase { n, len, threads, a, b, y0 }
+}
+
+/// Parallel scan ≡ sequential scan for any shape/thread count.
+#[test]
+fn prop_par_scan_equals_seq() {
+    forall(60, 0xDEE2, gen_affine, |c| {
+        let mut s = vec![0.0; c.len * c.n];
+        let mut p = vec![0.0; c.len * c.n];
+        seq_scan_apply(&c.a, &c.b, &c.y0, &mut s, c.n, c.len);
+        par_scan_apply(&c.a, &c.b, &c.y0, &mut p, c.n, c.len, c.threads);
+        close(&s, &p, 1e-8)
+    });
+}
+
+/// Parallel reverse (dual) scan ≡ sequential.
+#[test]
+fn prop_par_reverse_equals_seq() {
+    forall(60, 0xDEE3, gen_affine, |c| {
+        let mut s = vec![0.0; c.len * c.n];
+        let mut p = vec![0.0; c.len * c.n];
+        seq_scan_reverse(&c.a, &c.b, &mut s, c.n, c.len);
+        par_scan_reverse(&c.a, &c.b, &mut p, c.n, c.len, c.threads);
+        close(&s, &p, 1e-8)
+    });
+}
+
+/// The eq. (10) combine operator is associative (the precondition for any
+/// parallel scan order to be valid).
+#[test]
+fn prop_combine_associative() {
+    #[derive(Debug)]
+    struct Three {
+        n: usize,
+        e: Vec<(Vec<f64>, Vec<f64>)>,
+    }
+    forall(
+        80,
+        0xA550C,
+        |rng| {
+            let n = 1 + rng.below(5);
+            let e = (0..3)
+                .map(|_| {
+                    let mut a = vec![0.0; n * n];
+                    let mut b = vec![0.0; n];
+                    rng.fill_normal(&mut a, 1.0);
+                    rng.fill_normal(&mut b, 1.0);
+                    (a, b)
+                })
+                .collect();
+            Three { n, e }
+        },
+        |c| {
+            let n = c.n;
+            let mut t_a = vec![0.0; n * n];
+            let mut t_b = vec![0.0; n];
+            let mut l_a = vec![0.0; n * n];
+            let mut l_b = vec![0.0; n];
+            combine(&c.e[2].0, &c.e[2].1, &c.e[1].0, &c.e[1].1, &mut t_a, &mut t_b, n);
+            combine(&t_a, &t_b, &c.e[0].0, &c.e[0].1, &mut l_a, &mut l_b, n);
+            let mut u_a = vec![0.0; n * n];
+            let mut u_b = vec![0.0; n];
+            let mut r_a = vec![0.0; n * n];
+            let mut r_b = vec![0.0; n];
+            combine(&c.e[1].0, &c.e[1].1, &c.e[0].0, &c.e[0].1, &mut u_a, &mut u_b, n);
+            combine(&c.e[2].0, &c.e[2].1, &u_a, &u_b, &mut r_a, &mut r_b, n);
+            close(&l_a, &r_a, 1e-9).and_then(|_| close(&l_b, &r_b, 1e-9))
+        },
+    );
+}
+
+/// DEER converges to the sequential trajectory for random small GRUs
+/// (the paper's central claim, randomized).
+#[test]
+fn prop_deer_fixed_point_is_sequential_trajectory() {
+    #[derive(Debug)]
+    struct Case {
+        n: usize,
+        t_len: usize,
+        seed: u64,
+    }
+    forall(
+        12,
+        0xF1EC,
+        |rng| Case {
+            n: 1 + rng.below(5),
+            t_len: 50 + rng.below(400),
+            seed: rng.next_u64(),
+        },
+        |c| {
+            let mut rng = Rng::new(c.seed);
+            let cell: Gru<f64> = Gru::new(c.n, 2, &mut rng);
+            let mut xs = vec![0.0; c.t_len * 2];
+            rng.fill_normal(&mut xs, 1.0);
+            let h0 = vec![0.0; c.n];
+            let res = deer_rnn(&cell, &h0, &xs, None, &DeerConfig::default());
+            if !res.converged {
+                return Err(format!("did not converge: {:?}", res.err_trace));
+            }
+            let seq = seq_rnn(&cell, &h0, &xs);
+            let err = linalg::max_abs_diff(&seq, &res.ys);
+            if err < 1e-6 {
+                Ok(())
+            } else {
+                Err(format!("max err {err}"))
+            }
+        },
+    );
+}
+
+/// GRU analytic Jacobian ≡ finite differences over random params/states.
+#[test]
+fn prop_gru_jacobian() {
+    #[derive(Debug)]
+    struct Case {
+        n: usize,
+        m: usize,
+        seed: u64,
+    }
+    forall(
+        25,
+        0x1ACB,
+        |rng| Case {
+            n: 1 + rng.below(6),
+            m: 1 + rng.below(4),
+            seed: rng.next_u64(),
+        },
+        |c| {
+            let mut rng = Rng::new(c.seed);
+            let cell: Gru<f64> = Gru::new(c.n, c.m, &mut rng);
+            let mut h = vec![0.0; c.n];
+            let mut x = vec![0.0; c.m];
+            rng.fill_normal(&mut h, 0.8);
+            rng.fill_normal(&mut x, 1.0);
+            let mut f = vec![0.0; c.n];
+            let mut jac = vec![0.0; c.n * c.n];
+            let mut ws = vec![0.0; cell.ws_len()];
+            cell.jacobian(&h, &x, &mut f, &mut jac, &mut ws);
+            let fd = deer::cells::fd_jacobian(&cell, &h, &x, 1e-6);
+            close(&jac, &fd, 1e-5)
+        },
+    );
+}
+
+/// Batcher invariants: no request lost, no request duplicated, batches
+/// shape-homogeneous, FIFO within a shape.
+#[test]
+fn prop_batcher_conservation() {
+    #[derive(Debug)]
+    struct Ops(Vec<(usize, usize)>);
+    forall(
+        60,
+        0xBA7C,
+        |rng| {
+            let k = 1 + rng.below(60);
+            Ops((0..k).map(|_| (1 + rng.below(3), 10 * (1 + rng.below(2)))).collect())
+        },
+        |Ops(keys)| {
+            let mut b: Batcher<usize> = Batcher::new(4, Duration::from_secs(3600));
+            let mut flushed_ids = Vec::new();
+            let mut all_ids = Vec::new();
+            for (i, key) in keys.iter().enumerate() {
+                let (id, full) = b.push(*key, i);
+                all_ids.push(id);
+                if let Some(batch) = full {
+                    if !batch.requests.iter().all(|r| r.key == batch.key) {
+                        return Err("mixed shapes in batch".into());
+                    }
+                    let mut prev = None;
+                    for r in &batch.requests {
+                        if let Some(p) = prev {
+                            if r.id <= p {
+                                return Err("non-FIFO within shape".into());
+                            }
+                        }
+                        prev = Some(r.id);
+                        flushed_ids.push(r.id);
+                    }
+                }
+            }
+            for batch in b.poll(true) {
+                for r in batch.requests {
+                    flushed_ids.push(r.id);
+                }
+            }
+            flushed_ids.sort_unstable();
+            all_ids.sort_unstable();
+            if flushed_ids == all_ids {
+                Ok(())
+            } else {
+                Err(format!("lost/dup requests: {} vs {}", flushed_ids.len(), all_ids.len()))
+            }
+        },
+    );
+}
+
+/// Warm-start cache never exceeds its budget and keeps the most recent keys.
+#[test]
+fn prop_warmstart_budget() {
+    #[derive(Debug)]
+    struct Ops(Vec<(u64, usize)>);
+    forall(
+        60,
+        0xCACE,
+        |rng| {
+            let k = 1 + rng.below(40);
+            Ops((0..k).map(|_| (rng.next_u64() % 8, 1 + rng.below(30))).collect())
+        },
+        |Ops(ops)| {
+            let budget = 400usize;
+            let mut c = WarmStartCache::new(budget);
+            for (key, len) in ops {
+                c.put(*key, vec![0.0; *len]);
+                if c.used_bytes() > budget {
+                    return Err(format!("budget exceeded: {}", c.used_bytes()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Memory planner: equal-memory sequential batch is monotone in DEER batch.
+#[test]
+fn prop_memory_planner_monotone() {
+    #[derive(Debug)]
+    struct Case {
+        n: usize,
+        t: usize,
+    }
+    forall(
+        40,
+        0x3E30,
+        |rng| Case {
+            n: 1 + rng.below(64),
+            t: 100 + rng.below(100_000),
+        },
+        |c| {
+            let p = MemoryPlanner::new(1 << 34);
+            let b1 = p.equal_memory_seq_batch(c.n, c.t, 1);
+            let b4 = p.equal_memory_seq_batch(c.n, c.t, 4);
+            if b4 >= b1 {
+                Ok(())
+            } else {
+                Err(format!("b4 {b4} < b1 {b1}"))
+            }
+        },
+    );
+}
+
+/// LU solve: A·x == b for random well-conditioned systems.
+#[test]
+fn prop_lu_solves() {
+    #[derive(Debug)]
+    struct Case {
+        n: usize,
+        a: Vec<f64>,
+        b: Vec<f64>,
+    }
+    forall(
+        60,
+        0x10AD,
+        |rng| {
+            let n = 1 + rng.below(8);
+            let mut a = vec![0.0; n * n];
+            rng.fill_normal(&mut a, 1.0);
+            // diagonal dominance → invertible
+            for i in 0..n {
+                a[i * n + i] += 4.0;
+            }
+            let mut b = vec![0.0; n];
+            rng.fill_normal(&mut b, 1.0);
+            Case { n, a, b }
+        },
+        |c| {
+            let mut lu = c.a.clone();
+            let piv = linalg::lu_factor(&mut lu, c.n).map_err(|e| e.to_string())?;
+            let mut x = c.b.clone();
+            linalg::lu_solve(&lu, &piv, &mut x, c.n);
+            let mut ax = vec![0.0; c.n];
+            linalg::matvec(&c.a, &x, &mut ax);
+            close(&ax, &c.b, 1e-8)
+        },
+    );
+}
+
+/// expm(A)·expm(−A) == I (group inverse property).
+#[test]
+fn prop_expm_inverse() {
+    #[derive(Debug)]
+    struct Case {
+        n: usize,
+        a: Vec<f64>,
+    }
+    forall(
+        40,
+        0xE4B,
+        |rng| {
+            let n = 1 + rng.below(5);
+            let mut a = vec![0.0; n * n];
+            rng.fill_normal(&mut a, 0.8);
+            Case { n, a }
+        },
+        |c| {
+            let n = c.n;
+            let neg: Vec<f64> = c.a.iter().map(|v| -v).collect();
+            let mut ea = vec![0.0; n * n];
+            let mut ena = vec![0.0; n * n];
+            linalg::expm(&c.a, &mut ea, n);
+            linalg::expm(&neg, &mut ena, n);
+            let mut prod = vec![0.0; n * n];
+            linalg::matmul(&ea, &ena, &mut prod, n);
+            let mut eye = vec![0.0; n * n];
+            linalg::eye_into(&mut eye, n);
+            close(&prod, &eye, 1e-8)
+        },
+    );
+}

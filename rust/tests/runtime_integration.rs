@@ -1,0 +1,109 @@
+//! Runtime integration: execute the real AOT artifacts through PJRT.
+//!
+//! These tests require `make artifacts` to have run; they skip (with a
+//! message) when the manifest is absent so `cargo test` works in a fresh
+//! checkout.
+
+use deer::cells::Gru;
+use deer::deer::seq::seq_rnn;
+use deer::runtime::{Runtime, Tensor};
+use deer::util::rng::Rng;
+use std::path::PathBuf;
+
+fn runtime() -> Option<Runtime> {
+    let dir = std::env::var("DEER_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping runtime tests: no artifacts at {}", dir.display());
+        return None;
+    }
+    Some(Runtime::load(&dir).expect("runtime"))
+}
+
+#[test]
+fn quickstart_artifacts_agree_with_rust_engine() {
+    let Some(rt) = runtime() else { return };
+    let spec = rt.manifest.get("deer_gru_fwd").unwrap().clone();
+    let (n, m, t_len) = (
+        spec.meta["n"] as usize,
+        spec.meta["m"] as usize,
+        spec.meta["t"] as usize,
+    );
+    let params = rt.load_params("deer_gru_fwd").unwrap();
+    let mut rng = Rng::new(7);
+    let mut xs = vec![0.0f32; t_len * m];
+    rng.fill_normal(&mut xs, 1.0);
+    let h0 = vec![0.0f32; n];
+
+    let inputs = [
+        Tensor::f32(vec![params.len()], params.clone()),
+        Tensor::f32(vec![n], h0.clone()),
+        Tensor::f32(vec![t_len, m], xs.clone()),
+    ];
+    let deer_out = rt.run("deer_gru_fwd", &inputs).unwrap();
+    let seq_out = rt.run("gru_seq_fwd", &inputs).unwrap();
+    let a = deer_out[0].as_f32().unwrap();
+    let b = seq_out[0].as_f32().unwrap();
+    let max_ab = a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+    assert!(max_ab < 2e-3, "pallas-DEER vs XLA-sequential: {max_ab}");
+
+    // Cross-check against the pure-Rust engine (same params).
+    let cell = Gru::<f32>::from_params(n, m, params);
+    let rust = seq_rnn(&cell, &h0, &xs);
+    let max_rx = rust.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+    assert!(max_rx < 2e-3, "rust vs XLA sequential: {max_rx}");
+}
+
+#[test]
+fn worms_train_step_decreases_loss() {
+    let Some(rt) = runtime() else { return };
+    let spec = rt.manifest.get("worms_train_step").unwrap().clone();
+    let b = spec.meta["batch"] as usize;
+    let t_len = spec.meta["t"] as usize;
+    let (xs, labels) = deer::data::worms::generate(b, t_len, 3);
+    let data = [
+        Tensor::f32(vec![b, t_len, deer::data::worms::CHANNELS], xs),
+        Tensor::i32(vec![b], labels),
+    ];
+    let mut tr = deer::train::Trainer::new(&rt, "worms_train_step", "worms_train_step").unwrap();
+    let (loss0, _) = tr.step(&data).unwrap();
+    let mut last = loss0;
+    for _ in 0..8 {
+        let (l, _) = tr.step(&data).unwrap();
+        last = l;
+    }
+    assert!(last < loss0, "loss {loss0} -> {last}");
+    assert_eq!(tr.state.step_count(), 9);
+}
+
+#[test]
+fn input_validation_rejects_bad_shapes() {
+    let Some(rt) = runtime() else { return };
+    let bad = [Tensor::f32(vec![3], vec![0.0; 3])];
+    let err = rt.run("deer_gru_fwd", &bad).unwrap_err().to_string();
+    assert!(err.contains("expected"), "{err}");
+}
+
+#[test]
+fn hnn_eval_is_finite() {
+    let Some(rt) = runtime() else { return };
+    let spec = rt.manifest.get("hnn_eval").unwrap().clone();
+    let b = spec.meta["batch"] as usize;
+    let l = spec.meta["grid"] as usize;
+    let params = rt.load_params("hnn_train_step_deer").unwrap();
+    let ts: Vec<f32> = (0..l).map(|i| 10.0 * i as f32 / (l - 1) as f32).collect();
+    let trajs = deer::data::twobody::generate(b, 10.0, l, 5);
+    let out = rt
+        .run(
+            "hnn_eval",
+            &[
+                Tensor::f32(vec![params.len()], params),
+                Tensor::f32(vec![l], ts),
+                Tensor::f32(vec![b, l, 8], trajs),
+            ],
+        )
+        .unwrap();
+    let loss = out[0].item().unwrap();
+    assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+}
