@@ -8,7 +8,7 @@
 //!
 //! Run: `cargo run --release --example hnn_twobody -- [steps]`
 
-use anyhow::Result;
+use deer::util::err::Result;
 use deer::data::twobody;
 use deer::metrics::Recorder;
 use deer::runtime::{Runtime, Tensor};

@@ -13,7 +13,7 @@
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use anyhow::Result;
+use deer::util::err::Result;
 use deer::cells::Gru;
 use deer::deer::newton::{deer_rnn, DeerConfig};
 use deer::deer::seq::seq_rnn;

@@ -8,7 +8,7 @@
 //!
 //! Run: `cargo run --release --example worms_classify -- [steps] [seed]`
 
-use anyhow::Result;
+use deer::util::err::Result;
 use deer::data::{worms, Dataset, Split};
 use deer::metrics::Recorder;
 use deer::runtime::{Runtime, Tensor};

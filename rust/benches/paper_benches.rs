@@ -141,5 +141,34 @@ fn main() {
         )
         .unwrap();
     }
+    if want("quasi") {
+        rec.table(
+            "quasi_deer",
+            "Quasi-DEER ablation: Full vs DiagonalApprox Jacobians (GRU, measured 1-core)",
+            &exp::quasi_deer_bench(&opts),
+        )
+        .unwrap();
+    }
+    if want("scan") {
+        // INVLIN kernel microbench; also emits machine-readable points for
+        // the perf trajectory (see scripts/bench_smoke.sh → BENCH_scan.json).
+        let (dims, lens) = exp::scan_bench_grid(fast);
+        let budget = if fast {
+            Duration::from_millis(120)
+        } else {
+            Duration::from_millis(400)
+        };
+        let (t, points) = exp::scan_microbench(&dims, &lens, 1, budget);
+        rec.table(
+            "scan_kernels",
+            "INVLIN scan kernels: dense vs diagonal ns/step (measured, 1 thread)",
+            &t,
+        )
+        .unwrap();
+        let out = std::env::var("DEER_BENCH_SCAN_OUT")
+            .unwrap_or_else(|_| "BENCH_scan.json".to_string());
+        std::fs::write(&out, exp::scan_bench_json(&points, 1).to_string()).unwrap();
+        println!("scan bench points written to {out}");
+    }
     println!("\nbench tables written to results/bench/");
 }

@@ -1,0 +1,311 @@
+//! IndRNN (Li et al., CVPR 2018): `h' = tanh(W x + u ⊙ h + b)`.
+//!
+//! The recurrent weight is a **vector** `u`, so each state unit evolves
+//! independently given the input projection. The state Jacobian is exactly
+//! diagonal — `∂h'_i/∂h_j = δ_ij (1 − h'_i²) u_i` — which makes IndRNN the
+//! natural native carrier of the structured-Jacobian fast path: DEER's
+//! INVLIN phase runs entirely through the O(n) kernels of
+//! [`crate::scan::diag`], with O(T·n) Jacobian storage instead of O(T·n²).
+
+use super::{init_uniform, Cell, CellGrad, JacobianStructure};
+use crate::util::rng::Rng;
+use crate::util::scalar::Scalar;
+
+/// IndRNN cell. Parameter layout: `[W (n·m), u (n), b (n)]`.
+#[derive(Debug, Clone)]
+pub struct IndRnn<S> {
+    n: usize,
+    m: usize,
+    p: Vec<S>,
+}
+
+impl<S: Scalar> IndRnn<S> {
+    pub fn new(n: usize, m: usize, rng: &mut Rng) -> Self {
+        let mut p = vec![S::zero(); n * m + 2 * n];
+        init_uniform(&mut p, n, rng);
+        // Keep the recurrent gains inside the unit circle at init so long
+        // sequences neither blow up nor saturate (Li et al. §3.2).
+        let u_lo = n * m;
+        for v in p[u_lo..u_lo + n].iter_mut() {
+            *v = *v * S::from_f64c(0.9);
+        }
+        IndRnn { n, m, p }
+    }
+
+    pub fn from_params(n: usize, m: usize, p: Vec<S>) -> Self {
+        assert_eq!(p.len(), n * m + 2 * n);
+        IndRnn { n, m, p }
+    }
+
+    fn w(&self) -> &[S] {
+        &self.p[..self.n * self.m]
+    }
+    fn u(&self) -> &[S] {
+        &self.p[self.n * self.m..self.n * self.m + self.n]
+    }
+    fn b(&self) -> &[S] {
+        &self.p[self.n * self.m + self.n..]
+    }
+
+    /// Pre-activation `W x + u ⊙ h + b` into `out`.
+    #[inline]
+    fn preact(&self, h: &[S], x: &[S], out: &mut [S]) {
+        let (n, m) = (self.n, self.m);
+        let (w, u, b) = (self.w(), self.u(), self.b());
+        for i in 0..n {
+            let mut a = b[i] + u[i] * h[i];
+            let roww = &w[i * m..(i + 1) * m];
+            for j in 0..m {
+                a += roww[j] * x[j];
+            }
+            out[i] = a;
+        }
+    }
+}
+
+impl<S: Scalar> Cell<S> for IndRnn<S> {
+    fn state_dim(&self) -> usize {
+        self.n
+    }
+    fn input_dim(&self) -> usize {
+        self.m
+    }
+    fn ws_len(&self) -> usize {
+        self.n
+    }
+
+    fn jacobian_structure(&self) -> JacobianStructure {
+        JacobianStructure::Diagonal
+    }
+
+    fn step(&self, h: &[S], x: &[S], out: &mut [S], ws: &mut [S]) {
+        self.preact(h, x, ws);
+        for i in 0..self.n {
+            out[i] = ws[i].tanh();
+        }
+    }
+
+    fn jacobian(&self, h: &[S], x: &[S], out_f: &mut [S], out_jac: &mut [S], ws: &mut [S]) {
+        // Dense emission kept for the generic path: diag embedded in n×n.
+        let n = self.n;
+        for v in out_jac.iter_mut() {
+            *v = S::zero();
+        }
+        self.preact(h, x, ws);
+        let u = self.u();
+        for i in 0..n {
+            let f = ws[i].tanh();
+            out_f[i] = f;
+            out_jac[i * n + i] = (S::one() - f * f) * u[i];
+        }
+    }
+
+    fn jacobian_diag(&self, h: &[S], x: &[S], out_f: &mut [S], out_jdiag: &mut [S], ws: &mut [S]) {
+        self.preact(h, x, ws);
+        let u = self.u();
+        for i in 0..self.n {
+            let f = ws[i].tanh();
+            out_f[i] = f;
+            out_jdiag[i] = (S::one() - f * f) * u[i];
+        }
+    }
+
+    fn x_precompute_len(&self) -> usize {
+        self.n
+    }
+
+    /// `out[i] = W x_i + b` — everything independent of the trajectory guess.
+    fn precompute_x(&self, xs: &[S], out: &mut [S]) {
+        let (n, m) = (self.n, self.m);
+        let t_len = xs.len() / m;
+        debug_assert_eq!(out.len(), t_len * n);
+        let (w, b) = (self.w(), self.b());
+        for t in 0..t_len {
+            let x = &xs[t * m..(t + 1) * m];
+            let o = &mut out[t * n..(t + 1) * n];
+            for i in 0..n {
+                let mut a = b[i];
+                let roww = &w[i * m..(i + 1) * m];
+                for j in 0..m {
+                    a += roww[j] * x[j];
+                }
+                o[i] = a;
+            }
+        }
+    }
+
+    fn jacobian_pre(&self, h: &[S], pre: &[S], out_f: &mut [S], out_jac: &mut [S], ws: &mut [S]) {
+        let n = self.n;
+        let _ = ws;
+        for v in out_jac.iter_mut() {
+            *v = S::zero();
+        }
+        let u = self.u();
+        for i in 0..n {
+            let f = (pre[i] + u[i] * h[i]).tanh();
+            out_f[i] = f;
+            out_jac[i * n + i] = (S::one() - f * f) * u[i];
+        }
+    }
+
+    fn jacobian_diag_pre(
+        &self,
+        h: &[S],
+        pre: &[S],
+        out_f: &mut [S],
+        out_jdiag: &mut [S],
+        ws: &mut [S],
+    ) {
+        let _ = ws;
+        let u = self.u();
+        for i in 0..self.n {
+            let f = (pre[i] + u[i] * h[i]).tanh();
+            out_f[i] = f;
+            out_jdiag[i] = (S::one() - f * f) * u[i];
+        }
+    }
+
+    fn flops_step(&self) -> u64 {
+        let (n, m) = (self.n as u64, self.m as u64);
+        2 * n * m + 4 * n
+    }
+
+    fn flops_jacobian(&self) -> u64 {
+        let n = self.n as u64;
+        self.flops_step() + 3 * n
+    }
+}
+
+impl<S: Scalar> CellGrad<S> for IndRnn<S> {
+    fn num_params(&self) -> usize {
+        self.p.len()
+    }
+    fn params(&self) -> &[S] {
+        &self.p
+    }
+    fn params_mut(&mut self) -> &mut [S] {
+        &mut self.p
+    }
+
+    fn vjp_step(
+        &self,
+        h: &[S],
+        x: &[S],
+        lambda: &[S],
+        dh: &mut [S],
+        mut dx: Option<&mut [S]>,
+        dtheta: &mut [S],
+        ws: &mut [S],
+    ) {
+        let (n, m) = (self.n, self.m);
+        self.preact(h, x, ws);
+        let u = self.u();
+        let w = self.w();
+        let off_u = n * m;
+        let off_b = n * m + n;
+        for i in 0..n {
+            let f = ws[i].tanh();
+            let da = lambda[i] * (S::one() - f * f);
+            dh[i] += u[i] * da;
+            dtheta[off_u + i] += da * h[i];
+            if let Some(dx) = dx.as_deref_mut() {
+                let roww = &w[i * m..(i + 1) * m];
+                for j in 0..m {
+                    dx[j] += roww[j] * da;
+                }
+            }
+            for j in 0..m {
+                dtheta[i * m + j] += da * x[j];
+            }
+            dtheta[off_b + i] += da;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::test_support::{check_jacobian, check_vjp};
+
+    #[test]
+    fn jacobian_matches_fd() {
+        let mut rng = Rng::new(13);
+        for &(n, m) in &[(1usize, 1usize), (3, 2), (6, 4)] {
+            let cell: IndRnn<f64> = IndRnn::new(n, m, &mut rng);
+            check_jacobian(&cell, 300 + n as u64, 1e-7);
+        }
+    }
+
+    #[test]
+    fn vjp_matches_fd() {
+        let mut rng = Rng::new(14);
+        let cell: IndRnn<f64> = IndRnn::new(4, 3, &mut rng);
+        check_vjp(&cell, 88, 1e-6);
+    }
+
+    #[test]
+    fn packed_diag_matches_dense_jacobian() {
+        let mut rng = Rng::new(15);
+        let (n, m) = (5usize, 3usize);
+        let cell: IndRnn<f64> = IndRnn::new(n, m, &mut rng);
+        let mut h = vec![0.0; n];
+        let mut x = vec![0.0; m];
+        rng.fill_normal(&mut h, 0.8);
+        rng.fill_normal(&mut x, 1.0);
+        let mut ws = vec![0.0; cell.ws_len()];
+
+        let mut f_dense = vec![0.0; n];
+        let mut jac = vec![0.0; n * n];
+        cell.jacobian(&h, &x, &mut f_dense, &mut jac, &mut ws);
+
+        let mut f_diag = vec![0.0; n];
+        let mut jd = vec![0.0; n];
+        cell.jacobian_diag(&h, &x, &mut f_diag, &mut jd, &mut ws);
+
+        for i in 0..n {
+            assert!((f_dense[i] - f_diag[i]).abs() < 1e-15);
+            assert!((jac[i * n + i] - jd[i]).abs() < 1e-15);
+            for j in 0..n {
+                if i != j {
+                    assert_eq!(jac[i * n + j], 0.0, "off-diagonal {i},{j} non-zero");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn precompute_paths_match_direct() {
+        let mut rng = Rng::new(16);
+        let (n, m, t) = (4usize, 2usize, 9usize);
+        let cell: IndRnn<f64> = IndRnn::new(n, m, &mut rng);
+        let mut xs = vec![0.0; t * m];
+        rng.fill_normal(&mut xs, 1.0);
+        let mut pre = vec![0.0; t * n];
+        cell.precompute_x(&xs, &mut pre);
+
+        let mut h = vec![0.0; n];
+        rng.fill_normal(&mut h, 0.5);
+        let mut ws = vec![0.0; cell.ws_len()];
+        for i in 0..t {
+            let x = &xs[i * m..(i + 1) * m];
+            let p = &pre[i * n..(i + 1) * n];
+            let (mut f1, mut f2) = (vec![0.0; n], vec![0.0; n]);
+            let (mut d1, mut d2) = (vec![0.0; n], vec![0.0; n]);
+            cell.jacobian_diag(&h, x, &mut f1, &mut d1, &mut ws);
+            cell.jacobian_diag_pre(&h, p, &mut f2, &mut d2, &mut ws);
+            for j in 0..n {
+                assert!((f1[j] - f2[j]).abs() < 1e-14);
+                assert!((d1[j] - d2[j]).abs() < 1e-14);
+            }
+        }
+    }
+
+    #[test]
+    fn structure_reported_diagonal() {
+        let mut rng = Rng::new(17);
+        let cell: IndRnn<f64> = IndRnn::new(2, 2, &mut rng);
+        assert_eq!(cell.jacobian_structure(), JacobianStructure::Diagonal);
+        assert_eq!(JacobianStructure::Diagonal.jac_len(7), 7);
+        assert_eq!(JacobianStructure::Dense.jac_len(7), 49);
+    }
+}

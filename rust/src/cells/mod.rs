@@ -7,8 +7,20 @@
 //! JAX implementation through the AOT artifacts.
 //!
 //! Cells implemented: [`Gru`] (the paper's main benchmark subject, §4.1/4.3),
-//! [`Lstm`], [`Lem`] (Rusch et al. 2021; Table 1 and Fig. 8), and [`Elman`]
-//! (simplest test vehicle). All are generic over f32/f64 ([`Scalar`]).
+//! [`Lstm`], [`Lem`] (Rusch et al. 2021; Table 1 and Fig. 8), [`Elman`]
+//! (simplest test vehicle), and [`IndRnn`] (Li et al. 2018 — element-wise
+//! recurrence, hence a **natively diagonal** state Jacobian). All are
+//! generic over f32/f64 ([`Scalar`]).
+//!
+//! # Jacobian structure
+//!
+//! Each cell reports a [`JacobianStructure`]: `Dense` cells emit full
+//! row-major n×n Jacobians; `Diagonal` cells additionally implement
+//! [`Cell::jacobian_diag`], emitting only the n diagonal entries. The DEER
+//! driver dispatches on the structure to pick the O(n) scan kernels in
+//! [`crate::scan::diag`] over the O(n³) dense ones — see
+//! [`crate::deer::JacobianMode`] for the quasi-DEER mode that forces the
+//! diagonal path on dense cells by approximation.
 //!
 //! Conventions:
 //! * state `h` has length `state_dim()`; input `x` has `input_dim()`.
@@ -18,16 +30,42 @@
 
 pub mod elman;
 pub mod gru;
+pub mod indrnn;
 pub mod lem;
 pub mod lstm;
 
 pub use elman::Elman;
 pub use gru::Gru;
+pub use indrnn::IndRnn;
 pub use lem::Lem;
 pub use lstm::Lstm;
 
 use crate::util::rng::Rng;
 use crate::util::scalar::Scalar;
+
+/// Structure of a cell's per-step state Jacobian `∂f/∂h`.
+///
+/// Drives kernel dispatch in the DEER driver: `Diagonal` unlocks the O(n)
+/// compose/apply scan kernels (packed n-entry Jacobians), `Dense` uses the
+/// general O(n³)-compose path of the paper's §3.5 cost model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum JacobianStructure {
+    /// Full row-major n×n Jacobian per step.
+    #[default]
+    Dense,
+    /// Jacobian is diagonal; packed as n entries per step.
+    Diagonal,
+}
+
+impl JacobianStructure {
+    /// Packed elements one per-step Jacobian occupies.
+    pub fn jac_len(self, n: usize) -> usize {
+        match self {
+            JacobianStructure::Dense => n * n,
+            JacobianStructure::Diagonal => n,
+        }
+    }
+}
 
 /// A discrete-time non-linear recurrence `h' = f(h, x, θ)`.
 pub trait Cell<S: Scalar>: Send + Sync {
@@ -45,6 +83,35 @@ pub trait Cell<S: Scalar>: Send + Sync {
     /// shared gate activations are computed once (this fusion is one of the
     /// §Perf optimizations; see EXPERIMENTS.md).
     fn jacobian(&self, h: &[S], x: &[S], out_f: &mut [S], out_jac: &mut [S], ws: &mut [S]);
+
+    /// Structure of `∂f/∂h`. Cells returning
+    /// [`JacobianStructure::Diagonal`] must implement
+    /// [`Cell::jacobian_diag`] (and, if they support input precomputation,
+    /// [`Cell::jacobian_diag_pre`]).
+    fn jacobian_structure(&self) -> JacobianStructure {
+        JacobianStructure::Dense
+    }
+
+    /// Like [`Cell::jacobian`] but emitting the **packed diagonal** of
+    /// `∂f/∂h` (`out_jdiag` has length n). Only meaningful when
+    /// [`Cell::jacobian_structure`] is `Diagonal`.
+    fn jacobian_diag(&self, h: &[S], x: &[S], out_f: &mut [S], out_jdiag: &mut [S], ws: &mut [S]) {
+        let _ = (h, x, out_f, out_jdiag, ws);
+        unimplemented!("cell does not have a diagonal Jacobian")
+    }
+
+    /// [`Cell::jacobian_diag`] from precomputed input projections.
+    fn jacobian_diag_pre(
+        &self,
+        h: &[S],
+        pre: &[S],
+        out_f: &mut [S],
+        out_jdiag: &mut [S],
+        ws: &mut [S],
+    ) {
+        let _ = (h, pre, out_f, out_jdiag, ws);
+        unimplemented!("cell does not have a diagonal Jacobian")
+    }
 
     /// Per-step length of the input-precomputation buffer (0 = unsupported).
     ///

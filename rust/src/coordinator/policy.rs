@@ -51,6 +51,7 @@ impl ConvergencePolicy {
             max_iter: self.max_iter,
             threads,
             divergence_patience: self.divergence_patience,
+            ..Default::default()
         }
     }
 

@@ -87,11 +87,11 @@ impl Sweep {
         let queue = Arc::new(Mutex::new(jobs.into_iter()));
         let (tx, rx) = mpsc::channel::<JobResult>();
         let f = &f;
-        crossbeam_utils::thread::scope(|scope| {
+        std::thread::scope(|scope| {
             for _ in 0..workers {
                 let queue = Arc::clone(&queue);
                 let tx = tx.clone();
-                scope.spawn(move |_| loop {
+                scope.spawn(move || loop {
                     let job = { queue.lock().unwrap().next() };
                     match job {
                         Some(j) => {
@@ -105,8 +105,7 @@ impl Sweep {
                 });
             }
             drop(tx);
-        })
-        .expect("sweep worker panicked");
+        });
         let mut results: Vec<JobResult> = rx.into_iter().collect();
         results.sort_by_key(|r| r.job.id);
         results

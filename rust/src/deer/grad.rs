@@ -16,9 +16,22 @@
 //! The Jacobians can either be **reused** from the forward pass (speed) or
 //! **recomputed** here (memory) — the trade-off discussed in §3.1.1; both
 //! modes are supported.
+//!
+//! # Structure dispatch
+//!
+//! `jac_structure` selects the dual-scan kernel. With
+//! [`JacobianStructure::Diagonal`] the transpose is a no-op and the scan
+//! runs through the O(n) kernels of [`crate::scan::diag`]. For natively
+//! diagonal cells this is the **exact** gradient (identical to BPTT); for
+//! dense cells it is the quasi-DEER gradient approximation (the λ
+//! recursion drops off-diagonal Jacobian terms) — use
+//! [`JacobianStructure::Dense`] when exact gradients of a dense cell are
+//! required.
 
-use crate::cells::CellGrad;
-use crate::scan::par::par_scan_reverse;
+use crate::cells::{CellGrad, JacobianStructure};
+use crate::scan::diag::par_diag_scan_reverse_ws;
+use crate::scan::par::par_scan_reverse_ws;
+use crate::scan::ScanWorkspace;
 use crate::util::scalar::Scalar;
 use crate::util::timer::PhaseProfile;
 
@@ -38,8 +51,11 @@ pub struct GradResult<S> {
 /// * `ys` — forward trajectory (`T·n`, from [`super::deer_rnn`] or the
 ///   sequential method; eq. 7 holds either way, see §3.1.1).
 /// * `gs` — loss cotangents `∂L/∂y_i` (`T·n`).
-/// * `jacobians` — pass `Some(res.jacobians)` to reuse forward Jacobians, or
-///   `None` to recompute (memory-saving mode).
+/// * `jacobians` — pass `Some(&res.jacobians)` to reuse forward Jacobians,
+///   or `None` to recompute (memory-saving mode).
+/// * `jac_structure` — layout of the (given or recomputed) Jacobians; pass
+///   `res.jac_structure` when reusing, or pick the kernel for recompute.
+#[allow(clippy::too_many_arguments)]
 pub fn deer_rnn_backward<S: Scalar, C: CellGrad<S>>(
     cell: &C,
     h0: &[S],
@@ -47,38 +63,55 @@ pub fn deer_rnn_backward<S: Scalar, C: CellGrad<S>>(
     ys: &[S],
     gs: &[S],
     jacobians: Option<&[S]>,
+    jac_structure: JacobianStructure,
     threads: usize,
 ) -> GradResult<S> {
     let n = cell.state_dim();
     let m = cell.input_dim();
     let t_len = xs.len() / m;
-    let nn = n * n;
+    let jl = jac_structure.jac_len(n);
     assert_eq!(ys.len(), t_len * n);
     assert_eq!(gs.len(), t_len * n);
 
     let mut profile = PhaseProfile::new();
 
     // Phase 1: Jacobians along the trajectory (reuse or recompute).
+    let native_diag = cell.jacobian_structure() == JacobianStructure::Diagonal;
     let owned_jac;
     let jac: &[S] = match jacobians {
         Some(j) => {
-            assert_eq!(j.len(), t_len * nn);
+            assert_eq!(j.len(), t_len * jl, "jacobian layout vs declared structure");
             j
         }
         None => {
             owned_jac = profile.record("JACOBIAN", || {
-                let mut jac = vec![S::zero(); t_len * nn];
+                let mut jac = vec![S::zero(); t_len * jl];
                 let mut f_scratch = vec![S::zero(); n];
                 let mut ws = vec![S::zero(); cell.ws_len()];
+                let mut dense_scratch =
+                    if jac_structure == JacobianStructure::Diagonal && !native_diag {
+                        vec![S::zero(); n * n]
+                    } else {
+                        Vec::new()
+                    };
                 for i in 0..t_len {
                     let h_prev = if i == 0 { h0 } else { &ys[(i - 1) * n..i * n] };
-                    cell.jacobian(
-                        h_prev,
-                        &xs[i * m..(i + 1) * m],
-                        &mut f_scratch,
-                        &mut jac[i * nn..(i + 1) * nn],
-                        &mut ws,
-                    );
+                    let x = &xs[i * m..(i + 1) * m];
+                    let out_j = &mut jac[i * jl..(i + 1) * jl];
+                    match jac_structure {
+                        JacobianStructure::Dense => {
+                            cell.jacobian(h_prev, x, &mut f_scratch, out_j, &mut ws);
+                        }
+                        JacobianStructure::Diagonal if native_diag => {
+                            cell.jacobian_diag(h_prev, x, &mut f_scratch, out_j, &mut ws);
+                        }
+                        JacobianStructure::Diagonal => {
+                            cell.jacobian(h_prev, x, &mut f_scratch, &mut dense_scratch, &mut ws);
+                            for j in 0..n {
+                                out_j[j] = dense_scratch[j * n + j];
+                            }
+                        }
+                    }
                 }
                 jac
             });
@@ -86,10 +119,17 @@ pub fn deer_rnn_backward<S: Scalar, C: CellGrad<S>>(
         }
     };
 
-    // Phase 2: the dual scan (the single L_G⁻¹ application of eq. 7).
+    // Phase 2: the dual scan (the single L_G⁻¹ application of eq. 7),
+    // structure-dispatched: O(n) per element on the diagonal path.
     let mut lambda = vec![S::zero(); t_len * n];
-    profile.record("DUAL_SCAN", || {
-        par_scan_reverse(jac, gs, &mut lambda, n, t_len, threads);
+    let mut scan_ws: ScanWorkspace<S> = ScanWorkspace::new();
+    profile.record("DUAL_SCAN", || match jac_structure {
+        JacobianStructure::Dense => {
+            par_scan_reverse_ws(jac, gs, &mut lambda, n, t_len, threads, &mut scan_ws);
+        }
+        JacobianStructure::Diagonal => {
+            par_diag_scan_reverse_ws(jac, gs, &mut lambda, n, t_len, threads, &mut scan_ws);
+        }
     });
 
     // Phase 3: parameter VJP reduction, parallel over sequence chunks with
@@ -127,12 +167,12 @@ pub fn deer_rnn_backward<S: Scalar, C: CellGrad<S>>(
             {
                 let dh0_ref = &mut dh0_out;
                 let lambda = &lambda;
-                crossbeam_utils::thread::scope(|scope| {
+                std::thread::scope(|scope| {
                     let mut handles = Vec::new();
                     for (c, part) in partials.iter_mut().enumerate() {
                         let lo = c * chunk_len;
                         let hi = ((c + 1) * chunk_len).min(t_len);
-                        handles.push(scope.spawn(move |_| {
+                        handles.push(scope.spawn(move || {
                             let mut ws = vec![S::zero(); cell.ws_len()];
                             let mut dh_scratch = vec![S::zero(); n];
                             let mut dh0_local = None;
@@ -163,8 +203,7 @@ pub fn deer_rnn_backward<S: Scalar, C: CellGrad<S>>(
                             dh0_ref.copy_from_slice(&d);
                         }
                     }
-                })
-                .expect("PARAM_VJP worker panicked");
+                });
             }
             dh0 = dh0_out;
             for part in partials {
@@ -181,7 +220,7 @@ pub fn deer_rnn_backward<S: Scalar, C: CellGrad<S>>(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cells::{Elman, Gru};
+    use crate::cells::{Elman, Gru, IndRnn};
     use crate::deer::newton::{deer_rnn, DeerConfig};
     use crate::deer::seq::{seq_rnn, seq_rnn_backward};
     use crate::util::rng::Rng;
@@ -202,7 +241,8 @@ mod tests {
         let mut dtheta_bptt = vec![0.0; cell.num_params()];
         let dh0_bptt = seq_rnn_backward(&cell, &h0, &xs, &ys, &gs, &mut dtheta_bptt);
 
-        let res = deer_rnn_backward(&cell, &h0, &xs, &ys, &gs, None, 1);
+        let res =
+            deer_rnn_backward(&cell, &h0, &xs, &ys, &gs, None, JacobianStructure::Dense, 1);
         for (a, b) in res.dtheta.iter().zip(dtheta_bptt.iter()) {
             assert!((a - b).abs() < 1e-9, "{a} vs {b}");
         }
@@ -227,7 +267,8 @@ mod tests {
         seq_rnn_backward(&cell, &h0, &xs, &ys, &gs, &mut dtheta_bptt);
 
         for threads in [1usize, 4] {
-            let res = deer_rnn_backward(&cell, &h0, &xs, &ys, &gs, None, threads);
+            let res =
+                deer_rnn_backward(&cell, &h0, &xs, &ys, &gs, None, JacobianStructure::Dense, threads);
             for (i, (a, b)) in res.dtheta.iter().zip(dtheta_bptt.iter()).enumerate() {
                 assert!((a - b).abs() < 1e-8, "threads={threads} param {i}: {a} vs {b}");
             }
@@ -247,11 +288,100 @@ mod tests {
         let mut gs = vec![0.0; t * n];
         rng.fill_normal(&mut gs, 1.0);
 
-        let reuse = deer_rnn_backward(&cell, &h0, &xs, &fwd.ys, &gs, Some(&fwd.jacobians), 1);
-        let recomp = deer_rnn_backward(&cell, &h0, &xs, &fwd.ys, &gs, None, 1);
+        let reuse = deer_rnn_backward(
+            &cell,
+            &h0,
+            &xs,
+            &fwd.ys,
+            &gs,
+            Some(&fwd.jacobians),
+            fwd.jac_structure,
+            1,
+        );
+        let recomp =
+            deer_rnn_backward(&cell, &h0, &xs, &fwd.ys, &gs, None, JacobianStructure::Dense, 1);
         // Forward Jacobians were evaluated at the pre-update trajectory; at
         // convergence they agree with recomputed ones to ~tol, so gradients
         // agree to a slightly looser tolerance.
+        for (a, b) in reuse.dtheta.iter().zip(recomp.dtheta.iter()) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    /// For a natively diagonal cell the diagonal dual scan is the *exact*
+    /// gradient: it must match BPTT to machine-level accuracy, through the
+    /// packed T·n Jacobian path, at every thread count.
+    #[test]
+    fn diagonal_backward_matches_bptt_indrnn() {
+        let mut rng = Rng::new(13);
+        let (n, m, t) = (5usize, 3usize, 200usize);
+        let cell: IndRnn<f64> = IndRnn::new(n, m, &mut rng);
+        let mut xs = vec![0.0; t * m];
+        rng.fill_normal(&mut xs, 1.0);
+        let h0 = vec![0.0; n];
+        let mut gs = vec![0.0; t * n];
+        rng.fill_normal(&mut gs, 1.0);
+
+        let ys = seq_rnn(&cell, &h0, &xs);
+        let mut dtheta_bptt = vec![0.0; cell.num_params()];
+        let dh0_bptt = seq_rnn_backward(&cell, &h0, &xs, &ys, &gs, &mut dtheta_bptt);
+
+        for threads in [1usize, 2, 4, 8] {
+            let res = deer_rnn_backward(
+                &cell,
+                &h0,
+                &xs,
+                &ys,
+                &gs,
+                None,
+                JacobianStructure::Diagonal,
+                threads,
+            );
+            for (i, (a, b)) in res.dtheta.iter().zip(dtheta_bptt.iter()).enumerate() {
+                assert!((a - b).abs() < 1e-9, "threads={threads} param {i}: {a} vs {b}");
+            }
+            for (a, b) in res.dh0.iter().zip(dh0_bptt.iter()) {
+                assert!((a - b).abs() < 1e-9);
+            }
+        }
+    }
+
+    /// Reusing the packed diagonal Jacobians from a converged forward pass
+    /// must agree with recomputing them.
+    #[test]
+    fn diagonal_reuse_matches_recompute() {
+        let mut rng = Rng::new(14);
+        let (n, m, t) = (4usize, 2usize, 150usize);
+        let cell: IndRnn<f64> = IndRnn::new(n, m, &mut rng);
+        let mut xs = vec![0.0; t * m];
+        rng.fill_normal(&mut xs, 1.0);
+        let h0 = vec![0.0; n];
+        let fwd = deer_rnn(&cell, &h0, &xs, None, &DeerConfig::default());
+        assert!(fwd.converged);
+        assert_eq!(fwd.jac_structure, JacobianStructure::Diagonal);
+        let mut gs = vec![0.0; t * n];
+        rng.fill_normal(&mut gs, 1.0);
+
+        let reuse = deer_rnn_backward(
+            &cell,
+            &h0,
+            &xs,
+            &fwd.ys,
+            &gs,
+            Some(&fwd.jacobians),
+            fwd.jac_structure,
+            1,
+        );
+        let recomp = deer_rnn_backward(
+            &cell,
+            &h0,
+            &xs,
+            &fwd.ys,
+            &gs,
+            None,
+            JacobianStructure::Diagonal,
+            1,
+        );
         for (a, b) in reuse.dtheta.iter().zip(recomp.dtheta.iter()) {
             assert!((a - b).abs() < 1e-5, "{a} vs {b}");
         }

@@ -11,6 +11,26 @@
 //!   interpolation (App. A.5/A.6, Table 3).
 //! * [`rk45`] — Dormand–Prince adaptive Runge–Kutta, the paper's NeuralODE
 //!   training baseline (§4.2).
+//!
+//! # Structure dispatch and the quasi-DEER trade-off
+//!
+//! Both the forward Newton solve and the backward dual scan dispatch on
+//! [`crate::cells::JacobianStructure`]:
+//!
+//! | structure | compose/step | Jacobian memory | convergence |
+//! |-----------|--------------|-----------------|-------------|
+//! | `Dense`            | O(n³) | O(T·n²) | quadratic (exact Newton) |
+//! | `Diagonal` (native)| O(n)  | O(T·n)  | quadratic (exact Newton) |
+//! | `Diagonal` (quasi) | O(n)  | O(T·n)  | linear (same fixed point) |
+//!
+//! **Quasi-DEER** ([`JacobianMode::DiagonalApprox`]) is the middle row
+//! forced onto dense cells: full f-evaluations, diagonally-approximated
+//! Jacobians inside the linear solve. Per-iteration INVLIN cost drops from
+//! O(T·n³) to O(T·n) while the iteration count typically grows only from
+//! ~5–7 to ~10–30 (the fixed point is untouched, so the answer is still the
+//! exact trajectory). The break-even is strongly in quasi-DEER's favor once
+//! n ≳ 8; below that the dense path's quadratic convergence wins. See
+//! `deer bench --exp quasi` for the measured trade-off grid.
 
 pub mod grad;
 pub mod newton;
@@ -19,7 +39,7 @@ pub mod rk45;
 pub mod seq;
 
 pub use grad::{deer_rnn_backward, GradResult};
-pub use newton::{deer_rnn, DeerConfig, DeerResult};
+pub use newton::{deer_rnn, effective_structure, DeerConfig, DeerResult, JacobianMode};
 pub use ode::{deer_ode, Interp, OdeDeerResult, OdeSystem};
 pub use rk45::{rk45_solve, Rk45Options};
 pub use seq::{seq_rnn, seq_rnn_backward};

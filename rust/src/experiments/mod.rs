@@ -12,10 +12,12 @@ use crate::cells::{Gru, Lem};
 use crate::coordinator::memory::MemoryPlanner;
 use crate::coordinator::sweep::{Job, JobResult, Method, Sweep};
 use crate::deer::grad::deer_rnn_backward;
-use crate::deer::newton::{deer_rnn, DeerConfig};
+use crate::deer::newton::{deer_rnn, DeerConfig, JacobianMode};
 use crate::deer::ode::{deer_ode, Interp, OdeSystem};
 use crate::deer::seq::{seq_rnn, seq_rnn_backward};
+use crate::scan::{par_diag_scan_apply_ws, par_scan_apply_ws, ScanWorkspace};
 use crate::simulator as sim;
+use crate::util::json::{self, Json};
 use crate::util::scalar::Scalar;
 use crate::util::rng::Rng;
 use crate::util::table::{sig3, Table};
@@ -82,7 +84,16 @@ fn measure_cell(n: usize, t_len: usize, seed: u64, grad: bool, budget: Duration)
     let t_deer = bench_budget(1, 20, budget, || {
         let r = deer_rnn(&cell, &h0, &xs, None, &cfg);
         if grad {
-            let g = deer_rnn_backward(&cell, &h0, &xs, &r.ys, &gs, Some(&r.jacobians), 1);
+            let g = deer_rnn_backward(
+                &cell,
+                &h0,
+                &xs,
+                &r.ys,
+                &gs,
+                Some(&r.jacobians),
+                r.jac_structure,
+                1,
+            );
             std::hint::black_box(&g.dtheta);
         }
         std::hint::black_box(&r.ys);
@@ -393,6 +404,177 @@ pub fn warmstart_ablation(n: usize, t_len: usize) -> Table {
     t
 }
 
+/// Quasi-DEER ablation: Full vs DiagonalApprox across state dims and
+/// lengths — wall-clock, Newton iterations, per-iteration INVLIN time, and
+/// the error of the quasi solution against the sequential trajectory. The
+/// measured counterpart of the §3.1.1 trade-off table in `deer/mod.rs`.
+pub fn quasi_deer_bench(opts: &BenchOpts) -> Table {
+    let mut t = Table::new(&[
+        "n",
+        "T",
+        "iters full/quasi",
+        "time full",
+        "time quasi",
+        "speedup",
+        "INVLIN/iter full",
+        "INVLIN/iter quasi",
+        "INVLIN speedup",
+        "max |Δ| quasi vs seq",
+    ]);
+    for &n in &opts.dims {
+        for &t_len in &opts.lens {
+            let (cell, xs, h0) = gru_and_inputs(n, t_len, opts.seeds[0]);
+            let cfg_full = DeerConfig::<f32>::default();
+            let cfg_quasi = DeerConfig::<f32> {
+                jacobian_mode: JacobianMode::DiagonalApprox,
+                ..Default::default()
+            };
+
+            let full = deer_rnn(&cell, &h0, &xs, None, &cfg_full);
+            let quasi = deer_rnn(&cell, &h0, &xs, None, &cfg_quasi);
+            let seq = seq_rnn(&cell, &h0, &xs);
+            let err_quasi = crate::linalg::max_abs_diff(&seq, &quasi.ys).to_f64c();
+
+            let t_full = bench_budget(1, 20, opts.budget_per_cell, || {
+                std::hint::black_box(deer_rnn(&cell, &h0, &xs, None, &cfg_full).ys.len());
+            })
+            .median();
+            let t_quasi = bench_budget(1, 20, opts.budget_per_cell, || {
+                std::hint::black_box(deer_rnn(&cell, &h0, &xs, None, &cfg_quasi).ys.len());
+            })
+            .median();
+
+            let invlin_full = full.profile.get("INVLIN") / full.iterations.max(1) as f64;
+            let invlin_quasi = quasi.profile.get("INVLIN") / quasi.iterations.max(1) as f64;
+            let conv = |r: &crate::deer::DeerResult<f32>| {
+                if r.converged {
+                    r.iterations.to_string()
+                } else {
+                    format!("{}(!)", r.iterations)
+                }
+            };
+            t.row(vec![
+                n.to_string(),
+                t_len.to_string(),
+                format!("{}/{}", conv(&full), conv(&quasi)),
+                fmt_secs(t_full),
+                fmt_secs(t_quasi),
+                sig3(t_full / t_quasi),
+                fmt_secs(invlin_full),
+                fmt_secs(invlin_quasi),
+                sig3(invlin_full / invlin_quasi),
+                format!("{err_quasi:.1e}"),
+            ]);
+        }
+    }
+    t
+}
+
+/// The {dims, lens} grid both scan-bench entry points (CLI `--exp scan`
+/// and the `cargo bench` harness) must share, so `BENCH_scan.json` keeps a
+/// stable schema across PRs. The fast grid always contains the n=16,
+/// T=10k point that `scripts/bench_smoke.sh` gates on.
+pub fn scan_bench_grid(fast: bool) -> (Vec<usize>, Vec<usize>) {
+    if fast {
+        (vec![4, 16], vec![10_000])
+    } else {
+        (vec![1, 2, 4, 8, 16, 32], vec![1_000, 10_000, 100_000])
+    }
+}
+
+/// One point of the raw scan-kernel microbench.
+#[derive(Debug, Clone)]
+pub struct ScanBenchPoint {
+    pub n: usize,
+    pub t_len: usize,
+    pub dense_ns_per_step: f64,
+    pub diag_ns_per_step: f64,
+    pub speedup: f64,
+}
+
+/// Raw INVLIN-kernel microbench: dense vs diagonal parallel scan over a
+/// {dims × lens} grid (f32, reused workspaces — exactly the Newton-loop hot
+/// path). Returns the human table plus the machine-readable points for
+/// `BENCH_scan.json` (`scripts/bench_smoke.sh`).
+pub fn scan_microbench(
+    dims: &[usize],
+    lens: &[usize],
+    threads: usize,
+    budget: Duration,
+) -> (Table, Vec<ScanBenchPoint>) {
+    let mut table = Table::new(&["n", "T", "dense ns/step", "diag ns/step", "speedup"]);
+    let mut points = Vec::new();
+    for &n in dims {
+        for &t_len in lens {
+            let mut rng = Rng::new(0xC0FFEE ^ (n as u64) << 24 ^ t_len as u64);
+            let mut a_dense = vec![0.0f32; t_len * n * n];
+            let mut a_diag = vec![0.0f32; t_len * n];
+            let mut b = vec![0.0f32; t_len * n];
+            let mut y0 = vec![0.0f32; n];
+            rng.fill_normal(&mut a_dense, 0.3);
+            rng.fill_normal(&mut a_diag, 0.5);
+            rng.fill_normal(&mut b, 1.0);
+            rng.fill_normal(&mut y0, 1.0);
+            let mut out = vec![0.0f32; t_len * n];
+            let mut ws: ScanWorkspace<f32> = ScanWorkspace::new();
+
+            let t_dense = bench_budget(2, 40, budget, || {
+                par_scan_apply_ws(&a_dense, &b, &y0, &mut out, n, t_len, threads, &mut ws);
+                std::hint::black_box(&out);
+            })
+            .median();
+            let t_diag = bench_budget(2, 40, budget, || {
+                par_diag_scan_apply_ws(&a_diag, &b, &y0, &mut out, n, t_len, threads, &mut ws);
+                std::hint::black_box(&out);
+            })
+            .median();
+
+            let p = ScanBenchPoint {
+                n,
+                t_len,
+                dense_ns_per_step: t_dense / t_len as f64 * 1e9,
+                diag_ns_per_step: t_diag / t_len as f64 * 1e9,
+                speedup: t_dense / t_diag,
+            };
+            table.row(vec![
+                n.to_string(),
+                t_len.to_string(),
+                sig3(p.dense_ns_per_step),
+                sig3(p.diag_ns_per_step),
+                sig3(p.speedup),
+            ]);
+            points.push(p);
+        }
+    }
+    (table, points)
+}
+
+/// Serialize scan-microbench points as the `BENCH_scan.json` document.
+pub fn scan_bench_json(points: &[ScanBenchPoint], threads: usize) -> Json {
+    json::obj(vec![
+        ("bench", json::s("scan_invlin")),
+        ("dtype", json::s("f32")),
+        ("threads", json::num(threads as f64)),
+        (
+            "points",
+            json::arr(
+                points
+                    .iter()
+                    .map(|p| {
+                        json::obj(vec![
+                            ("n", json::num(p.n as f64)),
+                            ("t", json::num(p.t_len as f64)),
+                            ("dense_ns_per_step", json::num(p.dense_ns_per_step)),
+                            ("diag_ns_per_step", json::num(p.diag_ns_per_step)),
+                            ("speedup", json::num(p.speedup)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
 /// The sweep-scheduler entry used by `deer sweep` (coordinator demo):
 /// runs the grid through the worker pool with warm-start caching.
 pub fn run_sweep(opts: &BenchOpts, workers: usize) -> Vec<JobResult> {
@@ -469,6 +651,52 @@ mod tests {
             .parse()
             .unwrap();
         assert!(warm <= 2, "{md}");
+    }
+
+    #[test]
+    fn quasi_bench_reports_grid() {
+        let opts = BenchOpts {
+            dims: vec![2, 4],
+            lens: vec![300],
+            batches: vec![1],
+            seeds: vec![0],
+            budget_per_cell: Duration::from_millis(30),
+        };
+        let t = quasi_deer_bench(&opts);
+        assert_eq!(t.num_rows(), 2);
+    }
+
+    #[test]
+    fn scan_microbench_diag_wins_at_n16() {
+        // The acceptance bar: ≥5× INVLIN-kernel speedup for the diagonal
+        // path at n=16 (dense compose/apply is O(n²)+ per step, diag O(n)).
+        let (t, points) =
+            scan_microbench(&[16], &[10_000], 1, Duration::from_millis(150));
+        assert_eq!(t.num_rows(), 1);
+        assert!(
+            points[0].speedup >= 5.0,
+            "diag speedup at n=16: {:.2}× (dense {:.1} ns vs diag {:.1} ns)",
+            points[0].speedup,
+            points[0].dense_ns_per_step,
+            points[0].diag_ns_per_step
+        );
+    }
+
+    #[test]
+    fn scan_bench_json_shape() {
+        let points = vec![ScanBenchPoint {
+            n: 16,
+            t_len: 10_000,
+            dense_ns_per_step: 100.0,
+            diag_ns_per_step: 10.0,
+            speedup: 10.0,
+        }];
+        let doc = scan_bench_json(&points, 1);
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        let pts = parsed.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(pts.len(), 1);
+        assert_eq!(pts[0].get("n").unwrap().as_usize(), Some(16));
+        assert_eq!(pts[0].get("speedup").unwrap().as_f64(), Some(10.0));
     }
 
     #[test]

@@ -11,7 +11,8 @@
 //! * [`cells`] — non-linear recurrent cells (GRU / LSTM / LEM / Elman) with
 //!   *analytic* state Jacobians and parameter VJPs.
 //! * [`scan`] — sequential and multi-threaded parallel prefix scans over the
-//!   affine elements `(A, b)` of eq. (10) in the paper.
+//!   affine elements `(A, b)` of eq. (10) in the paper, with O(n)
+//!   structure-specialized kernels for diagonal Jacobians (quasi-DEER).
 //! * [`deer`] — the DEER algorithm itself: Newton fixed-point iteration for
 //!   RNNs (eq. 3/5), the single-pass backward gradient (eq. 7), the DEER-ODE
 //!   solver (eq. 8–10) plus sequential / BPTT / RK45 baselines.
@@ -45,6 +46,6 @@ pub mod train;
 pub mod metrics;
 pub mod testkit;
 
-pub use cells::{Cell, CellGrad, Elman, Gru, Lem, Lstm};
-pub use deer::{DeerConfig, DeerResult};
+pub use cells::{Cell, CellGrad, Elman, Gru, IndRnn, JacobianStructure, Lem, Lstm};
+pub use deer::{DeerConfig, DeerResult, JacobianMode};
 pub use util::scalar::Scalar;

@@ -1,7 +1,7 @@
 //! `deer` — the Layer-3 coordinator CLI.
 //!
 //! Subcommands:
-//!   bench  --exp fig2|fig2grad|fig3|fig6|fig7|fig8|table3|table4|table5|table6|all
+//!   bench  --exp fig2|fig2grad|fig3|fig6|fig7|fig8|table3|table4|table5|table6|quasi|scan|all
 //!   sweep  --dims 1,2,4 --lens 1000,10000 --workers 2
 //!   train  --model worms|hnn-deer|hnn-rk4|mhgru --steps 100
 //!   info   (list artifacts)
@@ -9,7 +9,8 @@
 //! Common flags: --dims, --lens, --batches, --seeds, --results DIR,
 //! --artifacts DIR, --budget-ms N.
 
-use anyhow::{bail, Result};
+use deer::bail;
+use deer::util::err::{Error, Result};
 use std::path::PathBuf;
 use std::time::Duration;
 
@@ -24,7 +25,7 @@ use deer::util::table::Table;
 
 fn main() {
     if let Err(e) = run() {
-        eprintln!("error: {e:#}");
+        eprintln!("error: {e}");
         std::process::exit(1);
     }
 }
@@ -32,18 +33,18 @@ fn main() {
 fn opts_from_args(args: &Args) -> Result<exp::BenchOpts> {
     let d = exp::BenchOpts::default();
     Ok(exp::BenchOpts {
-        dims: args.get_list("dims", &d.dims).map_err(anyhow::Error::msg)?,
-        lens: args.get_list("lens", &d.lens).map_err(anyhow::Error::msg)?,
-        batches: args.get_list("batches", &d.batches).map_err(anyhow::Error::msg)?,
-        seeds: args.get_list("seeds", &d.seeds).map_err(anyhow::Error::msg)?,
+        dims: args.get_list("dims", &d.dims).map_err(Error::msg)?,
+        lens: args.get_list("lens", &d.lens).map_err(Error::msg)?,
+        batches: args.get_list("batches", &d.batches).map_err(Error::msg)?,
+        seeds: args.get_list("seeds", &d.seeds).map_err(Error::msg)?,
         budget_per_cell: Duration::from_millis(
-            args.get_parse("budget-ms", 400u64).map_err(anyhow::Error::msg)?,
+            args.get_parse("budget-ms", 400u64).map_err(Error::msg)?,
         ),
     })
 }
 
 fn run() -> Result<()> {
-    let args = Args::from_env().map_err(anyhow::Error::msg)?;
+    let args = Args::from_env().map_err(Error::msg)?;
     let results = Recorder::new(&PathBuf::from(
         args.get("results", Recorder::default_dir().to_str().unwrap()),
     ))?;
@@ -63,6 +64,8 @@ fn run() -> Result<()> {
                  usage: deer <bench|sweep|train|info> [flags]\n\
                  \n  deer bench --exp all            regenerate every paper table/figure\
                  \n  deer bench --exp fig2 --dims 1,2,4 --lens 1000,10000\
+                 \n  deer bench --exp quasi          Full vs DiagonalApprox Jacobians\
+                 \n  deer bench --exp scan --scan-out BENCH_scan.json   INVLIN kernel microbench\
                  \n  deer sweep --workers 2          coordinator sweep demo\
                  \n  deer train --model worms --steps 50\
                  \n  deer info                       list AOT artifacts"
@@ -106,7 +109,7 @@ fn bench(args: &Args, rec: &Recorder) -> Result<()> {
         let mut o = opts.clone();
         o.batches = args
             .get_list("batches", &[16usize, 8, 4, 2])
-            .map_err(anyhow::Error::msg)?;
+            .map_err(Error::msg)?;
         for (i, t) in exp::fig2_speedup(&o, false).iter().enumerate() {
             rec.table(
                 &format!("table4_b{}", o.batches[i]),
@@ -117,14 +120,14 @@ fn bench(args: &Args, rec: &Recorder) -> Result<()> {
     }
     if all || which == "fig3" {
         let t = exp::fig3_equivalence(
-            args.get_parse("n", 32usize).map_err(anyhow::Error::msg)?,
-            args.get_parse("t", 10_000usize).map_err(anyhow::Error::msg)?,
+            args.get_parse("n", 32usize).map_err(Error::msg)?,
+            args.get_parse("t", 10_000usize).map_err(Error::msg)?,
             &opts.seeds,
         );
         rec.table("fig3_equivalence", "Fig. 3: DEER vs sequential output difference", &t)?;
     }
     if all || which == "fig6" {
-        let t = exp::fig6_tolerance(args.get_parse("t", 10_000usize).map_err(anyhow::Error::msg)?);
+        let t = exp::fig6_tolerance(args.get_parse("t", 10_000usize).map_err(Error::msg)?);
         rec.table("fig6_tolerance", "Fig. 6: iterations vs tolerance (f32/f64)", &t)?;
     }
     if all || which == "fig7" {
@@ -134,7 +137,7 @@ fn bench(args: &Args, rec: &Recorder) -> Result<()> {
     if all || which == "fig8" {
         let t = exp::fig8_equal_memory(
             16,
-            args.get_parse("t", 17_984usize).map_err(anyhow::Error::msg)?,
+            args.get_parse("t", 17_984usize).map_err(Error::msg)?,
         );
         rec.table("fig8_equal_memory", "Fig. 8: DEER vs sequential LEM at equal memory", &t)?;
     }
@@ -143,8 +146,8 @@ fn bench(args: &Args, rec: &Recorder) -> Result<()> {
             "ablation_warmstart",
             "Ablation (App. B.2): warm vs cold start Newton iterations vs parameter drift",
             &exp::warmstart_ablation(
-                args.get_parse("n", 4usize).map_err(anyhow::Error::msg)?,
-                args.get_parse("t", 10_000usize).map_err(anyhow::Error::msg)?,
+                args.get_parse("n", 4usize).map_err(Error::msg)?,
+                args.get_parse("t", 10_000usize).map_err(Error::msg)?,
             ),
         )?;
     }
@@ -157,7 +160,7 @@ fn bench(args: &Args, rec: &Recorder) -> Result<()> {
     }
     if all || which == "table5" {
         let t = exp::table5_profile(
-            args.get_parse("t", 3_000usize).map_err(anyhow::Error::msg)?,
+            args.get_parse("t", 3_000usize).map_err(Error::msg)?,
             &opts.dims,
         );
         rec.table("table5_profile", "Table 5: per-phase profile of one DEER iteration", &t)?;
@@ -166,12 +169,36 @@ fn bench(args: &Args, rec: &Recorder) -> Result<()> {
         let t = exp::table6_memory(100_000, 16, &[1, 2, 4, 8, 16, 32]);
         rec.table("table6_memory", "Table 6: DEER memory vs state dim (B=16, T=100k)", &t)?;
     }
+    if all || which == "quasi" {
+        rec.table(
+            "quasi_deer",
+            "Quasi-DEER ablation: Full vs DiagonalApprox Jacobians (GRU, measured 1-core)",
+            &exp::quasi_deer_bench(&opts),
+        )?;
+    }
+    if all || which == "scan" {
+        // INVLIN kernel microbench: dense vs diagonal scan. Grids shrink
+        // under DEER_BENCH_FAST=1 (the scripts/bench_smoke.sh smoke run).
+        let fast = std::env::var("DEER_BENCH_FAST").is_ok();
+        let (dims, lens) = exp::scan_bench_grid(fast);
+        let threads = args.get_parse("workers", 1usize).map_err(Error::msg)?;
+        let budget = if fast { Duration::from_millis(120) } else { opts.budget_per_cell };
+        let (t, points) = exp::scan_microbench(&dims, &lens, threads, budget);
+        rec.table(
+            "scan_kernels",
+            &format!("INVLIN scan kernels: dense vs diagonal ns/step (measured, {threads} thread(s))"),
+            &t,
+        )?;
+        let out_path = PathBuf::from(args.get("scan-out", "BENCH_scan.json"));
+        std::fs::write(&out_path, exp::scan_bench_json(&points, threads).to_string())?;
+        println!("scan bench points written to {}", out_path.display());
+    }
     Ok(())
 }
 
 fn sweep(args: &Args, rec: &Recorder) -> Result<()> {
     let opts = opts_from_args(args)?;
-    let workers = args.get_parse("workers", 1usize).map_err(anyhow::Error::msg)?;
+    let workers = args.get_parse("workers", 1usize).map_err(Error::msg)?;
     let results = exp::run_sweep(&opts, workers);
     let mut t = Table::new(&["n", "T", "method", "secs", "iters", "converged", "max err vs seq"]);
     for r in &results {
@@ -213,9 +240,9 @@ fn train(args: &Args, rec: &Recorder) -> Result<()> {
     let rt = Runtime::load(&PathBuf::from(
         args.get("artifacts", Runtime::default_dir().to_str().unwrap()),
     ))?;
-    let steps = args.get_parse("steps", 50usize).map_err(anyhow::Error::msg)?;
+    let steps = args.get_parse("steps", 50usize).map_err(Error::msg)?;
     let model = args.get("model", "worms");
-    let mut rng = Rng::new(args.get_parse("seed", 0u64).map_err(anyhow::Error::msg)?);
+    let mut rng = Rng::new(args.get_parse("seed", 0u64).map_err(Error::msg)?);
 
     match model {
         "worms" => {
@@ -297,8 +324,8 @@ fn table1(args: &Args, rec: &Recorder) -> Result<()> {
     let rt = Runtime::load(&PathBuf::from(
         args.get("artifacts", Runtime::default_dir().to_str().unwrap()),
     ))?;
-    let steps = args.get_parse("steps", 400usize).map_err(anyhow::Error::msg)?;
-    let seeds = args.get_list("seeds", &[0u64, 1, 2]).map_err(anyhow::Error::msg)?;
+    let steps = args.get_parse("steps", 400usize).map_err(Error::msg)?;
+    let seeds = args.get_list("seeds", &[0u64, 1, 2]).map_err(Error::msg)?;
     let spec = rt.manifest.get("worms_train_step").expect("artifact").clone();
     let b = spec.meta["batch"] as usize;
     let t_len = spec.meta["t"] as usize;

@@ -12,7 +12,9 @@ pub mod tensor;
 
 pub use tensor::{Dtype, Tensor};
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::err::{Context, Result};
+use crate::{anyhow, bail};
+#[cfg(feature = "xla")]
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -125,10 +127,16 @@ impl Manifest {
 }
 
 /// PJRT-backed executor with a per-artifact compilation cache.
+///
+/// Without the `xla` cargo feature (the default offline build) the manifest
+/// and parameter loading still work, but [`Runtime::run`] reports that the
+/// PJRT backend is not compiled in.
 pub struct Runtime {
+    #[cfg(feature = "xla")]
     client: xla::PjRtClient,
     dir: PathBuf,
     pub manifest: Manifest,
+    #[cfg(feature = "xla")]
     cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
 }
 
@@ -136,11 +144,14 @@ impl Runtime {
     /// Load the manifest in `dir` and create the PJRT CPU client.
     pub fn load(dir: &Path) -> Result<Runtime> {
         let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        #[cfg(feature = "xla")]
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt client: {e:?}"))?;
         Ok(Runtime {
+            #[cfg(feature = "xla")]
             client,
             dir: dir.to_path_buf(),
             manifest,
+            #[cfg(feature = "xla")]
             cache: RefCell::new(HashMap::new()),
         })
     }
@@ -152,6 +163,7 @@ impl Runtime {
             .unwrap_or_else(|_| PathBuf::from("artifacts"))
     }
 
+    #[cfg(feature = "xla")]
     fn compile(&self, name: &str) -> Result<()> {
         if self.cache.borrow().contains_key(name) {
             return Ok(());
@@ -198,6 +210,16 @@ impl Runtime {
                 );
             }
         }
+        self.execute_validated(name, &spec, inputs)
+    }
+
+    #[cfg(feature = "xla")]
+    fn execute_validated(
+        &self,
+        name: &str,
+        spec: &ArtifactSpec,
+        inputs: &[Tensor],
+    ) -> Result<Vec<Tensor>> {
         self.compile(name)?;
         let lits: Vec<xla::Literal> = inputs
             .iter()
@@ -225,6 +247,16 @@ impl Runtime {
             .zip(spec.outputs.iter())
             .map(|(l, s)| Tensor::from_literal(&l, &s.shape, s.dtype))
             .collect()
+    }
+
+    #[cfg(not(feature = "xla"))]
+    fn execute_validated(
+        &self,
+        name: &str,
+        _spec: &ArtifactSpec,
+        _inputs: &[Tensor],
+    ) -> Result<Vec<Tensor>> {
+        bail!("executing {name}: PJRT backend not compiled in (enable the `xla` cargo feature)")
     }
 
     /// Read an artifact's initial parameter vector (raw little-endian f32).

@@ -1,6 +1,7 @@
 //! Host tensors exchanged with the PJRT runtime.
 
-use anyhow::{anyhow, bail, Result};
+use crate::util::err::Result;
+use crate::{anyhow, bail};
 
 /// Supported element types (the artifact set uses f32 + i32).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -92,6 +93,7 @@ impl Tensor {
     }
 
     /// Convert to an xla Literal (reshaped to this tensor's dims).
+    #[cfg(feature = "xla")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
         let lit = match &self.data {
@@ -112,6 +114,7 @@ impl Tensor {
     }
 
     /// Build from an xla Literal with a declared spec.
+    #[cfg(feature = "xla")]
     pub fn from_literal(lit: &xla::Literal, shape: &[usize], dtype: Dtype) -> Result<Tensor> {
         let want: usize = shape.iter().product();
         match dtype {
@@ -158,6 +161,7 @@ mod tests {
         assert_eq!(Tensor::scalar_i32(7).item().unwrap(), 7.0);
     }
 
+    #[cfg(feature = "xla")]
     #[test]
     fn literal_roundtrip() {
         // Requires the PJRT shared library; literal ops are host-only.

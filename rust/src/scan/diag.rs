@@ -1,0 +1,460 @@
+//! O(n)-per-element scan kernels for **diagonal** affine elements.
+//!
+//! When every propagator is `A_i = diag(a_i)` the eq. (10) monoid closes
+//! over packed diagonals: compose is `a_l ⊙ a_e` and apply is
+//! `a_i ⊙ y + b_i`, both O(n). This is the INVLIN fast path used by
+//! natively-diagonal cells ([`crate::cells::IndRnn`]) and by quasi-DEER
+//! mode ([`crate::deer::JacobianMode::DiagonalApprox`]), which replaces the
+//! dense O(n³) compose of §3.5 with a linear-cost one (Gonzalez et al.
+//! 2024; Danieli et al. 2025).
+//!
+//! Layout: `a` and `b` are both `len·n`, `a[i·n + j]` the j-th diagonal
+//! entry of step i. No n×n temporaries are materialized anywhere — the
+//! whole path is O(T·n) memory and O(T·n) work.
+
+use super::ScanWorkspace;
+use crate::util::scalar::Scalar;
+
+/// Sequential `y_i = a_i ⊙ y_{i−1} + b_i` with `y_{−1} = y0`.
+pub fn seq_diag_scan_apply<S: Scalar>(
+    a: &[S],
+    b: &[S],
+    y0: &[S],
+    out: &mut [S],
+    n: usize,
+    len: usize,
+) {
+    debug_assert_eq!(a.len(), len * n);
+    debug_assert_eq!(b.len(), len * n);
+    debug_assert_eq!(out.len(), len * n);
+    if len == 0 {
+        return;
+    }
+    {
+        let (head, _) = out.split_at_mut(n);
+        for j in 0..n {
+            head[j] = a[j] * y0[j] + b[j];
+        }
+    }
+    for i in 1..len {
+        let (prev_part, cur_part) = out.split_at_mut(i * n);
+        let prev = &prev_part[(i - 1) * n..];
+        let cur = &mut cur_part[..n];
+        let ai = &a[i * n..(i + 1) * n];
+        let bi = &b[i * n..(i + 1) * n];
+        for j in 0..n {
+            cur[j] = ai[j] * prev[j] + bi[j];
+        }
+    }
+}
+
+/// Sequential dual scan `λ_i = g_i + a_{i+1} ⊙ λ_{i+1}` (diagonal ⇒ the
+/// transpose in eq. 7 is a no-op), `λ_{L−1} = g_{L−1}`.
+pub fn seq_diag_scan_reverse<S: Scalar>(a: &[S], g: &[S], out: &mut [S], n: usize, len: usize) {
+    debug_assert_eq!(a.len(), len * n);
+    debug_assert_eq!(g.len(), len * n);
+    debug_assert_eq!(out.len(), len * n);
+    if len == 0 {
+        return;
+    }
+    out[(len - 1) * n..].copy_from_slice(&g[(len - 1) * n..]);
+    for i in (0..len - 1).rev() {
+        let a_next = &a[(i + 1) * n..(i + 2) * n];
+        let (cur_part, next_part) = out.split_at_mut((i + 1) * n);
+        let next = &next_part[..n];
+        let cur = &mut cur_part[i * n..];
+        let gi = &g[i * n..(i + 1) * n];
+        for j in 0..n {
+            cur[j] = gi[j] + a_next[j] * next[j];
+        }
+    }
+}
+
+/// Compose a contiguous range of diagonal elements into one `(a, b)` pair:
+/// `a = a_{hi−1} ⊙ ··· ⊙ a_{lo}`, `b` the matching offset. O(n·(hi−lo)).
+pub fn compose_range_diag<S: Scalar>(
+    a: &[S],
+    b: &[S],
+    lo: usize,
+    hi: usize,
+    a_out: &mut [S],
+    b_out: &mut [S],
+    n: usize,
+) {
+    for v in a_out.iter_mut() {
+        *v = S::one();
+    }
+    for v in b_out.iter_mut() {
+        *v = S::zero();
+    }
+    for i in lo..hi {
+        let ai = &a[i * n..(i + 1) * n];
+        let bi = &b[i * n..(i + 1) * n];
+        for j in 0..n {
+            b_out[j] = ai[j] * b_out[j] + bi[j];
+            a_out[j] = ai[j] * a_out[j];
+        }
+    }
+}
+
+/// Parallel diagonal forward scan over `threads` workers (same three-phase
+/// schedule as [`super::par::par_scan_apply`], every phase O(n) per element).
+pub fn par_diag_scan_apply<S: Scalar>(
+    a: &[S],
+    b: &[S],
+    y0: &[S],
+    out: &mut [S],
+    n: usize,
+    len: usize,
+    threads: usize,
+) {
+    let mut ws = ScanWorkspace::new();
+    par_diag_scan_apply_ws(a, b, y0, out, n, len, threads, &mut ws);
+}
+
+/// [`par_diag_scan_apply`] with a reusable workspace.
+#[allow(clippy::too_many_arguments)]
+pub fn par_diag_scan_apply_ws<S: Scalar>(
+    a: &[S],
+    b: &[S],
+    y0: &[S],
+    out: &mut [S],
+    n: usize,
+    len: usize,
+    threads: usize,
+    ws: &mut ScanWorkspace<S>,
+) {
+    if threads <= 1 || len < 4 * threads {
+        seq_diag_scan_apply(a, b, y0, out, n, len);
+        return;
+    }
+    let chunks = threads;
+    let chunk_len = len.div_ceil(chunks);
+    ws.ensure(chunks * n, chunks * n, chunks * n);
+
+    // Phase 1: per-chunk composition (packed diagonals, O(n) per element).
+    {
+        let comp: Vec<(&mut [S], &mut [S])> = ws.comp_a[..chunks * n]
+            .chunks_mut(n)
+            .zip(ws.comp_b[..chunks * n].chunks_mut(n))
+            .collect();
+        std::thread::scope(|scope| {
+            for (c, (ca, cb)) in comp.into_iter().enumerate() {
+                let lo = (c * chunk_len).min(len);
+                let hi = ((c + 1) * chunk_len).min(len);
+                scope.spawn(move || {
+                    compose_range_diag(a, b, lo, hi, ca, cb, n);
+                });
+            }
+        });
+    }
+
+    // Phase 2: sequential carry over chunk entry states (O(n·C)).
+    let (comp_a, comp_b) = (&ws.comp_a, &ws.comp_b);
+    let entries = &mut ws.carry[..chunks * n];
+    entries[..n].copy_from_slice(y0);
+    for c in 0..chunks - 1 {
+        let (head, tail) = entries.split_at_mut((c + 1) * n);
+        let prev = &head[c * n..];
+        let next = &mut tail[..n];
+        for j in 0..n {
+            next[j] = comp_a[c * n + j] * prev[j] + comp_b[c * n + j];
+        }
+    }
+
+    // Phase 3: per-chunk apply, in parallel.
+    {
+        let entries = &ws.carry;
+        let mut out_chunks: Vec<&mut [S]> = Vec::with_capacity(chunks);
+        let mut rest = out;
+        for c in 0..chunks {
+            let lo = (c * chunk_len).min(len);
+            let hi = ((c + 1) * chunk_len).min(len);
+            let (head, tail) = rest.split_at_mut((hi - lo) * n);
+            out_chunks.push(head);
+            rest = tail;
+        }
+        std::thread::scope(|scope| {
+            for (c, out_c) in out_chunks.into_iter().enumerate() {
+                let lo = (c * chunk_len).min(len);
+                let hi = ((c + 1) * chunk_len).min(len);
+                let entry = &entries[c * n..(c + 1) * n];
+                scope.spawn(move || {
+                    seq_diag_scan_apply(
+                        &a[lo * n..hi * n],
+                        &b[lo * n..hi * n],
+                        entry,
+                        out_c,
+                        n,
+                        hi - lo,
+                    );
+                });
+            }
+        });
+    }
+}
+
+/// Parallel diagonal dual scan (backward pass, eq. 7 with diagonal `A`).
+pub fn par_diag_scan_reverse<S: Scalar>(
+    a: &[S],
+    g: &[S],
+    out: &mut [S],
+    n: usize,
+    len: usize,
+    threads: usize,
+) {
+    let mut ws = ScanWorkspace::new();
+    par_diag_scan_reverse_ws(a, g, out, n, len, threads, &mut ws);
+}
+
+/// [`par_diag_scan_reverse`] with a reusable workspace.
+pub fn par_diag_scan_reverse_ws<S: Scalar>(
+    a: &[S],
+    g: &[S],
+    out: &mut [S],
+    n: usize,
+    len: usize,
+    threads: usize,
+    ws: &mut ScanWorkspace<S>,
+) {
+    if threads <= 1 || len < 4 * threads {
+        seq_diag_scan_reverse(a, g, out, n, len);
+        return;
+    }
+    let chunks = threads;
+    let chunk_len = len.div_ceil(chunks);
+    ws.ensure(chunks * n, chunks * n, chunks * n);
+
+    // Phase 1: per-chunk reverse composition. For chunk [lo, hi):
+    // λ_{lo} = m_c ⊙ λ_{hi} + v_c, built right-to-left.
+    {
+        let comp: Vec<(&mut [S], &mut [S])> = ws.comp_a[..chunks * n]
+            .chunks_mut(n)
+            .zip(ws.comp_b[..chunks * n].chunks_mut(n))
+            .collect();
+        std::thread::scope(|scope| {
+            for (c, (cm, cv)) in comp.into_iter().enumerate() {
+                let lo = (c * chunk_len).min(len);
+                let hi = ((c + 1) * chunk_len).min(len);
+                scope.spawn(move || {
+                    for v in cm.iter_mut() {
+                        *v = S::one();
+                    }
+                    for v in cv.iter_mut() {
+                        *v = S::zero();
+                    }
+                    for i in (lo..hi).rev() {
+                        if i + 1 < len {
+                            let an = &a[(i + 1) * n..(i + 2) * n];
+                            let gi = &g[i * n..(i + 1) * n];
+                            for j in 0..n {
+                                cv[j] = an[j] * cv[j] + gi[j];
+                                cm[j] = an[j] * cm[j];
+                            }
+                        } else {
+                            // last element of the whole sequence: λ = g only
+                            for v in cm.iter_mut() {
+                                *v = S::zero();
+                            }
+                            cv.copy_from_slice(&g[i * n..(i + 1) * n]);
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    // Phase 2: carry λ at chunk boundaries, right to left.
+    let (comp_m, comp_v) = (&ws.comp_a, &ws.comp_b);
+    let exits = &mut ws.carry[..chunks * n];
+    for v in exits[(chunks - 1) * n..].iter_mut() {
+        *v = S::zero();
+    }
+    for c in (1..chunks).rev() {
+        let (head, tail) = exits.split_at_mut(c * n);
+        let cur = &tail[..n];
+        let prev = &mut head[(c - 1) * n..];
+        for j in 0..n {
+            prev[j] = comp_m[c * n + j] * cur[j] + comp_v[c * n + j];
+        }
+    }
+
+    // Phase 3: per-chunk reverse apply.
+    {
+        let exits = &ws.carry;
+        let mut out_chunks: Vec<&mut [S]> = Vec::with_capacity(chunks);
+        let mut rest = out;
+        for c in 0..chunks {
+            let lo = (c * chunk_len).min(len);
+            let hi = ((c + 1) * chunk_len).min(len);
+            let (head, tail) = rest.split_at_mut((hi - lo) * n);
+            out_chunks.push(head);
+            rest = tail;
+        }
+        std::thread::scope(|scope| {
+            for (c, out_c) in out_chunks.into_iter().enumerate() {
+                let lo = (c * chunk_len).min(len);
+                let hi = ((c + 1) * chunk_len).min(len);
+                let exit = &exits[c * n..(c + 1) * n];
+                scope.spawn(move || {
+                    let mut next = exit.to_vec();
+                    for i in (lo..hi).rev() {
+                        let li = i - lo;
+                        let oc = &mut out_c[li * n..(li + 1) * n];
+                        let gi = &g[i * n..(i + 1) * n];
+                        if i + 1 < len {
+                            let an = &a[(i + 1) * n..(i + 2) * n];
+                            for j in 0..n {
+                                oc[j] = gi[j] + an[j] * next[j];
+                            }
+                        } else {
+                            oc.copy_from_slice(gi);
+                        }
+                        next.copy_from_slice(oc);
+                    }
+                });
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scan::seq::{seq_scan_apply, seq_scan_reverse};
+    use crate::util::rng::Rng;
+
+    fn random_diag(n: usize, len: usize, seed: u64) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let mut a = vec![0.0; len * n];
+        let mut b = vec![0.0; len * n];
+        let mut y0 = vec![0.0; n];
+        rng.fill_normal(&mut a, 0.6);
+        rng.fill_normal(&mut b, 1.0);
+        rng.fill_normal(&mut y0, 1.0);
+        (a, b, y0)
+    }
+
+    /// Embed a packed diagonal sequence into dense n×n matrices.
+    fn embed_dense(a: &[f64], n: usize, len: usize) -> Vec<f64> {
+        let mut dense = vec![0.0; len * n * n];
+        for i in 0..len {
+            for j in 0..n {
+                dense[i * n * n + j * n + j] = a[i * n + j];
+            }
+        }
+        dense
+    }
+
+    #[test]
+    fn diag_forward_matches_dense_scan() {
+        for &(n, len) in &[(1usize, 40usize), (3, 111), (16, 64)] {
+            let (a, b, y0) = random_diag(n, len, 7 + n as u64);
+            let dense = embed_dense(&a, n, len);
+            let mut out_dense = vec![0.0; len * n];
+            let mut out_diag = vec![0.0; len * n];
+            seq_scan_apply(&dense, &b, &y0, &mut out_dense, n, len);
+            seq_diag_scan_apply(&a, &b, &y0, &mut out_diag, n, len);
+            for (x, y) in out_dense.iter().zip(out_diag.iter()) {
+                assert!((x - y).abs() < 1e-12, "n={n} len={len}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn diag_reverse_matches_dense_scan() {
+        for &(n, len) in &[(1usize, 33usize), (4, 90), (8, 57)] {
+            let (a, g, _) = random_diag(n, len, 31 + n as u64);
+            let dense = embed_dense(&a, n, len);
+            let mut out_dense = vec![0.0; len * n];
+            let mut out_diag = vec![0.0; len * n];
+            seq_scan_reverse(&dense, &g, &mut out_dense, n, len);
+            seq_diag_scan_reverse(&a, &g, &mut out_diag, n, len);
+            for (x, y) in out_dense.iter().zip(out_diag.iter()) {
+                assert!((x - y).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn par_matches_seq_forward_all_thread_counts() {
+        for &threads in &[1usize, 2, 4, 8] {
+            for &(n, len) in &[(2usize, 257usize), (5, 100), (16, 1000)] {
+                let (a, b, y0) = random_diag(n, len, threads as u64 * 91 + n as u64);
+                let mut out_s = vec![0.0; len * n];
+                let mut out_p = vec![0.0; len * n];
+                seq_diag_scan_apply(&a, &b, &y0, &mut out_s, n, len);
+                par_diag_scan_apply(&a, &b, &y0, &mut out_p, n, len, threads);
+                for (i, (x, y)) in out_s.iter().zip(out_p.iter()).enumerate() {
+                    assert!(
+                        (x - y).abs() < 1e-9,
+                        "t={threads} n={n} len={len} i={i}: {x} vs {y}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn par_matches_seq_reverse_all_thread_counts() {
+        for &threads in &[1usize, 2, 4, 8] {
+            for &(n, len) in &[(2usize, 300usize), (4, 65), (16, 513)] {
+                let (a, g, _) = random_diag(n, len, threads as u64 * 17 + len as u64);
+                let mut out_s = vec![0.0; len * n];
+                let mut out_p = vec![0.0; len * n];
+                seq_diag_scan_reverse(&a, &g, &mut out_s, n, len);
+                par_diag_scan_reverse(&a, &g, &mut out_p, n, len, threads);
+                for (i, (x, y)) in out_s.iter().zip(out_p.iter()).enumerate() {
+                    assert!(
+                        (x - y).abs() < 1e-9,
+                        "t={threads} n={n} len={len} i={i}: {x} vs {y}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn compose_range_diag_equals_endpoint() {
+        let (n, len) = (3, 17);
+        let (a, b, y0) = random_diag(n, len, 4);
+        let mut out = vec![0.0; len * n];
+        seq_diag_scan_apply(&a, &b, &y0, &mut out, n, len);
+        let mut ca = vec![0.0; n];
+        let mut cb = vec![0.0; n];
+        compose_range_diag(&a, &b, 0, len, &mut ca, &mut cb, n);
+        for j in 0..n {
+            let y_end = ca[j] * y0[j] + cb[j];
+            assert!((y_end - out[(len - 1) * n + j]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let mut out: Vec<f64> = vec![];
+        seq_diag_scan_apply::<f64>(&[], &[], &[1.0], &mut out, 1, 0);
+        let a = vec![2.0];
+        let b = vec![3.0];
+        let mut out = vec![0.0];
+        seq_diag_scan_apply(&a, &b, &[4.0], &mut out, 1, 1);
+        assert_eq!(out, vec![11.0]);
+        let mut lam = vec![0.0];
+        seq_diag_scan_reverse(&a, &b, &mut lam, 1, 1);
+        assert_eq!(lam, vec![3.0]);
+    }
+
+    #[test]
+    fn workspace_reuse_across_shapes() {
+        let mut ws = ScanWorkspace::new();
+        for &(n, len, threads) in &[(8usize, 400usize, 8usize), (2, 64, 4), (16, 300, 2)] {
+            let (a, b, y0) = random_diag(n, len, 2000 + len as u64);
+            let mut out_s = vec![0.0; len * n];
+            let mut out_p = vec![0.0; len * n];
+            seq_diag_scan_apply(&a, &b, &y0, &mut out_s, n, len);
+            par_diag_scan_apply_ws(&a, &b, &y0, &mut out_p, n, len, threads, &mut ws);
+            for (x, y) in out_s.iter().zip(out_p.iter()) {
+                assert!((x - y).abs() < 1e-9);
+            }
+        }
+    }
+}

@@ -9,23 +9,88 @@
 //!
 //! with the associative combine `(A₂,b₂) • (A₁,b₁) = (A₂A₁, A₂b₁ + b₂)`.
 //!
-//! * [`seq`] — the O(n²) -per-step sequential evaluation (also the baseline's
-//!   inner loop).
-//! * [`par`] — the parallel chunked three-phase scan (work O(n³·L/T) per
+//! # Structure dispatch
+//!
+//! The kernels come in two flavors keyed on [`JacobianStructure`]
+//! (re-exported from [`crate::cells`]):
+//!
+//! * **Dense** — `A_i` is a full row-major n×n matrix. Compose costs
+//!   O(n³) per element, apply O(n²). This is the general path and the
+//!   paper's §3.5 cost model.
+//! * **Diagonal** — `A_i` is packed as its n diagonal entries. Compose and
+//!   apply are both O(n) elementwise ops, which removes the O(n³) compose
+//!   wall flagged in §3.1.1 (the quasi-DEER / ParaRNN observation: with
+//!   diagonal or diagonally-approximated Jacobians the whole INVLIN phase
+//!   is linear in the state dimension). No n×n temporaries exist anywhere
+//!   on this path.
+//!
+//! Modules:
+//!
+//! * [`seq`] — sequential evaluation (also the baseline's inner loop).
+//! * [`par`] — parallel chunked three-phase dense scan (work O(n³·L/T) per
 //!   worker, depth O(L/T + T)); on real accelerators this is
 //!   `jax.lax.associative_scan`, reproduced at L1 by the Pallas kernel in
 //!   `python/compile/kernels/assoc_scan.py` with the identical phase
 //!   structure.
-//! * reverse variants (`*_scan_reverse`) — the dual (transposed) scan used by the DEER backward pass
-//!   (paper eq. 7): `λ_i = g_i + A_{i+1}ᵀ λ_{i+1}`.
+//! * [`diag`] — the O(n)-per-element diagonal kernels (seq + par, forward
+//!   + reverse), used by natively-diagonal cells and by quasi-DEER mode.
+//! * reverse variants (`*_scan_reverse`) — the dual (transposed) scan used
+//!   by the DEER backward pass (paper eq. 7): `λ_i = g_i + A_{i+1}ᵀ λ_{i+1}`.
+//!   For diagonal `A`, transpose is a no-op.
+//!
+//! All parallel kernels take an optional reusable [`ScanWorkspace`] (the
+//! `*_ws` entry points) so the Newton hot loop performs no per-iteration
+//! scratch allocation.
 
+pub mod diag;
 pub mod par;
 pub mod seq;
 
-pub use par::{par_scan_apply, par_scan_reverse};
+pub use diag::{
+    par_diag_scan_apply, par_diag_scan_apply_ws, par_diag_scan_reverse, par_diag_scan_reverse_ws,
+    seq_diag_scan_apply, seq_diag_scan_reverse,
+};
+pub use par::{par_scan_apply, par_scan_apply_ws, par_scan_reverse, par_scan_reverse_ws};
 pub use seq::{seq_scan_apply, seq_scan_reverse};
 
 use crate::util::scalar::Scalar;
+
+/// Reusable scratch buffers for the chunked parallel scans.
+///
+/// The three-phase scan needs per-chunk composed elements (`comp_a`,
+/// `comp_b`) and per-chunk carry states (`carry`). Allocating them inside
+/// every call put three `Vec` allocations on every Newton iteration; the
+/// DEER driver now owns one workspace per evaluation and threads it through
+/// ([`par::par_scan_apply_ws`] and friends). Buffers only grow.
+#[derive(Debug, Default)]
+pub struct ScanWorkspace<S> {
+    pub(crate) comp_a: Vec<S>,
+    pub(crate) comp_b: Vec<S>,
+    pub(crate) carry: Vec<S>,
+}
+
+impl<S: Scalar> ScanWorkspace<S> {
+    pub fn new() -> Self {
+        ScanWorkspace {
+            comp_a: Vec::new(),
+            comp_b: Vec::new(),
+            carry: Vec::new(),
+        }
+    }
+
+    /// Grow (never shrink) the three buffers to the requested lengths.
+    pub(crate) fn ensure(&mut self, a_len: usize, b_len: usize, carry_len: usize) {
+        if self.comp_a.len() < a_len {
+            self.comp_a.resize(a_len, S::zero());
+        }
+        if self.comp_b.len() < b_len {
+            self.comp_b.resize(b_len, S::zero());
+        }
+        if self.carry.len() < carry_len {
+            self.carry.resize(carry_len, S::zero());
+        }
+    }
+}
 
 /// Packed affine elements: `a` holds `len` row-major n×n matrices, `b` holds
 /// `len` n-vectors.
@@ -84,14 +149,44 @@ pub fn combine<S: Scalar>(
     }
 }
 
-/// FLOPs for applying the recurrence once per element (matvec + add).
+/// Diagonal specialization of the eq. (10) combine: with `A = diag(a)` the
+/// operator degenerates to `(a_l ⊙ a_e, a_l ⊙ b_e + b_l)` — O(n), and the
+/// diagonal monoid is closed so the whole scan stays packed.
+#[inline]
+pub fn combine_diag<S: Scalar>(
+    a_later: &[S],
+    b_later: &[S],
+    a_earlier: &[S],
+    b_earlier: &[S],
+    a_out: &mut [S],
+    b_out: &mut [S],
+    n: usize,
+) {
+    for i in 0..n {
+        a_out[i] = a_later[i] * a_earlier[i];
+        b_out[i] = a_later[i] * b_earlier[i] + b_later[i];
+    }
+}
+
+/// FLOPs for applying the dense recurrence once per element (matvec + add).
 pub fn flops_apply(n: usize, len: usize) -> u64 {
     (2 * n * n + n) as u64 * len as u64
 }
 
-/// FLOPs for composing two elements (matmul + matvec + add).
+/// FLOPs for composing two dense elements (matmul + matvec + add).
 pub fn flops_combine(n: usize) -> u64 {
     (2 * n * n * n + 2 * n * n + n) as u64
+}
+
+/// FLOPs for applying the diagonal recurrence once per element (⊙ + add).
+pub fn flops_apply_diag(n: usize, len: usize) -> u64 {
+    (2 * n) as u64 * len as u64
+}
+
+/// FLOPs for composing two diagonal elements — O(n), the crux of the
+/// structured fast path (vs. O(n³) dense).
+pub fn flops_combine_diag(n: usize) -> u64 {
+    (3 * n) as u64
 }
 
 #[cfg(test)]
@@ -155,5 +250,49 @@ mod tests {
         combine(&id_a, &id_b, &a, &b, &mut oa, &mut ob, n);
         assert_eq!(oa, a);
         assert_eq!(ob, b);
+    }
+
+    /// combine_diag must agree with the dense combine on embedded diagonals.
+    #[test]
+    fn combine_diag_matches_dense_embedding() {
+        let n = 4;
+        let mut rng = Rng::new(99);
+        let mut dl = vec![0.0f64; n];
+        let mut de = vec![0.0f64; n];
+        let mut bl = vec![0.0f64; n];
+        let mut be = vec![0.0f64; n];
+        rng.fill_normal(&mut dl, 1.0);
+        rng.fill_normal(&mut de, 1.0);
+        rng.fill_normal(&mut bl, 1.0);
+        rng.fill_normal(&mut be, 1.0);
+
+        // packed diagonal combine
+        let mut oa = vec![0.0; n];
+        let mut ob = vec![0.0; n];
+        combine_diag(&dl, &bl, &de, &be, &mut oa, &mut ob, n);
+
+        // dense combine on embedded matrices
+        let embed = |d: &[f64]| {
+            let mut m = vec![0.0; n * n];
+            for i in 0..n {
+                m[i * n + i] = d[i];
+            }
+            m
+        };
+        let (ml, me) = (embed(&dl), embed(&de));
+        let mut da = vec![0.0; n * n];
+        let mut db = vec![0.0; n];
+        combine(&ml, &bl, &me, &be, &mut da, &mut db, n);
+        for i in 0..n {
+            assert!((oa[i] - da[i * n + i]).abs() < 1e-14);
+            assert!((ob[i] - db[i]).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn diag_flops_are_linear() {
+        assert_eq!(flops_combine_diag(16), 48);
+        assert!(flops_combine(16) / flops_combine_diag(16) > 100);
+        assert_eq!(flops_apply_diag(8, 10), 160);
     }
 }

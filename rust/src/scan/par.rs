@@ -1,4 +1,4 @@
-//! Multi-threaded chunked prefix scan.
+//! Multi-threaded chunked prefix scan (dense n×n elements).
 //!
 //! Three-phase structure (the classic work-efficient decomposition, and the
 //! same schedule the L1 Pallas kernel expresses with BlockSpec over sequence
@@ -15,8 +15,13 @@
 //! lanes: wall-clock parity is expected at T=1 while the [`crate::simulator`]
 //! converts the phase work/depth into projected accelerator time. On a
 //! multi-core host the same code yields real speedups.
+//!
+//! The `*_ws` variants take a caller-owned [`ScanWorkspace`] so repeated
+//! invocations (the Newton loop) allocate nothing; the plain variants
+//! allocate a throwaway workspace for one-shot use.
 
 use super::seq::{compose_range, seq_scan_apply, seq_scan_reverse};
+use super::ScanWorkspace;
 use crate::util::scalar::Scalar;
 
 /// Parallel `y_i = A_i y_{i−1} + b_i` over `threads` workers.
@@ -32,6 +37,22 @@ pub fn par_scan_apply<S: Scalar>(
     len: usize,
     threads: usize,
 ) {
+    let mut ws = ScanWorkspace::new();
+    par_scan_apply_ws(a, b, y0, out, n, len, threads, &mut ws);
+}
+
+/// [`par_scan_apply`] with a reusable workspace (no per-call allocation).
+#[allow(clippy::too_many_arguments)]
+pub fn par_scan_apply_ws<S: Scalar>(
+    a: &[S],
+    b: &[S],
+    y0: &[S],
+    out: &mut [S],
+    n: usize,
+    len: usize,
+    threads: usize,
+    ws: &mut ScanWorkspace<S>,
+) {
     if threads <= 1 || len < 4 * threads {
         seq_scan_apply(a, b, y0, out, n, len);
         return;
@@ -39,60 +60,58 @@ pub fn par_scan_apply<S: Scalar>(
     let chunks = threads;
     let chunk_len = len.div_ceil(chunks);
     let nn = n * n;
+    ws.ensure(chunks * nn, chunks * n, chunks * n);
 
     // Phase 1: per-chunk composition, in parallel.
-    let mut comp_a = vec![S::zero(); chunks * nn];
-    let mut comp_b = vec![S::zero(); chunks * n];
     {
-        let comp: Vec<(&mut [S], &mut [S])> = comp_a
+        let comp: Vec<(&mut [S], &mut [S])> = ws.comp_a[..chunks * nn]
             .chunks_mut(nn)
-            .zip(comp_b.chunks_mut(n))
-            .map(|(x, y)| (x, y))
+            .zip(ws.comp_b[..chunks * n].chunks_mut(n))
             .collect();
-        crossbeam_utils::thread::scope(|scope| {
+        std::thread::scope(|scope| {
             for (c, (ca, cb)) in comp.into_iter().enumerate() {
-                let lo = c * chunk_len;
+                let lo = (c * chunk_len).min(len);
                 let hi = ((c + 1) * chunk_len).min(len);
-                scope.spawn(move |_| {
+                scope.spawn(move || {
                     compose_range(a, b, lo, hi, ca, cb, n);
                 });
             }
-        })
-        .expect("scan phase 1 worker panicked");
+        });
     }
 
     // Phase 2: sequential carry over chunk entry states.
-    // entry[c] = state before chunk c (i.e. y at index c*chunk_len − 1).
-    let mut entries = vec![S::zero(); chunks * n];
+    // carry[c] = state before chunk c (i.e. y at index c*chunk_len − 1).
+    let (comp_a, comp_b) = (&ws.comp_a, &ws.comp_b);
+    let entries = &mut ws.carry[..chunks * n];
     entries[..n].copy_from_slice(y0);
-    let mut cur = y0.to_vec();
-    let mut nxt = vec![S::zero(); n];
     for c in 0..chunks - 1 {
-        crate::linalg::matvec(&comp_a[c * nn..(c + 1) * nn], &cur, &mut nxt);
+        let (head, tail) = entries.split_at_mut((c + 1) * n);
+        let prev = &head[c * n..];
+        let next = &mut tail[..n];
+        crate::linalg::matvec(&comp_a[c * nn..(c + 1) * nn], prev, next);
         for j in 0..n {
-            nxt[j] += comp_b[c * n + j];
+            next[j] += comp_b[c * n + j];
         }
-        entries[(c + 1) * n..(c + 2) * n].copy_from_slice(&nxt);
-        std::mem::swap(&mut cur, &mut nxt);
     }
 
     // Phase 3: per-chunk apply, in parallel.
     {
+        let entries = &ws.carry;
         let mut out_chunks: Vec<&mut [S]> = Vec::with_capacity(chunks);
         let mut rest = out;
         for c in 0..chunks {
-            let lo = c * chunk_len;
+            let lo = (c * chunk_len).min(len);
             let hi = ((c + 1) * chunk_len).min(len);
             let (head, tail) = rest.split_at_mut((hi - lo) * n);
             out_chunks.push(head);
             rest = tail;
         }
-        crossbeam_utils::thread::scope(|scope| {
+        std::thread::scope(|scope| {
             for (c, out_c) in out_chunks.into_iter().enumerate() {
-                let lo = c * chunk_len;
+                let lo = (c * chunk_len).min(len);
                 let hi = ((c + 1) * chunk_len).min(len);
                 let entry = &entries[c * n..(c + 1) * n];
-                scope.spawn(move |_| {
+                scope.spawn(move || {
                     seq_scan_apply(
                         &a[lo * nn..hi * nn],
                         &b[lo * n..hi * n],
@@ -103,8 +122,7 @@ pub fn par_scan_apply<S: Scalar>(
                     );
                 });
             }
-        })
-        .expect("scan phase 3 worker panicked");
+        });
     }
 }
 
@@ -119,6 +137,20 @@ pub fn par_scan_reverse<S: Scalar>(
     len: usize,
     threads: usize,
 ) {
+    let mut ws = ScanWorkspace::new();
+    par_scan_reverse_ws(a, g, out, n, len, threads, &mut ws);
+}
+
+/// [`par_scan_reverse`] with a reusable workspace (no per-call allocation).
+pub fn par_scan_reverse_ws<S: Scalar>(
+    a: &[S],
+    g: &[S],
+    out: &mut [S],
+    n: usize,
+    len: usize,
+    threads: usize,
+    ws: &mut ScanWorkspace<S>,
+) {
     if threads <= 1 || len < 4 * threads {
         seq_scan_reverse(a, g, out, n, len);
         return;
@@ -126,24 +158,22 @@ pub fn par_scan_reverse<S: Scalar>(
     let chunks = threads;
     let chunk_len = len.div_ceil(chunks);
     let nn = n * n;
+    ws.ensure(chunks * nn, chunks * n, chunks * n);
 
     // Phase 1: per-chunk reverse composition.
     // For chunk [lo, hi): λ_{lo} = M_c λ_{hi} + v_c where M_c composes the
     // transposed propagators and v_c the g contributions. Build by iterating
     // i from hi−1 down to lo: λ_i = g_i + A_{i+1}ᵀ λ_{i+1}.
-    let mut comp_m = vec![S::zero(); chunks * nn];
-    let mut comp_v = vec![S::zero(); chunks * n];
     {
-        let comp: Vec<(&mut [S], &mut [S])> = comp_m
+        let comp: Vec<(&mut [S], &mut [S])> = ws.comp_a[..chunks * nn]
             .chunks_mut(nn)
-            .zip(comp_v.chunks_mut(n))
-            .map(|(x, y)| (x, y))
+            .zip(ws.comp_b[..chunks * n].chunks_mut(n))
             .collect();
-        crossbeam_utils::thread::scope(|scope| {
+        std::thread::scope(|scope| {
             for (c, (cm, cv)) in comp.into_iter().enumerate() {
-                let lo = c * chunk_len;
+                let lo = (c * chunk_len).min(len);
                 let hi = ((c + 1) * chunk_len).min(len);
-                scope.spawn(move |_| {
+                scope.spawn(move || {
                     // Identity transform to start (λ_hi passes through).
                     crate::linalg::eye_into(cm, n);
                     for v in cv.iter_mut() {
@@ -181,44 +211,46 @@ pub fn par_scan_reverse<S: Scalar>(
                     }
                 });
             }
-        })
-        .expect("reverse scan phase 1 worker panicked");
+        });
     }
 
     // Phase 2: carry λ at chunk boundaries, right to left.
-    // exit[c] = λ at index hi_c (i.e. entry of chunk c+1), with exit for the
-    // last chunk = 0 (no elements beyond the end).
-    let mut exits = vec![S::zero(); chunks * n];
-    let mut cur = vec![S::zero(); n];
-    for c in (0..chunks).rev() {
-        exits[c * n..(c + 1) * n].copy_from_slice(&cur);
-        // λ_{lo_c} = M_c·exit + v_c becomes exit of chunk c−1
-        let mut nxt = vec![S::zero(); n];
-        crate::linalg::matvec(&comp_m[c * nn..(c + 1) * nn], &cur, &mut nxt);
+    // carry[c] = λ at index hi_c (i.e. entry of chunk c+1), with carry for
+    // the last chunk = 0 (no elements beyond the end).
+    let (comp_m, comp_v) = (&ws.comp_a, &ws.comp_b);
+    let exits = &mut ws.carry[..chunks * n];
+    for v in exits[(chunks - 1) * n..].iter_mut() {
+        *v = S::zero();
+    }
+    for c in (1..chunks).rev() {
+        // λ_{lo_c} = M_c·exit_c + v_c becomes the exit of chunk c−1.
+        let (head, tail) = exits.split_at_mut(c * n);
+        let cur = &tail[..n];
+        let prev = &mut head[(c - 1) * n..];
+        crate::linalg::matvec(&comp_m[c * nn..(c + 1) * nn], cur, prev);
         for j in 0..n {
-            nxt[j] += comp_v[c * n + j];
+            prev[j] += comp_v[c * n + j];
         }
-        cur = nxt;
     }
 
     // Phase 3: per-chunk reverse apply.
     {
+        let exits = &ws.carry;
         let mut out_chunks: Vec<&mut [S]> = Vec::with_capacity(chunks);
         let mut rest = out;
         for c in 0..chunks {
-            let lo = c * chunk_len;
+            let lo = (c * chunk_len).min(len);
             let hi = ((c + 1) * chunk_len).min(len);
             let (head, tail) = rest.split_at_mut((hi - lo) * n);
             out_chunks.push(head);
             rest = tail;
         }
-        crossbeam_utils::thread::scope(|scope| {
+        std::thread::scope(|scope| {
             for (c, out_c) in out_chunks.into_iter().enumerate() {
-                let lo = c * chunk_len;
+                let lo = (c * chunk_len).min(len);
                 let hi = ((c + 1) * chunk_len).min(len);
                 let exit = &exits[c * n..(c + 1) * n];
-                scope.spawn(move |_| {
-                    let clen = hi - lo;
+                scope.spawn(move || {
                     let mut next = exit.to_vec();
                     let mut tmp = vec![S::zero(); n];
                     for i in (lo..hi).rev() {
@@ -235,11 +267,9 @@ pub fn par_scan_reverse<S: Scalar>(
                         }
                         next.copy_from_slice(&out_c[li * n..(li + 1) * n]);
                     }
-                    let _ = clen;
                 });
             }
-        })
-        .expect("reverse scan phase 3 worker panicked");
+        });
     }
 }
 
@@ -307,6 +337,30 @@ mod tests {
         par_scan_apply(&a, &b, &y0, &mut out_p, 3, 101, 7);
         for (x, y) in out_s.iter().zip(out_p.iter()) {
             assert!((x - y).abs() < 1e-9);
+        }
+    }
+
+    /// A workspace reused across calls (different shapes) must not change
+    /// results — the buffers only ever grow and are fully overwritten.
+    #[test]
+    fn workspace_reuse_is_sound() {
+        let mut ws = ScanWorkspace::new();
+        for &(n, len, threads) in &[(4usize, 200usize, 4usize), (2, 64, 8), (5, 333, 3)] {
+            let (a, b, y0) = random_seq(n, len, 1000 + n as u64);
+            let mut out_s = vec![0.0; len * n];
+            let mut out_p = vec![0.0; len * n];
+            seq_scan_apply(&a, &b, &y0, &mut out_s, n, len);
+            par_scan_apply_ws(&a, &b, &y0, &mut out_p, n, len, threads, &mut ws);
+            for (x, y) in out_s.iter().zip(out_p.iter()) {
+                assert!((x - y).abs() < 1e-9);
+            }
+            let mut rev_s = vec![0.0; len * n];
+            let mut rev_p = vec![0.0; len * n];
+            seq_scan_reverse(&a, &b, &mut rev_s, n, len);
+            par_scan_reverse_ws(&a, &b, &mut rev_p, n, len, threads, &mut ws);
+            for (x, y) in rev_s.iter().zip(rev_p.iter()) {
+                assert!((x - y).abs() < 1e-9);
+            }
         }
     }
 }

@@ -31,18 +31,31 @@ pub mod model;
 
 pub use model::{a100, cpu_1core, v100, Device, Kernel, SimBreakdown};
 
-use crate::cells::Cell;
+use crate::cells::{Cell, JacobianStructure};
 use crate::util::scalar::Scalar;
 
 /// Bytes of the explicit Jacobian/scan state DEER materializes:
 /// `G` (T·B·n²) + rhs (T·B·n) + two trajectory buffers (2·T·B·n), per the
 /// paper's O(n²LP) analysis (§3.5) with P = 1. `elem` = dtype size in bytes.
 pub fn deer_memory_bytes(n: usize, t_len: usize, batch: usize, elem: usize) -> u64 {
+    deer_memory_bytes_structured(n, t_len, batch, elem, JacobianStructure::Dense)
+}
+
+/// [`deer_memory_bytes`] with explicit Jacobian structure: the diagonal
+/// path packs `G` as T·B·n, collapsing the O(n²LP) term to O(nLP).
+pub fn deer_memory_bytes_structured(
+    n: usize,
+    t_len: usize,
+    batch: usize,
+    elem: usize,
+    structure: JacobianStructure,
+) -> u64 {
+    let jac = structure.jac_len(n) as u64;
     let n = n as u64;
     let t = t_len as u64;
     let b = batch as u64;
     let e = elem as u64;
-    b * t * e * (n * n + 3 * n)
+    b * t * e * (jac + 3 * n)
 }
 
 /// Simulated time of the **sequential** RNN forward on `dev`:
@@ -94,25 +107,53 @@ pub fn sim_deer_forward<S: Scalar, C: Cell<S>>(
     t_len: usize,
     iters: usize,
 ) -> SimBreakdown {
+    sim_deer_forward_structured(dev, cell, batch, t_len, iters, JacobianStructure::Dense)
+}
+
+/// [`sim_deer_forward`] with explicit Jacobian structure. On the diagonal
+/// path a scan compose is n FLOPs-scale work, not n³ (the structured fast
+/// path), GTMULT is an elementwise product, and Jacobian storage is T·B·n.
+pub fn sim_deer_forward_structured<S: Scalar, C: Cell<S>>(
+    dev: &Device,
+    cell: &C,
+    batch: usize,
+    t_len: usize,
+    iters: usize,
+    structure: JacobianStructure,
+) -> SimBreakdown {
     let n = cell.state_dim();
     let tb = (t_len * batch) as f64;
+    let jl = structure.jac_len(n);
 
-    // FUNCEVAL: fused f + Jacobian at every step.
+    // FUNCEVAL: fused f + Jacobian at every step (the cell's own cost — the
+    // quasi-DEER diagonal extraction does not change the f/J evaluation).
     let k_func = Kernel {
         flops: cell.flops_jacobian() as f64 * tb,
-        bytes: tb * ((n * n + 2 * n) * 4) as f64,
+        bytes: tb * ((jl + 2 * n) * 4) as f64,
         parallelism: tb * n as f64,
     };
-    // GTMULT: b_i = f − J y (one matvec per element).
+    // GTMULT: b_i = f − J y (matvec per element; elementwise ⊙ when diagonal).
+    let gt_flops = match structure {
+        JacobianStructure::Dense => 2 * n * n,
+        JacobianStructure::Diagonal => 2 * n,
+    };
     let k_gt = Kernel {
-        flops: tb * (2 * n * n) as f64,
-        bytes: tb * ((n * n + 2 * n) * 4) as f64,
+        flops: tb * gt_flops as f64,
+        bytes: tb * ((jl + 2 * n) * 4) as f64,
         parallelism: tb * n as f64,
     };
-    // INVLIN: Blelloch scan, 2·log2(T) stages; stage j combines T/2^j pairs,
-    // each an n×n matmul + matvec.
-    let combine_flops = (2 * n * n * n + 2 * n * n) as f64;
-    let combine_bytes = ((3 * n * n + 2 * n) * 4) as f64;
+    // INVLIN: Blelloch scan, 2·log2(T) stages; stage j combines T/2^j pairs.
+    // Dense: n×n matmul + matvec per pair (O(n³)); diagonal: two fused
+    // elementwise ops per pair (O(n)) — see crate::scan::flops_combine*.
+    let combine_flops = match structure {
+        JacobianStructure::Dense => crate::scan::flops_combine(n) as f64,
+        JacobianStructure::Diagonal => crate::scan::flops_combine_diag(n) as f64,
+    };
+    let combine_bytes = ((3 * jl + 2 * n) * 4) as f64;
+    let combine_par = match structure {
+        JacobianStructure::Dense => (n * n) as f64,
+        JacobianStructure::Diagonal => n as f64,
+    };
     let stages = (t_len as f64).log2().ceil().max(1.0) as usize;
     let mut invlin = 0.0;
     for j in 0..stages {
@@ -120,7 +161,7 @@ pub fn sim_deer_forward<S: Scalar, C: Cell<S>>(
         let k = Kernel {
             flops: pairs * combine_flops,
             bytes: pairs * combine_bytes,
-            parallelism: pairs * (n * n) as f64,
+            parallelism: pairs * combine_par,
         };
         invlin += dev.kernel_time(&k);
     }
@@ -133,7 +174,7 @@ pub fn sim_deer_forward<S: Scalar, C: Cell<S>>(
         funceval: funceval * iters as f64,
         gtmult: gtmult * iters as f64,
         invlin: invlin * iters as f64,
-        oom: deer_memory_bytes(n, t_len, batch, 4) > dev.mem_bytes,
+        oom: deer_memory_bytes_structured(n, t_len, batch, 4, structure) > dev.mem_bytes,
     }
 }
 
@@ -146,9 +187,22 @@ pub fn sim_deer_fwd_grad<S: Scalar, C: Cell<S>>(
     t_len: usize,
     iters: usize,
 ) -> SimBreakdown {
+    sim_deer_fwd_grad_structured(dev, cell, batch, t_len, iters, JacobianStructure::Dense)
+}
+
+/// [`sim_deer_fwd_grad`] with explicit Jacobian structure (the dual scan
+/// inherits the forward pass's per-element compose cost).
+pub fn sim_deer_fwd_grad_structured<S: Scalar, C: Cell<S>>(
+    dev: &Device,
+    cell: &C,
+    batch: usize,
+    t_len: usize,
+    iters: usize,
+    structure: JacobianStructure,
+) -> SimBreakdown {
     let n = cell.state_dim();
     let tb = (t_len * batch) as f64;
-    let mut fwd = sim_deer_forward(dev, cell, batch, t_len, iters);
+    let mut fwd = sim_deer_forward_structured(dev, cell, batch, t_len, iters, structure);
 
     // one dual scan (same structure as INVLIN, single pass)
     let per_iter_invlin = fwd.invlin / iters as f64;
@@ -249,5 +303,51 @@ mod tests {
         assert!(d.oom);
         let ok = sim_deer_forward(&dev, &gru(1), 16, 1_000_000, 7);
         assert!(!ok.oom);
+    }
+
+    #[test]
+    fn diagonal_invlin_is_much_cheaper() {
+        // The structured fast path: at n=16 the diagonal compose is n FLOPs
+        // scale vs n³ dense — simulated INVLIN must drop by well over 5×
+        // (even granting quasi-DEER 3× the iterations).
+        let dev = v100();
+        let c = gru(16);
+        let dense = sim_deer_forward_structured(&dev, &c, 16, 100_000, 7, JacobianStructure::Dense);
+        let diag =
+            sim_deer_forward_structured(&dev, &c, 16, 100_000, 21, JacobianStructure::Diagonal);
+        assert!(
+            dense.invlin > 5.0 * diag.invlin,
+            "dense INVLIN {} vs diag {}",
+            dense.invlin,
+            diag.invlin
+        );
+    }
+
+    #[test]
+    fn diagonal_memory_unlocks_oom_cells() {
+        // Diagonal Jacobian storage is O(T·B·n): the n=64 cells that OOM on
+        // the dense path fit on the structured path.
+        let dev = v100();
+        let dense = sim_deer_forward_structured(
+            &dev,
+            &gru(64),
+            16,
+            1_000_000,
+            7,
+            JacobianStructure::Dense,
+        );
+        let diag = sim_deer_forward_structured(
+            &dev,
+            &gru(64),
+            16,
+            1_000_000,
+            21,
+            JacobianStructure::Diagonal,
+        );
+        assert!(dense.oom && !diag.oom);
+        let mem_dense = deer_memory_bytes_structured(64, 100_000, 16, 4, JacobianStructure::Dense);
+        let mem_diag =
+            deer_memory_bytes_structured(64, 100_000, 16, 4, JacobianStructure::Diagonal);
+        assert_eq!(mem_dense / mem_diag, (64 + 3) as u64 / 4);
     }
 }

@@ -6,7 +6,8 @@
 //! only moves buffers and logs. This is the end-to-end driver the examples
 //! use for Fig. 4 (HNN and EigenWorms training curves).
 
-use anyhow::{anyhow, Result};
+use crate::anyhow;
+use crate::util::err::Result;
 use std::time::Instant;
 
 use crate::runtime::{Runtime, Tensor};

@@ -1,0 +1,141 @@
+//! Minimal error type + helpers (anyhow is not in the offline registry).
+//!
+//! Provides the narrow slice of the `anyhow` API the crate uses: a
+//! string-backed [`Error`], a defaulted [`Result`] alias, the
+//! [`Context`] extension trait, and the [`anyhow!`](crate::anyhow) /
+//! [`bail!`](crate::bail) macros.
+
+use std::fmt;
+
+/// A string-backed error with optional context chain.
+pub struct Error(String);
+
+impl Error {
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error(m.to_string())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(s: String) -> Error {
+        Error(s)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Error {
+        Error(s.to_string())
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error(e.to_string())
+    }
+}
+
+impl From<std::fmt::Error> for Error {
+    fn from(e: std::fmt::Error) -> Error {
+        Error(e.to_string())
+    }
+}
+
+/// Crate-wide result alias (mirrors `anyhow::Result`).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(...)` / `.with_context(...)` on results and options.
+pub trait Context<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T>;
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error(format!("{msg}: {e}")))
+    }
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.map_err(|e| Error(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error(msg.to_string()))
+    }
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.ok_or_else(|| Error(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (mirrors `anyhow::anyhow!`).
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::err::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return with a formatted [`Error`] (mirrors `anyhow::bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*).into())
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        Err(Error::msg("boom"))
+    }
+
+    #[test]
+    fn display_and_context() {
+        let e = fails().context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: boom");
+        let v: Option<u32> = None;
+        let e = v.with_context(|| "missing".to_string()).unwrap_err();
+        assert_eq!(e.to_string(), "missing");
+    }
+
+    #[test]
+    fn conversions() {
+        fn io_path() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(io_path().is_err());
+        let e: Error = "plain".into();
+        assert_eq!(format!("{e:?}"), "plain");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: i32) -> Result<i32> {
+            if x < 0 {
+                bail!("negative: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(-1).unwrap_err().to_string(), "negative: -1");
+        let e = anyhow!("code {}", 7);
+        assert_eq!(e.to_string(), "code 7");
+    }
+}

@@ -1,10 +1,12 @@
 //! Foundation utilities.
 //!
 //! The build image is fully offline and its vendored crate set does not
-//! include clap / serde / criterion / rand, so this module provides the small
-//! subset of their functionality the rest of the crate needs.
+//! include clap / serde / criterion / rand / anyhow / num-traits, so this
+//! module provides the small subset of their functionality the rest of the
+//! crate needs.
 
 pub mod cli;
+pub mod err;
 pub mod json;
 pub mod rng;
 pub mod scalar;

@@ -4,23 +4,62 @@
 //! vs. tolerance per precision), so the whole engine is generic over
 //! [`Scalar`]. Default convergence tolerances follow §3.5 of the paper:
 //! `1e-4` for single precision and `1e-7` for double precision.
+//!
+//! The trait is self-contained (no `num-traits`: the offline registry does
+//! not carry it); it exposes exactly the float surface the engine uses.
+//! Inherent `f32`/`f64` methods shadow the trait methods at concrete call
+//! sites, so only generic code resolves through the trait.
 
-use num_traits::Float;
+use std::fmt::{Debug, Display};
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, DivAssign, Mul, MulAssign, Neg, Sub, SubAssign};
 
 /// Floating point scalar usable throughout the DEER engine.
 pub trait Scalar:
-    Float
-    + num_traits::NumAssign
-    + num_traits::FromPrimitive
-    + std::iter::Sum
-    + std::fmt::Debug
-    + std::fmt::Display
+    Copy
+    + Clone
+    + PartialOrd
+    + PartialEq
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Div<Output = Self>
+    + Neg<Output = Self>
+    + AddAssign
+    + SubAssign
+    + MulAssign
+    + DivAssign
+    + Sum
+    + Debug
+    + Display
     + Send
     + Sync
     + 'static
 {
     /// Human-readable dtype name ("f32" / "f64").
     const NAME: &'static str;
+
+    fn zero() -> Self;
+    fn one() -> Self;
+
+    fn abs(self) -> Self;
+    fn sqrt(self) -> Self;
+    fn exp(self) -> Self;
+    fn ln(self) -> Self;
+    fn log2(self) -> Self;
+    fn log10(self) -> Self;
+    fn sin(self) -> Self;
+    fn cos(self) -> Self;
+    fn tanh(self) -> Self;
+    fn powi(self, n: i32) -> Self;
+    fn powf(self, p: Self) -> Self;
+    fn floor(self) -> Self;
+    fn ceil(self) -> Self;
+    fn round(self) -> Self;
+    fn max(self, other: Self) -> Self;
+    fn min(self, other: Self) -> Self;
+    fn is_finite(self) -> bool;
+    fn is_nan(self) -> bool;
 
     /// Paper §3.5 default convergence tolerance for this precision.
     fn default_tol() -> Self;
@@ -29,39 +68,95 @@ pub trait Scalar:
     fn eps() -> Self;
 
     /// Lossless-ish conversion from f64 (used for constants).
-    fn from_f64c(v: f64) -> Self {
-        num_traits::FromPrimitive::from_f64(v).expect("f64 conversion")
-    }
+    fn from_f64c(v: f64) -> Self;
 
     /// Conversion to f64 for reporting.
     fn to_f64c(self) -> f64;
 }
 
-impl Scalar for f32 {
-    const NAME: &'static str = "f32";
-    fn default_tol() -> Self {
-        1e-4
-    }
-    fn eps() -> Self {
-        f32::EPSILON
-    }
-    fn to_f64c(self) -> f64 {
-        self as f64
-    }
+macro_rules! impl_scalar {
+    ($t:ty, $name:literal, $tol:expr) => {
+        impl Scalar for $t {
+            const NAME: &'static str = $name;
+
+            fn zero() -> Self {
+                0.0
+            }
+            fn one() -> Self {
+                1.0
+            }
+            fn abs(self) -> Self {
+                <$t>::abs(self)
+            }
+            fn sqrt(self) -> Self {
+                <$t>::sqrt(self)
+            }
+            fn exp(self) -> Self {
+                <$t>::exp(self)
+            }
+            fn ln(self) -> Self {
+                <$t>::ln(self)
+            }
+            fn log2(self) -> Self {
+                <$t>::log2(self)
+            }
+            fn log10(self) -> Self {
+                <$t>::log10(self)
+            }
+            fn sin(self) -> Self {
+                <$t>::sin(self)
+            }
+            fn cos(self) -> Self {
+                <$t>::cos(self)
+            }
+            fn tanh(self) -> Self {
+                <$t>::tanh(self)
+            }
+            fn powi(self, n: i32) -> Self {
+                <$t>::powi(self, n)
+            }
+            fn powf(self, p: Self) -> Self {
+                <$t>::powf(self, p)
+            }
+            fn floor(self) -> Self {
+                <$t>::floor(self)
+            }
+            fn ceil(self) -> Self {
+                <$t>::ceil(self)
+            }
+            fn round(self) -> Self {
+                <$t>::round(self)
+            }
+            fn max(self, other: Self) -> Self {
+                <$t>::max(self, other)
+            }
+            fn min(self, other: Self) -> Self {
+                <$t>::min(self, other)
+            }
+            fn is_finite(self) -> bool {
+                <$t>::is_finite(self)
+            }
+            fn is_nan(self) -> bool {
+                <$t>::is_nan(self)
+            }
+            fn default_tol() -> Self {
+                $tol
+            }
+            fn eps() -> Self {
+                <$t>::EPSILON
+            }
+            fn from_f64c(v: f64) -> Self {
+                v as $t
+            }
+            fn to_f64c(self) -> f64 {
+                self as f64
+            }
+        }
+    };
 }
 
-impl Scalar for f64 {
-    const NAME: &'static str = "f64";
-    fn default_tol() -> Self {
-        1e-7
-    }
-    fn eps() -> Self {
-        f64::EPSILON
-    }
-    fn to_f64c(self) -> f64 {
-        self
-    }
-}
+impl_scalar!(f32, "f32", 1e-4);
+impl_scalar!(f64, "f64", 1e-7);
 
 #[cfg(test)]
 mod tests {
@@ -84,5 +179,19 @@ mod tests {
         let x = <f64 as Scalar>::from_f64c(0.125);
         assert_eq!(x, 0.125);
         assert_eq!(x.to_f64c(), 0.125);
+    }
+
+    /// The generic surface must agree with the inherent float methods.
+    #[test]
+    fn generic_methods_match_inherent() {
+        fn probe<S: Scalar>(v: S) -> (S, S, S, bool) {
+            (v.abs(), v.exp(), v.tanh(), v.is_finite())
+        }
+        let (a, e, t, fin) = probe(-0.5f64);
+        assert_eq!(a, 0.5);
+        assert_eq!(e, (-0.5f64).exp());
+        assert_eq!(t, (-0.5f64).tanh());
+        assert!(fin);
+        assert_eq!(<f64 as Scalar>::zero() + <f64 as Scalar>::one(), 1.0);
     }
 }

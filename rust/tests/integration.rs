@@ -1,6 +1,6 @@
 //! Cross-module integration tests: engine ↔ coordinator ↔ data.
 
-use deer::cells::{CellGrad, Elman, Gru, Lem, Lstm};
+use deer::cells::{CellGrad, Elman, Gru, IndRnn, JacobianStructure, Lem, Lstm};
 use deer::coordinator::policy::{ConvergencePolicy, EvalPath};
 use deer::coordinator::warmstart::WarmStartCache;
 use deer::data::{worms, Dataset};
@@ -32,6 +32,44 @@ fn all_cells_deer_matches_sequential() {
     check("elman", &Elman::<f32>::new(6, m, &mut rng), &xs);
     check("lstm", &Lstm::<f32>::new(3, m, &mut rng), &xs);
     check("lem", &Lem::<f32>::new(3, m, &mut rng), &xs);
+    check("indrnn", &IndRnn::<f32>::new(6, m, &mut rng), &xs);
+}
+
+/// Quasi-DEER end-to-end: DiagonalApprox reaches the same sequential
+/// trajectory on every dense cell type (the fixed point is mode-invariant).
+#[test]
+fn quasi_deer_matches_sequential_across_cells() {
+    use deer::deer::JacobianMode;
+    let t_len = 600;
+    let m = 3;
+    let mut rng = Rng::new(2);
+    let mut xs = vec![0.0f32; t_len * m];
+    rng.fill_normal(&mut xs, 1.0);
+
+    fn check<C: deer::cells::Cell<f32>>(name: &str, cell: &C, xs: &[f32]) {
+        let h0 = vec![0.0f32; cell.state_dim()];
+        let seq = seq_rnn(cell, &h0, xs);
+        let cfg = DeerConfig::<f32> {
+            jacobian_mode: JacobianMode::DiagonalApprox,
+            ..Default::default()
+        };
+        let res = deer_rnn(cell, &h0, xs, None, &cfg);
+        assert!(res.converged, "{name} did not converge: {:?}", res.err_trace);
+        assert_eq!(res.jac_structure, JacobianStructure::Diagonal, "{name}");
+        let err = deer::linalg::max_abs_diff(&seq, &res.ys);
+        assert!(err < 1e-3, "{name}: max err {err}");
+    }
+
+    check("gru", &Gru::<f32>::new(5, m, &mut rng), &xs);
+    check("lstm", &Lstm::<f32>::new(3, m, &mut rng), &xs);
+    check("lem", &Lem::<f32>::new(3, m, &mut rng), &xs);
+    // Elman sits near the quasi-DEER contraction boundary at uniform(-1/√n)
+    // init — halve the weights to keep the linear rate comfortably < 1.
+    let mut elman: Elman<f32> = Elman::new(5, m, &mut rng);
+    for p in elman.params_mut().iter_mut() {
+        *p *= 0.5;
+    }
+    check("elman", &elman, &xs);
 }
 
 /// Training-style loop: DEER gradients drive a GRU to fit a target, with the
@@ -63,7 +101,16 @@ fn deer_training_loop_with_warmstart() {
             loss0 = loss;
         }
         loss_end = loss;
-        let grad = deer_rnn_backward(&cell, &h0, &xs, &res.ys, &gs, Some(&res.jacobians), 1);
+        let grad = deer_rnn_backward(
+            &cell,
+            &h0,
+            &xs,
+            &res.ys,
+            &gs,
+            Some(&res.jacobians),
+            res.jac_structure,
+            1,
+        );
         for (p, g) in cell.params_mut().iter_mut().zip(grad.dtheta.iter()) {
             *p -= lr * g;
         }
@@ -99,7 +146,7 @@ fn policy_fallback_gradients_consistent() {
     let (ys, path, _) = pol.evaluate(&cell, &h0, &xs, None, 1);
     assert_eq!(path, EvalPath::Deer);
 
-    let g_deer = deer_rnn_backward(&cell, &h0, &xs, &ys, &gs, None, 1);
+    let g_deer = deer_rnn_backward(&cell, &h0, &xs, &ys, &gs, None, JacobianStructure::Dense, 1);
     let seq_ys = seq_rnn(&cell, &h0, &xs);
     let mut g_bptt = vec![0.0f64; cell.num_params()];
     seq_rnn_backward(&cell, &h0, &xs, &seq_ys, &gs, &mut g_bptt);

@@ -6,12 +6,15 @@ use deer::cells::{Cell, Gru};
 use deer::coordinator::batcher::Batcher;
 use deer::coordinator::memory::MemoryPlanner;
 use deer::coordinator::warmstart::WarmStartCache;
-use deer::deer::newton::{deer_rnn, DeerConfig};
+use deer::deer::newton::{deer_rnn, DeerConfig, JacobianMode};
 use deer::deer::seq::seq_rnn;
 use deer::linalg;
+use deer::scan::combine;
+use deer::scan::diag::{
+    par_diag_scan_apply, par_diag_scan_reverse, seq_diag_scan_apply, seq_diag_scan_reverse,
+};
 use deer::scan::par::{par_scan_apply, par_scan_reverse};
 use deer::scan::seq::{seq_scan_apply, seq_scan_reverse};
-use deer::scan::combine;
 use deer::testkit::{close, forall};
 use deer::util::rng::Rng;
 use std::time::Duration;
@@ -37,6 +40,29 @@ fn gen_affine(rng: &mut Rng) -> AffineCase {
     rng.fill_normal(&mut b, 1.0);
     rng.fill_normal(&mut y0, 1.0);
     AffineCase { n, len, threads, a, b, y0 }
+}
+
+#[derive(Debug)]
+struct DiagCase {
+    n: usize,
+    len: usize,
+    threads: usize,
+    a: Vec<f64>,
+    b: Vec<f64>,
+    y0: Vec<f64>,
+}
+
+fn gen_diag(rng: &mut Rng) -> DiagCase {
+    let n = 1 + rng.below(17);
+    let len = 2 + rng.below(300);
+    let threads = 1 + rng.below(8);
+    let mut a = vec![0.0; len * n];
+    let mut b = vec![0.0; len * n];
+    let mut y0 = vec![0.0; n];
+    rng.fill_normal(&mut a, 0.6);
+    rng.fill_normal(&mut b, 1.0);
+    rng.fill_normal(&mut y0, 1.0);
+    DiagCase { n, len, threads, a, b, y0 }
 }
 
 /// Parallel scan ≡ sequential scan for any shape/thread count.
@@ -138,6 +164,100 @@ fn prop_deer_fixed_point_is_sequential_trajectory() {
             let seq = seq_rnn(&cell, &h0, &xs);
             let err = linalg::max_abs_diff(&seq, &res.ys);
             if err < 1e-6 {
+                Ok(())
+            } else {
+                Err(format!("max err {err}"))
+            }
+        },
+    );
+}
+
+/// Diagonal parallel scan ≡ diagonal sequential scan for any
+/// shape/thread count (the structured INVLIN fast path).
+#[test]
+fn prop_par_diag_scan_equals_seq() {
+    forall(60, 0xD1A6, gen_diag, |c| {
+        let mut s = vec![0.0; c.len * c.n];
+        let mut p = vec![0.0; c.len * c.n];
+        seq_diag_scan_apply(&c.a, &c.b, &c.y0, &mut s, c.n, c.len);
+        par_diag_scan_apply(&c.a, &c.b, &c.y0, &mut p, c.n, c.len, c.threads);
+        close(&s, &p, 1e-8)
+    });
+}
+
+/// Diagonal parallel reverse (dual) scan ≡ sequential.
+#[test]
+fn prop_par_diag_reverse_equals_seq() {
+    forall(60, 0xD1A7, gen_diag, |c| {
+        let mut s = vec![0.0; c.len * c.n];
+        let mut p = vec![0.0; c.len * c.n];
+        seq_diag_scan_reverse(&c.a, &c.b, &mut s, c.n, c.len);
+        par_diag_scan_reverse(&c.a, &c.b, &mut p, c.n, c.len, c.threads);
+        close(&s, &p, 1e-8)
+    });
+}
+
+/// The packed diagonal kernels agree with the dense kernels run on the
+/// same system embedded as diagonal matrices (forward and reverse).
+#[test]
+fn prop_diag_kernels_match_dense_embedding() {
+    forall(40, 0xD1A8, gen_diag, |c| {
+        let mut dense = vec![0.0; c.len * c.n * c.n];
+        for i in 0..c.len {
+            for j in 0..c.n {
+                dense[i * c.n * c.n + j * c.n + j] = c.a[i * c.n + j];
+            }
+        }
+        let mut fwd_dense = vec![0.0; c.len * c.n];
+        let mut fwd_diag = vec![0.0; c.len * c.n];
+        seq_scan_apply(&dense, &c.b, &c.y0, &mut fwd_dense, c.n, c.len);
+        seq_diag_scan_apply(&c.a, &c.b, &c.y0, &mut fwd_diag, c.n, c.len);
+        close(&fwd_dense, &fwd_diag, 1e-9)?;
+        let mut rev_dense = vec![0.0; c.len * c.n];
+        let mut rev_diag = vec![0.0; c.len * c.n];
+        seq_scan_reverse(&dense, &c.b, &mut rev_dense, c.n, c.len);
+        seq_diag_scan_reverse(&c.a, &c.b, &mut rev_diag, c.n, c.len);
+        close(&rev_dense, &rev_diag, 1e-9)
+    });
+}
+
+/// Quasi-DEER (DiagonalApprox) reaches the same sequential trajectory as
+/// exact Newton for random small GRUs — randomized version of the
+/// fixed-point invariance argument.
+#[test]
+fn prop_quasi_deer_fixed_point_is_sequential_trajectory() {
+    #[derive(Debug)]
+    struct Case {
+        n: usize,
+        t_len: usize,
+        seed: u64,
+    }
+    forall(
+        10,
+        0xF1ED,
+        |rng| Case {
+            n: 1 + rng.below(4),
+            t_len: 50 + rng.below(250),
+            seed: rng.next_u64(),
+        },
+        |c| {
+            let mut rng = Rng::new(c.seed);
+            let cell: Gru<f64> = Gru::new(c.n, 2, &mut rng);
+            let mut xs = vec![0.0; c.t_len * 2];
+            rng.fill_normal(&mut xs, 1.0);
+            let h0 = vec![0.0; c.n];
+            let cfg = DeerConfig {
+                jacobian_mode: JacobianMode::DiagonalApprox,
+                max_iter: 200,
+                ..Default::default()
+            };
+            let res = deer_rnn(&cell, &h0, &xs, None, &cfg);
+            if !res.converged {
+                return Err(format!("did not converge: {:?}", res.err_trace));
+            }
+            let seq = seq_rnn(&cell, &h0, &xs);
+            let err = linalg::max_abs_diff(&seq, &res.ys);
+            if err < 1e-5 {
                 Ok(())
             } else {
                 Err(format!("max err {err}"))

@@ -1,0 +1,35 @@
+#!/usr/bin/env bash
+# CI smoke bench: dense vs diagonal INVLIN scan kernels.
+#
+# Runs the fast (DEER_BENCH_FAST=1) grid of the `scan` experiment and emits
+# machine-readable per-{n, T} ns/step numbers to BENCH_scan.json at the repo
+# root, seeding the perf trajectory tracked across PRs. Exits non-zero if
+# the diagonal path fails the ≥5× speedup bar at n=16, T=10k.
+set -euo pipefail
+
+ROOT="$(cd "$(dirname "$0")/.." && pwd)"
+OUT="${1:-$ROOT/BENCH_scan.json}"
+
+cd "$ROOT/rust"
+DEER_BENCH_FAST=1 cargo run --release --bin deer -- \
+    bench --exp scan --scan-out "$OUT" --results results/smoke
+
+echo
+echo "== $OUT =="
+cat "$OUT"
+echo
+
+# Acceptance gate: diagonal INVLIN ≥5× dense at n=16, T=10k.
+python3 - "$OUT" <<'EOF'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+pts = {(p["n"], p["t"]): p for p in doc["points"]}
+p = pts.get((16, 10000))
+if p is None:
+    sys.exit("missing n=16, T=10k point in BENCH_scan.json")
+print(f"n=16 T=10k: dense {p['dense_ns_per_step']:.1f} ns/step, "
+      f"diag {p['diag_ns_per_step']:.1f} ns/step, speedup {p['speedup']:.2f}x")
+if p["speedup"] < 5.0:
+    sys.exit(f"FAIL: diagonal speedup {p['speedup']:.2f}x < 5x bar")
+print("PASS: >=5x INVLIN speedup on the diagonal path")
+EOF
