@@ -27,6 +27,11 @@
 //! * All methods take a caller-provided scratch slice of `ws_len()` elements
 //!   so the Newton hot loop allocates nothing.
 //! * `vjp_step` *accumulates* (`+=`) into `dh`, `dx` and `dtheta`.
+//! * Batched variants (`step_batch` / `jacobian_batch` /
+//!   `jacobian_diag_batch`) evaluate B independent elements packed as
+//!   `[B, n]` / `[B, m]` slabs — the cell-level leg of the end-to-end
+//!   `[B, T, n]` layout. Defaults loop over the batch; cells may override
+//!   to fuse.
 
 pub mod elman;
 pub mod gru;
@@ -90,6 +95,77 @@ pub trait Cell<S: Scalar>: Send + Sync {
     /// [`Cell::jacobian_diag_pre`]).
     fn jacobian_structure(&self) -> JacobianStructure {
         JacobianStructure::Dense
+    }
+
+    /// Batched [`Cell::step`] over B independent (state, input) pairs packed
+    /// as contiguous `[B, n]` / `[B, m]` slabs: `out[s] = f(hs[s], xs[s])`.
+    ///
+    /// The default implementation loops over the batch reusing one scratch
+    /// buffer; cells with wide gate matmuls can override it to fuse the
+    /// batch dimension into the inner products. This is the cell-level
+    /// contract of the end-to-end `[B, T, n]` execution layout (see
+    /// [`crate::scan`] and [`crate::deer::newton::deer_rnn_batch`]).
+    fn step_batch(&self, hs: &[S], xs: &[S], out: &mut [S], ws: &mut [S], batch: usize) {
+        let n = self.state_dim();
+        let m = self.input_dim();
+        debug_assert_eq!(hs.len(), batch * n);
+        debug_assert_eq!(xs.len(), batch * m);
+        debug_assert_eq!(out.len(), batch * n);
+        for (s, o) in out.chunks_mut(n).enumerate().take(batch) {
+            self.step(&hs[s * n..(s + 1) * n], &xs[s * m..(s + 1) * m], o, ws);
+        }
+    }
+
+    /// Batched [`Cell::jacobian`]: `out_f = [B, n]`, `out_jac = [B, n·n]`
+    /// row-major per element. Default loops over the batch.
+    fn jacobian_batch(
+        &self,
+        hs: &[S],
+        xs: &[S],
+        out_f: &mut [S],
+        out_jac: &mut [S],
+        ws: &mut [S],
+        batch: usize,
+    ) {
+        let n = self.state_dim();
+        let m = self.input_dim();
+        debug_assert_eq!(out_f.len(), batch * n);
+        debug_assert_eq!(out_jac.len(), batch * n * n);
+        for s in 0..batch {
+            self.jacobian(
+                &hs[s * n..(s + 1) * n],
+                &xs[s * m..(s + 1) * m],
+                &mut out_f[s * n..(s + 1) * n],
+                &mut out_jac[s * n * n..(s + 1) * n * n],
+                ws,
+            );
+        }
+    }
+
+    /// Batched [`Cell::jacobian_diag`] (packed-diagonal variant):
+    /// `out_jdiag = [B, n]`. Only meaningful for `Diagonal` cells.
+    fn jacobian_diag_batch(
+        &self,
+        hs: &[S],
+        xs: &[S],
+        out_f: &mut [S],
+        out_jdiag: &mut [S],
+        ws: &mut [S],
+        batch: usize,
+    ) {
+        let n = self.state_dim();
+        let m = self.input_dim();
+        debug_assert_eq!(out_f.len(), batch * n);
+        debug_assert_eq!(out_jdiag.len(), batch * n);
+        for s in 0..batch {
+            self.jacobian_diag(
+                &hs[s * n..(s + 1) * n],
+                &xs[s * m..(s + 1) * m],
+                &mut out_f[s * n..(s + 1) * n],
+                &mut out_jdiag[s * n..(s + 1) * n],
+                ws,
+            );
+        }
     }
 
     /// Like [`Cell::jacobian`] but emitting the **packed diagonal** of
@@ -321,6 +397,54 @@ mod tests {
         assert!((sigmoid(0.0f64) - 0.5).abs() < 1e-15);
         assert!(sigmoid(30.0f64) > 0.999999);
         assert!(sigmoid(-30.0f64) < 1e-6);
+    }
+
+    #[test]
+    fn batched_step_and_jacobian_match_looped() {
+        use crate::cells::{Gru, IndRnn};
+        let mut rng = Rng::new(77);
+        let (n, m, batch) = (3usize, 2usize, 4usize);
+        let gru: Gru<f64> = Gru::new(n, m, &mut rng);
+        let mut hs = vec![0.0; batch * n];
+        let mut xs = vec![0.0; batch * m];
+        rng.fill_normal(&mut hs, 0.7);
+        rng.fill_normal(&mut xs, 1.0);
+        let mut ws = vec![0.0; gru.ws_len()];
+
+        let mut f_b = vec![0.0; batch * n];
+        gru.step_batch(&hs, &xs, &mut f_b, &mut ws, batch);
+        let mut jf_b = vec![0.0; batch * n];
+        let mut jac_b = vec![0.0; batch * n * n];
+        gru.jacobian_batch(&hs, &xs, &mut jf_b, &mut jac_b, &mut ws, batch);
+        for s in 0..batch {
+            let mut f = vec![0.0; n];
+            gru.step(&hs[s * n..(s + 1) * n], &xs[s * m..(s + 1) * m], &mut f, &mut ws);
+            for j in 0..n {
+                assert_eq!(f[j], f_b[s * n + j], "step_batch seq {s}");
+                assert_eq!(f[j], jf_b[s * n + j], "jacobian_batch f seq {s}");
+            }
+            let mut jac = vec![0.0; n * n];
+            gru.jacobian(&hs[s * n..(s + 1) * n], &xs[s * m..(s + 1) * m], &mut f, &mut jac, &mut ws);
+            for j in 0..n * n {
+                assert_eq!(jac[j], jac_b[s * n * n + j], "jacobian_batch seq {s}");
+            }
+        }
+
+        // packed-diagonal batched variant on a natively diagonal cell
+        let ind: IndRnn<f64> = IndRnn::new(n, m, &mut rng);
+        let mut iws = vec![0.0; ind.ws_len()];
+        let mut df_b = vec![0.0; batch * n];
+        let mut jd_b = vec![0.0; batch * n];
+        ind.jacobian_diag_batch(&hs, &xs, &mut df_b, &mut jd_b, &mut iws, batch);
+        for s in 0..batch {
+            let mut f = vec![0.0; n];
+            let mut jd = vec![0.0; n];
+            ind.jacobian_diag(&hs[s * n..(s + 1) * n], &xs[s * m..(s + 1) * m], &mut f, &mut jd, &mut iws);
+            for j in 0..n {
+                assert_eq!(f[j], df_b[s * n + j]);
+                assert_eq!(jd[j], jd_b[s * n + j]);
+            }
+        }
     }
 
     #[test]

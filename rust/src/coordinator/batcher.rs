@@ -5,6 +5,10 @@
 //! grouped up to `max_batch` or until `max_wait` elapses — the standard
 //! dynamic-batching policy (vLLM-style), applied here to DEER evaluations
 //! whose batch dimension is embarrassingly parallel.
+//!
+//! The queueing core is payload-agnostic; the wiring that turns a flushed
+//! [`Batch`] into **one** fused `[B, T, n]` solve lives in
+//! [`crate::coordinator::exec::BatchExecutor`].
 
 use std::collections::HashMap;
 use std::time::{Duration, Instant};

@@ -1,0 +1,333 @@
+//! Batched dispatch: a flushed group runs as **one** fused solve.
+//!
+//! Before the `[B, T, n]` refactor this wiring was dead: the batcher
+//! grouped compatible requests only for the caller to evaluate them one at
+//! a time, so grouping bought nothing. The executor closes the loop —
+//! requests enter through [`BatchExecutor::submit`], the [`Batcher`] groups
+//! them by shape, and every flushed group is:
+//!
+//! 1. **gathered** into the sequence-major `[B, n]` / `[B, T, m]` layout,
+//! 2. **warm-started** from the [`WarmStartCache`] (App. B.2: per-sample
+//!    trajectories from the previous round become the initial guess),
+//! 3. **memory-planned**: the [`MemoryPlanner`] caps the fused batch at
+//!    what fits the device budget (structure-aware — the diagonal path
+//!    packs Jacobians as `B·T·n`), splitting oversized groups,
+//! 4. **dispatched** as a single [`ConvergencePolicy::evaluate_batch`] call
+//!    (per-sequence convergence masking + per-sequence fallback inside).
+//!
+//! The exactly-one-solve-per-group invariant is observable through
+//! [`ExecStats::batched_solves`].
+
+use std::time::Duration;
+
+use crate::cells::Cell;
+use crate::coordinator::batcher::{Batch, Batcher};
+use crate::coordinator::memory::MemoryPlanner;
+use crate::coordinator::policy::{ConvergencePolicy, EvalPath};
+use crate::coordinator::warmstart::WarmStartCache;
+use crate::deer::newton::effective_structure;
+
+/// One evaluation request: a sequence to run through the executor's cell.
+#[derive(Debug, Clone)]
+pub struct EvalRequest {
+    /// Dataset row / sample id — the warm-start cache key (App. B.2).
+    pub sample_id: u64,
+    /// Initial state, length n.
+    pub h0: Vec<f32>,
+    /// Inputs, length `T·m`.
+    pub xs: Vec<f32>,
+}
+
+/// Completed evaluation for one request of a batched solve.
+#[derive(Debug, Clone)]
+pub struct EvalReply {
+    pub sample_id: u64,
+    /// Trajectory, length `T·n`.
+    pub ys: Vec<f32>,
+    /// Newton sweeps this sequence participated in (per-sequence masking).
+    pub iterations: usize,
+    pub converged: bool,
+    pub path: EvalPath,
+    /// Whether a cached trajectory seeded the initial guess.
+    pub warm_started: bool,
+}
+
+/// Dispatch counters. `batched_solves` counts fused solve calls: one per
+/// flushed group unless the memory planner had to split it.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecStats {
+    pub batched_solves: u64,
+    pub sequences_solved: u64,
+    /// Groups the memory planner split into multiple sub-batches.
+    pub groups_split: u64,
+}
+
+/// The coordinator's batched evaluation engine: batcher + warm-start cache +
+/// memory planner + convergence policy around one recurrent cell.
+pub struct BatchExecutor<'c, C: Cell<f32>> {
+    cell: &'c C,
+    t_len: usize,
+    /// Worker threads handed to the fused solve (the machine's pool).
+    pub threads: usize,
+    pub batcher: Batcher<EvalRequest>,
+    pub cache: WarmStartCache,
+    pub planner: MemoryPlanner,
+    pub policy: ConvergencePolicy,
+    pub stats: ExecStats,
+}
+
+impl<'c, C: Cell<f32>> BatchExecutor<'c, C> {
+    pub fn new(
+        cell: &'c C,
+        t_len: usize,
+        max_batch: usize,
+        max_wait: Duration,
+        cache_budget_bytes: usize,
+        device_budget_bytes: u64,
+        threads: usize,
+    ) -> Self {
+        BatchExecutor {
+            cell,
+            t_len,
+            threads,
+            batcher: Batcher::new(max_batch, max_wait),
+            cache: WarmStartCache::new(cache_budget_bytes),
+            planner: MemoryPlanner::new(device_budget_bytes),
+            policy: ConvergencePolicy::default(),
+            stats: ExecStats::default(),
+        }
+    }
+
+    /// Enqueue a request; if it fills a group, the group runs immediately
+    /// and the replies (for every request in it) are returned.
+    pub fn submit(&mut self, sample_id: u64, h0: Vec<f32>, xs: Vec<f32>) -> Vec<EvalReply> {
+        let n = self.cell.state_dim();
+        let m = self.cell.input_dim();
+        assert_eq!(h0.len(), n, "h0 dim");
+        assert_eq!(xs.len(), self.t_len * m, "xs length vs executor t_len");
+        let key = (n, self.t_len);
+        let (_, full) = self.batcher.push(key, EvalRequest { sample_id, h0, xs });
+        match full {
+            Some(group) => self.run_group(group),
+            None => Vec::new(),
+        }
+    }
+
+    /// Force-flush every pending queue (deadline handling / end of stream).
+    pub fn flush(&mut self) -> Vec<EvalReply> {
+        let mut out = Vec::new();
+        for group in self.batcher.poll(true) {
+            out.extend(self.run_group(group));
+        }
+        out
+    }
+
+    /// Run one flushed group as a single fused batched solve (split only if
+    /// the memory planner says the group exceeds the device budget).
+    fn run_group(&mut self, group: Batch<EvalRequest>) -> Vec<EvalReply> {
+        let n = self.cell.state_dim();
+        let m = self.cell.input_dim();
+        let t_len = self.t_len;
+        let structure = effective_structure(self.cell, self.policy.jacobian_mode);
+        let max_b = self
+            .planner
+            .max_deer_batch_structured(n, t_len, structure)
+            .max(1);
+        let reqs = group.requests;
+        if reqs.len() > max_b {
+            self.stats.groups_split += 1;
+        }
+        let mut replies = Vec::with_capacity(reqs.len());
+        for sub in reqs.chunks(max_b) {
+            let b = sub.len();
+            let mut h0s = vec![0.0f32; b * n];
+            let mut xs = vec![0.0f32; b * t_len * m];
+            let mut guess = vec![0.0f32; b * t_len * n];
+            let mut warm = vec![false; b];
+            let mut any_warm = false;
+            for (s, req) in sub.iter().enumerate() {
+                h0s[s * n..(s + 1) * n].copy_from_slice(&req.payload.h0);
+                xs[s * t_len * m..(s + 1) * t_len * m].copy_from_slice(&req.payload.xs);
+                if let Some(traj) = self.cache.get(req.payload.sample_id) {
+                    if traj.len() == t_len * n {
+                        guess[s * t_len * n..(s + 1) * t_len * n].copy_from_slice(traj);
+                        warm[s] = true;
+                        any_warm = true;
+                    }
+                }
+            }
+            let init = if any_warm { Some(&guess[..]) } else { None };
+            let (paths, res) =
+                self.policy
+                    .evaluate_batch(self.cell, &h0s, &xs, init, self.threads, b);
+            self.stats.batched_solves += 1;
+            self.stats.sequences_solved += b as u64;
+            for (s, req) in sub.iter().enumerate() {
+                let traj = res.ys[s * t_len * n..(s + 1) * t_len * n].to_vec();
+                self.cache.put(req.payload.sample_id, traj.clone());
+                replies.push(EvalReply {
+                    sample_id: req.payload.sample_id,
+                    ys: traj,
+                    iterations: res.iterations[s],
+                    converged: res.converged[s],
+                    path: paths[s],
+                    warm_started: warm[s],
+                });
+            }
+        }
+        replies
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::Gru;
+    use crate::deer::newton::{deer_rnn, DeerConfig};
+    use crate::util::rng::Rng;
+
+    fn make_requests(cell: &Gru<f32>, t_len: usize, count: usize) -> Vec<(u64, Vec<f32>, Vec<f32>)> {
+        let n = cell.state_dim();
+        let m = cell.input_dim();
+        let mut out = Vec::new();
+        for id in 0..count as u64 {
+            let mut rng = Rng::new(1000 + id);
+            let mut xs = vec![0.0f32; t_len * m];
+            rng.fill_normal(&mut xs, 1.0);
+            out.push((id, vec![0.0f32; n], xs));
+        }
+        out
+    }
+
+    /// The satellite fix: a flushed group issues EXACTLY ONE batched solve
+    /// (no per-sequence fallback loop), and every reply matches the
+    /// corresponding single-sequence evaluation.
+    #[test]
+    fn flushed_group_issues_exactly_one_batched_solve() {
+        let mut rng = Rng::new(1);
+        let (n, m, t_len, b) = (3usize, 3usize, 200usize, 4usize);
+        let cell: Gru<f32> = Gru::new(n, m, &mut rng);
+        let mut ex = BatchExecutor::new(
+            &cell,
+            t_len,
+            b,
+            Duration::from_secs(60),
+            1 << 20,
+            16 * (1u64 << 30),
+            1,
+        );
+        let reqs = make_requests(&cell, t_len, b);
+        let mut replies = Vec::new();
+        for (id, h0, xs) in &reqs {
+            let r = ex.submit(*id, h0.clone(), xs.clone());
+            if !r.is_empty() {
+                replies = r;
+            }
+        }
+        assert_eq!(ex.stats.batched_solves, 1, "group must run as ONE fused solve");
+        assert_eq!(ex.stats.sequences_solved, b as u64);
+        assert_eq!(replies.len(), b);
+        for reply in &replies {
+            assert!(reply.converged);
+            assert_eq!(reply.path, EvalPath::Deer);
+            assert!(!reply.warm_started);
+            let (_, h0, xs) = &reqs[reply.sample_id as usize];
+            let solo = deer_rnn(&cell, h0, xs, None, &DeerConfig::<f32>::default());
+            assert_eq!(reply.ys, solo.ys, "sample {}", reply.sample_id);
+            assert_eq!(reply.iterations, solo.iterations);
+        }
+        assert_eq!(ex.batcher.pending(), 0);
+    }
+
+    /// Second round over the same sample ids warm-starts from the cache and
+    /// verifies in ≤2 sweeps per sequence.
+    #[test]
+    fn second_round_warm_starts_from_cache() {
+        let mut rng = Rng::new(2);
+        let (n, m, t_len, b) = (4usize, 2usize, 300usize, 3usize);
+        let cell: Gru<f32> = Gru::new(n, m, &mut rng);
+        let mut ex = BatchExecutor::new(
+            &cell,
+            t_len,
+            b,
+            Duration::from_secs(60),
+            1 << 22,
+            16 * (1u64 << 30),
+            1,
+        );
+        let reqs = make_requests(&cell, t_len, b);
+        for (id, h0, xs) in &reqs {
+            ex.submit(*id, h0.clone(), xs.clone());
+        }
+        assert_eq!(ex.stats.batched_solves, 1);
+        let mut second = Vec::new();
+        for (id, h0, xs) in &reqs {
+            let r = ex.submit(*id, h0.clone(), xs.clone());
+            if !r.is_empty() {
+                second = r;
+            }
+        }
+        assert_eq!(ex.stats.batched_solves, 2);
+        assert_eq!(second.len(), b);
+        for reply in &second {
+            assert!(reply.warm_started);
+            assert!(reply.converged);
+            assert!(reply.iterations <= 2, "warm verify took {}", reply.iterations);
+        }
+        assert!(ex.cache.hit_rate() > 0.0);
+    }
+
+    /// A group exceeding the device budget is split by the memory planner
+    /// into the minimal number of fused sub-solves.
+    #[test]
+    fn oversized_group_splits_by_memory_budget() {
+        let mut rng = Rng::new(3);
+        let (n, m, t_len, b) = (3usize, 3usize, 150usize, 4usize);
+        let cell: Gru<f32> = Gru::new(n, m, &mut rng);
+        // budget sized for exactly 2 dense sequences at (n, t_len)
+        let per_seq = crate::simulator::deer_memory_bytes(n, t_len, 1, 4);
+        let mut ex = BatchExecutor::new(
+            &cell,
+            t_len,
+            b,
+            Duration::from_secs(60),
+            1 << 20,
+            2 * per_seq,
+            1,
+        );
+        assert_eq!(ex.planner.max_deer_batch(n, t_len), 2);
+        let reqs = make_requests(&cell, t_len, b);
+        for (id, h0, xs) in &reqs {
+            ex.submit(*id, h0.clone(), xs.clone());
+        }
+        assert_eq!(ex.stats.batched_solves, 2, "4 requests / budget of 2 → 2 fused solves");
+        assert_eq!(ex.stats.groups_split, 1);
+        assert_eq!(ex.stats.sequences_solved, b as u64);
+    }
+
+    /// Deadline-style flush drains a partial group through one fused solve.
+    #[test]
+    fn flush_runs_partial_group() {
+        let mut rng = Rng::new(4);
+        let (n, m, t_len) = (3usize, 3usize, 120usize);
+        let cell: Gru<f32> = Gru::new(n, m, &mut rng);
+        let mut ex = BatchExecutor::new(
+            &cell,
+            t_len,
+            16,
+            Duration::from_secs(60),
+            1 << 20,
+            16 * (1u64 << 30),
+            1,
+        );
+        let reqs = make_requests(&cell, t_len, 3);
+        for (id, h0, xs) in &reqs {
+            let r = ex.submit(*id, h0.clone(), xs.clone());
+            assert!(r.is_empty(), "group must not flush before max_batch");
+        }
+        let replies = ex.flush();
+        assert_eq!(replies.len(), 3);
+        assert_eq!(ex.stats.batched_solves, 1);
+        assert!(replies.iter().all(|r| r.converged));
+    }
+}

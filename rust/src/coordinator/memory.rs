@@ -6,7 +6,8 @@
 //! batch size matches a given DEER configuration's footprint (Fig. 8 used
 //! DEER@B=3 vs sequential@B=70 at equal ~2.6 GB).
 
-pub use crate::simulator::deer_memory_bytes;
+pub use crate::simulator::{deer_memory_bytes, deer_memory_bytes_structured};
+use crate::cells::JacobianStructure;
 
 /// Working-set bytes of the sequential method: activations for BPTT
 /// (T·B·n) plus per-step gate buffers.
@@ -33,6 +34,31 @@ impl MemoryPlanner {
     /// Largest DEER batch that fits for (n, T).
     pub fn max_deer_batch(&self, n: usize, t_len: usize) -> usize {
         let per = deer_memory_bytes(n, t_len, 1, 4).max(1);
+        (self.budget_bytes / per) as usize
+    }
+
+    /// Structure-aware [`MemoryPlanner::deer_fits`]: the diagonal path packs
+    /// Jacobians as `B·T·n`, so far larger batches fit the same budget.
+    pub fn deer_fits_structured(
+        &self,
+        n: usize,
+        t_len: usize,
+        batch: usize,
+        structure: JacobianStructure,
+    ) -> bool {
+        deer_memory_bytes_structured(n, t_len, batch, 4, structure) <= self.budget_bytes
+    }
+
+    /// Structure-aware [`MemoryPlanner::max_deer_batch`] — what the batched
+    /// executor uses to split an oversized flushed group into sub-batches
+    /// that each fit the device budget.
+    pub fn max_deer_batch_structured(
+        &self,
+        n: usize,
+        t_len: usize,
+        structure: JacobianStructure,
+    ) -> usize {
+        let per = deer_memory_bytes_structured(n, t_len, 1, 4, structure).max(1);
         (self.budget_bytes / per) as usize
     }
 
@@ -77,6 +103,17 @@ mod tests {
         let p = MemoryPlanner::new(26 * (1 << 27)); // ~3.3 GB
         let seq_b = p.equal_memory_seq_batch(32, 17_984, 3);
         assert!(seq_b >= 20 && seq_b <= 300, "seq batch {seq_b}");
+    }
+
+    #[test]
+    fn structured_planner_unlocks_bigger_batches() {
+        let p = MemoryPlanner::new(16 * (1 << 30));
+        let dense = p.max_deer_batch_structured(64, 1_000_000, JacobianStructure::Dense);
+        let diag = p.max_deer_batch_structured(64, 1_000_000, JacobianStructure::Diagonal);
+        assert!(diag > dense, "diag {diag} vs dense {dense}");
+        assert_eq!(dense, p.max_deer_batch(64, 1_000_000));
+        assert!(p.deer_fits_structured(64, 1_000_000, 16, JacobianStructure::Diagonal));
+        assert!(!p.deer_fits_structured(64, 1_000_000, 16, JacobianStructure::Dense));
     }
 
     #[test]

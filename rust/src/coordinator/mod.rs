@@ -4,24 +4,45 @@
 //! algorithm-serving systems layer rather than a serving router:
 //!
 //! * [`policy`] — convergence policy: per-dtype tolerances (§3.5), iteration
-//!   caps, divergence handling with sequential fallback.
+//!   caps, divergence handling with sequential fallback — per sequence in
+//!   the batched path ([`policy::ConvergencePolicy::evaluate_batch`]).
 //! * [`warmstart`] — the App. B.2 trajectory cache: the previous training
 //!   step's solution keyed by sample id becomes the next step's initial
 //!   guess, cutting Newton iterations.
 //! * [`batcher`] — dynamic batching of evaluation requests (groups
 //!   compatible sequences, flushes on size or deadline).
+//! * [`exec`] — the batched execution engine closing the loop: every
+//!   flushed group is gathered into the `[B, T, n]` layout, warm-started
+//!   from the cache, memory-planned, and dispatched as **one** fused
+//!   [`crate::deer::deer_rnn_batch`] solve.
 //! * [`memory`] — O(n²LB) Jacobian working-set accounting (§3.5, Table 6)
-//!   and equal-memory batch planning (Fig. 8).
+//!   and equal-memory batch planning (Fig. 8), structure-aware since the
+//!   diagonal path packs Jacobians as `B·T·n`.
 //! * [`sweep`] — the benchmark grid scheduler driving Fig. 2 / Table 4
 //!   style sweeps through a worker pool.
+//!
+//! # Batched dispatch design
+//!
+//! The coordinator plans in *sequences* and executes in *batches*. A
+//! request stream enters the [`Batcher`]; identically-shaped requests merge
+//! into groups; a full (or deadline-expired) group becomes one fused
+//! `[B, T, n]` solve in which every phase amortizes the thread pool across
+//! the batch. Per-sequence convergence masking inside the solve means one
+//! hard sequence cannot inflate the cost of its neighbours: converged
+//! sequences freeze in place (their slabs are no longer touched) and, if a
+//! straggler still fails, only that sequence takes the sequential fallback.
+//! Warm starts compose with batching — the cache is consulted per sample id
+//! at gather time, so a group may mix warm and cold sequences freely.
 
 pub mod batcher;
+pub mod exec;
 pub mod memory;
 pub mod policy;
 pub mod sweep;
 pub mod warmstart;
 
 pub use batcher::Batcher;
+pub use exec::{BatchExecutor, EvalReply, EvalRequest, ExecStats};
 pub use memory::MemoryPlanner;
 pub use policy::ConvergencePolicy;
 pub use sweep::{Job, JobResult, Sweep};

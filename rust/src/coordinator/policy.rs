@@ -7,7 +7,7 @@
 //! is always correct.
 
 use crate::cells::Cell;
-use crate::deer::newton::{deer_rnn, DeerConfig, DeerResult};
+use crate::deer::newton::{deer_rnn, deer_rnn_batch, BatchDeerResult, DeerConfig, DeerResult, JacobianMode};
 use crate::deer::seq::seq_rnn;
 use crate::util::scalar::Scalar;
 
@@ -28,6 +28,10 @@ pub struct ConvergencePolicy {
     pub divergence_patience: usize,
     /// If true, a non-converged DEER run is replaced by the sequential path.
     pub fallback_sequential: bool,
+    /// Jacobian treatment inside the solve (quasi-DEER switch), forwarded
+    /// to [`DeerConfig::jacobian_mode`] and used by the batched executor's
+    /// memory planning.
+    pub jacobian_mode: JacobianMode,
 }
 
 impl Default for ConvergencePolicy {
@@ -37,6 +41,7 @@ impl Default for ConvergencePolicy {
             max_iter: 100,
             divergence_patience: 8,
             fallback_sequential: true,
+            jacobian_mode: JacobianMode::Full,
         }
     }
 }
@@ -51,7 +56,7 @@ impl ConvergencePolicy {
             max_iter: self.max_iter,
             threads,
             divergence_patience: self.divergence_patience,
-            ..Default::default()
+            jacobian_mode: self.jacobian_mode,
         }
     }
 
@@ -73,6 +78,41 @@ impl ConvergencePolicy {
             let ys = seq_rnn(cell, h0, xs);
             (ys, EvalPath::SequentialFallback, res)
         }
+    }
+
+    /// Batched policy evaluation: ONE fused DEER solve over the whole group
+    /// (per-sequence convergence masking inside), then a per-sequence
+    /// sequential fallback for any straggler that still failed to converge —
+    /// a hard sequence degrades only itself, never its batch neighbours.
+    ///
+    /// Layout: `h0s = [B, n]`, `xs = [B, T, m]`, `guess = [B, T, n]`. The
+    /// fallback trajectories are written **in place** into the returned
+    /// result's `ys` (no `[B, T, n]` copy on the all-converged hot path);
+    /// `paths[s]` records which engine produced sequence `s`.
+    pub fn evaluate_batch<S: Scalar, C: Cell<S>>(
+        &self,
+        cell: &C,
+        h0s: &[S],
+        xs: &[S],
+        guess: Option<&[S]>,
+        threads: usize,
+        batch: usize,
+    ) -> (Vec<EvalPath>, BatchDeerResult<S>) {
+        let mut res = deer_rnn_batch(cell, h0s, xs, guess, &self.config::<S>(threads), batch);
+        let n = cell.state_dim();
+        let m = cell.input_dim();
+        let t_len = xs.len() / (batch * m);
+        let mut paths = vec![EvalPath::Deer; batch];
+        if self.fallback_sequential {
+            for s in 0..batch {
+                if !res.converged[s] {
+                    let y = seq_rnn(cell, &h0s[s * n..(s + 1) * n], &xs[s * t_len * m..(s + 1) * t_len * m]);
+                    res.ys[s * t_len * n..(s + 1) * t_len * n].copy_from_slice(&y);
+                    paths[s] = EvalPath::SequentialFallback;
+                }
+            }
+        }
+        (paths, res)
     }
 }
 
@@ -110,6 +150,36 @@ mod tests {
         // fallback result equals the exact sequential evaluation
         let want = crate::deer::seq::seq_rnn(&cell, &[0.0; 3], &xs);
         assert_eq!(ys, want);
+    }
+
+    #[test]
+    fn batched_policy_per_sequence_paths() {
+        let mut rng = Rng::new(3);
+        let (n, m, t, b) = (3usize, 2usize, 250usize, 2usize);
+        let cell: Gru<f64> = Gru::new(n, m, &mut rng);
+        let mut xs = vec![0.0; b * t * m];
+        rng.fill_normal(&mut xs, 1.0);
+        let h0s = vec![0.0; b * n];
+
+        let pol = ConvergencePolicy::default();
+        let (paths, res) = pol.evaluate_batch(&cell, &h0s, &xs, None, 1, b);
+        assert_eq!(res.ys.len(), b * t * n);
+        assert!(paths.iter().all(|&p| p == EvalPath::Deer));
+        assert!(res.converged.iter().all(|&c| c));
+
+        // force non-convergence → every sequence falls back, and each
+        // fallback equals its own exact sequential evaluation
+        let strict = ConvergencePolicy { max_iter: 1, ..Default::default() };
+        let (paths2, res2) = strict.evaluate_batch(&cell, &h0s, &xs, None, 1, b);
+        assert!(paths2.iter().all(|&p| p == EvalPath::SequentialFallback));
+        for s in 0..b {
+            let want = crate::deer::seq::seq_rnn(
+                &cell,
+                &h0s[s * n..(s + 1) * n],
+                &xs[s * t * m..(s + 1) * t * m],
+            );
+            assert_eq!(&res2.ys[s * t * n..(s + 1) * t * n], &want[..]);
+        }
     }
 
     #[test]

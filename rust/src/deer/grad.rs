@@ -28,9 +28,9 @@
 //! [`JacobianStructure::Dense`] when exact gradients of a dense cell are
 //! required.
 
-use crate::cells::{CellGrad, JacobianStructure};
-use crate::scan::diag::par_diag_scan_reverse_ws;
-use crate::scan::par::par_scan_reverse_ws;
+use crate::cells::{Cell, CellGrad, JacobianStructure};
+use crate::scan::diag::par_diag_scan_reverse_batch_ws;
+use crate::scan::par::par_scan_reverse_batch_ws;
 use crate::scan::ScanWorkspace;
 use crate::util::scalar::Scalar;
 use crate::util::timer::PhaseProfile;
@@ -46,7 +46,21 @@ pub struct GradResult<S> {
     pub profile: PhaseProfile,
 }
 
-/// DEER backward: one dual scan + parallel VJP reduction.
+/// Output of the batched DEER backward pass ([`deer_rnn_backward_batch`]).
+#[derive(Debug, Clone)]
+pub struct BatchGradResult<S> {
+    /// Parameter gradient summed over the batch (flat, `cell.num_params()`) —
+    /// the quantity a training step consumes.
+    pub dtheta: Vec<S>,
+    /// Per-sequence gradients w.r.t. the initial states, `[B, n]`.
+    pub dh0s: Vec<S>,
+    /// Phase timings (JACOBIAN / DUAL_SCAN / PARAM_VJP).
+    pub profile: PhaseProfile,
+}
+
+/// DEER backward: one dual scan + parallel VJP reduction — the
+/// single-sequence API, implemented as the B = 1 case of
+/// [`deer_rnn_backward_batch`].
 ///
 /// * `ys` — forward trajectory (`T·n`, from [`super::deer_rnn`] or the
 ///   sequential method; eq. 7 holds either way, see §3.1.1).
@@ -66,155 +80,287 @@ pub fn deer_rnn_backward<S: Scalar, C: CellGrad<S>>(
     jac_structure: JacobianStructure,
     threads: usize,
 ) -> GradResult<S> {
+    let b = deer_rnn_backward_batch(cell, h0, xs, ys, gs, jacobians, jac_structure, threads, 1);
+    GradResult {
+        dtheta: b.dtheta,
+        dh0: b.dh0s,
+        profile: b.profile,
+    }
+}
+
+/// Batched DEER backward over B independent sequences in the `[B, T, n…]`
+/// layout: one fused dual scan across the whole batch, then one parameter
+/// VJP reduction over the `[B, T]` grid with per-chunk partial gradients
+/// (reduced in deterministic chunk order). `dtheta` is summed over the
+/// batch — exactly what a mini-batch training step consumes — while `dh0s`
+/// stays per-sequence.
+#[allow(clippy::too_many_arguments)]
+pub fn deer_rnn_backward_batch<S: Scalar, C: CellGrad<S>>(
+    cell: &C,
+    h0s: &[S],
+    xs: &[S],
+    ys: &[S],
+    gs: &[S],
+    jacobians: Option<&[S]>,
+    jac_structure: JacobianStructure,
+    threads: usize,
+    batch: usize,
+) -> BatchGradResult<S> {
     let n = cell.state_dim();
     let m = cell.input_dim();
-    let t_len = xs.len() / m;
+    assert!(batch > 0, "batch must be ≥ 1");
+    assert_eq!(xs.len() % (batch * m), 0, "xs layout ([B, T, m])");
+    let t_len = xs.len() / (batch * m);
     let jl = jac_structure.jac_len(n);
-    assert_eq!(ys.len(), t_len * n);
-    assert_eq!(gs.len(), t_len * n);
+    let sn = t_len * n;
+    assert_eq!(h0s.len(), batch * n, "h0s layout ([B, n])");
+    assert_eq!(ys.len(), batch * sn, "ys layout ([B, T, n])");
+    assert_eq!(gs.len(), batch * sn, "gs layout ([B, T, n])");
 
+    let all_seqs: Vec<usize> = (0..batch).collect();
     let mut profile = PhaseProfile::new();
 
-    // Phase 1: Jacobians along the trajectory (reuse or recompute).
-    let native_diag = cell.jacobian_structure() == JacobianStructure::Diagonal;
+    // Phase 1: Jacobians along every trajectory (reuse or recompute).
     let owned_jac;
     let jac: &[S] = match jacobians {
         Some(j) => {
-            assert_eq!(j.len(), t_len * jl, "jacobian layout vs declared structure");
+            assert_eq!(j.len(), batch * t_len * jl, "jacobian layout vs declared structure");
             j
         }
         None => {
             owned_jac = profile.record("JACOBIAN", || {
-                let mut jac = vec![S::zero(); t_len * jl];
-                let mut f_scratch = vec![S::zero(); n];
-                let mut ws = vec![S::zero(); cell.ws_len()];
-                let mut dense_scratch =
-                    if jac_structure == JacobianStructure::Diagonal && !native_diag {
-                        vec![S::zero(); n * n]
-                    } else {
-                        Vec::new()
-                    };
-                for i in 0..t_len {
-                    let h_prev = if i == 0 { h0 } else { &ys[(i - 1) * n..i * n] };
-                    let x = &xs[i * m..(i + 1) * m];
-                    let out_j = &mut jac[i * jl..(i + 1) * jl];
-                    match jac_structure {
-                        JacobianStructure::Dense => {
-                            cell.jacobian(h_prev, x, &mut f_scratch, out_j, &mut ws);
-                        }
-                        JacobianStructure::Diagonal if native_diag => {
-                            cell.jacobian_diag(h_prev, x, &mut f_scratch, out_j, &mut ws);
-                        }
-                        JacobianStructure::Diagonal => {
-                            cell.jacobian(h_prev, x, &mut f_scratch, &mut dense_scratch, &mut ws);
-                            for j in 0..n {
-                                out_j[j] = dense_scratch[j * n + j];
-                            }
-                        }
-                    }
-                }
-                jac
+                recompute_jacobians_batch(
+                    cell,
+                    h0s,
+                    xs,
+                    ys,
+                    jac_structure,
+                    &all_seqs,
+                    threads,
+                    n,
+                    m,
+                    t_len,
+                )
             });
             &owned_jac
         }
     };
 
-    // Phase 2: the dual scan (the single L_G⁻¹ application of eq. 7),
-    // structure-dispatched: O(n) per element on the diagonal path.
-    let mut lambda = vec![S::zero(); t_len * n];
+    // Phase 2: the dual scan (the single L_G⁻¹ application of eq. 7) — one
+    // fused batched call, structure-dispatched: O(n) per element on the
+    // diagonal path.
+    let mut lambda = vec![S::zero(); batch * sn];
     let mut scan_ws: ScanWorkspace<S> = ScanWorkspace::new();
     profile.record("DUAL_SCAN", || match jac_structure {
         JacobianStructure::Dense => {
-            par_scan_reverse_ws(jac, gs, &mut lambda, n, t_len, threads, &mut scan_ws);
+            par_scan_reverse_batch_ws(
+                jac, gs, &mut lambda, n, t_len, batch, None, threads, &mut scan_ws,
+            );
         }
         JacobianStructure::Diagonal => {
-            par_diag_scan_reverse_ws(jac, gs, &mut lambda, n, t_len, threads, &mut scan_ws);
+            par_diag_scan_reverse_batch_ws(
+                jac, gs, &mut lambda, n, t_len, batch, None, threads, &mut scan_ws,
+            );
         }
     });
 
-    // Phase 3: parameter VJP reduction, parallel over sequence chunks with
-    // per-worker gradient accumulators.
+    // Phase 3: parameter VJP reduction over the [B, T] grid with per-chunk
+    // partial accumulators, reduced in deterministic chunk order.
     let p = cell.num_params();
     let mut dtheta = vec![S::zero(); p];
-    let mut dh0 = vec![S::zero(); n];
+    let mut dh0s = vec![S::zero(); batch * n];
     profile.record("PARAM_VJP", || {
-        if threads <= 1 || t_len < 4 * threads {
+        let chunks = crate::scan::plan_batch_chunks(t_len, &all_seqs, threads, batch);
+        if threads <= 1 || chunks.len() <= 1 {
             let mut ws = vec![S::zero(); cell.ws_len()];
             let mut dh_scratch = vec![S::zero(); n];
-            for i in 0..t_len {
-                let h_prev = if i == 0 { h0 } else { &ys[(i - 1) * n..i * n] };
-                for v in dh_scratch.iter_mut() {
-                    *v = S::zero();
-                }
-                cell.vjp_step(
-                    h_prev,
-                    &xs[i * m..(i + 1) * m],
-                    &lambda[i * n..(i + 1) * n],
-                    &mut dh_scratch,
-                    None,
-                    &mut dtheta,
-                    &mut ws,
-                );
-                if i == 0 {
-                    dh0.copy_from_slice(&dh_scratch);
+            for s in 0..batch {
+                for i in 0..t_len {
+                    let h_prev = if i == 0 {
+                        &h0s[s * n..(s + 1) * n]
+                    } else {
+                        &ys[s * sn + (i - 1) * n..s * sn + i * n]
+                    };
+                    for v in dh_scratch.iter_mut() {
+                        *v = S::zero();
+                    }
+                    cell.vjp_step(
+                        h_prev,
+                        &xs[s * t_len * m + i * m..s * t_len * m + (i + 1) * m],
+                        &lambda[s * sn + i * n..s * sn + (i + 1) * n],
+                        &mut dh_scratch,
+                        None,
+                        &mut dtheta,
+                        &mut ws,
+                    );
+                    if i == 0 {
+                        dh0s[s * n..(s + 1) * n].copy_from_slice(&dh_scratch);
+                    }
                 }
             }
         } else {
-            let chunk_len = t_len.div_ceil(threads);
-            let nchunks = t_len.div_ceil(chunk_len);
-            let mut partials: Vec<Vec<S>> = vec![vec![S::zero(); p]; nchunks];
-            let mut dh0_out = vec![S::zero(); n];
+            let workers = threads.min(chunks.len());
+            let mut partials: Vec<Vec<S>> = vec![vec![S::zero(); p]; chunks.len()];
+            let mut dh0_parts: Vec<Option<Vec<S>>> = vec![None; chunks.len()];
             {
-                let dh0_ref = &mut dh0_out;
                 let lambda = &lambda;
+                let mut buckets: Vec<
+                    Vec<((usize, usize, usize), &mut Vec<S>, &mut Option<Vec<S>>)>,
+                > = (0..workers).map(|_| Vec::new()).collect();
+                for (k, ((ch, part), dh0p)) in chunks
+                    .iter()
+                    .zip(partials.iter_mut())
+                    .zip(dh0_parts.iter_mut())
+                    .enumerate()
+                {
+                    buckets[k % workers].push((*ch, part, dh0p));
+                }
                 std::thread::scope(|scope| {
-                    let mut handles = Vec::new();
-                    for (c, part) in partials.iter_mut().enumerate() {
-                        let lo = c * chunk_len;
-                        let hi = ((c + 1) * chunk_len).min(t_len);
-                        handles.push(scope.spawn(move || {
+                    for bucket in buckets {
+                        scope.spawn(move || {
                             let mut ws = vec![S::zero(); cell.ws_len()];
                             let mut dh_scratch = vec![S::zero(); n];
-                            let mut dh0_local = None;
-                            for i in lo..hi {
-                                let h_prev =
-                                    if i == 0 { h0 } else { &ys[(i - 1) * n..i * n] };
-                                for v in dh_scratch.iter_mut() {
-                                    *v = S::zero();
-                                }
-                                cell.vjp_step(
-                                    h_prev,
-                                    &xs[i * m..(i + 1) * m],
-                                    &lambda[i * n..(i + 1) * n],
-                                    &mut dh_scratch,
-                                    None,
-                                    part,
-                                    &mut ws,
-                                );
-                                if i == 0 {
-                                    dh0_local = Some(dh_scratch.clone());
+                            for ((s, lo, hi), part, dh0p) in bucket {
+                                for i in lo..hi {
+                                    let h_prev = if i == 0 {
+                                        &h0s[s * n..(s + 1) * n]
+                                    } else {
+                                        &ys[s * sn + (i - 1) * n..s * sn + i * n]
+                                    };
+                                    for v in dh_scratch.iter_mut() {
+                                        *v = S::zero();
+                                    }
+                                    cell.vjp_step(
+                                        h_prev,
+                                        &xs[s * t_len * m + i * m..s * t_len * m + (i + 1) * m],
+                                        &lambda[s * sn + i * n..s * sn + (i + 1) * n],
+                                        &mut dh_scratch,
+                                        None,
+                                        part,
+                                        &mut ws,
+                                    );
+                                    if i == 0 {
+                                        *dh0p = Some(dh_scratch.clone());
+                                    }
                                 }
                             }
-                            dh0_local
-                        }));
-                    }
-                    for h in handles {
-                        if let Some(d) = h.join().unwrap() {
-                            dh0_ref.copy_from_slice(&d);
-                        }
+                        });
                     }
                 });
             }
-            dh0 = dh0_out;
-            for part in partials {
-                for (d, s) in dtheta.iter_mut().zip(part.iter()) {
-                    *d += *s;
+            for part in &partials {
+                for (d, v) in dtheta.iter_mut().zip(part.iter()) {
+                    *d += *v;
+                }
+            }
+            for (&(s, lo, _), dh0p) in chunks.iter().zip(dh0_parts.iter()) {
+                if lo == 0 {
+                    if let Some(d) = dh0p.as_ref() {
+                        dh0s[s * n..(s + 1) * n].copy_from_slice(d);
+                    }
                 }
             }
         }
     });
 
-    GradResult { dtheta, dh0, profile }
+    BatchGradResult { dtheta, dh0s, profile }
+}
+
+/// Recompute the per-step Jacobians along every sequence's trajectory
+/// (memory-saving mode of the backward pass), chunked over the `[B, T]`
+/// grid. Quasi-DEER extraction (diagonal structure on a dense cell) uses a
+/// per-worker n×n scratch so global memory stays O(B·T·n).
+#[allow(clippy::too_many_arguments)]
+fn recompute_jacobians_batch<S: Scalar, C: Cell<S>>(
+    cell: &C,
+    h0s: &[S],
+    xs: &[S],
+    ys: &[S],
+    jac_structure: JacobianStructure,
+    all_seqs: &[usize],
+    threads: usize,
+    n: usize,
+    m: usize,
+    t_len: usize,
+) -> Vec<S> {
+    let jl = jac_structure.jac_len(n);
+    let sn = t_len * n;
+    let sj = t_len * jl;
+    let sm = t_len * m;
+    let batch = all_seqs.len();
+    let native_diag = cell.jacobian_structure() == JacobianStructure::Diagonal;
+    let mut jac = vec![S::zero(); batch * sj];
+    if t_len == 0 {
+        return jac;
+    }
+
+    let work = |items: Vec<(usize, usize, usize, &mut [S])>| {
+        let mut f_scratch = vec![S::zero(); n];
+        let mut ws = vec![S::zero(); cell.ws_len()];
+        let mut dense_scratch = if jac_structure == JacobianStructure::Diagonal && !native_diag {
+            vec![S::zero(); n * n]
+        } else {
+            Vec::new()
+        };
+        for (s, lo, hi, jac_c) in items {
+            for (k, i) in (lo..hi).enumerate() {
+                let h_prev = if i == 0 {
+                    &h0s[s * n..(s + 1) * n]
+                } else {
+                    &ys[s * sn + (i - 1) * n..s * sn + i * n]
+                };
+                let x = &xs[s * sm + i * m..s * sm + (i + 1) * m];
+                let out_j = &mut jac_c[k * jl..(k + 1) * jl];
+                match jac_structure {
+                    JacobianStructure::Dense => {
+                        cell.jacobian(h_prev, x, &mut f_scratch, out_j, &mut ws);
+                    }
+                    JacobianStructure::Diagonal if native_diag => {
+                        cell.jacobian_diag(h_prev, x, &mut f_scratch, out_j, &mut ws);
+                    }
+                    JacobianStructure::Diagonal => {
+                        cell.jacobian(h_prev, x, &mut f_scratch, &mut dense_scratch, &mut ws);
+                        for j in 0..n {
+                            out_j[j] = dense_scratch[j * n + j];
+                        }
+                    }
+                }
+            }
+        }
+    };
+
+    let chunks = crate::scan::plan_batch_chunks(t_len, all_seqs, threads, batch);
+    let mut jac_slabs: Vec<Option<&mut [S]>> = jac.chunks_mut(sj).map(Some).collect();
+    let mut items: Vec<(usize, usize, usize, &mut [S])> = Vec::with_capacity(chunks.len());
+    let mut c = 0;
+    while c < chunks.len() {
+        let s = chunks[c].0;
+        let mut j_rest = jac_slabs[s].take().unwrap();
+        while c < chunks.len() && chunks[c].0 == s {
+            let (_, lo, hi) = chunks[c];
+            let (j_c, j_tail) = j_rest.split_at_mut((hi - lo) * jl);
+            items.push((s, lo, hi, j_c));
+            j_rest = j_tail;
+            c += 1;
+        }
+    }
+    if threads <= 1 || items.len() <= 1 {
+        work(items);
+    } else {
+        let workers = threads.min(items.len());
+        let mut buckets: Vec<Vec<(usize, usize, usize, &mut [S])>> =
+            (0..workers).map(|_| Vec::new()).collect();
+        for (k, item) in items.into_iter().enumerate() {
+            buckets[k % workers].push(item);
+        }
+        let work = &work;
+        std::thread::scope(|scope| {
+            for bucket in buckets {
+                scope.spawn(move || work(bucket));
+            }
+        });
+    }
+    jac
 }
 
 #[cfg(test)]
@@ -344,6 +490,74 @@ mod tests {
                 assert!((a - b).abs() < 1e-9);
             }
         }
+    }
+
+    /// Batched backward == the sum (dtheta) / concatenation (dh0) of B
+    /// single-sequence backward passes, at every thread count, for both
+    /// structures.
+    #[test]
+    fn batched_backward_matches_looped() {
+        let mut rng = Rng::new(15);
+        let (n, m, t, b) = (3usize, 2usize, 120usize, 3usize);
+        let gru: Gru<f64> = Gru::new(n, m, &mut rng);
+        let ind: IndRnn<f64> = IndRnn::new(n, m, &mut rng);
+        let mut xs = vec![0.0; b * t * m];
+        rng.fill_normal(&mut xs, 1.0);
+        let h0s = vec![0.0; b * n];
+        let mut gs = vec![0.0; b * t * n];
+        rng.fill_normal(&mut gs, 1.0);
+
+        fn check<C: CellGrad<f64>>(
+            cell: &C,
+            h0s: &[f64],
+            xs: &[f64],
+            gs: &[f64],
+            structure: JacobianStructure,
+            (n, m, t, b): (usize, usize, usize, usize),
+        ) {
+            // forward trajectories per sequence (sequential = exact)
+            let mut ys = vec![0.0; b * t * n];
+            for s in 0..b {
+                let y = seq_rnn(cell, &h0s[s * n..(s + 1) * n], &xs[s * t * m..(s + 1) * t * m]);
+                ys[s * t * n..(s + 1) * t * n].copy_from_slice(&y);
+            }
+            // looped reference
+            let mut dtheta_ref = vec![0.0; cell.num_params()];
+            let mut dh0s_ref = vec![0.0; b * n];
+            for s in 0..b {
+                let g = deer_rnn_backward(
+                    cell,
+                    &h0s[s * n..(s + 1) * n],
+                    &xs[s * t * m..(s + 1) * t * m],
+                    &ys[s * t * n..(s + 1) * t * n],
+                    &gs[s * t * n..(s + 1) * t * n],
+                    None,
+                    structure,
+                    1,
+                );
+                for (d, v) in dtheta_ref.iter_mut().zip(g.dtheta.iter()) {
+                    *d += *v;
+                }
+                dh0s_ref[s * n..(s + 1) * n].copy_from_slice(&g.dh0);
+            }
+            for threads in [1usize, 2, 4] {
+                let bg = deer_rnn_backward_batch(
+                    cell, h0s, xs, &ys, &gs, None, structure, threads, b,
+                );
+                for (i, (a, r)) in bg.dtheta.iter().zip(dtheta_ref.iter()).enumerate() {
+                    assert!(
+                        (a - r).abs() < 1e-9 * (1.0 + r.abs()),
+                        "threads={threads} dtheta[{i}]: {a} vs {r}"
+                    );
+                }
+                for (a, r) in bg.dh0s.iter().zip(dh0s_ref.iter()) {
+                    assert!((a - r).abs() < 1e-9, "threads={threads} dh0: {a} vs {r}");
+                }
+            }
+        }
+        check(&gru, &h0s, &xs, &gs, JacobianStructure::Dense, (n, m, t, b));
+        check(&gru, &h0s, &xs, &gs, JacobianStructure::Diagonal, (n, m, t, b)); // quasi gradient
+        check(&ind, &h0s, &xs, &gs, JacobianStructure::Diagonal, (n, m, t, b));
     }
 
     /// Reusing the packed diagonal Jacobians from a converged forward pass

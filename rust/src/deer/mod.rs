@@ -31,6 +31,15 @@
 //! exact trajectory). The break-even is strongly in quasi-DEER's favor once
 //! n ≳ 8; below that the dense path's quadratic convergence wins. See
 //! `deer bench --exp quasi` for the measured trade-off grid.
+//!
+//! # Batched execution
+//!
+//! Both directions run natively over the `[B, T, n]` layout:
+//! [`deer_rnn_batch`] (fused Newton sweeps with per-sequence convergence
+//! masking) and [`deer_rnn_backward_batch`] (one fused dual scan + a
+//! batch-summed parameter VJP). The single-sequence functions are the B = 1
+//! cases. `deer bench --exp batch` measures fused-batched vs. looped
+//! dispatch throughput.
 
 pub mod grad;
 pub mod newton;
@@ -38,8 +47,11 @@ pub mod ode;
 pub mod rk45;
 pub mod seq;
 
-pub use grad::{deer_rnn_backward, GradResult};
-pub use newton::{deer_rnn, effective_structure, DeerConfig, DeerResult, JacobianMode};
+pub use grad::{deer_rnn_backward, deer_rnn_backward_batch, BatchGradResult, GradResult};
+pub use newton::{
+    deer_rnn, deer_rnn_batch, effective_structure, BatchDeerResult, DeerConfig, DeerResult,
+    JacobianMode,
+};
 pub use ode::{deer_ode, Interp, OdeDeerResult, OdeSystem};
 pub use rk45::{rk45_solve, Rk45Options};
-pub use seq::{seq_rnn, seq_rnn_backward};
+pub use seq::{seq_rnn, seq_rnn_backward, seq_rnn_batch};

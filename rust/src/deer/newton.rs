@@ -30,12 +30,31 @@
 //!   than quadratic rate, trading a few extra cheap iterations for an
 //!   O(n²)-per-element-cheaper scan and O(T·n) Jacobian memory.
 //!
-//! The three instrumented phases mirror the paper's Table 5 profile labels:
-//! `FUNCEVAL` (f + Jacobian), `GTMULT` (building b), `INVLIN` (the scan).
+//! # Batched `[B, T, n]` execution
+//!
+//! [`deer_rnn_batch`] is the primary entry point: it solves B independent
+//! sequences in one fused Newton iteration — every phase (FUNCEVAL, the
+//! INVLIN scan, the update/error reduction) schedules the whole B×T element
+//! grid across the thread pool, so worker spawn/join and workspace costs
+//! amortize over the batch instead of being paid per sequence (the Table 4
+//! batch axis on real cores). [`deer_rnn`] is the B = 1 case.
+//!
+//! **Per-sequence convergence masking**: each sequence carries its own
+//! error trace, tolerance check, and divergence guard. A converged (or
+//! diverged) sequence freezes — its trajectory, Jacobians and rhs slabs are
+//! no longer touched — while stragglers keep iterating, so a batch costs
+//! `Σ_b iters_b` element updates, not `B · max_b iters_b`, and a hard
+//! sequence can never perturb an already-converged neighbour.
+//!
+//! The instrumented phases derive from the paper's Table 5 labels:
+//! `FUNCEVAL` (f + Jacobian, now *fused* with the former GTMULT — the
+//! `b_i = f_i − J_i·y_{i−1}` build happens in the same pass while `J_i` and
+//! `y_{i−1}` are register/cache-hot, removing one full sweep over the
+//! `[B, T, n]` buffers per iteration) and `INVLIN` (the scan).
 
 use crate::cells::{Cell, JacobianStructure};
-use crate::scan::diag::par_diag_scan_apply_ws;
-use crate::scan::par::par_scan_apply_ws;
+use crate::scan::diag::par_diag_scan_apply_batch_ws;
+use crate::scan::par::par_scan_apply_batch_ws;
 use crate::scan::ScanWorkspace;
 use crate::util::scalar::Scalar;
 use crate::util::timer::PhaseProfile;
@@ -99,8 +118,36 @@ pub struct DeerResult<S> {
     pub jacobians: Vec<S>,
     /// Structure of [`DeerResult::jacobians`].
     pub jac_structure: JacobianStructure,
-    /// Phase timings (FUNCEVAL / GTMULT / INVLIN; Table 5).
+    /// Phase timings (FUNCEVAL incl. the fused b-build / INVLIN; Table 5).
     pub profile: PhaseProfile,
+}
+
+/// Output of a batched DEER forward evaluation ([`deer_rnn_batch`]).
+///
+/// All trajectory-shaped buffers use the `[B, T, n…]` sequence-major layout:
+/// sequence `s` owns the contiguous slab `s·T·len .. (s+1)·T·len`.
+#[derive(Debug, Clone)]
+pub struct BatchDeerResult<S> {
+    /// Number of sequences B.
+    pub batch: usize,
+    /// Converged trajectories, `[B, T, n]`.
+    pub ys: Vec<S>,
+    /// Newton sweeps each sequence participated in (per-sequence masking:
+    /// a sequence stops counting once it freezes).
+    pub iterations: Vec<usize>,
+    /// Per-sequence tolerance outcome.
+    pub converged: Vec<bool>,
+    /// Per-sequence max-abs update traces.
+    pub err_traces: Vec<Vec<f64>>,
+    /// Final per-step Jacobians, `[B, T, n·n]` dense or `[B, T, n]` packed
+    /// diagonal — reusable by [`super::grad::deer_rnn_backward_batch`].
+    pub jacobians: Vec<S>,
+    /// Structure of [`BatchDeerResult::jacobians`].
+    pub jac_structure: JacobianStructure,
+    /// Phase timings accumulated over the whole batch solve.
+    pub profile: PhaseProfile,
+    /// Newton sweeps executed over the batch (= max of `iterations`).
+    pub sweeps: usize,
 }
 
 /// The Jacobian structure the solve will run with for a given cell + mode.
@@ -115,7 +162,8 @@ pub fn effective_structure<S: Scalar, C: Cell<S>>(
     }
 }
 
-/// Evaluate an RNN with DEER.
+/// Evaluate an RNN with DEER — the single-sequence API, implemented as the
+/// B = 1 case of [`deer_rnn_batch`].
 ///
 /// * `h0` — initial state (length n).
 /// * `xs` — inputs, length `T·m`.
@@ -129,58 +177,108 @@ pub fn deer_rnn<S: Scalar, C: Cell<S>>(
     init_guess: Option<&[S]>,
     cfg: &DeerConfig<S>,
 ) -> DeerResult<S> {
+    let mut b = deer_rnn_batch(cell, h0, xs, init_guess, cfg, 1);
+    DeerResult {
+        ys: std::mem::take(&mut b.ys),
+        iterations: b.iterations[0],
+        converged: b.converged[0],
+        err_trace: std::mem::take(&mut b.err_traces[0]),
+        jacobians: std::mem::take(&mut b.jacobians),
+        jac_structure: b.jac_structure,
+        profile: b.profile,
+    }
+}
+
+/// Evaluate B independent sequences with one fused batched DEER iteration.
+///
+/// Layout (sequence-major): `h0s = [B, n]`, `xs = [B, T, m]`,
+/// `init_guess = [B, T, n]`. Every Newton sweep evaluates f/Jacobian, builds
+/// the rhs, and runs the INVLIN scan for **all still-active sequences in one
+/// scheduling pass over the thread pool**; converged or diverged sequences
+/// freeze in place (per-sequence masking) while stragglers keep iterating.
+pub fn deer_rnn_batch<S: Scalar, C: Cell<S>>(
+    cell: &C,
+    h0s: &[S],
+    xs: &[S],
+    init_guess: Option<&[S]>,
+    cfg: &DeerConfig<S>,
+    batch: usize,
+) -> BatchDeerResult<S> {
     let n = cell.state_dim();
     let m = cell.input_dim();
-    assert_eq!(h0.len(), n, "h0 dim");
-    assert_eq!(xs.len() % m, 0, "xs layout");
-    let t_len = xs.len() / m;
+    assert!(batch > 0, "batch must be ≥ 1");
+    assert_eq!(h0s.len(), batch * n, "h0s layout ([B, n])");
+    assert_eq!(xs.len() % (batch * m), 0, "xs layout ([B, T, m])");
+    let t_len = xs.len() / (batch * m);
 
     let structure = effective_structure(cell, cfg.jacobian_mode);
     let jl = structure.jac_len(n);
+    let sn = t_len * n;
 
     let mut yt: Vec<S> = match init_guess {
         Some(g) => {
-            assert_eq!(g.len(), t_len * n);
+            assert_eq!(g.len(), batch * sn, "init_guess layout ([B, T, n])");
             g.to_vec()
         }
-        None => vec![S::zero(); t_len * n],
+        None => vec![S::zero(); batch * sn],
     };
 
-    let mut jac = vec![S::zero(); t_len * jl];
-    let mut rhs = vec![S::zero(); t_len * n];
-    let mut y_next = vec![S::zero(); t_len * n];
-    // §Perf: one workspace for every INVLIN invocation — the scan allocates
-    // nothing inside the Newton loop.
+    let mut jac = vec![S::zero(); batch * t_len * jl];
+    let mut rhs = vec![S::zero(); batch * sn];
+    let mut y_next = vec![S::zero(); batch * sn];
+    // §Perf: one workspace + one set of [B, T, ·] buffers for the whole
+    // batch — no per-sequence or per-iteration allocation on the B = 1 and
+    // B ≥ threads scheduling paths (the rare 1 < B < threads intra-sequence
+    // split allocates small per-worker scan scratch inside its spawns).
     let mut scan_ws: ScanWorkspace<S> = ScanWorkspace::new();
 
     // §Perf: input projections are invariant across Newton iterations —
-    // compute them once here instead of inside every FUNCEVAL pass.
+    // computed once per evaluation, for every sequence.
     let pre_len = cell.x_precompute_len();
-    let mut pre = vec![S::zero(); t_len * pre_len];
+    let mut pre = vec![S::zero(); batch * t_len * pre_len];
     if pre_len > 0 {
-        cell.precompute_x(xs, &mut pre);
+        for s in 0..batch {
+            cell.precompute_x(
+                &xs[s * t_len * m..(s + 1) * t_len * m],
+                &mut pre[s * t_len * pre_len..(s + 1) * t_len * pre_len],
+            );
+        }
     }
+
     let mut profile = PhaseProfile::new();
-    let mut err_trace = Vec::new();
-    let mut converged = false;
-    let mut iterations = 0;
-    let mut grow_streak = 0usize;
-    let mut prev_err = f64::INFINITY;
+    let mut err_traces: Vec<Vec<f64>> = vec![Vec::new(); batch];
+    let mut converged = vec![false; batch];
+    let mut iterations = vec![0usize; batch];
+    let mut active = vec![true; batch];
+    let mut grow_streak = vec![0usize; batch];
+    let mut prev_err = vec![f64::INFINITY; batch];
+    let mut errs = vec![0.0f64; batch];
+    let mut sweeps = 0usize;
+    let tol = cfg.tol.to_f64c();
 
     for _ in 0..cfg.max_iter {
-        iterations += 1;
+        let act_idx: Vec<usize> = (0..batch).filter(|&s| active[s]).collect();
+        if act_idx.is_empty() {
+            break;
+        }
+        sweeps += 1;
+        for &s in &act_idx {
+            iterations[s] += 1;
+        }
 
-        // FUNCEVAL: f and Jacobian at every step (parallel over chunks).
+        // FUNCEVAL (fused with the former GTMULT): f, Jacobian and
+        // b_i = f_i − J_i·y_{i−1} in one cache-hot pass over the active grid.
         profile.record("FUNCEVAL", || {
-            eval_f_jac(
+            eval_f_jac_batch(
                 cell,
-                h0,
+                h0s,
                 xs,
                 &pre,
                 &yt,
                 &mut rhs,
                 &mut jac,
                 structure,
+                &act_idx,
                 cfg.threads,
                 n,
                 m,
@@ -188,90 +286,227 @@ pub fn deer_rnn<S: Scalar, C: Cell<S>>(
             );
         });
 
-        // GTMULT: b_i = f_i − J_i·y_{i−1}  (rhs currently holds f_i).
-        profile.record("GTMULT", || {
-            build_rhs(&jac, h0, &yt, &mut rhs, structure, n, t_len);
-        });
-
-        // INVLIN: the prefix scan y_i = J_i y_{i−1} + b_i, dispatched on
-        // structure (diagonal compose is O(n), not O(n³)).
+        // INVLIN: ONE fused batched scan call over the active B'×T element
+        // grid, dispatched on structure (diagonal compose is O(n), not
+        // O(n³)); frozen sequences are masked out.
         profile.record("INVLIN", || match structure {
             JacobianStructure::Dense => {
-                par_scan_apply_ws(&jac, &rhs, h0, &mut y_next, n, t_len, cfg.threads, &mut scan_ws);
-            }
-            JacobianStructure::Diagonal => {
-                par_diag_scan_apply_ws(
+                par_scan_apply_batch_ws(
                     &jac,
                     &rhs,
-                    h0,
+                    h0s,
                     &mut y_next,
                     n,
                     t_len,
+                    batch,
+                    Some(&active),
+                    cfg.threads,
+                    &mut scan_ws,
+                );
+            }
+            JacobianStructure::Diagonal => {
+                par_diag_scan_apply_batch_ws(
+                    &jac,
+                    &rhs,
+                    h0s,
+                    &mut y_next,
+                    n,
+                    t_len,
+                    batch,
+                    Some(&active),
                     cfg.threads,
                     &mut scan_ws,
                 );
             }
         });
 
-        let err = crate::linalg::max_abs_diff(&yt, &y_next).to_f64c();
-        err_trace.push(err);
-        std::mem::swap(&mut yt, &mut y_next);
+        // Trajectory update + per-sequence error reduction, parallel over
+        // active sequences (cache-hot: runs right after the scan).
+        update_and_errs(&mut yt, &mut y_next, &mut errs, &act_idx, batch, cfg.threads, sn);
 
-        if !err.is_finite() {
-            break; // diverged to NaN/inf
-        }
-        if err < cfg.tol.to_f64c() {
-            converged = true;
-            break;
-        }
-        if err > prev_err {
-            grow_streak += 1;
-            if grow_streak >= cfg.divergence_patience {
-                break;
+        // Per-sequence convergence bookkeeping (masking).
+        for &s in &act_idx {
+            let err = errs[s];
+            err_traces[s].push(err);
+            if !err.is_finite() {
+                active[s] = false; // diverged to NaN/inf
+                continue;
             }
-        } else {
-            grow_streak = 0;
+            if err < tol {
+                converged[s] = true;
+                active[s] = false;
+                continue;
+            }
+            if err > prev_err[s] {
+                grow_streak[s] += 1;
+                if grow_streak[s] >= cfg.divergence_patience {
+                    active[s] = false;
+                    continue;
+                }
+            } else {
+                grow_streak[s] = 0;
+            }
+            prev_err[s] = err;
         }
-        prev_err = err;
     }
 
-    DeerResult {
+    BatchDeerResult {
+        batch,
         ys: yt,
         iterations,
         converged,
-        err_trace,
+        err_traces,
         jacobians: jac,
         jac_structure: structure,
         profile,
+        sweeps,
     }
 }
 
-/// Evaluate `f` and `∂f/∂y` along the trajectory guess, chunked over threads.
-/// On exit `rhs[i] = f(y_{i−1}, x_i)` and `jac[i] = ∂f/∂y(y_{i−1}, x_i)`
-/// (dense n×n, or packed n-entry diagonal under the diagonal structure).
+/// `yt[s] ← y_next[s]` and `errs[s] = max|Δ|` for every active sequence,
+/// scheduled over the thread pool (each worker handles whole sequences).
+///
+/// While every sequence is still active (the common case, and always the
+/// B = 1 case) the update is an O(1) buffer swap after the error
+/// reduction; once some sequences have frozen, only the active slabs are
+/// copied back so frozen trajectories stay untouched.
+fn update_and_errs<S: Scalar>(
+    yt: &mut Vec<S>,
+    y_next: &mut Vec<S>,
+    errs: &mut [f64],
+    act_idx: &[usize],
+    batch: usize,
+    threads: usize,
+    sn: usize,
+) {
+    if sn == 0 {
+        for &s in act_idx {
+            errs[s] = 0.0;
+        }
+        return;
+    }
+    if act_idx.len() == batch {
+        // all sequences active: reduce errors (read-only), then swap.
+        if threads <= 1 || act_idx.len() <= 1 {
+            for &s in act_idx {
+                errs[s] = crate::linalg::max_abs_diff(
+                    &yt[s * sn..(s + 1) * sn],
+                    &y_next[s * sn..(s + 1) * sn],
+                )
+                .to_f64c();
+            }
+        } else {
+            let workers = threads.min(act_idx.len());
+            let yt_ref = &*yt;
+            let y_next_ref = &*y_next;
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..workers)
+                    .map(|w| {
+                        scope.spawn(move || {
+                            let mut out = Vec::new();
+                            let mut k = w;
+                            while k < act_idx.len() {
+                                let s = act_idx[k];
+                                let e = crate::linalg::max_abs_diff(
+                                    &yt_ref[s * sn..(s + 1) * sn],
+                                    &y_next_ref[s * sn..(s + 1) * sn],
+                                )
+                                .to_f64c();
+                                out.push((s, e));
+                                k += workers;
+                            }
+                            out
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    for (s, e) in h.join().unwrap() {
+                        errs[s] = e;
+                    }
+                }
+            });
+        }
+        std::mem::swap(yt, y_next);
+        return;
+    }
+    // partial freeze: copy back only the active slabs so frozen sequences'
+    // trajectories are never touched.
+    if threads <= 1 || act_idx.len() <= 1 {
+        for &s in act_idx {
+            let slab = &mut yt[s * sn..(s + 1) * sn];
+            let src = &y_next[s * sn..(s + 1) * sn];
+            errs[s] = crate::linalg::max_abs_diff(&slab[..], src).to_f64c();
+            slab.copy_from_slice(src);
+        }
+        return;
+    }
+    let workers = threads.min(act_idx.len());
+    let y_next_ref = &*y_next;
+    let mut slabs: Vec<Option<&mut [S]>> = yt.chunks_mut(sn).map(Some).collect();
+    let mut buckets: Vec<Vec<(usize, &mut [S])>> = (0..workers).map(|_| Vec::new()).collect();
+    for (k, &s) in act_idx.iter().enumerate() {
+        buckets[k % workers].push((s, slabs[s].take().unwrap()));
+    }
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = buckets
+            .into_iter()
+            .map(|bucket| {
+                scope.spawn(move || {
+                    bucket
+                        .into_iter()
+                        .map(|(s, slab)| {
+                            let src = &y_next_ref[s * sn..(s + 1) * sn];
+                            let e = crate::linalg::max_abs_diff(&slab[..], src).to_f64c();
+                            slab.copy_from_slice(src);
+                            (s, e)
+                        })
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        for h in handles {
+            for (s, e) in h.join().unwrap() {
+                errs[s] = e;
+            }
+        }
+    });
+}
+
+/// Evaluate `f` and `∂f/∂y` along every active sequence's trajectory guess
+/// and build the scan rhs in the same pass, chunked over the `[B', T]`
+/// element grid. On exit, for each active sequence `s` and step `i`:
+/// `jac[s, i] = ∂f/∂y(y_{i−1}, x_i)` (dense n×n, or packed n-entry diagonal)
+/// and `rhs[s, i] = f(y_{i−1}, x_i) − J_i·y_{i−1}` (the fused GTMULT).
 ///
 /// For quasi-DEER (`structure` diagonal but the cell dense) the full
 /// Jacobian is evaluated into a per-worker n×n scratch and only its
-/// diagonal is stored — global memory stays O(T·n).
+/// diagonal is stored — global memory stays O(B·T·n).
 #[allow(clippy::too_many_arguments)]
-fn eval_f_jac<S: Scalar, C: Cell<S>>(
+fn eval_f_jac_batch<S: Scalar, C: Cell<S>>(
     cell: &C,
-    h0: &[S],
+    h0s: &[S],
     xs: &[S],
     pre: &[S],
     yt: &[S],
     rhs: &mut [S],
     jac: &mut [S],
     structure: JacobianStructure,
+    act_idx: &[usize],
     threads: usize,
     n: usize,
     m: usize,
     t_len: usize,
 ) {
     let jl = structure.jac_len(n);
+    let sn = t_len * n;
+    let sj = t_len * jl;
+    let sm = t_len * m;
     let pre_len = cell.x_precompute_len();
+    let sp = t_len * pre_len;
     let native_diag = cell.jacobian_structure() == JacobianStructure::Diagonal;
-    let work = |range: std::ops::Range<usize>, rhs_c: &mut [S], jac_c: &mut [S]| {
+
+    type Item<'a, Sc> = (usize, usize, usize, &'a mut [Sc], &'a mut [Sc]);
+    let work = |items: Vec<Item<S>>| {
         let mut ws = vec![S::zero(); cell.ws_len()];
         // dense scratch only on the quasi-DEER path
         let mut dense_scratch = if structure == JacobianStructure::Diagonal && !native_diag {
@@ -279,113 +514,138 @@ fn eval_f_jac<S: Scalar, C: Cell<S>>(
         } else {
             Vec::new()
         };
-        for (k, i) in range.enumerate() {
-            let h_prev = if i == 0 { h0 } else { &yt[(i - 1) * n..i * n] };
-            let out_f = &mut rhs_c[k * n..(k + 1) * n];
-            let out_j = &mut jac_c[k * jl..(k + 1) * jl];
-            match structure {
-                JacobianStructure::Dense => {
-                    if pre_len > 0 {
-                        cell.jacobian_pre(h_prev, &pre[i * pre_len..(i + 1) * pre_len], out_f, out_j, &mut ws);
-                    } else {
-                        cell.jacobian(h_prev, &xs[i * m..(i + 1) * m], out_f, out_j, &mut ws);
+        let mut jh = vec![S::zero(); n]; // J_i·y_{i−1} on the dense path
+        for (s, lo, hi, rhs_c, jac_c) in items {
+            for (k, i) in (lo..hi).enumerate() {
+                let h_prev = if i == 0 {
+                    &h0s[s * n..(s + 1) * n]
+                } else {
+                    &yt[s * sn + (i - 1) * n..s * sn + i * n]
+                };
+                let out_f = &mut rhs_c[k * n..(k + 1) * n];
+                let out_j = &mut jac_c[k * jl..(k + 1) * jl];
+                match structure {
+                    JacobianStructure::Dense => {
+                        if pre_len > 0 {
+                            cell.jacobian_pre(
+                                h_prev,
+                                &pre[s * sp + i * pre_len..s * sp + (i + 1) * pre_len],
+                                out_f,
+                                out_j,
+                                &mut ws,
+                            );
+                        } else {
+                            cell.jacobian(
+                                h_prev,
+                                &xs[s * sm + i * m..s * sm + (i + 1) * m],
+                                out_f,
+                                out_j,
+                                &mut ws,
+                            );
+                        }
+                        // fused GTMULT: b_i = f_i − J_i·y_{i−1}
+                        crate::linalg::matvec(&out_j[..], h_prev, &mut jh);
+                        for j in 0..n {
+                            out_f[j] -= jh[j];
+                        }
                     }
-                }
-                JacobianStructure::Diagonal if native_diag => {
-                    if pre_len > 0 {
-                        cell.jacobian_diag_pre(
-                            h_prev,
-                            &pre[i * pre_len..(i + 1) * pre_len],
-                            out_f,
-                            out_j,
-                            &mut ws,
-                        );
-                    } else {
-                        cell.jacobian_diag(h_prev, &xs[i * m..(i + 1) * m], out_f, out_j, &mut ws);
-                    }
-                }
-                JacobianStructure::Diagonal => {
-                    // quasi-DEER: dense evaluation, diagonal extraction
-                    if pre_len > 0 {
-                        cell.jacobian_pre(
-                            h_prev,
-                            &pre[i * pre_len..(i + 1) * pre_len],
-                            out_f,
-                            &mut dense_scratch,
-                            &mut ws,
-                        );
-                    } else {
-                        cell.jacobian(
-                            h_prev,
-                            &xs[i * m..(i + 1) * m],
-                            out_f,
-                            &mut dense_scratch,
-                            &mut ws,
-                        );
-                    }
-                    for j in 0..n {
-                        out_j[j] = dense_scratch[j * n + j];
+                    JacobianStructure::Diagonal => {
+                        if native_diag {
+                            if pre_len > 0 {
+                                cell.jacobian_diag_pre(
+                                    h_prev,
+                                    &pre[s * sp + i * pre_len..s * sp + (i + 1) * pre_len],
+                                    out_f,
+                                    out_j,
+                                    &mut ws,
+                                );
+                            } else {
+                                cell.jacobian_diag(
+                                    h_prev,
+                                    &xs[s * sm + i * m..s * sm + (i + 1) * m],
+                                    out_f,
+                                    out_j,
+                                    &mut ws,
+                                );
+                            }
+                        } else {
+                            // quasi-DEER: dense evaluation, diagonal extraction
+                            if pre_len > 0 {
+                                cell.jacobian_pre(
+                                    h_prev,
+                                    &pre[s * sp + i * pre_len..s * sp + (i + 1) * pre_len],
+                                    out_f,
+                                    &mut dense_scratch,
+                                    &mut ws,
+                                );
+                            } else {
+                                cell.jacobian(
+                                    h_prev,
+                                    &xs[s * sm + i * m..s * sm + (i + 1) * m],
+                                    out_f,
+                                    &mut dense_scratch,
+                                    &mut ws,
+                                );
+                            }
+                            for j in 0..n {
+                                out_j[j] = dense_scratch[j * n + j];
+                            }
+                        }
+                        // fused GTMULT, diagonal: b_i = f_i − j_i ⊙ y_{i−1}
+                        for j in 0..n {
+                            out_f[j] -= out_j[j] * h_prev[j];
+                        }
                     }
                 }
             }
         }
     };
 
-    if threads <= 1 || t_len < 4 * threads {
-        work(0..t_len, rhs, jac);
+    // Carve the [B', T] grid into per-sequence contiguous chunks and hand
+    // each worker a round-robin bucket of them. Unlike the scan, FUNCEVAL
+    // has no cross-element accumulation — every (s, i) writes its own jac/
+    // rhs slots from reads of the frozen-at-sweep-start trajectory — so the
+    // decomposition can be keyed on the ACTIVE count without affecting
+    // reproducibility: when stragglers remain, the idle lanes split inside
+    // their sequences instead of sitting out the dominant phase.
+    let chunks = crate::scan::plan_batch_chunks(t_len, act_idx, threads, act_idx.len());
+    if chunks.is_empty() {
         return;
     }
-    let chunk_len = t_len.div_ceil(threads);
-    let mut rhs_chunks: Vec<&mut [S]> = rhs.chunks_mut(chunk_len * n).collect();
-    let mut jac_chunks: Vec<&mut [S]> = jac.chunks_mut(chunk_len * jl).collect();
-    std::thread::scope(|scope| {
-        for (c, (rhs_c, jac_c)) in rhs_chunks
-            .drain(..)
-            .zip(jac_chunks.drain(..))
-            .enumerate()
-        {
-            let lo = c * chunk_len;
-            let hi = ((c + 1) * chunk_len).min(t_len);
-            let work = &work;
-            scope.spawn(move || work(lo..hi, rhs_c, jac_c));
-        }
-    });
-}
-
-/// `rhs[i] ← rhs[i] − J_i · y_{i−1}` in place (rhs holds f on entry).
-fn build_rhs<S: Scalar>(
-    jac: &[S],
-    h0: &[S],
-    yt: &[S],
-    rhs: &mut [S],
-    structure: JacobianStructure,
-    n: usize,
-    t_len: usize,
-) {
-    match structure {
-        JacobianStructure::Dense => {
-            let nn = n * n;
-            let mut tmp = vec![S::zero(); n];
-            for i in 0..t_len {
-                let h_prev = if i == 0 { h0 } else { &yt[(i - 1) * n..i * n] };
-                crate::linalg::matvec(&jac[i * nn..(i + 1) * nn], h_prev, &mut tmp);
-                let r = &mut rhs[i * n..(i + 1) * n];
-                for j in 0..n {
-                    r[j] -= tmp[j];
-                }
-            }
-        }
-        JacobianStructure::Diagonal => {
-            for i in 0..t_len {
-                let h_prev = if i == 0 { h0 } else { &yt[(i - 1) * n..i * n] };
-                let jd = &jac[i * n..(i + 1) * n];
-                let r = &mut rhs[i * n..(i + 1) * n];
-                for j in 0..n {
-                    r[j] -= jd[j] * h_prev[j];
-                }
-            }
+    let mut rhs_slabs: Vec<Option<&mut [S]>> = rhs.chunks_mut(sn).map(Some).collect();
+    let mut jac_slabs: Vec<Option<&mut [S]>> = jac.chunks_mut(sj).map(Some).collect();
+    let mut items: Vec<Item<S>> = Vec::with_capacity(chunks.len());
+    let mut c = 0;
+    while c < chunks.len() {
+        let s = chunks[c].0;
+        let mut r_rest = rhs_slabs[s].take().unwrap();
+        let mut j_rest = jac_slabs[s].take().unwrap();
+        while c < chunks.len() && chunks[c].0 == s {
+            let (_, lo, hi) = chunks[c];
+            let (r_c, r_tail) = r_rest.split_at_mut((hi - lo) * n);
+            let (j_c, j_tail) = j_rest.split_at_mut((hi - lo) * jl);
+            items.push((s, lo, hi, r_c, j_c));
+            r_rest = r_tail;
+            j_rest = j_tail;
+            c += 1;
         }
     }
+
+    if threads <= 1 || items.len() <= 1 {
+        work(items);
+        return;
+    }
+    let workers = threads.min(items.len());
+    let mut buckets: Vec<Vec<Item<S>>> = (0..workers).map(|_| Vec::new()).collect();
+    for (k, item) in items.into_iter().enumerate() {
+        buckets[k % workers].push(item);
+    }
+    let work = &work;
+    std::thread::scope(|scope| {
+        for bucket in buckets {
+            scope.spawn(move || work(bucket));
+        }
+    });
 }
 
 #[cfg(test)]
@@ -506,13 +766,17 @@ mod tests {
 
     #[test]
     fn profile_has_all_phases() {
+        // Since the batched refactor GTMULT is fused into FUNCEVAL (the
+        // b_i build happens in the same pass as the Jacobian evaluation),
+        // so the instrumented phases are FUNCEVAL and INVLIN.
         let mut rng = Rng::new(48);
         let cell: Elman<f64> = Elman::new(2, 1, &mut rng);
         let xs = random_inputs(1, 100, 6);
         let res = deer_rnn(&cell, &vec![0.0; 2], &xs, None, &DeerConfig::default());
-        for phase in ["FUNCEVAL", "GTMULT", "INVLIN"] {
+        for phase in ["FUNCEVAL", "INVLIN"] {
             assert!(res.profile.get(phase) > 0.0, "missing {phase}");
         }
+        assert_eq!(res.profile.get("GTMULT"), 0.0, "GTMULT is fused into FUNCEVAL");
     }
 
     #[test]
@@ -642,6 +906,139 @@ mod tests {
         for other in &results[1..] {
             let diff = crate::linalg::max_abs_diff(&results[0], other);
             assert!(diff < 1e-9, "thread count changed diagonal numerics: {diff}");
+        }
+    }
+
+    // ---- batched [B, T, n] path ----
+
+    /// A batch of B sequences at threads=1 must reproduce B independent
+    /// single-sequence solves bitwise: same trajectories, same per-sequence
+    /// iteration counts, same convergence flags.
+    #[test]
+    fn batched_matches_looped_bitwise_gru() {
+        let mut rng = Rng::new(60);
+        let (n, m, t, b) = (4usize, 3usize, 300usize, 3usize);
+        let cell: Gru<f64> = Gru::new(n, m, &mut rng);
+        let mut xs = vec![0.0; b * t * m];
+        rng.fill_normal(&mut xs, 1.0);
+        let h0s = vec![0.0; b * n];
+        let cfg = DeerConfig::default();
+
+        let res = deer_rnn_batch(&cell, &h0s, &xs, None, &cfg, b);
+        assert_eq!(res.iterations.len(), b);
+        for s in 0..b {
+            let solo = deer_rnn(
+                &cell,
+                &h0s[s * n..(s + 1) * n],
+                &xs[s * t * m..(s + 1) * t * m],
+                None,
+                &cfg,
+            );
+            assert!(solo.converged && res.converged[s], "seq {s}");
+            assert_eq!(solo.iterations, res.iterations[s], "seq {s} iteration count");
+            assert_eq!(
+                &res.ys[s * t * n..(s + 1) * t * n],
+                &solo.ys[..],
+                "seq {s} trajectory not bitwise equal"
+            );
+            assert_eq!(
+                &res.jacobians[s * t * n * n..(s + 1) * t * n * n],
+                &solo.jacobians[..],
+                "seq {s} jacobians not bitwise equal"
+            );
+        }
+        assert_eq!(res.sweeps, *res.iterations.iter().max().unwrap());
+    }
+
+    /// With B ≥ threads the batched scheduler assigns whole sequences to
+    /// workers, so the result stays bitwise thread-count invariant.
+    #[test]
+    fn batched_thread_count_invariant() {
+        let mut rng = Rng::new(61);
+        let (n, m, t, b) = (3usize, 2usize, 400usize, 4usize);
+        let cell: Gru<f64> = Gru::new(n, m, &mut rng);
+        let mut xs = vec![0.0; b * t * m];
+        rng.fill_normal(&mut xs, 1.0);
+        let h0s = vec![0.0; b * n];
+
+        let r1 = deer_rnn_batch(&cell, &h0s, &xs, None, &DeerConfig { threads: 1, ..Default::default() }, b);
+        for threads in [2usize, 4] {
+            let rt = deer_rnn_batch(
+                &cell,
+                &h0s,
+                &xs,
+                None,
+                &DeerConfig { threads, ..Default::default() },
+                b,
+            );
+            assert_eq!(r1.ys, rt.ys, "threads={threads} changed batched numerics");
+            assert_eq!(r1.iterations, rt.iterations);
+        }
+    }
+
+    /// Per-sequence masking: a warm-started (already solved) sequence must
+    /// freeze after its verification sweeps while a cold straggler keeps
+    /// iterating, without perturbing the frozen trajectory.
+    #[test]
+    fn masking_freezes_converged_sequence() {
+        let mut rng = Rng::new(62);
+        let (n, m, t, b) = (4usize, 2usize, 500usize, 2usize);
+        let cell: Gru<f64> = Gru::new(n, m, &mut rng);
+        let mut xs = vec![0.0; b * t * m];
+        rng.fill_normal(&mut xs, 1.0);
+        let h0s = vec![0.0; b * n];
+        let cfg = DeerConfig::default();
+
+        // pre-solve sequence 0 so its batch entry starts at the solution
+        let solo0 = deer_rnn(&cell, &h0s[..n], &xs[..t * m], None, &cfg);
+        assert!(solo0.converged);
+        let solo1 = deer_rnn(&cell, &h0s[n..2 * n], &xs[t * m..], None, &cfg);
+        assert!(solo1.converged);
+        assert!(solo1.iterations > 2, "cold solve too easy for the test");
+
+        let mut guess = vec![0.0; b * t * n];
+        guess[..t * n].copy_from_slice(&solo0.ys);
+        let res = deer_rnn_batch(&cell, &h0s, &xs, Some(&guess), &cfg, b);
+        assert!(res.converged[0] && res.converged[1]);
+        assert!(
+            res.iterations[0] <= 2,
+            "warm sequence should verify in ≤2 sweeps, took {}",
+            res.iterations[0]
+        );
+        assert_eq!(res.iterations[1], solo1.iterations, "straggler iteration count");
+        assert!(res.iterations[0] < res.iterations[1]);
+        // the frozen sequence's trajectory equals its solo warm solve bitwise
+        let warm0 = deer_rnn(&cell, &h0s[..n], &xs[..t * m], Some(&solo0.ys), &cfg);
+        assert_eq!(&res.ys[..t * n], &warm0.ys[..], "straggler perturbed frozen seq");
+        // and the straggler equals its solo cold solve bitwise
+        assert_eq!(&res.ys[t * n..], &solo1.ys[..], "frozen seq perturbed straggler");
+    }
+
+    /// Batched quasi-DEER (diagonal approximation) on a dense cell matches
+    /// per-sequence sequential evaluation.
+    #[test]
+    fn batched_quasi_deer_matches_sequential() {
+        let mut rng = Rng::new(63);
+        let (n, m, t, b) = (4usize, 3usize, 300usize, 3usize);
+        let cell: Gru<f64> = Gru::new(n, m, &mut rng);
+        let mut xs = vec![0.0; b * t * m];
+        rng.fill_normal(&mut xs, 1.0);
+        let h0s = vec![0.0; b * n];
+        let cfg = DeerConfig {
+            jacobian_mode: JacobianMode::DiagonalApprox,
+            tol: 1e-9,
+            max_iter: 200,
+            threads: 2,
+            ..Default::default()
+        };
+        let res = deer_rnn_batch(&cell, &h0s, &xs, None, &cfg, b);
+        assert_eq!(res.jac_structure, JacobianStructure::Diagonal);
+        assert_eq!(res.jacobians.len(), b * t * n);
+        for s in 0..b {
+            assert!(res.converged[s], "seq {s}: {:?}", res.err_traces[s]);
+            let seq = seq_rnn(&cell, &h0s[s * n..(s + 1) * n], &xs[s * t * m..(s + 1) * t * m]);
+            let diff = crate::linalg::max_abs_diff(&seq, &res.ys[s * t * n..(s + 1) * t * n]);
+            assert!(diff < 1e-6, "seq {s}: {diff}");
         }
     }
 

@@ -22,6 +22,45 @@ pub fn seq_rnn<S: Scalar, C: Cell<S>>(cell: &C, h0: &[S], xs: &[S]) -> Vec<S> {
     out
 }
 
+/// Batched sequential forward evaluation over B independent sequences:
+/// `xs = [B, T, m]` (sequence-major), `h0s = [B, n]`, returns `[B, T, n]`.
+///
+/// Steps time-major through [`Cell::step_batch`] on a packed `[B, n]` state
+/// slab — the exact batched baseline for equal-layout comparisons against
+/// [`super::deer_rnn_batch`] (B solves, one buffer, no DEER iteration).
+pub fn seq_rnn_batch<S: Scalar, C: Cell<S>>(
+    cell: &C,
+    h0s: &[S],
+    xs: &[S],
+    batch: usize,
+) -> Vec<S> {
+    let n = cell.state_dim();
+    let m = cell.input_dim();
+    assert!(batch > 0, "batch must be ≥ 1");
+    assert_eq!(h0s.len(), batch * n, "h0s layout ([B, n])");
+    assert_eq!(xs.len() % (batch * m), 0, "xs layout ([B, T, m])");
+    let t_len = xs.len() / (batch * m);
+    let mut out = vec![S::zero(); batch * t_len * n];
+    let mut ws = vec![S::zero(); cell.ws_len()];
+    let mut hs = h0s.to_vec();
+    let mut next = vec![S::zero(); batch * n];
+    let mut xs_t = vec![S::zero(); batch * m];
+    for i in 0..t_len {
+        // gather the time-slice [B, m] from the sequence-major input
+        for s in 0..batch {
+            xs_t[s * m..(s + 1) * m]
+                .copy_from_slice(&xs[s * t_len * m + i * m..s * t_len * m + (i + 1) * m]);
+        }
+        cell.step_batch(&hs, &xs_t, &mut next, &mut ws, batch);
+        for s in 0..batch {
+            out[s * t_len * n + i * n..s * t_len * n + (i + 1) * n]
+                .copy_from_slice(&next[s * n..(s + 1) * n]);
+        }
+        std::mem::swap(&mut hs, &mut next);
+    }
+    out
+}
+
 /// BPTT: given the forward trajectory `ys` (`T·n`) and the loss cotangent
 /// `gs = ∂L/∂y_i` (`T·n`), accumulate `dtheta` and return `∂L/∂h0`.
 pub fn seq_rnn_backward<S: Scalar, C: CellGrad<S>>(
@@ -71,6 +110,22 @@ mod tests {
         let xs = vec![0.5; 10 * 2];
         let ys = seq_rnn(&cell, &[0.0, 0.0, 0.0], &xs);
         assert_eq!(ys.len(), 30);
+    }
+
+    #[test]
+    fn batched_forward_matches_per_sequence() {
+        let mut rng = Rng::new(4);
+        let (n, m, t, b) = (3usize, 2usize, 50usize, 4usize);
+        let cell: Gru<f64> = Gru::new(n, m, &mut rng);
+        let mut xs = vec![0.0; b * t * m];
+        rng.fill_normal(&mut xs, 1.0);
+        let mut h0s = vec![0.0; b * n];
+        rng.fill_normal(&mut h0s, 0.5);
+        let batched = seq_rnn_batch(&cell, &h0s, &xs, b);
+        for s in 0..b {
+            let solo = seq_rnn(&cell, &h0s[s * n..(s + 1) * n], &xs[s * t * m..(s + 1) * t * m]);
+            assert_eq!(&batched[s * t * n..(s + 1) * t * n], &solo[..], "seq {s}");
+        }
     }
 
     #[test]

@@ -266,11 +266,13 @@ pub fn table3_interpolation() -> Table {
     t
 }
 
-/// Table 5: per-phase profile of one DEER iteration (FUNCEVAL/GTMULT/INVLIN).
+/// Table 5: per-phase profile of one DEER iteration. Since the batched
+/// refactor the GTMULT phase (building b) is fused into FUNCEVAL — the
+/// rhs is built in the same pass as the Jacobian evaluation — so the
+/// profile reports two phases where the paper's Table 5 lists three.
 pub fn table5_profile(t_len: usize, dims: &[usize]) -> Table {
     let mut rows: Vec<Vec<String>> = vec![
-        vec!["FUNCEVAL".into()],
-        vec!["GTMULT".into()],
+        vec!["FUNCEVAL (+GTMULT, fused)".into()],
         vec!["INVLIN".into()],
     ];
     for &n in dims {
@@ -278,8 +280,7 @@ pub fn table5_profile(t_len: usize, dims: &[usize]) -> Table {
         let res = deer_rnn(&cell, &h0, &xs, None, &DeerConfig::default());
         let per_iter = |phase: &str| res.profile.get(phase) / res.iterations as f64;
         rows[0].push(fmt_secs(per_iter("FUNCEVAL")));
-        rows[1].push(fmt_secs(per_iter("GTMULT")));
-        rows[2].push(fmt_secs(per_iter("INVLIN")));
+        rows[1].push(fmt_secs(per_iter("INVLIN")));
     }
     let mut out = Table::new(
         &[&["phase / per-iteration".to_string()], dims
@@ -575,6 +576,204 @@ pub fn scan_bench_json(points: &[ScanBenchPoint], threads: usize) -> Json {
     ])
 }
 
+/// The {dims, lens, batch} grid of the batched-dispatch bench (`--exp
+/// batch`). The fast grid always contains the B=8, n=16, T=10k diagonal
+/// point that `BENCH_batch.json` is gated on.
+pub fn batch_bench_grid(fast: bool) -> (Vec<usize>, Vec<usize>, usize) {
+    if fast {
+        (vec![16], vec![10_000], 8)
+    } else {
+        (vec![4, 16], vec![3_000, 10_000], 8)
+    }
+}
+
+/// One point of the batched-vs-looped dispatch bench.
+#[derive(Debug, Clone)]
+pub struct BatchBenchPoint {
+    pub n: usize,
+    pub t_len: usize,
+    pub batch: usize,
+    /// Thread pool handed to the fused batched solve.
+    pub threads: usize,
+    /// B single-sequence solves at threads=1 — the status-quo coordinator
+    /// dispatch before the batched refactor.
+    pub looped_secs: f64,
+    /// B single-sequence solves each given the whole pool (intra-sequence
+    /// threading only) — the strongest looped baseline.
+    pub looped_pool_secs: f64,
+    /// ONE fused `[B, T, n]` solve over the pool.
+    pub batched_secs: f64,
+    /// looped_secs / batched_secs (sequences/sec ratio vs the status quo).
+    pub speedup: f64,
+    /// looped_pool_secs / batched_secs.
+    pub speedup_vs_pool: f64,
+    /// max |batched − looped| over all trajectories (correctness witness).
+    pub max_abs_diff: f64,
+}
+
+/// Batched-dispatch bench on the diagonal path (natively-diagonal IndRNN,
+/// m = n, f32): B looped single-sequence DEER solves vs ONE fused batched
+/// solve, measured wall-clock. The looped@1-thread column is the status-quo
+/// coordinator dispatch (`DeerConfig::default()` per request); looped@pool
+/// gives each solo solve the full thread pool so the fused win isn't
+/// overstated; batched@pool is the new engine. Emits the human table plus
+/// machine-readable points for `BENCH_batch.json`.
+pub fn batch_bench(
+    dims: &[usize],
+    lens: &[usize],
+    batch: usize,
+    threads: usize,
+    budget: Duration,
+) -> (Table, Vec<BatchBenchPoint>) {
+    use crate::cells::IndRnn;
+    use crate::deer::newton::deer_rnn_batch;
+    let mut table = Table::new(&[
+        "n",
+        "T",
+        "B",
+        "looped@1thr",
+        "looped@pool",
+        "batched@pool",
+        "speedup vs @1thr",
+        "vs @pool",
+        "batched seq/s",
+        "max |Δ|",
+    ]);
+    let mut points = Vec::new();
+    for &n in dims {
+        for &t_len in lens {
+            let mut rng = Rng::new(0xBA7C4 ^ ((n as u64) << 24) ^ t_len as u64);
+            let cell: IndRnn<f32> = IndRnn::new(n, n, &mut rng);
+            let mut xs = vec![0.0f32; batch * t_len * n];
+            rng.fill_normal(&mut xs, 1.0);
+            let h0s = vec![0.0f32; batch * n];
+            let cfg_solo = DeerConfig::<f32>::default(); // threads = 1
+            let cfg_pool = DeerConfig::<f32> { threads, ..Default::default() };
+
+            // correctness witness: fused batched vs per-sequence solves
+            let bres = deer_rnn_batch(&cell, &h0s, &xs, None, &cfg_pool, batch);
+            let mut max_diff = 0.0f64;
+            for s in 0..batch {
+                let solo = deer_rnn(
+                    &cell,
+                    &h0s[s * n..(s + 1) * n],
+                    &xs[s * t_len * n..(s + 1) * t_len * n],
+                    None,
+                    &cfg_solo,
+                );
+                let d = crate::linalg::max_abs_diff(
+                    &solo.ys,
+                    &bres.ys[s * t_len * n..(s + 1) * t_len * n],
+                )
+                .to_f64c();
+                max_diff = max_diff.max(d);
+            }
+
+            let looped_secs = bench_budget(1, 12, budget, || {
+                for s in 0..batch {
+                    let r = deer_rnn(
+                        &cell,
+                        &h0s[s * n..(s + 1) * n],
+                        &xs[s * t_len * n..(s + 1) * t_len * n],
+                        None,
+                        &cfg_solo,
+                    );
+                    std::hint::black_box(r.iterations);
+                }
+            })
+            .median();
+            let looped_pool_secs = bench_budget(1, 12, budget, || {
+                for s in 0..batch {
+                    let r = deer_rnn(
+                        &cell,
+                        &h0s[s * n..(s + 1) * n],
+                        &xs[s * t_len * n..(s + 1) * t_len * n],
+                        None,
+                        &cfg_pool,
+                    );
+                    std::hint::black_box(r.iterations);
+                }
+            })
+            .median();
+            let batched_secs = bench_budget(1, 12, budget, || {
+                let r = deer_rnn_batch(&cell, &h0s, &xs, None, &cfg_pool, batch);
+                std::hint::black_box(r.sweeps);
+            })
+            .median();
+
+            let p = BatchBenchPoint {
+                n,
+                t_len,
+                batch,
+                threads,
+                looped_secs,
+                looped_pool_secs,
+                batched_secs,
+                speedup: looped_secs / batched_secs,
+                speedup_vs_pool: looped_pool_secs / batched_secs,
+                max_abs_diff: max_diff,
+            };
+            table.row(vec![
+                n.to_string(),
+                t_len.to_string(),
+                batch.to_string(),
+                fmt_secs(p.looped_secs),
+                fmt_secs(p.looped_pool_secs),
+                fmt_secs(p.batched_secs),
+                sig3(p.speedup),
+                sig3(p.speedup_vs_pool),
+                sig3(batch as f64 / p.batched_secs),
+                format!("{:.1e}", p.max_abs_diff),
+            ]);
+            points.push(p);
+        }
+    }
+    (table, points)
+}
+
+/// Serialize batch-bench points as the `BENCH_batch.json` document.
+pub fn batch_bench_json(points: &[BatchBenchPoint]) -> Json {
+    json::obj(vec![
+        ("bench", json::s("batch_fused")),
+        ("dtype", json::s("f32")),
+        ("cell", json::s("indrnn")),
+        (
+            "points",
+            json::arr(
+                points
+                    .iter()
+                    .map(|p| {
+                        let steps = (p.batch * p.t_len) as f64;
+                        json::obj(vec![
+                            ("n", json::num(p.n as f64)),
+                            ("t", json::num(p.t_len as f64)),
+                            ("batch", json::num(p.batch as f64)),
+                            ("pool_threads", json::num(p.threads as f64)),
+                            ("looped_ns_per_step", json::num(p.looped_secs / steps * 1e9)),
+                            (
+                                "looped_pool_ns_per_step",
+                                json::num(p.looped_pool_secs / steps * 1e9),
+                            ),
+                            ("batched_ns_per_step", json::num(p.batched_secs / steps * 1e9)),
+                            (
+                                "seqs_per_sec_looped",
+                                json::num(p.batch as f64 / p.looped_secs),
+                            ),
+                            (
+                                "seqs_per_sec_batched",
+                                json::num(p.batch as f64 / p.batched_secs),
+                            ),
+                            ("speedup", json::num(p.speedup)),
+                            ("speedup_vs_pool", json::num(p.speedup_vs_pool)),
+                            ("max_abs_diff", json::num(p.max_abs_diff)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
 /// The sweep-scheduler entry used by `deer sweep` (coordinator demo):
 /// runs the grid through the worker pool with warm-start caching.
 pub fn run_sweep(opts: &BenchOpts, workers: usize) -> Vec<JobResult> {
@@ -680,6 +879,40 @@ mod tests {
             points[0].dense_ns_per_step,
             points[0].diag_ns_per_step
         );
+    }
+
+    #[test]
+    fn batch_bench_reports_grid_and_correctness() {
+        let (t, points) = batch_bench(&[3], &[200], 2, 2, Duration::from_millis(20));
+        assert_eq!(t.num_rows(), 1);
+        assert_eq!(points.len(), 1);
+        let p = &points[0];
+        assert_eq!((p.n, p.t_len, p.batch), (3, 200, 2));
+        assert!(p.max_abs_diff < 1e-3, "batched diverged from looped: {}", p.max_abs_diff);
+        assert!(p.looped_secs > 0.0 && p.batched_secs > 0.0);
+    }
+
+    #[test]
+    fn batch_bench_json_shape() {
+        let points = vec![BatchBenchPoint {
+            n: 16,
+            t_len: 10_000,
+            batch: 8,
+            threads: 2,
+            looped_secs: 1.0,
+            looped_pool_secs: 0.8,
+            batched_secs: 0.4,
+            speedup: 2.5,
+            speedup_vs_pool: 2.0,
+            max_abs_diff: 1e-5,
+        }];
+        let doc = batch_bench_json(&points);
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        let pts = parsed.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(pts.len(), 1);
+        assert_eq!(pts[0].get("batch").unwrap().as_usize(), Some(8));
+        assert_eq!(pts[0].get("speedup").unwrap().as_f64(), Some(2.5));
+        assert!(pts[0].get("seqs_per_sec_batched").unwrap().as_f64().unwrap() > 0.0);
     }
 
     #[test]

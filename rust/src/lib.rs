@@ -12,15 +12,18 @@
 //!   *analytic* state Jacobians and parameter VJPs.
 //! * [`scan`] — sequential and multi-threaded parallel prefix scans over the
 //!   affine elements `(A, b)` of eq. (10) in the paper, with O(n)
-//!   structure-specialized kernels for diagonal Jacobians (quasi-DEER).
+//!   structure-specialized kernels for diagonal Jacobians (quasi-DEER) and
+//!   fused batched variants over the `[B, T, n]` layout.
 //! * [`deer`] — the DEER algorithm itself: Newton fixed-point iteration for
-//!   RNNs (eq. 3/5), the single-pass backward gradient (eq. 7), the DEER-ODE
+//!   RNNs (eq. 3/5) with batched solves and per-sequence convergence
+//!   masking, the single-pass backward gradient (eq. 7), the DEER-ODE
 //!   solver (eq. 8–10) plus sequential / BPTT / RK45 baselines.
 //! * [`simulator`] — accelerator cost model (work/depth → simulated V100 /
 //!   A100 wall-clock); the testbed is a single CPU core, so paper-scale
 //!   speedups are reproduced through this calibrated model while measured
 //!   wall-clock is always reported alongside.
-//! * [`coordinator`] — the systems layer: sweep scheduler, dynamic batcher,
+//! * [`coordinator`] — the systems layer: sweep scheduler, dynamic batcher
+//!   + batched execution engine (one fused solve per flushed group),
 //!   warm-start trajectory cache (App. B.2), convergence policy, memory
 //!   accounting.
 //! * [`runtime`] — PJRT runtime that loads AOT-lowered HLO-text artifacts
@@ -47,5 +50,9 @@ pub mod metrics;
 pub mod testkit;
 
 pub use cells::{Cell, CellGrad, Elman, Gru, IndRnn, JacobianStructure, Lem, Lstm};
-pub use deer::{DeerConfig, DeerResult, JacobianMode};
+pub use coordinator::BatchExecutor;
+pub use deer::{
+    deer_rnn, deer_rnn_batch, BatchDeerResult, BatchGradResult, DeerConfig, DeerResult,
+    JacobianMode,
+};
 pub use util::scalar::Scalar;

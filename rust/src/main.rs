@@ -1,7 +1,7 @@
 //! `deer` — the Layer-3 coordinator CLI.
 //!
 //! Subcommands:
-//!   bench  --exp fig2|fig2grad|fig3|fig6|fig7|fig8|table3|table4|table5|table6|quasi|scan|all
+//!   bench  --exp fig2|fig2grad|fig3|fig6|fig7|fig8|table3|table4|table5|table6|quasi|scan|batch|all
 //!   sweep  --dims 1,2,4 --lens 1000,10000 --workers 2
 //!   train  --model worms|hnn-deer|hnn-rk4|mhgru --steps 100
 //!   info   (list artifacts)
@@ -66,6 +66,7 @@ fn run() -> Result<()> {
                  \n  deer bench --exp fig2 --dims 1,2,4 --lens 1000,10000\
                  \n  deer bench --exp quasi          Full vs DiagonalApprox Jacobians\
                  \n  deer bench --exp scan --scan-out BENCH_scan.json   INVLIN kernel microbench\
+                 \n  deer bench --exp batch --batch-out BENCH_batch.json  fused-batched vs looped dispatch\
                  \n  deer sweep --workers 2          coordinator sweep demo\
                  \n  deer train --model worms --steps 50\
                  \n  deer info                       list AOT artifacts"
@@ -175,6 +176,32 @@ fn bench(args: &Args, rec: &Recorder) -> Result<()> {
             "Quasi-DEER ablation: Full vs DiagonalApprox Jacobians (GRU, measured 1-core)",
             &exp::quasi_deer_bench(&opts),
         )?;
+    }
+    if all || which == "batch" {
+        // Batched-dispatch bench: B looped single-sequence solves vs ONE
+        // fused [B, T, n] solve (diagonal path). Grid shrinks under
+        // DEER_BENCH_FAST=1; the fast grid keeps the gated B=8, n=16,
+        // T=10k point.
+        let fast = std::env::var("DEER_BENCH_FAST").is_ok();
+        let (dims, lens, default_b) = exp::batch_bench_grid(fast);
+        let batch = args.get_parse("batch", default_b).map_err(Error::msg)?;
+        let pool = std::thread::available_parallelism()
+            .map(|v| v.get())
+            .unwrap_or(2)
+            .max(2);
+        let threads = args.get_parse("workers", pool).map_err(Error::msg)?;
+        let budget = if fast { Duration::from_millis(250) } else { opts.budget_per_cell };
+        let (t, points) = exp::batch_bench(&dims, &lens, batch, threads, budget);
+        rec.table(
+            "batch_fused",
+            &format!(
+                "Batched dispatch: B={batch} looped single-sequence solves vs one fused [B, T, n] solve (IndRNN diagonal path, pool = {threads} thread(s))"
+            ),
+            &t,
+        )?;
+        let out_path = PathBuf::from(args.get("batch-out", "BENCH_batch.json"));
+        std::fs::write(&out_path, exp::batch_bench_json(&points).to_string())?;
+        println!("batch bench points written to {}", out_path.display());
     }
     if all || which == "scan" {
         // INVLIN kernel microbench: dense vs diagonal scan. Grids shrink

@@ -83,6 +83,45 @@ impl Tensor {
         }
     }
 
+    /// Size of the leading (batch) axis; 1 for scalars.
+    pub fn batch_dim(&self) -> usize {
+        self.shape.first().copied().unwrap_or(1)
+    }
+
+    /// Elements per batch row (product of the trailing axes).
+    pub fn row_len(&self) -> usize {
+        self.shape.iter().skip(1).product()
+    }
+
+    /// View one sequence of a batched `[B, …]` tensor: the contiguous
+    /// row-major slab of batch row `b`. The `[B, T, n]` execution layout
+    /// makes this a zero-copy slice.
+    pub fn seq_f32(&self, b: usize) -> Result<&[f32]> {
+        let rows = self.batch_dim();
+        if b >= rows {
+            bail!("batch row {b} out of range (B = {rows})");
+        }
+        let row = self.row_len();
+        Ok(&self.as_f32()?[b * row..(b + 1) * row])
+    }
+
+    /// Stack B equally-shaped f32 sequences into one `[B, …]` tensor —
+    /// helper for building batched artifact inputs from per-sequence rows.
+    pub fn stack_f32(rows: &[&[f32]], row_shape: &[usize]) -> Result<Tensor> {
+        let row: usize = row_shape.iter().product();
+        let mut data = Vec::with_capacity(rows.len() * row);
+        for (i, r) in rows.iter().enumerate() {
+            if r.len() != row {
+                bail!("row {i} has {} elements, row shape wants {row}", r.len());
+            }
+            data.extend_from_slice(r);
+        }
+        let mut shape = Vec::with_capacity(row_shape.len() + 1);
+        shape.push(rows.len());
+        shape.extend_from_slice(row_shape);
+        Ok(Tensor::f32(shape, data))
+    }
+
     /// First element as f64 (for scalar losses/metrics).
     pub fn item(&self) -> Result<f64> {
         match &self.data {
@@ -159,6 +198,22 @@ mod tests {
     fn scalar_item() {
         assert_eq!(Tensor::scalar_f32(2.5).item().unwrap(), 2.5);
         assert_eq!(Tensor::scalar_i32(7).item().unwrap(), 7.0);
+    }
+
+    #[test]
+    fn batched_views_roundtrip() {
+        // stack → per-sequence views recover the original rows
+        let r0 = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let r1 = [7.0f32, 8.0, 9.0, 10.0, 11.0, 12.0];
+        let t = Tensor::stack_f32(&[&r0, &r1], &[3, 2]).unwrap();
+        assert_eq!(t.shape, vec![2, 3, 2]);
+        assert_eq!(t.batch_dim(), 2);
+        assert_eq!(t.row_len(), 6);
+        assert_eq!(t.seq_f32(0).unwrap(), &r0);
+        assert_eq!(t.seq_f32(1).unwrap(), &r1);
+        assert!(t.seq_f32(2).is_err());
+        // ragged rows are rejected
+        assert!(Tensor::stack_f32(&[&r0, &r1[..4]], &[3, 2]).is_err());
     }
 
     #[cfg(feature = "xla")]

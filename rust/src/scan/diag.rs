@@ -194,6 +194,168 @@ pub fn par_diag_scan_apply_ws<S: Scalar>(
     }
 }
 
+/// Fused batched diagonal forward scan over B independent sequences in the
+/// `[B, T, n]` layout (see the batched-layout notes in [`crate::scan`]).
+/// `active` masks sequences in place — masked slabs of `out` are neither
+/// read nor written. With B ≥ threads each worker runs the plain
+/// O(n)-per-element sequential kernel over whole sequences; with
+/// B < threads the spare lanes split inside sequences. All scheduling is
+/// keyed on the total B, never the active count, so results are
+/// bit-reproducible across masking states.
+#[allow(clippy::too_many_arguments)]
+pub fn par_diag_scan_apply_batch_ws<S: Scalar>(
+    a: &[S],
+    b: &[S],
+    y0s: &[S],
+    out: &mut [S],
+    n: usize,
+    t_len: usize,
+    batch: usize,
+    active: Option<&[bool]>,
+    threads: usize,
+    ws: &mut ScanWorkspace<S>,
+) {
+    debug_assert_eq!(a.len(), batch * t_len * n);
+    debug_assert_eq!(b.len(), batch * t_len * n);
+    debug_assert_eq!(y0s.len(), batch * n);
+    debug_assert_eq!(out.len(), batch * t_len * n);
+    let idx = crate::scan::active_indices(batch, active);
+    if idx.is_empty() || t_len == 0 {
+        return;
+    }
+    let sn = t_len * n;
+    if batch == 1 {
+        // the single-sequence case: intra-sequence three-phase scan with the
+        // caller's reusable workspace
+        par_diag_scan_apply_ws(a, b, y0s, out, n, t_len, threads, ws);
+        return;
+    }
+    // Scheduling is keyed on the TOTAL batch size (not the active count) so
+    // a sequence's accumulation order never changes as neighbours freeze —
+    // batched results stay bit-reproducible across masking states.
+    let mut slabs: Vec<Option<&mut [S]>> = out.chunks_mut(sn).map(Some).collect();
+    if threads <= 1 {
+        for &s in &idx {
+            let o = slabs[s].take().unwrap();
+            seq_diag_scan_apply(
+                &a[s * sn..(s + 1) * sn],
+                &b[s * sn..(s + 1) * sn],
+                &y0s[s * n..(s + 1) * n],
+                o,
+                n,
+                t_len,
+            );
+        }
+    } else if batch >= threads {
+        let workers = threads.min(idx.len());
+        let mut buckets: Vec<Vec<(usize, &mut [S])>> = (0..workers).map(|_| Vec::new()).collect();
+        for (k, &s) in idx.iter().enumerate() {
+            buckets[k % workers].push((s, slabs[s].take().unwrap()));
+        }
+        std::thread::scope(|scope| {
+            for bucket in buckets {
+                scope.spawn(move || {
+                    for (s, o) in bucket {
+                        seq_diag_scan_apply(
+                            &a[s * sn..(s + 1) * sn],
+                            &b[s * sn..(s + 1) * sn],
+                            &y0s[s * n..(s + 1) * n],
+                            o,
+                            n,
+                            t_len,
+                        );
+                    }
+                });
+            }
+        });
+    } else {
+        // 1 < B < threads: fixed intra-sequence split (constant divisor B
+        // keeps the decomposition masking-invariant)
+        let cps = (threads / batch).max(2);
+        std::thread::scope(|scope| {
+            for &s in &idx {
+                let o = slabs[s].take().unwrap();
+                let a_s = &a[s * sn..(s + 1) * sn];
+                let b_s = &b[s * sn..(s + 1) * sn];
+                let y0_s = &y0s[s * n..(s + 1) * n];
+                scope.spawn(move || {
+                    let mut local = ScanWorkspace::new();
+                    par_diag_scan_apply_ws(a_s, b_s, y0_s, o, n, t_len, cps, &mut local);
+                });
+            }
+        });
+    }
+}
+
+/// Fused batched diagonal dual scan (`[B, T, n]` layout; same scheduling
+/// and masking rules as [`par_diag_scan_apply_batch_ws`]).
+#[allow(clippy::too_many_arguments)]
+pub fn par_diag_scan_reverse_batch_ws<S: Scalar>(
+    a: &[S],
+    g: &[S],
+    out: &mut [S],
+    n: usize,
+    t_len: usize,
+    batch: usize,
+    active: Option<&[bool]>,
+    threads: usize,
+    ws: &mut ScanWorkspace<S>,
+) {
+    debug_assert_eq!(a.len(), batch * t_len * n);
+    debug_assert_eq!(g.len(), batch * t_len * n);
+    debug_assert_eq!(out.len(), batch * t_len * n);
+    let idx = crate::scan::active_indices(batch, active);
+    if idx.is_empty() || t_len == 0 {
+        return;
+    }
+    let sn = t_len * n;
+    if batch == 1 {
+        par_diag_scan_reverse_ws(a, g, out, n, t_len, threads, ws);
+        return;
+    }
+    let mut slabs: Vec<Option<&mut [S]>> = out.chunks_mut(sn).map(Some).collect();
+    if threads <= 1 {
+        for &s in &idx {
+            let o = slabs[s].take().unwrap();
+            seq_diag_scan_reverse(&a[s * sn..(s + 1) * sn], &g[s * sn..(s + 1) * sn], o, n, t_len);
+        }
+    } else if batch >= threads {
+        let workers = threads.min(idx.len());
+        let mut buckets: Vec<Vec<(usize, &mut [S])>> = (0..workers).map(|_| Vec::new()).collect();
+        for (k, &s) in idx.iter().enumerate() {
+            buckets[k % workers].push((s, slabs[s].take().unwrap()));
+        }
+        std::thread::scope(|scope| {
+            for bucket in buckets {
+                scope.spawn(move || {
+                    for (s, o) in bucket {
+                        seq_diag_scan_reverse(
+                            &a[s * sn..(s + 1) * sn],
+                            &g[s * sn..(s + 1) * sn],
+                            o,
+                            n,
+                            t_len,
+                        );
+                    }
+                });
+            }
+        });
+    } else {
+        let cps = (threads / batch).max(2);
+        std::thread::scope(|scope| {
+            for &s in &idx {
+                let o = slabs[s].take().unwrap();
+                let a_s = &a[s * sn..(s + 1) * sn];
+                let g_s = &g[s * sn..(s + 1) * sn];
+                scope.spawn(move || {
+                    let mut local = ScanWorkspace::new();
+                    par_diag_scan_reverse_ws(a_s, g_s, o, n, t_len, cps, &mut local);
+                });
+            }
+        });
+    }
+}
+
 /// Parallel diagonal dual scan (backward pass, eq. 7 with diagonal `A`).
 pub fn par_diag_scan_reverse<S: Scalar>(
     a: &[S],
@@ -441,6 +603,85 @@ mod tests {
         let mut lam = vec![0.0];
         seq_diag_scan_reverse(&a, &b, &mut lam, 1, 1);
         assert_eq!(lam, vec![3.0]);
+    }
+
+    /// One fused batched diagonal call == B independent sequential scans,
+    /// across scheduling regimes, and the active mask freezes sequences.
+    #[test]
+    fn batch_diag_forward_matches_per_sequence_and_masks() {
+        for &(n, t_len, batch, threads) in
+            &[(4usize, 200usize, 6usize, 2usize), (3, 150, 2, 8), (16, 64, 4, 1)]
+        {
+            let mut rng = Rng::new(3000 + (n * batch * threads) as u64);
+            let sn = t_len * n;
+            let mut a = vec![0.0f64; batch * sn];
+            let mut b = vec![0.0f64; batch * sn];
+            let mut y0s = vec![0.0f64; batch * n];
+            rng.fill_normal(&mut a, 0.6);
+            rng.fill_normal(&mut b, 1.0);
+            rng.fill_normal(&mut y0s, 1.0);
+
+            let sentinel = -555.0f64;
+            let mut active = vec![true; batch];
+            active[batch - 1] = false;
+            let mut got = vec![sentinel; batch * sn];
+            let mut ws = ScanWorkspace::new();
+            par_diag_scan_apply_batch_ws(
+                &a, &b, &y0s, &mut got, n, t_len, batch, Some(&active), threads, &mut ws,
+            );
+            for s in 0..batch {
+                let slab = &got[s * sn..(s + 1) * sn];
+                if active[s] {
+                    let mut want = vec![0.0f64; sn];
+                    seq_diag_scan_apply(
+                        &a[s * sn..(s + 1) * sn],
+                        &b[s * sn..(s + 1) * sn],
+                        &y0s[s * n..(s + 1) * n],
+                        &mut want,
+                        n,
+                        t_len,
+                    );
+                    for (x, y) in want.iter().zip(slab.iter()) {
+                        assert!((x - y).abs() < 1e-9, "B={batch} thr={threads} seq {s}");
+                    }
+                } else {
+                    assert!(slab.iter().all(|&v| v == sentinel), "masked seq {s} written");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batch_diag_reverse_matches_per_sequence() {
+        for &(n, t_len, batch, threads) in
+            &[(4usize, 180usize, 5usize, 2usize), (2, 300, 3, 8), (8, 90, 6, 1)]
+        {
+            let mut rng = Rng::new(4000 + (n * batch * threads) as u64);
+            let sn = t_len * n;
+            let mut a = vec![0.0f64; batch * sn];
+            let mut g = vec![0.0f64; batch * sn];
+            rng.fill_normal(&mut a, 0.6);
+            rng.fill_normal(&mut g, 1.0);
+
+            let mut want = vec![0.0f64; batch * sn];
+            for s in 0..batch {
+                seq_diag_scan_reverse(
+                    &a[s * sn..(s + 1) * sn],
+                    &g[s * sn..(s + 1) * sn],
+                    &mut want[s * sn..(s + 1) * sn],
+                    n,
+                    t_len,
+                );
+            }
+            let mut got = vec![0.0f64; batch * sn];
+            let mut ws = ScanWorkspace::new();
+            par_diag_scan_reverse_batch_ws(
+                &a, &g, &mut got, n, t_len, batch, None, threads, &mut ws,
+            );
+            for (x, y) in want.iter().zip(got.iter()) {
+                assert!((x - y).abs() < 1e-9, "B={batch} thr={threads}: {x} vs {y}");
+            }
+        }
     }
 
     #[test]

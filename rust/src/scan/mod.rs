@@ -41,19 +41,102 @@
 //! All parallel kernels take an optional reusable [`ScanWorkspace`] (the
 //! `*_ws` entry points) so the Newton hot loop performs no per-iteration
 //! scratch allocation.
+//!
+//! # Batched `[B, T, n…]` layout
+//!
+//! Every kernel has a fused batched variant (`*_batch` / `*_batch_ws`)
+//! operating on B independent sequences packed sequence-major:
+//! `a = [B, T, jac]`, `b = [B, T, n]`, `y0s = [B, n]`, `out = [B, T, n]`
+//! (sequence `s` owns the contiguous slab `s·T·len .. (s+1)·T·len`). The
+//! recurrences never cross sequence boundaries — the batch axis is
+//! embarrassingly parallel — so one call schedules the whole B×T element
+//! grid over the thread pool instead of paying per-sequence dispatch:
+//!
+//! * **B ≥ threads** (the common serving shape): workers take whole
+//!   sequences round-robin and run the plain *sequential* kernel on each.
+//!   Cross-sequence parallelism does zero redundant work — unlike the
+//!   intra-sequence three-phase scan, whose compose phase re-does the
+//!   apply-phase multiplies (~2–3× element work) — and the per-call spawn/
+//!   join cost is paid once per batch rather than once per sequence.
+//! * **B < threads**: the leftover workers split inside sequences — each
+//!   sequence runs its own three-phase chunked scan with
+//!   `threads / B_active` lanes.
+//!
+//! # Convergence masking
+//!
+//! The batched entry points accept an optional `active: &[bool]` mask
+//! (length B). Masked-out sequences are never read or written — the DEER
+//! driver uses this to freeze converged sequences in place while stragglers
+//! keep iterating, so a batch costs `Σ_b iters_b`, not `B · max_b iters_b`,
+//! element updates (see `crate::deer::newton::deer_rnn_batch`).
 
 pub mod diag;
 pub mod par;
 pub mod seq;
 
 pub use diag::{
-    par_diag_scan_apply, par_diag_scan_apply_ws, par_diag_scan_reverse, par_diag_scan_reverse_ws,
+    par_diag_scan_apply, par_diag_scan_apply_ws, par_diag_scan_apply_batch_ws,
+    par_diag_scan_reverse, par_diag_scan_reverse_ws, par_diag_scan_reverse_batch_ws,
     seq_diag_scan_apply, seq_diag_scan_reverse,
 };
-pub use par::{par_scan_apply, par_scan_apply_ws, par_scan_reverse, par_scan_reverse_ws};
+pub use par::{
+    par_scan_apply, par_scan_apply_ws, par_scan_apply_batch_ws, par_scan_reverse,
+    par_scan_reverse_ws, par_scan_reverse_batch_ws,
+};
 pub use seq::{seq_scan_apply, seq_scan_reverse};
 
 use crate::util::scalar::Scalar;
+
+/// Indices of the sequences a batched kernel should touch: every sequence,
+/// or only those flagged in an `active` mask (the convergence-masking hook).
+pub(crate) fn active_indices(batch: usize, active: Option<&[bool]>) -> Vec<usize> {
+    match active {
+        None => (0..batch).collect(),
+        Some(mask) => {
+            debug_assert_eq!(mask.len(), batch, "active mask length");
+            (0..batch).filter(|&s| mask[s]).collect()
+        }
+    }
+}
+
+/// Decompose the active part of the `[B, T]` element grid into per-sequence
+/// contiguous time ranges `(seq, lo, hi)` so ~`threads` workers stay busy:
+/// each active sequence gets `max(1, threads / batch)` chunks (1 when the
+/// sequence is too short to amortize chunking). Chunks never span sequences
+/// — the scan monoid does not compose across the batch axis.
+///
+/// The chunks-per-sequence divisor is the **total** batch size, not the
+/// active count: the decomposition (hence floating-point accumulation
+/// order) of a sequence must stay identical across Newton sweeps even as
+/// its neighbours freeze, so batched results are bit-reproducible and
+/// independent of masking state.
+pub(crate) fn plan_batch_chunks(
+    t_len: usize,
+    active_seqs: &[usize],
+    threads: usize,
+    batch: usize,
+) -> Vec<(usize, usize, usize)> {
+    let n_active = active_seqs.len();
+    if n_active == 0 || t_len == 0 {
+        return Vec::new();
+    }
+    let mut cps = if threads <= 1 { 1 } else { (threads / batch.max(1)).max(1) };
+    if t_len < 4 * cps {
+        cps = 1;
+    }
+    let chunk_len = t_len.div_ceil(cps);
+    let mut out = Vec::with_capacity(n_active * cps);
+    for &s in active_seqs {
+        for c in 0..cps {
+            let lo = (c * chunk_len).min(t_len);
+            let hi = ((c + 1) * chunk_len).min(t_len);
+            if lo < hi {
+                out.push((s, lo, hi));
+            }
+        }
+    }
+    out
+}
 
 /// Reusable scratch buffers for the chunked parallel scans.
 ///
@@ -294,5 +377,70 @@ mod tests {
         assert_eq!(flops_combine_diag(16), 48);
         assert!(flops_combine(16) / flops_combine_diag(16) > 100);
         assert_eq!(flops_apply_diag(8, 10), 160);
+    }
+
+    #[test]
+    fn active_indices_respects_mask() {
+        assert_eq!(active_indices(3, None), vec![0, 1, 2]);
+        assert_eq!(active_indices(4, Some(&[true, false, false, true])), vec![0, 3]);
+        assert!(active_indices(2, Some(&[false, false])).is_empty());
+    }
+
+    #[test]
+    fn batch_chunks_cover_grid_exactly_once() {
+        for &(t_len, n_active, threads) in
+            &[(100usize, 1usize, 4usize), (100, 8, 2), (257, 3, 8), (10, 4, 8), (5, 2, 1)]
+        {
+            let seqs: Vec<usize> = (0..n_active).collect();
+            let chunks = plan_batch_chunks(t_len, &seqs, threads, n_active);
+            // each sequence's chunks tile [0, t_len) contiguously
+            for &s in &seqs {
+                let mut covered = 0;
+                for &(cs, lo, hi) in &chunks {
+                    if cs == s {
+                        assert_eq!(lo, covered, "non-contiguous chunk for seq {s}");
+                        assert!(hi > lo);
+                        covered = hi;
+                    }
+                }
+                assert_eq!(covered, t_len, "seq {s} not fully covered");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_chunks_single_seq_matches_legacy_chunking() {
+        // B=1 must reproduce the single-sequence planner: `threads` chunks of
+        // ceil(T/threads), collapsing to one chunk when T < 4·threads.
+        let chunks = plan_batch_chunks(1000, &[0], 4, 1);
+        assert_eq!(chunks.len(), 4);
+        assert_eq!(chunks[0], (0, 0, 250));
+        assert_eq!(chunks[3], (0, 750, 1000));
+        let short = plan_batch_chunks(10, &[0], 4, 1);
+        assert_eq!(short, vec![(0, 0, 10)]);
+    }
+
+    #[test]
+    fn batch_chunks_many_seqs_one_chunk_each() {
+        // B ≥ threads: whole-sequence granularity (no intra-seq splitting).
+        let seqs: Vec<usize> = (0..8).collect();
+        let chunks = plan_batch_chunks(10_000, &seqs, 2, 8);
+        assert_eq!(chunks.len(), 8);
+        assert!(chunks.iter().all(|&(_, lo, hi)| lo == 0 && hi == 10_000));
+    }
+
+    #[test]
+    fn batch_chunks_invariant_to_masking_state() {
+        // The per-sequence decomposition must not change when neighbours
+        // freeze: cps is keyed on the total batch, not the active count.
+        let full: Vec<usize> = (0..4).collect();
+        let all = plan_batch_chunks(1000, &full, 8, 4);
+        let masked = plan_batch_chunks(1000, &[2], 8, 4);
+        let seq2_full: Vec<_> = all.iter().filter(|&&(s, _, _)| s == 2).collect();
+        let seq2_masked: Vec<_> = masked.iter().collect();
+        assert_eq!(seq2_full.len(), seq2_masked.len());
+        for (a, b) in seq2_full.iter().zip(seq2_masked.iter()) {
+            assert_eq!(a, b, "masking changed a sequence's chunk decomposition");
+        }
     }
 }

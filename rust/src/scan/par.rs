@@ -126,6 +126,175 @@ pub fn par_scan_apply_ws<S: Scalar>(
     }
 }
 
+/// Fused batched forward scan over B independent sequences in the
+/// `[B, T, n²]` / `[B, T, n]` layout (see the batched-layout notes in
+/// [`crate::scan`]): one call schedules the whole B×T element grid across
+/// `threads` workers. `active` (length B) masks sequences in place —
+/// masked-out slabs of `out` are neither read nor written.
+///
+/// Scheduling: with B ≥ threads each worker runs the plain sequential
+/// kernel over whole sequences (no redundant compose work); with
+/// B < threads the spare lanes split inside sequences via the three-phase
+/// chunked scan. All scheduling is keyed on the total B, never the active
+/// count, so results are bit-reproducible across masking states.
+#[allow(clippy::too_many_arguments)]
+pub fn par_scan_apply_batch_ws<S: Scalar>(
+    a: &[S],
+    b: &[S],
+    y0s: &[S],
+    out: &mut [S],
+    n: usize,
+    t_len: usize,
+    batch: usize,
+    active: Option<&[bool]>,
+    threads: usize,
+    ws: &mut ScanWorkspace<S>,
+) {
+    let nn = n * n;
+    debug_assert_eq!(a.len(), batch * t_len * nn);
+    debug_assert_eq!(b.len(), batch * t_len * n);
+    debug_assert_eq!(y0s.len(), batch * n);
+    debug_assert_eq!(out.len(), batch * t_len * n);
+    let idx = super::active_indices(batch, active);
+    if idx.is_empty() || t_len == 0 {
+        return;
+    }
+    let sa = t_len * nn;
+    let sb = t_len * n;
+    if batch == 1 {
+        // the single-sequence case: intra-sequence three-phase scan with the
+        // caller's reusable workspace
+        par_scan_apply_ws(a, b, y0s, out, n, t_len, threads, ws);
+        return;
+    }
+    // Scheduling is keyed on the TOTAL batch size (not the active count) so
+    // a sequence's accumulation order never changes as neighbours freeze —
+    // batched results stay bit-reproducible across masking states.
+    let mut slabs: Vec<Option<&mut [S]>> = out.chunks_mut(sb).map(Some).collect();
+    if threads <= 1 {
+        for &s in &idx {
+            let o = slabs[s].take().unwrap();
+            seq_scan_apply(
+                &a[s * sa..(s + 1) * sa],
+                &b[s * sb..(s + 1) * sb],
+                &y0s[s * n..(s + 1) * n],
+                o,
+                n,
+                t_len,
+            );
+        }
+    } else if batch >= threads {
+        let workers = threads.min(idx.len());
+        let mut buckets: Vec<Vec<(usize, &mut [S])>> = (0..workers).map(|_| Vec::new()).collect();
+        for (k, &s) in idx.iter().enumerate() {
+            buckets[k % workers].push((s, slabs[s].take().unwrap()));
+        }
+        std::thread::scope(|scope| {
+            for bucket in buckets {
+                scope.spawn(move || {
+                    for (s, o) in bucket {
+                        seq_scan_apply(
+                            &a[s * sa..(s + 1) * sa],
+                            &b[s * sb..(s + 1) * sb],
+                            &y0s[s * n..(s + 1) * n],
+                            o,
+                            n,
+                            t_len,
+                        );
+                    }
+                });
+            }
+        });
+    } else {
+        // 1 < B < threads: fixed intra-sequence split (constant divisor B
+        // keeps the decomposition masking-invariant)
+        let cps = (threads / batch).max(2);
+        std::thread::scope(|scope| {
+            for &s in &idx {
+                let o = slabs[s].take().unwrap();
+                let a_s = &a[s * sa..(s + 1) * sa];
+                let b_s = &b[s * sb..(s + 1) * sb];
+                let y0_s = &y0s[s * n..(s + 1) * n];
+                scope.spawn(move || {
+                    let mut local = ScanWorkspace::new();
+                    par_scan_apply_ws(a_s, b_s, y0_s, o, n, t_len, cps, &mut local);
+                });
+            }
+        });
+    }
+}
+
+/// Fused batched dual scan (`[B, T, n…]` layout; same scheduling and masking
+/// rules as [`par_scan_apply_batch_ws`]).
+#[allow(clippy::too_many_arguments)]
+pub fn par_scan_reverse_batch_ws<S: Scalar>(
+    a: &[S],
+    g: &[S],
+    out: &mut [S],
+    n: usize,
+    t_len: usize,
+    batch: usize,
+    active: Option<&[bool]>,
+    threads: usize,
+    ws: &mut ScanWorkspace<S>,
+) {
+    let nn = n * n;
+    debug_assert_eq!(a.len(), batch * t_len * nn);
+    debug_assert_eq!(g.len(), batch * t_len * n);
+    debug_assert_eq!(out.len(), batch * t_len * n);
+    let idx = super::active_indices(batch, active);
+    if idx.is_empty() || t_len == 0 {
+        return;
+    }
+    let sa = t_len * nn;
+    let sb = t_len * n;
+    if batch == 1 {
+        par_scan_reverse_ws(a, g, out, n, t_len, threads, ws);
+        return;
+    }
+    let mut slabs: Vec<Option<&mut [S]>> = out.chunks_mut(sb).map(Some).collect();
+    if threads <= 1 {
+        for &s in &idx {
+            let o = slabs[s].take().unwrap();
+            seq_scan_reverse(&a[s * sa..(s + 1) * sa], &g[s * sb..(s + 1) * sb], o, n, t_len);
+        }
+    } else if batch >= threads {
+        let workers = threads.min(idx.len());
+        let mut buckets: Vec<Vec<(usize, &mut [S])>> = (0..workers).map(|_| Vec::new()).collect();
+        for (k, &s) in idx.iter().enumerate() {
+            buckets[k % workers].push((s, slabs[s].take().unwrap()));
+        }
+        std::thread::scope(|scope| {
+            for bucket in buckets {
+                scope.spawn(move || {
+                    for (s, o) in bucket {
+                        seq_scan_reverse(
+                            &a[s * sa..(s + 1) * sa],
+                            &g[s * sb..(s + 1) * sb],
+                            o,
+                            n,
+                            t_len,
+                        );
+                    }
+                });
+            }
+        });
+    } else {
+        let cps = (threads / batch).max(2);
+        std::thread::scope(|scope| {
+            for &s in &idx {
+                let o = slabs[s].take().unwrap();
+                let a_s = &a[s * sa..(s + 1) * sa];
+                let g_s = &g[s * sb..(s + 1) * sb];
+                scope.spawn(move || {
+                    let mut local = ScanWorkspace::new();
+                    par_scan_reverse_ws(a_s, g_s, o, n, t_len, cps, &mut local);
+                });
+            }
+        });
+    }
+}
+
 /// Parallel dual scan `λ_i = g_i + A_{i+1}ᵀ λ_{i+1}` (backward pass, eq. 7).
 ///
 /// Same three-phase structure run right-to-left with transposed matrices.
@@ -337,6 +506,119 @@ mod tests {
         par_scan_apply(&a, &b, &y0, &mut out_p, 3, 101, 7);
         for (x, y) in out_s.iter().zip(out_p.iter()) {
             assert!((x - y).abs() < 1e-9);
+        }
+    }
+
+    /// One fused batched call must equal B independent sequential scans,
+    /// for every scheduling regime (B ≥ threads, B < threads, threads ≤ 1).
+    #[test]
+    fn batch_forward_matches_per_sequence() {
+        for &(n, t_len, batch, threads) in
+            &[(3usize, 120usize, 5usize, 2usize), (2, 300, 2, 8), (4, 64, 3, 1), (1, 200, 8, 4)]
+        {
+            let mut rng = Rng::new(500 + (n * batch * threads) as u64);
+            let mut a = vec![0.0f64; batch * t_len * n * n];
+            let mut b = vec![0.0f64; batch * t_len * n];
+            let mut y0s = vec![0.0f64; batch * n];
+            rng.fill_normal(&mut a, 0.4);
+            rng.fill_normal(&mut b, 1.0);
+            rng.fill_normal(&mut y0s, 1.0);
+
+            let mut want = vec![0.0f64; batch * t_len * n];
+            for s in 0..batch {
+                seq_scan_apply(
+                    &a[s * t_len * n * n..(s + 1) * t_len * n * n],
+                    &b[s * t_len * n..(s + 1) * t_len * n],
+                    &y0s[s * n..(s + 1) * n],
+                    &mut want[s * t_len * n..(s + 1) * t_len * n],
+                    n,
+                    t_len,
+                );
+            }
+            let mut got = vec![0.0f64; batch * t_len * n];
+            let mut ws = ScanWorkspace::new();
+            par_scan_apply_batch_ws(
+                &a, &b, &y0s, &mut got, n, t_len, batch, None, threads, &mut ws,
+            );
+            for (i, (x, y)) in want.iter().zip(got.iter()).enumerate() {
+                assert!(
+                    (x - y).abs() < 1e-9,
+                    "n={n} T={t_len} B={batch} thr={threads} i={i}: {x} vs {y}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batch_reverse_matches_per_sequence() {
+        for &(n, t_len, batch, threads) in
+            &[(3usize, 90usize, 4usize, 2usize), (2, 257, 2, 6), (4, 70, 5, 1)]
+        {
+            let mut rng = Rng::new(700 + (n * batch * threads) as u64);
+            let mut a = vec![0.0f64; batch * t_len * n * n];
+            let mut g = vec![0.0f64; batch * t_len * n];
+            rng.fill_normal(&mut a, 0.4);
+            rng.fill_normal(&mut g, 1.0);
+
+            let mut want = vec![0.0f64; batch * t_len * n];
+            for s in 0..batch {
+                seq_scan_reverse(
+                    &a[s * t_len * n * n..(s + 1) * t_len * n * n],
+                    &g[s * t_len * n..(s + 1) * t_len * n],
+                    &mut want[s * t_len * n..(s + 1) * t_len * n],
+                    n,
+                    t_len,
+                );
+            }
+            let mut got = vec![0.0f64; batch * t_len * n];
+            let mut ws = ScanWorkspace::new();
+            par_scan_reverse_batch_ws(&a, &g, &mut got, n, t_len, batch, None, threads, &mut ws);
+            for (x, y) in want.iter().zip(got.iter()) {
+                assert!((x - y).abs() < 1e-9, "B={batch} thr={threads}: {x} vs {y}");
+            }
+        }
+    }
+
+    /// Masked-out sequences must be left untouched (the convergence-freeze
+    /// contract) while active ones still compute correctly.
+    #[test]
+    fn batch_mask_freezes_inactive_sequences() {
+        let (n, t_len, batch) = (2usize, 80usize, 4usize);
+        let mut rng = Rng::new(901);
+        let mut a = vec![0.0f64; batch * t_len * n * n];
+        let mut b = vec![0.0f64; batch * t_len * n];
+        let mut y0s = vec![0.0f64; batch * n];
+        rng.fill_normal(&mut a, 0.4);
+        rng.fill_normal(&mut b, 1.0);
+        rng.fill_normal(&mut y0s, 1.0);
+
+        let sentinel = -777.0f64;
+        for threads in [1usize, 3] {
+            let mut got = vec![sentinel; batch * t_len * n];
+            let active = [true, false, true, false];
+            let mut ws = ScanWorkspace::new();
+            par_scan_apply_batch_ws(
+                &a, &b, &y0s, &mut got, n, t_len, batch, Some(&active), threads, &mut ws,
+            );
+            for s in 0..batch {
+                let slab = &got[s * t_len * n..(s + 1) * t_len * n];
+                if active[s] {
+                    let mut want = vec![0.0f64; t_len * n];
+                    seq_scan_apply(
+                        &a[s * t_len * n * n..(s + 1) * t_len * n * n],
+                        &b[s * t_len * n..(s + 1) * t_len * n],
+                        &y0s[s * n..(s + 1) * n],
+                        &mut want,
+                        n,
+                        t_len,
+                    );
+                    for (x, y) in want.iter().zip(slab.iter()) {
+                        assert!((x - y).abs() < 1e-9);
+                    }
+                } else {
+                    assert!(slab.iter().all(|&v| v == sentinel), "masked seq {s} written");
+                }
+            }
         }
     }
 

@@ -178,6 +178,30 @@ pub fn sim_deer_forward_structured<S: Scalar, C: Cell<S>>(
     }
 }
 
+/// Simulated time of B **looped** single-sequence DEER solves — the
+/// status-quo coordinator dispatch before the `[B, T, n]` refactor: each
+/// sequence pays its own kernel launches with only T·n-scale parallelism
+/// per launch, so the device never amortizes the batch axis. Contrast with
+/// [`sim_deer_forward_structured`] at the same `batch`, which models the
+/// fused batched dispatch (B×T-element kernels, one launch sequence).
+/// `deer bench --exp batch` is the measured counterpart on real cores.
+pub fn sim_deer_forward_looped_structured<S: Scalar, C: Cell<S>>(
+    dev: &Device,
+    cell: &C,
+    batch: usize,
+    t_len: usize,
+    iters: usize,
+    structure: JacobianStructure,
+) -> SimBreakdown {
+    let one = sim_deer_forward_structured(dev, cell, 1, t_len, iters, structure);
+    SimBreakdown {
+        funceval: one.funceval * batch as f64,
+        gtmult: one.gtmult * batch as f64,
+        invlin: one.invlin * batch as f64,
+        oom: one.oom,
+    }
+}
+
 /// Simulated DEER forward+gradient: forward (k iterations) + ONE dual scan +
 /// parallel parameter VJP (eq. 7).
 pub fn sim_deer_fwd_grad<S: Scalar, C: Cell<S>>(
@@ -320,6 +344,36 @@ mod tests {
             "dense INVLIN {} vs diag {}",
             dense.invlin,
             diag.invlin
+        );
+    }
+
+    /// Fused batched dispatch beats looped single-sequence dispatch on the
+    /// device model: one launch sequence over B×T-wide kernels amortizes
+    /// both the per-launch overhead and the lane under-utilization that B
+    /// separate solves pay individually.
+    #[test]
+    fn fused_batched_beats_looped_dispatch() {
+        let dev = v100();
+        let c = gru(16);
+        for structure in [JacobianStructure::Dense, JacobianStructure::Diagonal] {
+            let fused = sim_deer_forward_structured(&dev, &c, 8, 10_000, 10, structure);
+            let looped = sim_deer_forward_looped_structured(&dev, &c, 8, 10_000, 10, structure);
+            assert!(
+                fused.total() < looped.total(),
+                "{structure:?}: fused {} vs looped {}",
+                fused.total(),
+                looped.total()
+            );
+        }
+        // the diagonal path's small per-element work makes the amortization
+        // matter most: there the fused win must exceed 2×
+        let fused = sim_deer_forward_structured(&dev, &c, 8, 10_000, 10, JacobianStructure::Diagonal);
+        let looped =
+            sim_deer_forward_looped_structured(&dev, &c, 8, 10_000, 10, JacobianStructure::Diagonal);
+        assert!(
+            looped.total() / fused.total() >= 2.0,
+            "diag amortization only {:.2}×",
+            looped.total() / fused.total()
         );
     }
 

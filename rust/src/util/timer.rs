@@ -85,7 +85,9 @@ pub fn fmt_secs(s: f64) -> String {
     }
 }
 
-/// Simple phase stopwatch for profiling (Table 5: FUNCEVAL / GTMULT / INVLIN).
+/// Simple phase stopwatch for profiling (Table 5 phases: FUNCEVAL — which
+/// since the batched refactor includes the fused GTMULT rhs build — and
+/// INVLIN; the backward pass adds JACOBIAN / DUAL_SCAN / PARAM_VJP).
 #[derive(Debug, Default, Clone)]
 pub struct PhaseProfile {
     entries: Vec<(String, f64)>,

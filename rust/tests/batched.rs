@@ -1,0 +1,176 @@
+//! Batched `[B, T, n]` execution: batched-vs-looped equivalence for every
+//! cell type (exact Newton and quasi-DEER) and per-sequence convergence
+//! masking.
+//!
+//! Equivalence contract: at threads = 1 — and at any pool size with
+//! B ≥ threads, where the batched scheduler hands whole sequences to
+//! workers — a batch of B sequences must **bitwise**-match B independent
+//! single-sequence solves. With threads > B the spare lanes split inside
+//! sequences (different accumulation order), where results must agree to
+//! scan-roundoff tolerance.
+
+use deer::cells::{Cell, CellGrad, Elman, Gru, IndRnn, Lem, Lstm};
+use deer::deer::newton::{deer_rnn, deer_rnn_batch, DeerConfig, JacobianMode};
+use deer::deer::seq::seq_rnn;
+use deer::util::rng::Rng;
+
+const B: usize = 3;
+
+fn check_batched_equivalence<C: Cell<f64>>(name: &str, cell: &C, t_len: usize, mode: JacobianMode) {
+    let n = cell.state_dim();
+    let m = cell.input_dim();
+    let mut rng = Rng::new(0xBEEF ^ (n as u64) << 16 ^ t_len as u64);
+    let mut xs = vec![0.0f64; B * t_len * m];
+    rng.fill_normal(&mut xs, 1.0);
+    let h0s = vec![0.0f64; B * n];
+    let cfg = DeerConfig::<f64> {
+        jacobian_mode: mode,
+        max_iter: 500,
+        ..Default::default()
+    };
+
+    // threads=1: bitwise equality against B independent solves, including
+    // per-sequence iteration counts and convergence flags.
+    let batched = deer_rnn_batch(cell, &h0s, &xs, None, &cfg, B);
+    for s in 0..B {
+        let solo = deer_rnn(
+            cell,
+            &h0s[s * n..(s + 1) * n],
+            &xs[s * t_len * m..(s + 1) * t_len * m],
+            None,
+            &cfg,
+        );
+        assert!(
+            solo.converged && batched.converged[s],
+            "{name} seq {s} did not converge: {:?}",
+            batched.err_traces[s]
+        );
+        assert_eq!(batched.iterations[s], solo.iterations, "{name} seq {s} iterations");
+        assert_eq!(
+            &batched.ys[s * t_len * n..(s + 1) * t_len * n],
+            &solo.ys[..],
+            "{name} seq {s}: batched != looped bitwise"
+        );
+        // and both equal the exact sequential trajectory to tolerance
+        let seq = seq_rnn(cell, &h0s[s * n..(s + 1) * n], &xs[s * t_len * m..(s + 1) * t_len * m]);
+        let d = deer::linalg::max_abs_diff(&seq, &solo.ys);
+        assert!(d < 1e-5, "{name} seq {s}: DEER vs sequential {d}");
+    }
+
+    // B ≥ threads: whole-sequence scheduling keeps the result bitwise
+    // identical at any pool size.
+    for threads in [2usize, 3] {
+        let bt = deer_rnn_batch(cell, &h0s, &xs, None, &DeerConfig { threads, ..cfg.clone() }, B);
+        assert_eq!(bt.ys, batched.ys, "{name}: pool of {threads} changed batched numerics");
+        assert_eq!(bt.iterations, batched.iterations, "{name}: pool of {threads}");
+    }
+
+    // threads > B: intra-sequence chunked scans reorder the accumulation,
+    // and a knife-edge tolerance stop may shift the sweep count by one —
+    // agreement to solver-tolerance level, not bitwise.
+    let b8 = deer_rnn_batch(cell, &h0s, &xs, None, &DeerConfig { threads: 8, ..cfg.clone() }, B);
+    for (a, c) in b8.ys.iter().zip(batched.ys.iter()) {
+        assert!((a - c).abs() < 1e-5, "{name}: oversubscribed pool drifted: {a} vs {c}");
+    }
+}
+
+#[test]
+fn batched_matches_looped_gru() {
+    let mut rng = Rng::new(11);
+    let cell: Gru<f64> = Gru::new(4, 3, &mut rng);
+    check_batched_equivalence("gru", &cell, 400, JacobianMode::Full);
+    check_batched_equivalence("gru-quasi", &cell, 400, JacobianMode::DiagonalApprox);
+}
+
+#[test]
+fn batched_matches_looped_lstm() {
+    let mut rng = Rng::new(12);
+    let cell: Lstm<f64> = Lstm::new(3, 3, &mut rng);
+    check_batched_equivalence("lstm", &cell, 300, JacobianMode::Full);
+    check_batched_equivalence("lstm-quasi", &cell, 300, JacobianMode::DiagonalApprox);
+}
+
+#[test]
+fn batched_matches_looped_lem() {
+    let mut rng = Rng::new(13);
+    let cell: Lem<f64> = Lem::new(3, 3, &mut rng);
+    check_batched_equivalence("lem", &cell, 300, JacobianMode::Full);
+    check_batched_equivalence("lem-quasi", &cell, 300, JacobianMode::DiagonalApprox);
+}
+
+#[test]
+fn batched_matches_looped_elman() {
+    let mut rng = Rng::new(14);
+    let mut cell: Elman<f64> = Elman::new(4, 3, &mut rng);
+    check_batched_equivalence("elman", &cell, 400, JacobianMode::Full);
+    // quasi-DEER on Elman sits near the contraction boundary at
+    // uniform(-1/√n) init — damp the weights to keep the linear rate < 1
+    for p in cell.params_mut().iter_mut() {
+        *p *= 0.5;
+    }
+    check_batched_equivalence("elman-quasi", &cell, 400, JacobianMode::DiagonalApprox);
+}
+
+#[test]
+fn batched_matches_looped_indrnn() {
+    let mut rng = Rng::new(15);
+    let cell: IndRnn<f64> = IndRnn::new(5, 3, &mut rng);
+    // natively diagonal: Full and DiagonalApprox are the same (packed) path
+    check_batched_equivalence("indrnn", &cell, 500, JacobianMode::Full);
+    check_batched_equivalence("indrnn-quasi", &cell, 500, JacobianMode::DiagonalApprox);
+}
+
+/// Per-sequence convergence masking, end to end: a batch mixing an easy
+/// (warm-started, converges immediately) and a straggler sequence (capped
+/// below its convergence point — the near-divergent case) must report
+/// per-sequence iteration counts and flags, and neither sequence may
+/// perturb the other.
+#[test]
+fn masking_mixes_easy_and_straggler_sequences() {
+    let (n, m, t_len, b) = (4usize, 2usize, 600usize, 2usize);
+    let mut rng = Rng::new(21);
+    let cell: Gru<f64> = Gru::new(n, m, &mut rng);
+    let mut xs = vec![0.0f64; b * t_len * m];
+    rng.fill_normal(&mut xs, 1.0);
+    let h0s = vec![0.0f64; b * n];
+
+    // solve both sequences solo, cold
+    let solo0 = deer_rnn(&cell, &h0s[..n], &xs[..t_len * m], None, &DeerConfig::default());
+    let solo1 = deer_rnn(&cell, &h0s[n..], &xs[t_len * m..], None, &DeerConfig::default());
+    assert!(solo0.converged && solo1.converged);
+    assert!(solo1.iterations > 3, "straggler must need several sweeps");
+
+    // batch: seq 0 warm-started at its solution, seq 1 cold, iteration cap
+    // one below the straggler's requirement
+    let cap = solo1.iterations - 1;
+    let cfg = DeerConfig::<f64> { max_iter: cap, ..Default::default() };
+    let mut guess = vec![0.0f64; b * t_len * n];
+    guess[..t_len * n].copy_from_slice(&solo0.ys);
+    let res = deer_rnn_batch(&cell, &h0s, &xs, Some(&guess), &cfg, b);
+
+    // per-sequence outcomes
+    assert!(res.converged[0], "warm sequence must converge");
+    assert!(!res.converged[1], "straggler under the cap must not converge");
+    assert!(res.iterations[0] <= 2, "warm verify took {}", res.iterations[0]);
+    assert_eq!(res.iterations[1], cap, "straggler runs to the cap");
+    assert_eq!(res.sweeps, cap);
+
+    // no cross-contamination, bitwise: the frozen warm sequence equals its
+    // solo warm solve; the straggler equals its solo capped solve.
+    let warm0 = deer_rnn(&cell, &h0s[..n], &xs[..t_len * m], Some(&solo0.ys), &cfg);
+    assert_eq!(&res.ys[..t_len * n], &warm0.ys[..], "straggler perturbed the converged seq");
+    let capped1 = deer_rnn(&cell, &h0s[n..], &xs[t_len * m..], None, &cfg);
+    assert_eq!(&res.ys[t_len * n..], &capped1.ys[..], "warm seq perturbed the straggler");
+
+    // raising the cap lets the straggler finish while the warm sequence's
+    // count stays put — Σ iterations, not B·max, is the work done
+    let full = deer_rnn_batch(&cell, &h0s, &xs, Some(&guess), &DeerConfig::default(), b);
+    assert!(full.converged[1]);
+    assert_eq!(full.iterations[1], solo1.iterations);
+    assert!(
+        full.iterations[0] + full.iterations[1] < 2 * full.sweeps,
+        "masking must save work vs lockstep: {:?} over {} sweeps",
+        full.iterations,
+        full.sweeps
+    );
+}

@@ -1,0 +1,75 @@
+#!/usr/bin/env bash
+# Perf-trajectory gate (ROADMAP "Perf trajectory" item): regenerate the
+# BENCH_*.json documents with the fast grids and diff them against the
+# committed previous run at the repo root, failing on >20% (configurable)
+# ns/step regressions on any shared {n, T} point.
+#
+# Usage: scripts/bench_compare.sh [threshold-pct]
+#
+# First run (no committed baseline): the fresh JSON is copied to the repo
+# root and the gate passes with a notice — commit the file to start the
+# trajectory.
+set -euo pipefail
+
+ROOT="$(cd "$(dirname "$0")/.." && pwd)"
+THRESHOLD="${1:-20}"
+FRESH_DIR="$(mktemp -d)"
+trap 'rm -rf "$FRESH_DIR"' EXIT
+
+cd "$ROOT/rust"
+DEER_BENCH_FAST=1 cargo run --release --bin deer -- \
+    bench --exp scan --scan-out "$FRESH_DIR/BENCH_scan.json" --results results/compare
+DEER_BENCH_FAST=1 cargo run --release --bin deer -- \
+    bench --exp batch --batch-out "$FRESH_DIR/BENCH_batch.json" --results results/compare
+
+python3 - "$ROOT" "$FRESH_DIR" "$THRESHOLD" <<'EOF'
+import json, os, sys
+
+root, fresh_dir, threshold = sys.argv[1], sys.argv[2], float(sys.argv[3])
+# metric fields treated as ns/step costs (lower is better)
+COST_FIELDS = (
+    "dense_ns_per_step", "diag_ns_per_step",
+    "looped_ns_per_step", "looped_pool_ns_per_step", "batched_ns_per_step",
+)
+
+failures, compared = [], 0
+for name in ("BENCH_scan.json", "BENCH_batch.json"):
+    base_path = os.path.join(root, name)
+    fresh_path = os.path.join(fresh_dir, name)
+    if not os.path.exists(fresh_path):
+        failures.append(f"{name}: fresh bench run produced no file")
+        continue
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    if not os.path.exists(base_path):
+        print(f"{name}: no committed baseline — seeding it (commit to track)")
+        with open(base_path, "w") as f:
+            json.dump(fresh, f, indent=1)
+        continue
+    with open(base_path) as f:
+        base = json.load(f)
+    base_pts = {(p["n"], p["t"]): p for p in base.get("points", [])}
+    for p in fresh.get("points", []):
+        key = (p["n"], p["t"])
+        b = base_pts.get(key)
+        if b is None:
+            continue
+        for field in COST_FIELDS:
+            if field in p and field in b and b[field] > 0:
+                delta = (p[field] - b[field]) / b[field] * 100.0
+                compared += 1
+                tag = "REGRESSION" if delta > threshold else "ok"
+                print(f"{name} n={key[0]} T={key[1]} {field}: "
+                      f"{b[field]:.1f} -> {p[field]:.1f} ns/step ({delta:+.1f}%) {tag}")
+                if delta > threshold:
+                    failures.append(
+                        f"{name} n={key[0]} T={key[1]} {field}: +{delta:.1f}% > {threshold}%")
+
+print()
+if failures:
+    print(f"FAIL: {len(failures)} regression(s) beyond {threshold}%:")
+    for f in failures:
+        print("  " + f)
+    sys.exit(1)
+print(f"PASS: {compared} metric(s) within {threshold}% of the committed baseline")
+EOF
