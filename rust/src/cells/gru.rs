@@ -231,6 +231,142 @@ impl<S: Scalar> Cell<S> for Gru<S> {
         6 * self.n
     }
 
+    /// Fused batched step: the batch axis is folded into the gate matmuls —
+    /// the unit loop is outermost so each weight row (`W_i*[i]`, `W_h*[i]`)
+    /// is loaded once and streamed across all B elements instead of being
+    /// re-fetched B times. Per-element accumulation order is identical to
+    /// [`Gru::gates`] (biases, then the input j-loop, then the hidden
+    /// j-loop), so the result is **bitwise** equal to the looped default.
+    fn step_batch(&self, hs: &[S], xs: &[S], out: &mut [S], ws: &mut [S], batch: usize) {
+        let n = self.n;
+        let m = self.m;
+        let _ = ws;
+        debug_assert_eq!(hs.len(), batch * n);
+        debug_assert_eq!(xs.len(), batch * m);
+        debug_assert_eq!(out.len(), batch * n);
+        let (w_ir, w_iz, w_in) = (self.w_i(0), self.w_i(1), self.w_i(2));
+        let (w_hr, w_hz, w_hn) = (self.w_h(0), self.w_h(1), self.w_h(2));
+        let (b_ir, b_iz, b_in) = (self.b(0), self.b(1), self.b(2));
+        let (b_hr, b_hz, b_hn) = (self.b(3), self.b(4), self.b(5));
+        for i in 0..n {
+            let (rowr, rowz, rown) =
+                (&w_ir[i * m..(i + 1) * m], &w_iz[i * m..(i + 1) * m], &w_in[i * m..(i + 1) * m]);
+            let (rowhr, rowhz, rowhn) =
+                (&w_hr[i * n..(i + 1) * n], &w_hz[i * n..(i + 1) * n], &w_hn[i * n..(i + 1) * n]);
+            for s in 0..batch {
+                let h = &hs[s * n..(s + 1) * n];
+                let x = &xs[s * m..(s + 1) * m];
+                let mut ar = b_ir[i] + b_hr[i];
+                let mut az = b_iz[i] + b_hz[i];
+                let mut an = b_in[i];
+                for j in 0..m {
+                    let xj = x[j];
+                    ar += rowr[j] * xj;
+                    az += rowz[j] * xj;
+                    an += rown[j] * xj;
+                }
+                let mut hr = S::zero();
+                let mut hz = S::zero();
+                let mut hm = b_hn[i];
+                for j in 0..n {
+                    let hj = h[j];
+                    hr += rowhr[j] * hj;
+                    hz += rowhz[j] * hj;
+                    hm += rowhn[j] * hj;
+                }
+                let r = sigmoid(ar + hr);
+                let z = sigmoid(az + hz);
+                let nh = (an + r * hm).tanh();
+                out[s * n + i] = (S::one() - z) * nh + z * h[i];
+            }
+        }
+    }
+
+    /// Fused batched `jacobian` — projects each element's input (the same
+    /// accumulation order as [`Cell::precompute_x`], which matches the
+    /// direct gate path bitwise) and delegates to the fused
+    /// [`Cell::jacobian_pre_batch`] kernel, so the gate math lives in one
+    /// place. Not a hot path (FUNCEVAL hoists the projections and calls
+    /// the pre kernel directly), hence the scratch allocation is fine.
+    fn jacobian_batch(
+        &self,
+        hs: &[S],
+        xs: &[S],
+        out_f: &mut [S],
+        out_jac: &mut [S],
+        ws: &mut [S],
+        batch: usize,
+    ) {
+        let m = self.m;
+        let pl = 3 * self.n;
+        debug_assert_eq!(xs.len(), batch * m);
+        let mut pres = vec![S::zero(); batch * pl];
+        for s in 0..batch {
+            self.precompute_x(&xs[s * m..(s + 1) * m], &mut pres[s * pl..(s + 1) * pl]);
+        }
+        self.jacobian_pre_batch(hs, &pres, out_f, out_jac, ws, batch);
+    }
+
+    /// Fused batched [`Cell::jacobian_pre`] — the FUNCEVAL hot kernel:
+    /// the unit loop is outermost so each recurrent weight row (`W_h*[i]`)
+    /// is loaded once and streamed across all B elements instead of being
+    /// re-fetched B times. Per-element accumulation order is identical to
+    /// [`Gru::gates_pre`] / [`Cell::jacobian_pre`], so the result is
+    /// **bitwise** equal to the looped default — the driver's fused-vs-
+    /// per-element dispatch never changes numerics.
+    fn jacobian_pre_batch(
+        &self,
+        hs: &[S],
+        pres: &[S],
+        out_f: &mut [S],
+        out_jac: &mut [S],
+        ws: &mut [S],
+        batch: usize,
+    ) {
+        let n = self.n;
+        let _ = ws;
+        debug_assert_eq!(hs.len(), batch * n);
+        debug_assert_eq!(pres.len(), batch * 3 * n);
+        debug_assert_eq!(out_f.len(), batch * n);
+        debug_assert_eq!(out_jac.len(), batch * n * n);
+        let (w_hr, w_hz, w_hn) = (self.w_h(0), self.w_h(1), self.w_h(2));
+        let b_hn = self.b(5);
+        for i in 0..n {
+            let (rowhr, rowhz, rowhn) =
+                (&w_hr[i * n..(i + 1) * n], &w_hz[i * n..(i + 1) * n], &w_hn[i * n..(i + 1) * n]);
+            for s in 0..batch {
+                let h = &hs[s * n..(s + 1) * n];
+                let pre = &pres[s * 3 * n..(s + 1) * 3 * n];
+                let mut hr = S::zero();
+                let mut hz = S::zero();
+                let mut hm = b_hn[i];
+                for j in 0..n {
+                    let hj = h[j];
+                    hr += rowhr[j] * hj;
+                    hz += rowhz[j] * hj;
+                    hm += rowhn[j] * hj;
+                }
+                let r = sigmoid(pre[i] + hr);
+                let z = sigmoid(pre[n + i] + hz);
+                let mg = hm;
+                let nh = (pre[2 * n + i] + r * hm).tanh();
+                out_f[s * n + i] = (S::one() - z) * nh + z * h[i];
+
+                let dn = S::one() - nh * nh;
+                let dr = r * (S::one() - r);
+                let dz = z * (S::one() - z);
+                let c1 = (S::one() - z) * dn * r;
+                let c2 = (S::one() - z) * dn * mg * dr;
+                let c3 = (h[i] - nh) * dz;
+                let jrow = &mut out_jac[s * n * n + i * n..s * n * n + (i + 1) * n];
+                for j in 0..n {
+                    jrow[j] = c1 * rowhn[j] + c2 * rowhr[j] + c3 * rowhz[j];
+                }
+                jrow[i] += z;
+            }
+        }
+    }
+
     fn step(&self, h: &[S], x: &[S], out: &mut [S], ws: &mut [S]) {
         let n = self.n;
         self.gates(h, x, ws);

@@ -48,17 +48,22 @@ impl<S: Scalar> IndRnn<S> {
     }
 
     /// Pre-activation `W x + u ⊙ h + b` into `out`.
+    ///
+    /// Accumulation order is `(b + Σ W·x) + u⊙h` — the bias and input
+    /// projection first, exactly like [`Cell::precompute_x`], then the
+    /// recurrent term — so the direct and precomputed paths are
+    /// **bitwise** identical and the DEER driver can mix them freely.
     #[inline]
     fn preact(&self, h: &[S], x: &[S], out: &mut [S]) {
         let (n, m) = (self.n, self.m);
         let (w, u, b) = (self.w(), self.u(), self.b());
         for i in 0..n {
-            let mut a = b[i] + u[i] * h[i];
+            let mut a = b[i];
             let roww = &w[i * m..(i + 1) * m];
             for j in 0..m {
                 a += roww[j] * x[j];
             }
-            out[i] = a;
+            out[i] = a + u[i] * h[i];
         }
     }
 }
@@ -107,6 +112,87 @@ impl<S: Scalar> Cell<S> for IndRnn<S> {
             let f = ws[i].tanh();
             out_f[i] = f;
             out_jdiag[i] = (S::one() - f * f) * u[i];
+        }
+    }
+
+    /// Fused batched step: the unit loop is outermost so each input-weight
+    /// row streams across all B elements. Per-element accumulation order is
+    /// identical to [`IndRnn::preact`] (bias + input j-loop, then the
+    /// recurrent term), so the result is **bitwise** equal to the looped
+    /// default.
+    fn step_batch(&self, hs: &[S], xs: &[S], out: &mut [S], ws: &mut [S], batch: usize) {
+        let (n, m) = (self.n, self.m);
+        let _ = ws;
+        debug_assert_eq!(hs.len(), batch * n);
+        debug_assert_eq!(xs.len(), batch * m);
+        debug_assert_eq!(out.len(), batch * n);
+        let (w, u, b) = (self.w(), self.u(), self.b());
+        for i in 0..n {
+            let roww = &w[i * m..(i + 1) * m];
+            for s in 0..batch {
+                let mut a = b[i];
+                let x = &xs[s * m..(s + 1) * m];
+                for j in 0..m {
+                    a += roww[j] * x[j];
+                }
+                out[s * n + i] = (a + u[i] * hs[s * n + i]).tanh();
+            }
+        }
+    }
+
+    /// Fused batched packed-diagonal Jacobian — projects each element's
+    /// input (identical to [`Cell::precompute_x`], which matches the
+    /// direct [`IndRnn::preact`] order bitwise) and delegates to the fused
+    /// [`Cell::jacobian_diag_pre_batch`] kernel. Not a hot path — FUNCEVAL
+    /// hoists the projections and calls the pre kernel directly — so the
+    /// scratch allocation is fine.
+    fn jacobian_diag_batch(
+        &self,
+        hs: &[S],
+        xs: &[S],
+        out_f: &mut [S],
+        out_jdiag: &mut [S],
+        ws: &mut [S],
+        batch: usize,
+    ) {
+        let (n, m) = (self.n, self.m);
+        debug_assert_eq!(xs.len(), batch * m);
+        let mut pres = vec![S::zero(); batch * n];
+        for s in 0..batch {
+            self.precompute_x(&xs[s * m..(s + 1) * m], &mut pres[s * n..(s + 1) * n]);
+        }
+        self.jacobian_diag_pre_batch(hs, &pres, out_f, out_jdiag, ws, batch);
+    }
+
+    /// Fused batched [`Cell::jacobian_diag_pre`] — the FUNCEVAL hot kernel
+    /// of the natively-diagonal path: the recurrence is elementwise, so the
+    /// unit loop is outermost and each `u[i]` streams across all B
+    /// elements. Per-element arithmetic is identical to the looped default,
+    /// hence **bitwise** equal — the driver's fused-vs-per-element dispatch
+    /// never changes numerics.
+    fn jacobian_diag_pre_batch(
+        &self,
+        hs: &[S],
+        pres: &[S],
+        out_f: &mut [S],
+        out_jdiag: &mut [S],
+        ws: &mut [S],
+        batch: usize,
+    ) {
+        let n = self.n;
+        let _ = ws;
+        debug_assert_eq!(hs.len(), batch * n);
+        debug_assert_eq!(pres.len(), batch * n);
+        debug_assert_eq!(out_f.len(), batch * n);
+        debug_assert_eq!(out_jdiag.len(), batch * n);
+        let u = self.u();
+        for i in 0..n {
+            let ui = u[i];
+            for s in 0..batch {
+                let f = (pres[s * n + i] + ui * hs[s * n + i]).tanh();
+                out_f[s * n + i] = f;
+                out_jdiag[s * n + i] = (S::one() - f * f) * ui;
+            }
         }
     }
 

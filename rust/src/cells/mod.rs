@@ -28,10 +28,15 @@
 //!   so the Newton hot loop allocates nothing.
 //! * `vjp_step` *accumulates* (`+=`) into `dh`, `dx` and `dtheta`.
 //! * Batched variants (`step_batch` / `jacobian_batch` /
-//!   `jacobian_diag_batch`) evaluate B independent elements packed as
-//!   `[B, n]` / `[B, m]` slabs — the cell-level leg of the end-to-end
+//!   `jacobian_diag_batch` and the precomputed-input `jacobian_pre_batch`
+//!   / `jacobian_diag_pre_batch`) evaluate B independent elements packed
+//!   as `[B, n]` / `[B, m]` slabs — the cell-level leg of the end-to-end
 //!   `[B, T, n]` layout. Defaults loop over the batch; cells may override
-//!   to fuse.
+//!   to fuse the batch axis into the gate matmuls. The `*_pre_batch`
+//!   kernels are the ones DEER's FUNCEVAL phase dispatches to (input
+//!   projections are hoisted out of the Newton loop), so they carry the
+//!   hot-path fusion; overrides must stay bitwise equal to the looped
+//!   defaults.
 
 pub mod elman;
 pub mod gru;
@@ -168,6 +173,71 @@ pub trait Cell<S: Scalar>: Send + Sync {
         }
     }
 
+    /// Batched [`Cell::jacobian_pre`]: `hs = [B, n]`, `pres = [B,
+    /// x_precompute_len()]`, `out_f = [B, n]`, `out_jac = [B, n·n]`.
+    ///
+    /// This is the kernel the DEER FUNCEVAL phase calls on its fused
+    /// batched fast path (see `crate::deer::newton`): the driver gathers
+    /// the active sequences' `h_{i−1}` rows and precomputed input
+    /// projections for one timestep and evaluates them in one call, so an
+    /// override can fold the batch axis into the recurrent gate matmuls.
+    /// Overrides must keep the per-element accumulation order of
+    /// [`Cell::jacobian_pre`] **bitwise** intact — the driver dispatches
+    /// between this kernel and the per-element path on pool shape, and
+    /// that dispatch must never change results. Default loops over the
+    /// batch.
+    fn jacobian_pre_batch(
+        &self,
+        hs: &[S],
+        pres: &[S],
+        out_f: &mut [S],
+        out_jac: &mut [S],
+        ws: &mut [S],
+        batch: usize,
+    ) {
+        let n = self.state_dim();
+        let pl = self.x_precompute_len();
+        debug_assert_eq!(out_f.len(), batch * n);
+        debug_assert_eq!(out_jac.len(), batch * n * n);
+        for s in 0..batch {
+            self.jacobian_pre(
+                &hs[s * n..(s + 1) * n],
+                &pres[s * pl..(s + 1) * pl],
+                &mut out_f[s * n..(s + 1) * n],
+                &mut out_jac[s * n * n..(s + 1) * n * n],
+                ws,
+            );
+        }
+    }
+
+    /// Batched [`Cell::jacobian_diag_pre`] (packed-diagonal variant):
+    /// `out_jdiag = [B, n]` — the fused FUNCEVAL kernel of the natively
+    /// diagonal path, same bitwise contract as
+    /// [`Cell::jacobian_pre_batch`]. Default loops over the batch.
+    fn jacobian_diag_pre_batch(
+        &self,
+        hs: &[S],
+        pres: &[S],
+        out_f: &mut [S],
+        out_jdiag: &mut [S],
+        ws: &mut [S],
+        batch: usize,
+    ) {
+        let n = self.state_dim();
+        let pl = self.x_precompute_len();
+        debug_assert_eq!(out_f.len(), batch * n);
+        debug_assert_eq!(out_jdiag.len(), batch * n);
+        for s in 0..batch {
+            self.jacobian_diag_pre(
+                &hs[s * n..(s + 1) * n],
+                &pres[s * pl..(s + 1) * pl],
+                &mut out_f[s * n..(s + 1) * n],
+                &mut out_jdiag[s * n..(s + 1) * n],
+                ws,
+            );
+        }
+    }
+
     /// Like [`Cell::jacobian`] but emitting the **packed diagonal** of
     /// `∂f/∂h` (`out_jdiag` has length n). Only meaningful when
     /// [`Cell::jacobian_structure`] is `Diagonal`.
@@ -236,6 +306,15 @@ pub trait CellGrad<S: Scalar>: Cell<S> {
     fn params(&self) -> &[S];
     /// Mutable flat parameter vector.
     fn params_mut(&mut self) -> &mut [S];
+
+    /// Overwrite the cell's parameters from a flat vector (the optimizer →
+    /// cell leg of the native training loop: updates computed on the flat
+    /// layout round-trip through the same `params()` ordering).
+    fn load_params(&mut self, src: &[S]) {
+        let dst = self.params_mut();
+        assert_eq!(src.len(), dst.len(), "flat parameter length");
+        dst.copy_from_slice(src);
+    }
 
     /// Given the cotangent `lambda = ∂L/∂h'` at one step, accumulate
     /// `dh += λᵀ ∂f/∂h`, `dx += λᵀ ∂f/∂x` (if requested) and

@@ -50,6 +50,15 @@ pub struct EvalReply {
     pub path: EvalPath,
     /// Whether a cached trajectory seeded the initial guess.
     pub warm_started: bool,
+    /// Final per-step Jacobians along this sequence's trajectory (length
+    /// `T·jac_len`, layout per the executor's effective structure) —
+    /// populated only when [`BatchExecutor::keep_jacobians`] is set AND the
+    /// sequence converged through DEER. A training step can hand these to
+    /// `deer_rnn_backward_batch` to skip the backward JACOBIAN recompute
+    /// (the speed side of the paper's §3.1.1 memory/speed trade-off). A
+    /// sequential-fallback sequence carries `None`: its forward Jacobians
+    /// belong to the failed DEER iterate, not the returned trajectory.
+    pub jacobians: Option<Vec<f32>>,
 }
 
 /// Dispatch counters. `batched_solves` counts fused solve calls: one per
@@ -74,6 +83,10 @@ pub struct BatchExecutor<'c, C: Cell<f32>> {
     pub planner: MemoryPlanner,
     pub policy: ConvergencePolicy,
     pub stats: ExecStats,
+    /// Retain per-sequence forward Jacobians in the replies (see
+    /// [`EvalReply::jacobians`]). Off by default: serving callers only need
+    /// trajectories, and the slabs are `T·n²` per dense sequence.
+    pub keep_jacobians: bool,
 }
 
 impl<'c, C: Cell<f32>> BatchExecutor<'c, C> {
@@ -95,6 +108,7 @@ impl<'c, C: Cell<f32>> BatchExecutor<'c, C> {
             planner: MemoryPlanner::new(device_budget_bytes),
             policy: ConvergencePolicy::default(),
             stats: ExecStats::default(),
+            keep_jacobians: false,
         }
     }
 
@@ -162,9 +176,21 @@ impl<'c, C: Cell<f32>> BatchExecutor<'c, C> {
                     .evaluate_batch(self.cell, &h0s, &xs, init, self.threads, b);
             self.stats.batched_solves += 1;
             self.stats.sequences_solved += b as u64;
+            let jl = res.jac_structure.jac_len(n);
             for (s, req) in sub.iter().enumerate() {
                 let traj = res.ys[s * t_len * n..(s + 1) * t_len * n].to_vec();
                 self.cache.put(req.payload.sample_id, traj.clone());
+                // converged is part of the contract: without the sequential
+                // fallback a diverged sequence still reports path == Deer,
+                // and its Jacobians belong to the divergent iterate
+                let jacobians = if self.keep_jacobians
+                    && paths[s] == EvalPath::Deer
+                    && res.converged[s]
+                {
+                    Some(res.jacobians[s * t_len * jl..(s + 1) * t_len * jl].to_vec())
+                } else {
+                    None
+                };
                 replies.push(EvalReply {
                     sample_id: req.payload.sample_id,
                     ys: traj,
@@ -172,6 +198,7 @@ impl<'c, C: Cell<f32>> BatchExecutor<'c, C> {
                     converged: res.converged[s],
                     path: paths[s],
                     warm_started: warm[s],
+                    jacobians,
                 });
             }
         }
@@ -303,6 +330,57 @@ mod tests {
         assert_eq!(ex.stats.batched_solves, 2, "4 requests / budget of 2 → 2 fused solves");
         assert_eq!(ex.stats.groups_split, 1);
         assert_eq!(ex.stats.sequences_solved, b as u64);
+    }
+
+    /// With `keep_jacobians` set, DEER replies carry the forward Jacobians
+    /// (matching the single-sequence solve bitwise); off by default.
+    #[test]
+    fn keep_jacobians_populates_replies() {
+        let mut rng = Rng::new(5);
+        let (n, m, t_len, b) = (3usize, 2usize, 100usize, 2usize);
+        let cell: Gru<f32> = Gru::new(n, m, &mut rng);
+        let mut ex = BatchExecutor::new(
+            &cell,
+            t_len,
+            b,
+            Duration::from_secs(60),
+            1 << 20,
+            16 * (1u64 << 30),
+            1,
+        );
+        ex.keep_jacobians = true;
+        let reqs = make_requests(&cell, t_len, b);
+        let mut replies = Vec::new();
+        for (id, h0, xs) in &reqs {
+            let r = ex.submit(*id, h0.clone(), xs.clone());
+            if !r.is_empty() {
+                replies = r;
+            }
+        }
+        assert_eq!(replies.len(), b);
+        for reply in &replies {
+            let jac = reply.jacobians.as_ref().expect("jacobians retained");
+            assert_eq!(jac.len(), t_len * n * n, "dense T·n² slab");
+            let (_, h0, xs) = &reqs[reply.sample_id as usize];
+            let solo = deer_rnn(&cell, h0, xs, None, &DeerConfig::<f32>::default());
+            assert_eq!(&jac[..], &solo.jacobians[..], "sample {}", reply.sample_id);
+        }
+        // default path stays lean
+        let mut ex2 = BatchExecutor::new(
+            &cell,
+            t_len,
+            b,
+            Duration::from_secs(60),
+            1 << 20,
+            16 * (1u64 << 30),
+            1,
+        );
+        for (id, h0, xs) in &reqs {
+            let r = ex2.submit(*id, h0.clone(), xs.clone());
+            for reply in r {
+                assert!(reply.jacobians.is_none());
+            }
+        }
     }
 
     /// Deadline-style flush drains a partial group through one fused solve.

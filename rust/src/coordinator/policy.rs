@@ -32,6 +32,10 @@ pub struct ConvergencePolicy {
     /// to [`DeerConfig::jacobian_mode`] and used by the batched executor's
     /// memory planning.
     pub jacobian_mode: JacobianMode,
+    /// Trust radius on the per-step Newton update, forwarded to
+    /// [`DeerConfig::step_clamp`] — keeps DiagonalApprox convergent on
+    /// trained (ill-conditioned) cells mid-training.
+    pub step_clamp: Option<f64>,
 }
 
 impl Default for ConvergencePolicy {
@@ -42,6 +46,7 @@ impl Default for ConvergencePolicy {
             divergence_patience: 8,
             fallback_sequential: true,
             jacobian_mode: JacobianMode::Full,
+            step_clamp: None,
         }
     }
 }
@@ -57,6 +62,7 @@ impl ConvergencePolicy {
             threads,
             divergence_patience: self.divergence_patience,
             jacobian_mode: self.jacobian_mode,
+            step_clamp: self.step_clamp.map(S::from_f64c),
         }
     }
 

@@ -774,6 +774,190 @@ pub fn batch_bench_json(points: &[BatchBenchPoint]) -> Json {
     ])
 }
 
+/// The {lens, rows, measured-steps} grid of the training bench (`--exp
+/// train`). Both grids keep a T ≥ 4096 point — the length regime where the
+/// fused DEER step must beat sequential BPTT wall-clock.
+pub fn train_bench_grid(fast: bool) -> (Vec<usize>, usize, usize) {
+    if fast {
+        (vec![512, 4_096], 12, 2)
+    } else {
+        (vec![1_024, 4_096, 16_384], 12, 3)
+    }
+}
+
+/// One point of the seq-BPTT vs DEER training bench.
+#[derive(Debug, Clone)]
+pub struct TrainBenchPoint {
+    pub n: usize,
+    pub t_len: usize,
+    pub batch: usize,
+    pub threads: usize,
+    pub steps: usize,
+    /// Mean wall-clock per optimizer step (warm regime: one warm-up step
+    /// excluded) per engine.
+    pub seq_step_secs: f64,
+    pub deer_step_secs: f64,
+    pub quasi_step_secs: f64,
+    /// Train-split loss / accuracy after the same number of optimizer
+    /// steps, evaluated with the identical sequential evaluator.
+    pub seq_loss: f64,
+    pub deer_loss: f64,
+    pub quasi_loss: f64,
+    pub seq_acc: f64,
+    pub deer_acc: f64,
+    pub quasi_acc: f64,
+    /// Mean Newton sweeps per sequence for the exact-DEER arm (warm-start
+    /// effectiveness witness).
+    pub deer_mean_iters: f64,
+}
+
+/// Training-step bench: the §4.3 workload (GRU on synthetic EigenWorms)
+/// trained for a few optimizer steps under each forward engine with shared
+/// seeds and data order. The Seq arm is the single-threaded sequential
+/// BPTT baseline; the Deer/Quasi arms dispatch each minibatch as ONE fused
+/// `[B, T, n]` solve over the thread pool, warm-started across steps from
+/// the trajectory cache, and reuse forward Jacobians in the eq.-7 backward
+/// pass. Emits the human table plus machine-readable points for
+/// `BENCH_train.json`.
+pub fn train_bench(
+    lens: &[usize],
+    rows: usize,
+    n: usize,
+    batch: usize,
+    steps: usize,
+    threads: usize,
+) -> (Table, Vec<TrainBenchPoint>) {
+    use crate::data::Split;
+    use crate::train::native::{
+        worms_task, ForwardMode, Model, Readout, TrainConfig, TrainLoop,
+    };
+    let mut table = Table::new(&[
+        "n",
+        "T",
+        "B",
+        "seq s/step",
+        "deer s/step",
+        "quasi s/step",
+        "deer speedup",
+        "quasi speedup",
+        "seq acc",
+        "deer acc",
+        "|Δacc|",
+    ]);
+    let mut points = Vec::new();
+    for &t_len in lens {
+        let data = worms_task(rows, t_len, 0xEA7 ^ t_len as u64);
+        let mut results = Vec::new();
+        for mode in [ForwardMode::Seq, ForwardMode::Deer, ForwardMode::QuasiDeer] {
+            let mut rng = Rng::new(0x7261_1122);
+            let cell: crate::cells::Gru<f32> =
+                crate::cells::Gru::new(n, crate::data::worms::CHANNELS, &mut rng);
+            let model = Model::new(cell, crate::data::worms::CLASSES, Readout::LastState, &mut rng);
+            let cfg = TrainConfig {
+                mode,
+                batch,
+                lr: 1e-3,
+                threads: if mode == ForwardMode::Seq { 1 } else { threads },
+                seed: 7,
+                step_clamp: if mode == ForwardMode::QuasiDeer { Some(1.0) } else { None },
+                ..Default::default()
+            };
+            let mut tl = TrainLoop::new(model, data.clone(), cfg);
+            tl.step(); // warm-up: cold caches, first fused solve
+            let start = std::time::Instant::now();
+            for _ in 0..steps {
+                tl.step();
+            }
+            let step_secs = start.elapsed().as_secs_f64() / steps.max(1) as f64;
+            let (loss, acc) = tl.eval(Split::Train);
+            let mean_iters = if tl.stats.sequences_solved > 0 {
+                tl.stats.newton_iters as f64 / tl.stats.sequences_solved as f64
+            } else {
+                0.0
+            };
+            results.push((step_secs, loss, acc.unwrap_or(0.0), mean_iters));
+        }
+        let p = TrainBenchPoint {
+            n,
+            t_len,
+            batch,
+            threads,
+            steps,
+            seq_step_secs: results[0].0,
+            deer_step_secs: results[1].0,
+            quasi_step_secs: results[2].0,
+            seq_loss: results[0].1,
+            deer_loss: results[1].1,
+            quasi_loss: results[2].1,
+            seq_acc: results[0].2,
+            deer_acc: results[1].2,
+            quasi_acc: results[2].2,
+            deer_mean_iters: results[1].3,
+        };
+        table.row(vec![
+            n.to_string(),
+            t_len.to_string(),
+            batch.to_string(),
+            fmt_secs(p.seq_step_secs),
+            fmt_secs(p.deer_step_secs),
+            fmt_secs(p.quasi_step_secs),
+            sig3(p.seq_step_secs / p.deer_step_secs),
+            sig3(p.seq_step_secs / p.quasi_step_secs),
+            format!("{:.2}", p.seq_acc),
+            format!("{:.2}", p.deer_acc),
+            format!("{:.3}", (p.seq_acc - p.deer_acc).abs()),
+        ]);
+        points.push(p);
+    }
+    (table, points)
+}
+
+/// Serialize training-bench points as the `BENCH_train.json` document.
+pub fn train_bench_json(points: &[TrainBenchPoint]) -> Json {
+    json::obj(vec![
+        ("bench", json::s("train_native")),
+        ("dtype", json::s("f32")),
+        ("cell", json::s("gru")),
+        ("task", json::s("worms_synthetic")),
+        (
+            "points",
+            json::arr(
+                points
+                    .iter()
+                    .map(|p| {
+                        json::obj(vec![
+                            ("n", json::num(p.n as f64)),
+                            ("t", json::num(p.t_len as f64)),
+                            ("batch", json::num(p.batch as f64)),
+                            ("pool_threads", json::num(p.threads as f64)),
+                            ("steps", json::num(p.steps as f64)),
+                            ("seq_step_ns", json::num(p.seq_step_secs * 1e9)),
+                            ("deer_step_ns", json::num(p.deer_step_secs * 1e9)),
+                            ("quasi_step_ns", json::num(p.quasi_step_secs * 1e9)),
+                            (
+                                "deer_speedup",
+                                json::num(p.seq_step_secs / p.deer_step_secs),
+                            ),
+                            (
+                                "quasi_speedup",
+                                json::num(p.seq_step_secs / p.quasi_step_secs),
+                            ),
+                            ("seq_loss", json::num(p.seq_loss)),
+                            ("deer_loss", json::num(p.deer_loss)),
+                            ("quasi_loss", json::num(p.quasi_loss)),
+                            ("seq_acc", json::num(p.seq_acc)),
+                            ("deer_acc", json::num(p.deer_acc)),
+                            ("quasi_acc", json::num(p.quasi_acc)),
+                            ("acc_gap", json::num((p.seq_acc - p.deer_acc).abs())),
+                            ("deer_mean_iters", json::num(p.deer_mean_iters)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
 /// The sweep-scheduler entry used by `deer sweep` (coordinator demo):
 /// runs the grid through the worker pool with warm-start caching.
 pub fn run_sweep(opts: &BenchOpts, workers: usize) -> Vec<JobResult> {

@@ -31,7 +31,10 @@
 //!   (Python never runs at request time).
 //! * [`data`] — dataset substrates: two-body gravitational simulator,
 //!   synthetic EigenWorms, sequential-CIFAR-like generator.
-//! * [`train`] — artifact-driven training loops (HNN / EigenWorms classifier).
+//! * [`train`] — training: the native in-crate trainer
+//!   ([`train::native`]: model head + Adam + minibatch loop with the
+//!   Seq/DEER/quasi-DEER engine switch, §4.3) and the artifact-driven
+//!   loops (HNN / EigenWorms classifier via the `xla` runtime).
 //! * [`metrics`] — run recording and paper-table reporting.
 //! * [`testkit`] — in-repo property-testing mini-framework.
 
@@ -55,4 +58,5 @@ pub use deer::{
     deer_rnn, deer_rnn_batch, BatchDeerResult, BatchGradResult, DeerConfig, DeerResult,
     JacobianMode,
 };
+pub use train::native::{ForwardMode, Model, Readout, TrainConfig, TrainLoop};
 pub use util::scalar::Scalar;

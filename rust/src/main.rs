@@ -1,9 +1,10 @@
 //! `deer` — the Layer-3 coordinator CLI.
 //!
 //! Subcommands:
-//!   bench  --exp fig2|fig2grad|fig3|fig6|fig7|fig8|table3|table4|table5|table6|quasi|scan|batch|all
+//!   bench  --exp fig2|fig2grad|fig3|fig6|fig7|fig8|table3|table4|table5|table6|quasi|scan|batch|train|all
 //!   sweep  --dims 1,2,4 --lens 1000,10000 --workers 2
-//!   train  --model worms|hnn-deer|hnn-rk4|mhgru --steps 100
+//!   train  --exp worms|twobody --mode seq|deer|quasi --steps 100   (native trainer)
+//!   train  --model worms|hnn-deer|hnn-rk4|mhgru --steps 100        (xla artifacts)
 //!   info   (list artifacts)
 //!
 //! Common flags: --dims, --lens, --batches, --seeds, --results DIR,
@@ -67,8 +68,11 @@ fn run() -> Result<()> {
                  \n  deer bench --exp quasi          Full vs DiagonalApprox Jacobians\
                  \n  deer bench --exp scan --scan-out BENCH_scan.json   INVLIN kernel microbench\
                  \n  deer bench --exp batch --batch-out BENCH_batch.json  fused-batched vs looped dispatch\
+                 \n  deer bench --exp train --train-out BENCH_train.json  seq-BPTT vs DEER optimizer steps\
                  \n  deer sweep --workers 2          coordinator sweep demo\
-                 \n  deer train --model worms --steps 50\
+                 \n  deer train --exp worms --mode deer --steps 40   native §4.3 trainer (seq|deer|quasi)\
+                 \n  deer train --exp twobody --mode deer            native energy-regression trainer\
+                 \n  deer train --model worms --steps 50             artifact trainer (xla feature)\
                  \n  deer info                       list AOT artifacts"
             );
             Ok(())
@@ -203,6 +207,31 @@ fn bench(args: &Args, rec: &Recorder) -> Result<()> {
         std::fs::write(&out_path, exp::batch_bench_json(&points).to_string())?;
         println!("batch bench points written to {}", out_path.display());
     }
+    if all || which == "train" {
+        // Training-step bench: sequential BPTT vs fused batched DEER per
+        // optimizer step on the §4.3 workload. Grid shrinks under
+        // DEER_BENCH_FAST=1; both grids keep a T ≥ 4096 point.
+        let fast = std::env::var("DEER_BENCH_FAST").is_ok();
+        let (lens, rows, steps) = exp::train_bench_grid(fast);
+        let n = args.get_parse("n", 16usize).map_err(Error::msg)?;
+        let batch = args.get_parse("batch", 8usize).map_err(Error::msg)?;
+        let pool = std::thread::available_parallelism()
+            .map(|v| v.get())
+            .unwrap_or(2)
+            .max(2);
+        let threads = args.get_parse("workers", pool).map_err(Error::msg)?;
+        let (t, points) = exp::train_bench(&lens, rows, n, batch, steps, threads);
+        rec.table(
+            "train_native",
+            &format!(
+                "Native training: wall-clock per optimizer step, seq-BPTT (1 thread) vs fused DEER / quasi-DEER (pool = {threads}), GRU n={n}, B={batch}"
+            ),
+            &t,
+        )?;
+        let out_path = PathBuf::from(args.get("train-out", "BENCH_train.json"));
+        std::fs::write(&out_path, exp::train_bench_json(&points).to_string())?;
+        println!("train bench points written to {}", out_path.display());
+    }
     if all || which == "scan" {
         // INVLIN kernel microbench: dense vs diagonal scan. Grids shrink
         // under DEER_BENCH_FAST=1 (the scripts/bench_smoke.sh smoke run).
@@ -263,7 +292,126 @@ fn sweep(args: &Args, rec: &Recorder) -> Result<()> {
     Ok(())
 }
 
+/// The native in-crate trainer (`deer train --exp worms|twobody`): no
+/// artifacts, no `xla` feature — data, fused batched DEER solves, analytic
+/// gradients and Adam all run in this process.
+fn native_train(args: &Args, rec: &Recorder) -> Result<()> {
+    use deer::data::Split;
+    use deer::train::native::{
+        twobody_task, worms_task, ForwardMode, Model, Readout, TrainConfig, TrainLoop,
+    };
+
+    let exp = args.get("exp", "worms").to_string();
+    let mode = ForwardMode::parse(args.get("mode", "deer")).map_err(Error::msg)?;
+    let steps = args.get_parse("steps", 40usize).map_err(Error::msg)?;
+    let n = args.get_parse("n", 16usize).map_err(Error::msg)?;
+    let batch = args.get_parse("batch", 8usize).map_err(Error::msg)?;
+    let lr = args.get_parse("lr", 3e-3f64).map_err(Error::msg)?;
+    let seed = args.get_parse("seed", 0u64).map_err(Error::msg)?;
+    let pool = std::thread::available_parallelism()
+        .map(|v| v.get())
+        .unwrap_or(2)
+        .max(2);
+    let threads = args.get_parse("workers", pool).map_err(Error::msg)?;
+    // --step-clamp <c>: c > 0 sets the trust radius, 0 (or negative)
+    // explicitly DISABLES it — also for quasi mode, so the undamped
+    // DiagonalApprox A/B stays reachable. Flag absent ⇒ quasi gets the
+    // safeguard default, exact modes run unclamped.
+    let step_clamp = match args.opt("step-clamp") {
+        Some(v) => {
+            let c: f64 = v.parse().map_err(|e| Error::msg(format!("--step-clamp {v:?}: {e}")))?;
+            (c > 0.0).then_some(c)
+        }
+        None if mode == ForwardMode::QuasiDeer => Some(1.0), // trained-cell safeguard
+        None => None,
+    };
+
+    let cfg = TrainConfig {
+        mode,
+        batch,
+        lr,
+        threads: if mode == ForwardMode::Seq { 1 } else { threads },
+        seed,
+        step_clamp,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(0xDEE2 ^ seed);
+
+    let (mut tl, name): (TrainLoop<deer::cells::Gru<f32>>, String) = match exp.as_str() {
+        "worms" => {
+            let t_len = args.get_parse("t", 1024usize).map_err(Error::msg)?;
+            let rows = args.get_parse("rows", 60usize).map_err(Error::msg)?;
+            let data = worms_task(rows, t_len, 1234 + seed);
+            let cell = deer::cells::Gru::new(n, deer::data::worms::CHANNELS, &mut rng);
+            let model = Model::new(cell, deer::data::worms::CLASSES, Readout::LastState, &mut rng);
+            (
+                TrainLoop::new(model, data, cfg),
+                format!("train_native_worms_{}", mode.label()),
+            )
+        }
+        "twobody" => {
+            let t_len = args.get_parse("t", 256usize).map_err(Error::msg)?;
+            let rows = args.get_parse("rows", 40usize).map_err(Error::msg)?;
+            let data = twobody_task(rows, t_len, 77 + seed);
+            let cell = deer::cells::Gru::new(n, deer::data::twobody::STATE, &mut rng);
+            let model = Model::new(cell, 1, Readout::MeanPool, &mut rng);
+            (
+                TrainLoop::new(model, data, cfg),
+                format!("train_native_twobody_{}", mode.label()),
+            )
+        }
+        other => bail!("unknown native experiment {other} (worms|twobody)"),
+    };
+
+    println!(
+        "native trainer: exp={exp} mode={} steps={steps} batch={batch} lr={lr} threads={}",
+        mode.label(),
+        tl.cfg.threads
+    );
+    for i in 0..steps {
+        let s = tl.step();
+        if i % 5 == 0 || i + 1 == steps {
+            match s.acc {
+                Some(acc) => println!(
+                    "step {:4}  loss {:.4}  acc {:.2}  fwd {:.3}s bwd {:.3}s",
+                    s.step, s.loss, acc, s.fwd_secs, s.bwd_secs
+                ),
+                None => println!(
+                    "step {:4}  loss {:.6}  fwd {:.3}s bwd {:.3}s",
+                    s.step, s.loss, s.fwd_secs, s.bwd_secs
+                ),
+            }
+        }
+    }
+    let (train_loss, train_acc) = tl.eval(Split::Train);
+    let (val_loss, val_acc) = tl.eval(Split::Val);
+    match (train_acc, val_acc) {
+        (Some(ta), Some(va)) => println!(
+            "final: train loss {train_loss:.4} acc {ta:.3} | val loss {val_loss:.4} acc {va:.3}"
+        ),
+        _ => println!("final: train loss {train_loss:.6} | val loss {val_loss:.6}"),
+    }
+    if mode != ForwardMode::Seq {
+        let st = &tl.stats;
+        let solved = st.sequences_solved.max(1);
+        println!(
+            "dispatch: {} fused solves, {} sequences, {:.1}% warm-started, {} fallbacks, {:.1} Newton sweeps/seq",
+            st.batched_solves,
+            st.sequences_solved,
+            100.0 * st.warm_started as f64 / solved as f64,
+            st.fallbacks,
+            st.newton_iters as f64 / solved as f64,
+        );
+    }
+    rec.curve(&name, &tl.curve)?;
+    println!("curve written to {}", rec.dir.join(format!("{name}.csv")).display());
+    Ok(())
+}
+
 fn train(args: &Args, rec: &Recorder) -> Result<()> {
+    if args.opt("exp").is_some() {
+        return native_train(args, rec);
+    }
     let rt = Runtime::load(&PathBuf::from(
         args.get("artifacts", Runtime::default_dir().to_str().unwrap()),
     ))?;

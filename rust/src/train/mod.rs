@@ -1,10 +1,17 @@
-//! Artifact-driven training (the L3 hot path).
+//! Training drivers.
 //!
-//! The trainer owns the optimizer state as host tensors and advances it by
-//! executing the AOT-compiled `*_train_step` artifacts — every forward,
-//! backward, and Adam update runs inside one fused PJRT executable; Rust
-//! only moves buffers and logs. This is the end-to-end driver the examples
-//! use for Fig. 4 (HNN and EigenWorms training curves).
+//! Two engines share the [`CurvePoint`] curve format:
+//!
+//! * [`native`] — the in-crate trainer: minibatch loop over the DEER /
+//!   sequential engines with Adam and a linear model head. No artifacts, no
+//!   Python; this is the path `deer train --exp worms|twobody` runs and the
+//!   one the §4.3 training-speed claim is measured on (`--exp train`).
+//! * the artifact [`Trainer`] below — owns optimizer state as host tensors
+//!   and advances it by executing AOT-compiled `*_train_step` artifacts
+//!   (every forward/backward/Adam update inside one fused PJRT executable;
+//!   requires the `xla` feature's runtime).
+
+pub mod native;
 
 use crate::anyhow;
 use crate::util::err::Result;

@@ -1,0 +1,621 @@
+//! Minibatch training loop: data → fused batched solve → gradients → Adam.
+//!
+//! Every optimizer step draws a shuffled minibatch from the
+//! [`crate::data::Dataset`] splits and dispatches the forward evaluation
+//! through one of three interchangeable engines
+//! ([`TrainConfig::mode`]):
+//!
+//! * [`ForwardMode::Seq`] — the sequential baseline: step-by-step forward
+//!   (via the fused [`crate::deer::seq::seq_rnn_batch`]) + BPTT. This is
+//!   the "commonly-used sequential method" of §4.1, single-threaded by
+//!   construction.
+//! * [`ForwardMode::Deer`] — the minibatch is submitted to the
+//!   coordinator's [`BatchExecutor`] and runs as **ONE** fused `[B, T, n]`
+//!   Newton solve (per-sequence convergence masking, sequential fallback
+//!   for stragglers), warm-started across epochs from the executor's
+//!   trajectory cache (App. B.2: the previous visit's trajectory is the
+//!   initial guess, so mid-training solves need only a few sweeps). The
+//!   backward pass is the exact eq.-7 dual scan — identical gradients to
+//!   BPTT up to the forward tolerance.
+//! * [`ForwardMode::QuasiDeer`] — same dispatch with
+//!   [`JacobianMode::DiagonalApprox`] Jacobians and the
+//!   [`TrainConfig::step_clamp`] trust radius, trading exact dense algebra
+//!   for O(n) scans (the gradient drops off-diagonal λ-propagation on
+//!   dense cells — see `crate::deer::grad`).
+//!
+//! Seq vs Deer is therefore a pure A/B switch: data order, loss algebra,
+//! optimizer state and seeds are shared; only the trajectory/gradient
+//! engine changes. The loop emits [`CurvePoint`]s (loss / accuracy /
+//! wall-clock) after every step — the Fig. 4-style training curves.
+
+use std::time::{Duration, Instant};
+
+use crate::cells::{CellGrad, JacobianStructure};
+use crate::coordinator::exec::BatchExecutor;
+use crate::coordinator::policy::EvalPath;
+use crate::coordinator::warmstart::WarmStartCache;
+use crate::data::{Dataset, Split};
+use crate::deer::grad::deer_rnn_backward_batch;
+use crate::deer::newton::{effective_structure, JacobianMode};
+use crate::deer::seq::{seq_rnn, seq_rnn_backward, seq_rnn_batch};
+use crate::train::CurvePoint;
+use crate::util::rng::Rng;
+
+use super::model::Model;
+use super::opt::{Adam, AdamConfig};
+
+/// Which engine evaluates (and differentiates) the recurrence.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ForwardMode {
+    /// Sequential forward + BPTT (the paper's baseline).
+    Seq,
+    /// Fused batched DEER through the coordinator (exact Newton).
+    Deer,
+    /// Fused batched quasi-DEER (DiagonalApprox + trust radius).
+    QuasiDeer,
+}
+
+impl ForwardMode {
+    /// Parse a CLI token (`seq` | `deer` | `quasi`).
+    pub fn parse(s: &str) -> Result<ForwardMode, String> {
+        match s {
+            "seq" => Ok(ForwardMode::Seq),
+            "deer" => Ok(ForwardMode::Deer),
+            "quasi" | "quasideer" | "quasi-deer" => Ok(ForwardMode::QuasiDeer),
+            other => Err(format!("unknown forward mode {other:?} (seq|deer|quasi)")),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ForwardMode::Seq => "seq",
+            ForwardMode::Deer => "deer",
+            ForwardMode::QuasiDeer => "quasi",
+        }
+    }
+}
+
+/// Regression targets rider for a [`Dataset`] (whose own labels are class
+/// ids): `values` is `[rows, k]` row-major.
+#[derive(Debug, Clone)]
+pub struct Targets {
+    pub k: usize,
+    pub values: Vec<f32>,
+}
+
+/// A training task: the dataset plus (for regression) per-row targets.
+/// `targets: None` ⇒ classification on `ds.labels`.
+#[derive(Debug, Clone)]
+pub struct TrainData {
+    pub ds: Dataset,
+    pub targets: Option<Targets>,
+}
+
+/// Loop configuration. `Default` is the §4.3-style classifier setting.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub mode: ForwardMode,
+    /// Minibatch size B (one fused solve per minibatch).
+    pub batch: usize,
+    pub lr: f64,
+    /// Global-norm gradient clip (0 = off) — applied identically in every
+    /// mode so the A/B comparison stays fair.
+    pub grad_clip: f64,
+    /// Worker threads handed to the fused batched solves.
+    pub threads: usize,
+    /// Shuffling / init seed. Two loops with equal seeds and configs see
+    /// identical data order.
+    pub seed: u64,
+    /// Forward tolerance override (None = paper default for the dtype).
+    pub tol_override: Option<f64>,
+    pub max_iter: usize,
+    /// Trust radius forwarded to the solver (quasi-DEER safeguard).
+    pub step_clamp: Option<f64>,
+    /// Reuse forward Jacobians in the backward pass (speed) instead of
+    /// recomputing them along the converged trajectory (memory + a
+    /// tolerance-level exactness gain) — the §3.1.1 trade-off.
+    pub reuse_jacobians: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            mode: ForwardMode::Deer,
+            batch: 8,
+            lr: 3e-3,
+            grad_clip: 0.0,
+            threads: 1,
+            seed: 0,
+            tol_override: None,
+            max_iter: 100,
+            step_clamp: None,
+            reuse_jacobians: true,
+        }
+    }
+}
+
+/// Aggregate counters over a training run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TrainStats {
+    pub steps: usize,
+    pub epochs: usize,
+    /// Fused solves issued (Deer modes: exactly one per minibatch unless
+    /// the memory planner split a group).
+    pub batched_solves: u64,
+    pub sequences_solved: u64,
+    /// Sequences that fell back to the sequential evaluator.
+    pub fallbacks: u64,
+    /// Sequences whose initial guess came from the warm-start cache.
+    pub warm_started: u64,
+    /// Total Newton sweeps summed over sequences.
+    pub newton_iters: u64,
+    pub fwd_secs: f64,
+    pub bwd_secs: f64,
+}
+
+/// Per-step outcome.
+#[derive(Debug, Clone, Copy)]
+pub struct StepStats {
+    pub step: usize,
+    pub loss: f64,
+    pub acc: Option<f64>,
+    pub fwd_secs: f64,
+    pub bwd_secs: f64,
+}
+
+/// Result of differentiating one minibatch (exposed for tests: the Seq and
+/// Deer engines must agree on this to forward-tolerance level).
+#[derive(Debug, Clone)]
+pub struct MinibatchGrad {
+    /// Flat `[cell | head]` gradient.
+    pub grad: Vec<f32>,
+    pub loss: f64,
+    pub acc: Option<f64>,
+    pub fwd_secs: f64,
+    pub bwd_secs: f64,
+}
+
+/// The native minibatch trainer.
+pub struct TrainLoop<C: CellGrad<f32>> {
+    pub model: Model<f32, C>,
+    pub data: TrainData,
+    pub cfg: TrainConfig,
+    pub opt: Adam<f32>,
+    pub curve: Vec<CurvePoint>,
+    pub stats: TrainStats,
+    /// Warm-start trajectory cache, persistent across steps/epochs (swapped
+    /// into the per-step [`BatchExecutor`]).
+    cache: WarmStartCache,
+    params: Vec<f32>,
+    order: Vec<usize>,
+    rng: Rng,
+    started: Instant,
+}
+
+impl<C: CellGrad<f32>> TrainLoop<C> {
+    pub fn new(model: Model<f32, C>, data: TrainData, cfg: TrainConfig) -> TrainLoop<C> {
+        assert!(cfg.batch > 0, "batch must be ≥ 1");
+        assert!(
+            data.ds.split_len(Split::Train) >= cfg.batch,
+            "train split ({}) smaller than batch ({})",
+            data.ds.split_len(Split::Train),
+            cfg.batch
+        );
+        if let Some(tg) = &data.targets {
+            assert_eq!(tg.values.len(), data.ds.rows * tg.k, "targets layout ([rows, k])");
+            assert_eq!(tg.k, model.k, "target dim vs head outputs");
+        }
+        let p = model.num_params();
+        let mut params = vec![0.0f32; p];
+        model.write_params(&mut params);
+        let n = model.state_dim();
+        // Cache sized to hold every row's trajectory with headroom, so warm
+        // starts survive whole epochs.
+        let cache_budget = data.ds.rows * (data.ds.t * n * 4 + 128) * 2;
+        let opt = Adam::new(
+            p,
+            AdamConfig { lr: cfg.lr, grad_clip: cfg.grad_clip, ..Default::default() },
+        );
+        let rng = Rng::new(cfg.seed ^ 0x7261_696e);
+        TrainLoop {
+            model,
+            data,
+            cfg,
+            opt,
+            curve: Vec::new(),
+            stats: TrainStats::default(),
+            cache: WarmStartCache::new(cache_budget),
+            params,
+            order: Vec::new(),
+            rng,
+            started: Instant::now(),
+        }
+    }
+
+    /// Flat `[cell | head]` parameters (the optimizer's view).
+    pub fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    /// Warm-start cache hit rate so far.
+    pub fn cache_hit_rate(&self) -> f64 {
+        self.cache.hit_rate()
+    }
+
+    /// Draw the next shuffled minibatch of absolute train-row ids,
+    /// reshuffling (a new epoch) when the current pass is exhausted.
+    fn next_batch(&mut self) -> Vec<usize> {
+        let b = self.cfg.batch;
+        if self.order.len() < b {
+            // train rows are 0..train_len in the loader's 70/15/15 layout
+            let train_len = self.data.ds.split_len(Split::Train);
+            self.order = self.rng.permutation(train_len);
+            self.stats.epochs += 1;
+        }
+        self.order.split_off(self.order.len() - b)
+    }
+
+    /// Forward + backward on explicit rows; does NOT touch the optimizer.
+    /// Public so tests can compare the Seq and Deer gradients directly.
+    pub fn grad_minibatch(&mut self, rows: &[usize]) -> MinibatchGrad {
+        let b = rows.len();
+        let t_len = self.data.ds.t;
+        let n = self.model.state_dim();
+        let (xs, labels) = self.data.ds.gather(rows);
+        let h0s = vec![0.0f32; b * n];
+
+        // ---- forward ----
+        let fwd_start = Instant::now();
+        let (ys, fwd_jac): (Vec<f32>, Option<(Vec<f32>, JacobianStructure)>) = match self.cfg.mode
+        {
+            ForwardMode::Seq => (seq_rnn_batch(&self.model.cell, &h0s, &xs, b), None),
+            ForwardMode::Deer | ForwardMode::QuasiDeer => {
+                let jacobian_mode = match self.cfg.mode {
+                    ForwardMode::QuasiDeer => JacobianMode::DiagonalApprox,
+                    _ => JacobianMode::Full,
+                };
+                let structure = effective_structure(&self.model.cell, jacobian_mode);
+                let jl = structure.jac_len(n);
+                let mut ex = BatchExecutor::new(
+                    &self.model.cell,
+                    t_len,
+                    b,
+                    Duration::from_secs(3600),
+                    0, // replaced by the persistent cache below
+                    1u64 << 40,
+                    self.cfg.threads,
+                );
+                ex.policy.tol_override = self.cfg.tol_override;
+                ex.policy.max_iter = self.cfg.max_iter;
+                ex.policy.jacobian_mode = jacobian_mode;
+                ex.policy.step_clamp = self.cfg.step_clamp;
+                ex.keep_jacobians = self.cfg.reuse_jacobians;
+                std::mem::swap(&mut ex.cache, &mut self.cache);
+
+                let mut replies = Vec::with_capacity(b);
+                for (s, &row) in rows.iter().enumerate() {
+                    let r = ex.submit(
+                        row as u64,
+                        h0s[s * n..(s + 1) * n].to_vec(),
+                        xs[s * t_len * self.data.ds.channels
+                            ..(s + 1) * t_len * self.data.ds.channels]
+                            .to_vec(),
+                    );
+                    replies.extend(r);
+                }
+                replies.extend(ex.flush());
+                std::mem::swap(&mut ex.cache, &mut self.cache);
+                self.stats.batched_solves += ex.stats.batched_solves;
+                self.stats.sequences_solved += ex.stats.sequences_solved;
+                assert_eq!(replies.len(), b, "one reply per minibatch sequence");
+
+                // scatter replies back into submission order; rows may
+                // contain duplicates (grad_minibatch is public), so each
+                // reply claims the first still-unfilled matching slot
+                let mut ys = vec![0.0f32; b * t_len * n];
+                let mut jac =
+                    vec![0.0f32; if self.cfg.reuse_jacobians { b * t_len * jl } else { 0 }];
+                let mut all_jac = self.cfg.reuse_jacobians;
+                let mut filled = vec![false; b];
+                for reply in &replies {
+                    let s = rows
+                        .iter()
+                        .enumerate()
+                        .position(|(k, &r)| !filled[k] && r as u64 == reply.sample_id)
+                        .expect("reply for unknown row");
+                    filled[s] = true;
+                    ys[s * t_len * n..(s + 1) * t_len * n].copy_from_slice(&reply.ys);
+                    match &reply.jacobians {
+                        Some(j) => {
+                            jac[s * t_len * jl..(s + 1) * t_len * jl].copy_from_slice(j)
+                        }
+                        None => all_jac = false,
+                    }
+                    self.stats.newton_iters += reply.iterations as u64;
+                    if reply.warm_started {
+                        self.stats.warm_started += 1;
+                    }
+                    if reply.path == EvalPath::SequentialFallback {
+                        self.stats.fallbacks += 1;
+                    }
+                }
+                (ys, if all_jac { Some((jac, structure)) } else { None })
+            }
+        };
+        let fwd_secs = fwd_start.elapsed().as_secs_f64();
+
+        // ---- loss + head gradients + trajectory cotangents ----
+        let mut gs = vec![0.0f32; b * t_len * n];
+        let mut grad = vec![0.0f32; self.model.num_params()];
+        let pc = self.model.cell.num_params();
+        let (loss, acc) = {
+            let (_, head_tail) = grad.split_at_mut(pc);
+            match &self.data.targets {
+                None => {
+                    let (l, a) =
+                        self.model
+                            .ce_loss_grad(&ys, &labels, t_len, Some((&mut gs[..], head_tail)));
+                    (l, Some(a))
+                }
+                Some(tg) => {
+                    let mut targets = Vec::with_capacity(b * tg.k);
+                    for &row in rows {
+                        targets.extend_from_slice(&tg.values[row * tg.k..(row + 1) * tg.k]);
+                    }
+                    let l = self.model.mse_loss_grad(
+                        &ys,
+                        &targets,
+                        t_len,
+                        Some((&mut gs[..], head_tail)),
+                    );
+                    (l, None)
+                }
+            }
+        };
+
+        // ---- backward: chain gs into the cell parameters ----
+        let bwd_start = Instant::now();
+        match self.cfg.mode {
+            ForwardMode::Seq => {
+                // BPTT, sequential per sequence (the baseline's backward)
+                let m = self.data.ds.channels;
+                let mut dtheta = vec![0.0f32; pc];
+                for s in 0..b {
+                    seq_rnn_backward(
+                        &self.model.cell,
+                        &h0s[s * n..(s + 1) * n],
+                        &xs[s * t_len * m..(s + 1) * t_len * m],
+                        &ys[s * t_len * n..(s + 1) * t_len * n],
+                        &gs[s * t_len * n..(s + 1) * t_len * n],
+                        &mut dtheta,
+                    );
+                }
+                grad[..pc].copy_from_slice(&dtheta);
+            }
+            ForwardMode::Deer | ForwardMode::QuasiDeer => {
+                let structure = match &fwd_jac {
+                    Some((_, st)) => *st,
+                    None => effective_structure(
+                        &self.model.cell,
+                        match self.cfg.mode {
+                            ForwardMode::QuasiDeer => JacobianMode::DiagonalApprox,
+                            _ => JacobianMode::Full,
+                        },
+                    ),
+                };
+                let jac_ref: Option<&[f32]> = fwd_jac.as_ref().map(|(j, _)| &j[..]);
+                let g = deer_rnn_backward_batch(
+                    &self.model.cell,
+                    &h0s,
+                    &xs,
+                    &ys,
+                    &gs,
+                    jac_ref,
+                    structure,
+                    self.cfg.threads,
+                    b,
+                );
+                grad[..pc].copy_from_slice(&g.dtheta);
+            }
+        }
+        let bwd_secs = bwd_start.elapsed().as_secs_f64();
+
+        MinibatchGrad { grad, loss, acc, fwd_secs, bwd_secs }
+    }
+
+    /// One optimizer step on the next shuffled minibatch.
+    pub fn step(&mut self) -> StepStats {
+        let rows = self.next_batch();
+        let mb = self.grad_minibatch(&rows);
+        self.opt.step(&mut self.params, &mb.grad);
+        self.model.load_params(&self.params);
+        self.stats.steps += 1;
+        self.stats.fwd_secs += mb.fwd_secs;
+        self.stats.bwd_secs += mb.bwd_secs;
+        let stats = StepStats {
+            step: self.stats.steps,
+            loss: mb.loss,
+            acc: mb.acc,
+            fwd_secs: mb.fwd_secs,
+            bwd_secs: mb.bwd_secs,
+        };
+        self.curve.push(CurvePoint {
+            step: self.stats.steps,
+            wall_secs: self.started.elapsed().as_secs_f64(),
+            loss: mb.loss,
+            acc: mb.acc,
+        });
+        stats
+    }
+
+    /// Run `steps` optimizer steps; returns the last step's stats.
+    pub fn run(&mut self, steps: usize) -> Option<StepStats> {
+        let mut last = None;
+        for _ in 0..steps {
+            last = Some(self.step());
+        }
+        last
+    }
+
+    /// Evaluate a split with the exact sequential forward (no gradients, no
+    /// cache pollution): returns `(mean loss, accuracy)` — accuracy `None`
+    /// for regression tasks.
+    pub fn eval(&self, split: Split) -> (f64, Option<f64>) {
+        let t_len = self.data.ds.t;
+        let n = self.model.state_dim();
+        let h0 = vec![0.0f32; n];
+        let mut loss_sum = 0.0f64;
+        let mut acc_sum = 0.0f64;
+        let mut rows = 0usize;
+        for chunk in self.data.ds.batches(split, 1) {
+            let row = chunk[0];
+            let ys = seq_rnn(&self.model.cell, &h0, self.data.ds.row(row));
+            match &self.data.targets {
+                None => {
+                    let (l, a) =
+                        self.model
+                            .ce_loss_grad(&ys, &[self.data.ds.labels[row]], t_len, None);
+                    loss_sum += l;
+                    acc_sum += a;
+                }
+                Some(tg) => {
+                    let l = self.model.mse_loss_grad(
+                        &ys,
+                        &tg.values[row * tg.k..(row + 1) * tg.k],
+                        t_len,
+                        None,
+                    );
+                    loss_sum += l;
+                }
+            }
+            rows += 1;
+        }
+        let rows = rows.max(1) as f64;
+        (
+            loss_sum / rows,
+            self.data.targets.is_none().then_some(acc_sum / rows),
+        )
+    }
+}
+
+/// Synthetic EigenWorms classification task (§4.3 substrate): `rows`
+/// sequences of length `t` with 6 channels, 5 classes, 70/15/15 split.
+pub fn worms_task(rows: usize, t: usize, seed: u64) -> TrainData {
+    let (xs, labels) = crate::data::worms::generate(rows, t, seed);
+    TrainData {
+        ds: Dataset::new(xs, labels, t, crate::data::worms::CHANNELS),
+        targets: None,
+    }
+}
+
+/// Two-body energy-regression task (§4.2 substrate): the model reads the
+/// 8-channel state trajectory and regresses the (conserved) total energy —
+/// a mean-pool + MSE workload for the regression head.
+pub fn twobody_task(rows: usize, t: usize, seed: u64) -> TrainData {
+    let xs = crate::data::twobody::generate(rows, 10.0, t, seed);
+    let mut targets = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let s0: Vec<f64> = xs[r * t * crate::data::twobody::STATE
+            ..r * t * crate::data::twobody::STATE + crate::data::twobody::STATE]
+            .iter()
+            .map(|&v| v as f64)
+            .collect();
+        targets.push(crate::data::twobody::energy(&s0) as f32);
+    }
+    TrainData {
+        ds: Dataset::new(xs, vec![0; rows], t, crate::data::twobody::STATE),
+        targets: Some(Targets { k: 1, values: targets }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::Gru;
+    use crate::train::native::model::Readout;
+
+    fn tiny_loop(mode: ForwardMode, seed: u64) -> TrainLoop<Gru<f32>> {
+        let mut rng = Rng::new(seed);
+        let cell: Gru<f32> = Gru::new(4, crate::data::worms::CHANNELS, &mut rng);
+        let model = Model::new(cell, crate::data::worms::CLASSES, Readout::LastState, &mut rng);
+        let data = worms_task(16, 24, 7);
+        TrainLoop::new(
+            model,
+            data,
+            TrainConfig { mode, batch: 4, seed, ..Default::default() },
+        )
+    }
+
+    #[test]
+    fn steps_advance_and_curve_grows() {
+        let mut tl = tiny_loop(ForwardMode::Seq, 1);
+        let s = tl.run(3).unwrap();
+        assert_eq!(s.step, 3);
+        assert_eq!(tl.curve.len(), 3);
+        assert!(tl.curve.iter().all(|p| p.loss.is_finite()));
+        assert_eq!(tl.stats.steps, 3);
+        assert!(tl.stats.epochs >= 1);
+    }
+
+    #[test]
+    fn deer_mode_issues_one_fused_solve_per_step() {
+        let mut tl = tiny_loop(ForwardMode::Deer, 2);
+        tl.run(4).unwrap();
+        assert_eq!(tl.stats.batched_solves, 4, "one fused solve per minibatch");
+        assert_eq!(tl.stats.sequences_solved, 16);
+        assert_eq!(tl.stats.fallbacks, 0);
+    }
+
+    #[test]
+    fn warm_start_kicks_in_after_first_epoch() {
+        // 16 train-rows... train split of 16 rows = 11; batch 4 → ~3 steps
+        // per epoch; by step 7 every row has been revisited at least once.
+        let mut tl = tiny_loop(ForwardMode::Deer, 3);
+        tl.run(8).unwrap();
+        assert!(
+            tl.stats.warm_started > 0,
+            "revisited rows must warm-start from the trajectory cache"
+        );
+        assert!(tl.cache_hit_rate() > 0.0);
+    }
+
+    #[test]
+    fn params_round_trip_through_optimizer() {
+        let mut tl = tiny_loop(ForwardMode::Seq, 4);
+        let before = tl.params().to_vec();
+        tl.step();
+        let after = tl.params().to_vec();
+        assert_ne!(before, after, "optimizer must move the parameters");
+        // the model's own view agrees with the flat vector
+        let mut flat = vec![0.0f32; tl.model.num_params()];
+        tl.model.write_params(&mut flat);
+        assert_eq!(flat, after);
+    }
+
+    #[test]
+    fn regression_task_trains() {
+        let mut rng = Rng::new(5);
+        let cell: Gru<f32> = Gru::new(4, crate::data::twobody::STATE, &mut rng);
+        let model = Model::new(cell, 1, Readout::MeanPool, &mut rng);
+        let data = twobody_task(12, 32, 9);
+        let mut tl = TrainLoop::new(
+            model,
+            data,
+            TrainConfig { mode: ForwardMode::Deer, batch: 4, ..Default::default() },
+        );
+        let s = tl.run(3).unwrap();
+        assert!(s.loss.is_finite());
+        assert!(s.acc.is_none(), "regression reports no accuracy");
+        let (eval_loss, eval_acc) = tl.eval(Split::Val);
+        assert!(eval_loss.is_finite());
+        assert!(eval_acc.is_none());
+    }
+
+    #[test]
+    fn forward_mode_parse() {
+        assert_eq!(ForwardMode::parse("seq").unwrap(), ForwardMode::Seq);
+        assert_eq!(ForwardMode::parse("deer").unwrap(), ForwardMode::Deer);
+        assert_eq!(ForwardMode::parse("quasi").unwrap(), ForwardMode::QuasiDeer);
+        assert!(ForwardMode::parse("xla").is_err());
+    }
+}

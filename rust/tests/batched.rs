@@ -174,3 +174,137 @@ fn masking_mixes_easy_and_straggler_sequences() {
         full.sweeps
     );
 }
+
+/// The fused batched cell overrides (batch axis folded into the gate
+/// matmuls) must be **bitwise** equal to the looped per-element reference —
+/// `step_batch` vs `step`, `jacobian_batch` vs `jacobian`, the FUNCEVAL
+/// hot kernel `jacobian_pre_batch` vs `jacobian_pre`, and (IndRNN) the
+/// packed-diagonal pair `jacobian_diag_batch` / `jacobian_diag_pre_batch`
+/// vs their looped defaults — at several shapes. This is the contract that
+/// lets the DEER driver dispatch between the fused gathered path and the
+/// per-element chunked path without changing results.
+#[test]
+fn fused_batched_cell_overrides_match_looped_bitwise() {
+    fn check<C: Cell<f64>>(name: &str, cell: &C, batch: usize, seed: u64) {
+        let n = cell.state_dim();
+        let m = cell.input_dim();
+        let mut rng = Rng::new(seed);
+        let mut hs = vec![0.0f64; batch * n];
+        let mut xs = vec![0.0f64; batch * m];
+        rng.fill_normal(&mut hs, 0.8);
+        rng.fill_normal(&mut xs, 1.0);
+        let mut ws = vec![0.0f64; cell.ws_len()];
+
+        let mut f_fused = vec![0.0f64; batch * n];
+        cell.step_batch(&hs, &xs, &mut f_fused, &mut ws, batch);
+        let mut jf_fused = vec![0.0f64; batch * n];
+        let mut jac_fused = vec![0.0f64; batch * n * n];
+        cell.jacobian_batch(&hs, &xs, &mut jf_fused, &mut jac_fused, &mut ws, batch);
+
+        // precomputed-input projections, per element (T = 1 slices)
+        let pl = cell.x_precompute_len();
+        let mut pres = vec![0.0f64; batch * pl];
+        for s in 0..batch {
+            cell.precompute_x(&xs[s * m..(s + 1) * m], &mut pres[s * pl..(s + 1) * pl]);
+        }
+        let mut pf_fused = vec![0.0f64; batch * n];
+        let mut pjac_fused = vec![0.0f64; batch * n * n];
+        if pl > 0 {
+            cell.jacobian_pre_batch(&hs, &pres, &mut pf_fused, &mut pjac_fused, &mut ws, batch);
+        }
+
+        for s in 0..batch {
+            let h = &hs[s * n..(s + 1) * n];
+            let x = &xs[s * m..(s + 1) * m];
+            let mut f = vec![0.0f64; n];
+            cell.step(h, x, &mut f, &mut ws);
+            assert_eq!(&f_fused[s * n..(s + 1) * n], &f[..], "{name} step_batch seq {s}");
+            let mut jac = vec![0.0f64; n * n];
+            cell.jacobian(h, x, &mut f, &mut jac, &mut ws);
+            assert_eq!(
+                &jf_fused[s * n..(s + 1) * n],
+                &f[..],
+                "{name} jacobian_batch f seq {s}"
+            );
+            assert_eq!(
+                &jac_fused[s * n * n..(s + 1) * n * n],
+                &jac[..],
+                "{name} jacobian_batch seq {s}"
+            );
+            if pl > 0 {
+                // the FUNCEVAL hot kernel vs the looped pre reference —
+                // and both must equal the direct path bitwise (GRU and
+                // IndRNN accumulate bias + input projection first)
+                let mut pf = vec![0.0f64; n];
+                let mut pjac = vec![0.0f64; n * n];
+                cell.jacobian_pre(h, &pres[s * pl..(s + 1) * pl], &mut pf, &mut pjac, &mut ws);
+                assert_eq!(&pf[..], &f[..], "{name} jacobian_pre f vs direct seq {s}");
+                assert_eq!(&pjac[..], &jac[..], "{name} jacobian_pre vs direct seq {s}");
+                assert_eq!(
+                    &pf_fused[s * n..(s + 1) * n],
+                    &pf[..],
+                    "{name} jacobian_pre_batch f seq {s}"
+                );
+                assert_eq!(
+                    &pjac_fused[s * n * n..(s + 1) * n * n],
+                    &pjac[..],
+                    "{name} jacobian_pre_batch seq {s}"
+                );
+            }
+        }
+    }
+
+    let mut rng = Rng::new(31);
+    for &(n, m, b) in &[(1usize, 1usize, 1usize), (3, 2, 4), (8, 5, 3), (4, 4, 7)] {
+        let gru: Gru<f64> = Gru::new(n, m, &mut rng);
+        check("gru", &gru, b, 900 + n as u64);
+        let ind: IndRnn<f64> = IndRnn::new(n, m, &mut rng);
+        check("indrnn", &ind, b, 950 + n as u64);
+
+        // packed-diagonal fused kernels on the natively diagonal cell:
+        // direct, and the FUNCEVAL hot pre variant
+        let mut hs = vec![0.0f64; b * n];
+        let mut xs = vec![0.0f64; b * m];
+        let mut r2 = Rng::new(990 + n as u64);
+        r2.fill_normal(&mut hs, 0.8);
+        r2.fill_normal(&mut xs, 1.0);
+        let mut ws = vec![0.0f64; ind.ws_len()];
+        let mut f_fused = vec![0.0f64; b * n];
+        let mut jd_fused = vec![0.0f64; b * n];
+        ind.jacobian_diag_batch(&hs, &xs, &mut f_fused, &mut jd_fused, &mut ws, b);
+        let pl = ind.x_precompute_len();
+        let mut pres = vec![0.0f64; b * pl];
+        for s in 0..b {
+            ind.precompute_x(&xs[s * m..(s + 1) * m], &mut pres[s * pl..(s + 1) * pl]);
+        }
+        let mut pf_fused = vec![0.0f64; b * n];
+        let mut pjd_fused = vec![0.0f64; b * n];
+        ind.jacobian_diag_pre_batch(&hs, &pres, &mut pf_fused, &mut pjd_fused, &mut ws, b);
+        for s in 0..b {
+            let mut f = vec![0.0f64; n];
+            let mut jd = vec![0.0f64; n];
+            ind.jacobian_diag(&hs[s * n..(s + 1) * n], &xs[s * m..(s + 1) * m], &mut f, &mut jd, &mut ws);
+            assert_eq!(&f_fused[s * n..(s + 1) * n], &f[..], "indrnn diag f seq {s}");
+            assert_eq!(&jd_fused[s * n..(s + 1) * n], &jd[..], "indrnn diag jd seq {s}");
+            let mut pf = vec![0.0f64; n];
+            let mut pjd = vec![0.0f64; n];
+            ind.jacobian_diag_pre(&hs[s * n..(s + 1) * n], &pres[s * pl..(s + 1) * pl], &mut pf, &mut pjd, &mut ws);
+            assert_eq!(&pf[..], &f[..], "indrnn diag pre f vs direct seq {s}");
+            assert_eq!(&pjd[..], &jd[..], "indrnn diag pre jd vs direct seq {s}");
+            assert_eq!(&pf_fused[s * n..(s + 1) * n], &pf[..], "indrnn diag pre_batch f seq {s}");
+            assert_eq!(&pjd_fused[s * n..(s + 1) * n], &pjd[..], "indrnn diag pre_batch jd seq {s}");
+        }
+    }
+
+    // the fused kernels also back the batched sequential baseline
+    let gru: Gru<f64> = Gru::new(4, 3, &mut rng);
+    let (t, b) = (60usize, 3usize);
+    let mut xs = vec![0.0f64; b * t * 3];
+    rng.fill_normal(&mut xs, 1.0);
+    let h0s = vec![0.0f64; b * 4];
+    let batched = deer::deer::seq::seq_rnn_batch(&gru, &h0s, &xs, b);
+    for s in 0..b {
+        let solo = seq_rnn(&gru, &h0s[s * 4..(s + 1) * 4], &xs[s * t * 3..(s + 1) * t * 3]);
+        assert_eq!(&batched[s * t * 4..(s + 1) * t * 4], &solo[..], "seq_rnn_batch seq {s}");
+    }
+}

@@ -1,0 +1,247 @@
+//! Central-difference gradient checks of the training stack (tier-1 sized:
+//! small n/T, f64).
+//!
+//! Two layers are pinned:
+//!
+//! 1. `deer_rnn_backward_batch` — dθ and dh0 against finite differences of
+//!    the scalar loss `L(θ) = Σ_{s,i} g_{s,i} · y_{s,i}(θ)` for GRU (dense
+//!    dual scan) and IndRNN (packed-diagonal dual scan, exact).
+//! 2. the model head — the full flat `[cell | head]` gradient assembled the
+//!    way the training loop assembles it (model cotangents `gs` chained
+//!    through the DEER backward pass + analytic head grads) against finite
+//!    differences of the end-to-end loss, for the GRU last-state
+//!    cross-entropy classifier and the IndRNN mean-pool MSE regressor.
+//!
+//! Acceptance bar: relative error < 1e-3 on every component.
+
+use deer::cells::{CellGrad, Gru, IndRnn, JacobianStructure};
+use deer::deer::grad::deer_rnn_backward_batch;
+use deer::deer::seq::seq_rnn;
+use deer::train::native::{Model, Readout};
+use deer::util::rng::Rng;
+
+const REL_TOL: f64 = 1e-3;
+const EPS: f64 = 1e-6;
+
+fn assert_close(got: f64, want: f64, what: &str) {
+    assert!(
+        (got - want).abs() < REL_TOL * (1.0 + want.abs()),
+        "{what}: analytic {got} vs fd {want}"
+    );
+}
+
+/// Forward all B sequences sequentially (the exact trajectory) and return
+/// `Σ g·y`.
+fn dot_loss<C: CellGrad<f64>>(
+    cell: &C,
+    h0s: &[f64],
+    xs: &[f64],
+    gs: &[f64],
+    batch: usize,
+) -> f64 {
+    let n = cell.state_dim();
+    let m = cell.input_dim();
+    let t_len = xs.len() / (batch * m);
+    let mut loss = 0.0;
+    for s in 0..batch {
+        let ys = seq_rnn(cell, &h0s[s * n..(s + 1) * n], &xs[s * t_len * m..(s + 1) * t_len * m]);
+        for (y, g) in ys.iter().zip(&gs[s * t_len * n..(s + 1) * t_len * n]) {
+            loss += y * g;
+        }
+    }
+    loss
+}
+
+fn check_backward_batch_fd<C: CellGrad<f64> + Clone>(
+    cell: &C,
+    structure: JacobianStructure,
+    seed: u64,
+) {
+    let n = cell.state_dim();
+    let m = cell.input_dim();
+    let (batch, t_len) = (2usize, 10usize);
+    let mut rng = Rng::new(seed);
+    let mut xs = vec![0.0f64; batch * t_len * m];
+    let mut h0s = vec![0.0f64; batch * n];
+    let mut gs = vec![0.0f64; batch * t_len * n];
+    rng.fill_normal(&mut xs, 1.0);
+    rng.fill_normal(&mut h0s, 0.4);
+    rng.fill_normal(&mut gs, 1.0);
+
+    // exact trajectories, then the batched DEER backward pass
+    let mut ys = vec![0.0f64; batch * t_len * n];
+    for s in 0..batch {
+        let y = seq_rnn(cell, &h0s[s * n..(s + 1) * n], &xs[s * t_len * m..(s + 1) * t_len * m]);
+        ys[s * t_len * n..(s + 1) * t_len * n].copy_from_slice(&y);
+    }
+    let g = deer_rnn_backward_batch(cell, &h0s, &xs, &ys, &gs, None, structure, 1, batch);
+
+    // dθ vs central differences over every parameter
+    for j in 0..cell.num_params() {
+        let mut cp = cell.clone();
+        let mut cm = cell.clone();
+        cp.params_mut()[j] += EPS;
+        cm.params_mut()[j] -= EPS;
+        let fd = (dot_loss(&cp, &h0s, &xs, &gs, batch) - dot_loss(&cm, &h0s, &xs, &gs, batch))
+            / (2.0 * EPS);
+        assert_close(g.dtheta[j], fd, &format!("dtheta[{j}]"));
+    }
+    // dh0 vs central differences per sequence and component
+    for j in 0..batch * n {
+        let mut hp = h0s.clone();
+        let mut hm = h0s.clone();
+        hp[j] += EPS;
+        hm[j] -= EPS;
+        let fd = (dot_loss(cell, &hp, &xs, &gs, batch) - dot_loss(cell, &hm, &xs, &gs, batch))
+            / (2.0 * EPS);
+        assert_close(g.dh0s[j], fd, &format!("dh0s[{j}]"));
+    }
+}
+
+#[test]
+fn backward_batch_matches_fd_gru_dense() {
+    let mut rng = Rng::new(101);
+    let cell: Gru<f64> = Gru::new(3, 2, &mut rng);
+    check_backward_batch_fd(&cell, JacobianStructure::Dense, 201);
+}
+
+#[test]
+fn backward_batch_matches_fd_indrnn_diagonal() {
+    let mut rng = Rng::new(102);
+    let cell: IndRnn<f64> = IndRnn::new(4, 2, &mut rng);
+    check_backward_batch_fd(&cell, JacobianStructure::Diagonal, 202);
+}
+
+// ---- end-to-end model gradients (head + chaining) ----
+
+enum Task {
+    Classify(Vec<i32>),
+    Regress(Vec<f64>),
+}
+
+/// Forward + loss exactly as the training loop computes it (but with the
+/// exact sequential trajectory, so FD is well-defined).
+fn model_loss<C: CellGrad<f64> + Clone>(
+    model: &Model<f64, C>,
+    xs: &[f64],
+    task: &Task,
+    batch: usize,
+    t_len: usize,
+) -> f64 {
+    let n = model.state_dim();
+    let m = model.cell.input_dim();
+    let h0 = vec![0.0f64; n];
+    let mut ys = vec![0.0f64; batch * t_len * n];
+    for s in 0..batch {
+        let y = seq_rnn(&model.cell, &h0, &xs[s * t_len * m..(s + 1) * t_len * m]);
+        ys[s * t_len * n..(s + 1) * t_len * n].copy_from_slice(&y);
+    }
+    match task {
+        Task::Classify(labels) => model.ce_loss_grad(&ys, labels, t_len, None).0,
+        Task::Regress(targets) => model.mse_loss_grad(&ys, targets, t_len, None),
+    }
+}
+
+/// Full flat gradient, assembled the way `TrainLoop::grad_minibatch` does:
+/// model cotangents → `deer_rnn_backward_batch` → `[dθ_cell | dθ_head]`.
+fn model_flat_grad<C: CellGrad<f64> + Clone>(
+    model: &Model<f64, C>,
+    xs: &[f64],
+    task: &Task,
+    structure: JacobianStructure,
+    batch: usize,
+    t_len: usize,
+) -> Vec<f64> {
+    let n = model.state_dim();
+    let m = model.cell.input_dim();
+    let h0s = vec![0.0f64; batch * n];
+    let mut ys = vec![0.0f64; batch * t_len * n];
+    for s in 0..batch {
+        let y = seq_rnn(&model.cell, &h0s[..n], &xs[s * t_len * m..(s + 1) * t_len * m]);
+        ys[s * t_len * n..(s + 1) * t_len * n].copy_from_slice(&y);
+    }
+    let pc = model.cell.num_params();
+    let mut grad = vec![0.0f64; model.num_params()];
+    let mut gs = vec![0.0f64; batch * t_len * n];
+    {
+        let (_, head_tail) = grad.split_at_mut(pc);
+        match task {
+            Task::Classify(labels) => {
+                model.ce_loss_grad(&ys, labels, t_len, Some((&mut gs[..], head_tail)));
+            }
+            Task::Regress(targets) => {
+                model.mse_loss_grad(&ys, targets, t_len, Some((&mut gs[..], head_tail)));
+            }
+        }
+    }
+    let g = deer_rnn_backward_batch(&model.cell, &h0s, &xs, &ys, &gs, None, structure, 1, batch);
+    grad[..pc].copy_from_slice(&g.dtheta);
+    grad
+}
+
+fn check_model_fd<C: CellGrad<f64> + Clone>(
+    model: &Model<f64, C>,
+    task: &Task,
+    structure: JacobianStructure,
+    seed: u64,
+) {
+    let m = model.cell.input_dim();
+    let (batch, t_len) = (2usize, 8usize);
+    let mut rng = Rng::new(seed);
+    let mut xs = vec![0.0f64; batch * t_len * m];
+    rng.fill_normal(&mut xs, 1.0);
+
+    let grad = model_flat_grad(model, &xs, task, structure, batch, t_len);
+    let p = model.num_params();
+    let mut flat = vec![0.0f64; p];
+    model.write_params(&mut flat);
+    for j in 0..p {
+        let mut mp = model.clone();
+        let mut mm = model.clone();
+        let mut fp = flat.clone();
+        let mut fm = flat.clone();
+        fp[j] += EPS;
+        fm[j] -= EPS;
+        mp.load_params(&fp);
+        mm.load_params(&fm);
+        let fd = (model_loss(&mp, &xs, task, batch, t_len)
+            - model_loss(&mm, &xs, task, batch, t_len))
+            / (2.0 * EPS);
+        assert_close(grad[j], fd, &format!("flat grad[{j}]"));
+    }
+}
+
+/// §4.3-shaped head: GRU → last hidden state → linear → cross-entropy.
+#[test]
+fn model_grad_matches_fd_gru_lasthidden_ce() {
+    let mut rng = Rng::new(103);
+    let cell: Gru<f64> = Gru::new(3, 2, &mut rng);
+    let model = Model::new(cell, 3, Readout::LastState, &mut rng);
+    let task = Task::Classify(vec![0, 2]);
+    check_model_fd(&model, &task, JacobianStructure::Dense, 203);
+}
+
+/// Regression head: IndRNN → mean pool → linear → MSE, through the exact
+/// packed-diagonal dual scan.
+#[test]
+fn model_grad_matches_fd_indrnn_meanpool_mse() {
+    let mut rng = Rng::new(104);
+    let cell: IndRnn<f64> = IndRnn::new(4, 3, &mut rng);
+    let model = Model::new(cell, 2, Readout::MeanPool, &mut rng);
+    let task = Task::Regress(vec![0.3, -0.7, 1.1, 0.2]);
+    check_model_fd(&model, &task, JacobianStructure::Diagonal, 204);
+}
+
+/// MeanPool + CE and LastState + MSE cross-pairings also chain correctly
+/// (the readout and the loss are independent axes).
+#[test]
+fn model_grad_matches_fd_cross_pairings() {
+    let mut rng = Rng::new(105);
+    let cell: Gru<f64> = Gru::new(2, 2, &mut rng);
+    let model = Model::new(cell, 2, Readout::MeanPool, &mut rng);
+    check_model_fd(&model, &Task::Classify(vec![1, 0]), JacobianStructure::Dense, 205);
+
+    let cell2: IndRnn<f64> = IndRnn::new(3, 2, &mut rng);
+    let model2 = Model::new(cell2, 1, Readout::LastState, &mut rng);
+    check_model_fd(&model2, &Task::Regress(vec![0.5, -0.25]), JacobianStructure::Diagonal, 206);
+}

@@ -21,6 +21,8 @@ DEER_BENCH_FAST=1 cargo run --release --bin deer -- \
     bench --exp scan --scan-out "$FRESH_DIR/BENCH_scan.json" --results results/compare
 DEER_BENCH_FAST=1 cargo run --release --bin deer -- \
     bench --exp batch --batch-out "$FRESH_DIR/BENCH_batch.json" --results results/compare
+DEER_BENCH_FAST=1 cargo run --release --bin deer -- \
+    bench --exp train --train-out "$FRESH_DIR/BENCH_train.json" --results results/compare
 
 python3 - "$ROOT" "$FRESH_DIR" "$THRESHOLD" <<'EOF'
 import json, os, sys
@@ -30,11 +32,14 @@ root, fresh_dir, threshold = sys.argv[1], sys.argv[2], float(sys.argv[3])
 COST_FIELDS = (
     "dense_ns_per_step", "diag_ns_per_step",
     "looped_ns_per_step", "looped_pool_ns_per_step", "batched_ns_per_step",
+    "seq_step_ns", "deer_step_ns", "quasi_step_ns",
 )
 
 failures, compared = [], 0
-for name in ("BENCH_scan.json", "BENCH_batch.json"):
+had_baseline = {}
+for name in ("BENCH_scan.json", "BENCH_batch.json", "BENCH_train.json"):
     base_path = os.path.join(root, name)
+    had_baseline[name] = os.path.exists(base_path)
     fresh_path = os.path.join(fresh_dir, name)
     if not os.path.exists(fresh_path):
         failures.append(f"{name}: fresh bench run produced no file")
@@ -64,6 +69,32 @@ for name in ("BENCH_scan.json", "BENCH_batch.json"):
                 if delta > threshold:
                     failures.append(
                         f"{name} n={key[0]} T={key[1]} {field}: +{delta:.1f}% > {threshold}%")
+
+# Training acceptance gate: at T ≥ 4096 the fused DEER optimizer step must
+# beat sequential BPTT wall-clock on this machine. Only enforced once a
+# committed BENCH_train.json baseline exists — a seed run on a fresh (or
+# noisy) machine class reports the ratios and stays green, so the CI
+# "no baseline ⇒ seed and pass" contract holds for the fast 2-step grid.
+train_path = os.path.join(fresh_dir, "BENCH_train.json")
+if os.path.exists(train_path):
+    enforce = had_baseline["BENCH_train.json"]
+    with open(train_path) as f:
+        doc = json.load(f)
+    gated = 0
+    for p in doc.get("points", []):
+        if p["t"] >= 4096:
+            gated += 1
+            slow = p["deer_step_ns"] >= p["seq_step_ns"]
+            tag = "REGRESSION" if slow and enforce else ("slow (advisory)" if slow else "ok")
+            print(f"train gate n={p['n']} T={p['t']}: seq {p['seq_step_ns']/1e6:.1f} ms/step, "
+                  f"deer {p['deer_step_ns']/1e6:.1f} ms/step "
+                  f"({p['deer_speedup']:.2f}x) {tag}")
+            if slow and enforce:
+                failures.append(
+                    f"BENCH_train.json T={p['t']}: DEER step not faster than seq-BPTT "
+                    f"({p['deer_speedup']:.2f}x)")
+    if gated == 0 and enforce:
+        failures.append("BENCH_train.json: no T >= 4096 point to gate on")
 
 print()
 if failures:
