@@ -1,7 +1,12 @@
 //! LEM — Long Expressive Memory (Rusch et al., 2021). The paper reproduces
 //! LEM on EigenWorms (Table 1, "our reproducibility attempt") and uses it for
 //! the equal-memory comparison of Fig. 8; DEER applies to it unchanged since
-//! it is a plain non-linear recurrence over the packed state `s = [y, z]`.
+//! it is a plain non-linear recurrence over the packed state, stored
+//! **interleaved**: `s = [y_0, z_0, y_1, z_1, …]`, so each unit's coupled
+//! `(y_i, z_i)` pair occupies one contiguous 2-slot block (the `Block(2)`
+//! pairing the packed [`Cell::jacobian_block`] kernels exploit — exact when
+//! the recurrent matrices `V_k` are diagonal, the `BlockApprox` quasi mode
+//! otherwise).
 //!
 //! Discretised equations (Δt = 1):
 //!
@@ -11,13 +16,16 @@
 //! z' = (1 − Δ̄t) ⊙ z + Δ̄t ⊙ tanh(W_z x + V_z y + b_z)
 //! y' = (1 − Δ̂t) ⊙ y + Δ̂t ⊙ tanh(W_y x + V_y z' + b_y)
 //! ```
+//!
+//! The four input projections `W_k x + b_k` are trajectory-invariant, so
+//! the cell supports [`Cell::precompute_x`] (4n per step).
 
-use super::{init_uniform, sigmoid, Cell, CellGrad};
+use super::{init_uniform, sigmoid, Cell, CellGrad, JacobianStructure};
 use crate::util::rng::Rng;
 use crate::util::scalar::Scalar;
 
 /// LEM cell with `n` units per branch and `m` inputs; `state_dim() = 2n`
-/// (packed `[y, z]`).
+/// (interleaved `[y_0, z_0, y_1, z_1, …]`).
 ///
 /// Parameter layout: `[W₁, W₂, W_z, W_y] (4·n·m)`, `[V₁, V₂, V_z, V_y]
 /// (4·n·n)`, `[b₁, b₂, b_z, b_y] (4·n)`.
@@ -29,6 +37,11 @@ pub struct Lem<S> {
 }
 
 const K: usize = 4; // dt1, dt2, z-branch, y-branch
+
+// Workspace layout (ws_len = 8n):
+// [dt1, dt2, gz, zp, gy] (5n) | unpacked y (n) | ws[6n..8n]: z'-staging for
+// the y-branch during forward_ws, then block scratch c1s/c2s in
+// jacobian_block_from_ws (the two uses never overlap in time)
 
 impl<S: Scalar> Lem<S> {
     pub fn new(n: usize, m: usize, rng: &mut Rng) -> Self {
@@ -66,17 +79,29 @@ impl<S: Scalar> Lem<S> {
         K * (self.n * self.m + self.n * self.n) + k * self.n
     }
 
-    /// `a = W_k x + V_k q + b_k` where q is y (k<3) or z' (k=3).
+    /// `a = W_k x + V_k q + b_k` where q is y (k<3) or z' (k=3). The
+    /// `W_k x + b_k` base is either computed inline from `x` (`pre_k =
+    /// None`) or read from the trajectory-invariant projections of
+    /// [`Cell::precompute_x`] (`pre_k = Some`, `x` unused) — ONE
+    /// implementation owns the bitwise-sensitive accumulation order
+    /// (bias + W·x first, then V·q), so the two paths cannot drift.
     #[inline]
-    fn branch(&self, k: usize, q: &[S], x: &[S], out: &mut [S]) {
+    fn branch(&self, k: usize, q: &[S], x: &[S], pre_k: Option<&[S]>, out: &mut [S]) {
         let (n, m) = (self.n, self.m);
-        let (w, v, b) = (self.w(k), self.v(k), self.b(k));
+        let v = self.v(k);
         for i in 0..n {
-            let mut a = b[i];
-            let roww = &w[i * m..(i + 1) * m];
-            for j in 0..m {
-                a += roww[j] * x[j];
-            }
+            let mut a = match pre_k {
+                Some(p) => p[i],
+                None => {
+                    let (w, b) = (self.w(k), self.b(k));
+                    let mut a = b[i];
+                    let roww = &w[i * m..(i + 1) * m];
+                    for j in 0..m {
+                        a += roww[j] * x[j];
+                    }
+                    a
+                }
+            };
             let rowv = &v[i * n..(i + 1) * n];
             for j in 0..n {
                 a += rowv[j] * q[j];
@@ -85,65 +110,54 @@ impl<S: Scalar> Lem<S> {
         }
     }
 
-    /// Fill ws: [dt1, dt2, gz, zp, gy] (5n). gz = tanh(z-branch), gy uses z'.
+    /// Fill ws[..5n]: [dt1, dt2, gz, zp, gy], plus the unpacked contiguous
+    /// y copy at ws[5n..6n]. gz = tanh(z-branch), gy uses z'. `z_i` is read
+    /// straight from the interleaved state (`s[2i+1]`). `pre` selects the
+    /// direct (`None`, from `x`) or precomputed-projection path per
+    /// [`Lem::branch`].
     #[inline]
-    fn forward_ws(&self, s: &[S], x: &[S], ws: &mut [S]) {
+    fn forward_ws(&self, s: &[S], x: &[S], pre: Option<&[S]>, ws: &mut [S]) {
         let n = self.n;
-        let y = &s[..n];
-        let z = &s[n..2 * n];
-        // split ws into 5 segments; compute in-place sequentially
+        let (work, tail) = ws.split_at_mut(5 * n);
+        let (ybuf, zbuf_tail) = tail.split_at_mut(n);
+        for i in 0..n {
+            ybuf[i] = s[2 * i];
+        }
+        let ybuf = &ybuf[..];
         {
-            let (dt1, rest) = ws.split_at_mut(n);
+            let (dt1, rest) = work.split_at_mut(n);
             let (dt2, rest) = rest.split_at_mut(n);
             let (gz, rest) = rest.split_at_mut(n);
             let (zp, _) = rest.split_at_mut(n);
-            self.branch(0, y, x, dt1);
-            self.branch(1, y, x, dt2);
-            self.branch(2, y, x, gz);
+            self.branch(0, ybuf, x, pre.map(|p| &p[..n]), dt1);
+            self.branch(1, ybuf, x, pre.map(|p| &p[n..2 * n]), dt2);
+            self.branch(2, ybuf, x, pre.map(|p| &p[2 * n..3 * n]), gz);
             for i in 0..n {
                 dt1[i] = sigmoid(dt1[i]);
                 dt2[i] = sigmoid(dt2[i]);
                 gz[i] = gz[i].tanh();
-                zp[i] = (S::one() - dt1[i]) * z[i] + dt1[i] * gz[i];
+                zp[i] = (S::one() - dt1[i]) * s[2 * i + 1] + dt1[i] * gz[i];
             }
         }
-        let zp_copy: Vec<S> = ws[3 * n..4 * n].to_vec();
-        let gy = &mut ws[4 * n..5 * n];
-        self.branch(3, &zp_copy, x, gy);
+        // z' feeds the y-branch as its carrier; stage it in the workspace
+        // tail (ws[6n..7n], dead outside this call) — no allocation on the
+        // FUNCEVAL hot path.
+        let zbuf = &mut zbuf_tail[..n];
+        zbuf.copy_from_slice(&work[3 * n..4 * n]);
+        let zbuf = &zbuf[..];
+        let gy = &mut work[4 * n..5 * n];
+        self.branch(3, zbuf, x, pre.map(|p| &p[3 * n..4 * n]), gy);
         for g in gy.iter_mut() {
             *g = g.tanh();
         }
     }
-}
 
-impl<S: Scalar> Cell<S> for Lem<S> {
-    fn state_dim(&self) -> usize {
-        2 * self.n
-    }
-    fn input_dim(&self) -> usize {
-        self.m
-    }
-    fn ws_len(&self) -> usize {
-        5 * self.n
-    }
-
-    fn step(&self, s: &[S], x: &[S], out: &mut [S], ws: &mut [S]) {
-        let n = self.n;
-        self.forward_ws(s, x, ws);
-        let y = &s[..n];
-        for i in 0..n {
-            let dt2 = ws[n + i];
-            out[i] = (S::one() - dt2) * y[i] + dt2 * ws[4 * n + i]; // y'
-            out[n + i] = ws[3 * n + i]; // z'
-        }
-    }
-
-    fn jacobian(&self, s: &[S], x: &[S], out_f: &mut [S], out_jac: &mut [S], ws: &mut [S]) {
+    /// Shared tail of the dense Jacobian kernels (after [`Lem::forward_ws`]
+    /// filled `ws`).
+    #[inline]
+    fn jacobian_from_ws(&self, s: &[S], out_f: &mut [S], out_jac: &mut [S], ws: &[S]) {
         let n = self.n;
         let dim = 2 * n;
-        self.forward_ws(s, x, ws);
-        let y = &s[..n];
-        let z = &s[n..2 * n];
         let (v1, v2, vz, vy) = (self.v(0), self.v(1), self.v(2), self.v(3));
 
         // z'-block derivatives: ∂z'/∂y (dense), ∂z'/∂z (diag(1−dt1))
@@ -152,7 +166,7 @@ impl<S: Scalar> Cell<S> for Lem<S> {
         for i in 0..n {
             let dt1 = ws[i];
             let gz = ws[2 * n + i];
-            let c1 = (gz - z[i]) * dt1 * (S::one() - dt1);
+            let c1 = (gz - s[2 * i + 1]) * dt1 * (S::one() - dt1);
             let c2 = dt1 * (S::one() - gz * gz);
             let (r1, rz) = (&v1[i * n..(i + 1) * n], &vz[i * n..(i + 1) * n]);
             let row = &mut dzp_dy[i * n..(i + 1) * n];
@@ -165,10 +179,11 @@ impl<S: Scalar> Cell<S> for Lem<S> {
             let dt1 = ws[i];
             let dt2 = ws[n + i];
             let gy = ws[4 * n + i];
-            out_f[i] = (S::one() - dt2) * y[i] + dt2 * gy;
-            out_f[n + i] = ws[3 * n + i];
+            let yi = s[2 * i];
+            out_f[2 * i] = (S::one() - dt2) * yi + dt2 * gy;
+            out_f[2 * i + 1] = ws[3 * n + i];
 
-            let c_dt2 = (gy - y[i]) * dt2 * (S::one() - dt2); // coeff of V2 rows
+            let c_dt2 = (gy - yi) * dt2 * (S::one() - dt2); // coeff of V2 rows
             let c_gy = dt2 * (S::one() - gy * gy); // coeff of V_y·∂z'/∂·
             let (r2, ry) = (&v2[i * n..(i + 1) * n], &vy[i * n..(i + 1) * n]);
 
@@ -183,17 +198,157 @@ impl<S: Scalar> Cell<S> for Lem<S> {
                 if i == j {
                     acc += S::one() - dt2;
                 }
-                out_jac[i * dim + j] = acc;
+                out_jac[(2 * i) * dim + 2 * j] = acc;
                 // ∂z'_i/∂y_j
-                out_jac[(n + i) * dim + j] = dzp_dy[i * n + j];
+                out_jac[(2 * i + 1) * dim + 2 * j] = dzp_dy[i * n + j];
             }
             // ∂y'_i/∂z_j = c_gy·Vy[i,j]·(1−dt1_j); ∂z'_i/∂z_j = (1−dt1_i)δ
             for j in 0..n {
-                out_jac[i * dim + n + j] = c_gy * ry[j] * (S::one() - ws[j]);
-                out_jac[(n + i) * dim + n + j] = S::zero();
+                out_jac[(2 * i) * dim + 2 * j + 1] = c_gy * ry[j] * (S::one() - ws[j]);
+                out_jac[(2 * i + 1) * dim + 2 * j + 1] = S::zero();
             }
-            out_jac[(n + i) * dim + n + i] = S::one() - dt1;
+            out_jac[(2 * i + 1) * dim + 2 * i + 1] = S::one() - dt1;
         }
+    }
+
+    /// Shared tail of the packed Block(2) kernels: block i is the 2×2 tile
+    /// `[[∂y'_i/∂y_i, ∂y'_i/∂z_i], [∂z'_i/∂y_i, ∂z'_i/∂z_i]]`, each entry
+    /// computed with the exact expression of the dense kernel at (i, i) —
+    /// including the full `Σ_k Vy[i,k]·dzp_dy[k,i]` convolution — so the
+    /// values are bitwise identical to the dense in-block entries at
+    /// O(n) per unit (O(n²) per step) instead of the dense O(n³).
+    #[inline]
+    fn jacobian_block_from_ws(&self, s: &[S], out_f: &mut [S], out_jblk: &mut [S], ws: &mut [S]) {
+        let n = self.n;
+        let (v1, v2, vz, vy) = (self.v(0), self.v(1), self.v(2), self.v(3));
+        // per-unit dzp_dy row coefficients into the block scratch at
+        // ws[6n..8n] (the dense kernel's c1/c2, one pair per row k)
+        let (head, scratch) = ws.split_at_mut(6 * n);
+        let (c1s, c2s) = scratch.split_at_mut(n);
+        for i in 0..n {
+            let dt1 = head[i];
+            let gz = head[2 * n + i];
+            c1s[i] = (gz - s[2 * i + 1]) * dt1 * (S::one() - dt1);
+            c2s[i] = dt1 * (S::one() - gz * gz);
+        }
+        for i in 0..n {
+            let dt1 = head[i];
+            let dt2 = head[n + i];
+            let gy = head[4 * n + i];
+            let yi = s[2 * i];
+            out_f[2 * i] = (S::one() - dt2) * yi + dt2 * gy;
+            out_f[2 * i + 1] = head[3 * n + i];
+
+            let c_dt2 = (gy - yi) * dt2 * (S::one() - dt2);
+            let c_gy = dt2 * (S::one() - gy * gy);
+            let (r2, ry) = (&v2[i * n..(i + 1) * n], &vy[i * n..(i + 1) * n]);
+
+            // ∂y'_i/∂y_i — same expression chain as the dense kernel at j=i
+            let mut acc = c_dt2 * r2[i];
+            let mut conv = S::zero();
+            for k in 0..n {
+                conv += ry[k] * (c1s[k] * v1[k * n + i] + c2s[k] * vz[k * n + i]);
+            }
+            acc += c_gy * conv;
+            acc += S::one() - dt2;
+            out_jblk[i * 4] = acc;
+            // ∂y'_i/∂z_i
+            out_jblk[i * 4 + 1] = c_gy * ry[i] * (S::one() - head[i]);
+            // ∂z'_i/∂y_i = dzp_dy[i][i]
+            out_jblk[i * 4 + 2] = c1s[i] * v1[i * n + i] + c2s[i] * vz[i * n + i];
+            // ∂z'_i/∂z_i
+            out_jblk[i * 4 + 3] = S::one() - dt1;
+        }
+    }
+}
+
+impl<S: Scalar> Cell<S> for Lem<S> {
+    fn state_dim(&self) -> usize {
+        2 * self.n
+    }
+    fn input_dim(&self) -> usize {
+        self.m
+    }
+    fn ws_len(&self) -> usize {
+        8 * self.n
+    }
+
+    /// The natural pairing: each unit's `(y_i, z_i)` 2-block.
+    fn block_k(&self) -> Option<usize> {
+        Some(2)
+    }
+
+    fn jacobian_structure(&self) -> JacobianStructure {
+        // Dense through the V_k recurrences; Block(2) via BlockApprox
+        // (exact when the V_k are diagonal).
+        JacobianStructure::Dense
+    }
+
+    fn step(&self, s: &[S], x: &[S], out: &mut [S], ws: &mut [S]) {
+        let n = self.n;
+        self.forward_ws(s, x, None, ws);
+        for i in 0..n {
+            let dt2 = ws[n + i];
+            out[2 * i] = (S::one() - dt2) * s[2 * i] + dt2 * ws[4 * n + i]; // y'
+            out[2 * i + 1] = ws[3 * n + i]; // z'
+        }
+    }
+
+    fn jacobian(&self, s: &[S], x: &[S], out_f: &mut [S], out_jac: &mut [S], ws: &mut [S]) {
+        self.forward_ws(s, x, None, ws);
+        self.jacobian_from_ws(s, out_f, out_jac, &ws[..5 * self.n]);
+    }
+
+    fn x_precompute_len(&self) -> usize {
+        K * self.n
+    }
+
+    /// `out[t] = [W₁x+b₁, W₂x+b₂, W_zx+b_z, W_yx+b_y]` — the
+    /// trajectory-invariant input projections, hoisted out of the Newton
+    /// loop. Accumulation order matches [`Lem::branch`] bitwise.
+    fn precompute_x(&self, xs: &[S], out: &mut [S]) {
+        let n = self.n;
+        let m = self.m;
+        let t_len = xs.len() / m;
+        debug_assert_eq!(out.len(), t_len * K * n);
+        for t in 0..t_len {
+            let x = &xs[t * m..(t + 1) * m];
+            let o = &mut out[t * K * n..(t + 1) * K * n];
+            for k in 0..K {
+                let w = self.w(k);
+                let b = self.b(k);
+                for i in 0..n {
+                    let mut a = b[i];
+                    let roww = &w[i * m..(i + 1) * m];
+                    for j in 0..m {
+                        a += roww[j] * x[j];
+                    }
+                    o[k * n + i] = a;
+                }
+            }
+        }
+    }
+
+    fn jacobian_pre(&self, s: &[S], pre: &[S], out_f: &mut [S], out_jac: &mut [S], ws: &mut [S]) {
+        self.forward_ws(s, &[], Some(pre), ws);
+        self.jacobian_from_ws(s, out_f, out_jac, &ws[..5 * self.n]);
+    }
+
+    fn jacobian_block(&self, s: &[S], x: &[S], out_f: &mut [S], out_jblk: &mut [S], ws: &mut [S]) {
+        self.forward_ws(s, x, None, ws);
+        self.jacobian_block_from_ws(s, out_f, out_jblk, ws);
+    }
+
+    fn jacobian_block_pre(
+        &self,
+        s: &[S],
+        pre: &[S],
+        out_f: &mut [S],
+        out_jblk: &mut [S],
+        ws: &mut [S],
+    ) {
+        self.forward_ws(s, &[], Some(pre), ws);
+        self.jacobian_block_from_ws(s, out_f, out_jblk, ws);
     }
 
     fn flops_step(&self) -> u64 {
@@ -231,38 +386,39 @@ impl<S: Scalar> CellGrad<S> for Lem<S> {
     ) {
         let n = self.n;
         let m = self.m;
-        self.forward_ws(s, x, ws);
-        let y = &s[..n];
-        let z = &s[n..2 * n];
-        let zp: Vec<S> = ws[3 * n..4 * n].to_vec();
-        let (lam_y, lam_z) = lambda.split_at(n);
+        self.forward_ws(s, x, None, ws);
+        let (work, tail) = ws.split_at(5 * n);
+        let ybuf = &tail[..n];
+        let zp: Vec<S> = work[3 * n..4 * n].to_vec();
 
         let (v1, v2, vz, vy) = (self.v(0), self.v(1), self.v(2), self.v(3));
 
+        // λ components read interleaved: λ_y_i = lambda[2i], λ_z_i = lambda[2i+1]
         // --- y' branch ---
         // y' = (1−dt2) y + dt2·gy,   gy = tanh(W_y x + V_y z' + b_y)
         let mut da2 = vec![S::zero(); n]; // pre-act adjoint of dt2 branch
         let mut day = vec![S::zero(); n]; // pre-act adjoint of y branch (tanh arg)
         let mut dzp = vec![S::zero(); n]; // adjoint of z'
         for i in 0..n {
-            let dt2 = ws[n + i];
-            let gy = ws[4 * n + i];
-            dh[i] += lam_y[i] * (S::one() - dt2);
-            da2[i] = lam_y[i] * (gy - y[i]) * dt2 * (S::one() - dt2);
-            day[i] = lam_y[i] * dt2 * (S::one() - gy * gy);
+            let dt2 = work[n + i];
+            let gy = work[4 * n + i];
+            let lam_y = lambda[2 * i];
+            dh[2 * i] += lam_y * (S::one() - dt2);
+            da2[i] = lam_y * (gy - s[2 * i]) * dt2 * (S::one() - dt2);
+            day[i] = lam_y * dt2 * (S::one() - gy * gy);
         }
         // dzp += V_yᵀ day ; dh(y part) += V_2ᵀ da2
         for i in 0..n {
             let (a2, ay) = (da2[i], day[i]);
             let (r2, ry) = (&v2[i * n..(i + 1) * n], &vy[i * n..(i + 1) * n]);
             for j in 0..n {
-                dh[j] += r2[j] * a2;
+                dh[2 * j] += r2[j] * a2;
                 dzp[j] += ry[j] * ay;
             }
         }
         // z' cotangent also flows directly from λ_z
         for i in 0..n {
-            dzp[i] += lam_z[i];
+            dzp[i] += lambda[2 * i + 1];
         }
 
         // --- z' branch ---
@@ -270,17 +426,17 @@ impl<S: Scalar> CellGrad<S> for Lem<S> {
         let mut da1 = vec![S::zero(); n];
         let mut daz = vec![S::zero(); n];
         for i in 0..n {
-            let dt1 = ws[i];
-            let gz = ws[2 * n + i];
-            dh[n + i] += dzp[i] * (S::one() - dt1);
-            da1[i] = dzp[i] * (gz - z[i]) * dt1 * (S::one() - dt1);
+            let dt1 = work[i];
+            let gz = work[2 * n + i];
+            dh[2 * i + 1] += dzp[i] * (S::one() - dt1);
+            da1[i] = dzp[i] * (gz - s[2 * i + 1]) * dt1 * (S::one() - dt1);
             daz[i] = dzp[i] * dt1 * (S::one() - gz * gz);
         }
         for i in 0..n {
             let (a1, az) = (da1[i], daz[i]);
             let (r1, rz) = (&v1[i * n..(i + 1) * n], &vz[i * n..(i + 1) * n]);
             for j in 0..n {
-                dh[j] += r1[j] * a1 + rz[j] * az;
+                dh[2 * j] += r1[j] * a1 + rz[j] * az;
             }
         }
 
@@ -290,7 +446,7 @@ impl<S: Scalar> CellGrad<S> for Lem<S> {
         for k in 0..K {
             let a = adjoints[[0usize, 1, 2, 3][k]];
             // NOTE: branch order in params is [dt1, dt2, z, y] = [da1, da2, daz, day]
-            let q: &[S] = if k == 3 { &zp } else { y };
+            let q: &[S] = if k == 3 { &zp } else { ybuf };
             let w = self.w(k);
             let (ow, ov, ob) = (self.off_w(k), self.off_v(k), self.off_b(k));
             for i in 0..n {
@@ -352,6 +508,93 @@ mod tests {
             cell.step(&s, &x, &mut out, &mut ws);
             std::mem::swap(&mut s, &mut out);
             assert!(s.iter().all(|v| v.abs() <= 1.0 + 1e-12));
+        }
+    }
+
+    /// The packed Block(2) kernel must reproduce the dense Jacobian's
+    /// in-block entries bitwise (and the same f), directly and through the
+    /// precomputed-input path.
+    #[test]
+    fn block_kernel_matches_dense_blocks_bitwise() {
+        let mut rng = Rng::new(19);
+        for &(n, m) in &[(1usize, 1usize), (3, 2), (5, 3)] {
+            let cell: Lem<f64> = Lem::new(n, m, &mut rng);
+            let dim = 2 * n;
+            let mut s = vec![0.0; dim];
+            let mut x = vec![0.0; m];
+            rng.fill_normal(&mut s, 0.7);
+            rng.fill_normal(&mut x, 1.0);
+            let mut ws = vec![0.0; cell.ws_len()];
+
+            let mut f_d = vec![0.0; dim];
+            let mut jac = vec![0.0; dim * dim];
+            cell.jacobian(&s, &x, &mut f_d, &mut jac, &mut ws);
+
+            let mut f_b = vec![0.0; dim];
+            let mut jblk = vec![0.0; dim * 2];
+            cell.jacobian_block(&s, &x, &mut f_b, &mut jblk, &mut ws);
+            assert_eq!(f_d, f_b, "n={n}: block f");
+            for i in 0..n {
+                for r in 0..2 {
+                    for c in 0..2 {
+                        assert_eq!(
+                            jblk[i * 4 + r * 2 + c],
+                            jac[(2 * i + r) * dim + 2 * i + c],
+                            "n={n} block {i} ({r},{c})"
+                        );
+                    }
+                }
+            }
+
+            // precomputed-input path, bitwise equal to the direct one
+            let pl = cell.x_precompute_len();
+            let mut pre = vec![0.0; pl];
+            cell.precompute_x(&x, &mut pre);
+            let mut f_p = vec![0.0; dim];
+            let mut jac_p = vec![0.0; dim * dim];
+            cell.jacobian_pre(&s, &pre, &mut f_p, &mut jac_p, &mut ws);
+            assert_eq!(f_p, f_d, "n={n}: jacobian_pre f");
+            assert_eq!(jac_p, jac, "n={n}: jacobian_pre jac");
+            let mut f_bp = vec![0.0; dim];
+            let mut jblk_p = vec![0.0; dim * 2];
+            cell.jacobian_block_pre(&s, &pre, &mut f_bp, &mut jblk_p, &mut ws);
+            assert_eq!(f_bp, f_b, "n={n}: jacobian_block_pre f");
+            assert_eq!(jblk_p, jblk, "n={n}: jacobian_block_pre blocks");
+        }
+    }
+
+    /// With diagonal recurrent matrices V_k the dense Jacobian is exactly
+    /// block-diagonal (the setting where the Block(2) path is exact).
+    #[test]
+    fn diagonal_recurrence_makes_jacobian_block_diagonal() {
+        let (n, m) = (3usize, 2usize);
+        let mut rng = Rng::new(29);
+        let mut cell: Lem<f64> = Lem::new(n, m, &mut rng);
+        let vbase = K * n * m;
+        for k in 0..K {
+            for i in 0..n {
+                for j in 0..n {
+                    if i != j {
+                        cell.params_mut()[vbase + k * n * n + i * n + j] = 0.0;
+                    }
+                }
+            }
+        }
+        let dim = 2 * n;
+        let mut s = vec![0.0; dim];
+        let mut x = vec![0.0; m];
+        rng.fill_normal(&mut s, 0.7);
+        rng.fill_normal(&mut x, 1.0);
+        let mut ws = vec![0.0; cell.ws_len()];
+        let mut f = vec![0.0; dim];
+        let mut jac = vec![0.0; dim * dim];
+        cell.jacobian(&s, &x, &mut f, &mut jac, &mut ws);
+        for r in 0..dim {
+            for c in 0..dim {
+                if r / 2 != c / 2 {
+                    assert_eq!(jac[r * dim + c], 0.0, "off-block ({r},{c}) nonzero");
+                }
+            }
         }
     }
 }

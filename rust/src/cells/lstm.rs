@@ -1,11 +1,21 @@
 //! LSTM (Hochreiter & Schmidhuber, 1997). The DEER framework treats the
-//! packed state `s = [h, c]` (dimension 2n) as the recurrent vector, so its
-//! Jacobian is the full 2n×2n block matrix
+//! packed state (dimension 2n) as the recurrent vector, stored
+//! **interleaved**: `s = [h_0, c_0, h_1, c_1, …]`, so each unit's coupled
+//! `(h_i, c_i)` pair occupies one contiguous 2-slot block. Under this
+//! layout the 2n×2n state Jacobian
 //!
 //! ```text
 //! ∂[h',c']/∂[h,c] = [ ∂h'/∂h  ∂h'/∂c ]
 //!                   [ ∂c'/∂h  ∂c'/∂c ]
 //! ```
+//!
+//! has its entire `∂·/∂c` half concentrated on the 2×2 unit diagonal
+//! (`c'_i` and `h'_i` read only `c_i`), which is what the packed
+//! [`Cell::jacobian_block`] kernels exploit: `Block(2)` slabs of
+//! `[T, n, 2, 2]` instead of `[T, 2n, 2n]` dense. With diagonal recurrent
+//! matrices `U_k` (the ParaRNN setting) the dense Jacobian *is*
+//! block-diagonal and the Block(2) path is exact Newton; with dense `U_k`
+//! it is the `BlockApprox` quasi mode (same fixed point).
 //!
 //! Equations:
 //! ```text
@@ -13,13 +23,18 @@
 //! g = tanh(W_g x + U_g h + b_g)   o = σ(W_o x + U_o h + b_o)
 //! c' = f ⊙ c + i ⊙ g              h' = o ⊙ tanh(c')
 //! ```
+//!
+//! The four input projections `W_k x + b_k` are trajectory-invariant, so
+//! the cell supports [`Cell::precompute_x`] (4n per step) and the `*_pre`
+//! Jacobian kernels read them instead of redoing the `W·x` matvecs every
+//! Newton iteration.
 
-use super::{init_uniform, sigmoid, Cell, CellGrad};
+use super::{init_uniform, sigmoid, Cell, CellGrad, JacobianStructure};
 use crate::util::rng::Rng;
 use crate::util::scalar::Scalar;
 
 /// LSTM cell with `n` hidden units and `m` inputs; `state_dim() = 2n`
-/// (packed `[h, c]`).
+/// (interleaved `[h_0, c_0, h_1, c_1, …]`).
 ///
 /// Parameter layout: `[W_i, W_f, W_g, W_o] (4·n·m)`,
 /// `[U_i, U_f, U_g, U_o] (4·n·n)`, `[b_i, b_f, b_g, b_o] (4·n)`.
@@ -31,6 +46,9 @@ pub struct Lstm<S> {
 }
 
 const GATES: usize = 4; // i, f, g, o
+
+// Workspace layout (ws_len = 7n):
+// [i, f, g, o, tanh(c'), c'] gate values (6n) | unpacked h (n)
 
 impl<S: Scalar> Lstm<S> {
     pub fn new(n: usize, m: usize, rng: &mut Rng) -> Self {
@@ -68,76 +86,74 @@ impl<S: Scalar> Lstm<S> {
         GATES * (self.n * self.m + self.n * self.n) + k * self.n
     }
 
-    /// Gate activations into ws: [i, f, g, o, tanh(c'), c'] each length n.
+    /// Gate activations into ws: [i, f, g, o, tanh(c'), c'] each length n,
+    /// plus the unpacked contiguous h copy at ws[6n..7n]. `c_i` is read
+    /// straight from the interleaved state (`s[2i+1]`).
+    ///
+    /// The pre-activation base is either computed inline from `x` (direct
+    /// path, `pre = None`) or read from the trajectory-invariant
+    /// projections of [`Cell::precompute_x`] (`pre = Some`, `x` unused) —
+    /// ONE implementation owns the bitwise-sensitive accumulation order
+    /// (bias + W·x first, then U·h), so the two paths cannot drift.
     #[inline]
-    fn gates(&self, s: &[S], x: &[S], ws: &mut [S]) {
+    fn gates(&self, s: &[S], x: &[S], pre: Option<&[S]>, ws: &mut [S]) {
         let n = self.n;
         let m = self.m;
-        let h = &s[..n];
-        let c = &s[n..2 * n];
+        let (gv, hbuf) = ws.split_at_mut(6 * n);
+        let hbuf = &mut hbuf[..n];
+        for i in 0..n {
+            hbuf[i] = s[2 * i];
+        }
+        let hbuf = &hbuf[..];
         for k in 0..GATES {
-            let w = self.w(k);
             let u = self.u(k);
-            let b = self.b(k);
             for i in 0..n {
-                let mut a = b[i];
-                let roww = &w[i * m..(i + 1) * m];
-                for j in 0..m {
-                    a += roww[j] * x[j];
-                }
+                let mut a = match pre {
+                    Some(p) => p[k * n + i],
+                    None => {
+                        let w = self.w(k);
+                        let b = self.b(k);
+                        let mut a = b[i];
+                        let roww = &w[i * m..(i + 1) * m];
+                        for j in 0..m {
+                            a += roww[j] * x[j];
+                        }
+                        a
+                    }
+                };
                 let rowu = &u[i * n..(i + 1) * n];
                 for j in 0..n {
-                    a += rowu[j] * h[j];
+                    a += rowu[j] * hbuf[j];
                 }
-                ws[k * n + i] = if k == 2 { a.tanh() } else { sigmoid(a) };
+                gv[k * n + i] = if k == 2 { a.tanh() } else { sigmoid(a) };
             }
         }
         for i in 0..n {
-            let cp = ws[n + i] * c[i] + ws[i] * ws[2 * n + i]; // f·c + i·g
-            ws[5 * n + i] = cp;
-            ws[4 * n + i] = cp.tanh();
-        }
-    }
-}
-
-impl<S: Scalar> Cell<S> for Lstm<S> {
-    fn state_dim(&self) -> usize {
-        2 * self.n
-    }
-    fn input_dim(&self) -> usize {
-        self.m
-    }
-    fn ws_len(&self) -> usize {
-        6 * self.n
-    }
-
-    fn step(&self, s: &[S], x: &[S], out: &mut [S], ws: &mut [S]) {
-        let n = self.n;
-        self.gates(s, x, ws);
-        for i in 0..n {
-            out[i] = ws[3 * n + i] * ws[4 * n + i]; // h' = o·tanh(c')
-            out[n + i] = ws[5 * n + i]; // c'
+            let cp = gv[n + i] * s[2 * i + 1] + gv[i] * gv[2 * n + i]; // f·c + i·g
+            gv[5 * n + i] = cp;
+            gv[4 * n + i] = cp.tanh();
         }
     }
 
-    fn jacobian(&self, s: &[S], x: &[S], out_f: &mut [S], out_jac: &mut [S], ws: &mut [S]) {
+    /// Shared tail of the dense Jacobian kernels (after [`Lstm::gates`]).
+    #[inline]
+    fn jacobian_from_gates(&self, s: &[S], out_f: &mut [S], out_jac: &mut [S], gv: &[S]) {
         let n = self.n;
         let dim = 2 * n;
-        self.gates(s, x, ws);
-        let c = &s[n..2 * n];
         let (u_i, u_f, u_g, u_o) = (self.u(0), self.u(1), self.u(2), self.u(3));
         for v in out_jac.iter_mut() {
             *v = S::zero();
         }
         for i in 0..n {
-            let ig = ws[i];
-            let fg = ws[n + i];
-            let gg = ws[2 * n + i];
-            let og = ws[3 * n + i];
-            let tc = ws[4 * n + i];
-            let cp = ws[5 * n + i];
-            out_f[i] = og * tc;
-            out_f[n + i] = cp;
+            let ig = gv[i];
+            let fg = gv[n + i];
+            let gg = gv[2 * n + i];
+            let og = gv[3 * n + i];
+            let tc = gv[4 * n + i];
+            let cp = gv[5 * n + i];
+            let ci = s[2 * i + 1];
+            out_f[2 * i] = og * tc;
+            out_f[2 * i + 1] = cp;
 
             let di = ig * (S::one() - ig);
             let df = fg * (S::one() - fg);
@@ -153,16 +169,148 @@ impl<S: Scalar> Cell<S> for Lstm<S> {
             );
             for j in 0..n {
                 // ∂c'_i/∂h_j
-                let dcp_dh = c[i] * df * ruf[j] + gg * di * rui[j] + ig * dg * rug[j];
+                let dcp_dh = ci * df * ruf[j] + gg * di * rui[j] + ig * dg * rug[j];
                 // ∂h'_i/∂h_j
                 let dhp_dh = tc * do_ * ruo[j] + og * dtc * dcp_dh;
-                out_jac[i * dim + j] = dhp_dh;
-                out_jac[(n + i) * dim + j] = dcp_dh;
+                out_jac[(2 * i) * dim + 2 * j] = dhp_dh;
+                out_jac[(2 * i + 1) * dim + 2 * j] = dcp_dh;
             }
             // ∂c'_i/∂c_i = f_i ; ∂h'_i/∂c_i = o_i·(1−tanh²)·f_i
-            out_jac[(n + i) * dim + n + i] = fg;
-            out_jac[i * dim + n + i] = og * dtc * fg;
+            out_jac[(2 * i + 1) * dim + 2 * i + 1] = fg;
+            out_jac[(2 * i) * dim + 2 * i + 1] = og * dtc * fg;
         }
+    }
+
+    /// Shared tail of the packed Block(2) kernels: block i is the 2×2 tile
+    /// `[[∂h'_i/∂h_i, ∂h'_i/∂c_i], [∂c'_i/∂h_i, ∂c'_i/∂c_i]]`, each entry
+    /// computed with the exact expression of the dense kernel at (i, i) —
+    /// bitwise identical to the corresponding dense entries, O(n) beyond
+    /// the gate math instead of O(n²).
+    #[inline]
+    fn jacobian_block_from_gates(&self, s: &[S], out_f: &mut [S], out_jblk: &mut [S], gv: &[S]) {
+        let n = self.n;
+        let (u_i, u_f, u_g, u_o) = (self.u(0), self.u(1), self.u(2), self.u(3));
+        for i in 0..n {
+            let ig = gv[i];
+            let fg = gv[n + i];
+            let gg = gv[2 * n + i];
+            let og = gv[3 * n + i];
+            let tc = gv[4 * n + i];
+            let cp = gv[5 * n + i];
+            let ci = s[2 * i + 1];
+            out_f[2 * i] = og * tc;
+            out_f[2 * i + 1] = cp;
+
+            let di = ig * (S::one() - ig);
+            let df = fg * (S::one() - fg);
+            let dg = S::one() - gg * gg;
+            let do_ = og * (S::one() - og);
+            let dtc = S::one() - tc * tc;
+
+            let (rui, ruf, rug, ruo) = (
+                &u_i[i * n..(i + 1) * n],
+                &u_f[i * n..(i + 1) * n],
+                &u_g[i * n..(i + 1) * n],
+                &u_o[i * n..(i + 1) * n],
+            );
+            let dcp_dh = ci * df * ruf[i] + gg * di * rui[i] + ig * dg * rug[i];
+            let dhp_dh = tc * do_ * ruo[i] + og * dtc * dcp_dh;
+            out_jblk[i * 4] = dhp_dh; // ∂h'_i/∂h_i
+            out_jblk[i * 4 + 1] = og * dtc * fg; // ∂h'_i/∂c_i
+            out_jblk[i * 4 + 2] = dcp_dh; // ∂c'_i/∂h_i
+            out_jblk[i * 4 + 3] = fg; // ∂c'_i/∂c_i
+        }
+    }
+}
+
+impl<S: Scalar> Cell<S> for Lstm<S> {
+    fn state_dim(&self) -> usize {
+        2 * self.n
+    }
+    fn input_dim(&self) -> usize {
+        self.m
+    }
+    fn ws_len(&self) -> usize {
+        7 * self.n
+    }
+
+    /// The natural ParaRNN pairing: each unit's `(h_i, c_i)` 2-block.
+    fn block_k(&self) -> Option<usize> {
+        Some(2)
+    }
+
+    fn jacobian_structure(&self) -> JacobianStructure {
+        // The exact Jacobian is dense through the U_k recurrences (Full
+        // mode stays exact Newton); Block(2) is reachable via
+        // `JacobianMode::BlockApprox` and exact when the U_k are diagonal.
+        JacobianStructure::Dense
+    }
+
+    fn step(&self, s: &[S], x: &[S], out: &mut [S], ws: &mut [S]) {
+        let n = self.n;
+        self.gates(s, x, None, ws);
+        for i in 0..n {
+            out[2 * i] = ws[3 * n + i] * ws[4 * n + i]; // h' = o·tanh(c')
+            out[2 * i + 1] = ws[5 * n + i]; // c'
+        }
+    }
+
+    fn jacobian(&self, s: &[S], x: &[S], out_f: &mut [S], out_jac: &mut [S], ws: &mut [S]) {
+        self.gates(s, x, None, ws);
+        self.jacobian_from_gates(s, out_f, out_jac, &ws[..6 * self.n]);
+    }
+
+    fn x_precompute_len(&self) -> usize {
+        GATES * self.n
+    }
+
+    /// `out[t] = [W_i x + b_i, W_f x + b_f, W_g x + b_g, W_o x + b_o]` —
+    /// everything independent of the trajectory guess, computed once per
+    /// DEER evaluation (§Perf). Accumulation order (bias first, then the
+    /// input j-loop) matches [`Lstm::gates`] bitwise.
+    fn precompute_x(&self, xs: &[S], out: &mut [S]) {
+        let n = self.n;
+        let m = self.m;
+        let t_len = xs.len() / m;
+        debug_assert_eq!(out.len(), t_len * GATES * n);
+        for t in 0..t_len {
+            let x = &xs[t * m..(t + 1) * m];
+            let o = &mut out[t * GATES * n..(t + 1) * GATES * n];
+            for k in 0..GATES {
+                let w = self.w(k);
+                let b = self.b(k);
+                for i in 0..n {
+                    let mut a = b[i];
+                    let roww = &w[i * m..(i + 1) * m];
+                    for j in 0..m {
+                        a += roww[j] * x[j];
+                    }
+                    o[k * n + i] = a;
+                }
+            }
+        }
+    }
+
+    fn jacobian_pre(&self, s: &[S], pre: &[S], out_f: &mut [S], out_jac: &mut [S], ws: &mut [S]) {
+        self.gates(s, &[], Some(pre), ws);
+        self.jacobian_from_gates(s, out_f, out_jac, &ws[..6 * self.n]);
+    }
+
+    fn jacobian_block(&self, s: &[S], x: &[S], out_f: &mut [S], out_jblk: &mut [S], ws: &mut [S]) {
+        self.gates(s, x, None, ws);
+        self.jacobian_block_from_gates(s, out_f, out_jblk, &ws[..6 * self.n]);
+    }
+
+    fn jacobian_block_pre(
+        &self,
+        s: &[S],
+        pre: &[S],
+        out_f: &mut [S],
+        out_jblk: &mut [S],
+        ws: &mut [S],
+    ) {
+        self.gates(s, &[], Some(pre), ws);
+        self.jacobian_block_from_gates(s, out_f, out_jblk, &ws[..6 * self.n]);
     }
 
     fn flops_step(&self) -> u64 {
@@ -199,33 +347,36 @@ impl<S: Scalar> CellGrad<S> for Lstm<S> {
     ) {
         let n = self.n;
         let m = self.m;
-        self.gates(s, x, ws);
-        let h = &s[..n];
-        let c = &s[n..2 * n];
-        let (lam_h, lam_c) = lambda.split_at(n);
+        self.gates(s, x, None, ws);
+        let (gv, hbuf) = ws.split_at(6 * n);
+        let hbuf = &hbuf[..n];
 
-        // pre-activation adjoints per gate
+        // pre-activation adjoints per gate; λ components read interleaved:
+        // λ_h_i = lambda[2i], λ_c_i = lambda[2i+1]
         let mut da = vec![S::zero(); GATES * n];
         for i in 0..n {
-            let ig = ws[i];
-            let fg = ws[n + i];
-            let gg = ws[2 * n + i];
-            let og = ws[3 * n + i];
-            let tc = ws[4 * n + i];
+            let ig = gv[i];
+            let fg = gv[n + i];
+            let gg = gv[2 * n + i];
+            let og = gv[3 * n + i];
+            let tc = gv[4 * n + i];
             let dtc = S::one() - tc * tc;
+            let lam_h = lambda[2 * i];
+            let lam_c = lambda[2 * i + 1];
+            let ci = s[2 * i + 1];
 
             // dL/dc' = λ_c + λ_h · o · (1−tanh²)
-            let dcp = lam_c[i] + lam_h[i] * og * dtc;
+            let dcp = lam_c + lam_h * og * dtc;
             // o gate: h' = o·tanh(c')
-            da[3 * n + i] = lam_h[i] * tc * (og * (S::one() - og));
+            da[3 * n + i] = lam_h * tc * (og * (S::one() - og));
             // f gate: c' = f·c + i·g
-            da[n + i] = dcp * c[i] * (fg * (S::one() - fg));
+            da[n + i] = dcp * ci * (fg * (S::one() - fg));
             // i gate
             da[i] = dcp * gg * (ig * (S::one() - ig));
             // g gate
             da[2 * n + i] = dcp * ig * (S::one() - gg * gg);
             // direct dc path
-            dh_acc[n + i] += dcp * fg;
+            dh_acc[2 * i + 1] += dcp * fg;
         }
 
         for k in 0..GATES {
@@ -239,8 +390,8 @@ impl<S: Scalar> CellGrad<S> for Lstm<S> {
                 }
                 let rowu = &u[i * n..(i + 1) * n];
                 for j in 0..n {
-                    dh_acc[j] += rowu[j] * a;
-                    dtheta[ou + i * n + j] += a * h[j];
+                    dh_acc[2 * j] += rowu[j] * a;
+                    dtheta[ou + i * n + j] += a * hbuf[j];
                 }
                 if let Some(dx) = dx.as_deref_mut() {
                     let roww = &w[i * m..(i + 1) * m];
@@ -284,19 +435,110 @@ mod tests {
         let cell: Lstm<f64> = Lstm::new(5, 2, &mut rng);
         assert_eq!(cell.state_dim(), 10);
         assert_eq!(cell.num_params(), 4 * (5 * 2 + 25 + 5));
+        assert_eq!(cell.block_k(), Some(2));
     }
 
     #[test]
     fn cell_state_linear_in_c_when_gates_saturate() {
         // With zero params: i=f=o=1/2, g=0 → c' = c/2, h' = tanh(c/2)/2.
+        // Interleaved state: [h_0, c_0, h_1, c_1].
         let n = 2;
         let cell: Lstm<f64> = Lstm::from_params(n, 1, vec![0.0; 4 * (n + n * n + n)]);
-        let s = vec![0.7, -0.7, 0.4, -1.0];
+        let s = vec![0.7, 0.4, -0.7, -1.0];
         let mut out = vec![0.0; 4];
         let mut ws = vec![0.0; cell.ws_len()];
         cell.step(&s, &[0.0], &mut out, &mut ws);
-        assert!((out[2] - 0.2).abs() < 1e-14);
-        assert!((out[3] + 0.5).abs() < 1e-14);
-        assert!((out[0] - 0.5 * 0.2f64.tanh()).abs() < 1e-14);
+        assert!((out[1] - 0.2).abs() < 1e-14); // c'_0 = 0.4/2
+        assert!((out[3] + 0.5).abs() < 1e-14); // c'_1 = −1.0/2
+        assert!((out[0] - 0.5 * 0.2f64.tanh()).abs() < 1e-14); // h'_0
+        assert!((out[2] - 0.5 * (-0.5f64).tanh()).abs() < 1e-14); // h'_1
+    }
+
+    /// The packed Block(2) kernel must reproduce the dense Jacobian's
+    /// in-block entries bitwise (and the same f), directly and through the
+    /// precomputed-input path.
+    #[test]
+    fn block_kernel_matches_dense_blocks_bitwise() {
+        let mut rng = Rng::new(17);
+        for &(n, m) in &[(1usize, 1usize), (3, 2), (5, 4)] {
+            let cell: Lstm<f64> = Lstm::new(n, m, &mut rng);
+            let dim = 2 * n;
+            let mut s = vec![0.0; dim];
+            let mut x = vec![0.0; m];
+            rng.fill_normal(&mut s, 0.8);
+            rng.fill_normal(&mut x, 1.0);
+            let mut ws = vec![0.0; cell.ws_len()];
+
+            let mut f_d = vec![0.0; dim];
+            let mut jac = vec![0.0; dim * dim];
+            cell.jacobian(&s, &x, &mut f_d, &mut jac, &mut ws);
+
+            let mut f_b = vec![0.0; dim];
+            let mut jblk = vec![0.0; dim * 2];
+            cell.jacobian_block(&s, &x, &mut f_b, &mut jblk, &mut ws);
+            assert_eq!(f_d, f_b, "n={n}: block f");
+            for i in 0..n {
+                for r in 0..2 {
+                    for c in 0..2 {
+                        assert_eq!(
+                            jblk[i * 4 + r * 2 + c],
+                            jac[(2 * i + r) * dim + 2 * i + c],
+                            "n={n} block {i} ({r},{c})"
+                        );
+                    }
+                }
+            }
+
+            // precomputed-input path, bitwise equal to the direct one
+            let pl = cell.x_precompute_len();
+            let mut pre = vec![0.0; pl];
+            cell.precompute_x(&x, &mut pre);
+            let mut f_p = vec![0.0; dim];
+            let mut jac_p = vec![0.0; dim * dim];
+            cell.jacobian_pre(&s, &pre, &mut f_p, &mut jac_p, &mut ws);
+            assert_eq!(f_p, f_d, "n={n}: jacobian_pre f");
+            assert_eq!(jac_p, jac, "n={n}: jacobian_pre jac");
+            let mut f_bp = vec![0.0; dim];
+            let mut jblk_p = vec![0.0; dim * 2];
+            cell.jacobian_block_pre(&s, &pre, &mut f_bp, &mut jblk_p, &mut ws);
+            assert_eq!(f_bp, f_b, "n={n}: jacobian_block_pre f");
+            assert_eq!(jblk_p, jblk, "n={n}: jacobian_block_pre blocks");
+        }
+    }
+
+    /// With diagonal recurrent matrices U_k the dense Jacobian is exactly
+    /// block-diagonal — every off-block entry is zero (the ParaRNN setting
+    /// where the Block(2) path is exact Newton).
+    #[test]
+    fn diagonal_recurrence_makes_jacobian_block_diagonal() {
+        let (n, m) = (3usize, 2usize);
+        let mut rng = Rng::new(23);
+        let mut cell: Lstm<f64> = Lstm::new(n, m, &mut rng);
+        let ubase = GATES * n * m;
+        for k in 0..GATES {
+            for i in 0..n {
+                for j in 0..n {
+                    if i != j {
+                        cell.params_mut()[ubase + k * n * n + i * n + j] = 0.0;
+                    }
+                }
+            }
+        }
+        let dim = 2 * n;
+        let mut s = vec![0.0; dim];
+        let mut x = vec![0.0; m];
+        rng.fill_normal(&mut s, 0.8);
+        rng.fill_normal(&mut x, 1.0);
+        let mut ws = vec![0.0; cell.ws_len()];
+        let mut f = vec![0.0; dim];
+        let mut jac = vec![0.0; dim * dim];
+        cell.jacobian(&s, &x, &mut f, &mut jac, &mut ws);
+        for r in 0..dim {
+            for c in 0..dim {
+                if r / 2 != c / 2 {
+                    assert_eq!(jac[r * dim + c], 0.0, "off-block ({r},{c}) nonzero");
+                }
+            }
+        }
     }
 }

@@ -16,11 +16,29 @@
 //!
 //! Each cell reports a [`JacobianStructure`]: `Dense` cells emit full
 //! row-major n×n Jacobians; `Diagonal` cells additionally implement
-//! [`Cell::jacobian_diag`], emitting only the n diagonal entries. The DEER
-//! driver dispatches on the structure to pick the O(n) scan kernels in
-//! [`crate::scan::diag`] over the O(n³) dense ones — see
-//! [`crate::deer::JacobianMode`] for the quasi-DEER mode that forces the
-//! diagonal path on dense cells by approximation.
+//! [`Cell::jacobian_diag`], emitting only the n diagonal entries;
+//! `Block { k }` covers block-diagonal Jacobians packed as `[n/k, k, k]`
+//! contiguous k×k blocks. The DEER driver dispatches on the structure to
+//! pick the O(n) diagonal kernels in [`crate::scan::diag`] or the
+//! O((n/k)·k³) block kernels in [`crate::scan::block`] over the O(n³)
+//! dense ones — see [`crate::deer::JacobianMode`] for the quasi-DEER modes
+//! (`DiagonalApprox` / `BlockApprox`) that force the structured paths on
+//! dense cells by approximation.
+//!
+//! **Block pairing**: [`Lstm`] and [`Lem`] report a natural `Block(2)`
+//! pairing through [`Cell::block_k`]. Their state is stored **interleaved**
+//! — `[h_0, c_0, h_1, c_1, …]` / `[y_0, z_0, …]` — so each unit's coupled
+//! pair occupies one contiguous 2×2 block, and the packed kernels
+//! ([`Cell::jacobian_block`] / [`Cell::jacobian_block_pre`] /
+//! [`Cell::jacobian_pre_block_batch`]) emit `[T, n/2, 2, 2]` block slabs
+//! instead of `[T, n, n]` dense ones, with the gate math shared through
+//! [`Cell::precompute_x`]. The emitted block entries are bitwise identical
+//! to the corresponding entries of the dense [`Cell::jacobian`]: when the
+//! recurrent weight matrices are diagonal (the ParaRNN setting) the dense
+//! Jacobian *is* block-diagonal and the Block(2) path is exact Newton; for
+//! general dense recurrences it is the `BlockApprox` quasi mode (same
+//! fixed point, linear rate — strictly better informed than the diagonal
+//! approximation).
 //!
 //! Conventions:
 //! * state `h` has length `state_dim()`; input `x` has `input_dim()`.
@@ -56,8 +74,9 @@ use crate::util::scalar::Scalar;
 /// Structure of a cell's per-step state Jacobian `∂f/∂h`.
 ///
 /// Drives kernel dispatch in the DEER driver: `Diagonal` unlocks the O(n)
-/// compose/apply scan kernels (packed n-entry Jacobians), `Dense` uses the
-/// general O(n³)-compose path of the paper's §3.5 cost model.
+/// compose/apply scan kernels (packed n-entry Jacobians), `Block { k }` the
+/// O((n/k)·k³) block-diagonal kernels in [`crate::scan::block`], and `Dense`
+/// uses the general O(n³)-compose path of the paper's §3.5 cost model.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum JacobianStructure {
     /// Full row-major n×n Jacobian per step.
@@ -65,6 +84,16 @@ pub enum JacobianStructure {
     Dense,
     /// Jacobian is diagonal; packed as n entries per step.
     Diagonal,
+    /// Jacobian is block-diagonal with `n/k` contiguous k×k blocks along
+    /// the state (`n % k == 0`); packed as `[n/k, k, k]` row-major blocks
+    /// per step (`n·k` elements). Block `b` couples state components
+    /// `b·k .. (b+1)·k` only — the ParaRNN-style structure of cells whose
+    /// units carry a small tuple of coupled scalars (LSTM's `(h_i, c_i)`,
+    /// LEM's `(y_i, z_i)` in the interleaved layout).
+    Block {
+        /// Block edge length (2 for the LSTM/LEM pairings).
+        k: usize,
+    },
 }
 
 impl JacobianStructure {
@@ -73,6 +102,19 @@ impl JacobianStructure {
         match self {
             JacobianStructure::Dense => n * n,
             JacobianStructure::Diagonal => n,
+            JacobianStructure::Block { k } => {
+                debug_assert!(k > 0 && n % k == 0, "state dim {n} not divisible by block {k}");
+                (n / k) * k * k
+            }
+        }
+    }
+
+    /// Short label for bench/JSON metadata (`dense` | `diagonal` | `block2`).
+    pub fn label(self) -> String {
+        match self {
+            JacobianStructure::Dense => "dense".to_string(),
+            JacobianStructure::Diagonal => "diagonal".to_string(),
+            JacobianStructure::Block { k } => format!("block{k}"),
         }
     }
 }
@@ -100,6 +142,101 @@ pub trait Cell<S: Scalar>: Send + Sync {
     /// [`Cell::jacobian_diag_pre`]).
     fn jacobian_structure(&self) -> JacobianStructure {
         JacobianStructure::Dense
+    }
+
+    /// Natural block size `k` of the cell's state pairing, if it has one.
+    ///
+    /// Cells whose state packs small per-unit tuples contiguously (LSTM's
+    /// `(h_i, c_i)`, LEM's `(y_i, z_i)`) report `Some(2)` here and implement
+    /// the packed block kernels [`Cell::jacobian_block`] (plus
+    /// [`Cell::jacobian_block_pre`] when they support input precomputation).
+    /// [`crate::deer::JacobianMode::BlockApprox`] dispatches to those
+    /// kernels; dense cells without a natural pairing return `None` and get
+    /// the generic dense-evaluate/extract-blocks fallback. A cell whose
+    /// [`Cell::jacobian_structure`] is `Block { k }` must return `Some(k)`.
+    fn block_k(&self) -> Option<usize> {
+        None
+    }
+
+    /// Like [`Cell::jacobian`] but emitting only the **packed k×k diagonal
+    /// blocks** of `∂f/∂h` (`out_jblk` has `state_dim()·k` elements laid out
+    /// `[n/k, k, k]`, `k = block_k().unwrap()`). The emitted values must be
+    /// **bitwise** identical to the corresponding entries of the dense
+    /// [`Cell::jacobian`] — the DEER driver treats the two as views of the
+    /// same evaluation, and the Block-vs-Dense equivalence tests pin it.
+    fn jacobian_block(&self, h: &[S], x: &[S], out_f: &mut [S], out_jblk: &mut [S], ws: &mut [S]) {
+        let _ = (h, x, out_f, out_jblk, ws);
+        unimplemented!("cell does not have packed block-Jacobian kernels")
+    }
+
+    /// [`Cell::jacobian_block`] from precomputed input projections (the
+    /// gate math shared through [`Cell::precompute_x`], like the GRU/IndRNN
+    /// fused kernels).
+    fn jacobian_block_pre(
+        &self,
+        h: &[S],
+        pre: &[S],
+        out_f: &mut [S],
+        out_jblk: &mut [S],
+        ws: &mut [S],
+    ) {
+        let _ = (h, pre, out_f, out_jblk, ws);
+        unimplemented!("cell does not have packed block-Jacobian kernels")
+    }
+
+    /// Batched [`Cell::jacobian_block`]: `out_jblk = [B, n·k]` packed
+    /// blocks. Default loops over the batch.
+    fn jacobian_block_batch(
+        &self,
+        hs: &[S],
+        xs: &[S],
+        out_f: &mut [S],
+        out_jblk: &mut [S],
+        ws: &mut [S],
+        batch: usize,
+    ) {
+        let n = self.state_dim();
+        let m = self.input_dim();
+        let bl = n * self.block_k().expect("cell has no packed block kernels");
+        debug_assert_eq!(out_f.len(), batch * n);
+        debug_assert_eq!(out_jblk.len(), batch * bl);
+        for s in 0..batch {
+            self.jacobian_block(
+                &hs[s * n..(s + 1) * n],
+                &xs[s * m..(s + 1) * m],
+                &mut out_f[s * n..(s + 1) * n],
+                &mut out_jblk[s * bl..(s + 1) * bl],
+                ws,
+            );
+        }
+    }
+
+    /// Batched [`Cell::jacobian_block_pre`] (packed-block variant): the
+    /// fused FUNCEVAL kernel of the block path, same bitwise contract as
+    /// [`Cell::jacobian_pre_batch`]. Default loops over the batch.
+    fn jacobian_pre_block_batch(
+        &self,
+        hs: &[S],
+        pres: &[S],
+        out_f: &mut [S],
+        out_jblk: &mut [S],
+        ws: &mut [S],
+        batch: usize,
+    ) {
+        let n = self.state_dim();
+        let pl = self.x_precompute_len();
+        let bl = n * self.block_k().expect("cell has no packed block kernels");
+        debug_assert_eq!(out_f.len(), batch * n);
+        debug_assert_eq!(out_jblk.len(), batch * bl);
+        for s in 0..batch {
+            self.jacobian_block_pre(
+                &hs[s * n..(s + 1) * n],
+                &pres[s * pl..(s + 1) * pl],
+                &mut out_f[s * n..(s + 1) * n],
+                &mut out_jblk[s * bl..(s + 1) * bl],
+                ws,
+            );
+        }
     }
 
     /// Batched [`Cell::step`] over B independent (state, input) pairs packed
@@ -524,6 +661,19 @@ mod tests {
                 assert_eq!(jd[j], jd_b[s * n + j]);
             }
         }
+    }
+
+    #[test]
+    fn block_structure_packing() {
+        let b2 = JacobianStructure::Block { k: 2 };
+        assert_eq!(b2.jac_len(8), 8 * 2, "n/k blocks of k² = n·k packed elements");
+        assert_eq!(JacobianStructure::Block { k: 4 }.jac_len(8), 8 * 4);
+        assert_eq!(b2.label(), "block2");
+        assert_eq!(JacobianStructure::Dense.label(), "dense");
+        assert_eq!(JacobianStructure::Diagonal.label(), "diagonal");
+        // k = n degenerates to dense, k = 1 to diagonal, in element count
+        assert_eq!(JacobianStructure::Block { k: 1 }.jac_len(6), 6);
+        assert_eq!(JacobianStructure::Block { k: 6 }.jac_len(6), 36);
     }
 
     #[test]

@@ -11,7 +11,8 @@
 //!    trajectories from the previous round become the initial guess),
 //! 3. **memory-planned**: the [`MemoryPlanner`] caps the fused batch at
 //!    what fits the device budget (structure-aware — the diagonal path
-//!    packs Jacobians as `B·T·n`), splitting oversized groups,
+//!    packs Jacobians as `B·T·n`, the `Block(k)` path as `B·T·n·k`; Hybrid
+//!    budgets its dense starting phase), splitting oversized groups,
 //! 4. **dispatched** as a single [`ConvergencePolicy::evaluate_batch`] call
 //!    (per-sequence convergence masking + per-sequence fallback inside).
 //!
@@ -51,14 +52,20 @@ pub struct EvalReply {
     /// Whether a cached trajectory seeded the initial guess.
     pub warm_started: bool,
     /// Final per-step Jacobians along this sequence's trajectory (length
-    /// `T·jac_len`, layout per the executor's effective structure) —
-    /// populated only when [`BatchExecutor::keep_jacobians`] is set AND the
-    /// sequence converged through DEER. A training step can hand these to
+    /// `T·jac_len`, layout per [`EvalReply::jac_structure`]) — populated
+    /// only when [`BatchExecutor::keep_jacobians`] is set AND the sequence
+    /// converged through DEER. A training step can hand these to
     /// `deer_rnn_backward_batch` to skip the backward JACOBIAN recompute
     /// (the speed side of the paper's §3.1.1 memory/speed trade-off). A
     /// sequential-fallback sequence carries `None`: its forward Jacobians
     /// belong to the failed DEER iterate, not the returned trajectory.
     pub jacobians: Option<Vec<f32>>,
+    /// Layout of [`EvalReply::jacobians`] — the structure the solve
+    /// actually finished with. Usually `effective_structure(cell,
+    /// policy.jacobian_mode)`, but under Hybrid mode the endgame switch
+    /// can leave it `Diagonal` while the effective (planning) structure is
+    /// `Dense` — consumers must slice by THIS field, never by the mode.
+    pub jac_structure: crate::cells::JacobianStructure,
 }
 
 /// Dispatch counters. `batched_solves` counts fused solve calls: one per
@@ -182,8 +189,14 @@ impl<'c, C: Cell<f32>> BatchExecutor<'c, C> {
                 self.cache.put(req.payload.sample_id, traj.clone());
                 // converged is part of the contract: without the sequential
                 // fallback a diverged sequence still reports path == Deer,
-                // and its Jacobians belong to the divergent iterate
+                // and its Jacobians belong to the divergent iterate. Hybrid
+                // never hands Jacobians out: the endgame switch converts
+                // every sequence's slab — including ones that converged on
+                // the exact dense path — to the diagonal approximation, so
+                // reusing them in the eq.-7 backward would silently degrade
+                // gradients; consumers recompute instead.
                 let jacobians = if self.keep_jacobians
+                    && self.policy.jacobian_mode != crate::deer::JacobianMode::Hybrid
                     && paths[s] == EvalPath::Deer
                     && res.converged[s]
                 {
@@ -199,6 +212,7 @@ impl<'c, C: Cell<f32>> BatchExecutor<'c, C> {
                     path: paths[s],
                     warm_started: warm[s],
                     jacobians,
+                    jac_structure: res.jac_structure,
                 });
             }
         }
@@ -380,6 +394,61 @@ mod tests {
             for reply in r {
                 assert!(reply.jacobians.is_none());
             }
+        }
+    }
+
+    /// Block(2) through the executor: the memory planner budgets the packed
+    /// `B·T·n·k` slabs, the fused solve runs the block path, and retained
+    /// Jacobians come back in the packed block layout.
+    #[test]
+    fn block_mode_plans_and_solves_through_executor() {
+        use crate::cells::Lstm;
+        use crate::deer::newton::JacobianMode;
+        let mut rng = Rng::new(6);
+        let (units, m, t_len, b) = (2usize, 2usize, 150usize, 3usize);
+        let cell: Lstm<f32> = Lstm::new(units, m, &mut rng);
+        let n = cell.state_dim();
+        let mut ex = BatchExecutor::new(
+            &cell,
+            t_len,
+            b,
+            Duration::from_secs(60),
+            1 << 20,
+            16 * (1u64 << 30),
+            1,
+        );
+        ex.policy.jacobian_mode = JacobianMode::BlockApprox;
+        ex.keep_jacobians = true;
+        // structure-aware planning: block batches beat dense ones
+        let dense_max = ex.planner.max_deer_batch_structured(
+            n,
+            t_len,
+            crate::cells::JacobianStructure::Dense,
+        );
+        let block_max = ex.planner.max_deer_batch_structured(
+            n,
+            t_len,
+            crate::cells::JacobianStructure::Block { k: 2 },
+        );
+        assert!(block_max > dense_max);
+
+        let mut replies = Vec::new();
+        for id in 0..b as u64 {
+            let mut r2 = Rng::new(2000 + id);
+            let mut xs = vec![0.0f32; t_len * m];
+            r2.fill_normal(&mut xs, 1.0);
+            let out = ex.submit(id, vec![0.0f32; n], xs);
+            if !out.is_empty() {
+                replies = out;
+            }
+        }
+        assert_eq!(ex.stats.batched_solves, 1);
+        assert_eq!(replies.len(), b);
+        for reply in &replies {
+            assert!(reply.converged, "block path must converge through the executor");
+            assert_eq!(reply.jac_structure, crate::cells::JacobianStructure::Block { k: 2 });
+            let jac = reply.jacobians.as_ref().expect("jacobians retained");
+            assert_eq!(jac.len(), t_len * n * 2, "packed [T, n/2, 2, 2] slab");
         }
     }
 

@@ -116,6 +116,20 @@ mod tests {
         assert!(!p.deer_fits_structured(64, 1_000_000, 16, JacobianStructure::Dense));
     }
 
+    /// Block(2) sits between diagonal and dense: the packed `B·T·n·k`
+    /// Jacobians unlock the n=64 batches the dense path OOMs on, at ~2× the
+    /// diagonal footprint.
+    #[test]
+    fn block_planner_between_diag_and_dense() {
+        let p = MemoryPlanner::new(16 * (1 << 30));
+        let dense = p.max_deer_batch_structured(64, 1_000_000, JacobianStructure::Dense);
+        let block = p.max_deer_batch_structured(64, 1_000_000, JacobianStructure::Block { k: 2 });
+        let diag = p.max_deer_batch_structured(64, 1_000_000, JacobianStructure::Diagonal);
+        assert!(dense < block && block < diag, "dense {dense} < block {block} < diag {diag}");
+        assert!(p.deer_fits_structured(64, 1_000_000, 12, JacobianStructure::Block { k: 2 }));
+        assert!(!p.deer_fits_structured(64, 1_000_000, 12, JacobianStructure::Dense));
+    }
+
     #[test]
     fn monotonicity() {
         let p = MemoryPlanner::new(1 << 30);

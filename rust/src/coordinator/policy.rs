@@ -36,6 +36,10 @@ pub struct ConvergencePolicy {
     /// [`DeerConfig::step_clamp`] — keeps DiagonalApprox convergent on
     /// trained (ill-conditioned) cells mid-training.
     pub step_clamp: Option<f64>,
+    /// Residual threshold of [`JacobianMode::Hybrid`], forwarded to
+    /// [`DeerConfig::hybrid_threshold`]: the Full→DiagonalApprox endgame
+    /// switch point. Ignored by the other modes.
+    pub hybrid_threshold: f64,
 }
 
 impl Default for ConvergencePolicy {
@@ -47,6 +51,7 @@ impl Default for ConvergencePolicy {
             fallback_sequential: true,
             jacobian_mode: JacobianMode::Full,
             step_clamp: None,
+            hybrid_threshold: 1e-2,
         }
     }
 }
@@ -63,6 +68,7 @@ impl ConvergencePolicy {
             divergence_patience: self.divergence_patience,
             jacobian_mode: self.jacobian_mode,
             step_clamp: self.step_clamp.map(S::from_f64c),
+            hybrid_threshold: S::from_f64c(self.hybrid_threshold),
         }
     }
 
@@ -186,6 +192,31 @@ mod tests {
             );
             assert_eq!(&res2.ys[s * t * n..(s + 1) * t * n], &want[..]);
         }
+    }
+
+    /// Hybrid mode through the policy: the fused batched solve still
+    /// converges per sequence (endgame switch happens inside the solver)
+    /// and the threshold round-trips into the config.
+    #[test]
+    fn hybrid_mode_through_policy() {
+        let mut rng = Rng::new(4);
+        let (n, m, t, b) = (3usize, 2usize, 300usize, 2usize);
+        let cell: Gru<f64> = Gru::new(n, m, &mut rng);
+        let mut xs = vec![0.0; b * t * m];
+        rng.fill_normal(&mut xs, 1.0);
+        let h0s = vec![0.0; b * n];
+        let pol = ConvergencePolicy {
+            jacobian_mode: JacobianMode::Hybrid,
+            hybrid_threshold: 5e-3,
+            ..Default::default()
+        };
+        let cfg: DeerConfig<f64> = pol.config(1);
+        assert!((cfg.hybrid_threshold - 5e-3).abs() < 1e-15);
+        let (paths, res) = pol.evaluate_batch(&cell, &h0s, &xs, None, 1, b);
+        assert!(paths.iter().all(|&p| p == EvalPath::Deer));
+        assert!(res.converged.iter().all(|&c| c));
+        // the switch fired → packed diagonal Jacobians in the result
+        assert_eq!(res.jacobians.len(), b * t * n, "{:?}", res.jac_structure);
     }
 
     #[test]

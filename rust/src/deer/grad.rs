@@ -21,14 +21,20 @@
 //!
 //! `jac_structure` selects the dual-scan kernel. With
 //! [`JacobianStructure::Diagonal`] the transpose is a no-op and the scan
-//! runs through the O(n) kernels of [`crate::scan::diag`]. For natively
-//! diagonal cells this is the **exact** gradient (identical to BPTT); for
-//! dense cells it is the quasi-DEER gradient approximation (the λ
-//! recursion drops off-diagonal Jacobian terms) — use
+//! runs through the O(n) kernels of [`crate::scan::diag`]; with
+//! [`JacobianStructure::Block { k }`] each k×k tile is transposed in place
+//! and the scan runs through the O(n·k²) kernels of
+//! [`crate::scan::block`]. For cells whose Jacobian genuinely has the
+//! requested structure (natively diagonal cells; LSTM/LEM with diagonal
+//! recurrent weights on the block path) this is the **exact** gradient
+//! (identical to BPTT); for general dense cells the structured λ recursion
+//! drops the off-structure Jacobian terms (the quasi gradient) — use
 //! [`JacobianStructure::Dense`] when exact gradients of a dense cell are
-//! required.
+//! required. Block keeps strictly more of the λ-propagation than Diagonal
+//! (the per-unit cross terms), so its gradient bias is no larger.
 
 use crate::cells::{Cell, CellGrad, JacobianStructure};
+use crate::scan::block::par_block_scan_reverse_batch_ws;
 use crate::scan::diag::par_diag_scan_reverse_batch_ws;
 use crate::scan::par::par_scan_reverse_batch_ws;
 use crate::scan::ScanWorkspace;
@@ -162,6 +168,11 @@ pub fn deer_rnn_backward_batch<S: Scalar, C: CellGrad<S>>(
                 jac, gs, &mut lambda, n, t_len, batch, None, threads, &mut scan_ws,
             );
         }
+        JacobianStructure::Block { k } => {
+            par_block_scan_reverse_batch_ws(
+                jac, gs, &mut lambda, n, k, t_len, batch, None, threads, &mut scan_ws,
+            );
+        }
     });
 
     // Phase 3: parameter VJP reduction over the [B, T] grid with per-chunk
@@ -289,6 +300,8 @@ fn recompute_jacobians_batch<S: Scalar, C: Cell<S>>(
     let sm = t_len * m;
     let batch = all_seqs.len();
     let native_diag = cell.jacobian_structure() == JacobianStructure::Diagonal;
+    let native_block =
+        matches!(jac_structure, JacobianStructure::Block { k } if cell.block_k() == Some(k));
     let mut jac = vec![S::zero(); batch * sj];
     if t_len == 0 {
         return jac;
@@ -297,7 +310,12 @@ fn recompute_jacobians_batch<S: Scalar, C: Cell<S>>(
     let work = |items: Vec<(usize, usize, usize, &mut [S])>| {
         let mut f_scratch = vec![S::zero(); n];
         let mut ws = vec![S::zero(); cell.ws_len()];
-        let mut dense_scratch = if jac_structure == JacobianStructure::Diagonal && !native_diag {
+        let needs_dense_scratch = match jac_structure {
+            JacobianStructure::Diagonal => !native_diag,
+            JacobianStructure::Block { .. } => !native_block,
+            JacobianStructure::Dense => false,
+        };
+        let mut dense_scratch = if needs_dense_scratch {
             vec![S::zero(); n * n]
         } else {
             Vec::new()
@@ -323,6 +341,13 @@ fn recompute_jacobians_batch<S: Scalar, C: Cell<S>>(
                         for j in 0..n {
                             out_j[j] = dense_scratch[j * n + j];
                         }
+                    }
+                    JacobianStructure::Block { .. } if native_block => {
+                        cell.jacobian_block(h_prev, x, &mut f_scratch, out_j, &mut ws);
+                    }
+                    JacobianStructure::Block { k: bk } => {
+                        cell.jacobian(h_prev, x, &mut f_scratch, &mut dense_scratch, &mut ws);
+                        crate::scan::block::extract_blocks(&dense_scratch, out_j, n, bk);
                     }
                 }
             }
@@ -558,6 +583,59 @@ mod tests {
         check(&gru, &h0s, &xs, &gs, JacobianStructure::Dense, (n, m, t, b));
         check(&gru, &h0s, &xs, &gs, JacobianStructure::Diagonal, (n, m, t, b)); // quasi gradient
         check(&ind, &h0s, &xs, &gs, JacobianStructure::Diagonal, (n, m, t, b));
+    }
+
+    /// Batched block backward (native LSTM packed kernels) == the sum /
+    /// concatenation of single-sequence block backward passes.
+    #[test]
+    fn batched_block_backward_matches_looped_lstm() {
+        use crate::cells::Lstm;
+        let mut rng = Rng::new(16);
+        let (units, m, t, b) = (2usize, 2usize, 90usize, 3usize);
+        let cell: Lstm<f64> = Lstm::new(units, m, &mut rng);
+        let n = cell.state_dim();
+        let mut xs = vec![0.0; b * t * m];
+        rng.fill_normal(&mut xs, 1.0);
+        let h0s = vec![0.0; b * n];
+        let mut gs = vec![0.0; b * t * n];
+        rng.fill_normal(&mut gs, 1.0);
+        let structure = JacobianStructure::Block { k: 2 };
+
+        let mut ys = vec![0.0; b * t * n];
+        for s in 0..b {
+            let y = seq_rnn(&cell, &h0s[s * n..(s + 1) * n], &xs[s * t * m..(s + 1) * t * m]);
+            ys[s * t * n..(s + 1) * t * n].copy_from_slice(&y);
+        }
+        let mut dtheta_ref = vec![0.0; cell.num_params()];
+        let mut dh0s_ref = vec![0.0; b * n];
+        for s in 0..b {
+            let g = deer_rnn_backward(
+                &cell,
+                &h0s[s * n..(s + 1) * n],
+                &xs[s * t * m..(s + 1) * t * m],
+                &ys[s * t * n..(s + 1) * t * n],
+                &gs[s * t * n..(s + 1) * t * n],
+                None,
+                structure,
+                1,
+            );
+            for (d, v) in dtheta_ref.iter_mut().zip(g.dtheta.iter()) {
+                *d += *v;
+            }
+            dh0s_ref[s * n..(s + 1) * n].copy_from_slice(&g.dh0);
+        }
+        for threads in [1usize, 2, 4] {
+            let bg = deer_rnn_backward_batch(&cell, &h0s, &xs, &ys, &gs, None, structure, threads, b);
+            for (i, (a, r)) in bg.dtheta.iter().zip(dtheta_ref.iter()).enumerate() {
+                assert!(
+                    (a - r).abs() < 1e-9 * (1.0 + r.abs()),
+                    "threads={threads} dtheta[{i}]: {a} vs {r}"
+                );
+            }
+            for (a, r) in bg.dh0s.iter().zip(dh0s_ref.iter()) {
+                assert!((a - r).abs() < 1e-9, "threads={threads} dh0: {a} vs {r}");
+            }
+        }
     }
 
     /// Reusing the packed diagonal Jacobians from a converged forward pass

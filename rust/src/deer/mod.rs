@@ -19,18 +19,32 @@
 //!
 //! | structure | compose/step | Jacobian memory | convergence |
 //! |-----------|--------------|-----------------|-------------|
-//! | `Dense`            | O(n³) | O(T·n²) | quadratic (exact Newton) |
-//! | `Diagonal` (native)| O(n)  | O(T·n)  | quadratic (exact Newton) |
-//! | `Diagonal` (quasi) | O(n)  | O(T·n)  | linear (same fixed point) |
+//! | `Dense`             | O(n³)        | O(T·n²)  | quadratic (exact Newton) |
+//! | `Block(k)` (native) | O((n/k)·k³)  | O(T·n·k) | quadratic (exact Newton) |
+//! | `Block(k)` (quasi)  | O((n/k)·k³)  | O(T·n·k) | linear (same fixed point) |
+//! | `Diagonal` (native) | O(n)         | O(T·n)   | quadratic (exact Newton) |
+//! | `Diagonal` (quasi)  | O(n)         | O(T·n)   | linear (same fixed point) |
 //!
-//! **Quasi-DEER** ([`JacobianMode::DiagonalApprox`]) is the middle row
-//! forced onto dense cells: full f-evaluations, diagonally-approximated
+//! **Quasi-DEER** ([`JacobianMode::DiagonalApprox`]) is the diagonal-quasi
+//! row forced onto dense cells: full f-evaluations, diagonally-approximated
 //! Jacobians inside the linear solve. Per-iteration INVLIN cost drops from
 //! O(T·n³) to O(T·n) while the iteration count typically grows only from
 //! ~5–7 to ~10–30 (the fixed point is untouched, so the answer is still the
 //! exact trajectory). The break-even is strongly in quasi-DEER's favor once
 //! n ≳ 8; below that the dense path's quadratic convergence wins. See
 //! `deer bench --exp quasi` for the measured trade-off grid.
+//!
+//! **Block quasi-DEER** ([`JacobianMode::BlockApprox`]) is the ParaRNN
+//! middle rung: k×k diagonal blocks over the natural unit pairing
+//! ([`crate::cells::Cell::block_k`] — 2 for LSTM/LEM's interleaved
+//! `(h_i, c_i)` / `(y_i, z_i)` states). It keeps the per-unit cross terms
+//! the diagonal approximation drops, so its linear rate is at least as
+//! good, at an O(n·k²)-per-element scan; with diagonal recurrent weights
+//! the block Jacobian is exact and the mode IS exact Newton, bitwise equal
+//! to the dense path. `deer bench --exp block` measures dense vs Block(2)
+//! vs diagonal on LSTM. **Hybrid** ([`JacobianMode::Hybrid`]) runs Full
+//! until the residual crosses `DeerConfig::hybrid_threshold`, then
+//! finishes on the diagonal scan (cheap endgame).
 //!
 //! # Batched execution
 //!

@@ -13,11 +13,11 @@
 //! Convergence is quadratic (App. A.3); iteration stops when
 //! `max|y^{(k+1)} − y^{(k)}| < tol` (App. B.1) or `max_iter` is hit.
 //!
-//! # Structured-Jacobian fast path (quasi-DEER)
+//! # Structured-Jacobian fast paths (quasi-DEER)
 //!
 //! The INVLIN scan dominates at larger state dims because dense compose is
-//! O(n³) per element (§3.1.1). Two ways onto the O(n) diagonal kernels of
-//! [`crate::scan::diag`]:
+//! O(n³) per element (§3.1.1). Ways onto the structured kernels of
+//! [`crate::scan::diag`] / [`crate::scan::block`]:
 //!
 //! * a cell whose Jacobian **is** diagonal
 //!   ([`JacobianStructure::Diagonal`], e.g. [`crate::cells::IndRnn`]) keeps
@@ -28,7 +28,20 @@
 //!   (the `b_i` correction uses the same approximated propagator), so the
 //!   iteration still converges to the exact trajectory — at a linear rather
 //!   than quadratic rate, trading a few extra cheap iterations for an
-//!   O(n²)-per-element-cheaper scan and O(T·n) Jacobian memory.
+//!   O(n²)-per-element-cheaper scan and O(T·n) Jacobian memory;
+//! * [`JacobianMode::BlockApprox`] (**block quasi-DEER**; the ParaRNN
+//!   structure) replaces `J_i` by its k×k diagonal blocks — `k = 2` for
+//!   LSTM/LEM's natural `(h_i, c_i)` / `(y_i, z_i)` pairing. Compose drops
+//!   to O((n/k)·k³) and Jacobian memory to O(T·n·k) while keeping the
+//!   per-unit coupling the diagonal approximation discards, so the linear
+//!   rate is at least as good. Cells with packed block kernels
+//!   ([`crate::cells::Cell::jacobian_block`]) never materialize an n×n
+//!   matrix; with diagonal recurrent weights the block Jacobian is exact
+//!   and this mode IS exact Newton (bitwise-equal to the dense path);
+//! * [`JacobianMode::Hybrid`] runs Full until the residual drops below
+//!   [`DeerConfig::hybrid_threshold`], then finishes on DiagonalApprox —
+//!   quadratic contraction into the basin, O(n)-per-element sweeps inside
+//!   it (the cheap endgame).
 //!
 //! # Batched `[B, T, n]` execution
 //!
@@ -53,6 +66,7 @@
 //! `[B, T, n]` buffers per iteration) and `INVLIN` (the scan).
 
 use crate::cells::{Cell, JacobianStructure};
+use crate::scan::block::par_block_scan_apply_batch_ws;
 use crate::scan::diag::par_diag_scan_apply_batch_ws;
 use crate::scan::par::par_scan_apply_batch_ws;
 use crate::scan::ScanWorkspace;
@@ -69,6 +83,33 @@ pub enum JacobianMode {
     /// scan (full f-evals are kept, so the converged trajectory is exact).
     /// No-op for cells that are already diagonal.
     DiagonalApprox,
+    /// Block quasi-DEER (ParaRNN-style): approximate dense Jacobians by
+    /// their k×k diagonal blocks inside the scan, `k` the cell's natural
+    /// [`Cell::block_k`] pairing (2 for LSTM/LEM; default 2 otherwise).
+    /// Cells with packed block kernels ([`Cell::jacobian_block`]) evaluate
+    /// only the `[T, n/k, k, k]` slabs — O(T·n·k) Jacobian memory — and
+    /// compose costs O((n/k)·k³) per scan element instead of O(n³). Full
+    /// f-evals are kept, so the converged trajectory is exact; when the
+    /// recurrent weights are diagonal the block Jacobian *is* the exact
+    /// Jacobian and this mode is exact Newton. No-op for diagonal cells;
+    /// degrades to [`JacobianMode::DiagonalApprox`] when the state dim has
+    /// no valid block partition (e.g. odd n without a natural pairing).
+    BlockApprox,
+    /// Hybrid Newton (Gonzalez-et-al-style cheap endgame): start with the
+    /// exact Full structure and switch the still-running solve to
+    /// `DiagonalApprox` once every active sequence's residual drops below
+    /// [`DeerConfig::hybrid_threshold`] — the expensive dense compose pays
+    /// for the global phase only, the cheap diagonal scan polishes. The
+    /// fixed point is unchanged; the returned `jac_structure` reports the
+    /// final phase's layout (already-stored dense Jacobians are converted
+    /// on the switch).
+    ///
+    /// The switch is **batch-global** (one Jacobian buffer, one layout):
+    /// in a fused batch a slow straggler keeps every still-active
+    /// neighbour on the dense path until all residuals cross the
+    /// threshold. A per-sequence structure choice would need per-sequence
+    /// jac layouts inside one solve — recorded as a ROADMAP follow-up.
+    Hybrid,
 }
 
 /// Configuration of the DEER iteration.
@@ -96,6 +137,13 @@ pub struct DeerConfig<S> {
     /// rate are untouched. `None` (default) preserves the undamped
     /// iteration bitwise.
     pub step_clamp: Option<S>,
+    /// Residual threshold of [`JacobianMode::Hybrid`]: once every active
+    /// sequence's max-abs update falls below it, the solve switches from
+    /// the Full structure to `DiagonalApprox` for the remaining sweeps.
+    /// Ignored by the other modes. Default 1e-2 — inside the basin where
+    /// the diagonally-approximated iteration contracts reliably, but early
+    /// enough to skip several dense sweeps.
+    pub hybrid_threshold: S,
 }
 
 impl<S: Scalar> Default for DeerConfig<S> {
@@ -107,6 +155,7 @@ impl<S: Scalar> Default for DeerConfig<S> {
             divergence_patience: 8,
             jacobian_mode: JacobianMode::Full,
             step_clamp: None,
+            hybrid_threshold: S::from_f64c(1e-2),
         }
     }
 }
@@ -124,8 +173,8 @@ pub struct DeerResult<S> {
     pub err_trace: Vec<f64>,
     /// Final per-step Jacobians — reusable by the backward pass (the
     /// paper's memory/speed trade-off of §3.1.1). Layout depends on
-    /// [`DeerResult::jac_structure`]: `T·n·n` dense or `T·n` packed
-    /// diagonal.
+    /// [`DeerResult::jac_structure`]: `T·n·n` dense, `T·n` packed diagonal
+    /// or `T·n·k` packed k×k blocks.
     pub jacobians: Vec<S>,
     /// Structure of [`DeerResult::jacobians`].
     pub jac_structure: JacobianStructure,
@@ -150,8 +199,9 @@ pub struct BatchDeerResult<S> {
     pub converged: Vec<bool>,
     /// Per-sequence max-abs update traces.
     pub err_traces: Vec<Vec<f64>>,
-    /// Final per-step Jacobians, `[B, T, n·n]` dense or `[B, T, n]` packed
-    /// diagonal — reusable by [`super::grad::deer_rnn_backward_batch`].
+    /// Final per-step Jacobians, `[B, T, n·n]` dense, `[B, T, n]` packed
+    /// diagonal or `[B, T, n·k]` packed blocks — reusable by
+    /// [`super::grad::deer_rnn_backward_batch`].
     pub jacobians: Vec<S>,
     /// Structure of [`BatchDeerResult::jacobians`].
     pub jac_structure: JacobianStructure,
@@ -162,14 +212,35 @@ pub struct BatchDeerResult<S> {
 }
 
 /// The Jacobian structure the solve will run with for a given cell + mode.
+///
+/// For [`JacobianMode::Hybrid`] this is the *starting* (worst-case)
+/// structure — the solve may finish on the diagonal layout (see
+/// [`BatchDeerResult::jac_structure`]); memory planners should budget for
+/// the value returned here.
 pub fn effective_structure<S: Scalar, C: Cell<S>>(
     cell: &C,
     mode: JacobianMode,
 ) -> JacobianStructure {
-    match (cell.jacobian_structure(), mode) {
-        (JacobianStructure::Diagonal, _) => JacobianStructure::Diagonal,
-        (JacobianStructure::Dense, JacobianMode::DiagonalApprox) => JacobianStructure::Diagonal,
-        (JacobianStructure::Dense, JacobianMode::Full) => JacobianStructure::Dense,
+    let native = cell.jacobian_structure();
+    match mode {
+        JacobianMode::Full | JacobianMode::Hybrid => native,
+        JacobianMode::DiagonalApprox => JacobianStructure::Diagonal,
+        JacobianMode::BlockApprox => match native {
+            JacobianStructure::Diagonal => JacobianStructure::Diagonal,
+            JacobianStructure::Block { k } => JacobianStructure::Block { k },
+            JacobianStructure::Dense => {
+                let k = cell.block_k().unwrap_or(2);
+                if k > 1 && cell.state_dim() % k == 0 {
+                    JacobianStructure::Block { k }
+                } else {
+                    // No valid block partition (odd state dim without a
+                    // natural pairing, or degenerate k) — degrade to the
+                    // diagonal quasi mode rather than panicking inside a
+                    // serving path: same fixed point, coarser propagator.
+                    JacobianStructure::Diagonal
+                }
+            }
+        },
     }
 }
 
@@ -236,9 +307,13 @@ pub fn deer_rnn_batch<S: Scalar, C: Cell<S>>(
         );
     }
 
-    let structure = effective_structure(cell, cfg.jacobian_mode);
-    let jl = structure.jac_len(n);
+    let mut structure = effective_structure(cell, cfg.jacobian_mode);
+    let mut jl = structure.jac_len(n);
     let sn = t_len * n;
+    // Hybrid endgame: armed only while the starting structure is Dense —
+    // on structured cells Full already is the cheap path.
+    let mut hybrid_pending =
+        cfg.jacobian_mode == JacobianMode::Hybrid && structure == JacobianStructure::Dense;
 
     let mut yt: Vec<S> = match init_guess {
         Some(g) => {
@@ -343,6 +418,21 @@ pub fn deer_rnn_batch<S: Scalar, C: Cell<S>>(
                     &mut scan_ws,
                 );
             }
+            JacobianStructure::Block { k } => {
+                par_block_scan_apply_batch_ws(
+                    &jac,
+                    &rhs,
+                    h0s,
+                    &mut y_next,
+                    n,
+                    k,
+                    t_len,
+                    batch,
+                    Some(&active),
+                    cfg.threads,
+                    &mut scan_ws,
+                );
+            }
         });
 
         // Trajectory update + per-sequence error reduction, parallel over
@@ -380,6 +470,33 @@ pub fn deer_rnn_batch<S: Scalar, C: Cell<S>>(
                 grow_streak[s] = 0;
             }
             prev_err[s] = err;
+        }
+
+        // Hybrid endgame switch: once every still-active sequence's
+        // residual is below the threshold, drop from the dense structure to
+        // DiagonalApprox for the remaining sweeps. Already-stored dense
+        // Jacobians (including those of sequences that froze earlier) are
+        // converted to the packed diagonal layout so the returned
+        // `jacobians` buffer is consistent with the reported structure.
+        if hybrid_pending && active.iter().any(|&a| a) {
+            let thr = cfg.hybrid_threshold.to_f64c();
+            let all_below =
+                (0..batch).filter(|&s| active[s]).all(|s| errs[s].is_finite() && errs[s] < thr);
+            if all_below {
+                let mut diag = vec![S::zero(); batch * t_len * n];
+                for s in 0..batch {
+                    for i in 0..t_len {
+                        for j in 0..n {
+                            diag[(s * t_len + i) * n + j] =
+                                jac[(s * t_len + i) * jl + j * n + j];
+                        }
+                    }
+                }
+                jac = diag;
+                structure = JacobianStructure::Diagonal;
+                jl = n;
+                hybrid_pending = false;
+            }
         }
     }
 
@@ -608,6 +725,11 @@ fn eval_f_jac_batch<S: Scalar, C: Cell<S>>(
     let pre_len = cell.x_precompute_len();
     let sp = t_len * pre_len;
     let native_diag = cell.jacobian_structure() == JacobianStructure::Diagonal;
+    // Native packed block kernels available for this structure? (LSTM/LEM
+    // report block_k() = Some(2); generic dense cells fall back to a dense
+    // evaluation + block extraction, mirroring the diagonal quasi path.)
+    let native_block =
+        matches!(structure, JacobianStructure::Block { k } if cell.block_k() == Some(k));
 
     // §Perf (fused batched cell kernels): when the cell supports input
     // precomputation and there are at least two active sequences with
@@ -630,8 +752,13 @@ fn eval_f_jac_batch<S: Scalar, C: Cell<S>>(
     type Item<'a, Sc> = (usize, usize, usize, &'a mut [Sc], &'a mut [Sc]);
     let work = |items: Vec<Item<S>>| {
         let mut ws = vec![S::zero(); cell.ws_len()];
-        // dense scratch only on the quasi-DEER path
-        let mut dense_scratch = if structure == JacobianStructure::Diagonal && !native_diag {
+        // dense scratch only on the quasi-DEER extraction paths
+        let needs_dense_scratch = match structure {
+            JacobianStructure::Diagonal => !native_diag,
+            JacobianStructure::Block { .. } => !native_block,
+            JacobianStructure::Dense => false,
+        };
+        let mut dense_scratch = if needs_dense_scratch {
             vec![S::zero(); n * n]
         } else {
             Vec::new()
@@ -718,6 +845,55 @@ fn eval_f_jac_batch<S: Scalar, C: Cell<S>>(
                             out_f[j] -= out_j[j] * h_prev[j];
                         }
                     }
+                    JacobianStructure::Block { k: bk } => {
+                        if native_block {
+                            // packed evaluation: only the [n/k, k, k] slabs
+                            // are ever materialized
+                            if pre_len > 0 {
+                                cell.jacobian_block_pre(
+                                    h_prev,
+                                    &pre[s * sp + i * pre_len..s * sp + (i + 1) * pre_len],
+                                    out_f,
+                                    out_j,
+                                    &mut ws,
+                                );
+                            } else {
+                                cell.jacobian_block(
+                                    h_prev,
+                                    &xs[s * sm + i * m..s * sm + (i + 1) * m],
+                                    out_f,
+                                    out_j,
+                                    &mut ws,
+                                );
+                            }
+                        } else {
+                            // block quasi-DEER fallback: dense evaluation,
+                            // k×k diagonal-block extraction
+                            if pre_len > 0 {
+                                cell.jacobian_pre(
+                                    h_prev,
+                                    &pre[s * sp + i * pre_len..s * sp + (i + 1) * pre_len],
+                                    out_f,
+                                    &mut dense_scratch,
+                                    &mut ws,
+                                );
+                            } else {
+                                cell.jacobian(
+                                    h_prev,
+                                    &xs[s * sm + i * m..s * sm + (i + 1) * m],
+                                    out_f,
+                                    &mut dense_scratch,
+                                    &mut ws,
+                                );
+                            }
+                            crate::scan::block::extract_blocks(&dense_scratch, out_j, n, bk);
+                        }
+                        // fused GTMULT, block: b_i = f_i − A_blk·y_{i−1}
+                        crate::scan::block::block_matvec(out_j, h_prev, &mut jh, n, bk);
+                        for j in 0..n {
+                            out_f[j] -= jh[j];
+                        }
+                    }
                 }
             }
         }
@@ -800,6 +976,8 @@ fn eval_f_jac_batch_fused<S: Scalar, C: Cell<S>>(
     let pre_len = cell.x_precompute_len();
     let sp = t_len * pre_len;
     let native_diag = cell.jacobian_structure() == JacobianStructure::Diagonal;
+    let native_block =
+        matches!(structure, JacobianStructure::Block { k } if cell.block_k() == Some(k));
 
     // (sequence id, its rhs slab, its jac slab)
     type Own<'a, Sc> = (usize, &'a mut [Sc], &'a mut [Sc]);
@@ -810,8 +988,13 @@ fn eval_f_jac_batch_fused<S: Scalar, C: Cell<S>>(
         let mut pg = vec![S::zero(); bw * pre_len];
         let mut fg = vec![S::zero(); bw * n];
         let mut jg = vec![S::zero(); bw * jl];
-        // dense evaluation scratch only on the quasi-DEER path
-        let mut dense_scratch = if structure == JacobianStructure::Diagonal && !native_diag {
+        // dense evaluation scratch only on the quasi-DEER extraction paths
+        let needs_dense_scratch = match structure {
+            JacobianStructure::Diagonal => !native_diag,
+            JacobianStructure::Block { .. } => !native_block,
+            JacobianStructure::Dense => false,
+        };
+        let mut dense_scratch = if needs_dense_scratch {
             vec![S::zero(); bw * n * n]
         } else {
             Vec::new()
@@ -845,6 +1028,21 @@ fn eval_f_jac_batch_fused<S: Scalar, C: Cell<S>>(
                         }
                     }
                 }
+                JacobianStructure::Block { .. } if native_block => {
+                    cell.jacobian_pre_block_batch(&hg, &pg, &mut fg, &mut jg, &mut ws, bw);
+                }
+                JacobianStructure::Block { k: bk } => {
+                    // block quasi-DEER: dense evaluation, block extraction
+                    cell.jacobian_pre_batch(&hg, &pg, &mut fg, &mut dense_scratch, &mut ws, bw);
+                    for k in 0..bw {
+                        crate::scan::block::extract_blocks(
+                            &dense_scratch[k * n * n..(k + 1) * n * n],
+                            &mut jg[k * jl..(k + 1) * jl],
+                            n,
+                            bk,
+                        );
+                    }
+                }
             }
             // scatter + fused GTMULT: b_i = f_i − J_i·y_{i−1}
             for (k, o) in own.iter_mut().enumerate() {
@@ -862,6 +1060,18 @@ fn eval_f_jac_batch_fused<S: Scalar, C: Cell<S>>(
                     JacobianStructure::Diagonal => {
                         for j in 0..n {
                             out_f[j] = fg[k * n + j] - jg[k * n + j] * h_prev[j];
+                        }
+                    }
+                    JacobianStructure::Block { k: bk } => {
+                        crate::scan::block::block_matvec(
+                            &jg[k * jl..(k + 1) * jl],
+                            h_prev,
+                            &mut jh,
+                            n,
+                            bk,
+                        );
+                        for j in 0..n {
+                            out_f[j] = fg[k * n + j] - jh[j];
                         }
                     }
                 }
@@ -1395,9 +1605,11 @@ mod tests {
 
     #[test]
     fn effective_structure_dispatch() {
+        use crate::cells::Lstm;
         let mut rng = Rng::new(55);
         let gru: Gru<f64> = Gru::new(2, 2, &mut rng);
         let ind: IndRnn<f64> = IndRnn::new(2, 2, &mut rng);
+        let lstm: Lstm<f64> = Lstm::new(3, 2, &mut rng);
         assert_eq!(effective_structure(&gru, JacobianMode::Full), JacobianStructure::Dense);
         assert_eq!(
             effective_structure(&gru, JacobianMode::DiagonalApprox),
@@ -1408,5 +1620,200 @@ mod tests {
             effective_structure(&ind, JacobianMode::DiagonalApprox),
             JacobianStructure::Diagonal
         );
+        // BlockApprox: natural pairing on LSTM, default k=2 on GRU (even n),
+        // no-op on the natively diagonal cell; Hybrid plans the worst case.
+        assert_eq!(
+            effective_structure(&lstm, JacobianMode::BlockApprox),
+            JacobianStructure::Block { k: 2 }
+        );
+        assert_eq!(
+            effective_structure(&gru, JacobianMode::BlockApprox),
+            JacobianStructure::Block { k: 2 }
+        );
+        assert_eq!(
+            effective_structure(&ind, JacobianMode::BlockApprox),
+            JacobianStructure::Diagonal
+        );
+        // no valid 2-partition of an odd dense state → diagonal degrade,
+        // never a panic in a serving path
+        let elman3: crate::cells::Elman<f64> = crate::cells::Elman::new(3, 2, &mut rng);
+        assert_eq!(
+            effective_structure(&elman3, JacobianMode::BlockApprox),
+            JacobianStructure::Diagonal
+        );
+        assert_eq!(effective_structure(&lstm, JacobianMode::Hybrid), JacobianStructure::Dense);
+        assert_eq!(effective_structure(&ind, JacobianMode::Hybrid), JacobianStructure::Diagonal);
+    }
+
+    // ---- Block(k) quasi path ----
+
+    /// Block quasi-DEER on LSTM: packed [T, n/2, 2, 2] Jacobian storage and
+    /// the same sequential fixed point as exact Newton.
+    #[test]
+    fn block_approx_matches_sequential_lstm() {
+        use crate::cells::Lstm;
+        let mut rng = Rng::new(56);
+        let (units, m, t) = (3usize, 2usize, 400usize);
+        let cell: Lstm<f64> = Lstm::new(units, m, &mut rng);
+        let n = cell.state_dim();
+        let xs = random_inputs(m, t, 13);
+        let h0 = vec![0.0; n];
+        let seq = seq_rnn(&cell, &h0, &xs);
+        let cfg = DeerConfig {
+            jacobian_mode: JacobianMode::BlockApprox,
+            tol: 1e-9,
+            max_iter: 500,
+            ..Default::default()
+        };
+        let res = deer_rnn(&cell, &h0, &xs, None, &cfg);
+        assert!(res.converged, "trace: {:?}", res.err_trace);
+        assert_eq!(res.jac_structure, JacobianStructure::Block { k: 2 });
+        assert_eq!(res.jacobians.len(), t * n * 2, "packed [T, n/2, 2, 2] storage");
+        let diff = crate::linalg::max_abs_diff(&seq, &res.ys);
+        assert!(diff < 1e-6, "block quasi-DEER vs sequential: {diff}");
+    }
+
+    /// Block quasi-DEER via the generic dense-extract fallback (GRU has no
+    /// native block kernels): same fixed point.
+    #[test]
+    fn block_approx_fallback_matches_sequential_gru() {
+        let mut rng = Rng::new(57);
+        let (n, m, t) = (4usize, 3usize, 400usize);
+        let cell: Gru<f64> = Gru::new(n, m, &mut rng);
+        let xs = random_inputs(m, t, 14);
+        let h0 = vec![0.0; n];
+        let seq = seq_rnn(&cell, &h0, &xs);
+        let cfg = DeerConfig {
+            jacobian_mode: JacobianMode::BlockApprox,
+            tol: 1e-9,
+            max_iter: 500,
+            ..Default::default()
+        };
+        let res = deer_rnn(&cell, &h0, &xs, None, &cfg);
+        assert!(res.converged, "trace: {:?}", res.err_trace);
+        assert_eq!(res.jac_structure, JacobianStructure::Block { k: 2 });
+        let diff = crate::linalg::max_abs_diff(&seq, &res.ys);
+        assert!(diff < 1e-6, "block fallback vs sequential: {diff}");
+    }
+
+    /// The block approximation keeps strictly more of the Jacobian than the
+    /// diagonal one, so on LSTM it must never need more iterations.
+    #[test]
+    fn block_approx_converges_no_slower_than_diagonal() {
+        use crate::cells::Lstm;
+        let mut rng = Rng::new(58);
+        let cell: Lstm<f64> = Lstm::new(3, 3, &mut rng);
+        let xs = random_inputs(3, 500, 15);
+        let h0 = vec![0.0; cell.state_dim()];
+        let block = deer_rnn(
+            &cell,
+            &h0,
+            &xs,
+            None,
+            &DeerConfig { jacobian_mode: JacobianMode::BlockApprox, max_iter: 400, ..Default::default() },
+        );
+        let diag = deer_rnn(
+            &cell,
+            &h0,
+            &xs,
+            None,
+            &DeerConfig {
+                jacobian_mode: JacobianMode::DiagonalApprox,
+                max_iter: 400,
+                ..Default::default()
+            },
+        );
+        assert!(block.converged && diag.converged);
+        // the block residual drops strictly more of J than the diagonal one
+        // (it keeps the (h_i, c_i) cross terms), so its linear rate should
+        // not be worse — allow a small slack for knife-edge tolerance stops
+        assert!(
+            block.iterations <= diag.iterations + 2,
+            "block {} vs diag {}",
+            block.iterations,
+            diag.iterations
+        );
+    }
+
+    // ---- Hybrid mode ----
+
+    /// Hybrid on a dense GRU: converges to the sequential trajectory, and
+    /// the endgame switch leaves the result reporting (valid) packed
+    /// diagonal Jacobians.
+    #[test]
+    fn hybrid_matches_sequential_and_switches() {
+        let mut rng = Rng::new(59);
+        let (n, m, t) = (4usize, 3usize, 600usize);
+        let cell: Gru<f64> = Gru::new(n, m, &mut rng);
+        let xs = random_inputs(m, t, 16);
+        let h0 = vec![0.0; n];
+        let seq = seq_rnn(&cell, &h0, &xs);
+        let cfg = DeerConfig {
+            jacobian_mode: JacobianMode::Hybrid,
+            max_iter: 300,
+            ..Default::default()
+        };
+        let res = deer_rnn(&cell, &h0, &xs, None, &cfg);
+        assert!(res.converged, "trace: {:?}", res.err_trace);
+        assert_eq!(
+            res.jac_structure,
+            JacobianStructure::Diagonal,
+            "endgame switch must have fired (trace: {:?})",
+            res.err_trace
+        );
+        assert_eq!(res.jacobians.len(), t * n, "packed diagonal after the switch");
+        let diff = crate::linalg::max_abs_diff(&seq, &res.ys);
+        assert!(diff < 1e-6, "hybrid vs sequential: {diff}");
+        // exact Newton reference: the endgame trades a few extra *cheap*
+        // sweeps for skipping the dense tail — never fewer total sweeps.
+        let full = deer_rnn(&cell, &h0, &xs, None, &DeerConfig::default());
+        assert!(res.iterations >= full.iterations);
+    }
+
+    /// An unreachable hybrid threshold keeps the solve on the dense path to
+    /// convergence — identical to Full mode bitwise.
+    #[test]
+    fn hybrid_with_tiny_threshold_equals_full() {
+        let mut rng = Rng::new(65);
+        let cell: Gru<f64> = Gru::new(3, 2, &mut rng);
+        let xs = random_inputs(2, 300, 17);
+        let h0 = vec![0.0; 3];
+        let full = deer_rnn(&cell, &h0, &xs, None, &DeerConfig::default());
+        let hyb = deer_rnn(
+            &cell,
+            &h0,
+            &xs,
+            None,
+            &DeerConfig {
+                jacobian_mode: JacobianMode::Hybrid,
+                hybrid_threshold: 0.0, // err < 0 never holds
+                ..Default::default()
+            },
+        );
+        assert!(full.converged && hyb.converged);
+        assert_eq!(hyb.jac_structure, JacobianStructure::Dense, "switch must not fire");
+        assert_eq!(full.ys, hyb.ys, "unswitched hybrid must equal Full bitwise");
+        assert_eq!(full.iterations, hyb.iterations);
+    }
+
+    /// Hybrid on a natively diagonal cell is a no-op relabeling: the solve
+    /// already runs the cheap path.
+    #[test]
+    fn hybrid_on_diagonal_cell_is_plain_diagonal() {
+        let mut rng = Rng::new(66);
+        let cell: IndRnn<f64> = IndRnn::new(4, 2, &mut rng);
+        let xs = random_inputs(2, 400, 18);
+        let h0 = vec![0.0; 4];
+        let full = deer_rnn(&cell, &h0, &xs, None, &DeerConfig::default());
+        let hyb = deer_rnn(
+            &cell,
+            &h0,
+            &xs,
+            None,
+            &DeerConfig { jacobian_mode: JacobianMode::Hybrid, ..Default::default() },
+        );
+        assert_eq!(hyb.jac_structure, JacobianStructure::Diagonal);
+        assert_eq!(full.ys, hyb.ys);
+        assert_eq!(full.iterations, hyb.iterations);
     }
 }

@@ -8,11 +8,11 @@
 //! model are never conflated. Invoked by `deer bench --exp …` and by the
 //! `cargo bench` harness.
 
-use crate::cells::{Gru, Lem};
+use crate::cells::{Cell, Gru, IndRnn, Lem, Lstm};
 use crate::coordinator::memory::MemoryPlanner;
 use crate::coordinator::sweep::{Job, JobResult, Method, Sweep};
 use crate::deer::grad::deer_rnn_backward;
-use crate::deer::newton::{deer_rnn, DeerConfig, JacobianMode};
+use crate::deer::newton::{deer_rnn, effective_structure, DeerConfig, JacobianMode};
 use crate::deer::ode::{deer_ode, Interp, OdeSystem};
 use crate::deer::seq::{seq_rnn, seq_rnn_backward};
 use crate::scan::{par_diag_scan_apply_ws, par_scan_apply_ws, ScanWorkspace};
@@ -551,11 +551,21 @@ pub fn scan_microbench(
 }
 
 /// Serialize scan-microbench points as the `BENCH_scan.json` document.
+/// The meta records the resolved [`crate::cells::JacobianStructure`] of the
+/// two measured kernels so the artifact is self-describing.
 pub fn scan_bench_json(points: &[ScanBenchPoint], threads: usize) -> Json {
+    use crate::cells::JacobianStructure;
     json::obj(vec![
         ("bench", json::s("scan_invlin")),
         ("dtype", json::s("f32")),
         ("threads", json::num(threads as f64)),
+        (
+            "jacobian_structures",
+            json::arr(vec![
+                json::s(&JacobianStructure::Dense.label()),
+                json::s(&JacobianStructure::Diagonal.label()),
+            ]),
+        ),
         (
             "points",
             json::arr(
@@ -731,12 +741,18 @@ pub fn batch_bench(
     (table, points)
 }
 
-/// Serialize batch-bench points as the `BENCH_batch.json` document.
+/// Serialize batch-bench points as the `BENCH_batch.json` document. The
+/// meta records the Jacobian structure the solve actually resolved to
+/// through [`effective_structure`] (IndRNN → diagonal), so the artifact is
+/// self-describing.
 pub fn batch_bench_json(points: &[BatchBenchPoint]) -> Json {
+    let probe: IndRnn<f32> = IndRnn::new(1, 1, &mut Rng::new(0));
+    let structure = effective_structure(&probe, JacobianMode::Full).label();
     json::obj(vec![
         ("bench", json::s("batch_fused")),
         ("dtype", json::s("f32")),
         ("cell", json::s("indrnn")),
+        ("jacobian_structure", json::s(&structure)),
         (
             "points",
             json::arr(
@@ -912,13 +928,26 @@ pub fn train_bench(
     (table, points)
 }
 
-/// Serialize training-bench points as the `BENCH_train.json` document.
+/// Serialize training-bench points as the `BENCH_train.json` document. The
+/// meta records each arm's resolved Jacobian structure (GRU: deer → dense,
+/// quasi → diagonal; seq-BPTT has none).
 pub fn train_bench_json(points: &[TrainBenchPoint]) -> Json {
+    let probe: Gru<f32> = Gru::new(1, 1, &mut Rng::new(0));
+    let deer_st = effective_structure(&probe, JacobianMode::Full).label();
+    let quasi_st = effective_structure(&probe, JacobianMode::DiagonalApprox).label();
     json::obj(vec![
         ("bench", json::s("train_native")),
         ("dtype", json::s("f32")),
         ("cell", json::s("gru")),
         ("task", json::s("worms_synthetic")),
+        (
+            "jacobian_structures",
+            json::obj(vec![
+                ("seq", json::s("none")),
+                ("deer", json::s(&deer_st)),
+                ("quasi", json::s(&quasi_st)),
+            ]),
+        ),
         (
             "points",
             json::arr(
@@ -950,6 +979,181 @@ pub fn train_bench_json(points: &[TrainBenchPoint]) -> Json {
                             ("quasi_acc", json::num(p.quasi_acc)),
                             ("acc_gap", json::num((p.seq_acc - p.deer_acc).abs())),
                             ("deer_mean_iters", json::num(p.deer_mean_iters)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// The {units, lens} grid of the Block(k) bench (`--exp block`). Units are
+/// LSTM hidden units — state dim is 2×units — and both grids keep an
+/// n ≥ 16, T ≥ 1024 point, the regime `scripts/bench_compare.sh` gates on
+/// (Block(2) compose < Dense).
+pub fn block_bench_grid(fast: bool) -> (Vec<usize>, Vec<usize>) {
+    if fast {
+        (vec![8], vec![1_024, 4_096])
+    } else {
+        (vec![4, 8, 16], vec![1_024, 4_096, 16_384])
+    }
+}
+
+/// One point of the dense vs Block(2) vs diagonal-quasi LSTM bench.
+#[derive(Debug, Clone)]
+pub struct BlockBenchPoint {
+    /// State dimension (2 × LSTM units).
+    pub n: usize,
+    pub t_len: usize,
+    /// Newton iterations per mode (Full / BlockApprox / DiagonalApprox).
+    pub dense_iters: usize,
+    pub block_iters: usize,
+    pub quasi_iters: usize,
+    /// Whole-solve wall-clock per trajectory element, ns.
+    pub dense_solve_ns_per_step: f64,
+    pub block_solve_ns_per_step: f64,
+    pub quasi_solve_ns_per_step: f64,
+    /// Per-iteration INVLIN (scan) cost per trajectory element, ns — the
+    /// compose-cost comparison the acceptance gate reads.
+    pub dense_invlin_ns_per_step: f64,
+    pub block_invlin_ns_per_step: f64,
+    pub diag_invlin_ns_per_step: f64,
+    /// Max |Δ| of each structured solve against the sequential trajectory.
+    pub block_max_err: f64,
+    pub quasi_max_err: f64,
+}
+
+/// Block-path bench on LSTM (f32, m = 4): exact dense DEER vs `Block(2)`
+/// quasi (packed native kernels) vs diagonal quasi, measured whole-solve
+/// wall-clock and per-iteration INVLIN cost. Emits the human table plus
+/// machine-readable points for `BENCH_block.json`.
+pub fn block_bench(units: &[usize], lens: &[usize], budget: Duration) -> (Table, Vec<BlockBenchPoint>) {
+    let m = 4usize;
+    let mut table = Table::new(&[
+        "n (state)",
+        "T",
+        "iters dense/block/quasi",
+        "solve dense",
+        "solve block",
+        "solve quasi",
+        "INVLIN/iter dense",
+        "INVLIN/iter block",
+        "INVLIN/iter diag",
+        "block INVLIN speedup",
+        "max |Δ| block",
+    ]);
+    let mut points = Vec::new();
+    for &u in units {
+        for &t_len in lens {
+            let mut rng = Rng::new(0xB10C ^ ((u as u64) << 24) ^ t_len as u64);
+            let cell: Lstm<f32> = Lstm::new(u, m, &mut rng);
+            let n = cell.state_dim();
+            let mut xs = vec![0.0f32; t_len * m];
+            rng.fill_normal(&mut xs, 1.0);
+            let h0 = vec![0.0f32; n];
+            let mk = |mode: JacobianMode| DeerConfig::<f32> {
+                jacobian_mode: mode,
+                max_iter: 200,
+                ..Default::default()
+            };
+            let cfg_dense = mk(JacobianMode::Full);
+            let cfg_block = mk(JacobianMode::BlockApprox);
+            let cfg_quasi = mk(JacobianMode::DiagonalApprox);
+
+            let seq = seq_rnn(&cell, &h0, &xs);
+            let dense = deer_rnn(&cell, &h0, &xs, None, &cfg_dense);
+            let block = deer_rnn(&cell, &h0, &xs, None, &cfg_block);
+            let quasi = deer_rnn(&cell, &h0, &xs, None, &cfg_quasi);
+            let block_err = crate::linalg::max_abs_diff(&seq, &block.ys).to_f64c();
+            let quasi_err = crate::linalg::max_abs_diff(&seq, &quasi.ys).to_f64c();
+
+            let time = |cfg: &DeerConfig<f32>| {
+                bench_budget(1, 16, budget, || {
+                    std::hint::black_box(deer_rnn(&cell, &h0, &xs, None, cfg).ys.len());
+                })
+                .median()
+            };
+            let t_dense = time(&cfg_dense);
+            let t_block = time(&cfg_block);
+            let t_quasi = time(&cfg_quasi);
+
+            let invlin_per_step = |r: &crate::deer::DeerResult<f32>| {
+                r.profile.get("INVLIN") / r.iterations.max(1) as f64 / t_len as f64 * 1e9
+            };
+            let p = BlockBenchPoint {
+                n,
+                t_len,
+                dense_iters: dense.iterations,
+                block_iters: block.iterations,
+                quasi_iters: quasi.iterations,
+                dense_solve_ns_per_step: t_dense / t_len as f64 * 1e9,
+                block_solve_ns_per_step: t_block / t_len as f64 * 1e9,
+                quasi_solve_ns_per_step: t_quasi / t_len as f64 * 1e9,
+                dense_invlin_ns_per_step: invlin_per_step(&dense),
+                block_invlin_ns_per_step: invlin_per_step(&block),
+                diag_invlin_ns_per_step: invlin_per_step(&quasi),
+                block_max_err: block_err,
+                quasi_max_err: quasi_err,
+            };
+            table.row(vec![
+                n.to_string(),
+                t_len.to_string(),
+                format!("{}/{}/{}", p.dense_iters, p.block_iters, p.quasi_iters),
+                fmt_secs(t_dense),
+                fmt_secs(t_block),
+                fmt_secs(t_quasi),
+                format!("{:.1} ns", p.dense_invlin_ns_per_step),
+                format!("{:.1} ns", p.block_invlin_ns_per_step),
+                format!("{:.1} ns", p.diag_invlin_ns_per_step),
+                sig3(p.dense_invlin_ns_per_step / p.block_invlin_ns_per_step),
+                format!("{:.1e}", p.block_max_err),
+            ]);
+            points.push(p);
+        }
+    }
+    (table, points)
+}
+
+/// Serialize block-bench points as the `BENCH_block.json` document. The
+/// meta records each mode's resolved Jacobian structure on the measured
+/// LSTM (dense / block2 / diagonal).
+pub fn block_bench_json(points: &[BlockBenchPoint]) -> Json {
+    let probe: Lstm<f32> = Lstm::new(1, 1, &mut Rng::new(0));
+    let dense_st = effective_structure(&probe, JacobianMode::Full).label();
+    let block_st = effective_structure(&probe, JacobianMode::BlockApprox).label();
+    let quasi_st = effective_structure(&probe, JacobianMode::DiagonalApprox).label();
+    json::obj(vec![
+        ("bench", json::s("block_lstm")),
+        ("dtype", json::s("f32")),
+        ("cell", json::s("lstm")),
+        (
+            "jacobian_structures",
+            json::obj(vec![
+                ("dense", json::s(&dense_st)),
+                ("block", json::s(&block_st)),
+                ("quasi", json::s(&quasi_st)),
+            ]),
+        ),
+        (
+            "points",
+            json::arr(
+                points
+                    .iter()
+                    .map(|p| {
+                        json::obj(vec![
+                            ("n", json::num(p.n as f64)),
+                            ("t", json::num(p.t_len as f64)),
+                            ("dense_iters", json::num(p.dense_iters as f64)),
+                            ("block_iters", json::num(p.block_iters as f64)),
+                            ("quasi_iters", json::num(p.quasi_iters as f64)),
+                            ("dense_solve_ns_per_step", json::num(p.dense_solve_ns_per_step)),
+                            ("block_solve_ns_per_step", json::num(p.block_solve_ns_per_step)),
+                            ("quasi_solve_ns_per_step", json::num(p.quasi_solve_ns_per_step)),
+                            ("dense_invlin_ns_per_step", json::num(p.dense_invlin_ns_per_step)),
+                            ("block_invlin_ns_per_step", json::num(p.block_invlin_ns_per_step)),
+                            ("diag_invlin_ns_per_step", json::num(p.diag_invlin_ns_per_step)),
+                            ("block_max_err", json::num(p.block_max_err)),
+                            ("quasi_max_err", json::num(p.quasi_max_err)),
                         ])
                     })
                     .collect(),
@@ -1097,6 +1301,45 @@ mod tests {
         assert_eq!(pts[0].get("batch").unwrap().as_usize(), Some(8));
         assert_eq!(pts[0].get("speedup").unwrap().as_f64(), Some(2.5));
         assert!(pts[0].get("seqs_per_sec_batched").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn block_bench_reports_grid_and_structures() {
+        let (t, points) = block_bench(&[2], &[300], Duration::from_millis(20));
+        assert_eq!(t.num_rows(), 1);
+        assert_eq!(points.len(), 1);
+        let p = &points[0];
+        assert_eq!((p.n, p.t_len), (4, 300));
+        assert!(p.dense_invlin_ns_per_step > 0.0 && p.block_invlin_ns_per_step > 0.0);
+        assert!(p.block_max_err < 1e-2, "block solve diverged from sequential: {}", p.block_max_err);
+
+        let doc = block_bench_json(&points);
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        let sts = parsed.get("jacobian_structures").unwrap();
+        assert_eq!(sts.get("dense").unwrap().as_str(), Some("dense"));
+        assert_eq!(sts.get("block").unwrap().as_str(), Some("block2"));
+        assert_eq!(sts.get("quasi").unwrap().as_str(), Some("diagonal"));
+        let pts = parsed.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(pts.len(), 1);
+        assert_eq!(pts[0].get("n").unwrap().as_usize(), Some(4));
+        assert!(pts[0].get("block_invlin_ns_per_step").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn bench_json_metas_are_self_describing() {
+        // the satellite fix: every bench document names the resolved
+        // Jacobian structure(s) it ran with
+        let scan = Json::parse(&scan_bench_json(&[], 1).to_string()).unwrap();
+        let sts = scan.get("jacobian_structures").unwrap().as_arr().unwrap();
+        assert_eq!(sts[0].as_str(), Some("dense"));
+        assert_eq!(sts[1].as_str(), Some("diagonal"));
+        let batch = Json::parse(&batch_bench_json(&[]).to_string()).unwrap();
+        assert_eq!(batch.get("jacobian_structure").unwrap().as_str(), Some("diagonal"));
+        let train = Json::parse(&train_bench_json(&[]).to_string()).unwrap();
+        let sts = train.get("jacobian_structures").unwrap();
+        assert_eq!(sts.get("deer").unwrap().as_str(), Some("dense"));
+        assert_eq!(sts.get("quasi").unwrap().as_str(), Some("diagonal"));
+        assert_eq!(sts.get("seq").unwrap().as_str(), Some("none"));
     }
 
     #[test]

@@ -1,9 +1,9 @@
 //! `deer` — the Layer-3 coordinator CLI.
 //!
 //! Subcommands:
-//!   bench  --exp fig2|fig2grad|fig3|fig6|fig7|fig8|table3|table4|table5|table6|quasi|scan|batch|train|all
+//!   bench  --exp fig2|fig2grad|fig3|fig6|fig7|fig8|table3|table4|table5|table6|quasi|block|scan|batch|train|all
 //!   sweep  --dims 1,2,4 --lens 1000,10000 --workers 2
-//!   train  --exp worms|twobody --mode seq|deer|quasi --steps 100   (native trainer)
+//!   train  --exp worms|twobody --mode seq|deer|quasi|hybrid --steps 100   (native trainer)
 //!   train  --model worms|hnn-deer|hnn-rk4|mhgru --steps 100        (xla artifacts)
 //!   info   (list artifacts)
 //!
@@ -66,11 +66,12 @@ fn run() -> Result<()> {
                  \n  deer bench --exp all            regenerate every paper table/figure\
                  \n  deer bench --exp fig2 --dims 1,2,4 --lens 1000,10000\
                  \n  deer bench --exp quasi          Full vs DiagonalApprox Jacobians\
+                 \n  deer bench --exp block --block-out BENCH_block.json  LSTM dense vs Block(2) vs diagonal\
                  \n  deer bench --exp scan --scan-out BENCH_scan.json   INVLIN kernel microbench\
                  \n  deer bench --exp batch --batch-out BENCH_batch.json  fused-batched vs looped dispatch\
                  \n  deer bench --exp train --train-out BENCH_train.json  seq-BPTT vs DEER optimizer steps\
                  \n  deer sweep --workers 2          coordinator sweep demo\
-                 \n  deer train --exp worms --mode deer --steps 40   native §4.3 trainer (seq|deer|quasi)\
+                 \n  deer train --exp worms --mode deer --steps 40   native §4.3 trainer (seq|deer|quasi|hybrid)\
                  \n  deer train --exp twobody --mode deer            native energy-regression trainer\
                  \n  deer train --model worms --steps 50             artifact trainer (xla feature)\
                  \n  deer info                       list AOT artifacts"
@@ -180,6 +181,24 @@ fn bench(args: &Args, rec: &Recorder) -> Result<()> {
             "Quasi-DEER ablation: Full vs DiagonalApprox Jacobians (GRU, measured 1-core)",
             &exp::quasi_deer_bench(&opts),
         )?;
+    }
+    if all || which == "block" {
+        // Block(2) path bench: LSTM exact dense DEER vs packed Block(2)
+        // quasi vs diagonal quasi — whole-solve wall-clock + per-iteration
+        // INVLIN cost. Grid shrinks under DEER_BENCH_FAST=1; both grids
+        // keep the n ≥ 16, T ≥ 1024 point the compose gate reads.
+        let fast = std::env::var("DEER_BENCH_FAST").is_ok();
+        let (units, lens) = exp::block_bench_grid(fast);
+        let budget = if fast { Duration::from_millis(200) } else { opts.budget_per_cell };
+        let (t, points) = exp::block_bench(&units, &lens, budget);
+        rec.table(
+            "block_lstm",
+            "Block(2) path: LSTM dense vs packed Block(2) vs diagonal quasi (measured 1-core)",
+            &t,
+        )?;
+        let out_path = PathBuf::from(args.get("block-out", "BENCH_block.json"));
+        std::fs::write(&out_path, exp::block_bench_json(&points).to_string())?;
+        println!("block bench points written to {}", out_path.display());
     }
     if all || which == "batch" {
         // Batched-dispatch bench: B looped single-sequence solves vs ONE
@@ -326,6 +345,10 @@ fn native_train(args: &Args, rec: &Recorder) -> Result<()> {
         None => None,
     };
 
+    // --hybrid-threshold <r>: the Full→DiagonalApprox endgame switch point
+    // of `--mode hybrid` (ignored by the other modes).
+    let hybrid_threshold = args.get_parse("hybrid-threshold", 1e-2f64).map_err(Error::msg)?;
+
     let cfg = TrainConfig {
         mode,
         batch,
@@ -333,6 +356,7 @@ fn native_train(args: &Args, rec: &Recorder) -> Result<()> {
         threads: if mode == ForwardMode::Seq { 1 } else { threads },
         seed,
         step_clamp,
+        hybrid_threshold,
         ..Default::default()
     };
     let mut rng = Rng::new(0xDEE2 ^ seed);

@@ -1,0 +1,888 @@
+//! O((n/k)·k³)-per-element scan kernels for **block-diagonal** affine
+//! elements.
+//!
+//! When every propagator is `A_i = blockdiag(A_i^{(0)}, …, A_i^{(n/k−1)})`
+//! with k×k blocks, the eq. (10) monoid closes over packed blocks: compose
+//! is n/k independent k×k matmuls and apply n/k independent k×k matvecs.
+//! For k ≪ n this removes the O(n³) compose wall of §3.1.1 almost as
+//! thoroughly as the diagonal path — O((n/k)·k³) = O(n·k²) per compose —
+//! while capturing the per-unit state coupling that the diagonal
+//! approximation drops (the ParaRNN observation: LSTM/LEM units carry a
+//! coupled 2-tuple, so `Block(2)` is their natural structure).
+//!
+//! Layout: `a` is `len · (n/k) · k · k` — step i owns `n·k` contiguous
+//! elements, block b of step i the row-major k×k tile
+//! `a[i·n·k + b·k² .. i·n·k + (b+1)·k²]`. `b`-vectors and states stay
+//! packed `[len, n]`; block b of a state vector is the contiguous slice
+//! `[b·k, (b+1)·k)`. No n×n temporaries are materialized anywhere — the
+//! whole path is O(T·n·k) memory.
+//!
+//! **Bitwise contract vs the dense kernels**: on a dense embedding of the
+//! same block-diagonal elements, every kernel here reproduces the dense
+//! kernels of [`super::seq`] / [`super::par`] exactly — the in-block
+//! accumulation order matches the dense loops and the skipped off-block
+//! terms are exact zeros, so the Block-vs-Dense dispatch never changes
+//! results (tests pin this on embedded random blocks).
+//!
+//! Batched variants follow the `[B, T, …]` layout, active-mask and
+//! total-batch-keyed scheduling rules documented in [`crate::scan`].
+
+use super::{combine_block, ScanWorkspace};
+use crate::util::scalar::Scalar;
+
+/// `y = A_step · x` over packed k×k tiles, accumulating each row in
+/// ascending column order (the dense matvec order restricted to the
+/// block). Also the fused-GTMULT building block of the DEER driver's
+/// Block(k) path (`crate::deer::newton`).
+#[inline]
+pub(crate) fn block_matvec<S: Scalar>(a_step: &[S], x: &[S], y: &mut [S], n: usize, k: usize) {
+    let nb = n / k;
+    for b in 0..nb {
+        let tile = &a_step[b * k * k..(b + 1) * k * k];
+        let xb = &x[b * k..(b + 1) * k];
+        let yb = &mut y[b * k..(b + 1) * k];
+        for r in 0..k {
+            let row = &tile[r * k..(r + 1) * k];
+            let mut acc = S::zero();
+            for c in 0..k {
+                acc += row[c] * xb[c];
+            }
+            yb[r] = acc;
+        }
+    }
+}
+
+/// Copy the k×k diagonal blocks of a dense row-major n×n matrix into the
+/// packed `[n/k, k, k]` layout — the quasi-DEER block-extraction shared by
+/// the DEER forward/backward fallback paths for cells without native
+/// packed kernels.
+#[inline]
+pub(crate) fn extract_blocks<S: Scalar>(dense: &[S], out_blk: &mut [S], n: usize, k: usize) {
+    debug_assert_eq!(dense.len(), n * n);
+    debug_assert_eq!(out_blk.len(), n * k);
+    for bb in 0..n / k {
+        for r in 0..k {
+            for c in 0..k {
+                out_blk[bb * k * k + r * k + c] = dense[(bb * k + r) * n + bb * k + c];
+            }
+        }
+    }
+}
+
+/// `y = A_stepᵀ · x` over packed blocks (row-accumulation order of the
+/// dense [`crate::linalg::matvec_t`] restricted to each block).
+#[inline]
+fn block_matvec_t<S: Scalar>(a_step: &[S], x: &[S], y: &mut [S], n: usize, k: usize) {
+    let nb = n / k;
+    for v in y.iter_mut() {
+        *v = S::zero();
+    }
+    for b in 0..nb {
+        let tile = &a_step[b * k * k..(b + 1) * k * k];
+        let xb = &x[b * k..(b + 1) * k];
+        let yb = &mut y[b * k..(b + 1) * k];
+        for r in 0..k {
+            let xr = xb[r];
+            let row = &tile[r * k..(r + 1) * k];
+            for c in 0..k {
+                yb[c] += row[c] * xr;
+            }
+        }
+    }
+}
+
+/// Sequential `y_i = A_i · y_{i−1} + b_i` with `y_{−1} = y0` over packed
+/// k×k blocks.
+pub fn seq_block_scan_apply<S: Scalar>(
+    a: &[S],
+    b: &[S],
+    y0: &[S],
+    out: &mut [S],
+    n: usize,
+    k: usize,
+    len: usize,
+) {
+    let bl = n * k;
+    debug_assert_eq!(n % k, 0);
+    debug_assert_eq!(a.len(), len * bl);
+    debug_assert_eq!(b.len(), len * n);
+    debug_assert_eq!(out.len(), len * n);
+    if len == 0 {
+        return;
+    }
+    {
+        let (head, _) = out.split_at_mut(n);
+        block_matvec(&a[..bl], y0, head, n, k);
+        for j in 0..n {
+            head[j] += b[j];
+        }
+    }
+    for i in 1..len {
+        let (prev_part, cur_part) = out.split_at_mut(i * n);
+        let prev = &prev_part[(i - 1) * n..];
+        let cur = &mut cur_part[..n];
+        block_matvec(&a[i * bl..(i + 1) * bl], prev, cur, n, k);
+        let bi = &b[i * n..(i + 1) * n];
+        for j in 0..n {
+            cur[j] += bi[j];
+        }
+    }
+}
+
+/// Sequential dual scan `λ_i = g_i + A_{i+1}ᵀ λ_{i+1}` (eq. 7) over packed
+/// blocks, `λ_{L−1} = g_{L−1}`. The transpose acts within each k×k tile.
+pub fn seq_block_scan_reverse<S: Scalar>(
+    a: &[S],
+    g: &[S],
+    out: &mut [S],
+    n: usize,
+    k: usize,
+    len: usize,
+) {
+    let bl = n * k;
+    debug_assert_eq!(a.len(), len * bl);
+    debug_assert_eq!(g.len(), len * n);
+    debug_assert_eq!(out.len(), len * n);
+    if len == 0 {
+        return;
+    }
+    out[(len - 1) * n..].copy_from_slice(&g[(len - 1) * n..]);
+    let mut tmp = vec![S::zero(); n];
+    for i in (0..len - 1).rev() {
+        let a_next = &a[(i + 1) * bl..(i + 2) * bl];
+        let (cur_part, next_part) = out.split_at_mut((i + 1) * n);
+        let next = &next_part[..n];
+        block_matvec_t(a_next, next, &mut tmp, n, k);
+        let cur = &mut cur_part[i * n..];
+        let gi = &g[i * n..(i + 1) * n];
+        for j in 0..n {
+            cur[j] = gi[j] + tmp[j];
+        }
+    }
+}
+
+/// Compose a contiguous range of block-diagonal elements into one `(a, b)`
+/// pair: `a = A_{hi−1} ··· A_{lo}` (packed blocks), `b` the matching
+/// offset. O(n·k²·(hi−lo)).
+#[allow(clippy::too_many_arguments)]
+pub fn compose_range_block<S: Scalar>(
+    a: &[S],
+    b: &[S],
+    lo: usize,
+    hi: usize,
+    a_out: &mut [S],
+    b_out: &mut [S],
+    n: usize,
+    k: usize,
+) {
+    let bl = n * k;
+    let nb = n / k;
+    // identity blocks
+    for v in a_out.iter_mut() {
+        *v = S::zero();
+    }
+    for bb in 0..nb {
+        for r in 0..k {
+            a_out[bb * k * k + r * k + r] = S::one();
+        }
+    }
+    for v in b_out.iter_mut() {
+        *v = S::zero();
+    }
+    // (A_i, b_i) ∘ (A_out, b_out) per element, through the shared eq. (10)
+    // block combine — one implementation owns the bitwise-sensitive tile
+    // compose order.
+    let mut tmp_a = vec![S::zero(); bl];
+    let mut tmp_b = vec![S::zero(); n];
+    for i in lo..hi {
+        combine_block(
+            &a[i * bl..(i + 1) * bl],
+            &b[i * n..(i + 1) * n],
+            a_out,
+            b_out,
+            &mut tmp_a,
+            &mut tmp_b,
+            n,
+            k,
+        );
+        a_out.copy_from_slice(&tmp_a);
+        b_out.copy_from_slice(&tmp_b);
+    }
+}
+
+/// Parallel block forward scan over `threads` workers (three-phase schedule
+/// of [`super::par::par_scan_apply`], every phase O(n·k²) per element).
+#[allow(clippy::too_many_arguments)]
+pub fn par_block_scan_apply<S: Scalar>(
+    a: &[S],
+    b: &[S],
+    y0: &[S],
+    out: &mut [S],
+    n: usize,
+    k: usize,
+    len: usize,
+    threads: usize,
+) {
+    let mut ws = ScanWorkspace::new();
+    par_block_scan_apply_ws(a, b, y0, out, n, k, len, threads, &mut ws);
+}
+
+/// [`par_block_scan_apply`] with a reusable workspace.
+#[allow(clippy::too_many_arguments)]
+pub fn par_block_scan_apply_ws<S: Scalar>(
+    a: &[S],
+    b: &[S],
+    y0: &[S],
+    out: &mut [S],
+    n: usize,
+    k: usize,
+    len: usize,
+    threads: usize,
+    ws: &mut ScanWorkspace<S>,
+) {
+    if threads <= 1 || len < 4 * threads {
+        seq_block_scan_apply(a, b, y0, out, n, k, len);
+        return;
+    }
+    let chunks = threads;
+    let chunk_len = len.div_ceil(chunks);
+    let bl = n * k;
+    ws.ensure(chunks * bl, chunks * n, chunks * n);
+
+    // Phase 1: per-chunk composition (packed blocks).
+    {
+        let comp: Vec<(&mut [S], &mut [S])> = ws.comp_a[..chunks * bl]
+            .chunks_mut(bl)
+            .zip(ws.comp_b[..chunks * n].chunks_mut(n))
+            .collect();
+        std::thread::scope(|scope| {
+            for (c, (ca, cb)) in comp.into_iter().enumerate() {
+                let lo = (c * chunk_len).min(len);
+                let hi = ((c + 1) * chunk_len).min(len);
+                scope.spawn(move || {
+                    compose_range_block(a, b, lo, hi, ca, cb, n, k);
+                });
+            }
+        });
+    }
+
+    // Phase 2: sequential carry over chunk entry states (O(n·k·C)).
+    let (comp_a, comp_b) = (&ws.comp_a, &ws.comp_b);
+    let entries = &mut ws.carry[..chunks * n];
+    entries[..n].copy_from_slice(y0);
+    for c in 0..chunks - 1 {
+        let (head, tail) = entries.split_at_mut((c + 1) * n);
+        let prev = &head[c * n..];
+        let next = &mut tail[..n];
+        block_matvec(&comp_a[c * bl..(c + 1) * bl], prev, next, n, k);
+        for j in 0..n {
+            next[j] += comp_b[c * n + j];
+        }
+    }
+
+    // Phase 3: per-chunk apply, in parallel.
+    {
+        let entries = &ws.carry;
+        let mut out_chunks: Vec<&mut [S]> = Vec::with_capacity(chunks);
+        let mut rest = out;
+        for c in 0..chunks {
+            let lo = (c * chunk_len).min(len);
+            let hi = ((c + 1) * chunk_len).min(len);
+            let (head, tail) = rest.split_at_mut((hi - lo) * n);
+            out_chunks.push(head);
+            rest = tail;
+        }
+        std::thread::scope(|scope| {
+            for (c, out_c) in out_chunks.into_iter().enumerate() {
+                let lo = (c * chunk_len).min(len);
+                let hi = ((c + 1) * chunk_len).min(len);
+                let entry = &entries[c * n..(c + 1) * n];
+                scope.spawn(move || {
+                    seq_block_scan_apply(
+                        &a[lo * bl..hi * bl],
+                        &b[lo * n..hi * n],
+                        entry,
+                        out_c,
+                        n,
+                        k,
+                        hi - lo,
+                    );
+                });
+            }
+        });
+    }
+}
+
+/// Parallel block dual scan (backward pass, eq. 7 with block-diagonal `A`).
+#[allow(clippy::too_many_arguments)]
+pub fn par_block_scan_reverse<S: Scalar>(
+    a: &[S],
+    g: &[S],
+    out: &mut [S],
+    n: usize,
+    k: usize,
+    len: usize,
+    threads: usize,
+) {
+    let mut ws = ScanWorkspace::new();
+    par_block_scan_reverse_ws(a, g, out, n, k, len, threads, &mut ws);
+}
+
+/// [`par_block_scan_reverse`] with a reusable workspace.
+#[allow(clippy::too_many_arguments)]
+pub fn par_block_scan_reverse_ws<S: Scalar>(
+    a: &[S],
+    g: &[S],
+    out: &mut [S],
+    n: usize,
+    k: usize,
+    len: usize,
+    threads: usize,
+    ws: &mut ScanWorkspace<S>,
+) {
+    if threads <= 1 || len < 4 * threads {
+        seq_block_scan_reverse(a, g, out, n, k, len);
+        return;
+    }
+    let chunks = threads;
+    let chunk_len = len.div_ceil(chunks);
+    let bl = n * k;
+    let nb = n / k;
+    ws.ensure(chunks * bl, chunks * n, chunks * n);
+
+    // Phase 1: per-chunk reverse composition. For chunk [lo, hi):
+    // λ_{lo} = M_c · λ_{hi} + v_c with M_c packed blocks, built
+    // right-to-left: new M = A_{i+1}ᵀ · M, new v = A_{i+1}ᵀ v + g_i.
+    {
+        let comp: Vec<(&mut [S], &mut [S])> = ws.comp_a[..chunks * bl]
+            .chunks_mut(bl)
+            .zip(ws.comp_b[..chunks * n].chunks_mut(n))
+            .collect();
+        std::thread::scope(|scope| {
+            for (c, (cm, cv)) in comp.into_iter().enumerate() {
+                let lo = (c * chunk_len).min(len);
+                let hi = ((c + 1) * chunk_len).min(len);
+                scope.spawn(move || {
+                    // identity blocks to start (λ_hi passes through)
+                    for v in cm.iter_mut() {
+                        *v = S::zero();
+                    }
+                    for bb in 0..nb {
+                        for r in 0..k {
+                            cm[bb * k * k + r * k + r] = S::one();
+                        }
+                    }
+                    for v in cv.iter_mut() {
+                        *v = S::zero();
+                    }
+                    let mut tm = vec![S::zero(); k * k];
+                    let mut tv = vec![S::zero(); n];
+                    for i in (lo..hi).rev() {
+                        if i + 1 < len {
+                            let an = &a[(i + 1) * bl..(i + 2) * bl];
+                            for bb in 0..nb {
+                                let tile = &an[bb * k * k..(bb + 1) * k * k];
+                                let mblk = &mut cm[bb * k * k..(bb + 1) * k * k];
+                                // new M_blk = tileᵀ · M_blk (the dense
+                                // transposed-multiply order per block)
+                                for r in 0..k {
+                                    for ccol in 0..k {
+                                        let mut acc = S::zero();
+                                        for kk in 0..k {
+                                            acc += tile[kk * k + r] * mblk[kk * k + ccol];
+                                        }
+                                        tm[r * k + ccol] = acc;
+                                    }
+                                }
+                                mblk.copy_from_slice(&tm);
+                            }
+                            block_matvec_t(an, cv, &mut tv, n, k);
+                            for j in 0..n {
+                                cv[j] = tv[j] + g[i * n + j];
+                            }
+                        } else {
+                            // last element of the whole sequence: λ = g only
+                            for v in cm.iter_mut() {
+                                *v = S::zero();
+                            }
+                            cv.copy_from_slice(&g[i * n..(i + 1) * n]);
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    // Phase 2: carry λ at chunk boundaries, right to left.
+    let (comp_m, comp_v) = (&ws.comp_a, &ws.comp_b);
+    let exits = &mut ws.carry[..chunks * n];
+    for v in exits[(chunks - 1) * n..].iter_mut() {
+        *v = S::zero();
+    }
+    for c in (1..chunks).rev() {
+        let (head, tail) = exits.split_at_mut(c * n);
+        let cur = &tail[..n];
+        let prev = &mut head[(c - 1) * n..];
+        block_matvec(&comp_m[c * bl..(c + 1) * bl], cur, prev, n, k);
+        for j in 0..n {
+            prev[j] += comp_v[c * n + j];
+        }
+    }
+
+    // Phase 3: per-chunk reverse apply.
+    {
+        let exits = &ws.carry;
+        let mut out_chunks: Vec<&mut [S]> = Vec::with_capacity(chunks);
+        let mut rest = out;
+        for c in 0..chunks {
+            let lo = (c * chunk_len).min(len);
+            let hi = ((c + 1) * chunk_len).min(len);
+            let (head, tail) = rest.split_at_mut((hi - lo) * n);
+            out_chunks.push(head);
+            rest = tail;
+        }
+        std::thread::scope(|scope| {
+            for (c, out_c) in out_chunks.into_iter().enumerate() {
+                let lo = (c * chunk_len).min(len);
+                let hi = ((c + 1) * chunk_len).min(len);
+                let exit = &exits[c * n..(c + 1) * n];
+                scope.spawn(move || {
+                    let mut next = exit.to_vec();
+                    let mut tmp = vec![S::zero(); n];
+                    for i in (lo..hi).rev() {
+                        let li = i - lo;
+                        if i + 1 < len {
+                            let an = &a[(i + 1) * bl..(i + 2) * bl];
+                            block_matvec_t(an, &next, &mut tmp, n, k);
+                            for j in 0..n {
+                                out_c[li * n + j] = g[i * n + j] + tmp[j];
+                            }
+                        } else {
+                            out_c[li * n..(li + 1) * n].copy_from_slice(&g[i * n..(i + 1) * n]);
+                        }
+                        next.copy_from_slice(&out_c[li * n..(li + 1) * n]);
+                    }
+                });
+            }
+        });
+    }
+}
+
+/// Fused batched block forward scan over B independent sequences in the
+/// `[B, T, n·k]` / `[B, T, n]` layout (scheduling + masking rules of
+/// [`crate::scan`]: whole sequences per worker at B ≥ threads, fixed
+/// intra-sequence split below, everything keyed on the total batch size).
+#[allow(clippy::too_many_arguments)]
+pub fn par_block_scan_apply_batch_ws<S: Scalar>(
+    a: &[S],
+    b: &[S],
+    y0s: &[S],
+    out: &mut [S],
+    n: usize,
+    k: usize,
+    t_len: usize,
+    batch: usize,
+    active: Option<&[bool]>,
+    threads: usize,
+    ws: &mut ScanWorkspace<S>,
+) {
+    let bl = n * k;
+    debug_assert_eq!(a.len(), batch * t_len * bl);
+    debug_assert_eq!(b.len(), batch * t_len * n);
+    debug_assert_eq!(y0s.len(), batch * n);
+    debug_assert_eq!(out.len(), batch * t_len * n);
+    let idx = crate::scan::active_indices(batch, active);
+    if idx.is_empty() || t_len == 0 {
+        return;
+    }
+    let sa = t_len * bl;
+    let sn = t_len * n;
+    if batch == 1 {
+        par_block_scan_apply_ws(a, b, y0s, out, n, k, t_len, threads, ws);
+        return;
+    }
+    let mut slabs: Vec<Option<&mut [S]>> = out.chunks_mut(sn).map(Some).collect();
+    if threads <= 1 {
+        for &s in &idx {
+            let o = slabs[s].take().unwrap();
+            seq_block_scan_apply(
+                &a[s * sa..(s + 1) * sa],
+                &b[s * sn..(s + 1) * sn],
+                &y0s[s * n..(s + 1) * n],
+                o,
+                n,
+                k,
+                t_len,
+            );
+        }
+    } else if batch >= threads {
+        let workers = threads.min(idx.len());
+        let mut buckets: Vec<Vec<(usize, &mut [S])>> = (0..workers).map(|_| Vec::new()).collect();
+        for (kk, &s) in idx.iter().enumerate() {
+            buckets[kk % workers].push((s, slabs[s].take().unwrap()));
+        }
+        std::thread::scope(|scope| {
+            for bucket in buckets {
+                scope.spawn(move || {
+                    for (s, o) in bucket {
+                        seq_block_scan_apply(
+                            &a[s * sa..(s + 1) * sa],
+                            &b[s * sn..(s + 1) * sn],
+                            &y0s[s * n..(s + 1) * n],
+                            o,
+                            n,
+                            k,
+                            t_len,
+                        );
+                    }
+                });
+            }
+        });
+    } else {
+        // 1 < B < threads: fixed intra-sequence split (constant divisor B
+        // keeps the decomposition masking-invariant)
+        let cps = (threads / batch).max(2);
+        std::thread::scope(|scope| {
+            for &s in &idx {
+                let o = slabs[s].take().unwrap();
+                let a_s = &a[s * sa..(s + 1) * sa];
+                let b_s = &b[s * sn..(s + 1) * sn];
+                let y0_s = &y0s[s * n..(s + 1) * n];
+                scope.spawn(move || {
+                    let mut local = ScanWorkspace::new();
+                    par_block_scan_apply_ws(a_s, b_s, y0_s, o, n, k, t_len, cps, &mut local);
+                });
+            }
+        });
+    }
+}
+
+/// Fused batched block dual scan (`[B, T, …]` layout; same scheduling and
+/// masking rules as [`par_block_scan_apply_batch_ws`]).
+#[allow(clippy::too_many_arguments)]
+pub fn par_block_scan_reverse_batch_ws<S: Scalar>(
+    a: &[S],
+    g: &[S],
+    out: &mut [S],
+    n: usize,
+    k: usize,
+    t_len: usize,
+    batch: usize,
+    active: Option<&[bool]>,
+    threads: usize,
+    ws: &mut ScanWorkspace<S>,
+) {
+    let bl = n * k;
+    debug_assert_eq!(a.len(), batch * t_len * bl);
+    debug_assert_eq!(g.len(), batch * t_len * n);
+    debug_assert_eq!(out.len(), batch * t_len * n);
+    let idx = crate::scan::active_indices(batch, active);
+    if idx.is_empty() || t_len == 0 {
+        return;
+    }
+    let sa = t_len * bl;
+    let sn = t_len * n;
+    if batch == 1 {
+        par_block_scan_reverse_ws(a, g, out, n, k, t_len, threads, ws);
+        return;
+    }
+    let mut slabs: Vec<Option<&mut [S]>> = out.chunks_mut(sn).map(Some).collect();
+    if threads <= 1 {
+        for &s in &idx {
+            let o = slabs[s].take().unwrap();
+            seq_block_scan_reverse(
+                &a[s * sa..(s + 1) * sa],
+                &g[s * sn..(s + 1) * sn],
+                o,
+                n,
+                k,
+                t_len,
+            );
+        }
+    } else if batch >= threads {
+        let workers = threads.min(idx.len());
+        let mut buckets: Vec<Vec<(usize, &mut [S])>> = (0..workers).map(|_| Vec::new()).collect();
+        for (kk, &s) in idx.iter().enumerate() {
+            buckets[kk % workers].push((s, slabs[s].take().unwrap()));
+        }
+        std::thread::scope(|scope| {
+            for bucket in buckets {
+                scope.spawn(move || {
+                    for (s, o) in bucket {
+                        seq_block_scan_reverse(
+                            &a[s * sa..(s + 1) * sa],
+                            &g[s * sn..(s + 1) * sn],
+                            o,
+                            n,
+                            k,
+                            t_len,
+                        );
+                    }
+                });
+            }
+        });
+    } else {
+        let cps = (threads / batch).max(2);
+        std::thread::scope(|scope| {
+            for &s in &idx {
+                let o = slabs[s].take().unwrap();
+                let a_s = &a[s * sa..(s + 1) * sa];
+                let g_s = &g[s * sn..(s + 1) * sn];
+                scope.spawn(move || {
+                    let mut local = ScanWorkspace::new();
+                    par_block_scan_reverse_ws(a_s, g_s, o, n, k, t_len, cps, &mut local);
+                });
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scan::diag::{seq_diag_scan_apply, seq_diag_scan_reverse};
+    use crate::scan::seq::{seq_scan_apply, seq_scan_reverse};
+    use crate::util::rng::Rng;
+
+    fn random_block(
+        n: usize,
+        k: usize,
+        len: usize,
+        seed: u64,
+    ) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let mut a = vec![0.0; len * n * k];
+        let mut b = vec![0.0; len * n];
+        let mut y0 = vec![0.0; n];
+        rng.fill_normal(&mut a, 0.45);
+        rng.fill_normal(&mut b, 1.0);
+        rng.fill_normal(&mut y0, 1.0);
+        (a, b, y0)
+    }
+
+    /// Embed packed blocks into dense n×n matrices.
+    fn embed_dense(a: &[f64], n: usize, k: usize, len: usize) -> Vec<f64> {
+        let nb = n / k;
+        let bl = n * k;
+        let mut dense = vec![0.0; len * n * n];
+        for i in 0..len {
+            for bb in 0..nb {
+                for r in 0..k {
+                    for c in 0..k {
+                        dense[i * n * n + (bb * k + r) * n + bb * k + c] =
+                            a[i * bl + bb * k * k + r * k + c];
+                    }
+                }
+            }
+        }
+        dense
+    }
+
+    /// The block forward scan must equal the dense scan on the embedded
+    /// elements **bitwise** — the Block-vs-Dense dispatch contract.
+    #[test]
+    fn block_forward_matches_dense_scan_bitwise() {
+        for &(n, k, len) in &[(2usize, 2usize, 40usize), (6, 2, 111), (8, 4, 64), (9, 3, 57)] {
+            let (a, b, y0) = random_block(n, k, len, 7 + (n * k) as u64);
+            let dense = embed_dense(&a, n, k, len);
+            let mut out_dense = vec![0.0; len * n];
+            let mut out_block = vec![0.0; len * n];
+            seq_scan_apply(&dense, &b, &y0, &mut out_dense, n, len);
+            seq_block_scan_apply(&a, &b, &y0, &mut out_block, n, k, len);
+            assert_eq!(out_dense, out_block, "n={n} k={k} len={len}");
+        }
+    }
+
+    #[test]
+    fn block_reverse_matches_dense_scan_bitwise() {
+        for &(n, k, len) in &[(2usize, 2usize, 33usize), (8, 2, 90), (6, 3, 57)] {
+            let (a, g, _) = random_block(n, k, len, 31 + (n * k) as u64);
+            let dense = embed_dense(&a, n, k, len);
+            let mut out_dense = vec![0.0; len * n];
+            let mut out_block = vec![0.0; len * n];
+            seq_scan_reverse(&dense, &g, &mut out_dense, n, len);
+            seq_block_scan_reverse(&a, &g, &mut out_block, n, k, len);
+            assert_eq!(out_dense, out_block, "n={n} k={k} len={len}");
+        }
+    }
+
+    /// k = 1 degenerates to the packed diagonal kernels exactly.
+    #[test]
+    fn block_k1_matches_diag() {
+        let (n, len) = (5usize, 80usize);
+        let (a, b, y0) = random_block(n, 1, len, 99);
+        let mut out_diag = vec![0.0; len * n];
+        let mut out_block = vec![0.0; len * n];
+        seq_diag_scan_apply(&a, &b, &y0, &mut out_diag, n, len);
+        seq_block_scan_apply(&a, &b, &y0, &mut out_block, n, 1, len);
+        for (x, y) in out_diag.iter().zip(out_block.iter()) {
+            assert!((x - y).abs() < 1e-12);
+        }
+        let mut rev_diag = vec![0.0; len * n];
+        let mut rev_block = vec![0.0; len * n];
+        seq_diag_scan_reverse(&a, &b, &mut rev_diag, n, len);
+        seq_block_scan_reverse(&a, &b, &mut rev_block, n, 1, len);
+        for (x, y) in rev_diag.iter().zip(rev_block.iter()) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn par_matches_seq_forward_all_thread_counts() {
+        for &threads in &[1usize, 2, 4, 8] {
+            for &(n, k, len) in &[(4usize, 2usize, 257usize), (6, 3, 100), (16, 2, 1000)] {
+                let (a, b, y0) = random_block(n, k, len, threads as u64 * 91 + n as u64);
+                let mut out_s = vec![0.0; len * n];
+                let mut out_p = vec![0.0; len * n];
+                seq_block_scan_apply(&a, &b, &y0, &mut out_s, n, k, len);
+                par_block_scan_apply(&a, &b, &y0, &mut out_p, n, k, len, threads);
+                for (i, (x, y)) in out_s.iter().zip(out_p.iter()).enumerate() {
+                    assert!(
+                        (x - y).abs() < 1e-9,
+                        "t={threads} n={n} k={k} len={len} i={i}: {x} vs {y}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn par_matches_seq_reverse_all_thread_counts() {
+        for &threads in &[1usize, 2, 4, 8] {
+            for &(n, k, len) in &[(4usize, 2usize, 300usize), (6, 2, 65), (8, 4, 513)] {
+                let (a, g, _) = random_block(n, k, len, threads as u64 * 17 + len as u64);
+                let mut out_s = vec![0.0; len * n];
+                let mut out_p = vec![0.0; len * n];
+                seq_block_scan_reverse(&a, &g, &mut out_s, n, k, len);
+                par_block_scan_reverse(&a, &g, &mut out_p, n, k, len, threads);
+                for (i, (x, y)) in out_s.iter().zip(out_p.iter()).enumerate() {
+                    assert!(
+                        (x - y).abs() < 1e-9,
+                        "t={threads} n={n} k={k} len={len} i={i}: {x} vs {y}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn compose_range_block_equals_endpoint() {
+        let (n, k, len) = (6, 2, 17);
+        let (a, b, y0) = random_block(n, k, len, 4);
+        let mut out = vec![0.0; len * n];
+        seq_block_scan_apply(&a, &b, &y0, &mut out, n, k, len);
+        let mut ca = vec![0.0; n * k];
+        let mut cb = vec![0.0; n];
+        compose_range_block(&a, &b, 0, len, &mut ca, &mut cb, n, k);
+        let mut y_end = vec![0.0; n];
+        block_matvec(&ca, &y0, &mut y_end, n, k);
+        for j in 0..n {
+            let v = y_end[j] + cb[j];
+            assert!((v - out[(len - 1) * n + j]).abs() < 1e-10, "j={j}");
+        }
+    }
+
+    /// One fused batched block call == B independent sequential scans across
+    /// scheduling regimes, and the active mask freezes sequences in place.
+    #[test]
+    fn batch_block_forward_matches_per_sequence_and_masks() {
+        for &(n, k, t_len, batch, threads) in &[
+            (4usize, 2usize, 200usize, 6usize, 2usize),
+            (6, 3, 150, 2, 8),
+            (8, 2, 64, 4, 1),
+        ] {
+            let mut rng = Rng::new(5000 + (n * batch * threads) as u64);
+            let sa = t_len * n * k;
+            let sn = t_len * n;
+            let mut a = vec![0.0f64; batch * sa];
+            let mut b = vec![0.0f64; batch * sn];
+            let mut y0s = vec![0.0f64; batch * n];
+            rng.fill_normal(&mut a, 0.45);
+            rng.fill_normal(&mut b, 1.0);
+            rng.fill_normal(&mut y0s, 1.0);
+
+            let sentinel = -555.0f64;
+            let mut active = vec![true; batch];
+            active[batch - 1] = false;
+            let mut got = vec![sentinel; batch * sn];
+            let mut ws = ScanWorkspace::new();
+            par_block_scan_apply_batch_ws(
+                &a, &b, &y0s, &mut got, n, k, t_len, batch, Some(&active), threads, &mut ws,
+            );
+            for s in 0..batch {
+                let slab = &got[s * sn..(s + 1) * sn];
+                if active[s] {
+                    let mut want = vec![0.0f64; sn];
+                    seq_block_scan_apply(
+                        &a[s * sa..(s + 1) * sa],
+                        &b[s * sn..(s + 1) * sn],
+                        &y0s[s * n..(s + 1) * n],
+                        &mut want,
+                        n,
+                        k,
+                        t_len,
+                    );
+                    for (x, y) in want.iter().zip(slab.iter()) {
+                        assert!((x - y).abs() < 1e-9, "B={batch} thr={threads} seq {s}");
+                    }
+                } else {
+                    assert!(slab.iter().all(|&v| v == sentinel), "masked seq {s} written");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batch_block_reverse_matches_per_sequence() {
+        for &(n, k, t_len, batch, threads) in &[
+            (4usize, 2usize, 180usize, 5usize, 2usize),
+            (6, 2, 300, 3, 8),
+            (8, 4, 90, 6, 1),
+        ] {
+            let mut rng = Rng::new(6000 + (n * batch * threads) as u64);
+            let sa = t_len * n * k;
+            let sn = t_len * n;
+            let mut a = vec![0.0f64; batch * sa];
+            let mut g = vec![0.0f64; batch * sn];
+            rng.fill_normal(&mut a, 0.45);
+            rng.fill_normal(&mut g, 1.0);
+
+            let mut want = vec![0.0f64; batch * sn];
+            for s in 0..batch {
+                seq_block_scan_reverse(
+                    &a[s * sa..(s + 1) * sa],
+                    &g[s * sn..(s + 1) * sn],
+                    &mut want[s * sn..(s + 1) * sn],
+                    n,
+                    k,
+                    t_len,
+                );
+            }
+            let mut got = vec![0.0f64; batch * sn];
+            let mut ws = ScanWorkspace::new();
+            par_block_scan_reverse_batch_ws(
+                &a, &g, &mut got, n, k, t_len, batch, None, threads, &mut ws,
+            );
+            for (x, y) in want.iter().zip(got.iter()) {
+                assert!((x - y).abs() < 1e-9, "B={batch} thr={threads}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn workspace_reuse_across_shapes() {
+        let mut ws = ScanWorkspace::new();
+        for &(n, k, len, threads) in
+            &[(8usize, 2usize, 400usize, 8usize), (4, 2, 64, 4), (6, 3, 300, 2)]
+        {
+            let (a, b, y0) = random_block(n, k, len, 7000 + len as u64);
+            let mut out_s = vec![0.0; len * n];
+            let mut out_p = vec![0.0; len * n];
+            seq_block_scan_apply(&a, &b, &y0, &mut out_s, n, k, len);
+            par_block_scan_apply_ws(&a, &b, &y0, &mut out_p, n, k, len, threads, &mut ws);
+            for (x, y) in out_s.iter().zip(out_p.iter()) {
+                assert!((x - y).abs() < 1e-9);
+            }
+        }
+    }
+}

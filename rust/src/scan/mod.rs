@@ -23,6 +23,13 @@
 //!   diagonal or diagonally-approximated Jacobians the whole INVLIN phase
 //!   is linear in the state dimension). No n×n temporaries exist anywhere
 //!   on this path.
+//! * **Block(k)** — `A_i` is block-diagonal, packed as `[n/k, k, k]`
+//!   contiguous k×k tiles (`n·k` elements per step). Compose costs
+//!   O((n/k)·k³) = O(n·k²) per element, apply O(n·k): for k = 2 (the
+//!   LSTM/LEM unit pairing) this is within 4× of the diagonal path's work
+//!   while keeping the per-unit state coupling the diagonal approximation
+//!   drops. The block monoid is closed, so the whole scan stays packed —
+//!   O(T·n·k) memory, never O(T·n²).
 //!
 //! Modules:
 //!
@@ -34,9 +41,15 @@
 //!   structure.
 //! * [`diag`] — the O(n)-per-element diagonal kernels (seq + par, forward
 //!   + reverse), used by natively-diagonal cells and by quasi-DEER mode.
+//! * [`block`] — the packed block-diagonal kernels (seq + par, forward +
+//!   reverse, batched with the active mask), used by the `Block(k)` path:
+//!   natively-block cells and the `BlockApprox` quasi mode. On a dense
+//!   embedding of the same blocks they reproduce the dense kernels
+//!   bitwise, so Block-vs-Dense dispatch never changes results.
 //! * reverse variants (`*_scan_reverse`) — the dual (transposed) scan used
 //!   by the DEER backward pass (paper eq. 7): `λ_i = g_i + A_{i+1}ᵀ λ_{i+1}`.
-//!   For diagonal `A`, transpose is a no-op.
+//!   For diagonal `A`, transpose is a no-op; for block `A` it transposes
+//!   each k×k tile in place.
 //!
 //! All parallel kernels take an optional reusable [`ScanWorkspace`] (the
 //! `*_ws` entry points) so the Newton hot loop performs no per-iteration
@@ -70,10 +83,16 @@
 //! keep iterating, so a batch costs `Σ_b iters_b`, not `B · max_b iters_b`,
 //! element updates (see `crate::deer::newton::deer_rnn_batch`).
 
+pub mod block;
 pub mod diag;
 pub mod par;
 pub mod seq;
 
+pub use block::{
+    par_block_scan_apply, par_block_scan_apply_batch_ws, par_block_scan_apply_ws,
+    par_block_scan_reverse, par_block_scan_reverse_batch_ws, par_block_scan_reverse_ws,
+    seq_block_scan_apply, seq_block_scan_reverse,
+};
 pub use diag::{
     par_diag_scan_apply, par_diag_scan_apply_ws, par_diag_scan_apply_batch_ws,
     par_diag_scan_reverse, par_diag_scan_reverse_ws, par_diag_scan_reverse_batch_ws,
@@ -272,6 +291,63 @@ pub fn flops_combine_diag(n: usize) -> u64 {
     (3 * n) as u64
 }
 
+/// Block-diagonal specialization of the eq. (10) combine: n/k independent
+/// k×k tile products — `(A_l^{(b)} A_e^{(b)}, A_l^{(b)} b_e^{(b)} + b_l^{(b)})`
+/// per block. O(n·k²), the `Block(k)` middle rung between diagonal O(n)
+/// and dense O(n³).
+#[allow(clippy::too_many_arguments)]
+pub fn combine_block<S: Scalar>(
+    a_later: &[S],
+    b_later: &[S],
+    a_earlier: &[S],
+    b_earlier: &[S],
+    a_out: &mut [S],
+    b_out: &mut [S],
+    n: usize,
+    k: usize,
+) {
+    debug_assert_eq!(n % k, 0);
+    let nb = n / k;
+    for bb in 0..nb {
+        let al = &a_later[bb * k * k..(bb + 1) * k * k];
+        let ae = &a_earlier[bb * k * k..(bb + 1) * k * k];
+        let ao = &mut a_out[bb * k * k..(bb + 1) * k * k];
+        for v in ao.iter_mut() {
+            *v = S::zero();
+        }
+        for r in 0..k {
+            for kk in 0..k {
+                let aik = al[r * k + kk];
+                let brow = &ae[kk * k..(kk + 1) * k];
+                let crow = &mut ao[r * k..(r + 1) * k];
+                for c in 0..k {
+                    crow[c] += aik * brow[c];
+                }
+            }
+        }
+        for r in 0..k {
+            let row = &al[r * k..(r + 1) * k];
+            let mut acc = S::zero();
+            for c in 0..k {
+                acc += row[c] * b_earlier[bb * k + c];
+            }
+            b_out[bb * k + r] = acc + b_later[bb * k + r];
+        }
+    }
+}
+
+/// FLOPs for applying the block recurrence once per element
+/// (n/k k×k matvecs + add).
+pub fn flops_apply_block(n: usize, k: usize, len: usize) -> u64 {
+    ((2 * k + 1) * n) as u64 * len as u64
+}
+
+/// FLOPs for composing two block-diagonal elements — the O((n/k)·k³)
+/// compose term of the `Block(k)` path: n/k tile matmuls + matvecs + adds.
+pub fn flops_combine_block(n: usize, k: usize) -> u64 {
+    ((n / k) as u64) * (2 * (k as u64).pow(3) + 2 * (k as u64).pow(2) + k as u64)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -377,6 +453,64 @@ mod tests {
         assert_eq!(flops_combine_diag(16), 48);
         assert!(flops_combine(16) / flops_combine_diag(16) > 100);
         assert_eq!(flops_apply_diag(8, 10), 160);
+    }
+
+    /// combine_block must agree with the dense combine on embedded
+    /// block-diagonal matrices (bitwise — the dispatch contract).
+    #[test]
+    fn combine_block_matches_dense_embedding() {
+        let (n, k) = (6usize, 2usize);
+        let mut rng = Rng::new(123);
+        let mut al = vec![0.0f64; n * k];
+        let mut ae = vec![0.0f64; n * k];
+        let mut bl_ = vec![0.0f64; n];
+        let mut be = vec![0.0f64; n];
+        rng.fill_normal(&mut al, 1.0);
+        rng.fill_normal(&mut ae, 1.0);
+        rng.fill_normal(&mut bl_, 1.0);
+        rng.fill_normal(&mut be, 1.0);
+
+        let mut oa = vec![0.0; n * k];
+        let mut ob = vec![0.0; n];
+        combine_block(&al, &bl_, &ae, &be, &mut oa, &mut ob, n, k);
+
+        let embed = |p: &[f64]| {
+            let mut m = vec![0.0; n * n];
+            for bb in 0..n / k {
+                for r in 0..k {
+                    for c in 0..k {
+                        m[(bb * k + r) * n + bb * k + c] = p[bb * k * k + r * k + c];
+                    }
+                }
+            }
+            m
+        };
+        let (ml, me) = (embed(&al), embed(&ae));
+        let mut da = vec![0.0; n * n];
+        let mut db = vec![0.0; n];
+        combine(&ml, &bl_, &me, &be, &mut da, &mut db, n);
+        for bb in 0..n / k {
+            for r in 0..k {
+                for c in 0..k {
+                    assert_eq!(
+                        oa[bb * k * k + r * k + c],
+                        da[(bb * k + r) * n + bb * k + c],
+                        "block ({bb},{r},{c})"
+                    );
+                }
+            }
+        }
+        assert_eq!(ob, db);
+    }
+
+    #[test]
+    fn block_flops_sit_between_diag_and_dense() {
+        let n = 16;
+        let block = flops_combine_block(n, 2);
+        assert!(block > flops_combine_diag(n));
+        assert!(flops_combine(n) > 10 * block, "dense {} vs block {block}", flops_combine(n));
+        assert_eq!(flops_combine_block(8, 2), 4 * (16 + 8 + 2));
+        assert_eq!(flops_apply_block(8, 2, 10), 400);
     }
 
     #[test]

@@ -132,10 +132,12 @@ pub fn sim_deer_forward_structured<S: Scalar, C: Cell<S>>(
         bytes: tb * ((jl + 2 * n) * 4) as f64,
         parallelism: tb * n as f64,
     };
-    // GTMULT: b_i = f − J y (matvec per element; elementwise ⊙ when diagonal).
+    // GTMULT: b_i = f − J y (matvec per element; elementwise ⊙ when
+    // diagonal; n/k k×k matvecs when block).
     let gt_flops = match structure {
         JacobianStructure::Dense => 2 * n * n,
         JacobianStructure::Diagonal => 2 * n,
+        JacobianStructure::Block { k } => 2 * n * k,
     };
     let k_gt = Kernel {
         flops: tb * gt_flops as f64,
@@ -144,15 +146,18 @@ pub fn sim_deer_forward_structured<S: Scalar, C: Cell<S>>(
     };
     // INVLIN: Blelloch scan, 2·log2(T) stages; stage j combines T/2^j pairs.
     // Dense: n×n matmul + matvec per pair (O(n³)); diagonal: two fused
-    // elementwise ops per pair (O(n)) — see crate::scan::flops_combine*.
+    // elementwise ops per pair (O(n)); block: n/k k×k tile products per
+    // pair (O((n/k)·k³)) — see crate::scan::flops_combine*.
     let combine_flops = match structure {
         JacobianStructure::Dense => crate::scan::flops_combine(n) as f64,
         JacobianStructure::Diagonal => crate::scan::flops_combine_diag(n) as f64,
+        JacobianStructure::Block { k } => crate::scan::flops_combine_block(n, k) as f64,
     };
     let combine_bytes = ((3 * jl + 2 * n) * 4) as f64;
     let combine_par = match structure {
         JacobianStructure::Dense => (n * n) as f64,
         JacobianStructure::Diagonal => n as f64,
+        JacobianStructure::Block { k } => (n * k) as f64,
     };
     let stages = (t_len as f64).log2().ceil().max(1.0) as usize;
     let mut invlin = 0.0;
@@ -375,6 +380,43 @@ mod tests {
             "diag amortization only {:.2}×",
             looped.total() / fused.total()
         );
+    }
+
+    /// The Block(2) compose term O((n/k)·k³) lands between diagonal O(n)
+    /// and dense O(n³): simulated INVLIN must be far cheaper than dense at
+    /// n=16 yet dearer than diagonal, and block memory between the two.
+    #[test]
+    fn block_invlin_between_dense_and_diag() {
+        let dev = v100();
+        let c = gru(16);
+        let dense =
+            sim_deer_forward_structured(&dev, &c, 16, 100_000, 7, JacobianStructure::Dense);
+        let block = sim_deer_forward_structured(
+            &dev,
+            &c,
+            16,
+            100_000,
+            9,
+            JacobianStructure::Block { k: 2 },
+        );
+        let diag =
+            sim_deer_forward_structured(&dev, &c, 16, 100_000, 21, JacobianStructure::Diagonal);
+        // compare per-iteration scan cost (each mode ran a different
+        // iteration count): block must be ≥5× cheaper than dense per sweep
+        // yet dearer than diagonal
+        let (dense_it, block_it, diag_it) =
+            (dense.invlin / 7.0, block.invlin / 9.0, diag.invlin / 21.0);
+        assert!(
+            dense_it > 5.0 * block_it,
+            "dense INVLIN/iter {dense_it} vs block {block_it}"
+        );
+        assert!(block_it > diag_it, "block/iter {block_it} below diag/iter {diag_it}");
+        let mem_dense = deer_memory_bytes_structured(16, 100_000, 16, 4, JacobianStructure::Dense);
+        let mem_block =
+            deer_memory_bytes_structured(16, 100_000, 16, 4, JacobianStructure::Block { k: 2 });
+        let mem_diag =
+            deer_memory_bytes_structured(16, 100_000, 16, 4, JacobianStructure::Diagonal);
+        assert!(mem_diag < mem_block && mem_block < mem_dense);
     }
 
     #[test]

@@ -22,6 +22,10 @@
 //!   [`TrainConfig::step_clamp`] trust radius, trading exact dense algebra
 //!   for O(n) scans (the gradient drops off-diagonal λ-propagation on
 //!   dense cells — see `crate::deer::grad`).
+//! * [`ForwardMode::Hybrid`] — [`JacobianMode::Hybrid`] forward (dense
+//!   Newton until the residual crosses [`TrainConfig::hybrid_threshold`],
+//!   then the O(n) diagonal endgame) with the exact dense backward —
+//!   cheaper forward sweeps, Deer-quality gradients.
 //!
 //! Seq vs Deer is therefore a pure A/B switch: data order, loss algebra,
 //! optimizer state and seeds are shared; only the trajectory/gradient
@@ -53,16 +57,24 @@ pub enum ForwardMode {
     Deer,
     /// Fused batched quasi-DEER (DiagonalApprox + trust radius).
     QuasiDeer,
+    /// Fused batched hybrid-Newton forward ([`JacobianMode::Hybrid`]:
+    /// dense until the residual crosses
+    /// [`TrainConfig::hybrid_threshold`], diagonal endgame) with the exact
+    /// dense eq.-7 backward — forward Jacobians are NOT reused (the
+    /// endgame leaves them in the diagonal layout), so gradients match the
+    /// Deer arm to tolerance.
+    Hybrid,
 }
 
 impl ForwardMode {
-    /// Parse a CLI token (`seq` | `deer` | `quasi`).
+    /// Parse a CLI token (`seq` | `deer` | `quasi` | `hybrid`).
     pub fn parse(s: &str) -> Result<ForwardMode, String> {
         match s {
             "seq" => Ok(ForwardMode::Seq),
             "deer" => Ok(ForwardMode::Deer),
             "quasi" | "quasideer" | "quasi-deer" => Ok(ForwardMode::QuasiDeer),
-            other => Err(format!("unknown forward mode {other:?} (seq|deer|quasi)")),
+            "hybrid" => Ok(ForwardMode::Hybrid),
+            other => Err(format!("unknown forward mode {other:?} (seq|deer|quasi|hybrid)")),
         }
     }
 
@@ -71,6 +83,16 @@ impl ForwardMode {
             ForwardMode::Seq => "seq",
             ForwardMode::Deer => "deer",
             ForwardMode::QuasiDeer => "quasi",
+            ForwardMode::Hybrid => "hybrid",
+        }
+    }
+
+    /// The solver-side Jacobian mode this training arm dispatches with.
+    fn jacobian_mode(&self) -> JacobianMode {
+        match self {
+            ForwardMode::Seq | ForwardMode::Deer => JacobianMode::Full,
+            ForwardMode::QuasiDeer => JacobianMode::DiagonalApprox,
+            ForwardMode::Hybrid => JacobianMode::Hybrid,
         }
     }
 }
@@ -111,6 +133,10 @@ pub struct TrainConfig {
     pub max_iter: usize,
     /// Trust radius forwarded to the solver (quasi-DEER safeguard).
     pub step_clamp: Option<f64>,
+    /// Hybrid-mode endgame switch point, forwarded to
+    /// [`crate::deer::DeerConfig::hybrid_threshold`] (only read by
+    /// [`ForwardMode::Hybrid`]).
+    pub hybrid_threshold: f64,
     /// Reuse forward Jacobians in the backward pass (speed) instead of
     /// recomputing them along the converged trajectory (memory + a
     /// tolerance-level exactness gain) — the §3.1.1 trade-off.
@@ -129,6 +155,7 @@ impl Default for TrainConfig {
             tol_override: None,
             max_iter: 100,
             step_clamp: None,
+            hybrid_threshold: 1e-2,
             reuse_jacobians: true,
         }
     }
@@ -269,13 +296,14 @@ impl<C: CellGrad<f32>> TrainLoop<C> {
         let (ys, fwd_jac): (Vec<f32>, Option<(Vec<f32>, JacobianStructure)>) = match self.cfg.mode
         {
             ForwardMode::Seq => (seq_rnn_batch(&self.model.cell, &h0s, &xs, b), None),
-            ForwardMode::Deer | ForwardMode::QuasiDeer => {
-                let jacobian_mode = match self.cfg.mode {
-                    ForwardMode::QuasiDeer => JacobianMode::DiagonalApprox,
-                    _ => JacobianMode::Full,
-                };
+            ForwardMode::Deer | ForwardMode::QuasiDeer | ForwardMode::Hybrid => {
+                let jacobian_mode = self.cfg.mode.jacobian_mode();
                 let structure = effective_structure(&self.model.cell, jacobian_mode);
                 let jl = structure.jac_len(n);
+                // Hybrid never reuses forward Jacobians: the endgame switch
+                // leaves them in the diagonal layout while the backward pass
+                // runs the exact dense dual scan.
+                let reuse = self.cfg.reuse_jacobians && self.cfg.mode != ForwardMode::Hybrid;
                 let mut ex = BatchExecutor::new(
                     &self.model.cell,
                     t_len,
@@ -289,7 +317,8 @@ impl<C: CellGrad<f32>> TrainLoop<C> {
                 ex.policy.max_iter = self.cfg.max_iter;
                 ex.policy.jacobian_mode = jacobian_mode;
                 ex.policy.step_clamp = self.cfg.step_clamp;
-                ex.keep_jacobians = self.cfg.reuse_jacobians;
+                ex.policy.hybrid_threshold = self.cfg.hybrid_threshold;
+                ex.keep_jacobians = reuse;
                 std::mem::swap(&mut ex.cache, &mut self.cache);
 
                 let mut replies = Vec::with_capacity(b);
@@ -313,9 +342,8 @@ impl<C: CellGrad<f32>> TrainLoop<C> {
                 // contain duplicates (grad_minibatch is public), so each
                 // reply claims the first still-unfilled matching slot
                 let mut ys = vec![0.0f32; b * t_len * n];
-                let mut jac =
-                    vec![0.0f32; if self.cfg.reuse_jacobians { b * t_len * jl } else { 0 }];
-                let mut all_jac = self.cfg.reuse_jacobians;
+                let mut jac = vec![0.0f32; if reuse { b * t_len * jl } else { 0 }];
+                let mut all_jac = reuse;
                 let mut filled = vec![false; b];
                 for reply in &replies {
                     let s = rows
@@ -327,6 +355,10 @@ impl<C: CellGrad<f32>> TrainLoop<C> {
                     ys[s * t_len * n..(s + 1) * t_len * n].copy_from_slice(&reply.ys);
                     match &reply.jacobians {
                         Some(j) => {
+                            assert_eq!(
+                                reply.jac_structure, structure,
+                                "executor returned a different Jacobian layout than planned"
+                            );
                             jac[s * t_len * jl..(s + 1) * t_len * jl].copy_from_slice(j)
                         }
                         None => all_jac = false,
@@ -392,7 +424,9 @@ impl<C: CellGrad<f32>> TrainLoop<C> {
                 }
                 grad[..pc].copy_from_slice(&dtheta);
             }
-            ForwardMode::Deer | ForwardMode::QuasiDeer => {
+            ForwardMode::Deer | ForwardMode::QuasiDeer | ForwardMode::Hybrid => {
+                // Hybrid differentiates with the exact dense dual scan
+                // (its QuasiDeer-style forward savings are forward-only).
                 let structure = match &fwd_jac {
                     Some((_, st)) => *st,
                     None => effective_structure(
@@ -616,6 +650,28 @@ mod tests {
         assert_eq!(ForwardMode::parse("seq").unwrap(), ForwardMode::Seq);
         assert_eq!(ForwardMode::parse("deer").unwrap(), ForwardMode::Deer);
         assert_eq!(ForwardMode::parse("quasi").unwrap(), ForwardMode::QuasiDeer);
+        assert_eq!(ForwardMode::parse("hybrid").unwrap(), ForwardMode::Hybrid);
         assert!(ForwardMode::parse("xla").is_err());
+    }
+
+    /// The hybrid arm trains: one fused solve per minibatch, finite loss,
+    /// and its per-minibatch gradient matches the exact Deer arm to
+    /// forward-tolerance level (both backwards are exact dense).
+    #[test]
+    fn hybrid_mode_trains_and_matches_deer_gradient() {
+        let mut tl_h = tiny_loop(ForwardMode::Hybrid, 6);
+        let mut tl_d = tiny_loop(ForwardMode::Deer, 6);
+        let rows: Vec<usize> = vec![0, 1, 2, 3];
+        let gh = tl_h.grad_minibatch(&rows);
+        let gd = tl_d.grad_minibatch(&rows);
+        assert!(gh.loss.is_finite());
+        assert!((gh.loss - gd.loss).abs() < 1e-3, "{} vs {}", gh.loss, gd.loss);
+        for (a, b) in gh.grad.iter().zip(gd.grad.iter()) {
+            assert!((a - b).abs() < 1e-2, "hybrid vs deer gradient: {a} vs {b}");
+        }
+        let s = tl_h.run(3).unwrap();
+        assert!(s.loss.is_finite());
+        assert_eq!(tl_h.stats.batched_solves, 4, "one fused solve per minibatch");
+        assert_eq!(tl_h.stats.fallbacks, 0);
     }
 }

@@ -1,6 +1,7 @@
 //! Batched `[B, T, n]` execution: batched-vs-looped equivalence for every
-//! cell type (exact Newton and quasi-DEER) and per-sequence convergence
-//! masking.
+//! cell type (exact Newton, quasi-DEER and block quasi-DEER), bitwise
+//! Block(2)-vs-Dense equivalence for LSTM/LEM, and per-sequence
+//! convergence masking.
 //!
 //! Equivalence contract: at threads = 1 — and at any pool size with
 //! B ≥ threads, where the batched scheduler hands whole sequences to
@@ -9,10 +10,14 @@
 //! sequences (different accumulation order), where results must agree to
 //! scan-roundoff tolerance.
 
-use deer::cells::{Cell, CellGrad, Elman, Gru, IndRnn, Lem, Lstm};
+use deer::cells::{Cell, CellGrad, Elman, Gru, IndRnn, JacobianStructure, Lem, Lstm};
+use deer::deer::grad::deer_rnn_backward;
 use deer::deer::newton::{deer_rnn, deer_rnn_batch, DeerConfig, JacobianMode};
 use deer::deer::seq::seq_rnn;
 use deer::util::rng::Rng;
+
+mod common;
+use common::zero_offdiag_recurrence;
 
 const B: usize = 3;
 
@@ -88,6 +93,7 @@ fn batched_matches_looped_lstm() {
     let cell: Lstm<f64> = Lstm::new(3, 3, &mut rng);
     check_batched_equivalence("lstm", &cell, 300, JacobianMode::Full);
     check_batched_equivalence("lstm-quasi", &cell, 300, JacobianMode::DiagonalApprox);
+    check_batched_equivalence("lstm-block", &cell, 300, JacobianMode::BlockApprox);
 }
 
 #[test]
@@ -96,6 +102,7 @@ fn batched_matches_looped_lem() {
     let cell: Lem<f64> = Lem::new(3, 3, &mut rng);
     check_batched_equivalence("lem", &cell, 300, JacobianMode::Full);
     check_batched_equivalence("lem-quasi", &cell, 300, JacobianMode::DiagonalApprox);
+    check_batched_equivalence("lem-block", &cell, 300, JacobianMode::BlockApprox);
 }
 
 #[test]
@@ -306,5 +313,178 @@ fn fused_batched_cell_overrides_match_looped_bitwise() {
     for s in 0..b {
         let solo = seq_rnn(&gru, &h0s[s * 4..(s + 1) * 4], &xs[s * t * 3..(s + 1) * t * 3]);
         assert_eq!(&batched[s * t * 4..(s + 1) * t * 4], &solo[..], "seq_rnn_batch seq {s}");
+    }
+}
+
+// ---- bitwise Block(2)-vs-Dense equivalence (LSTM / LEM) ----
+
+/// With an exactly block-diagonal Jacobian, the packed Block(2) path and
+/// the dense path must agree **bitwise**, forward and backward: identical
+/// trajectories and iteration counts sweep by sweep (the off-block entries
+/// the dense kernels drag along are exact zeros), identical Jacobian block
+/// entries, identical λ/dθ/dh0 out of the dual scan. Checked single-
+/// sequence and batched at several pool sizes.
+fn check_block_vs_dense_bitwise<C: CellGrad<f64>>(name: &str, cell: &C, t_len: usize) {
+    let n = cell.state_dim();
+    let m = cell.input_dim();
+    let b = 3usize;
+    let mut rng = Rng::new(0xB10C ^ (n as u64) << 8 ^ t_len as u64);
+    let mut xs = vec![0.0f64; b * t_len * m];
+    rng.fill_normal(&mut xs, 1.0);
+    let h0s = vec![0.0f64; b * n];
+    let cfg_dense = DeerConfig::<f64> { max_iter: 500, ..Default::default() };
+    let cfg_block = DeerConfig::<f64> {
+        jacobian_mode: JacobianMode::BlockApprox,
+        max_iter: 500,
+        ..Default::default()
+    };
+
+    // single sequence, forward
+    let dense = deer_rnn(cell, &h0s[..n], &xs[..t_len * m], None, &cfg_dense);
+    let block = deer_rnn(cell, &h0s[..n], &xs[..t_len * m], None, &cfg_block);
+    assert!(dense.converged && block.converged, "{name}: {:?}", block.err_trace);
+    assert_eq!(dense.iterations, block.iterations, "{name}: iteration counts");
+    assert_eq!(dense.ys, block.ys, "{name}: Block(2) trajectory != Dense bitwise");
+    assert_eq!(block.jac_structure, JacobianStructure::Block { k: 2 }, "{name}");
+    assert_eq!(block.jacobians.len(), t_len * n * 2, "{name}: packed block storage");
+    for i in 0..t_len {
+        for bb in 0..n / 2 {
+            for r in 0..2 {
+                for c in 0..2 {
+                    assert_eq!(
+                        block.jacobians[i * n * 2 + bb * 4 + r * 2 + c],
+                        dense.jacobians[i * n * n + (bb * 2 + r) * n + bb * 2 + c],
+                        "{name}: jacobian block ({i},{bb},{r},{c})"
+                    );
+                }
+            }
+        }
+    }
+
+    // single sequence, backward (reusing each path's own forward Jacobians)
+    let mut gs = vec![0.0f64; t_len * n];
+    rng.fill_normal(&mut gs, 1.0);
+    let gd = deer_rnn_backward(
+        cell,
+        &h0s[..n],
+        &xs[..t_len * m],
+        &dense.ys,
+        &gs,
+        Some(&dense.jacobians),
+        JacobianStructure::Dense,
+        1,
+    );
+    let gb = deer_rnn_backward(
+        cell,
+        &h0s[..n],
+        &xs[..t_len * m],
+        &block.ys,
+        &gs,
+        Some(&block.jacobians),
+        JacobianStructure::Block { k: 2 },
+        1,
+    );
+    assert_eq!(gd.dtheta, gb.dtheta, "{name}: Block(2) dθ != Dense bitwise");
+    assert_eq!(gd.dh0, gb.dh0, "{name}: Block(2) dh0 != Dense bitwise");
+
+    // batched, across scheduling regimes
+    for threads in [1usize, 2, 3] {
+        let bd = deer_rnn_batch(
+            cell,
+            &h0s,
+            &xs,
+            None,
+            &DeerConfig { threads, ..cfg_dense.clone() },
+            b,
+        );
+        let bb = deer_rnn_batch(
+            cell,
+            &h0s,
+            &xs,
+            None,
+            &DeerConfig { threads, ..cfg_block.clone() },
+            b,
+        );
+        assert_eq!(bd.iterations, bb.iterations, "{name} thr={threads}");
+        assert_eq!(bd.ys, bb.ys, "{name} thr={threads}: batched Block != Dense bitwise");
+    }
+}
+
+#[test]
+fn block_vs_dense_bitwise_lstm() {
+    let (units, m) = (4usize, 3usize);
+    let mut rng = Rng::new(41);
+    let mut cell: Lstm<f64> = Lstm::new(units, m, &mut rng);
+    // zero the off-diagonal entries of U_i, U_f, U_g, U_o
+    let ubase = 4 * units * m;
+    zero_offdiag_recurrence(cell.params_mut(), ubase, 4, units);
+    check_block_vs_dense_bitwise("lstm-diagU", &cell, 250);
+}
+
+#[test]
+fn block_vs_dense_bitwise_lem() {
+    let (units, m) = (3usize, 2usize);
+    let mut rng = Rng::new(42);
+    let mut cell: Lem<f64> = Lem::new(units, m, &mut rng);
+    // zero the off-diagonal entries of V₁, V₂, V_z, V_y
+    let vbase = 4 * units * m;
+    zero_offdiag_recurrence(cell.params_mut(), vbase, 4, units);
+    check_block_vs_dense_bitwise("lem-diagV", &cell, 250);
+}
+
+/// The packed block batched cell kernels (default looped) must be bitwise
+/// equal to the per-element block kernels — the dispatch contract of the
+/// fused FUNCEVAL path on the Block(2) route.
+#[test]
+fn block_batched_cell_kernels_match_looped_bitwise() {
+    fn check<C: Cell<f64>>(name: &str, cell: &C, batch: usize, seed: u64) {
+        let n = cell.state_dim();
+        let m = cell.input_dim();
+        let k = cell.block_k().expect("natural block pairing");
+        let bl = n * k;
+        let mut rng = Rng::new(seed);
+        let mut hs = vec![0.0f64; batch * n];
+        let mut xs = vec![0.0f64; batch * m];
+        rng.fill_normal(&mut hs, 0.8);
+        rng.fill_normal(&mut xs, 1.0);
+        let mut ws = vec![0.0f64; cell.ws_len()];
+
+        let mut f_fused = vec![0.0f64; batch * n];
+        let mut jb_fused = vec![0.0f64; batch * bl];
+        cell.jacobian_block_batch(&hs, &xs, &mut f_fused, &mut jb_fused, &mut ws, batch);
+
+        let pl = cell.x_precompute_len();
+        let mut pres = vec![0.0f64; batch * pl];
+        for s in 0..batch {
+            cell.precompute_x(&xs[s * m..(s + 1) * m], &mut pres[s * pl..(s + 1) * pl]);
+        }
+        let mut pf_fused = vec![0.0f64; batch * n];
+        let mut pjb_fused = vec![0.0f64; batch * bl];
+        cell.jacobian_pre_block_batch(&hs, &pres, &mut pf_fused, &mut pjb_fused, &mut ws, batch);
+
+        for s in 0..batch {
+            let h = &hs[s * n..(s + 1) * n];
+            let x = &xs[s * m..(s + 1) * m];
+            let mut f = vec![0.0f64; n];
+            let mut jb = vec![0.0f64; bl];
+            cell.jacobian_block(h, x, &mut f, &mut jb, &mut ws);
+            assert_eq!(&f_fused[s * n..(s + 1) * n], &f[..], "{name} block f seq {s}");
+            assert_eq!(&jb_fused[s * bl..(s + 1) * bl], &jb[..], "{name} block jac seq {s}");
+            let mut pf = vec![0.0f64; n];
+            let mut pjb = vec![0.0f64; bl];
+            cell.jacobian_block_pre(h, &pres[s * pl..(s + 1) * pl], &mut pf, &mut pjb, &mut ws);
+            assert_eq!(&pf[..], &f[..], "{name} block pre f vs direct seq {s}");
+            assert_eq!(&pjb[..], &jb[..], "{name} block pre jac vs direct seq {s}");
+            assert_eq!(&pf_fused[s * n..(s + 1) * n], &pf[..], "{name} pre_block_batch f seq {s}");
+            assert_eq!(&pjb_fused[s * bl..(s + 1) * bl], &pjb[..], "{name} pre_block_batch seq {s}");
+        }
+    }
+
+    let mut rng = Rng::new(43);
+    for &(units, m, b) in &[(1usize, 1usize, 1usize), (3, 2, 4), (5, 3, 3)] {
+        let lstm: Lstm<f64> = Lstm::new(units, m, &mut rng);
+        check("lstm", &lstm, b, 1100 + units as u64);
+        let lem: Lem<f64> = Lem::new(units, m, &mut rng);
+        check("lem", &lem, b, 1200 + units as u64);
     }
 }

@@ -1,0 +1,18 @@
+//! Shared fixtures for the integration test crates.
+
+/// Zero every off-diagonal entry of the `mats` recurrent n×n matrices
+/// stored at `base` in a flat parameter vector — the ParaRNN
+/// diagonal-recurrence setting in which an interleaved LSTM/LEM's dense
+/// Jacobian is exactly block-diagonal over the unit pairs, making the
+/// `Block(2)` path exact Newton (and its gradient exact).
+pub fn zero_offdiag_recurrence(params: &mut [f64], base: usize, mats: usize, n: usize) {
+    for k in 0..mats {
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    params[base + k * n * n + i * n + j] = 0.0;
+                }
+            }
+        }
+    }
+}

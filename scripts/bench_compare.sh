@@ -1,14 +1,22 @@
 #!/usr/bin/env bash
 # Perf-trajectory gate (ROADMAP "Perf trajectory" item): regenerate the
 # BENCH_*.json documents with the fast grids and diff them against the
-# committed previous run at the repo root, failing on >20% (configurable)
-# ns/step regressions on any shared {n, T} point.
+# baseline, failing on >20% (configurable) ns/step regressions on any
+# shared {n, T} point.
 #
 # Usage: scripts/bench_compare.sh [threshold-pct]
 #
-# First run (no committed baseline): the fresh JSON is copied to the repo
-# root and the gate passes with a notice — commit the file to start the
-# trajectory.
+# Baseline resolution, per document:
+#   1. a git-TRACKED BENCH_*.json at the repo root — a maintainer-pinned
+#      trajectory start; never overwritten by this script;
+#   2. else an untracked BENCH_*.json at the repo root or a restored CI
+#      artifact under .bench-baselines/ (see .github/workflows/ci.yml) —
+#      the run-over-run flow: after a PASSING gate the fresh numbers are
+#      copied to the repo root so CI's upload step advances the artifact.
+#      (Run-over-run tracking bounds each step at the threshold but can
+#      drift over many runs — pin by committing the JSONs to stop that.)
+#   3. else: first run — the fresh JSON seeds the repo root and the gate
+#      passes with a notice.
 set -euo pipefail
 
 ROOT="$(cd "$(dirname "$0")/.." && pwd)"
@@ -23,34 +31,56 @@ DEER_BENCH_FAST=1 cargo run --release --bin deer -- \
     bench --exp batch --batch-out "$FRESH_DIR/BENCH_batch.json" --results results/compare
 DEER_BENCH_FAST=1 cargo run --release --bin deer -- \
     bench --exp train --train-out "$FRESH_DIR/BENCH_train.json" --results results/compare
+DEER_BENCH_FAST=1 cargo run --release --bin deer -- \
+    bench --exp block --block-out "$FRESH_DIR/BENCH_block.json" --results results/compare
 
 python3 - "$ROOT" "$FRESH_DIR" "$THRESHOLD" <<'EOF'
-import json, os, sys
+import json, os, shutil, subprocess, sys
 
 root, fresh_dir, threshold = sys.argv[1], sys.argv[2], float(sys.argv[3])
+NAMES = ("BENCH_scan.json", "BENCH_batch.json", "BENCH_train.json", "BENCH_block.json")
 # metric fields treated as ns/step costs (lower is better)
 COST_FIELDS = (
     "dense_ns_per_step", "diag_ns_per_step",
     "looped_ns_per_step", "looped_pool_ns_per_step", "batched_ns_per_step",
     "seq_step_ns", "deer_step_ns", "quasi_step_ns",
+    "dense_solve_ns_per_step", "block_solve_ns_per_step", "quasi_solve_ns_per_step",
+    "dense_invlin_ns_per_step", "block_invlin_ns_per_step", "diag_invlin_ns_per_step",
 )
+
+def git_tracked(name):
+    return subprocess.run(
+        ["git", "-C", root, "ls-files", "--error-unmatch", name],
+        stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL,
+    ).returncode == 0
+
+def baseline_path(name):
+    """Pinned (tracked) root file first, then untracked root, then artifact."""
+    rootp = os.path.join(root, name)
+    if os.path.exists(rootp):
+        return rootp
+    restored = os.path.join(root, ".bench-baselines", name)
+    if os.path.exists(restored):
+        return restored
+    return None
 
 failures, compared = [], 0
 had_baseline = {}
-for name in ("BENCH_scan.json", "BENCH_batch.json", "BENCH_train.json"):
-    base_path = os.path.join(root, name)
-    had_baseline[name] = os.path.exists(base_path)
+for name in NAMES:
+    base_path = baseline_path(name)
+    had_baseline[name] = base_path is not None
     fresh_path = os.path.join(fresh_dir, name)
     if not os.path.exists(fresh_path):
         failures.append(f"{name}: fresh bench run produced no file")
         continue
     with open(fresh_path) as f:
         fresh = json.load(f)
-    if not os.path.exists(base_path):
-        print(f"{name}: no committed baseline — seeding it (commit to track)")
-        with open(base_path, "w") as f:
+    if base_path is None:
+        print(f"{name}: no baseline — seeding the repo root (commit to pin)")
+        with open(os.path.join(root, name), "w") as f:
             json.dump(fresh, f, indent=1)
         continue
+    kind = "pinned" if git_tracked(name) and base_path == os.path.join(root, name) else "run-over-run"
     with open(base_path) as f:
         base = json.load(f)
     base_pts = {(p["n"], p["t"]): p for p in base.get("points", [])}
@@ -64,7 +94,7 @@ for name in ("BENCH_scan.json", "BENCH_batch.json", "BENCH_train.json"):
                 delta = (p[field] - b[field]) / b[field] * 100.0
                 compared += 1
                 tag = "REGRESSION" if delta > threshold else "ok"
-                print(f"{name} n={key[0]} T={key[1]} {field}: "
+                print(f"{name} [{kind}] n={key[0]} T={key[1]} {field}: "
                       f"{b[field]:.1f} -> {p[field]:.1f} ns/step ({delta:+.1f}%) {tag}")
                 if delta > threshold:
                     failures.append(
@@ -72,9 +102,9 @@ for name in ("BENCH_scan.json", "BENCH_batch.json", "BENCH_train.json"):
 
 # Training acceptance gate: at T ≥ 4096 the fused DEER optimizer step must
 # beat sequential BPTT wall-clock on this machine. Only enforced once a
-# committed BENCH_train.json baseline exists — a seed run on a fresh (or
-# noisy) machine class reports the ratios and stays green, so the CI
-# "no baseline ⇒ seed and pass" contract holds for the fast 2-step grid.
+# baseline exists — a seed run on a fresh (or noisy) machine class reports
+# the ratios and stays green, so the "no baseline ⇒ seed and pass"
+# contract holds for the fast 2-step grid.
 train_path = os.path.join(fresh_dir, "BENCH_train.json")
 if os.path.exists(train_path):
     enforce = had_baseline["BENCH_train.json"]
@@ -96,11 +126,47 @@ if os.path.exists(train_path):
     if gated == 0 and enforce:
         failures.append("BENCH_train.json: no T >= 4096 point to gate on")
 
+# Block acceptance gate: the Block(2) compose must beat the dense compose —
+# per-iteration INVLIN ns/step — at every n ≥ 16, T ≥ 1024 point. Enforced
+# under the same baseline-armed contract as the train gate: a seed run on a
+# fresh/noisy machine reports the ratios and stays green.
+block_path = os.path.join(fresh_dir, "BENCH_block.json")
+if os.path.exists(block_path):
+    enforce = had_baseline["BENCH_block.json"]
+    with open(block_path) as f:
+        doc = json.load(f)
+    gated = 0
+    for p in doc.get("points", []):
+        if p["n"] >= 16 and p["t"] >= 1024:
+            gated += 1
+            slow = p["block_invlin_ns_per_step"] >= p["dense_invlin_ns_per_step"]
+            tag = "REGRESSION" if slow and enforce else ("slow (advisory)" if slow else "ok")
+            print(f"block gate n={p['n']} T={p['t']}: dense INVLIN "
+                  f"{p['dense_invlin_ns_per_step']:.1f} ns/step, block "
+                  f"{p['block_invlin_ns_per_step']:.1f} ns/step {tag}")
+            if slow and enforce:
+                failures.append(
+                    f"BENCH_block.json n={p['n']} T={p['t']}: Block(2) INVLIN not below dense "
+                    f"({p['block_invlin_ns_per_step']:.1f} vs {p['dense_invlin_ns_per_step']:.1f} ns/step)")
+    if gated == 0 and enforce:
+        failures.append("BENCH_block.json: no n >= 16, T >= 1024 point to gate on")
+
 print()
 if failures:
     print(f"FAIL: {len(failures)} regression(s) beyond {threshold}%:")
     for f in failures:
         print("  " + f)
     sys.exit(1)
-print(f"PASS: {compared} metric(s) within {threshold}% of the committed baseline")
+print(f"PASS: {compared} metric(s) within {threshold}% of the baseline")
+
+# Advance the run-over-run trajectory: after a passing gate, refresh the
+# UNTRACKED repo-root copies so CI's upload step carries this run's JSONs
+# forward. Git-tracked (maintainer-pinned) baselines are never touched, so
+# committed numbers stay the comparison anchor and `git status` stays clean
+# for developers who pinned them.
+for name in NAMES:
+    fresh_path = os.path.join(fresh_dir, name)
+    if os.path.exists(fresh_path) and not git_tracked(name):
+        shutil.copyfile(fresh_path, os.path.join(root, name))
+        print(f"{name}: run-over-run baseline advanced to this run's numbers")
 EOF
