@@ -351,6 +351,131 @@ impl<S: Scalar> Cell<S> for Lem<S> {
         self.jacobian_block_from_ws(s, out_f, out_jblk, ws);
     }
 
+    /// Fused batched Block(2) FUNCEVAL kernel (the ROADMAP follow-up from
+    /// the Block(k) PR): the batch axis is folded into the recurrent gate
+    /// matmuls — every `V_k[i, :]` row is loaded once per stage and
+    /// streamed across all B elements. Unlike the LSTM, LEM's y-branch
+    /// consumes the WHOLE z' vector (`V_y · z'`) and the block Jacobian
+    /// needs all units' `c1/c2` coefficients, so the gate values are
+    /// staged in a `[B, 6n]` slab (allocated only when `B ≥ 2`, where it
+    /// amortizes across the batch; `B = 1` takes the allocation-free
+    /// per-element kernel on the caller's scratch). Per-element accumulation
+    /// order is identical to [`Lem::branch`] / [`Lem::forward_ws`] /
+    /// [`Lem::jacobian_block_from_ws`] (pre-computed base first, then the
+    /// `V·q` j-loop; the conv's k-loop order), so the result is
+    /// **bitwise** equal to the looped default — the driver's
+    /// fused-vs-per-element dispatch never changes numerics.
+    fn jacobian_pre_block_batch(
+        &self,
+        hs: &[S],
+        pres: &[S],
+        out_f: &mut [S],
+        out_jblk: &mut [S],
+        ws: &mut [S],
+        batch: usize,
+    ) {
+        let n = self.n;
+        let dim = 2 * n;
+        let pl = K * n;
+        let bl = dim * 2; // packed [n, 2, 2] per element
+        debug_assert_eq!(hs.len(), batch * dim);
+        debug_assert_eq!(pres.len(), batch * pl);
+        debug_assert_eq!(out_f.len(), batch * dim);
+        debug_assert_eq!(out_jblk.len(), batch * bl);
+        // B = 1 (a worker owning a single sequence — the common shape when
+        // B < threads): the per-element kernel on the caller's scratch is
+        // the same math with no staging slab, keeping the per-timestep hot
+        // path allocation-free; the [B, 7n] slab below is only paid when
+        // it amortizes across ≥2 elements' matmuls.
+        if batch == 1 {
+            self.jacobian_block_pre(hs, pres, out_f, out_jblk, ws);
+            return;
+        }
+        let _ = ws;
+        let (v1, v2, vz, vy) = (self.v(0), self.v(1), self.v(2), self.v(3));
+        // per-element staging planes: [dt1, dt2, zp, gy, c1s, c2s] (gz is
+        // consumed locally in stage 1 and never staged)
+        const PLANES: usize = 6;
+        let mut slab = vec![S::zero(); batch * PLANES * n];
+
+        // stage 1: the three y-carried branches, batch axis inside the row
+        // loop (per-scalar chains: pre base, then the V·y j-loop in order)
+        for i in 0..n {
+            let (r1, r2, rz) = (
+                &v1[i * n..(i + 1) * n],
+                &v2[i * n..(i + 1) * n],
+                &vz[i * n..(i + 1) * n],
+            );
+            for b in 0..batch {
+                let s = &hs[b * dim..(b + 1) * dim];
+                let pre = &pres[b * pl..(b + 1) * pl];
+                let mut a1 = pre[i];
+                let mut a2 = pre[n + i];
+                let mut az = pre[2 * n + i];
+                for j in 0..n {
+                    let yj = s[2 * j];
+                    a1 += r1[j] * yj;
+                    a2 += r2[j] * yj;
+                    az += rz[j] * yj;
+                }
+                let el = &mut slab[b * PLANES * n..(b + 1) * PLANES * n];
+                let dt1 = sigmoid(a1);
+                let gz = az.tanh();
+                el[i] = dt1;
+                el[n + i] = sigmoid(a2);
+                // z' = (1 − dt1)·z + dt1·gz, z read interleaved (s[2i+1])
+                el[2 * n + i] = (S::one() - dt1) * s[2 * i + 1] + dt1 * gz;
+                // jacobian coefficients of the z' rows (dense kernel's c1/c2)
+                el[4 * n + i] = (gz - s[2 * i + 1]) * dt1 * (S::one() - dt1);
+                el[5 * n + i] = dt1 * (S::one() - gz * gz);
+            }
+        }
+        // stage 2: the y-branch over the freshly-built z' carrier
+        for i in 0..n {
+            let ry = &vy[i * n..(i + 1) * n];
+            for b in 0..batch {
+                let pre = &pres[b * pl..(b + 1) * pl];
+                let el = &slab[b * PLANES * n..(b + 1) * PLANES * n];
+                let mut ay = pre[3 * n + i];
+                for j in 0..n {
+                    ay += ry[j] * el[2 * n + j];
+                }
+                slab[b * PLANES * n + 3 * n + i] = ay.tanh();
+            }
+        }
+        // stage 3: outputs + packed 2×2 blocks (the dense kernel's exact
+        // per-entry expressions, incl. the full Σ_k V_y·∂z'/∂y convolution)
+        for i in 0..n {
+            let (r2, ry) = (&v2[i * n..(i + 1) * n], &vy[i * n..(i + 1) * n]);
+            for b in 0..batch {
+                let s = &hs[b * dim..(b + 1) * dim];
+                let el = &slab[b * PLANES * n..(b + 1) * PLANES * n];
+                let dt1 = el[i];
+                let dt2 = el[n + i];
+                let gy = el[3 * n + i];
+                let (c1s, c2s) = (&el[4 * n..5 * n], &el[5 * n..6 * n]);
+                let yi = s[2 * i];
+                out_f[b * dim + 2 * i] = (S::one() - dt2) * yi + dt2 * gy;
+                out_f[b * dim + 2 * i + 1] = el[2 * n + i];
+
+                let c_dt2 = (gy - yi) * dt2 * (S::one() - dt2);
+                let c_gy = dt2 * (S::one() - gy * gy);
+                let mut acc = c_dt2 * r2[i];
+                let mut conv = S::zero();
+                for k in 0..n {
+                    conv += ry[k] * (c1s[k] * v1[k * n + i] + c2s[k] * vz[k * n + i]);
+                }
+                acc += c_gy * conv;
+                acc += S::one() - dt2;
+                let blk = &mut out_jblk[b * bl + i * 4..b * bl + (i + 1) * 4];
+                blk[0] = acc; // ∂y'_i/∂y_i
+                blk[1] = c_gy * ry[i] * (S::one() - dt1); // ∂y'_i/∂z_i
+                blk[2] = c1s[i] * v1[i * n + i] + c2s[i] * vz[i * n + i]; // ∂z'_i/∂y_i
+                blk[3] = S::one() - dt1; // ∂z'_i/∂z_i
+            }
+        }
+    }
+
     fn flops_step(&self) -> u64 {
         let (n, m) = (self.n as u64, self.m as u64);
         2 * 4 * n * (n + m) + 16 * n

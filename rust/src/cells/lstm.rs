@@ -313,6 +313,86 @@ impl<S: Scalar> Cell<S> for Lstm<S> {
         self.jacobian_block_from_gates(s, out_f, out_jblk, &ws[..6 * self.n]);
     }
 
+    /// Fused batched Block(2) FUNCEVAL kernel (the ROADMAP follow-up from
+    /// the Block(k) PR): the batch axis is folded into the recurrent gate
+    /// matmuls — the unit loop is outermost so each `U_k[i, :]` row is
+    /// loaded once and streamed across all B elements instead of being
+    /// re-fetched B times. Everything the 2×2 block needs is per-unit
+    /// local (the `∂·/∂c` half lives on the unit diagonal), so no gate
+    /// slabs are staged. Per-element accumulation order is identical to
+    /// [`Lstm::gates`] + [`Lstm::jacobian_block_from_gates`] (pre-computed
+    /// base first, then the `U·h` j-loop), so the result is **bitwise**
+    /// equal to the looped default — the driver's fused-vs-per-element
+    /// dispatch never changes numerics.
+    fn jacobian_pre_block_batch(
+        &self,
+        hs: &[S],
+        pres: &[S],
+        out_f: &mut [S],
+        out_jblk: &mut [S],
+        ws: &mut [S],
+        batch: usize,
+    ) {
+        let n = self.n;
+        let dim = 2 * n;
+        let pl = GATES * n;
+        let bl = dim * 2; // packed [n, 2, 2] per element
+        let _ = ws;
+        debug_assert_eq!(hs.len(), batch * dim);
+        debug_assert_eq!(pres.len(), batch * pl);
+        debug_assert_eq!(out_f.len(), batch * dim);
+        debug_assert_eq!(out_jblk.len(), batch * bl);
+        let (u_i, u_f, u_g, u_o) = (self.u(0), self.u(1), self.u(2), self.u(3));
+        for i in 0..n {
+            let (rui, ruf, rug, ruo) = (
+                &u_i[i * n..(i + 1) * n],
+                &u_f[i * n..(i + 1) * n],
+                &u_g[i * n..(i + 1) * n],
+                &u_o[i * n..(i + 1) * n],
+            );
+            for b in 0..batch {
+                let s = &hs[b * dim..(b + 1) * dim];
+                let pre = &pres[b * pl..(b + 1) * pl];
+                // gate pre-activations: pre base, then U·h in j order —
+                // h_j is read interleaved (s[2j]), matching gates()'s
+                // unpacked hbuf values bitwise
+                let mut ai = pre[i];
+                let mut af = pre[n + i];
+                let mut ag = pre[2 * n + i];
+                let mut ao = pre[3 * n + i];
+                for j in 0..n {
+                    let hj = s[2 * j];
+                    ai += rui[j] * hj;
+                    af += ruf[j] * hj;
+                    ag += rug[j] * hj;
+                    ao += ruo[j] * hj;
+                }
+                let ig = sigmoid(ai);
+                let fg = sigmoid(af);
+                let gg = ag.tanh();
+                let og = sigmoid(ao);
+                let ci = s[2 * i + 1];
+                let cp = fg * ci + ig * gg;
+                let tc = cp.tanh();
+                out_f[b * dim + 2 * i] = og * tc;
+                out_f[b * dim + 2 * i + 1] = cp;
+
+                let di = ig * (S::one() - ig);
+                let df = fg * (S::one() - fg);
+                let dg = S::one() - gg * gg;
+                let do_ = og * (S::one() - og);
+                let dtc = S::one() - tc * tc;
+                let dcp_dh = ci * df * ruf[i] + gg * di * rui[i] + ig * dg * rug[i];
+                let dhp_dh = tc * do_ * ruo[i] + og * dtc * dcp_dh;
+                let blk = &mut out_jblk[b * bl + i * 4..b * bl + (i + 1) * 4];
+                blk[0] = dhp_dh; // ∂h'_i/∂h_i
+                blk[1] = og * dtc * fg; // ∂h'_i/∂c_i
+                blk[2] = dcp_dh; // ∂c'_i/∂h_i
+                blk[3] = fg; // ∂c'_i/∂c_i
+            }
+        }
+    }
+
     fn flops_step(&self) -> u64 {
         let (n, m) = (self.n as u64, self.m as u64);
         2 * 4 * n * (n + m) + 14 * n

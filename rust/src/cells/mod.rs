@@ -54,7 +54,11 @@
 //!   kernels are the ones DEER's FUNCEVAL phase dispatches to (input
 //!   projections are hoisted out of the Newton loop), so they carry the
 //!   hot-path fusion; overrides must stay bitwise equal to the looped
-//!   defaults.
+//!   defaults. GRU/IndRNN fuse their dense/diagonal kernels; LSTM/LEM fuse
+//!   the packed-block `jacobian_pre_block_batch` (the Block(2) hot path).
+//! * `vjp_step`'s `dx` cotangent (implemented by every cell) is the
+//!   inter-layer leg of stacked models: layer `l`'s input cotangents are
+//!   layer `l − 1`'s output cotangents in the stacked backward chain.
 
 pub mod elman;
 pub mod gru;

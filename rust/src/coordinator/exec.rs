@@ -76,6 +76,11 @@ pub struct ExecStats {
     pub sequences_solved: u64,
     /// Groups the memory planner split into multiple sub-batches.
     pub groups_split: u64,
+    /// Which stacked-model layer these counters belong to (copied from
+    /// [`BatchExecutor::layer`]; 0 for single-layer / serving use). A
+    /// stacked trainer builds one executor per layer, so per-layer solve
+    /// accounting is a read of each executor's tagged stats.
+    pub layer: usize,
 }
 
 /// The coordinator's batched evaluation engine: batcher + warm-start cache +
@@ -94,6 +99,21 @@ pub struct BatchExecutor<'c, C: Cell<f32>> {
     /// [`EvalReply::jacobians`]). Off by default: serving callers only need
     /// trajectories, and the slabs are `T·n²` per dense sequence.
     pub keep_jacobians: bool,
+    /// Stacked-model layer this executor solves for (0 = single-layer /
+    /// serving use). Propagated into [`ExecStats::layer`] so dispatch
+    /// counters stay attributable per layer.
+    pub layer: usize,
+    /// Total stack depth the caller's training step holds trajectories
+    /// for. The memory planner budgets the fused batch against the FULL
+    /// stacked working set (`layers − 1` retained `B·T·n` slabs ride along
+    /// with the active solve) — see
+    /// [`MemoryPlanner::max_deer_batch_stacked`]. 1 (the default) is the
+    /// plain structured plan.
+    pub plan_layers: usize,
+    /// State width the retained peer layers are budgeted at (heterogeneous
+    /// stacks: the stack's MAXIMUM width). 0 (the default) means "same as
+    /// this executor's cell".
+    pub plan_peer_width: usize,
 }
 
 impl<'c, C: Cell<f32>> BatchExecutor<'c, C> {
@@ -116,6 +136,9 @@ impl<'c, C: Cell<f32>> BatchExecutor<'c, C> {
             policy: ConvergencePolicy::default(),
             stats: ExecStats::default(),
             keep_jacobians: false,
+            layer: 0,
+            plan_layers: 1,
+            plan_peer_width: 0,
         }
     }
 
@@ -150,9 +173,22 @@ impl<'c, C: Cell<f32>> BatchExecutor<'c, C> {
         let m = self.cell.input_dim();
         let t_len = self.t_len;
         let structure = effective_structure(self.cell, self.policy.jacobian_mode);
+        self.stats.layer = self.layer;
+        // Stacked plan: budget the other layers' retained trajectories —
+        // and their retained forward Jacobians when this trainer keeps
+        // them for the backward pass (keep_jacobians ⇒ every layer's slab
+        // stays alive until its backward leg consumes it).
+        let peer_n = if self.plan_peer_width == 0 { n } else { self.plan_peer_width };
         let max_b = self
             .planner
-            .max_deer_batch_structured(n, t_len, structure)
+            .max_deer_batch_stacked(
+                n,
+                peer_n,
+                t_len,
+                structure,
+                self.plan_layers.max(1),
+                self.keep_jacobians,
+            )
             .max(1);
         let reqs = group.requests;
         if reqs.len() > max_b {
@@ -450,6 +486,52 @@ mod tests {
             let jac = reply.jacobians.as_ref().expect("jacobians retained");
             assert_eq!(jac.len(), t_len * n * 2, "packed [T, n/2, 2, 2] slab");
         }
+    }
+
+    /// Layer-tagged executors: stats carry the layer id, and `plan_layers`
+    /// tightens the memory plan — a budget that fits 2 dense sequences for
+    /// a single-layer solve splits the same group earlier when 3 retained
+    /// trajectory slabs ride along.
+    #[test]
+    fn layer_tag_and_stacked_planning() {
+        let mut rng = Rng::new(7);
+        let (n, m, t_len, b) = (3usize, 3usize, 150usize, 4usize);
+        let cell: Gru<f32> = Gru::new(n, m, &mut rng);
+        let per_seq = crate::simulator::deer_memory_bytes(n, t_len, 1, 4);
+        let mut ex = BatchExecutor::new(
+            &cell,
+            t_len,
+            b,
+            Duration::from_secs(60),
+            1 << 20,
+            2 * per_seq,
+            1,
+        );
+        ex.layer = 1;
+        ex.plan_layers = 4;
+        // stacked plan: per-sequence cost grows by 3 retained T·n slabs
+        // (keep_jacobians is off, so no retained jac slabs; peer width
+        // defaults to this cell's n)
+        let stacked_max = ex.planner.max_deer_batch_stacked(
+            n,
+            n,
+            t_len,
+            crate::cells::JacobianStructure::Dense,
+            4,
+            false,
+        );
+        assert!(
+            stacked_max <= ex.planner.max_deer_batch(n, t_len),
+            "stacked plan must not admit more than the flat plan"
+        );
+        let reqs = make_requests(&cell, t_len, b);
+        for (id, h0, xs) in &reqs {
+            ex.submit(*id, h0.clone(), xs.clone());
+        }
+        assert_eq!(ex.stats.layer, 1, "stats must carry the executor's layer tag");
+        assert_eq!(ex.stats.sequences_solved, b as u64);
+        let expected_solves = (b as u64).div_ceil(stacked_max.max(1) as u64);
+        assert_eq!(ex.stats.batched_solves, expected_solves);
     }
 
     /// Deadline-style flush drains a partial group through one fused solve.

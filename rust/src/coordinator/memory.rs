@@ -6,7 +6,9 @@
 //! batch size matches a given DEER configuration's footprint (Fig. 8 used
 //! DEER@B=3 vs sequential@B=70 at equal ~2.6 GB).
 
-pub use crate::simulator::{deer_memory_bytes, deer_memory_bytes_structured};
+pub use crate::simulator::{
+    deer_memory_bytes, deer_memory_bytes_stacked, deer_memory_bytes_structured,
+};
 use crate::cells::JacobianStructure;
 
 /// Working-set bytes of the sequential method: activations for BPTT
@@ -59,6 +61,57 @@ impl MemoryPlanner {
         structure: JacobianStructure,
     ) -> usize {
         let per = deer_memory_bytes_structured(n, t_len, 1, 4, structure).max(1);
+        (self.budget_bytes / per) as usize
+    }
+
+    /// Stacked-model [`MemoryPlanner::deer_fits_structured`]: budgets one
+    /// layer's active solve (width `n`) PLUS what the `layers − 1` other
+    /// layers keep alive for the backward chain — their `B·T·peer_n`
+    /// trajectory slabs, and their `B·T·jac_len(peer_n)` forward Jacobian
+    /// slabs too when `retain_jacobians` is set (the trainer's
+    /// `reuse_jacobians` speed mode). `peer_n` is the retained layers'
+    /// width — the stack's MAXIMUM for heterogeneous stacks. `layers = 1`
+    /// ≡ the structured check.
+    #[allow(clippy::too_many_arguments)]
+    pub fn deer_fits_stacked(
+        &self,
+        n: usize,
+        peer_n: usize,
+        t_len: usize,
+        batch: usize,
+        structure: JacobianStructure,
+        layers: usize,
+        retain_jacobians: bool,
+    ) -> bool {
+        deer_memory_bytes_stacked(n, peer_n, t_len, batch, 4, structure, layers, retain_jacobians)
+            <= self.budget_bytes
+    }
+
+    /// Stacked-model [`MemoryPlanner::max_deer_batch_structured`] — what a
+    /// layer-tagged [`crate::coordinator::exec::BatchExecutor`] uses so an
+    /// L-layer trainer's groups are split against the FULL stacked working
+    /// set (retained trajectories at the peers' width + optionally their
+    /// retained Jacobians), not just the single solve.
+    pub fn max_deer_batch_stacked(
+        &self,
+        n: usize,
+        peer_n: usize,
+        t_len: usize,
+        structure: JacobianStructure,
+        layers: usize,
+        retain_jacobians: bool,
+    ) -> usize {
+        let per = deer_memory_bytes_stacked(
+            n,
+            peer_n,
+            t_len,
+            1,
+            4,
+            structure,
+            layers,
+            retain_jacobians,
+        )
+        .max(1);
         (self.budget_bytes / per) as usize
     }
 
@@ -135,5 +188,47 @@ mod tests {
         let p = MemoryPlanner::new(1 << 30);
         assert!(p.max_deer_batch(4, 10_000) >= p.max_deer_batch(8, 10_000));
         assert!(p.max_deer_batch(4, 10_000) >= p.max_deer_batch(4, 100_000));
+    }
+
+    /// Stacked planning: depth 1 equals the structured planner, deeper
+    /// stacks fit monotonically fewer sequences per fused solve, retaining
+    /// forward Jacobians (reuse_jacobians) costs strictly more, and a
+    /// budget sized for one layer's solve rejects the same batch at depth 4.
+    #[test]
+    fn stacked_planner_monotone_in_depth() {
+        let p = MemoryPlanner::new(1 << 30);
+        let st = JacobianStructure::Dense;
+        assert_eq!(
+            p.max_deer_batch_stacked(16, 16, 100_000, st, 1, false),
+            p.max_deer_batch_structured(16, 100_000, st)
+        );
+        let mut prev = usize::MAX;
+        for layers in 1..5usize {
+            let b = p.max_deer_batch_stacked(16, 16, 100_000, st, layers, false);
+            assert!(b <= prev, "depth {layers}: {b} > {prev}");
+            assert!(
+                p.max_deer_batch_stacked(16, 16, 100_000, st, layers, true) <= b,
+                "retained Jacobians must not admit more sequences (depth {layers})"
+            );
+            prev = b;
+        }
+        // retained dense Jacobians dominate at depth > 1: the jac-aware
+        // plan must be strictly tighter than the trajectory-only one
+        assert!(
+            p.max_deer_batch_stacked(16, 16, 100_000, st, 3, true)
+                < p.max_deer_batch_stacked(16, 16, 100_000, st, 3, false)
+        );
+        // heterogeneous guard: a narrow active layer with a WIDE retained
+        // peer must plan tighter than with a narrow one
+        assert!(
+            p.max_deer_batch_stacked(8, 64, 100_000, st, 2, true)
+                < p.max_deer_batch_stacked(8, 8, 100_000, st, 2, true)
+        );
+        // a budget exactly fitting B sequences at depth 1 must reject the
+        // same B once 3 retained trajectory slabs ride along
+        let b1 = p.max_deer_batch_structured(16, 100_000, st).max(1);
+        assert!(p.deer_fits_stacked(16, 16, 100_000, b1, st, 1, false));
+        let tight = MemoryPlanner::new(deer_memory_bytes_structured(16, 100_000, b1, 4, st));
+        assert!(!tight.deer_fits_stacked(16, 16, 100_000, b1, st, 4, false));
     }
 }

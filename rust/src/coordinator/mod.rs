@@ -14,10 +14,17 @@
 //! * [`exec`] — the batched execution engine closing the loop: every
 //!   flushed group is gathered into the `[B, T, n]` layout, warm-started
 //!   from the cache, memory-planned, and dispatched as **one** fused
-//!   [`crate::deer::deer_rnn_batch`] solve.
+//!   [`crate::deer::deer_rnn_batch`] solve. Stacked-model trainers build
+//!   one layer-tagged executor per layer ([`exec::BatchExecutor::layer`]),
+//!   so an L-layer minibatch is exactly L fused solves with per-layer
+//!   [`ExecStats`] attribution; [`exec::BatchExecutor::plan_layers`] makes
+//!   the plan budget the retained inter-layer trajectories.
 //! * [`memory`] — O(n²LB) Jacobian working-set accounting (§3.5, Table 6)
 //!   and equal-memory batch planning (Fig. 8), structure-aware since the
-//!   diagonal path packs Jacobians as `B·T·n`.
+//!   diagonal path packs Jacobians as `B·T·n`; stacked-aware
+//!   ([`memory::MemoryPlanner::max_deer_batch_stacked`]) since an L-layer
+//!   training step keeps L−1 extra `B·T·n` trajectory slabs alive for the
+//!   backward chain.
 //! * [`sweep`] — the benchmark grid scheduler driving Fig. 2 / Table 4
 //!   style sweeps through a worker pool.
 //!

@@ -60,6 +60,11 @@ pub struct BatchGradResult<S> {
     pub dtheta: Vec<S>,
     /// Per-sequence gradients w.r.t. the initial states, `[B, n]`.
     pub dh0s: Vec<S>,
+    /// Per-step input cotangents `∂L/∂x_i` (`[B, T, m]`), populated only by
+    /// [`deer_rnn_backward_batch_io`] with `want_dx = true` — the
+    /// inter-layer cotangent of a stacked model (layer `l`'s `dxs` is the
+    /// `gs` of layer `l − 1`, whose trajectory is layer `l`'s input).
+    pub dxs: Option<Vec<S>>,
     /// Phase timings (JACOBIAN / DUAL_SCAN / PARAM_VJP).
     pub profile: PhaseProfile,
 }
@@ -111,6 +116,31 @@ pub fn deer_rnn_backward_batch<S: Scalar, C: CellGrad<S>>(
     jac_structure: JacobianStructure,
     threads: usize,
     batch: usize,
+) -> BatchGradResult<S> {
+    deer_rnn_backward_batch_io(
+        cell, h0s, xs, ys, gs, jacobians, jac_structure, threads, batch, false,
+    )
+}
+
+/// [`deer_rnn_backward_batch`] that additionally accumulates the per-step
+/// **input cotangents** `dxs = ∂L/∂x` (`[B, T, m]`) when `want_dx` is set —
+/// the cell's input-VJP evaluated at the same λ the parameter VJP consumes,
+/// so it costs no extra dual scan. A stacked model's backward pass chains
+/// layers through this: layer `l`'s `dxs` IS the output cotangent `gs` of
+/// layer `l − 1`. With `want_dx = false` this is exactly
+/// [`deer_rnn_backward_batch`] (no dx buffers are allocated or touched).
+#[allow(clippy::too_many_arguments)]
+pub fn deer_rnn_backward_batch_io<S: Scalar, C: CellGrad<S>>(
+    cell: &C,
+    h0s: &[S],
+    xs: &[S],
+    ys: &[S],
+    gs: &[S],
+    jacobians: Option<&[S]>,
+    jac_structure: JacobianStructure,
+    threads: usize,
+    batch: usize,
+    want_dx: bool,
 ) -> BatchGradResult<S> {
     let n = cell.state_dim();
     let m = cell.input_dim();
@@ -176,10 +206,19 @@ pub fn deer_rnn_backward_batch<S: Scalar, C: CellGrad<S>>(
     });
 
     // Phase 3: parameter VJP reduction over the [B, T] grid with per-chunk
-    // partial accumulators, reduced in deterministic chunk order.
+    // partial accumulators, reduced in deterministic chunk order. When
+    // `want_dx` is set the same sweep also accumulates the input cotangents
+    // dxs[s, i] — each (s, i) element is owned by exactly one chunk, so the
+    // threaded path hands every worker a disjoint `[lo..hi]·m` slice.
     let p = cell.num_params();
+    let sm = t_len * m;
     let mut dtheta = vec![S::zero(); p];
     let mut dh0s = vec![S::zero(); batch * n];
+    let mut dxs: Option<Vec<S>> = if want_dx {
+        Some(vec![S::zero(); batch * sm])
+    } else {
+        None
+    };
     profile.record("PARAM_VJP", || {
         let chunks = crate::scan::plan_batch_chunks(t_len, &all_seqs, threads, batch);
         if threads <= 1 || chunks.len() <= 1 {
@@ -195,12 +234,15 @@ pub fn deer_rnn_backward_batch<S: Scalar, C: CellGrad<S>>(
                     for v in dh_scratch.iter_mut() {
                         *v = S::zero();
                     }
+                    let dx_i = dxs
+                        .as_mut()
+                        .map(|d| &mut d[s * sm + i * m..s * sm + (i + 1) * m]);
                     cell.vjp_step(
                         h_prev,
                         &xs[s * t_len * m + i * m..s * t_len * m + (i + 1) * m],
                         &lambda[s * sn + i * n..s * sn + (i + 1) * n],
                         &mut dh_scratch,
-                        None,
+                        dx_i,
                         &mut dtheta,
                         &mut ws,
                     );
@@ -213,25 +255,55 @@ pub fn deer_rnn_backward_batch<S: Scalar, C: CellGrad<S>>(
             let workers = threads.min(chunks.len());
             let mut partials: Vec<Vec<S>> = vec![vec![S::zero(); p]; chunks.len()];
             let mut dh0_parts: Vec<Option<Vec<S>>> = vec![None; chunks.len()];
+            // per-chunk disjoint dx slices (chunks of one sequence are
+            // generated consecutively and in ascending time order — the
+            // same contract the Jacobian recompute slab split relies on)
+            let mut dx_chunks: Vec<Option<&mut [S]>> = Vec::with_capacity(chunks.len());
+            match dxs.as_mut() {
+                None => dx_chunks.extend((0..chunks.len()).map(|_| None)),
+                Some(buf) => {
+                    let mut slabs: Vec<Option<&mut [S]>> =
+                        buf.chunks_mut(sm).map(Some).collect();
+                    let mut c = 0;
+                    while c < chunks.len() {
+                        let s = chunks[c].0;
+                        let mut rest = slabs[s].take().unwrap();
+                        while c < chunks.len() && chunks[c].0 == s {
+                            let (_, lo, hi) = chunks[c];
+                            let (head, tail) = rest.split_at_mut((hi - lo) * m);
+                            dx_chunks.push(Some(head));
+                            rest = tail;
+                            c += 1;
+                        }
+                    }
+                }
+            }
             {
                 let lambda = &lambda;
+                #[allow(clippy::type_complexity)]
                 let mut buckets: Vec<
-                    Vec<((usize, usize, usize), &mut Vec<S>, &mut Option<Vec<S>>)>,
+                    Vec<(
+                        (usize, usize, usize),
+                        &mut Vec<S>,
+                        &mut Option<Vec<S>>,
+                        Option<&mut [S]>,
+                    )>,
                 > = (0..workers).map(|_| Vec::new()).collect();
-                for (k, ((ch, part), dh0p)) in chunks
+                for (k, (((ch, part), dh0p), dx_c)) in chunks
                     .iter()
                     .zip(partials.iter_mut())
                     .zip(dh0_parts.iter_mut())
+                    .zip(dx_chunks)
                     .enumerate()
                 {
-                    buckets[k % workers].push((*ch, part, dh0p));
+                    buckets[k % workers].push((*ch, part, dh0p, dx_c));
                 }
                 std::thread::scope(|scope| {
                     for bucket in buckets {
                         scope.spawn(move || {
                             let mut ws = vec![S::zero(); cell.ws_len()];
                             let mut dh_scratch = vec![S::zero(); n];
-                            for ((s, lo, hi), part, dh0p) in bucket {
+                            for ((s, lo, hi), part, dh0p, mut dx_c) in bucket {
                                 for i in lo..hi {
                                     let h_prev = if i == 0 {
                                         &h0s[s * n..(s + 1) * n]
@@ -241,12 +313,15 @@ pub fn deer_rnn_backward_batch<S: Scalar, C: CellGrad<S>>(
                                     for v in dh_scratch.iter_mut() {
                                         *v = S::zero();
                                     }
+                                    let dx_i = dx_c
+                                        .as_deref_mut()
+                                        .map(|d| &mut d[(i - lo) * m..(i - lo + 1) * m]);
                                     cell.vjp_step(
                                         h_prev,
                                         &xs[s * t_len * m + i * m..s * t_len * m + (i + 1) * m],
                                         &lambda[s * sn + i * n..s * sn + (i + 1) * n],
                                         &mut dh_scratch,
-                                        None,
+                                        dx_i,
                                         part,
                                         &mut ws,
                                     );
@@ -274,7 +349,7 @@ pub fn deer_rnn_backward_batch<S: Scalar, C: CellGrad<S>>(
         }
     });
 
-    BatchGradResult { dtheta, dh0s, profile }
+    BatchGradResult { dtheta, dh0s, dxs, profile }
 }
 
 /// Recompute the per-step Jacobians along every sequence's trajectory
@@ -634,6 +709,107 @@ mod tests {
             }
             for (a, r) in bg.dh0s.iter().zip(dh0s_ref.iter()) {
                 assert!((a - r).abs() < 1e-9, "threads={threads} dh0: {a} vs {r}");
+            }
+        }
+    }
+
+    /// The input cotangents of the io variant match central finite
+    /// differences of `L(xs) = Σ g·y(xs)` — the inter-layer contract of the
+    /// stacked backward pass — at every thread count, and the dθ/dh0 legs
+    /// are bitwise identical to the dx-less call.
+    #[test]
+    fn input_cotangents_match_fd() {
+        use super::deer_rnn_backward_batch_io;
+        let mut rng = Rng::new(17);
+        let (n, m, t, b) = (3usize, 2usize, 12usize, 2usize);
+        let cell: Gru<f64> = Gru::new(n, m, &mut rng);
+        let mut xs = vec![0.0; b * t * m];
+        rng.fill_normal(&mut xs, 1.0);
+        let h0s = vec![0.0; b * n];
+        let mut gs = vec![0.0; b * t * n];
+        rng.fill_normal(&mut gs, 1.0);
+
+        let loss = |xs: &[f64]| -> f64 {
+            let mut l = 0.0;
+            for s in 0..b {
+                let ys = seq_rnn(&cell, &h0s[s * n..(s + 1) * n], &xs[s * t * m..(s + 1) * t * m]);
+                for (y, g) in ys.iter().zip(&gs[s * t * n..(s + 1) * t * n]) {
+                    l += y * g;
+                }
+            }
+            l
+        };
+
+        let mut ys = vec![0.0; b * t * n];
+        for s in 0..b {
+            let y = seq_rnn(&cell, &h0s[s * n..(s + 1) * n], &xs[s * t * m..(s + 1) * t * m]);
+            ys[s * t * n..(s + 1) * t * n].copy_from_slice(&y);
+        }
+        let plain = deer_rnn_backward_batch(
+            &cell, &h0s, &xs, &ys, &gs, None, JacobianStructure::Dense, 1, b,
+        );
+        assert!(plain.dxs.is_none(), "dx-less call must not allocate dxs");
+        for threads in [1usize, 2, 4] {
+            let g = deer_rnn_backward_batch_io(
+                &cell, &h0s, &xs, &ys, &gs, None, JacobianStructure::Dense, threads, b, true,
+            );
+            assert_eq!(g.dtheta, plain.dtheta, "threads={threads}: dθ must not change");
+            assert_eq!(g.dh0s, plain.dh0s, "threads={threads}: dh0 must not change");
+            let dxs = g.dxs.expect("requested input cotangents");
+            let eps = 1e-6;
+            for j in 0..b * t * m {
+                let mut xp = xs.clone();
+                let mut xm = xs.clone();
+                xp[j] += eps;
+                xm[j] -= eps;
+                let fd = (loss(&xp) - loss(&xm)) / (2.0 * eps);
+                assert!(
+                    (dxs[j] - fd).abs() < 1e-6 * (1.0 + fd.abs()),
+                    "threads={threads} dxs[{j}]: {} vs fd {fd}",
+                    dxs[j]
+                );
+            }
+        }
+    }
+
+    /// seq_rnn_backward_io's dxs agrees with the batched io variant — the
+    /// Seq and Deer arms of a stacked trainer chain identical inter-layer
+    /// cotangents (up to the usual reduction-order noise).
+    #[test]
+    fn seq_backward_io_matches_batched_io() {
+        use super::deer_rnn_backward_batch_io;
+        use crate::deer::seq::seq_rnn_backward_io;
+        let mut rng = Rng::new(18);
+        let (n, m, t, b) = (3usize, 2usize, 40usize, 2usize);
+        let cell: Gru<f64> = Gru::new(n, m, &mut rng);
+        let mut xs = vec![0.0; b * t * m];
+        rng.fill_normal(&mut xs, 1.0);
+        let h0s = vec![0.0; b * n];
+        let mut gs = vec![0.0; b * t * n];
+        rng.fill_normal(&mut gs, 1.0);
+        let mut ys = vec![0.0; b * t * n];
+        for s in 0..b {
+            let y = seq_rnn(&cell, &h0s[s * n..(s + 1) * n], &xs[s * t * m..(s + 1) * t * m]);
+            ys[s * t * n..(s + 1) * t * n].copy_from_slice(&y);
+        }
+        let g = deer_rnn_backward_batch_io(
+            &cell, &h0s, &xs, &ys, &gs, None, JacobianStructure::Dense, 1, b, true,
+        );
+        let dxs = g.dxs.unwrap();
+        for s in 0..b {
+            let mut dtheta = vec![0.0; cell.num_params()];
+            let mut dx_seq = vec![0.0; t * m];
+            seq_rnn_backward_io(
+                &cell,
+                &h0s[s * n..(s + 1) * n],
+                &xs[s * t * m..(s + 1) * t * m],
+                &ys[s * t * n..(s + 1) * t * n],
+                &gs[s * t * n..(s + 1) * t * n],
+                &mut dtheta,
+                Some(&mut dx_seq),
+            );
+            for (a, r) in dxs[s * t * m..(s + 1) * t * m].iter().zip(dx_seq.iter()) {
+                assert!((a - r).abs() < 1e-9 * (1.0 + r.abs()), "seq {s}: {a} vs {r}");
             }
         }
     }

@@ -61,11 +61,14 @@ pub mod ode;
 pub mod rk45;
 pub mod seq;
 
-pub use grad::{deer_rnn_backward, deer_rnn_backward_batch, BatchGradResult, GradResult};
+pub use grad::{
+    deer_rnn_backward, deer_rnn_backward_batch, deer_rnn_backward_batch_io, BatchGradResult,
+    GradResult,
+};
 pub use newton::{
     deer_rnn, deer_rnn_batch, effective_structure, BatchDeerResult, DeerConfig, DeerResult,
     JacobianMode,
 };
 pub use ode::{deer_ode, Interp, OdeDeerResult, OdeSystem};
 pub use rk45::{rk45_solve, Rk45Options};
-pub use seq::{seq_rnn, seq_rnn_backward, seq_rnn_batch};
+pub use seq::{seq_rnn, seq_rnn_backward, seq_rnn_backward_io, seq_rnn_batch};

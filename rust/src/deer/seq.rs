@@ -71,12 +71,33 @@ pub fn seq_rnn_backward<S: Scalar, C: CellGrad<S>>(
     gs: &[S],
     dtheta: &mut [S],
 ) -> Vec<S> {
+    seq_rnn_backward_io(cell, h0, xs, ys, gs, dtheta, None)
+}
+
+/// [`seq_rnn_backward`] that additionally ACCUMULATES the per-step input
+/// cotangents `∂L/∂x_i` into `dxs` (`T·m`) when requested — the inter-layer
+/// leg of a stacked model's backward pass: layer `l`'s `dxs` is exactly the
+/// output cotangent `gs` of layer `l − 1` (its input sequence IS the layer
+/// below's trajectory). With `dxs = None` the λ recursion and `dtheta`
+/// accumulation are the unchanged BPTT of [`seq_rnn_backward`].
+pub fn seq_rnn_backward_io<S: Scalar, C: CellGrad<S>>(
+    cell: &C,
+    h0: &[S],
+    xs: &[S],
+    ys: &[S],
+    gs: &[S],
+    dtheta: &mut [S],
+    mut dxs: Option<&mut [S]>,
+) -> Vec<S> {
     let n = cell.state_dim();
     let m = cell.input_dim();
     let t_len = xs.len() / m;
     assert_eq!(ys.len(), t_len * n);
     assert_eq!(gs.len(), t_len * n);
     assert_eq!(dtheta.len(), cell.num_params());
+    if let Some(d) = dxs.as_deref() {
+        assert_eq!(d.len(), t_len * m, "dxs layout ([T, m])");
+    }
 
     let mut ws = vec![S::zero(); cell.ws_len()];
     let mut lam = gs[(t_len - 1) * n..].to_vec();
@@ -87,7 +108,8 @@ pub fn seq_rnn_backward<S: Scalar, C: CellGrad<S>>(
         for v in dh_prev.iter_mut() {
             *v = S::zero();
         }
-        cell.vjp_step(h_prev, x, &lam, &mut dh_prev, None, dtheta, &mut ws);
+        let dx_i = dxs.as_deref_mut().map(|d| &mut d[i * m..(i + 1) * m]);
+        cell.vjp_step(h_prev, x, &lam, &mut dh_prev, dx_i, dtheta, &mut ws);
         if i > 0 {
             for j in 0..n {
                 lam[j] = gs[(i - 1) * n + j] + dh_prev[j];

@@ -809,6 +809,8 @@ pub struct TrainBenchPoint {
     pub batch: usize,
     pub threads: usize,
     pub steps: usize,
+    /// Stacked-model depth (1 = the classic single-layer arm).
+    pub layers: usize,
     /// Mean wall-clock per optimizer step (warm regime: one warm-up step
     /// excluded) per engine.
     pub seq_step_secs: f64,
@@ -831,10 +833,13 @@ pub struct TrainBenchPoint {
 /// trained for a few optimizer steps under each forward engine with shared
 /// seeds and data order. The Seq arm is the single-threaded sequential
 /// BPTT baseline; the Deer/Quasi arms dispatch each minibatch as ONE fused
-/// `[B, T, n]` solve over the thread pool, warm-started across steps from
-/// the trajectory cache, and reuse forward Jacobians in the eq.-7 backward
-/// pass. Emits the human table plus machine-readable points for
-/// `BENCH_train.json`.
+/// `[B, T, n]` solve PER LAYER over the thread pool, warm-started across
+/// steps from the per-layer trajectory caches, and reuse forward Jacobians
+/// in the eq.-7 backward pass. `depths` adds stacked-model arms: depth 1
+/// runs the full `lens` grid (the gated perf-trajectory points), deeper
+/// arms run at the SMALLEST length only (a dispatch/scaling witness, kept
+/// off the wall-clock gates). Emits the human table plus machine-readable
+/// points for `BENCH_train.json`.
 pub fn train_bench(
     lens: &[usize],
     rows: usize,
@@ -842,6 +847,7 @@ pub fn train_bench(
     batch: usize,
     steps: usize,
     threads: usize,
+    depths: &[usize],
 ) -> (Table, Vec<TrainBenchPoint>) {
     use crate::data::Split;
     use crate::train::native::{
@@ -851,6 +857,7 @@ pub fn train_bench(
         "n",
         "T",
         "B",
+        "L",
         "seq s/step",
         "deer s/step",
         "quasi s/step",
@@ -861,14 +868,33 @@ pub fn train_bench(
         "|Δacc|",
     ]);
     let mut points = Vec::new();
+    let mut configs: Vec<(usize, usize)> = Vec::new(); // (t_len, layers)
     for &t_len in lens {
+        for &layers in depths {
+            let layers = layers.max(1);
+            // depth > 1 only at the smallest length (see the fn docs)
+            if layers > 1 && Some(&t_len) != lens.iter().min() {
+                continue;
+            }
+            if !configs.contains(&(t_len, layers)) {
+                configs.push((t_len, layers));
+            }
+        }
+    }
+    for (t_len, layers) in configs {
         let data = worms_task(rows, t_len, 0xEA7 ^ t_len as u64);
         let mut results = Vec::new();
         for mode in [ForwardMode::Seq, ForwardMode::Deer, ForwardMode::QuasiDeer] {
             let mut rng = Rng::new(0x7261_1122);
-            let cell: crate::cells::Gru<f32> =
-                crate::cells::Gru::new(n, crate::data::worms::CHANNELS, &mut rng);
-            let model = Model::new(cell, crate::data::worms::CLASSES, Readout::LastState, &mut rng);
+            let cells: Vec<crate::cells::Gru<f32>> = (0..layers)
+                .map(|l| {
+                    let m = if l == 0 { crate::data::worms::CHANNELS } else { n };
+                    crate::cells::Gru::new(n, m, &mut rng)
+                })
+                .collect();
+            let model =
+                Model::stacked(cells, crate::data::worms::CLASSES, Readout::LastState, &mut rng)
+                    .expect("bench stack chains");
             let cfg = TrainConfig {
                 mode,
                 batch,
@@ -878,7 +904,7 @@ pub fn train_bench(
                 step_clamp: if mode == ForwardMode::QuasiDeer { Some(1.0) } else { None },
                 ..Default::default()
             };
-            let mut tl = TrainLoop::new(model, data.clone(), cfg);
+            let mut tl = TrainLoop::new(model, data.clone(), cfg).expect("bench config valid");
             tl.step(); // warm-up: cold caches, first fused solve
             let start = std::time::Instant::now();
             for _ in 0..steps {
@@ -899,6 +925,7 @@ pub fn train_bench(
             batch,
             threads,
             steps,
+            layers,
             seq_step_secs: results[0].0,
             deer_step_secs: results[1].0,
             quasi_step_secs: results[2].0,
@@ -914,6 +941,7 @@ pub fn train_bench(
             n.to_string(),
             t_len.to_string(),
             batch.to_string(),
+            layers.to_string(),
             fmt_secs(p.seq_step_secs),
             fmt_secs(p.deer_step_secs),
             fmt_secs(p.quasi_step_secs),
@@ -960,6 +988,7 @@ pub fn train_bench_json(points: &[TrainBenchPoint]) -> Json {
                             ("batch", json::num(p.batch as f64)),
                             ("pool_threads", json::num(p.threads as f64)),
                             ("steps", json::num(p.steps as f64)),
+                            ("layers", json::num(p.layers as f64)),
                             ("seq_step_ns", json::num(p.seq_step_secs * 1e9)),
                             ("deer_step_ns", json::num(p.deer_step_secs * 1e9)),
                             ("quasi_step_ns", json::num(p.quasi_step_secs * 1e9)),

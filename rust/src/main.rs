@@ -72,6 +72,10 @@ fn run() -> Result<()> {
                  \n  deer bench --exp train --train-out BENCH_train.json  seq-BPTT vs DEER optimizer steps\
                  \n  deer sweep --workers 2          coordinator sweep demo\
                  \n  deer train --exp worms --mode deer --steps 40   native §4.3 trainer (seq|deer|quasi|hybrid)\
+                 \n  deer train --exp worms --layers 2 --mode deer   stacked model: one fused solve per layer\
+                 \n  deer train --exp worms-full --eval-every 10     Fig. 4 scale (T=17,984), val/test acc vs wall-clock\
+                 \n  deer train --exp worms --save ck.json           checkpoint params+Adam (--load resumes)\
+                 \n  deer train --exp worms --lr-schedule cosine:200 LR schedules (constant|cosine:T[:W]|step:E:G[:W])\
                  \n  deer train --exp twobody --mode deer            native energy-regression trainer\
                  \n  deer train --model worms --steps 50             artifact trainer (xla feature)\
                  \n  deer info                       list AOT artifacts"
@@ -229,21 +233,24 @@ fn bench(args: &Args, rec: &Recorder) -> Result<()> {
     if all || which == "train" {
         // Training-step bench: sequential BPTT vs fused batched DEER per
         // optimizer step on the §4.3 workload. Grid shrinks under
-        // DEER_BENCH_FAST=1; both grids keep a T ≥ 4096 point.
+        // DEER_BENCH_FAST=1; both grids keep a T ≥ 4096 point. The depth
+        // arm (--layers, default 1,2) runs stacked models at the smallest
+        // length — one fused solve per layer per step.
         let fast = std::env::var("DEER_BENCH_FAST").is_ok();
         let (lens, rows, steps) = exp::train_bench_grid(fast);
         let n = args.get_parse("n", 16usize).map_err(Error::msg)?;
         let batch = args.get_parse("batch", 8usize).map_err(Error::msg)?;
+        let depths = args.get_list("layers", &[1usize, 2]).map_err(Error::msg)?;
         let pool = std::thread::available_parallelism()
             .map(|v| v.get())
             .unwrap_or(2)
             .max(2);
         let threads = args.get_parse("workers", pool).map_err(Error::msg)?;
-        let (t, points) = exp::train_bench(&lens, rows, n, batch, steps, threads);
+        let (t, points) = exp::train_bench(&lens, rows, n, batch, steps, threads, &depths);
         rec.table(
             "train_native",
             &format!(
-                "Native training: wall-clock per optimizer step, seq-BPTT (1 thread) vs fused DEER / quasi-DEER (pool = {threads}), GRU n={n}, B={batch}"
+                "Native training: wall-clock per optimizer step, seq-BPTT (1 thread) vs fused DEER / quasi-DEER (pool = {threads}), GRU n={n}, B={batch}, depths {depths:?}"
             ),
             &t,
         )?;
@@ -311,22 +318,59 @@ fn sweep(args: &Args, rec: &Recorder) -> Result<()> {
     Ok(())
 }
 
-/// The native in-crate trainer (`deer train --exp worms|twobody`): no
-/// artifacts, no `xla` feature — data, fused batched DEER solves, analytic
-/// gradients and Adam all run in this process.
+/// The native in-crate trainer (`deer train --exp worms|worms-full|twobody`):
+/// no artifacts, no `xla` feature — data, per-layer fused batched DEER
+/// solves, analytic gradients and Adam all run in this process.
+///
+/// Flags beyond the classic set: `--layers L` stacks L cells (one fused
+/// solve per layer per minibatch), `--lr-schedule constant|cosine:…|step:…`
+/// picks the LR schedule, `--save/--load PATH` checkpoint the flat
+/// parameter vector + Adam state, `--eval-every N` emits val/test
+/// accuracy-vs-wall-clock curves (the Fig. 4 axes; `--exp worms-full`
+/// defaults to the paper's T = 17,984).
 fn native_train(args: &Args, rec: &Recorder) -> Result<()> {
     use deer::data::Split;
+    use deer::train::CurvePoint;
     use deer::train::native::{
-        twobody_task, worms_task, ForwardMode, Model, Readout, TrainConfig, TrainLoop,
+        twobody_task, worms_task, ForwardMode, LrSchedule, Model, Readout, TrainConfig, TrainLoop,
     };
 
     let exp = args.get("exp", "worms").to_string();
     let mode = ForwardMode::parse(args.get("mode", "deer")).map_err(Error::msg)?;
     let steps = args.get_parse("steps", 40usize).map_err(Error::msg)?;
     let n = args.get_parse("n", 16usize).map_err(Error::msg)?;
+    let layers = args.get_parse("layers", 1usize).map_err(Error::msg)?;
+    if layers == 0 {
+        bail!("--layers must be ≥ 1");
+    }
     let batch = args.get_parse("batch", 8usize).map_err(Error::msg)?;
     let lr = args.get_parse("lr", 3e-3f64).map_err(Error::msg)?;
     let seed = args.get_parse("seed", 0u64).map_err(Error::msg)?;
+    let eval_every = args.get_parse("eval-every", 0usize).map_err(Error::msg)?;
+    let save_path = args.opt("save").map(std::path::PathBuf::from);
+    let load_path = args.opt("load").map(std::path::PathBuf::from);
+    // --lr-schedule resolution: explicit flag wins; otherwise a --load run
+    // ADOPTS the checkpointed schedule (so the restored step counter keeps
+    // meaning the same LR factor — load_checkpoint rejects mismatches)
+    let lr_schedule = match args.opt("lr-schedule") {
+        Some(spec) => LrSchedule::parse(spec).map_err(Error::msg)?,
+        None => match &load_path {
+            Some(p) => match deer::train::native::checkpoint::load(p) {
+                Ok(ck) => match ck.lr_schedule.as_deref() {
+                    Some(spec) => {
+                        let s = LrSchedule::parse(spec).map_err(Error::msg)?;
+                        println!("adopting checkpointed lr-schedule {spec}");
+                        s
+                    }
+                    None => LrSchedule::Constant,
+                },
+                // unreadable checkpoint: fall through — the real
+                // load_checkpoint below surfaces the error with context
+                Err(_) => LrSchedule::Constant,
+            },
+            None => LrSchedule::Constant,
+        },
+    };
     let pool = std::thread::available_parallelism()
         .map(|v| v.get())
         .unwrap_or(2)
@@ -357,41 +401,82 @@ fn native_train(args: &Args, rec: &Recorder) -> Result<()> {
         seed,
         step_clamp,
         hybrid_threshold,
+        lr_schedule,
         ..Default::default()
     };
     let mut rng = Rng::new(0xDEE2 ^ seed);
 
+    // stack L cells: layer 0 reads the data channels, layers 1.. read the
+    // layer-below state
+    let gru_stack = |m_in: usize, rng: &mut Rng| -> Vec<deer::cells::Gru<f32>> {
+        (0..layers)
+            .map(|l| deer::cells::Gru::new(n, if l == 0 { m_in } else { n }, rng))
+            .collect()
+    };
+
     let (mut tl, name): (TrainLoop<deer::cells::Gru<f32>>, String) = match exp.as_str() {
-        "worms" => {
-            let t_len = args.get_parse("t", 1024usize).map_err(Error::msg)?;
-            let rows = args.get_parse("rows", 60usize).map_err(Error::msg)?;
+        "worms" | "worms-full" => {
+            // worms-full: the Fig. 4 scale — the paper's full EigenWorms
+            // sequence length (App. B.3: T = 17,984, 70/15/15 split)
+            let full = exp == "worms-full";
+            let t_len = args
+                .get_parse("t", if full { 17_984usize } else { 1024 })
+                .map_err(Error::msg)?;
+            let rows = args.get_parse("rows", if full { 120usize } else { 60 }).map_err(Error::msg)?;
             let data = worms_task(rows, t_len, 1234 + seed);
-            let cell = deer::cells::Gru::new(n, deer::data::worms::CHANNELS, &mut rng);
-            let model = Model::new(cell, deer::data::worms::CLASSES, Readout::LastState, &mut rng);
+            let model = Model::stacked(
+                gru_stack(deer::data::worms::CHANNELS, &mut rng),
+                deer::data::worms::CLASSES,
+                Readout::LastState,
+                &mut rng,
+            )?;
             (
-                TrainLoop::new(model, data, cfg),
-                format!("train_native_worms_{}", mode.label()),
+                TrainLoop::new(model, data, cfg)?,
+                format!("train_native_worms{}_{}_l{layers}", if full { "_full" } else { "" }, mode.label()),
             )
         }
         "twobody" => {
             let t_len = args.get_parse("t", 256usize).map_err(Error::msg)?;
             let rows = args.get_parse("rows", 40usize).map_err(Error::msg)?;
             let data = twobody_task(rows, t_len, 77 + seed);
-            let cell = deer::cells::Gru::new(n, deer::data::twobody::STATE, &mut rng);
-            let model = Model::new(cell, 1, Readout::MeanPool, &mut rng);
+            let model = Model::stacked(
+                gru_stack(deer::data::twobody::STATE, &mut rng),
+                1,
+                Readout::MeanPool,
+                &mut rng,
+            )?;
             (
-                TrainLoop::new(model, data, cfg),
-                format!("train_native_twobody_{}", mode.label()),
+                TrainLoop::new(model, data, cfg)?,
+                format!("train_native_twobody_{}_l{layers}", mode.label()),
             )
         }
-        other => bail!("unknown native experiment {other} (worms|twobody)"),
+        other => bail!("unknown native experiment {other} (worms|worms-full|twobody)"),
     };
 
+    if let Some(path) = &load_path {
+        tl.load_checkpoint(path)?;
+        println!(
+            "checkpoint loaded from {} (resuming at optimizer step {})",
+            path.display(),
+            tl.opt.steps()
+        );
+    }
+
     println!(
-        "native trainer: exp={exp} mode={} steps={steps} batch={batch} lr={lr} threads={}",
+        "native trainer: exp={exp} mode={} layers={layers} steps={steps} batch={batch} lr={lr} schedule={} threads={}",
         mode.label(),
+        tl.cfg.lr_schedule.label(),
         tl.cfg.threads
     );
+    // val/test accuracy over wall-clock — the Fig. 4 reproduction axes.
+    // Evals run the full sequential forward over whole splits, which can
+    // dwarf a fused train step; that (mode-independent) overhead is
+    // excluded from the reported wall so the curves compare TRAINING
+    // wall-clock, the quantity the seq-vs-deer A/B is about.
+    let mut val_curve: Vec<CurvePoint> = Vec::new();
+    let mut test_curve: Vec<CurvePoint> = Vec::new();
+    let started = std::time::Instant::now();
+    let mut eval_secs = 0.0f64;
     for i in 0..steps {
         let s = tl.step();
         if i % 5 == 0 || i + 1 == steps {
@@ -403,6 +488,25 @@ fn native_train(args: &Args, rec: &Recorder) -> Result<()> {
                 None => println!(
                     "step {:4}  loss {:.6}  fwd {:.3}s bwd {:.3}s",
                     s.step, s.loss, s.fwd_secs, s.bwd_secs
+                ),
+            }
+        }
+        if eval_every > 0 && ((i + 1) % eval_every == 0 || i + 1 == steps) {
+            let wall = started.elapsed().as_secs_f64() - eval_secs;
+            let eval_start = std::time::Instant::now();
+            let (vl, va) = tl.eval(Split::Val);
+            let (sl, sa) = tl.eval(Split::Test);
+            eval_secs += eval_start.elapsed().as_secs_f64();
+            val_curve.push(CurvePoint { step: s.step, wall_secs: wall, loss: vl, acc: va });
+            test_curve.push(CurvePoint { step: s.step, wall_secs: wall, loss: sl, acc: sa });
+            match (va, sa) {
+                (Some(va), Some(sa)) => println!(
+                    "  eval @ step {:4} ({wall:.1}s train wall): val acc {va:.3} | test acc {sa:.3}",
+                    s.step
+                ),
+                _ => println!(
+                    "  eval @ step {:4} ({wall:.1}s train wall): val loss {vl:.6} | test loss {sl:.6}",
+                    s.step
                 ),
             }
         }
@@ -419,15 +523,30 @@ fn native_train(args: &Args, rec: &Recorder) -> Result<()> {
         let st = &tl.stats;
         let solved = st.sequences_solved.max(1);
         println!(
-            "dispatch: {} fused solves, {} sequences, {:.1}% warm-started, {} fallbacks, {:.1} Newton sweeps/seq",
+            "dispatch: {} fused solves ({} per layer over {} layers), {} sequences, {:.1}% warm-started, {} fallbacks, {:.1} Newton sweeps/seq",
             st.batched_solves,
+            st.solves_per_layer.first().copied().unwrap_or(0),
+            st.solves_per_layer.len(),
             st.sequences_solved,
             100.0 * st.warm_started as f64 / solved as f64,
             st.fallbacks,
             st.newton_iters as f64 / solved as f64,
         );
     }
+    if let Some(path) = &save_path {
+        tl.save_checkpoint(path)?;
+        println!("checkpoint saved to {}", path.display());
+    }
     rec.curve(&name, &tl.curve)?;
+    if !val_curve.is_empty() {
+        rec.curve(&format!("{name}_val"), &val_curve)?;
+        rec.curve(&format!("{name}_test"), &test_curve)?;
+        println!(
+            "val/test accuracy-vs-wall-clock curves written to {} and {}",
+            rec.dir.join(format!("{name}_val.csv")).display(),
+            rec.dir.join(format!("{name}_test.csv")).display()
+        );
+    }
     println!("curve written to {}", rec.dir.join(format!("{name}.csv")).display());
     Ok(())
 }

@@ -58,6 +58,35 @@ pub fn deer_memory_bytes_structured(
     b * t * e * (jac + 3 * n)
 }
 
+/// Working-set bytes of ONE layer's solve inside an `layers`-deep stacked
+/// training step: the active layer's (width `n`) full DEER footprint plus
+/// what the other `layers − 1` layers keep alive — their `B·T·peer_n`
+/// output trajectories (always retained for the backward chain) and, when
+/// `retain_jacobians` is set (the trainer's `reuse_jacobians` speed mode),
+/// their `B·T·jac_len(peer_n)` forward Jacobian slabs as well. `peer_n`
+/// is the retained layers' state width — pass the stack's MAXIMUM width
+/// for heterogeneous stacks so the guard stays conservative (uniform
+/// stacks: `peer_n = n`). `layers = 1` is exactly
+/// [`deer_memory_bytes_structured`].
+#[allow(clippy::too_many_arguments)]
+pub fn deer_memory_bytes_stacked(
+    n: usize,
+    peer_n: usize,
+    t_len: usize,
+    batch: usize,
+    elem: usize,
+    structure: JacobianStructure,
+    layers: usize,
+    retain_jacobians: bool,
+) -> u64 {
+    let per_solve = deer_memory_bytes_structured(n, t_len, batch, elem, structure);
+    let per_layer_kept =
+        peer_n + if retain_jacobians { structure.jac_len(peer_n) } else { 0 };
+    let retained =
+        (layers.saturating_sub(1) as u64) * (batch * t_len * per_layer_kept * elem) as u64;
+    per_solve + retained
+}
+
 /// Simulated time of the **sequential** RNN forward on `dev`:
 /// `T` dependent steps, each one small kernel.
 pub fn sim_seq_forward<S: Scalar, C: Cell<S>>(
@@ -244,6 +273,37 @@ pub fn sim_deer_fwd_grad_structured<S: Scalar, C: Cell<S>>(
     fwd.invlin += per_iter_invlin;
     fwd.gtmult += dev.kernel_time(&k_vjp);
     fwd
+}
+
+/// Simulated stacked forward+gradient training step: `L` layer solves run
+/// **sequentially in the layer dimension** (layer `l + 1` cannot start
+/// before layer `l`'s trajectory exists) while each solve parallelises
+/// over `T·B` internally, and the backward chain pays one dual scan + VJP
+/// per layer — so the stacked cost is the SUM of the per-layer breakdowns,
+/// with the memory check done against the stacked working set
+/// ([`deer_memory_bytes_stacked`], which budgets the retained inter-layer
+/// trajectories).
+pub fn sim_deer_fwd_grad_stacked<S: Scalar, C: Cell<S>>(
+    dev: &Device,
+    cells: &[C],
+    batch: usize,
+    t_len: usize,
+    iters: usize,
+    structure: JacobianStructure,
+) -> SimBreakdown {
+    let layers = cells.len().max(1);
+    let mut total = SimBreakdown { funceval: 0.0, gtmult: 0.0, invlin: 0.0, oom: false };
+    for cell in cells {
+        let one = sim_deer_fwd_grad_structured(dev, cell, batch, t_len, iters, structure);
+        total.funceval += one.funceval;
+        total.gtmult += one.gtmult;
+        total.invlin += one.invlin;
+    }
+    let n_max = cells.iter().map(|c| c.state_dim()).max().unwrap_or(1);
+    total.oom =
+        deer_memory_bytes_stacked(n_max, n_max, t_len, batch, 4, structure, layers, false)
+            > dev.mem_bytes;
+    total
 }
 
 #[cfg(test)]
@@ -445,5 +505,67 @@ mod tests {
         let mem_diag =
             deer_memory_bytes_structured(64, 100_000, 16, 4, JacobianStructure::Diagonal);
         assert_eq!(mem_dense / mem_diag, (64 + 3) as u64 / 4);
+    }
+
+    /// Stacked accounting: L=1 degenerates to the structured footprint;
+    /// each extra layer adds one retained B·T·n trajectory slab — plus its
+    /// B·T·n² forward Jacobian slab when the trainer keeps Jacobians for
+    /// the backward pass (reuse_jacobians).
+    #[test]
+    fn stacked_memory_accounting() {
+        let (n, t, b) = (16usize, 10_000usize, 8usize);
+        let st = JacobianStructure::Dense;
+        let one = deer_memory_bytes_stacked(n, n, t, b, 4, st, 1, false);
+        assert_eq!(one, deer_memory_bytes_structured(n, t, b, 4, st));
+        assert_eq!(
+            deer_memory_bytes_stacked(n, n, t, b, 4, st, 1, true),
+            one,
+            "no extra layers → nothing retained, jac flag moot"
+        );
+        let slab = (b * t * n * 4) as u64;
+        let jac_slab = (b * t * n * n * 4) as u64;
+        for layers in 2..5usize {
+            assert_eq!(
+                deer_memory_bytes_stacked(n, n, t, b, 4, st, layers, false),
+                one + (layers as u64 - 1) * slab,
+                "layers = {layers}"
+            );
+            assert_eq!(
+                deer_memory_bytes_stacked(n, n, t, b, 4, st, layers, true),
+                one + (layers as u64 - 1) * (slab + jac_slab),
+                "layers = {layers} with retained Jacobians"
+            );
+        }
+        // heterogeneous stacks: retained slabs are sized by the PEER width
+        // (a wide layer below a narrow one must not be under-budgeted)
+        let wide = 64usize;
+        assert_eq!(
+            deer_memory_bytes_stacked(n, wide, t, b, 4, st, 2, false),
+            one + (b * t * wide * 4) as u64,
+            "retained slab must use the peer width"
+        );
+        // degenerate 0-layer input stays sane (no underflow)
+        assert_eq!(deer_memory_bytes_stacked(n, n, t, b, 4, st, 0, false), one);
+    }
+
+    /// Stacked cost model: L identical layers cost L× the single solve
+    /// (layer solves are sequential in the layer dimension) and the OOM
+    /// check reflects the retained trajectories.
+    #[test]
+    fn stacked_cost_is_layer_sum() {
+        let dev = v100();
+        let cells: Vec<Gru<f64>> = (0..3).map(|_| gru(16)).collect();
+        let one = sim_deer_fwd_grad_structured(
+            &dev,
+            &cells[0],
+            16,
+            100_000,
+            7,
+            JacobianStructure::Dense,
+        );
+        let stacked =
+            sim_deer_fwd_grad_stacked(&dev, &cells, 16, 100_000, 7, JacobianStructure::Dense);
+        let ratio = stacked.total() / one.total();
+        assert!((ratio - 3.0).abs() < 1e-9, "3-layer stack must cost 3×: {ratio}");
     }
 }

@@ -1,0 +1,252 @@
+//! JSON checkpoints of the native trainer's state.
+//!
+//! A checkpoint captures the OPTIMIZER state: the flat `[cells… | head]`
+//! parameter vector, both Adam moment vectors and the step counter — all
+//! of which round-trip bitwise through
+//! [`crate::train::native::TrainLoop::load_checkpoint`]. The data-stream
+//! state (shuffle RNG, in-epoch order, epoch counter) is NOT captured: a
+//! resumed run continues from the exact same weights and optimizer
+//! trajectory but draws a fresh shuffle, so it is statistically — not
+//! bitwise — equivalent to the uninterrupted run. Checkpoints also seed
+//! solver fixtures with *trained* weights (the ROADMAP's ill-conditioned
+//! fixture follow-up: trained cells stress the Newton solve in ways
+//! random inits don't) via [`load_cell_params`].
+//!
+//! Format (`deer-checkpoint-v1`): one JSON object via [`crate::util::json`]
+//! — f32 values are serialized through f64, which is exact in both
+//! directions, so round trips are bitwise.
+
+use std::path::Path;
+
+use crate::cells::CellGrad;
+use crate::util::err::{Context, Result};
+use crate::util::json::{self, Json};
+use crate::{anyhow, bail};
+
+use super::opt::Adam;
+
+/// A parsed checkpoint (see the module docs for the format).
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    /// Flat `[cells… | head]` parameter vector.
+    pub params: Vec<f32>,
+    /// Adam first-moment vector (same length as `params`).
+    pub adam_m: Vec<f32>,
+    /// Adam second-moment vector (same length as `params`).
+    pub adam_v: Vec<f32>,
+    /// Optimizer steps taken when the checkpoint was written.
+    pub step: u64,
+    /// Layer count of the model that wrote it (sanity-checked on load).
+    pub layers: usize,
+    /// Canonical [`super::opt::LrSchedule::spec`] string of the schedule
+    /// the run was using — resumed runs validate (or adopt) it so the
+    /// restored step counter keeps meaning the same LR factor. `None` for
+    /// documents written before the field existed.
+    pub lr_schedule: Option<String>,
+}
+
+const FORMAT: &str = "deer-checkpoint-v1";
+
+fn f32s_to_json(v: &[f32]) -> Json {
+    json::arr(v.iter().map(|&x| json::num(x as f64)).collect())
+}
+
+fn json_to_f32s(j: &Json, what: &str) -> Result<Vec<f32>> {
+    let arr = j.as_arr().with_context(|| format!("checkpoint field {what} is not an array"))?;
+    arr.iter()
+        .enumerate()
+        .map(|(i, v)| {
+            v.as_f64()
+                .map(|x| x as f32)
+                .with_context(|| format!("checkpoint {what}[{i}] is not a number"))
+        })
+        .collect()
+}
+
+/// Serialize a checkpoint document.
+pub fn to_json(params: &[f32], adam: &Adam<f32>, layers: usize, lr_schedule: &str) -> Json {
+    let (m, v) = adam.moments();
+    json::obj(vec![
+        ("format", json::s(FORMAT)),
+        ("layers", json::num(layers as f64)),
+        ("num_params", json::num(params.len() as f64)),
+        ("step", json::num(adam.steps() as f64)),
+        ("lr_schedule", json::s(lr_schedule)),
+        ("params", f32s_to_json(params)),
+        ("adam_m", f32s_to_json(m)),
+        ("adam_v", f32s_to_json(v)),
+    ])
+}
+
+/// Parse a checkpoint document (format + length validation).
+pub fn from_json(doc: &Json) -> Result<Checkpoint> {
+    let format = doc
+        .get("format")
+        .and_then(|f| f.as_str())
+        .context("checkpoint missing format field")?;
+    if format != FORMAT {
+        bail!("unsupported checkpoint format {format:?} (expected {FORMAT:?})");
+    }
+    let params = json_to_f32s(doc.get("params").context("checkpoint missing params")?, "params")?;
+    let adam_m = json_to_f32s(doc.get("adam_m").context("checkpoint missing adam_m")?, "adam_m")?;
+    let adam_v = json_to_f32s(doc.get("adam_v").context("checkpoint missing adam_v")?, "adam_v")?;
+    let declared = doc
+        .get("num_params")
+        .and_then(|v| v.as_usize())
+        .context("checkpoint missing num_params")?;
+    if params.len() != declared {
+        bail!("checkpoint declares {declared} params but carries {}", params.len());
+    }
+    if adam_m.len() != params.len() || adam_v.len() != params.len() {
+        bail!(
+            "checkpoint moment lengths ({}, {}) do not match params ({})",
+            adam_m.len(),
+            adam_v.len(),
+            params.len()
+        );
+    }
+    let step = doc.get("step").and_then(|v| v.as_f64()).context("checkpoint missing step")? as u64;
+    let layers = doc
+        .get("layers")
+        .and_then(|v| v.as_usize())
+        .context("checkpoint missing layers")?;
+    let lr_schedule = doc
+        .get("lr_schedule")
+        .and_then(|v| v.as_str())
+        .map(str::to_string);
+    Ok(Checkpoint { params, adam_m, adam_v, step, layers, lr_schedule })
+}
+
+/// Write a checkpoint to `path` (parent directories are created). Refuses
+/// non-finite state: the JSON writer would emit bare `NaN`/`inf` tokens
+/// that [`load`] can never parse back, so a diverged run fails loudly at
+/// save time instead of leaving an unrecoverable artifact.
+pub fn save(
+    path: &Path,
+    params: &[f32],
+    adam: &Adam<f32>,
+    layers: usize,
+    lr_schedule: &str,
+) -> Result<()> {
+    let (m, v) = adam.moments();
+    for (what, vals) in [("params", params), ("adam_m", m), ("adam_v", v)] {
+        if let Some(i) = vals.iter().position(|x| !x.is_finite()) {
+            bail!(
+                "refusing to checkpoint non-finite state: {what}[{i}] = {} (run diverged?)",
+                vals[i]
+            );
+        }
+    }
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+        }
+    }
+    std::fs::write(path, to_json(params, adam, layers, lr_schedule).to_string())
+        .with_context(|| format!("writing checkpoint {}", path.display()))
+}
+
+/// Read and validate a checkpoint from `path`.
+pub fn load(path: &Path) -> Result<Checkpoint> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading checkpoint {}", path.display()))?;
+    let doc = Json::parse(&text)
+        .map_err(|e| anyhow!("parsing checkpoint {}: {e}", path.display()))?;
+    from_json(&doc)
+}
+
+/// Rebuild a flat parameter vector's cell segment into `cell` — checkpoint
+/// weights as solver fixtures: takes the FIRST layer's slice of a
+/// checkpoint written by a model whose layer-0 cell has `cell.num_params()`
+/// parameters.
+pub fn load_cell_params<C: CellGrad<f32>>(ck: &Checkpoint, cell: &mut C) -> Result<()> {
+    let pc = cell.num_params();
+    if ck.params.len() < pc {
+        bail!("checkpoint has {} params, cell needs {pc}", ck.params.len());
+    }
+    cell.load_params(&ck.params[..pc]);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::train::native::opt::AdamConfig;
+
+    fn temp_path(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("deer_ckpt_{}_{name}", std::process::id()))
+    }
+
+    /// Save → load is bitwise for params, moments and the step counter
+    /// (f32 → f64 JSON → f32 is exact).
+    #[test]
+    fn round_trip_is_bitwise() {
+        let params: Vec<f32> = vec![0.1, -2.5e-7, 3.0e8, f32::MIN_POSITIVE, 0.333_333_34];
+        let mut adam: Adam<f32> = Adam::new(5, AdamConfig::default());
+        let mut p = params.clone();
+        adam.step(&mut p, &[0.3, -0.1, 0.9, 1e-4, -7.0]);
+        adam.step(&mut p, &[-0.2, 0.4, 0.1, 2e-4, 3.0]);
+        let path = temp_path("roundtrip.json");
+        save(&path, &p, &adam, 3, "cosine:200:20").unwrap();
+        let ck = load(&path).unwrap();
+        assert_eq!(ck.params, p);
+        let (m, v) = adam.moments();
+        assert_eq!(ck.adam_m, m);
+        assert_eq!(ck.adam_v, v);
+        assert_eq!(ck.step, 2);
+        assert_eq!(ck.layers, 3);
+        assert_eq!(ck.lr_schedule.as_deref(), Some("cosine:200:20"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Diverged (non-finite) state is rejected at save time with a clear
+    /// error — never written as unparseable JSON.
+    #[test]
+    fn rejects_non_finite_state() {
+        let adam: Adam<f32> = Adam::new(3, AdamConfig::default());
+        let path = temp_path("nan.json");
+        let err = save(&path, &[1.0, f32::NAN, 3.0], &adam, 1, "constant").unwrap_err();
+        assert!(err.to_string().contains("non-finite"), "{err}");
+        assert!(!path.exists(), "no file may be written for non-finite state");
+        let err = save(&path, &[1.0, f32::INFINITY, 3.0], &adam, 1, "constant").unwrap_err();
+        assert!(err.to_string().contains("non-finite"), "{err}");
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        assert!(from_json(&Json::parse("{}").unwrap()).is_err());
+        let wrong_format = r#"{"format": "deer-checkpoint-v0", "params": []}"#;
+        assert!(from_json(&Json::parse(wrong_format).unwrap()).is_err());
+        // declared/actual length mismatch
+        let bad_len = r#"{"format": "deer-checkpoint-v1", "layers": 1, "num_params": 3,
+                          "step": 0, "params": [1, 2], "adam_m": [0, 0], "adam_v": [0, 0]}"#;
+        assert!(from_json(&Json::parse(bad_len).unwrap()).is_err());
+        // moment length mismatch
+        let bad_m = r#"{"format": "deer-checkpoint-v1", "layers": 1, "num_params": 2,
+                        "step": 0, "params": [1, 2], "adam_m": [0], "adam_v": [0, 0]}"#;
+        assert!(from_json(&Json::parse(bad_m).unwrap()).is_err());
+        // missing file is a clean error
+        assert!(load(&temp_path("never_written.json")).is_err());
+    }
+
+    /// Checkpoint weights can seed a bare cell (solver-fixture reuse).
+    #[test]
+    fn seeds_cell_fixture() {
+        use crate::cells::Gru;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(5);
+        let cell: Gru<f32> = Gru::new(3, 2, &mut rng);
+        let pc = cell.num_params();
+        let mut params: Vec<f32> = (0..pc + 7).map(|i| i as f32 * 0.01).collect();
+        params[0] = -1.25;
+        let adam: Adam<f32> = Adam::new(params.len(), AdamConfig::default());
+        let path = temp_path("fixture.json");
+        save(&path, &params, &adam, 1, "constant").unwrap();
+        let ck = load(&path).unwrap();
+        let mut fresh: Gru<f32> = Gru::new(3, 2, &mut Rng::new(99));
+        load_cell_params(&ck, &mut fresh).unwrap();
+        assert_eq!(fresh.params(), &params[..pc]);
+        std::fs::remove_file(&path).ok();
+    }
+}

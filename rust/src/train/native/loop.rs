@@ -31,6 +31,20 @@
 //! optimizer state and seeds are shared; only the trajectory/gradient
 //! engine changes. The loop emits [`CurvePoint`]s (loss / accuracy /
 //! wall-clock) after every step — the Fig. 4-style training curves.
+//!
+//! # Stacked layers
+//!
+//! With an `L`-layer [`Model`] the forward pass runs **one fused batched
+//! solve per layer per minibatch** (layer `l`'s `[B, T, n]` trajectory is
+//! layer `l + 1`'s input sequence — the ParaRNN layerwise formulation),
+//! each layer warm-started from its OWN trajectory cache (per-layer cache,
+//! keyed by dataset row). The backward pass walks the stack in reverse:
+//! layer `l`'s input cotangents (`dxs` of
+//! [`crate::deer::grad::deer_rnn_backward_batch_io`], or the BPTT
+//! input-VJP in Seq mode) become layer `l − 1`'s output cotangents `gs`,
+//! and each layer's `dθ` lands in its own slice of the flat gradient
+//! ([`Model::layer_param_range`]). [`TrainStats::solves_per_layer`] pins
+//! the one-solve-per-layer dispatch invariant.
 
 use std::time::{Duration, Instant};
 
@@ -39,14 +53,16 @@ use crate::coordinator::exec::BatchExecutor;
 use crate::coordinator::policy::EvalPath;
 use crate::coordinator::warmstart::WarmStartCache;
 use crate::data::{Dataset, Split};
-use crate::deer::grad::deer_rnn_backward_batch;
+use crate::deer::grad::deer_rnn_backward_batch_io;
 use crate::deer::newton::{effective_structure, JacobianMode};
-use crate::deer::seq::{seq_rnn, seq_rnn_backward, seq_rnn_batch};
+use crate::deer::seq::{seq_rnn, seq_rnn_backward_io, seq_rnn_batch};
 use crate::train::CurvePoint;
+use crate::util::err::Result;
 use crate::util::rng::Rng;
+use crate::bail;
 
 use super::model::Model;
-use super::opt::{Adam, AdamConfig};
+use super::opt::{Adam, AdamConfig, LrSchedule};
 
 /// Which engine evaluates (and differentiates) the recurrence.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -141,6 +157,9 @@ pub struct TrainConfig {
     /// recomputing them along the converged trajectory (memory + a
     /// tolerance-level exactness gain) — the §3.1.1 trade-off.
     pub reuse_jacobians: bool,
+    /// Learning-rate schedule ([`LrSchedule::Constant`] by default —
+    /// bitwise identical to the unscheduled optimizer).
+    pub lr_schedule: LrSchedule,
 }
 
 impl Default for TrainConfig {
@@ -157,17 +176,18 @@ impl Default for TrainConfig {
             step_clamp: None,
             hybrid_threshold: 1e-2,
             reuse_jacobians: true,
+            lr_schedule: LrSchedule::Constant,
         }
     }
 }
 
 /// Aggregate counters over a training run.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct TrainStats {
     pub steps: usize,
     pub epochs: usize,
-    /// Fused solves issued (Deer modes: exactly one per minibatch unless
-    /// the memory planner split a group).
+    /// Fused solves issued, summed over layers (Deer modes: exactly one
+    /// per layer per minibatch unless the memory planner split a group).
     pub batched_solves: u64,
     pub sequences_solved: u64,
     /// Sequences that fell back to the sequential evaluator.
@@ -178,6 +198,9 @@ pub struct TrainStats {
     pub newton_iters: u64,
     pub fwd_secs: f64,
     pub bwd_secs: f64,
+    /// Fused solves per layer (index = layer): the per-layer view of the
+    /// ONE-solve-per-layer-per-minibatch dispatch invariant.
+    pub solves_per_layer: Vec<u64>,
 }
 
 /// Per-step outcome.
@@ -210,9 +233,11 @@ pub struct TrainLoop<C: CellGrad<f32>> {
     pub opt: Adam<f32>,
     pub curve: Vec<CurvePoint>,
     pub stats: TrainStats,
-    /// Warm-start trajectory cache, persistent across steps/epochs (swapped
-    /// into the per-step [`BatchExecutor`]).
-    cache: WarmStartCache,
+    /// Per-layer warm-start trajectory caches (index = layer), persistent
+    /// across steps/epochs and swapped into each layer's per-step
+    /// [`BatchExecutor`]. Separate caches keep layer trajectories from
+    /// colliding on the shared row-id key space.
+    caches: Vec<WarmStartCache>,
     params: Vec<f32>,
     order: Vec<usize>,
     rng: Rng,
@@ -220,53 +245,160 @@ pub struct TrainLoop<C: CellGrad<f32>> {
 }
 
 impl<C: CellGrad<f32>> TrainLoop<C> {
-    pub fn new(model: Model<f32, C>, data: TrainData, cfg: TrainConfig) -> TrainLoop<C> {
-        assert!(cfg.batch > 0, "batch must be ≥ 1");
-        assert!(
-            data.ds.split_len(Split::Train) >= cfg.batch,
-            "train split ({}) smaller than batch ({})",
-            data.ds.split_len(Split::Train),
-            cfg.batch
-        );
-        if let Some(tg) = &data.targets {
-            assert_eq!(tg.values.len(), data.ds.rows * tg.k, "targets layout ([rows, k])");
-            assert_eq!(tg.k, model.k, "target dim vs head outputs");
+    /// Validate the (model, data, config) triple and build the loop. All
+    /// misconfigurations — empty/undersized train split, label range,
+    /// target layout, channel mismatch — surface as clean [`Result`]
+    /// errors instead of aborting the process.
+    pub fn new(model: Model<f32, C>, data: TrainData, cfg: TrainConfig) -> Result<TrainLoop<C>> {
+        if cfg.batch == 0 {
+            bail!("batch must be ≥ 1");
+        }
+        let train_len = data.ds.split_len(Split::Train);
+        if train_len < cfg.batch {
+            bail!(
+                "train split ({train_len} rows) smaller than batch ({}): lower --batch or add rows",
+                cfg.batch
+            );
+        }
+        if model.input_dim() != data.ds.channels {
+            bail!(
+                "model layer 0 expects {} input channels, dataset has {}",
+                model.input_dim(),
+                data.ds.channels
+            );
+        }
+        match &data.targets {
+            None => model.validate_labels(&data.ds.labels)?,
+            Some(tg) => {
+                if tg.values.len() != data.ds.rows * tg.k {
+                    bail!(
+                        "targets layout: {} values for {} rows × k = {}",
+                        tg.values.len(),
+                        data.ds.rows,
+                        tg.k
+                    );
+                }
+                if tg.k != model.k {
+                    bail!("target dim {} vs {}-output head", tg.k, model.k);
+                }
+            }
         }
         let p = model.num_params();
         let mut params = vec![0.0f32; p];
         model.write_params(&mut params);
-        let n = model.state_dim();
-        // Cache sized to hold every row's trajectory with headroom, so warm
-        // starts survive whole epochs.
-        let cache_budget = data.ds.rows * (data.ds.t * n * 4 + 128) * 2;
+        // One cache per layer, each sized to hold every row's trajectory at
+        // that layer's width with headroom, so warm starts survive whole
+        // epochs.
+        let caches = (0..model.layers())
+            .map(|l| {
+                let n_l = model.cell(l).state_dim();
+                WarmStartCache::new(data.ds.rows * (data.ds.t * n_l * 4 + 128) * 2)
+            })
+            .collect();
         let opt = Adam::new(
             p,
-            AdamConfig { lr: cfg.lr, grad_clip: cfg.grad_clip, ..Default::default() },
+            AdamConfig {
+                lr: cfg.lr,
+                grad_clip: cfg.grad_clip,
+                schedule: cfg.lr_schedule,
+                ..Default::default()
+            },
         );
         let rng = Rng::new(cfg.seed ^ 0x7261_696e);
-        TrainLoop {
+        let stats = TrainStats {
+            solves_per_layer: vec![0; model.layers()],
+            ..TrainStats::default()
+        };
+        Ok(TrainLoop {
             model,
             data,
             cfg,
             opt,
             curve: Vec::new(),
-            stats: TrainStats::default(),
-            cache: WarmStartCache::new(cache_budget),
+            stats,
+            caches,
             params,
             order: Vec::new(),
             rng,
             started: Instant::now(),
-        }
+        })
     }
 
-    /// Flat `[cell | head]` parameters (the optimizer's view).
+    /// Flat `[cells… | head]` parameters (the optimizer's view).
     pub fn params(&self) -> &[f32] {
         &self.params
     }
 
-    /// Warm-start cache hit rate so far.
+    /// Warm-start cache hit rate so far, aggregated over layers.
     pub fn cache_hit_rate(&self) -> f64 {
-        self.cache.hit_rate()
+        let mut hits = 0u64;
+        let mut total = 0u64;
+        for c in &self.caches {
+            hits += c.hits;
+            total += c.hits + c.misses;
+        }
+        if total == 0 {
+            0.0
+        } else {
+            hits as f64 / total as f64
+        }
+    }
+
+    /// Save the training state (flat parameters, Adam moments, step
+    /// counter, LR-schedule spec) as a JSON checkpoint.
+    pub fn save_checkpoint(&self, path: &std::path::Path) -> Result<()> {
+        super::checkpoint::save(
+            path,
+            &self.params,
+            &self.opt,
+            self.model.layers(),
+            &self.cfg.lr_schedule.spec(),
+        )
+    }
+
+    /// Restore parameters + optimizer state from a checkpoint written by
+    /// [`TrainLoop::save_checkpoint`]. The checkpoint must match this
+    /// loop's parameter count and layer count. Params, Adam moments and
+    /// the step counter resume bitwise; the data-stream state (shuffle
+    /// RNG / in-epoch order / epoch counter) is not checkpointed, so the
+    /// resumed run draws a fresh shuffle — see the [`super::checkpoint`]
+    /// module docs.
+    pub fn load_checkpoint(&mut self, path: &std::path::Path) -> Result<()> {
+        let ck = super::checkpoint::load(path)?;
+        if ck.params.len() != self.params.len() {
+            bail!(
+                "checkpoint has {} parameters, model has {}",
+                ck.params.len(),
+                self.params.len()
+            );
+        }
+        if ck.layers != self.model.layers() {
+            bail!(
+                "checkpoint was saved from a {}-layer model, this model has {} layers",
+                ck.layers,
+                self.model.layers()
+            );
+        }
+        // the restored step counter only keeps meaning the same LR factor
+        // if the schedule matches; a silent fallback to a different one
+        // would jump the learning rate discontinuously on resume
+        if let Some(spec) = &ck.lr_schedule {
+            let ours = self.cfg.lr_schedule.spec();
+            if *spec != ours {
+                bail!(
+                    "checkpoint was saved with lr-schedule {spec}, this run uses {ours}: pass \
+                     --lr-schedule {spec} to resume it (or re-save under the new schedule)"
+                );
+            }
+        }
+        self.params.copy_from_slice(&ck.params);
+        self.model.load_params(&self.params);
+        self.opt.restore(&ck.adam_m, &ck.adam_v, ck.step);
+        // keep step numbering aligned with the optimizer (and hence the LR
+        // schedule): resumed curves continue at ck.step + 1 instead of
+        // renumbering from 1 while Adam applies factor(ck.step + i)
+        self.stats.steps = ck.step as usize;
+        Ok(())
     }
 
     /// Draw the next shuffled minibatch of absolute train-row ids,
@@ -282,60 +414,76 @@ impl<C: CellGrad<f32>> TrainLoop<C> {
         self.order.split_off(self.order.len() - b)
     }
 
-    /// Forward + backward on explicit rows; does NOT touch the optimizer.
-    /// Public so tests can compare the Seq and Deer gradients directly.
-    pub fn grad_minibatch(&mut self, rows: &[usize]) -> MinibatchGrad {
-        let b = rows.len();
+    /// One layer's forward over the minibatch. `input` is the layer's
+    /// `[B, T, m_l]` input sequence — the gathered dataset rows for layer
+    /// 0, the layer-below trajectory otherwise. Deer modes dispatch the
+    /// whole minibatch as ONE fused solve through a per-layer
+    /// [`BatchExecutor`] (warm-started from this layer's cache); returns
+    /// the `[B, T, n_l]` trajectory plus the retained forward Jacobians.
+    fn forward_layer(
+        &mut self,
+        l: usize,
+        rows: &[usize],
+        input: &[f32],
+        b: usize,
+    ) -> (Vec<f32>, Option<(Vec<f32>, JacobianStructure)>) {
         let t_len = self.data.ds.t;
-        let n = self.model.state_dim();
-        let (xs, labels) = self.data.ds.gather(rows);
+        let cell = self.model.cell(l);
+        let n = cell.state_dim();
+        let m = cell.input_dim();
         let h0s = vec![0.0f32; b * n];
-
-        // ---- forward ----
-        let fwd_start = Instant::now();
-        let (ys, fwd_jac): (Vec<f32>, Option<(Vec<f32>, JacobianStructure)>) = match self.cfg.mode
-        {
-            ForwardMode::Seq => (seq_rnn_batch(&self.model.cell, &h0s, &xs, b), None),
+        match self.cfg.mode {
+            ForwardMode::Seq => (seq_rnn_batch(cell, &h0s, input, b), None),
             ForwardMode::Deer | ForwardMode::QuasiDeer | ForwardMode::Hybrid => {
                 let jacobian_mode = self.cfg.mode.jacobian_mode();
-                let structure = effective_structure(&self.model.cell, jacobian_mode);
+                let structure = effective_structure(cell, jacobian_mode);
                 let jl = structure.jac_len(n);
                 // Hybrid never reuses forward Jacobians: the endgame switch
                 // leaves them in the diagonal layout while the backward pass
                 // runs the exact dense dual scan.
                 let reuse = self.cfg.reuse_jacobians && self.cfg.mode != ForwardMode::Hybrid;
                 let mut ex = BatchExecutor::new(
-                    &self.model.cell,
+                    cell,
                     t_len,
                     b,
                     Duration::from_secs(3600),
-                    0, // replaced by the persistent cache below
+                    0, // replaced by the persistent per-layer cache below
                     1u64 << 40,
                     self.cfg.threads,
                 );
+                ex.layer = l;
+                ex.plan_layers = self.model.layers();
+                // heterogeneous stacks: peers are budgeted at the stack's
+                // widest layer so the plan never understates retained slabs
+                ex.plan_peer_width = self
+                    .model
+                    .cells()
+                    .iter()
+                    .map(|c| c.state_dim())
+                    .max()
+                    .unwrap_or(n);
                 ex.policy.tol_override = self.cfg.tol_override;
                 ex.policy.max_iter = self.cfg.max_iter;
                 ex.policy.jacobian_mode = jacobian_mode;
                 ex.policy.step_clamp = self.cfg.step_clamp;
                 ex.policy.hybrid_threshold = self.cfg.hybrid_threshold;
                 ex.keep_jacobians = reuse;
-                std::mem::swap(&mut ex.cache, &mut self.cache);
+                std::mem::swap(&mut ex.cache, &mut self.caches[l]);
 
                 let mut replies = Vec::with_capacity(b);
                 for (s, &row) in rows.iter().enumerate() {
                     let r = ex.submit(
                         row as u64,
                         h0s[s * n..(s + 1) * n].to_vec(),
-                        xs[s * t_len * self.data.ds.channels
-                            ..(s + 1) * t_len * self.data.ds.channels]
-                            .to_vec(),
+                        input[s * t_len * m..(s + 1) * t_len * m].to_vec(),
                     );
                     replies.extend(r);
                 }
                 replies.extend(ex.flush());
-                std::mem::swap(&mut ex.cache, &mut self.cache);
+                std::mem::swap(&mut ex.cache, &mut self.caches[l]);
                 self.stats.batched_solves += ex.stats.batched_solves;
                 self.stats.sequences_solved += ex.stats.sequences_solved;
+                self.stats.solves_per_layer[l] += ex.stats.batched_solves;
                 assert_eq!(replies.len(), b, "one reply per minibatch sequence");
 
                 // scatter replies back into submission order; rows may
@@ -373,20 +521,52 @@ impl<C: CellGrad<f32>> TrainLoop<C> {
                 }
                 (ys, if all_jac { Some((jac, structure)) } else { None })
             }
-        };
+        }
+    }
+
+    /// Forward + backward on explicit rows; does NOT touch the optimizer.
+    /// Public so tests can compare the Seq and Deer gradients directly.
+    ///
+    /// Stacked models run one fused solve per layer going up
+    /// ([`TrainLoop::forward_layer`]) and chain the backward pass going
+    /// down: layer `l`'s input cotangents become layer `l − 1`'s `gs`.
+    pub fn grad_minibatch(&mut self, rows: &[usize]) -> MinibatchGrad {
+        let b = rows.len();
+        let t_len = self.data.ds.t;
+        let layers = self.model.layers();
+        let n_out = self.model.state_dim();
+        let (xs, labels) = self.data.ds.gather(rows);
+
+        // ---- forward: one fused solve per layer, bottom-up ----
+        let fwd_start = Instant::now();
+        let mut layer_ys: Vec<Vec<f32>> = Vec::with_capacity(layers);
+        let mut layer_jac: Vec<Option<(Vec<f32>, JacobianStructure)>> =
+            Vec::with_capacity(layers);
+        for l in 0..layers {
+            let (ys_l, jac_l) = {
+                let input: &[f32] = if l == 0 { &xs } else { &layer_ys[l - 1] };
+                self.forward_layer(l, rows, input, b)
+            };
+            layer_ys.push(ys_l);
+            layer_jac.push(jac_l);
+        }
         let fwd_secs = fwd_start.elapsed().as_secs_f64();
 
-        // ---- loss + head gradients + trajectory cotangents ----
-        let mut gs = vec![0.0f32; b * t_len * n];
+        // ---- loss + head gradients + last-layer trajectory cotangents ----
+        let mut gs = vec![0.0f32; b * t_len * n_out];
         let mut grad = vec![0.0f32; self.model.num_params()];
-        let pc = self.model.cell.num_params();
+        let pc = self.model.num_cell_params();
+        let ys_last = layer_ys.last().expect("≥1 layer");
         let (loss, acc) = {
             let (_, head_tail) = grad.split_at_mut(pc);
             match &self.data.targets {
                 None => {
-                    let (l, a) =
-                        self.model
-                            .ce_loss_grad(&ys, &labels, t_len, Some((&mut gs[..], head_tail)));
+                    let (l, a) = self.model.ce_loss_grad(
+                        ys_last,
+                        &labels,
+                        t_len,
+                        Some((&mut gs[..], head_tail)),
+                    );
                     (l, Some(a))
                 }
                 Some(tg) => {
@@ -395,7 +575,7 @@ impl<C: CellGrad<f32>> TrainLoop<C> {
                         targets.extend_from_slice(&tg.values[row * tg.k..(row + 1) * tg.k]);
                     }
                     let l = self.model.mse_loss_grad(
-                        &ys,
+                        ys_last,
                         &targets,
                         t_len,
                         Some((&mut gs[..], head_tail)),
@@ -405,51 +585,77 @@ impl<C: CellGrad<f32>> TrainLoop<C> {
             }
         };
 
-        // ---- backward: chain gs into the cell parameters ----
+        // ---- backward: chain gs down the stack, top layer first ----
         let bwd_start = Instant::now();
-        match self.cfg.mode {
-            ForwardMode::Seq => {
-                // BPTT, sequential per sequence (the baseline's backward)
-                let m = self.data.ds.channels;
-                let mut dtheta = vec![0.0f32; pc];
-                for s in 0..b {
-                    seq_rnn_backward(
-                        &self.model.cell,
-                        &h0s[s * n..(s + 1) * n],
-                        &xs[s * t_len * m..(s + 1) * t_len * m],
-                        &ys[s * t_len * n..(s + 1) * t_len * n],
-                        &gs[s * t_len * n..(s + 1) * t_len * n],
-                        &mut dtheta,
-                    );
+        // `gs_cur` is the cotangent of layer l's OUTPUT trajectory; after
+        // processing layer l it becomes the layer's input cotangent — which
+        // is exactly layer l − 1's output cotangent.
+        let mut gs_cur = gs;
+        for l in (0..layers).rev() {
+            let cell = self.model.cell(l);
+            let n = cell.state_dim();
+            let m = cell.input_dim();
+            let input: &[f32] = if l == 0 { &xs } else { &layer_ys[l - 1] };
+            let ys = &layer_ys[l];
+            let h0s = vec![0.0f32; b * n];
+            let want_dx = l > 0;
+            let range = self.model.layer_param_range(l);
+            match self.cfg.mode {
+                ForwardMode::Seq => {
+                    // BPTT, sequential per sequence (the baseline's backward)
+                    let mut dtheta = vec![0.0f32; cell.num_params()];
+                    let mut dxs: Option<Vec<f32>> =
+                        if want_dx { Some(vec![0.0f32; b * t_len * m]) } else { None };
+                    for s in 0..b {
+                        let dx_s = dxs
+                            .as_mut()
+                            .map(|d| &mut d[s * t_len * m..(s + 1) * t_len * m]);
+                        seq_rnn_backward_io(
+                            cell,
+                            &h0s[s * n..(s + 1) * n],
+                            &input[s * t_len * m..(s + 1) * t_len * m],
+                            &ys[s * t_len * n..(s + 1) * t_len * n],
+                            &gs_cur[s * t_len * n..(s + 1) * t_len * n],
+                            &mut dtheta,
+                            dx_s,
+                        );
+                    }
+                    grad[range].copy_from_slice(&dtheta);
+                    if let Some(d) = dxs {
+                        gs_cur = d;
+                    }
                 }
-                grad[..pc].copy_from_slice(&dtheta);
-            }
-            ForwardMode::Deer | ForwardMode::QuasiDeer | ForwardMode::Hybrid => {
-                // Hybrid differentiates with the exact dense dual scan
-                // (its QuasiDeer-style forward savings are forward-only).
-                let structure = match &fwd_jac {
-                    Some((_, st)) => *st,
-                    None => effective_structure(
-                        &self.model.cell,
-                        match self.cfg.mode {
-                            ForwardMode::QuasiDeer => JacobianMode::DiagonalApprox,
-                            _ => JacobianMode::Full,
-                        },
-                    ),
-                };
-                let jac_ref: Option<&[f32]> = fwd_jac.as_ref().map(|(j, _)| &j[..]);
-                let g = deer_rnn_backward_batch(
-                    &self.model.cell,
-                    &h0s,
-                    &xs,
-                    &ys,
-                    &gs,
-                    jac_ref,
-                    structure,
-                    self.cfg.threads,
-                    b,
-                );
-                grad[..pc].copy_from_slice(&g.dtheta);
+                ForwardMode::Deer | ForwardMode::QuasiDeer | ForwardMode::Hybrid => {
+                    // Hybrid differentiates with the exact dense dual scan
+                    // (its QuasiDeer-style forward savings are forward-only).
+                    let structure = match &layer_jac[l] {
+                        Some((_, st)) => *st,
+                        None => effective_structure(
+                            cell,
+                            match self.cfg.mode {
+                                ForwardMode::QuasiDeer => JacobianMode::DiagonalApprox,
+                                _ => JacobianMode::Full,
+                            },
+                        ),
+                    };
+                    let jac_ref: Option<&[f32]> = layer_jac[l].as_ref().map(|(j, _)| &j[..]);
+                    let g = deer_rnn_backward_batch_io(
+                        cell,
+                        &h0s,
+                        input,
+                        ys,
+                        &gs_cur,
+                        jac_ref,
+                        structure,
+                        self.cfg.threads,
+                        b,
+                        want_dx,
+                    );
+                    grad[range].copy_from_slice(&g.dtheta);
+                    if let Some(d) = g.dxs {
+                        gs_cur = d;
+                    }
+                }
             }
         }
         let bwd_secs = bwd_start.elapsed().as_secs_f64();
@@ -493,17 +699,21 @@ impl<C: CellGrad<f32>> TrainLoop<C> {
 
     /// Evaluate a split with the exact sequential forward (no gradients, no
     /// cache pollution): returns `(mean loss, accuracy)` — accuracy `None`
-    /// for regression tasks.
+    /// for regression tasks. Stacked models run the whole stack
+    /// sequentially, layer by layer.
     pub fn eval(&self, split: Split) -> (f64, Option<f64>) {
         let t_len = self.data.ds.t;
-        let n = self.model.state_dim();
-        let h0 = vec![0.0f32; n];
         let mut loss_sum = 0.0f64;
         let mut acc_sum = 0.0f64;
         let mut rows = 0usize;
         for chunk in self.data.ds.batches(split, 1) {
             let row = chunk[0];
-            let ys = seq_rnn(&self.model.cell, &h0, self.data.ds.row(row));
+            let mut ys = self.data.ds.row(row).to_vec();
+            for l in 0..self.model.layers() {
+                let cell = self.model.cell(l);
+                let h0 = vec![0.0f32; cell.state_dim()];
+                ys = seq_rnn(cell, &h0, &ys);
+            }
             match &self.data.targets {
                 None => {
                     let (l, a) =
@@ -578,6 +788,27 @@ mod tests {
             data,
             TrainConfig { mode, batch: 4, seed, ..Default::default() },
         )
+        .unwrap()
+    }
+
+    fn stacked_loop(mode: ForwardMode, layers: usize, seed: u64) -> TrainLoop<Gru<f32>> {
+        let mut rng = Rng::new(seed);
+        let cells: Vec<Gru<f32>> = (0..layers)
+            .map(|l| {
+                let m = if l == 0 { crate::data::worms::CHANNELS } else { 4 };
+                Gru::new(4, m, &mut rng)
+            })
+            .collect();
+        let model =
+            Model::stacked(cells, crate::data::worms::CLASSES, Readout::LastState, &mut rng)
+                .unwrap();
+        let data = worms_task(16, 24, 7);
+        TrainLoop::new(
+            model,
+            data,
+            TrainConfig { mode, batch: 4, seed, ..Default::default() },
+        )
+        .unwrap()
     }
 
     #[test]
@@ -626,6 +857,137 @@ mod tests {
         assert_eq!(flat, after);
     }
 
+    /// Stacked dispatch invariant: L layers → exactly L fused solves per
+    /// minibatch, one per layer, and every layer's cache warm-starts after
+    /// the first epoch.
+    #[test]
+    fn stacked_deer_issues_one_fused_solve_per_layer() {
+        let layers = 2;
+        let mut tl = stacked_loop(ForwardMode::Deer, layers, 11);
+        let steps = 6;
+        tl.run(steps).unwrap();
+        assert_eq!(
+            tl.stats.batched_solves,
+            (steps * layers) as u64,
+            "one fused solve per LAYER per minibatch"
+        );
+        assert_eq!(tl.stats.solves_per_layer.len(), layers);
+        for (l, &s) in tl.stats.solves_per_layer.iter().enumerate() {
+            assert_eq!(s, steps as u64, "layer {l} solve count");
+        }
+        assert_eq!(tl.stats.sequences_solved, (steps * layers * 4) as u64);
+        assert_eq!(tl.stats.fallbacks, 0);
+        assert!(tl.stats.warm_started > 0, "layer caches must warm-start on revisits");
+        assert!(tl.curve.iter().all(|p| p.loss.is_finite()));
+    }
+
+    /// Misconfigurations are clean errors, not aborts.
+    #[test]
+    fn new_rejects_bad_configs_without_panicking() {
+        let mut rng = Rng::new(12);
+        let cell: Gru<f32> = Gru::new(4, crate::data::worms::CHANNELS, &mut rng);
+        let model = Model::new(cell, crate::data::worms::CLASSES, Readout::LastState, &mut rng);
+        // batch larger than the train split (the old loop.rs:226 panic)
+        let err = TrainLoop::new(
+            model.clone(),
+            worms_task(8, 16, 3), // train split = 6 rows
+            TrainConfig { batch: 7, ..Default::default() },
+        )
+        .err()
+        .expect("undersized split must be an error");
+        assert!(err.to_string().contains("train split"), "{err}");
+        // zero batch
+        assert!(TrainLoop::new(
+            model.clone(),
+            worms_task(8, 16, 3),
+            TrainConfig { batch: 0, ..Default::default() },
+        )
+        .is_err());
+        // out-of-range labels (the old Model assert)
+        let mut data = worms_task(8, 16, 3);
+        data.ds.labels[2] = 99;
+        let err = TrainLoop::new(model, data, TrainConfig { batch: 2, ..Default::default() })
+            .err()
+            .expect("bad label must be an error");
+        assert!(err.to_string().contains("label"), "{err}");
+    }
+
+    /// An LR schedule changes the trajectory; the constant default does not.
+    #[test]
+    fn lr_schedule_wiring() {
+        use crate::train::native::opt::LrSchedule;
+        let mut base = tiny_loop(ForwardMode::Seq, 13);
+        let mut cfg_sched = TrainConfig { mode: ForwardMode::Seq, batch: 4, seed: 13, ..Default::default() };
+        cfg_sched.lr_schedule = LrSchedule::Step { every: 1, gamma: 0.0, warmup: 0 };
+        let mut rng = Rng::new(13);
+        let cell: Gru<f32> = Gru::new(4, crate::data::worms::CHANNELS, &mut rng);
+        let model = Model::new(cell, crate::data::worms::CLASSES, Readout::LastState, &mut rng);
+        let mut sched = TrainLoop::new(model, worms_task(16, 24, 7), cfg_sched).unwrap();
+        let p0 = sched.params().to_vec();
+        base.step();
+        sched.step(); // factor 0 at step 1 → params frozen
+        assert_eq!(sched.params(), &p0[..], "zero-factor schedule must freeze params");
+        assert_ne!(base.params(), &p0[..], "constant-schedule baseline must move");
+    }
+
+    /// Checkpoint round trip: params + optimizer state survive save/load
+    /// bitwise and training resumes identically.
+    #[test]
+    fn checkpoint_round_trip_resumes_identically() {
+        let dir = std::env::temp_dir().join(format!("deer_ckpt_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("loop_roundtrip.json");
+        let mut a = tiny_loop(ForwardMode::Seq, 14);
+        a.run(3).unwrap();
+        a.save_checkpoint(&path).unwrap();
+        let after_save = a.params().to_vec();
+
+        let mut b = tiny_loop(ForwardMode::Seq, 14);
+        b.load_checkpoint(&path).unwrap();
+        assert_eq!(b.params(), &after_save[..], "params must round-trip bitwise");
+        assert_eq!(b.opt.steps(), a.opt.steps(), "step counter must round-trip");
+        assert_eq!(
+            b.stats.steps, a.stats.steps,
+            "curve numbering must resume where the checkpoint left off"
+        );
+        // both loops continue from the same state with the same data order
+        // (b's rng/order were never advanced — rebuild a's schedule state)
+        let rows: Vec<usize> = (0..4).collect();
+        let ga = a.grad_minibatch(&rows);
+        let gb = b.grad_minibatch(&rows);
+        assert_eq!(ga.grad, gb.grad, "post-restore gradients must match bitwise");
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// A checkpoint saved under one LR schedule refuses to load into a loop
+    /// running another — a silent schedule swap would jump the learning
+    /// rate discontinuously at the restored step counter.
+    #[test]
+    fn checkpoint_rejects_schedule_mismatch() {
+        use crate::train::native::opt::LrSchedule;
+        let dir = std::env::temp_dir().join(format!("deer_ckpt_sched_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cosine.json");
+        let mut rng = Rng::new(15);
+        let cell: Gru<f32> = Gru::new(4, crate::data::worms::CHANNELS, &mut rng);
+        let model = Model::new(cell, crate::data::worms::CLASSES, Readout::LastState, &mut rng);
+        let cfg = TrainConfig {
+            mode: ForwardMode::Seq,
+            batch: 4,
+            seed: 15,
+            lr_schedule: LrSchedule::Cosine { total: 50, warmup: 5 },
+            ..Default::default()
+        };
+        let mut a = TrainLoop::new(model, worms_task(16, 24, 7), cfg).unwrap();
+        a.step();
+        a.save_checkpoint(&path).unwrap();
+
+        let mut constant = tiny_loop(ForwardMode::Seq, 15);
+        let err = constant.load_checkpoint(&path).unwrap_err();
+        assert!(err.to_string().contains("lr-schedule"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
     #[test]
     fn regression_task_trains() {
         let mut rng = Rng::new(5);
@@ -636,7 +998,8 @@ mod tests {
             model,
             data,
             TrainConfig { mode: ForwardMode::Deer, batch: 4, ..Default::default() },
-        );
+        )
+        .unwrap();
         let s = tl.run(3).unwrap();
         assert!(s.loss.is_finite());
         assert!(s.acc.is_none(), "regression reports no accuracy");

@@ -1,22 +1,25 @@
-//! Native DEER training: data → fused batched solve → gradients → Adam,
-//! entirely in-crate (no AOT artifacts, no Python at any point).
+//! Native DEER training: data → per-layer fused batched solves → gradients
+//! → Adam, entirely in-crate (no AOT artifacts, no Python at any point).
 //!
 //! This subsystem closes the loop the paper's §4.3 headline claim is about:
 //! *training* a non-linear sequential model with the forward (and backward)
 //! pass parallelised over the sequence length. It reproduces the EigenWorms
-//! GRU classifier (and a two-body energy-regression variant) with the
-//! sequential-vs-DEER engine choice reduced to one enum:
+//! GRU classifier (and a two-body energy-regression variant) — including
+//! multi-layer stacked-cell models — with the sequential-vs-DEER engine
+//! choice reduced to one enum:
 //!
 //! ```text
-//! data/loader ─ minibatch ─▶ forward (Seq | Deer | QuasiDeer) ─▶ ys [B,T,n]
-//!                                │ (Deer modes: ONE fused solve per
-//!                                │  minibatch via coordinator::BatchExecutor,
-//!                                │  warm-started across epochs)
-//! model::Model ─ loss ─▶ gs [B,T,n] + head grads
+//! data/loader ─ minibatch ─▶ forward (Seq | Deer | QuasiDeer | Hybrid)
+//!   layer 0: xs [B,T,m]   ─▶ ys₀ [B,T,n]   (ONE fused solve)
+//!   layer 1: ys₀          ─▶ ys₁ [B,T,n]   (ONE fused solve)
+//!   …          (each layer via coordinator::BatchExecutor, warm-started
+//!               across epochs from its OWN per-layer trajectory cache)
+//! model::Model ─ loss on ys_{L−1} ─▶ gs [B,T,n] + head grads
 //!                                │
-//! backward (BPTT | deer_rnn_backward_batch) ─▶ dθ_cell
+//! backward, top layer first (BPTT | deer_rnn_backward_batch_io):
+//!   layer l: gs_l ─▶ dθ_l  AND  dxs_l = gs_{l−1}   (input-VJP chaining)
 //!                                │
-//! opt::Adam over flat [cell θ | head θ] ─▶ Cell::load_params round-trip
+//! opt::Adam over flat [layer θ… | head θ] ─▶ Model::load_params round-trip
 //! ```
 //!
 //! # Flat parameter layout
@@ -24,37 +27,45 @@
 //! Every trainable scalar lives in ONE flat `Vec`:
 //!
 //! ```text
-//! [ cell parameters (cell.num_params(), the cell's own params() order)
-//! | W_out            (k·n, row-major)
+//! [ cells[0] θ (its own params() order)
+//! | …
+//! | cells[L−1] θ
+//! | W_out            (k·n_{L−1}, row-major)
 //! | b_out            (k) ]
 //! ```
 //!
 //! [`Model::write_params`] / [`Model::load_params`] are the only functions
-//! that know this layout; the optimizer sees an opaque flat vector and the
-//! cell round-trips through [`crate::cells::CellGrad::load_params`]. The
+//! that know this layout ([`Model::layer_param_range`] exposes each
+//! layer's slice); the optimizer sees an opaque flat vector and each cell
+//! round-trips through [`crate::cells::CellGrad::load_params`]. The
 //! gradient vector produced by [`TrainLoop::grad_minibatch`] uses the same
 //! layout, so `params[i]` and `grad[i]` always refer to the same scalar.
+//! [`checkpoint`] persists the vector (plus Adam moments and the step
+//! counter) as JSON — `deer train --save/--load`.
 //!
 //! # Seq-vs-Deer parity contract
 //!
 //! With equal seeds and configs, the `Seq` and `Deer` arms see identical
 //! data order, loss algebra and optimizer state; they differ only in the
-//! trajectory engine. `Deer` converges the forward pass to the paper-§3.5
-//! tolerance and its backward pass is the exact eq.-7 dual scan, so per
-//! step the two gradients agree to forward-tolerance level and the training
-//! curves track each other (the `--exp train` bench and
-//! `tests/train_native.rs` hold final accuracies within 2%). `QuasiDeer`
-//! additionally approximates the backward λ-propagation (off-diagonal terms
-//! dropped on dense cells) and is *not* covered by the exactness half of
-//! the contract — it trades gradient bias for O(n) scans.
+//! trajectory engine. `Deer` converges each layer's forward pass to the
+//! paper-§3.5 tolerance and its backward pass is the exact eq.-7 dual scan
+//! chained through exact input-VJPs, so per step the two gradients agree
+//! to forward-tolerance level at ANY depth and the training curves track
+//! each other (the `--exp train` bench and `tests/train_native.rs` hold
+//! final accuracies within 2%). `QuasiDeer` additionally approximates the
+//! backward λ-propagation (off-diagonal terms dropped on dense cells) and
+//! is *not* covered by the exactness half of the contract — it trades
+//! gradient bias for O(n) scans.
 
+pub mod checkpoint;
 pub mod model;
 pub mod opt;
 #[path = "loop.rs"]
 pub mod train_loop;
 
+pub use checkpoint::Checkpoint;
 pub use model::{Model, Readout};
-pub use opt::{Adam, AdamConfig};
+pub use opt::{Adam, AdamConfig, LrSchedule};
 pub use train_loop::{
     twobody_task, worms_task, ForwardMode, MinibatchGrad, StepStats, Targets, TrainConfig,
     TrainData, TrainLoop, TrainStats,

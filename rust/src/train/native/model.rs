@@ -1,9 +1,19 @@
-//! Model head: a recurrent cell composed with a linear readout.
+//! Model head: a stack of recurrent cells composed with a linear readout.
 //!
 //! The §4.3 EigenWorms classifier is `GRU → last hidden state → linear →
 //! softmax cross-entropy`; the regression variant (two-body energy) is
 //! `cell → mean-pooled hidden states → linear → MSE`. Both readouts share
 //! one [`Model`] type parameterised by [`Readout`].
+//!
+//! # Stacked layers
+//!
+//! A [`Model`] holds `L ≥ 1` cells: layer `l`'s `[B, T, n_l]` output
+//! trajectory is layer `l + 1`'s input sequence (so
+//! `cells[l + 1].input_dim() == cells[l].state_dim()`), and the readout
+//! reads the LAST layer's trajectory. The training loop runs one fused
+//! batched DEER solve per layer (the ParaRNN / Martin-&-Cundy layerwise
+//! formulation) and chains the backward pass through each layer's
+//! input-VJP ([`crate::deer::grad::deer_rnn_backward_batch_io`]).
 //!
 //! # Gradient contract
 //!
@@ -12,7 +22,8 @@
 //! loss plus
 //!
 //! * `dhead` — `∂L/∂(W, b)` of the readout (the tail of the flat layout),
-//! * `gs` — the per-step trajectory cotangents `∂L/∂y_i` (`[B, T, n]`),
+//! * `gs` — the per-step trajectory cotangents `∂L/∂y_i` (`[B, T, n]`) of
+//!   the last layer,
 //!
 //! and `gs` is precisely the input `deer_rnn_backward_batch` (eq. 7) or
 //! BPTT expects, so `∂L/∂θ_cell` chains through either engine unchanged —
@@ -21,12 +32,15 @@
 //!
 //! # Flat parameter layout
 //!
-//! `[cell params (cell.num_params()) | W_out (k·n, row-major) | b_out (k)]`
-//! — see the [`super`] module docs.
+//! `[cells[0] θ | … | cells[L−1] θ | W_out (k·n, row-major) | b_out (k)]`
+//! — see the [`super`] module docs. [`Model::layer_param_range`] exposes
+//! each layer's slice of the flat vector (the optimizer's view).
 
 use crate::cells::CellGrad;
+use crate::util::err::Result;
 use crate::util::rng::Rng;
 use crate::util::scalar::Scalar;
+use crate::{anyhow, bail};
 
 /// How the `[T, n]` trajectory collapses to the readout feature vector.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -37,10 +51,13 @@ pub enum Readout {
     MeanPool,
 }
 
-/// A recurrent cell plus a `k`-output linear readout head.
+/// A stack of recurrent cells plus a `k`-output linear readout head.
 #[derive(Debug, Clone)]
 pub struct Model<S, C> {
-    pub cell: C,
+    /// Layer stack, input to output; layer `l + 1` consumes layer `l`'s
+    /// trajectory. Kept private so the inter-layer dimension contract
+    /// established at construction cannot be broken.
+    cells: Vec<C>,
     pub readout: Readout,
     /// Output dimension (classes for CE, regression targets for MSE).
     pub k: usize,
@@ -49,21 +66,67 @@ pub struct Model<S, C> {
 }
 
 impl<S: Scalar, C: CellGrad<S>> Model<S, C> {
-    /// Compose a cell with a fresh uniform(-1/√n)-initialised head.
+    /// Compose a single cell with a fresh uniform(-1/√n)-initialised head.
     pub fn new(cell: C, k: usize, readout: Readout, rng: &mut Rng) -> Model<S, C> {
-        let n = cell.state_dim();
+        Model::stacked(vec![cell], k, readout, rng).expect("single-layer stack is always valid")
+    }
+
+    /// Compose an `L`-layer stack (input → output order) with a fresh
+    /// head. Fails if the stack is empty or adjacent layer dimensions
+    /// don't chain (`cells[l + 1].input_dim() != cells[l].state_dim()`).
+    pub fn stacked(cells: Vec<C>, k: usize, readout: Readout, rng: &mut Rng) -> Result<Model<S, C>> {
+        if cells.is_empty() {
+            bail!("model needs at least one layer");
+        }
+        for l in 1..cells.len() {
+            if cells[l].input_dim() != cells[l - 1].state_dim() {
+                bail!(
+                    "layer {l} input dim {} does not match layer {} state dim {}",
+                    cells[l].input_dim(),
+                    l - 1,
+                    cells[l - 1].state_dim()
+                );
+            }
+        }
+        let n = cells.last().unwrap().state_dim();
         let mut head = vec![S::zero(); k * n + k];
         crate::cells::init_uniform(&mut head, n, rng);
-        Model { cell, readout, k, head }
+        Ok(Model { cells, readout, k, head })
     }
 
+    /// Number of stacked layers.
+    pub fn layers(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// Layer `l`'s cell.
+    pub fn cell(&self, l: usize) -> &C {
+        &self.cells[l]
+    }
+
+    /// The full stack, input to output.
+    pub fn cells(&self) -> &[C] {
+        &self.cells
+    }
+
+    /// State dimension of the LAST layer (the readout's feature width).
     pub fn state_dim(&self) -> usize {
-        self.cell.state_dim()
+        self.cells.last().unwrap().state_dim()
     }
 
-    /// Total flat parameter count: cell + head.
+    /// Input dimension of the FIRST layer (the data's channel count).
+    pub fn input_dim(&self) -> usize {
+        self.cells[0].input_dim()
+    }
+
+    /// Total cell parameter count summed over layers.
+    pub fn num_cell_params(&self) -> usize {
+        self.cells.iter().map(|c| c.num_params()).sum()
+    }
+
+    /// Total flat parameter count: all layers + head.
     pub fn num_params(&self) -> usize {
-        self.cell.num_params() + self.head.len()
+        self.num_cell_params() + self.head.len()
     }
 
     /// Length of the head segment (`k·n + k`).
@@ -71,32 +134,62 @@ impl<S: Scalar, C: CellGrad<S>> Model<S, C> {
         self.head.len()
     }
 
-    fn w_out(&self) -> &[S] {
-        &self.head[..self.k * self.cell.state_dim()]
-    }
-    fn b_out(&self) -> &[S] {
-        &self.head[self.k * self.cell.state_dim()..]
+    /// Layer `l`'s slice of the flat `[cells… | head]` parameter vector.
+    pub fn layer_param_range(&self, l: usize) -> std::ops::Range<usize> {
+        let start: usize = self.cells[..l].iter().map(|c| c.num_params()).sum();
+        start..start + self.cells[l].num_params()
     }
 
-    /// Write the flat `[cell | head]` parameter vector into `out`.
+    /// Validate classification labels against the head's class count —
+    /// surfaced as a clean error instead of a mid-training panic.
+    pub fn validate_labels(&self, labels: &[i32]) -> Result<()> {
+        for (row, &l) in labels.iter().enumerate() {
+            if l < 0 || l as usize >= self.k {
+                return Err(anyhow!(
+                    "label {l} at row {row} out of range for {}-class head",
+                    self.k
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    fn w_out(&self) -> &[S] {
+        &self.head[..self.k * self.state_dim()]
+    }
+    fn b_out(&self) -> &[S] {
+        &self.head[self.k * self.state_dim()..]
+    }
+
+    /// Write the flat `[cells… | head]` parameter vector into `out`.
     pub fn write_params(&self, out: &mut [S]) {
-        let pc = self.cell.num_params();
+        let pc = self.num_cell_params();
         assert_eq!(out.len(), pc + self.head.len(), "flat parameter length");
-        out[..pc].copy_from_slice(self.cell.params());
+        let mut off = 0;
+        for c in &self.cells {
+            let p = c.num_params();
+            out[off..off + p].copy_from_slice(c.params());
+            off += p;
+        }
         out[pc..].copy_from_slice(&self.head);
     }
 
-    /// Load the flat `[cell | head]` parameter vector (optimizer → model).
+    /// Load the flat `[cells… | head]` parameter vector (optimizer → model).
     pub fn load_params(&mut self, src: &[S]) {
-        let pc = self.cell.num_params();
+        let pc = self.num_cell_params();
         assert_eq!(src.len(), pc + self.head.len(), "flat parameter length");
-        self.cell.load_params(&src[..pc]);
+        let mut off = 0;
+        for c in self.cells.iter_mut() {
+            let p = c.num_params();
+            c.load_params(&src[off..off + p]);
+            off += p;
+        }
         self.head.copy_from_slice(&src[pc..]);
     }
 
     /// Readout feature of one sequence's trajectory (`T·n` → `n`).
     fn feature(&self, ys_row: &[S], t_len: usize, out: &mut [S]) {
-        let n = self.cell.state_dim();
+        let n = self.state_dim();
         debug_assert_eq!(ys_row.len(), t_len * n);
         match self.readout {
             Readout::LastState => out.copy_from_slice(&ys_row[(t_len - 1) * n..]),
@@ -119,7 +212,7 @@ impl<S: Scalar, C: CellGrad<S>> Model<S, C> {
 
     /// `logits = W·feat + b` for one sequence.
     fn apply_head(&self, feat: &[S], logits: &mut [S]) {
-        let n = self.cell.state_dim();
+        let n = self.state_dim();
         let w = self.w_out();
         let b = self.b_out();
         for c in 0..self.k {
@@ -135,7 +228,7 @@ impl<S: Scalar, C: CellGrad<S>> Model<S, C> {
     /// Scatter one sequence's feature cotangent `dfeat` back onto its
     /// trajectory cotangents `gs_row` (`T·n`), inverting [`Model::feature`].
     fn scatter_dfeat(&self, dfeat: &[S], t_len: usize, gs_row: &mut [S]) {
-        let n = self.cell.state_dim();
+        let n = self.state_dim();
         match self.readout {
             Readout::LastState => {
                 for j in 0..n {
@@ -156,7 +249,7 @@ impl<S: Scalar, C: CellGrad<S>> Model<S, C> {
     /// Accumulate head gradients and the feature cotangent for one sequence
     /// given the logit cotangent `dlogits`.
     fn head_vjp(&self, feat: &[S], dlogits: &[S], dfeat: &mut [S], dhead: &mut [S]) {
-        let n = self.cell.state_dim();
+        let n = self.state_dim();
         let w = self.w_out();
         for v in dfeat.iter_mut() {
             *v = S::zero();
@@ -192,7 +285,7 @@ impl<S: Scalar, C: CellGrad<S>> Model<S, C> {
         t_len: usize,
         mut grads: Option<(&mut [S], &mut [S])>,
     ) -> (f64, f64) {
-        let n = self.cell.state_dim();
+        let n = self.state_dim();
         let batch = labels.len();
         assert!(batch > 0, "empty batch");
         assert_eq!(ys.len(), batch * t_len * n, "ys layout ([B, T, n])");
@@ -255,7 +348,7 @@ impl<S: Scalar, C: CellGrad<S>> Model<S, C> {
         t_len: usize,
         mut grads: Option<(&mut [S], &mut [S])>,
     ) -> f64 {
-        let n = self.cell.state_dim();
+        let n = self.state_dim();
         assert_eq!(targets.len() % self.k, 0, "targets layout ([B, k])");
         let batch = targets.len() / self.k;
         assert!(batch > 0, "empty batch");
@@ -300,7 +393,7 @@ mod tests {
     fn params_round_trip() {
         let mut m = tiny_model(1);
         let p = m.num_params();
-        assert_eq!(p, m.cell.num_params() + 4 * 3 + 4);
+        assert_eq!(p, m.cell(0).num_params() + 4 * 3 + 4);
         let mut flat = vec![0.0f64; p];
         m.write_params(&mut flat);
         let mut bumped = flat.clone();
@@ -312,7 +405,64 @@ mod tests {
         m.write_params(&mut back);
         assert_eq!(back, bumped);
         // and the cell segment really landed in the cell
-        assert_eq!(m.cell.params()[0], flat[0] + 0.125);
+        assert_eq!(m.cell(0).params()[0], flat[0] + 0.125);
+    }
+
+    /// Stacked construction: dimension chaining is validated, the flat
+    /// layout concatenates per-layer slices in order, and the round trip
+    /// lands each slice in its own layer.
+    #[test]
+    fn stacked_params_round_trip_and_ranges() {
+        let mut rng = Rng::new(7);
+        let l0: Gru<f64> = Gru::new(4, 2, &mut rng);
+        let l1: Gru<f64> = Gru::new(3, 4, &mut rng);
+        let m: Model<f64, Gru<f64>> =
+            Model::stacked(vec![l0.clone(), l1.clone()], 5, Readout::LastState, &mut rng).unwrap();
+        assert_eq!(m.layers(), 2);
+        assert_eq!(m.state_dim(), 3, "head reads the LAST layer");
+        assert_eq!(m.input_dim(), 2, "data enters the FIRST layer");
+        let (p0, p1) = (l0.num_params(), l1.num_params());
+        assert_eq!(m.num_cell_params(), p0 + p1);
+        assert_eq!(m.num_params(), p0 + p1 + 5 * 3 + 5);
+        assert_eq!(m.layer_param_range(0), 0..p0);
+        assert_eq!(m.layer_param_range(1), p0..p0 + p1);
+
+        let mut flat = vec![0.0f64; m.num_params()];
+        m.write_params(&mut flat);
+        assert_eq!(&flat[..p0], l0.params(), "layer 0 slice");
+        assert_eq!(&flat[p0..p0 + p1], l1.params(), "layer 1 slice");
+        let mut m2 = m.clone();
+        let mut bumped = flat.clone();
+        for v in bumped.iter_mut() {
+            *v -= 0.25;
+        }
+        m2.load_params(&bumped);
+        assert_eq!(m2.cell(1).params()[0], l1.params()[0] - 0.25);
+        let mut back = vec![0.0f64; m2.num_params()];
+        m2.write_params(&mut back);
+        assert_eq!(back, bumped);
+    }
+
+    /// Mismatched inter-layer dimensions are a clean error, not a panic.
+    #[test]
+    fn stacked_rejects_dimension_mismatch() {
+        let mut rng = Rng::new(8);
+        let l0: Gru<f64> = Gru::new(4, 2, &mut rng);
+        let l1: Gru<f64> = Gru::new(3, 5, &mut rng); // wants 5 inputs, gets 4
+        let err = Model::<f64, Gru<f64>>::stacked(vec![l0, l1], 2, Readout::LastState, &mut rng)
+            .unwrap_err();
+        assert!(err.to_string().contains("layer 1"), "{err}");
+        let empty: Vec<Gru<f64>> = Vec::new();
+        assert!(Model::<f64, Gru<f64>>::stacked(empty, 2, Readout::LastState, &mut rng).is_err());
+    }
+
+    /// Label validation is a clean error surface.
+    #[test]
+    fn label_validation() {
+        let m = tiny_model(6);
+        assert!(m.validate_labels(&[0, 1, 3]).is_ok());
+        assert!(m.validate_labels(&[0, 4]).is_err(), "k = 4 → label 4 out of range");
+        assert!(m.validate_labels(&[-1]).is_err());
     }
 
     #[test]

@@ -1,12 +1,129 @@
-//! Adam (Kingma & Ba, 2015) over a flat parameter vector.
+//! Adam (Kingma & Ba, 2015) over a flat parameter vector, with optional
+//! learning-rate schedules.
 //!
 //! The paper's training experiments (§4.2/§4.3) all use Adam; this is the
 //! in-crate counterpart of the optimizer baked into the AOT `*_train_step`
-//! artifacts, operating on the flattened `[cell θ | head θ]` layout of
+//! artifacts, operating on the flattened `[layer θ… | head θ]` layout of
 //! [`super::model::Model`] (see the module docs of [`super`] for the exact
 //! layout contract).
+//!
+//! [`LrSchedule`] scales the base learning rate per optimizer step
+//! (constant | cosine | step-decay, each with an optional linear warmup).
+//! The default [`LrSchedule::Constant`] multiplies by exactly `1.0`, so
+//! runs without a schedule are **bitwise identical** to the pre-schedule
+//! optimizer.
 
 use crate::util::scalar::Scalar;
+
+/// Per-step learning-rate scaling.
+///
+/// `factor(t)` maps the (1-based) optimizer step to a multiplier of the
+/// base `lr`. All variants support a linear warmup ramp over the first
+/// `warmup` steps (`warmup = 0` disables it).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LrSchedule {
+    /// `lr_t = lr` for every step (the default; factor is exactly 1.0).
+    Constant,
+    /// Linear warmup to `lr`, then cosine decay to 0 at step `total`
+    /// (steps beyond `total` stay at 0-factor).
+    Cosine { total: usize, warmup: usize },
+    /// Linear warmup to `lr`, then multiply by `gamma` every `every`
+    /// post-warmup steps (classic step decay).
+    Step { every: usize, gamma: f64, warmup: usize },
+}
+
+impl LrSchedule {
+    /// Multiplier of the base learning rate at (1-based) step `t`.
+    pub fn factor(&self, t: u64) -> f64 {
+        match *self {
+            LrSchedule::Constant => 1.0,
+            LrSchedule::Cosine { total, warmup } => {
+                if warmup > 0 && t <= warmup as u64 {
+                    return t as f64 / warmup as f64;
+                }
+                let total = (total.max(warmup + 1)) as f64;
+                let w = warmup as f64;
+                let prog = ((t as f64 - w) / (total - w)).clamp(0.0, 1.0);
+                0.5 * (1.0 + (std::f64::consts::PI * prog).cos())
+            }
+            LrSchedule::Step { every, gamma, warmup } => {
+                if warmup > 0 && t <= warmup as u64 {
+                    return t as f64 / warmup as f64;
+                }
+                let drops = (t.saturating_sub(warmup as u64)) / every.max(1) as u64;
+                gamma.powi(drops.min(i32::MAX as u64) as i32)
+            }
+        }
+    }
+
+    /// Parse a CLI spec:
+    /// `constant` | `cosine:<total>[:<warmup>]` | `step:<every>:<gamma>[:<warmup>]`.
+    pub fn parse(spec: &str) -> Result<LrSchedule, String> {
+        let parts: Vec<&str> = spec.split(':').collect();
+        let usize_at = |i: usize, what: &str| -> Result<usize, String> {
+            parts
+                .get(i)
+                .ok_or_else(|| format!("lr-schedule {spec:?}: missing {what}"))?
+                .parse::<usize>()
+                .map_err(|e| format!("lr-schedule {spec:?}: bad {what}: {e}"))
+        };
+        match parts[0] {
+            "constant" | "const" => Ok(LrSchedule::Constant),
+            "cosine" => {
+                let total = usize_at(1, "total steps")?;
+                let warmup = if parts.len() > 2 { usize_at(2, "warmup")? } else { 0 };
+                if total == 0 {
+                    return Err(format!(
+                        "lr-schedule {spec:?}: total must be ≥ 1 (a 0-step horizon freezes training)"
+                    ));
+                }
+                if warmup >= total {
+                    return Err(format!(
+                        "lr-schedule {spec:?}: warmup ({warmup}) must be below total ({total})"
+                    ));
+                }
+                Ok(LrSchedule::Cosine { total, warmup })
+            }
+            "step" => {
+                let every = usize_at(1, "decay interval")?;
+                if every == 0 {
+                    return Err(format!("lr-schedule {spec:?}: decay interval must be ≥ 1"));
+                }
+                Ok(LrSchedule::Step {
+                    every,
+                    gamma: parts
+                        .get(2)
+                        .ok_or_else(|| format!("lr-schedule {spec:?}: missing gamma"))?
+                        .parse::<f64>()
+                        .map_err(|e| format!("lr-schedule {spec:?}: bad gamma: {e}"))?,
+                    warmup: if parts.len() > 3 { usize_at(3, "warmup")? } else { 0 },
+                })
+            }
+            other => Err(format!(
+                "unknown lr-schedule {other:?} (constant | cosine:<total>[:<warmup>] | step:<every>:<gamma>[:<warmup>])"
+            )),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            LrSchedule::Constant => "constant",
+            LrSchedule::Cosine { .. } => "cosine",
+            LrSchedule::Step { .. } => "step",
+        }
+    }
+
+    /// Canonical spec string — round-trips through [`LrSchedule::parse`]
+    /// exactly (f64 `Display` is shortest-round-trip), so checkpoints can
+    /// persist the schedule and resumed runs can validate/adopt it.
+    pub fn spec(&self) -> String {
+        match *self {
+            LrSchedule::Constant => "constant".to_string(),
+            LrSchedule::Cosine { total, warmup } => format!("cosine:{total}:{warmup}"),
+            LrSchedule::Step { every, gamma, warmup } => format!("step:{every}:{gamma}:{warmup}"),
+        }
+    }
+}
 
 /// Adam hyper-parameters (defaults are the paper's / framework defaults).
 #[derive(Debug, Clone)]
@@ -19,6 +136,9 @@ pub struct AdamConfig {
     /// (0 ⇒ disabled). Long-sequence BPTT/DEER gradients can spike early in
     /// training; the clip keeps Seq and DEER arms comparable.
     pub grad_clip: f64,
+    /// Learning-rate schedule; [`LrSchedule::Constant`] (the default) is
+    /// bitwise identical to the unscheduled optimizer.
+    pub schedule: LrSchedule,
 }
 
 impl Default for AdamConfig {
@@ -29,6 +149,7 @@ impl Default for AdamConfig {
             beta2: 0.999,
             eps: 1e-8,
             grad_clip: 0.0,
+            schedule: LrSchedule::Constant,
         }
     }
 }
@@ -55,6 +176,21 @@ impl<S: Scalar> Adam<S> {
     /// Optimizer steps taken so far.
     pub fn steps(&self) -> u64 {
         self.t
+    }
+
+    /// First/second moment vectors (checkpointing).
+    pub fn moments(&self) -> (&[S], &[S]) {
+        (&self.m, &self.v)
+    }
+
+    /// Restore optimizer state from a checkpoint (moments + step counter).
+    /// Lengths must match the parameter count this optimizer was built for.
+    pub fn restore(&mut self, m: &[S], v: &[S], t: u64) {
+        assert_eq!(m.len(), self.m.len(), "adam m length");
+        assert_eq!(v.len(), self.v.len(), "adam v length");
+        self.m.copy_from_slice(m);
+        self.v.copy_from_slice(v);
+        self.t = t;
     }
 
     /// One Adam update: `params -= lr · m̂ / (√v̂ + eps)` with bias-corrected
@@ -84,7 +220,9 @@ impl<S: Scalar> Adam<S> {
         let scale = S::from_f64c(scale);
         let c1 = S::from_f64c(1.0 - self.cfg.beta1.powi(self.t as i32));
         let c2 = S::from_f64c(1.0 - self.cfg.beta2.powi(self.t as i32));
-        let lr = S::from_f64c(self.cfg.lr);
+        // schedule factor at this (1-based) step; Constant yields exactly
+        // `lr * 1.0 == lr`, so unscheduled runs are bitwise unchanged
+        let lr = S::from_f64c(self.cfg.lr * self.cfg.schedule.factor(self.t));
         let eps = S::from_f64c(self.cfg.eps);
         for i in 0..params.len() {
             let g = grad[i] * scale;
@@ -125,6 +263,143 @@ mod tests {
         adam.step(&mut p, &[3.0, -0.7]);
         assert!((p[0] + 0.1).abs() < 1e-6, "{}", p[0]);
         assert!((p[1] - 0.1).abs() < 1e-6, "{}", p[1]);
+    }
+
+    /// Constant-schedule runs are bitwise identical to the base optimizer
+    /// (factor is exactly 1.0 at every step).
+    #[test]
+    fn constant_schedule_is_bitwise_identity() {
+        let mut a = vec![0.1f64, -0.2, 0.3];
+        let mut b = a.clone();
+        let mut adam_a: Adam<f64> = Adam::new(3, AdamConfig { lr: 0.07, ..Default::default() });
+        let mut adam_b: Adam<f64> = Adam::new(
+            3,
+            AdamConfig { lr: 0.07, schedule: LrSchedule::Constant, ..Default::default() },
+        );
+        for s in 0..25 {
+            let grad: Vec<f64> = a.iter().map(|p| 2.0 * p + s as f64 * 0.01).collect();
+            adam_a.step(&mut a, &grad);
+            adam_b.step(&mut b, &grad);
+        }
+        assert_eq!(a, b, "constant schedule changed the update bitwise");
+    }
+
+    /// Cosine: warmup ramps linearly, the post-warmup factor decays
+    /// monotonically from 1 to 0 at `total`.
+    #[test]
+    fn cosine_schedule_shape() {
+        let s = LrSchedule::Cosine { total: 100, warmup: 10 };
+        assert!((s.factor(5) - 0.5).abs() < 1e-12, "warmup midpoint");
+        assert!((s.factor(10) - 1.0).abs() < 1e-12, "end of warmup");
+        let mut prev = 1.0 + 1e-12;
+        for t in 11..=100 {
+            let f = s.factor(t);
+            assert!(f <= prev, "cosine not monotone at t={t}");
+            prev = f;
+        }
+        assert!(s.factor(100) < 1e-12, "factor at total must reach 0");
+        assert!(s.factor(500) < 1e-12, "factor beyond total stays 0");
+        // no warmup: starts near 1
+        let s0 = LrSchedule::Cosine { total: 50, warmup: 0 };
+        assert!(s0.factor(1) > 0.99);
+    }
+
+    /// Step decay: ×gamma every `every` post-warmup steps.
+    #[test]
+    fn step_schedule_drops() {
+        let s = LrSchedule::Step { every: 10, gamma: 0.5, warmup: 0 };
+        assert!((s.factor(9) - 1.0).abs() < 1e-12);
+        assert!((s.factor(10) - 0.5).abs() < 1e-12);
+        assert!((s.factor(19) - 0.5).abs() < 1e-12);
+        assert!((s.factor(20) - 0.25).abs() < 1e-12);
+        let w = LrSchedule::Step { every: 10, gamma: 0.1, warmup: 4 };
+        assert!((w.factor(2) - 0.5).abs() < 1e-12, "warmup ramp");
+        assert!((w.factor(14) - 0.1).abs() < 1e-12, "first drop at warmup+every");
+    }
+
+    #[test]
+    fn schedule_parse() {
+        assert_eq!(LrSchedule::parse("constant").unwrap(), LrSchedule::Constant);
+        assert_eq!(
+            LrSchedule::parse("cosine:200").unwrap(),
+            LrSchedule::Cosine { total: 200, warmup: 0 }
+        );
+        assert_eq!(
+            LrSchedule::parse("cosine:200:20").unwrap(),
+            LrSchedule::Cosine { total: 200, warmup: 20 }
+        );
+        assert_eq!(
+            LrSchedule::parse("step:50:0.5:10").unwrap(),
+            LrSchedule::Step { every: 50, gamma: 0.5, warmup: 10 }
+        );
+        assert!(LrSchedule::parse("cosine").is_err());
+        assert!(LrSchedule::parse("step:10").is_err());
+        assert!(LrSchedule::parse("poly:2").is_err());
+        // degenerate horizons are rejected, not silently rewritten
+        assert!(LrSchedule::parse("cosine:0").is_err(), "0-step horizon freezes training");
+        assert!(LrSchedule::parse("cosine:10:10").is_err(), "warmup must end before total");
+        assert!(LrSchedule::parse("step:0:0.5").is_err(), "0-step decay interval");
+    }
+
+    /// spec() round-trips through parse() exactly — the checkpoint
+    /// persistence contract.
+    #[test]
+    fn spec_round_trips() {
+        for s in [
+            LrSchedule::Constant,
+            LrSchedule::Cosine { total: 200, warmup: 20 },
+            LrSchedule::Step { every: 50, gamma: 0.5, warmup: 10 },
+            LrSchedule::Step { every: 7, gamma: 0.333_333_333_333, warmup: 0 },
+        ] {
+            assert_eq!(LrSchedule::parse(&s.spec()).unwrap(), s, "{}", s.spec());
+        }
+    }
+
+    /// Scheduled Adam applies the factor to the step size: with lr γ-decayed
+    /// to ~0 the parameters stop moving.
+    #[test]
+    fn scheduled_adam_freezes_after_decay() {
+        let mut p = vec![0.0f64; 2];
+        let cfg = AdamConfig {
+            lr: 0.1,
+            schedule: LrSchedule::Step { every: 5, gamma: 0.0, warmup: 0 },
+            ..Default::default()
+        };
+        let mut adam: Adam<f64> = Adam::new(2, cfg);
+        for _ in 0..4 {
+            adam.step(&mut p, &[1.0, -1.0]);
+        }
+        let frozen = p.clone();
+        for _ in 0..10 {
+            adam.step(&mut p, &[1.0, -1.0]);
+        }
+        assert_eq!(p, frozen, "zero-factor steps must not move parameters");
+    }
+
+    /// Moments + step counter round-trip through restore (checkpointing).
+    #[test]
+    fn restore_resumes_identically() {
+        let mut p1 = vec![0.0f64; 3];
+        let mut adam1: Adam<f64> = Adam::new(3, AdamConfig { lr: 0.05, ..Default::default() });
+        for s in 0..7 {
+            let g: Vec<f64> = p1.iter().map(|v| v - s as f64).collect();
+            adam1.step(&mut p1, &g);
+        }
+        // snapshot, continue the original
+        let (m, v) = adam1.moments();
+        let (m, v) = (m.to_vec(), v.to_vec());
+        let t = adam1.steps();
+        let snap_p = p1.clone();
+        let mut adam2: Adam<f64> = Adam::new(3, AdamConfig { lr: 0.05, ..Default::default() });
+        adam2.restore(&m, &v, t);
+        let mut p2 = snap_p.clone();
+        for s in 7..12 {
+            let g1: Vec<f64> = p1.iter().map(|v| v - s as f64).collect();
+            adam1.step(&mut p1, &g1);
+            let g2: Vec<f64> = p2.iter().map(|v| v - s as f64).collect();
+            adam2.step(&mut p2, &g2);
+        }
+        assert_eq!(p1, p2, "restored optimizer must continue bitwise identically");
     }
 
     /// Global-norm clipping rescales large gradients before the update.

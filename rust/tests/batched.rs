@@ -105,6 +105,69 @@ fn batched_matches_looped_lem() {
     check_batched_equivalence("lem-block", &cell, 300, JacobianMode::BlockApprox);
 }
 
+/// The fused `jacobian_pre_block_batch` overrides (batch axis folded into
+/// the gate matmuls) must be BITWISE equal to the looped per-element
+/// `jacobian_block_pre` path — the contract that lets the DEER driver
+/// dispatch between them freely without changing numerics.
+fn check_fused_pre_block_batch<C: Cell<f64>>(name: &str, cell: &C, batch: usize) {
+    let dim = cell.state_dim();
+    let m = cell.input_dim();
+    let pl = cell.x_precompute_len();
+    let k = cell.block_k().expect("block cell");
+    let bl = dim * k;
+    let mut rng = Rng::new(0xB10C ^ dim as u64);
+    let mut hs = vec![0.0f64; batch * dim];
+    let mut xs = vec![0.0f64; batch * m];
+    rng.fill_normal(&mut hs, 0.8);
+    rng.fill_normal(&mut xs, 1.0);
+    // per-element input projections (precompute_x over a 1-step sequence)
+    let mut pres = vec![0.0f64; batch * pl];
+    for s in 0..batch {
+        cell.precompute_x(&xs[s * m..(s + 1) * m], &mut pres[s * pl..(s + 1) * pl]);
+    }
+
+    // looped reference: per-element jacobian_block_pre (the old default)
+    let mut ws = vec![0.0f64; cell.ws_len()];
+    let mut f_ref = vec![0.0f64; batch * dim];
+    let mut blk_ref = vec![0.0f64; batch * bl];
+    for s in 0..batch {
+        cell.jacobian_block_pre(
+            &hs[s * dim..(s + 1) * dim],
+            &pres[s * pl..(s + 1) * pl],
+            &mut f_ref[s * dim..(s + 1) * dim],
+            &mut blk_ref[s * bl..(s + 1) * bl],
+            &mut ws,
+        );
+    }
+
+    // fused batched kernel
+    let mut f_b = vec![0.0f64; batch * dim];
+    let mut blk_b = vec![0.0f64; batch * bl];
+    cell.jacobian_pre_block_batch(&hs, &pres, &mut f_b, &mut blk_b, &mut ws, batch);
+    assert_eq!(f_b, f_ref, "{name}: fused f drifted from the looped path");
+    assert_eq!(blk_b, blk_ref, "{name}: fused blocks drifted from the looped path");
+}
+
+#[test]
+fn fused_pre_block_batch_bitwise_lstm() {
+    let mut rng = Rng::new(21);
+    for &(units, m) in &[(1usize, 1usize), (3, 2), (5, 4)] {
+        let cell: Lstm<f64> = Lstm::new(units, m, &mut rng);
+        check_fused_pre_block_batch("lstm", &cell, 4);
+        check_fused_pre_block_batch("lstm-b1", &cell, 1);
+    }
+}
+
+#[test]
+fn fused_pre_block_batch_bitwise_lem() {
+    let mut rng = Rng::new(22);
+    for &(units, m) in &[(1usize, 1usize), (3, 2), (5, 3)] {
+        let cell: Lem<f64> = Lem::new(units, m, &mut rng);
+        check_fused_pre_block_batch("lem", &cell, 4);
+        check_fused_pre_block_batch("lem-b1", &cell, 1);
+    }
+}
+
 #[test]
 fn batched_matches_looped_elman() {
     let mut rng = Rng::new(14);

@@ -15,7 +15,7 @@
 //! Acceptance bar: relative error < 1e-3 on every component.
 
 use deer::cells::{CellGrad, Gru, IndRnn, JacobianStructure, Lem, Lstm};
-use deer::deer::grad::deer_rnn_backward_batch;
+use deer::deer::grad::{deer_rnn_backward_batch, deer_rnn_backward_batch_io};
 use deer::deer::seq::seq_rnn;
 use deer::train::native::{Model, Readout};
 use deer::util::rng::Rng;
@@ -167,6 +167,30 @@ enum Task {
     Regress(Vec<f64>),
 }
 
+/// Exact sequential forward through the WHOLE stack: returns each layer's
+/// `[B, T, n_l]` trajectory, input to output.
+fn stack_forward<C: CellGrad<f64> + Clone>(
+    model: &Model<f64, C>,
+    xs: &[f64],
+    batch: usize,
+    t_len: usize,
+) -> Vec<Vec<f64>> {
+    let mut layer_ys: Vec<Vec<f64>> = Vec::with_capacity(model.layers());
+    for l in 0..model.layers() {
+        let cell = model.cell(l);
+        let (n, m) = (cell.state_dim(), cell.input_dim());
+        let h0 = vec![0.0f64; n];
+        let input: &[f64] = if l == 0 { xs } else { &layer_ys[l - 1] };
+        let mut ys = vec![0.0f64; batch * t_len * n];
+        for s in 0..batch {
+            let y = seq_rnn(cell, &h0, &input[s * t_len * m..(s + 1) * t_len * m]);
+            ys[s * t_len * n..(s + 1) * t_len * n].copy_from_slice(&y);
+        }
+        layer_ys.push(ys);
+    }
+    layer_ys
+}
+
 /// Forward + loss exactly as the training loop computes it (but with the
 /// exact sequential trajectory, so FD is well-defined).
 fn model_loss<C: CellGrad<f64> + Clone>(
@@ -176,22 +200,17 @@ fn model_loss<C: CellGrad<f64> + Clone>(
     batch: usize,
     t_len: usize,
 ) -> f64 {
-    let n = model.state_dim();
-    let m = model.cell.input_dim();
-    let h0 = vec![0.0f64; n];
-    let mut ys = vec![0.0f64; batch * t_len * n];
-    for s in 0..batch {
-        let y = seq_rnn(&model.cell, &h0, &xs[s * t_len * m..(s + 1) * t_len * m]);
-        ys[s * t_len * n..(s + 1) * t_len * n].copy_from_slice(&y);
-    }
+    let layer_ys = stack_forward(model, xs, batch, t_len);
+    let ys = layer_ys.last().unwrap();
     match task {
-        Task::Classify(labels) => model.ce_loss_grad(&ys, labels, t_len, None).0,
-        Task::Regress(targets) => model.mse_loss_grad(&ys, targets, t_len, None),
+        Task::Classify(labels) => model.ce_loss_grad(ys, labels, t_len, None).0,
+        Task::Regress(targets) => model.mse_loss_grad(ys, targets, t_len, None),
     }
 }
 
 /// Full flat gradient, assembled the way `TrainLoop::grad_minibatch` does:
-/// model cotangents → `deer_rnn_backward_batch` → `[dθ_cell | dθ_head]`.
+/// model cotangents → per-layer `deer_rnn_backward_batch_io` chained
+/// through the input-VJPs → `[dθ_layer… | dθ_head]`.
 fn model_flat_grad<C: CellGrad<f64> + Clone>(
     model: &Model<f64, C>,
     xs: &[f64],
@@ -200,30 +219,46 @@ fn model_flat_grad<C: CellGrad<f64> + Clone>(
     batch: usize,
     t_len: usize,
 ) -> Vec<f64> {
-    let n = model.state_dim();
-    let m = model.cell.input_dim();
-    let h0s = vec![0.0f64; batch * n];
-    let mut ys = vec![0.0f64; batch * t_len * n];
-    for s in 0..batch {
-        let y = seq_rnn(&model.cell, &h0s[..n], &xs[s * t_len * m..(s + 1) * t_len * m]);
-        ys[s * t_len * n..(s + 1) * t_len * n].copy_from_slice(&y);
-    }
-    let pc = model.cell.num_params();
+    let n_out = model.state_dim();
+    let layer_ys = stack_forward(model, xs, batch, t_len);
+    let pc = model.num_cell_params();
     let mut grad = vec![0.0f64; model.num_params()];
-    let mut gs = vec![0.0f64; batch * t_len * n];
+    let mut gs = vec![0.0f64; batch * t_len * n_out];
     {
+        let ys = layer_ys.last().unwrap();
         let (_, head_tail) = grad.split_at_mut(pc);
         match task {
             Task::Classify(labels) => {
-                model.ce_loss_grad(&ys, labels, t_len, Some((&mut gs[..], head_tail)));
+                model.ce_loss_grad(ys, labels, t_len, Some((&mut gs[..], head_tail)));
             }
             Task::Regress(targets) => {
-                model.mse_loss_grad(&ys, targets, t_len, Some((&mut gs[..], head_tail)));
+                model.mse_loss_grad(ys, targets, t_len, Some((&mut gs[..], head_tail)));
             }
         }
     }
-    let g = deer_rnn_backward_batch(&model.cell, &h0s, &xs, &ys, &gs, None, structure, 1, batch);
-    grad[..pc].copy_from_slice(&g.dtheta);
+    let mut gs_cur = gs;
+    for l in (0..model.layers()).rev() {
+        let cell = model.cell(l);
+        let n = cell.state_dim();
+        let h0s = vec![0.0f64; batch * n];
+        let input: &[f64] = if l == 0 { xs } else { &layer_ys[l - 1] };
+        let g = deer_rnn_backward_batch_io(
+            cell,
+            &h0s,
+            input,
+            &layer_ys[l],
+            &gs_cur,
+            None,
+            structure,
+            1,
+            batch,
+            l > 0,
+        );
+        grad[model.layer_param_range(l)].copy_from_slice(&g.dtheta);
+        if let Some(d) = g.dxs {
+            gs_cur = d;
+        }
+    }
     grad
 }
 
@@ -233,7 +268,7 @@ fn check_model_fd<C: CellGrad<f64> + Clone>(
     structure: JacobianStructure,
     seed: u64,
 ) {
-    let m = model.cell.input_dim();
+    let m = model.input_dim();
     let (batch, t_len) = (2usize, 8usize);
     let mut rng = Rng::new(seed);
     let mut xs = vec![0.0f64; batch * t_len * m];
@@ -292,4 +327,31 @@ fn model_grad_matches_fd_cross_pairings() {
     let cell2: IndRnn<f64> = IndRnn::new(3, 2, &mut rng);
     let model2 = Model::new(cell2, 1, Readout::LastState, &mut rng);
     check_model_fd(&model2, &Task::Regress(vec![0.5, -0.25]), JacobianStructure::Diagonal, 206);
+}
+
+/// The acceptance-criterion gradcheck: a 2-layer stacked GRU classifier's
+/// full flat gradient — per-layer dual scans chained through the
+/// input-VJPs, head included — matches central finite differences of the
+/// end-to-end loss to rel-err < 1e-3 on every component.
+#[test]
+fn stacked_model_grad_matches_fd_2layer_gru() {
+    let mut rng = Rng::new(106);
+    let l0: Gru<f64> = Gru::new(3, 2, &mut rng);
+    let l1: Gru<f64> = Gru::new(2, 3, &mut rng);
+    let model = Model::stacked(vec![l0, l1], 3, Readout::LastState, &mut rng).unwrap();
+    let task = Task::Classify(vec![0, 2]);
+    check_model_fd(&model, &task, JacobianStructure::Dense, 210);
+}
+
+/// Same at depth 3 with a MeanPool regression head — deeper chains and the
+/// other readout/loss pairing.
+#[test]
+fn stacked_model_grad_matches_fd_3layer_gru_mse() {
+    let mut rng = Rng::new(107);
+    let l0: Gru<f64> = Gru::new(2, 2, &mut rng);
+    let l1: Gru<f64> = Gru::new(3, 2, &mut rng);
+    let l2: Gru<f64> = Gru::new(2, 3, &mut rng);
+    let model = Model::stacked(vec![l0, l1, l2], 1, Readout::MeanPool, &mut rng).unwrap();
+    let task = Task::Regress(vec![0.4, -0.6]);
+    check_model_fd(&model, &task, JacobianStructure::Dense, 211);
 }

@@ -83,9 +83,12 @@ for name in NAMES:
     kind = "pinned" if git_tracked(name) and base_path == os.path.join(root, name) else "run-over-run"
     with open(base_path) as f:
         base = json.load(f)
-    base_pts = {(p["n"], p["t"]): p for p in base.get("points", [])}
+    # key includes the stacked-model depth (absent in pre-depth-arm
+    # baselines -> default 1) so the depth-2 train point cannot shadow the
+    # depth-1 point sharing its (n, T)
+    base_pts = {(p["n"], p["t"], p.get("layers", 1)): p for p in base.get("points", [])}
     for p in fresh.get("points", []):
-        key = (p["n"], p["t"])
+        key = (p["n"], p["t"], p.get("layers", 1))
         b = base_pts.get(key)
         if b is None:
             continue
@@ -94,11 +97,12 @@ for name in NAMES:
                 delta = (p[field] - b[field]) / b[field] * 100.0
                 compared += 1
                 tag = "REGRESSION" if delta > threshold else "ok"
-                print(f"{name} [{kind}] n={key[0]} T={key[1]} {field}: "
+                print(f"{name} [{kind}] n={key[0]} T={key[1]} L={key[2]} {field}: "
                       f"{b[field]:.1f} -> {p[field]:.1f} ns/step ({delta:+.1f}%) {tag}")
                 if delta > threshold:
                     failures.append(
-                        f"{name} n={key[0]} T={key[1]} {field}: +{delta:.1f}% > {threshold}%")
+                        f"{name} n={key[0]} T={key[1]} L={key[2]} {field}: "
+                        f"+{delta:.1f}% > {threshold}%")
 
 # Training acceptance gate: at T ≥ 4096 the fused DEER optimizer step must
 # beat sequential BPTT wall-clock on this machine. Only enforced once a
@@ -112,7 +116,8 @@ if os.path.exists(train_path):
         doc = json.load(f)
     gated = 0
     for p in doc.get("points", []):
-        if p["t"] >= 4096:
+        # depth arms are dispatch witnesses, not wall-clock-gated points
+        if p["t"] >= 4096 and p.get("layers", 1) == 1:
             gated += 1
             slow = p["deer_step_ns"] >= p["seq_step_ns"]
             tag = "REGRESSION" if slow and enforce else ("slow (advisory)" if slow else "ok")
