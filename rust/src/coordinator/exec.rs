@@ -26,7 +26,7 @@ use crate::coordinator::batcher::{Batch, Batcher};
 use crate::coordinator::memory::MemoryPlanner;
 use crate::coordinator::policy::{ConvergencePolicy, EvalPath};
 use crate::coordinator::warmstart::WarmStartCache;
-use crate::deer::newton::effective_structure;
+use crate::deer::newton::{effective_structure, DivergenceReason};
 
 /// One evaluation request: a sequence to run through the executor's cell.
 #[derive(Debug, Clone)]
@@ -60,6 +60,21 @@ pub struct EvalReply {
     /// sequential-fallback sequence carries `None`: its forward Jacobians
     /// belong to the failed DEER iterate, not the returned trajectory.
     pub jacobians: Option<Vec<f32>>,
+    /// Why this sequence's DEER solve stopped without converging (`None`
+    /// when it converged). Carried even when the sequential fallback
+    /// produced the returned trajectory — divergence observability must
+    /// survive the rescue.
+    pub divergence: Option<DivergenceReason>,
+    /// Last accepted LM damping λ of this sequence's solve (0 when the
+    /// policy ran undamped / the row never needed damping). A training
+    /// step hands this back to the damped backward dual.
+    pub lambda: f32,
+    /// Per-sweep max-abs update trace of this sequence (one entry per
+    /// sweep it participated in) — divergence observability for
+    /// `deer train --verbose`.
+    pub err_trace: Vec<f64>,
+    /// Per-sweep accepted-λ trace (empty on the undamped path).
+    pub lambda_trace: Vec<f64>,
     /// Layout of [`EvalReply::jacobians`] — the structure the solve
     /// actually finished with. Usually `effective_structure(cell,
     /// policy.jacobian_mode)`, but under Hybrid mode the endgame switch
@@ -76,6 +91,21 @@ pub struct ExecStats {
     pub sequences_solved: u64,
     /// Groups the memory planner split into multiple sub-batches.
     pub groups_split: u64,
+    /// Sequences whose solve froze on a non-finite residual/state
+    /// ([`DivergenceReason::NonFinite`]).
+    pub diverged_nonfinite: u64,
+    /// Sequences that exhausted the LM damping budget
+    /// ([`DivergenceReason::LambdaExhausted`]).
+    pub diverged_lambda_exhausted: u64,
+    /// Sequences that hit the iteration cap ([`DivergenceReason::MaxIters`]).
+    pub diverged_max_iters: u64,
+    /// Sequences stopped by the divergence patience
+    /// ([`DivergenceReason::ErrorGrowth`]).
+    pub diverged_error_growth: u64,
+    /// Per-sequence Hybrid endgame switches (Full→Diagonal) across all
+    /// solves — each SEQUENCE that crossed the threshold counts once, so a
+    /// batch where only one row switches adds exactly 1 here.
+    pub hybrid_switches: u64,
     /// Which stacked-model layer these counters belong to (copied from
     /// [`BatchExecutor::layer`]; 0 for single-layer / serving use). A
     /// stacked trainer builds one executor per layer, so per-layer solve
@@ -179,7 +209,7 @@ impl<'c, C: Cell<f32>> BatchExecutor<'c, C> {
         // them for the backward pass (keep_jacobians ⇒ every layer's slab
         // stays alive until its backward leg consumes it).
         let peer_n = if self.plan_peer_width == 0 { n } else { self.plan_peer_width };
-        let max_b = self
+        let mut max_b = self
             .planner
             .max_deer_batch_stacked(
                 n,
@@ -190,6 +220,12 @@ impl<'c, C: Cell<f32>> BatchExecutor<'c, C> {
                 self.keep_jacobians,
             )
             .max(1);
+        // ELK keeps one extra trajectory slab per sequence alive — cap the
+        // fused batch by the damped plan too when the policy runs damped
+        if self.policy.damping_lambda0.is_some() {
+            max_b = max_b.min(self.planner.max_deer_batch_elk(n, t_len, structure).max(1));
+        }
+        let max_b = max_b;
         let reqs = group.requests;
         if reqs.len() > max_b {
             self.stats.groups_split += 1;
@@ -219,6 +255,18 @@ impl<'c, C: Cell<f32>> BatchExecutor<'c, C> {
                     .evaluate_batch(self.cell, &h0s, &xs, init, self.threads, b);
             self.stats.batched_solves += 1;
             self.stats.sequences_solved += b as u64;
+            self.stats.hybrid_switches += res.hybrid_switches as u64;
+            for d in &res.divergence {
+                match d {
+                    Some(DivergenceReason::NonFinite) => self.stats.diverged_nonfinite += 1,
+                    Some(DivergenceReason::LambdaExhausted) => {
+                        self.stats.diverged_lambda_exhausted += 1
+                    }
+                    Some(DivergenceReason::MaxIters) => self.stats.diverged_max_iters += 1,
+                    Some(DivergenceReason::ErrorGrowth) => self.stats.diverged_error_growth += 1,
+                    None => {}
+                }
+            }
             let jl = res.jac_structure.jac_len(n);
             for (s, req) in sub.iter().enumerate() {
                 let traj = res.ys[s * t_len * n..(s + 1) * t_len * n].to_vec();
@@ -248,6 +296,10 @@ impl<'c, C: Cell<f32>> BatchExecutor<'c, C> {
                     path: paths[s],
                     warm_started: warm[s],
                     jacobians,
+                    divergence: res.divergence[s],
+                    lambda: res.lambdas[s],
+                    err_trace: res.err_traces[s].clone(),
+                    lambda_trace: res.lambda_traces[s].clone(),
                     jac_structure: res.jac_structure,
                 });
             }
@@ -532,6 +584,148 @@ mod tests {
         assert_eq!(ex.stats.sequences_solved, b as u64);
         let expected_solves = (b as u64).div_ceil(stacked_max.max(1) as u64);
         assert_eq!(ex.stats.batched_solves, expected_solves);
+    }
+
+    /// Satellite pin for the per-sequence Hybrid endgame: the executor's
+    /// `hybrid_switches` counter counts SEQUENCES that crossed the
+    /// threshold — never more than the batch size per solve (the old
+    /// batch-global switch had no per-sequence accounting at all) — and it
+    /// accumulates across solves.
+    #[test]
+    fn hybrid_switch_stats_are_per_sequence() {
+        use crate::deer::newton::JacobianMode;
+        let mut rng = Rng::new(8);
+        let (n, m, t_len, b) = (3usize, 2usize, 250usize, 3usize);
+        let cell: Gru<f32> = Gru::new(n, m, &mut rng);
+        let mut ex = BatchExecutor::new(
+            &cell,
+            t_len,
+            b,
+            Duration::from_secs(60),
+            1 << 20,
+            16 * (1u64 << 30),
+            1,
+        );
+        ex.policy.jacobian_mode = JacobianMode::Hybrid;
+        // wide endgame window: every row passes through [tol, thr) on its
+        // way down, so each of the b sequences switches exactly once
+        ex.policy.hybrid_threshold = 1e-1;
+        let reqs = make_requests(&cell, t_len, b);
+        for (id, h0, xs) in &reqs {
+            ex.submit(*id, h0.clone(), xs.clone());
+        }
+        assert_eq!(ex.stats.batched_solves, 1);
+        assert!(
+            ex.stats.hybrid_switches >= 1 && ex.stats.hybrid_switches <= b as u64,
+            "per-sequence switch count must be in [1, B], got {}",
+            ex.stats.hybrid_switches
+        );
+        let first_round = ex.stats.hybrid_switches;
+        // a second identical round accumulates (counter is cross-solve);
+        // fresh sample ids keep the cache cold so the residual path — and
+        // hence the switch count — repeats exactly
+        for (id, h0, xs) in &reqs {
+            ex.submit(*id + b as u64, h0.clone(), xs.clone());
+        }
+        assert_eq!(ex.stats.batched_solves, 2);
+        assert_eq!(ex.stats.hybrid_switches, 2 * first_round);
+    }
+
+    /// Satellite pin for non-finite hardening through the full coordinator
+    /// stack: a NaN-poisoned sequence is counted, tagged with a clean
+    /// [`DivergenceReason::NonFinite`], and rescued by the per-sequence
+    /// sequential fallback — while its batch neighbour converges bitwise
+    /// as if solved alone.
+    #[test]
+    fn poisoned_sequence_is_counted_and_isolated() {
+        let mut rng = Rng::new(9);
+        let (n, m, t_len, b) = (3usize, 2usize, 200usize, 2usize);
+        let cell: Gru<f32> = Gru::new(n, m, &mut rng);
+        let mut ex = BatchExecutor::new(
+            &cell,
+            t_len,
+            b,
+            Duration::from_secs(60),
+            1 << 20,
+            16 * (1u64 << 30),
+            1,
+        );
+        let reqs = make_requests(&cell, t_len, b);
+        let mut replies = Vec::new();
+        for (id, h0, xs) in &reqs {
+            let mut xs = xs.clone();
+            if *id == 1 {
+                xs[7] = f32::NAN;
+            }
+            let r = ex.submit(*id, h0.clone(), xs);
+            if !r.is_empty() {
+                replies = r;
+            }
+        }
+        assert_eq!(replies.len(), b);
+        assert_eq!(ex.stats.diverged_nonfinite, 1);
+        assert_eq!(ex.stats.diverged_lambda_exhausted, 0);
+        for reply in &replies {
+            if reply.sample_id == 1 {
+                assert!(!reply.converged);
+                assert_eq!(reply.divergence, Some(DivergenceReason::NonFinite));
+                assert_eq!(reply.path, EvalPath::SequentialFallback);
+            } else {
+                assert!(reply.converged);
+                assert!(reply.divergence.is_none());
+                assert!(reply.ys.iter().all(|v| v.is_finite()));
+                let (_, h0, xs) = &reqs[reply.sample_id as usize];
+                let solo = deer_rnn(&cell, h0, xs, None, &DeerConfig::<f32>::default());
+                assert_eq!(reply.ys, solo.ys, "healthy row must be untouched");
+            }
+        }
+    }
+
+    /// ELK through the executor: `damping_lambda0` on the policy drives the
+    /// damped solve, replies carry the per-sequence accepted λ, and no
+    /// divergence counter fires on a benign batch.
+    #[test]
+    fn elk_policy_through_executor() {
+        let mut rng = Rng::new(10);
+        let (n, m, t_len, b) = (3usize, 3usize, 200usize, 3usize);
+        let cell: Gru<f32> = Gru::new(n, m, &mut rng);
+        let mut ex = BatchExecutor::new(
+            &cell,
+            t_len,
+            b,
+            Duration::from_secs(60),
+            1 << 20,
+            16 * (1u64 << 30),
+            1,
+        );
+        ex.policy.damping_lambda0 = Some(1.0);
+        let reqs = make_requests(&cell, t_len, b);
+        let mut replies = Vec::new();
+        for (id, h0, xs) in &reqs {
+            let r = ex.submit(*id, h0.clone(), xs.clone());
+            if !r.is_empty() {
+                replies = r;
+            }
+        }
+        assert_eq!(replies.len(), b);
+        assert_eq!(ex.stats.diverged_nonfinite, 0);
+        assert_eq!(ex.stats.diverged_lambda_exhausted, 0);
+        assert_eq!(ex.stats.diverged_max_iters, 0);
+        assert_eq!(ex.stats.diverged_error_growth, 0);
+        for reply in &replies {
+            assert!(reply.converged);
+            assert!(reply.divergence.is_none());
+            assert!(reply.lambda.is_finite() && reply.lambda >= 0.0);
+            let (_, h0, xs) = &reqs[reply.sample_id as usize];
+            let want = crate::deer::seq::seq_rnn(&cell, h0, xs);
+            let err = reply
+                .ys
+                .iter()
+                .zip(want.iter())
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(err < 1e-3, "sample {}: {err}", reply.sample_id);
+        }
     }
 
     /// Deadline-style flush drains a partial group through one fused solve.

@@ -7,7 +7,8 @@
 //! DEER@B=3 vs sequential@B=70 at equal ~2.6 GB).
 
 pub use crate::simulator::{
-    deer_memory_bytes, deer_memory_bytes_stacked, deer_memory_bytes_structured,
+    deer_memory_bytes, deer_memory_bytes_elk, deer_memory_bytes_stacked,
+    deer_memory_bytes_structured,
 };
 use crate::cells::JacobianStructure;
 
@@ -115,6 +116,33 @@ impl MemoryPlanner {
         (self.budget_bytes / per) as usize
     }
 
+    /// ELK-aware [`MemoryPlanner::deer_fits_structured`]: the damped
+    /// solver keeps one extra `B·T·n` trajectory slab alive (last accepted
+    /// iterate alongside anchor and trial) — see
+    /// [`deer_memory_bytes_elk`].
+    pub fn deer_fits_elk(
+        &self,
+        n: usize,
+        t_len: usize,
+        batch: usize,
+        structure: JacobianStructure,
+    ) -> bool {
+        deer_memory_bytes_elk(n, t_len, batch, 4, structure) <= self.budget_bytes
+    }
+
+    /// ELK-aware [`MemoryPlanner::max_deer_batch_structured`] — what the
+    /// batched executor caps a flushed group at when the policy runs the
+    /// damped solve.
+    pub fn max_deer_batch_elk(
+        &self,
+        n: usize,
+        t_len: usize,
+        structure: JacobianStructure,
+    ) -> usize {
+        let per = deer_memory_bytes_elk(n, t_len, 1, 4, structure).max(1);
+        (self.budget_bytes / per) as usize
+    }
+
     /// Fig. 8's construction: the sequential batch size whose footprint
     /// matches DEER at `deer_batch` (equal-memory comparison).
     pub fn equal_memory_seq_batch(&self, n: usize, t_len: usize, deer_batch: usize) -> usize {
@@ -181,6 +209,27 @@ mod tests {
         assert!(dense < block && block < diag, "dense {dense} < block {block} < diag {diag}");
         assert!(p.deer_fits_structured(64, 1_000_000, 12, JacobianStructure::Block { k: 2 }));
         assert!(!p.deer_fits_structured(64, 1_000_000, 12, JacobianStructure::Dense));
+    }
+
+    /// ELK planning sits just under the plain structured plan (one extra
+    /// trajectory slab per sequence) and never admits more sequences.
+    #[test]
+    fn elk_planner_tighter_than_structured() {
+        let p = MemoryPlanner::new(1 << 30);
+        for st in [
+            JacobianStructure::Dense,
+            JacobianStructure::Diagonal,
+            JacobianStructure::Block { k: 2 },
+        ] {
+            let plain = p.max_deer_batch_structured(16, 100_000, st);
+            let elk = p.max_deer_batch_elk(16, 100_000, st);
+            assert!(elk <= plain, "{st:?}: elk {elk} > plain {plain}");
+            assert!(elk >= 1, "{st:?}: budget must still fit one damped sequence");
+            if elk > 0 {
+                assert!(p.deer_fits_elk(16, 100_000, elk, st));
+            }
+            assert!(!p.deer_fits_elk(16, 100_000, plain + 1, st));
+        }
     }
 
     #[test]

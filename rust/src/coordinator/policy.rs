@@ -7,7 +7,9 @@
 //! is always correct.
 
 use crate::cells::Cell;
-use crate::deer::newton::{deer_rnn, deer_rnn_batch, BatchDeerResult, DeerConfig, DeerResult, JacobianMode};
+use crate::deer::newton::{
+    deer_rnn, deer_rnn_batch, BatchDeerResult, DampingConfig, DeerConfig, DeerResult, JacobianMode,
+};
 use crate::deer::seq::seq_rnn;
 use crate::util::scalar::Scalar;
 
@@ -40,6 +42,12 @@ pub struct ConvergencePolicy {
     /// [`DeerConfig::hybrid_threshold`]: the Full→DiagonalApprox endgame
     /// switch point. Ignored by the other modes.
     pub hybrid_threshold: f64,
+    /// `Some(λ₀)` enables the ELK damped-Newton solver: forwarded as
+    /// [`DeerConfig::damping`] with `lambda0 = λ₀` and default adaptation
+    /// constants. Rows whose damping budget is exhausted still surface as
+    /// non-converged and take the per-sequence sequential fallback.
+    /// Mutually exclusive with [`JacobianMode::Hybrid`].
+    pub damping_lambda0: Option<f64>,
 }
 
 impl Default for ConvergencePolicy {
@@ -52,6 +60,7 @@ impl Default for ConvergencePolicy {
             jacobian_mode: JacobianMode::Full,
             step_clamp: None,
             hybrid_threshold: 1e-2,
+            damping_lambda0: None,
         }
     }
 }
@@ -69,6 +78,10 @@ impl ConvergencePolicy {
             jacobian_mode: self.jacobian_mode,
             step_clamp: self.step_clamp.map(S::from_f64c),
             hybrid_threshold: S::from_f64c(self.hybrid_threshold),
+            damping: self.damping_lambda0.map(|l0| DampingConfig {
+                lambda0: S::from_f64c(l0),
+                ..Default::default()
+            }),
         }
     }
 
@@ -217,6 +230,45 @@ mod tests {
         assert!(res.converged.iter().all(|&c| c));
         // the switch fired → packed diagonal Jacobians in the result
         assert_eq!(res.jacobians.len(), b * t * n, "{:?}", res.jac_structure);
+    }
+
+    /// ELK through the policy: `damping_lambda0` round-trips into the
+    /// config, the damped batched solve converges on a benign batch, and
+    /// per-row λ state surfaces in the result.
+    #[test]
+    fn elk_damping_through_policy() {
+        let mut rng = Rng::new(5);
+        let (n, m, t, b) = (3usize, 2usize, 300usize, 2usize);
+        let cell: Gru<f64> = Gru::new(n, m, &mut rng);
+        let mut xs = vec![0.0; b * t * m];
+        rng.fill_normal(&mut xs, 1.0);
+        let h0s = vec![0.0; b * n];
+        let pol = ConvergencePolicy {
+            damping_lambda0: Some(1.0),
+            ..Default::default()
+        };
+        let cfg: DeerConfig<f64> = pol.config(1);
+        let damp = cfg.damping.expect("damping_lambda0 must enable damping");
+        assert!((damp.lambda0 - 1.0).abs() < 1e-15);
+        let (paths, res) = pol.evaluate_batch(&cell, &h0s, &xs, None, 1, b);
+        assert!(paths.iter().all(|&p| p == EvalPath::Deer));
+        assert!(res.converged.iter().all(|&c| c));
+        assert!(res.divergence.iter().all(|d| d.is_none()));
+        assert_eq!(res.lambdas.len(), b);
+        for s in 0..b {
+            let want = crate::deer::seq::seq_rnn(
+                &cell,
+                &h0s[s * n..(s + 1) * n],
+                &xs[s * t * m..(s + 1) * t * m],
+            );
+            let got = &res.ys[s * t * n..(s + 1) * t * n];
+            let err = got
+                .iter()
+                .zip(want.iter())
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f64, f64::max);
+            assert!(err < 1e-6, "row {s}: {err}");
+        }
     }
 
     #[test]

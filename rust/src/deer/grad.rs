@@ -36,6 +36,7 @@
 use crate::cells::{Cell, CellGrad, JacobianStructure};
 use crate::scan::block::par_block_scan_reverse_batch_ws;
 use crate::scan::diag::par_diag_scan_reverse_batch_ws;
+use crate::scan::kalman::par_kalman_scan_reverse_batch_ws;
 use crate::scan::par::par_scan_reverse_batch_ws;
 use crate::scan::ScanWorkspace;
 use crate::util::scalar::Scalar;
@@ -142,6 +143,50 @@ pub fn deer_rnn_backward_batch_io<S: Scalar, C: CellGrad<S>>(
     batch: usize,
     want_dx: bool,
 ) -> BatchGradResult<S> {
+    deer_rnn_backward_batch_damped_io(
+        cell,
+        h0s,
+        xs,
+        ys,
+        gs,
+        jacobians,
+        jac_structure,
+        None,
+        threads,
+        batch,
+        want_dx,
+    )
+}
+
+/// [`deer_rnn_backward_batch_io`] for damped (ELK / quasi-ELK) forward
+/// solves: `damping_lambdas` carries each sequence's **last accepted** λ
+/// from the forward pass ([`super::newton::BatchDeerResult::lambdas`]), and
+/// the dual scan re-solves the same damped operator — the transpose of the
+/// system the forward trajectory actually satisfies:
+///
+/// ```text
+/// λ_i = s_s · (g_i + J_{i+1}ᵀ λ_{i+1}),    s_s = 1 / (1 + λ_damp[s])
+/// ```
+///
+/// via the Kalman-form reverse kernels of [`crate::scan::kalman`]. With
+/// `None` — or with every row's λ exactly 0, the common case once an ELK
+/// solve has relaxed to the undamped endgame — this is bitwise
+/// [`deer_rnn_backward_batch_io`]: the plain structure-dispatched kernels
+/// run unchanged.
+#[allow(clippy::too_many_arguments)]
+pub fn deer_rnn_backward_batch_damped_io<S: Scalar, C: CellGrad<S>>(
+    cell: &C,
+    h0s: &[S],
+    xs: &[S],
+    ys: &[S],
+    gs: &[S],
+    jacobians: Option<&[S]>,
+    jac_structure: JacobianStructure,
+    damping_lambdas: Option<&[S]>,
+    threads: usize,
+    batch: usize,
+    want_dx: bool,
+) -> BatchGradResult<S> {
     let n = cell.state_dim();
     let m = cell.input_dim();
     assert!(batch > 0, "batch must be ≥ 1");
@@ -187,21 +232,49 @@ pub fn deer_rnn_backward_batch_io<S: Scalar, C: CellGrad<S>>(
     // diagonal path.
     let mut lambda = vec![S::zero(); batch * sn];
     let mut scan_ws: ScanWorkspace<S> = ScanWorkspace::new();
-    profile.record("DUAL_SCAN", || match jac_structure {
-        JacobianStructure::Dense => {
-            par_scan_reverse_batch_ws(
-                jac, gs, &mut lambda, n, t_len, batch, None, threads, &mut scan_ws,
-            );
+    // An all-zero λ vector routes through the plain kernels below so the
+    // undamped gradient stays bitwise-reproducible (and free of the damped
+    // bookkeeping) — exactly the path a relaxed ELK solve lands on.
+    let damped = match damping_lambdas {
+        Some(ls) => {
+            assert_eq!(ls.len(), batch, "damping_lambdas layout ([B])");
+            ls.iter().any(|&l| l != S::zero())
         }
-        JacobianStructure::Diagonal => {
-            par_diag_scan_reverse_batch_ws(
-                jac, gs, &mut lambda, n, t_len, batch, None, threads, &mut scan_ws,
+        None => false,
+    };
+    profile.record("DUAL_SCAN", || {
+        if damped {
+            par_kalman_scan_reverse_batch_ws(
+                jac,
+                gs,
+                &mut lambda,
+                n,
+                jac_structure,
+                t_len,
+                batch,
+                damping_lambdas.unwrap(),
+                None,
+                threads,
+                &mut scan_ws,
             );
+            return;
         }
-        JacobianStructure::Block { k } => {
-            par_block_scan_reverse_batch_ws(
-                jac, gs, &mut lambda, n, k, t_len, batch, None, threads, &mut scan_ws,
-            );
+        match jac_structure {
+            JacobianStructure::Dense => {
+                par_scan_reverse_batch_ws(
+                    jac, gs, &mut lambda, n, t_len, batch, None, threads, &mut scan_ws,
+                );
+            }
+            JacobianStructure::Diagonal => {
+                par_diag_scan_reverse_batch_ws(
+                    jac, gs, &mut lambda, n, t_len, batch, None, threads, &mut scan_ws,
+                );
+            }
+            JacobianStructure::Block { k } => {
+                par_block_scan_reverse_batch_ws(
+                    jac, gs, &mut lambda, n, k, t_len, batch, None, threads, &mut scan_ws,
+                );
+            }
         }
     });
 
@@ -852,6 +925,123 @@ mod tests {
         );
         for (a, b) in reuse.dtheta.iter().zip(recomp.dtheta.iter()) {
             assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    /// The damped entry with λ = 0 (explicitly, or via `None`) must be
+    /// bitwise the plain backward pass — the contract the trainer relies on
+    /// once an ELK solve has relaxed to the undamped endgame.
+    #[test]
+    fn damped_backward_at_lambda_zero_is_bitwise_plain() {
+        let mut rng = Rng::new(15);
+        let (n, m, t, b) = (3usize, 2usize, 120usize, 2usize);
+        let cell: Gru<f64> = Gru::new(n, m, &mut rng);
+        let mut xs = vec![0.0; b * t * m];
+        rng.fill_normal(&mut xs, 1.0);
+        let h0s = vec![0.0; b * n];
+        let mut ys = vec![0.0; b * t * n];
+        for s in 0..b {
+            let y = seq_rnn(&cell, &h0s[s * n..(s + 1) * n], &xs[s * t * m..(s + 1) * t * m]);
+            ys[s * t * n..(s + 1) * t * n].copy_from_slice(&y);
+        }
+        let mut gs = vec![0.0; b * t * n];
+        rng.fill_normal(&mut gs, 1.0);
+
+        for threads in [1usize, 4] {
+            let plain = deer_rnn_backward_batch_io(
+                &cell,
+                &h0s,
+                &xs,
+                &ys,
+                &gs,
+                None,
+                JacobianStructure::Dense,
+                threads,
+                b,
+                true,
+            );
+            let zeros = vec![0.0; b];
+            let damped = deer_rnn_backward_batch_damped_io(
+                &cell,
+                &h0s,
+                &xs,
+                &ys,
+                &gs,
+                None,
+                JacobianStructure::Dense,
+                Some(&zeros),
+                threads,
+                b,
+                true,
+            );
+            assert_eq!(plain.dtheta, damped.dtheta, "threads={threads}");
+            assert_eq!(plain.dh0s, damped.dh0s, "threads={threads}");
+            assert_eq!(plain.dxs, damped.dxs, "threads={threads}");
+        }
+    }
+
+    /// With a non-zero λ the damped dual must satisfy the damped recursion
+    /// `(1 + λ)·λ_i = g_i + J_{i+1}ᵀ λ_{i+1}` — checked against a hand
+    /// sequential evaluation through the public VJP outputs: the λ-scan is
+    /// internal, so instead compare dθ/dh0 against a run whose gs are
+    /// pre-conditioned to make the plain dual equal the damped one.
+    #[test]
+    fn damped_backward_scales_dual_consistently() {
+        let mut rng = Rng::new(16);
+        let (n, m, t) = (3usize, 2usize, 40usize);
+        let cell: IndRnn<f64> = IndRnn::new(n, m, &mut rng);
+        let mut xs = vec![0.0; t * m];
+        rng.fill_normal(&mut xs, 1.0);
+        let h0 = vec![0.0; n];
+        let ys = seq_rnn(&cell, &h0, &xs);
+        let mut gs = vec![0.0; t * n];
+        rng.fill_normal(&mut gs, 1.0);
+        let lam = 0.7;
+
+        let damped = deer_rnn_backward_batch_damped_io(
+            &cell,
+            &h0,
+            &xs,
+            &ys,
+            &gs,
+            None,
+            JacobianStructure::Diagonal,
+            Some(&[lam]),
+            1,
+            1,
+            false,
+        );
+        // Reference: the damped dual in scaled-element form is the plain
+        // dual of (s·J, s·g) with s = 1/(1+λ) — rescale BOTH by hand:
+        // diagonal Jacobians of IndRnn are recomputed internally, so build
+        // them once, scale, and feed the scaled pair through the plain path.
+        let fwd = deer_rnn(
+            &cell,
+            &h0,
+            &xs,
+            Some(&ys),
+            &DeerConfig { max_iter: 1, ..Default::default() },
+        );
+        let s = 1.0 / (1.0 + lam);
+        let jac_scaled: Vec<f64> = fwd.jacobians.iter().map(|j| s * j).collect();
+        let gs_scaled: Vec<f64> = gs.iter().map(|g| s * g).collect();
+        let reference = deer_rnn_backward_batch_io(
+            &cell,
+            &h0,
+            &xs,
+            &ys,
+            &gs_scaled,
+            Some(&jac_scaled),
+            JacobianStructure::Diagonal,
+            1,
+            1,
+            false,
+        );
+        for (a, b) in damped.dtheta.iter().zip(reference.dtheta.iter()) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+        for (a, b) in damped.dh0s.iter().zip(reference.dh0s.iter()) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
         }
     }
 }

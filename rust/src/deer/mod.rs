@@ -43,8 +43,25 @@
 //! the block Jacobian is exact and the mode IS exact Newton, bitwise equal
 //! to the dense path. `deer bench --exp block` measures dense vs Block(2)
 //! vs diagonal on LSTM. **Hybrid** ([`JacobianMode::Hybrid`]) runs Full
-//! until the residual crosses `DeerConfig::hybrid_threshold`, then
-//! finishes on the diagonal scan (cheap endgame).
+//! until a sequence's residual crosses `DeerConfig::hybrid_threshold`,
+//! then finishes that sequence on the diagonal scan (per-row cheap
+//! endgame).
+//!
+//! # ELK: damped (Levenberg–Marquardt) Newton
+//!
+//! [`DeerConfig::damping`] turns every row of the batched solve into an
+//! adaptive trust-region iteration (**ELK**; quasi-ELK when composed with
+//! the structured modes above): each sweep linearises once, then
+//! accept/rejects trial steps per sequence — the damped linear system is
+//! still an associative scan, run by the Kalman-form kernels of
+//! [`crate::scan::kalman`] with a per-row λ. The backward pass re-solves
+//! the matching damped dual through
+//! [`grad::deer_rnn_backward_batch_damped_io`] using each row's last
+//! accepted λ ([`BatchDeerResult::lambdas`]). Failed rows freeze on their
+//! last finite iterate with a [`DivergenceReason`] instead of poisoning
+//! the batch. See the `newton` module docs for the full accept/reject
+//! contract (λ adaptation policy, `step_clamp` subsumption, `Hybrid`
+//! exclusion).
 //!
 //! # Batched execution
 //!
@@ -62,12 +79,12 @@ pub mod rk45;
 pub mod seq;
 
 pub use grad::{
-    deer_rnn_backward, deer_rnn_backward_batch, deer_rnn_backward_batch_io, BatchGradResult,
-    GradResult,
+    deer_rnn_backward, deer_rnn_backward_batch, deer_rnn_backward_batch_damped_io,
+    deer_rnn_backward_batch_io, BatchGradResult, GradResult,
 };
 pub use newton::{
-    deer_rnn, deer_rnn_batch, effective_structure, BatchDeerResult, DeerConfig, DeerResult,
-    JacobianMode,
+    deer_rnn, deer_rnn_batch, effective_structure, BatchDeerResult, DampingConfig, DeerConfig,
+    DeerResult, DivergenceReason, JacobianMode,
 };
 pub use ode::{deer_ode, Interp, OdeDeerResult, OdeSystem};
 pub use rk45::{rk45_solve, Rk45Options};

@@ -63,11 +63,51 @@
 //! `FUNCEVAL` (f + Jacobian, now *fused* with the former GTMULT — the
 //! `b_i = f_i − J_i·y_{i−1}` build happens in the same pass while `J_i` and
 //! `y_{i−1}` are register/cache-hot, removing one full sweep over the
-//! `[B, T, n]` buffers per iteration) and `INVLIN` (the scan).
+//! `[B, T, n]` buffers per iteration) and `INVLIN` (the scan). The damped
+//! (ELK) path adds `RESIDUAL` — the f-only merit evaluation of each trial
+//! step.
+//!
+//! # Damped Newton (ELK / quasi-ELK)
+//!
+//! With [`DeerConfig::damping`] set, every Newton sweep becomes an adaptive
+//! Levenberg–Marquardt step (Gonzalez et al., "Towards Scalable and Stable
+//! Parallelization of Nonlinear RNNs"): the update solves the damped system
+//!
+//! ```text
+//! (1 + λ_s)·Δ_i − J_i·Δ_{i−1} = −r_i      (per sequence s)
+//! ```
+//!
+//! which in state form is still an associative scan — the Kalman-form
+//! kernels of [`crate::scan::kalman`] run it in parallel with a per-row λ.
+//! The contract:
+//!
+//! * **Accept/reject.** Each sweep linearises ONCE (FUNCEVAL), then runs an
+//!   inner loop: solve damped INVLIN, evaluate the trial trajectory's true
+//!   residual `r = max_i |f(ŷ_{i−1}, x_i) − ŷ_i|` (RESIDUAL), and accept
+//!   the trial for row `s` iff `r` is finite and improves on the row's
+//!   current residual (or is already below tol). Rejected rows re-solve the
+//!   *same* linearisation with `λ ← λ·grow`; accepted rows commit the trial
+//!   and relax `λ ← λ·shrink` (snapping to exactly 0 — the undamped Newton
+//!   step — below `lambda_min`). A row whose λ would exceed `lambda_max`
+//!   freezes with [`DivergenceReason::LambdaExhausted`] (or `NonFinite` if
+//!   its last trial blew up), keeping its last *accepted* finite iterate.
+//! * **Convergence** requires both the max-abs update and the true residual
+//!   below tol — a heavily-damped step is short by construction, so the
+//!   update norm alone would flag false convergence.
+//! * **`step_clamp` is subsumed**: the damped path ignores it (λ plays the
+//!   trust-region role with a consistent merit function). The undamped path
+//!   keeps the clamp semantics bitwise.
+//! * **`Hybrid` is mutually exclusive** with damping (asserted): the
+//!   endgame switch changes the propagator structure mid-solve, which
+//!   would silently change what a retried λ re-solves.
+//! * λ = 0 rows route through the *plain* scan kernels bitwise, so a fully
+//!   relaxed ELK solve costs exactly a DEER solve per sweep plus the
+//!   RESIDUAL pass.
 
 use crate::cells::{Cell, JacobianStructure};
 use crate::scan::block::par_block_scan_apply_batch_ws;
 use crate::scan::diag::par_diag_scan_apply_batch_ws;
+use crate::scan::kalman::par_kalman_scan_apply_batch_ws;
 use crate::scan::par::par_scan_apply_batch_ws;
 use crate::scan::ScanWorkspace;
 use crate::util::scalar::Scalar;
@@ -96,20 +136,94 @@ pub enum JacobianMode {
     /// no valid block partition (e.g. odd n without a natural pairing).
     BlockApprox,
     /// Hybrid Newton (Gonzalez-et-al-style cheap endgame): start with the
-    /// exact Full structure and switch the still-running solve to
-    /// `DiagonalApprox` once every active sequence's residual drops below
+    /// exact Full structure and switch a sequence to `DiagonalApprox` once
+    /// **that sequence's** residual drops below
     /// [`DeerConfig::hybrid_threshold`] — the expensive dense compose pays
-    /// for the global phase only, the cheap diagonal scan polishes. The
-    /// fixed point is unchanged; the returned `jac_structure` reports the
-    /// final phase's layout (already-stored dense Jacobians are converted
-    /// on the switch).
-    ///
-    /// The switch is **batch-global** (one Jacobian buffer, one layout):
-    /// in a fused batch a slow straggler keeps every still-active
-    /// neighbour on the dense path until all residuals cross the
-    /// threshold. A per-sequence structure choice would need per-sequence
-    /// jac layouts inside one solve — recorded as a ROADMAP follow-up.
+    /// for each row's global phase only, the cheap diagonal scan polishes.
+    /// The switch is **per-sequence**: a slow straggler stays dense while
+    /// converged-basin neighbours already run the O(n) path (the solve
+    /// keeps a dense and a packed-diagonal Jacobian buffer and partitions
+    /// FUNCEVAL/INVLIN across the two populations). The fixed point is
+    /// unchanged; if *any* row switched, the returned `jac_structure` is
+    /// `Diagonal` and never-switched rows' dense Jacobians are converted
+    /// (diagonal-extracted) so the buffer layout is uniform. If no row ever
+    /// crossed the threshold the solve is bitwise-identical to `Full` and
+    /// reports the dense layout. [`BatchDeerResult::hybrid_switches`]
+    /// counts the transitions.
     Hybrid,
+}
+
+/// Adaptive Levenberg–Marquardt damping schedule for ELK / quasi-ELK
+/// solves (see the module-level *Damped Newton* contract). All parameters
+/// act per batch row; the defaults follow the standard Marquardt policy
+/// (grow ×10 on reject, shrink ×0.1 on accept).
+#[derive(Debug, Clone, Copy)]
+pub struct DampingConfig<S> {
+    /// Initial λ for every row (and the restart value when a relaxed-to-0
+    /// row gets its first rejection). Default 1.0.
+    pub lambda0: S,
+    /// Accepted-step relaxation snaps λ to exactly 0 below this value, so a
+    /// converging solve finishes on the bitwise-undamped Newton kernels.
+    /// Default 1e-12.
+    pub lambda_min: S,
+    /// A row whose rejection growth would exceed this freezes with
+    /// [`DivergenceReason::LambdaExhausted`]. Default 1e8.
+    pub lambda_max: S,
+    /// Multiplier applied to λ on a rejected trial step. Default 10.
+    pub grow: S,
+    /// Multiplier applied to λ after an accepted trial step. Default 0.1.
+    pub shrink: S,
+    /// Hard cap on inner solve/evaluate retries per Newton sweep (backstop;
+    /// the `lambda_max` wall normally triggers first). Default 24.
+    pub max_rejects: usize,
+}
+
+impl<S: Scalar> Default for DampingConfig<S> {
+    fn default() -> Self {
+        DampingConfig {
+            lambda0: S::one(),
+            lambda_min: S::from_f64c(1e-12),
+            lambda_max: S::from_f64c(1e8),
+            grow: S::from_f64c(10.0),
+            shrink: S::from_f64c(0.1),
+            max_rejects: 24,
+        }
+    }
+}
+
+/// Why a sequence's Newton solve stopped without meeting the tolerance.
+/// Surfaced per row through [`BatchDeerResult::divergence`] (and onward
+/// through the coordinator's `ExecStats`) so failed solves are diagnosable
+/// instead of silent freezes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DivergenceReason {
+    /// The iteration cap elapsed with the row still improving (or stalled)
+    /// above tolerance.
+    MaxIters,
+    /// A trial trajectory contained NaN/Inf — detected by an explicit
+    /// finiteness scan (NaN never wins a max-reduction, so the error norm
+    /// alone cannot be trusted) and the row frozen on its last finite
+    /// iterate.
+    NonFinite,
+    /// The undamped error-growth guard tripped
+    /// ([`DeerConfig::divergence_patience`] consecutive growing sweeps).
+    ErrorGrowth,
+    /// The damped path rejected trial steps until λ passed
+    /// [`DampingConfig::lambda_max`] — no descent direction at any trust
+    /// level (typically a genuinely inconsistent linearisation).
+    LambdaExhausted,
+}
+
+impl DivergenceReason {
+    /// Stable lowercase label for logs / JSON.
+    pub fn label(&self) -> &'static str {
+        match self {
+            DivergenceReason::MaxIters => "max_iters",
+            DivergenceReason::NonFinite => "non_finite",
+            DivergenceReason::ErrorGrowth => "error_growth",
+            DivergenceReason::LambdaExhausted => "lambda_exhausted",
+        }
+    }
 }
 
 /// Configuration of the DEER iteration.
@@ -137,13 +251,19 @@ pub struct DeerConfig<S> {
     /// rate are untouched. `None` (default) preserves the undamped
     /// iteration bitwise.
     pub step_clamp: Option<S>,
-    /// Residual threshold of [`JacobianMode::Hybrid`]: once every active
-    /// sequence's max-abs update falls below it, the solve switches from
-    /// the Full structure to `DiagonalApprox` for the remaining sweeps.
+    /// Residual threshold of [`JacobianMode::Hybrid`]: a sequence whose
+    /// max-abs update falls below it switches from the Full structure to
+    /// `DiagonalApprox` for its remaining sweeps (per-sequence endgame).
     /// Ignored by the other modes. Default 1e-2 — inside the basin where
     /// the diagonally-approximated iteration contracts reliably, but early
     /// enough to skip several dense sweeps.
     pub hybrid_threshold: S,
+    /// Adaptive Levenberg–Marquardt damping (ELK / quasi-ELK; see the
+    /// module-level *Damped Newton* contract). `None` (default) preserves
+    /// the undamped iteration bitwise; `Some` activates per-row accept/
+    /// reject damping, **subsumes** [`DeerConfig::step_clamp`] (the clamp
+    /// is ignored) and is mutually exclusive with [`JacobianMode::Hybrid`].
+    pub damping: Option<DampingConfig<S>>,
 }
 
 impl<S: Scalar> Default for DeerConfig<S> {
@@ -156,6 +276,7 @@ impl<S: Scalar> Default for DeerConfig<S> {
             jacobian_mode: JacobianMode::Full,
             step_clamp: None,
             hybrid_threshold: S::from_f64c(1e-2),
+            damping: None,
         }
     }
 }
@@ -169,6 +290,13 @@ pub struct DeerResult<S> {
     pub iterations: usize,
     /// Whether the tolerance was met.
     pub converged: bool,
+    /// Why the solve stopped when `converged` is false (`None` on success).
+    pub divergence: Option<DivergenceReason>,
+    /// Last accepted damping λ (0 on the undamped path) — the value the
+    /// backward pass should re-solve its dual scan with.
+    pub lambda: S,
+    /// λ used by each accepted/frozen sweep (empty on the undamped path).
+    pub lambda_trace: Vec<f64>,
     /// Max-abs update per iteration (convergence trace; Fig. 6 data).
     pub err_trace: Vec<f64>,
     /// Final per-step Jacobians — reusable by the backward pass (the
@@ -197,8 +325,19 @@ pub struct BatchDeerResult<S> {
     pub iterations: Vec<usize>,
     /// Per-sequence tolerance outcome.
     pub converged: Vec<bool>,
+    /// Per-sequence stop reason when not converged (`None` on success).
+    pub divergence: Vec<Option<DivergenceReason>>,
+    /// Per-sequence last accepted damping λ (all zeros on the undamped
+    /// path) — what the backward pass reuses for its dual scans.
+    pub lambdas: Vec<S>,
+    /// Per-sequence λ trace, one entry per accepted/frozen sweep (empty
+    /// vecs on the undamped path; observability for `--verbose` training).
+    pub lambda_traces: Vec<Vec<f64>>,
     /// Per-sequence max-abs update traces.
     pub err_traces: Vec<Vec<f64>>,
+    /// Full→Diagonal per-sequence transitions taken by the
+    /// [`JacobianMode::Hybrid`] endgame (0 for the other modes).
+    pub hybrid_switches: usize,
     /// Final per-step Jacobians, `[B, T, n·n]` dense, `[B, T, n]` packed
     /// diagonal or `[B, T, n·k]` packed blocks — reusable by
     /// [`super::grad::deer_rnn_backward_batch`].
@@ -264,6 +403,9 @@ pub fn deer_rnn<S: Scalar, C: Cell<S>>(
         ys: std::mem::take(&mut b.ys),
         iterations: b.iterations[0],
         converged: b.converged[0],
+        divergence: b.divergence[0],
+        lambda: b.lambdas[0],
+        lambda_trace: std::mem::take(&mut b.lambda_traces[0]),
         err_trace: std::mem::take(&mut b.err_traces[0]),
         jacobians: std::mem::take(&mut b.jacobians),
         jac_structure: b.jac_structure,
@@ -286,6 +428,12 @@ pub fn deer_rnn_batch<S: Scalar, C: Cell<S>>(
     cfg: &DeerConfig<S>,
     batch: usize,
 ) -> BatchDeerResult<S> {
+    if cfg.damping.is_some() {
+        // ELK / quasi-ELK: the damped solver owns its own sweep structure
+        // (accept/reject inner loop); the undamped body below stays bitwise
+        // untouched for damping = None.
+        return deer_rnn_batch_damped(cell, h0s, xs, init_guess, cfg, batch);
+    }
     let n = cell.state_dim();
     let m = cell.input_dim();
     assert!(batch > 0, "batch must be ≥ 1");
@@ -308,11 +456,11 @@ pub fn deer_rnn_batch<S: Scalar, C: Cell<S>>(
     }
 
     let mut structure = effective_structure(cell, cfg.jacobian_mode);
-    let mut jl = structure.jac_len(n);
+    let jl = structure.jac_len(n);
     let sn = t_len * n;
     // Hybrid endgame: armed only while the starting structure is Dense —
     // on structured cells Full already is the cheap path.
-    let mut hybrid_pending =
+    let hybrid_pending =
         cfg.jacobian_mode == JacobianMode::Hybrid && structure == JacobianStructure::Dense;
 
     let mut yt: Vec<S> = match init_guess {
@@ -353,6 +501,13 @@ pub fn deer_rnn_batch<S: Scalar, C: Cell<S>>(
     let mut grow_streak = vec![0usize; batch];
     let mut prev_err = vec![f64::INFINITY; batch];
     let mut errs = vec![0.0f64; batch];
+    let mut divergence: Vec<Option<DivergenceReason>> = vec![None; batch];
+    // Per-sequence Hybrid endgame state: rows flip to the diagonal path
+    // individually; the packed-diagonal buffer is allocated lazily at the
+    // first switch so the non-Hybrid modes pay nothing.
+    let mut switched = vec![false; batch];
+    let mut diag_jac: Vec<S> = Vec::new();
+    let mut hybrid_switches = 0usize;
     let mut sweeps = 0usize;
     let tol = cfg.tol.to_f64c();
 
@@ -366,8 +521,372 @@ pub fn deer_rnn_batch<S: Scalar, C: Cell<S>>(
             iterations[s] += 1;
         }
 
-        // FUNCEVAL (fused with the former GTMULT): f, Jacobian and
-        // b_i = f_i − J_i·y_{i−1} in one cache-hot pass over the active grid.
+        if hybrid_switches > 0 {
+            // Per-sequence Hybrid after the first transition: partition the
+            // active rows into the dense and the already-switched
+            // (diagonal) populations and run FUNCEVAL + a masked scan for
+            // each. rhs is shared (the two populations touch disjoint
+            // rows); each population keeps its own Jacobian buffer.
+            let dense_idx: Vec<usize> =
+                act_idx.iter().copied().filter(|&s| !switched[s]).collect();
+            let diag_idx: Vec<usize> =
+                act_idx.iter().copied().filter(|&s| switched[s]).collect();
+            profile.record("FUNCEVAL", || {
+                if !dense_idx.is_empty() {
+                    eval_f_jac_batch(
+                        cell,
+                        h0s,
+                        xs,
+                        &pre,
+                        &yt,
+                        &mut rhs,
+                        &mut jac,
+                        JacobianStructure::Dense,
+                        &dense_idx,
+                        cfg.threads,
+                        n,
+                        m,
+                        t_len,
+                    );
+                }
+                if !diag_idx.is_empty() {
+                    eval_f_jac_batch(
+                        cell,
+                        h0s,
+                        xs,
+                        &pre,
+                        &yt,
+                        &mut rhs,
+                        &mut diag_jac,
+                        JacobianStructure::Diagonal,
+                        &diag_idx,
+                        cfg.threads,
+                        n,
+                        m,
+                        t_len,
+                    );
+                }
+            });
+            profile.record("INVLIN", || {
+                if !dense_idx.is_empty() {
+                    let mut mask = vec![false; batch];
+                    for &s in &dense_idx {
+                        mask[s] = true;
+                    }
+                    par_scan_apply_batch_ws(
+                        &jac,
+                        &rhs,
+                        h0s,
+                        &mut y_next,
+                        n,
+                        t_len,
+                        batch,
+                        Some(&mask),
+                        cfg.threads,
+                        &mut scan_ws,
+                    );
+                }
+                if !diag_idx.is_empty() {
+                    let mut mask = vec![false; batch];
+                    for &s in &diag_idx {
+                        mask[s] = true;
+                    }
+                    par_diag_scan_apply_batch_ws(
+                        &diag_jac,
+                        &rhs,
+                        h0s,
+                        &mut y_next,
+                        n,
+                        t_len,
+                        batch,
+                        Some(&mask),
+                        cfg.threads,
+                        &mut scan_ws,
+                    );
+                }
+            });
+        } else {
+            // FUNCEVAL (fused with the former GTMULT): f, Jacobian and
+            // b_i = f_i − J_i·y_{i−1} in one cache-hot pass over the active
+            // grid.
+            profile.record("FUNCEVAL", || {
+                eval_f_jac_batch(
+                    cell,
+                    h0s,
+                    xs,
+                    &pre,
+                    &yt,
+                    &mut rhs,
+                    &mut jac,
+                    structure,
+                    &act_idx,
+                    cfg.threads,
+                    n,
+                    m,
+                    t_len,
+                );
+            });
+
+            // INVLIN: ONE fused batched scan call over the active B'×T
+            // element grid, dispatched on structure (diagonal compose is
+            // O(n), not O(n³)); frozen sequences are masked out.
+            profile.record("INVLIN", || match structure {
+                JacobianStructure::Dense => {
+                    par_scan_apply_batch_ws(
+                        &jac,
+                        &rhs,
+                        h0s,
+                        &mut y_next,
+                        n,
+                        t_len,
+                        batch,
+                        Some(&active),
+                        cfg.threads,
+                        &mut scan_ws,
+                    );
+                }
+                JacobianStructure::Diagonal => {
+                    par_diag_scan_apply_batch_ws(
+                        &jac,
+                        &rhs,
+                        h0s,
+                        &mut y_next,
+                        n,
+                        t_len,
+                        batch,
+                        Some(&active),
+                        cfg.threads,
+                        &mut scan_ws,
+                    );
+                }
+                JacobianStructure::Block { k } => {
+                    par_block_scan_apply_batch_ws(
+                        &jac,
+                        &rhs,
+                        h0s,
+                        &mut y_next,
+                        n,
+                        k,
+                        t_len,
+                        batch,
+                        Some(&active),
+                        cfg.threads,
+                        &mut scan_ws,
+                    );
+                }
+            });
+        }
+
+        // Trajectory update + per-sequence error reduction, parallel over
+        // active sequences (cache-hot: runs right after the scan). With a
+        // trust radius configured the update is clamped component-wise.
+        match cfg.step_clamp {
+            None => {
+                // Non-finite hardening: scan each active row's TRIAL slab
+                // explicitly before committing it. The explicit pass is
+                // load-bearing — `max_abs_diff` folds with `d > m`, which a
+                // NaN never wins, so a NaN-poisoned row would otherwise
+                // report a tiny (even zero) update and be declared
+                // converged. Poisoned rows freeze with an infinite error
+                // and KEEP their last finite iterate (they are filtered
+                // out of the update); finite rows proceed on the exact same
+                // arithmetic as before, and with no poisoned row the
+                // filtered index list is the original one.
+                let mut finite_idx: Vec<usize> = Vec::with_capacity(act_idx.len());
+                for &s in &act_idx {
+                    if y_next[s * sn..(s + 1) * sn].iter().any(|&v| !v.is_finite()) {
+                        errs[s] = f64::INFINITY;
+                    } else {
+                        finite_idx.push(s);
+                    }
+                }
+                update_and_errs(
+                    &mut yt,
+                    &mut y_next,
+                    &mut errs,
+                    &finite_idx,
+                    batch,
+                    cfg.threads,
+                    sn,
+                );
+            }
+            Some(c) => {
+                update_and_errs_clamped(&mut yt, &y_next, &mut errs, &act_idx, c, cfg.threads, sn)
+            }
+        }
+
+        // Per-sequence convergence bookkeeping (masking).
+        let thr = cfg.hybrid_threshold.to_f64c();
+        for &s in &act_idx {
+            let err = errs[s];
+            err_traces[s].push(err);
+            if !err.is_finite() {
+                divergence[s] = Some(DivergenceReason::NonFinite);
+                active[s] = false; // diverged to NaN/inf
+                continue;
+            }
+            if err < tol {
+                converged[s] = true;
+                active[s] = false;
+                continue;
+            }
+            if err > prev_err[s] {
+                grow_streak[s] += 1;
+                if grow_streak[s] >= cfg.divergence_patience {
+                    divergence[s] = Some(DivergenceReason::ErrorGrowth);
+                    active[s] = false;
+                    continue;
+                }
+            } else {
+                grow_streak[s] = 0;
+            }
+            prev_err[s] = err;
+            // Per-sequence Hybrid endgame: THIS row's residual is inside
+            // the basin — flip it to the diagonal path for its remaining
+            // sweeps; stragglers stay dense.
+            if hybrid_pending && !switched[s] && err < thr {
+                if diag_jac.is_empty() {
+                    diag_jac = vec![S::zero(); batch * t_len * n];
+                }
+                switched[s] = true;
+                hybrid_switches += 1;
+            }
+        }
+    }
+
+    // Hybrid layout reconciliation: if any row took the endgame, the
+    // returned buffer is uniformly packed-diagonal — rows that never
+    // switched (converged or froze while still dense) have their final
+    // dense Jacobians diagonal-extracted. If NO row ever crossed the
+    // threshold the solve was bitwise-identical to Full and reports the
+    // dense layout untouched.
+    if hybrid_switches > 0 {
+        for s in 0..batch {
+            if !switched[s] {
+                for i in 0..t_len {
+                    for j in 0..n {
+                        diag_jac[(s * t_len + i) * n + j] =
+                            jac[(s * t_len + i) * jl + j * n + j];
+                    }
+                }
+            }
+        }
+        jac = diag_jac;
+        structure = JacobianStructure::Diagonal;
+    }
+
+    for s in 0..batch {
+        if !converged[s] && divergence[s].is_none() {
+            divergence[s] = Some(DivergenceReason::MaxIters);
+        }
+    }
+
+    BatchDeerResult {
+        batch,
+        ys: yt,
+        iterations,
+        converged,
+        divergence,
+        lambdas: vec![S::zero(); batch],
+        lambda_traces: vec![Vec::new(); batch],
+        err_traces,
+        hybrid_switches,
+        jacobians: jac,
+        jac_structure: structure,
+        profile,
+        sweeps,
+    }
+}
+
+/// The damped (ELK / quasi-ELK) batched Newton solver — the
+/// [`DeerConfig::damping`]`.is_some()` face of [`deer_rnn_batch`]; see the
+/// module-level *Damped Newton* contract for the accept/reject semantics.
+///
+/// Every sweep linearises once (FUNCEVAL), then runs the Levenberg–
+/// Marquardt inner loop: a damped Kalman-form INVLIN over the still-pending
+/// rows with their per-row λ (anchored at the current iterate), an f-only
+/// RESIDUAL merit evaluation of the trial trajectory, and a per-row
+/// accept (commit + shrink λ) / reject (grow λ, re-solve the SAME
+/// linearisation) decision. Rejections never freeze a row outright — only
+/// the `lambda_max` wall (or a non-finite trial at the wall) does, and the
+/// row keeps its last accepted finite iterate.
+fn deer_rnn_batch_damped<S: Scalar, C: Cell<S>>(
+    cell: &C,
+    h0s: &[S],
+    xs: &[S],
+    init_guess: Option<&[S]>,
+    cfg: &DeerConfig<S>,
+    batch: usize,
+) -> BatchDeerResult<S> {
+    let damp = cfg.damping.expect("damped path requires cfg.damping");
+    let n = cell.state_dim();
+    let m = cell.input_dim();
+    assert!(batch > 0, "batch must be ≥ 1");
+    assert_eq!(h0s.len(), batch * n, "h0s layout ([B, n])");
+    assert_eq!(xs.len() % (batch * m), 0, "xs layout ([B, T, m])");
+    assert!(
+        cfg.jacobian_mode != JacobianMode::Hybrid,
+        "ELK damping and the Hybrid endgame are mutually exclusive (the mid-solve \
+         structure switch would change what a retried λ re-solves); pick Full (ELK) \
+         or DiagonalApprox/BlockApprox (quasi-ELK) explicitly"
+    );
+    let t_len = xs.len() / (batch * m);
+    let structure = effective_structure(cell, cfg.jacobian_mode);
+    let jl = structure.jac_len(n);
+    let sn = t_len * n;
+
+    let mut yt: Vec<S> = match init_guess {
+        Some(g) => {
+            assert_eq!(g.len(), batch * sn, "init_guess layout ([B, T, n])");
+            g.to_vec()
+        }
+        None => vec![S::zero(); batch * sn],
+    };
+    let mut jac = vec![S::zero(); batch * t_len * jl];
+    let mut rhs = vec![S::zero(); batch * sn];
+    let mut y_next = vec![S::zero(); batch * sn];
+    let mut scan_ws: ScanWorkspace<S> = ScanWorkspace::new();
+
+    let pre_len = cell.x_precompute_len();
+    let mut pre = vec![S::zero(); batch * t_len * pre_len];
+    if pre_len > 0 {
+        for s in 0..batch {
+            cell.precompute_x(
+                &xs[s * t_len * m..(s + 1) * t_len * m],
+                &mut pre[s * t_len * pre_len..(s + 1) * t_len * pre_len],
+            );
+        }
+    }
+
+    let mut profile = PhaseProfile::new();
+    let mut err_traces: Vec<Vec<f64>> = vec![Vec::new(); batch];
+    let mut lambda_traces: Vec<Vec<f64>> = vec![Vec::new(); batch];
+    let mut converged = vec![false; batch];
+    let mut iterations = vec![0usize; batch];
+    let mut active = vec![true; batch];
+    let mut divergence: Vec<Option<DivergenceReason>> = vec![None; batch];
+    // Current λ per row, the λ the most recent ACCEPTED step solved with
+    // (what the backward dual reuses), and the residual of the current
+    // iterate (the merit the next trial must beat; ∞ until first accept).
+    let mut lambdas: Vec<S> = vec![damp.lambda0; batch];
+    let mut accepted_lambda: Vec<S> = vec![damp.lambda0; batch];
+    let mut r_cur = vec![f64::INFINITY; batch];
+    let mut r_trial = vec![0.0f64; batch];
+    let mut errs = vec![0.0f64; batch];
+    let mut mask = vec![false; batch];
+    let mut sweeps = 0usize;
+    let tol = cfg.tol.to_f64c();
+
+    for _ in 0..cfg.max_iter {
+        let act_idx: Vec<usize> = (0..batch).filter(|&s| active[s]).collect();
+        if act_idx.is_empty() {
+            break;
+        }
+        sweeps += 1;
+        for &s in &act_idx {
+            iterations[s] += 1;
+        }
+
         profile.record("FUNCEVAL", || {
             eval_f_jac_batch(
                 cell,
@@ -386,117 +905,105 @@ pub fn deer_rnn_batch<S: Scalar, C: Cell<S>>(
             );
         });
 
-        // INVLIN: ONE fused batched scan call over the active B'×T element
-        // grid, dispatched on structure (diagonal compose is O(n), not
-        // O(n³)); frozen sequences are masked out.
-        profile.record("INVLIN", || match structure {
-            JacobianStructure::Dense => {
-                par_scan_apply_batch_ws(
+        // LM inner loop: jac/rhs are frozen; each pass re-solves only the
+        // still-pending rows (accepted rows' committed slabs are masked
+        // out of later scans, so their trajectories cannot be perturbed).
+        let mut pending: Vec<usize> = act_idx.clone();
+        let mut rejects = 0usize;
+        while !pending.is_empty() {
+            for f in mask.iter_mut() {
+                *f = false;
+            }
+            for &s in &pending {
+                mask[s] = true;
+            }
+            profile.record("INVLIN", || {
+                par_kalman_scan_apply_batch_ws(
                     &jac,
                     &rhs,
+                    &yt,
                     h0s,
                     &mut y_next,
                     n,
+                    structure,
                     t_len,
                     batch,
-                    Some(&active),
+                    &lambdas,
+                    Some(&mask),
                     cfg.threads,
                     &mut scan_ws,
                 );
-            }
-            JacobianStructure::Diagonal => {
-                par_diag_scan_apply_batch_ws(
-                    &jac,
-                    &rhs,
+            });
+            profile.record("RESIDUAL", || {
+                residual_batch(
+                    cell,
                     h0s,
-                    &mut y_next,
-                    n,
-                    t_len,
-                    batch,
-                    Some(&active),
+                    xs,
+                    &y_next,
+                    &mut r_trial,
+                    &pending,
                     cfg.threads,
-                    &mut scan_ws,
-                );
-            }
-            JacobianStructure::Block { k } => {
-                par_block_scan_apply_batch_ws(
-                    &jac,
-                    &rhs,
-                    h0s,
-                    &mut y_next,
                     n,
-                    k,
+                    m,
                     t_len,
-                    batch,
-                    Some(&active),
-                    cfg.threads,
-                    &mut scan_ws,
                 );
-            }
-        });
+            });
 
-        // Trajectory update + per-sequence error reduction, parallel over
-        // active sequences (cache-hot: runs right after the scan). With a
-        // trust radius configured the update is clamped component-wise.
-        match cfg.step_clamp {
-            None => {
-                update_and_errs(&mut yt, &mut y_next, &mut errs, &act_idx, batch, cfg.threads, sn)
-            }
-            Some(c) => {
-                update_and_errs_clamped(&mut yt, &y_next, &mut errs, &act_idx, c, cfg.threads, sn)
-            }
-        }
-
-        // Per-sequence convergence bookkeeping (masking).
-        for &s in &act_idx {
-            let err = errs[s];
-            err_traces[s].push(err);
-            if !err.is_finite() {
-                active[s] = false; // diverged to NaN/inf
-                continue;
-            }
-            if err < tol {
-                converged[s] = true;
-                active[s] = false;
-                continue;
-            }
-            if err > prev_err[s] {
-                grow_streak[s] += 1;
-                if grow_streak[s] >= cfg.divergence_patience {
-                    active[s] = false;
-                    continue;
-                }
-            } else {
-                grow_streak[s] = 0;
-            }
-            prev_err[s] = err;
-        }
-
-        // Hybrid endgame switch: once every still-active sequence's
-        // residual is below the threshold, drop from the dense structure to
-        // DiagonalApprox for the remaining sweeps. Already-stored dense
-        // Jacobians (including those of sequences that froze earlier) are
-        // converted to the packed diagonal layout so the returned
-        // `jacobians` buffer is consistent with the reported structure.
-        if hybrid_pending && active.iter().any(|&a| a) {
-            let thr = cfg.hybrid_threshold.to_f64c();
-            let all_below =
-                (0..batch).filter(|&s| active[s]).all(|s| errs[s].is_finite() && errs[s] < thr);
-            if all_below {
-                let mut diag = vec![S::zero(); batch * t_len * n];
-                for s in 0..batch {
-                    for i in 0..t_len {
-                        for j in 0..n {
-                            diag[(s * t_len + i) * n + j] =
-                                jac[(s * t_len + i) * jl + j * n + j];
-                        }
+            let mut still: Vec<usize> = Vec::new();
+            for &s in &pending {
+                let r = r_trial[s];
+                let lam_used = lambdas[s].to_f64c();
+                if r.is_finite() && (r < r_cur[s] || r < tol) {
+                    // Accept: commit the trial, record the step size as the
+                    // sweep error, relax λ (snap to the exact undamped
+                    // solve below lambda_min).
+                    let slab = &mut yt[s * sn..(s + 1) * sn];
+                    let src = &y_next[s * sn..(s + 1) * sn];
+                    let err = crate::linalg::max_abs_diff(&slab[..], src).to_f64c();
+                    slab.copy_from_slice(src);
+                    errs[s] = err;
+                    r_cur[s] = r;
+                    err_traces[s].push(err);
+                    lambda_traces[s].push(lam_used);
+                    accepted_lambda[s] = lambdas[s];
+                    let next = lambdas[s] * damp.shrink;
+                    lambdas[s] = if next < damp.lambda_min { S::zero() } else { next };
+                    if err < tol && r < tol {
+                        converged[s] = true;
+                        active[s] = false;
+                    }
+                } else {
+                    // Reject: grow λ and retry the same linearisation; a
+                    // fully-relaxed (λ = 0) row restarts from lambda0, or
+                    // from 1 when lambda0 itself is 0 ("damp on demand").
+                    let grown = if lambdas[s] == S::zero() {
+                        if damp.lambda0 == S::zero() { S::one() } else { damp.lambda0 }
+                    } else {
+                        lambdas[s] * damp.grow
+                    };
+                    if grown > damp.lambda_max || rejects + 1 >= damp.max_rejects {
+                        err_traces[s].push(f64::INFINITY);
+                        lambda_traces[s].push(lam_used);
+                        divergence[s] = Some(if r.is_finite() {
+                            DivergenceReason::LambdaExhausted
+                        } else {
+                            DivergenceReason::NonFinite
+                        });
+                        active[s] = false;
+                    } else {
+                        lambdas[s] = grown;
+                        still.push(s);
                     }
                 }
-                jac = diag;
-                structure = JacobianStructure::Diagonal;
-                jl = n;
-                hybrid_pending = false;
             }
+            pending = still;
+            rejects += 1;
+        }
+    }
+
+    for s in 0..batch {
+        if !converged[s] && divergence[s].is_none() {
+            divergence[s] = Some(DivergenceReason::MaxIters);
         }
     }
 
@@ -505,12 +1012,93 @@ pub fn deer_rnn_batch<S: Scalar, C: Cell<S>>(
         ys: yt,
         iterations,
         converged,
+        divergence,
+        lambdas: accepted_lambda,
+        lambda_traces,
         err_traces,
+        hybrid_switches: 0,
         jacobians: jac,
         jac_structure: structure,
         profile,
         sweeps,
     }
+}
+
+/// Damped-step merit function: for every listed sequence,
+/// `r_out[s] = max_i |f(ŷ_{i−1}, x_i) − ŷ_i|` over the trial trajectory
+/// (`ŷ_0`'s predecessor seeded from `h0s`), with any non-finite trial state
+/// or f-output reported as `f64::INFINITY`. The explicit finiteness check
+/// is load-bearing: NaN never wins a max-fold, so a poisoned trajectory
+/// would otherwise report a deceptively small residual. An f-only pass (no
+/// Jacobian), scheduled whole-sequences-per-worker like the other per-sweep
+/// phases; worker assignment never affects the per-row result.
+#[allow(clippy::too_many_arguments)]
+fn residual_batch<S: Scalar, C: Cell<S>>(
+    cell: &C,
+    h0s: &[S],
+    xs: &[S],
+    trial: &[S],
+    r_out: &mut [f64],
+    idx: &[usize],
+    threads: usize,
+    n: usize,
+    m: usize,
+    t_len: usize,
+) {
+    let sn = t_len * n;
+    let sm = t_len * m;
+    let row = |s: usize| -> f64 {
+        let mut ws = vec![S::zero(); cell.ws_len()];
+        let mut fb = vec![S::zero(); n];
+        let mut r = 0.0f64;
+        for i in 0..t_len {
+            let h_prev = if i == 0 {
+                &h0s[s * n..(s + 1) * n]
+            } else {
+                &trial[s * sn + (i - 1) * n..s * sn + i * n]
+            };
+            cell.step(h_prev, &xs[s * sm + i * m..s * sm + (i + 1) * m], &mut fb, &mut ws);
+            for j in 0..n {
+                let y = trial[s * sn + i * n + j];
+                if !y.is_finite() || !fb[j].is_finite() {
+                    return f64::INFINITY;
+                }
+                let d = (fb[j] - y).abs().to_f64c();
+                if d > r {
+                    r = d;
+                }
+            }
+        }
+        r
+    };
+    if threads <= 1 || idx.len() <= 1 {
+        for &s in idx {
+            r_out[s] = row(s);
+        }
+        return;
+    }
+    let workers = threads.min(idx.len());
+    let row = &row;
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                scope.spawn(move || {
+                    let mut out = Vec::new();
+                    let mut k = w;
+                    while k < idx.len() {
+                        out.push((idx[k], row(idx[k])));
+                        k += workers;
+                    }
+                    out
+                })
+            })
+            .collect();
+        for h in handles {
+            for (s, e) in h.join().unwrap() {
+                r_out[s] = e;
+            }
+        }
+    });
 }
 
 /// Trust-region variant of [`update_and_errs`]: applies
@@ -1815,5 +2403,238 @@ mod tests {
         assert_eq!(hyb.jac_structure, JacobianStructure::Diagonal);
         assert_eq!(full.ys, hyb.ys);
         assert_eq!(full.iterations, hyb.iterations);
+    }
+
+    /// Per-sequence Hybrid: with a batch of mixed difficulty every row
+    /// takes its own Full→Diagonal transition, the switch count is
+    /// reported, and the returned buffer is uniformly packed-diagonal.
+    #[test]
+    fn hybrid_switch_is_per_sequence() {
+        let mut rng = Rng::new(80);
+        let (n, m, t, b) = (4usize, 3usize, 600usize, 3usize);
+        let cell: Gru<f64> = Gru::new(n, m, &mut rng);
+        let mut xs = vec![0.0; b * t * m];
+        rng.fill_normal(&mut xs, 1.0);
+        // row 2 gets amplified inputs — a harder (slower-converging) solve
+        for v in xs[2 * t * m..].iter_mut() {
+            *v *= 3.0;
+        }
+        let h0s = vec![0.0; b * n];
+        let cfg = DeerConfig {
+            jacobian_mode: JacobianMode::Hybrid,
+            max_iter: 300,
+            ..Default::default()
+        };
+        let res = deer_rnn_batch(&cell, &h0s, &xs, None, &cfg, b);
+        assert!(res.converged.iter().all(|&c| c), "traces: {:?}", res.err_traces);
+        assert!(res.hybrid_switches >= 1, "endgame never fired");
+        assert!(res.hybrid_switches <= b);
+        assert_eq!(res.jac_structure, JacobianStructure::Diagonal);
+        assert_eq!(res.jacobians.len(), b * t * n, "uniform packed-diagonal layout");
+        for s in 0..b {
+            assert!(res.divergence[s].is_none());
+            let seq = seq_rnn(&cell, &vec![0.0; n], &xs[s * t * m..(s + 1) * t * m]);
+            let diff =
+                crate::linalg::max_abs_diff(&seq, &res.ys[s * t * n..(s + 1) * t * n]);
+            assert!(diff < 1e-6, "row {s} vs sequential: {diff}");
+        }
+    }
+
+    // ---- ELK / quasi-ELK damping ----
+
+    /// Benign fixture: the damped solve must reach the same fixed point as
+    /// plain DEER, report no divergence, and keep the per-sweep λ trace
+    /// aligned with the iteration count.
+    #[test]
+    fn elk_damped_matches_sequential_on_benign() {
+        let mut rng = Rng::new(81);
+        let (n, m, t) = (4usize, 3usize, 500usize);
+        let cell: Gru<f64> = Gru::new(n, m, &mut rng);
+        let xs = random_inputs(m, t, 30);
+        let h0 = vec![0.0; n];
+        let seq = seq_rnn(&cell, &h0, &xs);
+        let cfg = DeerConfig {
+            damping: Some(DampingConfig::default()),
+            max_iter: 300,
+            ..Default::default()
+        };
+        let res = deer_rnn(&cell, &h0, &xs, None, &cfg);
+        assert!(res.converged, "trace: {:?}", res.err_trace);
+        assert!(res.divergence.is_none());
+        assert_eq!(
+            res.lambda_trace.len(),
+            res.iterations,
+            "one λ entry per participated sweep"
+        );
+        assert!(res.lambda >= 0.0);
+        let diff = crate::linalg::max_abs_diff(&seq, &res.ys);
+        assert!(diff < 1e-6, "ELK vs sequential: {diff}");
+    }
+
+    /// λ₀ = 0 ("damp on demand"): a benign solve stays effectively
+    /// undamped — every trial solves through the plain kernels — and still
+    /// reaches the sequential trajectory.
+    #[test]
+    fn elk_lambda0_zero_stays_undamped_on_benign() {
+        let mut rng = Rng::new(82);
+        let (n, m, t) = (3usize, 2usize, 400usize);
+        let cell: Gru<f64> = Gru::new(n, m, &mut rng);
+        let xs = random_inputs(m, t, 31);
+        let h0 = vec![0.0; n];
+        let seq = seq_rnn(&cell, &h0, &xs);
+        let cfg = DeerConfig {
+            damping: Some(DampingConfig { lambda0: 0.0, ..Default::default() }),
+            max_iter: 300,
+            ..Default::default()
+        };
+        let res = deer_rnn(&cell, &h0, &xs, None, &cfg);
+        assert!(res.converged, "trace: {:?}", res.err_trace);
+        // The first trial always beats the ∞ sentinel, so sweep 1 commits
+        // at exactly λ = 0 (the plain kernels); later sweeps may briefly
+        // engage damping if a mid-path residual is non-monotone.
+        assert_eq!(res.lambda_trace[0], 0.0);
+        let diff = crate::linalg::max_abs_diff(&seq, &res.ys);
+        assert!(diff < 1e-6, "λ₀=0 ELK vs sequential: {diff}");
+    }
+
+    /// Quasi-ELK over the Block(k) packed path: damping composes with the
+    /// structured kernels (block quasi-DEER on a dense GRU) and lands on
+    /// the sequential trajectory.
+    #[test]
+    fn elk_block_structured_damped_converges() {
+        let mut rng = Rng::new(83);
+        let (n, m, t) = (4usize, 3usize, 400usize);
+        let cell: Gru<f64> = Gru::new(n, m, &mut rng);
+        let xs = random_inputs(m, t, 32);
+        let h0 = vec![0.0; n];
+        let seq = seq_rnn(&cell, &h0, &xs);
+        let cfg = DeerConfig {
+            jacobian_mode: JacobianMode::BlockApprox,
+            damping: Some(DampingConfig::default()),
+            max_iter: 400,
+            ..Default::default()
+        };
+        let res = deer_rnn(&cell, &h0, &xs, None, &cfg);
+        assert!(res.converged, "trace: {:?}", res.err_trace);
+        assert_eq!(res.jac_structure, JacobianStructure::Block { k: 2 });
+        let diff = crate::linalg::max_abs_diff(&seq, &res.ys);
+        assert!(diff < 1e-6, "block quasi-ELK vs sequential: {diff}");
+    }
+
+    /// The ELK headline: the committed trained-GRU divergence fixture
+    /// (`testkit::fixtures`) whose undamped quasi-DEER first sweep
+    /// overflows f32 past its ~3.3k-step horizon must converge under
+    /// adaptive λ damping — same mechanism pin as the step_clamp recovery
+    /// test, but through the accept/reject LM loop instead of a hard trust
+    /// radius. (`tests/divergence_fixture.rs` pins the full-horizon story;
+    /// this keeps a solver-level witness next to the loop it exercises.)
+    #[test]
+    fn elk_recovers_diverging_trained_gru() {
+        use crate::testkit::fixtures;
+        let (n, _) = fixtures::DIVERGING_GRU_DIMS;
+        let t = 6_000usize; // past the fixture's f32 overflow horizon
+        let cell = fixtures::diverging_gru();
+        let xs = fixtures::diverging_gru_inputs(t);
+        let h0 = vec![0.0f32; n];
+        let run = |damping: Option<DampingConfig<f32>>| -> DeerResult<f32> {
+            let cfg = DeerConfig {
+                jacobian_mode: JacobianMode::DiagonalApprox,
+                max_iter: 400,
+                damping,
+                ..Default::default()
+            };
+            deer_rnn(&cell, &h0, &xs, None, &cfg)
+        };
+
+        let undamped = run(None);
+        assert!(!undamped.converged, "fixture no longer defeats undamped quasi-DEER");
+        assert!(undamped.divergence.is_some(), "failed solve must carry a reason");
+
+        let damped = run(Some(DampingConfig::default()));
+        assert!(
+            damped.converged,
+            "undamped quasi-DEER diverged but ELK did not recover it (trace: {:?})",
+            damped.err_trace
+        );
+        let seq = seq_rnn(&cell, &h0, &xs);
+        let diff = crate::linalg::max_abs_diff(&seq, &damped.ys);
+        assert!(diff < 1e-3, "ELK converged to the wrong trajectory ({diff})");
+    }
+
+    /// Hybrid and damping are mutually exclusive by contract.
+    #[test]
+    #[should_panic(expected = "mutually exclusive")]
+    fn elk_rejects_hybrid_mode() {
+        let mut rng = Rng::new(84);
+        let cell: Gru<f64> = Gru::new(2, 2, &mut rng);
+        let xs = random_inputs(2, 8, 33);
+        let cfg = DeerConfig {
+            jacobian_mode: JacobianMode::Hybrid,
+            damping: Some(DampingConfig::default()),
+            ..Default::default()
+        };
+        let _ = deer_rnn(&cell, &vec![0.0; 2], &xs, None, &cfg);
+    }
+
+    // ---- non-finite hardening ----
+
+    /// Poisoned-fixture test: a NaN in ONE row's inputs must freeze exactly
+    /// that row with [`DivergenceReason::NonFinite`] — keeping its last
+    /// finite iterate — while the other rows converge to their sequential
+    /// trajectories untouched. Pins both the per-row scan-lane isolation
+    /// and the explicit finiteness check (a NaN update never wins the
+    /// max-fold, so without the explicit scan the poisoned row would report
+    /// a tiny error and be declared converged).
+    #[test]
+    fn nonfinite_input_poisons_only_its_row() {
+        let mut rng = Rng::new(85);
+        let (n, m, t, b) = (4usize, 3usize, 300usize, 3usize);
+        let cell: Gru<f64> = Gru::new(n, m, &mut rng);
+        let mut xs = vec![0.0; b * t * m];
+        rng.fill_normal(&mut xs, 1.0);
+        xs[1 * t * m + 7] = f64::NAN; // poison row 1, step 2
+        let h0s = vec![0.0; b * n];
+        let res = deer_rnn_batch(&cell, &h0s, &xs, None, &DeerConfig::default(), b);
+        assert!(!res.converged[1], "poisoned row must not report convergence");
+        assert_eq!(res.divergence[1], Some(DivergenceReason::NonFinite));
+        assert!(
+            res.ys[t * n..2 * t * n].iter().all(|v| v.is_finite()),
+            "poisoned row must keep its last finite iterate"
+        );
+        for s in [0usize, 2] {
+            assert!(res.converged[s], "row {s} trace: {:?}", res.err_traces[s]);
+            assert!(res.divergence[s].is_none());
+            let seq = seq_rnn(&cell, &vec![0.0; n], &xs[s * t * m..(s + 1) * t * m]);
+            let diff =
+                crate::linalg::max_abs_diff(&seq, &res.ys[s * t * n..(s + 1) * t * n]);
+            assert!(diff < 1e-6, "row {s} was perturbed by the poisoned lane: {diff}");
+        }
+    }
+
+    /// The damped path hardens the same way: a poisoned row rejects every
+    /// trial (∞ residual), exhausts λ, and freezes cleanly while the
+    /// neighbours converge.
+    #[test]
+    fn nonfinite_input_under_damping_freezes_cleanly() {
+        let mut rng = Rng::new(86);
+        let (n, m, t, b) = (3usize, 2usize, 200usize, 2usize);
+        let cell: Gru<f64> = Gru::new(n, m, &mut rng);
+        let mut xs = vec![0.0; b * t * m];
+        rng.fill_normal(&mut xs, 1.0);
+        xs[t * m + 3] = f64::INFINITY; // poison row 1
+        let h0s = vec![0.0; b * n];
+        let cfg = DeerConfig {
+            damping: Some(DampingConfig::default()),
+            max_iter: 200,
+            ..Default::default()
+        };
+        let res = deer_rnn_batch(&cell, &h0s, &xs, None, &cfg, b);
+        assert!(res.converged[0], "healthy row trace: {:?}", res.err_traces[0]);
+        assert!(!res.converged[1]);
+        assert_eq!(res.divergence[1], Some(DivergenceReason::NonFinite));
+        assert!(res.ys[t * n..].iter().all(|v| v.is_finite()));
+        let seq = seq_rnn(&cell, &vec![0.0; n], &xs[..t * m]);
+        let diff = crate::linalg::max_abs_diff(&seq, &res.ys[..t * n]);
+        assert!(diff < 1e-6, "healthy row perturbed: {diff}");
     }
 }

@@ -1191,6 +1191,170 @@ pub fn block_bench_json(points: &[BlockBenchPoint]) -> Json {
     ])
 }
 
+/// The horizon grid of the ELK bench (`--exp elk`), all on the committed
+/// diverging-GRU fixture (`testkit::fixtures`): its f32 prefix products
+/// overflow near step ~3.3k, so the short horizons are the benign points
+/// both solvers converge on — the damping-overhead gate in
+/// `scripts/bench_compare.sh` reads their per-iteration ratio — and the
+/// long horizons are the divergence regime where only ELK converges.
+pub fn elk_bench_grid(fast: bool) -> Vec<usize> {
+    if fast {
+        vec![400, 6_000]
+    } else {
+        vec![400, 2_048, 6_000, 16_384]
+    }
+}
+
+/// One point of the plain vs ELK (adaptive-λ damped) quasi-DEER bench.
+#[derive(Debug, Clone)]
+pub struct ElkBenchPoint {
+    pub t_len: usize,
+    pub plain_iters: usize,
+    pub elk_iters: usize,
+    pub plain_converged: bool,
+    pub elk_converged: bool,
+    /// Why the plain solve stopped without converging ("-" if it converged).
+    pub plain_divergence: String,
+    /// Whole-iteration cost per trajectory element, ns: FUNCEVAL + INVLIN
+    /// (+ RESIDUAL on the damped path) divided by iterations and T. The
+    /// acceptance gate reads `damping_overhead` = elk / plain on the benign
+    /// point.
+    pub plain_iter_ns_per_step: f64,
+    pub elk_iter_ns_per_step: f64,
+    pub damping_overhead: f64,
+    /// Max |Δ| of the ELK trajectory against sequential (when converged).
+    pub elk_max_err: f64,
+    /// λ the ELK solve ended on (0 once the damping has annealed away).
+    pub elk_final_lambda: f64,
+}
+
+/// ELK bench on the committed trained-GRU divergence fixture (f32,
+/// quasi/diagonal Jacobians, the same weights + input stream the
+/// `elk_recovers_diverging_trained_gru` regression test pins): plain
+/// undamped quasi-DEER vs the adaptive Levenberg–Marquardt (ELK) solve,
+/// swept over the horizon that flips the fixture from benign (short T)
+/// to overflowing (T past ~3.3k). Reports convergence outcomes, iteration
+/// counts and the per-iteration damping overhead. Emits the human table
+/// plus machine-readable points for `BENCH_elk.json`.
+pub fn elk_bench(lens: &[usize]) -> (Table, Vec<ElkBenchPoint>) {
+    use crate::deer::newton::DampingConfig;
+    use crate::testkit::fixtures;
+    let (n, _) = fixtures::DIVERGING_GRU_DIMS;
+    let mut table = Table::new(&[
+        "T",
+        "iters plain/elk",
+        "conv plain/elk",
+        "plain reason",
+        "iter plain",
+        "iter elk",
+        "overhead",
+        "max |Δ| elk",
+        "final λ",
+    ]);
+    let mut points = Vec::new();
+    let cell = fixtures::diverging_gru();
+    for &t_len in lens {
+        let xs = fixtures::diverging_gru_inputs(t_len);
+        let h0 = vec![0.0f32; n];
+        let mk = |damping: Option<DampingConfig<f32>>| DeerConfig::<f32> {
+            jacobian_mode: JacobianMode::DiagonalApprox,
+            max_iter: 400,
+            damping,
+            ..Default::default()
+        };
+        let plain = deer_rnn(&cell, &h0, &xs, None, &mk(None));
+        let elk = deer_rnn(&cell, &h0, &xs, None, &mk(Some(DampingConfig::default())));
+        let seq = seq_rnn(&cell, &h0, &xs);
+        let elk_err = crate::linalg::max_abs_diff(&seq, &elk.ys).to_f64c();
+
+        // Whole-iteration cost = every phase the solver runs per sweep;
+        // the damped path adds RESIDUAL (its profile key is zero on the
+        // plain path), so one expression covers both.
+        let iter_ns = |r: &crate::deer::DeerResult<f32>| {
+            (r.profile.get("FUNCEVAL") + r.profile.get("INVLIN") + r.profile.get("RESIDUAL"))
+                / r.iterations.max(1) as f64
+                / t_len as f64
+                * 1e9
+        };
+        let plain_ns = iter_ns(&plain);
+        let elk_ns = iter_ns(&elk);
+        let p = ElkBenchPoint {
+            t_len,
+            plain_iters: plain.iterations,
+            elk_iters: elk.iterations,
+            plain_converged: plain.converged,
+            elk_converged: elk.converged,
+            plain_divergence: plain
+                .divergence
+                .map(|d| d.label().to_string())
+                .unwrap_or_else(|| "-".to_string()),
+            plain_iter_ns_per_step: plain_ns,
+            elk_iter_ns_per_step: elk_ns,
+            damping_overhead: if plain_ns > 0.0 { elk_ns / plain_ns } else { 1.0 },
+            elk_max_err: elk_err,
+            elk_final_lambda: elk.lambda.to_f64c(),
+        };
+        table.row(vec![
+            t_len.to_string(),
+            format!("{}/{}", p.plain_iters, p.elk_iters),
+            format!(
+                "{}/{}",
+                if p.plain_converged { "yes" } else { "NO" },
+                if p.elk_converged { "yes" } else { "NO" }
+            ),
+            p.plain_divergence.clone(),
+            format!("{:.1} ns", p.plain_iter_ns_per_step),
+            format!("{:.1} ns", p.elk_iter_ns_per_step),
+            sig3(p.damping_overhead),
+            format!("{:.1e}", p.elk_max_err),
+            format!("{:.1e}", p.elk_final_lambda),
+        ]);
+        points.push(p);
+    }
+    (table, points)
+}
+
+/// Serialize elk-bench points as the `BENCH_elk.json` document.
+pub fn elk_bench_json(points: &[ElkBenchPoint]) -> Json {
+    json::obj(vec![
+        ("bench", json::s("elk_damped")),
+        ("dtype", json::s("f32")),
+        ("cell", json::s("gru")),
+        ("fixture", json::s("diverging_gru_ckpt")),
+        ("jacobian_mode", json::s("diagonal")),
+        (
+            "points",
+            json::arr(
+                points
+                    .iter()
+                    .map(|p| {
+                        json::obj(vec![
+                            ("n", json::num(6.0)),
+                            ("t", json::num(p.t_len as f64)),
+                            ("plain_iters", json::num(p.plain_iters as f64)),
+                            ("elk_iters", json::num(p.elk_iters as f64)),
+                            (
+                                "plain_converged",
+                                json::num(if p.plain_converged { 1.0 } else { 0.0 }),
+                            ),
+                            (
+                                "elk_converged",
+                                json::num(if p.elk_converged { 1.0 } else { 0.0 }),
+                            ),
+                            ("plain_divergence", json::s(&p.plain_divergence)),
+                            ("plain_iter_ns_per_step", json::num(p.plain_iter_ns_per_step)),
+                            ("elk_iter_ns_per_step", json::num(p.elk_iter_ns_per_step)),
+                            ("damping_overhead", json::num(p.damping_overhead)),
+                            ("elk_max_err", json::num(p.elk_max_err)),
+                            ("elk_final_lambda", json::num(p.elk_final_lambda)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
 /// The sweep-scheduler entry used by `deer sweep` (coordinator demo):
 /// runs the grid through the worker pool with warm-start caching.
 pub fn run_sweep(opts: &BenchOpts, workers: usize) -> Vec<JobResult> {
@@ -1352,6 +1516,32 @@ mod tests {
         assert_eq!(pts.len(), 1);
         assert_eq!(pts[0].get("n").unwrap().as_usize(), Some(4));
         assert!(pts[0].get("block_invlin_ns_per_step").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn elk_bench_reports_benign_point() {
+        // A short horizon is benign for the fixture: both solvers converge,
+        // the overhead ratio is well-defined, and the JSON document carries
+        // the gate fields `scripts/bench_compare.sh` reads.
+        let (t, points) = elk_bench(&[300]);
+        assert_eq!(t.num_rows(), 1);
+        assert_eq!(points.len(), 1);
+        let p = &points[0];
+        assert!(p.plain_converged, "benign horizon must converge undamped");
+        assert!(p.elk_converged, "benign horizon must converge under ELK");
+        assert_eq!(p.plain_divergence, "-");
+        assert!(p.plain_iter_ns_per_step > 0.0 && p.elk_iter_ns_per_step > 0.0);
+        assert!(p.damping_overhead > 0.0);
+        assert!(p.elk_max_err < 1e-3, "ELK trajectory off sequential: {}", p.elk_max_err);
+
+        let doc = elk_bench_json(&points);
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("elk_damped"));
+        let pts = parsed.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(pts.len(), 1);
+        assert_eq!(pts[0].get("t").unwrap().as_usize(), Some(300));
+        assert_eq!(pts[0].get("plain_converged").unwrap().as_f64(), Some(1.0));
+        assert!(pts[0].get("damping_overhead").unwrap().as_f64().unwrap() > 0.0);
     }
 
     #[test]

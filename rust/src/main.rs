@@ -1,9 +1,9 @@
 //! `deer` — the Layer-3 coordinator CLI.
 //!
 //! Subcommands:
-//!   bench  --exp fig2|fig2grad|fig3|fig6|fig7|fig8|table3|table4|table5|table6|quasi|block|scan|batch|train|all
+//!   bench  --exp fig2|fig2grad|fig3|fig6|fig7|fig8|table3|table4|table5|table6|quasi|block|scan|batch|train|elk|all
 //!   sweep  --dims 1,2,4 --lens 1000,10000 --workers 2
-//!   train  --exp worms|twobody --mode seq|deer|quasi|hybrid --steps 100   (native trainer)
+//!   train  --exp worms|twobody --mode seq|deer|quasi|hybrid|elk|quasi-elk --steps 100   (native trainer)
 //!   train  --model worms|hnn-deer|hnn-rk4|mhgru --steps 100        (xla artifacts)
 //!   info   (list artifacts)
 //!
@@ -70,8 +70,10 @@ fn run() -> Result<()> {
                  \n  deer bench --exp scan --scan-out BENCH_scan.json   INVLIN kernel microbench\
                  \n  deer bench --exp batch --batch-out BENCH_batch.json  fused-batched vs looped dispatch\
                  \n  deer bench --exp train --train-out BENCH_train.json  seq-BPTT vs DEER optimizer steps\
+                 \n  deer bench --exp elk --elk-out BENCH_elk.json   plain vs ELK damped solves on the divergence fixture\
                  \n  deer sweep --workers 2          coordinator sweep demo\
-                 \n  deer train --exp worms --mode deer --steps 40   native §4.3 trainer (seq|deer|quasi|hybrid)\
+                 \n  deer train --exp worms --mode deer --steps 40   native §4.3 trainer (seq|deer|quasi|hybrid|elk|quasi-elk)\
+                 \n  deer train --exp worms --mode elk --verbose     damped-Newton arm with per-sequence λ/residual traces\
                  \n  deer train --exp worms --layers 2 --mode deer   stacked model: one fused solve per layer\
                  \n  deer train --exp worms-full --eval-every 10     Fig. 4 scale (T=17,984), val/test acc vs wall-clock\
                  \n  deer train --exp worms --save ck.json           checkpoint params+Adam (--load resumes)\
@@ -258,6 +260,25 @@ fn bench(args: &Args, rec: &Recorder) -> Result<()> {
         std::fs::write(&out_path, exp::train_bench_json(&points).to_string())?;
         println!("train bench points written to {}", out_path.display());
     }
+    if all || which == "elk" {
+        // ELK bench: plain vs damped (ELK) quasi-DEER on the committed
+        // divergence fixture, swept over the horizon that flips it from
+        // benign to overflowing — per-iteration wall-clock (the
+        // damping-overhead gate reads the <2× per-iteration ratio on the
+        // plain-converged horizons) plus iteration counts and convergence
+        // outcomes. Grid shrinks under DEER_BENCH_FAST=1.
+        let fast = std::env::var("DEER_BENCH_FAST").is_ok();
+        let t_lens = exp::elk_bench_grid(fast);
+        let (t, points) = exp::elk_bench(&t_lens);
+        rec.table(
+            "elk_damped",
+            "ELK damped Newton: plain vs damped solves on the divergence fixture (measured 1-core)",
+            &t,
+        )?;
+        let out_path = PathBuf::from(args.get("elk-out", "BENCH_elk.json"));
+        std::fs::write(&out_path, exp::elk_bench_json(&points).to_string())?;
+        println!("elk bench points written to {}", out_path.display());
+    }
     if all || which == "scan" {
         // INVLIN kernel microbench: dense vs diagonal scan. Grids shrink
         // under DEER_BENCH_FAST=1 (the scripts/bench_smoke.sh smoke run).
@@ -393,6 +414,19 @@ fn native_train(args: &Args, rec: &Recorder) -> Result<()> {
     // of `--mode hybrid` (ignored by the other modes).
     let hybrid_threshold = args.get_parse("hybrid-threshold", 1e-2f64).map_err(Error::msg)?;
 
+    // --lambda0 <l>: initial LM damping for the ELK solver (l ≤ 0 keeps it
+    // off). Flag absent ⇒ the elk modes default to λ₀ = 1.0 inside the
+    // loop (TrainConfig::effective_lambda0); setting it on a non-elk Deer
+    // arm enables damping there too. Note quasi-elk gets NO step_clamp
+    // default — adaptive damping subsumes the fixed trust radius.
+    let damping_lambda0 = match args.opt("lambda0") {
+        Some(v) => {
+            let l: f64 = v.parse().map_err(|e| Error::msg(format!("--lambda0 {v:?}: {e}")))?;
+            (l > 0.0).then_some(l)
+        }
+        None => None,
+    };
+
     let cfg = TrainConfig {
         mode,
         batch,
@@ -401,6 +435,8 @@ fn native_train(args: &Args, rec: &Recorder) -> Result<()> {
         seed,
         step_clamp,
         hybrid_threshold,
+        damping_lambda0,
+        verbose: args.switch("verbose"),
         lr_schedule,
         ..Default::default()
     };
@@ -532,6 +568,20 @@ fn native_train(args: &Args, rec: &Recorder) -> Result<()> {
             st.fallbacks,
             st.newton_iters as f64 / solved as f64,
         );
+        let diverged = st.diverged_nonfinite
+            + st.diverged_lambda_exhausted
+            + st.diverged_max_iters
+            + st.diverged_error_growth;
+        if diverged > 0 || st.hybrid_switches > 0 {
+            println!(
+                "divergence: {} non-finite, {} lambda-exhausted, {} max-iters, {} error-growth; {} hybrid endgame switches",
+                st.diverged_nonfinite,
+                st.diverged_lambda_exhausted,
+                st.diverged_max_iters,
+                st.diverged_error_growth,
+                st.hybrid_switches,
+            );
+        }
     }
     if let Some(path) = &save_path {
         tl.save_checkpoint(path)?;

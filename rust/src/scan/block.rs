@@ -72,7 +72,7 @@ pub(crate) fn extract_blocks<S: Scalar>(dense: &[S], out_blk: &mut [S], n: usize
 /// `y = A_stepᵀ · x` over packed blocks (row-accumulation order of the
 /// dense [`crate::linalg::matvec_t`] restricted to each block).
 #[inline]
-fn block_matvec_t<S: Scalar>(a_step: &[S], x: &[S], y: &mut [S], n: usize, k: usize) {
+pub(crate) fn block_matvec_t<S: Scalar>(a_step: &[S], x: &[S], y: &mut [S], n: usize, k: usize) {
     let nb = n / k;
     for v in y.iter_mut() {
         *v = S::zero();

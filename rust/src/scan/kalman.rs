@@ -1,0 +1,1182 @@
+//! Kalman/information-filter kernels for the damped (ELK) INVLIN solve.
+//!
+//! # The damped linear system is still an associative scan
+//!
+//! ELK (Gonzalez et al., "Towards Scalable and Stable Parallelization of
+//! Nonlinear RNNs") stabilizes the DEER Newton step with Levenberg–Marquardt
+//! damping. With trajectory guess `z = y^{(k)}` and per-step Jacobians
+//! `A_i = J_i`, the damped Newton system in delta form is the
+//! lower-bidiagonal
+//!
+//! ```text
+//! (1 + λ) Δ_i − A_i Δ_{i−1} = −r_i,      r_i = z_i − f(z_{i−1}, x_i)
+//! ```
+//!
+//! Substituting `ŷ = z + Δ` and the DEER rhs `b_i = f_i − A_i z_{i−1}` turns
+//! this into a *state-form* affine recurrence (derivation: expand
+//! `(1+λ)ŷ_i = (1+λ)z_i + A_i Δ_{i−1} − r_i` and cancel `z_i` terms):
+//!
+//! ```text
+//! ŷ_i = s · (A_i ŷ_{i−1} + b_i + λ z_i),      s = 1 / (1 + λ)
+//! ```
+//!
+//! This is exactly the steady-state **information filter** update of a
+//! linear-Gaussian smoothing pass: the prediction `A_i ŷ_{i−1} + b_i`
+//! (process model, unit precision) is blended with the observation `z_i`
+//! (precision λ) and the posterior mean is the precision-weighted average
+//! `(prediction + λ·z_i) / (1 + λ)`. λ = 0 trusts the model fully and
+//! recovers the undamped DEER scan; λ → ∞ pins `ŷ → z` (zero Newton step).
+//!
+//! Crucially the damped element `(A_i, b_i, λ)` maps to a *scaled* element
+//! of the SAME affine monoid the dense/diag/block scans already compose:
+//!
+//! ```text
+//! (Ã_i, b̃_i) = (s·A_i,  s·(b_i + λ z_i))
+//! ```
+//!
+//! so every kernel here is the corresponding plain scan with the `s` gain
+//! fused on the fly — no scaled copy of the Jacobian slab is ever
+//! materialized (the driver re-uses `a` across accept/reject retries and
+//! the backward pass). Since `|s| ≤ 1`, composing scaled elements is at
+//! least as numerically tame as the undamped compose: damping strictly
+//! shrinks the propagator products that overflow on divergent solves.
+//!
+//! The reverse (dual) kernels solve the transpose of the damped system,
+//! used by the backward pass when it reuses the last accepted forward λ:
+//!
+//! ```text
+//! λ_i = s · (g_i + A_{i+1}ᵀ λ_{i+1})        (beyond-end A treated as 0)
+//! ```
+//!
+//! # Dispatch contract
+//!
+//! All entry points take a [`JacobianStructure`] and accept the same packed
+//! Jacobian layouts as the dense/diag/block kernels. A row with `λ == 0`
+//! routes to the *plain* kernel of its structure, so undamped results are
+//! **bitwise identical** to the existing solve (the fused `s`-scaling never
+//! executes). Batched variants take one λ per sequence plus the usual
+//! active mask, and key their scheduling on the TOTAL batch size so
+//! accumulation order is independent of masking state — the same
+//! bit-reproducibility contract as [`crate::scan::par`].
+//!
+//! Full covariance-propagating Kalman smoothing (per-step uncertainty
+//! output) is out of scope here and recorded in ROADMAP as a follow-up;
+//! the solver only needs the MAP trajectory, which is what these kernels
+//! produce.
+
+use super::block::{block_matvec, block_matvec_t};
+use super::{
+    active_indices, combine, combine_block, combine_diag, par_block_scan_apply_ws,
+    par_block_scan_reverse_ws, par_diag_scan_apply_ws, par_diag_scan_reverse_ws, par_scan_apply_ws,
+    par_scan_reverse_ws, seq_block_scan_apply, seq_block_scan_reverse, seq_diag_scan_apply,
+    seq_diag_scan_reverse, seq_scan_apply, seq_scan_reverse, ScanWorkspace,
+};
+use crate::cells::JacobianStructure;
+use crate::linalg::{eye_into, matvec, matvec_t};
+use crate::util::scalar::Scalar;
+
+/// Information-filter gain `s = 1 / (1 + λ)`.
+#[inline]
+pub fn damp_gain<S: Scalar>(lambda: S) -> S {
+    S::one() / (S::one() + lambda)
+}
+
+/// `y = A_i · x` for one packed per-step Jacobian of any structure.
+#[inline]
+fn apply_a<S: Scalar>(st: JacobianStructure, a_i: &[S], x: &[S], y: &mut [S], n: usize) {
+    match st {
+        JacobianStructure::Dense => matvec(a_i, x, y),
+        JacobianStructure::Diagonal => {
+            for j in 0..n {
+                y[j] = a_i[j] * x[j];
+            }
+        }
+        JacobianStructure::Block { k } => block_matvec(a_i, x, y, n, k),
+    }
+}
+
+/// `y = A_iᵀ · x` for one packed per-step Jacobian of any structure.
+#[inline]
+fn apply_a_t<S: Scalar>(st: JacobianStructure, a_i: &[S], x: &[S], y: &mut [S], n: usize) {
+    match st {
+        JacobianStructure::Dense => matvec_t(a_i, x, y),
+        JacobianStructure::Diagonal => {
+            for j in 0..n {
+                y[j] = a_i[j] * x[j];
+            }
+        }
+        JacobianStructure::Block { k } => block_matvec_t(a_i, x, y, n, k),
+    }
+}
+
+/// Identity element of the structure's affine monoid into `a_out`.
+fn identity_into<S: Scalar>(st: JacobianStructure, a_out: &mut [S], n: usize) {
+    match st {
+        JacobianStructure::Dense => eye_into(a_out, n),
+        JacobianStructure::Diagonal => {
+            for v in a_out.iter_mut() {
+                *v = S::one();
+            }
+        }
+        JacobianStructure::Block { k } => {
+            for v in a_out.iter_mut() {
+                *v = S::zero();
+            }
+            for bb in 0..n / k {
+                for r in 0..k {
+                    a_out[bb * k * k + r * k + r] = S::one();
+                }
+            }
+        }
+    }
+}
+
+/// `acc ← el ∘ acc` through the structure's combine, staging in `tmp_*`.
+#[allow(clippy::too_many_arguments)]
+fn compose_into<S: Scalar>(
+    st: JacobianStructure,
+    el_a: &[S],
+    el_b: &[S],
+    acc_a: &mut [S],
+    acc_b: &mut [S],
+    tmp_a: &mut [S],
+    tmp_b: &mut [S],
+    n: usize,
+) {
+    match st {
+        JacobianStructure::Dense => combine(el_a, el_b, acc_a, acc_b, tmp_a, tmp_b, n),
+        JacobianStructure::Diagonal => combine_diag(el_a, el_b, acc_a, acc_b, tmp_a, tmp_b, n),
+        JacobianStructure::Block { k } => {
+            combine_block(el_a, el_b, acc_a, acc_b, tmp_a, tmp_b, n, k)
+        }
+    }
+    acc_a.copy_from_slice(tmp_a);
+    acc_b.copy_from_slice(tmp_b);
+}
+
+/// Sequential damped scan `ŷ_i = s·(A_i ŷ_{i−1} + b_i + λ z_i)` with
+/// `ŷ_{−1} = y0`. `z` is the anchor trajectory (the current Newton guess);
+/// at `λ = 0` this routes to the plain kernel of `structure` and is bitwise
+/// identical to the undamped solve.
+#[allow(clippy::too_many_arguments)]
+pub fn seq_kalman_scan_apply<S: Scalar>(
+    a: &[S],
+    b: &[S],
+    z: &[S],
+    y0: &[S],
+    out: &mut [S],
+    n: usize,
+    structure: JacobianStructure,
+    len: usize,
+    lambda: S,
+) {
+    let jl = structure.jac_len(n);
+    debug_assert_eq!(a.len(), len * jl);
+    debug_assert_eq!(b.len(), len * n);
+    debug_assert_eq!(z.len(), len * n);
+    debug_assert_eq!(out.len(), len * n);
+    if len == 0 {
+        return;
+    }
+    if lambda == S::zero() {
+        match structure {
+            JacobianStructure::Dense => seq_scan_apply(a, b, y0, out, n, len),
+            JacobianStructure::Diagonal => seq_diag_scan_apply(a, b, y0, out, n, len),
+            JacobianStructure::Block { k } => seq_block_scan_apply(a, b, y0, out, n, k, len),
+        }
+        return;
+    }
+    let s = damp_gain(lambda);
+    {
+        let head = &mut out[..n];
+        apply_a(structure, &a[..jl], y0, head, n);
+        for j in 0..n {
+            head[j] = s * (head[j] + b[j] + lambda * z[j]);
+        }
+    }
+    for i in 1..len {
+        let (prev_part, cur_part) = out.split_at_mut(i * n);
+        let prev = &prev_part[(i - 1) * n..];
+        let cur = &mut cur_part[..n];
+        apply_a(structure, &a[i * jl..(i + 1) * jl], prev, cur, n);
+        let bi = &b[i * n..(i + 1) * n];
+        let zi = &z[i * n..(i + 1) * n];
+        for j in 0..n {
+            cur[j] = s * (cur[j] + bi[j] + lambda * zi[j]);
+        }
+    }
+}
+
+/// Reverse damped replay over `[lo, hi)` of a length-`len` sequence:
+/// `λ_i = s·(g_i + A_{i+1}ᵀ λ_{i+1})`, taking `λ_hi` from `exit` when the
+/// chunk does not end the sequence (beyond-end `A` is 0, so the final
+/// element is `s·g`). `out_chunk` holds `(hi − lo)·n`.
+#[allow(clippy::too_many_arguments)]
+fn seq_kalman_rev_range<S: Scalar>(
+    a: &[S],
+    g: &[S],
+    lo: usize,
+    hi: usize,
+    len: usize,
+    exit: &[S],
+    out_chunk: &mut [S],
+    n: usize,
+    structure: JacobianStructure,
+    s: S,
+) {
+    let jl = structure.jac_len(n);
+    let mut tv = vec![S::zero(); n];
+    for i in (lo..hi).rev() {
+        let idx = i - lo;
+        if i + 1 >= len {
+            for j in 0..n {
+                out_chunk[idx * n + j] = s * g[i * n + j];
+            }
+            continue;
+        }
+        let a_next = &a[(i + 1) * jl..(i + 2) * jl];
+        if i + 1 < hi {
+            let (cur_part, next_part) = out_chunk.split_at_mut((idx + 1) * n);
+            apply_a_t(structure, a_next, &next_part[..n], &mut tv, n);
+            let cur = &mut cur_part[idx * n..];
+            for j in 0..n {
+                cur[j] = s * (tv[j] + g[i * n + j]);
+            }
+        } else {
+            apply_a_t(structure, a_next, exit, &mut tv, n);
+            for j in 0..n {
+                out_chunk[idx * n + j] = s * (tv[j] + g[i * n + j]);
+            }
+        }
+    }
+}
+
+/// Sequential damped reverse (dual) scan `λ_i = s·(g_i + A_{i+1}ᵀ λ_{i+1})`.
+/// At `λ = 0` this routes to the plain reverse kernel of `structure`.
+#[allow(clippy::too_many_arguments)]
+pub fn seq_kalman_scan_reverse<S: Scalar>(
+    a: &[S],
+    g: &[S],
+    out: &mut [S],
+    n: usize,
+    structure: JacobianStructure,
+    len: usize,
+    lambda: S,
+) {
+    let jl = structure.jac_len(n);
+    debug_assert_eq!(a.len(), len * jl);
+    debug_assert_eq!(g.len(), len * n);
+    debug_assert_eq!(out.len(), len * n);
+    if len == 0 {
+        return;
+    }
+    if lambda == S::zero() {
+        match structure {
+            JacobianStructure::Dense => seq_scan_reverse(a, g, out, n, len),
+            JacobianStructure::Diagonal => seq_diag_scan_reverse(a, g, out, n, len),
+            JacobianStructure::Block { k } => seq_block_scan_reverse(a, g, out, n, k, len),
+        }
+        return;
+    }
+    seq_kalman_rev_range(a, g, 0, len, len, &[], out, n, structure, damp_gain(lambda));
+}
+
+/// Compose the scaled elements `(s·A_i, s·(b_i + λ z_i))` over `[lo, hi)`
+/// into one `(a_out, b_out)` element — phase 1 of the chunked damped scan.
+#[allow(clippy::too_many_arguments)]
+fn compose_range_kalman<S: Scalar>(
+    a: &[S],
+    b: &[S],
+    z: &[S],
+    lo: usize,
+    hi: usize,
+    lambda: S,
+    a_out: &mut [S],
+    b_out: &mut [S],
+    n: usize,
+    structure: JacobianStructure,
+) {
+    let jl = structure.jac_len(n);
+    let s = damp_gain(lambda);
+    identity_into(structure, a_out, n);
+    for v in b_out.iter_mut() {
+        *v = S::zero();
+    }
+    let mut el_a = vec![S::zero(); jl];
+    let mut el_b = vec![S::zero(); n];
+    let mut tmp_a = vec![S::zero(); jl];
+    let mut tmp_b = vec![S::zero(); n];
+    for i in lo..hi {
+        for q in 0..jl {
+            el_a[q] = s * a[i * jl + q];
+        }
+        for j in 0..n {
+            el_b[j] = s * (b[i * n + j] + lambda * z[i * n + j]);
+        }
+        compose_into(structure, &el_a, &el_b, a_out, b_out, &mut tmp_a, &mut tmp_b, n);
+    }
+}
+
+/// Chunked three-phase damped scan over one sequence: compose scaled
+/// elements per chunk, sequential carry, per-chunk damped replay. Falls
+/// back to [`seq_kalman_scan_apply`] when too short or single-threaded; at
+/// `λ = 0` it delegates to the plain kernel family and is bitwise equal to
+/// the undamped solve.
+#[allow(clippy::too_many_arguments)]
+pub fn par_kalman_scan_apply_ws<S: Scalar>(
+    a: &[S],
+    b: &[S],
+    z: &[S],
+    y0: &[S],
+    out: &mut [S],
+    n: usize,
+    structure: JacobianStructure,
+    len: usize,
+    lambda: S,
+    threads: usize,
+    ws: &mut ScanWorkspace<S>,
+) {
+    if lambda == S::zero() {
+        match structure {
+            JacobianStructure::Dense => par_scan_apply_ws(a, b, y0, out, n, len, threads, ws),
+            JacobianStructure::Diagonal => {
+                par_diag_scan_apply_ws(a, b, y0, out, n, len, threads, ws)
+            }
+            JacobianStructure::Block { k } => {
+                par_block_scan_apply_ws(a, b, y0, out, n, k, len, threads, ws)
+            }
+        }
+        return;
+    }
+    if threads <= 1 || len < 4 * threads {
+        seq_kalman_scan_apply(a, b, z, y0, out, n, structure, len, lambda);
+        return;
+    }
+    let jl = structure.jac_len(n);
+    let chunks = threads;
+    let chunk_len = len.div_ceil(chunks);
+    ws.ensure(chunks * jl, chunks * n, chunks * n);
+    let ScanWorkspace { comp_a, comp_b, carry } = ws;
+    let comp_a = &mut comp_a[..chunks * jl];
+    let comp_b = &mut comp_b[..chunks * n];
+    let carry = &mut carry[..chunks * n];
+
+    std::thread::scope(|scope| {
+        for (c, (ca, cb)) in comp_a.chunks_mut(jl).zip(comp_b.chunks_mut(n)).enumerate() {
+            let lo = (c * chunk_len).min(len);
+            let hi = ((c + 1) * chunk_len).min(len);
+            scope.spawn(move || {
+                compose_range_kalman(a, b, z, lo, hi, lambda, ca, cb, n, structure);
+            });
+        }
+    });
+
+    carry[..n].copy_from_slice(y0);
+    for c in 0..chunks - 1 {
+        let (done, rest) = carry.split_at_mut((c + 1) * n);
+        let prev = &done[c * n..];
+        let cur = &mut rest[..n];
+        apply_a(structure, &comp_a[c * jl..(c + 1) * jl], prev, cur, n);
+        for j in 0..n {
+            cur[j] += comp_b[c * n + j];
+        }
+    }
+
+    let carry = &*carry;
+    std::thread::scope(|scope| {
+        let mut rest = &mut out[..];
+        for c in 0..chunks {
+            let lo = (c * chunk_len).min(len);
+            let hi = ((c + 1) * chunk_len).min(len);
+            if lo >= hi {
+                continue;
+            }
+            let (chunk_out, tail) = rest.split_at_mut((hi - lo) * n);
+            rest = tail;
+            let entry = &carry[c * n..(c + 1) * n];
+            scope.spawn(move || {
+                seq_kalman_scan_apply(
+                    &a[lo * jl..hi * jl],
+                    &b[lo * n..hi * n],
+                    &z[lo * n..hi * n],
+                    entry,
+                    chunk_out,
+                    n,
+                    structure,
+                    hi - lo,
+                    lambda,
+                );
+            });
+        }
+    });
+}
+
+/// One right-to-left composition step of the damped dual map: with
+/// `λ_i = cm·exit + cv` as an affine function of the chunk exit, absorb
+/// index `i` (`a_next = A_{i+1}`, gradient `g_i`) into `(cm, cv)`.
+#[allow(clippy::too_many_arguments)]
+fn compose_rev_step_kalman<S: Scalar>(
+    structure: JacobianStructure,
+    a_next: &[S],
+    g_i: &[S],
+    s: S,
+    cm: &mut [S],
+    cv: &mut [S],
+    tm: &mut [S],
+    tv: &mut [S],
+    n: usize,
+) {
+    match structure {
+        JacobianStructure::Dense => {
+            for r in 0..n {
+                for c in 0..n {
+                    let mut acc = S::zero();
+                    for kk in 0..n {
+                        acc += a_next[kk * n + r] * cm[kk * n + c];
+                    }
+                    tm[r * n + c] = s * acc;
+                }
+            }
+            cm.copy_from_slice(&tm[..n * n]);
+            matvec_t(a_next, cv, tv);
+            for j in 0..n {
+                cv[j] = s * (tv[j] + g_i[j]);
+            }
+        }
+        JacobianStructure::Diagonal => {
+            for j in 0..n {
+                cm[j] = s * (a_next[j] * cm[j]);
+                cv[j] = s * (a_next[j] * cv[j] + g_i[j]);
+            }
+        }
+        JacobianStructure::Block { k } => {
+            for bb in 0..n / k {
+                let tile = &a_next[bb * k * k..(bb + 1) * k * k];
+                for r in 0..k {
+                    for c in 0..k {
+                        let mut acc = S::zero();
+                        for kk in 0..k {
+                            acc += tile[kk * k + r] * cm[bb * k * k + kk * k + c];
+                        }
+                        tm[bb * k * k + r * k + c] = s * acc;
+                    }
+                }
+            }
+            let bl = (n / k) * k * k;
+            cm.copy_from_slice(&tm[..bl]);
+            block_matvec_t(a_next, cv, tv, n, k);
+            for j in 0..n {
+                cv[j] = s * (tv[j] + g_i[j]);
+            }
+        }
+    }
+}
+
+/// Chunked three-phase damped reverse (dual) scan over one sequence. At
+/// `λ = 0` it delegates to the plain reverse kernel family.
+#[allow(clippy::too_many_arguments)]
+pub fn par_kalman_scan_reverse_ws<S: Scalar>(
+    a: &[S],
+    g: &[S],
+    out: &mut [S],
+    n: usize,
+    structure: JacobianStructure,
+    len: usize,
+    lambda: S,
+    threads: usize,
+    ws: &mut ScanWorkspace<S>,
+) {
+    if lambda == S::zero() {
+        match structure {
+            JacobianStructure::Dense => par_scan_reverse_ws(a, g, out, n, len, threads, ws),
+            JacobianStructure::Diagonal => {
+                par_diag_scan_reverse_ws(a, g, out, n, len, threads, ws)
+            }
+            JacobianStructure::Block { k } => {
+                par_block_scan_reverse_ws(a, g, out, n, k, len, threads, ws)
+            }
+        }
+        return;
+    }
+    if threads <= 1 || len < 4 * threads {
+        seq_kalman_scan_reverse(a, g, out, n, structure, len, lambda);
+        return;
+    }
+    let jl = structure.jac_len(n);
+    let s = damp_gain(lambda);
+    let chunks = threads;
+    let chunk_len = len.div_ceil(chunks);
+    ws.ensure(chunks * jl, chunks * n, chunks * n);
+    let ScanWorkspace { comp_a, comp_b, carry } = ws;
+    let comp_a = &mut comp_a[..chunks * jl];
+    let comp_b = &mut comp_b[..chunks * n];
+    let carry = &mut carry[..chunks * n];
+
+    // Phase 1: per chunk, compose the affine map λ_lo = cm·λ_exit + cv
+    // right-to-left (beyond-end A is 0, so the sequence-final element
+    // starts the last chunk with cm = 0, cv = s·g).
+    std::thread::scope(|scope| {
+        for (c, (cm, cv)) in comp_a.chunks_mut(jl).zip(comp_b.chunks_mut(n)).enumerate() {
+            let lo = (c * chunk_len).min(len);
+            let hi = ((c + 1) * chunk_len).min(len);
+            scope.spawn(move || {
+                let mut tm = vec![S::zero(); jl];
+                let mut tv = vec![S::zero(); n];
+                identity_into(structure, cm, n);
+                for v in cv.iter_mut() {
+                    *v = S::zero();
+                }
+                for i in (lo..hi).rev() {
+                    let g_i = &g[i * n..(i + 1) * n];
+                    if i + 1 >= len {
+                        for v in cm.iter_mut() {
+                            *v = S::zero();
+                        }
+                        for j in 0..n {
+                            cv[j] = s * g_i[j];
+                        }
+                        continue;
+                    }
+                    let a_next = &a[(i + 1) * jl..(i + 2) * jl];
+                    compose_rev_step_kalman(structure, a_next, g_i, s, cm, cv, &mut tm, &mut tv, n);
+                }
+            });
+        }
+    });
+
+    // Phase 2: chunk exits right-to-left (last chunk exit = 0).
+    for v in carry[(chunks - 1) * n..].iter_mut() {
+        *v = S::zero();
+    }
+    for c in (0..chunks - 1).rev() {
+        let (cur_part, next_part) = carry.split_at_mut((c + 1) * n);
+        let next_exit = &next_part[..n];
+        let cur = &mut cur_part[c * n..];
+        apply_a(structure, &comp_a[(c + 1) * jl..(c + 2) * jl], next_exit, cur, n);
+        for j in 0..n {
+            cur[j] += comp_b[(c + 1) * n + j];
+        }
+    }
+
+    // Phase 3: per-chunk damped reverse replay from each exit.
+    let carry = &*carry;
+    std::thread::scope(|scope| {
+        let mut rest = &mut out[..];
+        for c in 0..chunks {
+            let lo = (c * chunk_len).min(len);
+            let hi = ((c + 1) * chunk_len).min(len);
+            if lo >= hi {
+                continue;
+            }
+            let (chunk_out, tail) = rest.split_at_mut((hi - lo) * n);
+            rest = tail;
+            let exit = &carry[c * n..(c + 1) * n];
+            scope.spawn(move || {
+                seq_kalman_rev_range(a, g, lo, hi, len, exit, chunk_out, n, structure, s);
+            });
+        }
+    });
+}
+
+/// Batched damped forward scan over `[B, T, n]` slabs with one λ per
+/// sequence. Rows with `λ = 0` run the plain kernels bit-for-bit; damped
+/// rows run the fused information-filter kernels against the anchor `z`
+/// (the driver's current trajectory guess). Scheduling is keyed on the
+/// TOTAL batch size, matching the masking/reproducibility contract of the
+/// undamped batched scans.
+#[allow(clippy::too_many_arguments)]
+pub fn par_kalman_scan_apply_batch_ws<S: Scalar>(
+    a: &[S],
+    b: &[S],
+    z: &[S],
+    y0s: &[S],
+    out: &mut [S],
+    n: usize,
+    structure: JacobianStructure,
+    t_len: usize,
+    batch: usize,
+    lambdas: &[S],
+    active: Option<&[bool]>,
+    threads: usize,
+    ws: &mut ScanWorkspace<S>,
+) {
+    let jl = structure.jac_len(n);
+    debug_assert_eq!(a.len(), batch * t_len * jl);
+    debug_assert_eq!(b.len(), batch * t_len * n);
+    debug_assert_eq!(z.len(), batch * t_len * n);
+    debug_assert_eq!(y0s.len(), batch * n);
+    debug_assert_eq!(out.len(), batch * t_len * n);
+    debug_assert_eq!(lambdas.len(), batch);
+    let idx = active_indices(batch, active);
+    if idx.is_empty() || t_len == 0 {
+        return;
+    }
+    if batch == 1 {
+        par_kalman_scan_apply_ws(a, b, z, y0s, out, n, structure, t_len, lambdas[0], threads, ws);
+        return;
+    }
+    let slab = t_len * n;
+    let slab_a = t_len * jl;
+    if threads <= 1 {
+        for &s in &idx {
+            seq_kalman_scan_apply(
+                &a[s * slab_a..(s + 1) * slab_a],
+                &b[s * slab..(s + 1) * slab],
+                &z[s * slab..(s + 1) * slab],
+                &y0s[s * n..(s + 1) * n],
+                &mut out[s * slab..(s + 1) * slab],
+                n,
+                structure,
+                t_len,
+                lambdas[s],
+            );
+        }
+        return;
+    }
+    let mut slabs: Vec<Option<&mut [S]>> = out.chunks_mut(slab).map(Some).collect();
+    if batch >= threads {
+        let workers = threads.min(idx.len());
+        let mut buckets: Vec<Vec<(usize, &mut [S])>> = (0..workers).map(|_| Vec::new()).collect();
+        for (k, &s) in idx.iter().enumerate() {
+            buckets[k % workers].push((s, slabs[s].take().unwrap()));
+        }
+        std::thread::scope(|scope| {
+            for bucket in buckets {
+                scope.spawn(move || {
+                    for (s, out_slab) in bucket {
+                        seq_kalman_scan_apply(
+                            &a[s * slab_a..(s + 1) * slab_a],
+                            &b[s * slab..(s + 1) * slab],
+                            &z[s * slab..(s + 1) * slab],
+                            &y0s[s * n..(s + 1) * n],
+                            out_slab,
+                            n,
+                            structure,
+                            t_len,
+                            lambdas[s],
+                        );
+                    }
+                });
+            }
+        });
+        return;
+    }
+    // Few big sequences: intra-sequence chunking, divisor keyed on the
+    // total batch for masking-invariant accumulation order.
+    let cps = (threads / batch).max(2);
+    std::thread::scope(|scope| {
+        for &s in &idx {
+            let out_slab = slabs[s].take().unwrap();
+            scope.spawn(move || {
+                let mut local_ws = ScanWorkspace::new();
+                par_kalman_scan_apply_ws(
+                    &a[s * slab_a..(s + 1) * slab_a],
+                    &b[s * slab..(s + 1) * slab],
+                    &z[s * slab..(s + 1) * slab],
+                    &y0s[s * n..(s + 1) * n],
+                    out_slab,
+                    n,
+                    structure,
+                    t_len,
+                    lambdas[s],
+                    cps,
+                    &mut local_ws,
+                );
+            });
+        }
+    });
+}
+
+/// Batched damped reverse (dual) scan over `[B, T, n]` slabs with one λ per
+/// sequence — the backward-pass counterpart of
+/// [`par_kalman_scan_apply_batch_ws`], reusing each row's last accepted
+/// forward λ. Rows with `λ = 0` run the plain reverse kernels bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+pub fn par_kalman_scan_reverse_batch_ws<S: Scalar>(
+    a: &[S],
+    g: &[S],
+    out: &mut [S],
+    n: usize,
+    structure: JacobianStructure,
+    t_len: usize,
+    batch: usize,
+    lambdas: &[S],
+    active: Option<&[bool]>,
+    threads: usize,
+    ws: &mut ScanWorkspace<S>,
+) {
+    let jl = structure.jac_len(n);
+    debug_assert_eq!(a.len(), batch * t_len * jl);
+    debug_assert_eq!(g.len(), batch * t_len * n);
+    debug_assert_eq!(out.len(), batch * t_len * n);
+    debug_assert_eq!(lambdas.len(), batch);
+    let idx = active_indices(batch, active);
+    if idx.is_empty() || t_len == 0 {
+        return;
+    }
+    if batch == 1 {
+        par_kalman_scan_reverse_ws(a, g, out, n, structure, t_len, lambdas[0], threads, ws);
+        return;
+    }
+    let slab = t_len * n;
+    let slab_a = t_len * jl;
+    if threads <= 1 {
+        for &s in &idx {
+            seq_kalman_scan_reverse(
+                &a[s * slab_a..(s + 1) * slab_a],
+                &g[s * slab..(s + 1) * slab],
+                &mut out[s * slab..(s + 1) * slab],
+                n,
+                structure,
+                t_len,
+                lambdas[s],
+            );
+        }
+        return;
+    }
+    let mut slabs: Vec<Option<&mut [S]>> = out.chunks_mut(slab).map(Some).collect();
+    if batch >= threads {
+        let workers = threads.min(idx.len());
+        let mut buckets: Vec<Vec<(usize, &mut [S])>> = (0..workers).map(|_| Vec::new()).collect();
+        for (k, &s) in idx.iter().enumerate() {
+            buckets[k % workers].push((s, slabs[s].take().unwrap()));
+        }
+        std::thread::scope(|scope| {
+            for bucket in buckets {
+                scope.spawn(move || {
+                    for (s, out_slab) in bucket {
+                        seq_kalman_scan_reverse(
+                            &a[s * slab_a..(s + 1) * slab_a],
+                            &g[s * slab..(s + 1) * slab],
+                            out_slab,
+                            n,
+                            structure,
+                            t_len,
+                            lambdas[s],
+                        );
+                    }
+                });
+            }
+        });
+        return;
+    }
+    let cps = (threads / batch).max(2);
+    std::thread::scope(|scope| {
+        for &s in &idx {
+            let out_slab = slabs[s].take().unwrap();
+            scope.spawn(move || {
+                let mut local_ws = ScanWorkspace::new();
+                par_kalman_scan_reverse_ws(
+                    &a[s * slab_a..(s + 1) * slab_a],
+                    &g[s * slab..(s + 1) * slab],
+                    out_slab,
+                    n,
+                    structure,
+                    t_len,
+                    lambdas[s],
+                    cps,
+                    &mut local_ws,
+                );
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scan::par_scan_apply_batch_ws;
+    use crate::util::rng::Rng;
+
+    fn random_case(
+        n: usize,
+        jl: usize,
+        len: usize,
+        seed: u64,
+    ) -> (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let mut a = vec![0.0; len * jl];
+        let mut b = vec![0.0; len * n];
+        let mut z = vec![0.0; len * n];
+        let mut y0 = vec![0.0; n];
+        rng.fill_normal(&mut a, 0.5);
+        rng.fill_normal(&mut b, 1.0);
+        rng.fill_normal(&mut z, 1.0);
+        rng.fill_normal(&mut y0, 1.0);
+        (a, b, z, y0)
+    }
+
+    const STRUCTS: [(JacobianStructure, usize); 3] = [
+        (JacobianStructure::Dense, 4),
+        (JacobianStructure::Diagonal, 4),
+        (JacobianStructure::Block { k: 2 }, 4),
+    ];
+
+    /// λ = 0 must route to the plain kernels bit-for-bit (the acceptance
+    /// bar: the Kalman INVLIN is tolerance-equal — here bitwise — to the
+    /// existing solve at zero damping).
+    #[test]
+    fn lambda_zero_matches_plain_bitwise() {
+        for (st, n) in STRUCTS {
+            let jl = st.jac_len(n);
+            let len = 64;
+            let (a, b, z, y0) = random_case(n, jl, len, 11);
+            let mut plain = vec![0.0; len * n];
+            match st {
+                JacobianStructure::Dense => seq_scan_apply(&a, &b, &y0, &mut plain, n, len),
+                JacobianStructure::Diagonal => {
+                    seq_diag_scan_apply(&a, &b, &y0, &mut plain, n, len)
+                }
+                JacobianStructure::Block { k } => {
+                    seq_block_scan_apply(&a, &b, &y0, &mut plain, n, k, len)
+                }
+            }
+            let mut damped = vec![0.0; len * n];
+            seq_kalman_scan_apply(&a, &b, &z, &y0, &mut damped, n, st, len, 0.0);
+            assert_eq!(plain, damped, "{st:?} seq λ=0");
+
+            let mut ws = ScanWorkspace::new();
+            let mut par = vec![0.0; len * n];
+            par_kalman_scan_apply_ws(&a, &b, &z, &y0, &mut par, n, st, len, 0.0, 4, &mut ws);
+            let mut plain_par = vec![0.0; len * n];
+            match st {
+                JacobianStructure::Dense => {
+                    par_scan_apply_ws(&a, &b, &y0, &mut plain_par, n, len, 4, &mut ws)
+                }
+                JacobianStructure::Diagonal => {
+                    par_diag_scan_apply_ws(&a, &b, &y0, &mut plain_par, n, len, 4, &mut ws)
+                }
+                JacobianStructure::Block { k } => {
+                    par_block_scan_apply_ws(&a, &b, &y0, &mut plain_par, n, k, len, 4, &mut ws)
+                }
+            }
+            assert_eq!(plain_par, par, "{st:?} par λ=0");
+        }
+    }
+
+    /// The damped output must satisfy its defining recurrence
+    /// `(1+λ)·ŷ_i = A_i ŷ_{i−1} + b_i + λ z_i`.
+    #[test]
+    fn damped_seq_satisfies_recurrence() {
+        for (st, n) in STRUCTS {
+            let jl = st.jac_len(n);
+            let len = 40;
+            let lambda = 0.7;
+            let (a, b, z, y0) = random_case(n, jl, len, 23);
+            let mut out = vec![0.0; len * n];
+            seq_kalman_scan_apply(&a, &b, &z, &y0, &mut out, n, st, len, lambda);
+            let mut ay = vec![0.0; n];
+            for i in 0..len {
+                let prev = if i == 0 { &y0[..] } else { &out[(i - 1) * n..i * n] };
+                apply_a(st, &a[i * jl..(i + 1) * jl], prev, &mut ay, n);
+                for j in 0..n {
+                    let lhs = (1.0 + lambda) * out[i * n + j];
+                    let rhs = ay[j] + b[i * n + j] + lambda * z[i * n + j];
+                    assert!((lhs - rhs).abs() < 1e-12, "{st:?} i={i} j={j}");
+                }
+            }
+        }
+    }
+
+    /// State form == anchor + delta form: ŷ = z + Δ where Δ solves the
+    /// damped delta system via the PLAIN scan on scaled elements.
+    #[test]
+    fn damped_equals_delta_form() {
+        let n = 4;
+        let len = 50;
+        let lambda = 1.3;
+        let s = 1.0 / (1.0 + lambda);
+        let (a, b, z, y0) = random_case(n, n * n, len, 37);
+        let mut out = vec![0.0; len * n];
+        seq_kalman_scan_apply(&a, &b, &z, &y0, &mut out, n, JacobianStructure::Dense, len, lambda);
+        // delta system: (1+λ)Δ_i − A_i Δ_{i−1} = A_i z_{i−1} + b_i − z_i
+        let mut sa = vec![0.0; len * n * n];
+        let mut sb = vec![0.0; len * n];
+        let mut az = vec![0.0; n];
+        for i in 0..len {
+            for q in 0..n * n {
+                sa[i * n * n + q] = s * a[i * n * n + q];
+            }
+            let zp = if i == 0 { &y0[..] } else { &z[(i - 1) * n..i * n] };
+            matvec(&a[i * n * n..(i + 1) * n * n], zp, &mut az);
+            for j in 0..n {
+                sb[i * n + j] = s * (az[j] + b[i * n + j] - z[i * n + j]);
+            }
+        }
+        let zero0 = vec![0.0; n];
+        let mut delta = vec![0.0; len * n];
+        seq_scan_apply(&sa, &sb, &zero0, &mut delta, n, len);
+        for i in 0..len * n {
+            assert!((out[i] - (z[i] + delta[i])).abs() < 1e-10, "i={i}");
+        }
+    }
+
+    /// λ → ∞ pins the solution to the anchor (zero Newton step).
+    #[test]
+    fn huge_lambda_pins_to_anchor() {
+        for (st, n) in STRUCTS {
+            let jl = st.jac_len(n);
+            let len = 30;
+            let (a, b, z, y0) = random_case(n, jl, len, 41);
+            let mut out = vec![0.0; len * n];
+            seq_kalman_scan_apply(&a, &b, &z, &y0, &mut out, n, st, len, 1e12);
+            for i in 0..len * n {
+                assert!((out[i] - z[i]).abs() < 1e-9, "{st:?} i={i}");
+            }
+        }
+    }
+
+    /// The chunked three-phase damped scan must agree with the sequential
+    /// damped scan across thread counts (forward).
+    #[test]
+    fn par_apply_matches_seq_damped() {
+        for (st, n) in STRUCTS {
+            let jl = st.jac_len(n);
+            let len = 257;
+            let lambda = 0.4;
+            let (a, b, z, y0) = random_case(n, jl, len, 53);
+            let mut reference = vec![0.0; len * n];
+            seq_kalman_scan_apply(&a, &b, &z, &y0, &mut reference, n, st, len, lambda);
+            for threads in [2, 3, 8] {
+                let mut ws = ScanWorkspace::new();
+                let mut out = vec![0.0; len * n];
+                par_kalman_scan_apply_ws(
+                    &a, &b, &z, &y0, &mut out, n, st, len, lambda, threads, &mut ws,
+                );
+                for i in 0..len * n {
+                    assert!(
+                        (out[i] - reference[i]).abs() < 1e-10,
+                        "{st:?} threads={threads} i={i}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// The reverse damped output must satisfy its defining recurrence
+    /// `λ_i = s·(g_i + A_{i+1}ᵀ λ_{i+1})` (beyond-end A = 0).
+    #[test]
+    fn damped_reverse_satisfies_recurrence() {
+        for (st, n) in STRUCTS {
+            let jl = st.jac_len(n);
+            let len = 33;
+            let lambda = 0.9;
+            let s = 1.0 / (1.0 + lambda);
+            let (a, g, _, _) = random_case(n, jl, len, 67);
+            let mut out = vec![0.0; len * n];
+            seq_kalman_scan_reverse(&a, &g, &mut out, n, st, len, lambda);
+            let mut at = vec![0.0; n];
+            for i in 0..len {
+                for j in 0..n {
+                    let expect = if i + 1 < len {
+                        apply_a_t(st, &a[(i + 1) * jl..(i + 2) * jl], &out[(i + 1) * n..(i + 2) * n], &mut at, n);
+                        s * (g[i * n + j] + at[j])
+                    } else {
+                        s * g[i * n + j]
+                    };
+                    assert!((out[i * n + j] - expect).abs() < 1e-12, "{st:?} i={i} j={j}");
+                }
+            }
+        }
+    }
+
+    /// Reverse λ = 0 routes to the plain dual kernels bit-for-bit.
+    #[test]
+    fn reverse_lambda_zero_matches_plain_bitwise() {
+        for (st, n) in STRUCTS {
+            let jl = st.jac_len(n);
+            let len = 48;
+            let (a, g, _, _) = random_case(n, jl, len, 71);
+            let mut plain = vec![0.0; len * n];
+            match st {
+                JacobianStructure::Dense => seq_scan_reverse(&a, &g, &mut plain, n, len),
+                JacobianStructure::Diagonal => seq_diag_scan_reverse(&a, &g, &mut plain, n, len),
+                JacobianStructure::Block { k } => {
+                    seq_block_scan_reverse(&a, &g, &mut plain, n, k, len)
+                }
+            }
+            let mut damped = vec![0.0; len * n];
+            seq_kalman_scan_reverse(&a, &g, &mut damped, n, st, len, 0.0);
+            assert_eq!(plain, damped, "{st:?} reverse λ=0");
+        }
+    }
+
+    /// The chunked three-phase damped reverse must agree with the
+    /// sequential damped reverse across thread counts.
+    #[test]
+    fn par_reverse_matches_seq_damped() {
+        for (st, n) in STRUCTS {
+            let jl = st.jac_len(n);
+            let len = 203;
+            let lambda = 0.6;
+            let (a, g, _, _) = random_case(n, jl, len, 83);
+            let mut reference = vec![0.0; len * n];
+            seq_kalman_scan_reverse(&a, &g, &mut reference, n, st, len, lambda);
+            for threads in [2, 3, 8] {
+                let mut ws = ScanWorkspace::new();
+                let mut out = vec![0.0; len * n];
+                par_kalman_scan_reverse_ws(&a, &g, &mut out, n, st, len, lambda, threads, &mut ws);
+                for i in 0..len * n {
+                    assert!(
+                        (out[i] - reference[i]).abs() < 1e-10,
+                        "{st:?} threads={threads} i={i}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Diagonal / block damped paths embed into the dense damped path.
+    #[test]
+    fn structured_damped_embeds_into_dense() {
+        let n = 4;
+        let k = 2;
+        let len = 60;
+        let lambda = 0.8;
+        let mut rng = Rng::new(97);
+        let mut blk = vec![0.0; len * n * k];
+        let mut b = vec![0.0; len * n];
+        let mut z = vec![0.0; len * n];
+        let mut y0 = vec![0.0; n];
+        rng.fill_normal(&mut blk, 0.5);
+        rng.fill_normal(&mut b, 1.0);
+        rng.fill_normal(&mut z, 1.0);
+        rng.fill_normal(&mut y0, 1.0);
+        // embed blocks into dense
+        let mut dense = vec![0.0; len * n * n];
+        for i in 0..len {
+            for bb in 0..n / k {
+                for r in 0..k {
+                    for c in 0..k {
+                        dense[i * n * n + (bb * k + r) * n + bb * k + c] =
+                            blk[i * n * k + bb * k * k + r * k + c];
+                    }
+                }
+            }
+        }
+        let mut out_blk = vec![0.0; len * n];
+        let mut out_dense = vec![0.0; len * n];
+        seq_kalman_scan_apply(
+            &blk, &b, &z, &y0, &mut out_blk, n, JacobianStructure::Block { k }, len, lambda,
+        );
+        seq_kalman_scan_apply(
+            &dense, &b, &z, &y0, &mut out_dense, n, JacobianStructure::Dense, len, lambda,
+        );
+        for i in 0..len * n {
+            assert!((out_blk[i] - out_dense[i]).abs() < 1e-11, "block i={i}");
+        }
+    }
+
+    /// Batched kernel: per-row λ (mixed zero / non-zero), masked rows
+    /// frozen, agreement with per-sequence calls, across thread counts.
+    #[test]
+    fn batched_matches_per_sequence_and_freezes_masked() {
+        let n = 4;
+        let st = JacobianStructure::Dense;
+        let jl = st.jac_len(n);
+        let t_len = 97;
+        let batch = 5;
+        let mut rng = Rng::new(131);
+        let mut a = vec![0.0; batch * t_len * jl];
+        let mut b = vec![0.0; batch * t_len * n];
+        let mut z = vec![0.0; batch * t_len * n];
+        let mut y0s = vec![0.0; batch * n];
+        rng.fill_normal(&mut a, 0.4);
+        rng.fill_normal(&mut b, 1.0);
+        rng.fill_normal(&mut z, 1.0);
+        rng.fill_normal(&mut y0s, 1.0);
+        let lambdas = [0.0, 0.5, 2.0, 0.0, 10.0];
+        let active = [true, true, false, true, true];
+        for threads in [1, 2, 4, 8] {
+            let mut ws = ScanWorkspace::new();
+            let mut out = vec![-888.0; batch * t_len * n];
+            par_kalman_scan_apply_batch_ws(
+                &a,
+                &b,
+                &z,
+                &y0s,
+                &mut out,
+                n,
+                st,
+                t_len,
+                batch,
+                &lambdas,
+                Some(&active),
+                threads,
+                &mut ws,
+            );
+            for s in 0..batch {
+                let slab = t_len * n;
+                if !active[s] {
+                    assert!(
+                        out[s * slab..(s + 1) * slab].iter().all(|&v| v == -888.0),
+                        "masked row {s} touched (threads={threads})"
+                    );
+                    continue;
+                }
+                let mut want = vec![0.0; slab];
+                seq_kalman_scan_apply(
+                    &a[s * t_len * jl..(s + 1) * t_len * jl],
+                    &b[s * slab..(s + 1) * slab],
+                    &z[s * slab..(s + 1) * slab],
+                    &y0s[s * n..(s + 1) * n],
+                    &mut want,
+                    n,
+                    st,
+                    t_len,
+                    lambdas[s],
+                );
+                for i in 0..slab {
+                    assert!(
+                        (out[s * slab + i] - want[i]).abs() < 1e-10,
+                        "row {s} threads={threads} i={i}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// An all-zero λ batch must be bitwise equal to the plain batched scan
+    /// (same scheduling contract, same kernels).
+    #[test]
+    fn batched_all_zero_lambda_matches_plain_batched() {
+        let n = 3;
+        let jl = n * n;
+        let t_len = 64;
+        let batch = 4;
+        let mut rng = Rng::new(139);
+        let mut a = vec![0.0; batch * t_len * jl];
+        let mut b = vec![0.0; batch * t_len * n];
+        let mut z = vec![0.0; batch * t_len * n];
+        let mut y0s = vec![0.0; batch * n];
+        rng.fill_normal(&mut a, 0.4);
+        rng.fill_normal(&mut b, 1.0);
+        rng.fill_normal(&mut z, 1.0);
+        rng.fill_normal(&mut y0s, 1.0);
+        let lambdas = vec![0.0; batch];
+        for threads in [1, 2, 8] {
+            let mut ws = ScanWorkspace::new();
+            let mut kalman = vec![0.0; batch * t_len * n];
+            par_kalman_scan_apply_batch_ws(
+                &a,
+                &b,
+                &z,
+                &y0s,
+                &mut kalman,
+                n,
+                JacobianStructure::Dense,
+                t_len,
+                batch,
+                &lambdas,
+                None,
+                threads,
+                &mut ws,
+            );
+            let mut plain = vec![0.0; batch * t_len * n];
+            par_scan_apply_batch_ws(
+                &a, &b, &y0s, &mut plain, n, t_len, batch, None, threads, &mut ws,
+            );
+            assert_eq!(plain, kalman, "threads={threads}");
+        }
+    }
+}

@@ -85,8 +85,15 @@
 
 pub mod block;
 pub mod diag;
+pub mod kalman;
 pub mod par;
 pub mod seq;
+
+pub use kalman::{
+    damp_gain, par_kalman_scan_apply_batch_ws, par_kalman_scan_apply_ws,
+    par_kalman_scan_reverse_batch_ws, par_kalman_scan_reverse_ws, seq_kalman_scan_apply,
+    seq_kalman_scan_reverse,
+};
 
 pub use block::{
     par_block_scan_apply, par_block_scan_apply_batch_ws, par_block_scan_apply_ws,
@@ -346,6 +353,40 @@ pub fn flops_apply_block(n: usize, k: usize, len: usize) -> u64 {
 /// compose term of the `Block(k)` path: n/k tile matmuls + matvecs + adds.
 pub fn flops_combine_block(n: usize, k: usize) -> u64 {
     ((n / k) as u64) * (2 * (k as u64).pow(3) + 2 * (k as u64).pow(2) + k as u64)
+}
+
+/// FLOPs for applying the damped (Kalman/information-filter) dense
+/// recurrence once per element: the plain matvec + add plus the λ·z axpy
+/// and the `s = 1/(1+λ)` gain (3n extra over [`flops_apply`]).
+pub fn flops_apply_kalman(n: usize, len: usize) -> u64 {
+    flops_apply(n, len) + (3 * n) as u64 * len as u64
+}
+
+/// FLOPs for composing two damped dense elements: the plain combine plus
+/// scaling the later propagator (`n²`) and building `s·(b + λz)` (3n).
+pub fn flops_combine_kalman(n: usize) -> u64 {
+    flops_combine(n) + (n * n + 3 * n) as u64
+}
+
+/// Diagonal damped apply: plain ⊙ + add plus the λ·z axpy and the gain.
+pub fn flops_apply_kalman_diag(n: usize, len: usize) -> u64 {
+    flops_apply_diag(n, len) + (3 * n) as u64 * len as u64
+}
+
+/// Diagonal damped compose: plain compose plus scaled-element build.
+pub fn flops_combine_kalman_diag(n: usize) -> u64 {
+    flops_combine_diag(n) + (4 * n) as u64
+}
+
+/// Block damped apply: plain tile matvecs + add plus the λ·z axpy and gain.
+pub fn flops_apply_kalman_block(n: usize, k: usize, len: usize) -> u64 {
+    flops_apply_block(n, k, len) + (3 * n) as u64 * len as u64
+}
+
+/// Block damped compose: plain compose plus scaled-element build (n·k tile
+/// scale + 3n rhs build).
+pub fn flops_combine_kalman_block(n: usize, k: usize) -> u64 {
+    flops_combine_block(n, k) + (n * k + 3 * n) as u64
 }
 
 #[cfg(test)]

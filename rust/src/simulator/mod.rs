@@ -87,6 +87,24 @@ pub fn deer_memory_bytes_stacked(
     per_solve + retained
 }
 
+/// ELK (damped Newton) working set: the structured footprint plus the
+/// damped solver's extras — one more live `B·T·n` trajectory slab (the
+/// accept/reject loop keeps the last ACCEPTED iterate alive alongside the
+/// anchor and the trial being evaluated) and O(B) per-row λ / residual
+/// scalars. The Jacobian term is untouched: the Kalman-form scan scales
+/// elements on the fly instead of materializing `s·A`.
+pub fn deer_memory_bytes_elk(
+    n: usize,
+    t_len: usize,
+    batch: usize,
+    elem: usize,
+    structure: JacobianStructure,
+) -> u64 {
+    deer_memory_bytes_structured(n, t_len, batch, elem, structure)
+        + (batch * t_len * n * elem) as u64
+        + (batch * (4 * elem + 1)) as u64
+}
+
 /// Simulated time of the **sequential** RNN forward on `dev`:
 /// `T` dependent steps, each one small kernel.
 pub fn sim_seq_forward<S: Scalar, C: Cell<S>>(
@@ -209,6 +227,77 @@ pub fn sim_deer_forward_structured<S: Scalar, C: Cell<S>>(
         gtmult: gtmult * iters as f64,
         invlin: invlin * iters as f64,
         oom: deer_memory_bytes_structured(n, t_len, batch, 4, structure) > dev.mem_bytes,
+    }
+}
+
+/// [`sim_deer_forward_structured`] for the ELK damped solve: each sweep
+/// still linearises once (FUNCEVAL unchanged), but the scan runs the
+/// Kalman-form damped compose (`crate::scan::flops_combine_kalman*` — the
+/// plain compose plus the on-the-fly `s·A` scaling and `s·(b + λz)` rhs
+/// build) and every trial step pays an extra f-only RESIDUAL pass
+/// (embarrassingly parallel over T·B, folded into `funceval`). `trials`
+/// is the average accept/reject attempts per sweep (1 = every trial
+/// accepted, the benign-input case). Memory check uses
+/// [`deer_memory_bytes_elk`].
+#[allow(clippy::too_many_arguments)]
+pub fn sim_deer_forward_damped_structured<S: Scalar, C: Cell<S>>(
+    dev: &Device,
+    cell: &C,
+    batch: usize,
+    t_len: usize,
+    iters: usize,
+    structure: JacobianStructure,
+    trials: f64,
+) -> SimBreakdown {
+    let n = cell.state_dim();
+    let m = cell.input_dim();
+    let tb = (t_len * batch) as f64;
+    let jl = structure.jac_len(n);
+    let trials = trials.max(1.0);
+
+    let plain = sim_deer_forward_structured(dev, cell, batch, t_len, iters, structure);
+    let per_iter = iters.max(1) as f64;
+
+    // damped INVLIN: same log-depth scan with the Kalman compose term
+    let combine_flops = match structure {
+        JacobianStructure::Dense => crate::scan::flops_combine_kalman(n) as f64,
+        JacobianStructure::Diagonal => crate::scan::flops_combine_kalman_diag(n) as f64,
+        JacobianStructure::Block { k } => crate::scan::flops_combine_kalman_block(n, k) as f64,
+    };
+    // one extra n-vector (the anchor z) rides through each compose
+    let combine_bytes = ((3 * jl + 3 * n) * 4) as f64;
+    let combine_par = match structure {
+        JacobianStructure::Dense => (n * n) as f64,
+        JacobianStructure::Diagonal => n as f64,
+        JacobianStructure::Block { k } => (n * k) as f64,
+    };
+    let stages = (t_len as f64).log2().ceil().max(1.0) as usize;
+    let mut invlin = 0.0;
+    for j in 0..stages {
+        let pairs = (t_len as f64 / 2f64.powi(j as i32 + 1)).max(1.0) * batch as f64;
+        let k = Kernel {
+            flops: pairs * combine_flops,
+            bytes: pairs * combine_bytes,
+            parallelism: pairs * combine_par,
+        };
+        invlin += dev.kernel_time(&k);
+    }
+    invlin *= 2.0; // down-sweep
+
+    // RESIDUAL: f-only evaluation of the trial trajectory, r_i = ŷ_i −
+    // f(ŷ_{i−1}, x_i) — parallel over every (t, b) element
+    let k_res = Kernel {
+        flops: cell.flops_step() as f64 * tb,
+        bytes: tb * ((2 * n + m) * 4) as f64,
+        parallelism: tb * n as f64,
+    };
+    let residual = dev.kernel_time(&k_res);
+
+    SimBreakdown {
+        funceval: plain.funceval + residual * per_iter * trials,
+        gtmult: plain.gtmult,
+        invlin: invlin * per_iter * trials,
+        oom: deer_memory_bytes_elk(n, t_len, batch, 4, structure) > dev.mem_bytes,
     }
 }
 
@@ -505,6 +594,59 @@ mod tests {
         let mem_diag =
             deer_memory_bytes_structured(64, 100_000, 16, 4, JacobianStructure::Diagonal);
         assert_eq!(mem_dense / mem_diag, (64 + 3) as u64 / 4);
+    }
+
+    /// The ELK acceptance gate, on the cost model: one damped iteration
+    /// (Kalman compose + residual f-pass, every trial accepted) costs less
+    /// than 2× a plain iteration — on the dense path AND both quasi paths.
+    #[test]
+    fn damped_iteration_overhead_under_2x() {
+        let dev = v100();
+        let c = gru(16);
+        for structure in [
+            JacobianStructure::Dense,
+            JacobianStructure::Diagonal,
+            JacobianStructure::Block { k: 2 },
+        ] {
+            let plain = sim_deer_forward_structured(&dev, &c, 16, 100_000, 10, structure);
+            let damped =
+                sim_deer_forward_damped_structured(&dev, &c, 16, 100_000, 10, structure, 1.0);
+            let ratio = damped.total() / plain.total();
+            assert!(
+                ratio < 2.0,
+                "{structure:?}: damped/plain per-iteration ratio {ratio:.3}"
+            );
+            assert!(ratio >= 1.0, "{structure:?}: damping cannot be free ({ratio:.3})");
+        }
+        // rejected trials cost extra linearly: 2 trials/sweep ≈ 2× the
+        // trial-dependent part, still bounded by 2× overall headroom on
+        // the dense path (FUNCEVAL dominates and is paid once per sweep)
+        let one = sim_deer_forward_damped_structured(
+            &dev, &c, 16, 100_000, 10, JacobianStructure::Dense, 1.0,
+        );
+        let two = sim_deer_forward_damped_structured(
+            &dev, &c, 16, 100_000, 10, JacobianStructure::Dense, 2.0,
+        );
+        assert!(two.total() > one.total());
+    }
+
+    /// ELK memory accounting: exactly one extra trajectory slab + O(B)
+    /// scalars over the structured footprint — the Jacobian term (the
+    /// memory phenomenon that OOMs Fig. 2 cells) is untouched.
+    #[test]
+    fn elk_memory_is_one_extra_slab() {
+        let (n, t, b) = (16usize, 100_000usize, 8usize);
+        for st in [
+            JacobianStructure::Dense,
+            JacobianStructure::Diagonal,
+            JacobianStructure::Block { k: 2 },
+        ] {
+            let plain = deer_memory_bytes_structured(n, t, b, 4, st);
+            let elk = deer_memory_bytes_elk(n, t, b, 4, st);
+            let slab = (b * t * n * 4) as u64;
+            assert!(elk > plain + slab - 1, "{st:?}");
+            assert!(elk < plain + slab + (b * 64) as u64, "{st:?}: extras must be O(B)");
+        }
     }
 
     /// Stacked accounting: L=1 degenerates to the structured footprint;

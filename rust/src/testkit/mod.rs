@@ -60,6 +60,98 @@ pub fn close(a: &[f64], b: &[f64], tol: f64) -> PropResult {
     Ok(())
 }
 
+/// Committed solver fixtures (the ROADMAP's ill-conditioned-fixture item):
+/// trained/crafted weight sets that stress the Newton solve in ways random
+/// inits don't, loaded through the real [`crate::train::native::checkpoint`]
+/// API so the fixtures double as format regression tests.
+pub mod fixtures {
+    use crate::cells::Gru;
+    use crate::train::native::checkpoint::{self, Checkpoint};
+    use crate::util::json::Json;
+    use crate::util::rng::Rng;
+
+    /// `deer-checkpoint-v1` document of the diverging-GRU fixture: a GRU
+    /// whose state Jacobian is exactly diagonal by construction (recurrent
+    /// reset/update weights zero, candidate weights `W_hn = 3·I`, constant
+    /// reset gate r = ½ and a nearly-closed update gate z = σ(−4) ≈ 0.018
+    /// from `b_iz = −4`) with per-step diagonal entries
+    /// `J = (1−z)·(1−ñ²)·3/2 + z`. From the cold start `y = 0` the entries
+    /// average ≈ 1.06 — individually mild, but the undamped INVLIN prefix
+    /// products compound that drift over the horizon and overflow f32 near
+    /// step ~3.3k, so plain DEER *must* freeze with
+    /// [`crate::deer::DivergenceReason::NonFinite`] at any T ≥ 16k (it still
+    /// converges at T ≤ 2k). The `b_in = ±5/8` biases hold every coordinate
+    /// in a single tanh basin (the bistable |c| window at drive 3/2 is
+    /// ±0.04, far below the bias), so the adaptively damped ELK solve walks
+    /// into the attractor — where `J ≈ 0.15` contracts — and converges on
+    /// the very same weights in a handful of sweeps.
+    /// `tests/divergence_fixture.rs` pins both halves.
+    pub const DIVERGING_GRU_JSON: &str = include_str!("fixtures/diverging_gru_ckpt.json");
+    /// (hidden, input) dims the fixture checkpoint was written for.
+    pub const DIVERGING_GRU_DIMS: (usize, usize) = (6, 3);
+    /// Seed of the committed input stream that accompanies the weights
+    /// ([`diverging_gru_inputs`]).
+    pub const DIVERGING_GRU_INPUT_SEED: u64 = 22;
+
+    /// Parse the committed fixture checkpoint.
+    pub fn diverging_gru_checkpoint() -> Checkpoint {
+        let doc = Json::parse(DIVERGING_GRU_JSON).expect("committed fixture parses as JSON");
+        checkpoint::from_json(&doc).expect("committed fixture is a valid checkpoint")
+    }
+
+    /// Build the fixture cell via the public checkpoint-seeding API.
+    pub fn diverging_gru() -> Gru<f32> {
+        let (n, m) = DIVERGING_GRU_DIMS;
+        let mut cell: Gru<f32> = Gru::new(n, m, &mut Rng::new(0));
+        checkpoint::load_cell_params(&diverging_gru_checkpoint(), &mut cell)
+            .expect("fixture params fit the cell");
+        cell
+    }
+
+    /// The committed input stream (first `t_len` steps of it).
+    pub fn diverging_gru_inputs(t_len: usize) -> Vec<f32> {
+        let (_, m) = DIVERGING_GRU_DIMS;
+        let mut rng = Rng::new(DIVERGING_GRU_INPUT_SEED);
+        let mut xs = vec![0.0f32; t_len * m];
+        rng.fill_normal(&mut xs, 1.0);
+        xs
+    }
+
+    /// The closed-form recipe behind the committed JSON — every value is an
+    /// exact binary fraction so the JSON round trip is bitwise. This is the
+    /// regeneration source of truth: `diverging_gru_fixture_matches_recipe`
+    /// pins the committed file against it, and the `#[ignore]`d
+    /// `regenerate_diverging_gru_fixture` rewrites the file from it.
+    pub fn diverging_gru_recipe_params() -> Vec<f32> {
+        let (n, m) = DIVERGING_GRU_DIMS;
+        let mut p = vec![0.0f32; 3 * n * m + 3 * n * n + 6 * n];
+        // W_in: a fixed residue pattern over exact 32nds in [-5/32, 5/32] —
+        // small couplings keep the cold-anchor tanh arguments near the bias.
+        for i in 0..n * m {
+            p[2 * n * m + i] = (((i * 5 + 3) % 11) as f32 - 5.0) / 32.0;
+        }
+        // W_hn = 3·I — with r = ½ a candidate drive of 3/2: mildly
+        // expansive at the cold anchor, monostable once biased.
+        let w_hn = 3 * n * m + 2 * n * n;
+        for i in 0..n {
+            p[w_hn + i * n + i] = 3.0;
+        }
+        // b_iz = −4: update gate z = σ(−4) ≈ 0.018, almost no state leak,
+        // which is what pushes the cold-anchor Jacobian mean above 1.
+        let b_iz = 3 * n * m + 3 * n * n + n;
+        for i in 0..n {
+            p[b_iz + i] = -4.0;
+        }
+        // b_in = ±5/8 alternating: pins each coordinate to one tanh basin
+        // so the damped solve never has to cross a basin boundary.
+        let b_in = 3 * n * m + 3 * n * n + 2 * n;
+        for i in 0..n {
+            p[b_in + i] = if i % 2 == 0 { 0.625 } else { -0.625 };
+        }
+        p
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -101,5 +193,40 @@ mod tests {
     fn close_reports_index() {
         let e = close(&[1.0, 2.0], &[1.0, 3.0], 0.1).unwrap_err();
         assert!(e.contains("element 1"));
+    }
+
+    /// The committed fixture JSON is byte-for-byte the recipe: params match
+    /// exactly (all values are binary fractions, so no tolerance), the
+    /// optimizer state is pristine and the declared shape is the 6×3 GRU.
+    #[test]
+    fn diverging_gru_fixture_matches_recipe() {
+        let ck = fixtures::diverging_gru_checkpoint();
+        assert_eq!(ck.params, fixtures::diverging_gru_recipe_params());
+        assert_eq!(ck.step, 0);
+        assert_eq!(ck.layers, 1);
+        assert!(ck.adam_m.iter().chain(ck.adam_v.iter()).all(|&v| v == 0.0));
+        let (n, m) = fixtures::DIVERGING_GRU_DIMS;
+        assert_eq!(ck.params.len(), 3 * n * m + 3 * n * n + 6 * n);
+        // and the cell loader accepts it
+        use crate::cells::CellGrad;
+        assert_eq!(fixtures::diverging_gru().params(), &ck.params[..]);
+    }
+
+    /// Regenerate the committed fixture from the recipe (run manually with
+    /// `cargo test -- --ignored regenerate_diverging_gru_fixture` after
+    /// changing [`fixtures::diverging_gru_recipe_params`]; whitespace may
+    /// differ from the checked-in file, values cannot).
+    #[test]
+    #[ignore]
+    fn regenerate_diverging_gru_fixture() {
+        use crate::train::native::opt::{Adam, AdamConfig};
+        let params = fixtures::diverging_gru_recipe_params();
+        let adam: Adam<f32> = Adam::new(params.len(), AdamConfig::default());
+        let doc = crate::train::native::checkpoint::to_json(&params, &adam, 1, "constant");
+        let path = concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/src/testkit/fixtures/diverging_gru_ckpt.json"
+        );
+        std::fs::write(path, doc.to_string()).unwrap();
     }
 }

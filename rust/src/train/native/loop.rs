@@ -26,6 +26,16 @@
 //!   Newton until the residual crosses [`TrainConfig::hybrid_threshold`],
 //!   then the O(n) diagonal endgame) with the exact dense backward —
 //!   cheaper forward sweeps, Deer-quality gradients.
+//! * [`ForwardMode::Elk`] / [`ForwardMode::QuasiElk`] — the damped
+//!   (Levenberg–Marquardt) solver: Deer / QuasiDeer dispatch with
+//!   [`TrainConfig::damping_lambda0`] enabling per-sequence adaptive
+//!   damping (trial steps accept/reject, λ grows on residual increase),
+//!   so mid-training ill-conditioned cells converge where the undamped
+//!   iteration diverges. The backward pass reuses each sequence's last
+//!   accepted λ in the damped dual scan
+//!   ([`crate::deer::grad::deer_rnn_backward_batch_damped_io`]).
+//!   QuasiElk needs no [`TrainConfig::step_clamp`]: adaptive damping
+//!   subsumes the fixed trust radius.
 //!
 //! Seq vs Deer is therefore a pure A/B switch: data order, loss algebra,
 //! optimizer state and seeds are shared; only the trajectory/gradient
@@ -53,7 +63,7 @@ use crate::coordinator::exec::BatchExecutor;
 use crate::coordinator::policy::EvalPath;
 use crate::coordinator::warmstart::WarmStartCache;
 use crate::data::{Dataset, Split};
-use crate::deer::grad::deer_rnn_backward_batch_io;
+use crate::deer::grad::deer_rnn_backward_batch_damped_io;
 use crate::deer::newton::{effective_structure, JacobianMode};
 use crate::deer::seq::{seq_rnn, seq_rnn_backward_io, seq_rnn_batch};
 use crate::train::CurvePoint;
@@ -80,6 +90,14 @@ pub enum ForwardMode {
     /// endgame leaves them in the diagonal layout), so gradients match the
     /// Deer arm to tolerance.
     Hybrid,
+    /// Fused batched ELK: exact dense Newton with adaptive per-sequence
+    /// LM damping (accept/reject trial steps) and the matching damped
+    /// backward dual — the divergence-robust arm.
+    Elk,
+    /// Fused batched quasi-ELK: DiagonalApprox Jacobians under the same
+    /// adaptive damping; replaces QuasiDeer's fixed `step_clamp` trust
+    /// radius with per-sequence λ adaptation.
+    QuasiElk,
 }
 
 impl ForwardMode {
@@ -90,7 +108,11 @@ impl ForwardMode {
             "deer" => Ok(ForwardMode::Deer),
             "quasi" | "quasideer" | "quasi-deer" => Ok(ForwardMode::QuasiDeer),
             "hybrid" => Ok(ForwardMode::Hybrid),
-            other => Err(format!("unknown forward mode {other:?} (seq|deer|quasi|hybrid)")),
+            "elk" => Ok(ForwardMode::Elk),
+            "quasi-elk" | "quasielk" => Ok(ForwardMode::QuasiElk),
+            other => Err(format!(
+                "unknown forward mode {other:?} (seq|deer|quasi|hybrid|elk|quasi-elk)"
+            )),
         }
     }
 
@@ -100,16 +122,23 @@ impl ForwardMode {
             ForwardMode::Deer => "deer",
             ForwardMode::QuasiDeer => "quasi",
             ForwardMode::Hybrid => "hybrid",
+            ForwardMode::Elk => "elk",
+            ForwardMode::QuasiElk => "quasi-elk",
         }
     }
 
     /// The solver-side Jacobian mode this training arm dispatches with.
     fn jacobian_mode(&self) -> JacobianMode {
         match self {
-            ForwardMode::Seq | ForwardMode::Deer => JacobianMode::Full,
-            ForwardMode::QuasiDeer => JacobianMode::DiagonalApprox,
+            ForwardMode::Seq | ForwardMode::Deer | ForwardMode::Elk => JacobianMode::Full,
+            ForwardMode::QuasiDeer | ForwardMode::QuasiElk => JacobianMode::DiagonalApprox,
             ForwardMode::Hybrid => JacobianMode::Hybrid,
         }
+    }
+
+    /// Whether this arm runs the damped (ELK) solver by default.
+    pub fn is_elk(&self) -> bool {
+        matches!(self, ForwardMode::Elk | ForwardMode::QuasiElk)
     }
 }
 
@@ -153,6 +182,15 @@ pub struct TrainConfig {
     /// [`crate::deer::DeerConfig::hybrid_threshold`] (only read by
     /// [`ForwardMode::Hybrid`]).
     pub hybrid_threshold: f64,
+    /// Initial LM damping λ₀ for the ELK arms (None → 1.0 when the mode
+    /// is [`ForwardMode::Elk`] / [`ForwardMode::QuasiElk`], undamped
+    /// otherwise). Setting it on a non-ELK Deer arm also enables damping —
+    /// the `--lambda0` CLI escape hatch.
+    pub damping_lambda0: Option<f64>,
+    /// Per-step divergence observability: print each sequence's iteration
+    /// count, λ / residual traces and stop reason to stderr
+    /// (`deer train --verbose`).
+    pub verbose: bool,
     /// Reuse forward Jacobians in the backward pass (speed) instead of
     /// recomputing them along the converged trajectory (memory + a
     /// tolerance-level exactness gain) — the §3.1.1 trade-off.
@@ -175,9 +213,21 @@ impl Default for TrainConfig {
             max_iter: 100,
             step_clamp: None,
             hybrid_threshold: 1e-2,
+            damping_lambda0: None,
+            verbose: false,
             reuse_jacobians: true,
             lr_schedule: LrSchedule::Constant,
         }
+    }
+}
+
+impl TrainConfig {
+    /// The λ₀ actually handed to the convergence policy: the explicit
+    /// override wins, else the ELK arms default to 1.0 and every other arm
+    /// stays undamped.
+    pub fn effective_lambda0(&self) -> Option<f64> {
+        self.damping_lambda0
+            .or_else(|| self.mode.is_elk().then_some(1.0))
     }
 }
 
@@ -201,6 +251,16 @@ pub struct TrainStats {
     /// Fused solves per layer (index = layer): the per-layer view of the
     /// ONE-solve-per-layer-per-minibatch dispatch invariant.
     pub solves_per_layer: Vec<u64>,
+    /// Sequences whose solve froze on a non-finite residual/state.
+    pub diverged_nonfinite: u64,
+    /// Sequences that exhausted the ELK damping budget.
+    pub diverged_lambda_exhausted: u64,
+    /// Sequences that hit the iteration cap without converging.
+    pub diverged_max_iters: u64,
+    /// Sequences stopped by the divergence patience.
+    pub diverged_error_growth: u64,
+    /// Per-sequence Hybrid Full→Diagonal endgame switches.
+    pub hybrid_switches: u64,
 }
 
 /// Per-step outcome.
@@ -419,22 +479,29 @@ impl<C: CellGrad<f32>> TrainLoop<C> {
     /// 0, the layer-below trajectory otherwise. Deer modes dispatch the
     /// whole minibatch as ONE fused solve through a per-layer
     /// [`BatchExecutor`] (warm-started from this layer's cache); returns
-    /// the `[B, T, n_l]` trajectory plus the retained forward Jacobians.
+    /// the `[B, T, n_l]` trajectory, the retained forward Jacobians, and
+    /// the per-sequence accepted damping λ (all zeros outside the ELK
+    /// arms — and zeroed for fallback rows, whose exact sequential
+    /// trajectory wants the undamped dual).
     fn forward_layer(
         &mut self,
         l: usize,
         rows: &[usize],
         input: &[f32],
         b: usize,
-    ) -> (Vec<f32>, Option<(Vec<f32>, JacobianStructure)>) {
+    ) -> (Vec<f32>, Option<(Vec<f32>, JacobianStructure)>, Vec<f32>) {
         let t_len = self.data.ds.t;
         let cell = self.model.cell(l);
         let n = cell.state_dim();
         let m = cell.input_dim();
         let h0s = vec![0.0f32; b * n];
         match self.cfg.mode {
-            ForwardMode::Seq => (seq_rnn_batch(cell, &h0s, input, b), None),
-            ForwardMode::Deer | ForwardMode::QuasiDeer | ForwardMode::Hybrid => {
+            ForwardMode::Seq => (seq_rnn_batch(cell, &h0s, input, b), None, vec![0.0; b]),
+            ForwardMode::Deer
+            | ForwardMode::QuasiDeer
+            | ForwardMode::Hybrid
+            | ForwardMode::Elk
+            | ForwardMode::QuasiElk => {
                 let jacobian_mode = self.cfg.mode.jacobian_mode();
                 let structure = effective_structure(cell, jacobian_mode);
                 let jl = structure.jac_len(n);
@@ -467,6 +534,7 @@ impl<C: CellGrad<f32>> TrainLoop<C> {
                 ex.policy.jacobian_mode = jacobian_mode;
                 ex.policy.step_clamp = self.cfg.step_clamp;
                 ex.policy.hybrid_threshold = self.cfg.hybrid_threshold;
+                ex.policy.damping_lambda0 = self.cfg.effective_lambda0();
                 ex.keep_jacobians = reuse;
                 std::mem::swap(&mut ex.cache, &mut self.caches[l]);
 
@@ -484,6 +552,11 @@ impl<C: CellGrad<f32>> TrainLoop<C> {
                 self.stats.batched_solves += ex.stats.batched_solves;
                 self.stats.sequences_solved += ex.stats.sequences_solved;
                 self.stats.solves_per_layer[l] += ex.stats.batched_solves;
+                self.stats.diverged_nonfinite += ex.stats.diverged_nonfinite;
+                self.stats.diverged_lambda_exhausted += ex.stats.diverged_lambda_exhausted;
+                self.stats.diverged_max_iters += ex.stats.diverged_max_iters;
+                self.stats.diverged_error_growth += ex.stats.diverged_error_growth;
+                self.stats.hybrid_switches += ex.stats.hybrid_switches;
                 assert_eq!(replies.len(), b, "one reply per minibatch sequence");
 
                 // scatter replies back into submission order; rows may
@@ -491,6 +564,7 @@ impl<C: CellGrad<f32>> TrainLoop<C> {
                 // reply claims the first still-unfilled matching slot
                 let mut ys = vec![0.0f32; b * t_len * n];
                 let mut jac = vec![0.0f32; if reuse { b * t_len * jl } else { 0 }];
+                let mut lambdas = vec![0.0f32; b];
                 let mut all_jac = reuse;
                 let mut filled = vec![false; b];
                 for reply in &replies {
@@ -501,6 +575,27 @@ impl<C: CellGrad<f32>> TrainLoop<C> {
                         .expect("reply for unknown row");
                     filled[s] = true;
                     ys[s * t_len * n..(s + 1) * t_len * n].copy_from_slice(&reply.ys);
+                    // a fallback row's trajectory is the EXACT sequential
+                    // evaluation — its dual must run undamped
+                    lambdas[s] = if reply.path == EvalPath::SequentialFallback {
+                        0.0
+                    } else {
+                        reply.lambda
+                    };
+                    if self.cfg.verbose {
+                        eprintln!(
+                            "[train verbose] layer {l} row {} iters {} converged {} path {:?} \
+                             lambda {:.3e} reason {} err_trace {:?} lambda_trace {:?}",
+                            reply.sample_id,
+                            reply.iterations,
+                            reply.converged,
+                            reply.path,
+                            reply.lambda,
+                            reply.divergence.map(|d| d.label()).unwrap_or("-"),
+                            reply.err_trace,
+                            reply.lambda_trace,
+                        );
+                    }
                     match &reply.jacobians {
                         Some(j) => {
                             assert_eq!(
@@ -519,7 +614,7 @@ impl<C: CellGrad<f32>> TrainLoop<C> {
                         self.stats.fallbacks += 1;
                     }
                 }
-                (ys, if all_jac { Some((jac, structure)) } else { None })
+                (ys, if all_jac { Some((jac, structure)) } else { None }, lambdas)
             }
         }
     }
@@ -542,13 +637,15 @@ impl<C: CellGrad<f32>> TrainLoop<C> {
         let mut layer_ys: Vec<Vec<f32>> = Vec::with_capacity(layers);
         let mut layer_jac: Vec<Option<(Vec<f32>, JacobianStructure)>> =
             Vec::with_capacity(layers);
+        let mut layer_lambdas: Vec<Vec<f32>> = Vec::with_capacity(layers);
         for l in 0..layers {
-            let (ys_l, jac_l) = {
+            let (ys_l, jac_l, lam_l) = {
                 let input: &[f32] = if l == 0 { &xs } else { &layer_ys[l - 1] };
                 self.forward_layer(l, rows, input, b)
             };
             layer_ys.push(ys_l);
             layer_jac.push(jac_l);
+            layer_lambdas.push(lam_l);
         }
         let fwd_secs = fwd_start.elapsed().as_secs_f64();
 
@@ -625,7 +722,11 @@ impl<C: CellGrad<f32>> TrainLoop<C> {
                         gs_cur = d;
                     }
                 }
-                ForwardMode::Deer | ForwardMode::QuasiDeer | ForwardMode::Hybrid => {
+                ForwardMode::Deer
+                | ForwardMode::QuasiDeer
+                | ForwardMode::Hybrid
+                | ForwardMode::Elk
+                | ForwardMode::QuasiElk => {
                     // Hybrid differentiates with the exact dense dual scan
                     // (its QuasiDeer-style forward savings are forward-only).
                     let structure = match &layer_jac[l] {
@@ -633,13 +734,24 @@ impl<C: CellGrad<f32>> TrainLoop<C> {
                         None => effective_structure(
                             cell,
                             match self.cfg.mode {
-                                ForwardMode::QuasiDeer => JacobianMode::DiagonalApprox,
+                                ForwardMode::QuasiDeer | ForwardMode::QuasiElk => {
+                                    JacobianMode::DiagonalApprox
+                                }
                                 _ => JacobianMode::Full,
                             },
                         ),
                     };
                     let jac_ref: Option<&[f32]> = layer_jac[l].as_ref().map(|(j, _)| &j[..]);
-                    let g = deer_rnn_backward_batch_io(
+                    // ELK arms (or an explicit --lambda0 on a Deer arm)
+                    // re-solve the damped dual with each row's last
+                    // accepted λ; all-zero λ routes to the plain scan
+                    // bitwise, so this is a no-op outside damping.
+                    let damping: Option<&[f32]> = if self.cfg.effective_lambda0().is_some() {
+                        Some(&layer_lambdas[l])
+                    } else {
+                        None
+                    };
+                    let g = deer_rnn_backward_batch_damped_io(
                         cell,
                         &h0s,
                         input,
@@ -647,6 +759,7 @@ impl<C: CellGrad<f32>> TrainLoop<C> {
                         &gs_cur,
                         jac_ref,
                         structure,
+                        damping,
                         self.cfg.threads,
                         b,
                         want_dx,
@@ -1014,7 +1127,71 @@ mod tests {
         assert_eq!(ForwardMode::parse("deer").unwrap(), ForwardMode::Deer);
         assert_eq!(ForwardMode::parse("quasi").unwrap(), ForwardMode::QuasiDeer);
         assert_eq!(ForwardMode::parse("hybrid").unwrap(), ForwardMode::Hybrid);
+        assert_eq!(ForwardMode::parse("elk").unwrap(), ForwardMode::Elk);
+        assert_eq!(ForwardMode::parse("quasi-elk").unwrap(), ForwardMode::QuasiElk);
+        assert_eq!(ForwardMode::parse("quasielk").unwrap(), ForwardMode::QuasiElk);
         assert!(ForwardMode::parse("xla").is_err());
+    }
+
+    /// The ELK arm trains: fused dispatch, finite loss, and its gradient
+    /// matches the exact Deer arm to forward-tolerance level — by the time
+    /// the damped solve converges λ has shrunk to near zero, so the damped
+    /// dual is a tolerance-level perturbation of the exact one.
+    #[test]
+    fn elk_mode_trains_and_matches_deer_gradient() {
+        let mut tl_e = tiny_loop(ForwardMode::Elk, 8);
+        let mut tl_d = tiny_loop(ForwardMode::Deer, 8);
+        assert_eq!(tl_e.cfg.effective_lambda0(), Some(1.0));
+        assert_eq!(tl_d.cfg.effective_lambda0(), None);
+        let rows: Vec<usize> = vec![0, 1, 2, 3];
+        let ge = tl_e.grad_minibatch(&rows);
+        let gd = tl_d.grad_minibatch(&rows);
+        assert!(ge.loss.is_finite());
+        assert!((ge.loss - gd.loss).abs() < 1e-3, "{} vs {}", ge.loss, gd.loss);
+        for (a, b) in ge.grad.iter().zip(gd.grad.iter()) {
+            assert!((a - b).abs() < 1e-2, "elk vs deer gradient: {a} vs {b}");
+        }
+        let s = tl_e.run(3).unwrap();
+        assert!(s.loss.is_finite());
+        assert_eq!(tl_e.stats.fallbacks, 0);
+        assert_eq!(tl_e.stats.diverged_nonfinite, 0);
+        assert_eq!(tl_e.stats.diverged_lambda_exhausted, 0);
+    }
+
+    /// Quasi-ELK replaces the fixed trust radius with adaptive damping —
+    /// no step_clamp configured, still trains to a finite loss with one
+    /// fused solve per minibatch.
+    #[test]
+    fn quasi_elk_trains_without_step_clamp() {
+        let mut tl = tiny_loop(ForwardMode::QuasiElk, 9);
+        assert!(tl.cfg.step_clamp.is_none(), "damping subsumes the trust radius");
+        assert_eq!(tl.cfg.effective_lambda0(), Some(1.0));
+        let s = tl.run(3).unwrap();
+        assert!(s.loss.is_finite());
+        assert_eq!(tl.stats.batched_solves, 3, "one fused solve per minibatch");
+    }
+
+    /// `--verbose` observability: a verbose ELK step runs end to end (the
+    /// per-sequence trace printing must not disturb training).
+    #[test]
+    fn verbose_elk_step_runs() {
+        let mut rng = Rng::new(16);
+        let cell: Gru<f32> = Gru::new(4, crate::data::worms::CHANNELS, &mut rng);
+        let model = Model::new(cell, crate::data::worms::CLASSES, Readout::LastState, &mut rng);
+        let mut tl = TrainLoop::new(
+            model,
+            worms_task(16, 24, 7),
+            TrainConfig {
+                mode: ForwardMode::Elk,
+                batch: 4,
+                seed: 16,
+                verbose: true,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let s = tl.step();
+        assert!(s.loss.is_finite());
     }
 
     /// The hybrid arm trains: one fused solve per minibatch, finite loss,

@@ -9,7 +9,8 @@
 //! choice reduced to one enum:
 //!
 //! ```text
-//! data/loader ─ minibatch ─▶ forward (Seq | Deer | QuasiDeer | Hybrid)
+//! data/loader ─ minibatch ─▶ forward (Seq | Deer | QuasiDeer | Hybrid
+//!                                     | Elk | QuasiElk)
 //!   layer 0: xs [B,T,m]   ─▶ ys₀ [B,T,n]   (ONE fused solve)
 //!   layer 1: ys₀          ─▶ ys₁ [B,T,n]   (ONE fused solve)
 //!   …          (each layer via coordinator::BatchExecutor, warm-started

@@ -1,0 +1,106 @@
+//! Regression tests on the committed trained-weights divergence fixture
+//! (`src/testkit/fixtures/diverging_gru_ckpt.json`, loaded through the
+//! checkpoint API by `testkit::fixtures`).
+//!
+//! The fixture is a 6×3 GRU (candidate drive `W_hn = 3·I`, update gate
+//! pinned nearly closed by `b_iz = −4`) whose exactly-diagonal Jacobian
+//! averages ≈ 1.06 at the cold start — individually mild, but the undamped
+//! INVLIN prefix products compound that drift and overflow f32 near step
+//! ~3.3k, so at T ≥ 16k plain DEER can never take a finite first sweep —
+//! yet contracts to ≈ 0.15 on the true biased-basin trajectory, so the
+//! damped (ELK) solve has a reachable, locally-stable fixed point. The two
+//! halves pinned here:
+//!
+//! 1. plain-DEER divergence is *detected*, not suffered: a clean
+//!    `DivergenceReason` with the iterate frozen finite, no panic, no NaN
+//!    trajectory;
+//! 2. adaptive Levenberg–Marquardt damping (ELK) converges on the very same
+//!    weights + inputs, to the sequential trajectory.
+
+use deer::deer::seq::seq_rnn;
+use deer::deer::{deer_rnn, DampingConfig, DeerConfig, DivergenceReason, JacobianMode};
+use deer::testkit::fixtures;
+
+fn fixture_cfg(damped: bool, max_iter: usize) -> DeerConfig<f32> {
+    DeerConfig {
+        jacobian_mode: JacobianMode::DiagonalApprox,
+        max_iter,
+        damping: damped.then(DampingConfig::default),
+        ..Default::default()
+    }
+}
+
+/// Satellite half 1: at T = 16 384 the undamped solve must stop with a
+/// reason — specifically `NonFinite`, because the very first sweep's scan
+/// overflows — while the returned iterate stays the last finite one (the
+/// cold start), never a NaN-poisoned slab.
+#[test]
+fn plain_deer_divergence_is_detected_cleanly() {
+    let cell = fixtures::diverging_gru();
+    let (n, _) = fixtures::DIVERGING_GRU_DIMS;
+    let t_len = 16_384;
+    let xs = fixtures::diverging_gru_inputs(t_len);
+    let h0 = vec![0.0f32; n];
+
+    let res = deer_rnn(&cell, &h0, &xs, None, &fixture_cfg(false, 60));
+    assert!(!res.converged, "fixture unexpectedly converged undamped");
+    assert_eq!(
+        res.divergence,
+        Some(DivergenceReason::NonFinite),
+        "divergence must be detected and classified"
+    );
+    assert!(
+        res.ys.iter().all(|v| v.is_finite()),
+        "diverged solve must freeze on its last finite iterate"
+    );
+    assert_eq!(res.ys.len(), t_len * n);
+    assert!(res.iterations >= 1);
+    // the trace records the non-finite sweep as an infinite error
+    assert!(res.err_trace.last().is_some_and(|e| !e.is_finite()));
+}
+
+/// Satellite half 2: ELK converges on the same fixture. The assertion is
+/// staged over horizons (16k first) so it pins "damping recovers this
+/// fixture" without betting the suite on worst-case LM iteration counts at
+/// the longest horizon; whichever horizon converges must match sequential.
+#[test]
+fn elk_converges_on_divergence_fixture() {
+    let cell = fixtures::diverging_gru();
+    let (n, _) = fixtures::DIVERGING_GRU_DIMS;
+    let h0 = vec![0.0f32; n];
+
+    let mut recovered = None;
+    for t_len in [16_384usize, 2_048, 400] {
+        let xs = fixtures::diverging_gru_inputs(t_len);
+        let res = deer_rnn(&cell, &h0, &xs, None, &fixture_cfg(true, 500));
+        // hardening holds at every horizon, converged or not
+        assert!(
+            res.ys.iter().all(|v| v.is_finite()),
+            "ELK iterate went non-finite at T = {t_len}"
+        );
+        if !res.converged {
+            assert!(
+                res.divergence.is_some(),
+                "unconverged ELK solve at T = {t_len} must carry a reason"
+            );
+            continue;
+        }
+        // observability: the damped path records its λ schedule
+        assert!(
+            !res.lambda_trace.is_empty(),
+            "converged ELK solve must expose its λ trace"
+        );
+        let seq = seq_rnn(&cell, &h0, &xs);
+        let diff = deer::linalg::max_abs_diff(&seq, &res.ys);
+        assert!(
+            diff < 1e-2,
+            "ELK converged to the wrong trajectory at T = {t_len}: max |Δ| = {diff}"
+        );
+        recovered = Some(t_len);
+        break;
+    }
+    assert!(
+        recovered.is_some(),
+        "adaptive damping failed to recover the divergence fixture at every horizon"
+    );
+}

@@ -33,12 +33,15 @@ DEER_BENCH_FAST=1 cargo run --release --bin deer -- \
     bench --exp train --train-out "$FRESH_DIR/BENCH_train.json" --results results/compare
 DEER_BENCH_FAST=1 cargo run --release --bin deer -- \
     bench --exp block --block-out "$FRESH_DIR/BENCH_block.json" --results results/compare
+DEER_BENCH_FAST=1 cargo run --release --bin deer -- \
+    bench --exp elk --elk-out "$FRESH_DIR/BENCH_elk.json" --results results/compare
 
 python3 - "$ROOT" "$FRESH_DIR" "$THRESHOLD" <<'EOF'
 import json, os, shutil, subprocess, sys
 
 root, fresh_dir, threshold = sys.argv[1], sys.argv[2], float(sys.argv[3])
-NAMES = ("BENCH_scan.json", "BENCH_batch.json", "BENCH_train.json", "BENCH_block.json")
+NAMES = ("BENCH_scan.json", "BENCH_batch.json", "BENCH_train.json", "BENCH_block.json",
+         "BENCH_elk.json")
 # metric fields treated as ns/step costs (lower is better)
 COST_FIELDS = (
     "dense_ns_per_step", "diag_ns_per_step",
@@ -46,6 +49,7 @@ COST_FIELDS = (
     "seq_step_ns", "deer_step_ns", "quasi_step_ns",
     "dense_solve_ns_per_step", "block_solve_ns_per_step", "quasi_solve_ns_per_step",
     "dense_invlin_ns_per_step", "block_invlin_ns_per_step", "diag_invlin_ns_per_step",
+    "plain_iter_ns_per_step", "elk_iter_ns_per_step",
 )
 
 def git_tracked(name):
@@ -85,10 +89,13 @@ for name in NAMES:
         base = json.load(f)
     # key includes the stacked-model depth (absent in pre-depth-arm
     # baselines -> default 1) so the depth-2 train point cannot shadow the
-    # depth-1 point sharing its (n, T)
-    base_pts = {(p["n"], p["t"], p.get("layers", 1)): p for p in base.get("points", [])}
+    # depth-1 point sharing its (n, T); "scale" keeps old-format ELK
+    # baselines (keyed per weight-amplification) from shadowing new ones
+    def point_key(p):
+        return (p.get("n"), p["t"], p.get("layers", 1), p.get("scale"))
+    base_pts = {point_key(p): p for p in base.get("points", [])}
     for p in fresh.get("points", []):
-        key = (p["n"], p["t"], p.get("layers", 1))
+        key = point_key(p)
         b = base_pts.get(key)
         if b is None:
             continue
@@ -155,6 +162,37 @@ if os.path.exists(block_path):
                     f"({p['block_invlin_ns_per_step']:.1f} vs {p['dense_invlin_ns_per_step']:.1f} ns/step)")
     if gated == 0 and enforce:
         failures.append("BENCH_block.json: no n >= 16, T >= 1024 point to gate on")
+
+# ELK acceptance gate: where the undamped solve converges (the fixture's
+# short, benign horizons), the adaptive-damping machinery must cost < 2x the
+# plain per-iteration cost (FUNCEVAL + INVLIN + the extra RESIDUAL merit
+# pass). Overflow-horizon points are reported but not wall-clock-gated —
+# there the comparison is convergence itself. Enforced under the same
+# baseline-armed contract as the train/block gates.
+elk_path = os.path.join(fresh_dir, "BENCH_elk.json")
+if os.path.exists(elk_path):
+    enforce = had_baseline["BENCH_elk.json"]
+    with open(elk_path) as f:
+        doc = json.load(f)
+    gated = 0
+    for p in doc.get("points", []):
+        if p.get("plain_converged"):
+            gated += 1
+            over = p["damping_overhead"]
+            slow = over >= 2.0
+            tag = "REGRESSION" if slow and enforce else ("slow (advisory)" if slow else "ok")
+            print(f"elk gate T={p['t']}: damping overhead "
+                  f"{over:.2f}x per iteration {tag}")
+            if slow and enforce:
+                failures.append(
+                    f"BENCH_elk.json T={p['t']}: damping overhead "
+                    f"{over:.2f}x >= 2x per iteration")
+        else:
+            print(f"elk note T={p['t']}: plain diverged "
+                  f"({p.get('plain_divergence')}), elk converged="
+                  f"{bool(p.get('elk_converged'))}")
+    if gated == 0 and enforce:
+        failures.append("BENCH_elk.json: no plain-converged point to gate damping overhead on")
 
 print()
 if failures:
