@@ -170,5 +170,26 @@ fn main() {
         std::fs::write(&out, exp::scan_bench_json(&points, 1).to_string()).unwrap();
         println!("scan bench points written to {out}");
     }
+    if want("simd") {
+        // Scalar-vs-lane compose kernel A/B; same grid as `deer bench --exp
+        // simd` so CLI and harness numbers are directly comparable.
+        let dims = exp::simd_bench_grid(fast);
+        let budget = if fast {
+            Duration::from_millis(120)
+        } else {
+            Duration::from_millis(400)
+        };
+        let (t, points) = exp::simd_microbench(&dims, budget);
+        rec.table(
+            "simd_compose",
+            "Compose kernels: scalar vs portable-SIMD ns/compose (measured, 1 thread)",
+            &t,
+        )
+        .unwrap();
+        let out = std::env::var("DEER_BENCH_SIMD_OUT")
+            .unwrap_or_else(|_| "BENCH_simd.json".to_string());
+        std::fs::write(&out, exp::simd_bench_json(&points).to_string()).unwrap();
+        println!("simd bench points written to {out}");
+    }
     println!("\nbench tables written to results/bench/");
 }

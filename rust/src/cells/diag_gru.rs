@@ -1,0 +1,647 @@
+//! GRU with **diagonal recurrent weights** — the ParaRNN-style variant
+//! whose state Jacobian is *natively diagonal*, so DEER's Full mode is
+//! exact Newton entirely through the O(n) packed kernels of
+//! [`crate::scan::diag`] (no `DiagonalApprox` needed).
+//!
+//! Equations (the standard GRU with `W_h* = diag(u_*)`):
+//!
+//! ```text
+//! r  = σ(W_ir x + b_ir + b_hr + u_r ⊙ h)
+//! z  = σ(W_iz x + b_iz + b_hz + u_z ⊙ h)
+//! m  = u_n ⊙ h + b_hn
+//! ñ  = tanh(W_in x + b_in + r ⊙ m)
+//! h' = (1 − z) ⊙ ñ + z ⊙ h
+//! ```
+//!
+//! Every gate of unit `i` reads only `h_i`, so
+//!
+//! ```text
+//! ∂h'_i/∂h_j = δ_ij [ c1·u_n_i + c2·u_r_i + c3·u_z_i + z_i ]
+//! c1 = (1−z)(1−ñ²)r,  c2 = (1−z)(1−ñ²)m·r(1−r),  c3 = (h−ñ)·z(1−z)
+//! ```
+//!
+//! — the exact coefficients of the dense [`super::Gru`] Jacobian restricted
+//! to the diagonal. A `DiagGru` is numerically identical (bitwise, up to
+//! signed zeros) to a [`super::Gru`] whose `W_h*` are the diagonal
+//! embeddings of `u_*`; the tests pin that equivalence.
+
+use super::{init_uniform, sigmoid, Cell, CellGrad, JacobianStructure};
+use crate::util::rng::Rng;
+use crate::util::scalar::Scalar;
+
+/// Diagonal-recurrence GRU with a flat parameter vector.
+///
+/// Layout: `[W_ir, W_iz, W_in] (3·n·m)`, `[u_r, u_z, u_n] (3·n)`,
+/// `[b_ir, b_iz, b_in, b_hr, b_hz, b_hn] (6·n)`.
+#[derive(Debug, Clone)]
+pub struct DiagGru<S> {
+    n: usize,
+    m: usize,
+    p: Vec<S>,
+}
+
+// Workspace layout offsets (ws_len = 4n): r (n) | z (n) | m (n) | ñ (n)
+
+impl<S: Scalar> DiagGru<S> {
+    /// New cell with `n` hidden units and `m` inputs, uniform(-1/√n) init;
+    /// the recurrent gains are shrunk inside the unit circle like
+    /// [`super::IndRnn`] so long sequences neither blow up nor saturate.
+    pub fn new(n: usize, m: usize, rng: &mut Rng) -> Self {
+        let mut p = vec![S::zero(); 3 * n * m + 3 * n + 6 * n];
+        init_uniform(&mut p, n, rng);
+        let u_lo = 3 * n * m;
+        for v in p[u_lo..u_lo + 3 * n].iter_mut() {
+            *v = *v * S::from_f64c(0.9);
+        }
+        DiagGru { n, m, p }
+    }
+
+    /// Construct from an existing flat parameter vector.
+    pub fn from_params(n: usize, m: usize, p: Vec<S>) -> Self {
+        assert_eq!(p.len(), 3 * n * m + 3 * n + 6 * n);
+        DiagGru { n, m, p }
+    }
+
+    #[inline]
+    fn w_i(&self, k: usize) -> &[S] {
+        let (n, m) = (self.n, self.m);
+        &self.p[k * n * m..(k + 1) * n * m]
+    }
+    #[inline]
+    fn u(&self, k: usize) -> &[S] {
+        let (n, m) = (self.n, self.m);
+        let base = 3 * n * m;
+        &self.p[base + k * n..base + (k + 1) * n]
+    }
+    #[inline]
+    fn b(&self, k: usize) -> &[S] {
+        let (n, m) = (self.n, self.m);
+        let base = 3 * n * m + 3 * n;
+        &self.p[base + k * n..base + (k + 1) * n]
+    }
+    fn off_w_i(&self, k: usize) -> usize {
+        k * self.n * self.m
+    }
+    fn off_u(&self, k: usize) -> usize {
+        3 * self.n * self.m + k * self.n
+    }
+    fn off_b(&self, k: usize) -> usize {
+        3 * self.n * self.m + 3 * self.n + k * self.n
+    }
+
+    /// Gate activations into ws: `[r, z, m, ñ]` each length n. The
+    /// pre-activation base `[a_r, a_z, a_n]` is either computed inline from
+    /// `x` (direct path, `pre = None`) or read from the trajectory-invariant
+    /// projections of [`Cell::precompute_x`] (`pre = Some`, `x` unused) —
+    /// ONE implementation owns the bitwise-sensitive accumulation order
+    /// (bias + W·x first, then the `u ⊙ h` recurrent term), so the two
+    /// paths cannot drift.
+    #[inline]
+    fn gates(&self, h: &[S], x: &[S], pre: Option<&[S]>, ws: &mut [S]) {
+        let n = self.n;
+        let m = self.m;
+        let (u_r, u_z, u_n) = (self.u(0), self.u(1), self.u(2));
+        let b_hn = self.b(5);
+        for i in 0..n {
+            let (ar, az, an) = match pre {
+                Some(p) => (p[i], p[n + i], p[2 * n + i]),
+                None => {
+                    let (w_ir, w_iz, w_in) = (self.w_i(0), self.w_i(1), self.w_i(2));
+                    let (b_ir, b_iz, b_in) = (self.b(0), self.b(1), self.b(2));
+                    let (b_hr, b_hz) = (self.b(3), self.b(4));
+                    let mut ar = b_ir[i] + b_hr[i];
+                    let mut az = b_iz[i] + b_hz[i];
+                    let mut an = b_in[i];
+                    let (rowr, rowz, rown) = (
+                        &w_ir[i * m..(i + 1) * m],
+                        &w_iz[i * m..(i + 1) * m],
+                        &w_in[i * m..(i + 1) * m],
+                    );
+                    for j in 0..m {
+                        let xj = x[j];
+                        ar += rowr[j] * xj;
+                        az += rowz[j] * xj;
+                        an += rown[j] * xj;
+                    }
+                    (ar, az, an)
+                }
+            };
+            let hi = h[i];
+            let r = sigmoid(ar + u_r[i] * hi);
+            let z = sigmoid(az + u_z[i] * hi);
+            let hm = b_hn[i] + u_n[i] * hi;
+            ws[i] = r;
+            ws[n + i] = z;
+            ws[2 * n + i] = hm;
+            ws[3 * n + i] = (an + r * hm).tanh();
+        }
+    }
+
+    /// Shared tail of the Jacobian kernels: f and the packed diagonal from
+    /// the gate values — the exact per-diagonal expression of the dense
+    /// [`super::Gru`] kernel (`c1·u_n + c2·u_r + c3·u_z`, then `+ z`).
+    #[inline]
+    fn diag_from_gates(&self, h: &[S], out_f: &mut [S], out_jdiag: &mut [S], ws: &[S]) {
+        let n = self.n;
+        let (u_r, u_z, u_n) = (self.u(0), self.u(1), self.u(2));
+        for i in 0..n {
+            let r = ws[i];
+            let z = ws[n + i];
+            let mg = ws[2 * n + i];
+            let nh = ws[3 * n + i];
+            out_f[i] = (S::one() - z) * nh + z * h[i];
+            let dn = S::one() - nh * nh;
+            let dr = r * (S::one() - r);
+            let dz = z * (S::one() - z);
+            let c1 = (S::one() - z) * dn * r;
+            let c2 = (S::one() - z) * dn * mg * dr;
+            let c3 = (h[i] - nh) * dz;
+            let mut d = c1 * u_n[i] + c2 * u_r[i] + c3 * u_z[i];
+            d += z;
+            out_jdiag[i] = d;
+        }
+    }
+}
+
+impl<S: Scalar> Cell<S> for DiagGru<S> {
+    fn state_dim(&self) -> usize {
+        self.n
+    }
+    fn input_dim(&self) -> usize {
+        self.m
+    }
+    fn ws_len(&self) -> usize {
+        4 * self.n
+    }
+
+    fn jacobian_structure(&self) -> JacobianStructure {
+        JacobianStructure::Diagonal
+    }
+
+    fn step(&self, h: &[S], x: &[S], out: &mut [S], ws: &mut [S]) {
+        let n = self.n;
+        self.gates(h, x, None, ws);
+        for i in 0..n {
+            let (z, nh) = (ws[n + i], ws[3 * n + i]);
+            out[i] = (S::one() - z) * nh + z * h[i];
+        }
+    }
+
+    fn jacobian(&self, h: &[S], x: &[S], out_f: &mut [S], out_jac: &mut [S], ws: &mut [S]) {
+        // Dense emission kept for the generic path: diag embedded in n×n.
+        let n = self.n;
+        for v in out_jac.iter_mut() {
+            *v = S::zero();
+        }
+        self.gates(h, x, None, ws);
+        let mut jd = vec![S::zero(); n];
+        self.diag_from_gates(h, out_f, &mut jd, &ws[..4 * n]);
+        for i in 0..n {
+            out_jac[i * n + i] = jd[i];
+        }
+    }
+
+    fn jacobian_diag(&self, h: &[S], x: &[S], out_f: &mut [S], out_jdiag: &mut [S], ws: &mut [S]) {
+        self.gates(h, x, None, ws);
+        let (gv, _) = ws.split_at(4 * self.n);
+        self.diag_from_gates(h, out_f, out_jdiag, gv);
+    }
+
+    fn x_precompute_len(&self) -> usize {
+        3 * self.n
+    }
+
+    /// `out[t] = [a_r, a_z, a_n]` input projections with the recurrent-free
+    /// biases folded in — identical layout and accumulation order to
+    /// [`super::Gru::precompute_x`].
+    fn precompute_x(&self, xs: &[S], out: &mut [S]) {
+        let n = self.n;
+        let m = self.m;
+        let t_len = xs.len() / m;
+        debug_assert_eq!(out.len(), t_len * 3 * n);
+        let (w_ir, w_iz, w_in) = (self.w_i(0), self.w_i(1), self.w_i(2));
+        let (b_ir, b_iz, b_in) = (self.b(0), self.b(1), self.b(2));
+        let (b_hr, b_hz) = (self.b(3), self.b(4));
+        for t in 0..t_len {
+            let x = &xs[t * m..(t + 1) * m];
+            let o = &mut out[t * 3 * n..(t + 1) * 3 * n];
+            for i in 0..n {
+                let mut ar = b_ir[i] + b_hr[i];
+                let mut az = b_iz[i] + b_hz[i];
+                let mut an = b_in[i];
+                let (rowr, rowz, rown) = (
+                    &w_ir[i * m..(i + 1) * m],
+                    &w_iz[i * m..(i + 1) * m],
+                    &w_in[i * m..(i + 1) * m],
+                );
+                for j in 0..m {
+                    let xj = x[j];
+                    ar += rowr[j] * xj;
+                    az += rowz[j] * xj;
+                    an += rown[j] * xj;
+                }
+                o[i] = ar;
+                o[n + i] = az;
+                o[2 * n + i] = an;
+            }
+        }
+    }
+
+    fn jacobian_pre(&self, h: &[S], pre: &[S], out_f: &mut [S], out_jac: &mut [S], ws: &mut [S]) {
+        let n = self.n;
+        for v in out_jac.iter_mut() {
+            *v = S::zero();
+        }
+        self.gates(h, &[], Some(pre), ws);
+        let mut jd = vec![S::zero(); n];
+        self.diag_from_gates(h, out_f, &mut jd, &ws[..4 * n]);
+        for i in 0..n {
+            out_jac[i * n + i] = jd[i];
+        }
+    }
+
+    fn jacobian_diag_pre(
+        &self,
+        h: &[S],
+        pre: &[S],
+        out_f: &mut [S],
+        out_jdiag: &mut [S],
+        ws: &mut [S],
+    ) {
+        self.gates(h, &[], Some(pre), ws);
+        let (gv, _) = ws.split_at(4 * self.n);
+        self.diag_from_gates(h, out_f, out_jdiag, gv);
+    }
+
+    /// Fused batched step: the recurrence is elementwise, so the unit loop
+    /// is outermost and each input-weight row streams across all B
+    /// elements. Per-element accumulation order is identical to
+    /// [`DiagGru::gates`], so the result is **bitwise** equal to the
+    /// looped default.
+    fn step_batch(&self, hs: &[S], xs: &[S], out: &mut [S], ws: &mut [S], batch: usize) {
+        let n = self.n;
+        let m = self.m;
+        let _ = ws;
+        debug_assert_eq!(hs.len(), batch * n);
+        debug_assert_eq!(xs.len(), batch * m);
+        debug_assert_eq!(out.len(), batch * n);
+        let (w_ir, w_iz, w_in) = (self.w_i(0), self.w_i(1), self.w_i(2));
+        let (u_r, u_z, u_n) = (self.u(0), self.u(1), self.u(2));
+        let (b_ir, b_iz, b_in) = (self.b(0), self.b(1), self.b(2));
+        let (b_hr, b_hz, b_hn) = (self.b(3), self.b(4), self.b(5));
+        for i in 0..n {
+            let (rowr, rowz, rown) = (
+                &w_ir[i * m..(i + 1) * m],
+                &w_iz[i * m..(i + 1) * m],
+                &w_in[i * m..(i + 1) * m],
+            );
+            for s in 0..batch {
+                let x = &xs[s * m..(s + 1) * m];
+                let mut ar = b_ir[i] + b_hr[i];
+                let mut az = b_iz[i] + b_hz[i];
+                let mut an = b_in[i];
+                for j in 0..m {
+                    let xj = x[j];
+                    ar += rowr[j] * xj;
+                    az += rowz[j] * xj;
+                    an += rown[j] * xj;
+                }
+                let hi = hs[s * n + i];
+                let r = sigmoid(ar + u_r[i] * hi);
+                let z = sigmoid(az + u_z[i] * hi);
+                let hm = b_hn[i] + u_n[i] * hi;
+                let nh = (an + r * hm).tanh();
+                out[s * n + i] = (S::one() - z) * nh + z * hi;
+            }
+        }
+    }
+
+    /// Fused batched packed-diagonal Jacobian — projects each element's
+    /// input and delegates to the fused [`Cell::jacobian_diag_pre_batch`]
+    /// kernel. Not a hot path (FUNCEVAL hoists the projections), so the
+    /// scratch allocation is fine.
+    fn jacobian_diag_batch(
+        &self,
+        hs: &[S],
+        xs: &[S],
+        out_f: &mut [S],
+        out_jdiag: &mut [S],
+        ws: &mut [S],
+        batch: usize,
+    ) {
+        let m = self.m;
+        let pl = 3 * self.n;
+        debug_assert_eq!(xs.len(), batch * m);
+        let mut pres = vec![S::zero(); batch * pl];
+        for s in 0..batch {
+            self.precompute_x(&xs[s * m..(s + 1) * m], &mut pres[s * pl..(s + 1) * pl]);
+        }
+        self.jacobian_diag_pre_batch(hs, &pres, out_f, out_jdiag, ws, batch);
+    }
+
+    /// Fused batched [`Cell::jacobian_diag_pre`] — the FUNCEVAL hot kernel
+    /// of the natively-diagonal path: the recurrence is elementwise, so
+    /// the unit loop is outermost and each `u_*[i]` streams across all B
+    /// elements. Per-element arithmetic is identical to the looped
+    /// default, hence **bitwise** equal — the driver's fused-vs-per-element
+    /// dispatch never changes numerics.
+    fn jacobian_diag_pre_batch(
+        &self,
+        hs: &[S],
+        pres: &[S],
+        out_f: &mut [S],
+        out_jdiag: &mut [S],
+        ws: &mut [S],
+        batch: usize,
+    ) {
+        let n = self.n;
+        let _ = ws;
+        debug_assert_eq!(hs.len(), batch * n);
+        debug_assert_eq!(pres.len(), batch * 3 * n);
+        debug_assert_eq!(out_f.len(), batch * n);
+        debug_assert_eq!(out_jdiag.len(), batch * n);
+        let (u_r, u_z, u_n) = (self.u(0), self.u(1), self.u(2));
+        let b_hn = self.b(5);
+        for i in 0..n {
+            let (ur, uz, un) = (u_r[i], u_z[i], u_n[i]);
+            for s in 0..batch {
+                let pre = &pres[s * 3 * n..(s + 1) * 3 * n];
+                let hi = hs[s * n + i];
+                let r = sigmoid(pre[i] + ur * hi);
+                let z = sigmoid(pre[n + i] + uz * hi);
+                let mg = b_hn[i] + un * hi;
+                let nh = (pre[2 * n + i] + r * mg).tanh();
+                out_f[s * n + i] = (S::one() - z) * nh + z * hi;
+                let dn = S::one() - nh * nh;
+                let dr = r * (S::one() - r);
+                let dz = z * (S::one() - z);
+                let c1 = (S::one() - z) * dn * r;
+                let c2 = (S::one() - z) * dn * mg * dr;
+                let c3 = (hi - nh) * dz;
+                let mut d = c1 * un + c2 * ur + c3 * uz;
+                d += z;
+                out_jdiag[s * n + i] = d;
+            }
+        }
+    }
+
+    fn flops_step(&self) -> u64 {
+        let (n, m) = (self.n as u64, self.m as u64);
+        // three input matvecs + elementwise gates/recurrence
+        2 * 3 * n * m + 18 * n
+    }
+
+    fn flops_jacobian(&self) -> u64 {
+        let n = self.n as u64;
+        self.flops_step() + 14 * n
+    }
+}
+
+impl<S: Scalar> CellGrad<S> for DiagGru<S> {
+    fn num_params(&self) -> usize {
+        self.p.len()
+    }
+    fn params(&self) -> &[S] {
+        &self.p
+    }
+    fn params_mut(&mut self) -> &mut [S] {
+        &mut self.p
+    }
+
+    fn vjp_step(
+        &self,
+        h: &[S],
+        x: &[S],
+        lambda: &[S],
+        dh: &mut [S],
+        mut dx: Option<&mut [S]>,
+        dtheta: &mut [S],
+        ws: &mut [S],
+    ) {
+        let n = self.n;
+        let m = self.m;
+        self.gates(h, x, None, ws);
+
+        // per-unit adjoints, as in the dense GRU: da_r / da_z are the gate
+        // pre-activation adjoints, dc the tanh input-part adjoint (== d
+        // b_in), dm the adjoint of m = u_n ⊙ h + b_hn
+        let mut da_r = vec![S::zero(); n];
+        let mut da_z = vec![S::zero(); n];
+        let mut dc = vec![S::zero(); n];
+        let mut dm = vec![S::zero(); n];
+        let (u_r, u_z, u_n) = (self.u(0), self.u(1), self.u(2));
+        for i in 0..n {
+            let r = ws[i];
+            let z = ws[n + i];
+            let mg = ws[2 * n + i];
+            let nh = ws[3 * n + i];
+            let lam = lambda[i];
+            dh[i] += lam * z;
+            let dnh = lam * (S::one() - z);
+            let dzg = lam * (h[i] - nh);
+            let du = dnh * (S::one() - nh * nh);
+            dc[i] = du;
+            dm[i] = du * r;
+            da_r[i] = du * mg * (r * (S::one() - r));
+            da_z[i] = dzg * (z * (S::one() - z));
+            // elementwise recurrent paths
+            dh[i] += u_r[i] * da_r[i] + u_z[i] * da_z[i] + u_n[i] * dm[i];
+        }
+
+        if let Some(dx) = dx.as_deref_mut() {
+            let (w_ir, w_iz, w_in) = (self.w_i(0), self.w_i(1), self.w_i(2));
+            for i in 0..n {
+                let (ar, az, ac) = (da_r[i], da_z[i], dc[i]);
+                let (rowir, rowiz, rowin) = (
+                    &w_ir[i * m..(i + 1) * m],
+                    &w_iz[i * m..(i + 1) * m],
+                    &w_in[i * m..(i + 1) * m],
+                );
+                for j in 0..m {
+                    dx[j] += rowir[j] * ar + rowiz[j] * az + rowin[j] * ac;
+                }
+            }
+        }
+
+        let (o_wir, o_wiz, o_win) = (self.off_w_i(0), self.off_w_i(1), self.off_w_i(2));
+        let (o_ur, o_uz, o_un) = (self.off_u(0), self.off_u(1), self.off_u(2));
+        for i in 0..n {
+            let (ar, az, ac, am) = (da_r[i], da_z[i], dc[i], dm[i]);
+            for j in 0..m {
+                let xj = x[j];
+                dtheta[o_wir + i * m + j] += ar * xj;
+                dtheta[o_wiz + i * m + j] += az * xj;
+                dtheta[o_win + i * m + j] += ac * xj;
+            }
+            let hi = h[i];
+            dtheta[o_ur + i] += ar * hi;
+            dtheta[o_uz + i] += az * hi;
+            dtheta[o_un + i] += am * hi;
+            dtheta[self.off_b(0) + i] += ar; // b_ir
+            dtheta[self.off_b(1) + i] += az; // b_iz
+            dtheta[self.off_b(2) + i] += ac; // b_in
+            dtheta[self.off_b(3) + i] += ar; // b_hr
+            dtheta[self.off_b(4) + i] += az; // b_hz
+            dtheta[self.off_b(5) + i] += am; // b_hn
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::test_support::{check_jacobian, check_vjp};
+    use crate::cells::Gru;
+
+    #[test]
+    fn jacobian_matches_fd() {
+        let mut rng = Rng::new(41);
+        for &(n, m) in &[(1usize, 1usize), (3, 2), (6, 4)] {
+            let cell: DiagGru<f64> = DiagGru::new(n, m, &mut rng);
+            check_jacobian(&cell, 500 + n as u64, 1e-6);
+        }
+    }
+
+    #[test]
+    fn vjp_matches_fd() {
+        let mut rng = Rng::new(42);
+        for &(n, m) in &[(1usize, 2usize), (4, 3)] {
+            let cell: DiagGru<f64> = DiagGru::new(n, m, &mut rng);
+            check_vjp(&cell, 600 + n as u64, 1e-6);
+        }
+    }
+
+    #[test]
+    fn structure_reported_diagonal() {
+        let mut rng = Rng::new(43);
+        let cell: DiagGru<f64> = DiagGru::new(3, 2, &mut rng);
+        assert_eq!(cell.jacobian_structure(), JacobianStructure::Diagonal);
+        assert_eq!(cell.x_precompute_len(), 9);
+    }
+
+    /// Build the dense [`Gru`] whose `W_h*` are the diagonal embeddings of
+    /// this cell's `u_*` (same `W_i*` and biases).
+    fn dense_twin(cell: &DiagGru<f64>) -> Gru<f64> {
+        let (n, m) = (cell.n, cell.m);
+        let mut p = vec![0.0; 3 * n * m + 3 * n * n + 6 * n];
+        p[..3 * n * m].copy_from_slice(&cell.p[..3 * n * m]);
+        for k in 0..3 {
+            let u = cell.u(k);
+            for i in 0..n {
+                p[3 * n * m + k * n * n + i * n + i] = u[i];
+            }
+        }
+        let b_src = &cell.p[3 * n * m + 3 * n..];
+        p[3 * n * m + 3 * n * n..].copy_from_slice(b_src);
+        Gru::from_params(n, m, p)
+    }
+
+    /// The diagonal cell IS the dense GRU with diagonally-embedded
+    /// recurrent weights: step, dense Jacobian and packed diagonal all
+    /// agree (summing the embedded zeros changes nothing).
+    #[test]
+    fn matches_dense_gru_with_embedded_diagonal() {
+        let mut rng = Rng::new(44);
+        for &(n, m) in &[(1usize, 1usize), (4, 3), (7, 2)] {
+            let diag: DiagGru<f64> = DiagGru::new(n, m, &mut rng);
+            let dense = dense_twin(&diag);
+            let mut h = vec![0.0; n];
+            let mut x = vec![0.0; m];
+            rng.fill_normal(&mut h, 0.8);
+            rng.fill_normal(&mut x, 1.0);
+            let mut wsd = vec![0.0; diag.ws_len()];
+            let mut wsg = vec![0.0; dense.ws_len()];
+
+            let mut f1 = vec![0.0; n];
+            let mut f2 = vec![0.0; n];
+            diag.step(&h, &x, &mut f1, &mut wsd);
+            dense.step(&h, &x, &mut f2, &mut wsg);
+            assert_eq!(f1, f2, "n={n}: step");
+
+            let mut jf = vec![0.0; n];
+            let mut jd = vec![0.0; n];
+            diag.jacobian_diag(&h, &x, &mut jf, &mut jd, &mut wsd);
+            let mut gf = vec![0.0; n];
+            let mut gjac = vec![0.0; n * n];
+            dense.jacobian(&h, &x, &mut gf, &mut gjac, &mut wsg);
+            assert_eq!(jf, gf, "n={n}: jacobian f");
+            for i in 0..n {
+                assert_eq!(jd[i], gjac[i * n + i], "n={n}: diag entry {i}");
+                for j in 0..n {
+                    if i != j {
+                        assert_eq!(gjac[i * n + j], 0.0, "n={n}: off-diag ({i},{j})");
+                    }
+                }
+            }
+        }
+    }
+
+    /// Packed diagonal vs dense emission, and the precomputed-input paths,
+    /// all bitwise equal to the direct kernels.
+    #[test]
+    fn packed_and_pre_paths_match_bitwise() {
+        let mut rng = Rng::new(45);
+        let (n, m, t) = (5usize, 3usize, 7usize);
+        let cell: DiagGru<f64> = DiagGru::new(n, m, &mut rng);
+        let mut xs = vec![0.0; t * m];
+        rng.fill_normal(&mut xs, 1.0);
+        let mut pre = vec![0.0; t * cell.x_precompute_len()];
+        cell.precompute_x(&xs, &mut pre);
+        let mut h = vec![0.0; n];
+        rng.fill_normal(&mut h, 0.6);
+        let mut ws = vec![0.0; cell.ws_len()];
+        let pl = cell.x_precompute_len();
+        for i in 0..t {
+            let x = &xs[i * m..(i + 1) * m];
+            let p = &pre[i * pl..(i + 1) * pl];
+            let (mut f1, mut f2, mut f3) = (vec![0.0; n], vec![0.0; n], vec![0.0; n]);
+            let (mut d1, mut d2) = (vec![0.0; n], vec![0.0; n]);
+            let mut jac = vec![0.0; n * n];
+            cell.jacobian_diag(&h, x, &mut f1, &mut d1, &mut ws);
+            cell.jacobian_diag_pre(&h, p, &mut f2, &mut d2, &mut ws);
+            cell.jacobian_pre(&h, p, &mut f3, &mut jac, &mut ws);
+            assert_eq!(f1, f2);
+            assert_eq!(d1, d2);
+            assert_eq!(f1, f3);
+            for j in 0..n {
+                assert_eq!(jac[j * n + j], d1[j]);
+            }
+        }
+    }
+
+    /// Fused batched kernels vs the looped defaults, bitwise.
+    #[test]
+    fn batched_kernels_match_looped_bitwise() {
+        let mut rng = Rng::new(46);
+        let (n, m, batch) = (4usize, 3usize, 5usize);
+        let cell: DiagGru<f64> = DiagGru::new(n, m, &mut rng);
+        let mut hs = vec![0.0; batch * n];
+        let mut xs = vec![0.0; batch * m];
+        rng.fill_normal(&mut hs, 0.7);
+        rng.fill_normal(&mut xs, 1.0);
+        let mut ws = vec![0.0; cell.ws_len()];
+
+        let mut f_b = vec![0.0; batch * n];
+        cell.step_batch(&hs, &xs, &mut f_b, &mut ws, batch);
+        let pl = cell.x_precompute_len();
+        let mut pres = vec![0.0; batch * pl];
+        for s in 0..batch {
+            cell.precompute_x(&xs[s * m..(s + 1) * m], &mut pres[s * pl..(s + 1) * pl]);
+        }
+        let mut jf_b = vec![0.0; batch * n];
+        let mut jd_b = vec![0.0; batch * n];
+        cell.jacobian_diag_pre_batch(&hs, &pres, &mut jf_b, &mut jd_b, &mut ws, batch);
+        for s in 0..batch {
+            let h = &hs[s * n..(s + 1) * n];
+            let x = &xs[s * m..(s + 1) * m];
+            let mut f = vec![0.0; n];
+            cell.step(h, x, &mut f, &mut ws);
+            assert_eq!(f, &f_b[s * n..(s + 1) * n], "seq {s}: step_batch");
+            let mut jf = vec![0.0; n];
+            let mut jd = vec![0.0; n];
+            cell.jacobian_diag_pre(h, &pres[s * pl..(s + 1) * pl], &mut jf, &mut jd, &mut ws);
+            assert_eq!(jf, &jf_b[s * n..(s + 1) * n], "seq {s}: pre_batch f");
+            assert_eq!(jd, &jd_b[s * n..(s + 1) * n], "seq {s}: pre_batch diag");
+        }
+    }
+}

@@ -1,0 +1,637 @@
+//! LSTM with **diagonal recurrent weights** — the ParaRNN-style variant
+//! whose interleaved-state Jacobian is *natively* `Block(2)`: each gate of
+//! unit `i` reads only `h_i` (and `c'` only `c_i`), so the 2n×2n Jacobian
+//! is exactly the per-unit 2×2 tiles `[[∂h'/∂h, ∂h'/∂c], [∂c'/∂h,
+//! ∂c'/∂c]]` and DEER's Full mode is exact Newton through the packed
+//! O(n·k²) kernels of [`crate::scan::block`] (no `BlockApprox` needed).
+//!
+//! Equations (the standard LSTM with `U_k = diag(u_k)`):
+//! ```text
+//! i = σ(W_i x + u_i ⊙ h + b_i)      f = σ(W_f x + u_f ⊙ h + b_f)
+//! g = tanh(W_g x + u_g ⊙ h + b_g)   o = σ(W_o x + u_o ⊙ h + b_o)
+//! c' = f ⊙ c + i ⊙ g                h' = o ⊙ tanh(c')
+//! ```
+//!
+//! State is interleaved like [`super::Lstm`]: `s = [h_0, c_0, h_1, c_1,
+//! …]`, `state_dim() = 2n`. A `DiagLstm` is numerically identical to a
+//! [`super::Lstm`] whose `U_k` are the diagonal embeddings of `u_k` (the
+//! setting [`super::Lstm`]'s `diagonal_recurrence_makes_jacobian_block_diagonal`
+//! test pins); the tests here pin that equivalence directly.
+
+use super::{init_uniform, sigmoid, Cell, CellGrad, JacobianStructure};
+use crate::util::rng::Rng;
+use crate::util::scalar::Scalar;
+
+/// Diagonal-recurrence LSTM with `n` hidden units and `m` inputs;
+/// `state_dim() = 2n` (interleaved `[h_0, c_0, h_1, c_1, …]`).
+///
+/// Parameter layout: `[W_i, W_f, W_g, W_o] (4·n·m)`,
+/// `[u_i, u_f, u_g, u_o] (4·n)`, `[b_i, b_f, b_g, b_o] (4·n)`.
+#[derive(Debug, Clone)]
+pub struct DiagLstm<S> {
+    n: usize,
+    m: usize,
+    p: Vec<S>,
+}
+
+const GATES: usize = 4; // i, f, g, o
+
+// Workspace layout (ws_len = 6n): [i, f, g, o, tanh(c'), c'] gate values
+
+impl<S: Scalar> DiagLstm<S> {
+    /// New cell, uniform(-1/√n) init; recurrent gains shrunk inside the
+    /// unit circle like [`super::IndRnn`].
+    pub fn new(n: usize, m: usize, rng: &mut Rng) -> Self {
+        let mut p = vec![S::zero(); GATES * (n * m + 2 * n)];
+        init_uniform(&mut p, n, rng);
+        let u_lo = GATES * n * m;
+        for v in p[u_lo..u_lo + GATES * n].iter_mut() {
+            *v = *v * S::from_f64c(0.9);
+        }
+        DiagLstm { n, m, p }
+    }
+
+    /// Construct from an existing flat parameter vector.
+    pub fn from_params(n: usize, m: usize, p: Vec<S>) -> Self {
+        assert_eq!(p.len(), GATES * (n * m + 2 * n));
+        DiagLstm { n, m, p }
+    }
+
+    fn w(&self, k: usize) -> &[S] {
+        let (n, m) = (self.n, self.m);
+        &self.p[k * n * m..(k + 1) * n * m]
+    }
+    fn u(&self, k: usize) -> &[S] {
+        let (n, m) = (self.n, self.m);
+        let base = GATES * n * m;
+        &self.p[base + k * n..base + (k + 1) * n]
+    }
+    fn b(&self, k: usize) -> &[S] {
+        let (n, m) = (self.n, self.m);
+        let base = GATES * (n * m + n);
+        &self.p[base + k * n..base + (k + 1) * n]
+    }
+    fn off_w(&self, k: usize) -> usize {
+        k * self.n * self.m
+    }
+    fn off_u(&self, k: usize) -> usize {
+        GATES * self.n * self.m + k * self.n
+    }
+    fn off_b(&self, k: usize) -> usize {
+        GATES * (self.n * self.m + self.n) + k * self.n
+    }
+
+    /// Gate activations into ws: `[i, f, g, o, tanh(c'), c']` each length
+    /// n. The pre-activation base is either computed inline from `x`
+    /// (direct path, `pre = None`) or read from the trajectory-invariant
+    /// projections of [`Cell::precompute_x`] (`pre = Some`, `x` unused) —
+    /// ONE implementation owns the bitwise-sensitive accumulation order
+    /// (bias + W·x first, then the `u ⊙ h` recurrent term).
+    #[inline]
+    fn gates(&self, s: &[S], x: &[S], pre: Option<&[S]>, ws: &mut [S]) {
+        let n = self.n;
+        let m = self.m;
+        for k in 0..GATES {
+            let u = self.u(k);
+            for i in 0..n {
+                let a = match pre {
+                    Some(p) => p[k * n + i],
+                    None => {
+                        let w = self.w(k);
+                        let b = self.b(k);
+                        let mut a = b[i];
+                        let roww = &w[i * m..(i + 1) * m];
+                        for j in 0..m {
+                            a += roww[j] * x[j];
+                        }
+                        a
+                    }
+                };
+                let a = a + u[i] * s[2 * i];
+                ws[k * n + i] = if k == 2 { a.tanh() } else { sigmoid(a) };
+            }
+        }
+        for i in 0..n {
+            let cp = ws[n + i] * s[2 * i + 1] + ws[i] * ws[2 * n + i]; // f·c + i·g
+            ws[5 * n + i] = cp;
+            ws[4 * n + i] = cp.tanh();
+        }
+    }
+
+    /// Shared tail of the packed Block(2) kernels: block i is the 2×2 tile
+    /// `[[∂h'_i/∂h_i, ∂h'_i/∂c_i], [∂c'_i/∂h_i, ∂c'_i/∂c_i]]` — the exact
+    /// expressions of the dense [`super::Lstm`] kernel with the recurrent
+    /// rows collapsed to the `u_k[i]` diagonals.
+    #[inline]
+    fn block_from_gates(&self, s: &[S], out_f: &mut [S], out_jblk: &mut [S], gv: &[S]) {
+        let n = self.n;
+        let (u_i, u_f, u_g, u_o) = (self.u(0), self.u(1), self.u(2), self.u(3));
+        for i in 0..n {
+            let ig = gv[i];
+            let fg = gv[n + i];
+            let gg = gv[2 * n + i];
+            let og = gv[3 * n + i];
+            let tc = gv[4 * n + i];
+            let cp = gv[5 * n + i];
+            let ci = s[2 * i + 1];
+            out_f[2 * i] = og * tc;
+            out_f[2 * i + 1] = cp;
+
+            let di = ig * (S::one() - ig);
+            let df = fg * (S::one() - fg);
+            let dg = S::one() - gg * gg;
+            let do_ = og * (S::one() - og);
+            let dtc = S::one() - tc * tc;
+
+            let dcp_dh = ci * df * u_f[i] + gg * di * u_i[i] + ig * dg * u_g[i];
+            let dhp_dh = tc * do_ * u_o[i] + og * dtc * dcp_dh;
+            out_jblk[i * 4] = dhp_dh; // ∂h'_i/∂h_i
+            out_jblk[i * 4 + 1] = og * dtc * fg; // ∂h'_i/∂c_i
+            out_jblk[i * 4 + 2] = dcp_dh; // ∂c'_i/∂h_i
+            out_jblk[i * 4 + 3] = fg; // ∂c'_i/∂c_i
+        }
+    }
+}
+
+impl<S: Scalar> Cell<S> for DiagLstm<S> {
+    fn state_dim(&self) -> usize {
+        2 * self.n
+    }
+    fn input_dim(&self) -> usize {
+        self.m
+    }
+    fn ws_len(&self) -> usize {
+        6 * self.n
+    }
+
+    fn block_k(&self) -> Option<usize> {
+        Some(2)
+    }
+
+    /// Natively `Block(2)`: the diagonal recurrences concentrate the whole
+    /// Jacobian on the per-unit 2×2 tiles, so Full mode takes the packed
+    /// path as exact Newton.
+    fn jacobian_structure(&self) -> JacobianStructure {
+        JacobianStructure::Block { k: 2 }
+    }
+
+    fn step(&self, s: &[S], x: &[S], out: &mut [S], ws: &mut [S]) {
+        let n = self.n;
+        self.gates(s, x, None, ws);
+        for i in 0..n {
+            out[2 * i] = ws[3 * n + i] * ws[4 * n + i]; // h' = o·tanh(c')
+            out[2 * i + 1] = ws[5 * n + i]; // c'
+        }
+    }
+
+    fn jacobian(&self, s: &[S], x: &[S], out_f: &mut [S], out_jac: &mut [S], ws: &mut [S]) {
+        // Dense emission kept for the generic path: the 2×2 tiles embedded
+        // in the zeroed 2n×2n matrix.
+        let n = self.n;
+        let dim = 2 * n;
+        for v in out_jac.iter_mut() {
+            *v = S::zero();
+        }
+        self.gates(s, x, None, ws);
+        let mut blk = vec![S::zero(); dim * 2];
+        self.block_from_gates(s, out_f, &mut blk, &ws[..6 * n]);
+        for i in 0..n {
+            out_jac[(2 * i) * dim + 2 * i] = blk[i * 4];
+            out_jac[(2 * i) * dim + 2 * i + 1] = blk[i * 4 + 1];
+            out_jac[(2 * i + 1) * dim + 2 * i] = blk[i * 4 + 2];
+            out_jac[(2 * i + 1) * dim + 2 * i + 1] = blk[i * 4 + 3];
+        }
+    }
+
+    fn jacobian_block(&self, s: &[S], x: &[S], out_f: &mut [S], out_jblk: &mut [S], ws: &mut [S]) {
+        self.gates(s, x, None, ws);
+        self.block_from_gates(s, out_f, out_jblk, &ws[..6 * self.n]);
+    }
+
+    fn jacobian_block_pre(
+        &self,
+        s: &[S],
+        pre: &[S],
+        out_f: &mut [S],
+        out_jblk: &mut [S],
+        ws: &mut [S],
+    ) {
+        self.gates(s, &[], Some(pre), ws);
+        self.block_from_gates(s, out_f, out_jblk, &ws[..6 * self.n]);
+    }
+
+    fn x_precompute_len(&self) -> usize {
+        GATES * self.n
+    }
+
+    /// `out[t] = [W_i x + b_i, W_f x + b_f, W_g x + b_g, W_o x + b_o]` —
+    /// identical layout and accumulation order to
+    /// [`super::Lstm::precompute_x`].
+    fn precompute_x(&self, xs: &[S], out: &mut [S]) {
+        let n = self.n;
+        let m = self.m;
+        let t_len = xs.len() / m;
+        debug_assert_eq!(out.len(), t_len * GATES * n);
+        for t in 0..t_len {
+            let x = &xs[t * m..(t + 1) * m];
+            let o = &mut out[t * GATES * n..(t + 1) * GATES * n];
+            for k in 0..GATES {
+                let w = self.w(k);
+                let b = self.b(k);
+                for i in 0..n {
+                    let mut a = b[i];
+                    let roww = &w[i * m..(i + 1) * m];
+                    for j in 0..m {
+                        a += roww[j] * x[j];
+                    }
+                    o[k * n + i] = a;
+                }
+            }
+        }
+    }
+
+    fn jacobian_pre(&self, s: &[S], pre: &[S], out_f: &mut [S], out_jac: &mut [S], ws: &mut [S]) {
+        let n = self.n;
+        let dim = 2 * n;
+        for v in out_jac.iter_mut() {
+            *v = S::zero();
+        }
+        self.gates(s, &[], Some(pre), ws);
+        let mut blk = vec![S::zero(); dim * 2];
+        self.block_from_gates(s, out_f, &mut blk, &ws[..6 * n]);
+        for i in 0..n {
+            out_jac[(2 * i) * dim + 2 * i] = blk[i * 4];
+            out_jac[(2 * i) * dim + 2 * i + 1] = blk[i * 4 + 1];
+            out_jac[(2 * i + 1) * dim + 2 * i] = blk[i * 4 + 2];
+            out_jac[(2 * i + 1) * dim + 2 * i + 1] = blk[i * 4 + 3];
+        }
+    }
+
+    /// Fused batched step: the recurrence is elementwise, so the unit loop
+    /// is outermost and each weight row streams across all B elements.
+    /// Per-element accumulation order is identical to [`DiagLstm::gates`],
+    /// so the result is **bitwise** equal to the looped default.
+    fn step_batch(&self, hs: &[S], xs: &[S], out: &mut [S], ws: &mut [S], batch: usize) {
+        let n = self.n;
+        let m = self.m;
+        let dim = 2 * n;
+        let _ = ws;
+        debug_assert_eq!(hs.len(), batch * dim);
+        debug_assert_eq!(xs.len(), batch * m);
+        debug_assert_eq!(out.len(), batch * dim);
+        let (w_i, w_f, w_g, w_o) = (self.w(0), self.w(1), self.w(2), self.w(3));
+        let (u_i, u_f, u_g, u_o) = (self.u(0), self.u(1), self.u(2), self.u(3));
+        let (b_i, b_f, b_g, b_o) = (self.b(0), self.b(1), self.b(2), self.b(3));
+        for i in 0..n {
+            let (rwi, rwf, rwg, rwo) = (
+                &w_i[i * m..(i + 1) * m],
+                &w_f[i * m..(i + 1) * m],
+                &w_g[i * m..(i + 1) * m],
+                &w_o[i * m..(i + 1) * m],
+            );
+            for s in 0..batch {
+                let st = &hs[s * dim..(s + 1) * dim];
+                let x = &xs[s * m..(s + 1) * m];
+                let mut ai = b_i[i];
+                let mut af = b_f[i];
+                let mut ag = b_g[i];
+                let mut ao = b_o[i];
+                for j in 0..m {
+                    let xj = x[j];
+                    ai += rwi[j] * xj;
+                    af += rwf[j] * xj;
+                    ag += rwg[j] * xj;
+                    ao += rwo[j] * xj;
+                }
+                let hi = st[2 * i];
+                let ci = st[2 * i + 1];
+                let ig = sigmoid(ai + u_i[i] * hi);
+                let fg = sigmoid(af + u_f[i] * hi);
+                let gg = (ag + u_g[i] * hi).tanh();
+                let og = sigmoid(ao + u_o[i] * hi);
+                let cp = fg * ci + ig * gg;
+                out[s * dim + 2 * i] = og * cp.tanh();
+                out[s * dim + 2 * i + 1] = cp;
+            }
+        }
+    }
+
+    /// Fused batched Block(2) FUNCEVAL kernel — the packed-block hot path:
+    /// the recurrence is elementwise, so the unit loop is outermost and
+    /// each `u_k[i]` streams across all B elements. Per-element arithmetic
+    /// is identical to [`DiagLstm::gates`] + [`DiagLstm::block_from_gates`],
+    /// hence **bitwise** equal to the looped default.
+    fn jacobian_pre_block_batch(
+        &self,
+        hs: &[S],
+        pres: &[S],
+        out_f: &mut [S],
+        out_jblk: &mut [S],
+        ws: &mut [S],
+        batch: usize,
+    ) {
+        let n = self.n;
+        let dim = 2 * n;
+        let pl = GATES * n;
+        let bl = dim * 2; // packed [n, 2, 2] per element
+        let _ = ws;
+        debug_assert_eq!(hs.len(), batch * dim);
+        debug_assert_eq!(pres.len(), batch * pl);
+        debug_assert_eq!(out_f.len(), batch * dim);
+        debug_assert_eq!(out_jblk.len(), batch * bl);
+        let (u_i, u_f, u_g, u_o) = (self.u(0), self.u(1), self.u(2), self.u(3));
+        for i in 0..n {
+            let (ui, uf, ug, uo) = (u_i[i], u_f[i], u_g[i], u_o[i]);
+            for b in 0..batch {
+                let s = &hs[b * dim..(b + 1) * dim];
+                let pre = &pres[b * pl..(b + 1) * pl];
+                let hi = s[2 * i];
+                let ci = s[2 * i + 1];
+                let ig = sigmoid(pre[i] + ui * hi);
+                let fg = sigmoid(pre[n + i] + uf * hi);
+                let gg = (pre[2 * n + i] + ug * hi).tanh();
+                let og = sigmoid(pre[3 * n + i] + uo * hi);
+                let cp = fg * ci + ig * gg;
+                let tc = cp.tanh();
+                out_f[b * dim + 2 * i] = og * tc;
+                out_f[b * dim + 2 * i + 1] = cp;
+
+                let di = ig * (S::one() - ig);
+                let df = fg * (S::one() - fg);
+                let dg = S::one() - gg * gg;
+                let do_ = og * (S::one() - og);
+                let dtc = S::one() - tc * tc;
+                let dcp_dh = ci * df * uf + gg * di * ui + ig * dg * ug;
+                let dhp_dh = tc * do_ * uo + og * dtc * dcp_dh;
+                let blk = &mut out_jblk[b * bl + i * 4..b * bl + (i + 1) * 4];
+                blk[0] = dhp_dh;
+                blk[1] = og * dtc * fg;
+                blk[2] = dcp_dh;
+                blk[3] = fg;
+            }
+        }
+    }
+
+    fn flops_step(&self) -> u64 {
+        let (n, m) = (self.n as u64, self.m as u64);
+        // four input matvecs + elementwise gates/recurrence
+        2 * GATES as u64 * n * m + 22 * n
+    }
+
+    fn flops_jacobian(&self) -> u64 {
+        let n = self.n as u64;
+        self.flops_step() + 26 * n
+    }
+}
+
+impl<S: Scalar> CellGrad<S> for DiagLstm<S> {
+    fn num_params(&self) -> usize {
+        self.p.len()
+    }
+    fn params(&self) -> &[S] {
+        &self.p
+    }
+    fn params_mut(&mut self) -> &mut [S] {
+        &mut self.p
+    }
+
+    fn vjp_step(
+        &self,
+        s: &[S],
+        x: &[S],
+        lambda: &[S],
+        dh_acc: &mut [S],
+        mut dx: Option<&mut [S]>,
+        dtheta: &mut [S],
+        ws: &mut [S],
+    ) {
+        let n = self.n;
+        let m = self.m;
+        self.gates(s, x, None, ws);
+        let gv = &ws[..6 * n];
+
+        // pre-activation adjoints per gate; λ read interleaved
+        let mut da = vec![S::zero(); GATES * n];
+        for i in 0..n {
+            let ig = gv[i];
+            let fg = gv[n + i];
+            let gg = gv[2 * n + i];
+            let og = gv[3 * n + i];
+            let tc = gv[4 * n + i];
+            let dtc = S::one() - tc * tc;
+            let lam_h = lambda[2 * i];
+            let lam_c = lambda[2 * i + 1];
+            let ci = s[2 * i + 1];
+
+            let dcp = lam_c + lam_h * og * dtc;
+            da[3 * n + i] = lam_h * tc * (og * (S::one() - og));
+            da[n + i] = dcp * ci * (fg * (S::one() - fg));
+            da[i] = dcp * gg * (ig * (S::one() - ig));
+            da[2 * n + i] = dcp * ig * (S::one() - gg * gg);
+            dh_acc[2 * i + 1] += dcp * fg;
+        }
+
+        for k in 0..GATES {
+            let u = self.u(k);
+            let w = self.w(k);
+            let (ow, ou, ob) = (self.off_w(k), self.off_u(k), self.off_b(k));
+            for i in 0..n {
+                let a = da[k * n + i];
+                if a == S::zero() {
+                    continue;
+                }
+                let hi = s[2 * i];
+                dh_acc[2 * i] += u[i] * a;
+                dtheta[ou + i] += a * hi;
+                if let Some(dx) = dx.as_deref_mut() {
+                    let roww = &w[i * m..(i + 1) * m];
+                    for j in 0..m {
+                        dx[j] += roww[j] * a;
+                    }
+                }
+                for j in 0..m {
+                    dtheta[ow + i * m + j] += a * x[j];
+                }
+                dtheta[ob + i] += a;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::test_support::{check_jacobian, check_vjp};
+    use crate::cells::Lstm;
+
+    #[test]
+    fn jacobian_matches_fd() {
+        let mut rng = Rng::new(51);
+        for &(n, m) in &[(1usize, 1usize), (3, 2), (5, 4)] {
+            let cell: DiagLstm<f64> = DiagLstm::new(n, m, &mut rng);
+            check_jacobian(&cell, 700 + n as u64, 1e-6);
+        }
+    }
+
+    #[test]
+    fn vjp_matches_fd() {
+        let mut rng = Rng::new(52);
+        let cell: DiagLstm<f64> = DiagLstm::new(3, 2, &mut rng);
+        check_vjp(&cell, 800, 1e-6);
+    }
+
+    #[test]
+    fn structure_reported_block2() {
+        let mut rng = Rng::new(53);
+        let cell: DiagLstm<f64> = DiagLstm::new(4, 2, &mut rng);
+        assert_eq!(cell.jacobian_structure(), JacobianStructure::Block { k: 2 });
+        assert_eq!(cell.block_k(), Some(2));
+        assert_eq!(cell.state_dim(), 8);
+        assert_eq!(cell.num_params(), 4 * (4 * 2 + 2 * 4));
+    }
+
+    /// Build the dense [`Lstm`] whose `U_k` are the diagonal embeddings of
+    /// this cell's `u_k` (same `W_k` and biases).
+    fn dense_twin(cell: &DiagLstm<f64>) -> Lstm<f64> {
+        let (n, m) = (cell.n, cell.m);
+        let mut p = vec![0.0; GATES * (n * m + n * n + n)];
+        p[..GATES * n * m].copy_from_slice(&cell.p[..GATES * n * m]);
+        for k in 0..GATES {
+            let u = cell.u(k);
+            for i in 0..n {
+                p[GATES * n * m + k * n * n + i * n + i] = u[i];
+            }
+        }
+        let b_src = &cell.p[GATES * (n * m + n)..];
+        p[GATES * (n * m + n * n)..].copy_from_slice(b_src);
+        Lstm::from_params(n, m, p)
+    }
+
+    /// The diagonal cell IS the dense LSTM with diagonally-embedded
+    /// recurrent weights: step and the full dense Jacobian agree, and the
+    /// dense Jacobian is exactly block-diagonal.
+    #[test]
+    fn matches_dense_lstm_with_embedded_diagonal() {
+        let mut rng = Rng::new(54);
+        for &(n, m) in &[(1usize, 1usize), (3, 2), (5, 3)] {
+            let diag: DiagLstm<f64> = DiagLstm::new(n, m, &mut rng);
+            let dense = dense_twin(&diag);
+            let dim = 2 * n;
+            let mut s = vec![0.0; dim];
+            let mut x = vec![0.0; m];
+            rng.fill_normal(&mut s, 0.8);
+            rng.fill_normal(&mut x, 1.0);
+            let mut wsd = vec![0.0; diag.ws_len()];
+            let mut wsl = vec![0.0; dense.ws_len()];
+
+            let mut f1 = vec![0.0; dim];
+            let mut f2 = vec![0.0; dim];
+            diag.step(&s, &x, &mut f1, &mut wsd);
+            dense.step(&s, &x, &mut f2, &mut wsl);
+            assert_eq!(f1, f2, "n={n}: step");
+
+            let mut jf1 = vec![0.0; dim];
+            let mut jac1 = vec![0.0; dim * dim];
+            diag.jacobian(&s, &x, &mut jf1, &mut jac1, &mut wsd);
+            let mut jf2 = vec![0.0; dim];
+            let mut jac2 = vec![0.0; dim * dim];
+            dense.jacobian(&s, &x, &mut jf2, &mut jac2, &mut wsl);
+            assert_eq!(jf1, jf2, "n={n}: jacobian f");
+            assert_eq!(jac1, jac2, "n={n}: dense jacobian");
+            for r in 0..dim {
+                for c in 0..dim {
+                    if r / 2 != c / 2 {
+                        assert_eq!(jac1[r * dim + c], 0.0, "off-block ({r},{c})");
+                    }
+                }
+            }
+        }
+    }
+
+    /// Packed Block(2) kernel vs dense emission, and the precomputed-input
+    /// paths, all bitwise equal to the direct kernels.
+    #[test]
+    fn packed_and_pre_paths_match_bitwise() {
+        let mut rng = Rng::new(55);
+        let (n, m) = (4usize, 3usize);
+        let cell: DiagLstm<f64> = DiagLstm::new(n, m, &mut rng);
+        let dim = 2 * n;
+        let mut s = vec![0.0; dim];
+        let mut x = vec![0.0; m];
+        rng.fill_normal(&mut s, 0.8);
+        rng.fill_normal(&mut x, 1.0);
+        let mut ws = vec![0.0; cell.ws_len()];
+
+        let mut f_d = vec![0.0; dim];
+        let mut jac = vec![0.0; dim * dim];
+        cell.jacobian(&s, &x, &mut f_d, &mut jac, &mut ws);
+
+        let mut f_b = vec![0.0; dim];
+        let mut jblk = vec![0.0; dim * 2];
+        cell.jacobian_block(&s, &x, &mut f_b, &mut jblk, &mut ws);
+        assert_eq!(f_d, f_b);
+        for i in 0..n {
+            for r in 0..2 {
+                for c in 0..2 {
+                    assert_eq!(
+                        jblk[i * 4 + r * 2 + c],
+                        jac[(2 * i + r) * dim + 2 * i + c],
+                        "block {i} ({r},{c})"
+                    );
+                }
+            }
+        }
+
+        let pl = cell.x_precompute_len();
+        let mut pre = vec![0.0; pl];
+        cell.precompute_x(&x, &mut pre);
+        let mut f_bp = vec![0.0; dim];
+        let mut jblk_p = vec![0.0; dim * 2];
+        cell.jacobian_block_pre(&s, &pre, &mut f_bp, &mut jblk_p, &mut ws);
+        assert_eq!(f_bp, f_b);
+        assert_eq!(jblk_p, jblk);
+        let mut f_p = vec![0.0; dim];
+        let mut jac_p = vec![0.0; dim * dim];
+        cell.jacobian_pre(&s, &pre, &mut f_p, &mut jac_p, &mut ws);
+        assert_eq!(f_p, f_d);
+        assert_eq!(jac_p, jac);
+    }
+
+    /// Fused batched kernels vs the looped defaults, bitwise.
+    #[test]
+    fn batched_kernels_match_looped_bitwise() {
+        let mut rng = Rng::new(56);
+        let (n, m, batch) = (3usize, 2usize, 4usize);
+        let cell: DiagLstm<f64> = DiagLstm::new(n, m, &mut rng);
+        let dim = 2 * n;
+        let mut hs = vec![0.0; batch * dim];
+        let mut xs = vec![0.0; batch * m];
+        rng.fill_normal(&mut hs, 0.7);
+        rng.fill_normal(&mut xs, 1.0);
+        let mut ws = vec![0.0; cell.ws_len()];
+
+        let mut f_b = vec![0.0; batch * dim];
+        cell.step_batch(&hs, &xs, &mut f_b, &mut ws, batch);
+        let pl = cell.x_precompute_len();
+        let mut pres = vec![0.0; batch * pl];
+        for s in 0..batch {
+            cell.precompute_x(&xs[s * m..(s + 1) * m], &mut pres[s * pl..(s + 1) * pl]);
+        }
+        let bl = dim * 2;
+        let mut jf_b = vec![0.0; batch * dim];
+        let mut jb_b = vec![0.0; batch * bl];
+        cell.jacobian_pre_block_batch(&hs, &pres, &mut jf_b, &mut jb_b, &mut ws, batch);
+        for s in 0..batch {
+            let st = &hs[s * dim..(s + 1) * dim];
+            let x = &xs[s * m..(s + 1) * m];
+            let mut f = vec![0.0; dim];
+            cell.step(st, x, &mut f, &mut ws);
+            assert_eq!(f, &f_b[s * dim..(s + 1) * dim], "seq {s}: step_batch");
+            let mut jf = vec![0.0; dim];
+            let mut jb = vec![0.0; bl];
+            cell.jacobian_block_pre(st, &pres[s * pl..(s + 1) * pl], &mut jf, &mut jb, &mut ws);
+            assert_eq!(jf, &jf_b[s * dim..(s + 1) * dim], "seq {s}: block_batch f");
+            assert_eq!(jb, &jb_b[s * bl..(s + 1) * bl], "seq {s}: block_batch blocks");
+        }
+    }
+}

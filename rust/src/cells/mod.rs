@@ -9,8 +9,12 @@
 //! Cells implemented: [`Gru`] (the paper's main benchmark subject, §4.1/4.3),
 //! [`Lstm`], [`Lem`] (Rusch et al. 2021; Table 1 and Fig. 8), [`Elman`]
 //! (simplest test vehicle), and [`IndRnn`] (Li et al. 2018 — element-wise
-//! recurrence, hence a **natively diagonal** state Jacobian). All are
-//! generic over f32/f64 ([`Scalar`]).
+//! recurrence, hence a **natively diagonal** state Jacobian). [`DiagGru`]
+//! and [`DiagLstm`] are the diagonal-recurrence (ParaRNN-style) gated
+//! variants: same gate math as [`Gru`]/[`Lstm`] but with `diag(u)`
+//! recurrent weights, so their Jacobians are *natively* `Diagonal` /
+//! `Block(2)` and Full mode rides the packed O(n)/O(n·k²) scan kernels as
+//! exact Newton. All are generic over f32/f64 ([`Scalar`]).
 //!
 //! # Jacobian structure
 //!
@@ -60,12 +64,16 @@
 //!   inter-layer leg of stacked models: layer `l`'s input cotangents are
 //!   layer `l − 1`'s output cotangents in the stacked backward chain.
 
+pub mod diag_gru;
+pub mod diag_lstm;
 pub mod elman;
 pub mod gru;
 pub mod indrnn;
 pub mod lem;
 pub mod lstm;
 
+pub use diag_gru::DiagGru;
+pub use diag_lstm::DiagLstm;
 pub use elman::Elman;
 pub use gru::Gru;
 pub use indrnn::IndRnn;

@@ -586,6 +586,148 @@ pub fn scan_bench_json(points: &[ScanBenchPoint], threads: usize) -> Json {
     ])
 }
 
+/// The dims grid of the SIMD compose microbench (`--exp simd`). The fast
+/// grid keeps the n = 16 diagonal point that the ≥2× compose gate in
+/// `scripts/bench_compare.sh` reads.
+pub fn simd_bench_grid(fast: bool) -> Vec<usize> {
+    if fast {
+        vec![16]
+    } else {
+        vec![8, 16, 32, 64]
+    }
+}
+
+/// One point of the scalar-vs-SIMD compose microbench.
+#[derive(Debug, Clone)]
+pub struct SimdBenchPoint {
+    pub structure: String,
+    pub n: usize,
+    pub scalar_ns: f64,
+    pub simd_ns: f64,
+    pub speedup: f64,
+}
+
+/// Raw compose-kernel microbench: the scalar reference kernels vs the
+/// lane-vectorized ones of [`crate::scan::simd`], per Jacobian structure
+/// (diagonal / block2 / dense), f32, single thread. Each timed call runs a
+/// strip of `reps` independent composes over resident slabs — the Blelloch
+/// inner-loop shape — and reports ns per compose. The kernels are bitwise
+/// equal by contract (pinned in `scan::tests`), so this measures raw speed
+/// only. Returns the human table plus the machine-readable points for
+/// `BENCH_simd.json`.
+pub fn simd_microbench(dims: &[usize], budget: Duration) -> (Table, Vec<SimdBenchPoint>) {
+    use crate::scan::{
+        combine, combine_block, combine_block_scalar, combine_diag, combine_diag_scalar,
+        combine_scalar, flops_combine, flops_combine_block, flops_combine_diag,
+    };
+    let mut table = Table::new(&["structure", "n", "scalar ns/compose", "simd ns/compose", "speedup"]);
+    let mut points = Vec::new();
+    // strip length: roughly constant work per timed call, slabs L1/L2-sized
+    let reps_for = |flops: u64| -> usize { ((1u64 << 21) / flops.max(1)).clamp(16, 512) as usize };
+    for &n in dims {
+        for structure in ["diagonal", "block2", "dense"] {
+            let (jl, flops) = match structure {
+                "diagonal" => (n, flops_combine_diag(n)),
+                "block2" => (2 * n, flops_combine_block(n, 2)),
+                _ => (n * n, flops_combine(n)),
+            };
+            if structure == "block2" && n % 2 != 0 {
+                continue;
+            }
+            let reps = reps_for(flops);
+            let mut rng = Rng::new(0x51D0 ^ (n as u64) << 16 ^ jl as u64);
+            let mut a_l = vec![0.0f32; reps * jl];
+            let mut a_e = vec![0.0f32; reps * jl];
+            let mut b_l = vec![0.0f32; reps * n];
+            let mut b_e = vec![0.0f32; reps * n];
+            rng.fill_normal(&mut a_l, 0.5);
+            rng.fill_normal(&mut a_e, 0.5);
+            rng.fill_normal(&mut b_l, 1.0);
+            rng.fill_normal(&mut b_e, 1.0);
+            let mut a_o = vec![0.0f32; reps * jl];
+            let mut b_o = vec![0.0f32; reps * n];
+
+            let t_scalar = bench_budget(2, 40, budget, || {
+                for r in 0..reps {
+                    let (al, ae) = (&a_l[r * jl..(r + 1) * jl], &a_e[r * jl..(r + 1) * jl]);
+                    let (bl, be) = (&b_l[r * n..(r + 1) * n], &b_e[r * n..(r + 1) * n]);
+                    let ao = &mut a_o[r * jl..(r + 1) * jl];
+                    let bo = &mut b_o[r * n..(r + 1) * n];
+                    match structure {
+                        "diagonal" => combine_diag_scalar(al, bl, ae, be, ao, bo, n),
+                        "block2" => combine_block_scalar(al, bl, ae, be, ao, bo, n, 2),
+                        _ => combine_scalar(al, bl, ae, be, ao, bo, n),
+                    }
+                }
+                std::hint::black_box((&a_o, &b_o));
+            })
+            .median()
+                / reps as f64
+                * 1e9;
+            let t_simd = bench_budget(2, 40, budget, || {
+                for r in 0..reps {
+                    let (al, ae) = (&a_l[r * jl..(r + 1) * jl], &a_e[r * jl..(r + 1) * jl]);
+                    let (bl, be) = (&b_l[r * n..(r + 1) * n], &b_e[r * n..(r + 1) * n]);
+                    let ao = &mut a_o[r * jl..(r + 1) * jl];
+                    let bo = &mut b_o[r * n..(r + 1) * n];
+                    match structure {
+                        "diagonal" => combine_diag(al, bl, ae, be, ao, bo, n),
+                        "block2" => combine_block(al, bl, ae, be, ao, bo, n, 2),
+                        _ => combine(al, bl, ae, be, ao, bo, n),
+                    }
+                }
+                std::hint::black_box((&a_o, &b_o));
+            })
+            .median()
+                / reps as f64
+                * 1e9;
+
+            let p = SimdBenchPoint {
+                structure: structure.to_string(),
+                n,
+                scalar_ns: t_scalar,
+                simd_ns: t_simd,
+                speedup: t_scalar / t_simd,
+            };
+            table.row(vec![
+                p.structure.clone(),
+                n.to_string(),
+                sig3(p.scalar_ns),
+                sig3(p.simd_ns),
+                sig3(p.speedup),
+            ]);
+            points.push(p);
+        }
+    }
+    (table, points)
+}
+
+/// Serialize SIMD-microbench points as the `BENCH_simd.json` document.
+pub fn simd_bench_json(points: &[SimdBenchPoint]) -> Json {
+    json::obj(vec![
+        ("bench", json::s("simd_compose")),
+        ("dtype", json::s("f32")),
+        ("lane_block", json::num(crate::scan::simd::LANE_BLOCK as f64)),
+        (
+            "points",
+            json::arr(
+                points
+                    .iter()
+                    .map(|p| {
+                        json::obj(vec![
+                            ("structure", json::s(&p.structure)),
+                            ("n", json::num(p.n as f64)),
+                            ("scalar_ns_per_compose", json::num(p.scalar_ns)),
+                            ("simd_ns_per_compose", json::num(p.simd_ns)),
+                            ("speedup", json::num(p.speedup)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
 /// The {dims, lens, batch} grid of the batched-dispatch bench (`--exp
 /// batch`). The fast grid always contains the B=8, n=16, T=10k diagonal
 /// point that `BENCH_batch.json` is gated on.

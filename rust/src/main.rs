@@ -1,9 +1,9 @@
 //! `deer` — the Layer-3 coordinator CLI.
 //!
 //! Subcommands:
-//!   bench  --exp fig2|fig2grad|fig3|fig6|fig7|fig8|table3|table4|table5|table6|quasi|block|scan|batch|train|elk|all
+//!   bench  --exp fig2|fig2grad|fig3|fig6|fig7|fig8|table3|table4|table5|table6|quasi|block|scan|simd|batch|train|elk|all
 //!   sweep  --dims 1,2,4 --lens 1000,10000 --workers 2
-//!   train  --exp worms|twobody --mode seq|deer|quasi|hybrid|elk|quasi-elk --steps 100   (native trainer)
+//!   train  --exp worms|twobody --cell gru|diag-gru|diag-lstm --mode seq|deer|quasi|hybrid|elk|quasi-elk --steps 100   (native trainer)
 //!   train  --model worms|hnn-deer|hnn-rk4|mhgru --steps 100        (xla artifacts)
 //!   info   (list artifacts)
 //!
@@ -67,14 +67,16 @@ fn run() -> Result<()> {
                  \n  deer bench --exp fig2 --dims 1,2,4 --lens 1000,10000\
                  \n  deer bench --exp quasi          Full vs DiagonalApprox Jacobians\
                  \n  deer bench --exp block --block-out BENCH_block.json  LSTM dense vs Block(2) vs diagonal\
-                 \n  deer bench --exp scan --scan-out BENCH_scan.json   INVLIN kernel microbench\
+                 \n  deer bench --exp scan --scan-out BENCH_scan.json   INVLIN kernel microbench
+                 \n  deer bench --exp simd --simd-out BENCH_simd.json   scalar vs SIMD compose kernels\
                  \n  deer bench --exp batch --batch-out BENCH_batch.json  fused-batched vs looped dispatch\
                  \n  deer bench --exp train --train-out BENCH_train.json  seq-BPTT vs DEER optimizer steps\
                  \n  deer bench --exp elk --elk-out BENCH_elk.json   plain vs ELK damped solves on the divergence fixture\
                  \n  deer sweep --workers 2          coordinator sweep demo\
                  \n  deer train --exp worms --mode deer --steps 40   native §4.3 trainer (seq|deer|quasi|hybrid|elk|quasi-elk)\
                  \n  deer train --exp worms --mode elk --verbose     damped-Newton arm with per-sequence λ/residual traces\
-                 \n  deer train --exp worms --layers 2 --mode deer   stacked model: one fused solve per layer\
+                 \n  deer train --exp worms --layers 2 --mode deer   stacked model: one fused solve per layer
+                 \n  deer train --exp worms --cell diag-gru          natively-structured cells (gru|diag-gru|diag-lstm)\
                  \n  deer train --exp worms-full --eval-every 10     Fig. 4 scale (T=17,984), val/test acc vs wall-clock\
                  \n  deer train --exp worms --save ck.json           checkpoint params+Adam (--load resumes)\
                  \n  deer train --exp worms --lr-schedule cosine:200 LR schedules (constant|cosine:T[:W]|step:E:G[:W])\
@@ -279,6 +281,24 @@ fn bench(args: &Args, rec: &Recorder) -> Result<()> {
         std::fs::write(&out_path, exp::elk_bench_json(&points).to_string())?;
         println!("elk bench points written to {}", out_path.display());
     }
+    if all || which == "simd" {
+        // Scalar-vs-SIMD compose microbench: the raw kernel A/B behind the
+        // portable-lane layer (no scan around it). Grid shrinks under
+        // DEER_BENCH_FAST=1; both grids keep the n=16 diagonal point the
+        // ≥2× compose gate in scripts/bench_compare.sh reads.
+        let fast = std::env::var("DEER_BENCH_FAST").is_ok();
+        let dims = exp::simd_bench_grid(fast);
+        let budget = if fast { Duration::from_millis(120) } else { opts.budget_per_cell };
+        let (t, points) = exp::simd_microbench(&dims, budget);
+        rec.table(
+            "simd_compose",
+            "SIMD compose kernels: scalar vs lane-vectorized ns/compose (measured 1-core)",
+            &t,
+        )?;
+        let out_path = PathBuf::from(args.get("simd-out", "BENCH_simd.json"));
+        std::fs::write(&out_path, exp::simd_bench_json(&points).to_string())?;
+        println!("simd bench points written to {}", out_path.display());
+    }
     if all || which == "scan" {
         // INVLIN kernel microbench: dense vs diagonal scan. Grids shrink
         // under DEER_BENCH_FAST=1 (the scripts/bench_smoke.sh smoke run).
@@ -350,6 +370,35 @@ fn sweep(args: &Args, rec: &Recorder) -> Result<()> {
 /// accuracy-vs-wall-clock curves (the Fig. 4 axes; `--exp worms-full`
 /// defaults to the paper's T = 17,984).
 fn native_train(args: &Args, rec: &Recorder) -> Result<()> {
+    // --cell picks the recurrent cell. The diag-* variants have diagonal
+    // recurrent weights and report their Jacobian structure natively
+    // (Diagonal / Block(2)), so `--mode deer` rides the packed O(n)/O(n·k²)
+    // scan kernels as EXACT Newton — no quasi approximation involved.
+    let cell = args.get("cell", "gru").to_string();
+    match cell.as_str() {
+        "gru" => {
+            native_train_with(args, rec, &cell, |n, m, rng| deer::cells::Gru::<f32>::new(n, m, rng))
+        }
+        "diag-gru" => native_train_with(args, rec, &cell, |n, m, rng| {
+            deer::cells::DiagGru::<f32>::new(n, m, rng)
+        }),
+        "diag-lstm" => native_train_with(args, rec, &cell, |n, m, rng| {
+            deer::cells::DiagLstm::<f32>::new(n, m, rng)
+        }),
+        other => bail!("unknown --cell {other} (gru|diag-gru|diag-lstm)"),
+    }
+}
+
+fn native_train_with<C, F>(
+    args: &Args,
+    rec: &Recorder,
+    cell_kind: &str,
+    mut new_cell: F,
+) -> Result<()>
+where
+    C: deer::cells::CellGrad<f32>,
+    F: FnMut(usize, usize, &mut Rng) -> C,
+{
     use deer::data::Split;
     use deer::train::CurvePoint;
     use deer::train::native::{
@@ -443,14 +492,25 @@ fn native_train(args: &Args, rec: &Recorder) -> Result<()> {
     let mut rng = Rng::new(0xDEE2 ^ seed);
 
     // stack L cells: layer 0 reads the data channels, layers 1.. read the
-    // layer-below state
-    let gru_stack = |m_in: usize, rng: &mut Rng| -> Vec<deer::cells::Gru<f32>> {
-        (0..layers)
-            .map(|l| deer::cells::Gru::new(n, if l == 0 { m_in } else { n }, rng))
-            .collect()
+    // layer-below state (that's 2n for the interleaved-state diag-lstm,
+    // hence chaining through state_dim() rather than assuming n)
+    let mut stack = |m_in: usize, rng: &mut Rng| -> Vec<C> {
+        let mut cells = Vec::with_capacity(layers);
+        let mut m = m_in;
+        for _ in 0..layers {
+            let c = new_cell(n, m, rng);
+            m = c.state_dim();
+            cells.push(c);
+        }
+        cells
+    };
+    let cell_tag = if cell_kind == "gru" {
+        String::new()
+    } else {
+        format!("_{}", cell_kind.replace('-', "_"))
     };
 
-    let (mut tl, name): (TrainLoop<deer::cells::Gru<f32>>, String) = match exp.as_str() {
+    let (mut tl, name): (TrainLoop<C>, String) = match exp.as_str() {
         "worms" | "worms-full" => {
             // worms-full: the Fig. 4 scale — the paper's full EigenWorms
             // sequence length (App. B.3: T = 17,984, 70/15/15 split)
@@ -461,14 +521,18 @@ fn native_train(args: &Args, rec: &Recorder) -> Result<()> {
             let rows = args.get_parse("rows", if full { 120usize } else { 60 }).map_err(Error::msg)?;
             let data = worms_task(rows, t_len, 1234 + seed);
             let model = Model::stacked(
-                gru_stack(deer::data::worms::CHANNELS, &mut rng),
+                stack(deer::data::worms::CHANNELS, &mut rng),
                 deer::data::worms::CLASSES,
                 Readout::LastState,
                 &mut rng,
             )?;
             (
                 TrainLoop::new(model, data, cfg)?,
-                format!("train_native_worms{}_{}_l{layers}", if full { "_full" } else { "" }, mode.label()),
+                format!(
+                    "train_native_worms{}{cell_tag}_{}_l{layers}",
+                    if full { "_full" } else { "" },
+                    mode.label()
+                ),
             )
         }
         "twobody" => {
@@ -476,14 +540,14 @@ fn native_train(args: &Args, rec: &Recorder) -> Result<()> {
             let rows = args.get_parse("rows", 40usize).map_err(Error::msg)?;
             let data = twobody_task(rows, t_len, 77 + seed);
             let model = Model::stacked(
-                gru_stack(deer::data::twobody::STATE, &mut rng),
+                stack(deer::data::twobody::STATE, &mut rng),
                 1,
                 Readout::MeanPool,
                 &mut rng,
             )?;
             (
                 TrainLoop::new(model, data, cfg)?,
-                format!("train_native_twobody_{}_l{layers}", mode.label()),
+                format!("train_native_twobody{cell_tag}_{}_l{layers}", mode.label()),
             )
         }
         other => bail!("unknown native experiment {other} (worms|worms-full|twobody)"),
@@ -499,7 +563,7 @@ fn native_train(args: &Args, rec: &Recorder) -> Result<()> {
     }
 
     println!(
-        "native trainer: exp={exp} mode={} layers={layers} steps={steps} batch={batch} lr={lr} schedule={} threads={}",
+        "native trainer: exp={exp} cell={cell_kind} mode={} layers={layers} steps={steps} batch={batch} lr={lr} schedule={} threads={}",
         mode.label(),
         tl.cfg.lr_schedule.label(),
         tl.cfg.threads

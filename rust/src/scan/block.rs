@@ -27,7 +27,11 @@
 //! Batched variants follow the `[B, T, …]` layout, active-mask and
 //! total-batch-keyed scheduling rules documented in [`crate::scan`].
 
-use super::{combine_block, ScanWorkspace};
+use super::cr::{par_block_scan_apply_cr_ws, par_block_scan_reverse_cr_ws};
+use super::{
+    choose_scan_schedule, combine_block, flops_apply_block, flops_combine_block, ScanSchedule,
+    ScanWorkspace,
+};
 use crate::util::scalar::Scalar;
 
 /// `y = A_step · x` over packed k×k tiles, accumulating each row in
@@ -240,9 +244,17 @@ pub fn par_block_scan_apply_ws<S: Scalar>(
     threads: usize,
     ws: &mut ScanWorkspace<S>,
 ) {
-    if threads <= 1 || len < 4 * threads {
-        seq_block_scan_apply(a, b, y0, out, n, k, len);
-        return;
+    match choose_scan_schedule(len, threads, flops_combine_block(n, k), flops_apply_block(n, k, 1))
+    {
+        ScanSchedule::Sequential => {
+            seq_block_scan_apply(a, b, y0, out, n, k, len);
+            return;
+        }
+        ScanSchedule::CyclicReduction => {
+            par_block_scan_apply_cr_ws(a, b, y0, out, n, k, len, threads, ws);
+            return;
+        }
+        ScanSchedule::Chunked => {}
     }
     let chunks = threads;
     let chunk_len = len.div_ceil(chunks);
@@ -340,9 +352,17 @@ pub fn par_block_scan_reverse_ws<S: Scalar>(
     threads: usize,
     ws: &mut ScanWorkspace<S>,
 ) {
-    if threads <= 1 || len < 4 * threads {
-        seq_block_scan_reverse(a, g, out, n, k, len);
-        return;
+    match choose_scan_schedule(len, threads, flops_combine_block(n, k), flops_apply_block(n, k, 1))
+    {
+        ScanSchedule::Sequential => {
+            seq_block_scan_reverse(a, g, out, n, k, len);
+            return;
+        }
+        ScanSchedule::CyclicReduction => {
+            par_block_scan_reverse_cr_ws(a, g, out, n, k, len, threads, ws);
+            return;
+        }
+        ScanSchedule::Chunked => {}
     }
     let chunks = threads;
     let chunk_len = len.div_ceil(chunks);

@@ -12,7 +12,10 @@
 //! entry of step i. No n×n temporaries are materialized anywhere — the
 //! whole path is O(T·n) memory and O(T·n) work.
 
-use super::ScanWorkspace;
+use super::cr::{par_diag_scan_apply_cr_ws, par_diag_scan_reverse_cr_ws};
+use super::{
+    choose_scan_schedule, flops_apply_diag, flops_combine_diag, ScanSchedule, ScanWorkspace,
+};
 use crate::util::scalar::Scalar;
 
 /// Sequential `y_i = a_i ⊙ y_{i−1} + b_i` with `y_{−1} = y0`.
@@ -124,9 +127,16 @@ pub fn par_diag_scan_apply_ws<S: Scalar>(
     threads: usize,
     ws: &mut ScanWorkspace<S>,
 ) {
-    if threads <= 1 || len < 4 * threads {
-        seq_diag_scan_apply(a, b, y0, out, n, len);
-        return;
+    match choose_scan_schedule(len, threads, flops_combine_diag(n), flops_apply_diag(n, 1)) {
+        ScanSchedule::Sequential => {
+            seq_diag_scan_apply(a, b, y0, out, n, len);
+            return;
+        }
+        ScanSchedule::CyclicReduction => {
+            par_diag_scan_apply_cr_ws(a, b, y0, out, n, len, threads, ws);
+            return;
+        }
+        ScanSchedule::Chunked => {}
     }
     let chunks = threads;
     let chunk_len = len.div_ceil(chunks);
@@ -379,9 +389,16 @@ pub fn par_diag_scan_reverse_ws<S: Scalar>(
     threads: usize,
     ws: &mut ScanWorkspace<S>,
 ) {
-    if threads <= 1 || len < 4 * threads {
-        seq_diag_scan_reverse(a, g, out, n, len);
-        return;
+    match choose_scan_schedule(len, threads, flops_combine_diag(n), flops_apply_diag(n, 1)) {
+        ScanSchedule::Sequential => {
+            seq_diag_scan_reverse(a, g, out, n, len);
+            return;
+        }
+        ScanSchedule::CyclicReduction => {
+            par_diag_scan_reverse_cr_ws(a, g, out, n, len, threads, ws);
+            return;
+        }
+        ScanSchedule::Chunked => {}
     }
     let chunks = threads;
     let chunk_len = len.div_ceil(chunks);

@@ -66,14 +66,35 @@
 
 use super::block::{block_matvec, block_matvec_t};
 use super::{
-    active_indices, combine, combine_block, combine_diag, par_block_scan_apply_ws,
+    active_indices, choose_scan_schedule, combine, combine_block, combine_diag,
+    flops_apply_kalman, flops_apply_kalman_block, flops_apply_kalman_diag, flops_combine_kalman,
+    flops_combine_kalman_block, flops_combine_kalman_diag, par_block_scan_apply_ws,
     par_block_scan_reverse_ws, par_diag_scan_apply_ws, par_diag_scan_reverse_ws, par_scan_apply_ws,
     par_scan_reverse_ws, seq_block_scan_apply, seq_block_scan_reverse, seq_diag_scan_apply,
-    seq_diag_scan_reverse, seq_scan_apply, seq_scan_reverse, ScanWorkspace,
+    seq_diag_scan_reverse, seq_scan_apply, seq_scan_reverse, ScanSchedule, ScanWorkspace,
 };
 use crate::cells::JacobianStructure;
 use crate::linalg::{eye_into, matvec, matvec_t};
 use crate::util::scalar::Scalar;
+
+/// Per-element damped compose cost for the structure at hand (the chooser
+/// input — see [`choose_scan_schedule`]).
+fn kalman_combine_flops(st: JacobianStructure, n: usize) -> u64 {
+    match st {
+        JacobianStructure::Dense => flops_combine_kalman(n),
+        JacobianStructure::Diagonal => flops_combine_kalman_diag(n),
+        JacobianStructure::Block { k } => flops_combine_kalman_block(n, k),
+    }
+}
+
+/// Per-element damped apply cost for the structure at hand.
+fn kalman_apply_flops(st: JacobianStructure, n: usize) -> u64 {
+    match st {
+        JacobianStructure::Dense => flops_apply_kalman(n, 1),
+        JacobianStructure::Diagonal => flops_apply_kalman_diag(n, 1),
+        JacobianStructure::Block { k } => flops_apply_kalman_block(n, k, 1),
+    }
+}
 
 /// Information-filter gain `s = 1 / (1 + λ)`.
 #[inline]
@@ -83,7 +104,7 @@ pub fn damp_gain<S: Scalar>(lambda: S) -> S {
 
 /// `y = A_i · x` for one packed per-step Jacobian of any structure.
 #[inline]
-fn apply_a<S: Scalar>(st: JacobianStructure, a_i: &[S], x: &[S], y: &mut [S], n: usize) {
+pub(crate) fn apply_a<S: Scalar>(st: JacobianStructure, a_i: &[S], x: &[S], y: &mut [S], n: usize) {
     match st {
         JacobianStructure::Dense => matvec(a_i, x, y),
         JacobianStructure::Diagonal => {
@@ -97,7 +118,13 @@ fn apply_a<S: Scalar>(st: JacobianStructure, a_i: &[S], x: &[S], y: &mut [S], n:
 
 /// `y = A_iᵀ · x` for one packed per-step Jacobian of any structure.
 #[inline]
-fn apply_a_t<S: Scalar>(st: JacobianStructure, a_i: &[S], x: &[S], y: &mut [S], n: usize) {
+pub(crate) fn apply_a_t<S: Scalar>(
+    st: JacobianStructure,
+    a_i: &[S],
+    x: &[S],
+    y: &mut [S],
+    n: usize,
+) {
     match st {
         JacobianStructure::Dense => matvec_t(a_i, x, y),
         JacobianStructure::Diagonal => {
@@ -348,9 +375,18 @@ pub fn par_kalman_scan_apply_ws<S: Scalar>(
         }
         return;
     }
-    if threads <= 1 || len < 4 * threads {
-        seq_kalman_scan_apply(a, b, z, y0, out, n, structure, len, lambda);
-        return;
+    match choose_scan_schedule(len, threads, kalman_combine_flops(structure, n), kalman_apply_flops(structure, n)) {
+        ScanSchedule::Sequential => {
+            seq_kalman_scan_apply(a, b, z, y0, out, n, structure, len, lambda);
+            return;
+        }
+        ScanSchedule::CyclicReduction => {
+            super::cr::par_kalman_scan_apply_cr_ws(
+                a, b, z, y0, out, n, structure, len, lambda, threads, ws,
+            );
+            return;
+        }
+        ScanSchedule::Chunked => {}
     }
     let jl = structure.jac_len(n);
     let chunks = threads;
@@ -498,9 +534,18 @@ pub fn par_kalman_scan_reverse_ws<S: Scalar>(
         }
         return;
     }
-    if threads <= 1 || len < 4 * threads {
-        seq_kalman_scan_reverse(a, g, out, n, structure, len, lambda);
-        return;
+    match choose_scan_schedule(len, threads, kalman_combine_flops(structure, n), kalman_apply_flops(structure, n)) {
+        ScanSchedule::Sequential => {
+            seq_kalman_scan_reverse(a, g, out, n, structure, len, lambda);
+            return;
+        }
+        ScanSchedule::CyclicReduction => {
+            super::cr::par_kalman_scan_reverse_cr_ws(
+                a, g, out, n, structure, len, lambda, threads, ws,
+            );
+            return;
+        }
+        ScanSchedule::Chunked => {}
     }
     let jl = structure.jac_len(n);
     let s = damp_gain(lambda);

@@ -31,6 +31,39 @@
 //!   drops. The block monoid is closed, so the whole scan stays packed —
 //!   O(T·n·k) memory, never O(T·n²).
 //!
+//! # Vectorization and the scalar-reference contract
+//!
+//! The compose kernels ([`combine`], [`combine_diag`], [`combine_block`])
+//! are the INVLIN inner loop and run through the portable SIMD layer in
+//! [`simd`]: fixed-width lane blocks ([`simd::LANE_BLOCK`] = 8) with scalar
+//! tails for n not a lane multiple. Their original scalar loops survive as
+//! [`combine_scalar`] / [`combine_diag_scalar`] / [`combine_block_scalar`]
+//! — the **bitwise reference**: the vectorized kernels compute every output
+//! element with the same expression in the same association order (no FMA,
+//! no reduction reordering; the Block(2) tile multiply vectorizes *across*
+//! units, never within a tile), and tests pin `assert_eq!` equality at
+//! awkward shapes. See the [`simd`] module docs for the lane layout.
+//!
+//! # Schedule selection: chunked two-pass vs cyclic reduction
+//!
+//! Two parallel schedules exist for the intra-sequence scans:
+//!
+//! * **Chunked three-phase** ([`par`] and siblings) — work-efficient
+//!   (compose ≈ 2× element work), depth O(L/threads + threads). Selected
+//!   whenever chunks amortize: `len ≥ PAR_CROSSOVER_STEPS_PER_THREAD ×
+//!   threads` (the centralized crossover every kernel and the simulator
+//!   consult — see [`PAR_CROSSOVER_STEPS_PER_THREAD`]).
+//! * **Cyclic reduction** ([`cr`]) — a Hillis–Steele log-depth sweep:
+//!   O(L·log L / threads) work but only ⌈log₂ L⌉ levels of depth. In the
+//!   short-sequence region (`len < crossover × threads`) the chunked
+//!   schedule starves workers and used to fall back to sequential;
+//!   [`choose_scan_schedule`] now compares the modeled critical paths of
+//!   the sequential and cyclic-reduction schedules there (and the
+//!   simulator uses the same chooser, so dispatch and cost model cannot
+//!   disagree). CR wins when threads ≈ L and the per-element combine is
+//!   cheap (diagonal / Block(2)); dense combine keeps sequential until the
+//!   lane count exceeds ~n·log₂L, which matches the paper's §3.5 analysis.
+//!
 //! Modules:
 //!
 //! * [`seq`] — sequential evaluation (also the baseline's inner loop).
@@ -39,6 +72,9 @@
 //!   `jax.lax.associative_scan`, reproduced at L1 by the Pallas kernel in
 //!   `python/compile/kernels/assoc_scan.py` with the identical phase
 //!   structure.
+//! * [`cr`] — the O(log L)-depth cyclic-reduction variants
+//!   (`par_*_scan_*_cr_ws`) for all four element families.
+//! * [`simd`] — the portable lane types and vectorized compose kernels.
 //! * [`diag`] — the O(n)-per-element diagonal kernels (seq + par, forward
 //!   + reverse), used by natively-diagonal cells and by quasi-DEER mode.
 //! * [`block`] — the packed block-diagonal kernels (seq + par, forward +
@@ -84,10 +120,12 @@
 //! element updates (see `crate::deer::newton::deer_rnn_batch`).
 
 pub mod block;
+pub mod cr;
 pub mod diag;
 pub mod kalman;
 pub mod par;
 pub mod seq;
+pub mod simd;
 
 pub use kalman::{
     damp_gain, par_kalman_scan_apply_batch_ws, par_kalman_scan_apply_ws,
@@ -109,9 +147,81 @@ pub use par::{
     par_scan_apply, par_scan_apply_ws, par_scan_apply_batch_ws, par_scan_reverse,
     par_scan_reverse_ws, par_scan_reverse_batch_ws,
 };
+pub use cr::{
+    par_block_scan_apply_cr_ws, par_block_scan_reverse_cr_ws, par_diag_scan_apply_cr_ws,
+    par_diag_scan_reverse_cr_ws, par_kalman_scan_apply_cr_ws, par_kalman_scan_reverse_cr_ws,
+    par_scan_apply_cr_ws, par_scan_reverse_cr_ws,
+};
 pub use seq::{seq_scan_apply, seq_scan_reverse};
 
 use crate::util::scalar::Scalar;
+
+/// The centralized short-sequence crossover: the chunked three-phase scans
+/// need at least this many steps **per thread** to amortize their compose
+/// phase (~2× element work) and two barriers. Below it the parallel kernels
+/// either run sequentially or — when [`choose_scan_schedule`] says the
+/// log-depth sweep wins — via cyclic reduction. Both the `par_*_ws` kernels
+/// and the simulator cost model consult this one constant, so runtime
+/// fallback and modeled dispatch cannot disagree.
+pub const PAR_CROSSOVER_STEPS_PER_THREAD: usize = 4;
+
+/// Modeled cost of one barrier / level synchronization, in flop units —
+/// the same "thread count models accelerator lanes" convention the rest of
+/// the crate uses (spawn cost on this CPU testbed is *not* what's modeled;
+/// see [`crate::simulator`]). Chosen so cyclic reduction is only selected
+/// where its log-depth genuinely pays: cheap combines (diagonal, Block(2))
+/// at thread counts near the sequence length.
+pub const SYNC_FLOPS: u64 = 64;
+
+/// Which schedule a parallel scan should run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScanSchedule {
+    /// One worker replays the recurrence; depth = len.
+    Sequential,
+    /// Three-phase chunked scan; depth ≈ len/threads + threads.
+    Chunked,
+    /// Hillis–Steele cyclic reduction; depth = ⌈log₂ len⌉ levels.
+    CyclicReduction,
+}
+
+/// Pick the scan schedule for a `len`-element scan on `threads` workers,
+/// given the per-element compose and apply costs in flops (use the
+/// `flops_combine*` / `flops_apply*(…, 1)` helpers for the structure at
+/// hand). The rule:
+///
+/// 1. `threads ≤ 1` (or a degenerate scan) → [`ScanSchedule::Sequential`].
+/// 2. `len ≥ PAR_CROSSOVER_STEPS_PER_THREAD × threads` →
+///    [`ScanSchedule::Chunked`] (chunks amortize; the work-efficient
+///    schedule wins on throughput).
+/// 3. Otherwise the chunked schedule starves workers. Compare modeled
+///    critical paths: sequential = `len·apply`; cyclic reduction =
+///    `⌈log₂len⌉·(⌈len/threads⌉·combine + sync) + ⌈len/threads⌉·apply +
+///    sync`. Return whichever is cheaper.
+///
+/// The same function drives both the runtime kernels' fallback and the
+/// simulator's INVLIN depth term.
+pub fn choose_scan_schedule(
+    len: usize,
+    threads: usize,
+    combine_flops: u64,
+    apply_flops: u64,
+) -> ScanSchedule {
+    if threads <= 1 || len <= 2 {
+        return ScanSchedule::Sequential;
+    }
+    if len >= PAR_CROSSOVER_STEPS_PER_THREAD * threads {
+        return ScanSchedule::Chunked;
+    }
+    let levels = (usize::BITS - (len - 1).leading_zeros()) as u64; // ⌈log₂ len⌉
+    let per = len.div_ceil(threads) as u64;
+    let cr_cost = levels * (per * combine_flops + SYNC_FLOPS) + per * apply_flops + SYNC_FLOPS;
+    let seq_cost = len as u64 * apply_flops;
+    if cr_cost < seq_cost {
+        ScanSchedule::CyclicReduction
+    } else {
+        ScanSchedule::Sequential
+    }
+}
 
 /// Indices of the sequences a batched kernel should touch: every sequence,
 /// or only those flagged in an `active` mask (the convergence-masking hook).
@@ -147,7 +257,7 @@ pub(crate) fn plan_batch_chunks(
         return Vec::new();
     }
     let mut cps = if threads <= 1 { 1 } else { (threads / batch.max(1)).max(1) };
-    if t_len < 4 * cps {
+    if t_len < PAR_CROSSOVER_STEPS_PER_THREAD * cps {
         cps = 1;
     }
     let chunk_len = t_len.div_ceil(cps);
@@ -241,8 +351,30 @@ impl<S: Scalar> AffineSeq<S> {
 
 /// The associative operator of eq. (10):
 /// `out = later ∘ earlier`, i.e. `(A_l A_e, A_l b_e + b_l)`.
+///
+/// The matmul runs cache-blocked with lane-vectorized axpy rows
+/// ([`simd::matmul_blocked`]); [`combine_scalar`] is the bitwise reference.
 #[inline]
 pub fn combine<S: Scalar>(
+    a_later: &[S],
+    b_later: &[S],
+    a_earlier: &[S],
+    b_earlier: &[S],
+    a_out: &mut [S],
+    b_out: &mut [S],
+    n: usize,
+) {
+    simd::matmul_blocked(a_later, a_earlier, a_out, n);
+    crate::linalg::matvec(a_later, b_earlier, b_out);
+    for i in 0..n {
+        b_out[i] += b_later[i];
+    }
+}
+
+/// Scalar reference for [`combine`] — the original unblocked loops. The
+/// vectorized kernel must match it bitwise (pinned by tests).
+#[inline]
+pub fn combine_scalar<S: Scalar>(
     a_later: &[S],
     b_later: &[S],
     a_earlier: &[S],
@@ -261,8 +393,28 @@ pub fn combine<S: Scalar>(
 /// Diagonal specialization of the eq. (10) combine: with `A = diag(a)` the
 /// operator degenerates to `(a_l ⊙ a_e, a_l ⊙ b_e + b_l)` — O(n), and the
 /// diagonal monoid is closed so the whole scan stays packed.
+///
+/// Runs through the portable SIMD lanes ([`simd::combine_diag_lanes`]);
+/// [`combine_diag_scalar`] is the bitwise reference.
 #[inline]
 pub fn combine_diag<S: Scalar>(
+    a_later: &[S],
+    b_later: &[S],
+    a_earlier: &[S],
+    b_earlier: &[S],
+    a_out: &mut [S],
+    b_out: &mut [S],
+    n: usize,
+) {
+    simd::combine_diag_lanes(a_later, b_later, a_earlier, b_earlier, a_out, b_out, n);
+}
+
+/// Scalar reference for [`combine_diag`] — the original elementwise loop
+/// (whose six independently-indexed slices keep per-element bounds checks
+/// and therefore never autovectorized). The lane kernel must match it
+/// bitwise (pinned by tests).
+#[inline]
+pub fn combine_diag_scalar<S: Scalar>(
     a_later: &[S],
     b_later: &[S],
     a_earlier: &[S],
@@ -302,8 +454,32 @@ pub fn flops_combine_diag(n: usize) -> u64 {
 /// k×k tile products — `(A_l^{(b)} A_e^{(b)}, A_l^{(b)} b_e^{(b)} + b_l^{(b)})`
 /// per block. O(n·k²), the `Block(k)` middle rung between diagonal O(n)
 /// and dense O(n³).
+///
+/// The k = 2 case (LSTM/LEM unit pairing — the hot one) vectorizes across
+/// units through [`simd::combine_block2_lanes`]; other k run the scalar
+/// tile loops. [`combine_block_scalar`] is the bitwise reference.
 #[allow(clippy::too_many_arguments)]
 pub fn combine_block<S: Scalar>(
+    a_later: &[S],
+    b_later: &[S],
+    a_earlier: &[S],
+    b_earlier: &[S],
+    a_out: &mut [S],
+    b_out: &mut [S],
+    n: usize,
+    k: usize,
+) {
+    if k == 2 {
+        simd::combine_block2_lanes(a_later, b_later, a_earlier, b_earlier, a_out, b_out, n);
+        return;
+    }
+    combine_block_scalar(a_later, b_later, a_earlier, b_earlier, a_out, b_out, n, k);
+}
+
+/// Scalar reference for [`combine_block`] — the original per-tile loops.
+/// The vectorized k = 2 kernel must match it bitwise (pinned by tests).
+#[allow(clippy::too_many_arguments)]
+pub fn combine_block_scalar<S: Scalar>(
     a_later: &[S],
     b_later: &[S],
     a_earlier: &[S],
@@ -552,6 +728,127 @@ mod tests {
         assert!(flops_combine(n) > 10 * block, "dense {} vs block {block}", flops_combine(n));
         assert_eq!(flops_combine_block(8, 2), 4 * (16 + 8 + 2));
         assert_eq!(flops_apply_block(8, 2, 10), 400);
+    }
+
+    /// The lane-vectorized diagonal compose must match the scalar reference
+    /// **bitwise** at awkward shapes: n = 1, odd n (tail lanes), n just
+    /// below/above a lane multiple, and large n — for both scalar types.
+    #[test]
+    fn combine_diag_simd_matches_scalar_bitwise() {
+        let w = simd::LANE_BLOCK;
+        for &n in &[1usize, 2, 3, 5, 7, w - 1, w, w + 1, 2 * w - 1, 2 * w, 2 * w + 3, 100] {
+            let mut rng = Rng::new(1000 + n as u64);
+            let mut al = vec![0.0f64; n];
+            let mut bl = vec![0.0f64; n];
+            let mut ae = vec![0.0f64; n];
+            let mut be = vec![0.0f64; n];
+            rng.fill_normal(&mut al, 1.0);
+            rng.fill_normal(&mut bl, 1.0);
+            rng.fill_normal(&mut ae, 1.0);
+            rng.fill_normal(&mut be, 1.0);
+            let mut oa_s = vec![0.0f64; n];
+            let mut ob_s = vec![0.0f64; n];
+            let mut oa_v = vec![0.0f64; n];
+            let mut ob_v = vec![0.0f64; n];
+            combine_diag_scalar(&al, &bl, &ae, &be, &mut oa_s, &mut ob_s, n);
+            combine_diag(&al, &bl, &ae, &be, &mut oa_v, &mut ob_v, n);
+            assert_eq!(oa_s, oa_v, "n={n} a");
+            assert_eq!(ob_s, ob_v, "n={n} b");
+
+            // f32 lanes too (a full F32x8 register path)
+            let al32: Vec<f32> = al.iter().map(|&v| v as f32).collect();
+            let bl32: Vec<f32> = bl.iter().map(|&v| v as f32).collect();
+            let ae32: Vec<f32> = ae.iter().map(|&v| v as f32).collect();
+            let be32: Vec<f32> = be.iter().map(|&v| v as f32).collect();
+            let mut oa_s32 = vec![0.0f32; n];
+            let mut ob_s32 = vec![0.0f32; n];
+            let mut oa_v32 = vec![0.0f32; n];
+            let mut ob_v32 = vec![0.0f32; n];
+            combine_diag_scalar(&al32, &bl32, &ae32, &be32, &mut oa_s32, &mut ob_s32, n);
+            combine_diag(&al32, &bl32, &ae32, &be32, &mut oa_v32, &mut ob_v32, n);
+            assert_eq!(oa_s32, oa_v32, "n={n} a (f32)");
+            assert_eq!(ob_s32, ob_v32, "n={n} b (f32)");
+        }
+    }
+
+    /// The across-units Block(2) kernel must match the scalar tile loops
+    /// bitwise at unit counts straddling the lane width.
+    #[test]
+    fn combine_block2_simd_matches_scalar_bitwise() {
+        let w = simd::LANE_BLOCK;
+        for &nb in &[1usize, 2, w - 1, w, w + 1, 2 * w, 2 * w + 5] {
+            let n = 2 * nb;
+            let mut rng = Rng::new(2000 + nb as u64);
+            let mut al = vec![0.0f64; n * 2];
+            let mut bl = vec![0.0f64; n];
+            let mut ae = vec![0.0f64; n * 2];
+            let mut be = vec![0.0f64; n];
+            rng.fill_normal(&mut al, 1.0);
+            rng.fill_normal(&mut bl, 1.0);
+            rng.fill_normal(&mut ae, 1.0);
+            rng.fill_normal(&mut be, 1.0);
+            let mut oa_s = vec![0.0f64; n * 2];
+            let mut ob_s = vec![0.0f64; n];
+            let mut oa_v = vec![0.0f64; n * 2];
+            let mut ob_v = vec![0.0f64; n];
+            combine_block_scalar(&al, &bl, &ae, &be, &mut oa_s, &mut ob_s, n, 2);
+            combine_block(&al, &bl, &ae, &be, &mut oa_v, &mut ob_v, n, 2);
+            assert_eq!(oa_s, oa_v, "nb={nb} a");
+            assert_eq!(ob_s, ob_v, "nb={nb} b");
+        }
+    }
+
+    /// The cache-blocked dense compose must match the scalar reference
+    /// bitwise across tile-straddling sizes.
+    #[test]
+    fn combine_dense_simd_matches_scalar_bitwise() {
+        for &n in &[1usize, 3, 7, 8, 9, 16, 17, 64, 65] {
+            let mut rng = Rng::new(3000 + n as u64);
+            let mut al = vec![0.0f64; n * n];
+            let mut bl = vec![0.0f64; n];
+            let mut ae = vec![0.0f64; n * n];
+            let mut be = vec![0.0f64; n];
+            rng.fill_normal(&mut al, 1.0);
+            rng.fill_normal(&mut bl, 1.0);
+            rng.fill_normal(&mut ae, 1.0);
+            rng.fill_normal(&mut be, 1.0);
+            let mut oa_s = vec![0.0f64; n * n];
+            let mut ob_s = vec![0.0f64; n];
+            let mut oa_v = vec![0.0f64; n * n];
+            let mut ob_v = vec![0.0f64; n];
+            combine_scalar(&al, &bl, &ae, &be, &mut oa_s, &mut ob_s, n);
+            combine(&al, &bl, &ae, &be, &mut oa_v, &mut ob_v, n);
+            assert_eq!(oa_s, oa_v, "n={n} a");
+            assert_eq!(ob_s, ob_v, "n={n} b");
+        }
+    }
+
+    /// Structural pins on the schedule chooser (limit behavior, not exact
+    /// constants): single-thread → sequential; long sequences → chunked;
+    /// the starved region picks CR exactly when the modeled log-depth sweep
+    /// beats the sequential replay — cheap diagonal combines at high thread
+    /// counts do, expensive dense combines do not.
+    #[test]
+    fn schedule_chooser_limits() {
+        let n = 16;
+        let dc = flops_combine(n);
+        let da = flops_apply(n, 1);
+        let gc = flops_combine_diag(n);
+        let ga = flops_apply_diag(n, 1);
+        // threads <= 1 → sequential, any structure
+        assert_eq!(choose_scan_schedule(1000, 1, gc, ga), ScanSchedule::Sequential);
+        // amortized region → chunked, any structure
+        assert_eq!(
+            choose_scan_schedule(PAR_CROSSOVER_STEPS_PER_THREAD * 8, 8, gc, ga),
+            ScanSchedule::Chunked
+        );
+        assert_eq!(choose_scan_schedule(100_000, 8, dc, da), ScanSchedule::Chunked);
+        // starved region, diagonal, threads ≈ len → CR wins the depth race
+        assert_eq!(choose_scan_schedule(32, 16, gc, ga), ScanSchedule::CyclicReduction);
+        // starved region, dense, modest lanes → compose cost sinks CR
+        assert_eq!(choose_scan_schedule(32, 16, dc, da), ScanSchedule::Sequential);
+        // tiny scans never parallelize
+        assert_eq!(choose_scan_schedule(2, 16, gc, ga), ScanSchedule::Sequential);
     }
 
     #[test]

@@ -20,8 +20,9 @@
 //! invocations (the Newton loop) allocate nothing; the plain variants
 //! allocate a throwaway workspace for one-shot use.
 
+use super::cr::{par_scan_apply_cr_ws, par_scan_reverse_cr_ws};
 use super::seq::{compose_range, seq_scan_apply, seq_scan_reverse};
-use super::ScanWorkspace;
+use super::{choose_scan_schedule, flops_apply, flops_combine, ScanSchedule, ScanWorkspace};
 use crate::util::scalar::Scalar;
 
 /// Parallel `y_i = A_i y_{i−1} + b_i` over `threads` workers.
@@ -53,9 +54,16 @@ pub fn par_scan_apply_ws<S: Scalar>(
     threads: usize,
     ws: &mut ScanWorkspace<S>,
 ) {
-    if threads <= 1 || len < 4 * threads {
-        seq_scan_apply(a, b, y0, out, n, len);
-        return;
+    match choose_scan_schedule(len, threads, flops_combine(n), flops_apply(n, 1)) {
+        ScanSchedule::Sequential => {
+            seq_scan_apply(a, b, y0, out, n, len);
+            return;
+        }
+        ScanSchedule::CyclicReduction => {
+            par_scan_apply_cr_ws(a, b, y0, out, n, len, threads, ws);
+            return;
+        }
+        ScanSchedule::Chunked => {}
     }
     let chunks = threads;
     let chunk_len = len.div_ceil(chunks);
@@ -320,9 +328,16 @@ pub fn par_scan_reverse_ws<S: Scalar>(
     threads: usize,
     ws: &mut ScanWorkspace<S>,
 ) {
-    if threads <= 1 || len < 4 * threads {
-        seq_scan_reverse(a, g, out, n, len);
-        return;
+    match choose_scan_schedule(len, threads, flops_combine(n), flops_apply(n, 1)) {
+        ScanSchedule::Sequential => {
+            seq_scan_reverse(a, g, out, n, len);
+            return;
+        }
+        ScanSchedule::CyclicReduction => {
+            par_scan_reverse_cr_ws(a, g, out, n, len, threads, ws);
+            return;
+        }
+        ScanSchedule::Chunked => {}
     }
     let chunks = threads;
     let chunk_len = len.div_ceil(chunks);

@@ -1,0 +1,357 @@
+//! Dependency-free portable SIMD for the scan compose hot path.
+//!
+//! The crate pins `rust-version = 1.75`, which has neither `std::simd` nor
+//! external SIMD crates, so the lane types here are plain fixed-size arrays
+//! wrapped in `#[repr(transparent)]` structs. That is enough: every lane op
+//! is a bounds-check-free loop over a compile-time-constant width, which
+//! LLVM reliably unrolls and autovectorizes on the 1.75 toolchain (SSE2
+//! baseline on x86-64; wider with `-C target-cpu=native`). The *reason* the
+//! scalar kernels in [`crate::scan`] did not autovectorize is not the math —
+//! it is that loops indexing six independently-lengthed slices keep their
+//! per-element bounds checks, which break vector codegen. Loading into
+//! `[S; W]` blocks first removes every in-loop check.
+//!
+//! # Lane layout
+//!
+//! * [`F32x8`] — 8 × f32 (one AVX register, two SSE2 registers).
+//! * [`F64x4`] — 4 × f64 (one AVX register, two SSE2 registers).
+//! * Generic kernels over [`Scalar`] use a fixed [`LANE_BLOCK`] = 8 block
+//!   width regardless of scalar type (per-type widths would need
+//!   `generic_const_exprs`); the compiler splits an 8×f64 block into two
+//!   4-lane registers, which costs nothing.
+//!
+//! Vectors shorter than a lane multiple run a **scalar tail** loop with the
+//! exact per-element expression of the lane body.
+//!
+//! # Scalar-reference (bitwise) contract
+//!
+//! Every vectorized kernel here computes each output element with the same
+//! floating-point expression, in the same association order, as its scalar
+//! reference in [`crate::scan`] (`combine_diag_scalar`, `combine_scalar`,
+//! `combine_block_scalar`). In particular:
+//!
+//! * multiplies and adds stay separate ops — **never** a fused
+//!   multiply-add, which would change results;
+//! * dot-product style reductions keep their scalar accumulation order
+//!   (they vectorize across independent outputs, not within a reduction);
+//! * the Block(2) kernel vectorizes **across units** (8 independent 2×2
+//!   tiles per block), never within a tile, so each tile's k-order matches
+//!   the scalar tile loop.
+//!
+//! Tests in [`crate::scan`] pin `assert_eq!` equality against the scalar
+//! references at awkward shapes (n = 1, odd n, n ± 1 around a lane
+//! multiple).
+
+use crate::util::scalar::Scalar;
+
+/// Fixed lane-block width used by the generic kernels (see module docs).
+pub const LANE_BLOCK: usize = 8;
+
+/// A `W`-wide lane of scalars. All ops are element-wise, unrolled, and
+/// bounds-check-free; there is deliberately no horizontal reduction (it
+/// would reassociate sums and break the bitwise contract).
+#[derive(Clone, Copy, Debug)]
+#[repr(transparent)]
+pub struct Lanes<S, const W: usize>(pub [S; W]);
+
+/// 8 × f32 — one AVX register.
+pub type F32x8 = Lanes<f32, 8>;
+/// 4 × f64 — one AVX register.
+pub type F64x4 = Lanes<f64, 4>;
+
+impl<S: Scalar, const W: usize> Lanes<S, W> {
+    /// Broadcast one scalar to every lane.
+    #[inline(always)]
+    pub fn splat(v: S) -> Self {
+        Lanes([v; W])
+    }
+
+    /// Load `W` contiguous elements from the front of `src`.
+    #[inline(always)]
+    pub fn load(src: &[S]) -> Self {
+        let arr: [S; W] = src[..W].try_into().expect("lane load needs W elements");
+        Lanes(arr)
+    }
+
+    /// Store the lanes to the front of `dst`.
+    #[inline(always)]
+    pub fn store(self, dst: &mut [S]) {
+        dst[..W].copy_from_slice(&self.0);
+    }
+
+    /// Element-wise product.
+    #[inline(always)]
+    pub fn mul(self, o: Self) -> Self {
+        let mut r = self.0;
+        for j in 0..W {
+            r[j] = r[j] * o.0[j];
+        }
+        Lanes(r)
+    }
+
+    /// Element-wise sum.
+    #[inline(always)]
+    pub fn add(self, o: Self) -> Self {
+        let mut r = self.0;
+        for j in 0..W {
+            r[j] = r[j] + o.0[j];
+        }
+        Lanes(r)
+    }
+
+    /// `self * m + a`, computed as separate multiply then add (not fused) so
+    /// results stay bitwise identical to the scalar kernels.
+    #[inline(always)]
+    pub fn mul_add_separate(self, m: Self, a: Self) -> Self {
+        let mut r = self.0;
+        for j in 0..W {
+            r[j] = r[j] * m.0[j] + a.0[j];
+        }
+        Lanes(r)
+    }
+}
+
+/// Vectorized diagonal compose: `a_out = a_l ⊙ a_e`, `b_out = a_l ⊙ b_e + b_l`
+/// in [`LANE_BLOCK`]-wide blocks with a scalar tail. Bitwise identical to
+/// [`crate::scan::combine_diag_scalar`] (element-wise ops carry no
+/// accumulation order to preserve).
+#[inline]
+pub fn combine_diag_lanes<S: Scalar>(
+    a_later: &[S],
+    b_later: &[S],
+    a_earlier: &[S],
+    b_earlier: &[S],
+    a_out: &mut [S],
+    b_out: &mut [S],
+    n: usize,
+) {
+    const W: usize = LANE_BLOCK;
+    let main = n - n % W;
+    let mut i = 0;
+    while i < main {
+        let al = Lanes::<S, W>::load(&a_later[i..]);
+        let bl = Lanes::<S, W>::load(&b_later[i..]);
+        let ae = Lanes::<S, W>::load(&a_earlier[i..]);
+        let be = Lanes::<S, W>::load(&b_earlier[i..]);
+        al.mul(ae).store(&mut a_out[i..]);
+        be.mul(al).add(bl).store(&mut b_out[i..]);
+        i += W;
+    }
+    for i in main..n {
+        a_out[i] = a_later[i] * a_earlier[i];
+        b_out[i] = a_later[i] * b_earlier[i] + b_later[i];
+    }
+}
+
+/// One scalar Block(2) tile compose, shared by the vectorized kernel's tail
+/// and the scalar reference: the k-loop of the generic tile multiply
+/// unrolled at k = 2 (identical association order).
+#[inline(always)]
+fn block2_tile<S: Scalar>(al: &[S], ae: &[S], be: &[S], bl: &[S], ao: &mut [S], bo: &mut [S]) {
+    // A_out = A_l · A_e, k = 0 term first, then k = 1 (the scalar kernel's
+    // `crow[c] += aik * brow[c]` order starting from zero).
+    ao[0] = al[0] * ae[0] + al[1] * ae[2];
+    ao[1] = al[0] * ae[1] + al[1] * ae[3];
+    ao[2] = al[2] * ae[0] + al[3] * ae[2];
+    ao[3] = al[2] * ae[1] + al[3] * ae[3];
+    // b_out = A_l · b_e + b_l, row dot in ascending column order.
+    bo[0] = al[0] * be[0] + al[1] * be[1] + bl[0];
+    bo[1] = al[2] * be[0] + al[3] * be[1] + bl[1];
+}
+
+/// Vectorized Block(2) compose: [`LANE_BLOCK`] independent 2×2 tiles per
+/// block, vectorized **across units** — lane j holds tile-entry `e` of unit
+/// `u0 + j` — never within a tile, so each tile's two-term sums keep the
+/// scalar association order. Bitwise identical to
+/// [`crate::scan::combine_block_scalar`] at k = 2.
+#[inline]
+pub fn combine_block2_lanes<S: Scalar>(
+    a_later: &[S],
+    b_later: &[S],
+    a_earlier: &[S],
+    b_earlier: &[S],
+    a_out: &mut [S],
+    b_out: &mut [S],
+    n: usize,
+) {
+    const W: usize = LANE_BLOCK;
+    debug_assert_eq!(n % 2, 0);
+    let nb = n / 2; // number of 2×2 tiles
+    let main = nb - nb % W;
+    let mut u = 0;
+    while u < main {
+        // Strided gather: tile fields of units u..u+W into lane registers.
+        let mut la = [S::zero(); W];
+        let mut lb = [S::zero(); W];
+        let mut lc = [S::zero(); W];
+        let mut ld = [S::zero(); W];
+        let mut ea = [S::zero(); W];
+        let mut eb = [S::zero(); W];
+        let mut ec = [S::zero(); W];
+        let mut ed = [S::zero(); W];
+        let mut b0 = [S::zero(); W];
+        let mut b1 = [S::zero(); W];
+        let mut l0 = [S::zero(); W];
+        let mut l1 = [S::zero(); W];
+        for j in 0..W {
+            let t = (u + j) * 4;
+            la[j] = a_later[t];
+            lb[j] = a_later[t + 1];
+            lc[j] = a_later[t + 2];
+            ld[j] = a_later[t + 3];
+            ea[j] = a_earlier[t];
+            eb[j] = a_earlier[t + 1];
+            ec[j] = a_earlier[t + 2];
+            ed[j] = a_earlier[t + 3];
+            let p = (u + j) * 2;
+            b0[j] = b_earlier[p];
+            b1[j] = b_earlier[p + 1];
+            l0[j] = b_later[p];
+            l1[j] = b_later[p + 1];
+        }
+        // Per-lane tile math — same expressions as `block2_tile`.
+        let mut oa = [S::zero(); W];
+        let mut ob = [S::zero(); W];
+        let mut oc = [S::zero(); W];
+        let mut od = [S::zero(); W];
+        let mut o0 = [S::zero(); W];
+        let mut o1 = [S::zero(); W];
+        for j in 0..W {
+            oa[j] = la[j] * ea[j] + lb[j] * ec[j];
+            ob[j] = la[j] * eb[j] + lb[j] * ed[j];
+            oc[j] = lc[j] * ea[j] + ld[j] * ec[j];
+            od[j] = lc[j] * eb[j] + ld[j] * ed[j];
+            o0[j] = la[j] * b0[j] + lb[j] * b1[j] + l0[j];
+            o1[j] = lc[j] * b0[j] + ld[j] * b1[j] + l1[j];
+        }
+        // Scatter back.
+        for j in 0..W {
+            let t = (u + j) * 4;
+            a_out[t] = oa[j];
+            a_out[t + 1] = ob[j];
+            a_out[t + 2] = oc[j];
+            a_out[t + 3] = od[j];
+            let p = (u + j) * 2;
+            b_out[p] = o0[j];
+            b_out[p + 1] = o1[j];
+        }
+        u += W;
+    }
+    for u in main..nb {
+        let t = u * 4;
+        let p = u * 2;
+        block2_tile(
+            &a_later[t..t + 4],
+            &a_earlier[t..t + 4],
+            &b_earlier[p..p + 2],
+            &b_later[p..p + 2],
+            &mut a_out[t..t + 4],
+            &mut b_out[p..p + 2],
+        );
+    }
+}
+
+/// Cache-blocked dense matmul `C = A · B` (row-major n×n) for the dense
+/// compose: `IB`-row × `KB`-column tiles of A are streamed against B rows
+/// so each B row loaded into L1 is reused across `IB` output rows, and the
+/// inner j-loop is a bounds-check-free lane axpy. For every output entry
+/// `C[i][j]` the k-terms still accumulate in ascending global k order —
+/// identical to the reference ikj matmul of [`crate::linalg::matmul`], so
+/// results match the scalar dense compose bitwise (the reference's
+/// zero-skip only ever drops exact-zero contributions).
+#[inline]
+pub fn matmul_blocked<S: Scalar>(a: &[S], b: &[S], c: &mut [S], n: usize) {
+    const IB: usize = 8; // output-row tile
+    const KB: usize = 64; // inner-dimension tile (KB·n·8B ≤ 32 KiB at n ≤ 64)
+    const W: usize = LANE_BLOCK;
+    debug_assert_eq!(a.len(), n * n);
+    debug_assert_eq!(b.len(), n * n);
+    debug_assert_eq!(c.len(), n * n);
+    for v in c.iter_mut() {
+        *v = S::zero();
+    }
+    let jmain = n - n % W;
+    let mut i0 = 0;
+    while i0 < n {
+        let ihi = (i0 + IB).min(n);
+        let mut k0 = 0;
+        while k0 < n {
+            let khi = (k0 + KB).min(n);
+            for i in i0..ihi {
+                let arow = &a[i * n..(i + 1) * n];
+                let crow = &mut c[i * n..(i + 1) * n];
+                for k in k0..khi {
+                    let aik = arow[k];
+                    if aik == S::zero() {
+                        continue;
+                    }
+                    let brow = &b[k * n..(k + 1) * n];
+                    let mut j = 0;
+                    while j < jmain {
+                        let bv = Lanes::<S, W>::load(&brow[j..]);
+                        let cv = Lanes::<S, W>::load(&crow[j..]);
+                        bv.mul(Lanes::splat(aik)).add(cv).store(&mut crow[j..]);
+                        j += W;
+                    }
+                    for j in jmain..n {
+                        crow[j] = crow[j] + aik * brow[j];
+                    }
+                }
+            }
+            k0 = khi;
+        }
+        i0 = ihi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn lanes_roundtrip_and_ops() {
+        let src = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0];
+        let v = F32x8::load(&src);
+        let mut dst = [0.0f32; 9];
+        v.store(&mut dst);
+        assert_eq!(&dst[..8], &src[..8]);
+        assert_eq!(dst[8], 0.0);
+        let two = F32x8::splat(2.0);
+        let sum = v.add(two);
+        let prod = v.mul(two);
+        for j in 0..8 {
+            assert_eq!(sum.0[j], src[j] + 2.0);
+            assert_eq!(prod.0[j], src[j] * 2.0);
+        }
+        let fma = v.mul_add_separate(two, F32x8::splat(1.0));
+        for j in 0..8 {
+            assert_eq!(fma.0[j], src[j] * 2.0 + 1.0);
+        }
+    }
+
+    #[test]
+    fn f64x4_ops() {
+        let a = F64x4::load(&[1.0, -2.0, 0.5, 4.0]);
+        let b = F64x4::splat(3.0);
+        let m = a.mul(b);
+        assert_eq!(m.0, [3.0, -6.0, 1.5, 12.0]);
+    }
+
+    #[test]
+    fn matmul_blocked_matches_reference_bitwise() {
+        let mut rng = Rng::new(314);
+        // shapes straddling both tile sizes and the lane width
+        for &n in &[1usize, 2, 3, 7, 8, 9, 16, 33, 64, 65, 100] {
+            let mut a = vec![0.0f64; n * n];
+            let mut b = vec![0.0f64; n * n];
+            rng.fill_normal(&mut a, 1.0);
+            rng.fill_normal(&mut b, 1.0);
+            let mut want = vec![0.0f64; n * n];
+            let mut got = vec![0.0f64; n * n];
+            crate::linalg::matmul(&a, &b, &mut want, n);
+            matmul_blocked(&a, &b, &mut got, n);
+            assert_eq!(want, got, "n={n}");
+        }
+    }
+}

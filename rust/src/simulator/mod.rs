@@ -32,7 +32,122 @@ pub mod model;
 pub use model::{a100, cpu_1core, v100, Device, Kernel, SimBreakdown};
 
 use crate::cells::{Cell, JacobianStructure};
+use crate::scan::{choose_scan_schedule, ScanSchedule, SYNC_FLOPS};
 use crate::util::scalar::Scalar;
+
+/// Per-element compose / apply FLOPs and per-pair parallelism for one
+/// structured scan element — the simulator-side mirror of the
+/// `crate::scan::flops_*` family, bundled so every sim path prices the
+/// scan with exactly the numbers the runtime schedule chooser sees.
+fn scan_costs(structure: JacobianStructure, n: usize) -> (u64, u64, f64) {
+    match structure {
+        JacobianStructure::Dense => (
+            crate::scan::flops_combine(n),
+            crate::scan::flops_apply(n, 1),
+            (n * n) as f64,
+        ),
+        JacobianStructure::Diagonal => (
+            crate::scan::flops_combine_diag(n),
+            crate::scan::flops_apply_diag(n, 1),
+            n as f64,
+        ),
+        JacobianStructure::Block { k } => (
+            crate::scan::flops_combine_block(n, k),
+            crate::scan::flops_apply_block(n, k, 1),
+            (n * k) as f64,
+        ),
+    }
+}
+
+/// Modeled cost of a per-level barrier in a log-depth scan: every lane that
+/// participated in the level pays [`crate::scan::SYNC_FLOPS`] flop-units —
+/// the same convention `choose_scan_schedule` uses, so the simulated depth
+/// term and the runtime dispatch threshold share one constant.
+fn level_sync_flops(dev: &Device, level_parallelism: f64) -> f64 {
+    level_parallelism.min(dev.lanes) * SYNC_FLOPS as f64
+}
+
+/// Simulated time of ONE structured scan pass over `t_len` elements with an
+/// explicit worker count, run under the schedule the RUNTIME would pick:
+/// this calls the very same [`crate::scan::choose_scan_schedule`] the
+/// `par_*_ws` kernels consult, then prices the chosen schedule on `dev`.
+/// Returns the schedule alongside the time so dispatch is testable.
+///
+/// Schedules are modeled with their true depth: Sequential is `t_len`
+/// dependent apply kernels; Chunked is `⌈t_len/threads⌉` compose levels +
+/// a `threads`-long carry chain + the same depth of applies; cyclic
+/// reduction is `⌈log₂ t_len⌉` all-element compose levels (each ending in
+/// a barrier priced by [`SYNC_FLOPS`]) + one apply pass.
+pub fn sim_invlin_scheduled(
+    dev: &Device,
+    structure: JacobianStructure,
+    n: usize,
+    t_len: usize,
+    batch: usize,
+    threads: usize,
+) -> (ScanSchedule, f64) {
+    let (combine_flops, apply_flops, combine_par) = scan_costs(structure, n);
+    let jl = structure.jac_len(n);
+    let b = batch as f64;
+    let combine_bytes = ((3 * jl + 2 * n) * 4) as f64;
+    let apply_bytes = ((jl + 2 * n) * 4) as f64;
+    let schedule = choose_scan_schedule(t_len, threads, combine_flops, apply_flops);
+    let time = match schedule {
+        ScanSchedule::Sequential => {
+            let k = Kernel {
+                flops: b * apply_flops as f64,
+                bytes: b * apply_bytes,
+                parallelism: b * n as f64,
+            };
+            t_len as f64 * dev.kernel_time(&k)
+        }
+        ScanSchedule::Chunked => {
+            let per = t_len.div_ceil(threads.max(1));
+            let w = threads as f64;
+            // phase 1: every worker walks its chunk; one combine per level
+            let k_chunk = Kernel {
+                flops: w * b * combine_flops as f64,
+                bytes: w * b * combine_bytes,
+                parallelism: w * b * combine_par,
+            };
+            // phase 2: the carry chain across workers is sequential
+            let k_carry = Kernel {
+                flops: b * combine_flops as f64,
+                bytes: b * combine_bytes,
+                parallelism: b * combine_par,
+            };
+            // phase 3: apply pass, same depth as phase 1
+            let k_apply = Kernel {
+                flops: w * b * apply_flops as f64,
+                bytes: w * b * apply_bytes,
+                parallelism: w * b * n as f64,
+            };
+            per as f64 * dev.kernel_time(&k_chunk)
+                + w * dev.kernel_time(&k_carry)
+                + per as f64 * dev.kernel_time(&k_apply)
+        }
+        ScanSchedule::CyclicReduction => {
+            let levels = if t_len <= 1 {
+                0
+            } else {
+                (usize::BITS - (t_len - 1).leading_zeros()) as usize
+            };
+            let tb = t_len as f64 * b;
+            let k_level = Kernel {
+                flops: tb * combine_flops as f64 + level_sync_flops(dev, tb * combine_par),
+                bytes: tb * combine_bytes,
+                parallelism: tb * combine_par,
+            };
+            let k_apply = Kernel {
+                flops: tb * apply_flops as f64,
+                bytes: tb * apply_bytes,
+                parallelism: tb * n as f64,
+            };
+            levels as f64 * dev.kernel_time(&k_level) + dev.kernel_time(&k_apply)
+        }
+    };
+    (schedule, time)
+}
 
 /// Bytes of the explicit Jacobian/scan state DEER materializes:
 /// `G` (T·B·n²) + rhs (T·B·n) + two trajectory buffers (2·T·B·n), per the
@@ -194,24 +309,18 @@ pub fn sim_deer_forward_structured<S: Scalar, C: Cell<S>>(
     // INVLIN: Blelloch scan, 2·log2(T) stages; stage j combines T/2^j pairs.
     // Dense: n×n matmul + matvec per pair (O(n³)); diagonal: two fused
     // elementwise ops per pair (O(n)); block: n/k k×k tile products per
-    // pair (O((n/k)·k³)) — see crate::scan::flops_combine*.
-    let combine_flops = match structure {
-        JacobianStructure::Dense => crate::scan::flops_combine(n) as f64,
-        JacobianStructure::Diagonal => crate::scan::flops_combine_diag(n) as f64,
-        JacobianStructure::Block { k } => crate::scan::flops_combine_block(n, k) as f64,
-    };
+    // pair (O((n/k)·k³)) — see crate::scan::flops_combine*. Every stage
+    // ends in a barrier, priced by the depth term `level_sync_flops` with
+    // the same SYNC_FLOPS constant the runtime schedule chooser uses.
+    let (combine_flops_u, _, combine_par) = scan_costs(structure, n);
+    let combine_flops = combine_flops_u as f64;
     let combine_bytes = ((3 * jl + 2 * n) * 4) as f64;
-    let combine_par = match structure {
-        JacobianStructure::Dense => (n * n) as f64,
-        JacobianStructure::Diagonal => n as f64,
-        JacobianStructure::Block { k } => (n * k) as f64,
-    };
     let stages = (t_len as f64).log2().ceil().max(1.0) as usize;
     let mut invlin = 0.0;
     for j in 0..stages {
         let pairs = (t_len as f64 / 2f64.powi(j as i32 + 1)).max(1.0) * batch as f64;
         let k = Kernel {
-            flops: pairs * combine_flops,
+            flops: pairs * combine_flops + level_sync_flops(dev, pairs * combine_par),
             bytes: pairs * combine_bytes,
             parallelism: pairs * combine_par,
         };
@@ -266,17 +375,13 @@ pub fn sim_deer_forward_damped_structured<S: Scalar, C: Cell<S>>(
     };
     // one extra n-vector (the anchor z) rides through each compose
     let combine_bytes = ((3 * jl + 3 * n) * 4) as f64;
-    let combine_par = match structure {
-        JacobianStructure::Dense => (n * n) as f64,
-        JacobianStructure::Diagonal => n as f64,
-        JacobianStructure::Block { k } => (n * k) as f64,
-    };
+    let (_, _, combine_par) = scan_costs(structure, n);
     let stages = (t_len as f64).log2().ceil().max(1.0) as usize;
     let mut invlin = 0.0;
     for j in 0..stages {
         let pairs = (t_len as f64 / 2f64.powi(j as i32 + 1)).max(1.0) * batch as f64;
         let k = Kernel {
-            flops: pairs * combine_flops,
+            flops: pairs * combine_flops + level_sync_flops(dev, pairs * combine_par),
             bytes: pairs * combine_bytes,
             parallelism: pairs * combine_par,
         };
@@ -688,6 +793,76 @@ mod tests {
         );
         // degenerate 0-layer input stays sane (no underflow)
         assert_eq!(deer_memory_bytes_stacked(n, n, t, b, 4, st, 0, false), one);
+    }
+
+    /// The scheduled INVLIN model and the runtime kernels consult the SAME
+    /// chooser: for every (structure, len, threads) probed, the schedule
+    /// the simulator prices equals what `choose_scan_schedule` returns for
+    /// the runtime flops of that structure.
+    #[test]
+    fn scheduled_invlin_agrees_with_runtime_chooser() {
+        let dev = v100();
+        let structures = [
+            JacobianStructure::Dense,
+            JacobianStructure::Diagonal,
+            JacobianStructure::Block { k: 2 },
+        ];
+        for st in structures {
+            for &(len, threads) in
+                &[(2usize, 1usize), (5, 8), (32, 16), (1024, 8), (100_000, 8), (2048, 2048)]
+            {
+                let (sched, t) = sim_invlin_scheduled(&dev, st, 16, len, 1, threads);
+                let (cf, af) = match st {
+                    JacobianStructure::Dense => {
+                        (crate::scan::flops_combine(16), crate::scan::flops_apply(16, 1))
+                    }
+                    JacobianStructure::Diagonal => (
+                        crate::scan::flops_combine_diag(16),
+                        crate::scan::flops_apply_diag(16, 1),
+                    ),
+                    JacobianStructure::Block { k } => (
+                        crate::scan::flops_combine_block(16, k),
+                        crate::scan::flops_apply_block(16, k, 1),
+                    ),
+                };
+                assert_eq!(sched, choose_scan_schedule(len, threads, cf, af), "{st:?} {len} {threads}");
+                assert!(t.is_finite() && t > 0.0);
+            }
+        }
+    }
+
+    /// Depth pins for the scheduled model: one worker degenerates to a
+    /// linear-depth sequential replay (time ~2× when len doubles); at
+    /// thread counts near the sequence length a cheap diagonal combine
+    /// routes to cyclic reduction, whose launch-dominated time grows only
+    /// logarithmically — and is far below the sequential model.
+    #[test]
+    fn scheduled_invlin_depth_terms() {
+        let dev = v100();
+        let st = JacobianStructure::Diagonal;
+        // threads = 1 → Sequential, linear depth
+        let (s1, t1) = sim_invlin_scheduled(&dev, st, 4, 2048, 1, 1);
+        let (s2, t2) = sim_invlin_scheduled(&dev, st, 4, 4096, 1, 1);
+        assert_eq!(s1, ScanSchedule::Sequential);
+        assert_eq!(s2, ScanSchedule::Sequential);
+        assert!((t2 / t1 - 2.0).abs() < 0.1, "sequential depth must be linear: {}", t2 / t1);
+        // threads ≈ len, cheap combine → cyclic reduction, log depth
+        let (c1, u1) = sim_invlin_scheduled(&dev, st, 4, 2048, 1, 2048);
+        let (c2, u2) = sim_invlin_scheduled(&dev, st, 4, 4096, 1, 4096);
+        assert_eq!(c1, ScanSchedule::CyclicReduction);
+        assert_eq!(c2, ScanSchedule::CyclicReduction);
+        assert!(u2 / u1 < 1.5, "CR depth must be logarithmic: {}", u2 / u1);
+        assert!(t1 > 10.0 * u1, "CR {u1} must beat sequential {t1} where chosen");
+        // an expensive dense combine at the same starved shape stays
+        // sequential — log depth cannot pay for n³ composes
+        let (d, _) = sim_invlin_scheduled(&dev, JacobianStructure::Dense, 16, 32, 1, 16);
+        assert_eq!(d, ScanSchedule::Sequential);
+        // the bulk-parallel regime still routes to the chunked schedule and
+        // beats the one-worker model
+        let (ch, tc) = sim_invlin_scheduled(&dev, JacobianStructure::Dense, 8, 100_000, 1, 8);
+        let (_, ts) = sim_invlin_scheduled(&dev, JacobianStructure::Dense, 8, 100_000, 1, 1);
+        assert_eq!(ch, ScanSchedule::Chunked);
+        assert!(tc < ts, "chunked {tc} must beat sequential {ts}");
     }
 
     /// Stacked cost model: L identical layers cost L× the single solve

@@ -35,13 +35,15 @@ DEER_BENCH_FAST=1 cargo run --release --bin deer -- \
     bench --exp block --block-out "$FRESH_DIR/BENCH_block.json" --results results/compare
 DEER_BENCH_FAST=1 cargo run --release --bin deer -- \
     bench --exp elk --elk-out "$FRESH_DIR/BENCH_elk.json" --results results/compare
+DEER_BENCH_FAST=1 cargo run --release --bin deer -- \
+    bench --exp simd --simd-out "$FRESH_DIR/BENCH_simd.json" --results results/compare
 
 python3 - "$ROOT" "$FRESH_DIR" "$THRESHOLD" <<'EOF'
 import json, os, shutil, subprocess, sys
 
 root, fresh_dir, threshold = sys.argv[1], sys.argv[2], float(sys.argv[3])
 NAMES = ("BENCH_scan.json", "BENCH_batch.json", "BENCH_train.json", "BENCH_block.json",
-         "BENCH_elk.json")
+         "BENCH_elk.json", "BENCH_simd.json")
 # metric fields treated as ns/step costs (lower is better)
 COST_FIELDS = (
     "dense_ns_per_step", "diag_ns_per_step",
@@ -50,6 +52,7 @@ COST_FIELDS = (
     "dense_solve_ns_per_step", "block_solve_ns_per_step", "quasi_solve_ns_per_step",
     "dense_invlin_ns_per_step", "block_invlin_ns_per_step", "diag_invlin_ns_per_step",
     "plain_iter_ns_per_step", "elk_iter_ns_per_step",
+    "scalar_ns_per_compose", "simd_ns_per_compose",
 )
 
 def git_tracked(name):
@@ -90,9 +93,19 @@ for name in NAMES:
     # key includes the stacked-model depth (absent in pre-depth-arm
     # baselines -> default 1) so the depth-2 train point cannot shadow the
     # depth-1 point sharing its (n, T); "scale" keeps old-format ELK
-    # baselines (keyed per weight-amplification) from shadowing new ones
+    # baselines (keyed per weight-amplification) from shadowing new ones;
+    # "structure" keys the per-structure simd compose points (no T axis)
     def point_key(p):
-        return (p.get("n"), p["t"], p.get("layers", 1), p.get("scale"))
+        return (p.get("structure"), p.get("n"), p.get("t"),
+                p.get("layers", 1), p.get("scale"))
+    def key_label(key):
+        parts = []
+        if key[0] is not None:
+            parts.append(str(key[0]))
+        parts.append(f"n={key[1]}")
+        if key[2] is not None:
+            parts.append(f"T={key[2]} L={key[3]}")
+        return " ".join(parts)
     base_pts = {point_key(p): p for p in base.get("points", [])}
     for p in fresh.get("points", []):
         key = point_key(p)
@@ -104,11 +117,11 @@ for name in NAMES:
                 delta = (p[field] - b[field]) / b[field] * 100.0
                 compared += 1
                 tag = "REGRESSION" if delta > threshold else "ok"
-                print(f"{name} [{kind}] n={key[0]} T={key[1]} L={key[2]} {field}: "
+                print(f"{name} [{kind}] {key_label(key)} {field}: "
                       f"{b[field]:.1f} -> {p[field]:.1f} ns/step ({delta:+.1f}%) {tag}")
                 if delta > threshold:
                     failures.append(
-                        f"{name} n={key[0]} T={key[1]} L={key[2]} {field}: "
+                        f"{name} {key_label(key)} {field}: "
                         f"+{delta:.1f}% > {threshold}%")
 
 # Training acceptance gate: at T ≥ 4096 the fused DEER optimizer step must
@@ -193,6 +206,32 @@ if os.path.exists(elk_path):
                   f"{bool(p.get('elk_converged'))}")
     if gated == 0 and enforce:
         failures.append("BENCH_elk.json: no plain-converged point to gate damping overhead on")
+
+# SIMD acceptance gate: the lane-vectorized diagonal compose must run >= 2x
+# faster than the scalar reference at every n >= 16 point (the ISSUE 7
+# headline number; bitwise equivalence is pinned separately in scan::tests).
+# Enforced under the same baseline-armed contract as the other gates: a
+# seed run on a fresh/noisy machine reports the ratios and stays green.
+simd_path = os.path.join(fresh_dir, "BENCH_simd.json")
+if os.path.exists(simd_path):
+    enforce = had_baseline["BENCH_simd.json"]
+    with open(simd_path) as f:
+        doc = json.load(f)
+    gated = 0
+    for p in doc.get("points", []):
+        if p.get("structure") == "diagonal" and p["n"] >= 16:
+            gated += 1
+            slow = p["speedup"] < 2.0
+            tag = "REGRESSION" if slow and enforce else ("slow (advisory)" if slow else "ok")
+            print(f"simd gate n={p['n']}: diagonal compose scalar "
+                  f"{p['scalar_ns_per_compose']:.1f} ns, simd "
+                  f"{p['simd_ns_per_compose']:.1f} ns ({p['speedup']:.2f}x) {tag}")
+            if slow and enforce:
+                failures.append(
+                    f"BENCH_simd.json n={p['n']}: diagonal compose speedup "
+                    f"{p['speedup']:.2f}x < 2x")
+    if gated == 0 and enforce:
+        failures.append("BENCH_simd.json: no diagonal n >= 16 point to gate on")
 
 print()
 if failures:

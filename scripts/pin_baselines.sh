@@ -1,0 +1,54 @@
+#!/usr/bin/env bash
+# Promote bench numbers to COMMITTED (pinned) baselines.
+#
+# scripts/bench_compare.sh resolves baselines in this order: git-tracked
+# repo-root BENCH_*.json (pinned — never overwritten) > untracked repo-root
+# copy or restored CI artifact under .bench-baselines/ (run-over-run).
+# Run-over-run tracking bounds each step at the threshold but can drift over
+# many runs; pinning stops that. This script does the promotion: it copies
+# the chosen source's BENCH_*.json files to the repo root and `git add`s
+# them, so the next commit freezes the perf trajectory anchor.
+#
+# Usage: scripts/pin_baselines.sh [source-dir]
+#
+#   source-dir   where to read BENCH_*.json from. Default: .bench-baselines/
+#                (the CI `bench-baselines` artifact, restored by the workflow
+#                or downloaded manually from the Actions run page). Pass `.`
+#                to pin the repo-root run-over-run copies instead.
+#
+# IMPORTANT: pin numbers measured on the CI machine class (the artifact),
+# not a developer laptop — the gates compare CI runs against this anchor.
+set -euo pipefail
+
+ROOT="$(cd "$(dirname "$0")/.." && pwd)"
+SRC="${1:-$ROOT/.bench-baselines}"
+
+if [ ! -d "$SRC" ]; then
+    echo "error: source dir $SRC does not exist." >&2
+    echo "Restore the CI bench-baselines artifact there first (see .github/workflows/ci.yml)," >&2
+    echo "or pass a directory holding BENCH_*.json files." >&2
+    exit 1
+fi
+
+shopt -s nullglob
+pinned=0
+for src in "$SRC"/BENCH_*.json; do
+    name="$(basename "$src")"
+    # refuse to silently change an already-pinned anchor — that needs an
+    # explicit `git rm` first, so the history records the re-anchoring
+    if git -C "$ROOT" ls-files --error-unmatch "$name" >/dev/null 2>&1; then
+        echo "skip $name: already pinned (git rm it first to re-anchor)"
+        continue
+    fi
+    cp "$src" "$ROOT/$name"
+    git -C "$ROOT" add "$name"
+    echo "pinned $name (staged for commit)"
+    pinned=$((pinned + 1))
+done
+
+if [ "$pinned" -eq 0 ]; then
+    echo "nothing pinned: no unpinned BENCH_*.json in $SRC"
+    exit 0
+fi
+echo
+echo "$pinned baseline(s) staged. Commit them to freeze the perf trajectory anchor."
