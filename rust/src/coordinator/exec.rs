@@ -27,6 +27,7 @@ use crate::coordinator::memory::MemoryPlanner;
 use crate::coordinator::policy::{ConvergencePolicy, EvalPath};
 use crate::coordinator::warmstart::WarmStartCache;
 use crate::deer::newton::{effective_structure, DivergenceReason};
+use crate::telemetry;
 
 /// One evaluation request: a sequence to run through the executor's cell.
 #[derive(Debug, Clone)]
@@ -111,6 +112,20 @@ pub struct ExecStats {
     /// stacked trainer builds one executor per layer, so per-layer solve
     /// accounting is a read of each executor's tagged stats.
     pub layer: usize,
+    /// Scan-schedule dispatches observed during this executor's solves
+    /// (sequential / chunked two-pass / cyclic-reduction — ROADMAP PR 7
+    /// leftover: the CR path used to be reachable with zero visibility).
+    ///
+    /// Measured as deltas of the process-global telemetry counters around
+    /// each fused solve, so with SEVERAL executors solving concurrently a
+    /// delta can also absorb a neighbour's dispatches — read these as
+    /// "at least" attribution, or use the global
+    /// [`crate::telemetry::scan_schedule_snapshot`] for exact totals.
+    pub scan_sequential: u64,
+    /// See [`ExecStats::scan_sequential`].
+    pub scan_chunked: u64,
+    /// See [`ExecStats::scan_sequential`].
+    pub scan_cyclic_reduction: u64,
 }
 
 /// The coordinator's batched evaluation engine: batcher + warm-start cache +
@@ -229,6 +244,7 @@ impl<'c, C: Cell<f32>> BatchExecutor<'c, C> {
         let reqs = group.requests;
         if reqs.len() > max_b {
             self.stats.groups_split += 1;
+            telemetry::counter_add(telemetry::Counter::GroupsSplit, 1);
         }
         let mut replies = Vec::with_capacity(reqs.len());
         for sub in reqs.chunks(max_b) {
@@ -250,12 +266,30 @@ impl<'c, C: Cell<f32>> BatchExecutor<'c, C> {
                 }
             }
             let init = if any_warm { Some(&guess[..]) } else { None };
+            telemetry::gauge_set(telemetry::Gauge::SolveThreads, self.threads as f64);
+            telemetry::gauge_set(telemetry::Gauge::PlanMaxBatch, max_b as f64);
+            telemetry::histogram_record(telemetry::Histogram::GroupRows, b as u64);
+            let span = telemetry::span_with(
+                "batched_solve",
+                vec![
+                    ("rows", telemetry::ArgValue::Num(b as f64)),
+                    ("layer", telemetry::ArgValue::Num(self.layer as f64)),
+                ],
+            );
+            let (seq0, ch0, cr0) = telemetry::scan_schedule_snapshot();
             let (paths, res) =
                 self.policy
                     .evaluate_batch(self.cell, &h0s, &xs, init, self.threads, b);
+            let (seq1, ch1, cr1) = telemetry::scan_schedule_snapshot();
+            drop(span);
+            self.stats.scan_sequential += seq1.saturating_sub(seq0);
+            self.stats.scan_chunked += ch1.saturating_sub(ch0);
+            self.stats.scan_cyclic_reduction += cr1.saturating_sub(cr0);
             self.stats.batched_solves += 1;
             self.stats.sequences_solved += b as u64;
             self.stats.hybrid_switches += res.hybrid_switches as u64;
+            telemetry::counter_add(telemetry::Counter::BatchedSolves, 1);
+            telemetry::counter_add(telemetry::Counter::SequencesSolved, b as u64);
             for d in &res.divergence {
                 match d {
                     Some(DivergenceReason::NonFinite) => self.stats.diverged_nonfinite += 1,
@@ -366,6 +400,36 @@ mod tests {
             assert_eq!(reply.iterations, solo.iterations);
         }
         assert_eq!(ex.batcher.pending(), 0);
+    }
+
+    /// Scan-schedule dispatches observed during a fused solve land in the
+    /// executor's `ExecStats` (delta-attributed from the process-global
+    /// telemetry counters — "≥", not "==": other tests' solves running
+    /// concurrently in this binary can inflate the deltas, never deflate
+    /// them). A single-row group routes through the chooser-consulting
+    /// single-sequence kernel, and with `threads = 1` every sweep
+    /// dispatches the sequential schedule.
+    #[test]
+    fn exec_stats_absorb_scan_schedule_dispatches() {
+        let mut rng = Rng::new(5);
+        let (n, m, t_len, b) = (3usize, 3usize, 100usize, 1usize);
+        let cell: Gru<f32> = Gru::new(n, m, &mut rng);
+        let mut ex = BatchExecutor::new(
+            &cell,
+            t_len,
+            b,
+            Duration::from_secs(60),
+            1 << 20,
+            16 * (1u64 << 30),
+            1,
+        );
+        for (id, h0, xs) in make_requests(&cell, t_len, b) {
+            ex.submit(id, h0, xs);
+        }
+        assert_eq!(ex.stats.batched_solves, 1);
+        let dispatched =
+            ex.stats.scan_sequential + ex.stats.scan_chunked + ex.stats.scan_cyclic_reduction;
+        assert!(dispatched >= 1, "no scan dispatch observed across a fused solve");
     }
 
     /// Second round over the same sample ids warm-starts from the cache and

@@ -39,6 +39,7 @@ use crate::scan::diag::par_diag_scan_reverse_batch_ws;
 use crate::scan::kalman::par_kalman_scan_reverse_batch_ws;
 use crate::scan::par::par_scan_reverse_batch_ws;
 use crate::scan::ScanWorkspace;
+use crate::telemetry::Phase;
 use crate::util::scalar::Scalar;
 use crate::util::timer::PhaseProfile;
 
@@ -209,7 +210,7 @@ pub fn deer_rnn_backward_batch_damped_io<S: Scalar, C: CellGrad<S>>(
             j
         }
         None => {
-            owned_jac = profile.record("JACOBIAN", || {
+            owned_jac = profile.record(Phase::Jacobian, || {
                 recompute_jacobians_batch(
                     cell,
                     h0s,
@@ -242,7 +243,7 @@ pub fn deer_rnn_backward_batch_damped_io<S: Scalar, C: CellGrad<S>>(
         }
         None => false,
     };
-    profile.record("DUAL_SCAN", || {
+    profile.record(Phase::DualScan, || {
         if damped {
             par_kalman_scan_reverse_batch_ws(
                 jac,
@@ -292,7 +293,7 @@ pub fn deer_rnn_backward_batch_damped_io<S: Scalar, C: CellGrad<S>>(
     } else {
         None
     };
-    profile.record("PARAM_VJP", || {
+    profile.record(Phase::ParamVjp, || {
         let chunks = crate::scan::plan_batch_chunks(t_len, &all_seqs, threads, batch);
         if threads <= 1 || chunks.len() <= 1 {
             let mut ws = vec![S::zero(); cell.ws_len()];

@@ -110,6 +110,7 @@ use crate::scan::diag::par_diag_scan_apply_batch_ws;
 use crate::scan::kalman::par_kalman_scan_apply_batch_ws;
 use crate::scan::par::par_scan_apply_batch_ws;
 use crate::scan::ScanWorkspace;
+use crate::telemetry::{self, Counter, Histogram, Phase};
 use crate::util::scalar::Scalar;
 use crate::util::timer::PhaseProfile;
 
@@ -223,6 +224,32 @@ impl DivergenceReason {
             DivergenceReason::ErrorGrowth => "error_growth",
             DivergenceReason::LambdaExhausted => "lambda_exhausted",
         }
+    }
+
+    /// The always-on telemetry counter for this reason.
+    pub fn counter(&self) -> Counter {
+        match self {
+            DivergenceReason::MaxIters => Counter::DivergedMaxIters,
+            DivergenceReason::NonFinite => Counter::DivergedNonFinite,
+            DivergenceReason::ErrorGrowth => Counter::DivergedErrorGrowth,
+            DivergenceReason::LambdaExhausted => Counter::DivergedLambdaExhausted,
+        }
+    }
+}
+
+/// Record a row's divergence in the metric registry (always-on counter)
+/// and, when the sink is enabled, as a trace instant.
+#[inline]
+fn note_divergence(reason: DivergenceReason, seq: usize) {
+    telemetry::counter_add(reason.counter(), 1);
+    if telemetry::enabled() {
+        telemetry::instant(
+            "divergence",
+            vec![
+                ("reason", telemetry::ArgValue::Str(reason.label())),
+                ("seq", telemetry::ArgValue::Num(seq as f64)),
+            ],
+        );
     }
 }
 
@@ -517,6 +544,11 @@ pub fn deer_rnn_batch<S: Scalar, C: Cell<S>>(
             break;
         }
         sweeps += 1;
+        telemetry::counter_add(Counter::NewtonSweeps, 1);
+        let _sweep = telemetry::span_with(
+            "newton_sweep",
+            vec![("active", telemetry::ArgValue::Num(act_idx.len() as f64))],
+        );
         for &s in &act_idx {
             iterations[s] += 1;
         }
@@ -531,7 +563,7 @@ pub fn deer_rnn_batch<S: Scalar, C: Cell<S>>(
                 act_idx.iter().copied().filter(|&s| !switched[s]).collect();
             let diag_idx: Vec<usize> =
                 act_idx.iter().copied().filter(|&s| switched[s]).collect();
-            profile.record("FUNCEVAL", || {
+            profile.record(Phase::FuncEval, || {
                 if !dense_idx.is_empty() {
                     eval_f_jac_batch(
                         cell,
@@ -567,7 +599,7 @@ pub fn deer_rnn_batch<S: Scalar, C: Cell<S>>(
                     );
                 }
             });
-            profile.record("INVLIN", || {
+            profile.record(Phase::Invlin, || {
                 if !dense_idx.is_empty() {
                     let mut mask = vec![false; batch];
                     for &s in &dense_idx {
@@ -609,7 +641,7 @@ pub fn deer_rnn_batch<S: Scalar, C: Cell<S>>(
             // FUNCEVAL (fused with the former GTMULT): f, Jacobian and
             // b_i = f_i − J_i·y_{i−1} in one cache-hot pass over the active
             // grid.
-            profile.record("FUNCEVAL", || {
+            profile.record(Phase::FuncEval, || {
                 eval_f_jac_batch(
                     cell,
                     h0s,
@@ -630,7 +662,7 @@ pub fn deer_rnn_batch<S: Scalar, C: Cell<S>>(
             // INVLIN: ONE fused batched scan call over the active B'×T
             // element grid, dispatched on structure (diagonal compose is
             // O(n), not O(n³)); frozen sequences are masked out.
-            profile.record("INVLIN", || match structure {
+            profile.record(Phase::Invlin, || match structure {
                 JacobianStructure::Dense => {
                     par_scan_apply_batch_ws(
                         &jac,
@@ -722,6 +754,7 @@ pub fn deer_rnn_batch<S: Scalar, C: Cell<S>>(
             err_traces[s].push(err);
             if !err.is_finite() {
                 divergence[s] = Some(DivergenceReason::NonFinite);
+                note_divergence(DivergenceReason::NonFinite, s);
                 active[s] = false; // diverged to NaN/inf
                 continue;
             }
@@ -734,6 +767,7 @@ pub fn deer_rnn_batch<S: Scalar, C: Cell<S>>(
                 grow_streak[s] += 1;
                 if grow_streak[s] >= cfg.divergence_patience {
                     divergence[s] = Some(DivergenceReason::ErrorGrowth);
+                    note_divergence(DivergenceReason::ErrorGrowth, s);
                     active[s] = false;
                     continue;
                 }
@@ -750,6 +784,7 @@ pub fn deer_rnn_batch<S: Scalar, C: Cell<S>>(
                 }
                 switched[s] = true;
                 hybrid_switches += 1;
+                telemetry::counter_add(Counter::HybridSwitches, 1);
             }
         }
     }
@@ -778,8 +813,10 @@ pub fn deer_rnn_batch<S: Scalar, C: Cell<S>>(
     for s in 0..batch {
         if !converged[s] && divergence[s].is_none() {
             divergence[s] = Some(DivergenceReason::MaxIters);
+            note_divergence(DivergenceReason::MaxIters, s);
         }
     }
+    telemetry::histogram_record(Histogram::SweepsPerSolve, sweeps as u64);
 
     BatchDeerResult {
         batch,
@@ -883,11 +920,16 @@ fn deer_rnn_batch_damped<S: Scalar, C: Cell<S>>(
             break;
         }
         sweeps += 1;
+        telemetry::counter_add(Counter::NewtonSweeps, 1);
+        let _sweep = telemetry::span_with(
+            "newton_sweep",
+            vec![("active", telemetry::ArgValue::Num(act_idx.len() as f64))],
+        );
         for &s in &act_idx {
             iterations[s] += 1;
         }
 
-        profile.record("FUNCEVAL", || {
+        profile.record(Phase::FuncEval, || {
             eval_f_jac_batch(
                 cell,
                 h0s,
@@ -917,7 +959,7 @@ fn deer_rnn_batch_damped<S: Scalar, C: Cell<S>>(
             for &s in &pending {
                 mask[s] = true;
             }
-            profile.record("INVLIN", || {
+            profile.record(Phase::Invlin, || {
                 par_kalman_scan_apply_batch_ws(
                     &jac,
                     &rhs,
@@ -934,7 +976,7 @@ fn deer_rnn_batch_damped<S: Scalar, C: Cell<S>>(
                     &mut scan_ws,
                 );
             });
-            profile.record("RESIDUAL", || {
+            profile.record(Phase::Residual, || {
                 residual_batch(
                     cell,
                     h0s,
@@ -957,6 +999,17 @@ fn deer_rnn_batch_damped<S: Scalar, C: Cell<S>>(
                     // Accept: commit the trial, record the step size as the
                     // sweep error, relax λ (snap to the exact undamped
                     // solve below lambda_min).
+                    telemetry::counter_add(Counter::LmAccepts, 1);
+                    if telemetry::enabled() {
+                        telemetry::instant(
+                            "lm_accept",
+                            vec![
+                                ("seq", telemetry::ArgValue::Num(s as f64)),
+                                ("lambda", telemetry::ArgValue::Num(lam_used)),
+                                ("residual", telemetry::ArgValue::Num(r)),
+                            ],
+                        );
+                    }
                     let slab = &mut yt[s * sn..(s + 1) * sn];
                     let src = &y_next[s * sn..(s + 1) * sn];
                     let err = crate::linalg::max_abs_diff(&slab[..], src).to_f64c();
@@ -976,6 +1029,17 @@ fn deer_rnn_batch_damped<S: Scalar, C: Cell<S>>(
                     // Reject: grow λ and retry the same linearisation; a
                     // fully-relaxed (λ = 0) row restarts from lambda0, or
                     // from 1 when lambda0 itself is 0 ("damp on demand").
+                    telemetry::counter_add(Counter::LmRejects, 1);
+                    if telemetry::enabled() {
+                        telemetry::instant(
+                            "lm_reject",
+                            vec![
+                                ("seq", telemetry::ArgValue::Num(s as f64)),
+                                ("lambda", telemetry::ArgValue::Num(lam_used)),
+                                ("residual", telemetry::ArgValue::Num(r)),
+                            ],
+                        );
+                    }
                     let grown = if lambdas[s] == S::zero() {
                         if damp.lambda0 == S::zero() { S::one() } else { damp.lambda0 }
                     } else {
@@ -984,11 +1048,13 @@ fn deer_rnn_batch_damped<S: Scalar, C: Cell<S>>(
                     if grown > damp.lambda_max || rejects + 1 >= damp.max_rejects {
                         err_traces[s].push(f64::INFINITY);
                         lambda_traces[s].push(lam_used);
-                        divergence[s] = Some(if r.is_finite() {
+                        let reason = if r.is_finite() {
                             DivergenceReason::LambdaExhausted
                         } else {
                             DivergenceReason::NonFinite
-                        });
+                        };
+                        divergence[s] = Some(reason);
+                        note_divergence(reason, s);
                         active[s] = false;
                     } else {
                         lambdas[s] = grown;
@@ -1004,8 +1070,10 @@ fn deer_rnn_batch_damped<S: Scalar, C: Cell<S>>(
     for s in 0..batch {
         if !converged[s] && divergence[s].is_none() {
             divergence[s] = Some(DivergenceReason::MaxIters);
+            note_divergence(DivergenceReason::MaxIters, s);
         }
     }
+    telemetry::histogram_record(Histogram::SweepsPerSolve, sweeps as u64);
 
     BatchDeerResult {
         batch,
@@ -1811,10 +1879,10 @@ mod tests {
         let cell: Elman<f64> = Elman::new(2, 1, &mut rng);
         let xs = random_inputs(1, 100, 6);
         let res = deer_rnn(&cell, &vec![0.0; 2], &xs, None, &DeerConfig::default());
-        for phase in ["FUNCEVAL", "INVLIN"] {
-            assert!(res.profile.get(phase) > 0.0, "missing {phase}");
+        // (No GTMULT phase exists anymore — its work is part of FuncEval.)
+        for phase in [Phase::FuncEval, Phase::Invlin] {
+            assert!(res.profile.get(phase) > 0.0, "missing {phase:?}");
         }
-        assert_eq!(res.profile.get("GTMULT"), 0.0, "GTMULT is fused into FUNCEVAL");
     }
 
     #[test]

@@ -16,6 +16,7 @@
 
 use crate::linalg::{expm, phi1};
 use crate::scan::par::par_scan_apply;
+use crate::telemetry::Phase;
 use crate::util::scalar::Scalar;
 use crate::util::timer::PhaseProfile;
 
@@ -113,7 +114,7 @@ pub fn deer_ode<S: Scalar, Sys: OdeSystem<S>>(
         iterations += 1;
 
         // FUNCEVAL: node values G = −J, z = f − J·y on the current guess.
-        profile.record("FUNCEVAL", || {
+        profile.record(Phase::FuncEval, || {
             for i in 0..l {
                 let y = &yt[i * n..(i + 1) * n];
                 let jrow = &mut g_node[i * nn..(i + 1) * nn];
@@ -136,7 +137,7 @@ pub fn deer_ode<S: Scalar, Sys: OdeSystem<S>>(
 
         // DISCRETIZE (the paper's GTMULT analogue): build Ḡ_i = exp(−G_cΔ),
         // z̄_i = Δ·φ₁(−G_cΔ)·z_c per interval under the interpolation rule.
-        profile.record("DISCRETIZE", || {
+        profile.record(Phase::Discretize, || {
             for i in 0..steps {
                 let dt = ts[i + 1] - ts[i];
                 match interp {
@@ -176,7 +177,7 @@ pub fn deer_ode<S: Scalar, Sys: OdeSystem<S>>(
         });
 
         // INVLIN: prefix scan over intervals.
-        profile.record("INVLIN", || {
+        profile.record(Phase::Invlin, || {
             par_scan_apply(&a_bar, &b_bar, y0, &mut scan_out, n, steps, cfg.threads);
         });
 

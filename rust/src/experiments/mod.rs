@@ -15,13 +15,17 @@ use crate::deer::grad::deer_rnn_backward;
 use crate::deer::newton::{deer_rnn, effective_structure, DeerConfig, JacobianMode};
 use crate::deer::ode::{deer_ode, Interp, OdeSystem};
 use crate::deer::seq::{seq_rnn, seq_rnn_backward};
-use crate::scan::{par_diag_scan_apply_ws, par_scan_apply_ws, ScanWorkspace};
+use crate::scan::{
+    choose_scan_schedule, flops_apply_diag, flops_combine_diag, par_diag_scan_apply_cr_ws,
+    par_diag_scan_apply_ws, par_scan_apply_ws, seq_diag_scan_apply, ScanSchedule, ScanWorkspace,
+};
 use crate::simulator as sim;
+use crate::telemetry::Phase;
 use crate::util::json::{self, Json};
 use crate::util::scalar::Scalar;
 use crate::util::rng::Rng;
 use crate::util::table::{sig3, Table};
-use crate::util::timer::{bench_budget, fmt_secs};
+use crate::util::timer::{bench_budget, fmt_secs, PhaseProfile};
 use std::time::Duration;
 
 /// Common knobs for the measured benches (sized for a 1-core CPU budget;
@@ -278,9 +282,9 @@ pub fn table5_profile(t_len: usize, dims: &[usize]) -> Table {
     for &n in dims {
         let (cell, xs, h0) = gru_and_inputs(n, t_len, 5);
         let res = deer_rnn(&cell, &h0, &xs, None, &DeerConfig::default());
-        let per_iter = |phase: &str| res.profile.get(phase) / res.iterations as f64;
-        rows[0].push(fmt_secs(per_iter("FUNCEVAL")));
-        rows[1].push(fmt_secs(per_iter("INVLIN")));
+        let per_iter = |phase: Phase| res.profile.get(phase) / res.iterations as f64;
+        rows[0].push(fmt_secs(per_iter(Phase::FuncEval)));
+        rows[1].push(fmt_secs(per_iter(Phase::Invlin)));
     }
     let mut out = Table::new(
         &[&["phase / per-iteration".to_string()], dims
@@ -445,8 +449,8 @@ pub fn quasi_deer_bench(opts: &BenchOpts) -> Table {
             })
             .median();
 
-            let invlin_full = full.profile.get("INVLIN") / full.iterations.max(1) as f64;
-            let invlin_quasi = quasi.profile.get("INVLIN") / quasi.iterations.max(1) as f64;
+            let invlin_full = full.profile.get(Phase::Invlin) / full.iterations.max(1) as f64;
+            let invlin_quasi = quasi.profile.get(Phase::Invlin) / quasi.iterations.max(1) as f64;
             let conv = |r: &crate::deer::DeerResult<f32>| {
                 if r.converged {
                     r.iterations.to_string()
@@ -1249,7 +1253,7 @@ pub fn block_bench(units: &[usize], lens: &[usize], budget: Duration) -> (Table,
             let t_quasi = time(&cfg_quasi);
 
             let invlin_per_step = |r: &crate::deer::DeerResult<f32>| {
-                r.profile.get("INVLIN") / r.iterations.max(1) as f64 / t_len as f64 * 1e9
+                r.profile.get(Phase::Invlin) / r.iterations.max(1) as f64 / t_len as f64 * 1e9
             };
             let p = BlockBenchPoint {
                 n,
@@ -1325,6 +1329,299 @@ pub fn block_bench_json(points: &[BlockBenchPoint]) -> Json {
                             ("diag_invlin_ns_per_step", json::num(p.diag_invlin_ns_per_step)),
                             ("block_max_err", json::num(p.block_max_err)),
                             ("quasi_max_err", json::num(p.quasi_max_err)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// The {units, lens, threads} grid of the simulator-calibration bench
+/// (`--exp calib`). LSTM units (state dim 2×units) probed under all three
+/// Jacobian modes, so every Jacobian structure (dense / block2 / diagonal)
+/// gets observed-vs-predicted numbers.
+pub fn calib_bench_grid(fast: bool) -> (Vec<usize>, Vec<usize>, Vec<usize>) {
+    if fast {
+        (vec![4], vec![256], vec![1, 4])
+    } else {
+        (vec![4, 8], vec![256, 2048], vec![1, 4])
+    }
+}
+
+/// One (structure, n, T, threads) cell of the calibration bench: measured
+/// per-sweep FUNCEVAL / INVLIN wall-clock against the simulator's
+/// [`sim::sim_phase_time`] prediction on a thread-scaled CPU device model.
+#[derive(Debug, Clone)]
+pub struct CalibBenchPoint {
+    /// Jacobian structure label ("dense" / "block2" / "diagonal").
+    pub structure: String,
+    pub n: usize,
+    pub t_len: usize,
+    pub threads: usize,
+    /// Newton sweeps accumulated across the measurement repetitions.
+    pub iters: usize,
+    /// Observed / predicted nanoseconds of ONE phase pass over the `[T]`
+    /// grid, and the relative model error `|obs − pred| / obs`.
+    pub funceval_obs_ns: f64,
+    pub funceval_pred_ns: f64,
+    pub funceval_rel_err: f64,
+    pub invlin_obs_ns: f64,
+    pub invlin_pred_ns: f64,
+    pub invlin_rel_err: f64,
+}
+
+/// One crossover-drift probe: a (len, threads) point near the
+/// [`choose_scan_schedule`] sequential↔cyclic-reduction boundary, with the
+/// WALL-CLOCK of both candidate diagonal kernels measured directly. `drift`
+/// flags the chooser picking a schedule ≥ 1.25× slower than the measured
+/// best — on this CPU testbed, where "threads" are real spawned threads
+/// rather than the accelerator lanes the constant models, a CR choice is
+/// EXPECTED to drift; the calibration gate compares drift against the
+/// pinned baseline of the same machine class, not against zero.
+#[derive(Debug, Clone)]
+pub struct CrossoverProbe {
+    pub len: usize,
+    pub threads: usize,
+    pub n: usize,
+    /// Schedule the runtime chooser picks at this point.
+    pub chosen: &'static str,
+    /// Measured ns per scan, sequential kernel.
+    pub seq_ns: f64,
+    /// Measured ns per scan, cyclic-reduction kernel at `threads` workers.
+    pub cr_ns: f64,
+    pub measured_winner: &'static str,
+    pub drift: bool,
+}
+
+/// Simulator cost-model calibration (`--exp calib`): replay instrumented
+/// LSTM solves across (structure, T, n, threads), read the per-phase
+/// timings out of the shared [`PhaseProfile`], and compare each against
+/// [`sim::sim_phase_time`] on a device model scaled to the thread count
+/// (`peak_flops × threads`, `lanes = threads` — the crate's threads-as-lanes
+/// convention). Also times the two candidate kernels at chooser-boundary
+/// probe points to flag crossover-constant drift. Emits the human table
+/// plus machine-readable points for `BENCH_calib.json`.
+pub fn calib_bench(
+    units: &[usize],
+    lens: &[usize],
+    threads_grid: &[usize],
+    budget: Duration,
+) -> (Table, Vec<CalibBenchPoint>, Vec<CrossoverProbe>) {
+    let m = 4usize;
+    let mut table = Table::new(&[
+        "structure",
+        "n",
+        "T",
+        "threads",
+        "sweeps",
+        "FUNCEVAL obs",
+        "FUNCEVAL pred",
+        "rel err",
+        "INVLIN obs",
+        "INVLIN pred",
+        "rel err",
+    ]);
+    let mut points = Vec::new();
+    let modes =
+        [JacobianMode::Full, JacobianMode::BlockApprox, JacobianMode::DiagonalApprox];
+    for &u in units {
+        for &t_len in lens {
+            let mut rng = Rng::new(0xCA11B ^ ((u as u64) << 24) ^ t_len as u64);
+            let cell: Lstm<f32> = Lstm::new(u, m, &mut rng);
+            let n = cell.state_dim();
+            let mut xs = vec![0.0f32; t_len * m];
+            rng.fill_normal(&mut xs, 1.0);
+            let h0 = vec![0.0f32; n];
+            for mode in modes {
+                let structure = effective_structure(&cell, mode);
+                for &threads in threads_grid {
+                    let cfg = DeerConfig::<f32> {
+                        jacobian_mode: mode,
+                        max_iter: 200,
+                        threads,
+                        ..Default::default()
+                    };
+                    // Accumulate phase timings across enough solves to rise
+                    // above timer noise at the small shapes.
+                    let mut prof = PhaseProfile::new();
+                    let mut iters = 0usize;
+                    let reps_start = std::time::Instant::now();
+                    loop {
+                        let r = deer_rnn(&cell, &h0, &xs, None, &cfg);
+                        prof.merge(&r.profile);
+                        iters += r.iterations;
+                        if iters >= 3 && reps_start.elapsed() >= budget {
+                            break;
+                        }
+                        if reps_start.elapsed() >= budget * 4 {
+                            break;
+                        }
+                    }
+                    let obs =
+                        |p: Phase| prof.get(p) / iters.max(1) as f64 * 1e9;
+                    // Thread-scaled device: the crate models worker threads
+                    // as accelerator lanes, so a t-thread run is predicted
+                    // on a t-lane device with t× the single-core roofline.
+                    let dev = sim::Device {
+                        name: format!("cpu-{threads}lane"),
+                        peak_flops: sim::cpu_1core().peak_flops * threads as f64,
+                        lanes: threads as f64,
+                        ..sim::cpu_1core()
+                    };
+                    let pred = |p: Phase| {
+                        sim::sim_phase_time(&dev, &cell, structure, 1, t_len, threads, p) * 1e9
+                    };
+                    let rel = |o: f64, p: f64| (o - p).abs() / o.max(1e-12);
+                    let (fo, fp) = (obs(Phase::FuncEval), pred(Phase::FuncEval));
+                    let (io, ip) = (obs(Phase::Invlin), pred(Phase::Invlin));
+                    let point = CalibBenchPoint {
+                        structure: structure.label(),
+                        n,
+                        t_len,
+                        threads,
+                        iters,
+                        funceval_obs_ns: fo,
+                        funceval_pred_ns: fp,
+                        funceval_rel_err: rel(fo, fp),
+                        invlin_obs_ns: io,
+                        invlin_pred_ns: ip,
+                        invlin_rel_err: rel(io, ip),
+                    };
+                    table.row(vec![
+                        point.structure.clone(),
+                        n.to_string(),
+                        t_len.to_string(),
+                        threads.to_string(),
+                        iters.to_string(),
+                        fmt_secs(fo * 1e-9),
+                        fmt_secs(fp * 1e-9),
+                        sig3(point.funceval_rel_err),
+                        fmt_secs(io * 1e-9),
+                        fmt_secs(ip * 1e-9),
+                        sig3(point.invlin_rel_err),
+                    ]);
+                    points.push(point);
+                }
+            }
+        }
+    }
+    let probes = crossover_probes(budget);
+    (table, points, probes)
+}
+
+/// Time the sequential and cyclic-reduction diagonal kernels at two points
+/// bracketing the chooser's starved-region decision: (32, 16) where the
+/// model picks CR, and (16, 8) where it picks Sequential.
+fn crossover_probes(budget: Duration) -> Vec<CrossoverProbe> {
+    let n = 16usize;
+    let mut out = Vec::new();
+    for &(len, threads) in &[(32usize, 16usize), (16, 8)] {
+        let chosen =
+            choose_scan_schedule(len, threads, flops_combine_diag(n), flops_apply_diag(n, 1));
+        let mut rng = Rng::new(0xC0550 ^ ((len as u64) << 16) ^ threads as u64);
+        let mut a = vec![0.0f32; len * n];
+        let mut b = vec![0.0f32; len * n];
+        rng.fill_normal(&mut a, 0.5);
+        rng.fill_normal(&mut b, 1.0);
+        let y0 = vec![0.0f32; n];
+        let mut scratch = vec![0.0f32; len * n];
+        // 64 kernel invocations per timing sample: one scan at these shapes
+        // is sub-µs, below reliable clock resolution.
+        const INNER: usize = 64;
+        let seq_ns = {
+            let t = bench_budget(2, 32, budget, || {
+                for _ in 0..INNER {
+                    seq_diag_scan_apply(&a, &b, &y0, &mut scratch, n, len);
+                    std::hint::black_box(&scratch);
+                }
+            });
+            t.median() / INNER as f64 * 1e9
+        };
+        let cr_ns = {
+            let mut ws = ScanWorkspace::new();
+            let t = bench_budget(2, 32, budget, || {
+                for _ in 0..INNER {
+                    par_diag_scan_apply_cr_ws(&a, &b, &y0, &mut scratch, n, len, threads, &mut ws);
+                    std::hint::black_box(&scratch);
+                }
+            });
+            t.median() / INNER as f64 * 1e9
+        };
+        let (winner, best) = if seq_ns <= cr_ns {
+            (ScanSchedule::Sequential, seq_ns)
+        } else {
+            (ScanSchedule::CyclicReduction, cr_ns)
+        };
+        let chosen_ns = match chosen {
+            ScanSchedule::Sequential => seq_ns,
+            ScanSchedule::CyclicReduction => cr_ns,
+            // the probe points sit below the chunked region by construction
+            ScanSchedule::Chunked => seq_ns.min(cr_ns),
+        };
+        out.push(CrossoverProbe {
+            len,
+            threads,
+            n,
+            chosen: chosen.label(),
+            seq_ns,
+            cr_ns,
+            measured_winner: winner.label(),
+            drift: chosen_ns >= 1.25 * best,
+        });
+    }
+    out
+}
+
+/// Serialize calibration points + crossover probes as the
+/// `BENCH_calib.json` document.
+pub fn calib_bench_json(points: &[CalibBenchPoint], probes: &[CrossoverProbe]) -> Json {
+    json::obj(vec![
+        ("bench", json::s("calib")),
+        ("dtype", json::s("f32")),
+        ("cell", json::s("lstm")),
+        (
+            "device_model",
+            json::s("cpu_1core scaled per point: peak_flops x threads, lanes = threads"),
+        ),
+        (
+            "points",
+            json::arr(
+                points
+                    .iter()
+                    .map(|p| {
+                        json::obj(vec![
+                            ("structure", json::s(&p.structure)),
+                            ("n", json::num(p.n as f64)),
+                            ("t", json::num(p.t_len as f64)),
+                            ("threads", json::num(p.threads as f64)),
+                            ("iters", json::num(p.iters as f64)),
+                            ("funceval_obs_ns", json::num(p.funceval_obs_ns)),
+                            ("funceval_pred_ns", json::num(p.funceval_pred_ns)),
+                            ("funceval_rel_err", json::num(p.funceval_rel_err)),
+                            ("invlin_obs_ns", json::num(p.invlin_obs_ns)),
+                            ("invlin_pred_ns", json::num(p.invlin_pred_ns)),
+                            ("invlin_rel_err", json::num(p.invlin_rel_err)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "crossover_probes",
+            json::arr(
+                probes
+                    .iter()
+                    .map(|p| {
+                        json::obj(vec![
+                            ("len", json::num(p.len as f64)),
+                            ("threads", json::num(p.threads as f64)),
+                            ("n", json::num(p.n as f64)),
+                            ("chosen", json::s(p.chosen)),
+                            ("seq_ns", json::num(p.seq_ns)),
+                            ("cr_ns", json::num(p.cr_ns)),
+                            ("measured_winner", json::s(p.measured_winner)),
+                            ("drift", Json::Bool(p.drift)),
                         ])
                     })
                     .collect(),
@@ -1413,7 +1710,7 @@ pub fn elk_bench(lens: &[usize]) -> (Table, Vec<ElkBenchPoint>) {
         // the damped path adds RESIDUAL (its profile key is zero on the
         // plain path), so one expression covers both.
         let iter_ns = |r: &crate::deer::DeerResult<f32>| {
-            (r.profile.get("FUNCEVAL") + r.profile.get("INVLIN") + r.profile.get("RESIDUAL"))
+            (r.profile.get(Phase::FuncEval) + r.profile.get(Phase::Invlin) + r.profile.get(Phase::Residual))
                 / r.iterations.max(1) as f64
                 / t_len as f64
                 * 1e9

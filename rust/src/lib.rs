@@ -35,6 +35,10 @@
 //!   ([`train::native`]: model head + Adam + minibatch loop with the
 //!   Seq/DEER/quasi-DEER engine switch, §4.3) and the artifact-driven
 //!   loops (HNN / EigenWorms classifier via the `xla` runtime).
+//! * [`telemetry`] — structured observability: hierarchical spans with a
+//!   zero-cost-when-disabled sink, the enum-keyed metric registry
+//!   (counters/gauges/histograms), Chrome trace-event export for Perfetto,
+//!   and the per-bench run manifest.
 //! * [`metrics`] — run recording and paper-table reporting.
 //! * [`testkit`] — in-repo property-testing mini-framework.
 
@@ -49,6 +53,7 @@ pub mod runtime;
 pub mod data;
 pub mod experiments;
 pub mod train;
+pub mod telemetry;
 pub mod metrics;
 pub mod testkit;
 

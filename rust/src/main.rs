@@ -72,9 +72,12 @@ fn run() -> Result<()> {
                  \n  deer bench --exp batch --batch-out BENCH_batch.json  fused-batched vs looped dispatch\
                  \n  deer bench --exp train --train-out BENCH_train.json  seq-BPTT vs DEER optimizer steps\
                  \n  deer bench --exp elk --elk-out BENCH_elk.json   plain vs ELK damped solves on the divergence fixture\
+                 \n  deer bench --exp calib --calib-out BENCH_calib.json  observed vs simulator-predicted phase timings\
+                 \n  deer bench --exp elk --trace trace.json   record a Chrome trace of the bench (Perfetto / chrome://tracing)\
                  \n  deer sweep --workers 2          coordinator sweep demo\
                  \n  deer train --exp worms --mode deer --steps 40   native §4.3 trainer (seq|deer|quasi|hybrid|elk|quasi-elk)\
                  \n  deer train --exp worms --mode elk --verbose     damped-Newton arm with per-sequence λ/residual traces\
+                 \n  deer train --exp worms --mode elk --trace t.json   span-level Chrome trace (open in https://ui.perfetto.dev)\
                  \n  deer train --exp worms --layers 2 --mode deer   stacked model: one fused solve per layer
                  \n  deer train --exp worms --cell diag-gru          natively-structured cells (gru|diag-gru|diag-lstm)\
                  \n  deer train --exp worms-full --eval-every 10     Fig. 4 scale (T=17,984), val/test acc vs wall-clock\
@@ -93,6 +96,12 @@ fn bench(args: &Args, rec: &Recorder) -> Result<()> {
     let opts = opts_from_args(args)?;
     let which = args.get("exp", "all").to_string();
     let all = which == "all";
+    // --trace PATH: record telemetry spans for the whole bench run and dump
+    // them as Chrome trace-event JSON at exit. Spans are off otherwise.
+    let trace_path = args.opt("trace").map(PathBuf::from);
+    if trace_path.is_some() {
+        deer::telemetry::set_enabled(true);
+    }
 
     if all || which == "fig2" {
         for (i, t) in exp::fig2_speedup(&opts, false).iter().enumerate() {
@@ -206,6 +215,7 @@ fn bench(args: &Args, rec: &Recorder) -> Result<()> {
         )?;
         let out_path = PathBuf::from(args.get("block-out", "BENCH_block.json"));
         std::fs::write(&out_path, exp::block_bench_json(&points).to_string())?;
+        deer::telemetry::write_run_manifest(&out_path)?;
         println!("block bench points written to {}", out_path.display());
     }
     if all || which == "batch" {
@@ -232,6 +242,7 @@ fn bench(args: &Args, rec: &Recorder) -> Result<()> {
         )?;
         let out_path = PathBuf::from(args.get("batch-out", "BENCH_batch.json"));
         std::fs::write(&out_path, exp::batch_bench_json(&points).to_string())?;
+        deer::telemetry::write_run_manifest(&out_path)?;
         println!("batch bench points written to {}", out_path.display());
     }
     if all || which == "train" {
@@ -260,6 +271,7 @@ fn bench(args: &Args, rec: &Recorder) -> Result<()> {
         )?;
         let out_path = PathBuf::from(args.get("train-out", "BENCH_train.json"));
         std::fs::write(&out_path, exp::train_bench_json(&points).to_string())?;
+        deer::telemetry::write_run_manifest(&out_path)?;
         println!("train bench points written to {}", out_path.display());
     }
     if all || which == "elk" {
@@ -279,6 +291,7 @@ fn bench(args: &Args, rec: &Recorder) -> Result<()> {
         )?;
         let out_path = PathBuf::from(args.get("elk-out", "BENCH_elk.json"));
         std::fs::write(&out_path, exp::elk_bench_json(&points).to_string())?;
+        deer::telemetry::write_run_manifest(&out_path)?;
         println!("elk bench points written to {}", out_path.display());
     }
     if all || which == "simd" {
@@ -297,6 +310,7 @@ fn bench(args: &Args, rec: &Recorder) -> Result<()> {
         )?;
         let out_path = PathBuf::from(args.get("simd-out", "BENCH_simd.json"));
         std::fs::write(&out_path, exp::simd_bench_json(&points).to_string())?;
+        deer::telemetry::write_run_manifest(&out_path)?;
         println!("simd bench points written to {}", out_path.display());
     }
     if all || which == "scan" {
@@ -314,7 +328,36 @@ fn bench(args: &Args, rec: &Recorder) -> Result<()> {
         )?;
         let out_path = PathBuf::from(args.get("scan-out", "BENCH_scan.json"));
         std::fs::write(&out_path, exp::scan_bench_json(&points, threads).to_string())?;
+        deer::telemetry::write_run_manifest(&out_path)?;
         println!("scan bench points written to {}", out_path.display());
+    }
+    if all || which == "calib" {
+        // Cost-model calibration: run the real per-phase timers (FUNCEVAL /
+        // INVLIN) over (structure, T, threads) and compare against the
+        // simulator's roofline predictions on a thread-scaled 1-core device,
+        // plus direct seq-vs-CR probes at the chooser's pinned crossover
+        // points. Grid shrinks under DEER_BENCH_FAST=1.
+        let fast = std::env::var("DEER_BENCH_FAST").is_ok();
+        let (units, lens, threads) = exp::calib_bench_grid(fast);
+        let budget = if fast { Duration::from_millis(200) } else { opts.budget_per_cell };
+        let (t, points, probes) = exp::calib_bench(&units, &lens, &threads, budget);
+        rec.table(
+            "calib_cost_model",
+            "Cost-model calibration: observed vs simulator-predicted per-phase time (LSTM, measured | roofline)",
+            &t,
+        )?;
+        let out_path = PathBuf::from(args.get("calib-out", "BENCH_calib.json"));
+        std::fs::write(&out_path, exp::calib_bench_json(&points, &probes).to_string())?;
+        deer::telemetry::write_run_manifest(&out_path)?;
+        println!("calibration points written to {}", out_path.display());
+    }
+    if let Some(path) = &trace_path {
+        deer::telemetry::write_chrome_trace(path)?;
+        deer::telemetry::set_enabled(false);
+        println!(
+            "chrome trace written to {} (open in https://ui.perfetto.dev or chrome://tracing)",
+            path.display()
+        );
     }
     Ok(())
 }
@@ -419,6 +462,13 @@ where
     let eval_every = args.get_parse("eval-every", 0usize).map_err(Error::msg)?;
     let save_path = args.opt("save").map(std::path::PathBuf::from);
     let load_path = args.opt("load").map(std::path::PathBuf::from);
+    // --trace PATH: record the span hierarchy (train_step → layer_solve →
+    // batched_solve → newton_sweep → phases) plus LM accept/reject and
+    // divergence instants, and dump Chrome trace-event JSON at exit.
+    let trace_path = args.opt("trace").map(std::path::PathBuf::from);
+    if trace_path.is_some() {
+        deer::telemetry::set_enabled(true);
+    }
     // --lr-schedule resolution: explicit flag wins; otherwise a --load run
     // ADOPTS the checkpointed schedule (so the restored step counter keeps
     // meaning the same LR factor — load_checkpoint rejects mismatches)
@@ -662,6 +712,17 @@ where
         );
     }
     println!("curve written to {}", rec.dir.join(format!("{name}.csv")).display());
+    // One metrics snapshot per run — counters/gauges/histograms are always
+    // on, so this is populated even without --trace.
+    rec.jsonl("telemetry", &deer::telemetry::metrics_json())?;
+    if let Some(path) = &trace_path {
+        deer::telemetry::write_chrome_trace(path)?;
+        deer::telemetry::set_enabled(false);
+        println!(
+            "chrome trace written to {} (open in https://ui.perfetto.dev or chrome://tracing)",
+            path.display()
+        );
+    }
     Ok(())
 }
 

@@ -43,6 +43,17 @@ impl Recorder {
         writeln!(f, "{line}")
     }
 
+    /// Append one JSON value as a line of `{name}.jsonl` — the telemetry
+    /// metrics-dump hook (one [`crate::telemetry::metrics_json`] snapshot
+    /// per training run / bench invocation).
+    pub fn jsonl(&self, name: &str, line: &crate::util::json::Json) -> std::io::Result<()> {
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(self.dir.join(format!("{name}.jsonl")))?;
+        writeln!(f, "{}", line.to_string())
+    }
+
     /// Write a training curve as CSV.
     pub fn curve(&self, name: &str, points: &[crate::train::CurvePoint]) -> std::io::Result<()> {
         let mut out = String::from("step,wall_secs,loss,acc\n");
@@ -83,5 +94,15 @@ mod tests {
         let csv = std::fs::read_to_string(dir.join("c1.csv")).unwrap();
         assert!(csv.contains("step,wall_secs,loss,acc"));
         assert!(csv.contains("1,0.100,2.000000,"));
+
+        use crate::util::json::{self, num};
+        let line = json::obj(vec![("k", num(1.0))]);
+        r.jsonl("m1", &line).unwrap();
+        r.jsonl("m1", &line).unwrap();
+        let jl = std::fs::read_to_string(dir.join("m1.jsonl")).unwrap();
+        assert_eq!(jl.lines().count(), 2, "jsonl must append one line per call");
+        for l in jl.lines() {
+            crate::util::json::Json::parse(l).expect("each jsonl line parses");
+        }
     }
 }

@@ -29,7 +29,7 @@
 
 use super::cr::{par_block_scan_apply_cr_ws, par_block_scan_reverse_cr_ws};
 use super::{
-    choose_scan_schedule, combine_block, flops_apply_block, flops_combine_block, ScanSchedule,
+    choose_scan_schedule_observed, combine_block, flops_apply_block, flops_combine_block, ScanSchedule,
     ScanWorkspace,
 };
 use crate::util::scalar::Scalar;
@@ -244,7 +244,7 @@ pub fn par_block_scan_apply_ws<S: Scalar>(
     threads: usize,
     ws: &mut ScanWorkspace<S>,
 ) {
-    match choose_scan_schedule(len, threads, flops_combine_block(n, k), flops_apply_block(n, k, 1))
+    match choose_scan_schedule_observed(len, threads, flops_combine_block(n, k), flops_apply_block(n, k, 1))
     {
         ScanSchedule::Sequential => {
             seq_block_scan_apply(a, b, y0, out, n, k, len);
@@ -352,7 +352,7 @@ pub fn par_block_scan_reverse_ws<S: Scalar>(
     threads: usize,
     ws: &mut ScanWorkspace<S>,
 ) {
-    match choose_scan_schedule(len, threads, flops_combine_block(n, k), flops_apply_block(n, k, 1))
+    match choose_scan_schedule_observed(len, threads, flops_combine_block(n, k), flops_apply_block(n, k, 1))
     {
         ScanSchedule::Sequential => {
             seq_block_scan_reverse(a, g, out, n, k, len);

@@ -14,7 +14,7 @@
 
 use super::cr::{par_diag_scan_apply_cr_ws, par_diag_scan_reverse_cr_ws};
 use super::{
-    choose_scan_schedule, flops_apply_diag, flops_combine_diag, ScanSchedule, ScanWorkspace,
+    choose_scan_schedule_observed, flops_apply_diag, flops_combine_diag, ScanSchedule, ScanWorkspace,
 };
 use crate::util::scalar::Scalar;
 
@@ -127,7 +127,7 @@ pub fn par_diag_scan_apply_ws<S: Scalar>(
     threads: usize,
     ws: &mut ScanWorkspace<S>,
 ) {
-    match choose_scan_schedule(len, threads, flops_combine_diag(n), flops_apply_diag(n, 1)) {
+    match choose_scan_schedule_observed(len, threads, flops_combine_diag(n), flops_apply_diag(n, 1)) {
         ScanSchedule::Sequential => {
             seq_diag_scan_apply(a, b, y0, out, n, len);
             return;
@@ -389,7 +389,7 @@ pub fn par_diag_scan_reverse_ws<S: Scalar>(
     threads: usize,
     ws: &mut ScanWorkspace<S>,
 ) {
-    match choose_scan_schedule(len, threads, flops_combine_diag(n), flops_apply_diag(n, 1)) {
+    match choose_scan_schedule_observed(len, threads, flops_combine_diag(n), flops_apply_diag(n, 1)) {
         ScanSchedule::Sequential => {
             seq_diag_scan_reverse(a, g, out, n, len);
             return;

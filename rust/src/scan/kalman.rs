@@ -66,7 +66,7 @@
 
 use super::block::{block_matvec, block_matvec_t};
 use super::{
-    active_indices, choose_scan_schedule, combine, combine_block, combine_diag,
+    active_indices, choose_scan_schedule_observed, combine, combine_block, combine_diag,
     flops_apply_kalman, flops_apply_kalman_block, flops_apply_kalman_diag, flops_combine_kalman,
     flops_combine_kalman_block, flops_combine_kalman_diag, par_block_scan_apply_ws,
     par_block_scan_reverse_ws, par_diag_scan_apply_ws, par_diag_scan_reverse_ws, par_scan_apply_ws,
@@ -78,7 +78,7 @@ use crate::linalg::{eye_into, matvec, matvec_t};
 use crate::util::scalar::Scalar;
 
 /// Per-element damped compose cost for the structure at hand (the chooser
-/// input — see [`choose_scan_schedule`]).
+/// input — see [`super::choose_scan_schedule`]).
 fn kalman_combine_flops(st: JacobianStructure, n: usize) -> u64 {
     match st {
         JacobianStructure::Dense => flops_combine_kalman(n),
@@ -375,7 +375,7 @@ pub fn par_kalman_scan_apply_ws<S: Scalar>(
         }
         return;
     }
-    match choose_scan_schedule(len, threads, kalman_combine_flops(structure, n), kalman_apply_flops(structure, n)) {
+    match choose_scan_schedule_observed(len, threads, kalman_combine_flops(structure, n), kalman_apply_flops(structure, n)) {
         ScanSchedule::Sequential => {
             seq_kalman_scan_apply(a, b, z, y0, out, n, structure, len, lambda);
             return;
@@ -534,7 +534,7 @@ pub fn par_kalman_scan_reverse_ws<S: Scalar>(
         }
         return;
     }
-    match choose_scan_schedule(len, threads, kalman_combine_flops(structure, n), kalman_apply_flops(structure, n)) {
+    match choose_scan_schedule_observed(len, threads, kalman_combine_flops(structure, n), kalman_apply_flops(structure, n)) {
         ScanSchedule::Sequential => {
             seq_kalman_scan_reverse(a, g, out, n, structure, len, lambda);
             return;

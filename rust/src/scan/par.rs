@@ -22,7 +22,7 @@
 
 use super::cr::{par_scan_apply_cr_ws, par_scan_reverse_cr_ws};
 use super::seq::{compose_range, seq_scan_apply, seq_scan_reverse};
-use super::{choose_scan_schedule, flops_apply, flops_combine, ScanSchedule, ScanWorkspace};
+use super::{choose_scan_schedule_observed, flops_apply, flops_combine, ScanSchedule, ScanWorkspace};
 use crate::util::scalar::Scalar;
 
 /// Parallel `y_i = A_i y_{i−1} + b_i` over `threads` workers.
@@ -54,7 +54,7 @@ pub fn par_scan_apply_ws<S: Scalar>(
     threads: usize,
     ws: &mut ScanWorkspace<S>,
 ) {
-    match choose_scan_schedule(len, threads, flops_combine(n), flops_apply(n, 1)) {
+    match choose_scan_schedule_observed(len, threads, flops_combine(n), flops_apply(n, 1)) {
         ScanSchedule::Sequential => {
             seq_scan_apply(a, b, y0, out, n, len);
             return;
@@ -328,7 +328,7 @@ pub fn par_scan_reverse_ws<S: Scalar>(
     threads: usize,
     ws: &mut ScanWorkspace<S>,
 ) {
-    match choose_scan_schedule(len, threads, flops_combine(n), flops_apply(n, 1)) {
+    match choose_scan_schedule_observed(len, threads, flops_combine(n), flops_apply(n, 1)) {
         ScanSchedule::Sequential => {
             seq_scan_reverse(a, g, out, n, len);
             return;

@@ -149,6 +149,79 @@ pub fn sim_invlin_scheduled(
     (schedule, time)
 }
 
+/// Modeled wall-clock of ONE pass of a single solver phase over the
+/// `[B, T]` element grid — the simulator-side counterpart of every
+/// [`crate::telemetry::Phase`] the instrumented runtime can emit, and the
+/// prediction column of `deer bench --exp calib`.
+///
+/// The match is deliberately wildcard-free: adding a `Phase` variant
+/// without deciding its cost model is a compile error, which is the
+/// "every emitted phase has a simulator counterpart" contract.
+///
+/// Per-phase models (4-byte elements, `tb = t_len·batch`):
+/// * `FuncEval` / `Jacobian` — the fused f + Jacobian evaluation (the
+///   backward pass re-runs the same kernel when it recomputes Jacobians).
+/// * `Invlin` / `DualScan` — one structured scan pass under the schedule
+///   the runtime chooser would dispatch ([`sim_invlin_scheduled`]; the
+///   reverse dual scan runs the same monoid mirrored).
+/// * `Residual` — the ELK merit pass: f-only evaluation per element.
+/// * `ParamVjp` — accumulate dθ: ≈ 2 flops per Jacobian-entry-scale work
+///   per element, modeled as two f-evaluations' arithmetic.
+/// * `Discretize` — the ODE Ḡ/z̄ build: matrix-exponential scale work per
+///   interval (dense n³-ish via the same jacobian-flops proxy).
+#[allow(clippy::too_many_arguments)]
+pub fn sim_phase_time<S: Scalar, C: Cell<S>>(
+    dev: &Device,
+    cell: &C,
+    structure: JacobianStructure,
+    batch: usize,
+    t_len: usize,
+    threads: usize,
+    phase: crate::telemetry::Phase,
+) -> f64 {
+    use crate::telemetry::Phase;
+    let n = cell.state_dim();
+    let tb = (t_len * batch) as f64;
+    let jl = structure.jac_len(n);
+    match phase {
+        Phase::FuncEval | Phase::Jacobian => {
+            let k = Kernel {
+                flops: cell.flops_jacobian() as f64 * tb,
+                bytes: tb * ((jl + 2 * n) * 4) as f64,
+                parallelism: tb * n as f64,
+            };
+            dev.kernel_time(&k)
+        }
+        Phase::Invlin | Phase::DualScan => {
+            sim_invlin_scheduled(dev, structure, n, t_len, batch, threads).1
+        }
+        Phase::Residual => {
+            let k = Kernel {
+                flops: cell.flops_step() as f64 * tb,
+                bytes: tb * (3 * n * 4) as f64,
+                parallelism: tb * n as f64,
+            };
+            dev.kernel_time(&k)
+        }
+        Phase::ParamVjp => {
+            let k = Kernel {
+                flops: 2.0 * cell.flops_step() as f64 * tb,
+                bytes: tb * ((jl + 2 * n) * 4) as f64,
+                parallelism: tb * n as f64,
+            };
+            dev.kernel_time(&k)
+        }
+        Phase::Discretize => {
+            let k = Kernel {
+                flops: cell.flops_jacobian() as f64 * tb,
+                bytes: tb * ((jl + 2 * n) * 4) as f64,
+                parallelism: tb * n as f64,
+            };
+            dev.kernel_time(&k)
+        }
+    }
+}
+
 /// Bytes of the explicit Jacobian/scan state DEER materializes:
 /// `G` (T·B·n²) + rhs (T·B·n) + two trajectory buffers (2·T·B·n), per the
 /// paper's O(n²LP) analysis (§3.5) with P = 1. `elem` = dtype size in bytes.
@@ -863,6 +936,33 @@ mod tests {
         let (_, ts) = sim_invlin_scheduled(&dev, JacobianStructure::Dense, 8, 100_000, 1, 1);
         assert_eq!(ch, ScanSchedule::Chunked);
         assert!(tc < ts, "chunked {tc} must beat sequential {ts}");
+    }
+
+    /// Every telemetry phase the runtime can emit has a simulator cost
+    /// model, for every Jacobian structure, at representative shapes —
+    /// finite and strictly positive. Exhaustiveness over future `Phase`
+    /// variants is enforced at compile time by the wildcard-free match
+    /// inside [`sim_phase_time`]; this test pins the values are usable.
+    #[test]
+    fn every_phase_has_a_cost_model() {
+        let dev = cpu_1core();
+        let cell = gru(8);
+        let structures = [
+            JacobianStructure::Dense,
+            JacobianStructure::Diagonal,
+            JacobianStructure::Block { k: 2 },
+        ];
+        for st in structures {
+            for phase in crate::telemetry::Phase::ALL {
+                for &(t_len, threads) in &[(64usize, 1usize), (1024, 8)] {
+                    let t = sim_phase_time(&dev, &cell, st, 1, t_len, threads, phase);
+                    assert!(
+                        t.is_finite() && t > 0.0,
+                        "no usable cost model for {phase:?} under {st:?} (t = {t})"
+                    );
+                }
+            }
+        }
     }
 
     /// Stacked cost model: L identical layers cost L× the single solve

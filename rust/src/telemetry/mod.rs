@@ -1,0 +1,796 @@
+//! Structured telemetry: hierarchical spans, an enum-keyed metric registry,
+//! Chrome trace-event export, and the run manifest.
+//!
+//! The subsystem is dependency-free and built around one invariant: **when
+//! the sink is disabled it must be strictly zero-cost on the numeric hot
+//! path and can never perturb solver outputs**. Span emission is gated on a
+//! single relaxed atomic load ([`enabled`]); nothing in this module touches
+//! floating-point state, so enabling the sink changes *what is recorded*,
+//! never *what is computed* — solver outputs are bitwise-identical either
+//! way (pinned by `tests/telemetry.rs`).
+//!
+//! # Span hierarchy
+//!
+//! Spans nest per thread. A traced training step produces:
+//!
+//! ```text
+//! train_step                          (train/native/loop.rs  TrainLoop::step)
+//! └─ layer_solve {layer}              (train/native/loop.rs  forward_layer)
+//!    └─ batched_solve {rows, layer}   (coordinator/exec.rs   run_group)
+//!       └─ newton_sweep {active}      (deer/newton.rs        per Newton sweep)
+//!          ├─ FUNCEVAL               (PhaseProfile::record — fused f + J + rhs)
+//!          ├─ INVLIN                 (PhaseProfile::record — associative scan)
+//!          ├─ RESIDUAL               (damped/ELK path — merit evaluation)
+//!          ├─ i: scan_schedule        {schedule, len, threads, …}  (scan/mod.rs)
+//!          ├─ i: lm_accept / lm_reject {seq, lambda, err}          (deer/newton.rs)
+//!          └─ i: divergence           {reason, seq, layer}         (coordinator/exec.rs)
+//! backward: JACOBIAN / DUAL_SCAN / PARAM_VJP spans   (deer/grad.rs)
+//! ODE:      FUNCEVAL / DISCRETIZE / INVLIN spans     (deer/ode.rs)
+//! ```
+//!
+//! `i:` rows are instant events; the rest are begin/end span pairs.
+//!
+//! # Pieces
+//!
+//! - **Spans** — [`span`] / [`span_with`] return an RAII guard whose drop
+//!   emits the matching end event; [`instant`] emits point events. Events
+//!   land in per-thread buffers (no locking on the hot path) that flush into
+//!   a global sink when the thread exits or on [`drain`]. Pool workers from
+//!   `std::thread::scope` flush automatically at scope end.
+//! - **Metric registry** — typed, enum-keyed [`Counter`]s / [`Gauge`]s /
+//!   log-bucketed [`Histogram`]s backed by process-global atomics. Counters
+//!   are always on (one relaxed `fetch_add` per event, far off the inner
+//!   loops); [`metrics_json`] snapshots everything for the JSONL dump the
+//!   [`crate::metrics::Recorder`] writes.
+//! - **Chrome trace export** — [`write_chrome_trace`] serializes drained
+//!   events as Chrome trace-event JSON (`deer train/bench --trace out.json`);
+//!   open the file at <https://ui.perfetto.dev> or `chrome://tracing`.
+//! - **Run manifest** — [`write_run_manifest`] drops a
+//!   `<bench>.manifest.json` (git rev, target features, CPU model, machine
+//!   class) next to every `BENCH_*.json` so `scripts/pin_baselines.sh` can
+//!   refuse to pin numbers from a different machine class.
+
+use std::cell::RefCell;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::{self, Json};
+
+// ---------------------------------------------------------------------------
+// Phases
+// ---------------------------------------------------------------------------
+
+/// The solver phases every profile/span/cost-model speaks in. One shared
+/// enum replaces the free-string `PhaseProfile` labels: typos are compile
+/// errors, and `simulator::sim_phase_time` matches on it WITHOUT a wildcard
+/// so a new phase cannot ship without a cost-model counterpart.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// Fused f + Jacobian + rhs evaluation (GTMULT is folded in here since
+    /// the batched refactor — see `deer::newton`).
+    FuncEval,
+    /// The associative linear-recurrence scan (eq. 7 forward).
+    Invlin,
+    /// ELK merit evaluation in the damped accept/reject loop.
+    Residual,
+    /// Backward-pass Jacobian recomputation (when not reused from forward).
+    Jacobian,
+    /// The reverse-mode dual scan (eq. 7 transposed).
+    DualScan,
+    /// Parameter-cotangent accumulation of the backward pass.
+    ParamVjp,
+    /// ODE-path interpolation/discretization of the continuous system.
+    Discretize,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 7] = [
+        Phase::FuncEval,
+        Phase::Invlin,
+        Phase::Residual,
+        Phase::Jacobian,
+        Phase::DualScan,
+        Phase::ParamVjp,
+        Phase::Discretize,
+    ];
+
+    /// Stable uppercase label — the historical `PhaseProfile` string keys,
+    /// kept so traces/tables stay comparable across the enum migration.
+    pub fn label(self) -> &'static str {
+        match self {
+            Phase::FuncEval => "FUNCEVAL",
+            Phase::Invlin => "INVLIN",
+            Phase::Residual => "RESIDUAL",
+            Phase::Jacobian => "JACOBIAN",
+            Phase::DualScan => "DUAL_SCAN",
+            Phase::ParamVjp => "PARAM_VJP",
+            Phase::Discretize => "DISCRETIZE",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Event sink
+// ---------------------------------------------------------------------------
+
+/// Whether the span/instant sink records anything. Off by default; the CLI
+/// flips it for `--trace` runs. Counters/gauges/histograms are always on.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Cheap hot-path gate: one relaxed load. `#[inline]` so the disabled case
+/// folds into a branch over an atomic load at every instrumentation site.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Enable/disable the event sink. Enabling warms the process time anchor so
+/// the first event doesn't pay the `OnceLock` initialization.
+pub fn set_enabled(on: bool) {
+    if on {
+        let _ = anchor();
+    }
+    ENABLED.store(on, Ordering::SeqCst);
+}
+
+/// Process-start time anchor: all event timestamps are nanoseconds since
+/// this instant (monotonic, per-process — exactly what Chrome traces want).
+fn anchor() -> Instant {
+    static ANCHOR: OnceLock<Instant> = OnceLock::new();
+    *ANCHOR.get_or_init(Instant::now)
+}
+
+fn now_ns() -> u64 {
+    anchor().elapsed().as_nanos() as u64
+}
+
+/// Event flavor, mapping 1:1 onto Chrome trace-event `ph` values.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// `ph: "B"` — span begin.
+    Begin,
+    /// `ph: "E"` — span end.
+    End,
+    /// `ph: "i"` — point event (thread-scoped).
+    Instant,
+}
+
+/// One attachable event argument. `&'static str` only — instrumentation
+/// sites always have static labels, and this keeps emission allocation-light.
+#[derive(Debug, Clone, Copy)]
+pub enum ArgValue {
+    Num(f64),
+    Str(&'static str),
+}
+
+/// One recorded event. `tid` is a small dense per-thread id handed out at
+/// first emission (NOT the OS thread id — Chrome traces render better with
+/// small ids, and scoped pool workers get a fresh row per generation).
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub name: &'static str,
+    pub kind: EventKind,
+    pub ts_ns: u64,
+    pub tid: u64,
+    pub args: Vec<(&'static str, ArgValue)>,
+}
+
+/// Global sink the per-thread buffers flush into (thread exit or [`drain`]).
+static GLOBAL: Mutex<Vec<Event>> = Mutex::new(Vec::new());
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+/// Soft cap per thread buffer: a runaway traced run degrades to dropping
+/// events (counted in [`Counter::EventsDropped`]) instead of exhausting
+/// memory. 4M events ≈ a few hundred MB worst case.
+const MAX_EVENTS_PER_THREAD: usize = 4_000_000;
+
+struct ThreadBuf {
+    tid: u64,
+    events: Vec<Event>,
+}
+
+impl Drop for ThreadBuf {
+    fn drop(&mut self) {
+        // Worker threads (std::thread::scope pools) flush here at scope end,
+        // so no cross-thread coordination is needed while they run.
+        if !self.events.is_empty() {
+            if let Ok(mut g) = GLOBAL.lock() {
+                g.append(&mut self.events);
+            }
+        }
+    }
+}
+
+thread_local! {
+    static BUF: RefCell<ThreadBuf> = RefCell::new(ThreadBuf {
+        tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+        events: Vec::new(),
+    });
+}
+
+fn push(kind: EventKind, name: &'static str, args: Vec<(&'static str, ArgValue)>) {
+    let ts_ns = now_ns();
+    BUF.with(|b| {
+        let mut b = b.borrow_mut();
+        if b.events.len() >= MAX_EVENTS_PER_THREAD {
+            counter_add(Counter::EventsDropped, 1);
+            return;
+        }
+        let tid = b.tid;
+        b.events.push(Event { name, kind, ts_ns, tid, args });
+    });
+}
+
+/// RAII span guard: dropping it emits the matching end event. Bind it to a
+/// named variable (`let _span = …`) — `let _ = …` drops immediately.
+pub struct SpanGuard {
+    name: &'static str,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        push(EventKind::End, self.name, Vec::new());
+    }
+}
+
+/// Open a span. Returns `None` without emitting anything when the sink is
+/// disabled — the only cost on the disabled path is one relaxed load.
+#[inline]
+pub fn span(name: &'static str) -> Option<SpanGuard> {
+    if !enabled() {
+        return None;
+    }
+    push(EventKind::Begin, name, Vec::new());
+    Some(SpanGuard { name })
+}
+
+/// [`span`] with arguments attached to the begin event.
+#[inline]
+pub fn span_with(name: &'static str, args: Vec<(&'static str, ArgValue)>) -> Option<SpanGuard> {
+    if !enabled() {
+        return None;
+    }
+    push(EventKind::Begin, name, args);
+    Some(SpanGuard { name })
+}
+
+/// Emit a point event (Chrome `ph: "i"`). No-op when disabled. Callers on
+/// hot paths should still guard with [`enabled`] to skip building `args`.
+#[inline]
+pub fn instant(name: &'static str, args: Vec<(&'static str, ArgValue)>) {
+    if !enabled() {
+        return;
+    }
+    push(EventKind::Instant, name, args);
+}
+
+/// Flush the CURRENT thread's buffer into the global sink (worker threads
+/// flush automatically when they exit).
+pub fn flush_thread() {
+    BUF.with(|b| {
+        let mut b = b.borrow_mut();
+        if !b.events.is_empty() {
+            if let Ok(mut g) = GLOBAL.lock() {
+                g.append(&mut b.events);
+            }
+        }
+    });
+}
+
+/// Take every recorded event out of the sink, sorted by timestamp (stable,
+/// so per-thread emission order is preserved among equal timestamps).
+pub fn drain() -> Vec<Event> {
+    flush_thread();
+    let mut evs = match GLOBAL.lock() {
+        Ok(mut g) => std::mem::take(&mut *g),
+        Err(poisoned) => std::mem::take(&mut *poisoned.into_inner()),
+    };
+    evs.sort_by_key(|e| e.ts_ns);
+    evs
+}
+
+// ---------------------------------------------------------------------------
+// Metric registry
+// ---------------------------------------------------------------------------
+
+/// Typed counter ids — the registry absorbing the scattered `ExecStats` /
+/// divergence / schedule tallies behind enum keys. Always on (relaxed
+/// `fetch_add`, never inside a per-element loop).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Counter {
+    BatchedSolves,
+    SequencesSolved,
+    GroupsSplit,
+    DivergedNonFinite,
+    DivergedLambdaExhausted,
+    DivergedMaxIters,
+    DivergedErrorGrowth,
+    HybridSwitches,
+    NewtonSweeps,
+    LmAccepts,
+    LmRejects,
+    /// Runtime scan-schedule decisions (`choose_scan_schedule_observed`).
+    ScanSequential,
+    ScanChunked,
+    ScanCyclicReduction,
+    /// Events dropped by the per-thread buffer cap.
+    EventsDropped,
+}
+
+impl Counter {
+    pub const ALL: [Counter; 15] = [
+        Counter::BatchedSolves,
+        Counter::SequencesSolved,
+        Counter::GroupsSplit,
+        Counter::DivergedNonFinite,
+        Counter::DivergedLambdaExhausted,
+        Counter::DivergedMaxIters,
+        Counter::DivergedErrorGrowth,
+        Counter::HybridSwitches,
+        Counter::NewtonSweeps,
+        Counter::LmAccepts,
+        Counter::LmRejects,
+        Counter::ScanSequential,
+        Counter::ScanChunked,
+        Counter::ScanCyclicReduction,
+        Counter::EventsDropped,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::BatchedSolves => "batched_solves",
+            Counter::SequencesSolved => "sequences_solved",
+            Counter::GroupsSplit => "groups_split",
+            Counter::DivergedNonFinite => "diverged_non_finite",
+            Counter::DivergedLambdaExhausted => "diverged_lambda_exhausted",
+            Counter::DivergedMaxIters => "diverged_max_iters",
+            Counter::DivergedErrorGrowth => "diverged_error_growth",
+            Counter::HybridSwitches => "hybrid_switches",
+            Counter::NewtonSweeps => "newton_sweeps",
+            Counter::LmAccepts => "lm_accepts",
+            Counter::LmRejects => "lm_rejects",
+            Counter::ScanSequential => "scan_sequential",
+            Counter::ScanChunked => "scan_chunked",
+            Counter::ScanCyclicReduction => "scan_cyclic_reduction",
+            Counter::EventsDropped => "events_dropped",
+        }
+    }
+}
+
+const NUM_COUNTERS: usize = Counter::ALL.len();
+// AtomicU64 is not Copy; array-repeat of a const item is the stable way to
+// zero-initialize the bank.
+#[allow(clippy::declare_interior_mutable_const)]
+const ATOMIC_ZERO: AtomicU64 = AtomicU64::new(0);
+static COUNTERS: [AtomicU64; NUM_COUNTERS] = [ATOMIC_ZERO; NUM_COUNTERS];
+
+/// Bump a counter. Process-global and always on; relaxed ordering — totals
+/// are exact, cross-counter ordering is not guaranteed.
+#[inline]
+pub fn counter_add(c: Counter, delta: u64) {
+    COUNTERS[c as usize].fetch_add(delta, Ordering::Relaxed);
+}
+
+pub fn counter_get(c: Counter) -> u64 {
+    COUNTERS[c as usize].load(Ordering::Relaxed)
+}
+
+/// Snapshot of the scan-schedule decision counters
+/// `(sequential, chunked, cyclic_reduction)` — the coordinator diffs this
+/// around each fused solve to attribute decisions to its `ExecStats`.
+pub fn scan_schedule_snapshot() -> (u64, u64, u64) {
+    (
+        counter_get(Counter::ScanSequential),
+        counter_get(Counter::ScanChunked),
+        counter_get(Counter::ScanCyclicReduction),
+    )
+}
+
+/// Typed gauge ids (last-written-wins f64 values).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Gauge {
+    /// Worker-pool width of the most recent fused solve.
+    SolveThreads,
+    /// Memory-planner batch cap of the most recent fused solve.
+    PlanMaxBatch,
+}
+
+impl Gauge {
+    pub const ALL: [Gauge; 2] = [Gauge::SolveThreads, Gauge::PlanMaxBatch];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Gauge::SolveThreads => "solve_threads",
+            Gauge::PlanMaxBatch => "plan_max_batch",
+        }
+    }
+}
+
+const NUM_GAUGES: usize = Gauge::ALL.len();
+static GAUGES: [AtomicU64; NUM_GAUGES] = [ATOMIC_ZERO; NUM_GAUGES];
+
+#[inline]
+pub fn gauge_set(g: Gauge, value: f64) {
+    GAUGES[g as usize].store(value.to_bits(), Ordering::Relaxed);
+}
+
+pub fn gauge_get(g: Gauge) -> f64 {
+    f64::from_bits(GAUGES[g as usize].load(Ordering::Relaxed))
+}
+
+/// Typed histogram ids. Buckets are log2-spaced: a sample `v` lands in
+/// bucket `bit_width(v)` (0 → bucket 0, 1 → 1, 2..3 → 2, 4..7 → 3, …), so
+/// 64 buckets cover the whole u64 range with O(1) recording.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Histogram {
+    /// Newton sweeps per fused batch solve.
+    SweepsPerSolve,
+    /// Scan length at each schedule decision.
+    ScanLen,
+    /// Rows per fused coordinator group.
+    GroupRows,
+}
+
+impl Histogram {
+    pub const ALL: [Histogram; 3] =
+        [Histogram::SweepsPerSolve, Histogram::ScanLen, Histogram::GroupRows];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Histogram::SweepsPerSolve => "sweeps_per_solve",
+            Histogram::ScanLen => "scan_len",
+            Histogram::GroupRows => "group_rows",
+        }
+    }
+}
+
+const NUM_HISTOGRAMS: usize = Histogram::ALL.len();
+const NUM_BUCKETS: usize = 65; // bit widths 0..=64
+#[allow(clippy::declare_interior_mutable_const)]
+const BUCKET_ZERO: [AtomicU64; NUM_BUCKETS] = [ATOMIC_ZERO; NUM_BUCKETS];
+static HISTOGRAMS: [[AtomicU64; NUM_BUCKETS]; NUM_HISTOGRAMS] = [BUCKET_ZERO; NUM_HISTOGRAMS];
+
+#[inline]
+fn bucket_of(v: u64) -> usize {
+    (u64::BITS - v.leading_zeros()) as usize
+}
+
+#[inline]
+pub fn histogram_record(h: Histogram, value: u64) {
+    HISTOGRAMS[h as usize][bucket_of(value)].fetch_add(1, Ordering::Relaxed);
+}
+
+/// Non-empty buckets of a histogram as `(bucket_lower_bound, count)`.
+pub fn histogram_buckets(h: Histogram) -> Vec<(u64, u64)> {
+    let mut out = Vec::new();
+    for (i, b) in HISTOGRAMS[h as usize].iter().enumerate() {
+        let c = b.load(Ordering::Relaxed);
+        if c > 0 {
+            let lo = if i == 0 { 0 } else { 1u64 << (i - 1) };
+            out.push((lo, c));
+        }
+    }
+    out
+}
+
+/// One JSON snapshot of the whole registry — the line the Recorder's JSONL
+/// metrics dump appends per run/step.
+pub fn metrics_json() -> Json {
+    let counters = Counter::ALL
+        .iter()
+        .map(|&c| (c.name(), json::num(counter_get(c) as f64)))
+        .collect();
+    let gauges = Gauge::ALL
+        .iter()
+        .map(|&g| (g.name(), json::num(gauge_get(g))))
+        .collect();
+    let hists = Histogram::ALL
+        .iter()
+        .map(|&h| {
+            (
+                h.name(),
+                json::arr(
+                    histogram_buckets(h)
+                        .into_iter()
+                        .map(|(lo, c)| {
+                            json::obj(vec![
+                                ("lo", json::num(lo as f64)),
+                                ("count", json::num(c as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            )
+        })
+        .collect();
+    json::obj(vec![
+        ("counters", json::obj(counters)),
+        ("gauges", json::obj(gauges)),
+        ("histograms", json::obj(hists)),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// Chrome trace export
+// ---------------------------------------------------------------------------
+
+/// Serialize events as a Chrome trace-event document (the `traceEvents`
+/// array format). Timestamps are microseconds; instants carry `s: "t"`
+/// (thread scope) so Perfetto draws them as markers on their thread track.
+pub fn chrome_trace_json(events: &[Event]) -> Json {
+    let mut evs = Vec::with_capacity(events.len());
+    for e in events {
+        let mut fields = vec![
+            ("name", json::s(e.name)),
+            (
+                "ph",
+                json::s(match e.kind {
+                    EventKind::Begin => "B",
+                    EventKind::End => "E",
+                    EventKind::Instant => "i",
+                }),
+            ),
+            ("ts", json::num(e.ts_ns as f64 / 1_000.0)),
+            ("pid", json::num(1.0)),
+            ("tid", json::num(e.tid as f64)),
+        ];
+        if e.kind == EventKind::Instant {
+            fields.push(("s", json::s("t")));
+        }
+        if !e.args.is_empty() {
+            let args = e
+                .args
+                .iter()
+                .map(|(k, v)| {
+                    (
+                        *k,
+                        match v {
+                            ArgValue::Num(x) => json::num(*x),
+                            ArgValue::Str(s) => json::s(s),
+                        },
+                    )
+                })
+                .collect();
+            fields.push(("args", json::obj(args)));
+        }
+        evs.push(json::obj(fields));
+    }
+    json::obj(vec![("traceEvents", json::arr(evs))])
+}
+
+/// Drain the sink and write a Chrome trace file (open in Perfetto).
+pub fn write_chrome_trace(path: &Path) -> std::io::Result<()> {
+    let events = drain();
+    std::fs::write(path, chrome_trace_json(&events).to_string())
+}
+
+// ---------------------------------------------------------------------------
+// Run manifest
+// ---------------------------------------------------------------------------
+
+fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+fn cpu_model() -> String {
+    // The same parse scripts/pin_baselines.sh re-implements: first
+    // "model name" line of /proc/cpuinfo, value trimmed.
+    std::fs::read_to_string("/proc/cpuinfo")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find(|l| l.starts_with("model name"))
+                .and_then(|l| l.split(':').nth(1).map(|v| v.trim().to_string()))
+        })
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+fn target_features() -> Vec<&'static str> {
+    let mut out = Vec::new();
+    if cfg!(target_feature = "sse4.1") {
+        out.push("sse4.1");
+    }
+    if cfg!(target_feature = "avx") {
+        out.push("avx");
+    }
+    if cfg!(target_feature = "avx2") {
+        out.push("avx2");
+    }
+    if cfg!(target_feature = "avx512f") {
+        out.push("avx512f");
+    }
+    if cfg!(target_feature = "fma") {
+        out.push("fma");
+    }
+    if cfg!(target_feature = "neon") {
+        out.push("neon");
+    }
+    out
+}
+
+/// The machine-class string `scripts/pin_baselines.sh` compares: CPU
+/// architecture + model. Thread count is recorded separately (informative,
+/// not class-defining — cgroup limits move it run to run).
+pub fn machine_class() -> String {
+    format!("{}/{}", std::env::consts::ARCH, cpu_model())
+}
+
+/// The run-manifest document describing the machine and build that produced
+/// a bench artifact.
+pub fn run_manifest_json() -> Json {
+    let threads = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+    json::obj(vec![
+        ("schema", json::s("deer-run-manifest-v1")),
+        ("git_rev", json::s(&git_rev())),
+        ("os", json::s(std::env::consts::OS)),
+        ("arch", json::s(std::env::consts::ARCH)),
+        ("cpu_model", json::s(&cpu_model())),
+        ("machine_class", json::s(&machine_class())),
+        ("threads", json::num(threads as f64)),
+        (
+            "target_features",
+            json::arr(target_features().into_iter().map(json::s).collect()),
+        ),
+    ])
+}
+
+/// `BENCH_x.json` → `BENCH_x.manifest.json` (same directory).
+pub fn manifest_path_for(bench_path: &Path) -> PathBuf {
+    let stem = bench_path
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or("bench");
+    bench_path.with_file_name(format!("{stem}.manifest.json"))
+}
+
+/// Write the run manifest next to `bench_path`; returns the manifest path.
+pub fn write_run_manifest(bench_path: &Path) -> std::io::Result<PathBuf> {
+    let p = manifest_path_for(bench_path);
+    std::fs::write(&p, run_manifest_json().to_string())?;
+    Ok(p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_labels_are_unique_and_stable() {
+        let labels: Vec<&str> = Phase::ALL.iter().map(|p| p.label()).collect();
+        for (i, a) in labels.iter().enumerate() {
+            for b in &labels[i + 1..] {
+                assert_ne!(a, b);
+            }
+        }
+        assert_eq!(Phase::FuncEval.label(), "FUNCEVAL");
+        assert_eq!(Phase::DualScan.label(), "DUAL_SCAN");
+    }
+
+    #[test]
+    fn counter_names_are_unique() {
+        let names: Vec<&str> = Counter::ALL.iter().map(|c| c.name()).collect();
+        for (i, a) in names.iter().enumerate() {
+            for b in &names[i + 1..] {
+                assert_ne!(a, b);
+            }
+        }
+    }
+
+    #[test]
+    fn counters_accumulate_monotonically() {
+        // Counters are process-global and other tests may bump them
+        // concurrently — assert on deltas, not absolutes.
+        let before = counter_get(Counter::EventsDropped);
+        counter_add(Counter::EventsDropped, 3);
+        assert!(counter_get(Counter::EventsDropped) >= before + 3);
+    }
+
+    #[test]
+    fn gauge_round_trips_f64() {
+        gauge_set(Gauge::PlanMaxBatch, 17.5);
+        assert_eq!(gauge_get(Gauge::PlanMaxBatch), 17.5);
+    }
+
+    #[test]
+    fn histogram_buckets_are_log2() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(1024), 11);
+        assert_eq!(bucket_of(u64::MAX), 64);
+        let before: u64 = histogram_buckets(Histogram::GroupRows).iter().map(|&(_, c)| c).sum();
+        histogram_record(Histogram::GroupRows, 6);
+        let after: u64 = histogram_buckets(Histogram::GroupRows).iter().map(|&(_, c)| c).sum();
+        assert!(after >= before + 1);
+    }
+
+    #[test]
+    fn disabled_sink_emits_nothing() {
+        // The sink defaults to disabled and only tests in tests/telemetry.rs
+        // (a separate process) enable it; span() must hand back None.
+        assert!(!enabled());
+        assert!(span("unit_test_span").is_none());
+        instant("unit_test_instant", Vec::new());
+        let evs = drain();
+        assert!(
+            evs.iter().all(|e| e.name != "unit_test_span" && e.name != "unit_test_instant"),
+            "disabled sink recorded events"
+        );
+    }
+
+    #[test]
+    fn chrome_trace_shape() {
+        let events = vec![
+            Event {
+                name: "outer",
+                kind: EventKind::Begin,
+                ts_ns: 1_000,
+                tid: 1,
+                args: vec![("layer", ArgValue::Num(0.0))],
+            },
+            Event {
+                name: "mark",
+                kind: EventKind::Instant,
+                ts_ns: 1_500,
+                tid: 1,
+                args: vec![("schedule", ArgValue::Str("chunked"))],
+            },
+            Event { name: "outer", kind: EventKind::End, ts_ns: 2_000, tid: 1, args: vec![] },
+        ];
+        let doc = chrome_trace_json(&events);
+        let parsed = Json::parse(&doc.to_string()).expect("valid JSON");
+        let evs = parsed.get("traceEvents").and_then(|v| v.as_arr()).expect("traceEvents");
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[0].get("ph").and_then(|v| v.as_str()), Some("B"));
+        assert_eq!(evs[1].get("ph").and_then(|v| v.as_str()), Some("i"));
+        assert_eq!(evs[1].get("s").and_then(|v| v.as_str()), Some("t"));
+        assert_eq!(evs[2].get("ph").and_then(|v| v.as_str()), Some("E"));
+        // ts is microseconds
+        assert_eq!(evs[0].get("ts").and_then(|v| v.as_f64()), Some(1.0));
+        let args = evs[1].get("args").expect("instant args");
+        assert_eq!(args.get("schedule").and_then(|v| v.as_str()), Some("chunked"));
+    }
+
+    #[test]
+    fn manifest_has_machine_class() {
+        let m = run_manifest_json();
+        let parsed = Json::parse(&m.to_string()).expect("valid JSON");
+        assert_eq!(
+            parsed.get("schema").and_then(|v| v.as_str()),
+            Some("deer-run-manifest-v1")
+        );
+        let class = parsed.get("machine_class").and_then(|v| v.as_str()).expect("class");
+        assert!(class.starts_with(std::env::consts::ARCH));
+        assert!(parsed.get("threads").and_then(|v| v.as_f64()).unwrap_or(0.0) >= 1.0);
+    }
+
+    #[test]
+    fn metrics_json_lists_every_metric() {
+        let m = metrics_json();
+        let parsed = Json::parse(&m.to_string()).expect("valid JSON");
+        let counters = parsed.get("counters").expect("counters");
+        for c in Counter::ALL {
+            assert!(counters.get(c.name()).is_some(), "missing counter {}", c.name());
+        }
+        let gauges = parsed.get("gauges").expect("gauges");
+        for g in Gauge::ALL {
+            assert!(gauges.get(g.name()).is_some(), "missing gauge {}", g.name());
+        }
+        let hists = parsed.get("histograms").expect("histograms");
+        for h in Histogram::ALL {
+            assert!(hists.get(h.name()).is_some(), "missing histogram {}", h.name());
+        }
+    }
+}

@@ -490,6 +490,13 @@ impl<C: CellGrad<f32>> TrainLoop<C> {
         input: &[f32],
         b: usize,
     ) -> (Vec<f32>, Option<(Vec<f32>, JacobianStructure)>, Vec<f32>) {
+        let _layer_span = crate::telemetry::span_with(
+            "layer_solve",
+            vec![
+                ("layer", crate::telemetry::ArgValue::Num(l as f64)),
+                ("rows", crate::telemetry::ArgValue::Num(b as f64)),
+            ],
+        );
         let t_len = self.data.ds.t;
         let cell = self.model.cell(l);
         let n = cell.state_dim();
@@ -778,6 +785,13 @@ impl<C: CellGrad<f32>> TrainLoop<C> {
 
     /// One optimizer step on the next shuffled minibatch.
     pub fn step(&mut self) -> StepStats {
+        let _step_span = crate::telemetry::span_with(
+            "train_step",
+            vec![(
+                "step",
+                crate::telemetry::ArgValue::Num((self.stats.steps + 1) as f64),
+            )],
+        );
         let rows = self.next_batch();
         let mb = self.grad_minibatch(&rows);
         self.opt.step(&mut self.params, &mb.grad);

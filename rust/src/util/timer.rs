@@ -87,47 +87,58 @@ pub fn fmt_secs(s: f64) -> String {
 
 /// Simple phase stopwatch for profiling (Table 5 phases: FUNCEVAL — which
 /// since the batched refactor includes the fused GTMULT rhs build — and
-/// INVLIN; the backward pass adds JACOBIAN / DUAL_SCAN / PARAM_VJP).
+/// INVLIN; the damped path adds RESIDUAL, the backward pass JACOBIAN /
+/// DUAL_SCAN / PARAM_VJP, the ODE path DISCRETIZE). Keys are the shared
+/// [`crate::telemetry::Phase`] enum — free-string labels (and their drift
+/// between forward and backward) are gone, and [`PhaseProfile::record`]
+/// doubles as the telemetry span emitter for every phase site.
 #[derive(Debug, Default, Clone)]
 pub struct PhaseProfile {
-    entries: Vec<(String, f64)>,
+    entries: Vec<(Phase, f64)>,
 }
+
+use crate::telemetry::Phase;
 
 impl PhaseProfile {
     pub fn new() -> Self {
         Self::default()
     }
-    /// Time a closure under the given phase label, accumulating.
-    pub fn record<T>(&mut self, label: &str, f: impl FnOnce() -> T) -> T {
+    /// Time a closure under the given phase, accumulating. When the
+    /// telemetry sink is enabled this also emits a span named after the
+    /// phase — one instrumentation point covers every solver phase.
+    pub fn record<T>(&mut self, phase: Phase, f: impl FnOnce() -> T) -> T {
+        let span = crate::telemetry::span(phase.label());
         let t0 = Instant::now();
         let out = f();
-        self.add(label, t0.elapsed().as_secs_f64());
+        let secs = t0.elapsed().as_secs_f64();
+        drop(span);
+        self.add(phase, secs);
         out
     }
     /// Add raw seconds to a phase.
-    pub fn add(&mut self, label: &str, secs: f64) {
-        if let Some(e) = self.entries.iter_mut().find(|(l, _)| l == label) {
+    pub fn add(&mut self, phase: Phase, secs: f64) {
+        if let Some(e) = self.entries.iter_mut().find(|(p, _)| *p == phase) {
             e.1 += secs;
         } else {
-            self.entries.push((label.to_string(), secs));
+            self.entries.push((phase, secs));
         }
     }
-    pub fn get(&self, label: &str) -> f64 {
+    pub fn get(&self, phase: Phase) -> f64 {
         self.entries
             .iter()
-            .find(|(l, _)| l == label)
+            .find(|(p, _)| *p == phase)
             .map(|(_, s)| *s)
             .unwrap_or(0.0)
     }
-    pub fn entries(&self) -> &[(String, f64)] {
+    pub fn entries(&self) -> &[(Phase, f64)] {
         &self.entries
     }
     pub fn total(&self) -> f64 {
         self.entries.iter().map(|(_, s)| s).sum()
     }
     pub fn merge(&mut self, other: &PhaseProfile) {
-        for (l, s) in &other.entries {
-            self.add(l, *s);
+        for (p, s) in &other.entries {
+            self.add(*p, *s);
         }
     }
 }
@@ -158,10 +169,10 @@ mod tests {
     #[test]
     fn phase_profile_accumulates() {
         let mut p = PhaseProfile::new();
-        p.add("FUNCEVAL", 0.5);
-        p.add("FUNCEVAL", 0.25);
-        p.add("INVLIN", 1.0);
-        assert!((p.get("FUNCEVAL") - 0.75).abs() < 1e-12);
+        p.add(Phase::FuncEval, 0.5);
+        p.add(Phase::FuncEval, 0.25);
+        p.add(Phase::Invlin, 1.0);
+        assert!((p.get(Phase::FuncEval) - 0.75).abs() < 1e-12);
         assert!((p.total() - 1.75).abs() < 1e-12);
     }
 

@@ -1,0 +1,205 @@
+//! Telemetry sink integration tests — the pieces that need a process of
+//! their own (they toggle the global `set_enabled` switch and drain the
+//! global sink, which would race with the library's unit tests if run in
+//! the same binary):
+//!
+//! 1. concurrent span emission under a real multi-threaded scan workload
+//!    stays well-formed (every Begin has its End, per thread, properly
+//!    nested);
+//! 2. the disabled sink costs nothing measurable on the scan hot path;
+//! 3. telemetry on/off never perturbs solver numerics — bitwise-identical
+//!    trajectories.
+//!
+//! Tests in THIS file still share the process, so a `Mutex` serializes them
+//! and an RAII guard restores the disabled state even on panic.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use deer::cells::Gru;
+use deer::deer::newton::{deer_rnn, DeerConfig, JacobianMode};
+use deer::scan::{par_diag_scan_apply_ws, seq_diag_scan_apply, ScanWorkspace};
+use deer::telemetry::{self, EventKind};
+use deer::util::rng::Rng;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+/// Restores the quiescent state (sink disabled, buffer drained) when a test
+/// body exits — including by panic, so one failure can't poison the rest.
+struct SinkGuard;
+
+impl Drop for SinkGuard {
+    fn drop(&mut self) {
+        telemetry::set_enabled(false);
+        let _ = telemetry::drain();
+    }
+}
+
+fn random_diag_system(n: usize, len: usize, seed: u64) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let mut a = vec![0.0f64; len * n];
+    let mut b = vec![0.0f64; len * n];
+    rng.fill_normal(&mut a, 0.4);
+    rng.fill_normal(&mut b, 1.0);
+    (a, b, vec![0.0f64; n])
+}
+
+/// Satellite 4a: spans emitted from many worker threads around genuinely
+/// parallel scan work drain into a well-formed stream — per (thread, name)
+/// the Begin/End events pair up, and per thread they nest like a stack.
+#[test]
+fn concurrent_span_emission_stays_balanced() {
+    let _serial = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _restore = SinkGuard;
+    telemetry::set_enabled(true);
+    let _ = telemetry::drain(); // start from an empty sink
+
+    const WORKERS: usize = 4;
+    const REPS: usize = 8;
+    let n = 8usize;
+    let len = 2048usize;
+    std::thread::scope(|scope| {
+        for w in 0..WORKERS {
+            scope.spawn(move || {
+                let (a, b, y0) = random_diag_system(n, len, 0x5EED + w as u64);
+                let mut out = vec![0.0f64; len * n];
+                let mut ws = ScanWorkspace::new();
+                for _ in 0..REPS {
+                    let _outer = telemetry::span("test_worker");
+                    {
+                        let _inner = telemetry::span_with(
+                            "test_scan",
+                            vec![("len", telemetry::ArgValue::Num(len as f64))],
+                        );
+                        par_diag_scan_apply_ws(&a, &b, &y0, &mut out, n, len, 2, &mut ws);
+                    }
+                }
+                assert!(out.iter().all(|v| v.is_finite()));
+            });
+        }
+    }); // scope end: every worker's thread-local buffer has flushed
+
+    let events = telemetry::drain();
+    let test_spans = events
+        .iter()
+        .filter(|e| e.name == "test_worker" || e.name == "test_scan")
+        .count();
+    assert_eq!(
+        test_spans,
+        WORKERS * REPS * 2 * 2,
+        "every worker span must reach the sink exactly once"
+    );
+
+    // Per-thread stack discipline over the span events (instants — e.g. the
+    // scan_schedule decisions the workload also emits — don't nest).
+    let mut tids: Vec<u64> = events.iter().map(|e| e.tid).collect();
+    tids.sort_unstable();
+    tids.dedup();
+    for tid in tids {
+        let mut stack: Vec<&'static str> = Vec::new();
+        for e in events.iter().filter(|e| e.tid == tid) {
+            match e.kind {
+                EventKind::Begin => stack.push(e.name),
+                EventKind::End => {
+                    let open = stack.pop();
+                    assert_eq!(
+                        open,
+                        Some(e.name),
+                        "tid {tid}: End({}) closes {open:?}",
+                        e.name
+                    );
+                }
+                EventKind::Instant => {}
+            }
+        }
+        assert!(stack.is_empty(), "tid {tid}: unclosed spans {stack:?}");
+    }
+}
+
+/// Satellite 4b: with the sink disabled, the instrumented dispatch wrapper
+/// (schedule chooser + counters + the `enabled()` fast-path check) must cost
+/// nothing measurable relative to calling the raw sequential kernel — the
+/// "strictly zero-cost when disabled" contract, with slack for timer noise.
+///
+/// Timing on shared CI is noisy, so: min-of-many-reps per arm, a generous
+/// 1.5× bound, and a few retries before declaring failure.
+#[test]
+fn disabled_sink_scan_overhead_is_negligible() {
+    let _serial = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _restore = SinkGuard;
+    telemetry::set_enabled(false);
+
+    let n = 8usize;
+    let len = 8192usize;
+    let (a, b, y0) = random_diag_system(n, len, 0xD15AB1ED);
+    let mut out = vec![0.0f64; len * n];
+    let mut ws = ScanWorkspace::new();
+
+    let min_ns = |f: &mut dyn FnMut()| -> f64 {
+        let mut best = f64::INFINITY;
+        for _ in 0..40 {
+            let t0 = Instant::now();
+            f();
+            best = best.min(t0.elapsed().as_secs_f64() * 1e9);
+        }
+        best
+    };
+
+    let mut last = (0.0, 0.0);
+    for _attempt in 0..5 {
+        // threads = 1 routes the dispatcher straight onto the sequential
+        // kernel, so the arms do identical numeric work and differ only by
+        // the telemetry wrapper.
+        let instrumented = min_ns(&mut || {
+            par_diag_scan_apply_ws(&a, &b, &y0, &mut out, n, len, 1, &mut ws);
+        });
+        let raw = min_ns(&mut || {
+            seq_diag_scan_apply(&a, &b, &y0, &mut out, n, len);
+        });
+        last = (instrumented, raw);
+        if instrumented <= 1.5 * raw {
+            return;
+        }
+    }
+    panic!(
+        "disabled-telemetry dispatch overhead: {:.0}ns vs raw {:.0}ns (> 1.5x)",
+        last.0, last.1
+    );
+}
+
+/// Tentpole contract: telemetry NEVER perturbs numerics. The same solve run
+/// with the sink disabled and enabled must produce bitwise-identical
+/// trajectories and identical iteration counts.
+#[test]
+fn solver_output_bitwise_identical_with_sink_on_and_off() {
+    let _serial = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _restore = SinkGuard;
+
+    let (n, m, t_len) = (6usize, 3usize, 512usize);
+    let mut rng = Rng::new(0xB17E5);
+    let cell = Gru::<f32>::new(n, m, &mut rng);
+    let mut xs = vec![0.0f32; t_len * m];
+    rng.fill_normal(&mut xs, 1.0);
+    let h0 = vec![0.0f32; n];
+    let cfg = DeerConfig::<f32> {
+        jacobian_mode: JacobianMode::DiagonalApprox,
+        max_iter: 100,
+        ..Default::default()
+    };
+
+    telemetry::set_enabled(false);
+    let quiet = deer_rnn(&cell, &h0, &xs, None, &cfg);
+
+    telemetry::set_enabled(true);
+    let _ = telemetry::drain();
+    let traced = deer_rnn(&cell, &h0, &xs, None, &cfg);
+    let events = telemetry::drain();
+
+    assert_eq!(quiet.iterations, traced.iterations, "iteration counts differ");
+    assert_eq!(quiet.converged, traced.converged);
+    assert_eq!(quiet.ys, traced.ys, "telemetry perturbed solver output");
+    assert!(
+        events.iter().any(|e| e.name == "newton_sweep"),
+        "traced solve must actually emit newton_sweep spans"
+    );
+}

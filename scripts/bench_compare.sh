@@ -37,13 +37,15 @@ DEER_BENCH_FAST=1 cargo run --release --bin deer -- \
     bench --exp elk --elk-out "$FRESH_DIR/BENCH_elk.json" --results results/compare
 DEER_BENCH_FAST=1 cargo run --release --bin deer -- \
     bench --exp simd --simd-out "$FRESH_DIR/BENCH_simd.json" --results results/compare
+DEER_BENCH_FAST=1 cargo run --release --bin deer -- \
+    bench --exp calib --calib-out "$FRESH_DIR/BENCH_calib.json" --results results/compare
 
 python3 - "$ROOT" "$FRESH_DIR" "$THRESHOLD" <<'EOF'
 import json, os, shutil, subprocess, sys
 
 root, fresh_dir, threshold = sys.argv[1], sys.argv[2], float(sys.argv[3])
 NAMES = ("BENCH_scan.json", "BENCH_batch.json", "BENCH_train.json", "BENCH_block.json",
-         "BENCH_elk.json", "BENCH_simd.json")
+         "BENCH_elk.json", "BENCH_simd.json", "BENCH_calib.json")
 # metric fields treated as ns/step costs (lower is better)
 COST_FIELDS = (
     "dense_ns_per_step", "diag_ns_per_step",
@@ -86,6 +88,10 @@ for name in NAMES:
         print(f"{name}: no baseline — seeding the repo root (commit to pin)")
         with open(os.path.join(root, name), "w") as f:
             json.dump(fresh, f, indent=1)
+        manifest = name[:-len(".json")] + ".manifest.json"
+        fresh_manifest = os.path.join(fresh_dir, manifest)
+        if os.path.exists(fresh_manifest):
+            shutil.copyfile(fresh_manifest, os.path.join(root, manifest))
         continue
     kind = "pinned" if git_tracked(name) and base_path == os.path.join(root, name) else "run-over-run"
     with open(base_path) as f:
@@ -233,6 +239,62 @@ if os.path.exists(simd_path):
     if gated == 0 and enforce:
         failures.append("BENCH_simd.json: no diagonal n >= 16 point to gate on")
 
+# Calibration gate: the simulator's per-phase cost model must not DRIFT away
+# from measurement. Armed only once BENCH_calib.json is git-tracked (pinned
+# on the CI machine class) — absolute model error is machine-dependent and
+# large on a noisy 1-core runner, so the gate compares each point's relative
+# error against its pinned value with generous slack (fail only beyond
+# max(1.5x, +0.5 absolute)). Crossover probes report the chooser's pinned
+# decision vs the measured winner; a probe that was drift-free at pin time
+# turning drifted is a failure (the chooser's crossover constants went
+# stale), an always-drifted probe stays advisory.
+calib_path = os.path.join(fresh_dir, "BENCH_calib.json")
+if os.path.exists(calib_path):
+    enforce = git_tracked("BENCH_calib.json")
+    base_path = baseline_path("BENCH_calib.json")
+    with open(calib_path) as f:
+        doc = json.load(f)
+    base = None
+    if base_path is not None:
+        with open(base_path) as f:
+            base = json.load(f)
+    def calib_key(p):
+        return (p.get("structure"), p.get("n"), p.get("t"), p.get("threads"))
+    base_pts = {calib_key(p): p for p in (base or {}).get("points", [])}
+    for p in doc.get("points", []):
+        b = base_pts.get(calib_key(p))
+        for field in ("funceval_rel_err", "invlin_rel_err"):
+            cur = p[field]
+            if b is None or field not in b:
+                print(f"calib {p['structure']} n={p['n']} T={p['t']} th={p['threads']} "
+                      f"{field}: {cur:.2f} (no baseline, advisory)")
+                continue
+            bound = max(1.5 * b[field], b[field] + 0.5)
+            bad = cur > bound
+            tag = "REGRESSION" if bad and enforce else ("drift (advisory)" if bad else "ok")
+            print(f"calib {p['structure']} n={p['n']} T={p['t']} th={p['threads']} "
+                  f"{field}: {b[field]:.2f} -> {cur:.2f} (bound {bound:.2f}) {tag}")
+            if bad and enforce:
+                failures.append(
+                    f"BENCH_calib.json {p['structure']} n={p['n']} T={p['t']} "
+                    f"th={p['threads']} {field}: {cur:.2f} > {bound:.2f} — "
+                    f"cost model drifted from measurement")
+    base_probes = {(q.get("len"), q.get("threads"), q.get("n")): q
+                   for q in (base or {}).get("crossover_probes", [])}
+    for q in doc.get("crossover_probes", []):
+        bq = base_probes.get((q.get("len"), q.get("threads"), q.get("n")))
+        newly_drifted = bool(q["drift"]) and bq is not None and not bq.get("drift")
+        tag = ("REGRESSION" if newly_drifted and enforce
+               else ("drift (advisory)" if q["drift"] else "ok"))
+        print(f"crossover T={q['len']} th={q['threads']} n={q['n']}: chose {q['chosen']}, "
+              f"measured winner {q['measured_winner']} "
+              f"(seq {q['seq_ns']:.0f} ns vs cr {q['cr_ns']:.0f} ns) {tag}")
+        if newly_drifted and enforce:
+            failures.append(
+                f"BENCH_calib.json crossover T={q['len']} th={q['threads']}: "
+                f"choose_scan_schedule picked {q['chosen']} but {q['measured_winner']} "
+                f"now wins by >= 1.25x — crossover constants went stale")
+
 print()
 if failures:
     print(f"FAIL: {len(failures)} regression(s) beyond {threshold}%:")
@@ -243,12 +305,18 @@ print(f"PASS: {compared} metric(s) within {threshold}% of the baseline")
 
 # Advance the run-over-run trajectory: after a passing gate, refresh the
 # UNTRACKED repo-root copies so CI's upload step carries this run's JSONs
-# forward. Git-tracked (maintainer-pinned) baselines are never touched, so
+# forward — together with their sibling run manifests, which record the
+# machine class scripts/pin_baselines.sh checks at promotion time.
+# Git-tracked (maintainer-pinned) baselines are never touched, so
 # committed numbers stay the comparison anchor and `git status` stays clean
 # for developers who pinned them.
 for name in NAMES:
     fresh_path = os.path.join(fresh_dir, name)
     if os.path.exists(fresh_path) and not git_tracked(name):
         shutil.copyfile(fresh_path, os.path.join(root, name))
+        manifest = name[:-len(".json")] + ".manifest.json"
+        fresh_manifest = os.path.join(fresh_dir, manifest)
+        if os.path.exists(fresh_manifest) and not git_tracked(manifest):
+            shutil.copyfile(fresh_manifest, os.path.join(root, manifest))
         print(f"{name}: run-over-run baseline advanced to this run's numbers")
 EOF

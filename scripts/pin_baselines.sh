@@ -6,8 +6,9 @@
 # copy or restored CI artifact under .bench-baselines/ (run-over-run).
 # Run-over-run tracking bounds each step at the threshold but can drift over
 # many runs; pinning stops that. This script does the promotion: it copies
-# the chosen source's BENCH_*.json files to the repo root and `git add`s
-# them, so the next commit freezes the perf trajectory anchor.
+# the chosen source's BENCH_*.json files (and their sibling
+# BENCH_*.manifest.json run manifests) to the repo root and `git add`s them,
+# so the next commit freezes the perf trajectory anchor.
 #
 # Usage: scripts/pin_baselines.sh [source-dir]
 #
@@ -16,8 +17,14 @@
 #                or downloaded manually from the Actions run page). Pass `.`
 #                to pin the repo-root run-over-run copies instead.
 #
-# IMPORTANT: pin numbers measured on the CI machine class (the artifact),
-# not a developer laptop — the gates compare CI runs against this anchor.
+# Machine-class guard: every BENCH_*.json ships with a
+# BENCH_*.manifest.json recording machine_class = "<arch>/<cpu model>"
+# (threads excluded — see rust/src/telemetry). Numbers measured on one
+# machine class are meaningless as a gate anchor for another, so this
+# script REFUSES to pin a baseline whose manifest class disagrees with the
+# already-pinned anchors (or, within one run, with the other sources).
+# Override with PIN_ALLOW_MACHINE_MISMATCH=1 when deliberately re-anchoring
+# onto a new machine class.
 set -euo pipefail
 
 ROOT="$(cd "$(dirname "$0")/.." && pwd)"
@@ -30,19 +37,80 @@ if [ ! -d "$SRC" ]; then
     exit 1
 fi
 
+manifest_class() {
+    # machine_class from a run-manifest JSON ("" if unreadable)
+    python3 -c 'import json,sys
+try:
+    print(json.load(open(sys.argv[1])).get("machine_class", ""))
+except Exception:
+    print("")' "$1"
+}
+
+# Anchor class: the machine class of the already-pinned manifests (the class
+# the committed gate numbers were measured on). Empty when nothing is pinned
+# yet — the first source then establishes it.
+ANCHOR=""
+ANCHOR_FROM=""
+for m in "$ROOT"/BENCH_*.manifest.json; do
+    [ -e "$m" ] || continue
+    if git -C "$ROOT" ls-files --error-unmatch "$(basename "$m")" >/dev/null 2>&1; then
+        c="$(manifest_class "$m")"
+        if [ -n "$c" ]; then
+            ANCHOR="$c"
+            ANCHOR_FROM="$(basename "$m")"
+            break
+        fi
+    fi
+done
+
 shopt -s nullglob
 pinned=0
 for src in "$SRC"/BENCH_*.json; do
     name="$(basename "$src")"
+    case "$name" in *.manifest.json) continue ;; esac
     # refuse to silently change an already-pinned anchor — that needs an
     # explicit `git rm` first, so the history records the re-anchoring
     if git -C "$ROOT" ls-files --error-unmatch "$name" >/dev/null 2>&1; then
         echo "skip $name: already pinned (git rm it first to re-anchor)"
         continue
     fi
+
+    src_manifest="${src%.json}.manifest.json"
+    if [ -e "$src_manifest" ]; then
+        class="$(manifest_class "$src_manifest")"
+        if [ -z "$ANCHOR" ] && [ -n "$class" ]; then
+            ANCHOR="$class"
+            ANCHOR_FROM="$(basename "$src_manifest")"
+        fi
+        if [ -n "$class" ] && [ "$class" != "$ANCHOR" ]; then
+            if [ "${PIN_ALLOW_MACHINE_MISMATCH:-0}" = "1" ]; then
+                echo "warning: $name machine class '$class' != anchor '$ANCHOR' ($ANCHOR_FROM) — pinned anyway (override)"
+            else
+                echo "error: refusing to pin $name: its manifest records machine class" >&2
+                echo "  '$class'" >&2
+                echo "but the anchor ($ANCHOR_FROM) records" >&2
+                echo "  '$ANCHOR'" >&2
+                echo "Gate numbers only compare within one machine class. Re-run on the right" >&2
+                echo "machine, or set PIN_ALLOW_MACHINE_MISMATCH=1 to re-anchor deliberately." >&2
+                exit 1
+            fi
+        fi
+    else
+        echo "warning: $name has no sibling $(basename "$src_manifest") — pinning without a machine-class record"
+    fi
+
     cp "$src" "$ROOT/$name"
-    git -C "$ROOT" add "$name"
-    echo "pinned $name (staged for commit)"
+    # -f: the repo-root BENCH_*.json names are gitignored as run-over-run
+    # working files; pinning is the one deliberate act of tracking them
+    git -C "$ROOT" add -f "$name"
+    if [ -e "$src_manifest" ]; then
+        mname="$(basename "$src_manifest")"
+        cp "$src_manifest" "$ROOT/$mname"
+        git -C "$ROOT" add -f "$mname"
+        echo "pinned $name + $mname (staged for commit)"
+    else
+        echo "pinned $name (staged for commit)"
+    fi
     pinned=$((pinned + 1))
 done
 

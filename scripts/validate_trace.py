@@ -1,0 +1,122 @@
+#!/usr/bin/env python3
+"""Schema-validate a Chrome trace-event JSON file emitted by `deer --trace`.
+
+Checks, in order:
+  1. the file is valid JSON with a top-level `traceEvents` array;
+  2. every event has the required fields (name, ph, ts, pid, tid) with
+     `ph` in {B, E, i} and instants carrying `"s": "t"`;
+  3. every event name is one the instrumentation actually emits (catches
+     silent label drift between the emitters and this contract);
+  4. per tid, B/E events pair up like a stack (no orphan Begin/End, no
+     cross-thread closes);
+  5. optional: every name passed as an extra CLI argument is present at
+     least once (so CI can insist a traced ELK train shows train_step,
+     newton_sweep, lm_accept/lm_reject, ...).
+
+Usage:
+  python3 scripts/validate_trace.py TRACE.json [required-name ...]
+
+Exit 0 on success, 1 with a diagnostic on the first violation.
+"""
+
+import json
+import sys
+
+# Every span/instant name the rust instrumentation can emit. Keep in sync
+# with rust/src/telemetry/mod.rs and its call sites (newton.rs, exec.rs,
+# loop.rs, scan/mod.rs, util/timer.rs). Test-only span names used by
+# rust/tests/telemetry.rs are deliberately NOT listed.
+KNOWN_NAMES = {
+    # span hierarchy, outermost first
+    "train_step",
+    "layer_solve",
+    "batched_solve",
+    "newton_sweep",
+    # per-phase timer spans (telemetry::Phase::label)
+    "FUNCEVAL",
+    "INVLIN",
+    "RESIDUAL",
+    "JACOBIAN",
+    "DUAL_SCAN",
+    "PARAM_VJP",
+    "DISCRETIZE",
+    # instants
+    "scan_schedule",
+    "lm_accept",
+    "lm_reject",
+    "divergence",
+}
+
+REQUIRED_FIELDS = ("name", "ph", "ts", "pid", "tid")
+
+
+def fail(msg):
+    print(f"validate_trace: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main():
+    if len(sys.argv) < 2:
+        fail("usage: validate_trace.py TRACE.json [required-name ...]")
+    path = sys.argv[1]
+    required = set(sys.argv[2:])
+    unknown_required = required - KNOWN_NAMES
+    if unknown_required:
+        fail(f"required names not in the known set: {sorted(unknown_required)}")
+
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"{path}: {e}")
+
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        fail(f"{path}: top level must be an object with a traceEvents array")
+    events = doc["traceEvents"]
+    if not isinstance(events, list):
+        fail(f"{path}: traceEvents is not an array")
+    if not events:
+        fail(f"{path}: traceEvents is empty — tracing produced nothing")
+
+    stacks = {}  # tid -> [open span names]
+    seen = set()
+    for i, e in enumerate(events):
+        for field in REQUIRED_FIELDS:
+            if field not in e:
+                fail(f"event {i}: missing field {field!r}: {e}")
+        name, ph, tid = e["name"], e["ph"], e["tid"]
+        if ph not in ("B", "E", "i"):
+            fail(f"event {i} ({name}): unexpected ph {ph!r}")
+        if ph == "i" and e.get("s") != "t":
+            fail(f"event {i} ({name}): instant without thread scope 's': 't'")
+        if name not in KNOWN_NAMES:
+            fail(f"event {i}: unknown name {name!r} — emitter/contract drift")
+        seen.add(name)
+        stack = stacks.setdefault(tid, [])
+        if ph == "B":
+            stack.append(name)
+        elif ph == "E":
+            if not stack:
+                fail(f"event {i}: End({name}) on tid {tid} with no open span")
+            top = stack.pop()
+            if top != name:
+                fail(f"event {i}: End({name}) closes open span {top!r} on tid {tid}")
+
+    for tid, stack in stacks.items():
+        if stack:
+            fail(f"tid {tid}: unclosed spans at end of trace: {stack}")
+
+    missing = required - seen
+    if missing:
+        fail(f"required names absent from trace: {sorted(missing)}")
+
+    n_spans = sum(1 for e in events if e["ph"] == "B")
+    n_inst = sum(1 for e in events if e["ph"] == "i")
+    print(
+        f"validate_trace: OK: {len(events)} events ({n_spans} spans, {n_inst} instants, "
+        f"{len(stacks)} threads, names: {sorted(seen)})"
+    )
+
+
+if __name__ == "__main__":
+    main()
