@@ -26,7 +26,8 @@ use crate::coordinator::batcher::{Batch, Batcher};
 use crate::coordinator::memory::MemoryPlanner;
 use crate::coordinator::policy::{ConvergencePolicy, EvalPath};
 use crate::coordinator::warmstart::WarmStartCache;
-use crate::deer::newton::{effective_structure, DivergenceReason};
+use crate::deer::newton::{effective_structure, DivergenceReason, JacobianMode};
+use crate::deer::sharded::{shard_windows, ShardConfig, StitchMode};
 use crate::telemetry;
 
 /// One evaluation request: a sequence to run through the executor's cell.
@@ -126,6 +127,15 @@ pub struct ExecStats {
     pub scan_chunked: u64,
     /// See [`ExecStats::scan_sequential`].
     pub scan_cyclic_reduction: u64,
+    /// Sharded (windowed) solves dispatched ([`BatchExecutor::shards`] > 1).
+    pub shard_solves: u64,
+    /// Sequence-windows solved across all sharded dispatches (a sharded
+    /// solve of B sequences at effective shard count S adds B·S).
+    pub shard_windows: u64,
+    /// Outer boundary-stitch iterations across all sharded dispatches
+    /// (exact stitching counts 1 per solve — its single outer Newton
+    /// iteration IS the stitch).
+    pub stitch_iters: u64,
 }
 
 /// The coordinator's batched evaluation engine: batcher + warm-start cache +
@@ -159,6 +169,23 @@ pub struct BatchExecutor<'c, C: Cell<f32>> {
     /// stacks: the stack's MAXIMUM width). 0 (the default) means "same as
     /// this executor's cell".
     pub plan_peer_width: usize,
+    /// Sequence-length shard count S: > 1 dispatches every flushed group
+    /// through the windowed solve ([`crate::deer::deer_rnn_sharded`], S
+    /// windows of ⌈T/S⌉ steps) planned by
+    /// [`MemoryPlanner::max_deer_batch_sharded`] — the path for T where
+    /// the unsharded working set cannot fit. 1 (the default) is the plain
+    /// fused dispatch.
+    pub shards: usize,
+    /// Boundary-stitching mode for sharded dispatch. A damped (ELK) or
+    /// Hybrid policy forces penalty stitching at dispatch time — exact
+    /// stitching's folded boundary constraint owns its own sweep loop and
+    /// supports neither.
+    pub stitch: StitchMode,
+    /// Per-sample window boundary states (`[S_eff, n]` flat) from previous
+    /// sharded solves — warm-starts the penalty path's free initial
+    /// states, collapsing the outer stitch loop to its confirming pass on
+    /// revisited samples.
+    pub boundary_cache: WarmStartCache,
 }
 
 impl<'c, C: Cell<f32>> BatchExecutor<'c, C> {
@@ -184,6 +211,9 @@ impl<'c, C: Cell<f32>> BatchExecutor<'c, C> {
             layer: 0,
             plan_layers: 1,
             plan_peer_width: 0,
+            shards: 1,
+            stitch: StitchMode::Exact,
+            boundary_cache: WarmStartCache::new(cache_budget_bytes),
         }
     }
 
@@ -214,6 +244,9 @@ impl<'c, C: Cell<f32>> BatchExecutor<'c, C> {
     /// Run one flushed group as a single fused batched solve (split only if
     /// the memory planner says the group exceeds the device budget).
     fn run_group(&mut self, group: Batch<EvalRequest>) -> Vec<EvalReply> {
+        if self.shards > 1 {
+            return self.run_group_sharded(group);
+        }
         let n = self.cell.state_dim();
         let m = self.cell.input_dim();
         let t_len = self.t_len;
@@ -222,7 +255,10 @@ impl<'c, C: Cell<f32>> BatchExecutor<'c, C> {
         // Stacked plan: budget the other layers' retained trajectories —
         // and their retained forward Jacobians when this trainer keeps
         // them for the backward pass (keep_jacobians ⇒ every layer's slab
-        // stays alive until its backward leg consumes it).
+        // stays alive until its backward leg consumes it). The retained
+        // slabs are resident at the FULL group size regardless of how the
+        // active solve is sub-batched, so the planner subtracts them at
+        // group scale before sizing.
         let peer_n = if self.plan_peer_width == 0 { n } else { self.plan_peer_width };
         let mut max_b = self
             .planner
@@ -233,6 +269,7 @@ impl<'c, C: Cell<f32>> BatchExecutor<'c, C> {
                 structure,
                 self.plan_layers.max(1),
                 self.keep_jacobians,
+                group.requests.len(),
             )
             .max(1);
         // ELK keeps one extra trajectory slab per sequence alive — cap the
@@ -335,6 +372,150 @@ impl<'c, C: Cell<f32>> BatchExecutor<'c, C> {
                     err_trace: res.err_traces[s].clone(),
                     lambda_trace: res.lambda_traces[s].clone(),
                     jac_structure: res.jac_structure,
+                });
+            }
+        }
+        replies
+    }
+
+    /// Sharded twin of [`BatchExecutor::run_group`]: the flushed group runs
+    /// through the windowed solve, sub-batched by
+    /// [`MemoryPlanner::max_deer_batch_sharded`] (which admits lengths the
+    /// unsharded plan rejects outright). Warm starts come from BOTH caches:
+    /// the trajectory cache seeds the initial guess, the boundary cache
+    /// seeds the penalty path's free window initial states. A damped (ELK)
+    /// or Hybrid policy is routed to penalty stitching regardless of the
+    /// configured [`BatchExecutor::stitch`] — exact stitching supports
+    /// neither.
+    fn run_group_sharded(&mut self, group: Batch<EvalRequest>) -> Vec<EvalReply> {
+        let n = self.cell.state_dim();
+        let m = self.cell.input_dim();
+        let t_len = self.t_len;
+        let structure = effective_structure(self.cell, self.policy.jacobian_mode);
+        self.stats.layer = self.layer;
+        let (_, spans) = shard_windows(t_len, self.shards);
+        let s_eff = spans.len();
+        let stitch = if self.policy.damping_lambda0.is_some()
+            || self.policy.jacobian_mode == JacobianMode::Hybrid
+        {
+            StitchMode::Penalty
+        } else {
+            self.stitch
+        };
+        let max_b = self
+            .planner
+            .max_deer_batch_sharded(n, t_len, structure, self.shards)
+            .max(1);
+        let scfg = ShardConfig {
+            shards: self.shards,
+            stitch,
+            // cap penalty window-rows so at most max_b sequences' worth of
+            // window slabs are resident per fused sub-solve
+            group: Some((max_b * s_eff).max(1)),
+            ..Default::default()
+        };
+        let reqs = group.requests;
+        if reqs.len() > max_b {
+            self.stats.groups_split += 1;
+            telemetry::counter_add(telemetry::Counter::GroupsSplit, 1);
+        }
+        let mut replies = Vec::with_capacity(reqs.len());
+        for sub in reqs.chunks(max_b) {
+            let b = sub.len();
+            let mut h0s = vec![0.0f32; b * n];
+            let mut xs = vec![0.0f32; b * t_len * m];
+            let mut guess = vec![0.0f32; b * t_len * n];
+            let mut bounds = vec![0.0f32; b * s_eff * n];
+            let mut warm = vec![false; b];
+            let mut any_warm = false;
+            let mut any_bound = false;
+            for (s, req) in sub.iter().enumerate() {
+                h0s[s * n..(s + 1) * n].copy_from_slice(&req.payload.h0);
+                xs[s * t_len * m..(s + 1) * t_len * m].copy_from_slice(&req.payload.xs);
+                if let Some(traj) = self.cache.get(req.payload.sample_id) {
+                    if traj.len() == t_len * n {
+                        guess[s * t_len * n..(s + 1) * t_len * n].copy_from_slice(traj);
+                        warm[s] = true;
+                        any_warm = true;
+                    }
+                }
+                if let Some(bd) = self.boundary_cache.get(req.payload.sample_id) {
+                    if bd.len() == s_eff * n {
+                        bounds[s * s_eff * n..(s + 1) * s_eff * n].copy_from_slice(bd);
+                        any_bound = true;
+                    }
+                }
+            }
+            let init = if any_warm { Some(&guess[..]) } else { None };
+            let boundary_init = if any_bound { Some(&bounds[..]) } else { None };
+            telemetry::gauge_set(telemetry::Gauge::SolveThreads, self.threads as f64);
+            telemetry::gauge_set(telemetry::Gauge::PlanMaxBatch, max_b as f64);
+            telemetry::histogram_record(telemetry::Histogram::GroupRows, b as u64);
+            let span = telemetry::span_with(
+                "batched_solve",
+                vec![
+                    ("rows", telemetry::ArgValue::Num(b as f64)),
+                    ("layer", telemetry::ArgValue::Num(self.layer as f64)),
+                    ("shards", telemetry::ArgValue::Num(s_eff as f64)),
+                ],
+            );
+            let (seq0, ch0, cr0) = telemetry::scan_schedule_snapshot();
+            let (paths, res) = self.policy.evaluate_batch_sharded(
+                self.cell,
+                &h0s,
+                &xs,
+                init,
+                boundary_init,
+                self.threads,
+                b,
+                &scfg,
+            );
+            let (seq1, ch1, cr1) = telemetry::scan_schedule_snapshot();
+            drop(span);
+            self.stats.scan_sequential += seq1.saturating_sub(seq0);
+            self.stats.scan_chunked += ch1.saturating_sub(ch0);
+            self.stats.scan_cyclic_reduction += cr1.saturating_sub(cr0);
+            self.stats.batched_solves += 1;
+            self.stats.sequences_solved += b as u64;
+            self.stats.shard_solves += 1;
+            self.stats.shard_windows += (b * res.shards) as u64;
+            self.stats.stitch_iters += res.stitch_iters as u64;
+            telemetry::counter_add(telemetry::Counter::BatchedSolves, 1);
+            telemetry::counter_add(telemetry::Counter::SequencesSolved, b as u64);
+            for d in &res.divergence {
+                match d {
+                    Some(DivergenceReason::NonFinite) => self.stats.diverged_nonfinite += 1,
+                    Some(DivergenceReason::LambdaExhausted) => {
+                        self.stats.diverged_lambda_exhausted += 1
+                    }
+                    Some(DivergenceReason::MaxIters) => self.stats.diverged_max_iters += 1,
+                    Some(DivergenceReason::ErrorGrowth) => self.stats.diverged_error_growth += 1,
+                    None => {}
+                }
+            }
+            for (s, req) in sub.iter().enumerate() {
+                let traj = res.ys[s * t_len * n..(s + 1) * t_len * n].to_vec();
+                self.cache.put(req.payload.sample_id, traj.clone());
+                self.boundary_cache.put(
+                    req.payload.sample_id,
+                    res.boundaries[s * s_eff * n..(s + 1) * s_eff * n].to_vec(),
+                );
+                // Sharded solves never retain Jacobians: they only ever
+                // exist at window granularity (the whole memory point) and
+                // the sharded backward recomputes them the same way.
+                replies.push(EvalReply {
+                    sample_id: req.payload.sample_id,
+                    ys: traj,
+                    iterations: res.iterations[s],
+                    converged: res.converged[s],
+                    path: paths[s],
+                    warm_started: warm[s],
+                    jacobians: None,
+                    divergence: res.divergence[s],
+                    lambda: 0.0,
+                    err_trace: res.err_traces[s].clone(),
+                    lambda_trace: Vec::new(),
+                    jac_structure: structure,
                 });
             }
         }
@@ -625,9 +806,9 @@ mod tests {
         );
         ex.layer = 1;
         ex.plan_layers = 4;
-        // stacked plan: per-sequence cost grows by 3 retained T·n slabs
-        // (keep_jacobians is off, so no retained jac slabs; peer width
-        // defaults to this cell's n)
+        // stacked plan: the full group's 3 retained T·n slabs per sequence
+        // come off the budget before sizing (keep_jacobians is off, so no
+        // retained jac slabs; peer width defaults to this cell's n)
         let stacked_max = ex.planner.max_deer_batch_stacked(
             n,
             n,
@@ -635,6 +816,7 @@ mod tests {
             crate::cells::JacobianStructure::Dense,
             4,
             false,
+            b,
         );
         assert!(
             stacked_max <= ex.planner.max_deer_batch(n, t_len),
@@ -790,6 +972,74 @@ mod tests {
                 .fold(0.0f32, f32::max);
             assert!(err < 1e-3, "sample {}: {err}", reply.sample_id);
         }
+    }
+
+    /// Shard-aware dispatch: `shards > 1` routes the flushed group through
+    /// the windowed solve — bitwise the unsharded replies under exact
+    /// stitching at threads = 1 — populates the shard counters, and a
+    /// second round warm-starts boundaries from the boundary cache.
+    #[test]
+    fn sharded_dispatch_matches_unsharded_and_counts() {
+        let mut rng = Rng::new(11);
+        let (n, m, t_len, b) = (3usize, 3usize, 200usize, 4usize);
+        let cell: Gru<f32> = Gru::new(n, m, &mut rng);
+        let mk = || {
+            BatchExecutor::new(
+                &cell,
+                t_len,
+                b,
+                Duration::from_secs(60),
+                1 << 20,
+                16 * (1u64 << 30),
+                1,
+            )
+        };
+        let reqs = make_requests(&cell, t_len, b);
+        let mut plain_ex = mk();
+        let mut plain = Vec::new();
+        for (id, h0, xs) in &reqs {
+            let r = plain_ex.submit(*id, h0.clone(), xs.clone());
+            if !r.is_empty() {
+                plain = r;
+            }
+        }
+        let mut ex = mk();
+        ex.shards = 4;
+        let mut replies = Vec::new();
+        for (id, h0, xs) in &reqs {
+            let r = ex.submit(*id, h0.clone(), xs.clone());
+            if !r.is_empty() {
+                replies = r;
+            }
+        }
+        assert_eq!(ex.stats.shard_solves, 1);
+        assert_eq!(ex.stats.shard_windows, (b * 4) as u64);
+        assert_eq!(ex.stats.stitch_iters, 1, "exact stitching: one outer iteration");
+        assert_eq!(replies.len(), b);
+        for (reply, want) in replies.iter().zip(plain.iter()) {
+            assert!(reply.converged);
+            assert_eq!(reply.path, EvalPath::Deer);
+            assert_eq!(reply.ys, want.ys, "sample {}", reply.sample_id);
+            assert_eq!(reply.iterations, want.iterations);
+            assert!(reply.jacobians.is_none(), "sharded replies never retain Jacobians");
+        }
+        // penalty arm: boundary cache round trip cuts the stitch loop
+        let mut pen = mk();
+        pen.shards = 4;
+        pen.stitch = crate::deer::sharded::StitchMode::Penalty;
+        for (id, h0, xs) in &reqs {
+            pen.submit(*id, h0.clone(), xs.clone());
+        }
+        let cold_iters = pen.stats.stitch_iters;
+        assert!(cold_iters >= 2, "cold penalty stitch should need > 1 outer iteration");
+        for (id, h0, xs) in &reqs {
+            pen.submit(*id, h0.clone(), xs.clone());
+        }
+        let warm_iters = pen.stats.stitch_iters - cold_iters;
+        assert!(
+            warm_iters < cold_iters,
+            "boundary warm start must shorten stitching ({warm_iters} vs {cold_iters})"
+        );
     }
 
     /// Deadline-style flush drains a partial group through one fused solve.

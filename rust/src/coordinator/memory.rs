@@ -7,8 +7,8 @@
 //! DEER@B=3 vs sequential@B=70 at equal ~2.6 GB).
 
 pub use crate::simulator::{
-    deer_memory_bytes, deer_memory_bytes_elk, deer_memory_bytes_stacked,
-    deer_memory_bytes_structured,
+    deer_memory_bytes, deer_memory_bytes_elk, deer_memory_bytes_sharded,
+    deer_memory_bytes_stacked, deer_memory_bytes_structured,
 };
 use crate::cells::JacobianStructure;
 
@@ -91,8 +91,19 @@ impl MemoryPlanner {
     /// Stacked-model [`MemoryPlanner::max_deer_batch_structured`] — what a
     /// layer-tagged [`crate::coordinator::exec::BatchExecutor`] uses so an
     /// L-layer trainer's groups are split against the FULL stacked working
-    /// set (retained trajectories at the peers' width + optionally their
-    /// retained Jacobians), not just the single solve.
+    /// set, not just the single solve. `group` is the flushed group's total
+    /// row count: the retained inter-layer slabs (trajectories at the
+    /// peers' width + optionally their retained Jacobians) are resident for
+    /// EVERY sequence of the minibatch no matter how the active solve is
+    /// sub-batched, so they are subtracted from the budget at full group
+    /// size *before* dividing by the active solve's per-sequence cost.
+    /// (Dividing the whole budget by the per-sequence stacked footprint —
+    /// the pre-fix formula — admits sub-batches whose active slabs plus
+    /// the full group's retained slabs overflow the budget at
+    /// `worms-full` scale, T = 17,984, L = 2.) `layers = 1` retains
+    /// nothing and equals [`MemoryPlanner::max_deer_batch_structured`]
+    /// for any `group`.
+    #[allow(clippy::too_many_arguments)]
     pub fn max_deer_batch_stacked(
         &self,
         n: usize,
@@ -101,19 +112,15 @@ impl MemoryPlanner {
         structure: JacobianStructure,
         layers: usize,
         retain_jacobians: bool,
+        group: usize,
     ) -> usize {
-        let per = deer_memory_bytes_stacked(
-            n,
-            peer_n,
-            t_len,
-            1,
-            4,
-            structure,
-            layers,
-            retain_jacobians,
-        )
-        .max(1);
-        (self.budget_bytes / per) as usize
+        let per_layer_kept =
+            peer_n + if retain_jacobians { structure.jac_len(peer_n) } else { 0 };
+        let retained = (layers.saturating_sub(1) as u64)
+            * (group * t_len * per_layer_kept * 4) as u64;
+        let avail = self.budget_bytes.saturating_sub(retained);
+        let per = deer_memory_bytes_structured(n, t_len, 1, 4, structure).max(1);
+        (avail / per) as usize
     }
 
     /// ELK-aware [`MemoryPlanner::deer_fits_structured`]: the damped
@@ -140,6 +147,40 @@ impl MemoryPlanner {
         structure: JacobianStructure,
     ) -> usize {
         let per = deer_memory_bytes_elk(n, t_len, 1, 4, structure).max(1);
+        (self.budget_bytes / per) as usize
+    }
+
+    /// Sharded-solve [`MemoryPlanner::deer_fits_structured`]: does the
+    /// windowed solve ([`crate::deer::deer_rnn_sharded`], S shards of
+    /// W = ⌈T/S⌉ steps) fit? Only one window's Jacobian/rhs/trial scratch
+    /// is resident at a time, so configurations whose unsharded working
+    /// set overflows the budget ([`MemoryPlanner::deer_fits_structured`]
+    /// false) can still plan true — the T = 500k demo of
+    /// `deer bench --exp shard`. `shards = 1` is strictly tighter than the
+    /// unsharded check (same slabs plus the boundary states).
+    pub fn deer_fits_sharded(
+        &self,
+        n: usize,
+        t_len: usize,
+        batch: usize,
+        structure: JacobianStructure,
+        shards: usize,
+    ) -> bool {
+        deer_memory_bytes_sharded(n, t_len, batch, 4, structure, shards) <= self.budget_bytes
+    }
+
+    /// Sharded-solve [`MemoryPlanner::max_deer_batch_structured`] — the
+    /// largest sequence count whose windowed working set fits the budget;
+    /// also the row-group cap fed to
+    /// [`crate::deer::ShardConfig::group`] by shard-aware dispatch.
+    pub fn max_deer_batch_sharded(
+        &self,
+        n: usize,
+        t_len: usize,
+        structure: JacobianStructure,
+        shards: usize,
+    ) -> usize {
+        let per = deer_memory_bytes_sharded(n, t_len, 1, 4, structure, shards).max(1);
         (self.budget_bytes / per) as usize
     }
 
@@ -247,16 +288,17 @@ mod tests {
     fn stacked_planner_monotone_in_depth() {
         let p = MemoryPlanner::new(1 << 30);
         let st = JacobianStructure::Dense;
+        let g = 8; // flushed group size whose retained slabs ride along
         assert_eq!(
-            p.max_deer_batch_stacked(16, 16, 100_000, st, 1, false),
+            p.max_deer_batch_stacked(16, 16, 100_000, st, 1, false, g),
             p.max_deer_batch_structured(16, 100_000, st)
         );
         let mut prev = usize::MAX;
         for layers in 1..5usize {
-            let b = p.max_deer_batch_stacked(16, 16, 100_000, st, layers, false);
+            let b = p.max_deer_batch_stacked(16, 16, 100_000, st, layers, false, g);
             assert!(b <= prev, "depth {layers}: {b} > {prev}");
             assert!(
-                p.max_deer_batch_stacked(16, 16, 100_000, st, layers, true) <= b,
+                p.max_deer_batch_stacked(16, 16, 100_000, st, layers, true, g) <= b,
                 "retained Jacobians must not admit more sequences (depth {layers})"
             );
             prev = b;
@@ -264,14 +306,14 @@ mod tests {
         // retained dense Jacobians dominate at depth > 1: the jac-aware
         // plan must be strictly tighter than the trajectory-only one
         assert!(
-            p.max_deer_batch_stacked(16, 16, 100_000, st, 3, true)
-                < p.max_deer_batch_stacked(16, 16, 100_000, st, 3, false)
+            p.max_deer_batch_stacked(16, 16, 100_000, st, 3, true, g)
+                < p.max_deer_batch_stacked(16, 16, 100_000, st, 3, false, g)
         );
         // heterogeneous guard: a narrow active layer with a WIDE retained
         // peer must plan tighter than with a narrow one
         assert!(
-            p.max_deer_batch_stacked(8, 64, 100_000, st, 2, true)
-                < p.max_deer_batch_stacked(8, 8, 100_000, st, 2, true)
+            p.max_deer_batch_stacked(8, 64, 100_000, st, 2, true, g)
+                < p.max_deer_batch_stacked(8, 8, 100_000, st, 2, true, g)
         );
         // a budget exactly fitting B sequences at depth 1 must reject the
         // same B once 3 retained trajectory slabs ride along
@@ -279,5 +321,80 @@ mod tests {
         assert!(p.deer_fits_stacked(16, 16, 100_000, b1, st, 1, false));
         let tight = MemoryPlanner::new(deer_memory_bytes_structured(16, 100_000, b1, 4, st));
         assert!(!tight.deer_fits_stacked(16, 16, 100_000, b1, st, 4, false));
+    }
+
+    /// Regression at `worms-full` scale (T = 17,984, L = 2): the retained
+    /// inter-layer slabs are resident at the FULL flushed group size no
+    /// matter the sub-batch, so group sizing must subtract them from the
+    /// budget before dividing — the pre-fix per-sequence division admits a
+    /// sub-batch whose active slabs plus the group's retained slabs
+    /// overflow the budget.
+    #[test]
+    fn stacked_group_sizing_subtracts_full_resident_retained_slabs() {
+        let t = 17_984;
+        let n = 32;
+        let st = JacobianStructure::Dense;
+        let group = 64;
+        let per = deer_memory_bytes_structured(n, t, 1, 4, st);
+        let kept_per_seq = (t * n * 4) as u64; // one retained trajectory (L = 2)
+        let p = MemoryPlanner::new(3 * per + group as u64 * kept_per_seq);
+        let b = p.max_deer_batch_stacked(n, n, t, st, 2, false, group);
+        assert_eq!(b, 3);
+        // the planned sub-batch actually fits alongside the group's slabs
+        assert!(b as u64 * per + group as u64 * kept_per_seq <= p.budget_bytes);
+        // the pre-fix formula (budget / per-sequence stacked bytes) admits
+        // a sub-batch that overflows once the full group's retained slabs
+        // are counted
+        let naive =
+            (p.budget_bytes / deer_memory_bytes_stacked(n, n, t, 1, 4, st, 2, false)) as usize;
+        assert!(
+            naive as u64 * per + group as u64 * kept_per_seq > p.budget_bytes,
+            "naive sub-batch of {naive} rows should overflow the budget"
+        );
+        // depth 1 ignores the group entirely
+        assert_eq!(
+            p.max_deer_batch_stacked(n, n, t, st, 1, false, group),
+            p.max_deer_batch_structured(n, t, st)
+        );
+    }
+
+    /// The sharded plan's point: configurations the unsharded working set
+    /// cannot fit plan true under windowing, the footprint shrinks
+    /// monotonically with the shard count, and S = 1 stays a superset of
+    /// the unsharded slabs (never admits more than the structured plan).
+    #[test]
+    fn sharded_planner_unlocks_unfittable_lengths() {
+        let st = JacobianStructure::Dense;
+        let n = 8;
+        let t = 500_000;
+        // 64 MB: the unsharded dense working set (T·(n² + 3n)·4 ≈ 176 MB)
+        // cannot fit a single sequence; S = 16 windows do.
+        let p = MemoryPlanner::new(64 << 20);
+        assert!(!p.deer_fits_structured(n, t, 1, st));
+        assert_eq!(p.max_deer_batch_structured(n, t, st), 0);
+        assert!(p.deer_fits_sharded(n, t, 1, st, 16));
+        assert!(p.max_deer_batch_sharded(n, t, st, 16) >= 1);
+        // monotone in S
+        let mut prev = 0u64;
+        for s in [1usize, 2, 4, 8, 16, 64] {
+            let bytes = deer_memory_bytes_sharded(n, t, 1, 4, st, s);
+            if prev > 0 {
+                assert!(bytes <= prev, "S = {s}: {bytes} > {prev}");
+            }
+            prev = bytes;
+        }
+        // S = 1 is the unsharded slabs plus the trajectory/boundary terms
+        assert!(
+            p.max_deer_batch_sharded(n, 10_000, st, 1) <= p.max_deer_batch_structured(n, 10_000, st)
+        );
+        // the ISSUE gate's shape: at S = 8 the planned resident bytes are
+        // under a quarter of the unsharded working set (dense n = 8:
+        // T·8 + (T/8)·88 vs T·88 elements)
+        let sharded = deer_memory_bytes_sharded(n, t, 1, 4, st, 8);
+        let unsharded = deer_memory_bytes_structured(n, t, 1, 4, st);
+        assert!(
+            (sharded as f64) < 0.25 * unsharded as f64,
+            "sharded {sharded} vs unsharded {unsharded}"
+        );
     }
 }

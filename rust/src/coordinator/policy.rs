@@ -11,6 +11,7 @@ use crate::deer::newton::{
     deer_rnn, deer_rnn_batch, BatchDeerResult, DampingConfig, DeerConfig, DeerResult, JacobianMode,
 };
 use crate::deer::seq::seq_rnn;
+use crate::deer::sharded::{deer_rnn_sharded, ShardConfig, ShardedDeerResult};
 use crate::util::scalar::Scalar;
 
 /// Policy outcome of one evaluation.
@@ -132,6 +133,58 @@ impl ConvergencePolicy {
             for s in 0..batch {
                 if !res.converged[s] {
                     let y = seq_rnn(cell, &h0s[s * n..(s + 1) * n], &xs[s * t_len * m..(s + 1) * t_len * m]);
+                    res.ys[s * t_len * n..(s + 1) * t_len * n].copy_from_slice(&y);
+                    paths[s] = EvalPath::SequentialFallback;
+                }
+            }
+        }
+        (paths, res)
+    }
+
+    /// Sharded (windowed) batched policy evaluation — the
+    /// [`ConvergencePolicy::evaluate_batch`] twin for solves whose
+    /// unsharded working set overflows the memory plan: the group runs
+    /// through [`deer_rnn_sharded`] with `scfg.shards` windows per
+    /// sequence, then the same per-sequence sequential fallback rescues
+    /// any row the stitched solve failed on. `boundary_init` warm-starts
+    /// the penalty path's window initial states (the boundary cache's
+    /// payload; ignored under exact stitching). Exact stitching requires
+    /// an undamped, non-Hybrid policy — the sharded solver rejects those
+    /// combinations loudly; dispatchers route them to penalty stitching.
+    #[allow(clippy::too_many_arguments)]
+    pub fn evaluate_batch_sharded<S: Scalar, C: Cell<S>>(
+        &self,
+        cell: &C,
+        h0s: &[S],
+        xs: &[S],
+        guess: Option<&[S]>,
+        boundary_init: Option<&[S]>,
+        threads: usize,
+        batch: usize,
+        scfg: &ShardConfig,
+    ) -> (Vec<EvalPath>, ShardedDeerResult<S>) {
+        let mut res = deer_rnn_sharded(
+            cell,
+            h0s,
+            xs,
+            guess,
+            boundary_init,
+            &self.config::<S>(threads),
+            batch,
+            scfg,
+        );
+        let n = cell.state_dim();
+        let m = cell.input_dim();
+        let t_len = xs.len() / (batch * m);
+        let mut paths = vec![EvalPath::Deer; batch];
+        if self.fallback_sequential {
+            for s in 0..batch {
+                if !res.converged[s] {
+                    let y = seq_rnn(
+                        cell,
+                        &h0s[s * n..(s + 1) * n],
+                        &xs[s * t_len * m..(s + 1) * t_len * m],
+                    );
                     res.ys[s * t_len * n..(s + 1) * t_len * n].copy_from_slice(&y);
                     paths[s] = EvalPath::SequentialFallback;
                 }
@@ -268,6 +321,55 @@ mod tests {
                 .map(|(a, b)| (a - b).abs())
                 .fold(0.0f64, f64::max);
             assert!(err < 1e-6, "row {s}: {err}");
+        }
+    }
+
+    /// Sharded policy evaluation: exact stitching through the policy is
+    /// bitwise the unsharded batched evaluation at threads = 1; penalty
+    /// stitching lands within its documented tolerance; a straggler still
+    /// takes the per-sequence sequential fallback.
+    #[test]
+    fn sharded_policy_matches_unsharded_and_falls_back() {
+        use crate::deer::sharded::{ShardConfig, StitchMode};
+        let mut rng = Rng::new(6);
+        let (n, m, t, b) = (3usize, 2usize, 240usize, 2usize);
+        let cell: Gru<f64> = Gru::new(n, m, &mut rng);
+        let mut xs = vec![0.0; b * t * m];
+        rng.fill_normal(&mut xs, 1.0);
+        let h0s = vec![0.0; b * n];
+        let pol = ConvergencePolicy::default();
+        let (paths0, base) = pol.evaluate_batch(&cell, &h0s, &xs, None, 1, b);
+        assert!(paths0.iter().all(|&p| p == EvalPath::Deer));
+
+        let exact = ShardConfig { shards: 4, stitch: StitchMode::Exact, ..Default::default() };
+        let (paths, res) =
+            pol.evaluate_batch_sharded(&cell, &h0s, &xs, None, None, 1, b, &exact);
+        assert!(paths.iter().all(|&p| p == EvalPath::Deer));
+        assert_eq!(res.ys, base.ys, "exact stitching must be bitwise at threads = 1");
+
+        let pen = ShardConfig {
+            shards: 4,
+            stitch: StitchMode::Penalty,
+            stitch_tol: 1e-10,
+            ..Default::default()
+        };
+        let (paths, res) = pol.evaluate_batch_sharded(&cell, &h0s, &xs, None, None, 1, b, &pen);
+        assert!(paths.iter().all(|&p| p == EvalPath::Deer));
+        let d = crate::linalg::max_abs_diff(&res.ys, &base.ys);
+        assert!(d < 1e-7, "penalty stitching drifted {d}");
+
+        // force non-convergence → per-sequence fallback equals sequential
+        let strict = ConvergencePolicy { max_iter: 1, ..Default::default() };
+        let (paths2, res2) =
+            strict.evaluate_batch_sharded(&cell, &h0s, &xs, None, None, 1, b, &pen);
+        assert!(paths2.iter().all(|&p| p == EvalPath::SequentialFallback));
+        for s in 0..b {
+            let want = crate::deer::seq::seq_rnn(
+                &cell,
+                &h0s[s * n..(s + 1) * n],
+                &xs[s * t * m..(s + 1) * t * m],
+            );
+            assert_eq!(&res2.ys[s * t * n..(s + 1) * t * n], &want[..]);
         }
     }
 

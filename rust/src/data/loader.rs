@@ -88,6 +88,123 @@ impl Dataset {
             .map(|c| c.to_vec())
             .collect()
     }
+
+    /// Borrow the `[lo, hi)` timestep window of one row — contiguous because
+    /// rows are `(t, channels)` row-major.
+    pub fn row_window(&self, i: usize, lo: usize, hi: usize) -> &[f32] {
+        debug_assert!(lo <= hi && hi <= self.t);
+        &self.xs[(i * self.t + lo) * self.channels..(i * self.t + hi) * self.channels]
+    }
+}
+
+/// Window-granular sequence source: yields the `[lo, hi)` timestep slice of
+/// any row without requiring the full `(rows, t, channels)` tensor to be
+/// resident at once. The resident [`Dataset`] implements it by slicing; a
+/// [`StreamingDataset`] implements it by regenerating rows on demand. The
+/// sharded DEER trainer feeds windows through this trait so peak input
+/// memory is O(B · W · c) instead of O(B · T · c).
+pub trait WindowSource {
+    fn rows(&self) -> usize;
+    fn t(&self) -> usize;
+    fn channels(&self) -> usize;
+    /// Fill `out` (length `(hi - lo) * channels`) with row `row`'s window.
+    fn read_window(&mut self, row: usize, lo: usize, hi: usize, out: &mut [f32]);
+
+    /// Assemble a `(idx.len(), hi - lo, channels)` batch window.
+    fn gather_window(&mut self, idx: &[usize], lo: usize, hi: usize) -> Vec<f32> {
+        let per = (hi - lo) * self.channels();
+        let mut out = vec![0.0f32; idx.len() * per];
+        for (s, &row) in idx.iter().enumerate() {
+            self.read_window(row, lo, hi, &mut out[s * per..(s + 1) * per]);
+        }
+        out
+    }
+}
+
+impl WindowSource for Dataset {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+    fn t(&self) -> usize {
+        self.t
+    }
+    fn channels(&self) -> usize {
+        self.channels
+    }
+    fn read_window(&mut self, row: usize, lo: usize, hi: usize, out: &mut [f32]) {
+        out.copy_from_slice(self.row_window(row, lo, hi));
+    }
+}
+
+/// Streaming dataset: holds only an O(rows) description (a boxed per-row
+/// generator) plus one O(t · channels) scratch row, regenerating rows on
+/// demand. Successive window reads of the same row reuse the cached row, so
+/// iterating a row window-by-window costs one generation, and the resident
+/// footprint never includes the `(rows, t, channels)` tensor.
+pub struct StreamingDataset {
+    rows: usize,
+    t: usize,
+    channels: usize,
+    row_fn: Box<dyn FnMut(usize, &mut [f32]) + Send>,
+    cached: Option<usize>,
+    scratch: Vec<f32>,
+}
+
+impl StreamingDataset {
+    /// `row_fn(row, out)` must deterministically write row `row`'s full
+    /// `(t, channels)` sequence into `out`.
+    pub fn new(
+        rows: usize,
+        t: usize,
+        channels: usize,
+        row_fn: Box<dyn FnMut(usize, &mut [f32]) + Send>,
+    ) -> StreamingDataset {
+        StreamingDataset {
+            rows,
+            t,
+            channels,
+            row_fn,
+            cached: None,
+            scratch: vec![0.0f32; t * channels],
+        }
+    }
+
+    /// Bytes held resident (the single scratch row) — what a memory plan
+    /// should charge for streaming input, vs `rows * t * channels * 4`
+    /// for a resident [`Dataset`].
+    pub fn resident_bytes(&self) -> u64 {
+        (self.scratch.len() * std::mem::size_of::<f32>()) as u64
+    }
+
+    /// Materialize every row into a resident [`Dataset`] (test/debug aid).
+    pub fn materialize(&mut self, labels: Vec<i32>) -> Dataset {
+        let mut xs = vec![0.0f32; self.rows * self.t * self.channels];
+        let per = self.t * self.channels;
+        for r in 0..self.rows {
+            self.read_window(r, 0, self.t, &mut xs[r * per..(r + 1) * per]);
+        }
+        Dataset::new(xs, labels, self.t, self.channels)
+    }
+}
+
+impl WindowSource for StreamingDataset {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+    fn t(&self) -> usize {
+        self.t
+    }
+    fn channels(&self) -> usize {
+        self.channels
+    }
+    fn read_window(&mut self, row: usize, lo: usize, hi: usize, out: &mut [f32]) {
+        debug_assert!(lo <= hi && hi <= self.t && row < self.rows);
+        if self.cached != Some(row) {
+            (self.row_fn)(row, &mut self.scratch);
+            self.cached = Some(row);
+        }
+        out.copy_from_slice(&self.scratch[lo * self.channels..hi * self.channels]);
+    }
 }
 
 #[cfg(test)]
@@ -140,5 +257,91 @@ mod tests {
         let bs = d.batches(Split::Train, 4);
         assert_eq!(bs.len(), 3); // 14 rows → 3 full batches of 4
         assert!(bs.iter().flatten().all(|&i| i < 14));
+    }
+
+    /// Resident window reads are exact slices of the flat tensor, including
+    /// a ragged final window from a non-dividing window size.
+    #[test]
+    fn dataset_window_reads_slice_resident_tensor() {
+        let mut d = tiny(); // t = 4, c = 2
+        let (_, spans) = crate::deer::sharded::shard_windows(d.t, 3); // W=2 → (0,2)(2,4)
+        assert_eq!(spans, vec![(0, 2), (2, 4)]);
+        for &(lo, hi) in &spans {
+            let w = d.gather_window(&[1, 3], lo, hi);
+            let (full, _) = d.gather(&[1, 3]);
+            let per = d.t * d.channels;
+            assert_eq!(w[..(hi - lo) * d.channels], full[lo * d.channels..hi * d.channels]);
+            assert_eq!(
+                w[(hi - lo) * d.channels..],
+                full[per + lo * d.channels..per + hi * d.channels]
+            );
+        }
+    }
+
+    /// Satellite: streaming worms reads — window-granular, ragged final
+    /// window, non-dividing W — are bitwise-identical to the resident load.
+    #[test]
+    fn streaming_worms_windows_match_resident_bitwise() {
+        let (rows, t, seed) = (6usize, 25usize, 42u64);
+        let (xs, labels) = crate::data::worms::generate(rows, t, seed);
+        let mut resident = Dataset::new(xs, labels.clone(), t, crate::data::worms::CHANNELS);
+        let (mut stream, slabels) = crate::data::worms::streaming(rows, t, seed);
+        assert_eq!(labels, slabels);
+        assert_eq!(stream.rows(), rows);
+        assert!(stream.resident_bytes() < (rows * t * crate::data::worms::CHANNELS * 4) as u64);
+        // W = ceil(25/4) = 7 → windows (0,7)(7,14)(14,21)(21,25): ragged tail of 4
+        let (w, spans) = crate::deer::sharded::shard_windows(t, 4);
+        assert_eq!(w, 7);
+        assert_eq!(spans.last(), Some(&(21, 25)));
+        let idx: Vec<usize> = (0..rows).collect();
+        for &(lo, hi) in &spans {
+            assert_eq!(
+                stream.gather_window(&idx, lo, hi),
+                resident.gather_window(&idx, lo, hi),
+                "window [{lo}, {hi})"
+            );
+        }
+        // out-of-order single-row reads (cache churn) stay bitwise too
+        let mut buf = vec![0.0f32; 3 * crate::data::worms::CHANNELS];
+        for &row in &[5usize, 0, 3, 0] {
+            stream.read_window(row, 22, 25, &mut buf);
+            assert_eq!(buf, resident.row_window(row, 22, 25));
+        }
+    }
+
+    /// Satellite: same bitwise guarantee for the two-body regression data.
+    #[test]
+    fn streaming_twobody_windows_match_resident_bitwise() {
+        let (rows, t, seed) = (4usize, 33usize, 9u64);
+        let xs = crate::data::twobody::generate(rows, 10.0, t, seed);
+        let mut resident = Dataset::new(xs, vec![0; rows], t, crate::data::twobody::STATE);
+        let mut stream = crate::data::twobody::streaming(rows, 10.0, t, seed);
+        // W = ceil(33/5) = 7 → last window (28,33) of length 5 ≠ 7
+        let (_, spans) = crate::deer::sharded::shard_windows(t, 5);
+        let idx: Vec<usize> = (0..rows).collect();
+        let mut stitched = vec![Vec::new(); rows];
+        for &(lo, hi) in &spans {
+            let w = stream.gather_window(&idx, lo, hi);
+            assert_eq!(w, resident.gather_window(&idx, lo, hi), "window [{lo}, {hi})");
+            let per = (hi - lo) * crate::data::twobody::STATE;
+            for (s, acc) in stitched.iter_mut().enumerate() {
+                acc.extend_from_slice(&w[s * per..(s + 1) * per]);
+            }
+        }
+        // windows concatenated in order reconstruct each full row exactly
+        for (r, acc) in stitched.iter().enumerate() {
+            assert_eq!(acc[..], *resident.row(r), "row {r}");
+        }
+    }
+
+    /// `materialize` round-trips a streaming source into a resident Dataset.
+    #[test]
+    fn streaming_materialize_round_trips() {
+        let (rows, t, seed) = (5usize, 12usize, 3u64);
+        let (xs, labels) = crate::data::worms::generate(rows, t, seed);
+        let (mut stream, slabels) = crate::data::worms::streaming(rows, t, seed);
+        let d = stream.materialize(slabels);
+        assert_eq!(d.xs, xs);
+        assert_eq!(d.labels, labels);
     }
 }

@@ -158,6 +158,26 @@ pub fn generate(rows: usize, t_end: f64, samples: usize, seed: u64) -> Vec<f32> 
     out
 }
 
+/// Streaming variant of [`generate`]: pre-draws the O(rows) initial
+/// conditions with the same RNG order as [`generate`], then re-rolls each
+/// trajectory on demand. Window reads are bitwise-identical to slicing the
+/// resident tensor, with only one `samples × STATE` scratch row held.
+pub fn streaming(rows: usize, t_end: f64, samples: usize, seed: u64) -> crate::data::loader::StreamingDataset {
+    let mut rng = Rng::new(seed);
+    let ics: Vec<[f64; STATE]> = (0..rows).map(|_| sample_ic(&mut rng)).collect();
+    crate::data::loader::StreamingDataset::new(
+        rows,
+        samples,
+        STATE,
+        Box::new(move |row, out: &mut [f32]| {
+            let traj = rollout(&ics[row], t_end, samples, 4);
+            for (o, v) in out.iter_mut().zip(traj.iter()) {
+                *o = *v as f32;
+            }
+        }),
+    )
+}
+
 /// Total energy (kinetic + gravitational potential), conserved by the flow.
 pub fn energy(s: &[f64]) -> f64 {
     let ke = 0.5 * (s[2] * s[2] + s[3] * s[3] + s[6] * s[6] + s[7] * s[7]);

@@ -61,6 +61,35 @@ pub fn sample(class: usize, len: usize, rng: &mut Rng) -> Vec<f32> {
     out
 }
 
+/// Streaming variant of [`generate`]: replays the same RNG skeleton
+/// (permutation + one `split` per slot) to build an O(rows) table of
+/// per-row `(class, rng)` pairs, then regenerates individual rows on
+/// demand. Window reads are bitwise-identical to slicing the resident
+/// tensor from [`generate`] with the same `seed`, while holding only one
+/// `len × CHANNELS` scratch row.
+pub fn streaming(rows: usize, len: usize, seed: u64) -> (crate::data::loader::StreamingDataset, Vec<i32>) {
+    let mut rng = Rng::new(seed);
+    let order = rng.permutation(rows);
+    let mut table: Vec<(usize, Rng)> = vec![(0, Rng::new(0)); rows];
+    let mut labels = vec![0i32; rows];
+    for (slot, &row) in order.iter().enumerate() {
+        let class = slot % CLASSES;
+        table[row] = (class, rng.split());
+        labels[row] = class as i32;
+    }
+    let ds = crate::data::loader::StreamingDataset::new(
+        rows,
+        len,
+        CHANNELS,
+        Box::new(move |row, out: &mut [f32]| {
+            let class = table[row].0;
+            let mut srng = table[row].1.clone();
+            out.copy_from_slice(&sample(class, len, &mut srng));
+        }),
+    );
+    (ds, labels)
+}
+
 /// Generate the full dataset: (rows, len, CHANNELS) flattened + labels,
 /// classes assigned round-robin then shuffled (class-balanced like UEA).
 pub fn generate(rows: usize, len: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {

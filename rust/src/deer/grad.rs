@@ -279,11 +279,36 @@ pub fn deer_rnn_backward_batch_damped_io<S: Scalar, C: CellGrad<S>>(
         }
     });
 
-    // Phase 3: parameter VJP reduction over the [B, T] grid with per-chunk
-    // partial accumulators, reduced in deterministic chunk order. When
-    // `want_dx` is set the same sweep also accumulates the input cotangents
-    // dxs[s, i] — each (s, i) element is owned by exactly one chunk, so the
-    // threaded path hands every worker a disjoint `[lo..hi]·m` slice.
+    let (dtheta, dh0s, dxs) =
+        param_vjp_batch(cell, h0s, xs, ys, &lambda, threads, batch, want_dx, &mut profile);
+
+    BatchGradResult { dtheta, dh0s, dxs, profile }
+}
+
+/// Phase 3 of the backward pass, shared with the sharded backward
+/// ([`super::sharded`]): the parameter-VJP reduction over the `[B, T]` grid
+/// with per-chunk partial accumulators, reduced in deterministic chunk
+/// order. When `want_dx` is set the same sweep also accumulates the input
+/// cotangents dxs[s, i] — each (s, i) element is owned by exactly one
+/// chunk, so the threaded path hands every worker a disjoint `[lo..hi]·m`
+/// slice. Returns `(dtheta, dh0s, dxs)`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn param_vjp_batch<S: Scalar, C: CellGrad<S>>(
+    cell: &C,
+    h0s: &[S],
+    xs: &[S],
+    ys: &[S],
+    lambda: &[S],
+    threads: usize,
+    batch: usize,
+    want_dx: bool,
+    profile: &mut PhaseProfile,
+) -> (Vec<S>, Vec<S>, Option<Vec<S>>) {
+    let n = cell.state_dim();
+    let m = cell.input_dim();
+    let t_len = if batch * m == 0 { 0 } else { xs.len() / (batch * m) };
+    let sn = t_len * n;
+    let all_seqs: Vec<usize> = (0..batch).collect();
     let p = cell.num_params();
     let sm = t_len * m;
     let mut dtheta = vec![S::zero(); p];
@@ -423,7 +448,7 @@ pub fn deer_rnn_backward_batch_damped_io<S: Scalar, C: CellGrad<S>>(
         }
     });
 
-    BatchGradResult { dtheta, dh0s, dxs, profile }
+    (dtheta, dh0s, dxs)
 }
 
 /// Recompute the per-step Jacobians along every sequence's trajectory
@@ -431,7 +456,7 @@ pub fn deer_rnn_backward_batch_damped_io<S: Scalar, C: CellGrad<S>>(
 /// grid. Quasi-DEER extraction (diagonal structure on a dense cell) uses a
 /// per-worker n×n scratch so global memory stays O(B·T·n).
 #[allow(clippy::too_many_arguments)]
-fn recompute_jacobians_batch<S: Scalar, C: Cell<S>>(
+pub(crate) fn recompute_jacobians_batch<S: Scalar, C: Cell<S>>(
     cell: &C,
     h0s: &[S],
     xs: &[S],

@@ -77,6 +77,7 @@ pub mod newton;
 pub mod ode;
 pub mod rk45;
 pub mod seq;
+pub mod sharded;
 
 pub use grad::{
     deer_rnn_backward, deer_rnn_backward_batch, deer_rnn_backward_batch_damped_io,
@@ -88,4 +89,8 @@ pub use newton::{
 };
 pub use ode::{deer_ode, Interp, OdeDeerResult, OdeSystem};
 pub use rk45::{rk45_solve, Rk45Options};
+pub use sharded::{
+    deer_rnn_backward_sharded, deer_rnn_sharded, shard_windows, ShardConfig, ShardedDeerResult,
+    StitchMode,
+};
 pub use seq::{seq_rnn, seq_rnn_backward, seq_rnn_backward_io, seq_rnn_batch};

@@ -240,7 +240,7 @@ impl DivergenceReason {
 /// Record a row's divergence in the metric registry (always-on counter)
 /// and, when the sink is enabled, as a trace instant.
 #[inline]
-fn note_divergence(reason: DivergenceReason, seq: usize) {
+pub(crate) fn note_divergence(reason: DivergenceReason, seq: usize) {
     telemetry::counter_add(reason.counter(), 1);
     if telemetry::enabled() {
         telemetry::instant(
@@ -1179,7 +1179,7 @@ fn residual_batch<S: Scalar, C: Cell<S>>(
 /// thread pool exactly like [`update_and_errs`]' partial-freeze branch
 /// (per-slab arithmetic is unchanged, so worker assignment never affects
 /// numerics).
-fn update_and_errs_clamped<S: Scalar>(
+pub(crate) fn update_and_errs_clamped<S: Scalar>(
     yt: &mut [S],
     y_next: &[S],
     errs: &mut [f64],
@@ -1247,7 +1247,7 @@ fn update_and_errs_clamped<S: Scalar>(
 /// B = 1 case) the update is an O(1) buffer swap after the error
 /// reduction; once some sequences have frozen, only the active slabs are
 /// copied back so frozen trajectories stay untouched.
-fn update_and_errs<S: Scalar>(
+pub(crate) fn update_and_errs<S: Scalar>(
     yt: &mut Vec<S>,
     y_next: &mut Vec<S>,
     errs: &mut [f64],
@@ -1359,7 +1359,7 @@ fn update_and_errs<S: Scalar>(
 /// Jacobian is evaluated into a per-worker n×n scratch and only its
 /// diagonal is stored — global memory stays O(B·T·n).
 #[allow(clippy::too_many_arguments)]
-fn eval_f_jac_batch<S: Scalar, C: Cell<S>>(
+pub(crate) fn eval_f_jac_batch<S: Scalar, C: Cell<S>>(
     cell: &C,
     h0s: &[S],
     xs: &[S],

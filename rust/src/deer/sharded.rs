@@ -1,0 +1,1158 @@
+//! Windowed (sequence-sharded) DEER: multiple shooting over the time axis.
+//!
+//! Everything else in `deer/` parallelizes one resident `[B, T, n]` slab, so
+//! the per-sweep working set is O(B·T·(jac_len + 3n)) — at T in the hundreds
+//! of thousands the Jacobian/rhs slabs alone blow any budget. This module
+//! shards T itself: a length-T sequence becomes S windows of length
+//! W = ⌈T/S⌉, each window an ordinary batch row of the existing fused
+//! batched Newton machinery, with the window boundaries stitched back
+//! together in one of two ways (Hess et al., "Parallel-in-Time Training of
+//! RNNs for Dynamical Systems Reconstruction"):
+//!
+//! * **[`StitchMode::Exact`]** — the boundary constraint is folded into the
+//!   outer Newton iteration itself: every global sweep runs FUNCEVAL +
+//!   INVLIN window by window, seeding window w's scan with window w−1's
+//!   *same-sweep* new tail state (the linearization still reads the
+//!   previous iterate everywhere, exactly like the unsharded sweep). The
+//!   iteration therefore visits the **same sequence of iterates** as
+//!   [`deer_rnn_batch`]: at `threads = 1` every arithmetic operation is
+//!   literally identical (the window scans run the same sequential-apply
+//!   kernel over the same values) and the result is **bitwise equal** to
+//!   the unsharded solve; at `threads > 1` the intra-window scan chunking
+//!   differs, so agreement is tolerance-bounded like any other scan
+//!   re-association. Only the per-sweep scratch (Jacobian, rhs, trial,
+//!   input-precompute slabs) shrinks to O(B·W·…); the trajectory itself
+//!   stays resident because the next sweep re-linearises around it.
+//! * **[`StitchMode::Penalty`]** — classic multiple shooting: every window
+//!   gets a free initial state (warm-started from the boundary cache /
+//!   previous outer iteration), all S windows are solved as S independent
+//!   batch rows through [`deer_rnn_batch`] — optionally chunked into groups
+//!   of at most `group` rows so the resident slabs stay O(G·W·…) — and an
+//!   outer stitch loop replaces each window's initial-state guess with its
+//!   predecessor's freshly solved tail until the worst boundary mismatch
+//!   drops below `stitch_tol`. Information propagates one window per outer
+//!   iteration, so at most S−1 stitch iterations (plus one confirming pass)
+//!   are needed; each one is a single fused solve. The answer agrees with
+//!   the unsharded trajectory to a tolerance bound: each window satisfies
+//!   its own recurrence to `cfg.tol` and consecutive windows match to
+//!   `stitch_tol` at their seams, so the global deviation is the seam
+//!   mismatch amplified by the window's state-transition sensitivity
+//!   (bounded for the contractive cells DEER converges on; pinned
+//!   empirically by the T = 8k agreement tests).
+//!
+//! The penalty path supports every solver configuration (including ELK
+//! damping — the window solves are plain [`deer_rnn_batch`] calls). The
+//! exact path owns its sweep loop and supports the undamped modes
+//! (`Full` / `DiagonalApprox` / `BlockApprox`, with or without
+//! `step_clamp`); damping and the Hybrid endgame are rejected loudly —
+//! their accept/reject and switch decisions are whole-trajectory decisions
+//! that do not fold into per-window sweeps.
+//!
+//! The backward pass ([`deer_rnn_backward_sharded`]) chains the dual scan
+//! across window boundaries in reverse: window w's tail cotangent is
+//! `g_tail + J_{head(w+1)}ᵀ λ_{head(w+1)}` — the same `g + Aᵀλ` fold the
+//! full-length reverse kernel performs at that position — so the window
+//! Jacobian slabs are recomputed O(B·W·jac_len) at a time while the λ
+//! trajectory (O(B·T·n), no `jac_len` factor) accumulates in place; the
+//! parameter VJP then runs over the full grid through the exact same
+//! reduction as the unsharded backward. At `threads = 1` the gradients are
+//! bitwise equal to [`super::deer_rnn_backward_batch_io`].
+
+use crate::cells::{Cell, CellGrad, JacobianStructure};
+use crate::scan::block::{block_matvec_t, par_block_scan_apply_batch_ws, par_block_scan_reverse_batch_ws};
+use crate::scan::diag::{par_diag_scan_apply_batch_ws, par_diag_scan_reverse_batch_ws};
+use crate::scan::par::{par_scan_apply_batch_ws, par_scan_reverse_batch_ws};
+use crate::scan::ScanWorkspace;
+use crate::telemetry::{self, Counter, Histogram, Phase};
+use crate::util::scalar::Scalar;
+use crate::util::timer::PhaseProfile;
+
+use super::grad::{param_vjp_batch, recompute_jacobians_batch, BatchGradResult};
+use super::newton::{
+    deer_rnn_batch, effective_structure, eval_f_jac_batch, note_divergence, update_and_errs,
+    update_and_errs_clamped, DeerConfig, DivergenceReason, JacobianMode,
+};
+
+/// How window boundaries are reconciled.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StitchMode {
+    /// Boundary residual folded into the outer Newton iteration: bitwise
+    /// equal to the unsharded solve at `threads = 1`, tolerance-bounded
+    /// above (scan re-association only). Keeps the trajectory resident;
+    /// shrinks every per-sweep scratch slab to window granularity.
+    Exact,
+    /// Multiple-shooting penalty stitching: free window initial states,
+    /// outer fixed-point loop on the boundary states, tolerance-bounded
+    /// agreement (`stitch_tol` seam mismatch). Cheapest resident footprint
+    /// (windows stream through in groups) and compatible with every solver
+    /// mode including ELK damping.
+    Penalty,
+}
+
+impl StitchMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            StitchMode::Exact => "exact",
+            StitchMode::Penalty => "penalty",
+        }
+    }
+
+    /// Parse a CLI spelling.
+    pub fn parse(s: &str) -> Option<StitchMode> {
+        match s {
+            "exact" => Some(StitchMode::Exact),
+            "penalty" => Some(StitchMode::Penalty),
+            _ => None,
+        }
+    }
+}
+
+/// Sharding configuration for [`deer_rnn_sharded`].
+#[derive(Debug, Clone)]
+pub struct ShardConfig {
+    /// Requested shard count S ≥ 1 (1 = plain unsharded dispatch). The
+    /// effective count may be smaller when ⌈T/S⌉ windows already cover T.
+    pub shards: usize,
+    pub stitch: StitchMode,
+    /// Penalty mode: outer loop stops when the worst boundary seam
+    /// mismatch (max-abs over `[B, S−1, n]`) drops to this. Ignored by
+    /// exact stitching (its seams are consistent by construction).
+    pub stitch_tol: f64,
+    /// Penalty mode: hard cap on outer stitch iterations. `None` defaults
+    /// to S + 1 (one propagation hop per window plus a confirming pass).
+    pub max_stitch: Option<usize>,
+    /// Penalty mode: cap on window rows per fused sub-solve — the memory
+    /// planner's `max_deer_batch_sharded` feeds this so resident slabs
+    /// stay O(group·W·…). `None` solves all B·S windows in one fused call.
+    pub group: Option<usize>,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig {
+            shards: 1,
+            stitch: StitchMode::Exact,
+            stitch_tol: 1e-7,
+            max_stitch: None,
+            group: None,
+        }
+    }
+}
+
+/// Result of a sharded solve. Mirrors the per-sequence bookkeeping of
+/// [`super::BatchDeerResult`] plus the stitch diagnostics; window Jacobians
+/// are deliberately **not** returned (they only ever exist at window
+/// granularity — the backward recomputes them the same way).
+#[derive(Debug, Clone)]
+pub struct ShardedDeerResult<S> {
+    pub batch: usize,
+    /// Effective shard count actually used (≤ the requested count).
+    pub shards: usize,
+    /// Window length W = ⌈T/S⌉ (the last window may be shorter).
+    pub window: usize,
+    /// `[B, T, n]` solved trajectories.
+    pub ys: Vec<S>,
+    pub converged: Vec<bool>,
+    /// Newton sweeps each sequence participated in (exact mode), or total
+    /// window-sweeps spent on the sequence across outer iterations
+    /// (penalty mode).
+    pub iterations: Vec<usize>,
+    pub divergence: Vec<Option<DivergenceReason>>,
+    /// Per-sequence final-error traces (exact mode only; empty in penalty
+    /// mode, whose inner solves own their traces).
+    pub err_traces: Vec<Vec<f64>>,
+    /// Outer stitch iterations run (exact mode reports 1: its single outer
+    /// Newton iteration IS the stitch).
+    pub stitch_iters: usize,
+    /// Final worst seam mismatch (0 under exact stitching by construction).
+    pub boundary_residual: f64,
+    /// `[B, S, n]` final window initial states (window 0's is `h0`) — the
+    /// boundary cache payload for warm-starting the next solve.
+    pub boundaries: Vec<S>,
+    /// Total Newton sweeps across all windows and outer iterations.
+    pub sweeps: usize,
+    pub profile: PhaseProfile,
+}
+
+/// Window extents for length `t_len` split into (at most) `shards` windows
+/// of length W = ⌈T/S⌉: `(W, vec![(lo, hi); S_eff])`. The final window is
+/// ragged when W does not divide T; windows that would start at or past T
+/// are dropped (S_eff ≤ S), so every returned window is non-empty.
+pub fn shard_windows(t_len: usize, shards: usize) -> (usize, Vec<(usize, usize)>) {
+    assert!(shards >= 1, "shards must be ≥ 1");
+    assert!(t_len >= 1, "cannot shard an empty sequence");
+    let w = t_len.div_ceil(shards);
+    let mut spans = Vec::new();
+    let mut lo = 0;
+    while lo < t_len {
+        let hi = (lo + w).min(t_len);
+        spans.push((lo, hi));
+        lo = hi;
+    }
+    (w, spans)
+}
+
+/// Gather `[B, T, per]` window `[lo, lo+wl)` into contiguous `[B, wl, per]`.
+fn gather_window<S: Scalar>(
+    src: &[S],
+    dst: &mut [S],
+    per: usize,
+    t_len: usize,
+    lo: usize,
+    wl: usize,
+    batch: usize,
+) {
+    for s in 0..batch {
+        dst[s * wl * per..(s + 1) * wl * per]
+            .copy_from_slice(&src[(s * t_len + lo) * per..(s * t_len + lo + wl) * per]);
+    }
+}
+
+/// Scatter contiguous `[B, wl, per]` back into `[B, T, per]` window
+/// `[lo, lo+wl)`, touching only the listed sequences.
+fn scatter_window<S: Scalar>(
+    src: &[S],
+    dst: &mut [S],
+    per: usize,
+    t_len: usize,
+    lo: usize,
+    wl: usize,
+    idx: &[usize],
+) {
+    for &s in idx {
+        dst[(s * t_len + lo) * per..(s * t_len + lo + wl) * per]
+            .copy_from_slice(&src[s * wl * per..(s + 1) * wl * per]);
+    }
+}
+
+/// Windowed DEER forward solve over B sequences in the `[B, T, n]` layout.
+///
+/// `boundary_init` optionally seeds the penalty path's free window initial
+/// states (`[B, S_eff, n]`, as returned in
+/// [`ShardedDeerResult::boundaries`] — the boundary cache's payload);
+/// without it the boundaries start from `init_guess`'s seam states (or
+/// zeros, matching the unsharded cold start). Exact stitching ignores it —
+/// its boundaries are chained inside each sweep.
+///
+/// See the module docs for the agreement contract (bitwise at
+/// `threads = 1` under exact stitching; tolerance-bounded otherwise).
+pub fn deer_rnn_sharded<S: Scalar, C: Cell<S>>(
+    cell: &C,
+    h0s: &[S],
+    xs: &[S],
+    init_guess: Option<&[S]>,
+    boundary_init: Option<&[S]>,
+    cfg: &DeerConfig<S>,
+    batch: usize,
+    scfg: &ShardConfig,
+) -> ShardedDeerResult<S> {
+    let n = cell.state_dim();
+    let m = cell.input_dim();
+    assert!(batch > 0, "batch must be ≥ 1");
+    assert_eq!(h0s.len(), batch * n, "h0s layout ([B, n])");
+    assert_eq!(xs.len() % (batch * m), 0, "xs layout ([B, T, m])");
+    let t_len = xs.len() / (batch * m);
+    let (window, spans) = shard_windows(t_len, scfg.shards);
+    let shards = spans.len();
+
+    telemetry::counter_add(Counter::ShardSolves, 1);
+    let _span = telemetry::span_with(
+        "shard_solve",
+        vec![
+            ("shards", telemetry::ArgValue::Num(shards as f64)),
+            ("window", telemetry::ArgValue::Num(window as f64)),
+            ("mode", telemetry::ArgValue::Str(scfg.stitch.label())),
+            ("batch", telemetry::ArgValue::Num(batch as f64)),
+        ],
+    );
+
+    if shards == 1 {
+        // Degenerate split: one window IS the unsharded solve.
+        let res = deer_rnn_batch(cell, h0s, xs, init_guess, cfg, batch);
+        telemetry::counter_add(Counter::ShardWindows, 1);
+        telemetry::histogram_record(Histogram::StitchItersPerSolve, 1);
+        let mut boundaries = vec![S::zero(); batch * n];
+        boundaries.copy_from_slice(h0s);
+        return ShardedDeerResult {
+            batch,
+            shards: 1,
+            window,
+            ys: res.ys,
+            converged: res.converged,
+            iterations: res.iterations,
+            divergence: res.divergence,
+            err_traces: res.err_traces,
+            stitch_iters: 1,
+            boundary_residual: 0.0,
+            boundaries,
+            sweeps: res.sweeps,
+            profile: res.profile,
+        };
+    }
+
+    match scfg.stitch {
+        StitchMode::Exact => {
+            solve_exact(cell, h0s, xs, init_guess, cfg, batch, scfg, window, &spans)
+        }
+        StitchMode::Penalty => solve_penalty(
+            cell,
+            h0s,
+            xs,
+            init_guess,
+            boundary_init,
+            cfg,
+            batch,
+            scfg,
+            window,
+            &spans,
+        ),
+    }
+}
+
+/// Exact-constraint stitching: the unsharded Newton sweep, evaluated window
+/// by window with boundary chaining, visiting the identical iterate
+/// sequence (see module docs). Scratch slabs are O(B·W·…).
+#[allow(clippy::too_many_arguments)]
+fn solve_exact<S: Scalar, C: Cell<S>>(
+    cell: &C,
+    h0s: &[S],
+    xs: &[S],
+    init_guess: Option<&[S]>,
+    cfg: &DeerConfig<S>,
+    batch: usize,
+    _scfg: &ShardConfig,
+    window: usize,
+    spans: &[(usize, usize)],
+) -> ShardedDeerResult<S> {
+    assert!(
+        cfg.damping.is_none(),
+        "exact-constraint sharding does not support ELK damping (the accept/reject \
+         merit is a whole-trajectory decision); use StitchMode::Penalty for damped \
+         sharded solves"
+    );
+    assert!(
+        cfg.jacobian_mode != JacobianMode::Hybrid,
+        "exact-constraint sharding does not support the Hybrid endgame (the per-row \
+         structure switch is keyed on whole-trajectory residuals); pick Full, \
+         DiagonalApprox or BlockApprox"
+    );
+    let n = cell.state_dim();
+    let m = cell.input_dim();
+    let t_len = xs.len() / (batch * m);
+    let shards = spans.len();
+    let structure = effective_structure(cell, cfg.jacobian_mode);
+    let jl = structure.jac_len(n);
+    let sn = t_len * n;
+
+    let mut yt: Vec<S> = match init_guess {
+        Some(g) => {
+            assert_eq!(g.len(), batch * sn, "init_guess layout ([B, T, n])");
+            g.to_vec()
+        }
+        None => vec![S::zero(); batch * sn],
+    };
+    // Trial trajectory (the unsharded y_next): full-length so the commit +
+    // error reduction + convergence bookkeeping stay the literal unsharded
+    // code paths. Only the per-sweep scratch below is window-sized.
+    let mut y_new = vec![S::zero(); batch * sn];
+
+    // Window-granular scratch — the O(B·W·(jl + …)) slabs that replace the
+    // unsharded solve's O(B·T·(jl + …)) working set.
+    let pre_len = cell.x_precompute_len();
+    let mut jac = vec![S::zero(); batch * window * jl];
+    let mut rhs = vec![S::zero(); batch * window * n];
+    let mut y_win = vec![S::zero(); batch * window * n];
+    let mut pre = vec![S::zero(); batch * window * pre_len];
+    let mut xs_win = vec![S::zero(); batch * window * m];
+    let mut yt_win = vec![S::zero(); batch * window * n];
+    let mut scan_ws: ScanWorkspace<S> = ScanWorkspace::new();
+
+    // Boundary carries: the OLD (previous-iterate) and NEW (current-sweep)
+    // states at the running window seam.
+    let mut old_bound = vec![S::zero(); batch * n];
+    let mut new_bound = vec![S::zero(); batch * n];
+
+    let mut profile = PhaseProfile::new();
+    let mut err_traces: Vec<Vec<f64>> = vec![Vec::new(); batch];
+    let mut converged = vec![false; batch];
+    let mut iterations = vec![0usize; batch];
+    let mut active = vec![true; batch];
+    let mut grow_streak = vec![0usize; batch];
+    let mut prev_err = vec![f64::INFINITY; batch];
+    let mut errs = vec![0.0f64; batch];
+    let mut divergence: Vec<Option<DivergenceReason>> = vec![None; batch];
+    let mut sweeps = 0usize;
+    let tol = cfg.tol.to_f64c();
+
+    for _ in 0..cfg.max_iter {
+        let act_idx: Vec<usize> = (0..batch).filter(|&s| active[s]).collect();
+        if act_idx.is_empty() {
+            break;
+        }
+        sweeps += 1;
+        telemetry::counter_add(Counter::NewtonSweeps, 1);
+        let _sweep = telemetry::span_with(
+            "newton_sweep",
+            vec![("active", telemetry::ArgValue::Num(act_idx.len() as f64))],
+        );
+        for &s in &act_idx {
+            iterations[s] += 1;
+        }
+
+        // Both seams start the sweep at h0 (window 0's predecessor is fixed
+        // in both the old and the new trajectory).
+        old_bound.copy_from_slice(h0s);
+        new_bound.copy_from_slice(h0s);
+
+        for &(lo, hi) in spans {
+            let wl = hi - lo;
+            telemetry::counter_add(Counter::ShardWindows, 1);
+            gather_window(xs, &mut xs_win, m, t_len, lo, wl, batch);
+            gather_window(&yt, &mut yt_win, n, t_len, lo, wl, batch);
+            if pre_len > 0 {
+                for s in 0..batch {
+                    cell.precompute_x(
+                        &xs_win[s * wl * m..(s + 1) * wl * m],
+                        &mut pre[s * wl * pre_len..s * wl * pre_len + wl * pre_len],
+                    );
+                }
+            }
+            // FUNCEVAL linearises around the PREVIOUS iterate: interior
+            // steps read yt_win, the window head reads the previous
+            // window's old tail — exactly the unsharded sweep's h_prev
+            // sequence.
+            profile.record(Phase::FuncEval, || {
+                eval_f_jac_batch(
+                    cell,
+                    &old_bound,
+                    &xs_win[..batch * wl * m],
+                    &pre[..batch * wl * pre_len],
+                    &yt_win[..batch * wl * n],
+                    &mut rhs[..batch * wl * n],
+                    &mut jac[..batch * wl * jl],
+                    structure,
+                    &act_idx,
+                    cfg.threads,
+                    n,
+                    m,
+                    wl,
+                );
+            });
+            // INVLIN seeded with the previous window's SAME-SWEEP new tail:
+            // the boundary constraint, satisfied exactly by construction.
+            profile.record(Phase::Invlin, || match structure {
+                JacobianStructure::Dense => {
+                    par_scan_apply_batch_ws(
+                        &jac[..batch * wl * jl],
+                        &rhs[..batch * wl * n],
+                        &new_bound,
+                        &mut y_win[..batch * wl * n],
+                        n,
+                        wl,
+                        batch,
+                        Some(&active),
+                        cfg.threads,
+                        &mut scan_ws,
+                    );
+                }
+                JacobianStructure::Diagonal => {
+                    par_diag_scan_apply_batch_ws(
+                        &jac[..batch * wl * jl],
+                        &rhs[..batch * wl * n],
+                        &new_bound,
+                        &mut y_win[..batch * wl * n],
+                        n,
+                        wl,
+                        batch,
+                        Some(&active),
+                        cfg.threads,
+                        &mut scan_ws,
+                    );
+                }
+                JacobianStructure::Block { k } => {
+                    par_block_scan_apply_batch_ws(
+                        &jac[..batch * wl * jl],
+                        &rhs[..batch * wl * n],
+                        &new_bound,
+                        &mut y_win[..batch * wl * n],
+                        n,
+                        k,
+                        wl,
+                        batch,
+                        Some(&active),
+                        cfg.threads,
+                        &mut scan_ws,
+                    );
+                }
+            });
+            // Advance the seams: old ← previous-iterate tail (read BEFORE
+            // any commit — yt is untouched until the whole sweep's trial is
+            // assembled), new ← this window's freshly scanned tail.
+            for &s in &act_idx {
+                old_bound[s * n..(s + 1) * n]
+                    .copy_from_slice(&yt_win[(s * wl + wl - 1) * n..(s * wl + wl) * n]);
+                new_bound[s * n..(s + 1) * n]
+                    .copy_from_slice(&y_win[(s * wl + wl - 1) * n..(s * wl + wl) * n]);
+            }
+            scatter_window(&y_win, &mut y_new, n, t_len, lo, wl, &act_idx);
+        }
+
+        // Commit + error reduction + convergence bookkeeping: the literal
+        // unsharded code path over the full-length trial trajectory.
+        match cfg.step_clamp {
+            None => {
+                let mut finite_idx: Vec<usize> = Vec::with_capacity(act_idx.len());
+                for &s in &act_idx {
+                    if y_new[s * sn..(s + 1) * sn].iter().any(|&v| !v.is_finite()) {
+                        errs[s] = f64::INFINITY;
+                    } else {
+                        finite_idx.push(s);
+                    }
+                }
+                update_and_errs(&mut yt, &mut y_new, &mut errs, &finite_idx, batch, cfg.threads, sn);
+            }
+            Some(c) => {
+                update_and_errs_clamped(&mut yt, &y_new, &mut errs, &act_idx, c, cfg.threads, sn)
+            }
+        }
+
+        for &s in &act_idx {
+            let err = errs[s];
+            err_traces[s].push(err);
+            if !err.is_finite() {
+                divergence[s] = Some(DivergenceReason::NonFinite);
+                note_divergence(DivergenceReason::NonFinite, s);
+                active[s] = false;
+                continue;
+            }
+            if err < tol {
+                converged[s] = true;
+                active[s] = false;
+                continue;
+            }
+            if err > prev_err[s] {
+                grow_streak[s] += 1;
+                if grow_streak[s] >= cfg.divergence_patience {
+                    divergence[s] = Some(DivergenceReason::ErrorGrowth);
+                    note_divergence(DivergenceReason::ErrorGrowth, s);
+                    active[s] = false;
+                    continue;
+                }
+            } else {
+                grow_streak[s] = 0;
+            }
+            prev_err[s] = err;
+        }
+    }
+
+    for s in 0..batch {
+        if !converged[s] && divergence[s].is_none() {
+            divergence[s] = Some(DivergenceReason::MaxIters);
+            note_divergence(DivergenceReason::MaxIters, s);
+        }
+    }
+    telemetry::histogram_record(Histogram::SweepsPerSolve, sweeps as u64);
+    telemetry::histogram_record(Histogram::StitchItersPerSolve, 1);
+
+    let boundaries = extract_boundaries(&yt, h0s, spans, n, t_len, batch);
+    ShardedDeerResult {
+        batch,
+        shards,
+        window,
+        ys: yt,
+        converged,
+        iterations,
+        divergence,
+        err_traces,
+        stitch_iters: 1,
+        boundary_residual: 0.0,
+        boundaries,
+        sweeps,
+        profile,
+    }
+}
+
+/// `[B, S, n]` window initial states read off a solved trajectory.
+fn extract_boundaries<S: Scalar>(
+    ys: &[S],
+    h0s: &[S],
+    spans: &[(usize, usize)],
+    n: usize,
+    t_len: usize,
+    batch: usize,
+) -> Vec<S> {
+    let shards = spans.len();
+    let mut b = vec![S::zero(); batch * shards * n];
+    for s in 0..batch {
+        for (w, &(lo, _)) in spans.iter().enumerate() {
+            let dst = &mut b[(s * shards + w) * n..(s * shards + w + 1) * n];
+            if w == 0 {
+                dst.copy_from_slice(&h0s[s * n..(s + 1) * n]);
+            } else {
+                dst.copy_from_slice(&ys[(s * t_len + lo - 1) * n..(s * t_len + lo) * n]);
+            }
+        }
+    }
+    b
+}
+
+/// Penalty (multiple-shooting) stitching: windows are independent batch
+/// rows of [`deer_rnn_batch`] with free, warm-started initial states; the
+/// outer loop fixed-points the boundary states. See module docs.
+#[allow(clippy::too_many_arguments)]
+fn solve_penalty<S: Scalar, C: Cell<S>>(
+    cell: &C,
+    h0s: &[S],
+    xs: &[S],
+    init_guess: Option<&[S]>,
+    boundary_init: Option<&[S]>,
+    cfg: &DeerConfig<S>,
+    batch: usize,
+    scfg: &ShardConfig,
+    window: usize,
+    spans: &[(usize, usize)],
+) -> ShardedDeerResult<S> {
+    let n = cell.state_dim();
+    let m = cell.input_dim();
+    let t_len = xs.len() / (batch * m);
+    let shards = spans.len();
+    let sn = t_len * n;
+
+    let mut yt: Vec<S> = match init_guess {
+        Some(g) => {
+            assert_eq!(g.len(), batch * sn, "init_guess layout ([B, T, n])");
+            g.to_vec()
+        }
+        None => vec![S::zero(); batch * sn],
+    };
+
+    // Free boundary states bounds[s, w] (window w's initial state). Window
+    // 0's is pinned to h0; the rest warm-start from the caller's cache,
+    // else from the initial guess trajectory's seam states (zeros on a
+    // cold start — the same place the unsharded iteration starts from).
+    let mut bounds = match boundary_init {
+        Some(b) => {
+            assert_eq!(b.len(), batch * shards * n, "boundary_init layout ([B, S, n])");
+            b.to_vec()
+        }
+        None => extract_boundaries(&yt, h0s, spans, n, t_len, batch),
+    };
+    for s in 0..batch {
+        bounds[s * shards * n..s * shards * n + n].copy_from_slice(&h0s[s * n..(s + 1) * n]);
+    }
+
+    let max_stitch = scfg.max_stitch.unwrap_or(shards + 1).max(1);
+    let group = scfg.group.unwrap_or(batch * shards).max(1);
+
+    let mut profile = PhaseProfile::new();
+    let mut iterations = vec![0usize; batch];
+    let mut win_converged = vec![false; batch * shards];
+    let mut win_divergence: Vec<Option<DivergenceReason>> = vec![None; batch * shards];
+    let mut sweeps = 0usize;
+    let mut stitch_iters = 0usize;
+    let mut boundary_residual = f64::INFINITY;
+    let mut stitched = false;
+
+    // Row scratch, sized for one group of full-length windows.
+    let mut h0_rows = vec![S::zero(); group * n];
+    let mut xs_rows = vec![S::zero(); group * window * m];
+    let mut guess_rows = vec![S::zero(); group * window * n];
+
+    for _ in 0..max_stitch {
+        stitch_iters += 1;
+        telemetry::counter_add(Counter::StitchIters, 1);
+        let _iter_span = telemetry::span_with(
+            "stitch_iter",
+            vec![("iter", telemetry::ArgValue::Num(stitch_iters as f64))],
+        );
+
+        // Solve every window as a batch row, grouped so at most `group`
+        // rows' slabs are resident at once. Rows are (sequence, window)
+        // pairs, window-major so one group holds matching window lengths
+        // as far as possible; mixed-length groups are split on length.
+        let rows: Vec<(usize, usize)> = (0..shards)
+            .flat_map(|w| (0..batch).map(move |s| (s, w)))
+            .collect();
+        let mut r0 = 0;
+        while r0 < rows.len() {
+            let (_, w0) = rows[r0];
+            let (lo0, hi0) = spans[w0];
+            let wl = hi0 - lo0;
+            // Extend the group while the window length matches.
+            let mut r1 = r0;
+            while r1 < rows.len() && r1 - r0 < group {
+                let (_, w) = rows[r1];
+                let (lo, hi) = spans[w];
+                if hi - lo != wl {
+                    break;
+                }
+                r1 += 1;
+            }
+            let g = r1 - r0;
+            for (k, &(s, w)) in rows[r0..r1].iter().enumerate() {
+                let (lo, _) = spans[w];
+                h0_rows[k * n..(k + 1) * n]
+                    .copy_from_slice(&bounds[(s * shards + w) * n..(s * shards + w + 1) * n]);
+                xs_rows[k * wl * m..(k + 1) * wl * m]
+                    .copy_from_slice(&xs[(s * t_len + lo) * m..(s * t_len + lo + wl) * m]);
+                guess_rows[k * wl * n..(k + 1) * wl * n]
+                    .copy_from_slice(&yt[(s * t_len + lo) * n..(s * t_len + lo + wl) * n]);
+            }
+            telemetry::counter_add(Counter::ShardWindows, g as u64);
+            let res = deer_rnn_batch(
+                cell,
+                &h0_rows[..g * n],
+                &xs_rows[..g * wl * m],
+                Some(&guess_rows[..g * wl * n]),
+                cfg,
+                g,
+            );
+            sweeps += res.sweeps;
+            profile.merge(&res.profile);
+            for (k, &(s, w)) in rows[r0..r1].iter().enumerate() {
+                let (lo, _) = spans[w];
+                yt[(s * t_len + lo) * n..(s * t_len + lo + wl) * n]
+                    .copy_from_slice(&res.ys[k * wl * n..(k + 1) * wl * n]);
+                iterations[s] += res.iterations[k];
+                win_converged[s * shards + w] = res.converged[k];
+                win_divergence[s * shards + w] = res.divergence[k];
+            }
+            r0 = r1;
+        }
+
+        // Seam residual + boundary fixed-point update: window w+1's free
+        // initial state becomes window w's freshly solved tail.
+        let mut r = 0.0f64;
+        for s in 0..batch {
+            for w in 0..shards - 1 {
+                let (_, hi) = spans[w];
+                let tail = &yt[(s * t_len + hi - 1) * n..(s * t_len + hi) * n];
+                let b = &mut bounds[(s * shards + w + 1) * n..(s * shards + w + 2) * n];
+                let mut d = 0.0f64;
+                for j in 0..n {
+                    let dj = (b[j] - tail[j]).abs().to_f64c();
+                    if !dj.is_finite() {
+                        d = f64::INFINITY;
+                        break;
+                    }
+                    if dj > d {
+                        d = dj;
+                    }
+                }
+                if d > r {
+                    r = d;
+                }
+                b.copy_from_slice(tail);
+            }
+        }
+        boundary_residual = r;
+        if r <= scfg.stitch_tol {
+            stitched = true;
+            break;
+        }
+    }
+    telemetry::histogram_record(Histogram::StitchItersPerSolve, stitch_iters as u64);
+
+    // A sequence converged iff the stitch fixed-point closed AND all its
+    // windows' final solves converged; its divergence reason is the first
+    // failing window's (or MaxIters when only the stitch loop ran out).
+    let mut converged = vec![false; batch];
+    let mut divergence: Vec<Option<DivergenceReason>> = vec![None; batch];
+    for s in 0..batch {
+        let wins_ok = (0..shards).all(|w| win_converged[s * shards + w]);
+        converged[s] = stitched && wins_ok;
+        if !converged[s] {
+            divergence[s] = (0..shards)
+                .find_map(|w| win_divergence[s * shards + w])
+                .or(Some(DivergenceReason::MaxIters));
+        }
+    }
+
+    ShardedDeerResult {
+        batch,
+        shards,
+        window,
+        ys: yt,
+        converged,
+        iterations,
+        divergence,
+        err_traces: vec![Vec::new(); batch],
+        stitch_iters,
+        boundary_residual,
+        boundaries: bounds,
+        sweeps,
+        profile,
+    }
+}
+
+/// Sharded DEER backward pass: the dual scan of eq. 7 chained across window
+/// boundaries in reverse order, with window Jacobians recomputed
+/// O(B·W·jac_len) at a time (never a full `[B, T, jac_len]` slab), then the
+/// unsharded parameter-VJP reduction over the full `[B, T]` grid. At
+/// `threads = 1` the cotangents — and therefore `dtheta`/`dh0s`/`dxs` — are
+/// bitwise equal to [`super::deer_rnn_backward_batch_io`] with
+/// `jacobians = None` (see module docs for the seam-fold argument).
+///
+/// Damped (ELK) duals are not supported here: pair penalty-stitched damped
+/// forwards with the unsharded damped backward when λ ≠ 0.
+#[allow(clippy::too_many_arguments)]
+pub fn deer_rnn_backward_sharded<S: Scalar, C: CellGrad<S>>(
+    cell: &C,
+    h0s: &[S],
+    xs: &[S],
+    ys: &[S],
+    gs: &[S],
+    jac_structure: JacobianStructure,
+    threads: usize,
+    batch: usize,
+    shards: usize,
+    want_dx: bool,
+) -> BatchGradResult<S> {
+    let n = cell.state_dim();
+    let m = cell.input_dim();
+    assert!(batch > 0, "batch must be ≥ 1");
+    assert_eq!(xs.len() % (batch * m), 0, "xs layout ([B, T, m])");
+    let t_len = xs.len() / (batch * m);
+    let jl = jac_structure.jac_len(n);
+    let sn = t_len * n;
+    assert_eq!(h0s.len(), batch * n, "h0s layout ([B, n])");
+    assert_eq!(ys.len(), batch * sn, "ys layout ([B, T, n])");
+    assert_eq!(gs.len(), batch * sn, "gs layout ([B, T, n])");
+    let (window, spans) = shard_windows(t_len, shards);
+    let shards = spans.len();
+    let all_seqs: Vec<usize> = (0..batch).collect();
+
+    let _span = telemetry::span_with(
+        "shard_backward",
+        vec![
+            ("shards", telemetry::ArgValue::Num(shards as f64)),
+            ("window", telemetry::ArgValue::Num(window as f64)),
+        ],
+    );
+
+    let mut profile = PhaseProfile::new();
+    let mut lambda = vec![S::zero(); batch * sn];
+    let mut scan_ws: ScanWorkspace<S> = ScanWorkspace::new();
+
+    // Window scratch.
+    let mut xs_win = vec![S::zero(); batch * window * m];
+    let mut ys_win = vec![S::zero(); batch * window * n];
+    let mut g_win = vec![S::zero(); batch * window * n];
+    let mut l_win = vec![S::zero(); batch * window * n];
+    let mut bound = vec![S::zero(); batch * n];
+    // Seam carry: J_{head(w+1)}ᵀ · λ_{head(w+1)}, folded into window w's
+    // tail cotangent exactly like the full-length reverse kernel's
+    // interior step at that position.
+    let mut carry: Option<Vec<S>> = None;
+    let mut carry_tmp = vec![S::zero(); n];
+
+    for (w, &(lo, hi)) in spans.iter().enumerate().rev() {
+        let wl = hi - lo;
+        gather_window(xs, &mut xs_win, m, t_len, lo, wl, batch);
+        gather_window(ys, &mut ys_win, n, t_len, lo, wl, batch);
+        gather_window(gs, &mut g_win, n, t_len, lo, wl, batch);
+        // Window w's predecessor states: h0 for window 0, else the
+        // trajectory value just before the window.
+        if w == 0 {
+            bound.copy_from_slice(h0s);
+        } else {
+            for s in 0..batch {
+                bound[s * n..(s + 1) * n]
+                    .copy_from_slice(&ys[(s * t_len + lo - 1) * n..(s * t_len + lo) * n]);
+            }
+        }
+        if let Some(c) = carry.as_ref() {
+            // λ_tail = g_tail + Aᵀλ of the next window's head — the fold the
+            // unsharded kernel performs across this seam.
+            for s in 0..batch {
+                let gt = &mut g_win[(s * wl + wl - 1) * n..(s * wl + wl) * n];
+                for j in 0..n {
+                    gt[j] = gt[j] + c[s * n + j];
+                }
+            }
+        }
+
+        let jac = profile.record(Phase::Jacobian, || {
+            recompute_jacobians_batch(
+                cell,
+                &bound,
+                &xs_win[..batch * wl * m],
+                &ys_win[..batch * wl * n],
+                jac_structure,
+                &all_seqs,
+                threads,
+                n,
+                m,
+                wl,
+            )
+        });
+
+        profile.record(Phase::DualScan, || match jac_structure {
+            JacobianStructure::Dense => {
+                par_scan_reverse_batch_ws(
+                    &jac,
+                    &g_win[..batch * wl * n],
+                    &mut l_win[..batch * wl * n],
+                    n,
+                    wl,
+                    batch,
+                    None,
+                    threads,
+                    &mut scan_ws,
+                );
+            }
+            JacobianStructure::Diagonal => {
+                par_diag_scan_reverse_batch_ws(
+                    &jac,
+                    &g_win[..batch * wl * n],
+                    &mut l_win[..batch * wl * n],
+                    n,
+                    wl,
+                    batch,
+                    None,
+                    threads,
+                    &mut scan_ws,
+                );
+            }
+            JacobianStructure::Block { k } => {
+                par_block_scan_reverse_batch_ws(
+                    &jac,
+                    &g_win[..batch * wl * n],
+                    &mut l_win[..batch * wl * n],
+                    n,
+                    k,
+                    wl,
+                    batch,
+                    None,
+                    threads,
+                    &mut scan_ws,
+                );
+            }
+        });
+        scatter_window(&l_win, &mut lambda, n, t_len, lo, wl, &all_seqs);
+
+        if w > 0 {
+            // Next carry: this window's head Jacobian (the seam operator
+            // A_{lo}) transposed against its head cotangent, with the same
+            // per-structure transpose-apply the reverse kernels use.
+            let mut c = carry.take().unwrap_or_else(|| vec![S::zero(); batch * n]);
+            for s in 0..batch {
+                let a_head = &jac[s * wl * jl..s * wl * jl + jl];
+                let l_head = &l_win[s * wl * n..s * wl * n + n];
+                let dst = &mut c[s * n..(s + 1) * n];
+                match jac_structure {
+                    JacobianStructure::Dense => {
+                        crate::linalg::matvec_t(a_head, l_head, &mut carry_tmp);
+                        dst.copy_from_slice(&carry_tmp);
+                    }
+                    JacobianStructure::Diagonal => {
+                        for j in 0..n {
+                            dst[j] = a_head[j] * l_head[j];
+                        }
+                    }
+                    JacobianStructure::Block { k } => {
+                        block_matvec_t(a_head, l_head, &mut carry_tmp, n, k);
+                        dst.copy_from_slice(&carry_tmp);
+                    }
+                }
+            }
+            carry = Some(c);
+        }
+    }
+
+    let (dtheta, dh0s, dxs) =
+        param_vjp_batch(cell, h0s, xs, ys, &lambda, threads, batch, want_dx, &mut profile);
+    BatchGradResult { dtheta, dh0s, dxs, profile }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::Gru;
+    use crate::deer::{deer_rnn_backward_batch_io, deer_rnn_batch};
+    use crate::util::rng::Rng;
+
+    fn mk_case(
+        batch: usize,
+        t_len: usize,
+        n: usize,
+        m: usize,
+        seed: u64,
+    ) -> (Gru<f64>, Vec<f64>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let cell: Gru<f64> = Gru::new(n, m, &mut rng);
+        let mut xs = vec![0.0; batch * t_len * m];
+        rng.fill_normal(&mut xs, 1.0);
+        let mut h0s = vec![0.0; batch * n];
+        rng.fill_normal(&mut h0s, 0.3);
+        (cell, h0s, xs)
+    }
+
+    #[test]
+    fn shard_windows_cover_and_are_ragged() {
+        let (w, spans) = shard_windows(10, 4);
+        assert_eq!(w, 3);
+        assert_eq!(spans, vec![(0, 3), (3, 6), (6, 9), (9, 10)]);
+        // W divides T: uniform windows
+        let (w, spans) = shard_windows(8, 4);
+        assert_eq!(w, 2);
+        assert_eq!(spans.len(), 4);
+        // degenerate: more shards than steps collapses to T windows
+        let (_, spans) = shard_windows(3, 8);
+        assert_eq!(spans.len(), 3);
+        // ceil makes the last window drop out: 9 steps, 4 shards → 3 windows
+        let (w, spans) = shard_windows(9, 4);
+        assert_eq!(w, 3);
+        assert_eq!(spans, vec![(0, 3), (3, 6), (6, 9)]);
+    }
+
+    /// Exact stitching at threads = 1 is bitwise-identical to the unsharded
+    /// solve — same iterates, same convergence bookkeeping, same result —
+    /// for every Jacobian structure and for ragged windows.
+    #[test]
+    fn exact_stitching_bitwise_equals_unsharded() {
+        for (mode, t_len, shards) in [
+            (JacobianMode::Full, 96, 4),
+            (JacobianMode::Full, 100, 3), // ragged final window
+            (JacobianMode::DiagonalApprox, 96, 8),
+        ] {
+            let (cell, h0s, xs) = mk_case(3, t_len, 4, 2, 7);
+            let cfg = DeerConfig::<f64> {
+                jacobian_mode: mode,
+                threads: 1,
+                ..Default::default()
+            };
+            let base = deer_rnn_batch(&cell, &h0s, &xs, None, &cfg, 3);
+            let scfg = ShardConfig { shards, stitch: StitchMode::Exact, ..Default::default() };
+            let sh = deer_rnn_sharded(&cell, &h0s, &xs, None, None, &cfg, 3, &scfg);
+            assert_eq!(sh.ys, base.ys, "{mode:?} T={t_len} S={shards}: ys differ");
+            assert_eq!(sh.iterations, base.iterations);
+            assert_eq!(sh.converged, base.converged);
+            assert_eq!(sh.err_traces, base.err_traces);
+            assert!(sh.converged.iter().all(|&c| c));
+        }
+    }
+
+    /// step_clamp rides through the exact path bitwise too (the clamped
+    /// commit is the shared kernel).
+    #[test]
+    fn exact_stitching_bitwise_with_step_clamp() {
+        let (cell, h0s, xs) = mk_case(2, 64, 4, 2, 11);
+        let cfg = DeerConfig::<f64> {
+            jacobian_mode: JacobianMode::DiagonalApprox,
+            step_clamp: Some(0.5),
+            threads: 1,
+            ..Default::default()
+        };
+        let base = deer_rnn_batch(&cell, &h0s, &xs, None, &cfg, 2);
+        let scfg = ShardConfig { shards: 4, stitch: StitchMode::Exact, ..Default::default() };
+        let sh = deer_rnn_sharded(&cell, &h0s, &xs, None, None, &cfg, 2, &scfg);
+        assert_eq!(sh.ys, base.ys);
+        assert_eq!(sh.converged, base.converged);
+    }
+
+    /// Penalty stitching closes the seams and lands within the documented
+    /// tolerance bound of the unsharded trajectory.
+    #[test]
+    fn penalty_stitching_tolerance_bounded() {
+        let (cell, h0s, xs) = mk_case(2, 96, 4, 2, 13);
+        let cfg = DeerConfig::<f64> { threads: 1, ..Default::default() };
+        let base = deer_rnn_batch(&cell, &h0s, &xs, None, &cfg, 2);
+        let scfg = ShardConfig {
+            shards: 6,
+            stitch: StitchMode::Penalty,
+            stitch_tol: 1e-10,
+            ..Default::default()
+        };
+        let sh = deer_rnn_sharded(&cell, &h0s, &xs, None, None, &cfg, 2, &scfg);
+        assert!(sh.converged.iter().all(|&c| c), "{:?}", sh.divergence);
+        assert!(sh.boundary_residual <= 1e-10, "seam residual {}", sh.boundary_residual);
+        assert!(sh.stitch_iters <= 7, "stitch iterations {}", sh.stitch_iters);
+        let d = crate::linalg::max_abs_diff(&sh.ys, &base.ys);
+        assert!(d < 1e-7, "sharded vs unsharded max |Δ| = {d}");
+    }
+
+    /// Penalty mode with a row-group cap produces the same answer as the
+    /// ungrouped dispatch (groups only bound residency, never arithmetic
+    /// per row at threads = 1).
+    #[test]
+    fn penalty_grouping_matches_ungrouped() {
+        let (cell, h0s, xs) = mk_case(2, 64, 4, 2, 17);
+        let cfg = DeerConfig::<f64> { threads: 1, ..Default::default() };
+        let mk = |group: Option<usize>| ShardConfig {
+            shards: 4,
+            stitch: StitchMode::Penalty,
+            stitch_tol: 1e-10,
+            group,
+            ..Default::default()
+        };
+        let all = deer_rnn_sharded(&cell, &h0s, &xs, None, None, &cfg, 2, &mk(None));
+        let grouped = deer_rnn_sharded(&cell, &h0s, &xs, None, None, &cfg, 2, &mk(Some(3)));
+        assert_eq!(all.ys, grouped.ys);
+        assert_eq!(all.stitch_iters, grouped.stitch_iters);
+    }
+
+    /// Warm-started boundaries (the cache payload round trip) cut the
+    /// outer stitch loop to its confirming pass.
+    #[test]
+    fn warm_boundaries_short_circuit_stitching() {
+        let (cell, h0s, xs) = mk_case(2, 96, 4, 2, 19);
+        let cfg = DeerConfig::<f64> { threads: 1, ..Default::default() };
+        let scfg = ShardConfig {
+            shards: 4,
+            stitch: StitchMode::Penalty,
+            stitch_tol: 1e-9,
+            ..Default::default()
+        };
+        let cold = deer_rnn_sharded(&cell, &h0s, &xs, None, None, &cfg, 2, &scfg);
+        assert!(cold.converged.iter().all(|&c| c));
+        let warm = deer_rnn_sharded(
+            &cell,
+            &h0s,
+            &xs,
+            Some(&cold.ys),
+            Some(&cold.boundaries),
+            &cfg,
+            2,
+            &scfg,
+        );
+        assert!(warm.converged.iter().all(|&c| c));
+        assert!(
+            warm.stitch_iters < cold.stitch_iters,
+            "warm {} vs cold {}",
+            warm.stitch_iters,
+            cold.stitch_iters
+        );
+    }
+
+    /// Sharded backward at threads = 1 is bitwise-identical to the
+    /// unsharded backward (recompute path) for dense and diagonal duals,
+    /// including input cotangents and ragged windows.
+    #[test]
+    fn sharded_backward_bitwise_equals_unsharded() {
+        for (structure, mode, t_len, shards) in [
+            (JacobianStructure::Dense, JacobianMode::Full, 60, 4),
+            (JacobianStructure::Diagonal, JacobianMode::DiagonalApprox, 50, 4), // ragged
+        ] {
+            let (cell, h0s, xs) = mk_case(2, t_len, 4, 2, 23);
+            let cfg = DeerConfig::<f64> {
+                jacobian_mode: mode,
+                threads: 1,
+                ..Default::default()
+            };
+            let fwd = deer_rnn_batch(&cell, &h0s, &xs, None, &cfg, 2);
+            let mut rng = Rng::new(29);
+            let mut gs = vec![0.0; fwd.ys.len()];
+            rng.fill_normal(&mut gs, 1.0);
+            let base = deer_rnn_backward_batch_io(
+                &cell, &h0s, &xs, &fwd.ys, &gs, None, structure, 1, 2, true,
+            );
+            let sh = deer_rnn_backward_sharded(
+                &cell, &h0s, &xs, &fwd.ys, &gs, structure, 1, 2, shards, true,
+            );
+            assert_eq!(sh.dtheta, base.dtheta, "{structure:?}: dtheta differs");
+            assert_eq!(sh.dh0s, base.dh0s, "{structure:?}: dh0s differs");
+            assert_eq!(sh.dxs, base.dxs, "{structure:?}: dxs differs");
+        }
+    }
+}

@@ -1753,14 +1753,34 @@ pub fn elk_bench(lens: &[usize]) -> (Table, Vec<ElkBenchPoint>) {
     (table, points)
 }
 
-/// Serialize elk-bench points as the `BENCH_elk.json` document.
-pub fn elk_bench_json(points: &[ElkBenchPoint]) -> Json {
+/// Serialize elk-bench points as the `BENCH_elk.json` document. `grid` is
+/// the accepted-sweep record over the (T, n) grid ([`elk_accept_sweeps`]):
+/// it lands in a separate `grid_points` array so the cost-comparison keys
+/// of `scripts/bench_compare.sh` (which walk `points`) are untouched.
+pub fn elk_bench_json(points: &[ElkBenchPoint], grid: &[ElkAcceptPoint]) -> Json {
     json::obj(vec![
         ("bench", json::s("elk_damped")),
         ("dtype", json::s("f32")),
         ("cell", json::s("gru")),
         ("fixture", json::s("diverging_gru_ckpt")),
         ("jacobian_mode", json::s("diagonal")),
+        (
+            "grid_points",
+            json::arr(
+                grid.iter()
+                    .map(|g| {
+                        json::obj(vec![
+                            ("n", json::num(g.n as f64)),
+                            ("t", json::num(g.t_len as f64)),
+                            ("accepted_sweeps", json::num(g.accepted_sweeps as f64)),
+                            ("total_iters", json::num(g.total_iters as f64)),
+                            ("converged", json::num(if g.converged { 1.0 } else { 0.0 })),
+                            ("final_lambda", json::num(g.final_lambda)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
         (
             "points",
             json::arr(
@@ -1790,6 +1810,268 @@ pub fn elk_bench_json(points: &[ElkBenchPoint]) -> Json {
                     })
                     .collect(),
             ),
+        ),
+    ])
+}
+
+/// The (T, n) grid for the ELK accepted-sweep record appended to
+/// `BENCH_elk.json` — the paper's horizon/width axes trimmed to bench
+/// scale. Grid shrinks under DEER_BENCH_FAST=1.
+pub fn elk_accept_grid(fast: bool) -> (Vec<usize>, Vec<usize>) {
+    if fast {
+        (vec![512, 2_048], vec![4, 16])
+    } else {
+        (vec![512, 2_048, 8_192], vec![4, 16, 32])
+    }
+}
+
+/// One (T, n) cell of the accepted-sweep record: how many trial sweeps the
+/// adaptive-λ solver ACCEPTED (committed) on its way to the stop, vs the
+/// sweeps it executed — the gap is the rejected-trial overhead λ
+/// adaptation pays at that scale.
+#[derive(Debug, Clone)]
+pub struct ElkAcceptPoint {
+    pub t_len: usize,
+    pub n: usize,
+    /// Accepted/frozen sweeps (= λ-trace length: one entry per commit).
+    pub accepted_sweeps: usize,
+    pub total_iters: usize,
+    pub converged: bool,
+    pub final_lambda: f64,
+}
+
+/// Accepted-sweep counts for the damped (ELK) solver over the (T, n)
+/// grid: a seeded random GRU per width, the same ELK configuration as
+/// [`elk_bench`] (diagonal Jacobians, default λ adaptation).
+pub fn elk_accept_sweeps(lens: &[usize], dims: &[usize]) -> Vec<ElkAcceptPoint> {
+    use crate::deer::newton::DampingConfig;
+    let mut out = Vec::new();
+    for &n in dims {
+        for &t_len in lens {
+            let (cell, xs, h0) = gru_and_inputs(n, t_len, 0xE1F);
+            let cfg = DeerConfig::<f32> {
+                jacobian_mode: JacobianMode::DiagonalApprox,
+                max_iter: 400,
+                damping: Some(DampingConfig::default()),
+                ..Default::default()
+            };
+            let r = deer_rnn(&cell, &h0, &xs, None, &cfg);
+            out.push(ElkAcceptPoint {
+                t_len,
+                n,
+                accepted_sweeps: r.lambda_trace.len(),
+                total_iters: r.iterations,
+                converged: r.converged,
+                final_lambda: r.lambda.to_f64c(),
+            });
+        }
+    }
+    out
+}
+
+/// The fixed horizon and shard counts of `deer bench --exp shard`; grid
+/// shrinks under DEER_BENCH_FAST=1. S = 1 is the unsharded baseline every
+/// other point is compared against (bitwise under exact stitching).
+pub fn shard_bench_grid(fast: bool) -> (usize, Vec<usize>) {
+    if fast {
+        (16_384, vec![1, 4, 8])
+    } else {
+        (65_536, vec![1, 2, 4, 8, 16])
+    }
+}
+
+/// One shard count of the windowed-DEER bench at the fixed horizon.
+#[derive(Debug, Clone)]
+pub struct ShardBenchPoint {
+    pub t_len: usize,
+    pub shards: usize,
+    pub n: usize,
+    pub batch: usize,
+    /// Planned resident solver bytes for this (B, T, S): full trajectory +
+    /// boundary states + ONE window's Jacobian/rhs/scratch slabs — the
+    /// model [`MemoryPlanner::deer_fits_sharded`] admits by.
+    pub resident_bytes: u64,
+    pub wall_secs: f64,
+    pub iterations: usize,
+    pub converged: bool,
+    /// Max |Δ| vs the S = 1 trajectory (0.0 bitwise for exact stitching
+    /// at one thread — asserted by the solver tests, recorded here).
+    pub max_err_vs_unsharded: f64,
+}
+
+/// Windowed-DEER memory/speed sweep: one fused solve per shard count S at
+/// a fixed horizon (exact stitching, one thread), recording the planned
+/// resident bytes — which shrink with S as the Jacobian slabs drop to one
+/// window — and the measured wall-clock, which stays near-flat because
+/// every window still runs the same total FUNCEVAL/INVLIN work.
+pub fn shard_bench(
+    t_len: usize,
+    shard_list: &[usize],
+    n: usize,
+    batch: usize,
+) -> (Table, Vec<ShardBenchPoint>) {
+    use crate::deer::sharded::{deer_rnn_sharded, shard_windows, ShardConfig, StitchMode};
+    let mut rng = Rng::new(0x5AAD);
+    let cell: Gru<f32> = Gru::new(n, n, &mut rng);
+    let mut xs = vec![0.0f32; batch * t_len * n];
+    rng.fill_normal(&mut xs, 1.0);
+    let h0s = vec![0.0f32; batch * n];
+    let cfg = DeerConfig::<f32>::default();
+    let structure = effective_structure(&cell, JacobianMode::Full);
+    let mut table = Table::new(&[
+        "S",
+        "window",
+        "resident",
+        "wall",
+        "iters",
+        "conv",
+        "max |Δ| vs S=1",
+    ]);
+    let mut points = Vec::new();
+    let mut base: Option<Vec<f32>> = None;
+    for &s in shard_list {
+        let scfg = ShardConfig { shards: s, stitch: StitchMode::Exact, ..Default::default() };
+        let start = std::time::Instant::now();
+        let res = deer_rnn_sharded(&cell, &h0s, &xs, None, None, &cfg, batch, &scfg);
+        let wall = start.elapsed().as_secs_f64();
+        let resident = sim::deer_memory_bytes_sharded(n, t_len, batch, 4, structure, s);
+        let err = match &base {
+            None => {
+                base = Some(res.ys.clone());
+                0.0
+            }
+            Some(b) => crate::linalg::max_abs_diff(b, &res.ys).to_f64c(),
+        };
+        let (w, _) = shard_windows(t_len, s);
+        let iterations = res.iterations.iter().copied().max().unwrap_or(0);
+        let converged = res.converged.iter().all(|&c| c);
+        table.row(vec![
+            s.to_string(),
+            w.to_string(),
+            format!("{:.1} MiB", resident as f64 / (1 << 20) as f64),
+            fmt_secs(wall),
+            iterations.to_string(),
+            if converged { "yes".into() } else { "NO".into() },
+            format!("{err:.1e}"),
+        ]);
+        points.push(ShardBenchPoint {
+            t_len,
+            shards: s,
+            n,
+            batch,
+            resident_bytes: resident,
+            wall_secs: wall,
+            iterations,
+            converged,
+            max_err_vs_unsharded: err,
+        });
+    }
+    (table, points)
+}
+
+/// The out-of-budget demo point of the shard bench.
+#[derive(Debug, Clone)]
+pub struct ShardDemoPoint {
+    pub t_len: usize,
+    pub shards: usize,
+    pub n: usize,
+    pub budget_bytes: u64,
+    /// Whether the unsharded dense plan fits `budget_bytes` (it must not —
+    /// that is the demo's point).
+    pub fits_unsharded: bool,
+    pub fits_sharded: bool,
+    pub resident_unsharded: u64,
+    pub resident_sharded: u64,
+    pub wall_secs: f64,
+    pub iterations: usize,
+    pub converged: bool,
+}
+
+/// The T = 500k demo: the [`MemoryPlanner`] proves the unsharded dense
+/// solve cannot fit the budget (≈ T·(n² + 3n)·4 bytes ≈ 176 MiB at n = 8
+/// against 64 MiB), then the SAME solve completes sharded, whose resident
+/// plan fits with room to spare. The windowed path is not just faster
+/// bookkeeping — it unlocks horizons the flat layout cannot represent.
+pub fn shard_demo(t_len: usize, shards: usize, n: usize, budget_bytes: u64) -> ShardDemoPoint {
+    use crate::deer::sharded::{deer_rnn_sharded, ShardConfig, StitchMode};
+    let planner = MemoryPlanner::new(budget_bytes);
+    let mut rng = Rng::new(0xDE40);
+    let cell: Gru<f32> = Gru::new(n, n, &mut rng);
+    let structure = effective_structure(&cell, JacobianMode::Full);
+    let fits_unsharded = planner.deer_fits_structured(n, t_len, 1, structure);
+    let fits_sharded = planner.deer_fits_sharded(n, t_len, 1, structure, shards);
+    let mut xs = vec![0.0f32; t_len * n];
+    rng.fill_normal(&mut xs, 1.0);
+    let h0s = vec![0.0f32; n];
+    let cfg = DeerConfig::<f32>::default();
+    let scfg = ShardConfig { shards, stitch: StitchMode::Exact, ..Default::default() };
+    let start = std::time::Instant::now();
+    let res = deer_rnn_sharded(&cell, &h0s, &xs, None, None, &cfg, 1, &scfg);
+    ShardDemoPoint {
+        t_len,
+        shards,
+        n,
+        budget_bytes,
+        fits_unsharded,
+        fits_sharded,
+        resident_unsharded: sim::deer_memory_bytes_structured(n, t_len, 1, 4, structure),
+        resident_sharded: sim::deer_memory_bytes_sharded(n, t_len, 1, 4, structure, shards),
+        wall_secs: start.elapsed().as_secs_f64(),
+        iterations: res.iterations[0],
+        converged: res.converged[0],
+    }
+}
+
+/// Serialize the shard bench as the `BENCH_shard.json` document. The
+/// `points` carry the memory-vs-S curve the `scripts/bench_compare.sh`
+/// resident-memory gate reads (S = 8 < 25% of S = 1); `demo` is the
+/// planner-proved out-of-budget T = 500k completion.
+pub fn shard_bench_json(points: &[ShardBenchPoint], demo: &ShardDemoPoint) -> Json {
+    json::obj(vec![
+        ("bench", json::s("shard_windowed")),
+        ("dtype", json::s("f32")),
+        ("cell", json::s("gru")),
+        ("structure", json::s("dense")),
+        ("stitch", json::s("exact")),
+        (
+            "points",
+            json::arr(
+                points
+                    .iter()
+                    .map(|p| {
+                        json::obj(vec![
+                            ("n", json::num(p.n as f64)),
+                            ("t", json::num(p.t_len as f64)),
+                            ("batch", json::num(p.batch as f64)),
+                            ("shards", json::num(p.shards as f64)),
+                            ("resident_bytes", json::num(p.resident_bytes as f64)),
+                            ("wall_secs", json::num(p.wall_secs)),
+                            ("iterations", json::num(p.iterations as f64)),
+                            ("converged", json::num(if p.converged { 1.0 } else { 0.0 })),
+                            ("max_err_vs_unsharded", json::num(p.max_err_vs_unsharded)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "demo",
+            json::obj(vec![
+                ("n", json::num(demo.n as f64)),
+                ("t", json::num(demo.t_len as f64)),
+                ("shards", json::num(demo.shards as f64)),
+                ("budget_bytes", json::num(demo.budget_bytes as f64)),
+                (
+                    "fits_unsharded",
+                    json::num(if demo.fits_unsharded { 1.0 } else { 0.0 }),
+                ),
+                ("fits_sharded", json::num(if demo.fits_sharded { 1.0 } else { 0.0 })),
+                ("resident_unsharded", json::num(demo.resident_unsharded as f64)),
+                ("resident_sharded", json::num(demo.resident_sharded as f64)),
+                ("wall_secs", json::num(demo.wall_secs)),
+                ("iterations", json::num(demo.iterations as f64)),
+                ("converged", json::num(if demo.converged { 1.0 } else { 0.0 })),
+            ]),
         ),
     ])
 }

@@ -1,7 +1,7 @@
 //! `deer` — the Layer-3 coordinator CLI.
 //!
 //! Subcommands:
-//!   bench  --exp fig2|fig2grad|fig3|fig6|fig7|fig8|table3|table4|table5|table6|quasi|block|scan|simd|batch|train|elk|all
+//!   bench  --exp fig2|fig2grad|fig3|fig6|fig7|fig8|table3|table4|table5|table6|quasi|block|scan|simd|batch|train|elk|shard|all
 //!   sweep  --dims 1,2,4 --lens 1000,10000 --workers 2
 //!   train  --exp worms|twobody --cell gru|diag-gru|diag-lstm --mode seq|deer|quasi|hybrid|elk|quasi-elk --steps 100   (native trainer)
 //!   train  --model worms|hnn-deer|hnn-rk4|mhgru --steps 100        (xla artifacts)
@@ -73,12 +73,15 @@ fn run() -> Result<()> {
                  \n  deer bench --exp train --train-out BENCH_train.json  seq-BPTT vs DEER optimizer steps\
                  \n  deer bench --exp elk --elk-out BENCH_elk.json   plain vs ELK damped solves on the divergence fixture\
                  \n  deer bench --exp calib --calib-out BENCH_calib.json  observed vs simulator-predicted phase timings\
+                 \n  deer bench --exp shard --shard-out BENCH_shard.json  windowed DEER: resident memory + wall vs shard count\
                  \n  deer bench --exp elk --trace trace.json   record a Chrome trace of the bench (Perfetto / chrome://tracing)\
                  \n  deer sweep --workers 2          coordinator sweep demo\
                  \n  deer train --exp worms --mode deer --steps 40   native §4.3 trainer (seq|deer|quasi|hybrid|elk|quasi-elk)\
                  \n  deer train --exp worms --mode elk --verbose     damped-Newton arm with per-sequence λ/residual traces\
                  \n  deer train --exp worms --mode elk --trace t.json   span-level Chrome trace (open in https://ui.perfetto.dev)\
                  \n  deer train --exp worms --layers 2 --mode deer   stacked model: one fused solve per layer
+                 \n  deer train --exp worms --layers 2 --mode deer,seq  per-layer engines (comma list, one per layer)\
+                 \n  deer train --exp worms --shards 4               windowed DEER solves: O(B·W·jac) memory, bitwise at 1 thread
                  \n  deer train --exp worms --cell diag-gru          natively-structured cells (gru|diag-gru|diag-lstm)\
                  \n  deer train --exp worms-full --eval-every 10     Fig. 4 scale (T=17,984), val/test acc vs wall-clock\
                  \n  deer train --exp worms --save ck.json           checkpoint params+Adam (--load resumes)\
@@ -289,10 +292,49 @@ fn bench(args: &Args, rec: &Recorder) -> Result<()> {
             "ELK damped Newton: plain vs damped solves on the divergence fixture (measured 1-core)",
             &t,
         )?;
+        // accepted-sweep record over the (T, n) grid — a separate
+        // grid_points array so the cost-comparison keys stay untouched
+        let (grid_lens, grid_dims) = exp::elk_accept_grid(fast);
+        let grid = exp::elk_accept_sweeps(&grid_lens, &grid_dims);
         let out_path = PathBuf::from(args.get("elk-out", "BENCH_elk.json"));
-        std::fs::write(&out_path, exp::elk_bench_json(&points).to_string())?;
+        std::fs::write(&out_path, exp::elk_bench_json(&points, &grid).to_string())?;
         deer::telemetry::write_run_manifest(&out_path)?;
         println!("elk bench points written to {}", out_path.display());
+    }
+    if all || which == "shard" {
+        // Windowed (sharded) DEER: resident-memory and wall-clock vs the
+        // shard count S at a fixed horizon (exact stitching — bitwise
+        // against S=1), plus the T=500k demo the MemoryPlanner proves the
+        // unsharded dense layout cannot fit. Grid shrinks under
+        // DEER_BENCH_FAST=1.
+        let fast = std::env::var("DEER_BENCH_FAST").is_ok();
+        let (t_len, shard_list) = exp::shard_bench_grid(fast);
+        let n = args.get_parse("n", 8usize).map_err(Error::msg)?;
+        let batch = args.get_parse("batch", 2usize).map_err(Error::msg)?;
+        let (t, points) = exp::shard_bench(t_len, &shard_list, n, batch);
+        rec.table(
+            "shard_windowed",
+            "Windowed DEER: resident bytes + wall-clock vs shard count S (measured 1-core, exact stitching)",
+            &t,
+        )?;
+        let demo = exp::shard_demo(500_000, 16, 8, 64 << 20);
+        println!(
+            "shard demo: T={} n={} budget {} MiB — unsharded {} MiB fits={} | S={} sharded {} MiB fits={} converged={} in {:.2}s",
+            demo.t_len,
+            demo.n,
+            demo.budget_bytes >> 20,
+            demo.resident_unsharded >> 20,
+            demo.fits_unsharded,
+            demo.shards,
+            demo.resident_sharded >> 20,
+            demo.fits_sharded,
+            demo.converged,
+            demo.wall_secs,
+        );
+        let out_path = PathBuf::from(args.get("shard-out", "BENCH_shard.json"));
+        std::fs::write(&out_path, exp::shard_bench_json(&points, &demo).to_string())?;
+        deer::telemetry::write_run_manifest(&out_path)?;
+        println!("shard bench points written to {}", out_path.display());
     }
     if all || which == "simd" {
         // Scalar-vs-SIMD compose microbench: the raw kernel A/B behind the
@@ -449,7 +491,12 @@ where
     };
 
     let exp = args.get("exp", "worms").to_string();
-    let mode = ForwardMode::parse(args.get("mode", "deer")).map_err(Error::msg)?;
+    // --mode accepts one engine for the whole stack or a comma-separated
+    // per-layer list (`--mode deer,seq`: layer 0 fused DEER, layer 1
+    // sequential BPTT); the list length must match --layers.
+    let modes = ForwardMode::parse_modes(args.get("mode", "deer")).map_err(Error::msg)?;
+    let mode = modes[0];
+    let layer_modes = (modes.len() > 1).then_some(modes.clone());
     let steps = args.get_parse("steps", 40usize).map_err(Error::msg)?;
     let n = args.get_parse("n", 16usize).map_err(Error::msg)?;
     let layers = args.get_parse("layers", 1usize).map_err(Error::msg)?;
@@ -505,9 +552,15 @@ where
             let c: f64 = v.parse().map_err(|e| Error::msg(format!("--step-clamp {v:?}: {e}")))?;
             (c > 0.0).then_some(c)
         }
-        None if mode == ForwardMode::QuasiDeer => Some(1.0), // trained-cell safeguard
+        None if modes.contains(&ForwardMode::QuasiDeer) => Some(1.0), // trained-cell safeguard
         None => None,
     };
+
+    // --shards <S>: windowed DEER — every fused solve shards T into S
+    // windows of W = ⌈T/S⌉ (exact stitching, bitwise at one thread) and
+    // the backward chains the dual scan across boundaries, so peak solver
+    // memory is O(B·W·jac) instead of O(B·T·jac).
+    let shards = args.get_parse("shards", 1usize).map_err(Error::msg)?;
 
     // --hybrid-threshold <r>: the Full→DiagonalApprox endgame switch point
     // of `--mode hybrid` (ignored by the other modes).
@@ -530,16 +583,21 @@ where
         mode,
         batch,
         lr,
-        threads: if mode == ForwardMode::Seq { 1 } else { threads },
+        threads: if modes.iter().all(|m| *m == ForwardMode::Seq) { 1 } else { threads },
         seed,
         step_clamp,
         hybrid_threshold,
         damping_lambda0,
         verbose: args.switch("verbose"),
         lr_schedule,
+        shards,
+        layer_modes,
         ..Default::default()
     };
     let mut rng = Rng::new(0xDEE2 ^ seed);
+    // run tag: a mixed per-layer list labels as e.g. "deer-seq"
+    let mode_tag =
+        modes.iter().map(|m| m.label()).collect::<Vec<_>>().join("-");
 
     // stack L cells: layer 0 reads the data channels, layers 1.. read the
     // layer-below state (that's 2n for the interleaved-state diag-lstm,
@@ -579,9 +637,8 @@ where
             (
                 TrainLoop::new(model, data, cfg)?,
                 format!(
-                    "train_native_worms{}{cell_tag}_{}_l{layers}",
+                    "train_native_worms{}{cell_tag}_{mode_tag}_l{layers}",
                     if full { "_full" } else { "" },
-                    mode.label()
                 ),
             )
         }
@@ -597,7 +654,7 @@ where
             )?;
             (
                 TrainLoop::new(model, data, cfg)?,
-                format!("train_native_twobody{cell_tag}_{}_l{layers}", mode.label()),
+                format!("train_native_twobody{cell_tag}_{mode_tag}_l{layers}"),
             )
         }
         other => bail!("unknown native experiment {other} (worms|worms-full|twobody)"),
@@ -613,8 +670,7 @@ where
     }
 
     println!(
-        "native trainer: exp={exp} cell={cell_kind} mode={} layers={layers} steps={steps} batch={batch} lr={lr} schedule={} threads={}",
-        mode.label(),
+        "native trainer: exp={exp} cell={cell_kind} mode={mode_tag} layers={layers} steps={steps} batch={batch} lr={lr} schedule={} threads={} shards={shards}",
         tl.cfg.lr_schedule.label(),
         tl.cfg.threads
     );
@@ -669,7 +725,7 @@ where
         ),
         _ => println!("final: train loss {train_loss:.6} | val loss {val_loss:.6}"),
     }
-    if mode != ForwardMode::Seq {
+    if modes.iter().any(|m| *m != ForwardMode::Seq) {
         let st = &tl.stats;
         let solved = st.sequences_solved.max(1);
         println!(

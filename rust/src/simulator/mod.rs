@@ -293,6 +293,31 @@ pub fn deer_memory_bytes_elk(
         + (batch * (4 * elem + 1)) as u64
 }
 
+/// Resident working set of the **sharded** (windowed) DEER solve
+/// ([`crate::deer::deer_rnn_sharded`]): the O(B·T·(jac + 3n)) per-sweep
+/// slabs of the unsharded solve shrink to window granularity — only one
+/// window's worth of Jacobian/rhs/trial scratch (at W = ⌈T/S⌉ steps) is
+/// live at a time — while the O(B·T·n) trajectory iterate and the
+/// O(B·S·n) boundary states stay resident. This is the penalty-stitched
+/// footprint with all B·S window rows solved fused; grouped dispatch and
+/// a streaming input loader only shrink it further, and exact stitching
+/// adds one more `B·T·n` trial slab — so the value is the conservative
+/// ceiling for the default sharded paths. `shards = 1` degenerates to
+/// [`deer_memory_bytes_structured`] plus the trajectory/boundary terms.
+pub fn deer_memory_bytes_sharded(
+    n: usize,
+    t_len: usize,
+    batch: usize,
+    elem: usize,
+    structure: JacobianStructure,
+    shards: usize,
+) -> u64 {
+    let w = t_len.div_ceil(shards.max(1));
+    let traj = (batch * t_len * n * elem) as u64;
+    let bounds = (batch * shards.max(1) * n * elem) as u64;
+    traj + bounds + deer_memory_bytes_structured(n, w, batch, elem, structure)
+}
+
 /// Simulated time of the **sequential** RNN forward on `dev`:
 /// `T` dependent steps, each one small kernel.
 pub fn sim_seq_forward<S: Scalar, C: Cell<S>>(
@@ -476,6 +501,40 @@ pub fn sim_deer_forward_damped_structured<S: Scalar, C: Cell<S>>(
         gtmult: plain.gtmult,
         invlin: invlin * per_iter * trials,
         oom: deer_memory_bytes_elk(n, t_len, batch, 4, structure) > dev.mem_bytes,
+    }
+}
+
+/// Simulated **sharded** DEER forward
+/// ([`crate::deer::deer_rnn_sharded`], penalty stitching): each outer
+/// stitch iteration solves all B·S windows of length W = ⌈T/S⌉ as fused
+/// batch rows — the same FUNCEVAL/GTMULT element grid as the unsharded
+/// solve (B·S·W ≈ B·T elements) but an INVLIN whose scan depth is
+/// log₂(W), not log₂(T) — and `stitch_iters` outer iterations price the
+/// boundary fixed-point loop (≤ S_eff + 1; warm-started boundaries cut it
+/// to the confirming pass). The OOM check uses
+/// [`deer_memory_bytes_sharded`] — the whole point of sharding: the
+/// configuration fits where the unsharded working set does not.
+pub fn sim_deer_forward_sharded<S: Scalar, C: Cell<S>>(
+    dev: &Device,
+    cell: &C,
+    batch: usize,
+    t_len: usize,
+    iters: usize,
+    structure: JacobianStructure,
+    shards: usize,
+    stitch_iters: usize,
+) -> SimBreakdown {
+    let n = cell.state_dim();
+    let shards = shards.max(1);
+    let w = t_len.div_ceil(shards);
+    let s_eff = t_len.div_ceil(w);
+    let one = sim_deer_forward_structured(dev, cell, batch * s_eff, w, iters, structure);
+    let outer = stitch_iters.max(1) as f64;
+    SimBreakdown {
+        funceval: one.funceval * outer,
+        gtmult: one.gtmult * outer,
+        invlin: one.invlin * outer,
+        oom: deer_memory_bytes_sharded(n, t_len, batch, 4, structure, shards) > dev.mem_bytes,
     }
 }
 

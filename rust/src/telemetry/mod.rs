@@ -317,10 +317,16 @@ pub enum Counter {
     ScanCyclicReduction,
     /// Events dropped by the per-thread buffer cap.
     EventsDropped,
+    /// Sharded (windowed) DEER solves dispatched.
+    ShardSolves,
+    /// Individual window solves inside sharded dispatches.
+    ShardWindows,
+    /// Outer multiple-shooting stitch iterations (penalty mode).
+    StitchIters,
 }
 
 impl Counter {
-    pub const ALL: [Counter; 15] = [
+    pub const ALL: [Counter; 18] = [
         Counter::BatchedSolves,
         Counter::SequencesSolved,
         Counter::GroupsSplit,
@@ -336,6 +342,9 @@ impl Counter {
         Counter::ScanChunked,
         Counter::ScanCyclicReduction,
         Counter::EventsDropped,
+        Counter::ShardSolves,
+        Counter::ShardWindows,
+        Counter::StitchIters,
     ];
 
     pub fn name(self) -> &'static str {
@@ -355,6 +364,9 @@ impl Counter {
             Counter::ScanChunked => "scan_chunked",
             Counter::ScanCyclicReduction => "scan_cyclic_reduction",
             Counter::EventsDropped => "events_dropped",
+            Counter::ShardSolves => "shard_solves",
+            Counter::ShardWindows => "shard_windows",
+            Counter::StitchIters => "stitch_iters",
         }
     }
 }
@@ -431,17 +443,24 @@ pub enum Histogram {
     ScanLen,
     /// Rows per fused coordinator group.
     GroupRows,
+    /// Outer stitch iterations per sharded solve (1 under exact stitching).
+    StitchItersPerSolve,
 }
 
 impl Histogram {
-    pub const ALL: [Histogram; 3] =
-        [Histogram::SweepsPerSolve, Histogram::ScanLen, Histogram::GroupRows];
+    pub const ALL: [Histogram; 4] = [
+        Histogram::SweepsPerSolve,
+        Histogram::ScanLen,
+        Histogram::GroupRows,
+        Histogram::StitchItersPerSolve,
+    ];
 
     pub fn name(self) -> &'static str {
         match self {
             Histogram::SweepsPerSolve => "sweeps_per_solve",
             Histogram::ScanLen => "scan_len",
             Histogram::GroupRows => "group_rows",
+            Histogram::StitchItersPerSolve => "stitch_iters_per_solve",
         }
     }
 }

@@ -65,6 +65,7 @@ use crate::coordinator::warmstart::WarmStartCache;
 use crate::data::{Dataset, Split};
 use crate::deer::grad::deer_rnn_backward_batch_damped_io;
 use crate::deer::newton::{effective_structure, JacobianMode};
+use crate::deer::sharded::deer_rnn_backward_sharded;
 use crate::deer::seq::{seq_rnn, seq_rnn_backward_io, seq_rnn_batch};
 use crate::train::CurvePoint;
 use crate::util::err::Result;
@@ -114,6 +115,12 @@ impl ForwardMode {
                 "unknown forward mode {other:?} (seq|deer|quasi|hybrid|elk|quasi-elk)"
             )),
         }
+    }
+
+    /// Parse a comma-separated per-layer mode list (`deer,seq` → layer 0
+    /// fused DEER, layer 1 sequential). A single token means "every layer".
+    pub fn parse_modes(s: &str) -> Result<Vec<ForwardMode>, String> {
+        s.split(',').map(|tok| ForwardMode::parse(tok.trim())).collect()
     }
 
     pub fn label(&self) -> &'static str {
@@ -198,6 +205,19 @@ pub struct TrainConfig {
     /// Learning-rate schedule ([`LrSchedule::Constant`] by default —
     /// bitwise identical to the unscheduled optimizer).
     pub lr_schedule: LrSchedule,
+    /// Sequence shards S for windowed DEER (`--shards`): each fused solve
+    /// runs T as S windows of W = ⌈T/S⌉ through the executor's sharded
+    /// dispatch, and the backward pass chains the dual scan across window
+    /// boundaries ([`crate::deer::sharded`]) — peak solver memory drops
+    /// from O(B·T·jac) to O(B·W·jac) while exact stitching keeps
+    /// trajectories AND gradients bitwise-identical to the unsharded path
+    /// at `threads = 1`. `1` (default) = unsharded. Seq layers ignore it;
+    /// the damped ELK arms reject it (the sharded dual is undamped-only).
+    pub shards: usize,
+    /// Per-layer engine override (`--mode deer,seq`): index = layer. None
+    /// ⇒ every layer runs [`TrainConfig::mode`]. Length must equal the
+    /// model's layer count.
+    pub layer_modes: Option<Vec<ForwardMode>>,
 }
 
 impl Default for TrainConfig {
@@ -217,6 +237,8 @@ impl Default for TrainConfig {
             verbose: false,
             reuse_jacobians: true,
             lr_schedule: LrSchedule::Constant,
+            shards: 1,
+            layer_modes: None,
         }
     }
 }
@@ -228,6 +250,23 @@ impl TrainConfig {
     pub fn effective_lambda0(&self) -> Option<f64> {
         self.damping_lambda0
             .or_else(|| self.mode.is_elk().then_some(1.0))
+    }
+
+    /// The engine layer `l` dispatches through: its [`TrainConfig::layer_modes`]
+    /// entry when the per-layer list is set, [`TrainConfig::mode`] otherwise.
+    pub fn mode_for_layer(&self, l: usize) -> ForwardMode {
+        self.layer_modes
+            .as_ref()
+            .and_then(|v| v.get(l).copied())
+            .unwrap_or(self.mode)
+    }
+
+    /// Layer-aware [`TrainConfig::effective_lambda0`]: the explicit
+    /// override still applies to every layer; otherwise only layers whose
+    /// per-layer mode is an ELK arm get the damped default.
+    pub fn lambda0_for_layer(&self, l: usize) -> Option<f64> {
+        self.damping_lambda0
+            .or_else(|| self.mode_for_layer(l).is_elk().then_some(1.0))
     }
 }
 
@@ -261,6 +300,13 @@ pub struct TrainStats {
     pub diverged_error_growth: u64,
     /// Per-sequence Hybrid Full→Diagonal endgame switches.
     pub hybrid_switches: u64,
+    /// Sharded (windowed) fused solves dispatched (`--shards` > 1).
+    pub shard_solves: u64,
+    /// Window-rows solved across all sharded dispatches.
+    pub shard_windows: u64,
+    /// Outer stitch iterations summed over sharded solves (exact
+    /// stitching contributes 1 per solve).
+    pub stitch_iters: u64,
 }
 
 /// Per-step outcome.
@@ -341,6 +387,29 @@ impl<C: CellGrad<f32>> TrainLoop<C> {
                 if tg.k != model.k {
                     bail!("target dim {} vs {}-output head", tg.k, model.k);
                 }
+            }
+        }
+        if let Some(modes) = &cfg.layer_modes {
+            if modes.len() != model.layers() {
+                bail!(
+                    "--mode lists {} per-layer entries for a {}-layer model",
+                    modes.len(),
+                    model.layers()
+                );
+            }
+        }
+        if cfg.shards == 0 {
+            bail!("--shards must be ≥ 1");
+        }
+        if cfg.shards > 1 {
+            let damped = cfg.damping_lambda0.is_some()
+                || (0..model.layers()).any(|l| cfg.mode_for_layer(l).is_elk());
+            if damped {
+                bail!(
+                    "--shards is incompatible with the damped ELK arms (the sharded \
+                     window-chained backward is undamped-only): drop --lambda0 / use \
+                     deer|quasi|hybrid|seq"
+                );
             }
         }
         let p = model.num_params();
@@ -502,20 +571,24 @@ impl<C: CellGrad<f32>> TrainLoop<C> {
         let n = cell.state_dim();
         let m = cell.input_dim();
         let h0s = vec![0.0f32; b * n];
-        match self.cfg.mode {
+        let mode = self.cfg.mode_for_layer(l);
+        match mode {
             ForwardMode::Seq => (seq_rnn_batch(cell, &h0s, input, b), None, vec![0.0; b]),
             ForwardMode::Deer
             | ForwardMode::QuasiDeer
             | ForwardMode::Hybrid
             | ForwardMode::Elk
             | ForwardMode::QuasiElk => {
-                let jacobian_mode = self.cfg.mode.jacobian_mode();
+                let jacobian_mode = mode.jacobian_mode();
                 let structure = effective_structure(cell, jacobian_mode);
                 let jl = structure.jac_len(n);
                 // Hybrid never reuses forward Jacobians: the endgame switch
                 // leaves them in the diagonal layout while the backward pass
-                // runs the exact dense dual scan.
-                let reuse = self.cfg.reuse_jacobians && self.cfg.mode != ForwardMode::Hybrid;
+                // runs the exact dense dual scan. Sharded solves never
+                // retain them either (they only exist per window).
+                let reuse = self.cfg.reuse_jacobians
+                    && mode != ForwardMode::Hybrid
+                    && self.cfg.shards == 1;
                 let mut ex = BatchExecutor::new(
                     cell,
                     t_len,
@@ -541,8 +614,9 @@ impl<C: CellGrad<f32>> TrainLoop<C> {
                 ex.policy.jacobian_mode = jacobian_mode;
                 ex.policy.step_clamp = self.cfg.step_clamp;
                 ex.policy.hybrid_threshold = self.cfg.hybrid_threshold;
-                ex.policy.damping_lambda0 = self.cfg.effective_lambda0();
+                ex.policy.damping_lambda0 = self.cfg.lambda0_for_layer(l);
                 ex.keep_jacobians = reuse;
+                ex.shards = self.cfg.shards;
                 std::mem::swap(&mut ex.cache, &mut self.caches[l]);
 
                 let mut replies = Vec::with_capacity(b);
@@ -564,6 +638,9 @@ impl<C: CellGrad<f32>> TrainLoop<C> {
                 self.stats.diverged_max_iters += ex.stats.diverged_max_iters;
                 self.stats.diverged_error_growth += ex.stats.diverged_error_growth;
                 self.stats.hybrid_switches += ex.stats.hybrid_switches;
+                self.stats.shard_solves += ex.stats.shard_solves;
+                self.stats.shard_windows += ex.stats.shard_windows;
+                self.stats.stitch_iters += ex.stats.stitch_iters;
                 assert_eq!(replies.len(), b, "one reply per minibatch sequence");
 
                 // scatter replies back into submission order; rows may
@@ -704,7 +781,7 @@ impl<C: CellGrad<f32>> TrainLoop<C> {
             let h0s = vec![0.0f32; b * n];
             let want_dx = l > 0;
             let range = self.model.layer_param_range(l);
-            match self.cfg.mode {
+            match self.cfg.mode_for_layer(l) {
                 ForwardMode::Seq => {
                     // BPTT, sequential per sequence (the baseline's backward)
                     let mut dtheta = vec![0.0f32; cell.num_params()];
@@ -740,7 +817,7 @@ impl<C: CellGrad<f32>> TrainLoop<C> {
                         Some((_, st)) => *st,
                         None => effective_structure(
                             cell,
-                            match self.cfg.mode {
+                            match self.cfg.mode_for_layer(l) {
                                 ForwardMode::QuasiDeer | ForwardMode::QuasiElk => {
                                     JacobianMode::DiagonalApprox
                                 }
@@ -753,24 +830,43 @@ impl<C: CellGrad<f32>> TrainLoop<C> {
                     // re-solve the damped dual with each row's last
                     // accepted λ; all-zero λ routes to the plain scan
                     // bitwise, so this is a no-op outside damping.
-                    let damping: Option<&[f32]> = if self.cfg.effective_lambda0().is_some() {
+                    let damping: Option<&[f32]> = if self.cfg.lambda0_for_layer(l).is_some() {
                         Some(&layer_lambdas[l])
                     } else {
                         None
                     };
-                    let g = deer_rnn_backward_batch_damped_io(
-                        cell,
-                        &h0s,
-                        input,
-                        ys,
-                        &gs_cur,
-                        jac_ref,
-                        structure,
-                        damping,
-                        self.cfg.threads,
-                        b,
-                        want_dx,
-                    );
+                    let g = if self.cfg.shards > 1 {
+                        // window-chained dual scan: recomputes Jacobians one
+                        // window at a time, so peak backward memory matches
+                        // the forward's O(B·W·jac); bitwise-equal to the
+                        // full reverse scan at threads = 1
+                        deer_rnn_backward_sharded(
+                            cell,
+                            &h0s,
+                            input,
+                            ys,
+                            &gs_cur,
+                            structure,
+                            self.cfg.threads,
+                            b,
+                            self.cfg.shards,
+                            want_dx,
+                        )
+                    } else {
+                        deer_rnn_backward_batch_damped_io(
+                            cell,
+                            &h0s,
+                            input,
+                            ys,
+                            &gs_cur,
+                            jac_ref,
+                            structure,
+                            damping,
+                            self.cfg.threads,
+                            b,
+                            want_dx,
+                        )
+                    };
                     grad[range].copy_from_slice(&g.dtheta);
                     if let Some(d) = g.dxs {
                         gs_cur = d;
@@ -1133,6 +1229,125 @@ mod tests {
         let (eval_loss, eval_acc) = tl.eval(Split::Val);
         assert!(eval_loss.is_finite());
         assert!(eval_acc.is_none());
+    }
+
+    /// Trainer-level half of the shard agreement pin (ISSUE: T = 8k,
+    /// S = 4): with exact stitching, `reuse_jacobians = false` (so both
+    /// arms differentiate along the converged trajectory) and one thread,
+    /// the sharded trainer's loss AND flat gradient are bitwise-identical
+    /// to the unsharded trainer's — and whole optimizer steps stay bitwise.
+    #[test]
+    fn sharded_trainer_matches_unsharded_bitwise_at_8k() {
+        let t = 8192;
+        let mk = |shards: usize| {
+            let mut rng = Rng::new(21);
+            let cell: Gru<f32> = Gru::new(3, crate::data::worms::CHANNELS, &mut rng);
+            let model =
+                Model::new(cell, crate::data::worms::CLASSES, Readout::LastState, &mut rng);
+            TrainLoop::new(
+                model,
+                worms_task(6, t, 5),
+                TrainConfig {
+                    mode: ForwardMode::Deer,
+                    batch: 2,
+                    seed: 21,
+                    shards,
+                    reuse_jacobians: false,
+                    ..Default::default()
+                },
+            )
+            .unwrap()
+        };
+        let mut plain = mk(1);
+        let mut sharded = mk(4);
+        let rows: Vec<usize> = vec![0, 1];
+        let ga = plain.grad_minibatch(&rows);
+        let gb = sharded.grad_minibatch(&rows);
+        assert_eq!(ga.loss, gb.loss, "sharded forward must reproduce the loss bitwise");
+        assert_eq!(ga.grad, gb.grad, "sharded backward must reproduce the gradient bitwise");
+        assert_eq!(sharded.stats.shard_solves, 1);
+        assert_eq!(sharded.stats.shard_windows, (rows.len() * 4) as u64);
+        assert_eq!(sharded.stats.stitch_iters, 1, "exact stitching = one outer pass");
+        assert_eq!(plain.stats.shard_solves, 0);
+        let sa = plain.step();
+        let sb = sharded.step();
+        assert_eq!(sa.loss, sb.loss);
+        assert_eq!(plain.params(), sharded.params(), "optimizer steps stay bitwise");
+    }
+
+    /// Satellite: per-layer `--mode deer,seq` — layer 0 runs fused DEER,
+    /// layer 1 runs sequential BPTT — trains with the dispatch counters
+    /// proving the split, and rejects a wrong-length mode list.
+    #[test]
+    fn mixed_mode_stack_trains_with_split_dispatch() {
+        let layers = 2;
+        let mut rng = Rng::new(31);
+        let cells: Vec<Gru<f32>> = (0..layers)
+            .map(|l| {
+                let m = if l == 0 { crate::data::worms::CHANNELS } else { 4 };
+                Gru::new(4, m, &mut rng)
+            })
+            .collect();
+        let model =
+            Model::stacked(cells, crate::data::worms::CLASSES, Readout::LastState, &mut rng)
+                .unwrap();
+        let cfg = TrainConfig {
+            mode: ForwardMode::Deer,
+            layer_modes: Some(ForwardMode::parse_modes("deer,seq").unwrap()),
+            batch: 4,
+            seed: 31,
+            ..Default::default()
+        };
+        let mut tl = TrainLoop::new(model.clone(), worms_task(16, 24, 7), cfg).unwrap();
+        let steps = 3;
+        tl.run(steps).unwrap();
+        assert!(tl.curve.iter().all(|p| p.loss.is_finite()));
+        assert_eq!(tl.stats.solves_per_layer[0], steps as u64, "layer 0 is fused DEER");
+        assert_eq!(tl.stats.solves_per_layer[1], 0, "layer 1 is sequential BPTT");
+        assert_eq!(tl.stats.batched_solves, steps as u64);
+        // wrong-length list is a clean error
+        let bad = TrainConfig {
+            layer_modes: Some(vec![ForwardMode::Deer]),
+            batch: 4,
+            ..Default::default()
+        };
+        let err = TrainLoop::new(model, worms_task(16, 24, 7), bad).unwrap_err();
+        assert!(err.to_string().contains("per-layer"), "{err}");
+    }
+
+    /// `--shards` composes with the damped arms only by rejection: the
+    /// sharded backward is undamped-only, so ELK + shards is a clean error.
+    #[test]
+    fn shards_reject_damped_arms() {
+        let mut rng = Rng::new(33);
+        let cell: Gru<f32> = Gru::new(4, crate::data::worms::CHANNELS, &mut rng);
+        let model = Model::new(cell, crate::data::worms::CLASSES, Readout::LastState, &mut rng);
+        let err = TrainLoop::new(
+            model.clone(),
+            worms_task(16, 24, 7),
+            TrainConfig { mode: ForwardMode::Elk, shards: 4, batch: 4, ..Default::default() },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("shards"), "{err}");
+        let err = TrainLoop::new(
+            model.clone(),
+            worms_task(16, 24, 7),
+            TrainConfig {
+                mode: ForwardMode::Deer,
+                damping_lambda0: Some(1.0),
+                shards: 2,
+                batch: 4,
+                ..Default::default()
+            },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("shards"), "{err}");
+        assert!(TrainLoop::new(
+            model,
+            worms_task(16, 24, 7),
+            TrainConfig { mode: ForwardMode::Seq, shards: 0, batch: 4, ..Default::default() },
+        )
+        .is_err());
     }
 
     #[test]

@@ -39,13 +39,15 @@ DEER_BENCH_FAST=1 cargo run --release --bin deer -- \
     bench --exp simd --simd-out "$FRESH_DIR/BENCH_simd.json" --results results/compare
 DEER_BENCH_FAST=1 cargo run --release --bin deer -- \
     bench --exp calib --calib-out "$FRESH_DIR/BENCH_calib.json" --results results/compare
+DEER_BENCH_FAST=1 cargo run --release --bin deer -- \
+    bench --exp shard --shard-out "$FRESH_DIR/BENCH_shard.json" --results results/compare
 
 python3 - "$ROOT" "$FRESH_DIR" "$THRESHOLD" <<'EOF'
 import json, os, shutil, subprocess, sys
 
 root, fresh_dir, threshold = sys.argv[1], sys.argv[2], float(sys.argv[3])
 NAMES = ("BENCH_scan.json", "BENCH_batch.json", "BENCH_train.json", "BENCH_block.json",
-         "BENCH_elk.json", "BENCH_simd.json", "BENCH_calib.json")
+         "BENCH_elk.json", "BENCH_simd.json", "BENCH_calib.json", "BENCH_shard.json")
 # metric fields treated as ns/step costs (lower is better)
 COST_FIELDS = (
     "dense_ns_per_step", "diag_ns_per_step",
@@ -238,6 +240,53 @@ if os.path.exists(simd_path):
                     f"{p['speedup']:.2f}x < 2x")
     if gated == 0 and enforce:
         failures.append("BENCH_simd.json: no diagonal n >= 16 point to gate on")
+
+# Shard (windowed DEER) gate, baseline-armed like the train/block gates:
+#  1. resident memory — the S=8 windowed plan must stay below 25% of the
+#     unsharded (S=1) plan's resident bytes at the shared (n, T, batch)
+#     point (planner arithmetic, so deterministic once armed);
+#  2. exactness — every shard count's trajectory must match S=1 bitwise
+#     (max_err_vs_unsharded == 0 under exact stitching at one thread);
+#  3. the T=500k demo must be planner-proved unfittable unsharded AND have
+#     completed (converged) sharded within budget.
+shard_path = os.path.join(fresh_dir, "BENCH_shard.json")
+if os.path.exists(shard_path):
+    enforce = had_baseline["BENCH_shard.json"]
+    with open(shard_path) as f:
+        doc = json.load(f)
+    pts = {p["shards"]: p for p in doc.get("points", [])}
+    base_pt, s8 = pts.get(1), pts.get(8)
+    if base_pt is None or s8 is None:
+        if enforce:
+            failures.append("BENCH_shard.json: missing the S=1 or S=8 point for the memory gate")
+    else:
+        ratio = s8["resident_bytes"] / max(base_pt["resident_bytes"], 1)
+        bad = ratio >= 0.25
+        tag = "REGRESSION" if bad and enforce else ("over (advisory)" if bad else "ok")
+        print(f"shard gate n={s8['n']} T={s8['t']}: S=8 resident "
+              f"{s8['resident_bytes']/2**20:.1f} MiB vs S=1 "
+              f"{base_pt['resident_bytes']/2**20:.1f} MiB ({ratio*100:.1f}%) {tag}")
+        if bad and enforce:
+            failures.append(
+                f"BENCH_shard.json: S=8 resident bytes {ratio*100:.1f}% of unsharded >= 25%")
+    for p in doc.get("points", []):
+        if p["shards"] > 1 and p.get("max_err_vs_unsharded", 0.0) != 0.0:
+            msg = (f"BENCH_shard.json S={p['shards']}: trajectory differs from S=1 "
+                   f"(max |delta| {p['max_err_vs_unsharded']:.1e}) — exact stitching broke")
+            print(msg)
+            failures.append(msg)
+    demo = doc.get("demo")
+    if demo is not None:
+        ok = (not demo.get("fits_unsharded")) and demo.get("fits_sharded") and demo.get("converged")
+        tag = "ok" if ok else ("REGRESSION" if enforce else "bad (advisory)")
+        print(f"shard demo T={demo['t']}: unsharded fits={bool(demo.get('fits_unsharded'))}, "
+              f"S={demo['shards']} fits={bool(demo.get('fits_sharded'))}, "
+              f"converged={bool(demo.get('converged'))} in {demo.get('wall_secs', 0):.2f}s {tag}")
+        if not ok and enforce:
+            failures.append(
+                "BENCH_shard.json demo: expected unfittable-unsharded + converged-sharded at T=500k")
+    elif enforce:
+        failures.append("BENCH_shard.json: demo point missing")
 
 # Calibration gate: the simulator's per-phase cost model must not DRIFT away
 # from measurement. Armed only once BENCH_calib.json is git-tracked (pinned

@@ -32,6 +32,10 @@ KNOWN_NAMES = {
     "layer_solve",
     "batched_solve",
     "newton_sweep",
+    # windowed (sharded) DEER (deer/sharded.rs)
+    "shard_solve",
+    "shard_backward",
+    "stitch_iter",
     # per-phase timer spans (telemetry::Phase::label)
     "FUNCEVAL",
     "INVLIN",
