@@ -1,24 +1,105 @@
 //! HNN / NeuralODE training on two-body gravity (paper §4.2 / Fig. 4a–b).
 //!
-//! Trains the Hamiltonian Neural Network twice through PJRT artifacts —
-//! once rolling the NeuralODE out with **DEER** (`hnn_train_step_deer`) and
-//! once with the sequential **RK4** baseline (`hnn_train_step_rk4`) — on
-//! identical data and initialization, then reports loss-vs-step and
-//! loss-vs-wall-clock for both (the Fig. 4(a)/(b) comparison).
+//! Two execution paths over identical physics:
+//!
+//! * **Artifact path** (when PJRT artifacts exist, `make artifacts`):
+//!   trains the Hamiltonian Neural Network through the compiled
+//!   `hnn_train_step_deer` / `hnn_train_step_rk4` programs and reports
+//!   loss-vs-step and loss-vs-wall-clock (the Fig. 4(a)/(b) comparison).
+//! * **Native path** (no artifacts needed): the same A/B entirely in-crate —
+//!   ONE continuous-time `OdeCell<HamiltonianField>` trained twice from the
+//!   same init, once integrating sequentially with RK4 + BPTT and once
+//!   solving the same discretization grid with fused `deer_ode_batch` /
+//!   `deer_ode_backward_batch`. A pure engine A/B on one model.
 //!
 //! Run: `cargo run --release --example hnn_twobody -- [steps]`
 
-use deer::util::err::Result;
 use deer::data::twobody;
 use deer::metrics::Recorder;
 use deer::runtime::{Runtime, Tensor};
 use deer::train::Trainer;
+use deer::util::err::Result;
 
 fn main() -> Result<()> {
     let steps: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(60);
-    let rt = Runtime::load(&Runtime::default_dir())?;
+    match Runtime::load(&Runtime::default_dir()) {
+        Ok(rt) if rt.manifest.get("hnn_train_step_deer").is_some() => artifact_run(&rt, steps),
+        _ => {
+            println!("PJRT artifacts not found — running the native continuous-time path\n");
+            native_run(steps)
+        }
+    }
+}
+
+/// The in-crate A/B: sequential RK4 + BPTT vs fused DEER-ODE on one
+/// `OdeCell<HamiltonianField>` (energy regression over two-body rollouts).
+fn native_run(steps: usize) -> Result<()> {
+    use deer::cells::{HamiltonianField, OdeCell};
+    use deer::data::Split;
+    use deer::deer::Interp;
+    use deer::train::native::{
+        twobody_task, ForwardMode, Model, Readout, TrainConfig, TrainLoop,
+    };
+    use deer::util::rng::Rng;
+
+    let (rows, t_len, batch) = (40usize, 256usize, 8usize);
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(2);
+    let mut summary = Vec::new();
+    for (label, mode) in [("DEER-ODE", ForwardMode::Deer), ("seq-RK4", ForwardMode::Seq)] {
+        // identical data and init per arm: same seeds feed both runs
+        let mut rng = Rng::new(0xD0E);
+        let data = twobody_task(rows, t_len, 77);
+        let cell = OdeCell::new(
+            HamiltonianField::<f32>::new(twobody::STATE / 2, 32, &mut rng),
+            0.02,
+            1,
+            Interp::Midpoint,
+        );
+        let model = Model::stacked(vec![cell], 1, Readout::MeanPool, &mut rng)?;
+        let cfg = TrainConfig {
+            mode,
+            batch,
+            lr: 3e-3,
+            threads: if mode == ForwardMode::Seq { 1 } else { threads },
+            ..Default::default()
+        };
+        let mut tl = TrainLoop::new(model, data, cfg)?;
+        let t0 = std::time::Instant::now();
+        let mut last = f64::NAN;
+        for i in 0..steps {
+            let s = tl.step();
+            last = s.loss;
+            if i % 10 == 0 || i + 1 == steps {
+                println!(
+                    "{label:8} step {:4} [{:7.1?}] train {:.6}",
+                    s.step,
+                    t0.elapsed(),
+                    s.loss
+                );
+            }
+        }
+        let total = t0.elapsed().as_secs_f64();
+        let (val_loss, _) = tl.eval(Split::Val);
+        println!(
+            "{label}: {steps} steps in {total:.1} s ({:.3} s/step), final train {last:.6}, val {val_loss:.6}\n",
+            total / steps.max(1) as f64
+        );
+        summary.push((label, last, total));
+    }
+    let (deer, rk4) = (&summary[0], &summary[1]);
+    println!("final train loss: {} {:.6} vs {} {:.6}", deer.0, deer.1, rk4.0, rk4.1);
+    println!(
+        "wall-clock per step: DEER-ODE {:.3} s vs seq-RK4 {:.3} s (ratio {:.2}x)",
+        deer.2 / steps.max(1) as f64,
+        rk4.2 / steps.max(1) as f64,
+        rk4.2 / deer.2.max(1e-12)
+    );
+    Ok(())
+}
+
+fn artifact_run(rt: &Runtime, steps: usize) -> Result<()> {
     let rec = Recorder::new(&Recorder::default_dir())?;
-    let spec = rt.manifest.get("hnn_train_step_deer").expect("run `make artifacts`").clone();
+    let spec = rt.manifest.get("hnn_train_step_deer").expect("checked by caller").clone();
     let b = spec.meta["batch"] as usize;
     let l = spec.meta["grid"] as usize;
     println!("HNN: {} params, batch={b}, grid={l} time points", spec.meta["param_len"]);
@@ -33,7 +114,7 @@ fn main() -> Result<()> {
     let mut curves = Vec::new();
     for (label, artifact) in [("DEER", "hnn_train_step_deer"), ("RK4", "hnn_train_step_rk4")] {
         // identical init: both read hnn_train_step_deer's shipped params
-        let mut tr = Trainer::new(&rt, artifact, "hnn_train_step_deer")?;
+        let mut tr = Trainer::new(rt, artifact, "hnn_train_step_deer")?;
         let t0 = std::time::Instant::now();
         for i in 0..steps {
             let data = [

@@ -1,0 +1,311 @@
+//! [`DynCell`] — a closed enum over every discrete cell, so one `Model`
+//! can stack **heterogeneous** layers (`--cell gru,diag-gru`).
+//!
+//! `Model<S, C>` is generic over a single cell type; mixing cell kinds per
+//! layer therefore needs a sum type rather than trait objects (the
+//! [`Cell`]/[`CellGrad`] traits are not object-safe as used — `Model`
+//! derives `Clone`, and the executor takes cells by value). Every
+//! [`Cell`]/[`CellGrad`] method is delegated **explicitly**, including the
+//! defaulted ones: a default body on the enum would erase the per-cell
+//! overrides (GRU's fused batched kernels, LSTM/LEM's packed Block(2)
+//! kernels, the diagonal cells' structure reports), silently changing
+//! kernel dispatch and performance.
+//!
+//! Single-kind runs keep the concrete static dispatch (`main.rs` only
+//! switches to `DynCell` when the `--cell` list has ≥ 2 entries), so the
+//! homogeneous hot path pays no enum-matching cost.
+
+use super::{
+    Cell, CellGrad, DiagGru, DiagLstm, Elman, Gru, IndRnn, JacobianStructure, Lem, Lstm,
+};
+use crate::cells::ode_cell::OdeView;
+use crate::util::rng::Rng;
+use crate::util::scalar::Scalar;
+
+/// A discrete cell of runtime-chosen kind (one variant per concrete cell).
+#[derive(Debug, Clone)]
+pub enum DynCell<S: Scalar> {
+    /// Dense GRU (the paper's main benchmark subject).
+    Gru(Gru<S>),
+    /// Diagonal-recurrence GRU (natively `Diagonal` Jacobian).
+    DiagGru(DiagGru<S>),
+    /// Dense LSTM (natural Block(2) pairing).
+    Lstm(Lstm<S>),
+    /// Diagonal-recurrence LSTM (natively `Block(2)` Jacobian).
+    DiagLstm(DiagLstm<S>),
+    /// Elman RNN (simplest dense cell).
+    Elman(Elman<S>),
+    /// IndRNN (element-wise recurrence, natively `Diagonal`).
+    IndRnn(IndRnn<S>),
+    /// Long Expressive Memory (Block(2) pairing).
+    Lem(Lem<S>),
+}
+
+/// Delegate an expression to the wrapped concrete cell.
+macro_rules! each {
+    ($self:ident, $c:ident => $e:expr) => {
+        match $self {
+            DynCell::Gru($c) => $e,
+            DynCell::DiagGru($c) => $e,
+            DynCell::Lstm($c) => $e,
+            DynCell::DiagLstm($c) => $e,
+            DynCell::Elman($c) => $e,
+            DynCell::IndRnn($c) => $e,
+            DynCell::Lem($c) => $e,
+        }
+    };
+}
+
+impl<S: Scalar> DynCell<S> {
+    /// Construct a cell by its `--cell` name (`gru | diag-gru | lstm |
+    /// diag-lstm | elman | indrnn | lem`) with `n` states reading `m`
+    /// input channels.
+    pub fn parse(name: &str, n: usize, m: usize, rng: &mut Rng) -> Result<Self, String> {
+        Ok(match name {
+            "gru" => DynCell::Gru(Gru::new(n, m, rng)),
+            "diag-gru" => DynCell::DiagGru(DiagGru::new(n, m, rng)),
+            "lstm" => DynCell::Lstm(Lstm::new(n, m, rng)),
+            "diag-lstm" => DynCell::DiagLstm(DiagLstm::new(n, m, rng)),
+            "elman" => DynCell::Elman(Elman::new(n, m, rng)),
+            "indrnn" => DynCell::IndRnn(IndRnn::new(n, m, rng)),
+            "lem" => DynCell::Lem(Lem::new(n, m, rng)),
+            other => {
+                return Err(format!(
+                    "unknown cell {other:?} (gru|diag-gru|lstm|diag-lstm|elman|indrnn|lem)"
+                ))
+            }
+        })
+    }
+
+    /// The `--cell` name of the wrapped kind.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            DynCell::Gru(_) => "gru",
+            DynCell::DiagGru(_) => "diag-gru",
+            DynCell::Lstm(_) => "lstm",
+            DynCell::DiagLstm(_) => "diag-lstm",
+            DynCell::Elman(_) => "elman",
+            DynCell::IndRnn(_) => "indrnn",
+            DynCell::Lem(_) => "lem",
+        }
+    }
+}
+
+impl<S: Scalar> Cell<S> for DynCell<S> {
+    fn state_dim(&self) -> usize {
+        each!(self, c => c.state_dim())
+    }
+    fn input_dim(&self) -> usize {
+        each!(self, c => c.input_dim())
+    }
+    fn ws_len(&self) -> usize {
+        each!(self, c => c.ws_len())
+    }
+    fn step(&self, h: &[S], x: &[S], out: &mut [S], ws: &mut [S]) {
+        each!(self, c => c.step(h, x, out, ws))
+    }
+    fn jacobian(&self, h: &[S], x: &[S], out_f: &mut [S], out_jac: &mut [S], ws: &mut [S]) {
+        each!(self, c => c.jacobian(h, x, out_f, out_jac, ws))
+    }
+    fn jacobian_structure(&self) -> JacobianStructure {
+        each!(self, c => c.jacobian_structure())
+    }
+    fn block_k(&self) -> Option<usize> {
+        each!(self, c => c.block_k())
+    }
+    fn jacobian_block(&self, h: &[S], x: &[S], out_f: &mut [S], out_jblk: &mut [S], ws: &mut [S]) {
+        each!(self, c => c.jacobian_block(h, x, out_f, out_jblk, ws))
+    }
+    fn jacobian_block_pre(
+        &self,
+        h: &[S],
+        pre: &[S],
+        out_f: &mut [S],
+        out_jblk: &mut [S],
+        ws: &mut [S],
+    ) {
+        each!(self, c => c.jacobian_block_pre(h, pre, out_f, out_jblk, ws))
+    }
+    fn jacobian_block_batch(
+        &self,
+        hs: &[S],
+        xs: &[S],
+        out_f: &mut [S],
+        out_jblk: &mut [S],
+        ws: &mut [S],
+        batch: usize,
+    ) {
+        each!(self, c => c.jacobian_block_batch(hs, xs, out_f, out_jblk, ws, batch))
+    }
+    fn jacobian_pre_block_batch(
+        &self,
+        hs: &[S],
+        pres: &[S],
+        out_f: &mut [S],
+        out_jblk: &mut [S],
+        ws: &mut [S],
+        batch: usize,
+    ) {
+        each!(self, c => c.jacobian_pre_block_batch(hs, pres, out_f, out_jblk, ws, batch))
+    }
+    fn step_batch(&self, hs: &[S], xs: &[S], out: &mut [S], ws: &mut [S], batch: usize) {
+        each!(self, c => c.step_batch(hs, xs, out, ws, batch))
+    }
+    fn jacobian_batch(
+        &self,
+        hs: &[S],
+        xs: &[S],
+        out_f: &mut [S],
+        out_jac: &mut [S],
+        ws: &mut [S],
+        batch: usize,
+    ) {
+        each!(self, c => c.jacobian_batch(hs, xs, out_f, out_jac, ws, batch))
+    }
+    fn jacobian_diag_batch(
+        &self,
+        hs: &[S],
+        xs: &[S],
+        out_f: &mut [S],
+        out_jdiag: &mut [S],
+        ws: &mut [S],
+        batch: usize,
+    ) {
+        each!(self, c => c.jacobian_diag_batch(hs, xs, out_f, out_jdiag, ws, batch))
+    }
+    fn jacobian_pre_batch(
+        &self,
+        hs: &[S],
+        pres: &[S],
+        out_f: &mut [S],
+        out_jac: &mut [S],
+        ws: &mut [S],
+        batch: usize,
+    ) {
+        each!(self, c => c.jacobian_pre_batch(hs, pres, out_f, out_jac, ws, batch))
+    }
+    fn jacobian_diag_pre_batch(
+        &self,
+        hs: &[S],
+        pres: &[S],
+        out_f: &mut [S],
+        out_jdiag: &mut [S],
+        ws: &mut [S],
+        batch: usize,
+    ) {
+        each!(self, c => c.jacobian_diag_pre_batch(hs, pres, out_f, out_jdiag, ws, batch))
+    }
+    fn jacobian_diag(&self, h: &[S], x: &[S], out_f: &mut [S], out_jdiag: &mut [S], ws: &mut [S]) {
+        each!(self, c => c.jacobian_diag(h, x, out_f, out_jdiag, ws))
+    }
+    fn jacobian_diag_pre(
+        &self,
+        h: &[S],
+        pre: &[S],
+        out_f: &mut [S],
+        out_jdiag: &mut [S],
+        ws: &mut [S],
+    ) {
+        each!(self, c => c.jacobian_diag_pre(h, pre, out_f, out_jdiag, ws))
+    }
+    fn x_precompute_len(&self) -> usize {
+        each!(self, c => c.x_precompute_len())
+    }
+    fn precompute_x(&self, xs: &[S], out: &mut [S]) {
+        each!(self, c => c.precompute_x(xs, out))
+    }
+    fn jacobian_pre(&self, h: &[S], pre: &[S], out_f: &mut [S], out_jac: &mut [S], ws: &mut [S]) {
+        each!(self, c => c.jacobian_pre(h, pre, out_f, out_jac, ws))
+    }
+    fn ode_view(&self) -> Option<OdeView<'_, S>> {
+        each!(self, c => c.ode_view())
+    }
+    fn flops_step(&self) -> u64 {
+        each!(self, c => c.flops_step())
+    }
+    fn flops_jacobian(&self) -> u64 {
+        each!(self, c => c.flops_jacobian())
+    }
+}
+
+impl<S: Scalar> CellGrad<S> for DynCell<S> {
+    fn num_params(&self) -> usize {
+        each!(self, c => c.num_params())
+    }
+    fn params(&self) -> &[S] {
+        each!(self, c => c.params())
+    }
+    fn params_mut(&mut self) -> &mut [S] {
+        each!(self, c => c.params_mut())
+    }
+    fn load_params(&mut self, src: &[S]) {
+        each!(self, c => c.load_params(src))
+    }
+    fn vjp_step(
+        &self,
+        h: &[S],
+        x: &[S],
+        lambda: &[S],
+        dh: &mut [S],
+        dx: Option<&mut [S]>,
+        dtheta: &mut [S],
+        ws: &mut [S],
+    ) {
+        each!(self, c => c.vjp_step(h, x, lambda, dh, dx, dtheta, ws))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_covers_every_kind_and_rejects_unknown() {
+        let mut rng = Rng::new(7);
+        for name in ["gru", "diag-gru", "lstm", "diag-lstm", "elman", "indrnn", "lem"] {
+            let c: DynCell<f64> = DynCell::parse(name, 4, 3, &mut rng).unwrap();
+            assert_eq!(c.kind(), name);
+            assert_eq!(c.input_dim(), 3);
+            assert!(c.state_dim() == 4 || c.state_dim() == 8, "interleaved cells report 2n");
+        }
+        assert!(DynCell::<f64>::parse("nope", 4, 3, &mut rng).is_err());
+    }
+
+    #[test]
+    fn delegation_preserves_overrides_and_values() {
+        let mut rng = Rng::new(42);
+        let gru: Gru<f64> = Gru::new(3, 2, &mut rng);
+        let dyn_gru = DynCell::Gru(gru.clone());
+        // structure/precompute overrides survive the wrapper
+        assert_eq!(dyn_gru.jacobian_structure(), gru.jacobian_structure());
+        assert_eq!(dyn_gru.x_precompute_len(), gru.x_precompute_len());
+        assert_eq!(dyn_gru.num_params(), gru.num_params());
+        // step values are bitwise identical
+        let mut h = vec![0.0; 3];
+        let mut x = vec![0.0; 2];
+        rng.fill_normal(&mut h, 0.8);
+        rng.fill_normal(&mut x, 1.0);
+        let mut ws = vec![0.0; gru.ws_len()];
+        let (mut a, mut b) = (vec![0.0; 3], vec![0.0; 3]);
+        gru.step(&h, &x, &mut a, &mut ws);
+        dyn_gru.step(&h, &x, &mut b, &mut ws);
+        assert_eq!(a, b);
+
+        let mut rng2 = Rng::new(43);
+        let dlstm: DynCell<f64> = DynCell::parse("diag-lstm", 4, 3, &mut rng2).unwrap();
+        assert_eq!(dlstm.jacobian_structure(), JacobianStructure::Block { k: 2 });
+        assert_eq!(dlstm.block_k(), Some(2));
+    }
+
+    #[test]
+    fn mixed_stack_chains_dims() {
+        use crate::train::native::{Model, Readout};
+        let mut rng = Rng::new(11);
+        let l0: DynCell<f32> = DynCell::parse("gru", 6, 4, &mut rng).unwrap();
+        let l1: DynCell<f32> = DynCell::parse("diag-gru", 5, l0.state_dim(), &mut rng).unwrap();
+        let model = Model::stacked(vec![l0, l1], 3, Readout::LastState, &mut rng).unwrap();
+        assert_eq!(model.cells().len(), 2);
+        assert_eq!(model.cell(0).kind(), "gru");
+        assert_eq!(model.cell(1).kind(), "diag-gru");
+    }
+}

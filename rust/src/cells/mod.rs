@@ -66,19 +66,23 @@
 
 pub mod diag_gru;
 pub mod diag_lstm;
+pub mod dyn_cell;
 pub mod elman;
 pub mod gru;
 pub mod indrnn;
 pub mod lem;
 pub mod lstm;
+pub mod ode_cell;
 
 pub use diag_gru::DiagGru;
 pub use diag_lstm::DiagLstm;
+pub use dyn_cell::DynCell;
 pub use elman::Elman;
 pub use gru::Gru;
 pub use indrnn::IndRnn;
 pub use lem::Lem;
 pub use lstm::Lstm;
+pub use ode_cell::{HamiltonianField, MlpField, OdeCell, OdeField, OdeView};
 
 use crate::util::rng::Rng;
 use crate::util::scalar::Scalar;
@@ -430,6 +434,16 @@ pub trait Cell<S: Scalar>: Send + Sync {
     fn jacobian_pre(&self, h: &[S], pre: &[S], out_f: &mut [S], out_jac: &mut [S], ws: &mut [S]) {
         let _ = (h, pre, out_f, out_jac, ws);
         unimplemented!("cell does not support input precomputation")
+    }
+
+    /// Continuous-time interior, if this cell is an ODE flow map.
+    ///
+    /// Discrete cells return `None` (the default). [`OdeCell`] returns
+    /// `Some` — the trainer and `BatchExecutor` key on it to bypass the
+    /// per-step recurrence and solve the whole sequence with
+    /// [`crate::deer::deer_ode_batch`] on the grid `t_i = i·dt`.
+    fn ode_view(&self) -> Option<ode_cell::OdeView<'_, S>> {
+        None
     }
 
     /// Approximate FLOPs of one `step` (used by the accelerator cost model).

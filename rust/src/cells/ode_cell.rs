@@ -1,0 +1,1084 @@
+//! Trainable continuous-time cells: parametric vector fields wrapped as
+//! [`Cell`]/[`CellGrad`] so `Model`/`TrainLoop` run Seq(RK4)-vs-DEER-ODE
+//! as a pure A/B (paper §3.3/§4.2, the NeuralODE leg).
+//!
+//! An [`OdeField`] is an autonomous parametric vector field
+//! `ẏ = f_θ(y)` with an analytic Jacobian `∂f/∂y` and parameter VJPs —
+//! the continuous-time analogue of a [`CellGrad`]. Two heads ship:
+//!
+//! * [`MlpField`] — one-hidden-layer tanh MLP, the generic NeuralODE head.
+//!   Implements the **exact** second-order pullback
+//!   [`OdeField::vjp_jac_params`], so the DEER-ODE dual scan can account
+//!   for the Jacobian's parameter dependence.
+//! * [`HamiltonianField`] — `f = Ω∇H_θ` with a scalar MLP Hamiltonian
+//!   (Greydanus et al. 2019), the structure-preserving head for the
+//!   two-body experiment.
+//!
+//! [`OdeCell`] wraps a field plus a step size into a discrete
+//! [`CellGrad`]: its `step` is the classical RK4 flow map over
+//! `substeps` sub-intervals of `dt` (the Seq arm integrates the ODE
+//! sequentially with BPTT-through-RK4 via the analytic RK4 adjoint in
+//! [`CellGrad::vjp_step`]), while the DEER arms bypass the discrete step
+//! entirely: [`Cell::ode_view`] exposes the underlying field, and the
+//! executor/trainer dispatch the whole sequence to
+//! [`crate::deer::deer_ode_batch`] / `deer_ode_backward_batch` on the
+//! grid `t_i = i·dt`. Inputs do **not** enter the dynamics — the first
+//! input frame is the initial condition (`h0`), which both arms consume
+//! identically — so `input_dim() == state_dim()` and the cell is the
+//! continuous drop-in for the twobody trajectory-fitting task.
+
+use super::{init_uniform, Cell, CellGrad, JacobianStructure};
+use crate::deer::ode::Interp;
+use crate::util::rng::Rng;
+use crate::util::scalar::Scalar;
+
+/// An autonomous parametric vector field `ẏ = f_θ(y)` with analytic
+/// Jacobian and parameter VJPs — the continuous-time [`CellGrad`].
+///
+/// Methods may allocate small scratch `Vec`s internally: fields are
+/// evaluated per grid node outside the structured scan hot path, and the
+/// allocation keeps the trait object-safe (`&dyn OdeField` is what
+/// [`OdeView`] and the executor's `FieldSystem` adapter carry).
+pub trait OdeField<S: Scalar>: Send + Sync {
+    /// State dimension n.
+    fn dim(&self) -> usize;
+    /// Number of trainable parameters (flat layout).
+    fn num_params(&self) -> usize;
+    /// Flat parameter vector.
+    fn params(&self) -> &[S];
+    /// Mutable flat parameter vector.
+    fn params_mut(&mut self) -> &mut [S];
+
+    /// `out = f_θ(y)`.
+    fn f(&self, y: &[S], out: &mut [S]);
+    /// `out = ∂f/∂y` (row-major n×n).
+    fn jac(&self, y: &[S], out: &mut [S]);
+
+    /// Accumulate `dtheta += uᵀ ∂f/∂θ` (parameter leg only).
+    ///
+    /// This is the variant the DEER-ODE backward pass calls through the
+    /// executor's `&self`-shared system adapter, which cannot offer a
+    /// per-thread state-cotangent scratch buffer.
+    fn vjp_params(&self, y: &[S], u: &[S], dtheta: &mut [S]);
+
+    /// Accumulate the full pullback: `dy += uᵀ ∂f/∂y` and
+    /// `dtheta += uᵀ ∂f/∂θ` (the RK4-adjoint leg of the Seq arm).
+    fn vjp(&self, y: &[S], u: &[S], dy: &mut [S], dtheta: &mut [S]);
+
+    /// Accumulate `dtheta += Σ_{c,c'} w[c,c'] ∂J[c,c']/∂θ` — the pullback
+    /// through the Jacobian's own parameter dependence (`w` is a row-major
+    /// n×n cotangent on `J`).
+    ///
+    /// Default: no-op. Dropping this term truncates the DEER-ODE dual at
+    /// the same O(Δ²)-per-step order as the frozen-linearisation scan
+    /// itself (for `z = f − Jy` the `∂J/∂y` contributions cancel at
+    /// leading order because the linearisation is tangent), so the default
+    /// is consistent; [`MlpField`] implements it exactly.
+    fn vjp_jac_params(&self, y: &[S], w: &[S], dtheta: &mut [S]) {
+        let _ = (y, w, dtheta);
+    }
+
+    /// Structure of `∂f/∂y` — drives the packed-kernel dispatch of
+    /// [`crate::deer::deer_ode_batch`] exactly like
+    /// [`Cell::jacobian_structure`] does for the discrete path.
+    fn structure(&self) -> JacobianStructure {
+        JacobianStructure::Dense
+    }
+
+    /// Packed diagonal of `∂f/∂y` (length n). Only meaningful when
+    /// [`OdeField::structure`] is `Diagonal`.
+    fn jac_diag(&self, y: &[S], out: &mut [S]) {
+        let _ = (y, out);
+        unimplemented!("field does not have a diagonal Jacobian")
+    }
+}
+
+/// Borrowed view of a cell's continuous-time interior, exposed through
+/// [`Cell::ode_view`]. `Some(view)` is the dispatch signal the trainer and
+/// [`crate::coordinator::BatchExecutor`] key on to route a layer through
+/// `deer_ode_batch` on the cell-step grid `t_i = i·dt`; `substeps` only
+/// refines the Seq arm's RK4 flow inside one cell step.
+#[derive(Clone, Copy)]
+pub struct OdeView<'a, S: Scalar> {
+    /// The parametric vector field.
+    pub field: &'a dyn OdeField<S>,
+    /// Grid spacing of one discrete cell step.
+    pub dt: S,
+    /// RK4 sub-intervals per cell step on the Seq arm (≥ 1).
+    pub substeps: usize,
+    /// DEER-ODE interpolation rule (paper App. A.5/Table 3).
+    pub interp: Interp,
+}
+
+/// One-hidden-layer tanh MLP vector field: `f = W₂·tanh(W₁y + b₁) + b₂`.
+///
+/// Flat layout: `[W₁ (h×n row-major), b₁ (h), W₂ (n×h row-major), b₂ (n)]`.
+#[derive(Debug, Clone)]
+pub struct MlpField<S: Scalar> {
+    n: usize,
+    hidden: usize,
+    params: Vec<S>,
+}
+
+impl<S: Scalar> MlpField<S> {
+    /// New field with uniform(±1/√fan_in) initialisation per layer.
+    pub fn new(n: usize, hidden: usize, rng: &mut Rng) -> Self {
+        assert!(n > 0 && hidden > 0);
+        let p = hidden * n + hidden + n * hidden + n;
+        let mut params = vec![S::zero(); p];
+        let (l1, l2) = params.split_at_mut(hidden * n + hidden);
+        init_uniform(l1, n, rng);
+        init_uniform(l2, hidden, rng);
+        MlpField { n, hidden, params }
+    }
+
+    /// Hidden width.
+    pub fn hidden(&self) -> usize {
+        self.hidden
+    }
+
+    #[inline]
+    fn offsets(&self) -> (usize, usize, usize) {
+        let (n, h) = (self.n, self.hidden);
+        (h * n, h * n + h, h * n + h + n * h) // (b1, w2, b2)
+    }
+
+    /// tanh pre-activations and activations: `(t = tanh(W₁y + b₁))`.
+    fn hidden_act(&self, y: &[S]) -> Vec<S> {
+        let (n, h) = (self.n, self.hidden);
+        let (ob1, _, _) = self.offsets();
+        let w1 = &self.params[..h * n];
+        let b1 = &self.params[ob1..ob1 + h];
+        let mut t = vec![S::zero(); h];
+        for j in 0..h {
+            let mut a = b1[j];
+            for c in 0..n {
+                a += w1[j * n + c] * y[c];
+            }
+            t[j] = a.tanh();
+        }
+        t
+    }
+}
+
+impl<S: Scalar> OdeField<S> for MlpField<S> {
+    fn dim(&self) -> usize {
+        self.n
+    }
+    fn num_params(&self) -> usize {
+        self.params.len()
+    }
+    fn params(&self) -> &[S] {
+        &self.params
+    }
+    fn params_mut(&mut self) -> &mut [S] {
+        &mut self.params
+    }
+
+    fn f(&self, y: &[S], out: &mut [S]) {
+        let (n, h) = (self.n, self.hidden);
+        let (_, ow2, ob2) = self.offsets();
+        let t = self.hidden_act(y);
+        let w2 = &self.params[ow2..ow2 + n * h];
+        let b2 = &self.params[ob2..ob2 + n];
+        for i in 0..n {
+            let mut v = b2[i];
+            for j in 0..h {
+                v += w2[i * h + j] * t[j];
+            }
+            out[i] = v;
+        }
+    }
+
+    fn jac(&self, y: &[S], out: &mut [S]) {
+        let (n, h) = (self.n, self.hidden);
+        let (_, ow2, _) = self.offsets();
+        let t = self.hidden_act(y);
+        let w1 = &self.params[..h * n];
+        let w2 = &self.params[ow2..ow2 + n * h];
+        // J = W₂ · diag(1 − t²) · W₁
+        for i in 0..n {
+            for c in 0..n {
+                let mut v = S::zero();
+                for j in 0..h {
+                    let s = S::one() - t[j] * t[j];
+                    v += w2[i * h + j] * s * w1[j * n + c];
+                }
+                out[i * n + c] = v;
+            }
+        }
+    }
+
+    fn vjp_params(&self, y: &[S], u: &[S], dtheta: &mut [S]) {
+        let (n, h) = (self.n, self.hidden);
+        let (ob1, ow2, ob2) = self.offsets();
+        let t = self.hidden_act(y);
+        let w2 = &self.params[ow2..ow2 + n * h];
+        // db2 += u ; dW2[i,j] += u_i t_j ; v_j = s_j (W₂ᵀu)_j ;
+        // db1 += v ; dW1[j,c] += v_j y_c
+        for i in 0..n {
+            dtheta[ob2 + i] += u[i];
+            for j in 0..h {
+                dtheta[ow2 + i * h + j] += u[i] * t[j];
+            }
+        }
+        for j in 0..h {
+            let mut wu = S::zero();
+            for i in 0..n {
+                wu += w2[i * h + j] * u[i];
+            }
+            let v = (S::one() - t[j] * t[j]) * wu;
+            dtheta[ob1 + j] += v;
+            for c in 0..n {
+                dtheta[j * n + c] += v * y[c];
+            }
+        }
+    }
+
+    fn vjp(&self, y: &[S], u: &[S], dy: &mut [S], dtheta: &mut [S]) {
+        let (n, h) = (self.n, self.hidden);
+        let (ob1, ow2, ob2) = self.offsets();
+        let t = self.hidden_act(y);
+        let w1 = &self.params[..h * n];
+        let w2 = &self.params[ow2..ow2 + n * h];
+        for i in 0..n {
+            dtheta[ob2 + i] += u[i];
+            for j in 0..h {
+                dtheta[ow2 + i * h + j] += u[i] * t[j];
+            }
+        }
+        for j in 0..h {
+            let mut wu = S::zero();
+            for i in 0..n {
+                wu += w2[i * h + j] * u[i];
+            }
+            let v = (S::one() - t[j] * t[j]) * wu;
+            dtheta[ob1 + j] += v;
+            for c in 0..n {
+                dtheta[j * n + c] += v * y[c];
+                dy[c] += v * w1[j * n + c];
+            }
+        }
+    }
+
+    fn vjp_jac_params(&self, y: &[S], w: &[S], dtheta: &mut [S]) {
+        let (n, h) = (self.n, self.hidden);
+        let (ob1, ow2, _) = self.offsets();
+        let t = self.hidden_act(y);
+        let w1 = &self.params[..h * n];
+        let w2 = &self.params[ow2..ow2 + n * h];
+        // J[i,c] = Σ_j W2[i,j]·s_j·W1[j,c] with s_j = 1 − t_j², and the
+        // pre-activation a_j = (W1 y + b1)_j feeds s_j through s' = −2ts.
+        //   r1[j,c] = Σ_i W2[i,j]·w[i,c]      (h×n)
+        //   r2[i,j] = Σ_c w[i,c]·W1[j,c]      (n×h)
+        //   q_j     = Σ_c r1[j,c]·W1[j,c]
+        //   dW2[i,j] += s_j·r2[i,j]
+        //   dW1[j,c] += s_j·r1[j,c] + (−2 t_j s_j)·y_c·q_j
+        //   db1[j]   += (−2 t_j s_j)·q_j       (b2 does not enter J)
+        let two = S::from_f64c(2.0);
+        for j in 0..h {
+            let s = S::one() - t[j] * t[j];
+            let sp = -(two * t[j] * s);
+            let mut q = S::zero();
+            for c in 0..n {
+                let mut r1 = S::zero();
+                for i in 0..n {
+                    r1 += w2[i * h + j] * w[i * n + c];
+                }
+                q += r1 * w1[j * n + c];
+                dtheta[j * n + c] += s * r1;
+            }
+            for i in 0..n {
+                let mut r2 = S::zero();
+                for c in 0..n {
+                    r2 += w[i * n + c] * w1[j * n + c];
+                }
+                dtheta[ow2 + i * h + j] += s * r2;
+            }
+            for c in 0..n {
+                dtheta[j * n + c] += sp * y[c] * q;
+            }
+            dtheta[ob1 + j] += sp * q;
+        }
+    }
+}
+
+/// Hamiltonian vector field `f = Ω∇H_θ`, `H_θ = w₂ᵀ·tanh(W₁y + b₁)`,
+/// `Ω = [[0, I], [−I, 0]]` — state is `[q (d), p (d)]`, n = 2d.
+///
+/// Flat layout: `[W₁ (h×n row-major), b₁ (h), w₂ (h)]`. Energy is
+/// conserved along exact flows regardless of θ, which is what makes this
+/// the right head for the two-body problem (Greydanus et al. 2019).
+#[derive(Debug, Clone)]
+pub struct HamiltonianField<S: Scalar> {
+    d: usize,
+    hidden: usize,
+    params: Vec<S>,
+}
+
+impl<S: Scalar> HamiltonianField<S> {
+    /// New field on n = 2·`d` states with `hidden` tanh units.
+    pub fn new(d: usize, hidden: usize, rng: &mut Rng) -> Self {
+        assert!(d > 0 && hidden > 0);
+        let n = 2 * d;
+        let p = hidden * n + hidden + hidden;
+        let mut params = vec![S::zero(); p];
+        let (l1, l2) = params.split_at_mut(hidden * n + hidden);
+        init_uniform(l1, n, rng);
+        init_uniform(l2, hidden, rng);
+        HamiltonianField { d, hidden, params }
+    }
+
+    /// Scalar Hamiltonian `H_θ(y)` (energy readout for diagnostics).
+    pub fn energy(&self, y: &[S]) -> S {
+        let h = self.hidden;
+        let ow2 = h * (2 * self.d) + h;
+        let t = self.hidden_act(y);
+        let w2 = &self.params[ow2..ow2 + h];
+        let mut e = S::zero();
+        for j in 0..h {
+            e += w2[j] * t[j];
+        }
+        e
+    }
+
+    fn hidden_act(&self, y: &[S]) -> Vec<S> {
+        let (n, h) = (2 * self.d, self.hidden);
+        let w1 = &self.params[..h * n];
+        let b1 = &self.params[h * n..h * n + h];
+        let mut t = vec![S::zero(); h];
+        for j in 0..h {
+            let mut a = b1[j];
+            for c in 0..n {
+                a += w1[j * n + c] * y[c];
+            }
+            t[j] = a.tanh();
+        }
+        t
+    }
+
+    /// `g = ∇H` (length n).
+    fn grad_h(&self, t: &[S]) -> Vec<S> {
+        let (n, h) = (2 * self.d, self.hidden);
+        let w1 = &self.params[..h * n];
+        let w2 = &self.params[h * n + h..];
+        let mut g = vec![S::zero(); n];
+        for j in 0..h {
+            let s = S::one() - t[j] * t[j];
+            let sw = s * w2[j];
+            for c in 0..n {
+                g[c] += w1[j * n + c] * sw;
+            }
+        }
+        g
+    }
+}
+
+impl<S: Scalar> OdeField<S> for HamiltonianField<S> {
+    fn dim(&self) -> usize {
+        2 * self.d
+    }
+    fn num_params(&self) -> usize {
+        self.params.len()
+    }
+    fn params(&self) -> &[S] {
+        &self.params
+    }
+    fn params_mut(&mut self) -> &mut [S] {
+        &mut self.params
+    }
+
+    fn f(&self, y: &[S], out: &mut [S]) {
+        let d = self.d;
+        let t = self.hidden_act(y);
+        let g = self.grad_h(&t);
+        for k in 0..d {
+            out[k] = g[k + d];
+            out[k + d] = -g[k];
+        }
+    }
+
+    fn jac(&self, y: &[S], out: &mut [S]) {
+        let (d, h) = (self.d, self.hidden);
+        let n = 2 * d;
+        let w1 = &self.params[..h * n];
+        let w2 = &self.params[h * n + h..];
+        let t = self.hidden_act(y);
+        // Hess[c,c'] = Σ_j W1[j,c]·w2_j·(−2 t_j s_j)·W1[j,c']
+        let mut hess = vec![S::zero(); n * n];
+        let two = S::from_f64c(2.0);
+        for j in 0..h {
+            let s = S::one() - t[j] * t[j];
+            let coef = -(two * t[j] * s) * w2[j];
+            for c in 0..n {
+                let wc = w1[j * n + c] * coef;
+                for cc in 0..n {
+                    hess[c * n + cc] += wc * w1[j * n + cc];
+                }
+            }
+        }
+        // J = Ω·Hess: row k<d = Hess row k+d; row k≥d = −Hess row k−d.
+        for k in 0..d {
+            for cc in 0..n {
+                out[k * n + cc] = hess[(k + d) * n + cc];
+                out[(k + d) * n + cc] = -hess[k * n + cc];
+            }
+        }
+    }
+
+    fn vjp_params(&self, y: &[S], u: &[S], dtheta: &mut [S]) {
+        let mut dy_sink = vec![S::zero(); 2 * self.d];
+        self.vjp(y, u, &mut dy_sink, dtheta);
+    }
+
+    fn vjp(&self, y: &[S], u: &[S], dy: &mut [S], dtheta: &mut [S]) {
+        let (d, h) = (self.d, self.hidden);
+        let n = 2 * d;
+        let (ob1, ow2) = (h * n, h * n + h);
+        let w1 = &self.params[..h * n];
+        let w2 = &self.params[ow2..ow2 + h];
+        let t = self.hidden_act(y);
+        // v = Ωᵀu on the ∇H leg
+        let mut v = vec![S::zero(); n];
+        for c in 0..d {
+            v[c] = -u[c + d];
+            v[c + d] = u[c];
+        }
+        let two = S::from_f64c(2.0);
+        for j in 0..h {
+            let s = S::one() - t[j] * t[j];
+            let sp = -(two * t[j] * s); // s'(a) through a_j
+            let mut p = S::zero();
+            for c in 0..n {
+                p += w1[j * n + c] * v[c];
+            }
+            dtheta[ow2 + j] += s * p;
+            dtheta[ob1 + j] += w2[j] * sp * p;
+            let wsp = w2[j] * sp * p;
+            for c in 0..n {
+                dtheta[j * n + c] += w2[j] * (s * v[c] + sp * y[c] * p);
+                dy[c] += w1[j * n + c] * wsp;
+            }
+        }
+    }
+}
+
+/// A parametric vector field integrated as a discrete [`CellGrad`].
+///
+/// `step` is the RK4 flow map over `substeps` sub-intervals of `dt`
+/// (input-free: the per-step `x` is ignored — the first input frame is
+/// the trajectory's initial condition, consumed by the trainer before the
+/// recurrence starts). [`Cell::jacobian`] chains the analytic per-stage
+/// Jacobians through the RK4 tableau, and [`CellGrad::vjp_step`] is the
+/// exact discrete RK4 adjoint, so the Seq arm is honest
+/// BPTT-through-RK4. [`Cell::ode_view`] returns `Some`, which is what
+/// flips the trainer/executor onto the fused `deer_ode_batch` path.
+#[derive(Debug, Clone)]
+pub struct OdeCell<S: Scalar, F: OdeField<S>> {
+    field: F,
+    dt: S,
+    substeps: usize,
+    interp: Interp,
+}
+
+impl<S: Scalar, F: OdeField<S>> OdeCell<S, F> {
+    /// Wrap `field` with cell-step grid spacing `dt`, `substeps` RK4
+    /// sub-intervals per step on the Seq arm, and the DEER-ODE `interp`.
+    pub fn new(field: F, dt: f64, substeps: usize, interp: Interp) -> Self {
+        assert!(dt > 0.0, "--dt must be > 0");
+        assert!(substeps >= 1, "--substeps must be ≥ 1");
+        OdeCell { field, dt: S::from_f64c(dt), substeps, interp }
+    }
+
+    /// The wrapped field.
+    pub fn field(&self) -> &F {
+        &self.field
+    }
+
+    /// Cell-step grid spacing.
+    pub fn dt(&self) -> S {
+        self.dt
+    }
+
+    /// One RK4 substep `y ← y + h/6·(k1 + 2k2 + 2k3 + k4)` in place.
+    /// `ws` carries [k1 k2 k3 k4 ytmp] = 5n scratch.
+    fn rk4_substep(&self, y: &mut [S], h: S, ws: &mut [S]) {
+        let n = self.field.dim();
+        let half = S::from_f64c(0.5);
+        let sixth = S::from_f64c(1.0 / 6.0);
+        let two = S::from_f64c(2.0);
+        let (k1, rest) = ws.split_at_mut(n);
+        let (k2, rest) = rest.split_at_mut(n);
+        let (k3, rest) = rest.split_at_mut(n);
+        let (k4, rest) = rest.split_at_mut(n);
+        let ytmp = &mut rest[..n];
+        self.field.f(y, k1);
+        for i in 0..n {
+            ytmp[i] = y[i] + half * h * k1[i];
+        }
+        self.field.f(ytmp, k2);
+        for i in 0..n {
+            ytmp[i] = y[i] + half * h * k2[i];
+        }
+        self.field.f(ytmp, k3);
+        for i in 0..n {
+            ytmp[i] = y[i] + h * k3[i];
+        }
+        self.field.f(ytmp, k4);
+        let c = h * sixth;
+        for i in 0..n {
+            y[i] += c * (k1[i] + two * k2[i] + two * k3[i] + k4[i]);
+        }
+    }
+}
+
+/// `mat ← a·b` (n×n row-major).
+fn matmul_into<S: Scalar>(a: &[S], b: &[S], out: &mut [S], n: usize) {
+    for i in 0..n {
+        for c in 0..n {
+            let mut v = S::zero();
+            for j in 0..n {
+                v += a[i * n + j] * b[j * n + c];
+            }
+            out[i * n + c] = v;
+        }
+    }
+}
+
+impl<S: Scalar, F: OdeField<S>> Cell<S> for OdeCell<S, F> {
+    fn state_dim(&self) -> usize {
+        self.field.dim()
+    }
+    fn input_dim(&self) -> usize {
+        self.field.dim()
+    }
+    fn ws_len(&self) -> usize {
+        let n = self.field.dim();
+        self.substeps * n + 5 * n * n + 10 * n
+    }
+
+    fn step(&self, h: &[S], x: &[S], out: &mut [S], ws: &mut [S]) {
+        let _ = x; // autonomous flow: input only seeds h0 (trainer-side)
+        let n = self.field.dim();
+        let hs = self.dt / S::from_f64c(self.substeps as f64);
+        out.copy_from_slice(&h[..n]);
+        for _ in 0..self.substeps {
+            self.rk4_substep(out, hs, ws);
+        }
+    }
+
+    fn jacobian(&self, h: &[S], x: &[S], out_f: &mut [S], out_jac: &mut [S], ws: &mut [S]) {
+        let _ = x;
+        let n = self.field.dim();
+        let nn = n * n;
+        let hs = self.dt / S::from_f64c(self.substeps as f64);
+        let half = S::from_f64c(0.5);
+        let sixth = S::from_f64c(1.0 / 6.0);
+        let two = S::from_f64c(2.0);
+        // vectors: y k1 k2 k3 ytmp (5n) — k4 folds into the update;
+        // matrices: jt b a asum jtot (5n²)
+        let (vecs, mats) = ws.split_at_mut(self.substeps * n + 10 * n);
+        let (y, rest) = vecs.split_at_mut(n);
+        let (k1, rest) = rest.split_at_mut(n);
+        let (k2, rest) = rest.split_at_mut(n);
+        let (k3, rest) = rest.split_at_mut(n);
+        let ytmp = &mut rest[..n];
+        let (jt, rest_m) = mats.split_at_mut(nn);
+        let (bm, rest_m) = rest_m.split_at_mut(nn);
+        let (am, rest_m) = rest_m.split_at_mut(nn);
+        let (asum, rest_m) = rest_m.split_at_mut(nn);
+        let jtot = &mut rest_m[..nn];
+
+        y.copy_from_slice(&h[..n]);
+        // jtot = I
+        for v in jtot.iter_mut() {
+            *v = S::zero();
+        }
+        for i in 0..n {
+            jtot[i * n + i] = S::one();
+        }
+        for _ in 0..self.substeps {
+            // stage 1: A1 = J(y)
+            self.field.f(y, k1);
+            self.field.jac(y, am);
+            asum.copy_from_slice(am);
+            // stage 2: A2 = J(y + h/2 k1)·(I + h/2 A1)
+            for i in 0..n {
+                ytmp[i] = y[i] + half * hs * k1[i];
+            }
+            self.field.f(ytmp, k2);
+            self.field.jac(ytmp, jt);
+            for i in 0..n {
+                for c in 0..n {
+                    bm[i * n + c] =
+                        half * hs * am[i * n + c] + if i == c { S::one() } else { S::zero() };
+                }
+            }
+            matmul_into(jt, bm, am, n);
+            for i in 0..nn {
+                asum[i] += two * am[i];
+            }
+            // stage 3: A3 = J(y + h/2 k2)·(I + h/2 A2)
+            for i in 0..n {
+                ytmp[i] = y[i] + half * hs * k2[i];
+            }
+            self.field.f(ytmp, k3);
+            self.field.jac(ytmp, jt);
+            for i in 0..n {
+                for c in 0..n {
+                    bm[i * n + c] =
+                        half * hs * am[i * n + c] + if i == c { S::one() } else { S::zero() };
+                }
+            }
+            matmul_into(jt, bm, am, n);
+            for i in 0..nn {
+                asum[i] += two * am[i];
+            }
+            // stage 4: A4 = J(y + h k3)·(I + h A3)
+            for i in 0..n {
+                ytmp[i] = y[i] + hs * k3[i];
+            }
+            self.field.jac(ytmp, jt);
+            for i in 0..n {
+                for c in 0..n {
+                    bm[i * n + c] = hs * am[i * n + c] + if i == c { S::one() } else { S::zero() };
+                }
+            }
+            matmul_into(jt, bm, am, n);
+            for i in 0..nn {
+                asum[i] += am[i];
+            }
+            // state update needs k4 = f(y + h k3); ytmp still holds that
+            // node and jt's first n slots are free to carry k4
+            let k4 = jt;
+            self.field.f(ytmp, &mut k4[..n]);
+            let c6 = hs * sixth;
+            for i in 0..n {
+                y[i] += c6 * (k1[i] + two * k2[i] + two * k3[i] + k4[i]);
+            }
+            // Jsub = I + h/6·asum ; jtot ← Jsub·jtot
+            for i in 0..n {
+                for c in 0..n {
+                    bm[i * n + c] =
+                        c6 * asum[i * n + c] + if i == c { S::one() } else { S::zero() };
+                }
+            }
+            matmul_into(bm, jtot, am, n);
+            jtot.copy_from_slice(am);
+        }
+        out_f.copy_from_slice(y);
+        out_jac.copy_from_slice(jtot);
+    }
+
+    fn jacobian_structure(&self) -> JacobianStructure {
+        // The RK4 flow-map Jacobian I + Δ·J + … is dense even for
+        // structured fields; the structured DEER-ODE path reads the
+        // FIELD's structure through ode_view(), not this.
+        JacobianStructure::Dense
+    }
+
+    fn ode_view(&self) -> Option<OdeView<'_, S>> {
+        Some(OdeView {
+            field: &self.field,
+            dt: self.dt,
+            substeps: self.substeps,
+            interp: self.interp,
+        })
+    }
+
+    fn flops_step(&self) -> u64 {
+        // 4 field evals per substep; MLP-ish fields are ~4·n·h ≈ 8n² flops
+        let n = self.field.dim() as u64;
+        self.substeps as u64 * 4 * 8 * n * n
+    }
+
+    fn flops_jacobian(&self) -> u64 {
+        let n = self.field.dim() as u64;
+        self.flops_step() + self.substeps as u64 * (4 * 8 * n * n + 4 * 2 * n * n * n)
+    }
+}
+
+impl<S: Scalar, F: OdeField<S>> CellGrad<S> for OdeCell<S, F> {
+    fn num_params(&self) -> usize {
+        self.field.num_params()
+    }
+    fn params(&self) -> &[S] {
+        self.field.params()
+    }
+    fn params_mut(&mut self) -> &mut [S] {
+        self.field.params_mut()
+    }
+
+    fn vjp_step(
+        &self,
+        h: &[S],
+        x: &[S],
+        lambda: &[S],
+        dh: &mut [S],
+        dx: Option<&mut [S]>,
+        dtheta: &mut [S],
+        ws: &mut [S],
+    ) {
+        let _ = (x, dx); // autonomous: no input cotangent
+        let n = self.field.dim();
+        let hs = self.dt / S::from_f64c(self.substeps as f64);
+        let half = S::from_f64c(0.5);
+        let sixth = S::from_f64c(1.0 / 6.0);
+        let two = S::from_f64c(2.0);
+        let c6 = hs * sixth;
+        // forward: store each substep's initial state
+        let (ys, rest) = ws.split_at_mut(self.substeps * n);
+        let (lam, rest) = rest.split_at_mut(n);
+        let (k1, rest) = rest.split_at_mut(n);
+        let (k2, rest) = rest.split_at_mut(n);
+        let (k3, rest) = rest.split_at_mut(n);
+        let (y2, rest) = rest.split_at_mut(n);
+        let (y3, rest) = rest.split_at_mut(n);
+        let (y4, rest) = rest.split_at_mut(n);
+        let (u, rest) = rest.split_at_mut(n);
+        let (g, rest) = rest.split_at_mut(n);
+        let ycur = &mut rest[..n];
+
+        ycur.copy_from_slice(&h[..n]);
+        for s in 0..self.substeps {
+            ys[s * n..(s + 1) * n].copy_from_slice(ycur);
+            // inline rk4_substep (scratch slices are already split)
+            self.field.f(ycur, k1);
+            for i in 0..n {
+                y2[i] = ycur[i] + half * hs * k1[i];
+            }
+            self.field.f(y2, k2);
+            for i in 0..n {
+                y3[i] = ycur[i] + half * hs * k2[i];
+            }
+            self.field.f(y3, k3);
+            for i in 0..n {
+                y4[i] = ycur[i] + hs * k3[i];
+            }
+            self.field.f(y4, u); // k4 in u
+            for i in 0..n {
+                ycur[i] += c6 * (k1[i] + two * k2[i] + two * k3[i] + u[i]);
+            }
+        }
+
+        lam.copy_from_slice(&lambda[..n]);
+        for s in (0..self.substeps).rev() {
+            let y1 = &ys[s * n..(s + 1) * n];
+            // recompute stage nodes
+            self.field.f(y1, k1);
+            for i in 0..n {
+                y2[i] = y1[i] + half * hs * k1[i];
+            }
+            self.field.f(y2, k2);
+            for i in 0..n {
+                y3[i] = y1[i] + half * hs * k2[i];
+            }
+            self.field.f(y3, k3);
+            for i in 0..n {
+                y4[i] = y1[i] + hs * k3[i];
+            }
+            // reverse through the tableau; g accumulates λ_new − λ
+            for v in g.iter_mut() {
+                *v = S::zero();
+            }
+            // dk4 = c6·λ → pull through f at y4
+            for i in 0..n {
+                u[i] = c6 * lam[i];
+            }
+            let mut g4 = vec![S::zero(); n];
+            self.field.vjp(y4, u, &mut g4, dtheta);
+            // dk3 = 2c6·λ + h·g4
+            for i in 0..n {
+                u[i] = two * c6 * lam[i] + hs * g4[i];
+            }
+            let mut g3 = vec![S::zero(); n];
+            self.field.vjp(y3, u, &mut g3, dtheta);
+            // dk2 = 2c6·λ + h/2·g3
+            for i in 0..n {
+                u[i] = two * c6 * lam[i] + half * hs * g3[i];
+            }
+            let mut g2 = vec![S::zero(); n];
+            self.field.vjp(y2, u, &mut g2, dtheta);
+            // dk1 = c6·λ + h/2·g2
+            for i in 0..n {
+                u[i] = c6 * lam[i] + half * hs * g2[i];
+            }
+            let mut g1 = vec![S::zero(); n];
+            self.field.vjp(y1, u, &mut g1, dtheta);
+            for i in 0..n {
+                g[i] = g1[i] + g2[i] + g3[i] + g4[i];
+            }
+            for i in 0..n {
+                lam[i] += g[i];
+            }
+        }
+        for i in 0..n {
+            dh[i] += lam[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::fd_jacobian;
+    use crate::linalg::max_abs_diff;
+
+    fn mlp(n: usize, h: usize, seed: u64) -> MlpField<f64> {
+        let mut rng = Rng::new(seed);
+        MlpField::new(n, h, &mut rng)
+    }
+
+    fn hnn(d: usize, h: usize, seed: u64) -> HamiltonianField<f64> {
+        let mut rng = Rng::new(seed);
+        HamiltonianField::new(d, h, &mut rng)
+    }
+
+    fn fd_field_jac(field: &dyn OdeField<f64>, y: &[f64]) -> Vec<f64> {
+        let n = field.dim();
+        let eps = 1e-6;
+        let mut jac = vec![0.0; n * n];
+        let mut yp = y.to_vec();
+        let mut ym = y.to_vec();
+        let (mut fp, mut fm) = (vec![0.0; n], vec![0.0; n]);
+        for j in 0..n {
+            yp[j] += eps;
+            ym[j] -= eps;
+            field.f(&yp, &mut fp);
+            field.f(&ym, &mut fm);
+            for i in 0..n {
+                jac[i * n + j] = (fp[i] - fm[i]) / (2.0 * eps);
+            }
+            yp[j] = y[j];
+            ym[j] = y[j];
+        }
+        jac
+    }
+
+    #[test]
+    fn mlp_field_jacobian_matches_fd() {
+        let field = mlp(4, 8, 11);
+        let mut rng = Rng::new(5);
+        let mut y = vec![0.0; 4];
+        rng.fill_normal(&mut y, 0.9);
+        let mut jac = vec![0.0; 16];
+        field.jac(&y, &mut jac);
+        let fd = fd_field_jac(&field, &y);
+        assert!(max_abs_diff(&jac, &fd) < 1e-7);
+    }
+
+    #[test]
+    fn hamiltonian_field_jacobian_matches_fd_and_is_symplectic() {
+        let field = hnn(2, 10, 3);
+        let mut rng = Rng::new(9);
+        let mut y = vec![0.0; 4];
+        rng.fill_normal(&mut y, 0.8);
+        let n = 4;
+        let mut jac = vec![0.0; n * n];
+        field.jac(&y, &mut jac);
+        let fd = fd_field_jac(&field, &y);
+        assert!(max_abs_diff(&jac, &fd) < 1e-7);
+        // J = Ω·Hess with symmetric Hess ⇒ tr(J) = 0 (divergence-free flow)
+        let tr: f64 = (0..n).map(|i| jac[i * n + i]).sum();
+        assert!(tr.abs() < 1e-12, "Hamiltonian flow must be divergence-free, tr={tr}");
+    }
+
+    #[test]
+    fn field_vjp_matches_fd() {
+        for field in [mlp(3, 6, 21), mlp(5, 4, 22)] {
+            let n = field.dim();
+            let p = field.num_params();
+            let mut rng = Rng::new(31);
+            let mut y = vec![0.0; n];
+            let mut u = vec![0.0; n];
+            rng.fill_normal(&mut y, 0.8);
+            rng.fill_normal(&mut u, 1.0);
+            let mut dy = vec![0.0; n];
+            let mut dth = vec![0.0; p];
+            field.vjp(&y, &u, &mut dy, &mut dth);
+            // θ-only variant must agree on the parameter leg
+            let mut dth2 = vec![0.0; p];
+            field.vjp_params(&y, &u, &mut dth2);
+            assert!(max_abs_diff(&dth, &dth2) < 1e-14);
+
+            let eps = 1e-6;
+            let dot = |a: &[f64], b: &[f64]| a.iter().zip(b).map(|(x, z)| x * z).sum::<f64>();
+            let eval = |field: &MlpField<f64>, y: &[f64]| {
+                let mut out = vec![0.0; n];
+                field.f(y, &mut out);
+                out
+            };
+            for j in 0..n {
+                let mut yp = y.clone();
+                let mut ym = y.clone();
+                yp[j] += eps;
+                ym[j] -= eps;
+                let want = (dot(&u, &eval(&field, &yp)) - dot(&u, &eval(&field, &ym))) / (2.0 * eps);
+                assert!((dy[j] - want).abs() < 1e-7, "dy[{j}]");
+            }
+            for j in 0..p {
+                let mut fp = field.clone();
+                let mut fm = field.clone();
+                fp.params_mut()[j] += eps;
+                fm.params_mut()[j] -= eps;
+                let want = (dot(&u, &eval(&fp, &y)) - dot(&u, &eval(&fm, &y))) / (2.0 * eps);
+                assert!((dth[j] - want).abs() < 1e-7, "dth[{j}]");
+            }
+        }
+    }
+
+    #[test]
+    fn hamiltonian_vjp_matches_fd() {
+        let field = hnn(2, 6, 41);
+        let n = field.dim();
+        let p = field.num_params();
+        let mut rng = Rng::new(43);
+        let mut y = vec![0.0; n];
+        let mut u = vec![0.0; n];
+        rng.fill_normal(&mut y, 0.8);
+        rng.fill_normal(&mut u, 1.0);
+        let mut dy = vec![0.0; n];
+        let mut dth = vec![0.0; p];
+        field.vjp(&y, &u, &mut dy, &mut dth);
+        let eps = 1e-6;
+        let dot = |a: &[f64], b: &[f64]| a.iter().zip(b).map(|(x, z)| x * z).sum::<f64>();
+        let eval = |field: &HamiltonianField<f64>, y: &[f64]| {
+            let mut out = vec![0.0; n];
+            field.f(y, &mut out);
+            out
+        };
+        for j in 0..n {
+            let mut yp = y.clone();
+            let mut ym = y.clone();
+            yp[j] += eps;
+            ym[j] -= eps;
+            let want = (dot(&u, &eval(&field, &yp)) - dot(&u, &eval(&field, &ym))) / (2.0 * eps);
+            assert!((dy[j] - want).abs() < 1e-7, "dy[{j}]");
+        }
+        for j in 0..p {
+            let mut fp = field.clone();
+            let mut fm = field.clone();
+            fp.params_mut()[j] += eps;
+            fm.params_mut()[j] -= eps;
+            let want = (dot(&u, &eval(&fp, &y)) - dot(&u, &eval(&fm, &y))) / (2.0 * eps);
+            assert!((dth[j] - want).abs() < 1e-7, "dth[{j}]");
+        }
+    }
+
+    #[test]
+    fn mlp_vjp_jac_params_matches_fd() {
+        let field = mlp(3, 5, 51);
+        let n = field.dim();
+        let p = field.num_params();
+        let mut rng = Rng::new(53);
+        let mut y = vec![0.0; n];
+        let mut w = vec![0.0; n * n];
+        rng.fill_normal(&mut y, 0.8);
+        rng.fill_normal(&mut w, 1.0);
+        let mut dth = vec![0.0; p];
+        field.vjp_jac_params(&y, &w, &mut dth);
+        let eps = 1e-6;
+        let obj = |field: &MlpField<f64>| {
+            let mut jac = vec![0.0; n * n];
+            field.jac(&y, &mut jac);
+            jac.iter().zip(&w).map(|(a, b)| a * b).sum::<f64>()
+        };
+        for j in 0..p {
+            let mut fp = field.clone();
+            let mut fm = field.clone();
+            fp.params_mut()[j] += eps;
+            fm.params_mut()[j] -= eps;
+            let want = (obj(&fp) - obj(&fm)) / (2.0 * eps);
+            assert!((dth[j] - want).abs() < 2e-6, "djac_th[{j}]: {} vs {want}", dth[j]);
+        }
+    }
+
+    #[test]
+    fn ode_cell_jacobian_matches_fd() {
+        for substeps in [1usize, 3] {
+            let cell: OdeCell<f64, MlpField<f64>> =
+                OdeCell::new(mlp(4, 8, 61), 0.05, substeps, Interp::Midpoint);
+            let n = cell.state_dim();
+            let mut rng = Rng::new(63);
+            let mut h = vec![0.0; n];
+            let x = vec![0.0; n];
+            rng.fill_normal(&mut h, 0.8);
+            let mut f = vec![0.0; n];
+            let mut jac = vec![0.0; n * n];
+            let mut ws = vec![0.0; cell.ws_len()];
+            cell.jacobian(&h, &x, &mut f, &mut jac, &mut ws);
+            // fused f must equal step
+            let mut f2 = vec![0.0; n];
+            cell.step(&h, &x, &mut f2, &mut ws);
+            assert!(max_abs_diff(&f, &f2) < 1e-14, "fused f vs step");
+            let fd = fd_jacobian(&cell, &h, &x, 1e-6);
+            assert!(
+                max_abs_diff(&jac, &fd) < 1e-7,
+                "substeps={substeps}: {}",
+                max_abs_diff(&jac, &fd)
+            );
+        }
+    }
+
+    #[test]
+    fn ode_cell_vjp_matches_fd() {
+        for substeps in [1usize, 2] {
+            let cell: OdeCell<f64, MlpField<f64>> =
+                OdeCell::new(mlp(3, 6, 71), 0.04, substeps, Interp::Midpoint);
+            let n = cell.state_dim();
+            let p = cell.num_params();
+            let mut rng = Rng::new(73);
+            let mut h = vec![0.0; n];
+            let mut lam = vec![0.0; n];
+            rng.fill_normal(&mut h, 0.7);
+            rng.fill_normal(&mut lam, 1.0);
+            let x = vec![0.0; n];
+            let mut dh = vec![0.0; n];
+            let mut dth = vec![0.0; p];
+            let mut ws = vec![0.0; cell.ws_len()];
+            cell.vjp_step(&h, &x, &lam, &mut dh, None, &mut dth, &mut ws);
+
+            let eps = 1e-6;
+            let dot = |a: &[f64], b: &[f64]| a.iter().zip(b).map(|(x, z)| x * z).sum::<f64>();
+            let eval = |cell: &OdeCell<f64, MlpField<f64>>, h: &[f64]| {
+                let mut out = vec![0.0; n];
+                let mut ws = vec![0.0; cell.ws_len()];
+                cell.step(h, &[0.0; 3], &mut out, &mut ws);
+                out
+            };
+            for j in 0..n {
+                let mut hp = h.clone();
+                let mut hm = h.clone();
+                hp[j] += eps;
+                hm[j] -= eps;
+                let want =
+                    (dot(&lam, &eval(&cell, &hp)) - dot(&lam, &eval(&cell, &hm))) / (2.0 * eps);
+                assert!((dh[j] - want).abs() < 1e-7, "dh[{j}] substeps={substeps}");
+            }
+            for j in 0..p {
+                let mut cp = cell.clone();
+                let mut cm = cell.clone();
+                cp.params_mut()[j] += eps;
+                cm.params_mut()[j] -= eps;
+                let want =
+                    (dot(&lam, &eval(&cp, &h)) - dot(&lam, &eval(&cm, &h))) / (2.0 * eps);
+                assert!((dth[j] - want).abs() < 1e-7, "dth[{j}] substeps={substeps}");
+            }
+        }
+    }
+
+    #[test]
+    fn ode_view_exposes_field() {
+        let cell: OdeCell<f64, HamiltonianField<f64>> =
+            OdeCell::new(hnn(2, 6, 81), 0.01, 2, Interp::Left);
+        let view = cell.ode_view().expect("OdeCell must expose an ode_view");
+        assert_eq!(view.field.dim(), 4);
+        assert_eq!(view.substeps, 2);
+        assert_eq!(view.interp, Interp::Left);
+        assert!((view.dt - 0.01).abs() < 1e-15);
+        // a discrete cell reports none
+        let mut rng = Rng::new(1);
+        let gru: crate::cells::Gru<f64> = crate::cells::Gru::new(3, 2, &mut rng);
+        assert!(gru.ode_view().is_none());
+    }
+}

@@ -27,6 +27,8 @@ use crate::coordinator::memory::MemoryPlanner;
 use crate::coordinator::policy::{ConvergencePolicy, EvalPath};
 use crate::coordinator::warmstart::WarmStartCache;
 use crate::deer::newton::{effective_structure, DivergenceReason, JacobianMode};
+use crate::deer::ode::{deer_ode_batch, FieldSystem};
+use crate::deer::rk45::{rk45_solve, Rk45Options};
 use crate::deer::sharded::{shard_windows, ShardConfig, StitchMode};
 use crate::telemetry;
 
@@ -136,6 +138,10 @@ pub struct ExecStats {
     /// (exact stitching counts 1 per solve — its single outer Newton
     /// iteration IS the stitch).
     pub stitch_iters: u64,
+    /// Fused continuous-time (DEER-ODE) solves dispatched — groups whose
+    /// cell exposed an [`crate::cells::OdeView`] and were routed through
+    /// [`crate::deer::deer_ode_batch`] instead of the RNN Newton solve.
+    pub ode_solves: u64,
 }
 
 /// The coordinator's batched evaluation engine: batcher + warm-start cache +
@@ -244,6 +250,12 @@ impl<'c, C: Cell<f32>> BatchExecutor<'c, C> {
     /// Run one flushed group as a single fused batched solve (split only if
     /// the memory planner says the group exceeds the device budget).
     fn run_group(&mut self, group: Batch<EvalRequest>) -> Vec<EvalReply> {
+        if self.cell.ode_view().is_some() {
+            // continuous-time cells bypass the discrete Newton solve
+            // entirely (sharding is banned for ODE layers at trainer
+            // validation, so this dispatch comes first)
+            return self.run_group_ode(group);
+        }
         if self.shards > 1 {
             return self.run_group_sharded(group);
         }
@@ -516,6 +528,127 @@ impl<'c, C: Cell<f32>> BatchExecutor<'c, C> {
                     err_trace: res.err_traces[s].clone(),
                     lambda_trace: Vec::new(),
                     jac_structure: structure,
+                });
+            }
+        }
+        replies
+    }
+
+    /// Continuous-time twin of [`BatchExecutor::run_group`]: the cell's
+    /// [`crate::cells::OdeView`] interior is solved with ONE fused
+    /// [`deer_ode_batch`] call per sub-batch on the grid `t_i = i·dt`
+    /// (L = T + 1 nodes; the reply carries nodes 1..=T so its shape
+    /// matches the discrete contract). Warm starts reuse the same
+    /// trajectory cache — a cached `T·n` trajectory seeds nodes 1.. of the
+    /// guess while cold rows keep the solver's own y0-tiled cold start, so
+    /// mixing warm and cold rows never perturbs the cold ones. Rows that
+    /// fail to converge fall back to the sequential RK45 integrator when
+    /// the policy allows — the continuous analogue of the seq rescue.
+    fn run_group_ode(&mut self, group: Batch<EvalRequest>) -> Vec<EvalReply> {
+        let view = self.cell.ode_view().expect("ODE dispatch needs an ode_view");
+        let n = self.cell.state_dim();
+        let t_len = self.t_len;
+        let l_nodes = t_len + 1;
+        let ln = l_nodes * n;
+        let ts: Vec<f32> = (0..l_nodes).map(|i| view.dt * i as f32).collect();
+        let sys = FieldSystem::new(view.field);
+        let structure = crate::deer::ode::OdeSystem::jac_structure(&sys);
+        self.stats.layer = self.layer;
+        let max_b = self.planner.max_deer_batch_ode(n, l_nodes, structure).max(1);
+        let cfg = self.policy.config::<f32>(self.threads);
+        let reqs = group.requests;
+        if reqs.len() > max_b {
+            self.stats.groups_split += 1;
+            telemetry::counter_add(telemetry::Counter::GroupsSplit, 1);
+        }
+        let mut replies = Vec::with_capacity(reqs.len());
+        for sub in reqs.chunks(max_b) {
+            let b = sub.len();
+            let mut y0s = vec![0.0f32; b * n];
+            let mut guess = vec![0.0f32; b * ln];
+            let mut warm = vec![false; b];
+            let mut any_warm = false;
+            for (s, req) in sub.iter().enumerate() {
+                y0s[s * n..(s + 1) * n].copy_from_slice(&req.payload.h0);
+                // cold rows replicate the solver's own cold start (y0
+                // tiled over every node) so a mixed warm/cold sub-batch
+                // leaves cold rows bit-identical to an all-cold solve
+                for i in 0..l_nodes {
+                    guess[s * ln + i * n..s * ln + (i + 1) * n].copy_from_slice(&req.payload.h0);
+                }
+                if let Some(traj) = self.cache.get(req.payload.sample_id) {
+                    if traj.len() == t_len * n {
+                        guess[s * ln + n..(s + 1) * ln].copy_from_slice(traj);
+                        warm[s] = true;
+                        any_warm = true;
+                    }
+                }
+            }
+            let init = if any_warm { Some(&guess[..]) } else { None };
+            telemetry::gauge_set(telemetry::Gauge::SolveThreads, self.threads as f64);
+            telemetry::gauge_set(telemetry::Gauge::PlanMaxBatch, max_b as f64);
+            telemetry::histogram_record(telemetry::Histogram::GroupRows, b as u64);
+            let span = telemetry::span_with(
+                "batched_solve",
+                vec![
+                    ("rows", telemetry::ArgValue::Num(b as f64)),
+                    ("layer", telemetry::ArgValue::Num(self.layer as f64)),
+                    ("ode", telemetry::ArgValue::Num(1.0)),
+                ],
+            );
+            let (seq0, ch0, cr0) = telemetry::scan_schedule_snapshot();
+            let res = deer_ode_batch(&sys, &ts, &y0s, init, view.interp, &cfg, b);
+            let (seq1, ch1, cr1) = telemetry::scan_schedule_snapshot();
+            drop(span);
+            self.stats.scan_sequential += seq1.saturating_sub(seq0);
+            self.stats.scan_chunked += ch1.saturating_sub(ch0);
+            self.stats.scan_cyclic_reduction += cr1.saturating_sub(cr0);
+            self.stats.batched_solves += 1;
+            self.stats.ode_solves += 1;
+            self.stats.sequences_solved += b as u64;
+            telemetry::counter_add(telemetry::Counter::BatchedSolves, 1);
+            telemetry::counter_add(telemetry::Counter::SequencesSolved, b as u64);
+            for d in &res.divergence {
+                match d {
+                    Some(DivergenceReason::NonFinite) => self.stats.diverged_nonfinite += 1,
+                    Some(DivergenceReason::LambdaExhausted) => {
+                        self.stats.diverged_lambda_exhausted += 1
+                    }
+                    Some(DivergenceReason::MaxIters) => self.stats.diverged_max_iters += 1,
+                    Some(DivergenceReason::ErrorGrowth) => self.stats.diverged_error_growth += 1,
+                    None => {}
+                }
+            }
+            for (s, req) in sub.iter().enumerate() {
+                // nodes 1..=T — node 0 is the caller's own IC
+                let mut traj = res.ys[s * ln + n..(s + 1) * ln].to_vec();
+                let mut path = EvalPath::Deer;
+                if !res.converged[s] && self.policy.fallback_sequential {
+                    // continuous-time rescue: adaptive RK45 on the grid
+                    if let Ok((full, _steps, _fevals)) =
+                        rk45_solve(&sys, &ts, &req.payload.h0, &Rk45Options::default())
+                    {
+                        traj = full[n..].to_vec();
+                        path = EvalPath::SequentialFallback;
+                    }
+                }
+                self.cache.put(req.payload.sample_id, traj.clone());
+                replies.push(EvalReply {
+                    sample_id: req.payload.sample_id,
+                    ys: traj,
+                    iterations: res.iterations[s],
+                    converged: res.converged[s],
+                    path,
+                    warm_started: warm[s],
+                    // the ODE backward recomputes its own node
+                    // linearizations (the discrete per-step Jacobians of
+                    // the reply contract don't exist here)
+                    jacobians: None,
+                    divergence: res.divergence[s],
+                    lambda: 0.0,
+                    err_trace: res.err_traces[s].clone(),
+                    lambda_trace: Vec::new(),
+                    jac_structure: res.jac_structure,
                 });
             }
         }
@@ -1066,5 +1199,84 @@ mod tests {
         assert_eq!(replies.len(), 3);
         assert_eq!(ex.stats.batched_solves, 1);
         assert!(replies.iter().all(|r| r.converged));
+    }
+
+    /// An OdeCell group routes through the fused DEER-ODE dispatch: one
+    /// solve per group, replies bitwise equal to a direct
+    /// `deer_ode_batch` call at the same config, and the second round
+    /// warm-starts from the trajectory cache.
+    #[test]
+    fn ode_cell_group_routes_through_fused_ode_solve() {
+        use crate::cells::{MlpField, OdeCell};
+        use crate::deer::ode::Interp;
+        let mut rng = Rng::new(8);
+        let (n, t_len, b) = (4usize, 32usize, 3usize);
+        let field: MlpField<f32> = MlpField::new(n, 8, &mut rng);
+        let cell: OdeCell<f32, MlpField<f32>> =
+            OdeCell::new(field, 0.02, 1, Interp::Midpoint);
+        let mut ex = BatchExecutor::new(
+            &cell,
+            t_len,
+            b,
+            Duration::from_secs(60),
+            1 << 20,
+            16 * (1u64 << 30),
+            1,
+        );
+        // per-row ICs double as the (ignored-by-dynamics) inputs
+        let mut reqs = Vec::new();
+        for id in 0..b as u64 {
+            let mut h0 = vec![0.0f32; n];
+            let mut row_rng = Rng::new(2000 + id);
+            row_rng.fill_normal(&mut h0, 0.6);
+            let mut xs = vec![0.0f32; t_len * n];
+            xs[..n].copy_from_slice(&h0);
+            reqs.push((id, h0, xs));
+        }
+        let mut replies = Vec::new();
+        for (id, h0, xs) in &reqs {
+            let r = ex.submit(*id, h0.clone(), xs.clone());
+            if !r.is_empty() {
+                replies = r;
+            }
+        }
+        assert_eq!(ex.stats.batched_solves, 1, "one fused ODE solve per group");
+        assert_eq!(ex.stats.ode_solves, 1);
+        assert_eq!(replies.len(), b);
+
+        // reference: the same fused solve called directly
+        let view = cell.ode_view().unwrap();
+        let sys = FieldSystem::new(view.field);
+        let ts: Vec<f32> = (0..=t_len).map(|i| view.dt * i as f32).collect();
+        let mut y0s = vec![0.0f32; b * n];
+        for (s, (_, h0, _)) in reqs.iter().enumerate() {
+            y0s[s * n..(s + 1) * n].copy_from_slice(h0);
+        }
+        let cfg = ex.policy.config::<f32>(1);
+        let want = deer_ode_batch(&sys, &ts, &y0s, None, view.interp, &cfg, b);
+        for reply in &replies {
+            assert!(reply.converged, "sample {}", reply.sample_id);
+            assert_eq!(reply.path, EvalPath::Deer);
+            assert!(!reply.warm_started);
+            assert!(reply.jacobians.is_none());
+            let s = reply.sample_id as usize;
+            let ln = (t_len + 1) * n;
+            assert_eq!(reply.ys.len(), t_len * n);
+            assert_eq!(reply.ys[..], want.ys[s * ln + n..(s + 1) * ln]);
+        }
+
+        // second round: warm-started from the cache
+        let mut second = Vec::new();
+        for (id, h0, xs) in &reqs {
+            let r = ex.submit(*id, h0.clone(), xs.clone());
+            if !r.is_empty() {
+                second = r;
+            }
+        }
+        assert_eq!(ex.stats.ode_solves, 2);
+        for reply in &second {
+            assert!(reply.warm_started, "round 2 must warm-start sample {}", reply.sample_id);
+            assert!(reply.iterations <= 2, "warm start should verify fast");
+        }
     }
 }

@@ -7,7 +7,7 @@
 //! DEER@B=3 vs sequential@B=70 at equal ~2.6 GB).
 
 pub use crate::simulator::{
-    deer_memory_bytes, deer_memory_bytes_elk, deer_memory_bytes_sharded,
+    deer_memory_bytes, deer_memory_bytes_elk, deer_memory_bytes_ode, deer_memory_bytes_sharded,
     deer_memory_bytes_stacked, deer_memory_bytes_structured,
 };
 use crate::cells::JacobianStructure;
@@ -184,6 +184,33 @@ impl MemoryPlanner {
         (self.budget_bytes / per) as usize
     }
 
+    /// Continuous-time [`MemoryPlanner::deer_fits_structured`]: does a
+    /// DEER-ODE solve of `batch` sequences on `l_nodes` grid nodes fit?
+    /// The ODE working set carries TWO structured slabs per node (node
+    /// `G`/`z` plus the discretized `Ḡ`/`z̄` interval elements from the
+    /// exp/φ₁ DISCRETIZE phase) — see [`deer_memory_bytes_ode`].
+    pub fn deer_fits_ode(
+        &self,
+        n: usize,
+        l_nodes: usize,
+        batch: usize,
+        structure: JacobianStructure,
+    ) -> bool {
+        deer_memory_bytes_ode(n, l_nodes, batch, 4, structure) <= self.budget_bytes
+    }
+
+    /// Continuous-time [`MemoryPlanner::max_deer_batch_structured`] — what
+    /// the batched executor caps a flushed ODE group at.
+    pub fn max_deer_batch_ode(
+        &self,
+        n: usize,
+        l_nodes: usize,
+        structure: JacobianStructure,
+    ) -> usize {
+        let per = deer_memory_bytes_ode(n, l_nodes, 1, 4, structure).max(1);
+        (self.budget_bytes / per) as usize
+    }
+
     /// Fig. 8's construction: the sequential batch size whose footprint
     /// matches DEER at `deer_batch` (equal-memory comparison).
     pub fn equal_memory_seq_batch(&self, n: usize, t_len: usize, deer_batch: usize) -> usize {
@@ -271,6 +298,30 @@ mod tests {
             }
             assert!(!p.deer_fits_elk(16, 100_000, plain + 1, st));
         }
+    }
+
+    /// ODE planning: the double structured slab (node G/z + discretized
+    /// Ḡ/z̄) makes the ODE plan strictly tighter than the RNN plan at the
+    /// same (n, T), structure dispatch still unlocks diagonal batches, and
+    /// the expm/φ₁ scratch term never admits more sequences.
+    #[test]
+    fn ode_planner_tighter_than_rnn_and_structure_aware() {
+        let p = MemoryPlanner::new(1 << 30);
+        for st in [
+            JacobianStructure::Dense,
+            JacobianStructure::Diagonal,
+            JacobianStructure::Block { k: 2 },
+        ] {
+            let rnn = p.max_deer_batch_structured(16, 100_000, st);
+            let ode = p.max_deer_batch_ode(16, 100_001, st);
+            assert!(ode <= rnn, "{st:?}: ode {ode} > rnn {rnn}");
+            assert!(ode >= 1, "{st:?}: budget must fit one ODE sequence");
+            assert!(p.deer_fits_ode(16, 100_001, ode, st));
+            assert!(!p.deer_fits_ode(16, 100_001, 2 * rnn + 1, st));
+        }
+        let dense = p.max_deer_batch_ode(64, 100_001, JacobianStructure::Dense);
+        let diag = p.max_deer_batch_ode(64, 100_001, JacobianStructure::Diagonal);
+        assert!(diag > dense, "diag {diag} vs dense {dense}");
     }
 
     #[test]

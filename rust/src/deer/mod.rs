@@ -87,10 +87,13 @@ pub use newton::{
     deer_rnn, deer_rnn_batch, effective_structure, BatchDeerResult, DampingConfig, DeerConfig,
     DeerResult, DivergenceReason, JacobianMode,
 };
-pub use ode::{deer_ode, Interp, OdeDeerResult, OdeSystem};
+pub use ode::{
+    deer_ode, deer_ode_backward_batch, deer_ode_batch, FieldSystem, Interp, OdeBackwardResult,
+    OdeBatchResult, OdeDeerResult, OdeSystem, OdeSystemGrad,
+};
 pub use rk45::{rk45_solve, Rk45Options};
 pub use sharded::{
-    deer_rnn_backward_sharded, deer_rnn_sharded, shard_windows, ShardConfig, ShardedDeerResult,
-    StitchMode,
+    deer_rnn_backward_sharded, deer_rnn_sharded, deer_rnn_sharded_streamed, shard_windows,
+    ShardConfig, ShardedDeerResult, SliceSource, StitchMode, WindowSource,
 };
 pub use seq::{seq_rnn, seq_rnn_backward, seq_rnn_backward_io, seq_rnn_batch};

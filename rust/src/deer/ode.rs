@@ -1,4 +1,4 @@
-//! DEER-ODE (paper §3.3, App. A.5/A.6).
+//! DEER-ODE (paper §3.3, App. A.5/A.6) on the batched structured stack.
 //!
 //! An ODE `dy/dt = f(y, x(t), θ)` becomes the linear problem
 //! `dy/dt + G(t)·y = z(t)` with `G = −∂f/∂y` and `z = f − (∂f/∂y)·y`
@@ -11,24 +11,163 @@
 //!
 //! where `(G_c, z_c)` is the interval value of `(G, z)` under the chosen
 //! interpolation — midpoint (O(Δ³) local error), left or right (O(Δ²)),
-//! per App. A.5 / Table 3. The recurrence is evaluated with the same prefix
-//! scan as the RNN case and iterated to convergence.
+//! per App. A.5 / Table 3. The recurrence is evaluated with the same
+//! batched prefix scans as the RNN case (`choose_scan_schedule_observed`
+//! picks the kernel inside the scan layer) and iterated to convergence.
+//!
+//! [`deer_ode_batch`] solves B independent initial-value problems on a
+//! shared grid as ONE fused solve on the `[B, L, n]` layout with
+//! per-sequence convergence masking and non-finite hardening, dispatching
+//! the INVLIN scan on [`JacobianStructure`]: a diagonal `∂f/∂y` composes in
+//! O(n) and a Block(k) one in O(n·k²) instead of the dense O(n³).
+//! [`deer_ode`] is the B = 1 face of the same kernel (bitwise-identical
+//! arithmetic on convergent paths). [`deer_ode_backward_batch`] is the
+//! reverse pass: a dual scan through the discretized `(Ḡ_i, z̄_i)` elements
+//! with an exact DISCRETIZE-phase VJP through `expm`/`phi1`.
 
-use crate::linalg::{expm, phi1};
-use crate::scan::par::par_scan_apply;
-use crate::telemetry::Phase;
+use crate::cells::JacobianStructure;
+use crate::linalg::{expm, expm_vjp, phi1, phi1_vjp};
+use crate::scan::par::{par_scan_apply_batch_ws, par_scan_reverse_batch_ws};
+use crate::scan::{
+    block::par_block_scan_apply_batch_ws, diag::par_diag_scan_apply_batch_ws,
+    diag::par_diag_scan_reverse_batch_ws, ScanWorkspace,
+};
+use crate::telemetry::{self, Counter, Histogram, Phase};
 use crate::util::scalar::Scalar;
 use crate::util::timer::PhaseProfile;
 
-use super::newton::DeerConfig;
+use super::newton::{DeerConfig, DivergenceReason};
 
 /// A first-order ODE system with an analytic (or AD-provided) Jacobian.
+///
+/// The batched hooks evaluate many grid nodes per call (`ys` is `[rows, n]`
+/// row-major with `ts[r]` the time of row `r`); the looped defaults
+/// delegate to the scalar methods node by node, so existing systems keep
+/// working unchanged while vectorizable systems can override. Structured
+/// systems additionally declare [`OdeSystem::jac_structure`] and implement
+/// the matching packed Jacobian so the DEER-ODE solve runs on the O(n) /
+/// O(n·k²) scan kernels.
 pub trait OdeSystem<S: Scalar>: Send + Sync {
     fn dim(&self) -> usize;
     /// `out = f(t, y)`.
     fn f(&self, t: S, y: &[S], out: &mut [S]);
     /// `out = ∂f/∂y (t, y)`, row-major n×n.
     fn jac(&self, t: S, y: &[S], out: &mut [S]);
+
+    /// Structure of `∂f/∂y`. Non-dense systems must implement the matching
+    /// packed evaluator ([`OdeSystem::jac_diag`] / [`OdeSystem::jac_block`]).
+    fn jac_structure(&self) -> JacobianStructure {
+        JacobianStructure::Dense
+    }
+    /// Packed diagonal `∂f/∂y` (n entries) — required when
+    /// [`OdeSystem::jac_structure`] is `Diagonal`.
+    fn jac_diag(&self, _t: S, _y: &[S], _out: &mut [S]) {
+        unimplemented!("jac_diag: override for Diagonal-structured systems")
+    }
+    /// Packed block-diagonal `∂f/∂y` (`n·k` entries: n/k row-major k×k
+    /// blocks) — required when [`OdeSystem::jac_structure`] is `Block {k}`.
+    fn jac_block(&self, _t: S, _y: &[S], _out: &mut [S], _k: usize) {
+        unimplemented!("jac_block: override for Block-structured systems")
+    }
+
+    /// Batched `f` over `ts.len()` grid nodes: `ys`/`out` are `[rows, n]`.
+    fn f_batch(&self, ts: &[S], ys: &[S], out: &mut [S]) {
+        let n = self.dim();
+        for (r, &t) in ts.iter().enumerate() {
+            self.f(t, &ys[r * n..(r + 1) * n], &mut out[r * n..(r + 1) * n]);
+        }
+    }
+    /// Batched dense Jacobian over grid nodes: `out` is `[rows, n·n]`.
+    fn jac_batch(&self, ts: &[S], ys: &[S], out: &mut [S]) {
+        let n = self.dim();
+        let nn = n * n;
+        for (r, &t) in ts.iter().enumerate() {
+            self.jac(t, &ys[r * n..(r + 1) * n], &mut out[r * nn..(r + 1) * nn]);
+        }
+    }
+    /// Batched packed diagonal Jacobian over grid nodes: `out` is `[rows, n]`.
+    fn jac_diag_batch(&self, ts: &[S], ys: &[S], out: &mut [S]) {
+        let n = self.dim();
+        for (r, &t) in ts.iter().enumerate() {
+            self.jac_diag(t, &ys[r * n..(r + 1) * n], &mut out[r * n..(r + 1) * n]);
+        }
+    }
+    /// Batched packed block Jacobian over grid nodes: `out` is `[rows, n·k]`.
+    fn jac_block_batch(&self, ts: &[S], ys: &[S], out: &mut [S], k: usize) {
+        let n = self.dim();
+        let bl = n * k;
+        for (r, &t) in ts.iter().enumerate() {
+            self.jac_block(t, &ys[r * n..(r + 1) * n], &mut out[r * bl..(r + 1) * bl], k);
+        }
+    }
+}
+
+/// Parameter-differentiable ODE system — what [`deer_ode_backward_batch`]
+/// needs on top of [`OdeSystem`] to pull trajectory cotangents back to θ.
+pub trait OdeSystemGrad<S: Scalar>: OdeSystem<S> {
+    fn num_params(&self) -> usize;
+    /// First-order pullback: `dtheta += (∂f/∂θ)ᵀ u` at `(t, y)`.
+    fn vjp_params(&self, t: S, y: &[S], u: &[S], dtheta: &mut [S]);
+    /// Second-order pullback: `dtheta += ⟨∂(∂f/∂y)/∂θ, W⟩` at `(t, y)`,
+    /// where `W` is the cotangent on the Jacobian in the system's packed
+    /// layout (dense n×n, diagonal n, or block n·k).
+    ///
+    /// Default: no-op — the `∂J/∂θ` leg of the element cotangents is then
+    /// truncated. On a converged trajectory that leg is O(Δ²) per step (it
+    /// multiplies the interval-local linearization residual), so gradients
+    /// remain first-order consistent; systems with cheap analytic second
+    /// derivatives (e.g. the MLP field) override for near-exact gradients.
+    fn vjp_jac_params(&self, _t: S, _y: &[S], _w: &[S], _dtheta: &mut [S]) {}
+}
+
+/// Adapter: a trainable [`crate::cells::OdeField`] viewed as an
+/// (autonomous) [`OdeSystem`] + [`OdeSystemGrad`].
+///
+/// This is the bridge the trainer/executor cross to hand an
+/// [`crate::cells::OdeCell`]'s interior field to [`deer_ode_batch`] /
+/// [`deer_ode_backward_batch`]: time is ignored (the fields are
+/// autonomous), the field's [`crate::cells::OdeField::structure`] drives
+/// the packed-kernel dispatch, and both parameter pullbacks forward to the
+/// field's analytic VJPs.
+pub struct FieldSystem<'a, S: Scalar> {
+    field: &'a dyn crate::cells::OdeField<S>,
+}
+
+impl<'a, S: Scalar> FieldSystem<'a, S> {
+    /// Wrap a borrowed field.
+    pub fn new(field: &'a dyn crate::cells::OdeField<S>) -> Self {
+        FieldSystem { field }
+    }
+}
+
+impl<S: Scalar> OdeSystem<S> for FieldSystem<'_, S> {
+    fn dim(&self) -> usize {
+        self.field.dim()
+    }
+    fn f(&self, _t: S, y: &[S], out: &mut [S]) {
+        self.field.f(y, out);
+    }
+    fn jac(&self, _t: S, y: &[S], out: &mut [S]) {
+        self.field.jac(y, out);
+    }
+    fn jac_structure(&self) -> JacobianStructure {
+        self.field.structure()
+    }
+    fn jac_diag(&self, _t: S, y: &[S], out: &mut [S]) {
+        self.field.jac_diag(y, out);
+    }
+}
+
+impl<S: Scalar> OdeSystemGrad<S> for FieldSystem<'_, S> {
+    fn num_params(&self) -> usize {
+        self.field.num_params()
+    }
+    fn vjp_params(&self, _t: S, y: &[S], u: &[S], dtheta: &mut [S]) {
+        self.field.vjp_params(y, u, dtheta);
+    }
+    fn vjp_jac_params(&self, _t: S, y: &[S], w: &[S], dtheta: &mut [S]) {
+        self.field.vjp_jac_params(y, w, dtheta);
+    }
 }
 
 /// Interval interpolation for `(G, z)` (App. A.6, Table 3).
@@ -42,7 +181,27 @@ pub enum Interp {
     Right,
 }
 
-/// Result of a DEER-ODE solve.
+impl Interp {
+    pub fn label(self) -> &'static str {
+        match self {
+            Interp::Midpoint => "midpoint",
+            Interp::Left => "left",
+            Interp::Right => "right",
+        }
+    }
+
+    /// Parse a CLI spelling.
+    pub fn parse(s: &str) -> Option<Interp> {
+        match s {
+            "midpoint" | "mid" => Some(Interp::Midpoint),
+            "left" => Some(Interp::Left),
+            "right" => Some(Interp::Right),
+            _ => None,
+        }
+    }
+}
+
+/// Result of a single-sequence DEER-ODE solve.
 #[derive(Debug, Clone)]
 pub struct OdeDeerResult<S> {
     /// Trajectory on the grid (`L·n`), `ys[0] = y0`.
@@ -53,12 +212,356 @@ pub struct OdeDeerResult<S> {
     pub profile: PhaseProfile,
 }
 
+/// Result of a fused batched DEER-ODE solve (`[B, L, n]` layout).
+#[derive(Debug, Clone)]
+pub struct OdeBatchResult<S> {
+    pub batch: usize,
+    /// Trajectories on the grid (`[B, L, n]`), node 0 pinned to the IC.
+    pub ys: Vec<S>,
+    pub iterations: Vec<usize>,
+    pub converged: Vec<bool>,
+    pub divergence: Vec<Option<DivergenceReason>>,
+    pub err_traces: Vec<Vec<f64>>,
+    pub jac_structure: JacobianStructure,
+    pub profile: PhaseProfile,
+    /// Fused Newton sweeps executed (≥ max over `iterations`).
+    pub sweeps: usize,
+}
+
+/// Result of the batched DEER-ODE reverse pass.
+#[derive(Debug, Clone)]
+pub struct OdeBackwardResult<S> {
+    /// `dL/dθ`, accumulated over the whole batch.
+    pub dtheta: Vec<S>,
+    /// `dL/dy0` per sequence (`[B, n]`).
+    pub dy0s: Vec<S>,
+    pub profile: PhaseProfile,
+}
+
+/// Scalar φ₁ and its derivative — the diagonal-structure discretization
+/// avoids the augmented-matrix `expm` entirely. Evaluated in f64 (series
+/// near 0) so the f32 path keeps full working precision.
+fn phi1_s<S: Scalar>(x: S) -> S {
+    let x = x.to_f64c();
+    let v = if x.abs() < 1e-5 {
+        1.0 + x * (0.5 + x * (1.0 / 6.0 + x / 24.0))
+    } else {
+        (x.exp() - 1.0) / x
+    };
+    S::from_f64c(v)
+}
+
+/// d/dx φ₁(x) = (e^x (x − 1) + 1) / x².
+fn dphi1_s<S: Scalar>(x: S) -> S {
+    let x = x.to_f64c();
+    let v = if x.abs() < 1e-4 {
+        0.5 + x * (1.0 / 3.0 + x * (1.0 / 8.0 + x / 30.0))
+    } else {
+        (x.exp() * (x - 1.0) + 1.0) / (x * x)
+    };
+    S::from_f64c(v)
+}
+
+/// Run `body(row, slab_a_row, slab_b_row)` for every row index in `idx`,
+/// with the two `[B, ·]` slabs split per row and whole rows bucketed over
+/// the thread pool (`k % workers`, the batched-solver scheduling idiom).
+/// Per-row work is independent, so worker assignment never affects
+/// numerics — and at B = 1 the body runs on the caller's thread with the
+/// exact arithmetic order of the historical single-sequence loop.
+fn par_rows2<S: Scalar, F>(
+    idx: &[usize],
+    sa: &mut [S],
+    stride_a: usize,
+    sb: &mut [S],
+    stride_b: usize,
+    threads: usize,
+    body: F,
+) where
+    F: Fn(usize, &mut [S], &mut [S]) + Sync,
+{
+    if threads <= 1 || idx.len() <= 1 {
+        for &b in idx {
+            let (ra, rb) = (
+                &mut sa[b * stride_a..(b + 1) * stride_a],
+                &mut sb[b * stride_b..(b + 1) * stride_b],
+            );
+            body(b, ra, rb);
+        }
+        return;
+    }
+    let workers = threads.min(idx.len());
+    let mut rows_a: Vec<Option<&mut [S]>> = sa.chunks_mut(stride_a).map(Some).collect();
+    let mut rows_b: Vec<Option<&mut [S]>> = sb.chunks_mut(stride_b).map(Some).collect();
+    let mut buckets: Vec<Vec<(usize, &mut [S], &mut [S])>> =
+        (0..workers).map(|_| Vec::new()).collect();
+    for (k, &b) in idx.iter().enumerate() {
+        buckets[k % workers].push((b, rows_a[b].take().unwrap(), rows_b[b].take().unwrap()));
+    }
+    let body = &body;
+    std::thread::scope(|scope| {
+        for bucket in buckets {
+            scope.spawn(move || {
+                for (b, ra, rb) in bucket {
+                    body(b, ra, rb);
+                }
+            });
+        }
+    });
+}
+
+/// FUNCEVAL: node values `G = −J`, `z = f − J·y` on the current guess, for
+/// every row in `idx`, written into `[B, L, jac_len]` / `[B, L, n]` slabs.
+#[allow(clippy::too_many_arguments)]
+fn eval_nodes<S: Scalar, Sys: OdeSystem<S> + ?Sized>(
+    sys: &Sys,
+    ts: &[S],
+    yt: &[S],
+    g_node: &mut [S],
+    z_node: &mut [S],
+    structure: JacobianStructure,
+    idx: &[usize],
+    threads: usize,
+) {
+    let n = sys.dim();
+    let l = ts.len();
+    let ln = l * n;
+    let jl = structure.jac_len(n);
+    par_rows2(idx, g_node, l * jl, z_node, ln, threads, |b, g_row, z_row| {
+        let y_row = &yt[b * ln..(b + 1) * ln];
+        let mut f_row = vec![S::zero(); ln];
+        match structure {
+            JacobianStructure::Dense => {
+                let nn = n * n;
+                sys.jac_batch(ts, y_row, g_row);
+                sys.f_batch(ts, y_row, &mut f_row);
+                for i in 0..l {
+                    let y = &y_row[i * n..(i + 1) * n];
+                    let jrow = &mut g_row[i * nn..(i + 1) * nn];
+                    // z_i = f − J·y ; then negate J in place to hold G = −J.
+                    let zi = &mut z_row[i * n..(i + 1) * n];
+                    for r in 0..n {
+                        let mut acc = S::zero();
+                        for c in 0..n {
+                            acc += jrow[r * n + c] * y[c];
+                        }
+                        zi[r] = f_row[i * n + r] - acc;
+                    }
+                    for v in jrow.iter_mut() {
+                        *v = -*v;
+                    }
+                }
+            }
+            JacobianStructure::Diagonal => {
+                sys.jac_diag_batch(ts, y_row, g_row);
+                sys.f_batch(ts, y_row, &mut f_row);
+                for i in 0..l {
+                    for r in 0..n {
+                        let j = g_row[i * n + r];
+                        z_row[i * n + r] = f_row[i * n + r] - j * y_row[i * n + r];
+                        g_row[i * n + r] = -j;
+                    }
+                }
+            }
+            JacobianStructure::Block { k } => {
+                let bl = n * k;
+                sys.jac_block_batch(ts, y_row, g_row, k);
+                sys.f_batch(ts, y_row, &mut f_row);
+                let blocks = n / k;
+                for i in 0..l {
+                    let y = &y_row[i * n..(i + 1) * n];
+                    let jrow = &mut g_row[i * bl..(i + 1) * bl];
+                    let zi = &mut z_row[i * n..(i + 1) * n];
+                    for q in 0..blocks {
+                        for r in 0..k {
+                            let mut acc = S::zero();
+                            for c in 0..k {
+                                acc += jrow[q * k * k + r * k + c] * y[q * k + c];
+                            }
+                            zi[q * k + r] = f_row[i * n + q * k + r] - acc;
+                        }
+                    }
+                    for v in jrow.iter_mut() {
+                        *v = -*v;
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Interval `(G_c, z_c)` under the interpolation rule, packed layout.
+#[inline]
+fn interval_gz<S: Scalar>(
+    g_node: &[S],
+    z_node: &[S],
+    i: usize,
+    jl: usize,
+    n: usize,
+    interp: Interp,
+    gc: &mut [S],
+    zc: &mut [S],
+) {
+    match interp {
+        Interp::Midpoint => {
+            let half = S::from_f64c(0.5);
+            for k in 0..jl {
+                gc[k] = (g_node[i * jl + k] + g_node[(i + 1) * jl + k]) * half;
+            }
+            for k in 0..n {
+                zc[k] = (z_node[i * n + k] + z_node[(i + 1) * n + k]) * half;
+            }
+        }
+        Interp::Left => {
+            gc.copy_from_slice(&g_node[i * jl..(i + 1) * jl]);
+            zc.copy_from_slice(&z_node[i * n..(i + 1) * n]);
+        }
+        Interp::Right => {
+            gc.copy_from_slice(&g_node[(i + 1) * jl..(i + 2) * jl]);
+            zc.copy_from_slice(&z_node[(i + 1) * n..(i + 2) * n]);
+        }
+    }
+}
+
+/// Interp weights for distributing an interval cotangent to its two nodes.
+#[inline]
+fn interp_weights<S: Scalar>(interp: Interp) -> (S, S) {
+    match interp {
+        Interp::Midpoint => (S::from_f64c(0.5), S::from_f64c(0.5)),
+        Interp::Left => (S::one(), S::zero()),
+        Interp::Right => (S::zero(), S::one()),
+    }
+}
+
+/// DISCRETIZE (the paper's GTMULT analogue): build `Ḡ_i = exp(−G_cΔ)`,
+/// `z̄_i = Δ·φ₁(−G_cΔ)·z_c` per interval per row, structure-dispatched.
+/// When `want_phi` the φ₁ matrices land in `b_or_phi` instead of z̄ (the
+/// backward pass stores them for the DISCRETIZE VJP and never needs z̄).
+#[allow(clippy::too_many_arguments)]
+fn discretize_rows<S: Scalar>(
+    ts: &[S],
+    g_node: &[S],
+    z_node: &[S],
+    a_bar: &mut [S],
+    b_or_phi: &mut [S],
+    structure: JacobianStructure,
+    interp: Interp,
+    idx: &[usize],
+    threads: usize,
+    n: usize,
+    want_phi: bool,
+) {
+    let l = ts.len();
+    let steps = l - 1;
+    let jl = structure.jac_len(n);
+    let out_stride = if want_phi { steps * jl } else { steps * n };
+    par_rows2(
+        idx,
+        a_bar,
+        steps * jl,
+        b_or_phi,
+        out_stride,
+        threads,
+        |b, a_row, o_row| {
+            let g_row = &g_node[b * l * jl..(b + 1) * l * jl];
+            let z_row = &z_node[b * l * n..(b + 1) * l * n];
+            let mut gc = vec![S::zero(); jl];
+            let mut zc = vec![S::zero(); n];
+            match structure {
+                JacobianStructure::Dense => {
+                    let nn = n * n;
+                    let mut neg_g_dt = vec![S::zero(); nn];
+                    let mut phi = vec![S::zero(); nn];
+                    for i in 0..steps {
+                        let dt = ts[i + 1] - ts[i];
+                        interval_gz(g_row, z_row, i, nn, n, interp, &mut gc, &mut zc);
+                        for k in 0..nn {
+                            neg_g_dt[k] = -gc[k] * dt;
+                        }
+                        expm(&neg_g_dt, &mut a_row[i * nn..(i + 1) * nn], n);
+                        if want_phi {
+                            phi1(&neg_g_dt, &mut o_row[i * nn..(i + 1) * nn], n);
+                        } else {
+                            phi1(&neg_g_dt, &mut phi, n);
+                            // z̄ = Δ·φ₁(−GΔ)·z_c
+                            let bb = &mut o_row[i * n..(i + 1) * n];
+                            for r in 0..n {
+                                let mut acc = S::zero();
+                                for c in 0..n {
+                                    acc += phi[r * n + c] * zc[c];
+                                }
+                                bb[r] = dt * acc;
+                            }
+                        }
+                    }
+                }
+                JacobianStructure::Diagonal => {
+                    for i in 0..steps {
+                        let dt = ts[i + 1] - ts[i];
+                        interval_gz(g_row, z_row, i, n, n, interp, &mut gc, &mut zc);
+                        for j in 0..n {
+                            let x = -gc[j] * dt;
+                            a_row[i * n + j] = x.exp();
+                            if want_phi {
+                                o_row[i * n + j] = phi1_s(x);
+                            } else {
+                                o_row[i * n + j] = dt * phi1_s(x) * zc[j];
+                            }
+                        }
+                    }
+                }
+                JacobianStructure::Block { k } => {
+                    let bl = n * k;
+                    let kk = k * k;
+                    let blocks = n / k;
+                    let mut neg_g_dt = vec![S::zero(); kk];
+                    let mut phi = vec![S::zero(); kk];
+                    for i in 0..steps {
+                        let dt = ts[i + 1] - ts[i];
+                        interval_gz(g_row, z_row, i, bl, n, interp, &mut gc, &mut zc);
+                        for q in 0..blocks {
+                            for t in 0..kk {
+                                neg_g_dt[t] = -gc[q * kk + t] * dt;
+                            }
+                            expm(
+                                &neg_g_dt,
+                                &mut a_row[i * bl + q * kk..i * bl + (q + 1) * kk],
+                                k,
+                            );
+                            if want_phi {
+                                phi1(
+                                    &neg_g_dt,
+                                    &mut o_row[i * bl + q * kk..i * bl + (q + 1) * kk],
+                                    k,
+                                );
+                            } else {
+                                phi1(&neg_g_dt, &mut phi, k);
+                                for r in 0..k {
+                                    let mut acc = S::zero();
+                                    for c in 0..k {
+                                        acc += phi[r * k + c] * zc[q * k + c];
+                                    }
+                                    o_row[i * n + q * k + r] = dt * acc;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        },
+    );
+}
+
 /// Solve the ODE on the given time grid with DEER fixed-point iteration.
 ///
 /// * `ts` — strictly increasing sample times (length L ≥ 2).
 /// * `y0` — initial condition at `ts[0]`.
 /// * `init_guess` — optional warm start (`L·n`, e.g. previous training step's
 ///   trajectory, App. B.2); otherwise `y0` is tiled.
+///
+/// This is the B = 1 face of [`deer_ode_batch`]; per-node/per-interval
+/// arithmetic is identical to the historical single-sequence solver, with
+/// one hardening change: a non-finite Newton trial now freezes the last
+/// finite iterate instead of committing the poisoned trajectory.
 pub fn deer_ode<S: Scalar, Sys: OdeSystem<S>>(
     sys: &Sys,
     ts: &[S],
@@ -67,148 +570,511 @@ pub fn deer_ode<S: Scalar, Sys: OdeSystem<S>>(
     interp: Interp,
     cfg: &DeerConfig<S>,
 ) -> OdeDeerResult<S> {
+    let mut b = deer_ode_batch(sys, ts, y0, init_guess, interp, cfg, 1);
+    OdeDeerResult {
+        ys: std::mem::take(&mut b.ys),
+        iterations: b.iterations[0],
+        converged: b.converged[0],
+        err_trace: std::mem::take(&mut b.err_traces[0]),
+        profile: b.profile,
+    }
+}
+
+/// Solve B independent initial-value problems on a shared time grid with
+/// ONE fused batched DEER iteration (`y0s = [B, n]`,
+/// `init_guess = [B, L, n]`).
+///
+/// Every Newton sweep evaluates the node linearization (FUNCEVAL), builds
+/// the per-interval `(Ḡ, z̄)` elements (DISCRETIZE) and runs the batched
+/// INVLIN scan for all still-active sequences in one pass; converged or
+/// diverged sequences freeze in place (per-sequence masking) while
+/// stragglers keep iterating. The scan schedule is keyed on the TOTAL
+/// batch, never the active count, so masking is bit-reproducible.
+pub fn deer_ode_batch<S: Scalar, Sys: OdeSystem<S>>(
+    sys: &Sys,
+    ts: &[S],
+    y0s: &[S],
+    init_guess: Option<&[S]>,
+    interp: Interp,
+    cfg: &DeerConfig<S>,
+    batch: usize,
+) -> OdeBatchResult<S> {
     let n = sys.dim();
     let l = ts.len();
     assert!(l >= 2, "need at least two grid points");
-    assert_eq!(y0.len(), n);
-    let nn = n * n;
+    assert!(batch > 0, "batch must be ≥ 1");
+    assert_eq!(y0s.len(), batch * n, "y0s layout ([B, n])");
+    let ln = l * n;
+    let steps = l - 1;
+    let stn = steps * n;
+    let structure = sys.jac_structure();
+    if let JacobianStructure::Block { k } = structure {
+        assert!(k > 0 && n % k == 0, "Block(k) needs k | n");
+    }
+    let jl = structure.jac_len(n);
+
+    let structure_tag: &'static str = match structure {
+        JacobianStructure::Dense => "dense",
+        JacobianStructure::Diagonal => "diagonal",
+        JacobianStructure::Block { .. } => "block",
+    };
+    telemetry::counter_add(Counter::OdeSolves, 1);
+    let _solve = telemetry::span_with(
+        "ode_batched_solve",
+        vec![
+            ("rows", telemetry::ArgValue::Num(batch as f64)),
+            ("t_len", telemetry::ArgValue::Num(steps as f64)),
+            ("structure", telemetry::ArgValue::Str(structure_tag)),
+        ],
+    );
 
     let mut yt: Vec<S> = match init_guess {
         Some(g) => {
-            assert_eq!(g.len(), l * n);
+            assert_eq!(g.len(), batch * ln, "init_guess layout ([B, L, n])");
             let mut v = g.to_vec();
-            v[..n].copy_from_slice(y0); // the IC is pinned
+            for b in 0..batch {
+                // the IC is pinned
+                v[b * ln..b * ln + n].copy_from_slice(&y0s[b * n..(b + 1) * n]);
+            }
             v
         }
         None => {
-            let mut v = vec![S::zero(); l * n];
-            for i in 0..l {
-                v[i * n..(i + 1) * n].copy_from_slice(y0);
+            let mut v = vec![S::zero(); batch * ln];
+            for b in 0..batch {
+                for i in 0..l {
+                    v[b * ln + i * n..b * ln + (i + 1) * n]
+                        .copy_from_slice(&y0s[b * n..(b + 1) * n]);
+                }
             }
             v
         }
     };
 
-    // Node-wise G(t_i), z(t_i) and interval Ḡ_i, z̄_i buffers.
-    let mut g_node = vec![S::zero(); l * nn];
-    let mut z_node = vec![S::zero(); l * n];
-    let steps = l - 1;
-    let mut a_bar = vec![S::zero(); steps * nn];
-    let mut b_bar = vec![S::zero(); steps * n];
-    let mut scan_out = vec![S::zero(); steps * n];
+    // Node-wise G(t_i), z(t_i) and interval Ḡ_i, z̄_i slabs ([B, ·, ·]).
+    let mut g_node = vec![S::zero(); batch * l * jl];
+    let mut z_node = vec![S::zero(); batch * ln];
+    let mut a_bar = vec![S::zero(); batch * steps * jl];
+    let mut b_bar = vec![S::zero(); batch * stn];
+    let mut scan_out = vec![S::zero(); batch * stn];
+    let mut scan_ws: ScanWorkspace<S> = ScanWorkspace::new();
 
     let mut profile = PhaseProfile::new();
-    let mut err_trace = Vec::new();
-    let mut converged = false;
-    let mut iterations = 0;
-    let mut prev_err = f64::INFINITY;
-    let mut grow_streak = 0usize;
-
-    let mut f_buf = vec![S::zero(); n];
-    let mut gc = vec![S::zero(); nn];
-    let mut neg_g_dt = vec![S::zero(); nn];
-    let mut phi = vec![S::zero(); nn];
-    let mut zc = vec![S::zero(); n];
+    let mut err_traces: Vec<Vec<f64>> = vec![Vec::new(); batch];
+    let mut converged = vec![false; batch];
+    let mut iterations = vec![0usize; batch];
+    let mut active = vec![true; batch];
+    let mut grow_streak = vec![0usize; batch];
+    let mut prev_err = vec![f64::INFINITY; batch];
+    let mut errs = vec![0.0f64; batch];
+    let mut divergence: Vec<Option<DivergenceReason>> = vec![None; batch];
+    let mut sweeps = 0usize;
+    let tol = cfg.tol.to_f64c();
 
     for _ in 0..cfg.max_iter {
-        iterations += 1;
+        let act_idx: Vec<usize> = (0..batch).filter(|&s| active[s]).collect();
+        if act_idx.is_empty() {
+            break;
+        }
+        sweeps += 1;
+        telemetry::counter_add(Counter::OdeSweeps, 1);
+        let _sweep = telemetry::span_with(
+            "ode_sweep",
+            vec![("active", telemetry::ArgValue::Num(act_idx.len() as f64))],
+        );
+        for &s in &act_idx {
+            iterations[s] += 1;
+        }
 
-        // FUNCEVAL: node values G = −J, z = f − J·y on the current guess.
         profile.record(Phase::FuncEval, || {
-            for i in 0..l {
-                let y = &yt[i * n..(i + 1) * n];
-                let jrow = &mut g_node[i * nn..(i + 1) * nn];
-                sys.jac(ts[i], y, jrow);
-                sys.f(ts[i], y, &mut f_buf);
-                // z_i = f − J·y ; then negate J in place to hold G = −J.
-                let zi = &mut z_node[i * n..(i + 1) * n];
-                for r in 0..n {
-                    let mut acc = S::zero();
-                    for c in 0..n {
-                        acc += jrow[r * n + c] * y[c];
-                    }
-                    zi[r] = f_buf[r] - acc;
-                }
-                for v in jrow.iter_mut() {
-                    *v = -*v;
-                }
-            }
+            eval_nodes(
+                sys,
+                ts,
+                &yt,
+                &mut g_node,
+                &mut z_node,
+                structure,
+                &act_idx,
+                cfg.threads,
+            );
         });
 
-        // DISCRETIZE (the paper's GTMULT analogue): build Ḡ_i = exp(−G_cΔ),
-        // z̄_i = Δ·φ₁(−G_cΔ)·z_c per interval under the interpolation rule.
         profile.record(Phase::Discretize, || {
-            for i in 0..steps {
-                let dt = ts[i + 1] - ts[i];
-                match interp {
-                    Interp::Midpoint => {
-                        let half = S::from_f64c(0.5);
-                        for k in 0..nn {
-                            gc[k] = (g_node[i * nn + k] + g_node[(i + 1) * nn + k]) * half;
-                        }
-                        for k in 0..n {
-                            zc[k] = (z_node[i * n + k] + z_node[(i + 1) * n + k]) * half;
-                        }
-                    }
-                    Interp::Left => {
-                        gc.copy_from_slice(&g_node[i * nn..(i + 1) * nn]);
-                        zc.copy_from_slice(&z_node[i * n..(i + 1) * n]);
-                    }
-                    Interp::Right => {
-                        gc.copy_from_slice(&g_node[(i + 1) * nn..(i + 2) * nn]);
-                        zc.copy_from_slice(&z_node[(i + 1) * n..(i + 2) * n]);
-                    }
-                }
-                for k in 0..nn {
-                    neg_g_dt[k] = -gc[k] * dt;
-                }
-                expm(&neg_g_dt, &mut a_bar[i * nn..(i + 1) * nn], n);
-                phi1(&neg_g_dt, &mut phi, n);
-                // z̄ = Δ·φ₁(−GΔ)·z_c
-                let bb = &mut b_bar[i * n..(i + 1) * n];
-                for r in 0..n {
-                    let mut acc = S::zero();
-                    for c in 0..n {
-                        acc += phi[r * n + c] * zc[c];
-                    }
-                    bb[r] = dt * acc;
-                }
-            }
+            discretize_rows(
+                ts,
+                &g_node,
+                &z_node,
+                &mut a_bar,
+                &mut b_bar,
+                structure,
+                interp,
+                &act_idx,
+                cfg.threads,
+                n,
+                false,
+            );
         });
 
-        // INVLIN: prefix scan over intervals.
-        profile.record(Phase::Invlin, || {
-            par_scan_apply(&a_bar, &b_bar, y0, &mut scan_out, n, steps, cfg.threads);
+        // INVLIN: one fused batched scan over the active B'×(L−1) element
+        // grid, dispatched on structure; frozen sequences are masked out.
+        profile.record(Phase::Invlin, || match structure {
+            JacobianStructure::Dense => par_scan_apply_batch_ws(
+                &a_bar,
+                &b_bar,
+                y0s,
+                &mut scan_out,
+                n,
+                steps,
+                batch,
+                Some(&active),
+                cfg.threads,
+                &mut scan_ws,
+            ),
+            JacobianStructure::Diagonal => par_diag_scan_apply_batch_ws(
+                &a_bar,
+                &b_bar,
+                y0s,
+                &mut scan_out,
+                n,
+                steps,
+                batch,
+                Some(&active),
+                cfg.threads,
+                &mut scan_ws,
+            ),
+            JacobianStructure::Block { k } => par_block_scan_apply_batch_ws(
+                &a_bar,
+                &b_bar,
+                y0s,
+                &mut scan_out,
+                n,
+                k,
+                steps,
+                batch,
+                Some(&active),
+                cfg.threads,
+                &mut scan_ws,
+            ),
         });
 
-        // Update and convergence check (positions 1..L; y_0 pinned).
-        let err = crate::linalg::max_abs_diff(&yt[n..], &scan_out).to_f64c();
-        err_trace.push(err);
-        yt[n..].copy_from_slice(&scan_out);
-
-        if !err.is_finite() {
-            break;
-        }
-        if err < cfg.tol.to_f64c() {
-            converged = true;
-            break;
-        }
-        if err > prev_err {
-            grow_streak += 1;
-            if grow_streak >= cfg.divergence_patience {
-                break;
+        // Per-sequence update + convergence check (positions 1..L; y_0 is
+        // pinned). Non-finite hardening: a poisoned trial row freezes with
+        // an infinite error and KEEPS its last finite iterate — it is never
+        // committed (`max_abs_diff`'s `d > m` fold would let a NaN row
+        // report a tiny update and be declared converged otherwise).
+        for &s in &act_idx {
+            let trial = &scan_out[s * stn..(s + 1) * stn];
+            if trial.iter().any(|v| !v.is_finite()) {
+                errs[s] = f64::INFINITY;
+            } else {
+                let row = &mut yt[s * ln + n..(s + 1) * ln];
+                errs[s] = crate::linalg::max_abs_diff(row, trial).to_f64c();
+                row.copy_from_slice(trial);
             }
-        } else {
-            grow_streak = 0;
         }
-        prev_err = err;
+
+        for &s in &act_idx {
+            let err = errs[s];
+            err_traces[s].push(err);
+            if !err.is_finite() {
+                divergence[s] = Some(DivergenceReason::NonFinite);
+                telemetry::counter_add(DivergenceReason::NonFinite.counter(), 1);
+                active[s] = false;
+                continue;
+            }
+            if err < tol {
+                converged[s] = true;
+                active[s] = false;
+                continue;
+            }
+            if err > prev_err[s] {
+                grow_streak[s] += 1;
+                if grow_streak[s] >= cfg.divergence_patience {
+                    divergence[s] = Some(DivergenceReason::ErrorGrowth);
+                    telemetry::counter_add(DivergenceReason::ErrorGrowth.counter(), 1);
+                    active[s] = false;
+                    continue;
+                }
+            } else {
+                grow_streak[s] = 0;
+            }
+            prev_err[s] = err;
+        }
     }
 
-    OdeDeerResult {
+    for s in 0..batch {
+        if !converged[s] && divergence[s].is_none() {
+            divergence[s] = Some(DivergenceReason::MaxIters);
+            telemetry::counter_add(DivergenceReason::MaxIters.counter(), 1);
+        }
+    }
+    telemetry::histogram_record(Histogram::SweepsPerSolve, sweeps as u64);
+
+    OdeBatchResult {
+        batch,
         ys: yt,
         iterations,
         converged,
-        err_trace,
+        divergence,
+        err_traces,
+        jac_structure: structure,
+        profile,
+        sweeps,
+    }
+}
+
+/// Reverse pass of [`deer_ode_batch`]: pull per-node trajectory cotangents
+/// `gs = [B, L, n]` back to `dθ` and `dy0` through the converged discrete
+/// map `y_{i+1} = Ḡ_i y_i + z̄_i`.
+///
+/// The dual scan `λ_i = g_i + Ḡ_iᵀ λ_{i+1}` runs on the batched reverse
+/// kernels; the DISCRETIZE-phase VJP is exact through `expm`/`phi1` (the
+/// Fréchet-adjoint [`expm_vjp`]/[`phi1_vjp`]): the element cotangents
+/// `dḠ_i = λ_{i+1} y_iᵀ` and `dφ = Δ·λ_{i+1} z_cᵀ` pull back to the node
+/// fields `(G_j, z_j)`, then to θ via [`OdeSystemGrad::vjp_params`] (and
+/// the optional second-order [`OdeSystemGrad::vjp_jac_params`] leg). The
+/// dependence of the linearization point itself on upstream states is the
+/// standard frozen-element truncation — O(Δ²) per step on a converged
+/// trajectory.
+pub fn deer_ode_backward_batch<S: Scalar, Sys: OdeSystemGrad<S>>(
+    sys: &Sys,
+    ts: &[S],
+    ys: &[S],
+    gs: &[S],
+    interp: Interp,
+    threads: usize,
+    batch: usize,
+) -> OdeBackwardResult<S> {
+    let n = sys.dim();
+    let l = ts.len();
+    assert!(l >= 2, "need at least two grid points");
+    let ln = l * n;
+    let steps = l - 1;
+    let stn = steps * n;
+    assert_eq!(ys.len(), batch * ln, "ys layout ([B, L, n])");
+    assert_eq!(gs.len(), batch * ln, "gs layout ([B, L, n])");
+    // Diagonal runs natively; Block falls back to the dense reverse path
+    // (systems always implement the dense Jacobian).
+    let structure = match sys.jac_structure() {
+        JacobianStructure::Diagonal => JacobianStructure::Diagonal,
+        _ => JacobianStructure::Dense,
+    };
+    let diag = structure == JacobianStructure::Diagonal;
+    let jl = structure.jac_len(n);
+    let p = sys.num_params();
+
+    let _span = telemetry::span_with(
+        "ode_backward",
+        vec![
+            ("rows", telemetry::ArgValue::Num(batch as f64)),
+            ("t_len", telemetry::ArgValue::Num(steps as f64)),
+        ],
+    );
+
+    let mut profile = PhaseProfile::new();
+    let idx: Vec<usize> = (0..batch).collect();
+
+    // Recompute node linearization on the converged trajectory (JACOBIAN),
+    // then the interval elements Ḡ and φ₁ (DISCRETIZE).
+    let mut g_node = vec![S::zero(); batch * l * jl];
+    let mut z_node = vec![S::zero(); batch * ln];
+    profile.record(Phase::Jacobian, || {
+        eval_nodes(sys, ts, ys, &mut g_node, &mut z_node, structure, &idx, threads);
+    });
+
+    let mut a_bar = vec![S::zero(); batch * steps * jl];
+    let mut phi_bar = vec![S::zero(); batch * steps * jl];
+    profile.record(Phase::Discretize, || {
+        discretize_rows(
+            ts, &g_node, &z_node, &mut a_bar, &mut phi_bar, structure, interp, &idx, threads,
+            n, true,
+        );
+    });
+
+    // DUAL SCAN over steps positions: kernel index i carries node i+1, so
+    // out[i] = λ_{i+1} with λ_i = g_i + Ḡ_iᵀ λ_{i+1} (beyond-end Ḡ = 0).
+    let mut g_shift = vec![S::zero(); batch * stn];
+    for b in 0..batch {
+        g_shift[b * stn..(b + 1) * stn].copy_from_slice(&gs[b * ln + n..(b + 1) * ln]);
+    }
+    let mut lam = vec![S::zero(); batch * stn];
+    let mut scan_ws: ScanWorkspace<S> = ScanWorkspace::new();
+    profile.record(Phase::DualScan, || {
+        if diag {
+            par_diag_scan_reverse_batch_ws(
+                &a_bar, &g_shift, &mut lam, n, steps, batch, None, threads, &mut scan_ws,
+            );
+        } else {
+            par_scan_reverse_batch_ws(
+                &a_bar, &g_shift, &mut lam, n, steps, batch, None, threads, &mut scan_ws,
+            );
+        }
+    });
+
+    // PARAM VJP: per-row element cotangents → node cotangents → θ, with
+    // per-worker accumulators reduced in fixed bucket order (deterministic
+    // for a given batch/threads, like the RNN parameter pass).
+    let mut dy0s = vec![S::zero(); batch * n];
+    let workers = if threads <= 1 { 1 } else { threads.min(batch) };
+    let mut buckets: Vec<Vec<usize>> = (0..workers).map(|_| Vec::new()).collect();
+    for (k, &b) in idx.iter().enumerate() {
+        buckets[k % workers].push(b);
+    }
+    let (wl, wr) = interp_weights::<S>(interp);
+
+    let row_vjp = |b: usize, dtheta: &mut [S], dy0: &mut [S]| {
+        let y_row = &ys[b * ln..(b + 1) * ln];
+        let g_row = &g_node[b * l * jl..(b + 1) * l * jl];
+        let z_row = &z_node[b * ln..(b + 1) * ln];
+        let a_row = &a_bar[b * steps * jl..(b + 1) * steps * jl];
+        let phi_row = &phi_bar[b * steps * jl..(b + 1) * steps * jl];
+        let lam_row = &lam[b * stn..(b + 1) * stn];
+
+        let mut dg_node = vec![S::zero(); l * jl];
+        let mut dz_node = vec![S::zero(); ln];
+        let mut gc = vec![S::zero(); jl];
+        let mut zc = vec![S::zero(); n];
+        let mut m_buf = vec![S::zero(); jl];
+        let mut dm = vec![S::zero(); jl];
+        let mut w_a = vec![S::zero(); jl];
+        let mut w_phi = vec![S::zero(); jl];
+        let mut dzc = vec![S::zero(); n];
+
+        for i in 0..steps {
+            let dt = ts[i + 1] - ts[i];
+            let lam_n = &lam_row[i * n..(i + 1) * n];
+            let y_i = &y_row[i * n..(i + 1) * n];
+            interval_gz(g_row, z_row, i, jl, n, interp, &mut gc, &mut zc);
+            if diag {
+                for j in 0..n {
+                    let x = -gc[j] * dt;
+                    // Ā = e^x, φ = φ₁(x): dx = dĀ·e^x + dφcot·φ₁'(x).
+                    let da = lam_n[j] * y_i[j];
+                    let dphi = dt * lam_n[j] * zc[j];
+                    let dx = da * x.exp() + dphi * dphi1_s(x);
+                    let dgc = -dt * dx;
+                    dg_node[i * n + j] += wl * dgc;
+                    dg_node[(i + 1) * n + j] += wr * dgc;
+                    // dz_c = Δ·φᵀλ (scalar φ).
+                    let dz = dt * phi_row[i * n + j] * lam_n[j];
+                    dz_node[i * n + j] += wl * dz;
+                    dz_node[(i + 1) * n + j] += wr * dz;
+                }
+            } else {
+                let nn = jl;
+                for k in 0..nn {
+                    m_buf[k] = -gc[k] * dt;
+                    dm[k] = S::zero();
+                }
+                let phi_i = &phi_row[i * nn..(i + 1) * nn];
+                // dz_c = Δ·φᵀ λ_{i+1}; element cotangents dĀ = λ_{i+1} y_iᵀ
+                // and dφ = Δ·λ_{i+1} z_cᵀ.
+                for r in 0..n {
+                    for c in 0..n {
+                        w_a[r * n + c] = lam_n[r] * y_i[c];
+                        w_phi[r * n + c] = dt * lam_n[r] * zc[c];
+                    }
+                }
+                for c in 0..n {
+                    let mut acc = S::zero();
+                    for r in 0..n {
+                        acc += phi_i[r * n + c] * lam_n[r];
+                    }
+                    dzc[c] = dt * acc;
+                }
+                expm_vjp(&m_buf, &w_a, &mut dm, n);
+                phi1_vjp(&m_buf, &w_phi, &mut dm, n);
+                for k in 0..nn {
+                    let dgc = -dt * dm[k];
+                    dg_node[i * nn + k] += wl * dgc;
+                    dg_node[(i + 1) * nn + k] += wr * dgc;
+                }
+                for k in 0..n {
+                    dz_node[i * n + k] += wl * dzc[k];
+                    dz_node[(i + 1) * n + k] += wr * dzc[k];
+                }
+            }
+        }
+
+        // Node pullback: G_j = −J_j, z_j = f_j − J_j·y_j, so the Jacobian
+        // cotangent is W_J = −dG_j − dz_j ⊗ y_j and the f cotangent is dz_j.
+        let mut w_j = vec![S::zero(); jl];
+        for j in 0..l {
+            let yj = &y_row[j * n..(j + 1) * n];
+            let dzj = &dz_node[j * n..(j + 1) * n];
+            sys.vjp_params(ts[j], yj, dzj, dtheta);
+            if diag {
+                for r in 0..n {
+                    w_j[r] = -dg_node[j * n + r] - dzj[r] * yj[r];
+                }
+            } else {
+                for r in 0..n {
+                    for c in 0..n {
+                        w_j[r * n + c] = -dg_node[j * jl + r * n + c] - dzj[r] * yj[c];
+                    }
+                }
+            }
+            sys.vjp_jac_params(ts[j], yj, &w_j, dtheta);
+        }
+
+        // dy0 = g_0 + Ḡ_0ᵀ λ_1.
+        let lam1 = &lam_row[..n];
+        if diag {
+            for r in 0..n {
+                dy0[r] = gs[b * ln + r] + a_row[r] * lam1[r];
+            }
+        } else {
+            for c in 0..n {
+                let mut acc = S::zero();
+                for r in 0..n {
+                    acc += a_row[r * n + c] * lam1[r];
+                }
+                dy0[c] = gs[b * ln + c] + acc;
+            }
+        }
+    };
+
+    let mut dtheta = vec![S::zero(); p];
+    profile.record(Phase::ParamVjp, || {
+        if workers <= 1 {
+            let mut dy0_rows: Vec<Option<&mut [S]>> = dy0s.chunks_mut(n).map(Some).collect();
+            for &b in &idx {
+                row_vjp(b, &mut dtheta, dy0_rows[b].take().unwrap());
+            }
+        } else {
+            let mut dy0_rows: Vec<Option<&mut [S]>> = dy0s.chunks_mut(n).map(Some).collect();
+            let mut work: Vec<Vec<(usize, &mut [S])>> = (0..workers).map(|_| Vec::new()).collect();
+            for (w, bucket) in buckets.iter().enumerate() {
+                for &b in bucket {
+                    work[w].push((b, dy0_rows[b].take().unwrap()));
+                }
+            }
+            let row_vjp = &row_vjp;
+            let partials: Vec<Vec<S>> = std::thread::scope(|scope| {
+                let handles: Vec<_> = work
+                    .into_iter()
+                    .map(|bucket| {
+                        scope.spawn(move || {
+                            let mut acc = vec![S::zero(); p];
+                            for (b, dy0) in bucket {
+                                row_vjp(b, &mut acc, dy0);
+                            }
+                            acc
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            for part in partials {
+                for (d, v) in dtheta.iter_mut().zip(part.iter()) {
+                    *d += *v;
+                }
+            }
+        }
+    });
+
+    OdeBackwardResult {
+        dtheta,
+        dy0s,
         profile,
     }
 }
@@ -364,6 +1230,44 @@ mod tests {
         assert!(e_mid_f < e_left_f);
     }
 
+    /// Satellite pin: every `Interp` variant's global order measured against
+    /// a TIGHT-tolerance RK45 reference trajectory (not the closed form) —
+    /// midpoint ~2 (O(Δ³) local), left/right ~1 (O(Δ²) local), per
+    /// App. A.5 / Table 3.
+    #[test]
+    fn interp_orders_vs_rk45_reference() {
+        use crate::deer::rk45::{rk45_solve, Rk45Options};
+        let reference = |ts: &[f64]| -> Vec<f64> {
+            let opts = Rk45Options { rtol: 1e-12, atol: 1e-14, ..Default::default() };
+            rk45_solve(&ForcedDecay, ts, &[0.2], &opts).unwrap().0
+        };
+        let err_at = |l: usize, interp: Interp| -> f64 {
+            let ts = grid(3.0, l);
+            let rk = reference(&ts);
+            let res = deer_ode(
+                &ForcedDecay,
+                &ts,
+                &[0.2],
+                None,
+                interp,
+                &DeerConfig { tol: 1e-12, ..Default::default() },
+            );
+            crate::linalg::max_abs_diff(&rk, &res.ys)
+        };
+        let order = |interp: Interp| -> (f64, f64) {
+            let c = err_at(41, interp);
+            let f = err_at(81, interp);
+            ((c / f).log2(), f)
+        };
+        let (o_mid, e_mid) = order(Interp::Midpoint);
+        let (o_left, e_left) = order(Interp::Left);
+        let (o_right, e_right) = order(Interp::Right);
+        assert!(o_mid > 1.7, "midpoint order {o_mid}");
+        assert!((0.6..1.6).contains(&o_left), "left order {o_left}");
+        assert!((0.6..1.6).contains(&o_right), "right order {o_right}");
+        assert!(e_mid < e_left && e_mid < e_right);
+    }
+
     #[test]
     fn warm_start_cuts_iterations() {
         let ts = grid(4.0, 301);
@@ -385,5 +1289,377 @@ mod tests {
         let ts = grid(1.0, 51);
         let res = deer_ode(&Logistic, &ts, &[0.3], None, Interp::Midpoint, &DeerConfig::default());
         assert_eq!(res.ys[0], 0.3);
+    }
+
+    /// The fused batch at any thread count must equal B separate solves
+    /// bitwise: per-row arithmetic is independent and the scan schedule is
+    /// keyed on the total batch.
+    #[test]
+    fn batched_matches_looped_bitwise() {
+        let ts = grid(4.0, 201);
+        let y0s = [0.1f64, 0.2, 0.35];
+        let batch = y0s.len();
+        for threads in [1usize, 4] {
+            let cfg = DeerConfig { threads, ..Default::default() };
+            let fused = deer_ode_batch(&Logistic, &ts, &y0s, None, Interp::Midpoint, &cfg, batch);
+            for (b, &y0) in y0s.iter().enumerate() {
+                let solo = deer_ode(&Logistic, &ts, &[y0], None, Interp::Midpoint, &cfg);
+                assert_eq!(fused.iterations[b], solo.iterations, "row {b} threads {threads}");
+                assert_eq!(fused.converged[b], solo.converged);
+                assert_eq!(
+                    &fused.ys[b * ts.len()..(b + 1) * ts.len()],
+                    &solo.ys[..],
+                    "row {b} threads {threads} not bitwise"
+                );
+            }
+        }
+    }
+
+    /// n-dimensional decoupled logistic with per-component rates — a
+    /// natively Diagonal ∂f/∂y. Dense and Diagonal solves must agree to
+    /// solver tolerance, with the Diagonal one reporting the packed
+    /// structure (O(n) compose kernels).
+    struct VecLogistic {
+        rates: Vec<f64>,
+        diag: bool,
+    }
+    impl OdeSystem<f64> for VecLogistic {
+        fn dim(&self) -> usize {
+            self.rates.len()
+        }
+        fn f(&self, _t: f64, y: &[f64], out: &mut [f64]) {
+            for (j, &r) in self.rates.iter().enumerate() {
+                out[j] = r * y[j] * (1.0 - y[j]);
+            }
+        }
+        fn jac(&self, _t: f64, y: &[f64], out: &mut [f64]) {
+            let n = self.dim();
+            out.fill(0.0);
+            for (j, &r) in self.rates.iter().enumerate() {
+                out[j * n + j] = r * (1.0 - 2.0 * y[j]);
+            }
+        }
+        fn jac_structure(&self) -> JacobianStructure {
+            if self.diag {
+                JacobianStructure::Diagonal
+            } else {
+                JacobianStructure::Dense
+            }
+        }
+        fn jac_diag(&self, _t: f64, y: &[f64], out: &mut [f64]) {
+            for (j, &r) in self.rates.iter().enumerate() {
+                out[j] = r * (1.0 - 2.0 * y[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn diagonal_structure_matches_dense() {
+        let rates = vec![0.6, 1.0, 1.4, 0.9];
+        let ts = grid(4.0, 301);
+        let y0s = [0.2, 0.1, 0.3, 0.25, 0.15, 0.35, 0.22, 0.12];
+        let cfg = DeerConfig { tol: 1e-10, threads: 2, ..Default::default() };
+        let dense = deer_ode_batch(
+            &VecLogistic { rates: rates.clone(), diag: false },
+            &ts,
+            &y0s,
+            None,
+            Interp::Midpoint,
+            &cfg,
+            2,
+        );
+        let diag = deer_ode_batch(
+            &VecLogistic { rates, diag: true },
+            &ts,
+            &y0s,
+            None,
+            Interp::Midpoint,
+            &cfg,
+            2,
+        );
+        assert_eq!(dense.jac_structure, JacobianStructure::Dense);
+        assert_eq!(diag.jac_structure, JacobianStructure::Diagonal);
+        assert!(dense.converged.iter().all(|&c| c));
+        assert!(diag.converged.iter().all(|&c| c));
+        let d = crate::linalg::max_abs_diff(&dense.ys, &diag.ys);
+        assert!(d < 1e-8, "dense vs diagonal {d}");
+    }
+
+    /// Two uncoupled oscillators with distinct frequencies — a native
+    /// Block(2) ∂f/∂y solved on the packed block kernels.
+    struct TwoOsc {
+        block: bool,
+    }
+    impl OdeSystem<f64> for TwoOsc {
+        fn dim(&self) -> usize {
+            4
+        }
+        fn f(&self, _t: f64, y: &[f64], out: &mut [f64]) {
+            out[0] = y[1];
+            out[1] = -y[0];
+            out[2] = 2.0 * y[3];
+            out[3] = -2.0 * y[2];
+        }
+        fn jac(&self, _t: f64, _y: &[f64], out: &mut [f64]) {
+            out.fill(0.0);
+            out[1] = 1.0;
+            out[4] = -1.0;
+            out[2 * 4 + 3] = 2.0;
+            out[3 * 4 + 2] = -2.0;
+        }
+        fn jac_structure(&self) -> JacobianStructure {
+            if self.block {
+                JacobianStructure::Block { k: 2 }
+            } else {
+                JacobianStructure::Dense
+            }
+        }
+        fn jac_block(&self, _t: f64, _y: &[f64], out: &mut [f64], k: usize) {
+            assert_eq!(k, 2);
+            out.copy_from_slice(&[0.0, 1.0, -1.0, 0.0, 0.0, 2.0, -2.0, 0.0]);
+        }
+    }
+
+    #[test]
+    fn block_structure_matches_dense() {
+        let ts = grid(2.0 * std::f64::consts::PI, 401);
+        let y0 = [1.0, 0.0, 0.5, 0.0];
+        let cfg = DeerConfig { tol: 1e-10, ..Default::default() };
+        let dense = deer_ode(&TwoOsc { block: false }, &ts, &y0, None, Interp::Midpoint, &cfg);
+        let block = deer_ode(&TwoOsc { block: true }, &ts, &y0, None, Interp::Midpoint, &cfg);
+        assert!(dense.converged && block.converged);
+        let d = crate::linalg::max_abs_diff(&dense.ys, &block.ys);
+        assert!(d < 1e-8, "dense vs block {d}");
+    }
+
+    /// Finite-time blow-up (y' = y³) poisons the Newton trial with inf/NaN:
+    /// the hardened batch path must freeze the last finite iterate and
+    /// report NonFinite instead of returning a poisoned trajectory.
+    struct Cubic;
+    impl OdeSystem<f64> for Cubic {
+        fn dim(&self) -> usize {
+            1
+        }
+        fn f(&self, _t: f64, y: &[f64], out: &mut [f64]) {
+            out[0] = y[0] * y[0] * y[0];
+        }
+        fn jac(&self, _t: f64, y: &[f64], out: &mut [f64]) {
+            out[0] = 3.0 * y[0] * y[0];
+        }
+    }
+
+    #[test]
+    fn non_finite_trial_freezes_last_finite_iterate() {
+        let ts = grid(5.0, 11);
+        let res = deer_ode_batch(
+            &Cubic,
+            &ts,
+            &[2.0],
+            None,
+            Interp::Midpoint,
+            &DeerConfig::default(),
+            1,
+        );
+        assert!(!res.converged[0]);
+        assert!(res.ys.iter().all(|v| v.is_finite()), "trajectory poisoned");
+        assert!(matches!(
+            res.divergence[0],
+            Some(DivergenceReason::NonFinite) | Some(DivergenceReason::ErrorGrowth)
+        ));
+    }
+
+    /// Forced linear system, parameters (a, b): y' = −a·y + b·sin t. The
+    /// discrete map is exactly linear in y and θ-dependence enters only
+    /// through G = a and z = b·sin t, so the backward pass (with the
+    /// second-order ∂J/∂θ leg implemented) must match finite differences of
+    /// the CONVERGED solve tightly.
+    struct ForcedLinear {
+        a: f64,
+        b: f64,
+    }
+    impl OdeSystem<f64> for ForcedLinear {
+        fn dim(&self) -> usize {
+            1
+        }
+        fn f(&self, t: f64, y: &[f64], out: &mut [f64]) {
+            out[0] = -self.a * y[0] + self.b * t.sin();
+        }
+        fn jac(&self, _t: f64, _y: &[f64], out: &mut [f64]) {
+            out[0] = -self.a;
+        }
+    }
+    impl OdeSystemGrad<f64> for ForcedLinear {
+        fn num_params(&self) -> usize {
+            2
+        }
+        fn vjp_params(&self, t: f64, y: &[f64], u: &[f64], dtheta: &mut [f64]) {
+            dtheta[0] += -y[0] * u[0];
+            dtheta[1] += t.sin() * u[0];
+        }
+        fn vjp_jac_params(&self, _t: f64, _y: &[f64], w: &[f64], dtheta: &mut [f64]) {
+            // ∂J/∂a = −1.
+            dtheta[0] += -w[0];
+        }
+    }
+
+    fn solve_loss(sys: &ForcedLinear, ts: &[f64], y0: f64, gs: &[f64]) -> f64 {
+        let cfg = DeerConfig { tol: 1e-13, ..Default::default() };
+        let res = deer_ode(sys, ts, &[y0], None, Interp::Midpoint, &cfg);
+        assert!(res.converged);
+        res.ys.iter().zip(gs.iter()).map(|(y, g)| y * g).sum()
+    }
+
+    #[test]
+    fn backward_matches_fd_on_forced_linear() {
+        let ts = grid(2.0, 41);
+        let l = ts.len();
+        let y0 = 0.3;
+        // Fixed linear loss L = Σ g_i·y_i with a deterministic cotangent.
+        let gs: Vec<f64> = (0..l).map(|i| ((i * 37 % 11) as f64 - 5.0) / 7.0).collect();
+        let sys = ForcedLinear { a: 0.8, b: 0.6 };
+        let cfg = DeerConfig { tol: 1e-13, ..Default::default() };
+        let fwd = deer_ode(&sys, &ts, &[y0], None, Interp::Midpoint, &cfg);
+        assert!(fwd.converged);
+        let back = deer_ode_backward_batch(&sys, &ts, &fwd.ys, &gs, Interp::Midpoint, 1, 1);
+
+        let eps = 1e-6;
+        let fd_a = (solve_loss(&ForcedLinear { a: 0.8 + eps, b: 0.6 }, &ts, y0, &gs)
+            - solve_loss(&ForcedLinear { a: 0.8 - eps, b: 0.6 }, &ts, y0, &gs))
+            / (2.0 * eps);
+        let fd_b = (solve_loss(&ForcedLinear { a: 0.8, b: 0.6 + eps }, &ts, y0, &gs)
+            - solve_loss(&ForcedLinear { a: 0.8, b: 0.6 - eps }, &ts, y0, &gs))
+            / (2.0 * eps);
+        let fd_y0 = (solve_loss(&sys, &ts, y0 + eps, &gs) - solve_loss(&sys, &ts, y0 - eps, &gs))
+            / (2.0 * eps);
+        assert!(
+            (back.dtheta[0] - fd_a).abs() < 1e-6 * fd_a.abs().max(1.0),
+            "da {} vs fd {fd_a}",
+            back.dtheta[0]
+        );
+        assert!(
+            (back.dtheta[1] - fd_b).abs() < 1e-6 * fd_b.abs().max(1.0),
+            "db {} vs fd {fd_b}",
+            back.dtheta[1]
+        );
+        assert!(
+            (back.dy0s[0] - fd_y0).abs() < 1e-6 * fd_y0.abs().max(1.0),
+            "dy0 {} vs fd {fd_y0}",
+            back.dy0s[0]
+        );
+    }
+
+    /// Nonlinear rate-parameterized logistic: the frozen-element truncation
+    /// is O(Δ²), so the backward gradient converges to the FD gradient of
+    /// the discrete solve as the grid refines.
+    struct RateLogistic {
+        r: f64,
+        diag: bool,
+    }
+    impl OdeSystem<f64> for RateLogistic {
+        fn dim(&self) -> usize {
+            1
+        }
+        fn f(&self, _t: f64, y: &[f64], out: &mut [f64]) {
+            out[0] = self.r * y[0] * (1.0 - y[0]);
+        }
+        fn jac(&self, _t: f64, y: &[f64], out: &mut [f64]) {
+            out[0] = self.r * (1.0 - 2.0 * y[0]);
+        }
+        fn jac_structure(&self) -> JacobianStructure {
+            if self.diag {
+                JacobianStructure::Diagonal
+            } else {
+                JacobianStructure::Dense
+            }
+        }
+        fn jac_diag(&self, t: f64, y: &[f64], out: &mut [f64]) {
+            self.jac(t, y, out);
+        }
+    }
+    impl OdeSystemGrad<f64> for RateLogistic {
+        fn num_params(&self) -> usize {
+            1
+        }
+        fn vjp_params(&self, _t: f64, y: &[f64], u: &[f64], dtheta: &mut [f64]) {
+            dtheta[0] += y[0] * (1.0 - y[0]) * u[0];
+        }
+        fn vjp_jac_params(&self, _t: f64, y: &[f64], w: &[f64], dtheta: &mut [f64]) {
+            dtheta[0] += (1.0 - 2.0 * y[0]) * w[0];
+        }
+    }
+
+    #[test]
+    fn backward_fd_on_nonlinear_logistic() {
+        for diag in [false, true] {
+            let ts = grid(3.0, 241);
+            let l = ts.len();
+            let gs: Vec<f64> = (0..l).map(|i| if i == l - 1 { 1.0 } else { 0.0 }).collect();
+            let cfg = DeerConfig { tol: 1e-13, ..Default::default() };
+            let loss = |r: f64| -> f64 {
+                let res =
+                    deer_ode(&RateLogistic { r, diag }, &ts, &[0.2], None, Interp::Midpoint, &cfg);
+                assert!(res.converged);
+                res.ys[l - 1]
+            };
+            let fwd = deer_ode(
+                &RateLogistic { r: 1.3, diag },
+                &ts,
+                &[0.2],
+                None,
+                Interp::Midpoint,
+                &cfg,
+            );
+            let back = deer_ode_backward_batch(
+                &RateLogistic { r: 1.3, diag },
+                &ts,
+                &fwd.ys,
+                &gs,
+                Interp::Midpoint,
+                1,
+                1,
+            );
+            let eps = 1e-6;
+            let fd = (loss(1.3 + eps) - loss(1.3 - eps)) / (2.0 * eps);
+            let rel = (back.dtheta[0] - fd).abs() / fd.abs().max(1e-12);
+            assert!(rel < 1e-3, "diag={diag}: dr {} vs fd {fd} (rel {rel})", back.dtheta[0]);
+        }
+    }
+
+    /// Batched backward over B rows equals the per-row calls (additive dθ;
+    /// tolerance-level because the fused accumulation order differs).
+    #[test]
+    fn backward_batched_matches_looped() {
+        let ts = grid(2.5, 101);
+        let l = ts.len();
+        let sys = ForcedLinear { a: 0.5, b: 0.9 };
+        let cfg = DeerConfig { tol: 1e-13, ..Default::default() };
+        let y0s = [0.1, 0.4];
+        let fused_fwd = deer_ode_batch(&sys, &ts, &y0s, None, Interp::Midpoint, &cfg, 2);
+        assert!(fused_fwd.converged.iter().all(|&c| c));
+        let gs: Vec<f64> = (0..2 * l).map(|i| ((i * 13 % 7) as f64 - 3.0) / 5.0).collect();
+        for threads in [1usize, 2] {
+            let fused =
+                deer_ode_backward_batch(&sys, &ts, &fused_fwd.ys, &gs, Interp::Midpoint, threads, 2);
+            let mut dtheta_sum = vec![0.0f64; 2];
+            for b in 0..2 {
+                let solo = deer_ode_backward_batch(
+                    &sys,
+                    &ts,
+                    &fused_fwd.ys[b * l..(b + 1) * l],
+                    &gs[b * l..(b + 1) * l],
+                    Interp::Midpoint,
+                    1,
+                    1,
+                );
+                for (d, v) in dtheta_sum.iter_mut().zip(solo.dtheta.iter()) {
+                    *d += v;
+                }
+                let dy = (fused.dy0s[b] - solo.dy0s[0]).abs();
+                assert!(dy < 1e-12, "dy0 row {b}: {dy}");
+            }
+            for (f, s) in fused.dtheta.iter().zip(dtheta_sum.iter()) {
+                assert!((f - s).abs() < 1e-12, "{f} vs {s}");
+            }
+        }
     }
 }

@@ -225,6 +225,55 @@ fn scatter_window<S: Scalar>(
     }
 }
 
+/// Streaming input provider for the windowed solver: the full `[B, T, m]`
+/// input never has to exist — [`solve_exact`]'s sweeps only ever read one
+/// window at a time, so a source that synthesizes (or loads) windows on
+/// demand caps input residency at O(B·W·m) regardless of T.
+///
+/// `fill_window(lo, hi, dst)` writes time steps `[lo, hi)` of every
+/// sequence into `dst` in the contiguous `[B, hi−lo, m]` window layout.
+/// Implementations must be deterministic in `(lo, hi)` — the solver
+/// re-reads each window once per Newton sweep and the exact-stitching
+/// bitwise contract assumes identical replays.
+pub trait WindowSource<S: Scalar> {
+    /// Total sequence length T the source can produce.
+    fn t_len(&self) -> usize;
+    /// Input channels per step (the cell's `input_dim`).
+    fn input_dim(&self) -> usize;
+    /// Write window `[lo, hi)` into `dst` (`[B, hi−lo, m]`).
+    fn fill_window(&self, lo: usize, hi: usize, dst: &mut [S]);
+}
+
+/// A resident `[B, T, m]` slab viewed as a [`WindowSource`] — the adapter
+/// [`deer_rnn_sharded`] routes through, so the in-memory and streamed
+/// paths run the literal same solver code.
+pub struct SliceSource<'a, S: Scalar> {
+    xs: &'a [S],
+    m: usize,
+    t_len: usize,
+    batch: usize,
+}
+
+impl<'a, S: Scalar> SliceSource<'a, S> {
+    pub fn new(xs: &'a [S], m: usize, batch: usize) -> Self {
+        assert!(batch > 0 && m > 0);
+        assert_eq!(xs.len() % (batch * m), 0, "xs layout ([B, T, m])");
+        SliceSource { xs, m, t_len: xs.len() / (batch * m), batch }
+    }
+}
+
+impl<S: Scalar> WindowSource<S> for SliceSource<'_, S> {
+    fn t_len(&self) -> usize {
+        self.t_len
+    }
+    fn input_dim(&self) -> usize {
+        self.m
+    }
+    fn fill_window(&self, lo: usize, hi: usize, dst: &mut [S]) {
+        gather_window(self.xs, dst, self.m, self.t_len, lo, hi - lo, self.batch);
+    }
+}
+
 /// Windowed DEER forward solve over B sequences in the `[B, T, n]` layout.
 ///
 /// `boundary_init` optionally seeds the penalty path's free window initial
@@ -292,7 +341,8 @@ pub fn deer_rnn_sharded<S: Scalar, C: Cell<S>>(
 
     match scfg.stitch {
         StitchMode::Exact => {
-            solve_exact(cell, h0s, xs, init_guess, cfg, batch, scfg, window, &spans)
+            let src = SliceSource::new(xs, m, batch);
+            solve_exact(cell, h0s, &src, init_guess, cfg, batch, scfg, window, &spans)
         }
         StitchMode::Penalty => solve_penalty(
             cell,
@@ -309,6 +359,46 @@ pub fn deer_rnn_sharded<S: Scalar, C: Cell<S>>(
     }
 }
 
+/// Windowed DEER forward solve fed by a streaming [`WindowSource`] — the
+/// out-of-core face of [`deer_rnn_sharded`]: the full `[B, T, m]` input is
+/// never materialized, each Newton sweep pulls windows from `src` on
+/// demand, so input residency is O(B·W·m). Exact stitching only (the
+/// penalty path re-reads whole-horizon inputs per outer iteration);
+/// trajectories are bitwise-identical to feeding the same values through
+/// [`deer_rnn_sharded`] because [`SliceSource`] routes through this very
+/// code path.
+pub fn deer_rnn_sharded_streamed<S: Scalar, C: Cell<S>>(
+    cell: &C,
+    h0s: &[S],
+    src: &dyn WindowSource<S>,
+    init_guess: Option<&[S]>,
+    cfg: &DeerConfig<S>,
+    batch: usize,
+    scfg: &ShardConfig,
+) -> ShardedDeerResult<S> {
+    assert!(
+        matches!(scfg.stitch, StitchMode::Exact),
+        "streamed sharding supports exact stitching only"
+    );
+    let n = cell.state_dim();
+    assert!(batch > 0, "batch must be ≥ 1");
+    assert_eq!(h0s.len(), batch * n, "h0s layout ([B, n])");
+    let t_len = src.t_len();
+    let (window, spans) = shard_windows(t_len, scfg.shards);
+
+    telemetry::counter_add(Counter::ShardSolves, 1);
+    let _span = telemetry::span_with(
+        "shard_solve",
+        vec![
+            ("shards", telemetry::ArgValue::Num(spans.len() as f64)),
+            ("window", telemetry::ArgValue::Num(window as f64)),
+            ("mode", telemetry::ArgValue::Str("exact-streamed")),
+            ("batch", telemetry::ArgValue::Num(batch as f64)),
+        ],
+    );
+    solve_exact(cell, h0s, src, init_guess, cfg, batch, scfg, window, &spans)
+}
+
 /// Exact-constraint stitching: the unsharded Newton sweep, evaluated window
 /// by window with boundary chaining, visiting the identical iterate
 /// sequence (see module docs). Scratch slabs are O(B·W·…).
@@ -316,7 +406,7 @@ pub fn deer_rnn_sharded<S: Scalar, C: Cell<S>>(
 fn solve_exact<S: Scalar, C: Cell<S>>(
     cell: &C,
     h0s: &[S],
-    xs: &[S],
+    src: &dyn WindowSource<S>,
     init_guess: Option<&[S]>,
     cfg: &DeerConfig<S>,
     batch: usize,
@@ -338,7 +428,8 @@ fn solve_exact<S: Scalar, C: Cell<S>>(
     );
     let n = cell.state_dim();
     let m = cell.input_dim();
-    let t_len = xs.len() / (batch * m);
+    assert_eq!(src.input_dim(), m, "source channels must match the cell");
+    let t_len = src.t_len();
     let shards = spans.len();
     let structure = effective_structure(cell, cfg.jacobian_mode);
     let jl = structure.jac_len(n);
@@ -407,7 +498,7 @@ fn solve_exact<S: Scalar, C: Cell<S>>(
         for &(lo, hi) in spans {
             let wl = hi - lo;
             telemetry::counter_add(Counter::ShardWindows, 1);
-            gather_window(xs, &mut xs_win, m, t_len, lo, wl, batch);
+            src.fill_window(lo, hi, &mut xs_win[..batch * wl * m]);
             gather_window(&yt, &mut yt_win, n, t_len, lo, wl, batch);
             if pre_len > 0 {
                 for s in 0..batch {
@@ -1030,6 +1121,51 @@ mod tests {
             assert_eq!(sh.converged, base.converged);
             assert_eq!(sh.err_traces, base.err_traces);
             assert!(sh.converged.iter().all(|&c| c));
+        }
+    }
+
+    /// The streamed entry is the same solver: a window-synthesizing source
+    /// that replays the slab values must reproduce the slab-fed solve
+    /// bitwise, and the streamed path must also work with MORE shards than
+    /// the in-memory demo (including the S = 1 degenerate split).
+    #[test]
+    fn streamed_source_bitwise_equals_slab_fed() {
+        struct Replay {
+            xs: Vec<f64>,
+            m: usize,
+            t_len: usize,
+            batch: usize,
+        }
+        impl WindowSource<f64> for Replay {
+            fn t_len(&self) -> usize {
+                self.t_len
+            }
+            fn input_dim(&self) -> usize {
+                self.m
+            }
+            fn fill_window(&self, lo: usize, hi: usize, dst: &mut [f64]) {
+                let wl = hi - lo;
+                for s in 0..self.batch {
+                    for t in 0..wl {
+                        for k in 0..self.m {
+                            dst[(s * wl + t) * self.m + k] =
+                                self.xs[(s * self.t_len + lo + t) * self.m + k];
+                        }
+                    }
+                }
+            }
+        }
+        let (cell, h0s, xs) = mk_case(2, 100, 4, 2, 17);
+        let cfg = DeerConfig::<f64> { threads: 1, ..Default::default() };
+        let src = Replay { xs: xs.clone(), m: 2, t_len: 100, batch: 2 };
+        for shards in [1usize, 3, 8] {
+            let scfg = ShardConfig { shards, stitch: StitchMode::Exact, ..Default::default() };
+            let slab = deer_rnn_sharded(&cell, &h0s, &xs, None, None, &cfg, 2, &scfg);
+            let streamed = deer_rnn_sharded_streamed(&cell, &h0s, &src, None, &cfg, 2, &scfg);
+            assert_eq!(streamed.ys, slab.ys, "S={shards}: streamed ys differ");
+            assert_eq!(streamed.converged, slab.converged);
+            assert_eq!(streamed.iterations, slab.iterations);
+            assert!(streamed.converged.iter().all(|&c| c));
         }
     }
 

@@ -1982,31 +1982,66 @@ pub struct ShardDemoPoint {
     pub fits_sharded: bool,
     pub resident_unsharded: u64,
     pub resident_sharded: u64,
+    /// Input bytes resident at any instant under the streamed
+    /// [`crate::deer::sharded::WindowSource`] path (one `[B, W, m]` window).
+    pub input_bytes_streamed: u64,
+    /// Input bytes a full `[B, T, m]` slab would have pinned.
+    pub input_bytes_full: u64,
     pub wall_secs: f64,
     pub iterations: usize,
     pub converged: bool,
 }
 
-/// The T = 500k demo: the [`MemoryPlanner`] proves the unsharded dense
-/// solve cannot fit the budget (≈ T·(n² + 3n)·4 bytes ≈ 176 MiB at n = 8
-/// against 64 MiB), then the SAME solve completes sharded, whose resident
-/// plan fits with room to spare. The windowed path is not just faster
+/// Deterministic synthetic input generator for the streamed demo: every
+/// element is computed on demand from its absolute time index, so no
+/// full-length `[T, m]` input slab ever exists — input residency is the
+/// one `[W, m]` window the solver is currently gathering. Replay is exact
+/// (same indices → same values), which the exact-stitching sweeps need.
+struct GenSource {
+    t_len: usize,
+    m: usize,
+}
+
+impl crate::deer::sharded::WindowSource<f32> for GenSource {
+    fn t_len(&self) -> usize {
+        self.t_len
+    }
+    fn input_dim(&self) -> usize {
+        self.m
+    }
+    fn fill_window(&self, lo: usize, hi: usize, dst: &mut [f32]) {
+        for (i, t) in (lo..hi).enumerate() {
+            for k in 0..self.m {
+                let phase = 1e-3 * t as f32 * (k + 1) as f32;
+                dst[i * self.m + k] = 0.8 * phase.sin() + 0.3 * (1.7 * phase + 0.5).cos();
+            }
+        }
+    }
+}
+
+/// The T = 1M streamed demo: the [`MemoryPlanner`] proves the unsharded
+/// dense solve cannot fit the budget (≈ T·(n² + 3n)·4 bytes ≈ 352 MB at
+/// n = 8 against 64 MiB), then the SAME solve completes sharded, whose
+/// resident plan fits with room to spare — and the inputs are *generated
+/// per window* through a [`crate::deer::sharded::WindowSource`], so the
+/// full `[T, n]` input slab (4 MB/channel-row here, unbounded in general)
+/// is never materialized either. The windowed path is not just faster
 /// bookkeeping — it unlocks horizons the flat layout cannot represent.
 pub fn shard_demo(t_len: usize, shards: usize, n: usize, budget_bytes: u64) -> ShardDemoPoint {
-    use crate::deer::sharded::{deer_rnn_sharded, ShardConfig, StitchMode};
+    use crate::deer::sharded::{deer_rnn_sharded_streamed, shard_windows, ShardConfig, StitchMode};
     let planner = MemoryPlanner::new(budget_bytes);
     let mut rng = Rng::new(0xDE40);
     let cell: Gru<f32> = Gru::new(n, n, &mut rng);
     let structure = effective_structure(&cell, JacobianMode::Full);
     let fits_unsharded = planner.deer_fits_structured(n, t_len, 1, structure);
     let fits_sharded = planner.deer_fits_sharded(n, t_len, 1, structure, shards);
-    let mut xs = vec![0.0f32; t_len * n];
-    rng.fill_normal(&mut xs, 1.0);
+    let src = GenSource { t_len, m: n };
+    let (window, _spans) = shard_windows(t_len, shards);
     let h0s = vec![0.0f32; n];
     let cfg = DeerConfig::<f32>::default();
     let scfg = ShardConfig { shards, stitch: StitchMode::Exact, ..Default::default() };
     let start = std::time::Instant::now();
-    let res = deer_rnn_sharded(&cell, &h0s, &xs, None, None, &cfg, 1, &scfg);
+    let res = deer_rnn_sharded_streamed(&cell, &h0s, &src, None, &cfg, 1, &scfg);
     ShardDemoPoint {
         t_len,
         shards,
@@ -2016,6 +2051,8 @@ pub fn shard_demo(t_len: usize, shards: usize, n: usize, budget_bytes: u64) -> S
         fits_sharded,
         resident_unsharded: sim::deer_memory_bytes_structured(n, t_len, 1, 4, structure),
         resident_sharded: sim::deer_memory_bytes_sharded(n, t_len, 1, 4, structure, shards),
+        input_bytes_streamed: (window * n * 4) as u64,
+        input_bytes_full: (t_len * n * 4) as u64,
         wall_secs: start.elapsed().as_secs_f64(),
         iterations: res.iterations[0],
         converged: res.converged[0],
@@ -2025,7 +2062,7 @@ pub fn shard_demo(t_len: usize, shards: usize, n: usize, budget_bytes: u64) -> S
 /// Serialize the shard bench as the `BENCH_shard.json` document. The
 /// `points` carry the memory-vs-S curve the `scripts/bench_compare.sh`
 /// resident-memory gate reads (S = 8 < 25% of S = 1); `demo` is the
-/// planner-proved out-of-budget T = 500k completion.
+/// planner-proved out-of-budget T = 1M streamed-input completion.
 pub fn shard_bench_json(points: &[ShardBenchPoint], demo: &ShardDemoPoint) -> Json {
     json::obj(vec![
         ("bench", json::s("shard_windowed")),
@@ -2068,10 +2105,215 @@ pub fn shard_bench_json(points: &[ShardBenchPoint], demo: &ShardDemoPoint) -> Js
                 ("fits_sharded", json::num(if demo.fits_sharded { 1.0 } else { 0.0 })),
                 ("resident_unsharded", json::num(demo.resident_unsharded as f64)),
                 ("resident_sharded", json::num(demo.resident_sharded as f64)),
+                ("input_bytes_streamed", json::num(demo.input_bytes_streamed as f64)),
+                ("input_bytes_full", json::num(demo.input_bytes_full as f64)),
                 ("wall_secs", json::num(demo.wall_secs)),
                 ("iterations", json::num(demo.iterations as f64)),
                 ("converged", json::num(if demo.converged { 1.0 } else { 0.0 })),
             ]),
+        ),
+    ])
+}
+
+/// Grid for the DEER-ODE bench: horizons (grid nodes) and the state dim.
+/// The full grid tops out at T = 16 384 so the `bench_compare.sh` wall gate
+/// has T ≥ 4096 points to arm on; the fast grid keeps one such point.
+pub fn ode_bench_grid(fast: bool) -> (Vec<usize>, usize) {
+    if fast {
+        (vec![512, 4_096], 16)
+    } else {
+        (vec![512, 2_048, 4_096, 16_384], 16)
+    }
+}
+
+/// Bench fixture: n decoupled logistic equations `dy_k/dt = r_k·y_k·(1−y_k)`
+/// with per-component rates — the vector face of the `Logistic` system the
+/// solver tests pin against closed form. `∂f/∂y` is natively diagonal, so
+/// the DEER-ODE solve runs the O(n) scan kernels while RK45 steps the same
+/// field sequentially with error control.
+pub struct LogisticField {
+    rates: Vec<f32>,
+}
+
+impl LogisticField {
+    pub fn new(n: usize, rng: &mut Rng) -> Self {
+        let mut rates = vec![0.0f32; n];
+        rng.fill_uniform(&mut rates, 0.5, 1.5);
+        LogisticField { rates }
+    }
+}
+
+impl OdeSystem<f32> for LogisticField {
+    fn dim(&self) -> usize {
+        self.rates.len()
+    }
+    fn f(&self, _t: f32, y: &[f32], out: &mut [f32]) {
+        for (k, o) in out.iter_mut().enumerate() {
+            *o = self.rates[k] * y[k] * (1.0 - y[k]);
+        }
+    }
+    fn jac(&self, _t: f32, y: &[f32], out: &mut [f32]) {
+        let n = self.rates.len();
+        out.fill(0.0);
+        for k in 0..n {
+            out[k * n + k] = self.rates[k] * (1.0 - 2.0 * y[k]);
+        }
+    }
+    fn jac_structure(&self) -> crate::cells::JacobianStructure {
+        crate::cells::JacobianStructure::Diagonal
+    }
+    fn jac_diag(&self, _t: f32, y: &[f32], out: &mut [f32]) {
+        for (k, o) in out.iter_mut().enumerate() {
+            *o = self.rates[k] * (1.0 - 2.0 * y[k]);
+        }
+    }
+}
+
+/// One horizon of the DEER-ODE vs RK45 bench.
+#[derive(Debug, Clone)]
+pub struct OdeBenchPoint {
+    pub t_len: usize,
+    pub n: usize,
+    pub batch: usize,
+    pub threads: usize,
+    pub rk45_secs: f64,
+    pub deer_secs: f64,
+    /// Wall per (row, grid interval) — RK45's internal accept/reject
+    /// stepping is folded in (`rk45_steps` records the total attempts).
+    pub rk45_ns_per_step: f64,
+    pub deer_ode_ns_per_step: f64,
+    pub speedup: f64,
+    pub rk45_steps: usize,
+    pub iterations: usize,
+    pub converged: bool,
+    pub max_err_vs_rk45: f64,
+}
+
+/// DEER-ODE vs adaptive RK45 (§4.2's NeuralODE-baseline pairing) on the
+/// diagonal logistic field: B independent IVPs on a shared grid. DEER
+/// solves all of them as ONE fused `deer_ode_batch` call (`threads` =
+/// available cores — batch rows and the INVLIN scan parallelize, which is
+/// the method's entire point); RK45 is inherently sequential-in-time, so
+/// the baseline integrates the rows one after another, error-controlled,
+/// landing exactly on every grid node (it can never step past one, so its
+/// cost scales with the grid too). The horizon is FIXED at t ∈ [0, 5] and
+/// the grid refines with T — a growing horizon would make the cold-start
+/// sweep's linear solve overflow (the zero-guess linearization grows like
+/// e^{r·t}), while grid refinement keeps every T in the solver's pinned
+/// convergent regime. Agreement is reported as `max |Δ|` over all B
+/// trajectories.
+pub fn ode_bench(t_lens: &[usize], n: usize) -> (Table, Vec<OdeBenchPoint>) {
+    use crate::deer::ode::deer_ode_batch;
+    use crate::deer::rk45::{rk45_solve, Rk45Options};
+    const B: usize = 8;
+    const T_END: f32 = 5.0;
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let mut rng = Rng::new(0x0DE5);
+    let sys = LogisticField::new(n, &mut rng);
+    let mut y0s = vec![0.0f32; B * n];
+    rng.fill_uniform(&mut y0s, 0.05, 0.6);
+    let cfg = DeerConfig::<f32> { threads, ..Default::default() };
+    let mut table = Table::new(&[
+        "T",
+        "rk45 wall",
+        "deer wall",
+        "rk45 ns/step",
+        "deer ns/step",
+        "speedup",
+        "iters",
+        "conv",
+        "max |Δ| vs rk45",
+    ]);
+    let mut points = Vec::new();
+    for &t_len in t_lens {
+        let l_nodes = t_len + 1;
+        let ln = l_nodes * n;
+        let dt = T_END / t_len as f32;
+        let ts: Vec<f32> = (0..l_nodes).map(|i| dt * i as f32).collect();
+        let start = std::time::Instant::now();
+        let mut rk_ys = vec![0.0f32; B * ln];
+        let mut rk_steps = 0usize;
+        for b in 0..B {
+            let (ys, st, _fevals) =
+                rk45_solve(&sys, &ts, &y0s[b * n..(b + 1) * n], &Rk45Options::default())
+                    .expect("rk45 on logistic");
+            rk_ys[b * ln..(b + 1) * ln].copy_from_slice(&ys);
+            rk_steps += st;
+        }
+        let rk45_secs = start.elapsed().as_secs_f64();
+        let start = std::time::Instant::now();
+        let res = deer_ode_batch(&sys, &ts, &y0s, None, Interp::Midpoint, &cfg, B);
+        let deer_secs = start.elapsed().as_secs_f64();
+        let max_err = crate::linalg::max_abs_diff(&rk_ys, &res.ys).to_f64c();
+        let rk45_ns = rk45_secs * 1e9 / (t_len * B) as f64;
+        let deer_ns = deer_secs * 1e9 / (t_len * B) as f64;
+        let speedup = rk45_secs / deer_secs.max(1e-12);
+        let iterations = res.iterations.iter().copied().max().unwrap_or(0);
+        let converged = res.converged.iter().all(|&c| c);
+        table.row(vec![
+            t_len.to_string(),
+            fmt_secs(rk45_secs),
+            fmt_secs(deer_secs),
+            sig3(rk45_ns),
+            sig3(deer_ns),
+            format!("{speedup:.2}x"),
+            iterations.to_string(),
+            if converged { "yes".into() } else { "NO".into() },
+            format!("{max_err:.1e}"),
+        ]);
+        points.push(OdeBenchPoint {
+            t_len,
+            n,
+            batch: B,
+            threads,
+            rk45_secs,
+            deer_secs,
+            rk45_ns_per_step: rk45_ns,
+            deer_ode_ns_per_step: deer_ns,
+            speedup,
+            rk45_steps: rk_steps,
+            iterations,
+            converged,
+            max_err_vs_rk45: max_err,
+        });
+    }
+    (table, points)
+}
+
+/// Serialize the DEER-ODE bench as the `BENCH_ode.json` document read by
+/// `scripts/bench_compare.sh` (ns/step trajectory + the T ≥ 4096
+/// DEER-vs-RK45 wall gate).
+pub fn ode_bench_json(points: &[OdeBenchPoint]) -> Json {
+    json::obj(vec![
+        ("bench", json::s("ode_deer_vs_rk45")),
+        ("dtype", json::s("f32")),
+        ("system", json::s("logistic")),
+        ("structure", json::s("diagonal")),
+        ("interp", json::s("midpoint")),
+        (
+            "points",
+            json::arr(
+                points
+                    .iter()
+                    .map(|p| {
+                        json::obj(vec![
+                            ("n", json::num(p.n as f64)),
+                            ("t", json::num(p.t_len as f64)),
+                            ("batch", json::num(p.batch as f64)),
+                            ("threads", json::num(p.threads as f64)),
+                            ("rk45_secs", json::num(p.rk45_secs)),
+                            ("deer_secs", json::num(p.deer_secs)),
+                            ("rk45_ns_per_step", json::num(p.rk45_ns_per_step)),
+                            ("deer_ode_ns_per_step", json::num(p.deer_ode_ns_per_step)),
+                            ("speedup", json::num(p.speedup)),
+                            ("rk45_steps", json::num(p.rk45_steps as f64)),
+                            ("iterations", json::num(p.iterations as f64)),
+                            ("converged", json::num(if p.converged { 1.0 } else { 0.0 })),
+                            ("max_err_vs_rk45", json::num(p.max_err_vs_rk45)),
+                        ])
+                    })
+                    .collect(),
+            ),
         ),
     ])
 }
@@ -2297,6 +2539,36 @@ mod tests {
         assert_eq!(pts.len(), 1);
         assert_eq!(pts[0].get("n").unwrap().as_usize(), Some(16));
         assert_eq!(pts[0].get("speedup").unwrap().as_f64(), Some(10.0));
+    }
+
+    #[test]
+    fn ode_bench_agrees_with_rk45_and_serializes() {
+        let (t, points) = ode_bench(&[256], 8);
+        assert_eq!(t.num_rows(), 1);
+        assert_eq!(points.len(), 1);
+        let p = &points[0];
+        assert!(p.converged, "DEER-ODE must converge on the logistic field");
+        assert!(
+            p.max_err_vs_rk45 < 1e-3,
+            "DEER-ODE trajectory off RK45: {}",
+            p.max_err_vs_rk45
+        );
+        assert!(p.rk45_ns_per_step > 0.0 && p.deer_ode_ns_per_step > 0.0);
+        assert!(
+            p.rk45_steps >= 256 * p.batch,
+            "RK45 takes >= 1 step per output interval per row"
+        );
+
+        let doc = ode_bench_json(&points);
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("ode_deer_vs_rk45"));
+        assert_eq!(parsed.get("structure").unwrap().as_str(), Some("diagonal"));
+        let pts = parsed.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(pts.len(), 1);
+        assert_eq!(pts[0].get("t").unwrap().as_usize(), Some(256));
+        assert_eq!(pts[0].get("batch").unwrap().as_usize(), Some(8));
+        assert_eq!(pts[0].get("converged").unwrap().as_f64(), Some(1.0));
+        assert!(pts[0].get("deer_ode_ns_per_step").unwrap().as_f64().unwrap() > 0.0);
     }
 
     #[test]

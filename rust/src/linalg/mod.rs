@@ -11,7 +11,7 @@
 pub mod expm;
 pub mod mat;
 
-pub use expm::{expm, phi1};
+pub use expm::{expm, expm_vjp, phi1, phi1_vjp};
 pub use mat::Mat;
 
 use crate::util::scalar::Scalar;

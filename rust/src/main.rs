@@ -1,9 +1,10 @@
 //! `deer` — the Layer-3 coordinator CLI.
 //!
 //! Subcommands:
-//!   bench  --exp fig2|fig2grad|fig3|fig6|fig7|fig8|table3|table4|table5|table6|quasi|block|scan|simd|batch|train|elk|shard|all
+//!   bench  --exp fig2|fig2grad|fig3|fig6|fig7|fig8|table3|table4|table5|table6|quasi|block|scan|simd|batch|train|elk|shard|ode|all
 //!   sweep  --dims 1,2,4 --lens 1000,10000 --workers 2
-//!   train  --exp worms|twobody --cell gru|diag-gru|diag-lstm --mode seq|deer|quasi|hybrid|elk|quasi-elk --steps 100   (native trainer)
+//!   train  --exp worms|twobody --cell gru|diag-gru|diag-lstm|lstm|elman|indrnn|lem|a,b,… --mode seq|deer|quasi|hybrid|elk|quasi-elk --steps 100   (native trainer)
+//!   train  --exp twobody --ode --field mlp|hnn --interp midpoint|left|right --dt 0.02   (continuous-time OdeCell)
 //!   train  --model worms|hnn-deer|hnn-rk4|mhgru --steps 100        (xla artifacts)
 //!   info   (list artifacts)
 //!
@@ -74,6 +75,7 @@ fn run() -> Result<()> {
                  \n  deer bench --exp elk --elk-out BENCH_elk.json   plain vs ELK damped solves on the divergence fixture\
                  \n  deer bench --exp calib --calib-out BENCH_calib.json  observed vs simulator-predicted phase timings\
                  \n  deer bench --exp shard --shard-out BENCH_shard.json  windowed DEER: resident memory + wall vs shard count\
+                 \n  deer bench --exp ode --ode-out BENCH_ode.json   DEER-ODE vs adaptive RK45 on the logistic field\
                  \n  deer bench --exp elk --trace trace.json   record a Chrome trace of the bench (Perfetto / chrome://tracing)\
                  \n  deer sweep --workers 2          coordinator sweep demo\
                  \n  deer train --exp worms --mode deer --steps 40   native §4.3 trainer (seq|deer|quasi|hybrid|elk|quasi-elk)\
@@ -82,7 +84,10 @@ fn run() -> Result<()> {
                  \n  deer train --exp worms --layers 2 --mode deer   stacked model: one fused solve per layer
                  \n  deer train --exp worms --layers 2 --mode deer,seq  per-layer engines (comma list, one per layer)\
                  \n  deer train --exp worms --shards 4               windowed DEER solves: O(B·W·jac) memory, bitwise at 1 thread
-                 \n  deer train --exp worms --cell diag-gru          natively-structured cells (gru|diag-gru|diag-lstm)\
+                 \n  deer train --exp worms --cell diag-gru          natively-structured cells (gru|diag-gru|diag-lstm|lstm|elman|indrnn|lem)\
+                 \n  deer train --exp worms --cell gru,diag-gru      heterogeneous per-layer stack (--layers defaults to the list length)\
+                 \n  deer train --exp twobody --ode --mode deer      continuous-time OdeCell: RK4 seq-BPTT vs fused DEER-ODE\
+                 \n  deer train --exp twobody --ode --field hnn --interp left --dt 0.01  Hamiltonian field, App. A.5 interpolations\
                  \n  deer train --exp worms-full --eval-every 10     Fig. 4 scale (T=17,984), val/test acc vs wall-clock\
                  \n  deer train --exp worms --save ck.json           checkpoint params+Adam (--load resumes)\
                  \n  deer train --exp worms --lr-schedule cosine:200 LR schedules (constant|cosine:T[:W]|step:E:G[:W])\
@@ -304,8 +309,8 @@ fn bench(args: &Args, rec: &Recorder) -> Result<()> {
     if all || which == "shard" {
         // Windowed (sharded) DEER: resident-memory and wall-clock vs the
         // shard count S at a fixed horizon (exact stitching — bitwise
-        // against S=1), plus the T=500k demo the MemoryPlanner proves the
-        // unsharded dense layout cannot fit. Grid shrinks under
+        // against S=1), plus the T=1M streamed-input demo the MemoryPlanner
+        // proves the unsharded dense layout cannot fit. Grid shrinks under
         // DEER_BENCH_FAST=1.
         let fast = std::env::var("DEER_BENCH_FAST").is_ok();
         let (t_len, shard_list) = exp::shard_bench_grid(fast);
@@ -317,9 +322,9 @@ fn bench(args: &Args, rec: &Recorder) -> Result<()> {
             "Windowed DEER: resident bytes + wall-clock vs shard count S (measured 1-core, exact stitching)",
             &t,
         )?;
-        let demo = exp::shard_demo(500_000, 16, 8, 64 << 20);
+        let demo = exp::shard_demo(1_000_000, 16, 8, 64 << 20);
         println!(
-            "shard demo: T={} n={} budget {} MiB — unsharded {} MiB fits={} | S={} sharded {} MiB fits={} converged={} in {:.2}s",
+            "shard demo: T={} n={} budget {} MiB — unsharded {} MiB fits={} | S={} sharded {} MiB fits={} converged={} in {:.2}s (input resident {} KiB streamed vs {} MiB full)",
             demo.t_len,
             demo.n,
             demo.budget_bytes >> 20,
@@ -330,11 +335,32 @@ fn bench(args: &Args, rec: &Recorder) -> Result<()> {
             demo.fits_sharded,
             demo.converged,
             demo.wall_secs,
+            demo.input_bytes_streamed >> 10,
+            demo.input_bytes_full >> 20,
         );
         let out_path = PathBuf::from(args.get("shard-out", "BENCH_shard.json"));
         std::fs::write(&out_path, exp::shard_bench_json(&points, &demo).to_string())?;
         deer::telemetry::write_run_manifest(&out_path)?;
         println!("shard bench points written to {}", out_path.display());
+    }
+    if all || which == "ode" {
+        // Continuous-time DEER: fused DEER-ODE solve vs the adaptive RK45
+        // sequential baseline on the diagonal logistic field (§4.2's
+        // NeuralODE pairing). Grid shrinks under DEER_BENCH_FAST=1; both
+        // grids keep a T ≥ 4096 point for the bench_compare.sh wall gate.
+        let fast = std::env::var("DEER_BENCH_FAST").is_ok();
+        let (t_lens, n) = exp::ode_bench_grid(fast);
+        let n = args.get_parse("n", n).map_err(Error::msg)?;
+        let (t, points) = exp::ode_bench(&t_lens, n);
+        rec.table(
+            "ode_deer_vs_rk45",
+            "DEER-ODE (one fused B=8 batch, all cores) vs RK45 (looped per row): wall per row-interval on the logistic field",
+            &t,
+        )?;
+        let out_path = PathBuf::from(args.get("ode-out", "BENCH_ode.json"));
+        std::fs::write(&out_path, exp::ode_bench_json(&points).to_string())?;
+        deer::telemetry::write_run_manifest(&out_path)?;
+        println!("ode bench points written to {}", out_path.display());
     }
     if all || which == "simd" {
         // Scalar-vs-SIMD compose microbench: the raw kernel A/B behind the
@@ -455,22 +481,84 @@ fn sweep(args: &Args, rec: &Recorder) -> Result<()> {
 /// accuracy-vs-wall-clock curves (the Fig. 4 axes; `--exp worms-full`
 /// defaults to the paper's T = 17,984).
 fn native_train(args: &Args, rec: &Recorder) -> Result<()> {
+    // --ode swaps the discrete recurrent stack for ONE continuous-time
+    // OdeCell whose state IS the data channels: the Seq arm integrates the
+    // field with RK4 + BPTT, the Deer arm solves and differentiates the
+    // SAME grid with fused DEER-ODE (deer_ode_batch /
+    // deer_ode_backward_batch) — a pure engine A/B on one model.
+    // --field mlp|hnn picks the vector field, --dt/--substeps/--interp the
+    // discretization (App. A.5 interpolations).
+    if args.switch("ode") {
+        use deer::cells::{HamiltonianField, MlpField, OdeCell};
+        use deer::deer::Interp;
+        let field = args.get("field", "mlp").to_string();
+        let hidden = args.get_parse("hidden", 32usize).map_err(Error::msg)?;
+        let dt = args.get_parse("dt", 0.02f64).map_err(Error::msg)?;
+        let substeps = args.get_parse("substeps", 1usize).map_err(Error::msg)?;
+        let interp_name = args.get("interp", "midpoint").to_string();
+        let Some(interp) = Interp::parse(&interp_name) else {
+            bail!("unknown --interp {interp_name} (midpoint|left|right)");
+        };
+        let label = format!("ode-{field}");
+        return match field.as_str() {
+            "mlp" => native_train_with(args, rec, &label, 1, move |_n, m, rng| {
+                OdeCell::new(MlpField::<f32>::new(m, hidden, rng), dt, substeps, interp)
+            }),
+            "hnn" => native_train_with(args, rec, &label, 1, move |_n, m, rng| {
+                assert!(m % 2 == 0, "--field hnn needs an even state dim, got {m}");
+                OdeCell::new(HamiltonianField::<f32>::new(m / 2, hidden, rng), dt, substeps, interp)
+            }),
+            other => bail!("unknown --field {other} (mlp|hnn)"),
+        };
+    }
     // --cell picks the recurrent cell. The diag-* variants have diagonal
     // recurrent weights and report their Jacobian structure natively
     // (Diagonal / Block(2)), so `--mode deer` rides the packed O(n)/O(n·k²)
     // scan kernels as EXACT Newton — no quasi approximation involved.
     let cell = args.get("cell", "gru").to_string();
-    match cell.as_str() {
-        "gru" => {
-            native_train_with(args, rec, &cell, |n, m, rng| deer::cells::Gru::<f32>::new(n, m, rng))
+    // --cell a,b,…: a heterogeneous per-layer stack — layer i gets kind i
+    // through the type-erased DynCell. --layers defaults to the list length
+    // and must match it when given explicitly.
+    if cell.contains(',') {
+        let kinds: Vec<String> = cell.split(',').map(|s| s.trim().to_string()).collect();
+        let mut probe = Rng::new(0);
+        for k in &kinds {
+            deer::cells::DynCell::<f32>::parse(k, 1, 1, &mut probe).map_err(Error::msg)?;
         }
-        "diag-gru" => native_train_with(args, rec, &cell, |n, m, rng| {
+        if let Some(l) = args.opt("layers") {
+            if l.parse::<usize>().ok() != Some(kinds.len()) {
+                bail!("--cell lists {} kinds but --layers is {l}", kinds.len());
+            }
+        }
+        let label = cell.replace(',', "-");
+        let layers = kinds.len();
+        let mut idx = 0usize;
+        return native_train_with(args, rec, &label, layers, move |n, m, rng| {
+            let c = deer::cells::DynCell::<f32>::parse(&kinds[idx % kinds.len()], n, m, rng)
+                .expect("kinds validated above");
+            idx += 1;
+            c
+        });
+    }
+    match cell.as_str() {
+        "gru" => native_train_with(args, rec, &cell, 1, |n, m, rng| {
+            deer::cells::Gru::<f32>::new(n, m, rng)
+        }),
+        "diag-gru" => native_train_with(args, rec, &cell, 1, |n, m, rng| {
             deer::cells::DiagGru::<f32>::new(n, m, rng)
         }),
-        "diag-lstm" => native_train_with(args, rec, &cell, |n, m, rng| {
+        "diag-lstm" => native_train_with(args, rec, &cell, 1, |n, m, rng| {
             deer::cells::DiagLstm::<f32>::new(n, m, rng)
         }),
-        other => bail!("unknown --cell {other} (gru|diag-gru|diag-lstm)"),
+        // the remaining kinds ride the same type-erased dispatch as lists
+        other => {
+            deer::cells::DynCell::<f32>::parse(other, 1, 1, &mut Rng::new(0))
+                .map_err(Error::msg)?;
+            let name = other.to_string();
+            native_train_with(args, rec, &cell, 1, move |n, m, rng| {
+                deer::cells::DynCell::<f32>::parse(&name, n, m, rng).expect("validated above")
+            })
+        }
     }
 }
 
@@ -478,6 +566,7 @@ fn native_train_with<C, F>(
     args: &Args,
     rec: &Recorder,
     cell_kind: &str,
+    layers_default: usize,
     mut new_cell: F,
 ) -> Result<()>
 where
@@ -499,7 +588,7 @@ where
     let layer_modes = (modes.len() > 1).then_some(modes.clone());
     let steps = args.get_parse("steps", 40usize).map_err(Error::msg)?;
     let n = args.get_parse("n", 16usize).map_err(Error::msg)?;
-    let layers = args.get_parse("layers", 1usize).map_err(Error::msg)?;
+    let layers = args.get_parse("layers", layers_default).map_err(Error::msg)?;
     if layers == 0 {
         bail!("--layers must be ≥ 1");
     }

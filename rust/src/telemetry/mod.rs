@@ -323,10 +323,14 @@ pub enum Counter {
     ShardWindows,
     /// Outer multiple-shooting stitch iterations (penalty mode).
     StitchIters,
+    /// Fused DEER-ODE batch solves (`deer_ode_batch`).
+    OdeSolves,
+    /// Newton sweeps inside DEER-ODE solves.
+    OdeSweeps,
 }
 
 impl Counter {
-    pub const ALL: [Counter; 18] = [
+    pub const ALL: [Counter; 20] = [
         Counter::BatchedSolves,
         Counter::SequencesSolved,
         Counter::GroupsSplit,
@@ -345,6 +349,8 @@ impl Counter {
         Counter::ShardSolves,
         Counter::ShardWindows,
         Counter::StitchIters,
+        Counter::OdeSolves,
+        Counter::OdeSweeps,
     ];
 
     pub fn name(self) -> &'static str {
@@ -367,6 +373,8 @@ impl Counter {
             Counter::ShardSolves => "shard_solves",
             Counter::ShardWindows => "shard_windows",
             Counter::StitchIters => "stitch_iters",
+            Counter::OdeSolves => "ode_solves",
+            Counter::OdeSweeps => "ode_sweeps",
         }
     }
 }

@@ -65,6 +65,7 @@ use crate::coordinator::warmstart::WarmStartCache;
 use crate::data::{Dataset, Split};
 use crate::deer::grad::deer_rnn_backward_batch_damped_io;
 use crate::deer::newton::{effective_structure, JacobianMode};
+use crate::deer::ode::{deer_ode_backward_batch, FieldSystem};
 use crate::deer::sharded::deer_rnn_backward_sharded;
 use crate::deer::seq::{seq_rnn, seq_rnn_backward_io, seq_rnn_batch};
 use crate::train::CurvePoint;
@@ -412,6 +413,37 @@ impl<C: CellGrad<f32>> TrainLoop<C> {
                 );
             }
         }
+        // Continuous-time (OdeCell) layers: the trainer integrates the layer
+        // as one fused DEER-ODE solve over the [0, T·dt] grid. The dataset
+        // row's FIRST frame is the initial condition y(0) (there is no
+        // per-step input channel — the field is autonomous), so the
+        // construction is single-layer with m = n by the cell's definition.
+        if model.cells().iter().any(|c| c.ode_view().is_some()) {
+            if model.layers() != 1 {
+                bail!(
+                    "continuous-time OdeCell models must be single-layer (got {} layers): \
+                     the ODE grid has no inter-layer input sequence",
+                    model.layers()
+                );
+            }
+            if cfg.shards > 1 {
+                bail!(
+                    "--shards is incompatible with the continuous-time ODE path \
+                     (the ODE dual scan runs unsharded)"
+                );
+            }
+            for l in 0..model.layers() {
+                let m = cfg.mode_for_layer(l);
+                if !matches!(m, ForwardMode::Seq | ForwardMode::Deer) {
+                    bail!(
+                        "ODE layers run --mode seq|deer only (got {}): the quasi/hybrid/elk \
+                         arms are discrete-Jacobian constructions with no continuous analogue \
+                         wired up",
+                        m.label()
+                    );
+                }
+            }
+        }
         let p = model.num_params();
         let mut params = vec![0.0f32; p];
         model.write_params(&mut params);
@@ -570,7 +602,16 @@ impl<C: CellGrad<f32>> TrainLoop<C> {
         let cell = self.model.cell(l);
         let n = cell.state_dim();
         let m = cell.input_dim();
-        let h0s = vec![0.0f32; b * n];
+        // Continuous-time layers start from the trajectory's first frame
+        // (the ODE initial condition), not a zero state: both engines
+        // integrate y(0) = x_0 forward and otherwise ignore the inputs.
+        let mut h0s = vec![0.0f32; b * n];
+        if cell.ode_view().is_some() {
+            for s in 0..b {
+                h0s[s * n..(s + 1) * n]
+                    .copy_from_slice(&input[s * t_len * m..s * t_len * m + n]);
+            }
+        }
         let mode = self.cfg.mode_for_layer(l);
         match mode {
             ForwardMode::Seq => (seq_rnn_batch(cell, &h0s, input, b), None, vec![0.0; b]),
@@ -778,9 +819,55 @@ impl<C: CellGrad<f32>> TrainLoop<C> {
             let m = cell.input_dim();
             let input: &[f32] = if l == 0 { &xs } else { &layer_ys[l - 1] };
             let ys = &layer_ys[l];
-            let h0s = vec![0.0f32; b * n];
+            let mut h0s = vec![0.0f32; b * n];
+            if cell.ode_view().is_some() {
+                for s in 0..b {
+                    h0s[s * n..(s + 1) * n]
+                        .copy_from_slice(&input[s * t_len * m..s * t_len * m + n]);
+                }
+            }
             let want_dx = l > 0;
             let range = self.model.layer_param_range(l);
+            // Continuous-time layer under a parallel arm: the exact eq.-10
+            // reverse — one dual scan over the discretized linearization
+            // with the DISCRETIZE-phase (expm/φ₁) VJP folded in. The Seq
+            // arm instead falls through to BPTT, which differentiates the
+            // RK4 flow map step by step via the cell's `vjp_step`.
+            if self.cfg.mode_for_layer(l) != ForwardMode::Seq {
+                if let Some(view) = cell.ode_view() {
+                    let l_nodes = t_len + 1;
+                    let ln = l_nodes * n;
+                    let sys = FieldSystem::new(view.field);
+                    let ts: Vec<f32> =
+                        (0..l_nodes).map(|i| view.dt * i as f32).collect();
+                    // rebuild the full node grid: node 0 = the IC, nodes
+                    // 1..=T = the forward trajectory; output cotangents
+                    // land on nodes 1..=T (the IC carries no loss term)
+                    let mut ys_full = vec![0.0f32; b * ln];
+                    let mut gs_all = vec![0.0f32; b * ln];
+                    for s in 0..b {
+                        ys_full[s * ln..s * ln + n]
+                            .copy_from_slice(&h0s[s * n..(s + 1) * n]);
+                        ys_full[s * ln + n..(s + 1) * ln]
+                            .copy_from_slice(&ys[s * t_len * n..(s + 1) * t_len * n]);
+                        gs_all[s * ln + n..(s + 1) * ln]
+                            .copy_from_slice(&gs_cur[s * t_len * n..(s + 1) * t_len * n]);
+                    }
+                    let back = deer_ode_backward_batch(
+                        &sys,
+                        &ts,
+                        &ys_full,
+                        &gs_all,
+                        view.interp,
+                        self.cfg.threads,
+                        b,
+                    );
+                    grad[range].copy_from_slice(&back.dtheta);
+                    // single-layer only (validated in `new`): nothing below
+                    // to chain dy0 into
+                    continue;
+                }
+            }
             match self.cfg.mode_for_layer(l) {
                 ForwardMode::Seq => {
                     // BPTT, sequential per sequence (the baseline's backward)
@@ -934,7 +1021,12 @@ impl<C: CellGrad<f32>> TrainLoop<C> {
             let mut ys = self.data.ds.row(row).to_vec();
             for l in 0..self.model.layers() {
                 let cell = self.model.cell(l);
-                let h0 = vec![0.0f32; cell.state_dim()];
+                // ODE layers integrate from the row's first frame
+                let h0 = if cell.ode_view().is_some() {
+                    ys[..cell.state_dim()].to_vec()
+                } else {
+                    vec![0.0f32; cell.state_dim()]
+                };
                 ys = seq_rnn(cell, &h0, &ys);
             }
             match &self.data.targets {
@@ -1012,6 +1104,134 @@ mod tests {
             TrainConfig { mode, batch: 4, seed, ..Default::default() },
         )
         .unwrap()
+    }
+
+    /// Regression task whose rows are continuous-state trajectories: only
+    /// the FIRST frame matters to an ODE layer (it is the initial
+    /// condition); the target is a smooth function of that frame.
+    fn ode_task(rows: usize, t: usize, n: usize, seed: u64) -> TrainData {
+        let mut rng = Rng::new(seed);
+        let mut xs = vec![0.0f32; rows * t * n];
+        rng.fill_normal(&mut xs, 0.4);
+        let targets: Vec<f32> = (0..rows)
+            .map(|r| xs[r * t * n..r * t * n + n].iter().sum())
+            .collect();
+        TrainData {
+            ds: Dataset::new(xs, vec![0; rows], t, n),
+            targets: Some(Targets { k: 1, values: targets }),
+        }
+    }
+
+    fn ode_loop(
+        mode: ForwardMode,
+        seed: u64,
+    ) -> TrainLoop<crate::cells::OdeCell<f32, crate::cells::MlpField<f32>>> {
+        let mut rng = Rng::new(seed);
+        let field = crate::cells::MlpField::new(4, 8, &mut rng);
+        let cell = crate::cells::OdeCell::new(field, 0.005, 1, crate::deer::Interp::Midpoint);
+        let model = Model::new(cell, 1, Readout::MeanPool, &mut rng);
+        let data = ode_task(10, 32, 4, 11);
+        TrainLoop::new(
+            model,
+            data,
+            TrainConfig {
+                mode,
+                batch: 4,
+                seed,
+                tol_override: Some(1e-6),
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    }
+
+    /// The tentpole acceptance gate: the continuous-time layer trained
+    /// through the fused DEER-ODE engine must produce per-minibatch
+    /// gradients matching BPTT-through-RK4 (the Seq arm) to rel-err
+    /// < 1e-3 — the two arms discretize the same flow (midpoint
+    /// exponential-integrator fixed point vs. the RK4 map), so they agree
+    /// up to O(dt²) truncation.
+    #[test]
+    fn ode_seq_and_deer_gradients_agree() {
+        let mut a = ode_loop(ForwardMode::Seq, 3);
+        let mut d = ode_loop(ForwardMode::Deer, 3);
+        let rows: Vec<usize> = (0..4).collect();
+        let ga = a.grad_minibatch(&rows);
+        let gd = d.grad_minibatch(&rows);
+        assert!(
+            (ga.loss - gd.loss).abs() <= 1e-3 * ga.loss.abs().max(1e-6),
+            "loss mismatch: seq {} vs deer {}",
+            ga.loss,
+            gd.loss
+        );
+        let num: f64 = ga
+            .grad
+            .iter()
+            .zip(&gd.grad)
+            .map(|(&x, &y)| ((x - y) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        let den: f64 = ga.grad.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+        assert!(den > 0.0, "degenerate zero gradient");
+        assert!(
+            num / den < 1e-3,
+            "ODE gradient rel-err {} (num {num}, den {den})",
+            num / den
+        );
+    }
+
+    #[test]
+    fn ode_deer_trains_through_fused_solves() {
+        let mut tl = ode_loop(ForwardMode::Deer, 5);
+        let last = tl.run(3).unwrap();
+        assert!(last.loss.is_finite());
+        assert_eq!(tl.stats.steps, 3);
+        // one fused ODE solve per minibatch, no sequential fallbacks
+        assert!(tl.stats.batched_solves >= 3, "{:?}", tl.stats);
+        assert_eq!(tl.stats.fallbacks, 0, "{:?}", tl.stats);
+        let (loss, acc) = tl.eval(Split::Test);
+        assert!(loss.is_finite());
+        assert!(acc.is_none(), "regression task");
+    }
+
+    #[test]
+    fn ode_misconfigurations_rejected() {
+        // quasi/hybrid/elk arms have no continuous analogue
+        let mut rng = Rng::new(2);
+        let mk_model = |rng: &mut Rng| {
+            let field = crate::cells::MlpField::new(4, 8, rng);
+            let cell =
+                crate::cells::OdeCell::new(field, 0.01, 1, crate::deer::Interp::Midpoint);
+            Model::new(cell, 1, Readout::MeanPool, rng)
+        };
+        let bad_mode = TrainLoop::new(
+            mk_model(&mut rng),
+            ode_task(10, 16, 4, 11),
+            TrainConfig { mode: ForwardMode::QuasiDeer, batch: 4, ..Default::default() },
+        );
+        assert!(bad_mode.is_err());
+        // sharding is a discrete-path construction
+        let bad_shards = TrainLoop::new(
+            mk_model(&mut rng),
+            ode_task(10, 16, 4, 11),
+            TrainConfig { mode: ForwardMode::Deer, batch: 4, shards: 2, ..Default::default() },
+        );
+        assert!(bad_shards.is_err());
+        // stacked ODE layers have no inter-layer input grid
+        let mut rng2 = Rng::new(3);
+        let cells: Vec<_> = (0..2)
+            .map(|_| {
+                let field = crate::cells::MlpField::new(4, 8, &mut rng2);
+                crate::cells::OdeCell::new(field, 0.01, 1, crate::deer::Interp::Midpoint)
+            })
+            .collect();
+        let stacked = Model::stacked(cells, 1, Readout::MeanPool, &mut rng2).unwrap();
+        let bad_stack = TrainLoop::new(
+            stacked,
+            ode_task(10, 16, 4, 11),
+            TrainConfig { mode: ForwardMode::Deer, batch: 4, ..Default::default() },
+        );
+        assert!(bad_stack.is_err());
     }
 
     fn stacked_loop(mode: ForwardMode, layers: usize, seed: u64) -> TrainLoop<Gru<f32>> {

@@ -41,13 +41,16 @@ DEER_BENCH_FAST=1 cargo run --release --bin deer -- \
     bench --exp calib --calib-out "$FRESH_DIR/BENCH_calib.json" --results results/compare
 DEER_BENCH_FAST=1 cargo run --release --bin deer -- \
     bench --exp shard --shard-out "$FRESH_DIR/BENCH_shard.json" --results results/compare
+DEER_BENCH_FAST=1 cargo run --release --bin deer -- \
+    bench --exp ode --ode-out "$FRESH_DIR/BENCH_ode.json" --results results/compare
 
 python3 - "$ROOT" "$FRESH_DIR" "$THRESHOLD" <<'EOF'
 import json, os, shutil, subprocess, sys
 
 root, fresh_dir, threshold = sys.argv[1], sys.argv[2], float(sys.argv[3])
 NAMES = ("BENCH_scan.json", "BENCH_batch.json", "BENCH_train.json", "BENCH_block.json",
-         "BENCH_elk.json", "BENCH_simd.json", "BENCH_calib.json", "BENCH_shard.json")
+         "BENCH_elk.json", "BENCH_simd.json", "BENCH_calib.json", "BENCH_shard.json",
+         "BENCH_ode.json")
 # metric fields treated as ns/step costs (lower is better)
 COST_FIELDS = (
     "dense_ns_per_step", "diag_ns_per_step",
@@ -57,6 +60,7 @@ COST_FIELDS = (
     "dense_invlin_ns_per_step", "block_invlin_ns_per_step", "diag_invlin_ns_per_step",
     "plain_iter_ns_per_step", "elk_iter_ns_per_step",
     "scalar_ns_per_compose", "simd_ns_per_compose",
+    "rk45_ns_per_step", "deer_ode_ns_per_step",
 )
 
 def git_tracked(name):
@@ -247,8 +251,9 @@ if os.path.exists(simd_path):
 #     point (planner arithmetic, so deterministic once armed);
 #  2. exactness — every shard count's trajectory must match S=1 bitwise
 #     (max_err_vs_unsharded == 0 under exact stitching at one thread);
-#  3. the T=500k demo must be planner-proved unfittable unsharded AND have
-#     completed (converged) sharded within budget.
+#  3. the T=1M streamed demo must be planner-proved unfittable unsharded AND
+#     have completed (converged) sharded within budget, with the streamed
+#     WindowSource input residency far below the full [T, n] slab.
 shard_path = os.path.join(fresh_dir, "BENCH_shard.json")
 if os.path.exists(shard_path):
     enforce = had_baseline["BENCH_shard.json"]
@@ -278,15 +283,56 @@ if os.path.exists(shard_path):
     demo = doc.get("demo")
     if demo is not None:
         ok = (not demo.get("fits_unsharded")) and demo.get("fits_sharded") and demo.get("converged")
-        tag = "ok" if ok else ("REGRESSION" if enforce else "bad (advisory)")
+        streamed = demo.get("input_bytes_streamed")
+        full = demo.get("input_bytes_full")
+        if streamed is not None and full is not None:
+            # streamed input residency: one [B, W, m] window vs the [B, T, m] slab
+            ok = ok and streamed * 4 <= full
         print(f"shard demo T={demo['t']}: unsharded fits={bool(demo.get('fits_unsharded'))}, "
               f"S={demo['shards']} fits={bool(demo.get('fits_sharded'))}, "
-              f"converged={bool(demo.get('converged'))} in {demo.get('wall_secs', 0):.2f}s {tag}")
+              f"converged={bool(demo.get('converged'))} in {demo.get('wall_secs', 0):.2f}s"
+              + (f", input resident {streamed/2**10:.0f} KiB streamed vs "
+                 f"{full/2**20:.0f} MiB full" if streamed is not None else "")
+              + (" ok" if ok else (" REGRESSION" if enforce else " bad (advisory)")))
         if not ok and enforce:
             failures.append(
-                "BENCH_shard.json demo: expected unfittable-unsharded + converged-sharded at T=500k")
+                "BENCH_shard.json demo: expected unfittable-unsharded + converged-sharded "
+                "+ streamed input residency << full slab at T=1M")
     elif enforce:
         failures.append("BENCH_shard.json: demo point missing")
+
+# DEER-ODE acceptance gate: one fused B=8 deer_ode_batch solve (all cores)
+# must beat B sequential adaptive-RK45 integrations wall-clock at every
+# T >= 4096 point — the continuous-time face of the train gate, enforced
+# under the same baseline-armed contract (a seed run on a fresh/noisy
+# machine reports the ratios and stays green). Correctness is unconditional:
+# every point must converge and agree with RK45 to < 1e-2.
+ode_path = os.path.join(fresh_dir, "BENCH_ode.json")
+if os.path.exists(ode_path):
+    enforce = had_baseline["BENCH_ode.json"]
+    with open(ode_path) as f:
+        doc = json.load(f)
+    gated = 0
+    for p in doc.get("points", []):
+        if not p.get("converged"):
+            failures.append(f"BENCH_ode.json T={p['t']}: DEER-ODE did not converge")
+        if p.get("max_err_vs_rk45", 0.0) >= 1e-2:
+            failures.append(
+                f"BENCH_ode.json T={p['t']}: trajectory off RK45 by "
+                f"{p['max_err_vs_rk45']:.1e} >= 1e-2")
+        if p["t"] >= 4096:
+            gated += 1
+            slow = p["deer_secs"] >= p["rk45_secs"]
+            tag = "REGRESSION" if slow and enforce else ("slow (advisory)" if slow else "ok")
+            print(f"ode gate n={p['n']} T={p['t']} B={p.get('batch', 1)}: rk45 "
+                  f"{p['rk45_secs']*1e3:.1f} ms, deer {p['deer_secs']*1e3:.1f} ms "
+                  f"({p['speedup']:.2f}x) {tag}")
+            if slow and enforce:
+                failures.append(
+                    f"BENCH_ode.json T={p['t']}: fused DEER-ODE not faster than looped RK45 "
+                    f"({p['speedup']:.2f}x)")
+    if gated == 0 and enforce:
+        failures.append("BENCH_ode.json: no T >= 4096 point to gate on")
 
 # Calibration gate: the simulator's per-phase cost model must not DRIFT away
 # from measurement. Armed only once BENCH_calib.json is git-tracked (pinned
